@@ -1,0 +1,113 @@
+//! Bench: regenerates the paper's **Figure 3** (and headline R1/R2) and
+//! benchmarks the coordinator wall-clock per point, plus a dispatch
+//! ablation (DESIGN.md §4).
+//!
+//! Virtual time (the figure) is deterministic; wall time tells us what
+//! the Rust coordinator + PJRT execution itself costs on this machine —
+//! the perf pass (EXPERIMENTS.md §Perf) tracks the latter.
+//!
+//! ```sh
+//! cargo bench --bench fig3_gemm
+//! ```
+
+use std::time::Duration;
+
+use hero_blas::blas::{DispatchPolicy, HeroBlas};
+use hero_blas::config::{DispatchMode, PlatformConfig};
+use hero_blas::harness;
+use hero_blas::npy::NdArray;
+use hero_blas::util::bench::Bench;
+use hero_blas::util::rng::Rng;
+
+fn artifacts() -> std::path::PathBuf {
+    hero_blas::find_artifacts_dir().expect("run `make artifacts` first")
+}
+
+fn main() {
+    let sizes = [16usize, 32, 64, 128, 256];
+
+    // ---- the figure itself (virtual time) ----
+    println!("== Figure 3 (virtual time on the calibrated SoC) ==\n");
+    let report = harness::run_fig3(
+        PlatformConfig::default(),
+        &artifacts(),
+        &sizes,
+        &[DispatchMode::HostOnly, DispatchMode::DeviceOnly],
+        0x5EED,
+    )
+    .expect("fig3 sweep");
+    print!("{}", report.render());
+    print!("{}", report.summary());
+
+    // ---- wall-clock of the coordinator per point ----
+    println!("\n== coordinator wall-clock (this machine, not the SoC) ==\n");
+    let mut blas = HeroBlas::new(
+        PlatformConfig::default(),
+        &artifacts(),
+        DispatchPolicy::with_mode(DispatchMode::DeviceOnly),
+    )
+    .unwrap();
+    blas.registry.warm_up().unwrap();
+    let mut bench = Bench::with_budget(Duration::from_millis(1500), 200);
+    for &n in &sizes {
+        let mut rng = Rng::new(n as u64);
+        let a = NdArray::<f64>::randn(&mut rng, &[n, n]);
+        let b = NdArray::<f64>::randn(&mut rng, &[n, n]);
+        bench.run(&format!("fig3/offload_gemm_n{n}"), || {
+            blas.reset_run();
+            a.matmul(&b, &mut blas).unwrap()
+        });
+    }
+    blas.policy = DispatchPolicy::with_mode(DispatchMode::HostOnly);
+    for &n in &[64usize, 128, 256] {
+        let mut rng = Rng::new(n as u64);
+        let a = NdArray::<f64>::randn(&mut rng, &[n, n]);
+        let b = NdArray::<f64>::randn(&mut rng, &[n, n]);
+        bench.run(&format!("fig3/host_gemm_n{n}"), || {
+            blas.reset_run();
+            a.matmul(&b, &mut blas).unwrap()
+        });
+    }
+
+    // ---- ablation: dispatch policy choices (virtual time) ----
+    println!("\n== ablation: dispatch policy (virtual ms; lower is better) ==\n");
+    println!("{:<26} {:>10} {:>10} {:>10}", "workload", "host", "device", "auto");
+    let f = blas.engine.freq_hz();
+    for (label, m, n, k) in [
+        ("square_32", 32usize, 32usize, 32usize),
+        ("square_128", 128, 128, 128),
+        ("thin_kmeans_256x4x64", 256, 4, 64),
+        ("tall_512x64x64", 512, 64, 64),
+    ] {
+        let mut rng = Rng::new(7);
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(k * n);
+        let mut row = format!("{label:<26}");
+        for mode in [DispatchMode::HostOnly, DispatchMode::DeviceOnly, DispatchMode::Auto] {
+            blas.policy = DispatchPolicy::with_mode(mode);
+            let mut c = vec![0.0; m * n];
+            blas.reset_run();
+            blas.gemm(
+                hero_blas::blas::Transpose::No,
+                hero_blas::blas::Transpose::No,
+                1.0,
+                &a,
+                (m, k),
+                &b,
+                (k, n),
+                0.0,
+                &mut c,
+                (m, n),
+            )
+            .unwrap();
+            let msv = blas.trace().grand_total().to_secs(f) * 1e3;
+            row.push_str(&format!(" {msv:>9.2}"));
+        }
+        println!("{row}");
+    }
+    println!(
+        "\nauto picks host below the crossover and device above it; the thin\n\
+         k-means GEMM shows where a max-dim threshold mispredicts (see\n\
+         examples/kmeans.rs)."
+    );
+}

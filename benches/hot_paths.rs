@@ -1,0 +1,123 @@
+//! Bench: wall-clock microbenchmarks of every coordinator hot path
+//! (the §Perf working set — see EXPERIMENTS.md).
+//!
+//! ```sh
+//! cargo bench --bench hot_paths
+//! ```
+
+use std::time::Duration;
+
+use hero_blas::blas::host;
+use hero_blas::config::PlatformConfig;
+use hero_blas::hero::allocator::Arena;
+use hero_blas::runtime::literal::{lit_2d, to_vec_f64};
+use hero_blas::runtime::ArtifactRegistry;
+use hero_blas::soc::clock::Cycles;
+use hero_blas::soc::dma::DmaModel;
+use hero_blas::soc::trace::{RegionClass, Trace};
+use hero_blas::util::bench::Bench;
+use hero_blas::util::json_lite::Json;
+use hero_blas::util::rng::Rng;
+
+fn main() {
+    let mut bench = Bench::with_budget(Duration::from_millis(1000), 20_000);
+    let mut rng = Rng::new(0xB3);
+
+    // ---- host GEMM kernels (the no-offload baseline's numerics) ----
+    for n in [64usize, 128, 256] {
+        let a = rng.normal_vec(n * n);
+        let b = rng.normal_vec(n * n);
+        let mut c = vec![0.0; n * n];
+        bench.run(&format!("host/gemm_packed_n{n}"), || {
+            host::gemm(n, n, n, 1.0, &a, &b, 0.0, &mut c);
+            c[0]
+        });
+        if n <= 128 {
+            bench.run(&format!("host/gemm_naive_n{n}"), || {
+                host::naive_gemm(n, n, n, 1.0, &a, &b, 0.0, &mut c);
+                c[0]
+            });
+        }
+    }
+    {
+        let n = 1 << 16;
+        let x = rng.normal_vec(n);
+        let mut y = rng.normal_vec(n);
+        bench.run("host/axpy_64k", || {
+            host::axpy(1.0001, &x, &mut y);
+            y[0]
+        });
+        bench.run("host/dot_64k", || host::dot(&x, &y));
+    }
+
+    // ---- allocator ----
+    bench.run("alloc/arena_alloc_free_pairs", || {
+        let mut a = Arena::new("b", 0, 1 << 20, 64);
+        let mut live = Vec::new();
+        for i in 0..64 {
+            live.push(a.alloc(1024 + i * 64).unwrap());
+        }
+        for x in live {
+            a.free(x).unwrap();
+        }
+        a.free_bytes()
+    });
+
+    // ---- SoC cost models (called once per tile step on the hot loop) ----
+    let mut dma = DmaModel::new(PlatformConfig::default().dma);
+    bench.run("soc/dma_cost_2d", || dma.cost_2d(64, 512));
+    bench.run("soc/trace_record_1k", || {
+        let mut t = Trace::new();
+        for i in 0..1000 {
+            t.record(RegionClass::Compute, Cycles(i), Cycles(1), "tile");
+        }
+        t.grand_total()
+    });
+
+    // ---- PJRT execution (the real wall-clock hot spot) ----
+    let dir = hero_blas::find_artifacts_dir().expect("run `make artifacts`");
+    let mut reg = ArtifactRegistry::open(&dir).unwrap();
+    reg.warm_up().unwrap();
+    let acc = vec![0.0f64; 64 * 64];
+    let at = rng.normal_vec(64 * 64);
+    let bt = rng.normal_vec(64 * 64);
+    bench.run("pjrt/tile_accum_64", || {
+        reg.exec(
+            "gemm_tile_accum_f64",
+            &[
+                lit_2d(&acc, 64, 64).unwrap(),
+                lit_2d(&at, 64, 64).unwrap(),
+                lit_2d(&bt, 64, 64).unwrap(),
+            ],
+        )
+        .unwrap()
+    });
+    let a128 = rng.normal_vec(128 * 128);
+    let b128 = rng.normal_vec(128 * 128);
+    let c128 = vec![0.0f64; 128 * 128];
+    bench.run("pjrt/gemm_fixed_128", || {
+        reg.exec(
+            "gemm_f64_n128",
+            &[
+                lit_2d(&a128, 128, 128).unwrap(),
+                lit_2d(&b128, 128, 128).unwrap(),
+                lit_2d(&c128, 128, 128).unwrap(),
+                hero_blas::runtime::literal::lit_1d(&[1.0f64]),
+                hero_blas::runtime::literal::lit_1d(&[0.0f64]),
+            ],
+        )
+        .unwrap()
+    });
+
+    // ---- literal conversion (feeds every PJRT call) ----
+    bench.run("lit/roundtrip_64x64_f64", || {
+        let l = lit_2d(&at, 64, 64).unwrap();
+        to_vec_f64(&l).unwrap().len()
+    });
+
+    // ---- manifest/json parsing (startup path) ----
+    let manifest_text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    bench.run("json/parse_manifest", || Json::parse(&manifest_text).unwrap());
+
+    println!("\n{} benchmarks complete", bench.results().len());
+}

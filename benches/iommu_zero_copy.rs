@@ -1,0 +1,58 @@
+//! Bench: regenerates **R3** (the IOMMU zero-copy projection: PTE
+//! creation 7.5x cheaper than copying => ~4.7x total speedup) across
+//! sizes, plus **D1** (lower precision), and micro-benchmarks the IOMMU
+//! model's wall-clock hot paths.
+//!
+//! ```sh
+//! cargo bench --bench iommu_zero_copy
+//! ```
+
+use std::time::Duration;
+
+use hero_blas::config::PlatformConfig;
+use hero_blas::harness;
+use hero_blas::soc::iommu::Iommu;
+use hero_blas::util::bench::Bench;
+
+fn main() {
+    let artifacts = hero_blas::find_artifacts_dir().expect("run `make artifacts` first");
+
+    // ---- R3 across sizes (virtual time) ----
+    for n in [64usize, 128, 256] {
+        let r = harness::run_zero_copy(PlatformConfig::default(), &artifacts, n, 7)
+            .expect("zero-copy run");
+        print!("{}", r.render());
+        println!();
+    }
+    println!(
+        "paper targets @128: PTE-vs-copy {:.1}x, total {:.1}x\n",
+        harness::projections::PAPER_PTE_VS_COPY,
+        harness::projections::PAPER_ZERO_COPY_SPEEDUP,
+    );
+
+    // ---- D1: lower-precision projection ----
+    let p = harness::run_f32_projection(PlatformConfig::default(), &artifacts, 128, 7)
+        .expect("f32 projection");
+    print!("{}", p.render());
+
+    // ---- IOMMU model wall-clock microbenches ----
+    println!("\n== IOMMU model wall-clock hot paths ==\n");
+    let mut bench = Bench::with_budget(Duration::from_millis(800), 5_000);
+    let cfg = PlatformConfig::default().iommu;
+
+    bench.run("iommu/map_unmap_128KiB", || {
+        let mut i = Iommu::new(cfg.clone());
+        let (m, c) = i.map(0x10_0000, 128 * 1024).unwrap();
+        let t = i.unmap(&m);
+        (c, t)
+    });
+
+    let mut warm = Iommu::new(cfg.clone());
+    let (mapping, _) = warm.map(0x10_0000, 1 << 20).unwrap();
+    bench.run("iommu/translate_hit", || {
+        warm.translate(mapping.iova + 64).unwrap()
+    });
+    bench.run("iommu/stream_256_pages", || {
+        warm.stream_translate_cost(mapping.iova, 1 << 20).unwrap()
+    });
+}

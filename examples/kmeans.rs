@@ -1,0 +1,165 @@
+//! Data-analytics workload: k-means where the distance computation is a
+//! GEMM (the standard ||x-c||^2 = ||x||^2 - 2 x.c + ||c||^2 expansion),
+//! so each Lloyd iteration's hot spot offloads to the PMCA.
+//!
+//! Synthetic blobs with known centers; the example reports inertia per
+//! iteration (must decrease monotonically), recovered-center error, and
+//! host vs offload timing.
+//!
+//! ```sh
+//! cargo run --release --example kmeans
+//! ```
+
+use hero_blas::blas::{DispatchPolicy, HeroBlas};
+use hero_blas::config::DispatchMode;
+use hero_blas::npy::NdArray;
+use hero_blas::util::rng::Rng;
+
+const K: usize = 4;
+const DIM: usize = 64;
+const POINTS: usize = 256;
+const ITERS: usize = 8;
+
+/// Blobs around K well-separated centers.
+fn make_blobs(rng: &mut Rng) -> (NdArray<f64>, Vec<Vec<f64>>) {
+    let mut centers = Vec::new();
+    for k in 0..K {
+        let mut c = vec![0.0; DIM];
+        // each cluster occupies its own block of dimensions -> separation
+        // ~ 8*sqrt(DIM/K) >> cluster std
+        for d in 0..DIM {
+            c[d] = if d % K == k { 8.0 } else { 0.0 };
+        }
+        centers.push(c);
+    }
+    let mut data = vec![0.0; POINTS * DIM];
+    for p in 0..POINTS {
+        let c = &centers[p % K];
+        for d in 0..DIM {
+            data[p * DIM + d] = c[d] + 0.3 * rng.next_normal();
+        }
+    }
+    (NdArray::from_vec(data, &[POINTS, DIM]).unwrap(), centers)
+}
+
+/// One Lloyd step; returns (new centroids, inertia).
+fn lloyd_step(
+    x: &NdArray<f64>,
+    centroids: &NdArray<f64>,
+    blas: &mut HeroBlas,
+) -> anyhow::Result<(NdArray<f64>, f64)> {
+    // cross term via GEMM: G = X @ C^T  (POINTS x K) — the offloaded call
+    let g = x.matmul(&centroids.t()?, blas)?;
+    let xsq: Vec<f64> = (0..POINTS)
+        .map(|p| x.row(p).iter().map(|v| v * v).sum())
+        .collect();
+    let csq: Vec<f64> = (0..K)
+        .map(|k| centroids.row(k).iter().map(|v| v * v).sum())
+        .collect();
+
+    let mut assign = vec![0usize; POINTS];
+    let mut inertia = 0.0;
+    for p in 0..POINTS {
+        let (mut best_k, mut best_d) = (0, f64::INFINITY);
+        for k in 0..K {
+            let d = xsq[p] - 2.0 * g.get2(p, k) + csq[k];
+            if d < best_d {
+                best_d = d;
+                best_k = k;
+            }
+        }
+        assign[p] = best_k;
+        inertia += best_d;
+    }
+
+    let mut sums = vec![0.0; K * DIM];
+    let mut counts = vec![0usize; K];
+    for p in 0..POINTS {
+        counts[assign[p]] += 1;
+        for d in 0..DIM {
+            sums[assign[p] * DIM + d] += x.get2(p, d);
+        }
+    }
+    for k in 0..K {
+        let c = counts[k].max(1) as f64;
+        for d in 0..DIM {
+            sums[k * DIM + d] /= c;
+        }
+    }
+    Ok((NdArray::from_vec(sums, &[K, DIM])?, inertia))
+}
+
+fn run(x: &NdArray<f64>, init: &NdArray<f64>, blas: &mut HeroBlas)
+       -> anyhow::Result<(NdArray<f64>, Vec<f64>, f64)> {
+    let f = blas.engine.freq_hz();
+    blas.reset_run();
+    let mut centroids = init.clone();
+    let mut history = Vec::new();
+    for _ in 0..ITERS {
+        let (c, inertia) = lloyd_step(x, &centroids, blas)?;
+        centroids = c;
+        history.push(inertia);
+    }
+    let secs = blas.trace().grand_total().to_secs(f);
+    Ok((centroids, history, secs))
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(0xB10B5);
+    let (x, true_centers) = make_blobs(&mut rng);
+    // k-means++ lite: init from the first K points (one per true cluster)
+    let mut init_data = Vec::with_capacity(K * DIM);
+    for p in 0..K {
+        init_data.extend_from_slice(x.row(p));
+    }
+    let init = NdArray::from_vec(init_data, &[K, DIM])?;
+    let mut blas = HeroBlas::from_env(DispatchMode::Auto)?;
+
+    println!("k-means: {POINTS} points, dim {DIM}, k={K}, {ITERS} iterations\n");
+
+    blas.policy = DispatchPolicy::with_mode(DispatchMode::HostOnly);
+    let (c_host, hist_host, host_s) = run(&x, &init, &mut blas)?;
+    blas.policy = DispatchPolicy::with_mode(DispatchMode::DeviceOnly);
+    let (c_dev, hist_dev, dev_s) = run(&x, &init, &mut blas)?;
+
+    println!("inertia per iteration (host):   {}",
+             hist_host.iter().map(|v| format!("{v:.0}")).collect::<Vec<_>>().join(" -> "));
+    println!("inertia per iteration (device): {}",
+             hist_dev.iter().map(|v| format!("{v:.0}")).collect::<Vec<_>>().join(" -> "));
+    assert!(
+        hist_host.windows(2).all(|w| w[1] <= w[0] + 1e-6),
+        "inertia must not increase"
+    );
+    assert!(c_host.max_abs_diff(&c_dev) < 1e-8, "paths must agree");
+
+    // recovered centers close to the truth (match greedily)
+    let mut worst = 0.0f64;
+    for tc in &true_centers {
+        let best = (0..K)
+            .map(|k| {
+                c_dev.row(k)
+                    .iter()
+                    .zip(tc.iter())
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f64>()
+                    .sqrt()
+            })
+            .fold(f64::INFINITY, f64::min);
+        worst = worst.max(best);
+    }
+    println!("\nworst recovered-center distance: {worst:.3} (cluster std 0.3)");
+    println!(
+        "total virtual time: host {:.1} ms, offload {:.1} ms ({:.2}x)",
+        host_s * 1e3,
+        dev_s * 1e3,
+        host_s / dev_s
+    );
+    println!(
+        "\nlesson: the k-means cross-term GEMM is thin (n=k={K}), so the copy\n\
+         of X every iteration dominates — offload loses here even though it\n\
+         wins 2.7x on square GEMMs. A smarter dispatch would weigh FLOPs per\n\
+         copied byte, not max dimension — see the ablation table in\n\
+         `cargo bench --bench fig3_gemm`."
+    );
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! The paper's future work, implemented: zero-copy offloading through
+//! the open-source RISC-V IOMMU.  Side-by-side comparison of the three
+//! execution paths across sizes, showing the data-copy region collapsing
+//! into PTE setup.
+//!
+//! ```sh
+//! cargo run --release --example zero_copy
+//! ```
+
+use hero_blas::blas::{DispatchPolicy, HeroBlas};
+use hero_blas::config::DispatchMode;
+use hero_blas::harness::report::{ms, ratio, Table};
+use hero_blas::npy::NdArray;
+use hero_blas::soc::trace::RegionClass;
+use hero_blas::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut blas = HeroBlas::from_env(DispatchMode::Auto)?;
+    let f = blas.engine.freq_hz();
+
+    println!("copy-based vs IOMMU zero-copy offload, f64 GEMM\n");
+    let mut table = Table::new(&[
+        "n", "mode", "copy/map_ms", "total_ms", "speedup_vs_host", "iommu_pages",
+    ]);
+
+    for &n in &[64usize, 128, 256] {
+        let mut rng = Rng::new(n as u64 ^ 0x2C);
+        let a = NdArray::<f64>::randn(&mut rng, &[n, n]);
+        let b = NdArray::<f64>::randn(&mut rng, &[n, n]);
+
+        let mut host_total = 0.0;
+        let mut reference: Option<NdArray<f64>> = None;
+        for mode in [
+            DispatchMode::HostOnly,
+            DispatchMode::DeviceOnly,
+            DispatchMode::DeviceZeroCopy,
+        ] {
+            blas.policy = DispatchPolicy::with_mode(mode);
+            let pages_before = blas.engine.metrics.iommu_pages_mapped;
+            blas.reset_run();
+            let c = a.matmul(&b, &mut blas)?;
+            let total = blas.trace().grand_total().to_secs(f);
+            if mode == DispatchMode::HostOnly {
+                host_total = total;
+                reference = Some(c);
+            } else if let Some(r) = &reference {
+                assert!(r.max_abs_diff(&c) < 1e-9, "paths must agree");
+            }
+            table.row(vec![
+                n.to_string(),
+                mode.to_string(),
+                ms(blas.trace().total(RegionClass::DataCopy).to_secs(f)),
+                ms(total),
+                ratio(host_total / total),
+                (blas.engine.metrics.iommu_pages_mapped - pages_before).to_string(),
+            ]);
+        }
+    }
+    print!("{}", table.render());
+    println!(
+        "\npaper: PTE creation ~7.5x faster than copying at n=128, projecting\n\
+         a 4.7x total speedup — the table above regenerates that projection\n\
+         from an implemented IOMMU path (IOTLB misses show up in compute)."
+    );
+    Ok(())
+}

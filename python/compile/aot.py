@@ -1,0 +1,177 @@
+"""AOT compile path: lower every (op, dtype, shape) variant to HLO text.
+
+Run once by ``make artifacts``; the Rust runtime loads the resulting
+``artifacts/*.hlo.txt`` through ``xla::HloModuleProto::from_text_file``
+and never touches Python again.
+
+Interchange format is HLO **text**, not ``.serialize()``: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact returns a 1-tuple (``return_tuple=True``) so the Rust side
+unwraps with ``to_tuple1()``.
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts [--sizes 16,32,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.gemm import TILE_M, TILE_N, TILE_K, matmul_accum_tile
+
+jax.config.update("jax_enable_x64", True)
+
+# Problem sizes for the fixed-shape "hand-crafted" GEMM artifacts.  These
+# are the x-axis of the paper's Figure 3 (plus 256 to show the asymptote).
+DEFAULT_GEMM_SIZES = (16, 32, 64, 128, 256)
+DEFAULT_GEMV_SIZES = (128, 256)
+DEFAULT_VEC_SIZES = (1024, 4096)
+DTYPES = {"f32": jnp.float32, "f64": jnp.float64}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _scalar1(dtype):
+    # Coefficients travel as shape-(1,) arrays: rank-0 literals are awkward
+    # to build through the xla crate, rank-1 is uniform everywhere.
+    return _spec((1,), dtype)
+
+
+def build_catalog(gemm_sizes, gemv_sizes, vec_sizes):
+    """Return [(name, fn, arg_specs, meta)] for every artifact to emit."""
+    catalog = []
+
+    for dname, dt in DTYPES.items():
+        t = (TILE_M, TILE_N)
+        # Per-tile accumulate primitive: the Rust device runtime owns the
+        # DMA grid and calls this once per (i, j, k) tile step.
+        catalog.append((
+            f"gemm_tile_accum_{dname}",
+            lambda c, a, b: (matmul_accum_tile(c, a, b),),
+            [_spec(t, dt), _spec((TILE_M, TILE_K), dt), _spec((TILE_K, TILE_N), dt)],
+            {"op": "gemm_tile_accum", "dtype": dname,
+             "m": TILE_M, "n": TILE_N, "k": TILE_K},
+        ))
+
+        for n in gemm_sizes:
+            catalog.append((
+                f"gemm_{dname}_n{n}",
+                lambda a, b, c, alpha, beta: (
+                    model.gemm(a, b, c, alpha[0], beta[0]),),
+                [_spec((n, n), dt), _spec((n, n), dt), _spec((n, n), dt),
+                 _scalar1(dt), _scalar1(dt)],
+                {"op": "gemm", "dtype": dname, "m": n, "n": n, "k": n},
+            ))
+
+    dt = jnp.float64
+    for n in gemv_sizes:
+        catalog.append((
+            f"gemv_f64_n{n}",
+            lambda a, x, y, alpha, beta: (
+                model.gemv(a, x, y, alpha[0], beta[0]),),
+            [_spec((n, n), dt), _spec((n,), dt), _spec((n,), dt),
+             _scalar1(dt), _scalar1(dt)],
+            {"op": "gemv", "dtype": "f64", "m": n, "n": n},
+        ))
+
+    for n in vec_sizes:
+        catalog.append((
+            f"axpy_f64_n{n}",
+            lambda alpha, x, y: (model.axpy(alpha[0], x, y),),
+            [_scalar1(dt), _spec((n,), dt), _spec((n,), dt)],
+            {"op": "axpy", "dtype": "f64", "n": n},
+        ))
+        catalog.append((
+            f"dot_f64_n{n}",
+            lambda x, y: (model.dot(x, y),),
+            [_spec((n,), dt), _spec((n,), dt)],
+            {"op": "dot", "dtype": "f64", "n": n},
+        ))
+    return catalog
+
+
+def content_hash(paths) -> str:
+    """Hash of the compile-path sources — lets `make artifacts` no-op when
+    nothing changed (recorded in the manifest)."""
+    h = hashlib.sha256()
+    for p in sorted(paths):
+        with open(p, "rb") as f:
+            h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--gemm-sizes",
+                    default=",".join(map(str, DEFAULT_GEMM_SIZES)))
+    ap.add_argument("--gemv-sizes",
+                    default=",".join(map(str, DEFAULT_GEMV_SIZES)))
+    ap.add_argument("--vec-sizes",
+                    default=",".join(map(str, DEFAULT_VEC_SIZES)))
+    args = ap.parse_args()
+
+    gemm_sizes = [int(s) for s in args.gemm_sizes.split(",") if s]
+    gemv_sizes = [int(s) for s in args.gemv_sizes.split(",") if s]
+    vec_sizes = [int(s) for s in args.vec_sizes.split(",") if s]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    catalog = build_catalog(gemm_sizes, gemv_sizes, vec_sizes)
+
+    manifest = {"tile": {"m": TILE_M, "n": TILE_N, "k": TILE_K},
+                "entries": []}
+    for name, fn, specs, meta in catalog:
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entry = dict(meta)
+        entry.update({
+            "name": name,
+            "file": fname,
+            "arg_shapes": [list(s.shape) for s in specs],
+            "arg_dtypes": [str(s.dtype) for s in specs],
+        })
+        manifest["entries"].append(entry)
+        print(f"  {fname:36s} {len(text):>9d} chars")
+
+    src_dir = os.path.dirname(os.path.abspath(__file__))
+    srcs = [os.path.join(src_dir, f) for f in ("model.py", "aot.py")]
+    srcs += [os.path.join(src_dir, "kernels", f)
+             for f in os.listdir(os.path.join(src_dir, "kernels"))
+             if f.endswith(".py")]
+    manifest["source_hash"] = content_hash(srcs)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['entries'])} artifacts + manifest.json "
+          f"to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""L1 — Pallas kernels for the BLAS hot-spots offloaded to the PMCA.
+
+Each kernel mirrors the Snitch cluster's execution scheme: the BlockSpec
+grid is the DMA HBM<->SPM schedule (tiles sized to fit the 128 KiB L1
+scratch-pad), the kernel body is what the eight FPU-equipped cores do on
+resident tiles.  All kernels are lowered with ``interpret=True`` — the CPU
+PJRT plugin cannot execute Mosaic custom-calls (see DESIGN.md §2).
+"""
+
+from .gemm import matmul_tiled, TILE_M, TILE_N, TILE_K, spm_bytes
+from .gemv import gemv_tiled
+from .level1 import axpy_tiled, dot_tiled, scal_tiled, asum_tiled, nrm2_tiled
+
+__all__ = [
+    "matmul_tiled",
+    "gemv_tiled",
+    "axpy_tiled",
+    "dot_tiled",
+    "scal_tiled",
+    "asum_tiled",
+    "nrm2_tiled",
+    "TILE_M",
+    "TILE_N",
+    "TILE_K",
+    "spm_bytes",
+]

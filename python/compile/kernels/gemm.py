@@ -1,0 +1,114 @@
+"""L1 Pallas kernel: SPM-tiled GEMM for the Snitch PMCA.
+
+Hardware adaptation (DESIGN.md §2): the paper's accelerator is a Snitch
+cluster with a 128 KiB L1 scratch-pad refilled by a DMA engine — the exact
+role Pallas' BlockSpec pipeline plays for VMEM on TPU.  We therefore
+express the paper's device GEMM as a Pallas kernel whose grid is the DMA
+schedule:
+
+  * grid = (M/TM, N/TN, K/TK) — outer two dims walk output tiles, the
+    inner dim streams K-panels through the scratch-pad,
+  * the C tile stays resident across the K loop (accumulation in o_ref),
+    matching the cluster keeping the output block in SPM while A/B panels
+    are double-buffered in,
+  * tile sizes are chosen so the resident set fits the 128 KiB SPM:
+    f64 64x64 tiles -> 3 * 64*64*8 B = 96 KiB  (<= 128 KiB, leaving room
+    for the double buffer of one panel).
+
+``interpret=True`` is mandatory on this image: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile geometry shared with the Rust device model (rust/src/blas/device_gemm.rs
+# and configs/carfield.toml must agree with these).
+TILE_M = 64
+TILE_N = 64
+TILE_K = 64
+
+
+def spm_bytes(tm: int = TILE_M, tn: int = TILE_N, tk: int = TILE_K,
+              itemsize: int = 8) -> int:
+    """Resident scratch-pad footprint of one (A, B, C) tile set in bytes.
+
+    This is the quantity the 128 KiB L1 SPM constraint applies to; the
+    rust SoC model charges DMA time for exactly these refills.
+    """
+    return (tm * tk + tk * tn + tm * tn) * itemsize
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """Inner kernel: accumulate one K-panel into the resident C tile."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "tk"))
+def matmul_tiled(x: jax.Array, y: jax.Array, *, tm: int = TILE_M,
+                 tn: int = TILE_N, tk: int = TILE_K) -> jax.Array:
+    """``x @ y`` via the SPM-tiled Pallas kernel.
+
+    Shapes must be multiples of the tile sizes; the L2 wrapper
+    (``compile.model``) pads arbitrary shapes up to tile multiples and
+    slices the result back, exactly like the device runtime does before
+    DMA-ing panels into the scratch-pad.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {y.shape}")
+    if m % tm or n % tn or k % tk:
+        raise ValueError(
+            f"shape ({m},{k})x({k2},{n}) not a multiple of tile "
+            f"({tm},{tn},{tk}); pad at L2 first"
+        )
+    if x.dtype != y.dtype:
+        raise ValueError(f"dtype mismatch: {x.dtype} vs {y.dtype}")
+
+    grid = (m // tm, n // tn, k // tk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+def _matmul_accum_kernel(c_ref, x_ref, y_ref, o_ref):
+    """C-accumulating variant: o = c + x @ y (one tile, no grid).
+
+    This is the per-tile artifact the Rust device runtime executes once
+    per (i, j, kk) step of its own DMA loop — the Rust side owns the grid,
+    the kernel owns one resident-tile FMA burst.
+    """
+    o_ref[...] = c_ref[...] + jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@jax.jit
+def matmul_accum_tile(c: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
+    """Single-tile accumulate: ``c + x @ y`` with all operands tile-shaped."""
+    return pl.pallas_call(
+        _matmul_accum_kernel,
+        out_shape=jax.ShapeDtypeStruct(c.shape, c.dtype),
+        interpret=True,
+    )(c, x, y)

@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: SPM-tiled GEMV (y = A @ x) for the Snitch PMCA.
+
+BLAS level-2 traffic is memory-bound: each A element is used once, so the
+DMA schedule streams row-panels of A through the scratch-pad while the
+x vector stays resident (x is small: n*8 bytes).  Grid walks (M/TM, N/TN);
+the partial dot products accumulate in the resident output block, the
+same scheme the Snitch cluster would use with its DMA engine.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_ROWS = 64
+TILE_COLS = 64
+
+
+def _gemv_kernel(a_ref, x_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], x_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tr", "tc"))
+def gemv_tiled(a: jax.Array, x: jax.Array, *, tr: int = TILE_ROWS,
+               tc: int = TILE_COLS) -> jax.Array:
+    """``a @ x`` for a 2-D ``a`` and 1-D ``x`` via row-panel streaming.
+
+    Shapes must be multiples of the tile sizes (pad at L2).
+    """
+    m, n = a.shape
+    if x.shape != (n,):
+        raise ValueError(f"gemv mismatch: {a.shape} @ {x.shape}")
+    if m % tr or n % tc:
+        raise ValueError(
+            f"shape ({m},{n}) not a multiple of tile ({tr},{tc}); pad at L2"
+        )
+
+    grid = (m // tr, n // tc)
+    return pl.pallas_call(
+        _gemv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tr, tc), lambda i, j: (i, j)),
+            pl.BlockSpec((tc,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tr,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), a.dtype),
+        interpret=True,
+    )(a, x)

@@ -1,0 +1,135 @@
+"""L1 Pallas kernels: BLAS level-1 primitives (axpy, dot, scal, asum, nrm2).
+
+Level-1 ops are pure streaming: the DMA schedule is a 1-D walk of
+vector panels through the scratch-pad.  Reductions (dot/asum/nrm2)
+accumulate into a single resident scalar block across the grid, which is
+exactly how the cluster would hold a partial sum in SPM while panels
+stream past.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 256  # elements per streamed panel
+
+
+def _check_1d(x: jax.Array, tile: int, name: str) -> None:
+    (n,) = x.shape
+    if n % tile:
+        raise ValueError(f"{name}: length {n} not a multiple of {tile}; pad at L2")
+
+
+def _axpy_kernel(alpha_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = alpha_ref[0] * x_ref[...] + y_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def axpy_tiled(alpha: jax.Array, x: jax.Array, y: jax.Array, *,
+               tile: int = TILE) -> jax.Array:
+    """``alpha * x + y`` with alpha a shape-(1,) array (kept traced so one
+    artifact serves all alphas)."""
+    _check_1d(x, tile, "axpy")
+    (n,) = x.shape
+    return pl.pallas_call(
+        _axpy_kernel,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(alpha, x, y)
+
+
+def _scal_kernel(alpha_ref, x_ref, o_ref):
+    o_ref[...] = alpha_ref[0] * x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def scal_tiled(alpha: jax.Array, x: jax.Array, *, tile: int = TILE) -> jax.Array:
+    """``alpha * x``."""
+    _check_1d(x, tile, "scal")
+    (n,) = x.shape
+    return pl.pallas_call(
+        _scal_kernel,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(alpha, x)
+
+
+def _make_reduce_kernel(panel_fn):
+    """Reduction kernel factory: accumulate panel_fn(panels) into o_ref[0]."""
+
+    def kernel(x_ref, *rest):
+        # rest is (y_ref, o_ref) for dot, (o_ref,) for unary reductions.
+        o_ref = rest[-1]
+
+        @pl.when(pl.program_id(0) == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += panel_fn(x_ref, *rest[:-1])
+
+    return kernel
+
+
+_dot_kernel = _make_reduce_kernel(
+    lambda x_ref, y_ref: jnp.sum(x_ref[...] * y_ref[...], keepdims=True)
+)
+_asum_kernel = _make_reduce_kernel(
+    lambda x_ref: jnp.sum(jnp.abs(x_ref[...]), keepdims=True)
+)
+_sumsq_kernel = _make_reduce_kernel(
+    lambda x_ref: jnp.sum(x_ref[...] * x_ref[...], keepdims=True)
+)
+
+
+def _reduce_call(kernel, args, tile):
+    (n,) = args[0].shape
+    in_specs = [pl.BlockSpec((tile,), lambda i: (i,)) for _ in args]
+    return pl.pallas_call(
+        kernel,
+        grid=(n // tile,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), args[0].dtype),
+        interpret=True,
+    )(*args)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def dot_tiled(x: jax.Array, y: jax.Array, *, tile: int = TILE) -> jax.Array:
+    """``sum(x * y)`` as a shape-(1,) array."""
+    _check_1d(x, tile, "dot")
+    if x.shape != y.shape:
+        raise ValueError(f"dot mismatch: {x.shape} vs {y.shape}")
+    return _reduce_call(_dot_kernel, (x, y), tile)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def asum_tiled(x: jax.Array, *, tile: int = TILE) -> jax.Array:
+    """``sum(|x|)`` as a shape-(1,) array."""
+    _check_1d(x, tile, "asum")
+    return _reduce_call(_asum_kernel, (x,), tile)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def nrm2_tiled(x: jax.Array, *, tile: int = TILE) -> jax.Array:
+    """``sqrt(sum(x^2))`` as a shape-(1,) array (sqrt applied outside the
+    grid, on the resident accumulator)."""
+    _check_1d(x, tile, "nrm2")
+    return jnp.sqrt(_reduce_call(_sumsq_kernel, (x,), tile))

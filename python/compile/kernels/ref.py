@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every kernel and every L2 BLAS graph.
+
+These are the correctness ground truth: no Pallas, no tiling, just the
+textbook definition.  ``python/tests`` asserts kernels == ref under
+hypothesis-swept shapes/dtypes, and the Rust integration tests compare
+the artifact outputs against the same semantics re-implemented in Rust.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gemm(a, b, c=None, *, alpha=1.0, beta=0.0, trans_a=False, trans_b=False):
+    """CBLAS xGEMM: ``alpha * op(a) @ op(b) + beta * c``."""
+    opa = a.T if trans_a else a
+    opb = b.T if trans_b else b
+    out = alpha * (opa @ opb)
+    if c is not None:
+        out = out + beta * c
+    return out
+
+
+def syrk(a, c=None, *, alpha=1.0, beta=0.0, trans=False, lower=False):
+    """CBLAS xSYRK: ``alpha * op(a) @ op(a).T + beta * c`` on one triangle.
+
+    Returns the full matrix with the untouched triangle taken from ``c``
+    (matching what a BLAS caller observes in memory).
+    """
+    opa = a.T if trans else a
+    full = alpha * (opa @ opa.T)
+    if c is None:
+        c = jnp.zeros_like(full)
+    full = full + beta * c
+    n = full.shape[0]
+    rows = jnp.arange(n)[:, None]
+    cols = jnp.arange(n)[None, :]
+    mask = rows >= cols if lower else rows <= cols
+    return jnp.where(mask, full, c)
+
+
+def gemv(a, x, y=None, *, alpha=1.0, beta=0.0, trans=False):
+    """CBLAS xGEMV: ``alpha * op(a) @ x + beta * y``."""
+    opa = a.T if trans else a
+    out = alpha * (opa @ x)
+    if y is not None:
+        out = out + beta * y
+    return out
+
+
+def ger(a, x, y, *, alpha=1.0):
+    """CBLAS xGER: ``a + alpha * outer(x, y)``."""
+    return a + alpha * jnp.outer(x, y)
+
+
+def axpy(alpha, x, y):
+    return alpha * x + y
+
+
+def scal(alpha, x):
+    return alpha * x
+
+
+def dot(x, y):
+    return jnp.sum(x * y)
+
+
+def asum(x):
+    return jnp.sum(jnp.abs(x))
+
+
+def nrm2(x):
+    return jnp.sqrt(jnp.sum(x * x))

@@ -1,0 +1,160 @@
+"""L2 — JAX BLAS compute graphs assembled around the L1 Pallas kernels.
+
+Each public function here is a full CBLAS-semantics operation (alpha,
+beta, transposes) whose inner hot loop is the SPM-tiled Pallas kernel
+from ``compile.kernels``.  ``compile.aot`` lowers jitted instances of
+these graphs, per (op, dtype, shape), to HLO text artifacts that the Rust
+runtime executes via PJRT — Python never runs at request time.
+
+Padding: the device DMA engine only moves whole tiles, so arbitrary
+problem sizes are zero-padded up to tile multiples here (beta/alpha math
+is applied after slicing back, so padding never leaks into results).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gemm as gemm_kernels
+from .kernels import gemv as gemv_kernels
+from .kernels import level1
+from .kernels.gemm import matmul_tiled
+from .kernels.gemv import gemv_tiled
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _round_up(n: int, m: int) -> int:
+    return (n + m - 1) // m * m
+
+
+def _pad2(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    m, n = x.shape
+    if m == rows and n == cols:
+        return x
+    return jnp.pad(x, ((0, rows - m), (0, cols - n)))
+
+
+def _pad1(x: jax.Array, n: int) -> jax.Array:
+    (m,) = x.shape
+    if m == n:
+        return x
+    return jnp.pad(x, (0, n - m))
+
+
+# ---------------------------------------------------------------------------
+# Level 3
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("trans_a", "trans_b"))
+def gemm(a, b, c, alpha, beta, *, trans_a: bool = False,
+         trans_b: bool = False):
+    """xGEMM: ``alpha * op(a) @ op(b) + beta * c`` via the tiled kernel.
+
+    ``alpha``/``beta`` are traced scalars so one artifact per shape serves
+    every coefficient pair.
+    """
+    opa = a.T if trans_a else a
+    opb = b.T if trans_b else b
+    m, k = opa.shape
+    k2, n = opb.shape
+    if k != k2:
+        raise ValueError(f"gemm contraction mismatch: {opa.shape} @ {opb.shape}")
+
+    tm, tn, tk = gemm_kernels.TILE_M, gemm_kernels.TILE_N, gemm_kernels.TILE_K
+    mp, np_, kp = _round_up(m, tm), _round_up(n, tn), _round_up(k, tk)
+    prod = matmul_tiled(_pad2(opa, mp, kp), _pad2(opb, kp, np_))[:m, :n]
+    return alpha * prod + beta * c
+
+
+@functools.partial(jax.jit, static_argnames=("trans", "lower"))
+def syrk(a, c, alpha, beta, *, trans: bool = False, lower: bool = False):
+    """xSYRK: rank-k update on one triangle, via the tiled GEMM kernel.
+
+    The paper compiles syrk host-only; we still provide the device graph
+    so the Rust dispatch policy (not artifact availability) is what keeps
+    it on the host — and so the ablation bench can flip that choice.
+    """
+    opa = a.T if trans else a
+    n, k = opa.shape
+    tm, tn, tk = gemm_kernels.TILE_M, gemm_kernels.TILE_N, gemm_kernels.TILE_K
+    np_, kp = _round_up(n, tm), _round_up(k, tk)
+    pad_a = _pad2(opa, np_, kp)
+    full = matmul_tiled(pad_a, _pad2(opa.T, kp, _round_up(n, tn)))[:n, :n]
+    full = alpha * full + beta * c
+    rows = jnp.arange(n)[:, None]
+    cols = jnp.arange(n)[None, :]
+    mask = rows >= cols if lower else rows <= cols
+    return jnp.where(mask, full, c)
+
+
+# ---------------------------------------------------------------------------
+# Level 2
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("trans",))
+def gemv(a, x, y, alpha, beta, *, trans: bool = False):
+    """xGEMV: ``alpha * op(a) @ x + beta * y`` via the row-panel kernel."""
+    opa = a.T if trans else a
+    m, n = opa.shape
+    tr, tc = gemv_kernels.TILE_ROWS, gemv_kernels.TILE_COLS
+    mp, np_ = _round_up(m, tr), _round_up(n, tc)
+    prod = gemv_tiled(_pad2(opa, mp, np_), _pad1(x, np_))[:m]
+    return alpha * prod + beta * y
+
+
+@jax.jit
+def ger(a, x, y, alpha):
+    """xGER: ``a + alpha * outer(x, y)`` (outer product is pure streaming —
+    expressed directly, XLA fuses it into a single pass)."""
+    return a + alpha * jnp.outer(x, y)
+
+
+# ---------------------------------------------------------------------------
+# Level 1
+# ---------------------------------------------------------------------------
+
+def _padded_len(n: int) -> int:
+    return _round_up(n, level1.TILE)
+
+
+@jax.jit
+def axpy(alpha, x, y):
+    """xAXPY: ``alpha * x + y``."""
+    (n,) = x.shape
+    np_ = _padded_len(n)
+    alpha1 = jnp.reshape(alpha, (1,)).astype(x.dtype)
+    return level1.axpy_tiled(alpha1, _pad1(x, np_), _pad1(y, np_))[:n]
+
+
+@jax.jit
+def scal(alpha, x):
+    """xSCAL: ``alpha * x``."""
+    (n,) = x.shape
+    alpha1 = jnp.reshape(alpha, (1,)).astype(x.dtype)
+    return level1.scal_tiled(alpha1, _pad1(x, _padded_len(n)))[:n]
+
+
+@jax.jit
+def dot(x, y):
+    """xDOT → shape-(1,)."""
+    (n,) = x.shape
+    np_ = _padded_len(n)
+    return level1.dot_tiled(_pad1(x, np_), _pad1(y, np_))
+
+
+@jax.jit
+def asum(x):
+    """xASUM → shape-(1,)."""
+    (n,) = x.shape
+    return level1.asum_tiled(_pad1(x, _padded_len(n)))
+
+
+@jax.jit
+def nrm2(x):
+    """xNRM2 → shape-(1,) (zero padding does not change the norm)."""
+    (n,) = x.shape
+    return level1.nrm2_tiled(_pad1(x, _padded_len(n)))

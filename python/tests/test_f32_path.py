@@ -1,0 +1,46 @@
+"""f32 through every layer (the paper's lower-precision future work)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.gemm import matmul_accum_tile, matmul_tiled
+
+
+def _rand(key, shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 80), n=st.integers(1, 80), k=st.integers(1, 80),
+       seed=st.integers(0, 2**31 - 1))
+def test_f32_gemm_model(m, n, k, seed):
+    ka, kb, kc = jax.random.split(jax.random.PRNGKey(seed), 3)
+    a, b, c = _rand(ka, (m, k)), _rand(kb, (k, n)), _rand(kc, (m, n))
+    got = model.gemm(a, b, c, 1.5, -0.5)
+    want = ref.gemm(a, b, c, alpha=1.5, beta=-0.5)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_f32_outputs_stay_f32():
+    a = jnp.ones((64, 64), jnp.float32)
+    out = matmul_tiled(a, a)
+    assert out.dtype == jnp.float32
+    acc = matmul_accum_tile(jnp.zeros((64, 64), jnp.float32), a, a)
+    assert acc.dtype == jnp.float32
+    np.testing.assert_allclose(acc, 64.0 * jnp.ones((64, 64)), rtol=1e-6)
+
+
+@pytest.mark.parametrize("n", [16, 64, 128])
+def test_catalog_sized_gemm_f32(n):
+    """The exact shapes emitted to artifacts/ must be correct in f32."""
+    ka, kb = jax.random.split(jax.random.PRNGKey(n))
+    a, b = _rand(ka, (n, n)), _rand(kb, (n, n))
+    c = jnp.zeros((n, n), jnp.float32)
+    got = model.gemm(a, b, c, 1.0, 0.0)
+    np.testing.assert_allclose(got, a @ b, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,69 @@
+"""L1 gemv + level-1 Pallas kernels vs the oracle (exact tile multiples)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gemv as gvk
+from compile.kernels import level1, ref
+from compile.kernels.gemv import gemv_tiled
+
+
+def _rand(key, shape, dt=jnp.float64):
+    return jax.random.normal(key, shape, dtype=dt)
+
+
+@settings(max_examples=15, deadline=None)
+@given(gm=st.integers(1, 4), gn=st.integers(1, 4),
+       seed=st.integers(0, 2**31 - 1))
+def test_gemv_tiled(gm, gn, seed):
+    m, n = gm * gvk.TILE_ROWS, gn * gvk.TILE_COLS
+    ka, kx = jax.random.split(jax.random.PRNGKey(seed))
+    a, x = _rand(ka, (m, n)), _rand(kx, (n,))
+    np.testing.assert_allclose(gemv_tiled(a, x), a @ x, rtol=1e-9, atol=1e-9)
+
+
+def test_gemv_rejects_bad_shapes():
+    with pytest.raises(ValueError, match="mismatch"):
+        gemv_tiled(jnp.zeros((64, 64)), jnp.zeros((128,)))
+    with pytest.raises(ValueError, match="not a multiple"):
+        gemv_tiled(jnp.zeros((65, 64)), jnp.zeros((64,)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(panels=st.integers(1, 8), alpha=st.floats(-3, 3),
+       seed=st.integers(0, 2**31 - 1))
+def test_level1_tiled(panels, alpha, seed):
+    n = panels * level1.TILE
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x, y = _rand(kx, (n,)), _rand(ky, (n,))
+    a1 = jnp.array([alpha], jnp.float64)
+    np.testing.assert_allclose(level1.axpy_tiled(a1, x, y),
+                               ref.axpy(alpha, x, y), rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(level1.scal_tiled(a1, x),
+                               ref.scal(alpha, x), rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(level1.dot_tiled(x, y)[0], ref.dot(x, y),
+                               rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(level1.asum_tiled(x)[0], ref.asum(x),
+                               rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(level1.nrm2_tiled(x)[0], ref.nrm2(x),
+                               rtol=1e-9, atol=1e-9)
+
+
+def test_level1_rejects_non_multiples():
+    with pytest.raises(ValueError, match="not a multiple"):
+        level1.dot_tiled(jnp.zeros((100,)), jnp.zeros((100,)))
+
+
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.float64])
+def test_level1_dtypes(dt):
+    n = level1.TILE
+    x = jnp.linspace(-1, 1, n, dtype=dt)
+    y = jnp.linspace(1, 2, n, dtype=dt)
+    a1 = jnp.array([0.5], dt)
+    tol = dict(rtol=1e-5) if dt == jnp.float32 else dict(rtol=1e-12)
+    np.testing.assert_allclose(level1.axpy_tiled(a1, x, y),
+                               0.5 * x + y, **tol)
+    assert level1.axpy_tiled(a1, x, y).dtype == dt

@@ -1,0 +1,366 @@
+//! The session API — what NumPy (our [`crate::npy`]) links against.
+//!
+//! [`HeroBlas`] owns the whole vertical slice: offload engine (SoC
+//! models + virtual clock + trace), the PJRT artifact registry, and the
+//! dispatch policy.  Every public method has CBLAS semantics; dispatch
+//! decides per call whether the CVA6 host kernels or the heterogeneous
+//! device kernels run, exactly like OpenBLAS' interface layer.
+
+use std::path::Path;
+
+use crate::config::{DispatchMode, PlatformConfig};
+use crate::error::Result;
+use crate::hero::offload::OffloadKind;
+use crate::metrics::Metrics;
+use crate::omp::engine::OffloadEngine;
+use crate::runtime::ArtifactRegistry;
+use crate::soc::trace::{RegionClass, Trace};
+use crate::soc::Platform;
+
+use super::device;
+use super::dispatch::{DispatchPolicy, ExecTarget};
+use super::elem::Elem;
+use super::host;
+use super::types::{check_gemm_dims, check_gemv_dims, Transpose, Uplo};
+
+/// One linked instance of the accelerated BLAS.
+pub struct HeroBlas {
+    pub engine: OffloadEngine,
+    pub registry: ArtifactRegistry,
+    pub policy: DispatchPolicy,
+}
+
+impl std::fmt::Debug for HeroBlas {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("HeroBlas")
+            .field("platform", &self.engine.platform.cfg.name)
+            .field("policy", &self.policy)
+            .finish()
+    }
+}
+
+impl HeroBlas {
+    /// Build a session from a platform config + artifacts directory.
+    pub fn new(cfg: PlatformConfig, artifacts: &Path, policy: DispatchPolicy) -> Result<Self> {
+        cfg.validate()?;
+        let engine = OffloadEngine::new(Platform::new(cfg))?;
+        let registry = ArtifactRegistry::open(artifacts)?;
+        Ok(HeroBlas { engine, registry, policy })
+    }
+
+    /// Default platform, artifacts found via `HERO_BLAS_ARTIFACTS` or by
+    /// walking up from the current directory.
+    pub fn from_env(mode: DispatchMode) -> Result<Self> {
+        let dir = crate::find_artifacts_dir()?;
+        HeroBlas::new(
+            PlatformConfig::default(),
+            &dir,
+            DispatchPolicy::with_mode(mode),
+        )
+    }
+
+    /// Clear the per-run trace (Figure 3 measures warm calls).
+    pub fn reset_run(&mut self) {
+        self.engine.reset_run();
+    }
+
+    /// The region trace of everything since the last reset.
+    pub fn trace(&self) -> &Trace {
+        &self.engine.trace
+    }
+
+    /// Aggregate counters (incl. PJRT wall time synced from the registry).
+    pub fn metrics(&mut self) -> Metrics {
+        self.engine.metrics.pjrt_wall_us = self.registry.stats().exec_wall_us;
+        self.engine.metrics
+    }
+
+    /// Virtual seconds since engine start.
+    pub fn now_secs(&self) -> f64 {
+        self.engine.now().to_secs(self.engine.freq_hz())
+    }
+
+    // ------------------------------------------------------------------
+    // Level 3
+    // ------------------------------------------------------------------
+
+    /// xGEMM: `C = alpha * op(A) @ op(B) + beta * C`.
+    /// `a`/`b` are stored row-major with the given stored dims.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm<T: Elem>(
+        &mut self,
+        trans_a: Transpose,
+        trans_b: Transpose,
+        alpha: T,
+        a: &[T],
+        a_dims: (usize, usize),
+        b: &[T],
+        b_dims: (usize, usize),
+        beta: T,
+        c: &mut [T],
+        c_dims: (usize, usize),
+    ) -> Result<()> {
+        let (m, n, k) = check_gemm_dims(trans_a, trans_b, a_dims, b_dims, c_dims)?;
+        let a_op = host::materialize_op(a, a_dims.0, a_dims.1, trans_a);
+        let b_op = host::materialize_op(b, b_dims.0, b_dims.1, trans_b);
+        match self.policy.gemm(m, n, k) {
+            ExecTarget::Host => {
+                host::gemm(m, n, k, alpha, &a_op, &b_op, beta, c);
+                let cyc = self.engine.platform.host.gemm_cycles(m, n, k, T::F32_PATH);
+                self.engine.charge_host_compute(cyc, "host_gemm");
+                Ok(())
+            }
+            ExecTarget::Device => device::gemm(
+                &mut self.engine, &mut self.registry, m, n, k, alpha, &a_op,
+                &b_op, beta, c, false,
+            ),
+            ExecTarget::DeviceZeroCopy => device::gemm(
+                &mut self.engine, &mut self.registry, m, n, k, alpha, &a_op,
+                &b_op, beta, c, true,
+            ),
+        }
+    }
+
+    /// xSYRK — host-only, like the paper's `syrk.c`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn syrk<T: Elem>(
+        &mut self,
+        uplo: Uplo,
+        trans: Transpose,
+        alpha: T,
+        a: &[T],
+        a_dims: (usize, usize),
+        beta: T,
+        c: &mut [T],
+        n_dim: usize,
+    ) -> Result<()> {
+        let (n, k) = trans.dims(a_dims.0, a_dims.1);
+        if n != n_dim || c.len() != n * n {
+            return Err(crate::error::Error::shape(format!(
+                "syrk: op(A)={n}x{k}, C must be {n_dim}x{n_dim}"
+            )));
+        }
+        let a_op = host::materialize_op(a, a_dims.0, a_dims.1, trans);
+        host::syrk(n, k, alpha, &a_op, beta, c, uplo);
+        // ~half the FLOPs of a full GEMM (one triangle)
+        let cyc = self.engine.platform.host.gemm_cycles(n, n, k, T::F32_PATH);
+        self.engine
+            .charge_host_compute(crate::soc::clock::Cycles(cyc.0 / 2), "host_syrk");
+        Ok(())
+    }
+
+    /// xSYMM — host-only: `C = alpha * A @ B + beta * C`, A symmetric
+    /// (n x n, `uplo` triangle stored), B/C are n x m_cols.
+    #[allow(clippy::too_many_arguments)]
+    pub fn symm<T: Elem>(
+        &mut self,
+        uplo: Uplo,
+        alpha: T,
+        a: &[T],
+        n: usize,
+        b: &[T],
+        m_cols: usize,
+        beta: T,
+        c: &mut [T],
+    ) -> Result<()> {
+        if a.len() != n * n || b.len() != n * m_cols || c.len() != n * m_cols {
+            return Err(crate::error::Error::shape("symm: dimension mismatch"));
+        }
+        host::symm(n, m_cols, alpha, a, b, beta, c, uplo);
+        let cyc = self.engine.platform.host.gemm_cycles(n, m_cols, n, T::F32_PATH);
+        self.engine.charge_host_compute(cyc, "host_symm");
+        Ok(())
+    }
+
+    /// xTRMM — host-only: `B = alpha * A @ B`, A triangular (n x n).
+    #[allow(clippy::too_many_arguments)]
+    pub fn trmm<T: Elem>(
+        &mut self,
+        uplo: Uplo,
+        unit_diag: bool,
+        alpha: T,
+        a: &[T],
+        n: usize,
+        b: &mut [T],
+        m_cols: usize,
+    ) -> Result<()> {
+        if a.len() != n * n || b.len() != n * m_cols {
+            return Err(crate::error::Error::shape("trmm: dimension mismatch"));
+        }
+        host::trmm(n, m_cols, alpha, a, b, uplo, unit_diag);
+        let cyc = self.engine.platform.host.gemm_cycles(n, m_cols, n, T::F32_PATH);
+        self.engine
+            .charge_host_compute(crate::soc::clock::Cycles(cyc.0 / 2), "host_trmm");
+        Ok(())
+    }
+
+    /// xTRSM — host-only: solve `A X = alpha * B` in place.
+    #[allow(clippy::too_many_arguments)]
+    pub fn trsm<T: Elem>(
+        &mut self,
+        uplo: Uplo,
+        unit_diag: bool,
+        alpha: T,
+        a: &[T],
+        n: usize,
+        b: &mut [T],
+        m_cols: usize,
+    ) -> Result<()> {
+        if a.len() != n * n || b.len() != n * m_cols {
+            return Err(crate::error::Error::shape("trsm: dimension mismatch"));
+        }
+        host::trsm(n, m_cols, alpha, a, b, uplo, unit_diag);
+        let cyc = self.engine.platform.host.gemm_cycles(n, m_cols, n, T::F32_PATH);
+        self.engine
+            .charge_host_compute(crate::soc::clock::Cycles(cyc.0 / 2), "host_trsm");
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Level 2
+    // ------------------------------------------------------------------
+
+    /// xGEMV: `y = alpha * op(A) @ x + beta * y`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemv<T: Elem>(
+        &mut self,
+        trans: Transpose,
+        alpha: T,
+        a: &[T],
+        a_dims: (usize, usize),
+        x: &[T],
+        beta: T,
+        y: &mut [T],
+    ) -> Result<()> {
+        let (m, n) = check_gemv_dims(trans, a_dims, x.len(), y.len())?;
+        let a_op = host::materialize_op(a, a_dims.0, a_dims.1, trans);
+        match self.policy.gemv(m, n) {
+            ExecTarget::Host => {
+                host::gemv(m, n, alpha, &a_op, x, beta, y);
+                let cyc = self.engine.platform.host.gemv_cycles(m, n, T::F32_PATH);
+                self.engine.charge_host_compute(cyc, "host_gemv");
+                Ok(())
+            }
+            ExecTarget::Device => device::gemv(
+                &mut self.engine, &mut self.registry, m, n, alpha, &a_op, x,
+                beta, y, false,
+            ),
+            ExecTarget::DeviceZeroCopy => device::gemv(
+                &mut self.engine, &mut self.registry, m, n, alpha, &a_op, x,
+                beta, y, true,
+            ),
+        }
+    }
+
+    /// xGER: `A += alpha * x y^T` (host-only: rank-1 updates never win).
+    pub fn ger<T: Elem>(
+        &mut self,
+        alpha: T,
+        x: &[T],
+        y: &[T],
+        a: &mut [T],
+        a_dims: (usize, usize),
+    ) -> Result<()> {
+        if a.len() != a_dims.0 * a_dims.1 || x.len() != a_dims.0 || y.len() != a_dims.1 {
+            return Err(crate::error::Error::shape("ger: dimension mismatch"));
+        }
+        host::ger(a_dims.0, a_dims.1, alpha, x, y, a);
+        let cyc = self
+            .engine
+            .platform
+            .host
+            .gemv_cycles(a_dims.0, a_dims.1, T::F32_PATH);
+        self.engine.charge_host_compute(cyc, "host_ger");
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Level 1 (device path: f64 only, like the artifact catalog)
+    // ------------------------------------------------------------------
+
+    /// dAXPY.
+    pub fn axpy(&mut self, alpha: f64, x: &[f64], y: &mut [f64]) -> Result<()> {
+        if x.len() != y.len() {
+            return Err(crate::error::Error::shape("axpy: length mismatch"));
+        }
+        match self.policy.level1(OffloadKind::Axpy, x.len()) {
+            ExecTarget::Host => {
+                host::axpy(alpha, x, y);
+                let cyc = self.engine.platform.host.level1_cycles(x.len(), 2.0, false);
+                self.engine.charge_host_compute(cyc, "host_axpy");
+                Ok(())
+            }
+            ExecTarget::Device => {
+                device::axpy_f64(&mut self.engine, &mut self.registry, alpha, x, y, false)
+            }
+            ExecTarget::DeviceZeroCopy => {
+                device::axpy_f64(&mut self.engine, &mut self.registry, alpha, x, y, true)
+            }
+        }
+    }
+
+    /// dDOT.
+    pub fn dot(&mut self, x: &[f64], y: &[f64]) -> Result<f64> {
+        if x.len() != y.len() {
+            return Err(crate::error::Error::shape("dot: length mismatch"));
+        }
+        match self.policy.level1(OffloadKind::Dot, x.len()) {
+            ExecTarget::Host => {
+                let r = host::dot(x, y);
+                let cyc = self.engine.platform.host.level1_cycles(x.len(), 2.0, false);
+                self.engine.charge_host_compute(cyc, "host_dot");
+                Ok(r)
+            }
+            ExecTarget::Device => {
+                device::dot_f64(&mut self.engine, &mut self.registry, x, y, false)
+            }
+            ExecTarget::DeviceZeroCopy => {
+                device::dot_f64(&mut self.engine, &mut self.registry, x, y, true)
+            }
+        }
+    }
+
+    /// dSCAL (host streaming op).
+    pub fn scal(&mut self, alpha: f64, x: &mut [f64]) -> Result<()> {
+        host::scal(alpha, x);
+        let cyc = self.engine.platform.host.level1_cycles(x.len(), 1.0, false);
+        self.engine.charge_host_compute(cyc, "host_scal");
+        Ok(())
+    }
+
+    /// dASUM.
+    pub fn asum(&mut self, x: &[f64]) -> Result<f64> {
+        let r = host::asum(x);
+        let cyc = self.engine.platform.host.level1_cycles(x.len(), 1.0, false);
+        self.engine.charge_host_compute(cyc, "host_asum");
+        Ok(r)
+    }
+
+    /// dNRM2.
+    pub fn nrm2(&mut self, x: &[f64]) -> Result<f64> {
+        let r = host::nrm2(x);
+        let cyc = self.engine.platform.host.level1_cycles(x.len(), 2.0, false);
+        self.engine.charge_host_compute(cyc, "host_nrm2");
+        Ok(r)
+    }
+
+    /// idAMAX.
+    pub fn iamax(&mut self, x: &[f64]) -> Result<usize> {
+        let r = host::iamax(x);
+        let cyc = self.engine.platform.host.level1_cycles(x.len(), 1.0, false);
+        self.engine.charge_host_compute(cyc, "host_iamax");
+        Ok(r)
+    }
+
+    /// Convenience: total virtual time per region since last reset, in
+    /// seconds (the Figure 3 stacked-bar values).
+    pub fn region_secs(&self) -> Vec<(RegionClass, f64)> {
+        let f = self.engine.freq_hz();
+        self.engine
+            .trace
+            .breakdown()
+            .into_iter()
+            .map(|(c, cyc)| (c, cyc.to_secs(f)))
+            .collect()
+    }
+}

@@ -1,0 +1,162 @@
+//! Dispatch: which kernels may offload, and when it pays off.
+//!
+//! Mirrors the paper's build-time split (GEMM compiled for host+device,
+//! `syrk.c` host-only) plus a size threshold for the `Auto` mode — the
+//! paper's Figure 3 shows offload *losing* below the crossover size, so a
+//! production dispatch must pick the host for small problems.
+
+use crate::config::DispatchMode;
+use crate::hero::offload::OffloadKind;
+
+/// Where one call will execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecTarget {
+    Host,
+    /// Offload via copies into the device DRAM partition.
+    Device,
+    /// Offload via IOMMU zero-copy mapping.
+    DeviceZeroCopy,
+}
+
+/// The dispatch policy (one per session; ablation benches mutate it).
+#[derive(Debug, Clone)]
+pub struct DispatchPolicy {
+    pub mode: DispatchMode,
+    /// `Auto`: offload GEMM when max(m, n, k) >= this.
+    pub gemm_threshold: usize,
+    /// `Auto`: offload GEMV when m*n >= this (level-2 is memory-bound;
+    /// the copy cost usually dwarfs the win, hence a high default).
+    pub gemv_threshold: usize,
+    /// `Auto`: offload level-1 ops when n >= this.
+    pub level1_threshold: usize,
+    /// Kernels allowed on the device at all (the paper's Makefile split).
+    pub device_kernels: Vec<OffloadKind>,
+}
+
+impl Default for DispatchPolicy {
+    fn default() -> Self {
+        DispatchPolicy {
+            mode: DispatchMode::Auto,
+            // Calibrated from the Figure 3 crossover (between 64 and 128).
+            gemm_threshold: 96,
+            gemv_threshold: 512 * 512,
+            level1_threshold: 1 << 20,
+            device_kernels: vec![
+                OffloadKind::Gemm,
+                OffloadKind::Gemv,
+                OffloadKind::Axpy,
+                OffloadKind::Dot,
+            ],
+        }
+    }
+}
+
+impl DispatchPolicy {
+    pub fn with_mode(mode: DispatchMode) -> Self {
+        DispatchPolicy { mode, ..Default::default() }
+    }
+
+    fn kernel_allowed(&self, kind: OffloadKind) -> bool {
+        self.device_kernels.contains(&kind)
+    }
+
+    fn forced(&self) -> Option<ExecTarget> {
+        match self.mode {
+            DispatchMode::HostOnly => Some(ExecTarget::Host),
+            DispatchMode::DeviceOnly => Some(ExecTarget::Device),
+            DispatchMode::DeviceZeroCopy => Some(ExecTarget::DeviceZeroCopy),
+            DispatchMode::Auto => None,
+        }
+    }
+
+    /// Decide for a GEMM of op-shape (m, n, k).
+    pub fn gemm(&self, m: usize, n: usize, k: usize) -> ExecTarget {
+        if !self.kernel_allowed(OffloadKind::Gemm) {
+            return ExecTarget::Host;
+        }
+        if let Some(t) = self.forced() {
+            return t;
+        }
+        if m.max(n).max(k) >= self.gemm_threshold {
+            ExecTarget::Device
+        } else {
+            ExecTarget::Host
+        }
+    }
+
+    /// Decide for a GEMV of op-shape (m, n).
+    pub fn gemv(&self, m: usize, n: usize) -> ExecTarget {
+        if !self.kernel_allowed(OffloadKind::Gemv) {
+            return ExecTarget::Host;
+        }
+        if let Some(t) = self.forced() {
+            return t;
+        }
+        if m * n >= self.gemv_threshold {
+            ExecTarget::Device
+        } else {
+            ExecTarget::Host
+        }
+    }
+
+    /// Decide for a level-1 op of length n.
+    pub fn level1(&self, kind: OffloadKind, n: usize) -> ExecTarget {
+        if !self.kernel_allowed(kind) {
+            return ExecTarget::Host;
+        }
+        if let Some(t) = self.forced() {
+            return t;
+        }
+        if n >= self.level1_threshold {
+            ExecTarget::Device
+        } else {
+            ExecTarget::Host
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_uses_threshold() {
+        let p = DispatchPolicy::default();
+        assert_eq!(p.gemm(64, 64, 64), ExecTarget::Host);
+        assert_eq!(p.gemm(128, 128, 128), ExecTarget::Device);
+        // any large dim triggers the offload
+        assert_eq!(p.gemm(8, 8, 512), ExecTarget::Device);
+    }
+
+    #[test]
+    fn forced_modes_override_size() {
+        let host = DispatchPolicy::with_mode(DispatchMode::HostOnly);
+        assert_eq!(host.gemm(4096, 4096, 4096), ExecTarget::Host);
+        let dev = DispatchPolicy::with_mode(DispatchMode::DeviceOnly);
+        assert_eq!(dev.gemm(2, 2, 2), ExecTarget::Device);
+        let zc = DispatchPolicy::with_mode(DispatchMode::DeviceZeroCopy);
+        assert_eq!(zc.gemm(2, 2, 2), ExecTarget::DeviceZeroCopy);
+    }
+
+    #[test]
+    fn host_only_kernels_stay_host() {
+        // syrk-style: not in device_kernels -> host even when forced device
+        let mut p = DispatchPolicy::with_mode(DispatchMode::DeviceOnly);
+        p.device_kernels = vec![OffloadKind::Gemm];
+        assert_eq!(p.gemv(4096, 4096), ExecTarget::Host);
+        assert_eq!(p.level1(OffloadKind::Axpy, 1 << 22), ExecTarget::Host);
+        assert_eq!(p.gemm(2, 2, 2), ExecTarget::Device);
+    }
+
+    #[test]
+    fn dispatch_is_total_and_deterministic() {
+        let p = DispatchPolicy::default();
+        for &m in &[1usize, 16, 96, 1000] {
+            for &n in &[1usize, 64, 128] {
+                for &k in &[1usize, 95, 96] {
+                    assert_eq!(p.gemm(m, n, k), p.gemm(m, n, k));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Element-type abstraction: the two dtypes the platform supports.
+//!
+//! f64 is the paper's measured configuration; f32 is its future-work
+//! "SIMD operations on lower precision data types" path (two lanes per
+//! 64-bit Snitch FPU).
+
+use xla::{ArrayElement, NativeType};
+
+/// A BLAS element type.
+pub trait Elem:
+    Copy
+    + Default
+    + PartialOrd
+    + std::fmt::Debug
+    + std::fmt::Display
+    + num_traits::Float
+    + NativeType
+    + ArrayElement
+    + Send
+    + Sync
+    + 'static
+{
+    /// Manifest dtype tag ("f32"/"f64").
+    const DTYPE: &'static str;
+    /// Bytes per element.
+    const SIZE: usize;
+    /// Does the cluster take the double-rate f32 path for this type?
+    const F32_PATH: bool;
+
+    fn from_f64_lossy(v: f64) -> Self;
+    fn to_f64_lossy(self) -> f64;
+
+    /// Little-endian byte image of a slice (device DRAM representation).
+    fn slice_to_bytes(s: &[Self]) -> Vec<u8>;
+    /// Inverse of [`Elem::slice_to_bytes`].
+    fn bytes_to_vec(b: &[u8]) -> Vec<Self>;
+}
+
+/// memcpy-based slice -> little-endian bytes (§Perf change L3-3: the
+/// per-element `to_le_bytes` loop was a measurable cost on the offload
+/// path at N=256).  The target is little-endian (x86/RISC-V), so the
+/// in-memory representation *is* the LE byte image; the device-DRAM
+/// backing store uses the same convention on both ends.
+fn pod_to_bytes<T: Copy>(s: &[T]) -> Vec<u8> {
+    let size = std::mem::size_of_val(s);
+    let mut out = vec![0u8; size];
+    // SAFETY: T is a plain f32/f64; any byte pattern is valid u8.
+    unsafe {
+        std::ptr::copy_nonoverlapping(s.as_ptr() as *const u8, out.as_mut_ptr(), size);
+    }
+    out
+}
+
+fn bytes_to_pod<T: Copy + Default>(b: &[u8], elem_size: usize) -> Vec<T> {
+    assert_eq!(
+        b.len() % elem_size,
+        0,
+        "byte length not a multiple of {elem_size}"
+    );
+    let n = b.len() / elem_size;
+    let mut out = vec![T::default(); n];
+    // SAFETY: out has exactly b.len() bytes of capacity; f32/f64 accept
+    // any byte pattern (NaN payloads round-trip bit-exactly).
+    unsafe {
+        std::ptr::copy_nonoverlapping(b.as_ptr(), out.as_mut_ptr() as *mut u8, b.len());
+    }
+    out
+}
+
+impl Elem for f64 {
+    const DTYPE: &'static str = "f64";
+    const SIZE: usize = 8;
+    const F32_PATH: bool = false;
+
+    fn from_f64_lossy(v: f64) -> Self {
+        v
+    }
+
+    fn to_f64_lossy(self) -> f64 {
+        self
+    }
+
+    fn slice_to_bytes(s: &[Self]) -> Vec<u8> {
+        pod_to_bytes(s)
+    }
+
+    fn bytes_to_vec(b: &[u8]) -> Vec<Self> {
+        bytes_to_pod(b, 8)
+    }
+}
+
+impl Elem for f32 {
+    const DTYPE: &'static str = "f32";
+    const SIZE: usize = 4;
+    const F32_PATH: bool = true;
+
+    fn from_f64_lossy(v: f64) -> Self {
+        v as f32
+    }
+
+    fn to_f64_lossy(self) -> f64 {
+        self as f64
+    }
+
+    fn slice_to_bytes(s: &[Self]) -> Vec<u8> {
+        pod_to_bytes(s)
+    }
+
+    fn bytes_to_vec(b: &[u8]) -> Vec<Self> {
+        bytes_to_pod(b, 4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_byte_roundtrip() {
+        let v = vec![1.5f64, -2.25, 0.0, f64::MAX];
+        assert_eq!(f64::bytes_to_vec(&f64::slice_to_bytes(&v)), v);
+    }
+
+    #[test]
+    fn f32_byte_roundtrip() {
+        let v = vec![1.5f32, -2.25, 0.0, f32::MIN_POSITIVE];
+        assert_eq!(f32::bytes_to_vec(&f32::slice_to_bytes(&v)), v);
+    }
+
+    #[test]
+    fn constants() {
+        assert_eq!(f64::DTYPE, "f64");
+        assert_eq!(f32::DTYPE, "f32");
+        assert_eq!(f64::SIZE, 8);
+        assert_eq!(f32::SIZE, 4);
+        assert!(f32::F32_PATH && !f64::F32_PATH);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of 8")]
+    fn misaligned_bytes_panic() {
+        f64::bytes_to_vec(&[0u8; 7]);
+    }
+}

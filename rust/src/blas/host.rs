@@ -1,0 +1,621 @@
+//! Host-side kernels — the analogue of OpenBLAS' hand-crafted CVA6/rv64
+//! kernels (plus `syrk.c` and friends that the paper compiles host-only).
+//!
+//! These run for real on the coordinator (they produce the baseline's
+//! numerics) while [`crate::soc::cva6`] separately answers how long the
+//! 50 MHz in-order core would take.  `gemm` is cache-blocked with packed
+//! panels and a 4x4 register microkernel; everything else is a clean
+//! streaming loop.  `naive_gemm` is the unoptimized oracle the tests
+//! compare against.
+
+use super::elem::Elem;
+use super::types::{Transpose, Uplo};
+
+/// Textbook triple loop (test oracle; also the shape the paper's host
+/// baseline effectively runs through OpenBLAS' generic C kernel).
+pub fn naive_gemm<T: Elem>(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T], // op(A) given row-major m x k
+    b: &[T], // op(B) given row-major k x n
+    beta: T,
+    c: &mut [T], // row-major m x n
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = T::zero();
+            for p in 0..k {
+                acc = acc + a[i * k + p] * b[p * n + j];
+            }
+            c[i * n + j] = alpha * acc + beta * c[i * n + j];
+        }
+    }
+}
+
+/// Materialize op(X) as a row-major dense buffer.
+pub fn materialize_op<T: Elem>(x: &[T], rows: usize, cols: usize,
+                               trans: Transpose) -> Vec<T> {
+    assert_eq!(x.len(), rows * cols);
+    match trans {
+        Transpose::No => x.to_vec(),
+        Transpose::Yes => {
+            let mut out = vec![T::zero(); rows * cols];
+            for r in 0..rows {
+                for c in 0..cols {
+                    out[c * rows + r] = x[r * cols + c];
+                }
+            }
+            out
+        }
+    }
+}
+
+// Cache-blocking parameters for the packed GEMM (sized for typical L1/L2;
+// revisited in the §Perf pass).
+const MC: usize = 128;
+const KC: usize = 256;
+const NC: usize = 512;
+const MR: usize = 4;
+const NR: usize = 4;
+
+/// Pack an MC x KC block of A into row-panels of height MR.
+fn pack_a<T: Elem>(a: &[T], lda: usize, mc: usize, kc: usize, out: &mut [T]) {
+    let mut idx = 0;
+    let mut i0 = 0;
+    while i0 < mc {
+        let ib = MR.min(mc - i0);
+        for p in 0..kc {
+            for i in 0..ib {
+                out[idx] = a[(i0 + i) * lda + p];
+                idx += 1;
+            }
+            for _ in ib..MR {
+                out[idx] = T::zero();
+                idx += 1;
+            }
+        }
+        i0 += MR;
+    }
+}
+
+/// Pack a KC x NC block of B into column-panels of width NR.
+fn pack_b<T: Elem>(b: &[T], ldb: usize, kc: usize, nc: usize, out: &mut [T]) {
+    let mut idx = 0;
+    let mut j0 = 0;
+    while j0 < nc {
+        let jb = NR.min(nc - j0);
+        for p in 0..kc {
+            for j in 0..jb {
+                out[idx] = b[p * ldb + j0 + j];
+                idx += 1;
+            }
+            for _ in jb..NR {
+                out[idx] = T::zero();
+                idx += 1;
+            }
+        }
+        j0 += NR;
+    }
+}
+
+/// 4x4 register microkernel: C[4x4] += Apanel(kc x 4) * Bpanel(kc x 4).
+#[inline(always)]
+fn microkernel<T: Elem>(kc: usize, ap: &[T], bp: &[T], acc: &mut [T; MR * NR]) {
+    debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+    for p in 0..kc {
+        let a0 = ap[p * MR];
+        let a1 = ap[p * MR + 1];
+        let a2 = ap[p * MR + 2];
+        let a3 = ap[p * MR + 3];
+        let b0 = bp[p * NR];
+        let b1 = bp[p * NR + 1];
+        let b2 = bp[p * NR + 2];
+        let b3 = bp[p * NR + 3];
+        acc[0] = acc[0] + a0 * b0;
+        acc[1] = acc[1] + a0 * b1;
+        acc[2] = acc[2] + a0 * b2;
+        acc[3] = acc[3] + a0 * b3;
+        acc[4] = acc[4] + a1 * b0;
+        acc[5] = acc[5] + a1 * b1;
+        acc[6] = acc[6] + a1 * b2;
+        acc[7] = acc[7] + a1 * b3;
+        acc[8] = acc[8] + a2 * b0;
+        acc[9] = acc[9] + a2 * b1;
+        acc[10] = acc[10] + a2 * b2;
+        acc[11] = acc[11] + a2 * b3;
+        acc[12] = acc[12] + a3 * b0;
+        acc[13] = acc[13] + a3 * b1;
+        acc[14] = acc[14] + a3 * b2;
+        acc[15] = acc[15] + a3 * b3;
+    }
+}
+
+/// Blocked + packed GEMM over materialized op(A), op(B):
+/// `C = alpha * A(m x k) @ B(k x n) + beta * C`.
+pub fn gemm<T: Elem>(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    b: &[T],
+    beta: T,
+    c: &mut [T],
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+
+    // beta pass first (so the accumulation below is pure +=)
+    if beta != T::one() {
+        if beta == T::zero() {
+            for v in c.iter_mut() {
+                *v = T::zero();
+            }
+        } else {
+            for v in c.iter_mut() {
+                *v = *v * beta;
+            }
+        }
+    }
+    if alpha == T::zero() {
+        return;
+    }
+
+    let mut apack = vec![T::zero(); MC.div_ceil(MR) * MR * KC];
+    let mut bpack = vec![T::zero(); NC.div_ceil(NR) * NR * KC];
+
+    let mut j0 = 0;
+    while j0 < n {
+        let nc = NC.min(n - j0);
+        let mut p0 = 0;
+        while p0 < k {
+            let kc = KC.min(k - p0);
+            pack_b(&b[p0 * n + j0..], n, kc, nc, &mut bpack);
+            let mut i0 = 0;
+            while i0 < m {
+                let mc = MC.min(m - i0);
+                pack_a(&a[i0 * k + p0..], k, mc, kc, &mut apack);
+
+                // macro-kernel over the packed block
+                let mut jr = 0;
+                while jr < nc {
+                    let jb = NR.min(nc - jr);
+                    let bp = &bpack[(jr / NR) * kc * NR..];
+                    let mut ir = 0;
+                    while ir < mc {
+                        let ib = MR.min(mc - ir);
+                        let ap = &apack[(ir / MR) * kc * MR..];
+                        let mut acc = [T::zero(); MR * NR];
+                        microkernel(kc, ap, bp, &mut acc);
+                        for i in 0..ib {
+                            for j in 0..jb {
+                                let ci = (i0 + ir + i) * n + j0 + jr + j;
+                                c[ci] = c[ci] + alpha * acc[i * NR + j];
+                            }
+                        }
+                        ir += MR;
+                    }
+                    jr += NR;
+                }
+                i0 += MC;
+            }
+            p0 += KC;
+        }
+        j0 += NC;
+    }
+}
+
+/// GEMV: `y = alpha * A(m x n) @ x + beta * y` over materialized op(A).
+pub fn gemv<T: Elem>(m: usize, n: usize, alpha: T, a: &[T], x: &[T], beta: T,
+                     y: &mut [T]) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(x.len(), n);
+    assert_eq!(y.len(), m);
+    for i in 0..m {
+        let row = &a[i * n..(i + 1) * n];
+        let mut acc = T::zero();
+        for (av, xv) in row.iter().zip(x.iter()) {
+            acc = acc + *av * *xv;
+        }
+        y[i] = alpha * acc + beta * y[i];
+    }
+}
+
+/// SYRK (host-only in the paper): `C = alpha * op(A) @ op(A)^T + beta*C`
+/// touching only the `uplo` triangle of C (n x n).
+pub fn syrk<T: Elem>(n: usize, k: usize, alpha: T, a_op: &[T], beta: T,
+                     c: &mut [T], uplo: Uplo) {
+    assert_eq!(a_op.len(), n * k);
+    assert_eq!(c.len(), n * n);
+    for i in 0..n {
+        let js: Box<dyn Iterator<Item = usize>> = match uplo {
+            Uplo::Lower => Box::new(0..=i),
+            Uplo::Upper => Box::new(i..n),
+        };
+        for j in js {
+            let mut acc = T::zero();
+            for p in 0..k {
+                acc = acc + a_op[i * k + p] * a_op[j * k + p];
+            }
+            c[i * n + j] = alpha * acc + beta * c[i * n + j];
+        }
+    }
+}
+
+/// SYMM (host-only): `C = alpha * A @ B + beta * C` with A symmetric
+/// (n x n), only the `uplo` triangle of A stored/read.
+pub fn symm<T: Elem>(n: usize, m_cols: usize, alpha: T, a: &[T], b: &[T],
+                     beta: T, c: &mut [T], uplo: Uplo) {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n * m_cols);
+    assert_eq!(c.len(), n * m_cols);
+    let read_a = |i: usize, j: usize| -> T {
+        // fold to the stored triangle
+        let (r, s) = match uplo {
+            Uplo::Lower => if i >= j { (i, j) } else { (j, i) },
+            Uplo::Upper => if i <= j { (i, j) } else { (j, i) },
+        };
+        a[r * n + s]
+    };
+    for i in 0..n {
+        for j in 0..m_cols {
+            let mut acc = T::zero();
+            for p in 0..n {
+                acc = acc + read_a(i, p) * b[p * m_cols + j];
+            }
+            c[i * m_cols + j] = alpha * acc + beta * c[i * m_cols + j];
+        }
+    }
+}
+
+/// TRMM (host-only): `B = alpha * op(A) @ B` with A triangular (n x n).
+pub fn trmm<T: Elem>(n: usize, m_cols: usize, alpha: T, a: &[T], b: &mut [T],
+                     uplo: Uplo, unit_diag: bool) {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n * m_cols);
+    // row order that lets us update B in place
+    let rows: Vec<usize> = match uplo {
+        Uplo::Upper => (0..n).collect(),          // row i uses rows >= i
+        Uplo::Lower => (0..n).rev().collect(),    // row i uses rows <= i
+    };
+    for &i in &rows {
+        for j in 0..m_cols {
+            let mut acc = if unit_diag {
+                b[i * m_cols + j]
+            } else {
+                a[i * n + i] * b[i * m_cols + j]
+            };
+            let ps: Box<dyn Iterator<Item = usize>> = match uplo {
+                Uplo::Upper => Box::new(i + 1..n),
+                Uplo::Lower => Box::new(0..i),
+            };
+            for p in ps {
+                acc = acc + a[i * n + p] * b[p * m_cols + j];
+            }
+            b[i * m_cols + j] = alpha * acc;
+        }
+    }
+}
+
+/// TRSM (host-only): solve `op(A) X = alpha * B` in place (X overwrites
+/// B), A triangular (n x n), non-unit diagonal must be non-singular.
+pub fn trsm<T: Elem>(n: usize, m_cols: usize, alpha: T, a: &[T], b: &mut [T],
+                     uplo: Uplo, unit_diag: bool) {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n * m_cols);
+    if alpha != T::one() {
+        for v in b.iter_mut() {
+            *v = *v * alpha;
+        }
+    }
+    let rows: Vec<usize> = match uplo {
+        Uplo::Lower => (0..n).collect(),          // forward substitution
+        Uplo::Upper => (0..n).rev().collect(),    // backward substitution
+    };
+    for &i in &rows {
+        for j in 0..m_cols {
+            let mut acc = b[i * m_cols + j];
+            let ps: Box<dyn Iterator<Item = usize>> = match uplo {
+                Uplo::Lower => Box::new(0..i),
+                Uplo::Upper => Box::new(i + 1..n),
+            };
+            for p in ps {
+                acc = acc - a[i * n + p] * b[p * m_cols + j];
+            }
+            b[i * m_cols + j] = if unit_diag { acc } else { acc / a[i * n + i] };
+        }
+    }
+}
+
+/// GER: `A += alpha * x y^T`.
+pub fn ger<T: Elem>(m: usize, n: usize, alpha: T, x: &[T], y: &[T], a: &mut [T]) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(x.len(), m);
+    assert_eq!(y.len(), n);
+    for i in 0..m {
+        let ax = alpha * x[i];
+        for j in 0..n {
+            a[i * n + j] = a[i * n + j] + ax * y[j];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Level 1
+// ---------------------------------------------------------------------
+
+pub fn axpy<T: Elem>(alpha: T, x: &[T], y: &mut [T]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi = *yi + alpha * *xi;
+    }
+}
+
+pub fn scal<T: Elem>(alpha: T, x: &mut [T]) {
+    for v in x.iter_mut() {
+        *v = *v * alpha;
+    }
+}
+
+pub fn dot<T: Elem>(x: &[T], y: &[T]) -> T {
+    assert_eq!(x.len(), y.len());
+    let mut acc = T::zero();
+    for (a, b) in x.iter().zip(y.iter()) {
+        acc = acc + *a * *b;
+    }
+    acc
+}
+
+pub fn asum<T: Elem>(x: &[T]) -> T {
+    x.iter().fold(T::zero(), |a, v| a + v.abs())
+}
+
+pub fn nrm2<T: Elem>(x: &[T]) -> T {
+    dot(x, x).sqrt()
+}
+
+/// Index of max |x_i| (CBLAS iamax; first on ties).
+pub fn iamax<T: Elem>(x: &[T]) -> usize {
+    let mut best = 0;
+    let mut bv = T::zero();
+    for (i, v) in x.iter().enumerate() {
+        let av = v.abs();
+        if i == 0 || av > bv {
+            best = i;
+            bv = av;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f64> {
+        rng.normal_vec(n)
+    }
+
+    fn assert_close(a: &[f64], b: &[f64], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert!(
+                (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+                "idx {i}: {x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn packed_gemm_matches_naive_various_shapes() {
+        let mut rng = Rng::new(11);
+        for &(m, n, k) in &[
+            (1, 1, 1),
+            (4, 4, 4),
+            (5, 7, 3),
+            (17, 13, 9),
+            (64, 64, 64),
+            (130, 70, 129),
+            (257, 31, 300),
+        ] {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let c0 = rand_vec(&mut rng, m * n);
+            let mut c1 = c0.clone();
+            let mut c2 = c0.clone();
+            naive_gemm(m, n, k, 1.3, &a, &b, -0.7, &mut c1);
+            gemm(m, n, k, 1.3, &a, &b, -0.7, &mut c2);
+            assert_close(&c1, &c2, 1e-12);
+        }
+    }
+
+    #[test]
+    fn gemm_beta_zero_overwrites_and_alpha_zero_scales() {
+        let a = vec![1.0; 4];
+        let b = vec![1.0; 4];
+        let mut c = vec![f64::NAN; 4];
+        // beta = 0 must not propagate NaNs from c (BLAS semantics)
+        gemm(2, 2, 2, 1.0, &a, &b, 0.0, &mut c);
+        assert_eq!(c, vec![2.0; 4]);
+        // alpha = 0: pure beta scaling
+        let mut c = vec![3.0; 4];
+        gemm(2, 2, 2, 0.0, &a, &b, 0.5, &mut c);
+        assert_eq!(c, vec![1.5; 4]);
+    }
+
+    #[test]
+    fn materialize_transpose() {
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3
+        let xt = materialize_op(&x, 2, 3, Transpose::Yes); // 3x2
+        assert_eq!(xt, vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+        assert_eq!(materialize_op(&x, 2, 3, Transpose::No), x);
+    }
+
+    #[test]
+    fn gemv_matches_naive() {
+        let mut rng = Rng::new(5);
+        let (m, n) = (23, 17);
+        let a = rand_vec(&mut rng, m * n);
+        let x = rand_vec(&mut rng, n);
+        let y0 = rand_vec(&mut rng, m);
+        let mut y = y0.clone();
+        gemv(m, n, 2.0, &a, &x, 0.5, &mut y);
+        for i in 0..m {
+            let dotv: f64 = (0..n).map(|j| a[i * n + j] * x[j]).sum();
+            assert!((y[i] - (2.0 * dotv + 0.5 * y0[i])).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn syrk_touches_only_triangle() {
+        let mut rng = Rng::new(9);
+        let (n, k) = (8, 5);
+        let a = rand_vec(&mut rng, n * k);
+        let c0 = rand_vec(&mut rng, n * n);
+        let mut c = c0.clone();
+        syrk(n, k, 1.0, &a, 0.0, &mut c, Uplo::Lower);
+        for i in 0..n {
+            for j in 0..n {
+                if j > i {
+                    assert_eq!(c[i * n + j], c0[i * n + j], "upper must be untouched");
+                } else {
+                    let acc: f64 = (0..k).map(|p| a[i * k + p] * a[j * k + p]).sum();
+                    assert!((c[i * n + j] - acc).abs() < 1e-10);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn level1_ops() {
+        let x = vec![1.0, -2.0, 3.0];
+        let mut y = vec![10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 16.0, 36.0]);
+        let mut z = vec![1.0, 2.0];
+        scal(-3.0, &mut z);
+        assert_eq!(z, vec![-3.0, -6.0]);
+        assert_eq!(dot(&x, &x), 14.0);
+        assert_eq!(asum(&x), 6.0);
+        assert!((nrm2(&x) - 14f64.sqrt()).abs() < 1e-15);
+        assert_eq!(iamax(&x), 2);
+        assert_eq!(iamax(&[-5.0, 5.0, 1.0]), 0); // first on ties
+    }
+
+    #[test]
+    fn symm_matches_explicit_symmetric_gemm() {
+        let mut rng = Rng::new(41);
+        let n = 9;
+        let mc = 6;
+        // build a full symmetric matrix, then blank the unread triangle
+        let mut full = rand_vec(&mut rng, n * n);
+        for i in 0..n {
+            for j in 0..i {
+                full[j * n + i] = full[i * n + j];
+            }
+        }
+        let b = rand_vec(&mut rng, n * mc);
+        let c0 = rand_vec(&mut rng, n * mc);
+
+        let mut want = c0.clone();
+        naive_gemm(n, mc, n, 1.5, &full, &b, -0.5, &mut want);
+
+        for uplo in [Uplo::Lower, Uplo::Upper] {
+            let mut a = full.clone();
+            for i in 0..n {
+                for j in 0..n {
+                    let dead = match uplo {
+                        Uplo::Lower => j > i,
+                        Uplo::Upper => j < i,
+                    };
+                    if dead {
+                        a[i * n + j] = f64::NAN; // must never be read
+                    }
+                }
+            }
+            let mut c = c0.clone();
+            symm(n, mc, 1.5, &a, &b, -0.5, &mut c, uplo);
+            assert_close(&c, &want, 1e-12);
+        }
+    }
+
+    #[test]
+    fn trmm_matches_gemm_with_triangle() {
+        let mut rng = Rng::new(42);
+        let n = 7;
+        let mc = 5;
+        for uplo in [Uplo::Lower, Uplo::Upper] {
+            let mut a = rand_vec(&mut rng, n * n);
+            for i in 0..n {
+                for j in 0..n {
+                    let dead = match uplo {
+                        Uplo::Lower => j > i,
+                        Uplo::Upper => j < i,
+                    };
+                    if dead {
+                        a[i * n + j] = 0.0;
+                    }
+                }
+            }
+            let b0 = rand_vec(&mut rng, n * mc);
+            let mut want = vec![0.0; n * mc];
+            naive_gemm(n, mc, n, 2.0, &a, &b0, 0.0, &mut want);
+            let mut b = b0.clone();
+            trmm(n, mc, 2.0, &a, &mut b, uplo, false);
+            assert_close(&b, &want, 1e-12);
+        }
+    }
+
+    #[test]
+    fn trsm_inverts_trmm() {
+        let mut rng = Rng::new(43);
+        let n = 8;
+        let mc = 4;
+        for uplo in [Uplo::Lower, Uplo::Upper] {
+            for unit in [false, true] {
+                let mut a = rand_vec(&mut rng, n * n);
+                for i in 0..n {
+                    for j in 0..n {
+                        let dead = match uplo {
+                            Uplo::Lower => j > i,
+                            Uplo::Upper => j < i,
+                        };
+                        if dead {
+                            a[i * n + j] = 0.0;
+                        }
+                    }
+                    // well-conditioned diagonal
+                    a[i * n + i] = 2.0 + i as f64 * 0.1;
+                }
+                let x0 = rand_vec(&mut rng, n * mc);
+                let mut b = x0.clone();
+                trmm(n, mc, 1.0, &a, &mut b, uplo, unit); // B = op(A) X
+                trsm(n, mc, 1.0, &a, &mut b, uplo, unit); // solve back
+                assert_close(&b, &x0, 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn ger_rank1() {
+        let mut a = vec![0.0; 6];
+        ger(2, 3, 2.0, &[1.0, -1.0], &[1.0, 2.0, 3.0], &mut a);
+        assert_eq!(a, vec![2.0, 4.0, 6.0, -2.0, -4.0, -6.0]);
+    }
+
+    #[test]
+    fn f32_gemm_works() {
+        let a: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0];
+        let b: Vec<f32> = vec![1.0, 0.0, 0.0, 1.0];
+        let mut c = vec![0.0f32; 4];
+        gemm(2, 2, 2, 1.0f32, &a, &b, 0.0, &mut c);
+        assert_eq!(c, a);
+    }
+}

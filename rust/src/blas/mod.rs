@@ -1,0 +1,22 @@
+//! The BLAS library — arrow (3) in the paper's Figure 2.
+//!
+//! Mirrors OpenBLAS' structure: an interface layer with CBLAS semantics
+//! ([`api`]), host kernels hand-written for the CVA6 ([`host`]), the
+//! heterogeneous device kernels contributed by the paper ([`device`]),
+//! and the driver-level dispatch choosing between them ([`dispatch`]).
+//!
+//! The paper compiles GEMM for host **and** device, and kernels like
+//! `syrk.c` host-only; our dispatch table encodes the same split (and an
+//! ablation bench flips it).
+
+pub mod api;
+pub mod device;
+pub mod dispatch;
+pub mod elem;
+pub mod host;
+pub mod types;
+
+pub use api::HeroBlas;
+pub use dispatch::{DispatchPolicy, ExecTarget};
+pub use elem::Elem;
+pub use types::{Side, Transpose, Uplo};

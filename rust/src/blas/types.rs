@@ -1,0 +1,122 @@
+//! CBLAS argument enums and shape helpers. Layout is row-major
+//! throughout (NumPy's default, which is what the paper's stack sees).
+
+use crate::error::{Error, Result};
+
+/// Matrix transposition flag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Transpose {
+    No,
+    Yes,
+}
+
+impl Transpose {
+    pub fn is_trans(self) -> bool {
+        self == Transpose::Yes
+    }
+
+    /// (rows, cols) of op(X) given the stored (rows, cols).
+    pub fn dims(self, rows: usize, cols: usize) -> (usize, usize) {
+        match self {
+            Transpose::No => (rows, cols),
+            Transpose::Yes => (cols, rows),
+        }
+    }
+}
+
+/// Which triangle a symmetric update touches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Uplo {
+    Upper,
+    Lower,
+}
+
+/// Multiplication side for symm/trmm-style ops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Side {
+    Left,
+    Right,
+}
+
+/// Validate GEMM shapes: op(A): m x k, op(B): k x n, C: m x n.
+/// `a_dims`/`b_dims` are the *stored* shapes.
+pub fn check_gemm_dims(
+    trans_a: Transpose,
+    trans_b: Transpose,
+    a_dims: (usize, usize),
+    b_dims: (usize, usize),
+    c_dims: (usize, usize),
+) -> Result<(usize, usize, usize)> {
+    let (m, ka) = trans_a.dims(a_dims.0, a_dims.1);
+    let (kb, n) = trans_b.dims(b_dims.0, b_dims.1);
+    if ka != kb {
+        return Err(Error::shape(format!(
+            "gemm: contraction mismatch op(A)={m}x{ka} op(B)={kb}x{n}"
+        )));
+    }
+    if c_dims != (m, n) {
+        return Err(Error::shape(format!(
+            "gemm: C is {}x{}, expected {m}x{n}",
+            c_dims.0, c_dims.1
+        )));
+    }
+    if m == 0 || n == 0 || ka == 0 {
+        return Err(Error::shape("gemm: zero-sized dimension"));
+    }
+    Ok((m, n, ka))
+}
+
+/// Validate GEMV shapes: op(A): m x n, x: n, y: m.
+pub fn check_gemv_dims(
+    trans: Transpose,
+    a_dims: (usize, usize),
+    x_len: usize,
+    y_len: usize,
+) -> Result<(usize, usize)> {
+    let (m, n) = trans.dims(a_dims.0, a_dims.1);
+    if x_len != n || y_len != m {
+        return Err(Error::shape(format!(
+            "gemv: op(A)={m}x{n} with x[{x_len}], y[{y_len}]"
+        )));
+    }
+    if m == 0 || n == 0 {
+        return Err(Error::shape("gemv: zero-sized dimension"));
+    }
+    Ok((m, n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transpose_dims() {
+        assert_eq!(Transpose::No.dims(3, 5), (3, 5));
+        assert_eq!(Transpose::Yes.dims(3, 5), (5, 3));
+    }
+
+    #[test]
+    fn gemm_dims_ok() {
+        let (m, n, k) =
+            check_gemm_dims(Transpose::No, Transpose::No, (3, 4), (4, 5), (3, 5)).unwrap();
+        assert_eq!((m, n, k), (3, 5, 4));
+        // A^T: stored (4,3) -> op 3x4
+        let (m, n, k) =
+            check_gemm_dims(Transpose::Yes, Transpose::No, (4, 3), (4, 5), (3, 5)).unwrap();
+        assert_eq!((m, n, k), (3, 5, 4));
+    }
+
+    #[test]
+    fn gemm_dims_mismatch() {
+        assert!(check_gemm_dims(Transpose::No, Transpose::No, (3, 4), (5, 5), (3, 5)).is_err());
+        assert!(check_gemm_dims(Transpose::No, Transpose::No, (3, 4), (4, 5), (3, 6)).is_err());
+        assert!(check_gemm_dims(Transpose::No, Transpose::No, (0, 4), (4, 5), (0, 5)).is_err());
+    }
+
+    #[test]
+    fn gemv_dims() {
+        assert_eq!(check_gemv_dims(Transpose::No, (3, 4), 4, 3).unwrap(), (3, 4));
+        assert_eq!(check_gemv_dims(Transpose::Yes, (3, 4), 3, 4).unwrap(), (4, 3));
+        assert!(check_gemv_dims(Transpose::No, (3, 4), 3, 4).is_err());
+    }
+}

@@ -1,0 +1,343 @@
+//! CBLAS-compatible C ABI — the literal linking surface of the paper.
+//!
+//! The paper's trick is that NumPy calls `cblas_dgemm` and never knows a
+//! PMCA is behind it.  This module exports the same symbols from our
+//! library, backed by a per-thread [`HeroBlas`] session, so an actual
+//! `numpy` build (or any CBLAS consumer) could `dlopen` the cdylib and
+//! get the simulated heterogeneous stack.
+//!
+//! Scope: the row-major subset NumPy's `dot`/`matmul` actually uses
+//! (dgemm/sgemm, dgemv, daxpy, ddot, dnrm2, dscal, dasum, idamax), with
+//! proper `lda`/`incx` handling.  Sessions are per-thread (`CblasInit`
+//! per thread) because PJRT client handles are not `Send`.
+
+use std::cell::RefCell;
+use std::ffi::CStr;
+use std::os::raw::{c_char, c_double, c_float, c_int};
+
+use crate::blas::{DispatchPolicy, HeroBlas, Transpose};
+use crate::config::{DispatchMode, PlatformConfig};
+use crate::error::Result;
+
+thread_local! {
+    static SESSION: RefCell<Option<HeroBlas>> = const { RefCell::new(None) };
+}
+
+/// CBLAS enums (values fixed by the CBLAS standard).
+pub const CBLAS_ROW_MAJOR: c_int = 101;
+pub const CBLAS_COL_MAJOR: c_int = 102;
+pub const CBLAS_NO_TRANS: c_int = 111;
+pub const CBLAS_TRANS: c_int = 112;
+
+fn trans_of(v: c_int) -> Option<Transpose> {
+    match v {
+        CBLAS_NO_TRANS => Some(Transpose::No),
+        CBLAS_TRANS => Some(Transpose::Yes),
+        _ => None,
+    }
+}
+
+/// Initialize this thread's session.  `artifacts` may be NULL to use the
+/// `HERO_BLAS_ARTIFACTS`/walk-up discovery; mode: 0=auto, 1=host-only,
+/// 2=device-only, 3=zero-copy.  Returns 0 on success.
+///
+/// # Safety
+/// `artifacts`, if non-NULL, must point to a valid NUL-terminated string.
+#[no_mangle]
+pub unsafe extern "C" fn hero_blas_init(artifacts: *const c_char, mode: c_int) -> c_int {
+    let mode = match mode {
+        0 => DispatchMode::Auto,
+        1 => DispatchMode::HostOnly,
+        2 => DispatchMode::DeviceOnly,
+        3 => DispatchMode::DeviceZeroCopy,
+        _ => return -1,
+    };
+    let build = || -> Result<HeroBlas> {
+        let dir = if artifacts.is_null() {
+            crate::find_artifacts_dir()?
+        } else {
+            std::path::PathBuf::from(
+                CStr::from_ptr(artifacts).to_string_lossy().into_owned(),
+            )
+        };
+        HeroBlas::new(PlatformConfig::default(), &dir, DispatchPolicy::with_mode(mode))
+    };
+    match build() {
+        Ok(s) => {
+            SESSION.with(|cell| *cell.borrow_mut() = Some(s));
+            0
+        }
+        Err(e) => {
+            eprintln!("hero_blas_init: {e}");
+            -2
+        }
+    }
+}
+
+/// Tear down this thread's session. Idempotent.
+#[no_mangle]
+pub extern "C" fn hero_blas_shutdown() {
+    SESSION.with(|cell| *cell.borrow_mut() = None);
+}
+
+fn with_session<R>(f: impl FnOnce(&mut HeroBlas) -> Result<R>) -> Option<R> {
+    SESSION.with(|cell| {
+        let mut guard = cell.borrow_mut();
+        match guard.as_mut() {
+            Some(s) => match f(s) {
+                Ok(r) => Some(r),
+                Err(e) => {
+                    eprintln!("hero-blas cblas: {e}");
+                    None
+                }
+            },
+            None => {
+                eprintln!("hero-blas cblas: call hero_blas_init first");
+                None
+            }
+        }
+    })
+}
+
+/// Copy a possibly-padded (lda > cols) row-major matrix into a dense one.
+unsafe fn gather(ptr: *const c_double, rows: usize, cols: usize, lda: usize) -> Vec<f64> {
+    let mut out = Vec::with_capacity(rows * cols);
+    for r in 0..rows {
+        out.extend_from_slice(std::slice::from_raw_parts(ptr.add(r * lda), cols));
+    }
+    out
+}
+
+unsafe fn scatter(data: &[f64], ptr: *mut c_double, rows: usize, cols: usize, lda: usize) {
+    for r in 0..rows {
+        std::slice::from_raw_parts_mut(ptr.add(r * lda), cols)
+            .copy_from_slice(&data[r * cols..(r + 1) * cols]);
+    }
+}
+
+/// Strided vector gather (CBLAS `incx`).
+unsafe fn gather_vec(ptr: *const c_double, n: usize, inc: isize) -> Vec<f64> {
+    (0..n).map(|i| *ptr.offset(i as isize * inc)).collect()
+}
+
+unsafe fn scatter_vec(data: &[f64], ptr: *mut c_double, inc: isize) {
+    for (i, v) in data.iter().enumerate() {
+        *ptr.offset(i as isize * inc) = *v;
+    }
+}
+
+/// cblas_dgemm (row-major only — what NumPy uses).
+///
+/// # Safety
+/// Pointers must reference matrices of the advertised dimensions/lda.
+#[no_mangle]
+#[allow(clippy::too_many_arguments)]
+pub unsafe extern "C" fn cblas_dgemm(
+    order: c_int,
+    trans_a: c_int,
+    trans_b: c_int,
+    m: c_int,
+    n: c_int,
+    k: c_int,
+    alpha: c_double,
+    a: *const c_double,
+    lda: c_int,
+    b: *const c_double,
+    ldb: c_int,
+    beta: c_double,
+    c: *mut c_double,
+    ldc: c_int,
+) {
+    if order != CBLAS_ROW_MAJOR {
+        eprintln!("cblas_dgemm: only row-major supported");
+        return;
+    }
+    let (Some(ta), Some(tb)) = (trans_of(trans_a), trans_of(trans_b)) else {
+        eprintln!("cblas_dgemm: bad transpose flag");
+        return;
+    };
+    let (m, n, k) = (m as usize, n as usize, k as usize);
+    // stored dims of A and B (row-major)
+    let a_dims = if ta.is_trans() { (k, m) } else { (m, k) };
+    let b_dims = if tb.is_trans() { (n, k) } else { (k, n) };
+    let av = gather(a, a_dims.0, a_dims.1, lda as usize);
+    let bv = gather(b, b_dims.0, b_dims.1, ldb as usize);
+    let mut cv = gather(c, m, n, ldc as usize);
+    if with_session(|s| {
+        s.gemm(ta, tb, alpha, &av, a_dims, &bv, b_dims, beta, &mut cv, (m, n))
+    })
+    .is_some()
+    {
+        scatter(&cv, c, m, n, ldc as usize);
+    }
+}
+
+/// cblas_sgemm (row-major only).
+///
+/// # Safety
+/// Pointers must reference matrices of the advertised dimensions/lda.
+#[no_mangle]
+#[allow(clippy::too_many_arguments)]
+pub unsafe extern "C" fn cblas_sgemm(
+    order: c_int,
+    trans_a: c_int,
+    trans_b: c_int,
+    m: c_int,
+    n: c_int,
+    k: c_int,
+    alpha: c_float,
+    a: *const c_float,
+    lda: c_int,
+    b: *const c_float,
+    ldb: c_int,
+    beta: c_float,
+    c: *mut c_float,
+    ldc: c_int,
+) {
+    if order != CBLAS_ROW_MAJOR {
+        eprintln!("cblas_sgemm: only row-major supported");
+        return;
+    }
+    let (Some(ta), Some(tb)) = (trans_of(trans_a), trans_of(trans_b)) else {
+        return;
+    };
+    let (m, n, k) = (m as usize, n as usize, k as usize);
+    let a_dims = if ta.is_trans() { (k, m) } else { (m, k) };
+    let b_dims = if tb.is_trans() { (n, k) } else { (k, n) };
+    let gat = |p: *const c_float, rows: usize, cols: usize, ld: usize| -> Vec<f32> {
+        let mut out = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            out.extend_from_slice(std::slice::from_raw_parts(p.add(r * ld), cols));
+        }
+        out
+    };
+    let av = gat(a, a_dims.0, a_dims.1, lda as usize);
+    let bv = gat(b, b_dims.0, b_dims.1, ldb as usize);
+    let mut cv = gat(c, m, n, ldc as usize);
+    if with_session(|s| {
+        s.gemm(ta, tb, alpha, &av, a_dims, &bv, b_dims, beta, &mut cv, (m, n))
+    })
+    .is_some()
+    {
+        for r in 0..m {
+            std::slice::from_raw_parts_mut(c.add(r * ldc as usize), n)
+                .copy_from_slice(&cv[r * n..(r + 1) * n]);
+        }
+    }
+}
+
+/// cblas_dgemv (row-major only).
+///
+/// # Safety
+/// Pointers must reference buffers of the advertised dimensions/strides.
+#[no_mangle]
+#[allow(clippy::too_many_arguments)]
+pub unsafe extern "C" fn cblas_dgemv(
+    order: c_int,
+    trans: c_int,
+    m: c_int,
+    n: c_int,
+    alpha: c_double,
+    a: *const c_double,
+    lda: c_int,
+    x: *const c_double,
+    incx: c_int,
+    beta: c_double,
+    y: *mut c_double,
+    incy: c_int,
+) {
+    if order != CBLAS_ROW_MAJOR {
+        return;
+    }
+    let Some(t) = trans_of(trans) else { return };
+    let (m, n) = (m as usize, n as usize);
+    let (xlen, ylen) = if t.is_trans() { (m, n) } else { (n, m) };
+    let av = gather(a, m, n, lda as usize);
+    let xv = gather_vec(x, xlen, incx as isize);
+    let mut yv = gather_vec(y, ylen, incy as isize);
+    if with_session(|s| s.gemv(t, alpha, &av, (m, n), &xv, beta, &mut yv)).is_some() {
+        scatter_vec(&yv, y, incy as isize);
+    }
+}
+
+/// cblas_daxpy.
+///
+/// # Safety
+/// Pointers must reference `n`-element strided vectors.
+#[no_mangle]
+pub unsafe extern "C" fn cblas_daxpy(
+    n: c_int,
+    alpha: c_double,
+    x: *const c_double,
+    incx: c_int,
+    y: *mut c_double,
+    incy: c_int,
+) {
+    let xv = gather_vec(x, n as usize, incx as isize);
+    let mut yv = gather_vec(y, n as usize, incy as isize);
+    if with_session(|s| s.axpy(alpha, &xv, &mut yv)).is_some() {
+        scatter_vec(&yv, y, incy as isize);
+    }
+}
+
+/// cblas_ddot.
+///
+/// # Safety
+/// Pointers must reference `n`-element strided vectors.
+#[no_mangle]
+pub unsafe extern "C" fn cblas_ddot(
+    n: c_int,
+    x: *const c_double,
+    incx: c_int,
+    y: *const c_double,
+    incy: c_int,
+) -> c_double {
+    let xv = gather_vec(x, n as usize, incx as isize);
+    let yv = gather_vec(y, n as usize, incy as isize);
+    with_session(|s| s.dot(&xv, &yv)).unwrap_or(f64::NAN)
+}
+
+/// cblas_dnrm2.
+///
+/// # Safety
+/// `x` must reference an `n`-element strided vector.
+#[no_mangle]
+pub unsafe extern "C" fn cblas_dnrm2(n: c_int, x: *const c_double, incx: c_int) -> c_double {
+    let xv = gather_vec(x, n as usize, incx as isize);
+    with_session(|s| s.nrm2(&xv)).unwrap_or(f64::NAN)
+}
+
+/// cblas_dasum.
+///
+/// # Safety
+/// `x` must reference an `n`-element strided vector.
+#[no_mangle]
+pub unsafe extern "C" fn cblas_dasum(n: c_int, x: *const c_double, incx: c_int) -> c_double {
+    let xv = gather_vec(x, n as usize, incx as isize);
+    with_session(|s| s.asum(&xv)).unwrap_or(f64::NAN)
+}
+
+/// cblas_dscal.
+///
+/// # Safety
+/// `x` must reference an `n`-element strided vector.
+#[no_mangle]
+pub unsafe extern "C" fn cblas_dscal(n: c_int, alpha: c_double, x: *mut c_double, incx: c_int) {
+    let mut xv = gather_vec(x, n as usize, incx as isize);
+    if with_session(|s| s.scal(alpha, &mut xv)).is_some() {
+        scatter_vec(&xv, x, incx as isize);
+    }
+}
+
+/// cblas_idamax (returns 0 for n <= 0, like reference CBLAS).
+///
+/// # Safety
+/// `x` must reference an `n`-element strided vector.
+#[no_mangle]
+pub unsafe extern "C" fn cblas_idamax(n: c_int, x: *const c_double, incx: c_int) -> c_int {
+    if n <= 0 {
+        return 0;
+    }
+    let xv = gather_vec(x, n as usize, incx as isize);
+    with_session(|s| s.iamax(&xv)).map(|i| i as c_int).unwrap_or(0)
+}

@@ -1,0 +1,17 @@
+//! Platform and workload configuration.
+//!
+//! The platform description ([`PlatformConfig`]) is the single source of
+//! truth for every timing constant in the SoC model; it mirrors the
+//! Cheshire/Carfield instance of the paper (CVA6 host @ 50 MHz on a
+//! VCU128, one 8-core Snitch cluster with 128 KiB L1 SPM).  All constants
+//! are calibrated against the paper's Figure 3 / Results section — see
+//! `configs/carfield.toml` for the per-constant rationale.
+
+mod platform;
+mod workload;
+
+pub use platform::{
+    ClockConfig, ClusterConfig, DmaConfig, ForkJoinConfig, HostConfig,
+    IommuConfig, MemoryConfig, PlatformConfig,
+};
+pub use workload::{DispatchMode, SweepConfig, WorkloadConfig};

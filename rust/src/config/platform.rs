@@ -1,0 +1,451 @@
+//! Platform description: the Carfield-like heSoC of the paper.
+
+use crate::error::{Error, Result};
+use crate::util::toml_lite::TomlDoc;
+
+/// System clock. The paper emulates the SoC on a Xilinx VCU128; Cheshire
+/// bitstreams typically close timing around 50 MHz, and all of the
+/// paper's absolute times are consistent with that.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClockConfig {
+    /// Clock frequency shared by host, cluster and interconnect (Hz).
+    pub freq_hz: u64,
+}
+
+/// CVA6 rv64g host-core model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostConfig {
+    /// Sustained double-precision FLOP/cycle of the OpenBLAS generic
+    /// kernel on the in-order scalar FPU (no FREP/SSR on the host).
+    pub flops_per_cycle: f64,
+    /// Sustained copy bandwidth between the Linux-managed and the
+    /// device-managed DRAM partitions, bytes/cycle (uncached stores
+    /// through the LLC bypass — this is the paper's "data copy" region).
+    pub copy_bytes_per_cycle: f64,
+    /// Fixed cost to set up one memcpy call (function call, loop prologue).
+    pub memcpy_setup_cycles: u64,
+    /// f32 throughput multiplier vs f64 on the host (scalar FPU: ~same).
+    pub f32_speedup: f64,
+}
+
+/// Snitch PMCA cluster model (one cluster, eight worker cores + DMA core).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Number of identical Snitch clusters in the PMCA (the paper's
+    /// Carfield instance has one; Occamy-class parts have many — output
+    /// tiles are distributed round-robin across clusters).
+    pub clusters: u32,
+    /// Worker cores with double-precision FPUs, per cluster.
+    pub cores: u32,
+    /// FMAs issued per core per cycle at peak (Snitch: 1).
+    pub fma_per_core_per_cycle: f64,
+    /// Fraction of peak sustained on SPM-resident GEMM tiles
+    /// (rv32imafd without SSR-tuned asm: well below the >80% of
+    /// hand-tuned Snitch kernels).
+    pub efficiency: f64,
+    /// f32 FLOP multiplier vs f64 (paper future-work: "SIMD operations on
+    /// lower precision data types" — 2 f32 lanes per 64-bit FPU).
+    pub f32_speedup: f64,
+}
+
+/// Memory map of the heSoC (Figure 1 of the paper).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryConfig {
+    /// L1 scratch-pad memory inside the cluster (bytes). Paper: 128 KiB.
+    pub l1_spm_bytes: u64,
+    /// Dual-port L2 SPM holding device instructions + constants (bytes).
+    pub l2_spm_bytes: u64,
+    /// Device-managed DRAM partition (physically contiguous buffers).
+    pub dev_dram_bytes: u64,
+    /// Base addresses (documentation + map sanity checks).
+    pub l1_spm_base: u64,
+    pub l2_spm_base: u64,
+    pub dev_dram_base: u64,
+}
+
+/// Cluster DMA engine (iDMA): refills L1 SPM from DRAM.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DmaConfig {
+    /// Payload bytes moved per cycle once streaming (64-bit AXI = 8).
+    pub bytes_per_cycle: f64,
+    /// Fixed per-transfer programming cost (config regs + launch).
+    pub setup_cycles: u64,
+    /// Extra cycles per 2-D row (address regeneration).
+    pub per_row_cycles: u64,
+}
+
+/// Fork/join cost model: everything the paper's "fork/join" region
+/// contains — entering OpenBLAS, entering the OpenMP target runtime,
+/// marshalling the offload descriptor, the mailbox doorbell, device
+/// wake-up, and the join/teardown on the way out. Costs are cycles on the
+/// 50 MHz host; syscalls/ioctls through the Hero kernel module dominate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ForkJoinConfig {
+    /// OpenBLAS interface-layer entry (dispatch tables, arg checks).
+    pub openblas_entry_cycles: u64,
+    /// libomptarget entry: ioctl into the Hero kernel module, building
+    /// the target-region descriptor.
+    pub omp_entry_cycles: u64,
+    /// Per-mapped-argument marshalling cost.
+    pub per_arg_cycles: u64,
+    /// Mailbox doorbell write + IRQ delivery to the cluster.
+    pub doorbell_cycles: u64,
+    /// Cluster wake-up from clock-gated idle + kernel entry.
+    pub device_wakeup_cycles: u64,
+    /// Host-side join: completion poll/interrupt + return through the
+    /// kernel module.
+    pub join_cycles: u64,
+    /// libomptarget + OpenBLAS exit path.
+    pub exit_cycles: u64,
+}
+
+/// RISC-V IOMMU model (the paper's future-work zero-copy path, which we
+/// implement — see DESIGN.md R3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IommuConfig {
+    /// IO page size (Sv39x4 leaf: 4 KiB).
+    pub page_bytes: u64,
+    /// Cycles for the host to create + publish one IO-PTE
+    /// (calibrated so PTE creation is ~7.5x faster than copying the same
+    /// page, the ratio the paper cites from its prior study).
+    pub pte_create_cycles: u64,
+    /// IOTLB capacity (entries).
+    pub iotlb_entries: u32,
+    /// Page-table-walk penalty on IOTLB miss (cycles).
+    pub iotlb_miss_cycles: u64,
+    /// Cycles to tear down the mapping at unmap time, per page.
+    pub pte_teardown_cycles: u64,
+}
+
+/// Complete platform description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlatformConfig {
+    /// Human-readable platform name (shown by `hero-blas inspect`).
+    pub name: String,
+    pub clock: ClockConfig,
+    pub host: HostConfig,
+    pub cluster: ClusterConfig,
+    pub memory: MemoryConfig,
+    pub dma: DmaConfig,
+    pub forkjoin: ForkJoinConfig,
+    pub iommu: IommuConfig,
+}
+
+impl Default for PlatformConfig {
+    /// The calibrated Carfield instance (same values as
+    /// `configs/carfield.toml`). Calibration targets: Figure 3 shape,
+    /// 2.71x offload speedup at N=128 with a 47% data-copy share.
+    fn default() -> Self {
+        PlatformConfig {
+            name: "carfield-vcu128".into(),
+            clock: ClockConfig { freq_hz: 50_000_000 },
+            host: HostConfig {
+                flops_per_cycle: 0.4,
+                copy_bytes_per_cycle: 0.288,
+                memcpy_setup_cycles: 200,
+                f32_speedup: 1.0,
+            },
+            cluster: ClusterConfig {
+                clusters: 1,
+                cores: 8,
+                fma_per_core_per_cycle: 1.0,
+                efficiency: 0.35,
+                f32_speedup: 2.0,
+            },
+            memory: MemoryConfig {
+                l1_spm_bytes: 128 * 1024,
+                l2_spm_bytes: 1024 * 1024,
+                dev_dram_bytes: 64 * 1024 * 1024,
+                l1_spm_base: 0x1000_0000,
+                l2_spm_base: 0x7800_0000,
+                dev_dram_base: 0xA000_0000,
+            },
+            dma: DmaConfig {
+                bytes_per_cycle: 8.0,
+                setup_cycles: 50,
+                per_row_cycles: 4,
+            },
+            forkjoin: ForkJoinConfig {
+                openblas_entry_cycles: 50_000,
+                omp_entry_cycles: 300_000,
+                per_arg_cycles: 10_000,
+                doorbell_cycles: 5_000,
+                device_wakeup_cycles: 150_000,
+                join_cycles: 400_000,
+                exit_cycles: 300_000,
+            },
+            iommu: IommuConfig {
+                page_bytes: 4096,
+                pte_create_cycles: 2_025,
+                iotlb_entries: 32,
+                iotlb_miss_cycles: 120,
+                pte_teardown_cycles: 427,
+            },
+        }
+    }
+}
+
+impl PlatformConfig {
+    /// Load and validate a TOML platform description.
+    pub fn from_toml_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("{}: {e}", path.display())))?;
+        Self::from_toml_str(&text)
+    }
+
+    /// Parse a TOML platform description. Every field is required — a
+    /// platform description with silent defaults invites mis-calibration.
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let d = TomlDoc::parse(text)?;
+        let cfg = PlatformConfig {
+            name: d.req_str("name")?.to_string(),
+            clock: ClockConfig { freq_hz: d.req_u64("clock.freq_hz")? },
+            host: HostConfig {
+                flops_per_cycle: d.req_f64("host.flops_per_cycle")?,
+                copy_bytes_per_cycle: d.req_f64("host.copy_bytes_per_cycle")?,
+                memcpy_setup_cycles: d.req_u64("host.memcpy_setup_cycles")?,
+                f32_speedup: d.req_f64("host.f32_speedup")?,
+            },
+            cluster: ClusterConfig {
+                clusters: d.opt_u64("cluster.clusters").unwrap_or(1) as u32,
+                cores: d.req_u64("cluster.cores")? as u32,
+                fma_per_core_per_cycle: d.req_f64("cluster.fma_per_core_per_cycle")?,
+                efficiency: d.req_f64("cluster.efficiency")?,
+                f32_speedup: d.req_f64("cluster.f32_speedup")?,
+            },
+            memory: MemoryConfig {
+                l1_spm_bytes: d.req_u64("memory.l1_spm_bytes")?,
+                l2_spm_bytes: d.req_u64("memory.l2_spm_bytes")?,
+                dev_dram_bytes: d.req_u64("memory.dev_dram_bytes")?,
+                l1_spm_base: d.req_u64("memory.l1_spm_base")?,
+                l2_spm_base: d.req_u64("memory.l2_spm_base")?,
+                dev_dram_base: d.req_u64("memory.dev_dram_base")?,
+            },
+            dma: DmaConfig {
+                bytes_per_cycle: d.req_f64("dma.bytes_per_cycle")?,
+                setup_cycles: d.req_u64("dma.setup_cycles")?,
+                per_row_cycles: d.req_u64("dma.per_row_cycles")?,
+            },
+            forkjoin: ForkJoinConfig {
+                openblas_entry_cycles: d.req_u64("forkjoin.openblas_entry_cycles")?,
+                omp_entry_cycles: d.req_u64("forkjoin.omp_entry_cycles")?,
+                per_arg_cycles: d.req_u64("forkjoin.per_arg_cycles")?,
+                doorbell_cycles: d.req_u64("forkjoin.doorbell_cycles")?,
+                device_wakeup_cycles: d.req_u64("forkjoin.device_wakeup_cycles")?,
+                join_cycles: d.req_u64("forkjoin.join_cycles")?,
+                exit_cycles: d.req_u64("forkjoin.exit_cycles")?,
+            },
+            iommu: IommuConfig {
+                page_bytes: d.req_u64("iommu.page_bytes")?,
+                pte_create_cycles: d.req_u64("iommu.pte_create_cycles")?,
+                iotlb_entries: d.req_u64("iommu.iotlb_entries")? as u32,
+                iotlb_miss_cycles: d.req_u64("iommu.iotlb_miss_cycles")?,
+                pte_teardown_cycles: d.req_u64("iommu.pte_teardown_cycles")?,
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Render as TOML (inverse of [`PlatformConfig::from_toml_str`]).
+    pub fn to_toml_string(&self) -> String {
+        let c = self;
+        format!(
+            "name = \"{}\"\n\n\
+             [clock]\nfreq_hz = {}\n\n\
+             [host]\nflops_per_cycle = {}\ncopy_bytes_per_cycle = {}\n\
+             memcpy_setup_cycles = {}\nf32_speedup = {}\n\n\
+             [cluster]\nclusters = {}\ncores = {}\nfma_per_core_per_cycle = {}\n\
+             efficiency = {}\nf32_speedup = {}\n\n\
+             [memory]\nl1_spm_bytes = {}\nl2_spm_bytes = {}\ndev_dram_bytes = {}\n\
+             l1_spm_base = 0x{:x}\nl2_spm_base = 0x{:x}\ndev_dram_base = 0x{:x}\n\n\
+             [dma]\nbytes_per_cycle = {}\nsetup_cycles = {}\nper_row_cycles = {}\n\n\
+             [forkjoin]\nopenblas_entry_cycles = {}\nomp_entry_cycles = {}\n\
+             per_arg_cycles = {}\ndoorbell_cycles = {}\ndevice_wakeup_cycles = {}\n\
+             join_cycles = {}\nexit_cycles = {}\n\n\
+             [iommu]\npage_bytes = {}\npte_create_cycles = {}\niotlb_entries = {}\n\
+             iotlb_miss_cycles = {}\npte_teardown_cycles = {}\n",
+            c.name,
+            c.clock.freq_hz,
+            fmt_f64(c.host.flops_per_cycle),
+            fmt_f64(c.host.copy_bytes_per_cycle),
+            c.host.memcpy_setup_cycles,
+            fmt_f64(c.host.f32_speedup),
+            c.cluster.clusters,
+            c.cluster.cores,
+            fmt_f64(c.cluster.fma_per_core_per_cycle),
+            fmt_f64(c.cluster.efficiency),
+            fmt_f64(c.cluster.f32_speedup),
+            c.memory.l1_spm_bytes,
+            c.memory.l2_spm_bytes,
+            c.memory.dev_dram_bytes,
+            c.memory.l1_spm_base,
+            c.memory.l2_spm_base,
+            c.memory.dev_dram_base,
+            fmt_f64(c.dma.bytes_per_cycle),
+            c.dma.setup_cycles,
+            c.dma.per_row_cycles,
+            c.forkjoin.openblas_entry_cycles,
+            c.forkjoin.omp_entry_cycles,
+            c.forkjoin.per_arg_cycles,
+            c.forkjoin.doorbell_cycles,
+            c.forkjoin.device_wakeup_cycles,
+            c.forkjoin.join_cycles,
+            c.forkjoin.exit_cycles,
+            c.iommu.page_bytes,
+            c.iommu.pte_create_cycles,
+            c.iommu.iotlb_entries,
+            c.iommu.iotlb_miss_cycles,
+            c.iommu.pte_teardown_cycles,
+        )
+    }
+
+    /// Reject physically meaningless configurations early.
+    pub fn validate(&self) -> Result<()> {
+        let err = |m: String| Err(Error::Config(m));
+        if self.clock.freq_hz == 0 {
+            return err("clock.freq_hz must be > 0".into());
+        }
+        if self.host.flops_per_cycle <= 0.0 || self.host.copy_bytes_per_cycle <= 0.0 {
+            return err("host throughputs must be > 0".into());
+        }
+        if self.cluster.cores == 0 {
+            return err("cluster.cores must be > 0".into());
+        }
+        if self.cluster.clusters == 0 {
+            return err("cluster.clusters must be > 0".into());
+        }
+        if !(0.0..=1.0).contains(&self.cluster.efficiency) || self.cluster.efficiency == 0.0 {
+            return err(format!(
+                "cluster.efficiency must be in (0, 1], got {}",
+                self.cluster.efficiency
+            ));
+        }
+        if self.memory.l1_spm_bytes < 3 * 64 * 64 * 8 {
+            return err(format!(
+                "l1_spm_bytes={} cannot hold one f64 tile set (needs >= {})",
+                self.memory.l1_spm_bytes,
+                3 * 64 * 64 * 8
+            ));
+        }
+        if !self.iommu.page_bytes.is_power_of_two() {
+            return err("iommu.page_bytes must be a power of two".into());
+        }
+        if self.dma.bytes_per_cycle <= 0.0 {
+            return err("dma.bytes_per_cycle must be > 0".into());
+        }
+        // Address-map regions must not overlap.
+        let m = &self.memory;
+        let regions = [
+            (m.l1_spm_base, m.l1_spm_bytes, "l1_spm"),
+            (m.l2_spm_base, m.l2_spm_bytes, "l2_spm"),
+            (m.dev_dram_base, m.dev_dram_bytes, "dev_dram"),
+        ];
+        for (i, a) in regions.iter().enumerate() {
+            for b in regions.iter().skip(i + 1) {
+                let (ab, asz, an) = *a;
+                let (bb, bsz, bn) = *b;
+                if ab < bb + bsz && bb < ab + asz {
+                    return err(format!("memory regions {an} and {bn} overlap"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Peak cluster FLOP/cycle for a dtype (FMA counts as 2 FLOPs).
+    pub fn cluster_peak_flops_per_cycle(&self, f32_path: bool) -> f64 {
+        let base =
+            self.cluster.cores as f64 * self.cluster.fma_per_core_per_cycle * 2.0;
+        if f32_path {
+            base * self.cluster.f32_speedup
+        } else {
+            base
+        }
+    }
+
+    /// Nanoseconds for a cycle count on the shared clock.
+    pub fn cycles_to_ns(&self, cycles: f64) -> f64 {
+        cycles * 1e9 / self.clock.freq_hz as f64
+    }
+}
+
+/// Format an f64 so toml_lite reads it back as a float (always a '.').
+fn fmt_f64(v: f64) -> String {
+    if v.fract() == 0.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        PlatformConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_zero_freq() {
+        let mut cfg = PlatformConfig::default();
+        cfg.clock.freq_hz = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_bad_efficiency() {
+        let mut cfg = PlatformConfig::default();
+        cfg.cluster.efficiency = 1.5;
+        assert!(cfg.validate().is_err());
+        cfg.cluster.efficiency = 0.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_tiny_spm() {
+        let mut cfg = PlatformConfig::default();
+        cfg.memory.l1_spm_bytes = 1024;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_overlapping_regions() {
+        let mut cfg = PlatformConfig::default();
+        cfg.memory.l2_spm_base = cfg.memory.dev_dram_base;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn peak_flops() {
+        let cfg = PlatformConfig::default();
+        assert_eq!(cfg.cluster_peak_flops_per_cycle(false), 16.0);
+        assert_eq!(cfg.cluster_peak_flops_per_cycle(true), 32.0);
+    }
+
+    #[test]
+    fn cycles_to_ns_at_50mhz() {
+        let cfg = PlatformConfig::default();
+        assert_eq!(cfg.cycles_to_ns(1.0), 20.0);
+        assert_eq!(cfg.cycles_to_ns(50_000_000.0), 1e9);
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let cfg = PlatformConfig::default();
+        let text = cfg.to_toml_string();
+        let back = PlatformConfig::from_toml_str(&text).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn toml_missing_field_names_path() {
+        let text = PlatformConfig::default()
+            .to_toml_string()
+            .replace("pte_create_cycles = 2025\n", "");
+        let err = PlatformConfig::from_toml_str(&text).unwrap_err().to_string();
+        assert!(err.contains("iommu.pte_create_cycles"), "{err}");
+    }
+}

@@ -1,0 +1,200 @@
+//! Workload/sweep configuration for the benchmark harness.
+
+
+
+use crate::error::{Error, Result};
+
+/// Where a BLAS call may execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchMode {
+    /// Always run on the CVA6 host (the paper's "without offloading").
+    HostOnly,
+    /// Always offload to the PMCA (the paper's "with offloading").
+    DeviceOnly,
+    /// Pick by the dispatch policy's size threshold.
+    Auto,
+    /// Offload through the IOMMU without copying (paper's future work).
+    DeviceZeroCopy,
+}
+
+impl std::str::FromStr for DispatchMode {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "host" | "host_only" => Ok(DispatchMode::HostOnly),
+            "device" | "device_only" | "offload" => Ok(DispatchMode::DeviceOnly),
+            "auto" => Ok(DispatchMode::Auto),
+            "zero_copy" | "device_zero_copy" => Ok(DispatchMode::DeviceZeroCopy),
+            other => Err(Error::Config(format!("unknown dispatch mode '{other}'"))),
+        }
+    }
+}
+
+impl std::fmt::Display for DispatchMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            DispatchMode::HostOnly => "host_only",
+            DispatchMode::DeviceOnly => "device_only",
+            DispatchMode::Auto => "auto",
+            DispatchMode::DeviceZeroCopy => "device_zero_copy",
+        };
+        f.write_str(s)
+    }
+}
+
+/// One parameter sweep (the x-axis of a figure).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepConfig {
+    /// Square matrix sizes to sweep (paper's Figure 3 x-axis).
+    pub sizes: Vec<usize>,
+    /// Dispatch modes to compare.
+    pub modes: Vec<DispatchMode>,
+    /// Repetitions per point (virtual time is deterministic; reps > 1
+    /// only matter for wall-clock noise in criterion).
+    pub reps: u32,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            sizes: vec![16, 32, 64, 128, 256],
+            modes: vec![DispatchMode::HostOnly, DispatchMode::DeviceOnly],
+            reps: 1,
+        }
+    }
+}
+
+/// Harness workload description (loadable from TOML for custom sweeps).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadConfig {
+    /// Operation under test ("gemm" for Figure 3).
+    pub op: String,
+    /// Element type: "f64" (paper) or "f32" (future-work projection).
+    pub dtype: String,
+    pub sweep: SweepConfig,
+    /// RNG seed for synthetic operands (deterministic workloads).
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            op: "gemm".into(),
+            dtype: "f64".into(),
+            sweep: SweepConfig::default(),
+            seed: 0x5EED,
+        }
+    }
+}
+
+impl WorkloadConfig {
+    /// Load and validate from TOML.
+    pub fn from_toml_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("{}: {e}", path.display())))?;
+        Self::from_toml_str(&text)
+    }
+
+    /// Parse from TOML text; unset fields fall back to the defaults.
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        use crate::util::toml_lite::{TomlDoc, TomlValue};
+        let d = TomlDoc::parse(text)?;
+        let mut cfg = WorkloadConfig::default();
+        if let Some(op) = d.opt_str("op") {
+            cfg.op = op.to_string();
+        }
+        if let Some(dt) = d.opt_str("dtype") {
+            cfg.dtype = dt.to_string();
+        }
+        if let Some(seed) = d.opt_u64("seed") {
+            cfg.seed = seed;
+        }
+        if let Some(TomlValue::Array(sizes)) = d.get("sweep.sizes") {
+            cfg.sweep.sizes = sizes
+                .iter()
+                .map(|v| {
+                    v.as_u64().map(|u| u as usize).ok_or_else(|| {
+                        Error::Config("sweep.sizes: non-integer entry".into())
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(TomlValue::Array(modes)) = d.get("sweep.modes") {
+            cfg.sweep.modes = modes
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .ok_or_else(|| Error::Config("sweep.modes: non-string".into()))
+                        .and_then(|s| s.parse())
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(reps) = d.opt_u64("sweep.reps") {
+            cfg.sweep.reps = reps as u32;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity checks.
+    pub fn validate(&self) -> Result<()> {
+        if self.sweep.sizes.is_empty() {
+            return Err(Error::Config("sweep.sizes is empty".into()));
+        }
+        if self.sweep.sizes.iter().any(|&s| s == 0 || s > 4096) {
+            return Err(Error::Config("sweep sizes must be in 1..=4096".into()));
+        }
+        match self.dtype.as_str() {
+            "f32" | "f64" => {}
+            other => return Err(Error::Config(format!("unsupported dtype '{other}'"))),
+        }
+        match self.op.as_str() {
+            "gemm" | "gemv" | "axpy" | "dot" => {}
+            other => return Err(Error::Config(format!("unsupported op '{other}'"))),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::str::FromStr;
+
+    #[test]
+    fn default_workload_is_valid() {
+        WorkloadConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for m in [
+            DispatchMode::HostOnly,
+            DispatchMode::DeviceOnly,
+            DispatchMode::Auto,
+            DispatchMode::DeviceZeroCopy,
+        ] {
+            assert_eq!(DispatchMode::from_str(&m.to_string()).unwrap(), m);
+        }
+        assert!(DispatchMode::from_str("bogus").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_sizes() {
+        let mut w = WorkloadConfig::default();
+        w.sweep.sizes = vec![0];
+        assert!(w.validate().is_err());
+        w.sweep.sizes = vec![8192];
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dtype_and_op() {
+        let mut w = WorkloadConfig::default();
+        w.dtype = "f16".into();
+        assert!(w.validate().is_err());
+        let mut w = WorkloadConfig::default();
+        w.op = "cholesky".into();
+        assert!(w.validate().is_err());
+    }
+}

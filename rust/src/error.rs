@@ -1,0 +1,52 @@
+//! Crate-wide error type.
+//!
+//! Everything user-facing goes through [`Error`]; internal invariant
+//! violations panic (they indicate bugs, not recoverable conditions).
+
+use thiserror::Error;
+
+/// Errors surfaced by the hero-blas stack.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Shape/argument mismatch at the BLAS or ndarray layer.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// Device-DRAM or L2-SPM allocation failure.
+    #[error("allocator: {0}")]
+    Alloc(String),
+
+    /// Device lifecycle misuse (e.g. launch before boot).
+    #[error("device: {0}")]
+    Device(String),
+
+    /// OpenMP-style offload/data-mapping failure.
+    #[error("offload: {0}")]
+    Offload(String),
+
+    /// Artifact registry / PJRT failure.
+    #[error("runtime: {0}")]
+    Runtime(String),
+
+    /// Platform/workload configuration problem.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// Underlying XLA error.
+    #[error("xla: {0}")]
+    Xla(#[from] xla::Error),
+
+    /// I/O while loading configs or artifacts.
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Helper for shape errors (the most common construction site).
+    pub fn shape(msg: impl Into<String>) -> Self {
+        Error::Shape(msg.into())
+    }
+}

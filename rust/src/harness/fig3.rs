@@ -1,0 +1,196 @@
+//! Figure 3: execution time of a float64 matrix multiplication with and
+//! without offloading, split into data-copy / fork-join / compute.
+//!
+//! The paper measures from Python with `os.time()` on the FPGA; we
+//! measure in virtual time on the calibrated SoC model.  Targets
+//! (headline R1/R2): 2.71x speedup at N=128, data copy ~47% of the
+//! offloaded runtime.
+
+use crate::blas::{DispatchPolicy, HeroBlas};
+use crate::config::{DispatchMode, PlatformConfig};
+use crate::error::Result;
+use crate::npy::NdArray;
+use crate::soc::trace::RegionClass;
+use crate::util::rng::Rng;
+
+use super::report::{ms, pct, ratio, Table};
+
+/// Paper headline targets (Results section).
+pub const PAPER_SPEEDUP_N128: f64 = 2.71;
+pub const PAPER_COPY_SHARE_N128: f64 = 0.47;
+
+/// One measured point of the figure.
+#[derive(Debug, Clone)]
+pub struct Fig3Point {
+    pub n: usize,
+    pub mode: DispatchMode,
+    /// Virtual seconds per region.
+    pub data_copy_s: f64,
+    pub fork_join_s: f64,
+    pub compute_s: f64,
+    pub host_compute_s: f64,
+    /// Max |device - host-reference| of the result matrix.
+    pub max_abs_err: f64,
+}
+
+impl Fig3Point {
+    pub fn total_s(&self) -> f64 {
+        self.data_copy_s + self.fork_join_s + self.compute_s + self.host_compute_s
+    }
+
+    pub fn copy_share(&self) -> f64 {
+        let t = self.total_s();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.data_copy_s / t
+        }
+    }
+}
+
+/// The full sweep.
+#[derive(Debug, Clone)]
+pub struct Fig3Report {
+    pub points: Vec<Fig3Point>,
+}
+
+/// Run one (n, mode) point on an existing session.
+pub fn run_point(blas: &mut HeroBlas, n: usize, mode: DispatchMode,
+                 seed: u64) -> Result<Fig3Point> {
+    let mut rng = Rng::new(seed ^ (n as u64) << 1);
+    let a = NdArray::<f64>::randn(&mut rng, &[n, n]);
+    let b = NdArray::<f64>::randn(&mut rng, &[n, n]);
+
+    // host-kernel reference for the correctness column
+    let mut c_ref = vec![0.0; n * n];
+    crate::blas::host::naive_gemm(n, n, n, 1.0, a.data(), b.data(), 0.0, &mut c_ref);
+
+    blas.policy = DispatchPolicy::with_mode(mode);
+    blas.reset_run();
+    let c = a.matmul(&b, blas)?;
+
+    let f = blas.engine.freq_hz();
+    let t = &blas.engine.trace;
+    let err = c
+        .data()
+        .iter()
+        .zip(c_ref.iter())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max);
+    Ok(Fig3Point {
+        n,
+        mode,
+        data_copy_s: t.total(RegionClass::DataCopy).to_secs(f),
+        fork_join_s: t.total(RegionClass::ForkJoin).to_secs(f),
+        compute_s: t.total(RegionClass::Compute).to_secs(f),
+        host_compute_s: t.total(RegionClass::HostCompute).to_secs(f),
+        max_abs_err: err,
+    })
+}
+
+/// Run the full Figure 3 sweep.
+pub fn run_fig3(
+    cfg: PlatformConfig,
+    artifacts: &std::path::Path,
+    sizes: &[usize],
+    modes: &[DispatchMode],
+    seed: u64,
+) -> Result<Fig3Report> {
+    let mut blas = HeroBlas::new(cfg, artifacts, DispatchPolicy::default())?;
+    let mut points = Vec::new();
+    for &n in sizes {
+        for &mode in modes {
+            points.push(run_point(&mut blas, n, mode, seed)?);
+        }
+    }
+    Ok(Fig3Report { points })
+}
+
+impl Fig3Report {
+    fn find(&self, n: usize, mode: DispatchMode) -> Option<&Fig3Point> {
+        self.points.iter().find(|p| p.n == n && p.mode == mode)
+    }
+
+    /// Offload speedup vs host at size n (None if either point missing).
+    pub fn speedup(&self, n: usize, mode: DispatchMode) -> Option<f64> {
+        let host = self.find(n, DispatchMode::HostOnly)?;
+        let dev = self.find(n, mode)?;
+        Some(host.total_s() / dev.total_s())
+    }
+
+    /// Render the paper-figure table.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&[
+            "n", "mode", "data_copy_ms", "fork_join_ms", "compute_ms",
+            "total_ms", "speedup", "copy_share", "max_err",
+        ]);
+        for p in &self.points {
+            let speed = self
+                .speedup(p.n, p.mode)
+                .filter(|_| p.mode != DispatchMode::HostOnly)
+                .map(ratio)
+                .unwrap_or_else(|| "-".into());
+            let share = if p.mode == DispatchMode::HostOnly {
+                "-".into()
+            } else {
+                pct(p.copy_share())
+            };
+            let compute = p.compute_s + p.host_compute_s;
+            t.row(vec![
+                p.n.to_string(),
+                p.mode.to_string(),
+                ms(p.data_copy_s),
+                ms(p.fork_join_s),
+                ms(compute),
+                ms(p.total_s()),
+                speed,
+                share,
+                format!("{:.2e}", p.max_abs_err),
+            ]);
+        }
+        t.render()
+    }
+
+    /// CSV for plotting.
+    pub fn csv(&self) -> String {
+        let mut t = Table::new(&[
+            "n", "mode", "data_copy_s", "fork_join_s", "compute_s",
+            "host_compute_s", "total_s",
+        ]);
+        for p in &self.points {
+            t.row(vec![
+                p.n.to_string(),
+                p.mode.to_string(),
+                format!("{:.9}", p.data_copy_s),
+                format!("{:.9}", p.fork_join_s),
+                format!("{:.9}", p.compute_s),
+                format!("{:.9}", p.host_compute_s),
+                format!("{:.9}", p.total_s()),
+            ]);
+        }
+        t.csv()
+    }
+
+    /// Compare the headline point against the paper (R1/R2); returns
+    /// (measured_speedup, measured_copy_share) at N=128.
+    pub fn headline(&self) -> Option<(f64, f64)> {
+        let s = self.speedup(128, DispatchMode::DeviceOnly)?;
+        let share = self.find(128, DispatchMode::DeviceOnly)?.copy_share();
+        Some((s, share))
+    }
+
+    /// Summary block comparing to the paper.
+    pub fn summary(&self) -> String {
+        match self.headline() {
+            Some((s, share)) => format!(
+                "headline @ N=128: speedup {} (paper {}), copy share {} (paper {})\n",
+                ratio(s),
+                ratio(PAPER_SPEEDUP_N128),
+                pct(share),
+                pct(PAPER_COPY_SHARE_N128),
+            ),
+            None => "headline @ N=128: not measured (need host_only + device_only at 128)\n"
+                .to_string(),
+        }
+    }
+}

@@ -1,0 +1,358 @@
+//! Device-memory arenas — the analogue of `hero_allocator.c`.
+//!
+//! Two arenas exist on the paper's platform: the dual-port L2 SPM
+//! (device instructions + constants) and the device-managed DRAM
+//! partition ("manually managed to avoid fragmentation", so shared
+//! buffers stay physically contiguous for the DMA).  This is a first-fit
+//! free-list allocator with coalescing; the DRAM arena carries a real
+//! byte backing store so copies in the offload path move actual data —
+//! functional correctness rides on it.
+
+
+
+use crate::error::{Error, Result};
+
+/// One live allocation (offset is arena-relative; `addr` device-visible).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Allocation {
+    pub offset: u64,
+    pub len: u64,
+    pub addr: u64,
+}
+
+/// Allocator statistics.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ArenaStats {
+    pub allocs: u64,
+    pub frees: u64,
+    pub bytes_in_use: u64,
+    pub peak_bytes_in_use: u64,
+    pub failed_allocs: u64,
+}
+
+/// First-fit arena with optional byte backing.
+#[derive(Debug)]
+pub struct Arena {
+    name: &'static str,
+    base: u64,
+    size: u64,
+    align: u64,
+    /// Sorted, disjoint free holes (offset, len).
+    free: Vec<(u64, u64)>,
+    /// Live allocations (offset, len) for double-free/overlap checks.
+    live: Vec<(u64, u64)>,
+    /// Byte backing store (DRAM arena only).
+    backing: Option<Vec<u8>>,
+    stats: ArenaStats,
+}
+
+impl Arena {
+    /// Bookkeeping-only arena (L2 SPM).
+    pub fn new(name: &'static str, base: u64, size: u64, align: u64) -> Self {
+        assert!(align.is_power_of_two(), "alignment must be a power of two");
+        Arena {
+            name,
+            base,
+            size,
+            align,
+            free: vec![(0, size)],
+            live: Vec::new(),
+            backing: None,
+            stats: ArenaStats::default(),
+        }
+    }
+
+    /// Arena with a real byte store (device DRAM partition).
+    pub fn with_backing(name: &'static str, base: u64, size: u64, align: u64) -> Self {
+        let mut a = Arena::new(name, base, size, align);
+        a.backing = Some(vec![0u8; size as usize]);
+        a
+    }
+
+    pub fn size(&self) -> u64 {
+        self.size
+    }
+
+    pub fn base(&self) -> u64 {
+        self.base
+    }
+
+    fn round_up(&self, v: u64) -> u64 {
+        (v + self.align - 1) & !(self.align - 1)
+    }
+
+    /// First-fit allocation.
+    pub fn alloc(&mut self, len: u64) -> Result<Allocation> {
+        if len == 0 {
+            return Err(Error::Alloc(format!("{}: zero-length alloc", self.name)));
+        }
+        let len = self.round_up(len);
+        for i in 0..self.free.len() {
+            let (off, hole) = self.free[i];
+            if hole >= len {
+                if hole == len {
+                    self.free.remove(i);
+                } else {
+                    self.free[i] = (off + len, hole - len);
+                }
+                self.live.push((off, len));
+                self.stats.allocs += 1;
+                self.stats.bytes_in_use += len;
+                self.stats.peak_bytes_in_use =
+                    self.stats.peak_bytes_in_use.max(self.stats.bytes_in_use);
+                return Ok(Allocation { offset: off, len, addr: self.base + off });
+            }
+        }
+        self.stats.failed_allocs += 1;
+        Err(Error::Alloc(format!(
+            "{}: out of memory allocating {} B ({} B free, largest hole {} B)",
+            self.name,
+            len,
+            self.free.iter().map(|(_, l)| l).sum::<u64>(),
+            self.free.iter().map(|(_, l)| *l).max().unwrap_or(0),
+        )))
+    }
+
+    /// Free and coalesce.
+    pub fn free(&mut self, a: Allocation) -> Result<()> {
+        let pos = self
+            .live
+            .iter()
+            .position(|&(off, len)| off == a.offset && len == a.len)
+            .ok_or_else(|| {
+                Error::Alloc(format!(
+                    "{}: free of unknown allocation at offset {}",
+                    self.name, a.offset
+                ))
+            })?;
+        self.live.remove(pos);
+        self.stats.frees += 1;
+        self.stats.bytes_in_use -= a.len;
+
+        // insert hole sorted, then coalesce neighbours
+        let idx = self.free.partition_point(|&(off, _)| off < a.offset);
+        self.free.insert(idx, (a.offset, a.len));
+        self.coalesce();
+        Ok(())
+    }
+
+    fn coalesce(&mut self) {
+        let mut i = 0;
+        while i + 1 < self.free.len() {
+            let (off, len) = self.free[i];
+            let (noff, nlen) = self.free[i + 1];
+            if off + len == noff {
+                self.free[i] = (off, len + nlen);
+                self.free.remove(i + 1);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Copy host bytes into the arena's backing store at an allocation.
+    pub fn write(&mut self, a: &Allocation, data: &[u8]) -> Result<()> {
+        if data.len() as u64 > a.len {
+            return Err(Error::Alloc(format!(
+                "{}: write of {} B into {} B allocation",
+                self.name,
+                data.len(),
+                a.len
+            )));
+        }
+        let store = self.backing.as_mut().ok_or_else(|| {
+            Error::Alloc(format!("{}: arena has no backing store", self.name))
+        })?;
+        let s = a.offset as usize;
+        store[s..s + data.len()].copy_from_slice(data);
+        Ok(())
+    }
+
+    /// Write bytes at an offset within an allocation.
+    pub fn write_at(&mut self, a: &Allocation, offset: usize, data: &[u8]) -> Result<()> {
+        if (offset + data.len()) as u64 > a.len {
+            return Err(Error::Alloc(format!(
+                "{}: write_at past end ({} + {} > {})",
+                self.name,
+                offset,
+                data.len(),
+                a.len
+            )));
+        }
+        let store = self.backing.as_mut().ok_or_else(|| {
+            Error::Alloc(format!("{}: arena has no backing store", self.name))
+        })?;
+        let s = a.offset as usize + offset;
+        store[s..s + data.len()].copy_from_slice(data);
+        Ok(())
+    }
+
+    /// Read bytes at an offset within an allocation.
+    pub fn read_at(&self, a: &Allocation, offset: usize, len: usize) -> Result<&[u8]> {
+        if (offset + len) as u64 > a.len {
+            return Err(Error::Alloc(format!(
+                "{}: read_at past end ({offset} + {len} > {})",
+                self.name, a.len
+            )));
+        }
+        let store = self.backing.as_ref().ok_or_else(|| {
+            Error::Alloc(format!("{}: arena has no backing store", self.name))
+        })?;
+        let s = a.offset as usize + offset;
+        Ok(&store[s..s + len])
+    }
+
+    /// Read bytes back from the backing store.
+    pub fn read(&self, a: &Allocation, len: usize) -> Result<&[u8]> {
+        if len as u64 > a.len {
+            return Err(Error::Alloc(format!(
+                "{}: read of {len} B from {} B allocation",
+                self.name, a.len
+            )));
+        }
+        let store = self.backing.as_ref().ok_or_else(|| {
+            Error::Alloc(format!("{}: arena has no backing store", self.name))
+        })?;
+        let s = a.offset as usize;
+        Ok(&store[s..s + len])
+    }
+
+    pub fn stats(&self) -> ArenaStats {
+        self.stats
+    }
+
+    /// Free bytes remaining.
+    pub fn free_bytes(&self) -> u64 {
+        self.free.iter().map(|(_, l)| l).sum()
+    }
+
+    /// External fragmentation: 1 - largest_hole / free_bytes (0 when
+    /// empty or fully coalesced).
+    pub fn fragmentation(&self) -> f64 {
+        let free = self.free_bytes();
+        if free == 0 {
+            return 0.0;
+        }
+        let largest = self.free.iter().map(|(_, l)| *l).max().unwrap_or(0);
+        1.0 - largest as f64 / free as f64
+    }
+
+    /// Invariant check used by proptests: holes sorted/disjoint, live and
+    /// free account for the whole arena, no live overlap.
+    pub fn check_invariants(&self) -> Result<()> {
+        let mut prev_end = 0u64;
+        for &(off, len) in &self.free {
+            if off < prev_end {
+                return Err(Error::Alloc("free list unsorted/overlapping".into()));
+            }
+            prev_end = off + len;
+        }
+        let mut all: Vec<(u64, u64)> = self.free.iter().chain(self.live.iter()).copied().collect();
+        all.sort_unstable();
+        let mut covered = 0u64;
+        let mut cursor = 0u64;
+        for (off, len) in all {
+            if off < cursor {
+                return Err(Error::Alloc("live/free regions overlap".into()));
+            }
+            cursor = off + len;
+            covered += len;
+        }
+        if covered != self.size {
+            return Err(Error::Alloc(format!(
+                "accounting leak: covered {covered} of {} B",
+                self.size
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arena() -> Arena {
+        Arena::new("test", 0x1000, 4096, 64)
+    }
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut a = arena();
+        let x = a.alloc(100).unwrap();
+        assert_eq!(x.len, 128); // rounded to alignment
+        assert_eq!(x.addr, 0x1000);
+        a.check_invariants().unwrap();
+        a.free(x).unwrap();
+        assert_eq!(a.free_bytes(), 4096);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn oom_reports_and_counts() {
+        let mut a = arena();
+        assert!(a.alloc(4096).is_ok());
+        let e = a.alloc(1).unwrap_err();
+        assert!(e.to_string().contains("out of memory"));
+        assert_eq!(a.stats().failed_allocs, 1);
+    }
+
+    #[test]
+    fn double_free_rejected() {
+        let mut a = arena();
+        let x = a.alloc(64).unwrap();
+        a.free(x).unwrap();
+        assert!(a.free(x).is_err());
+    }
+
+    #[test]
+    fn coalescing_recovers_full_block() {
+        let mut a = arena();
+        let x = a.alloc(1024).unwrap();
+        let y = a.alloc(1024).unwrap();
+        let z = a.alloc(1024).unwrap();
+        a.free(y).unwrap(); // hole in the middle
+        assert!(a.fragmentation() > 0.0);
+        a.free(x).unwrap();
+        a.free(z).unwrap();
+        assert_eq!(a.free_bytes(), 4096);
+        assert_eq!(a.fragmentation(), 0.0);
+        assert!(a.alloc(4096).is_ok());
+    }
+
+    #[test]
+    fn backing_write_read() {
+        let mut a = Arena::with_backing("dram", 0xA000_0000, 4096, 64);
+        let x = a.alloc(256).unwrap();
+        let data: Vec<u8> = (0..=255).collect();
+        a.write(&x, &data).unwrap();
+        assert_eq!(a.read(&x, 256).unwrap(), &data[..]);
+        // oversized write rejected
+        assert!(a.write(&x, &vec![0; 300]).is_err());
+    }
+
+    #[test]
+    fn bookkeeping_arena_rejects_io() {
+        let mut a = arena();
+        let x = a.alloc(64).unwrap();
+        assert!(a.write(&x, &[1, 2]).is_err());
+        assert!(a.read(&x, 2).is_err());
+    }
+
+    #[test]
+    fn peak_usage_tracked() {
+        let mut a = arena();
+        let x = a.alloc(2048).unwrap();
+        let y = a.alloc(1024).unwrap();
+        a.free(x).unwrap();
+        a.free(y).unwrap();
+        assert_eq!(a.stats().peak_bytes_in_use, 3072);
+        assert_eq!(a.stats().bytes_in_use, 0);
+    }
+
+    #[test]
+    fn zero_len_rejected() {
+        let mut a = arena();
+        assert!(a.alloc(0).is_err());
+    }
+}

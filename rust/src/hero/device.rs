@@ -1,0 +1,206 @@
+//! Device lifecycle — the analogue of `hero_snitch.c`.
+//!
+//! Boot copies the device-side functions of `libopenblas.so` into the
+//! dual-port L2 SPM and wakes the cluster; launch posts an offload
+//! descriptor through the mailbox; wait drains the completion word.
+//! Costs are returned as cycles and charged by the offload engine.
+
+use super::allocator::{Allocation, Arena};
+use super::offload::OffloadDescriptor;
+use crate::config::PlatformConfig;
+use crate::error::{Error, Result};
+use crate::soc::clock::Cycles;
+use crate::soc::mailbox::Mailbox;
+
+/// Device lifecycle state machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceState {
+    /// Held in reset; no arenas initialized.
+    Reset,
+    /// Booted: device binary resident in L2, cluster idle (clock-gated).
+    Idle,
+    /// One offload in flight.
+    Running,
+}
+
+/// The PMCA as the Hero runtime sees it.
+#[derive(Debug)]
+pub struct Device {
+    state: DeviceState,
+    /// Dual-port L2 SPM: device .text/.rodata + descriptor staging.
+    pub l2: Arena,
+    /// Device-managed DRAM partition (physically contiguous, backed).
+    pub dram: Arena,
+    pub mailbox: Mailbox,
+    binary: Option<Allocation>,
+    launches: u64,
+    wakeup_cycles: u64,
+}
+
+impl Device {
+    pub fn new(cfg: &PlatformConfig) -> Self {
+        let m = &cfg.memory;
+        Device {
+            state: DeviceState::Reset,
+            l2: Arena::new("l2_spm", m.l2_spm_base, m.l2_spm_bytes, 64),
+            dram: Arena::with_backing("dev_dram", m.dev_dram_base, m.dev_dram_bytes, 64),
+            mailbox: Mailbox::new(cfg.forkjoin.doorbell_cycles),
+            binary: None,
+            launches: 0,
+            wakeup_cycles: cfg.forkjoin.device_wakeup_cycles,
+        }
+    }
+
+    pub fn state(&self) -> DeviceState {
+        self.state
+    }
+
+    pub fn launches(&self) -> u64 {
+        self.launches
+    }
+
+    /// Boot: stage the device binary (the `libopenblas.so` device
+    /// sections) into L2 and release the cluster from reset.  Returns the
+    /// boot cost; only valid from `Reset`.
+    pub fn boot(&mut self, binary_bytes: u64, copy_cost: Cycles) -> Result<Cycles> {
+        if self.state != DeviceState::Reset {
+            return Err(Error::Device(format!(
+                "boot from {:?} (must be Reset)",
+                self.state
+            )));
+        }
+        let alloc = self.l2.alloc(binary_bytes)?;
+        self.binary = Some(alloc);
+        self.state = DeviceState::Idle;
+        // copy of the binary + wake-up out of reset
+        Ok(copy_cost + Cycles(self.wakeup_cycles))
+    }
+
+    /// Post an offload descriptor; returns the doorbell+wake cost.
+    pub fn launch(&mut self, desc: &OffloadDescriptor) -> Result<Cycles> {
+        if self.state != DeviceState::Idle {
+            return Err(Error::Device(format!(
+                "launch from {:?} (must be Idle — boot first, one offload at a time)",
+                self.state
+            )));
+        }
+        // stage the descriptor in L2 (tiny, but it must fit)
+        let staged = self.l2.alloc(64 + 24 * desc.args.len().max(1) as u64)?;
+        let doorbell = self.mailbox.ring_device(staged.addr);
+        self.l2.free(staged)?;
+        self.state = DeviceState::Running;
+        self.launches += 1;
+        // cluster wakes from clock-gated idle on the doorbell IRQ
+        Ok(doorbell + Cycles(self.wakeup_cycles))
+    }
+
+    /// Device signals completion (called by the compute engine when the
+    /// kernel finishes); host-side `wait` then observes it.
+    pub fn complete(&mut self) -> Result<Cycles> {
+        if self.state != DeviceState::Running {
+            return Err(Error::Device(format!(
+                "complete from {:?} (no offload in flight)",
+                self.state
+            )));
+        }
+        let c = self.mailbox.ring_host(1);
+        self.state = DeviceState::Idle;
+        Ok(c)
+    }
+
+    /// Host waits for the completion word.
+    pub fn wait(&mut self) -> Result<()> {
+        match self.mailbox.host_pop() {
+            Some(_) => Ok(()),
+            None => Err(Error::Device("wait: no completion pending".into())),
+        }
+    }
+
+    /// Is the device binary resident (needed before any launch)?
+    pub fn binary_resident(&self) -> bool {
+        self.binary.is_some()
+    }
+
+    /// Abort an in-flight offload (host-side error recovery): force the
+    /// cluster back to Idle and drain both mailbox FIFOs so the next
+    /// launch starts clean.  No-op when nothing is in flight.
+    pub fn abort(&mut self) {
+        if self.state == DeviceState::Running {
+            self.state = DeviceState::Idle;
+        }
+        while self.mailbox.device_pop().is_some() {}
+        while self.mailbox.host_pop().is_some() {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hero::offload::{OffloadArg, OffloadKind};
+
+    fn device() -> Device {
+        Device::new(&PlatformConfig::default())
+    }
+
+    fn desc() -> OffloadDescriptor {
+        let mut d = OffloadDescriptor::new(OffloadKind::Gemm, (64, 64, 64), false);
+        d.push_arg(OffloadArg { device_addr: 0xA000_0000, len: 1024, via_iommu: false });
+        d
+    }
+
+    #[test]
+    fn lifecycle_happy_path() {
+        let mut dev = device();
+        assert_eq!(dev.state(), DeviceState::Reset);
+        let boot = dev.boot(200 * 1024, Cycles(1000)).unwrap();
+        assert!(boot.0 > 1000);
+        assert_eq!(dev.state(), DeviceState::Idle);
+        assert!(dev.binary_resident());
+
+        dev.launch(&desc()).unwrap();
+        assert_eq!(dev.state(), DeviceState::Running);
+        dev.complete().unwrap();
+        dev.wait().unwrap();
+        assert_eq!(dev.state(), DeviceState::Idle);
+        assert_eq!(dev.launches(), 1);
+    }
+
+    #[test]
+    fn launch_before_boot_rejected() {
+        let mut dev = device();
+        assert!(dev.launch(&desc()).is_err());
+    }
+
+    #[test]
+    fn double_boot_rejected() {
+        let mut dev = device();
+        dev.boot(1024, Cycles(10)).unwrap();
+        assert!(dev.boot(1024, Cycles(10)).is_err());
+    }
+
+    #[test]
+    fn concurrent_launch_rejected() {
+        let mut dev = device();
+        dev.boot(1024, Cycles(10)).unwrap();
+        dev.launch(&desc()).unwrap();
+        assert!(dev.launch(&desc()).is_err());
+    }
+
+    #[test]
+    fn wait_without_completion_fails() {
+        let mut dev = device();
+        dev.boot(1024, Cycles(10)).unwrap();
+        dev.launch(&desc()).unwrap();
+        assert!(dev.wait().is_err());
+        dev.complete().unwrap();
+        dev.wait().unwrap();
+    }
+
+    #[test]
+    fn binary_too_big_for_l2() {
+        let mut dev = device();
+        let too_big = PlatformConfig::default().memory.l2_spm_bytes + 1;
+        assert!(dev.boot(too_big, Cycles(0)).is_err());
+        assert_eq!(dev.state(), DeviceState::Reset);
+    }
+}

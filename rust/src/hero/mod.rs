@@ -1,0 +1,16 @@
+//! Hero runtime — our analogue of LibHero + the Hero kernel module
+//! (HeroSDK, [3] in the paper).
+//!
+//! Responsibilities, mirroring `hero_allocator.c` / `hero_snitch.c`:
+//! device lifecycle (boot: copy device functions to L2 SPM, wake the
+//! cluster), management of the two device-side arenas (L2 SPM and the
+//! physically contiguous device DRAM partition), and the offload
+//! descriptor ABI between host and cluster.
+
+pub mod allocator;
+pub mod device;
+pub mod offload;
+
+pub use allocator::{Allocation, Arena, ArenaStats};
+pub use device::{Device, DeviceState};
+pub use offload::{OffloadArg, OffloadDescriptor, OffloadKind};

@@ -1,0 +1,89 @@
+//! Offload descriptor ABI — what the mailbox doorbell points at.
+//!
+//! Mirrors HeroSDK's target-region descriptor: which device kernel to
+//! run, and the device addresses + sizes of each mapped argument.  The
+//! device functions themselves were copied to L2 SPM at boot (the
+//! `libopenblas.so` device sections of the paper).
+
+/// Which device kernel the descriptor invokes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OffloadKind {
+    /// Heterogeneous GEMM (the paper's contributed kernel).
+    Gemm,
+    /// Level-2 matrix-vector product.
+    Gemv,
+    /// Level-1 vector kernels.
+    Axpy,
+    Dot,
+}
+
+impl OffloadKind {
+    pub fn device_symbol(self) -> &'static str {
+        match self {
+            OffloadKind::Gemm => "__omp_offload_gemm",
+            OffloadKind::Gemv => "__omp_offload_gemv",
+            OffloadKind::Axpy => "__omp_offload_axpy",
+            OffloadKind::Dot => "__omp_offload_dot",
+        }
+    }
+}
+
+/// One mapped argument as the device sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OffloadArg {
+    /// Device-visible address (dev-DRAM or IOVA in the zero-copy path).
+    pub device_addr: u64,
+    pub len: u64,
+    /// Goes through the IOMMU (zero-copy) rather than dev DRAM?
+    pub via_iommu: bool,
+}
+
+/// The descriptor posted through the mailbox.
+#[derive(Debug, Clone)]
+pub struct OffloadDescriptor {
+    pub kind: OffloadKind,
+    pub args: Vec<OffloadArg>,
+    /// Problem geometry, kernel-specific: GEMM = (m, n, k); GEMV = (m, n, 0);
+    /// level-1 = (n, 0, 0).
+    pub dims: (usize, usize, usize),
+    /// f32 fast path (paper future work)?
+    pub f32_path: bool,
+}
+
+impl OffloadDescriptor {
+    pub fn new(kind: OffloadKind, dims: (usize, usize, usize), f32_path: bool) -> Self {
+        OffloadDescriptor { kind, args: Vec::new(), dims, f32_path }
+    }
+
+    pub fn push_arg(&mut self, arg: OffloadArg) -> &mut Self {
+        self.args.push(arg);
+        self
+    }
+
+    /// Total bytes the device will touch through its arguments.
+    pub fn total_bytes(&self) -> u64 {
+        self.args.iter().map(|a| a.len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn descriptor_accumulates_args() {
+        let mut d = OffloadDescriptor::new(OffloadKind::Gemm, (128, 128, 128), false);
+        d.push_arg(OffloadArg { device_addr: 0xA000_0000, len: 1024, via_iommu: false });
+        d.push_arg(OffloadArg { device_addr: 0x4000_0000, len: 2048, via_iommu: true });
+        assert_eq!(d.args.len(), 2);
+        assert_eq!(d.total_bytes(), 3072);
+    }
+
+    #[test]
+    fn symbols_distinct() {
+        use std::collections::HashSet;
+        let kinds = [OffloadKind::Gemm, OffloadKind::Gemv, OffloadKind::Axpy, OffloadKind::Dot];
+        let syms: HashSet<_> = kinds.iter().map(|k| k.device_symbol()).collect();
+        assert_eq!(syms.len(), kinds.len());
+    }
+}

@@ -1,0 +1,69 @@
+//! # hero-blas
+//!
+//! NumPy-style linear algebra accelerated on a simulated open-source
+//! RISC-V heterogeneous SoC — a full-system reproduction of
+//! *"Work-In-Progress: Accelerating Numpy With OpenBLAS For Open-Source
+//! RISC-V Chips"* (Koenig et al., CS.AR 2025).
+//!
+//! The stack mirrors the paper's Figure 2, top to bottom:
+//!
+//! | Paper layer | Module |
+//! |---|---|
+//! | ⑤ user application (Python) | [`npy`] + `examples/` |
+//! | ④ NumPy | [`npy`] |
+//! | ③ OpenBLAS (host + device kernels) | [`blas`] |
+//! | ② OpenMP target runtime | [`omp`] |
+//! | ① LibHero / kernel module | [`hero`] |
+//! | platform (CVA6 + Snitch PMCA on VCU128) | [`soc`] |
+//!
+//! Device numerics execute AOT-compiled JAX/Pallas kernels through the
+//! PJRT CPU client ([`runtime`]); device *timing* comes from the
+//! calibrated SoC cost models ([`soc`]). See `DESIGN.md` for the
+//! substitution table and the experiment index.
+
+pub mod blas;
+pub mod cblas;
+pub mod config;
+pub mod error;
+pub mod harness;
+pub mod hero;
+pub mod metrics;
+pub mod npy;
+pub mod omp;
+pub mod runtime;
+pub mod serve;
+pub mod soc;
+pub mod util;
+
+pub use config::{DispatchMode, PlatformConfig, WorkloadConfig};
+pub use error::{Error, Result};
+
+/// Default location of the AOT artifacts relative to the repo root.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve the artifacts directory: `$HERO_BLAS_ARTIFACTS`, else walk up
+/// from the current directory looking for `artifacts/manifest.json`.
+pub fn find_artifacts_dir() -> Result<std::path::PathBuf> {
+    if let Ok(p) = std::env::var("HERO_BLAS_ARTIFACTS") {
+        let p = std::path::PathBuf::from(p);
+        if p.join("manifest.json").is_file() {
+            return Ok(p);
+        }
+        return Err(Error::Config(format!(
+            "HERO_BLAS_ARTIFACTS={} has no manifest.json",
+            p.display()
+        )));
+    }
+    let mut dir = std::env::current_dir()?;
+    loop {
+        let cand = dir.join(DEFAULT_ARTIFACTS_DIR);
+        if cand.join("manifest.json").is_file() {
+            return Ok(cand);
+        }
+        if !dir.pop() {
+            return Err(Error::Config(
+                "artifacts/manifest.json not found — run `make artifacts`".into(),
+            ));
+        }
+    }
+}

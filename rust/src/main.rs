@@ -1,0 +1,284 @@
+//! `hero-blas` — the coordinator CLI.
+//!
+//! Subcommands:
+//!   run      one GEMM with a chosen dispatch mode; prints the region trace
+//!   fig3     regenerate the paper's Figure 3 sweep (+ headline R1/R2)
+//!   project  regenerate R3 (IOMMU zero-copy) and D1 (f32) projections
+//!   inspect  print the platform: memory map, timing constants, artifacts
+//!   serve    accept line-delimited JSON gemm requests on a TCP port
+//!
+//! Global flags: --platform <toml>  --artifacts <dir>  --seed <u64>
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use hero_blas::blas::{DispatchPolicy, HeroBlas};
+use hero_blas::config::{DispatchMode, PlatformConfig};
+use hero_blas::harness;
+use hero_blas::npy::NdArray;
+use hero_blas::util::rng::Rng;
+use hero_blas::{Error, Result};
+
+struct Args {
+    platform: Option<PathBuf>,
+    artifacts: Option<PathBuf>,
+    seed: u64,
+    rest: Vec<String>,
+}
+
+fn usage() -> String {
+    "usage: hero-blas [--platform cfg.toml] [--artifacts dir] [--seed N] <cmd>\n\
+     commands:\n\
+       run [--size N] [--mode host|device|zero_copy|auto] [--dtype f64|f32]\n\
+           [--trace-out trace.json]\n\
+       fig3 [--sizes 16,32,64,128,256] [--size N] [--csv]\n\
+       project [--size N] [--dtype f32]\n\
+       inspect\n\
+       serve [--port 7744]\n"
+        .to_string()
+}
+
+fn parse_args() -> Result<Args> {
+    let mut platform = None;
+    let mut artifacts = None;
+    let mut seed = 0x5EED;
+    let mut rest = Vec::new();
+    let mut it = std::env::args().skip(1).peekable();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--platform" => {
+                platform = Some(PathBuf::from(it.next().ok_or_else(|| {
+                    Error::Config("--platform needs a path".into())
+                })?))
+            }
+            "--artifacts" => {
+                artifacts = Some(PathBuf::from(it.next().ok_or_else(|| {
+                    Error::Config("--artifacts needs a path".into())
+                })?))
+            }
+            "--seed" => {
+                seed = it
+                    .next()
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| Error::Config("--seed needs a u64".into()))?
+            }
+            other => rest.push(other.to_string()),
+        }
+    }
+    Ok(Args { platform, artifacts, seed, rest })
+}
+
+fn flag_value(rest: &[String], name: &str) -> Option<String> {
+    rest.iter()
+        .position(|a| a == name)
+        .and_then(|i| rest.get(i + 1))
+        .cloned()
+}
+
+fn has_flag(rest: &[String], name: &str) -> bool {
+    rest.iter().any(|a| a == name)
+}
+
+fn load_platform(args: &Args) -> Result<PlatformConfig> {
+    match &args.platform {
+        Some(p) => PlatformConfig::from_toml_file(p),
+        None => Ok(PlatformConfig::default()),
+    }
+}
+
+fn artifacts_dir(args: &Args) -> Result<PathBuf> {
+    match &args.artifacts {
+        Some(p) => Ok(p.clone()),
+        None => hero_blas::find_artifacts_dir(),
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let n: usize = flag_value(&args.rest, "--size")
+        .map(|s| s.parse().map_err(|_| Error::Config("--size: not a number".into())))
+        .transpose()?
+        .unwrap_or(128);
+    let mode: DispatchMode = flag_value(&args.rest, "--mode")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(DispatchMode::Auto);
+    let dtype = flag_value(&args.rest, "--dtype").unwrap_or_else(|| "f64".into());
+
+    let cfg = load_platform(args)?;
+    let mut blas = HeroBlas::new(cfg, &artifacts_dir(args)?, DispatchPolicy::with_mode(mode))?;
+    let mut rng = Rng::new(args.seed);
+
+    println!("gemm n={n} dtype={dtype} mode={mode}");
+    macro_rules! run_typed {
+        ($t:ty) => {{
+            let a = NdArray::<$t>::randn(&mut rng, &[n, n]);
+            let b = NdArray::<$t>::randn(&mut rng, &[n, n]);
+            blas.reset_run();
+            let _c = a.matmul(&b, &mut blas)?;
+        }};
+    }
+    match dtype.as_str() {
+        "f64" => run_typed!(f64),
+        "f32" => run_typed!(f32),
+        other => return Err(Error::Config(format!("unknown dtype '{other}'"))),
+    }
+
+    let f = blas.engine.freq_hz();
+    println!("virtual-time breakdown ({}):", blas.engine.platform.cfg.name);
+    for (class, cyc) in blas.engine.trace.breakdown() {
+        println!(
+            "  {:<13} {:>12.3} ms  ({} cycles)",
+            class.label(),
+            cyc.to_ns(f) / 1e6,
+            cyc.0
+        );
+    }
+    println!(
+        "  {:<13} {:>12.3} ms",
+        "total",
+        blas.engine.trace.grand_total().to_ns(f) / 1e6
+    );
+    println!("{}", blas.metrics().summary());
+    if let Some(path) = flag_value(&args.rest, "--trace-out") {
+        std::fs::write(&path, blas.engine.trace.to_chrome_trace(f))?;
+        println!("chrome trace written to {path} (open in chrome://tracing)");
+    }
+    Ok(())
+}
+
+fn cmd_fig3(args: &Args) -> Result<()> {
+    // workload file (sizes/modes/seed) < explicit flags
+    let workload = flag_value(&args.rest, "--workload")
+        .map(|p| hero_blas::config::WorkloadConfig::from_toml_file(std::path::Path::new(&p)))
+        .transpose()?;
+    let mut sizes: Vec<usize> = workload
+        .as_ref()
+        .map(|w| w.sweep.sizes.clone())
+        .unwrap_or_else(|| vec![16, 32, 64, 128, 256]);
+    let mut modes: Vec<DispatchMode> = workload
+        .as_ref()
+        .map(|w| w.sweep.modes.clone())
+        .unwrap_or_else(|| vec![DispatchMode::HostOnly, DispatchMode::DeviceOnly]);
+    let seed = workload.as_ref().map(|w| w.seed).unwrap_or(args.seed);
+    if let Some(s) = flag_value(&args.rest, "--sizes") {
+        sizes = s
+            .split(',')
+            .map(|x| x.parse().map_err(|_| Error::Config(format!("bad size '{x}'"))))
+            .collect::<Result<_>>()?;
+    } else if let Some(s) = flag_value(&args.rest, "--size") {
+        sizes = vec![s
+            .parse()
+            .map_err(|_| Error::Config(format!("bad size '{s}'")))?];
+    }
+    if !modes.contains(&DispatchMode::HostOnly) {
+        modes.insert(0, DispatchMode::HostOnly); // speedups need the baseline
+    }
+    let cfg = load_platform(args)?;
+    let report = harness::run_fig3(cfg, &artifacts_dir(args)?, &sizes, &modes, seed)?;
+    if let Some(path) = flag_value(&args.rest, "--out") {
+        std::fs::write(&path, report.csv())?;
+        eprintln!("wrote {path} (plot with tools/plot_fig3.py)");
+    }
+    if has_flag(&args.rest, "--csv") {
+        print!("{}", report.csv());
+    } else {
+        println!("Figure 3 — f64 GEMM, host vs offload (virtual time)\n");
+        print!("{}", report.render());
+        println!();
+        print!("{}", report.summary());
+    }
+    Ok(())
+}
+
+fn cmd_project(args: &Args) -> Result<()> {
+    let n: usize = flag_value(&args.rest, "--size")
+        .map(|s| s.parse().map_err(|_| Error::Config("--size: not a number".into())))
+        .transpose()?
+        .unwrap_or(128);
+    let cfg = load_platform(args)?;
+    let dir = artifacts_dir(args)?;
+    if flag_value(&args.rest, "--dtype").as_deref() == Some("f32") {
+        let p = harness::run_f32_projection(cfg, &dir, n, args.seed)?;
+        print!("{}", p.render());
+    } else {
+        let r = harness::run_zero_copy(cfg, &dir, n, args.seed)?;
+        print!("{}", r.render());
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let cfg = load_platform(args)?;
+    println!("platform: {}", cfg.name);
+    println!("clock:    {} MHz", cfg.clock.freq_hz as f64 / 1e6);
+    println!(
+        "host:     CVA6 rv64g, {:.2} f64 FLOP/cycle, copy {:.3} B/cycle",
+        cfg.host.flops_per_cycle, cfg.host.copy_bytes_per_cycle
+    );
+    println!(
+        "cluster:  {} Snitch cores, peak {} f64 FLOP/cycle, efficiency {:.0}%",
+        cfg.cluster.cores,
+        cfg.cluster_peak_flops_per_cycle(false),
+        cfg.cluster.efficiency * 100.0
+    );
+    let platform = hero_blas::soc::Platform::new(cfg);
+    print!("{}", platform.map.render());
+    match artifacts_dir(args) {
+        Ok(dir) => {
+            let manifest = hero_blas::runtime::Manifest::load(&dir)?;
+            println!(
+                "artifacts: {} entries, tile {}x{}x{}, source {}",
+                manifest.entries.len(),
+                manifest.tile_m,
+                manifest.tile_n,
+                manifest.tile_k,
+                manifest.source_hash
+            );
+            for e in &manifest.entries {
+                println!("  {:<28} {:>6} [{}]", e.name, e.op, e.dtype);
+            }
+        }
+        Err(e) => println!("artifacts: {e}"),
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let port: u16 = flag_value(&args.rest, "--port")
+        .map(|s| s.parse().map_err(|_| Error::Config("--port: not a u16".into())))
+        .transpose()?
+        .unwrap_or(7744);
+    let cfg = load_platform(args)?;
+    let dir = artifacts_dir(args)?;
+    hero_blas::serve::serve(cfg, &dir, port, None)
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{}", usage());
+            return ExitCode::FAILURE;
+        }
+    };
+    let cmd = args.rest.first().cloned().unwrap_or_default();
+    let r = match cmd.as_str() {
+        "run" => cmd_run(&args),
+        "fig3" => cmd_fig3(&args),
+        "project" => cmd_project(&args),
+        "inspect" => cmd_inspect(&args),
+        "serve" => cmd_serve(&args),
+        "" | "help" | "--help" | "-h" => {
+            print!("{}", usage());
+            Ok(())
+        }
+        other => Err(Error::Config(format!("unknown command '{other}'\n{}", usage()))),
+    };
+    match r {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

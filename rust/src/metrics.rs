@@ -1,0 +1,67 @@
+//! Run-time counters for the coordinator (reported by `hero-blas serve`
+//! and the harness alongside virtual-time results).
+
+
+
+/// Aggregate counters across one engine lifetime.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Metrics {
+    /// Completed offloads (device launches that joined).
+    pub offloads: u64,
+    /// BLAS calls served on the host path.
+    pub host_calls: u64,
+    /// Bytes copied host -> device DRAM.
+    pub bytes_to_device: u64,
+    /// Bytes copied device DRAM -> host.
+    pub bytes_from_device: u64,
+    /// IO-PTEs created (zero-copy path).
+    pub iommu_pages_mapped: u64,
+    /// Device tile-kernel invocations (artifact executions).
+    pub tile_kernel_calls: u64,
+    /// Wall-clock microseconds spent inside PJRT execution (host side,
+    /// not virtual time — used by the perf pass).
+    pub pjrt_wall_us: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    /// Render a compact single-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "offloads={} host_calls={} to_dev={}B from_dev={}B \
+             iommu_pages={} tile_calls={} pjrt_wall={}us",
+            self.offloads,
+            self.host_calls,
+            self.bytes_to_device,
+            self.bytes_from_device,
+            self.iommu_pages_mapped,
+            self.tile_kernel_calls,
+            self.pjrt_wall_us,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_contains_counters() {
+        let mut m = Metrics::new();
+        m.offloads = 3;
+        m.bytes_to_device = 1024;
+        let s = m.summary();
+        assert!(s.contains("offloads=3"));
+        assert!(s.contains("to_dev=1024B"));
+    }
+
+    #[test]
+    fn default_is_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.offloads, 0);
+        assert_eq!(m.pjrt_wall_us, 0);
+    }
+}

@@ -1,0 +1,369 @@
+//! The ndarray container: row-major, 1-D or 2-D (what BLAS consumes).
+
+use crate::blas::Elem;
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// A dense row-major array (rank 1 or 2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NdArray<T: Elem> {
+    data: Vec<T>,
+    shape: Vec<usize>,
+}
+
+impl<T: Elem> NdArray<T> {
+    // ------------------------------------------------------------------
+    // constructors
+    // ------------------------------------------------------------------
+
+    pub fn from_vec(data: Vec<T>, shape: &[usize]) -> Result<Self> {
+        let numel: usize = shape.iter().product();
+        if shape.is_empty() || shape.len() > 2 {
+            return Err(Error::shape(format!(
+                "rank {} unsupported (1-D and 2-D only)",
+                shape.len()
+            )));
+        }
+        if numel != data.len() {
+            return Err(Error::shape(format!(
+                "shape {shape:?} wants {numel} elements, got {}",
+                data.len()
+            )));
+        }
+        Ok(NdArray { data, shape: shape.to_vec() })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let numel = shape.iter().product();
+        NdArray { data: vec![T::zero(); numel], shape: shape.to_vec() }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        Self::full(shape, T::one())
+    }
+
+    pub fn full(shape: &[usize], v: T) -> Self {
+        let numel = shape.iter().product();
+        NdArray { data: vec![v; numel], shape: shape.to_vec() }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut a = Self::zeros(&[n, n]);
+        for i in 0..n {
+            a.data[i * n + i] = T::one();
+        }
+        a
+    }
+
+    /// `n` evenly spaced points over [lo, hi] (inclusive, like NumPy).
+    pub fn linspace(lo: f64, hi: f64, n: usize) -> Self {
+        let step = if n > 1 { (hi - lo) / (n - 1) as f64 } else { 0.0 };
+        let data = (0..n).map(|i| T::from_f64_lossy(lo + step * i as f64)).collect();
+        NdArray { data, shape: vec![n] }
+    }
+
+    /// Standard-normal array from the deterministic RNG.
+    pub fn randn(rng: &mut Rng, shape: &[usize]) -> Self {
+        let numel = shape.iter().product();
+        let data = (0..numel).map(|_| T::from_f64_lossy(rng.next_normal())).collect();
+        NdArray { data, shape: shape.to_vec() }
+    }
+
+    // ------------------------------------------------------------------
+    // shape & access
+    // ------------------------------------------------------------------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    /// 2-D stored dims (rank-1 treated as a row vector).
+    pub fn dims2(&self) -> (usize, usize) {
+        match self.shape.as_slice() {
+            [n] => (1, *n),
+            [r, c] => (*r, *c),
+            _ => unreachable!("rank checked at construction"),
+        }
+    }
+
+    pub fn get2(&self, r: usize, c: usize) -> T {
+        let (_, cols) = self.dims2();
+        self.data[r * cols + c]
+    }
+
+    pub fn set2(&mut self, r: usize, c: usize, v: T) {
+        let (_, cols) = self.dims2();
+        self.data[r * cols + c] = v;
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        let numel: usize = shape.iter().product();
+        if numel != self.data.len() || shape.is_empty() || shape.len() > 2 {
+            return Err(Error::shape(format!(
+                "cannot reshape {:?} ({} elements) to {shape:?}",
+                self.shape,
+                self.data.len()
+            )));
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Materialized transpose (2-D).
+    pub fn t(&self) -> Result<Self> {
+        match self.shape.as_slice() {
+            [r, c] => {
+                let (r, c) = (*r, *c);
+                let mut out = Self::zeros(&[c, r]);
+                for i in 0..r {
+                    for j in 0..c {
+                        out.data[j * r + i] = self.data[i * c + j];
+                    }
+                }
+                Ok(out)
+            }
+            _ => Err(Error::shape("t(): rank-2 only")),
+        }
+    }
+
+    /// Row view of a 2-D array.
+    pub fn row(&self, r: usize) -> &[T] {
+        let (rows, cols) = self.dims2();
+        assert!(r < rows, "row {r} out of {rows}");
+        &self.data[r * cols..(r + 1) * cols]
+    }
+
+    /// Copy of rows `r0..r1` (NumPy `a[r0:r1]`; materialized — the BLAS
+    /// layer consumes dense buffers).
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> Result<Self> {
+        let (rows, cols) = self.dims2();
+        if r0 > r1 || r1 > rows {
+            return Err(Error::shape(format!(
+                "slice_rows {r0}..{r1} out of {rows}"
+            )));
+        }
+        let data = self.data[r0 * cols..r1 * cols].to_vec();
+        if self.ndim() == 1 {
+            NdArray::from_vec(data, &[r1 - r0])
+        } else {
+            NdArray::from_vec(data, &[r1 - r0, cols])
+        }
+    }
+
+    /// Copy of the rectangular block `[r0..r1, c0..c1]` (NumPy
+    /// `a[r0:r1, c0:c1]`).
+    pub fn sub_matrix(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Result<Self> {
+        if self.ndim() != 2 {
+            return Err(Error::shape("sub_matrix: rank-2 only"));
+        }
+        let (rows, cols) = self.dims2();
+        if r0 > r1 || r1 > rows || c0 > c1 || c1 > cols {
+            return Err(Error::shape(format!(
+                "sub_matrix [{r0}..{r1}, {c0}..{c1}] out of [{rows}, {cols}]"
+            )));
+        }
+        let mut data = Vec::with_capacity((r1 - r0) * (c1 - c0));
+        for r in r0..r1 {
+            data.extend_from_slice(&self.data[r * cols + c0..r * cols + c1]);
+        }
+        NdArray::from_vec(data, &[r1 - r0, c1 - c0])
+    }
+
+    /// Column `j` as a 1-D array.
+    pub fn col(&self, j: usize) -> Result<Self> {
+        let (rows, cols) = self.dims2();
+        if self.ndim() != 2 || j >= cols {
+            return Err(Error::shape(format!("col {j} out of {cols}")));
+        }
+        let data = (0..rows).map(|r| self.data[r * cols + j]).collect();
+        NdArray::from_vec(data, &[rows])
+    }
+
+    /// Stack 1-D arrays (or equal-width 2-D arrays) vertically
+    /// (NumPy `vstack`).
+    pub fn vstack(parts: &[&Self]) -> Result<Self> {
+        let first = parts
+            .first()
+            .ok_or_else(|| Error::shape("vstack: empty input"))?;
+        let width = first.dims2().1;
+        let mut data = Vec::new();
+        let mut rows = 0;
+        for p in parts {
+            if p.dims2().1 != width {
+                return Err(Error::shape(format!(
+                    "vstack: width mismatch {} vs {width}",
+                    p.dims2().1
+                )));
+            }
+            rows += p.dims2().0;
+            data.extend_from_slice(&p.data);
+        }
+        NdArray::from_vec(data, &[rows, width])
+    }
+
+    // ------------------------------------------------------------------
+    // elementwise (host-side, like NumPy ufuncs without BLAS)
+    // ------------------------------------------------------------------
+
+    fn zip(&self, rhs: &Self, f: impl Fn(T, T) -> T, what: &str) -> Result<Self> {
+        if self.shape != rhs.shape {
+            return Err(Error::shape(format!(
+                "{what}: shape mismatch {:?} vs {:?}",
+                self.shape, rhs.shape
+            )));
+        }
+        let data = self
+            .data
+            .iter()
+            .zip(rhs.data.iter())
+            .map(|(a, b)| f(*a, *b))
+            .collect();
+        Ok(NdArray { data, shape: self.shape.clone() })
+    }
+
+    pub fn add(&self, rhs: &Self) -> Result<Self> {
+        self.zip(rhs, |a, b| a + b, "add")
+    }
+
+    pub fn sub(&self, rhs: &Self) -> Result<Self> {
+        self.zip(rhs, |a, b| a - b, "sub")
+    }
+
+    pub fn mul(&self, rhs: &Self) -> Result<Self> {
+        self.zip(rhs, |a, b| a * b, "mul")
+    }
+
+    pub fn scale(&self, s: T) -> Self {
+        NdArray {
+            data: self.data.iter().map(|v| *v * s).collect(),
+            shape: self.shape.clone(),
+        }
+    }
+
+    pub fn map(&self, f: impl Fn(T) -> T) -> Self {
+        NdArray {
+            data: self.data.iter().map(|v| f(*v)).collect(),
+            shape: self.shape.clone(),
+        }
+    }
+
+    pub fn sum(&self) -> T {
+        self.data.iter().fold(T::zero(), |a, v| a + *v)
+    }
+
+    /// Max |a - b| against another array (test/diagnostic helper).
+    pub fn max_abs_diff(&self, rhs: &Self) -> f64 {
+        self.data
+            .iter()
+            .zip(rhs.data.iter())
+            .map(|(a, b)| (a.to_f64_lossy() - b.to_f64_lossy()).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors() {
+        let z = NdArray::<f64>::zeros(&[2, 3]);
+        assert_eq!(z.shape(), &[2, 3]);
+        assert_eq!(z.numel(), 6);
+        let e = NdArray::<f64>::eye(3);
+        assert_eq!(e.get2(1, 1), 1.0);
+        assert_eq!(e.get2(0, 1), 0.0);
+        let l = NdArray::<f64>::linspace(0.0, 1.0, 5);
+        assert_eq!(l.data(), &[0.0, 0.25, 0.5, 0.75, 1.0]);
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(NdArray::from_vec(vec![1.0f64; 6], &[2, 3]).is_ok());
+        assert!(NdArray::from_vec(vec![1.0f64; 5], &[2, 3]).is_err());
+        assert!(NdArray::from_vec(vec![1.0f64; 8], &[2, 2, 2]).is_err());
+    }
+
+    #[test]
+    fn transpose_and_reshape() {
+        let a = NdArray::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        let at = a.t().unwrap();
+        assert_eq!(at.shape(), &[3, 2]);
+        assert_eq!(at.get2(0, 1), 4.0);
+        let r = a.clone().reshape(&[3, 2]).unwrap();
+        assert_eq!(r.get2(2, 1), 6.0);
+        assert!(a.clone().reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn elementwise() {
+        let a = NdArray::from_vec(vec![1.0, 2.0], &[2]).unwrap();
+        let b = NdArray::from_vec(vec![10.0, 20.0], &[2]).unwrap();
+        assert_eq!(a.add(&b).unwrap().data(), &[11.0, 22.0]);
+        assert_eq!(b.sub(&a).unwrap().data(), &[9.0, 18.0]);
+        assert_eq!(a.mul(&b).unwrap().data(), &[10.0, 40.0]);
+        assert_eq!(a.scale(3.0).data(), &[3.0, 6.0]);
+        assert_eq!(a.sum(), 3.0);
+        let c = NdArray::from_vec(vec![1.0], &[1]).unwrap();
+        assert!(a.add(&c).is_err());
+    }
+
+    #[test]
+    fn slicing_and_stacking() {
+        let a = NdArray::from_vec((1..=12).map(|i| i as f64).collect(), &[3, 4]).unwrap();
+        let mid = a.slice_rows(1, 2).unwrap();
+        assert_eq!(mid.shape(), &[1, 4]);
+        assert_eq!(mid.data(), &[5.0, 6.0, 7.0, 8.0]);
+        let block = a.sub_matrix(0, 2, 1, 3).unwrap();
+        assert_eq!(block.shape(), &[2, 2]);
+        assert_eq!(block.data(), &[2.0, 3.0, 6.0, 7.0]);
+        let c = a.col(3).unwrap();
+        assert_eq!(c.data(), &[4.0, 8.0, 12.0]);
+        let back = NdArray::vstack(&[&a.slice_rows(0, 1).unwrap(),
+                                     &a.slice_rows(1, 3).unwrap()]).unwrap();
+        assert_eq!(back, a);
+        // errors
+        assert!(a.slice_rows(2, 1).is_err());
+        assert!(a.sub_matrix(0, 4, 0, 1).is_err());
+        assert!(a.col(9).is_err());
+        let b = NdArray::<f64>::zeros(&[2, 3]);
+        assert!(NdArray::vstack(&[&a, &b]).is_err());
+        assert!(NdArray::<f64>::vstack(&[]).is_err());
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = NdArray::<f64>::randn(&mut r1, &[4, 4]);
+        let b = NdArray::<f64>::randn(&mut r2, &[4, 4]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn f32_arrays() {
+        let a = NdArray::<f32>::ones(&[3]);
+        assert_eq!(a.sum(), 3.0f32);
+    }
+}

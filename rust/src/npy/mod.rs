@@ -1,0 +1,13 @@
+//! NumPy-style ndarray frontend — arrows (4)+(5) of the paper's Figure 2.
+//!
+//! The paper's point is that a plain Python application using NumPy gets
+//! accelerated *transparently* because NumPy is linked against the
+//! modified OpenBLAS.  [`NdArray`] plays NumPy's role here: high-level
+//! array code (`a.matmul(&b, &mut session)`) that never mentions the
+//! device, with every linear-algebra call routed through [`crate::blas`]
+//! where the dispatch decides host vs PMCA.
+
+pub mod array;
+pub mod ops;
+
+pub use array::NdArray;

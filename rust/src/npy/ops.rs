@@ -1,0 +1,92 @@
+//! NumPy-operator -> BLAS bindings (NumPy's `dot`/`matmul` going through
+//! its linked CBLAS, exactly the hook the paper exploits).
+
+use crate::blas::{Elem, HeroBlas, Transpose};
+use crate::error::{Error, Result};
+
+use super::array::NdArray;
+
+impl<T: Elem> NdArray<T> {
+    /// `self @ rhs` (2-D x 2-D), routed through xGEMM.
+    pub fn matmul(&self, rhs: &Self, blas: &mut HeroBlas) -> Result<Self> {
+        let (m, k) = match self.shape() {
+            [m, k] => (*m, *k),
+            s => return Err(Error::shape(format!("matmul lhs must be 2-D, got {s:?}"))),
+        };
+        let (k2, n) = match rhs.shape() {
+            [k2, n] => (*k2, *n),
+            s => return Err(Error::shape(format!("matmul rhs must be 2-D, got {s:?}"))),
+        };
+        if k != k2 {
+            return Err(Error::shape(format!(
+                "matmul: ({m},{k}) @ ({k2},{n}) mismatch"
+            )));
+        }
+        let mut out = NdArray::<T>::zeros(&[m, n]);
+        blas.gemm(
+            Transpose::No,
+            Transpose::No,
+            T::one(),
+            self.data(),
+            (m, k),
+            rhs.data(),
+            (k, n),
+            T::zero(),
+            out.data_mut(),
+            (m, n),
+        )?;
+        Ok(out)
+    }
+
+    /// `self @ x` for 2-D x 1-D, routed through xGEMV.
+    pub fn matvec(&self, x: &Self, blas: &mut HeroBlas) -> Result<Self> {
+        let (m, n) = match self.shape() {
+            [m, n] => (*m, *n),
+            s => return Err(Error::shape(format!("matvec lhs must be 2-D, got {s:?}"))),
+        };
+        if x.shape() != [n] {
+            return Err(Error::shape(format!(
+                "matvec: ({m},{n}) @ {:?} mismatch",
+                x.shape()
+            )));
+        }
+        let mut y = NdArray::<T>::zeros(&[m]);
+        blas.gemv(
+            Transpose::No,
+            T::one(),
+            self.data(),
+            (m, n),
+            x.data(),
+            T::zero(),
+            y.data_mut(),
+        )?;
+        Ok(y)
+    }
+}
+
+/// f64-only NumPy conveniences that ride on level-1 BLAS.
+impl NdArray<f64> {
+    /// `numpy.dot` for 1-D arrays.
+    pub fn vdot(&self, rhs: &Self, blas: &mut HeroBlas) -> Result<f64> {
+        if self.ndim() != 1 || rhs.ndim() != 1 {
+            return Err(Error::shape("vdot: 1-D arrays only"));
+        }
+        blas.dot(self.data(), rhs.data())
+    }
+
+    /// `numpy.linalg.norm` (2-norm) for 1-D arrays.
+    pub fn norm(&self, blas: &mut HeroBlas) -> Result<f64> {
+        blas.nrm2(self.data())
+    }
+
+    /// In-place `self += alpha * rhs` via dAXPY.
+    pub fn axpy_from(&mut self, alpha: f64, rhs: &Self, blas: &mut HeroBlas) -> Result<()> {
+        if self.shape() != rhs.shape() {
+            return Err(Error::shape("axpy_from: shape mismatch"));
+        }
+        blas.axpy(alpha, rhs.data(), self.data_mut())
+    }
+}
+
+// Integration tests that exercise these against real artifacts live in
+// rust/tests/ (they need `make artifacts`).

@@ -1,0 +1,123 @@
+//! Host-pointer -> device-pointer mapping table (libomptarget's
+//! `DeviceTy::DataMap` equivalent).
+//!
+//! OpenMP `map(to:)`/`map(from:)` clauses are reference-counted: mapping
+//! the same host range twice must reuse the device copy and only the
+//! outermost unmap releases it.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+/// One live host->device association.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeviceMapping {
+    pub device_addr: u64,
+    pub len: u64,
+    pub refcount: u32,
+}
+
+/// The mapping table.
+#[derive(Debug, Default)]
+pub struct DataMap {
+    entries: HashMap<u64, DeviceMapping>,
+}
+
+impl DataMap {
+    pub fn new() -> Self {
+        DataMap { entries: HashMap::new() }
+    }
+
+    /// Register (or re-reference) a mapping. Returns `true` if this is a
+    /// fresh mapping (i.e. the caller must actually move data / create
+    /// PTEs), `false` if an existing one was re-referenced.
+    pub fn map(&mut self, host_addr: u64, device_addr: u64, len: u64) -> Result<bool> {
+        if let Some(e) = self.entries.get_mut(&host_addr) {
+            if e.len != len {
+                return Err(Error::Offload(format!(
+                    "remap of host 0x{host_addr:x} with different length \
+                     ({} vs {len})",
+                    e.len
+                )));
+            }
+            e.refcount += 1;
+            return Ok(false);
+        }
+        self.entries.insert(
+            host_addr,
+            DeviceMapping { device_addr, len, refcount: 1 },
+        );
+        Ok(true)
+    }
+
+    /// Translate a host address (exact-base lookup, like libomptarget).
+    pub fn lookup(&self, host_addr: u64) -> Option<&DeviceMapping> {
+        self.entries.get(&host_addr)
+    }
+
+    /// Drop one reference. Returns the mapping if this released the last
+    /// reference (the caller then frees device memory / tears down PTEs).
+    pub fn unmap(&mut self, host_addr: u64) -> Result<Option<DeviceMapping>> {
+        let e = self.entries.get_mut(&host_addr).ok_or_else(|| {
+            Error::Offload(format!("unmap of unmapped host 0x{host_addr:x}"))
+        })?;
+        e.refcount -= 1;
+        if e.refcount == 0 {
+            return Ok(self.entries.remove(&host_addr));
+        }
+        Ok(None)
+    }
+
+    pub fn live_mappings(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_then_rereference() {
+        let mut dm = DataMap::new();
+        assert!(dm.map(0x1000, 0xA000_0000, 512).unwrap());
+        assert!(!dm.map(0x1000, 0xDEAD, 512).unwrap()); // re-ref keeps old addr
+        assert_eq!(dm.lookup(0x1000).unwrap().device_addr, 0xA000_0000);
+        assert_eq!(dm.lookup(0x1000).unwrap().refcount, 2);
+    }
+
+    #[test]
+    fn unmap_releases_only_at_zero() {
+        let mut dm = DataMap::new();
+        dm.map(0x1000, 0xA000_0000, 512).unwrap();
+        dm.map(0x1000, 0xA000_0000, 512).unwrap();
+        assert!(dm.unmap(0x1000).unwrap().is_none());
+        let released = dm.unmap(0x1000).unwrap().unwrap();
+        assert_eq!(released.device_addr, 0xA000_0000);
+        assert_eq!(dm.live_mappings(), 0);
+    }
+
+    #[test]
+    fn remap_with_different_len_rejected() {
+        let mut dm = DataMap::new();
+        dm.map(0x1000, 0xA000_0000, 512).unwrap();
+        assert!(dm.map(0x1000, 0xA000_0000, 1024).is_err());
+    }
+
+    #[test]
+    fn unmap_unknown_rejected() {
+        let mut dm = DataMap::new();
+        assert!(dm.unmap(0x42).is_err());
+    }
+
+    #[test]
+    fn distinct_hosts_independent() {
+        let mut dm = DataMap::new();
+        dm.map(0x1000, 0xA000_0000, 512).unwrap();
+        dm.map(0x2000, 0xA000_0200, 512).unwrap();
+        assert_eq!(dm.live_mappings(), 2);
+        dm.unmap(0x1000).unwrap();
+        assert!(dm.lookup(0x2000).is_some());
+        assert!(dm.lookup(0x1000).is_none());
+    }
+}

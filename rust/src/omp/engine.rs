@@ -1,0 +1,453 @@
+//! The offload engine: orchestrates one OpenMP target region end-to-end
+//! against the SoC models, charging every cost to the right Figure-3
+//! region (data copy / fork-join / compute) on the virtual clock.
+//!
+//! Copy mode (paper's measured configuration): `map(to:)` allocates in
+//! the device DRAM partition and *actually copies the bytes* into the
+//! arena's backing store — the device kernel then reads its inputs from
+//! there, so functional correctness exercises the same path the timing
+//! model charges for.  Zero-copy mode (paper's future work): `map(to:)`
+//! creates IO-PTEs instead and the device reads host memory through the
+//! IOMMU, paying IOTLB walks during compute.
+
+use crate::error::{Error, Result};
+use crate::hero::device::Device;
+use crate::hero::offload::OffloadDescriptor;
+use crate::metrics::Metrics;
+use crate::soc::clock::{Cycles, SimClock};
+use crate::soc::iommu::{Iommu, Mapping};
+use crate::soc::trace::{RegionClass, Trace};
+use crate::soc::Platform;
+
+use super::datamap::DataMap;
+
+/// A host buffer mapped into device space (one `map` clause instance).
+#[derive(Debug)]
+pub struct MappedBuf {
+    pub host_addr: u64,
+    pub len: u64,
+    /// Copy mode: the device-DRAM allocation holding the staged bytes.
+    backing: Option<crate::hero::allocator::Allocation>,
+    /// Zero-copy mode: the live IOMMU mapping.
+    mapping: Option<Mapping>,
+    /// Zero-copy only: the host bytes (device accesses host memory
+    /// directly; we keep a snapshot to model that access functionally).
+    host_bytes: Option<Vec<u8>>,
+}
+
+impl MappedBuf {
+    pub fn is_zero_copy(&self) -> bool {
+        self.mapping.is_some()
+    }
+
+    /// Device-visible address (dev-DRAM or IOVA).
+    pub fn device_addr(&self) -> u64 {
+        match (&self.backing, &self.mapping) {
+            (Some(a), _) => a.addr,
+            (_, Some(m)) => m.iova,
+            _ => unreachable!("MappedBuf without backing or mapping"),
+        }
+    }
+}
+
+/// Offload engine: one per session; owns clock, trace, device and IOMMU.
+#[derive(Debug)]
+pub struct OffloadEngine {
+    pub platform: Platform,
+    clock: SimClock,
+    pub trace: Trace,
+    pub device: Device,
+    pub iommu: Iommu,
+    pub datamap: DataMap,
+    pub metrics: Metrics,
+}
+
+impl OffloadEngine {
+    /// Build the engine and boot the device (binary copy to L2 + wake-up,
+    /// traced as fork/join; Figure 3 measures warm calls, so harnesses
+    /// call [`OffloadEngine::reset_run`] after construction).
+    pub fn new(platform: Platform) -> Result<Self> {
+        let mut device = Device::new(&platform.cfg);
+        let iommu = platform.iommu();
+        let mut clock = SimClock::new(platform.cfg.clock.freq_hz);
+        let mut trace = Trace::new();
+
+        // Device functions of libopenblas.so: ~200 KiB of rv32 text+rodata
+        // copied through the host to the dual-port L2 SPM.
+        let binary_bytes = 200 * 1024u64;
+        let copy_cost = Cycles::from_f64(
+            platform.cfg.host.memcpy_setup_cycles as f64
+                + binary_bytes as f64 / platform.cfg.host.copy_bytes_per_cycle,
+        );
+        let boot_cost = device.boot(binary_bytes, copy_cost)?;
+        let start = clock.now();
+        clock.advance(boot_cost);
+        trace.record(RegionClass::ForkJoin, start, boot_cost, "boot");
+
+        Ok(OffloadEngine {
+            platform,
+            clock,
+            trace,
+            device,
+            iommu,
+            datamap: DataMap::new(),
+            metrics: Metrics::new(),
+        })
+    }
+
+    /// Virtual now.
+    pub fn now(&self) -> Cycles {
+        self.clock.now()
+    }
+
+    pub fn freq_hz(&self) -> u64 {
+        self.clock.freq_hz()
+    }
+
+    /// Clear the per-run trace (keeps device state and metrics).
+    pub fn reset_run(&mut self) {
+        self.trace.clear();
+    }
+
+    /// Charge `dur` to a region class at the current virtual time.
+    pub fn charge(&mut self, class: RegionClass, dur: Cycles, label: &str) {
+        let start = self.clock.now();
+        self.clock.advance(dur);
+        self.trace.record(class, start, dur, label);
+    }
+
+    // ------------------------------------------------------------------
+    // Fork/join region
+    // ------------------------------------------------------------------
+
+    /// OpenBLAS interface-layer entry.
+    pub fn blas_entry(&mut self) {
+        let c = Cycles(self.platform.cfg.forkjoin.openblas_entry_cycles);
+        self.charge(RegionClass::ForkJoin, c, "openblas_entry");
+    }
+
+    /// libomptarget entry + per-argument marshalling.
+    pub fn target_begin(&mut self, nargs: usize) {
+        let fj = &self.platform.cfg.forkjoin;
+        let c = Cycles(fj.omp_entry_cycles + fj.per_arg_cycles * nargs as u64);
+        self.charge(RegionClass::ForkJoin, c, "omp_target_entry");
+    }
+
+    /// Doorbell + device wake-up.
+    pub fn launch(&mut self, desc: &OffloadDescriptor) -> Result<()> {
+        let c = self.device.launch(desc)?;
+        self.charge(RegionClass::ForkJoin, c, "launch");
+        Ok(())
+    }
+
+    /// Device completion + host-side join.
+    pub fn join(&mut self) -> Result<()> {
+        let c = self.device.complete()?;
+        self.device.wait()?;
+        let j = Cycles(self.platform.cfg.forkjoin.join_cycles);
+        self.charge(RegionClass::ForkJoin, c + j, "join");
+        self.metrics.offloads += 1;
+        Ok(())
+    }
+
+    /// libomptarget + OpenBLAS exit.
+    pub fn target_end(&mut self) {
+        let c = Cycles(self.platform.cfg.forkjoin.exit_cycles);
+        self.charge(RegionClass::ForkJoin, c, "omp_target_exit");
+    }
+
+    // ------------------------------------------------------------------
+    // Data-copy region
+    // ------------------------------------------------------------------
+
+    /// `map(to:)` — stage a host buffer for the device.
+    pub fn map_to(&mut self, data: &[u8], zero_copy: bool, label: &str)
+                  -> Result<MappedBuf> {
+        self.map_to_charged(data, data.len() as u64, zero_copy, label)
+    }
+
+    /// `map(to:)` with an explicit *charged* byte count.
+    ///
+    /// The device kernel stages zero-padded buffers (tiles are whole), but
+    /// the host only ever copies / maps the user's actual bytes — Figure 3's
+    /// data-copy region scales with the user problem size, not the padding.
+    pub fn map_to_charged(&mut self, data: &[u8], charged_bytes: u64,
+                          zero_copy: bool, label: &str) -> Result<MappedBuf> {
+        let host_addr = data.as_ptr() as u64;
+        let len = data.len() as u64;
+        if len == 0 {
+            return Err(Error::Offload(format!("map_to({label}): empty buffer")));
+        }
+        let charged = charged_bytes.min(len).max(1);
+        if zero_copy {
+            let (mapping, _) = self.iommu.map(host_addr, len)?;
+            let charged_pages = self.iommu.pages_for(host_addr, charged);
+            let cost = Cycles(
+                charged_pages * self.platform.cfg.iommu.pte_create_cycles,
+            );
+            self.datamap.map(host_addr, mapping.iova, len)?;
+            self.charge(RegionClass::DataCopy, cost,
+                        &format!("iommu_map({label})"));
+            self.metrics.iommu_pages_mapped += charged_pages;
+            Ok(MappedBuf {
+                host_addr,
+                len,
+                backing: None,
+                mapping: Some(mapping),
+                host_bytes: Some(data.to_vec()),
+            })
+        } else {
+            let alloc = self.device.dram.alloc(len)?;
+            self.device.dram.write(&alloc, data)?;
+            self.datamap.map(host_addr, alloc.addr, len)?;
+            let cost = self.platform.host.memcpy_cycles(charged);
+            self.charge(RegionClass::DataCopy, cost,
+                        &format!("copy_to({label})"));
+            self.metrics.bytes_to_device += charged;
+            Ok(MappedBuf {
+                host_addr,
+                len,
+                backing: Some(alloc),
+                mapping: None,
+                host_bytes: None,
+            })
+        }
+    }
+
+    /// `map(from:)` — bring results back to the host buffer.
+    pub fn map_from(&mut self, buf: &MappedBuf, out: &mut [u8], label: &str)
+                    -> Result<()> {
+        self.map_from_charged(buf, out, buf.len, label)
+    }
+
+    /// `map(from:)` with an explicit charged byte count (see
+    /// [`OffloadEngine::map_to_charged`]).
+    pub fn map_from_charged(&mut self, buf: &MappedBuf, out: &mut [u8],
+                            charged_bytes: u64, label: &str) -> Result<()> {
+        if out.len() as u64 != buf.len {
+            return Err(Error::Offload(format!(
+                "map_from({label}): length mismatch ({} vs {})",
+                out.len(),
+                buf.len
+            )));
+        }
+        let charged = charged_bytes.min(buf.len).max(1);
+        if let Some(alloc) = &buf.backing {
+            let bytes = self.device.dram.read(alloc, out.len())?;
+            out.copy_from_slice(bytes);
+            let cost = self.platform.host.memcpy_cycles(charged);
+            self.charge(RegionClass::DataCopy, cost,
+                        &format!("copy_from({label})"));
+            self.metrics.bytes_from_device += charged;
+        } else {
+            // zero-copy: the device already wrote host memory through the
+            // IOMMU — the "copy back" is free.
+            let bytes = buf.host_bytes.as_ref().ok_or_else(|| {
+                Error::Offload(format!("map_from({label}): no device data"))
+            })?;
+            out.copy_from_slice(bytes);
+        }
+        Ok(())
+    }
+
+    /// Release a mapping (device DRAM free or IO-PTE teardown).
+    pub fn unmap(&mut self, buf: MappedBuf, label: &str) -> Result<()> {
+        let released = self.datamap.unmap(buf.host_addr)?;
+        if released.is_none() {
+            return Ok(()); // still referenced elsewhere
+        }
+        if let Some(alloc) = buf.backing {
+            self.device.dram.free(alloc)?;
+        }
+        if let Some(mapping) = buf.mapping {
+            let cost = self.iommu.unmap(&mapping);
+            self.charge(RegionClass::DataCopy, cost,
+                        &format!("iommu_unmap({label})"));
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Compute region (device-side access during the kernel)
+    // ------------------------------------------------------------------
+
+    /// Read the device-visible bytes of a mapped buffer (what the cluster
+    /// DMA would fetch).  Copy mode: the dev-DRAM backing.  Zero-copy:
+    /// host memory through the IOMMU.
+    pub fn read_mapped(&mut self, buf: &MappedBuf, offset: usize, len: usize)
+                       -> Result<Vec<u8>> {
+        if (offset + len) as u64 > buf.len {
+            return Err(Error::Offload(format!(
+                "device read past end of mapping ({} + {} > {})",
+                offset, len, buf.len
+            )));
+        }
+        if let Some(alloc) = &buf.backing {
+            Ok(self.device.dram.read_at(alloc, offset, len)?.to_vec())
+        } else {
+            let mapping = buf.mapping.as_ref().expect("zero-copy has mapping");
+            let cost = self
+                .iommu
+                .stream_translate_cost(mapping.iova + offset as u64, len as u64)?;
+            self.charge(RegionClass::Compute, cost, "iotlb");
+            let bytes = buf.host_bytes.as_ref().expect("zero-copy snapshot");
+            Ok(bytes[offset..offset + len].to_vec())
+        }
+    }
+
+    /// Write device results into a mapped buffer.
+    pub fn write_mapped(&mut self, buf: &mut MappedBuf, offset: usize,
+                        data: &[u8]) -> Result<()> {
+        if (offset + data.len()) as u64 > buf.len {
+            return Err(Error::Offload("device write past end of mapping".into()));
+        }
+        if let Some(alloc) = &buf.backing {
+            self.device.dram.write_at(alloc, offset, data)?;
+            Ok(())
+        } else {
+            let mapping = buf.mapping.as_ref().expect("zero-copy has mapping");
+            let cost = self.iommu.stream_translate_cost(
+                mapping.iova + offset as u64,
+                data.len() as u64,
+            )?;
+            self.charge(RegionClass::Compute, cost, "iotlb");
+            let bytes = buf.host_bytes.as_mut().expect("zero-copy snapshot");
+            bytes[offset..offset + data.len()].copy_from_slice(data);
+            Ok(())
+        }
+    }
+
+    /// Error-path recovery: abort any in-flight offload so the session
+    /// stays usable after a failed device call (allocator OOM, fault).
+    pub fn abort_offload(&mut self) {
+        self.device.abort();
+    }
+
+    /// Charge device compute time (DMA-overlapped tile bursts).
+    pub fn charge_compute(&mut self, dur: Cycles, label: &str) {
+        self.charge(RegionClass::Compute, dur, label);
+    }
+
+    /// Charge host compute time (the no-offload baseline).
+    pub fn charge_host_compute(&mut self, dur: Cycles, label: &str) {
+        self.charge(RegionClass::HostCompute, dur, label);
+        self.metrics.host_calls += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+    use crate::hero::offload::{OffloadDescriptor, OffloadKind};
+
+    fn engine() -> OffloadEngine {
+        let platform = Platform::new(PlatformConfig::default());
+        OffloadEngine::new(platform).unwrap()
+    }
+
+    #[test]
+    fn boot_is_traced_then_reset() {
+        let mut e = engine();
+        assert!(e.trace.grand_total().0 > 0);
+        e.reset_run();
+        assert_eq!(e.trace.grand_total(), Cycles::ZERO);
+    }
+
+    #[test]
+    fn copy_mode_roundtrip_preserves_bytes() {
+        let mut e = engine();
+        e.reset_run();
+        let data: Vec<u8> = (0..1024u32).map(|i| (i % 251) as u8).collect();
+        let buf = e.map_to(&data, false, "a").unwrap();
+        assert!(!buf.is_zero_copy());
+        // device reads what the host staged
+        assert_eq!(e.read_mapped(&buf, 100, 16).unwrap(), &data[100..116]);
+        // device writes, host copies back
+        let mut buf = buf;
+        e.write_mapped(&mut buf, 0, &[9u8; 8]).unwrap();
+        let mut out = vec![0u8; 1024];
+        e.map_from(&buf, &mut out, "a").unwrap();
+        assert_eq!(&out[..8], &[9u8; 8]);
+        assert_eq!(&out[8..], &data[8..]);
+        e.unmap(buf, "a").unwrap();
+        // copies were charged to the DataCopy region
+        assert!(e.trace.total(RegionClass::DataCopy).0 > 0);
+        assert_eq!(e.metrics.bytes_to_device, 1024);
+        assert_eq!(e.metrics.bytes_from_device, 1024);
+    }
+
+    #[test]
+    fn zero_copy_roundtrip_charges_ptes_not_copies() {
+        let mut e = engine();
+        e.reset_run();
+        let data = vec![7u8; 8192];
+        let buf = e.map_to(&data, true, "a").unwrap();
+        assert!(buf.is_zero_copy());
+        let copy_region = e.trace.total(RegionClass::DataCopy);
+        // PTE creation cost: ceil over pages touched
+        let pages = e.iommu.pages_for(data.as_ptr() as u64, 8192);
+        assert_eq!(copy_region, Cycles(pages * 2025));
+        assert_eq!(e.metrics.bytes_to_device, 0);
+        // device access pays IOTLB walks in the Compute region
+        let before = e.trace.total(RegionClass::Compute);
+        e.read_mapped(&buf, 0, 8192).unwrap();
+        assert!(e.trace.total(RegionClass::Compute) > before);
+        let mut out = vec![0u8; 8192];
+        e.map_from(&buf, &mut out, "a").unwrap();
+        assert_eq!(out, data);
+        e.unmap(buf, "a").unwrap();
+        assert_eq!(e.iommu.live_pages(), 0);
+    }
+
+    #[test]
+    fn full_offload_sequence_regions() {
+        let mut e = engine();
+        e.reset_run();
+        let a = vec![1u8; 512];
+        e.blas_entry();
+        e.target_begin(1);
+        let buf = e.map_to(&a, false, "a").unwrap();
+        let mut desc = OffloadDescriptor::new(OffloadKind::Gemm, (8, 8, 8), false);
+        desc.push_arg(crate::hero::offload::OffloadArg {
+            device_addr: buf.device_addr(),
+            len: buf.len,
+            via_iommu: false,
+        });
+        e.launch(&desc).unwrap();
+        e.charge_compute(Cycles(1000), "tiles");
+        e.join().unwrap();
+        e.unmap(buf, "a").unwrap();
+        e.target_end();
+
+        let fj = e.trace.total(RegionClass::ForkJoin).0;
+        let dc = e.trace.total(RegionClass::DataCopy).0;
+        let cp = e.trace.total(RegionClass::Compute).0;
+        assert!(fj > 0 && dc > 0 && cp == 1000);
+        assert_eq!(e.trace.grand_total().0, fj + dc + cp);
+        assert_eq!(e.metrics.offloads, 1);
+    }
+
+    #[test]
+    fn map_from_length_mismatch_rejected() {
+        let mut e = engine();
+        let data = vec![0u8; 64];
+        let buf = e.map_to(&data, false, "x").unwrap();
+        let mut out = vec![0u8; 32];
+        assert!(e.map_from(&buf, &mut out, "x").is_err());
+    }
+
+    #[test]
+    fn read_past_end_rejected() {
+        let mut e = engine();
+        let data = vec![0u8; 64];
+        let buf = e.map_to(&data, false, "x").unwrap();
+        assert!(e.read_mapped(&buf, 60, 8).is_err());
+    }
+
+    #[test]
+    fn empty_map_rejected() {
+        let mut e = engine();
+        assert!(e.map_to(&[], false, "x").is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! OpenMP target-offload runtime — our analogue of libomptarget plus the
+//! Hero plugin (arrow (2) in the paper's Figure 2).
+//!
+//! The paper's measured "fork/join" region is exactly this layer: entering
+//! the OpenBLAS interface, building the target region, marshalling
+//! arguments, the doorbell, and the join on the way out.  The "data copy"
+//! region is [`engine::OffloadEngine::map_to`]/[`engine::OffloadEngine::map_from`]
+//! in copy mode, or IO-PTE creation in zero-copy mode.
+
+pub mod datamap;
+pub mod engine;
+
+pub use datamap::{DataMap, DeviceMapping};
+pub use engine::{MappedBuf, OffloadEngine};

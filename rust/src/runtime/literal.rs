@@ -1,0 +1,81 @@
+//! NdArray-side <-> [`xla::Literal`] conversions.
+//!
+//! The xla crate builds literals from flat slices (`vec1`) and reshapes;
+//! all our artifacts take row-major f32/f64 tensors plus shape-(1,)
+//! coefficient arrays (rank-0 scalars are awkward through the C API).
+
+use xla::{ArrayElement, Literal, NativeType};
+
+use crate::error::Result;
+
+/// 1-D literal from a flat slice.
+pub fn lit_1d<T: NativeType>(data: &[T]) -> Literal {
+    Literal::vec1(data)
+}
+
+/// Row-major 2-D literal.
+pub fn lit_2d<T: NativeType>(data: &[T], rows: usize, cols: usize) -> Result<Literal> {
+    assert_eq!(data.len(), rows * cols, "lit_2d: data/shape mismatch");
+    Ok(Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// Shape-(1,) coefficient literal (alpha/beta).
+pub fn lit_scalar1<T: NativeType>(v: T) -> Literal {
+    Literal::vec1(&[v])
+}
+
+/// Flatten a literal back to f64s.
+pub fn to_vec_f64(lit: &Literal) -> Result<Vec<f64>> {
+    Ok(lit.to_vec::<f64>()?)
+}
+
+/// Flatten a literal back to f32s.
+pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Element count from a literal's shape.
+pub fn element_count(lit: &Literal) -> usize {
+    lit.element_count()
+}
+
+/// Sanity helper for tests: dtype marker of T as the manifest spells it.
+pub fn dtype_name<T: ArrayElement>() -> &'static str {
+    match std::any::type_name::<T>() {
+        "f32" => "f32",
+        "f64" => "f64",
+        other => other,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f64_2d() {
+        let data: Vec<f64> = (0..12).map(|i| i as f64).collect();
+        let lit = lit_2d(&data, 3, 4).unwrap();
+        assert_eq!(element_count(&lit), 12);
+        assert_eq!(to_vec_f64(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn roundtrip_f32_1d() {
+        let data: Vec<f32> = vec![1.5, -2.5, 3.25];
+        let lit = lit_1d(&data);
+        assert_eq!(to_vec_f32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn scalar1_is_len1() {
+        let lit = lit_scalar1(2.5f64);
+        assert_eq!(to_vec_f64(&lit).unwrap(), vec![2.5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "data/shape mismatch")]
+    fn shape_mismatch_panics() {
+        let _ = lit_2d(&[1.0f64; 5], 2, 3);
+    }
+}

@@ -1,0 +1,218 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json_lite::Json;
+
+/// One AOT artifact as described by `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// File name relative to the artifacts directory.
+    pub file: String,
+    /// Operation family: "gemm", "gemm_tile_accum", "gemv", "axpy", "dot".
+    pub op: String,
+    /// "f32" or "f64".
+    pub dtype: String,
+    /// Problem dims; semantics depend on `op` (m/n/k for gemm-family).
+    pub m: Option<usize>,
+    pub n: Option<usize>,
+    pub k: Option<usize>,
+    /// Argument shapes in call order (e.g. [[128,128],[128,128],[1]]).
+    pub arg_shapes: Vec<Vec<usize>>,
+    pub arg_dtypes: Vec<String>,
+}
+
+impl ArtifactEntry {
+    fn from_json(j: &Json) -> Result<Self> {
+        let shapes = j
+            .req("arg_shapes")?
+            .as_arr()
+            .ok_or_else(|| Error::Config("manifest: arg_shapes not an array".into()))?
+            .iter()
+            .map(|s| {
+                s.as_arr()
+                    .ok_or_else(|| Error::Config("manifest: shape not an array".into()))
+                    .map(|dims| {
+                        dims.iter()
+                            .filter_map(|d| d.as_u64().map(|u| u as usize))
+                            .collect::<Vec<_>>()
+                    })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let dtypes = j
+            .req("arg_dtypes")?
+            .as_arr()
+            .ok_or_else(|| Error::Config("manifest: arg_dtypes not an array".into()))?
+            .iter()
+            .map(|d| {
+                d.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| Error::Config("manifest: dtype not a string".into()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArtifactEntry {
+            name: j.req_str("name")?.to_string(),
+            file: j.req_str("file")?.to_string(),
+            op: j.req_str("op")?.to_string(),
+            dtype: j.req_str("dtype")?.to_string(),
+            m: j.get("m").and_then(|v| v.as_u64()).map(|v| v as usize),
+            n: j.get("n").and_then(|v| v.as_u64()).map(|v| v as usize),
+            k: j.get("k").and_then(|v| v.as_u64()).map(|v| v as usize),
+            arg_shapes: shapes,
+            arg_dtypes: dtypes,
+        })
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Device tile geometry (must agree with the Rust SPM tiling loop).
+    pub tile_m: usize,
+    pub tile_n: usize,
+    pub tile_k: usize,
+    pub entries: Vec<ArtifactEntry>,
+    pub source_hash: String,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Config(format!(
+                "{}: {e} — run `make artifacts` first",
+                path.display()
+            ))
+        })?;
+        let j = Json::parse(&text)?;
+        let tile = j.req("tile")?;
+        let entries = j
+            .req("entries")?
+            .as_arr()
+            .ok_or_else(|| Error::Config("manifest: entries not an array".into()))?
+            .iter()
+            .map(ArtifactEntry::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        if entries.is_empty() {
+            return Err(Error::Config("manifest: no entries".into()));
+        }
+        Ok(Manifest {
+            tile_m: tile.req_u64("m")? as usize,
+            tile_n: tile.req_u64("n")? as usize,
+            tile_k: tile.req_u64("k")? as usize,
+            entries,
+            source_hash: j.req_str("source_hash")?.to_string(),
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Find an entry by exact name.
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name).ok_or_else(|| {
+            Error::Runtime(format!(
+                "artifact '{name}' not in manifest (have: {})",
+                self.entries
+                    .iter()
+                    .map(|e| e.name.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ))
+        })
+    }
+
+    /// Find the fixed-size artifact for (op, dtype, n), if any.
+    pub fn find_sized(&self, op: &str, dtype: &str, n: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.op == op && e.dtype == dtype && e.n == Some(n))
+    }
+
+    /// Full path of an entry's HLO file.
+    pub fn path_of(&self, e: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("hero_blas_manifest_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    const MINI: &str = r#"{
+      "tile": {"m": 64, "n": 64, "k": 64},
+      "entries": [
+        {"name": "gemm_f64_n128", "file": "gemm_f64_n128.hlo.txt",
+         "op": "gemm", "dtype": "f64", "m": 128, "n": 128, "k": 128,
+         "arg_shapes": [[128,128],[128,128],[128,128],[1],[1]],
+         "arg_dtypes": ["float64","float64","float64","float64","float64"]},
+        {"name": "gemm_tile_accum_f64", "file": "t.hlo.txt",
+         "op": "gemm_tile_accum", "dtype": "f64", "m": 64, "n": 64, "k": 64,
+         "arg_shapes": [[64,64],[64,64],[64,64]],
+         "arg_dtypes": ["float64","float64","float64"]}
+      ],
+      "source_hash": "deadbeefcafebabe"
+    }"#;
+
+    #[test]
+    fn loads_and_queries() {
+        let dir = tmpdir("ok");
+        write_manifest(&dir, MINI);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!((m.tile_m, m.tile_n, m.tile_k), (64, 64, 64));
+        assert_eq!(m.entries.len(), 2);
+        let e = m.entry("gemm_f64_n128").unwrap();
+        assert_eq!(e.arg_shapes.len(), 5);
+        assert_eq!(e.arg_shapes[3], vec![1]);
+        assert!(m.find_sized("gemm", "f64", 128).is_some());
+        assert!(m.find_sized("gemm", "f64", 999).is_none());
+        assert!(m.find_sized("gemm", "f32", 128).is_none());
+        assert!(m.path_of(e).ends_with("gemm_f64_n128.hlo.txt"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn unknown_entry_lists_available() {
+        let dir = tmpdir("unknown");
+        write_manifest(&dir, MINI);
+        let m = Manifest::load(&dir).unwrap();
+        let err = m.entry("nope").unwrap_err().to_string();
+        assert!(err.contains("gemm_f64_n128"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let dir = tmpdir("missing");
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_entries_rejected() {
+        let dir = tmpdir("empty");
+        write_manifest(
+            &dir,
+            r#"{"tile": {"m":64,"n":64,"k":64}, "entries": [], "source_hash": "x"}"#,
+        );
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,19 @@
+//! PJRT runtime: load and execute the AOT artifacts from Rust.
+//!
+//! This is the only place the stack touches XLA.  `make artifacts` (the
+//! one-time Python compile path) produces `artifacts/*.hlo.txt` plus a
+//! `manifest.json`; [`ArtifactRegistry`] loads the manifest, compiles
+//! each HLO module on the PJRT CPU client on first use, and executes it
+//! with [`xla::Literal`] arguments.  Python never runs at request time.
+//!
+//! Interchange is HLO **text** — xla_extension 0.5.1 rejects jax>=0.5's
+//! serialized protos (64-bit instruction ids); the text parser reassigns
+//! ids (see `python/compile/aot.py` and /opt/xla-example/README.md).
+
+pub mod literal;
+pub mod manifest;
+pub mod registry;
+
+pub use literal::{lit_1d, lit_2d, lit_scalar1, to_vec_f32, to_vec_f64};
+pub use manifest::{ArtifactEntry, Manifest};
+pub use registry::{ArtifactRegistry, RegistryStats};

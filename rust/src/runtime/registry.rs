@@ -1,0 +1,126 @@
+//! Executable registry: manifest entry -> compiled PJRT executable.
+//!
+//! Compilation happens once per artifact (lazily, or eagerly via
+//! [`ArtifactRegistry::warm_up`]); execution is the request-path hot
+//! call, so the registry also tracks wall-clock spent inside PJRT for
+//! the perf pass.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+use crate::error::{Error, Result};
+
+use super::manifest::Manifest;
+
+/// Wall-clock counters (host-side, not virtual time).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RegistryStats {
+    pub compiles: u64,
+    pub compile_wall_us: u64,
+    pub execs: u64,
+    pub exec_wall_us: u64,
+}
+
+/// The registry.
+pub struct ArtifactRegistry {
+    client: PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, PjRtLoadedExecutable>,
+    stats: RegistryStats,
+}
+
+impl std::fmt::Debug for ArtifactRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ArtifactRegistry")
+            .field("artifacts", &self.manifest.entries.len())
+            .field("compiled", &self.cache.len())
+            .field("stats", &self.stats)
+            .finish()
+    }
+}
+
+impl ArtifactRegistry {
+    /// Open the registry over an artifacts directory (must contain
+    /// `manifest.json`; see `make artifacts`).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu()?;
+        Ok(ArtifactRegistry {
+            client,
+            manifest,
+            cache: HashMap::new(),
+            stats: RegistryStats::default(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> RegistryStats {
+        self.stats
+    }
+
+    /// Compile one artifact if not already resident.
+    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self.manifest.entry(name)?.clone();
+        let path = self.manifest.path_of(&entry);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| {
+                Error::Runtime(format!("non-utf8 path {}", path.display()))
+            })?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.stats.compiles += 1;
+        self.stats.compile_wall_us += t0.elapsed().as_micros() as u64;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Eagerly compile every artifact (used by `hero-blas serve` so the
+    /// first request doesn't pay compile latency).
+    pub fn warm_up(&mut self) -> Result<()> {
+        let names: Vec<String> =
+            self.manifest.entries.iter().map(|e| e.name.clone()).collect();
+        for n in names {
+            self.ensure_compiled(&n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact. All our artifacts return a 1-tuple (lowered
+    /// with `return_tuple=True`), unwrapped here.
+    pub fn exec(&mut self, name: &str, args: &[Literal]) -> Result<Literal> {
+        self.ensure_compiled(name)?;
+        let entry = self.manifest.entry(name)?;
+        if args.len() != entry.arg_shapes.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: {} args given, artifact takes {}",
+                args.len(),
+                entry.arg_shapes.len()
+            )));
+        }
+        let exe = self.cache.get(name).expect("ensured above");
+        let t0 = Instant::now();
+        let result = exe.execute::<Literal>(args)?[0][0].to_literal_sync()?;
+        self.stats.execs += 1;
+        self.stats.exec_wall_us += t0.elapsed().as_micros() as u64;
+        Ok(result.to_tuple1()?)
+    }
+
+    /// Number of compiled (resident) executables.
+    pub fn resident(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+// NOTE: integration tests for the registry live in rust/tests/ — they
+// need real artifacts produced by `make artifacts`.

@@ -1,0 +1,180 @@
+//! A tiny request loop: the "high-level application" path as a service.
+//!
+//! Demonstrates the coordinator role: the rust binary owns a long-lived
+//! [`HeroBlas`] session (PJRT executables stay compiled and warm, the
+//! device stays booted) and serves line-delimited JSON requests over TCP.
+//! Python never appears at request time — the paper's build-time/run-time
+//! split, taken to a serving setting.
+//!
+//! Request  (one line):  {"op": "gemm", "n": 128, "mode": "device_only"}
+//! Response (one line):  {"ok": true, "n": 128, "mode": "device_only",
+//!                        "total_ms": ..., "data_copy_ms": ...,
+//!                        "fork_join_ms": ..., "compute_ms": ...,
+//!                        "checksum": ...}
+//! A request {"op": "shutdown"} stops the server (used by tests).
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+
+use crate::blas::{DispatchPolicy, HeroBlas};
+use crate::config::{DispatchMode, PlatformConfig};
+use crate::error::{Error, Result};
+use crate::npy::NdArray;
+use crate::soc::trace::RegionClass;
+use crate::util::json_lite::Json;
+use crate::util::rng::Rng;
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+fn err_line(msg: &str) -> String {
+    let mut j = obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.into()))]);
+    compact(&mut j)
+}
+
+/// One-line JSON (the pretty writer is multi-line; flatten it).
+fn compact(j: &mut Json) -> String {
+    j.to_string_pretty()
+        .lines()
+        .map(str::trim)
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// Handle one request line; returns (response, shutdown?).
+fn handle(blas: &mut HeroBlas, rng: &mut Rng, line: &str) -> (String, bool) {
+    let req = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return (err_line(&format!("bad json: {e}")), false),
+    };
+    let op = req.get("op").and_then(|o| o.as_str()).unwrap_or("");
+    match op {
+        "shutdown" => (err_line("shutting down"), true),
+        "ping" => {
+            let mut j = obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]);
+            (compact(&mut j), false)
+        }
+        "gemm" => {
+            let n = req.get("n").and_then(|v| v.as_u64()).unwrap_or(128) as usize;
+            if n == 0 || n > 2048 {
+                return (err_line("n must be in 1..=2048"), false);
+            }
+            let mode: DispatchMode = match req
+                .get("mode")
+                .and_then(|v| v.as_str())
+                .unwrap_or("auto")
+                .parse()
+            {
+                Ok(m) => m,
+                Err(e) => return (err_line(&e.to_string()), false),
+            };
+            blas.policy = DispatchPolicy::with_mode(mode);
+            let a = NdArray::<f64>::randn(rng, &[n, n]);
+            let b = NdArray::<f64>::randn(rng, &[n, n]);
+            blas.reset_run();
+            let c = match a.matmul(&b, blas) {
+                Ok(c) => c,
+                Err(e) => return (err_line(&e.to_string()), false),
+            };
+            let f = blas.engine.freq_hz();
+            let t = &blas.engine.trace;
+            let ms = |c: RegionClass| Json::Num(t.total(c).to_ns(f) / 1e6);
+            let total =
+                Json::Num(t.grand_total().to_ns(f) / 1e6);
+            let checksum: f64 = c.data().iter().sum();
+            let mut j = obj(vec![
+                ("ok", Json::Bool(true)),
+                ("n", Json::Num(n as f64)),
+                ("mode", Json::Str(mode.to_string())),
+                ("data_copy_ms", ms(RegionClass::DataCopy)),
+                ("fork_join_ms", ms(RegionClass::ForkJoin)),
+                ("compute_ms", ms(RegionClass::Compute)),
+                ("host_compute_ms", ms(RegionClass::HostCompute)),
+                ("total_ms", total),
+                ("checksum", Json::Num(checksum)),
+            ]);
+            (compact(&mut j), false)
+        }
+        other => (err_line(&format!("unknown op '{other}'")), false),
+    }
+}
+
+fn serve_conn(blas: &mut HeroBlas, rng: &mut Rng, stream: TcpStream) -> Result<bool> {
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (resp, shutdown) = handle(blas, rng, &line);
+        writer.write_all(resp.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        if shutdown {
+            eprintln!("serve: shutdown requested by {peer}");
+            return Ok(true);
+        }
+    }
+    Ok(false)
+}
+
+/// Run the server until a shutdown request arrives.
+/// `ready` (if given) receives the bound port once listening — lets tests
+/// bind port 0 and discover the ephemeral port.
+pub fn serve(
+    cfg: PlatformConfig,
+    artifacts: &Path,
+    port: u16,
+    ready: Option<std::sync::mpsc::Sender<u16>>,
+) -> Result<()> {
+    let mut blas = HeroBlas::new(cfg, artifacts, DispatchPolicy::default())?;
+    blas.registry.warm_up()?; // no compile latency on first request
+    let mut rng = Rng::new(0xC0FFEE);
+
+    let listener = TcpListener::bind(("127.0.0.1", port))
+        .map_err(|e| Error::Runtime(format!("bind 127.0.0.1:{port}: {e}")))?;
+    let bound = listener.local_addr()?.port();
+    eprintln!(
+        "hero-blas serve: listening on 127.0.0.1:{bound} ({} artifacts warm)",
+        blas.registry.resident()
+    );
+    if let Some(tx) = ready {
+        let _ = tx.send(bound);
+    }
+    for stream in listener.incoming() {
+        match stream {
+            Ok(s) => {
+                if serve_conn(&mut blas, &mut rng, s)? {
+                    return Ok(());
+                }
+            }
+            Err(e) => eprintln!("serve: accept error: {e}"),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compact_is_single_line() {
+        let mut j = obj(vec![("a", Json::Num(1.0)), ("b", Json::Str("x".into()))]);
+        let s = compact(&mut j);
+        assert!(!s.contains('\n'));
+        assert!(Json::parse(&s).is_ok());
+    }
+
+    #[test]
+    fn err_line_is_json() {
+        let e = err_line("boom");
+        let j = Json::parse(&e).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)));
+    }
+}

@@ -1,0 +1,140 @@
+//! Virtual time: cycle counts on the shared SoC clock.
+//!
+//! The paper measures wall-clock seconds on a 50 MHz FPGA from Python's
+//! `os.time()`; our unit of observation is the cycle, converted to
+//! nanoseconds for reporting.  [`SimClock`] is a monotonically advancing
+//! cycle counter shared by all models through the offload engine.
+
+use std::ops::{Add, AddAssign};
+
+/// A cycle count (always on the single shared SoC clock domain).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub struct Cycles(pub u64);
+
+impl Cycles {
+    pub const ZERO: Cycles = Cycles(0);
+
+    /// Ceiling conversion from a fractional cycle cost. Fractional costs
+    /// arise from bandwidth models (bytes / bytes-per-cycle); hardware
+    /// always rounds up to a whole cycle.
+    pub fn from_f64(c: f64) -> Cycles {
+        debug_assert!(c >= 0.0 && c.is_finite(), "negative/NaN cycle cost: {c}");
+        Cycles(c.ceil() as u64)
+    }
+
+    /// Nanoseconds at `freq_hz`.
+    pub fn to_ns(self, freq_hz: u64) -> f64 {
+        self.0 as f64 * 1e9 / freq_hz as f64
+    }
+
+    /// Seconds at `freq_hz`.
+    pub fn to_secs(self, freq_hz: u64) -> f64 {
+        self.0 as f64 / freq_hz as f64
+    }
+
+    pub fn saturating_sub(self, rhs: Cycles) -> Cycles {
+        Cycles(self.0.saturating_sub(rhs.0))
+    }
+
+    pub fn max(self, rhs: Cycles) -> Cycles {
+        Cycles(self.0.max(rhs.0))
+    }
+}
+
+impl Add for Cycles {
+    type Output = Cycles;
+    fn add(self, rhs: Cycles) -> Cycles {
+        Cycles(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for Cycles {
+    fn add_assign(&mut self, rhs: Cycles) {
+        self.0 += rhs.0;
+    }
+}
+
+impl std::iter::Sum for Cycles {
+    fn sum<I: Iterator<Item = Cycles>>(iter: I) -> Cycles {
+        iter.fold(Cycles::ZERO, |a, b| a + b)
+    }
+}
+
+/// Monotonic virtual clock.
+#[derive(Debug, Clone)]
+pub struct SimClock {
+    freq_hz: u64,
+    now: Cycles,
+}
+
+impl SimClock {
+    pub fn new(freq_hz: u64) -> Self {
+        assert!(freq_hz > 0, "clock frequency must be > 0");
+        SimClock { freq_hz, now: Cycles::ZERO }
+    }
+
+    /// Current virtual time in cycles since reset.
+    pub fn now(&self) -> Cycles {
+        self.now
+    }
+
+    pub fn freq_hz(&self) -> u64 {
+        self.freq_hz
+    }
+
+    /// Advance virtual time; returns the new now.
+    pub fn advance(&mut self, dur: Cycles) -> Cycles {
+        self.now += dur;
+        self.now
+    }
+
+    /// Current virtual time in nanoseconds.
+    pub fn now_ns(&self) -> f64 {
+        self.now.to_ns(self.freq_hz)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycles_from_f64_ceils() {
+        assert_eq!(Cycles::from_f64(0.0), Cycles(0));
+        assert_eq!(Cycles::from_f64(0.1), Cycles(1));
+        assert_eq!(Cycles::from_f64(7.0), Cycles(7));
+        assert_eq!(Cycles::from_f64(7.0001), Cycles(8));
+    }
+
+    #[test]
+    fn cycles_to_time() {
+        let c = Cycles(50_000_000);
+        assert_eq!(c.to_secs(50_000_000), 1.0);
+        assert_eq!(c.to_ns(50_000_000), 1e9);
+        assert_eq!(Cycles(1).to_ns(50_000_000), 20.0);
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut clk = SimClock::new(50_000_000);
+        assert_eq!(clk.now(), Cycles::ZERO);
+        clk.advance(Cycles(100));
+        clk.advance(Cycles(23));
+        assert_eq!(clk.now(), Cycles(123));
+        assert_eq!(clk.now_ns(), 123.0 * 20.0);
+    }
+
+    #[test]
+    fn cycles_sum_and_ops() {
+        let total: Cycles = [Cycles(1), Cycles(2), Cycles(3)].into_iter().sum();
+        assert_eq!(total, Cycles(6));
+        assert_eq!(Cycles(5).saturating_sub(Cycles(9)), Cycles(0));
+        assert_eq!(Cycles(5).max(Cycles(9)), Cycles(9));
+    }
+
+    #[test]
+    #[should_panic(expected = "clock frequency")]
+    fn zero_freq_panics() {
+        SimClock::new(0);
+    }
+}

@@ -1,0 +1,111 @@
+//! CVA6 rv64g host-core cost model.
+//!
+//! Two things run on the host in the paper's flow: the OpenBLAS host
+//! kernels (the "without offloading" baseline) and the data copies
+//! between the Linux-managed and device-managed DRAM partitions (the
+//! "data copy" region).  Both are bandwidth/throughput models of the
+//! in-order scalar core — CVA6 has no FREP/SSR, so its sustained FLOP
+//! rate is far below the cluster's.
+
+use super::clock::Cycles;
+use crate::config::HostConfig;
+
+/// Host-core model.
+#[derive(Debug, Clone)]
+pub struct Cva6Model {
+    cfg: HostConfig,
+}
+
+impl Cva6Model {
+    pub fn new(cfg: HostConfig) -> Self {
+        Cva6Model { cfg }
+    }
+
+    fn flops_per_cycle(&self, f32_path: bool) -> f64 {
+        if f32_path {
+            self.cfg.flops_per_cycle * self.cfg.f32_speedup
+        } else {
+            self.cfg.flops_per_cycle
+        }
+    }
+
+    /// Cycles for a host GEMM: 2*m*n*k FLOPs through the scalar FPU.
+    pub fn gemm_cycles(&self, m: usize, n: usize, k: usize, f32_path: bool) -> Cycles {
+        let flops = 2.0 * m as f64 * n as f64 * k as f64;
+        Cycles::from_f64(flops / self.flops_per_cycle(f32_path))
+    }
+
+    /// Cycles for a host GEMV: 2*m*n FLOPs (memory-bound in reality, but
+    /// on CVA6 the scalar FPU is still the limiter at these sizes).
+    pub fn gemv_cycles(&self, m: usize, n: usize, f32_path: bool) -> Cycles {
+        let flops = 2.0 * m as f64 * n as f64;
+        Cycles::from_f64(flops / self.flops_per_cycle(f32_path))
+    }
+
+    /// Cycles for a level-1 op touching `n` elements with `flops_per_el`.
+    pub fn level1_cycles(&self, n: usize, flops_per_el: f64, f32_path: bool) -> Cycles {
+        Cycles::from_f64(n as f64 * flops_per_el / self.flops_per_cycle(f32_path))
+    }
+
+    /// Cycles to copy `bytes` between DRAM partitions (the paper's
+    /// "data copy" region).
+    pub fn memcpy_cycles(&self, bytes: u64) -> Cycles {
+        Cycles::from_f64(
+            self.cfg.memcpy_setup_cycles as f64
+                + bytes as f64 / self.cfg.copy_bytes_per_cycle,
+        )
+    }
+
+    /// Sustained copy bandwidth in bytes/cycle (for reporting).
+    pub fn copy_bytes_per_cycle(&self) -> f64 {
+        self.cfg.copy_bytes_per_cycle
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+
+    fn host() -> Cva6Model {
+        Cva6Model::new(PlatformConfig::default().host)
+    }
+
+    #[test]
+    fn gemm_cost_cubic() {
+        let h = host();
+        // 2*128^3 = 4.194e6 FLOP / 0.4 = 10.49e6 cycles
+        let c = h.gemm_cycles(128, 128, 128, false);
+        assert_eq!(c, Cycles((2.0 * 128f64.powi(3) / 0.4).ceil() as u64));
+        // doubling one dim doubles cycles
+        let c2 = h.gemm_cycles(256, 128, 128, false);
+        assert_eq!(c2.0, 2 * c.0);
+    }
+
+    #[test]
+    fn memcpy_cost_linear_plus_setup() {
+        let h = host();
+        let c1 = h.memcpy_cycles(0);
+        assert_eq!(c1, Cycles(200));
+        let c2 = h.memcpy_cycles(288);
+        assert_eq!(c2, Cycles(200 + 1000));
+    }
+
+    #[test]
+    fn f32_path_uses_multiplier() {
+        let h = host();
+        // default host f32_speedup = 1.0 -> same cost
+        assert_eq!(
+            h.gemm_cycles(64, 64, 64, true),
+            h.gemm_cycles(64, 64, 64, false)
+        );
+    }
+
+    #[test]
+    fn gemv_and_level1_scale_linearly() {
+        let h = host();
+        assert_eq!(h.gemv_cycles(100, 50, false).0,
+                   (2.0 * 100.0 * 50.0 / 0.4) as u64);
+        assert_eq!(h.level1_cycles(1000, 2.0, false).0, 5000);
+    }
+}

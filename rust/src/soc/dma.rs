@@ -1,0 +1,130 @@
+//! Cluster DMA engine (iDMA) cost model.
+//!
+//! The Snitch cluster refills its L1 SPM from DRAM with an autonomous DMA
+//! engine; GEMM tiles are 2-D sub-matrices, so the engine's 2-D mode
+//! (per-row address regeneration) is the common case.  Costs are cycles
+//! on the shared clock.
+
+
+
+use super::clock::Cycles;
+use crate::config::DmaConfig;
+
+/// Aggregate statistics (fed into [`crate::metrics`]).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct DmaStats {
+    pub transfers: u64,
+    pub bytes: u64,
+    pub cycles: u64,
+}
+
+/// DMA engine model.
+#[derive(Debug)]
+pub struct DmaModel {
+    cfg: DmaConfig,
+    stats: DmaStats,
+}
+
+impl DmaModel {
+    pub fn new(cfg: DmaConfig) -> Self {
+        DmaModel { cfg, stats: DmaStats::default() }
+    }
+
+    /// Cost of a 1-D burst of `bytes`.
+    pub fn transfer_1d(&mut self, bytes: u64) -> Cycles {
+        let stream = bytes as f64 / self.cfg.bytes_per_cycle;
+        let total = Cycles::from_f64(self.cfg.setup_cycles as f64 + stream);
+        self.account(bytes, total);
+        total
+    }
+
+    /// Cost of a 2-D transfer: `rows` rows of `row_bytes` each
+    /// (e.g. one 64x64 f64 tile = 64 rows x 512 B).
+    pub fn transfer_2d(&mut self, rows: u64, row_bytes: u64) -> Cycles {
+        let stream = (rows * row_bytes) as f64 / self.cfg.bytes_per_cycle;
+        let total = Cycles::from_f64(
+            self.cfg.setup_cycles as f64
+                + (rows * self.cfg.per_row_cycles) as f64
+                + stream,
+        );
+        self.account(rows * row_bytes, total);
+        total
+    }
+
+    /// Pure cost query without accounting (for planning/what-if).
+    pub fn cost_2d(&self, rows: u64, row_bytes: u64) -> Cycles {
+        Cycles::from_f64(
+            self.cfg.setup_cycles as f64
+                + (rows * self.cfg.per_row_cycles) as f64
+                + (rows * row_bytes) as f64 / self.cfg.bytes_per_cycle,
+        )
+    }
+
+    fn account(&mut self, bytes: u64, cyc: Cycles) {
+        self.stats.transfers += 1;
+        self.stats.bytes += bytes;
+        self.stats.cycles += cyc.0;
+    }
+
+    pub fn stats(&self) -> DmaStats {
+        self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = DmaStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+
+    fn model() -> DmaModel {
+        DmaModel::new(PlatformConfig::default().dma)
+    }
+
+    #[test]
+    fn transfer_1d_cost() {
+        let mut d = model();
+        // 8 bytes/cycle, 50 setup: 4096 B -> 50 + 512 = 562
+        assert_eq!(d.transfer_1d(4096), Cycles(562));
+        assert_eq!(d.stats().transfers, 1);
+        assert_eq!(d.stats().bytes, 4096);
+    }
+
+    #[test]
+    fn transfer_2d_adds_row_overhead() {
+        let mut d = model();
+        // one f64 64x64 tile: 64 rows x 512 B = 32 KiB
+        // 50 + 64*4 + 32768/8 = 50 + 256 + 4096 = 4402
+        assert_eq!(d.transfer_2d(64, 512), Cycles(4402));
+    }
+
+    #[test]
+    fn cost_query_matches_transfer_without_accounting() {
+        let mut d = model();
+        let q = d.cost_2d(64, 512);
+        assert_eq!(d.stats().transfers, 0);
+        let t = d.transfer_2d(64, 512);
+        assert_eq!(q, t);
+        assert_eq!(d.stats().transfers, 1);
+    }
+
+    #[test]
+    fn zero_bytes_costs_setup_only() {
+        let mut d = model();
+        assert_eq!(d.transfer_1d(0), Cycles(50));
+    }
+
+    #[test]
+    fn stats_accumulate_and_reset() {
+        let mut d = model();
+        d.transfer_1d(100);
+        d.transfer_2d(2, 50);
+        assert_eq!(d.stats().transfers, 2);
+        assert_eq!(d.stats().bytes, 200);
+        d.reset_stats();
+        assert_eq!(d.stats().transfers, 0);
+    }
+}

@@ -1,0 +1,106 @@
+//! Host<->cluster mailbox.
+//!
+//! The Hero runtime kicks the cluster by writing an offload-descriptor
+//! pointer into a doorbell register; completion comes back the same way.
+//! Functionally this is a small FIFO of 64-bit words; its latency is part
+//! of the paper's "fork/join" region.
+
+use std::collections::VecDeque;
+
+use super::clock::Cycles;
+
+/// One mailbox direction (we model the pair as two FIFOs in one struct).
+#[derive(Debug, Default)]
+struct Fifo {
+    words: VecDeque<u64>,
+}
+
+/// Host<->device mailbox with doorbell latency.
+#[derive(Debug)]
+pub struct Mailbox {
+    to_device: Fifo,
+    to_host: Fifo,
+    doorbell_cycles: u64,
+    doorbells_rung: u64,
+}
+
+impl Mailbox {
+    pub fn new(doorbell_cycles: u64) -> Self {
+        Mailbox {
+            to_device: Fifo::default(),
+            to_host: Fifo::default(),
+            doorbell_cycles,
+            doorbells_rung: 0,
+        }
+    }
+
+    /// Host posts a descriptor pointer; returns the doorbell latency.
+    pub fn ring_device(&mut self, word: u64) -> Cycles {
+        self.to_device.words.push_back(word);
+        self.doorbells_rung += 1;
+        Cycles(self.doorbell_cycles)
+    }
+
+    /// Device drains its FIFO (returns the oldest descriptor pointer).
+    pub fn device_pop(&mut self) -> Option<u64> {
+        self.to_device.words.pop_front()
+    }
+
+    /// Device posts completion status; returns the doorbell latency.
+    pub fn ring_host(&mut self, word: u64) -> Cycles {
+        self.to_host.words.push_back(word);
+        self.doorbells_rung += 1;
+        Cycles(self.doorbell_cycles)
+    }
+
+    /// Host drains completion words.
+    pub fn host_pop(&mut self) -> Option<u64> {
+        self.to_host.words.pop_front()
+    }
+
+    pub fn pending_for_device(&self) -> usize {
+        self.to_device.words.len()
+    }
+
+    pub fn pending_for_host(&self) -> usize {
+        self.to_host.words.len()
+    }
+
+    pub fn doorbells_rung(&self) -> u64 {
+        self.doorbells_rung
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut mb = Mailbox::new(5_000);
+        mb.ring_device(0xA);
+        mb.ring_device(0xB);
+        assert_eq!(mb.pending_for_device(), 2);
+        assert_eq!(mb.device_pop(), Some(0xA));
+        assert_eq!(mb.device_pop(), Some(0xB));
+        assert_eq!(mb.device_pop(), None);
+    }
+
+    #[test]
+    fn doorbell_latency_and_count() {
+        let mut mb = Mailbox::new(5_000);
+        assert_eq!(mb.ring_device(1), Cycles(5_000));
+        assert_eq!(mb.ring_host(2), Cycles(5_000));
+        assert_eq!(mb.doorbells_rung(), 2);
+        assert_eq!(mb.host_pop(), Some(2));
+    }
+
+    #[test]
+    fn directions_are_independent() {
+        let mut mb = Mailbox::new(1);
+        mb.ring_device(7);
+        assert_eq!(mb.pending_for_host(), 0);
+        assert_eq!(mb.host_pop(), None);
+        assert_eq!(mb.device_pop(), Some(7));
+    }
+}

@@ -1,0 +1,157 @@
+//! SoC address map (Figure 1 of the paper).
+//!
+//! Three device-side regions matter to the stack: the cluster-local L1
+//! SPM (DMA-fed working set), the dual-port L2 SPM (device instructions +
+//! constants, where `libopenblas.so`'s device functions are copied before
+//! the first offload), and the device-managed DRAM partition (physically
+//! contiguous shared buffers, used when the IOMMU is off).
+
+
+
+use crate::config::MemoryConfig;
+
+/// What a region is used for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RegionKind {
+    L1Spm,
+    L2Spm,
+    DevDram,
+}
+
+impl RegionKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            RegionKind::L1Spm => "l1_spm",
+            RegionKind::L2Spm => "l2_spm",
+            RegionKind::DevDram => "dev_dram",
+        }
+    }
+}
+
+/// One mapped region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Region {
+    pub kind: RegionKind,
+    pub base: u64,
+    pub size: u64,
+}
+
+impl Region {
+    pub fn end(&self) -> u64 {
+        self.base + self.size
+    }
+
+    pub fn contains(&self, addr: u64) -> bool {
+        addr >= self.base && addr < self.end()
+    }
+
+    /// Whole range [addr, addr+len) inside the region?
+    pub fn contains_range(&self, addr: u64, len: u64) -> bool {
+        self.contains(addr) && addr + len <= self.end()
+    }
+}
+
+/// The full device-visible address map.
+#[derive(Debug, Clone)]
+pub struct MemoryMap {
+    regions: Vec<Region>,
+}
+
+impl MemoryMap {
+    pub fn from_config(cfg: &MemoryConfig) -> Self {
+        let regions = vec![
+            Region { kind: RegionKind::L1Spm, base: cfg.l1_spm_base, size: cfg.l1_spm_bytes },
+            Region { kind: RegionKind::L2Spm, base: cfg.l2_spm_base, size: cfg.l2_spm_bytes },
+            Region { kind: RegionKind::DevDram, base: cfg.dev_dram_base, size: cfg.dev_dram_bytes },
+        ];
+        MemoryMap { regions }
+    }
+
+    pub fn regions(&self) -> &[Region] {
+        &self.regions
+    }
+
+    /// The region holding `addr`, if any.
+    pub fn region_of(&self, addr: u64) -> Option<&Region> {
+        self.regions.iter().find(|r| r.contains(addr))
+    }
+
+    /// The region of a given kind (each kind appears exactly once).
+    pub fn region(&self, kind: RegionKind) -> &Region {
+        self.regions
+            .iter()
+            .find(|r| r.kind == kind)
+            .expect("all kinds present by construction")
+    }
+
+    /// Pretty-print for `hero-blas inspect`.
+    pub fn render(&self) -> String {
+        let mut out = String::from("address map:\n");
+        for r in &self.regions {
+            out.push_str(&format!(
+                "  {:<9} 0x{:08x}..0x{:08x}  {:>10} B\n",
+                r.kind.label(),
+                r.base,
+                r.end(),
+                r.size
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+
+    fn map() -> MemoryMap {
+        MemoryMap::from_config(&PlatformConfig::default().memory)
+    }
+
+    #[test]
+    fn regions_present_and_disjoint() {
+        let m = map();
+        assert_eq!(m.regions().len(), 3);
+        for (i, a) in m.regions().iter().enumerate() {
+            for b in m.regions().iter().skip(i + 1) {
+                assert!(a.end() <= b.base || b.end() <= a.base,
+                        "{:?} overlaps {:?}", a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn region_lookup() {
+        let m = map();
+        let spm = m.region(RegionKind::L1Spm);
+        assert!(m.region_of(spm.base).is_some());
+        assert!(m.region_of(spm.base + spm.size - 1).is_some());
+        assert!(m.region_of(spm.base + spm.size).map(|r| r.kind) != Some(RegionKind::L1Spm));
+        assert!(m.region_of(0xDEAD_0000_0000).is_none());
+    }
+
+    #[test]
+    fn contains_range_edges() {
+        let r = Region { kind: RegionKind::DevDram, base: 0x1000, size: 0x100 };
+        assert!(r.contains_range(0x1000, 0x100));
+        assert!(!r.contains_range(0x1000, 0x101));
+        assert!(!r.contains_range(0x0FFF, 2));
+        assert!(r.contains_range(0x10FF, 1));
+    }
+
+    #[test]
+    fn l1_spm_matches_paper() {
+        // paper: "128 KiB of local scratch-pad memory"
+        let m = map();
+        assert_eq!(m.region(RegionKind::L1Spm).size, 128 * 1024);
+    }
+
+    #[test]
+    fn render_mentions_all_regions() {
+        let s = map().render();
+        for k in ["l1_spm", "l2_spm", "dev_dram"] {
+            assert!(s.contains(k), "{s}");
+        }
+    }
+}

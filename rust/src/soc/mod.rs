@@ -1,0 +1,59 @@
+//! SoC simulator substrate.
+//!
+//! This module is our stand-in for the paper's FPGA-emulated
+//! Cheshire/Carfield platform (DESIGN.md §1): an event/cost model of the
+//! CVA6 host, the Snitch PMCA cluster with its DMA-fed 128 KiB L1 SPM,
+//! the memory map, the mailbox, and the RISC-V IOMMU.  It answers *how
+//! long* things take in virtual time; numerics come from the AOT
+//! artifacts executed by [`crate::runtime`].
+
+pub mod clock;
+pub mod cva6;
+pub mod dma;
+pub mod iommu;
+pub mod mailbox;
+pub mod memory;
+pub mod snitch;
+pub mod trace;
+
+pub use clock::{Cycles, SimClock};
+pub use cva6::Cva6Model;
+pub use dma::DmaModel;
+pub use iommu::Iommu;
+pub use mailbox::Mailbox;
+pub use memory::{MemoryMap, Region, RegionKind};
+pub use snitch::SnitchCluster;
+pub use trace::{RegionClass, Trace, TraceEvent};
+
+use crate::config::PlatformConfig;
+
+/// Bundle of all per-platform models, built once from a config.
+#[derive(Debug)]
+pub struct Platform {
+    pub cfg: PlatformConfig,
+    pub map: MemoryMap,
+    pub host: Cva6Model,
+    pub cluster: SnitchCluster,
+    pub dma: DmaModel,
+}
+
+impl Platform {
+    /// Build all models from a validated platform config.
+    pub fn new(cfg: PlatformConfig) -> Self {
+        let map = MemoryMap::from_config(&cfg.memory);
+        let host = Cva6Model::new(cfg.host.clone());
+        let cluster = SnitchCluster::new(cfg.cluster.clone(), cfg.memory.l1_spm_bytes);
+        let dma = DmaModel::new(cfg.dma.clone());
+        Platform { cfg, map, host, cluster, dma }
+    }
+
+    /// Fresh IOMMU instance (stateful: owns its IOTLB).
+    pub fn iommu(&self) -> Iommu {
+        Iommu::new(self.cfg.iommu.clone())
+    }
+
+    /// Fresh mailbox instance.
+    pub fn mailbox(&self) -> Mailbox {
+        Mailbox::new(self.cfg.forkjoin.doorbell_cycles)
+    }
+}

@@ -1,0 +1,117 @@
+//! Snitch PMCA cluster compute model.
+//!
+//! Eight worker cores with double-precision FPUs execute on SPM-resident
+//! tiles; a ninth core drives the DMA (modelled separately in
+//! [`super::dma`]).  The model answers: how many cycles does the cluster
+//! need for one tile-level kernel burst, and does a tile set fit the
+//! 128 KiB L1 SPM.
+
+use super::clock::Cycles;
+use crate::config::ClusterConfig;
+
+/// Cluster model.
+#[derive(Debug, Clone)]
+pub struct SnitchCluster {
+    cfg: ClusterConfig,
+    l1_spm_bytes: u64,
+}
+
+impl SnitchCluster {
+    pub fn new(cfg: ClusterConfig, l1_spm_bytes: u64) -> Self {
+        SnitchCluster { cfg, l1_spm_bytes }
+    }
+
+    /// Peak FLOP/cycle of the whole cluster (FMA = 2 FLOPs).
+    pub fn peak_flops_per_cycle(&self, f32_path: bool) -> f64 {
+        let base = self.cfg.cores as f64 * self.cfg.fma_per_core_per_cycle * 2.0;
+        if f32_path { base * self.cfg.f32_speedup } else { base }
+    }
+
+    /// Sustained FLOP/cycle after the efficiency derating.
+    pub fn sustained_flops_per_cycle(&self, f32_path: bool) -> f64 {
+        self.peak_flops_per_cycle(f32_path) * self.cfg.efficiency
+    }
+
+    /// Cycles for one GEMM tile burst: 2*tm*tn*tk FLOPs across the cores.
+    pub fn gemm_tile_cycles(&self, tm: usize, tn: usize, tk: usize,
+                            f32_path: bool) -> Cycles {
+        let flops = 2.0 * tm as f64 * tn as f64 * tk as f64;
+        Cycles::from_f64(flops / self.sustained_flops_per_cycle(f32_path))
+    }
+
+    /// Cycles for a streaming (level-1/2) burst over `n` elements.
+    pub fn stream_cycles(&self, n: usize, flops_per_el: f64, f32_path: bool) -> Cycles {
+        Cycles::from_f64(n as f64 * flops_per_el
+            / self.sustained_flops_per_cycle(f32_path))
+    }
+
+    /// Does a resident set of `bytes` fit the L1 SPM?
+    pub fn fits_spm(&self, bytes: u64) -> bool {
+        bytes <= self.l1_spm_bytes
+    }
+
+    /// SPM capacity in bytes (128 KiB on the paper's platform).
+    pub fn spm_bytes(&self) -> u64 {
+        self.l1_spm_bytes
+    }
+
+    pub fn cores(&self) -> u32 {
+        self.cfg.cores
+    }
+
+    pub fn efficiency(&self) -> f64 {
+        self.cfg.efficiency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+
+    fn cluster() -> SnitchCluster {
+        let cfg = PlatformConfig::default();
+        SnitchCluster::new(cfg.cluster, cfg.memory.l1_spm_bytes)
+    }
+
+    #[test]
+    fn peak_matches_paper_platform() {
+        let c = cluster();
+        // 8 cores x 1 FMA/cycle x 2 FLOP = 16 FLOP/cycle f64
+        assert_eq!(c.peak_flops_per_cycle(false), 16.0);
+        // f32 SIMD future-work path doubles it
+        assert_eq!(c.peak_flops_per_cycle(true), 32.0);
+    }
+
+    #[test]
+    fn tile_cost() {
+        let c = cluster();
+        // 64^3 tile: 524288 FLOP / (16*0.35) = 93622.857 -> 93623
+        let expect = (2.0 * 64f64.powi(3) / (16.0 * 0.35)).ceil() as u64;
+        assert_eq!(c.gemm_tile_cycles(64, 64, 64, false), Cycles(expect));
+    }
+
+    #[test]
+    fn f32_tile_twice_as_fast() {
+        let c = cluster();
+        let f64c = c.gemm_tile_cycles(64, 64, 64, false).0 as f64;
+        let f32c = c.gemm_tile_cycles(64, 64, 64, true).0 as f64;
+        assert!((f64c / f32c - 2.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn spm_capacity() {
+        let c = cluster();
+        assert!(c.fits_spm(3 * 64 * 64 * 8)); // 96 KiB tile set
+        assert!(!c.fits_spm(128 * 1024 + 1));
+        assert_eq!(c.spm_bytes(), 128 * 1024);
+    }
+
+    #[test]
+    fn stream_cost_linear() {
+        let c = cluster();
+        let a = c.stream_cycles(1000, 2.0, false).0;
+        let b = c.stream_cycles(2000, 2.0, false).0;
+        assert!((b as f64 / a as f64 - 2.0).abs() < 0.01);
+    }
+}

@@ -1,0 +1,202 @@
+//! Region-level execution trace.
+//!
+//! The paper's Figure 3 splits each run into three regions — "data copy",
+//! "fork/join" and "compute" — measured from Python.  [`Trace`] records
+//! exactly those regions (plus host-compute for the no-offload baseline)
+//! against the virtual clock, and is the raw material for the Figure 3
+//! harness.
+
+use super::clock::Cycles;
+
+/// Classification of a traced interval (the stacked-bar legend of Fig. 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RegionClass {
+    /// Host copies between Linux DRAM and the device DRAM partition
+    /// (or IOMMU mapping work in the zero-copy path).
+    DataCopy,
+    /// OpenBLAS/OpenMP entry + exit, marshalling, doorbell, wake-up, join.
+    ForkJoin,
+    /// Device DMA + FPU work on SPM-resident tiles.
+    Compute,
+    /// Host-only compute (the "without offloading" bar has one region).
+    HostCompute,
+}
+
+impl RegionClass {
+    pub const ALL: [RegionClass; 4] = [
+        RegionClass::DataCopy,
+        RegionClass::ForkJoin,
+        RegionClass::Compute,
+        RegionClass::HostCompute,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            RegionClass::DataCopy => "data_copy",
+            RegionClass::ForkJoin => "fork_join",
+            RegionClass::Compute => "compute",
+            RegionClass::HostCompute => "host_compute",
+        }
+    }
+}
+
+/// One traced interval.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub class: RegionClass,
+    /// Virtual start time (cycles since trace reset).
+    pub start: Cycles,
+    pub dur: Cycles,
+    /// Human-readable site, e.g. "map_to(a)" or "tile(1,2,0)".
+    pub label: String,
+}
+
+/// Append-only region trace against the virtual clock.
+#[derive(Debug, Default)]
+pub struct Trace {
+    events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Trace { events: Vec::new() }
+    }
+
+    /// Record an interval that started at `start` and lasted `dur`.
+    pub fn record(&mut self, class: RegionClass, start: Cycles, dur: Cycles,
+                  label: impl Into<String>) {
+        self.events.push(TraceEvent { class, start, dur, label: label.into() });
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn clear(&mut self) {
+        self.events.clear();
+    }
+
+    /// Total cycles attributed to one region class.
+    pub fn total(&self, class: RegionClass) -> Cycles {
+        self.events
+            .iter()
+            .filter(|e| e.class == class)
+            .map(|e| e.dur)
+            .sum()
+    }
+
+    /// Total traced cycles across all classes.
+    pub fn grand_total(&self) -> Cycles {
+        self.events.iter().map(|e| e.dur).sum()
+    }
+
+    /// Fraction of the grand total spent in `class` (0 if empty).
+    pub fn share(&self, class: RegionClass) -> f64 {
+        let total = self.grand_total().0;
+        if total == 0 {
+            return 0.0;
+        }
+        self.total(class).0 as f64 / total as f64
+    }
+
+    /// Region breakdown as (class, cycles) for all non-zero classes.
+    pub fn breakdown(&self) -> Vec<(RegionClass, Cycles)> {
+        RegionClass::ALL
+            .iter()
+            .map(|&c| (c, self.total(c)))
+            .filter(|(_, cyc)| cyc.0 > 0)
+            .collect()
+    }
+
+    /// Export as Chrome trace-event JSON (load in chrome://tracing or
+    /// Perfetto).  Virtual time is mapped to microseconds at `freq_hz`;
+    /// each region class gets its own track (tid).
+    pub fn to_chrome_trace(&self, freq_hz: u64) -> String {
+        use std::fmt::Write as _;
+        let tid = |c: RegionClass| match c {
+            RegionClass::DataCopy => 1,
+            RegionClass::ForkJoin => 2,
+            RegionClass::Compute => 3,
+            RegionClass::HostCompute => 4,
+        };
+        let us = |c: Cycles| c.to_ns(freq_hz) / 1e3;
+        let mut out = String::from("[\n");
+        for (i, e) in self.events.iter().enumerate() {
+            if i > 0 {
+                out.push_str(",\n");
+            }
+            // label is our own ASCII; escape the one char that could break
+            let name = e.label.replace('"', "'");
+            let _ = write!(
+                out,
+                "  {{\"name\": \"{}\", \"cat\": \"{}\", \"ph\": \"X\", \
+                 \"ts\": {:.3}, \"dur\": {:.3}, \"pid\": 1, \"tid\": {}}}",
+                name,
+                e.class.label(),
+                us(e.start),
+                us(e.dur),
+                tid(e.class),
+            );
+        }
+        out.push_str("\n]\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_and_shares() {
+        let mut t = Trace::new();
+        t.record(RegionClass::DataCopy, Cycles(0), Cycles(47), "copy(a)");
+        t.record(RegionClass::ForkJoin, Cycles(47), Cycles(30), "entry");
+        t.record(RegionClass::Compute, Cycles(77), Cycles(23), "tiles");
+        assert_eq!(t.total(RegionClass::DataCopy), Cycles(47));
+        assert_eq!(t.grand_total(), Cycles(100));
+        assert!((t.share(RegionClass::DataCopy) - 0.47).abs() < 1e-12);
+        assert_eq!(t.breakdown().len(), 3);
+    }
+
+    #[test]
+    fn empty_trace_is_zero() {
+        let t = Trace::new();
+        assert_eq!(t.grand_total(), Cycles::ZERO);
+        assert_eq!(t.share(RegionClass::Compute), 0.0);
+        assert!(t.breakdown().is_empty());
+    }
+
+    #[test]
+    fn regions_sum_to_grand_total() {
+        let mut t = Trace::new();
+        for (i, c) in RegionClass::ALL.iter().enumerate() {
+            t.record(*c, Cycles(i as u64 * 10), Cycles(10), "x");
+        }
+        let sum: Cycles = RegionClass::ALL.iter().map(|&c| t.total(c)).sum();
+        assert_eq!(sum, t.grand_total());
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_all_events() {
+        let mut t = Trace::new();
+        t.record(RegionClass::DataCopy, Cycles(0), Cycles(100), "copy(\"a\")");
+        t.record(RegionClass::Compute, Cycles(100), Cycles(50), "tile(0,0,0)");
+        let json = t.to_chrome_trace(50_000_000);
+        let parsed = crate::util::json_lite::Json::parse(&json).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].req_str("cat").unwrap(), "data_copy");
+        // 100 cycles @ 50 MHz = 2 us
+        assert_eq!(arr[0].get("dur").unwrap().as_f64(), Some(2.0));
+        assert_eq!(arr[1].get("ts").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut t = Trace::new();
+        t.record(RegionClass::Compute, Cycles(0), Cycles(5), "x");
+        t.clear();
+        assert!(t.events().is_empty());
+    }
+}

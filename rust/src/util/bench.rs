@@ -1,0 +1,158 @@
+//! Micro-benchmark harness (offline substitute for criterion).
+//!
+//! `cargo bench` targets use [`Bench`] to time closures with warm-up,
+//! adaptive iteration counts and simple statistics, printing one line per
+//! benchmark:
+//!
+//! ```text
+//! fig3/gemm_offload_n128        median 1.234 ms   mean 1.240 ms ± 0.012   (64 iters)
+//! ```
+
+use std::time::{Duration, Instant};
+
+/// Result statistics for one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: u64,
+    pub median: Duration,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} median {:>10}   mean {:>10} ± {:<9} ({} iters)",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            fmt_dur(self.stddev),
+            self.iters
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// The harness: collects results, prints as it goes.
+pub struct Bench {
+    /// Target total measurement time per benchmark.
+    pub budget: Duration,
+    /// Hard cap on iterations (useful for slow end-to-end benches).
+    pub max_iters: u64,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Bench {
+            budget: Duration::from_secs(2),
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_budget(budget: Duration, max_iters: u64) -> Self {
+        Bench { budget, max_iters, results: Vec::new() }
+    }
+
+    /// Time `f`, which must return something observable (prevents the
+    /// optimizer from deleting the work; the value is black-boxed).
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchStats {
+        // warm-up: one call, also used to size the iteration count
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let once = t0.elapsed().max(Duration::from_nanos(20));
+
+        let iters = ((self.budget.as_nanos() / once.as_nanos().max(1)) as u64)
+            .clamp(5, self.max_iters);
+        let mut samples = Vec::with_capacity(iters as usize);
+        for _ in 0..iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed());
+        }
+        samples.sort_unstable();
+        let median = samples[samples.len() / 2];
+        let mean_ns =
+            samples.iter().map(|d| d.as_nanos() as f64).sum::<f64>() / samples.len() as f64;
+        let var = samples
+            .iter()
+            .map(|d| {
+                let x = d.as_nanos() as f64 - mean_ns;
+                x * x
+            })
+            .sum::<f64>()
+            / samples.len() as f64;
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters,
+            median,
+            mean: Duration::from_nanos(mean_ns as u64),
+            stddev: Duration::from_nanos(var.sqrt() as u64),
+            min: samples[0],
+            max: *samples.last().unwrap(),
+        };
+        println!("{}", stats.line());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bench::with_budget(Duration::from_millis(20), 100);
+        let s = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.median.as_nanos() > 0);
+        assert!(s.iters >= 5);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn ordering_of_stats() {
+        let mut b = Bench::with_budget(Duration::from_millis(10), 50);
+        let s = b.run("noop", || 1u8).clone();
+        assert!(s.min <= s.median && s.median <= s.max);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
+        assert_eq!(fmt_dur(Duration::from_micros(1500)), "1.500 ms");
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with(" s"));
+    }
+}

@@ -1,0 +1,13 @@
+//! In-tree utility substrates.
+//!
+//! The build is fully offline, so everything a typical project pulls from
+//! crates.io beyond the XLA bindings is implemented here: a deterministic
+//! RNG ([`rng`]), a TOML-subset parser for platform/workload configs
+//! ([`toml_lite`]), a JSON parser/writer for the artifact manifest and
+//! harness reports ([`json_lite`]), and a micro-benchmark harness used by
+//! `cargo bench` ([`bench`]).
+
+pub mod bench;
+pub mod json_lite;
+pub mod rng;
+pub mod toml_lite;

@@ -1,0 +1,268 @@
+//! Minimal TOML-subset parser (offline substitute for the toml crate).
+//!
+//! Supports what our config files need: `[section]` and `[a.b]` headers,
+//! `key = value` with integers (decimal/hex/underscores), floats, bools,
+//! strings, and homogeneous inline arrays (`[1, 2, 3]`), plus `#`
+//! comments.  Produces a flat map from dotted path to [`TomlValue`].
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: dotted-path -> value.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct TomlDoc {
+    values: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let at = |m: &str| Error::Config(format!("toml line {}: {m}", lineno + 1));
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| at("unterminated section header"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(at("empty section name"));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| at("expected key = value"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(at("empty key"));
+            }
+            let val = parse_value(line[eq + 1..].trim())
+                .map_err(|m| at(&m))?;
+            let path = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            if doc.values.insert(path.clone(), val).is_some() {
+                return Err(at(&format!("duplicate key '{path}'")));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.values.get(path)
+    }
+
+    /// Required typed getters with path-qualified errors.
+    pub fn req_u64(&self, path: &str) -> Result<u64> {
+        self.get(path)
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| Error::Config(format!("config: missing/invalid integer '{path}'")))
+    }
+
+    pub fn req_f64(&self, path: &str) -> Result<f64> {
+        self.get(path)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| Error::Config(format!("config: missing/invalid number '{path}'")))
+    }
+
+    pub fn req_str(&self, path: &str) -> Result<&str> {
+        self.get(path)
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| Error::Config(format!("config: missing/invalid string '{path}'")))
+    }
+
+    /// Optional getters (fall back to a default at the call site).
+    pub fn opt_f64(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(|v| v.as_f64())
+    }
+
+    pub fn opt_u64(&self, path: &str) -> Option<u64> {
+        self.get(path).and_then(|v| v.as_u64())
+    }
+
+    pub fn opt_str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(|v| v.as_str())
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a quoted string must not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> std::result::Result<TomlValue, String> {
+    if text.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(Vec::new()));
+        }
+        let items = split_top_level(inner)
+            .into_iter()
+            .map(|s| parse_value(s.trim()))
+            .collect::<std::result::Result<Vec<_>, _>>()?;
+        return Ok(TomlValue::Array(items));
+    }
+    if let Some(inner) = text.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match text {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let clean: String = text.chars().filter(|&c| c != '_').collect();
+    if let Some(hex) = clean.strip_prefix("0x").or_else(|| clean.strip_prefix("0X")) {
+        return i64::from_str_radix(hex, 16)
+            .map(TomlValue::Int)
+            .map_err(|_| format!("bad hex integer '{text}'"));
+    }
+    if !clean.contains('.') && !clean.contains('e') && !clean.contains('E') {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    clean
+        .parse::<f64>()
+        .map(TomlValue::Float)
+        .map_err(|_| format!("bad value '{text}'"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    // arrays of scalars only — no nesting needed for our configs
+    s.split(',').collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+            name = "carfield"     # inline comment
+            [clock]
+            freq_hz = 50_000_000
+            [host]
+            flops_per_cycle = 0.4
+            fast = true
+            base = 0xA000_0000
+            sizes = [16, 32, 64]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.req_str("name").unwrap(), "carfield");
+        assert_eq!(doc.req_u64("clock.freq_hz").unwrap(), 50_000_000);
+        assert_eq!(doc.req_f64("host.flops_per_cycle").unwrap(), 0.4);
+        assert_eq!(doc.get("host.fast").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.req_u64("host.base").unwrap(), 0xA000_0000);
+        let arr = match doc.get("host.sizes").unwrap() {
+            TomlValue::Array(a) => a,
+            _ => panic!(),
+        };
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].as_u64(), Some(64));
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = TomlDoc::parse("a = 3\nb = 3.0\nc = 1e3").unwrap();
+        assert_eq!(doc.get("a").unwrap(), &TomlValue::Int(3));
+        assert_eq!(doc.get("b").unwrap(), &TomlValue::Float(3.0));
+        assert_eq!(doc.get("c").unwrap(), &TomlValue::Float(1000.0));
+        // ints coerce to f64 on demand
+        assert_eq!(doc.req_f64("a").unwrap(), 3.0);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = TomlDoc::parse("s = \"a#b\"").unwrap();
+        assert_eq!(doc.req_str("s").unwrap(), "a#b");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TomlDoc::parse("[unclosed").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("k = ").is_err());
+        assert!(TomlDoc::parse("k = \"open").is_err());
+        assert!(TomlDoc::parse("k = 1\nk = 2").is_err());
+        assert!(TomlDoc::parse("[]").is_err());
+    }
+
+    #[test]
+    fn missing_key_errors_name_the_path() {
+        let doc = TomlDoc::parse("[a]\nb = 1").unwrap();
+        let e = doc.req_u64("a.c").unwrap_err().to_string();
+        assert!(e.contains("a.c"), "{e}");
+    }
+}

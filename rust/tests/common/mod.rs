@@ -1,0 +1,40 @@
+//! Shared helpers for integration tests (require `make artifacts`).
+
+use std::path::PathBuf;
+
+use hero_blas::blas::{DispatchPolicy, HeroBlas};
+use hero_blas::config::{DispatchMode, PlatformConfig};
+
+/// Locate the artifacts directory for tests: env override, then the repo
+/// root (cargo runs integration tests from the package root).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("HERO_BLAS_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let repo = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let dir = repo.join("artifacts");
+    assert!(
+        dir.join("manifest.json").is_file(),
+        "artifacts missing at {} — run `make artifacts` first",
+        dir.display()
+    );
+    dir
+}
+
+/// Fresh session with a given dispatch mode.
+pub fn session(mode: DispatchMode) -> HeroBlas {
+    HeroBlas::new(
+        PlatformConfig::default(),
+        &artifacts_dir(),
+        DispatchPolicy::with_mode(mode),
+    )
+    .expect("session construction")
+}
+
+/// Max |a - b|.
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}

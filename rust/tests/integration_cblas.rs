@@ -1,0 +1,170 @@
+//! CBLAS C-ABI surface: call the exported `cblas_*` symbols exactly as a
+//! NumPy build would, including padded lda and strided vectors.
+
+mod common;
+
+use std::os::raw::c_int;
+
+use hero_blas::cblas::*;
+use hero_blas::util::rng::Rng;
+
+fn init_device_mode() {
+    let dir = common::artifacts_dir();
+    let c = std::ffi::CString::new(dir.to_str().unwrap()).unwrap();
+    let rc = unsafe { hero_blas_init(c.as_ptr(), 2) }; // device-only
+    assert_eq!(rc, 0, "hero_blas_init failed");
+}
+
+#[test]
+fn dgemm_matches_reference_with_padded_lda() {
+    init_device_mode();
+    let mut rng = Rng::new(1);
+    let (m, n, k) = (65usize, 40, 50);
+    let (lda, ldb, ldc) = (k + 3, n + 5, n + 2); // padded leading dims
+    let a: Vec<f64> = rng.normal_vec(m * lda);
+    let b: Vec<f64> = rng.normal_vec(k * ldb);
+    let mut c: Vec<f64> = rng.normal_vec(m * ldc);
+    let c0 = c.clone();
+
+    unsafe {
+        cblas_dgemm(
+            CBLAS_ROW_MAJOR, CBLAS_NO_TRANS, CBLAS_NO_TRANS,
+            m as c_int, n as c_int, k as c_int,
+            2.0, a.as_ptr(), lda as c_int, b.as_ptr(), ldb as c_int,
+            -1.0, c.as_mut_ptr(), ldc as c_int,
+        );
+    }
+
+    // reference on the dense gathers
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for p in 0..k {
+                acc += a[i * lda + p] * b[p * ldb + j];
+            }
+            let want = 2.0 * acc - c0[i * ldc + j];
+            let got = c[i * ldc + j];
+            assert!((got - want).abs() < 1e-9, "({i},{j}): {got} vs {want}");
+        }
+    }
+    // padding columns must be untouched
+    for i in 0..m {
+        for j in n..ldc {
+            assert_eq!(c[i * ldc + j], c0[i * ldc + j], "padding clobbered");
+        }
+    }
+    hero_blas_shutdown();
+}
+
+#[test]
+fn dgemm_transposed_against_plain() {
+    init_device_mode();
+    let mut rng = Rng::new(2);
+    let (m, n, k) = (30usize, 20, 25);
+    let a: Vec<f64> = rng.normal_vec(m * k); // row-major m x k
+    let at: Vec<f64> = {
+        let mut t = vec![0.0; k * m];
+        for i in 0..m {
+            for p in 0..k {
+                t[p * m + i] = a[i * k + p];
+            }
+        }
+        t
+    };
+    let b: Vec<f64> = rng.normal_vec(k * n);
+    let mut c1 = vec![0.0; m * n];
+    let mut c2 = vec![0.0; m * n];
+    unsafe {
+        cblas_dgemm(CBLAS_ROW_MAJOR, CBLAS_NO_TRANS, CBLAS_NO_TRANS,
+                    m as c_int, n as c_int, k as c_int, 1.0,
+                    a.as_ptr(), k as c_int, b.as_ptr(), n as c_int,
+                    0.0, c1.as_mut_ptr(), n as c_int);
+        cblas_dgemm(CBLAS_ROW_MAJOR, CBLAS_TRANS, CBLAS_NO_TRANS,
+                    m as c_int, n as c_int, k as c_int, 1.0,
+                    at.as_ptr(), m as c_int, b.as_ptr(), n as c_int,
+                    0.0, c2.as_mut_ptr(), n as c_int);
+    }
+    assert!(common::max_abs_diff(&c1, &c2) < 1e-10);
+    hero_blas_shutdown();
+}
+
+#[test]
+fn level1_and_gemv_with_strides() {
+    init_device_mode();
+    let n = 8;
+    // x strided by 2 inside a longer buffer
+    let xbuf: Vec<f64> = (0..2 * n).map(|i| i as f64).collect();
+    let x: Vec<f64> = (0..n).map(|i| xbuf[2 * i]).collect();
+    let mut y = vec![1.0f64; n];
+
+    unsafe {
+        cblas_daxpy(n as c_int, 0.5, xbuf.as_ptr(), 2, y.as_mut_ptr(), 1);
+    }
+    for i in 0..n {
+        assert!((y[i] - (1.0 + 0.5 * x[i])).abs() < 1e-12);
+    }
+
+    let d = unsafe { cblas_ddot(n as c_int, xbuf.as_ptr(), 2, y.as_ptr(), 1) };
+    let want: f64 = x.iter().zip(y.iter()).map(|(a, b)| a * b).sum();
+    assert!((d - want).abs() < 1e-9);
+
+    let nrm = unsafe { cblas_dnrm2(n as c_int, xbuf.as_ptr(), 2) };
+    assert!((nrm - x.iter().map(|v| v * v).sum::<f64>().sqrt()).abs() < 1e-12);
+
+    let asum = unsafe { cblas_dasum(n as c_int, xbuf.as_ptr(), 2) };
+    assert!((asum - x.iter().map(|v| v.abs()).sum::<f64>()).abs() < 1e-12);
+
+    let mut z = x.clone();
+    unsafe { cblas_dscal(n as c_int, -2.0, z.as_mut_ptr(), 1) };
+    for i in 0..n {
+        assert_eq!(z[i], -2.0 * x[i]);
+    }
+
+    let imax = unsafe { cblas_idamax(n as c_int, z.as_ptr(), 1) };
+    assert_eq!(imax as usize, n - 1); // largest |value| is the last
+
+    // gemv: y = 1.0 * A x + 0 y
+    let (m2, n2) = (5usize, 8usize);
+    let a: Vec<f64> = (0..m2 * n2).map(|i| (i % 7) as f64).collect();
+    let mut yv = vec![0.0f64; m2];
+    unsafe {
+        cblas_dgemv(CBLAS_ROW_MAJOR, CBLAS_NO_TRANS, m2 as c_int, n2 as c_int,
+                    1.0, a.as_ptr(), n2 as c_int, x.as_ptr(), 1, 0.0,
+                    yv.as_mut_ptr(), 1);
+    }
+    for i in 0..m2 {
+        let want: f64 = (0..n2).map(|j| a[i * n2 + j] * x[j]).sum();
+        assert!((yv[i] - want).abs() < 1e-9);
+    }
+    hero_blas_shutdown();
+}
+
+#[test]
+fn sgemm_f32_path() {
+    init_device_mode();
+    let n = 16;
+    let a: Vec<f32> = (0..n * n).map(|i| (i % 5) as f32).collect();
+    let b: Vec<f32> = (0..n * n).map(|i| ((i + 1) % 3) as f32).collect();
+    let mut c = vec![0.0f32; n * n];
+    unsafe {
+        cblas_sgemm(CBLAS_ROW_MAJOR, CBLAS_NO_TRANS, CBLAS_NO_TRANS,
+                    n as c_int, n as c_int, n as c_int, 1.0,
+                    a.as_ptr(), n as c_int, b.as_ptr(), n as c_int,
+                    0.0, c.as_mut_ptr(), n as c_int);
+    }
+    for i in 0..n {
+        for j in 0..n {
+            let want: f32 = (0..n).map(|p| a[i * n + p] * b[p * n + j]).sum();
+            assert!((c[i * n + j] - want).abs() < 1e-3);
+        }
+    }
+    hero_blas_shutdown();
+}
+
+#[test]
+fn calls_without_init_fail_soft() {
+    hero_blas_shutdown(); // ensure no session on this thread
+    let x = [1.0f64, 2.0];
+    let d = unsafe { cblas_ddot(2, x.as_ptr(), 1, x.as_ptr(), 1) };
+    assert!(d.is_nan(), "uninitialized session must yield NaN, not UB");
+}

@@ -1,0 +1,112 @@
+//! NumPy-frontend end-to-end: the paper's "user application" surface.
+
+mod common;
+
+use common::session;
+use hero_blas::config::DispatchMode;
+use hero_blas::npy::NdArray;
+use hero_blas::util::rng::Rng;
+
+#[test]
+fn matmul_chain_mixed_dispatch() {
+    let mut blas = session(DispatchMode::Auto);
+    let mut rng = Rng::new(1);
+    // (20x30)@(30x40)@(40x10): middle sizes straddle the auto threshold
+    let a = NdArray::<f64>::randn(&mut rng, &[20, 30]);
+    let b = NdArray::<f64>::randn(&mut rng, &[30, 40]);
+    let c = NdArray::<f64>::randn(&mut rng, &[40, 10]);
+    let ab = a.matmul(&b, &mut blas).unwrap();
+    let abc = ab.matmul(&c, &mut blas).unwrap();
+    assert_eq!(abc.shape(), &[20, 10]);
+    // reference
+    let mut ab_ref = vec![0.0; 20 * 40];
+    hero_blas::blas::host::naive_gemm(20, 40, 30, 1.0, a.data(), b.data(), 0.0, &mut ab_ref);
+    let mut abc_ref = vec![0.0; 20 * 10];
+    hero_blas::blas::host::naive_gemm(20, 10, 40, 1.0, &ab_ref, c.data(), 0.0, &mut abc_ref);
+    assert!(common::max_abs_diff(abc.data(), &abc_ref) < 1e-10);
+}
+
+#[test]
+fn matvec_and_vector_helpers() {
+    let mut blas = session(DispatchMode::DeviceOnly);
+    let mut rng = Rng::new(2);
+    let a = NdArray::<f64>::randn(&mut rng, &[65, 30]);
+    let x = NdArray::<f64>::randn(&mut rng, &[30]);
+    let y = a.matvec(&x, &mut blas).unwrap();
+    assert_eq!(y.shape(), &[65]);
+    for i in 0..65 {
+        let want: f64 = (0..30).map(|j| a.get2(i, j) * x.data()[j]).sum();
+        assert!((y.data()[i] - want).abs() < 1e-10);
+    }
+
+    let v = NdArray::<f64>::linspace(1.0, 4.0, 4);
+    let w = NdArray::<f64>::ones(&[4]);
+    assert!((v.vdot(&w, &mut blas).unwrap() - 10.0).abs() < 1e-12);
+    assert!((v.norm(&mut blas).unwrap() - 30f64.sqrt()).abs() < 1e-12);
+
+    let mut acc = NdArray::<f64>::zeros(&[4]);
+    acc.axpy_from(2.0, &v, &mut blas).unwrap();
+    assert_eq!(acc.data(), &[2.0, 4.0, 6.0, 8.0]);
+}
+
+#[test]
+fn transpose_composes_with_matmul() {
+    let mut blas = session(DispatchMode::DeviceOnly);
+    let mut rng = Rng::new(3);
+    let a = NdArray::<f64>::randn(&mut rng, &[40, 70]);
+    // gram matrix two ways: (a.t() @ a) vs gemm with trans_a
+    let g1 = a.t().unwrap().matmul(&a, &mut blas).unwrap();
+    let mut g2 = vec![0.0; 70 * 70];
+    blas.gemm(
+        hero_blas::blas::Transpose::Yes,
+        hero_blas::blas::Transpose::No,
+        1.0,
+        a.data(),
+        (40, 70),
+        a.data(),
+        (40, 70),
+        0.0,
+        &mut g2,
+        (70, 70),
+    )
+    .unwrap();
+    assert!(common::max_abs_diff(g1.data(), &g2) < 1e-10);
+}
+
+#[test]
+fn shape_errors_surface_cleanly() {
+    let mut blas = session(DispatchMode::HostOnly);
+    let a = NdArray::<f64>::zeros(&[3, 4]);
+    let b = NdArray::<f64>::zeros(&[5, 6]);
+    assert!(a.matmul(&b, &mut blas).is_err());
+    let v = NdArray::<f64>::zeros(&[4]);
+    assert!(v.matmul(&a, &mut blas).is_err()); // 1-D lhs
+    assert!(a.matvec(&NdArray::<f64>::zeros(&[3]), &mut blas).is_err());
+    assert!(v.vdot(&NdArray::<f64>::zeros(&[5]), &mut blas).is_err());
+    let mut y = NdArray::<f64>::zeros(&[3]);
+    assert!(y.axpy_from(1.0, &v, &mut blas).is_err());
+}
+
+#[test]
+fn sub_matrix_blocks_multiply_like_the_whole() {
+    // block matmul identity: C = A@B == [A1; A2] @ B stacked
+    let mut blas = session(DispatchMode::DeviceOnly);
+    let mut rng = Rng::new(4);
+    let a = NdArray::<f64>::randn(&mut rng, &[64, 48]);
+    let b = NdArray::<f64>::randn(&mut rng, &[48, 32]);
+    let whole = a.matmul(&b, &mut blas).unwrap();
+    let top = a.slice_rows(0, 24).unwrap().matmul(&b, &mut blas).unwrap();
+    let bot = a.slice_rows(24, 64).unwrap().matmul(&b, &mut blas).unwrap();
+    let stacked = NdArray::vstack(&[&top, &bot]).unwrap();
+    assert!(whole.max_abs_diff(&stacked) < 1e-10);
+}
+
+#[test]
+fn f32_frontend_roundtrip() {
+    let mut blas = session(DispatchMode::DeviceOnly);
+    let mut rng = Rng::new(5);
+    let a = NdArray::<f32>::randn(&mut rng, &[32, 32]);
+    let e = NdArray::<f32>::eye(32);
+    let c = a.matmul(&e, &mut blas).unwrap();
+    assert!(c.max_abs_diff(&a) < 1e-4);
+}

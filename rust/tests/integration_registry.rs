@@ -1,0 +1,196 @@
+//! PJRT artifact registry against the real `make artifacts` output:
+//! load, compile, execute, and compare against the Rust host kernels.
+
+mod common;
+
+use common::{artifacts_dir, max_abs_diff};
+use hero_blas::blas::host;
+use hero_blas::runtime::literal::{lit_1d, lit_2d};
+use hero_blas::runtime::ArtifactRegistry;
+use hero_blas::util::rng::Rng;
+
+#[test]
+fn manifest_has_expected_catalog() {
+    let reg = ArtifactRegistry::open(&artifacts_dir()).unwrap();
+    let man = reg.manifest();
+    assert_eq!((man.tile_m, man.tile_n, man.tile_k), (64, 64, 64));
+    for name in [
+        "gemm_tile_accum_f64",
+        "gemm_tile_accum_f32",
+        "gemm_f64_n128",
+        "gemm_f32_n128",
+        "gemv_f64_n128",
+        "axpy_f64_n1024",
+        "dot_f64_n4096",
+    ] {
+        assert!(man.entry(name).is_ok(), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn fixed_size_gemm_artifact_matches_host_kernel() {
+    let mut reg = ArtifactRegistry::open(&artifacts_dir()).unwrap();
+    let mut rng = Rng::new(77);
+    let n = 128;
+    let a = rng.normal_vec(n * n);
+    let b = rng.normal_vec(n * n);
+    let c = rng.normal_vec(n * n);
+    let out = reg
+        .exec(
+            "gemm_f64_n128",
+            &[
+                lit_2d(&a, n, n).unwrap(),
+                lit_2d(&b, n, n).unwrap(),
+                lit_2d(&c, n, n).unwrap(),
+                lit_1d(&[1.5f64]),
+                lit_1d(&[-0.5f64]),
+            ],
+        )
+        .unwrap();
+    let got = out.to_vec::<f64>().unwrap();
+    let mut want = c.clone();
+    host::gemm(n, n, n, 1.5, &a, &b, -0.5, &mut want);
+    let err = max_abs_diff(&got, &want);
+    assert!(err < 1e-9, "artifact vs host kernel err {err}");
+}
+
+#[test]
+fn tile_accum_artifact_composes_to_full_gemm() {
+    // composing the per-tile artifact over rust's own K loop must equal
+    // the one-shot fixed-size artifact — the two independent lowerings
+    // cross-validate each other.
+    let mut reg = ArtifactRegistry::open(&artifacts_dir()).unwrap();
+    let mut rng = Rng::new(78);
+    let n = 128; // 2x2x2 tiles of 64
+    let a = rng.normal_vec(n * n);
+    let b = rng.normal_vec(n * n);
+
+    let tile = 64;
+    let g = n / tile;
+    let mut c = vec![0.0f64; n * n];
+    for i in 0..g {
+        for j in 0..g {
+            let mut acc = vec![0.0f64; tile * tile];
+            for kk in 0..g {
+                let mut at = vec![0.0f64; tile * tile];
+                let mut bt = vec![0.0f64; tile * tile];
+                for r in 0..tile {
+                    for cc in 0..tile {
+                        at[r * tile + cc] = a[(i * tile + r) * n + kk * tile + cc];
+                        bt[r * tile + cc] = b[(kk * tile + r) * n + j * tile + cc];
+                    }
+                }
+                let out = reg
+                    .exec(
+                        "gemm_tile_accum_f64",
+                        &[
+                            lit_2d(&acc, tile, tile).unwrap(),
+                            lit_2d(&at, tile, tile).unwrap(),
+                            lit_2d(&bt, tile, tile).unwrap(),
+                        ],
+                    )
+                    .unwrap();
+                acc = out.to_vec::<f64>().unwrap();
+            }
+            for r in 0..tile {
+                for cc in 0..tile {
+                    c[(i * tile + r) * n + j * tile + cc] = acc[r * tile + cc];
+                }
+            }
+        }
+    }
+
+    let zero = vec![0.0f64; n * n];
+    let one_shot = reg
+        .exec(
+            "gemm_f64_n128",
+            &[
+                lit_2d(&a, n, n).unwrap(),
+                lit_2d(&b, n, n).unwrap(),
+                lit_2d(&zero, n, n).unwrap(),
+                lit_1d(&[1.0f64]),
+                lit_1d(&[0.0f64]),
+            ],
+        )
+        .unwrap()
+        .to_vec::<f64>()
+        .unwrap();
+    let err = max_abs_diff(&c, &one_shot);
+    assert!(err < 1e-10, "tile composition vs one-shot artifact: {err}");
+}
+
+#[test]
+fn gemv_and_level1_artifacts_match_host() {
+    let mut reg = ArtifactRegistry::open(&artifacts_dir()).unwrap();
+    let mut rng = Rng::new(79);
+
+    let n = 128;
+    let a = rng.normal_vec(n * n);
+    let x = rng.normal_vec(n);
+    let y = rng.normal_vec(n);
+    let out = reg
+        .exec(
+            "gemv_f64_n128",
+            &[
+                lit_2d(&a, n, n).unwrap(),
+                lit_1d(&x),
+                lit_1d(&y),
+                lit_1d(&[2.0f64]),
+                lit_1d(&[0.5f64]),
+            ],
+        )
+        .unwrap()
+        .to_vec::<f64>()
+        .unwrap();
+    let mut want = y.clone();
+    host::gemv(n, n, 2.0, &a, &x, 0.5, &mut want);
+    assert!(max_abs_diff(&out, &want) < 1e-10);
+
+    let m = 1024;
+    let xv = rng.normal_vec(m);
+    let yv = rng.normal_vec(m);
+    let axpy_out = reg
+        .exec("axpy_f64_n1024", &[lit_1d(&[3.0f64]), lit_1d(&xv), lit_1d(&yv)])
+        .unwrap()
+        .to_vec::<f64>()
+        .unwrap();
+    let mut want = yv.clone();
+    host::axpy(3.0, &xv, &mut want);
+    assert!(max_abs_diff(&axpy_out, &want) < 1e-12);
+
+    let dot_out = reg
+        .exec("dot_f64_n1024", &[lit_1d(&xv), lit_1d(&yv)])
+        .unwrap()
+        .to_vec::<f64>()
+        .unwrap();
+    assert!((dot_out[0] - host::dot(&xv, &yv)).abs() < 1e-9);
+}
+
+#[test]
+fn warm_up_compiles_everything_once() {
+    let mut reg = ArtifactRegistry::open(&artifacts_dir()).unwrap();
+    let total = reg.manifest().entries.len();
+    reg.warm_up().unwrap();
+    assert_eq!(reg.resident(), total);
+    let compiles = reg.stats().compiles;
+    assert_eq!(compiles as usize, total);
+    // second warm-up is a no-op
+    reg.warm_up().unwrap();
+    assert_eq!(reg.stats().compiles, compiles);
+}
+
+#[test]
+fn bad_arg_count_rejected() {
+    let mut reg = ArtifactRegistry::open(&artifacts_dir()).unwrap();
+    let err = match reg.exec("dot_f64_n1024", &[lit_1d(&[0.0f64; 1024])]) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("arg-count mismatch must be rejected"),
+    };
+    assert!(err.contains("args"), "{err}");
+}
+
+#[test]
+fn unknown_artifact_rejected() {
+    let mut reg = ArtifactRegistry::open(&artifacts_dir()).unwrap();
+    assert!(reg.exec("does_not_exist", &[]).is_err());
+}

@@ -1,0 +1,75 @@
+//! The request loop end-to-end: spawn the server on an ephemeral port,
+//! drive it over TCP, check responses and region accounting.
+
+mod common;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use common::artifacts_dir;
+use hero_blas::config::PlatformConfig;
+use hero_blas::util::json_lite::Json;
+
+fn request(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str) -> Json {
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    stream.flush().unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    Json::parse(resp.trim()).unwrap_or_else(|e| panic!("bad response '{resp}': {e}"))
+}
+
+#[test]
+fn serve_gemm_requests_end_to_end() {
+    let dir = artifacts_dir();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        hero_blas::serve::serve(PlatformConfig::default(), &dir, 0, Some(tx))
+    });
+    let port = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+
+    let mut stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    // ping
+    let pong = request(&mut stream, &mut reader, r#"{"op": "ping"}"#);
+    assert_eq!(pong.get("ok"), Some(&Json::Bool(true)));
+
+    // offloaded gemm: regions must be populated and sum to total
+    let r = request(
+        &mut stream,
+        &mut reader,
+        r#"{"op": "gemm", "n": 64, "mode": "device_only"}"#,
+    );
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r:?}");
+    let get = |k: &str| r.get(k).and_then(|v| v.as_f64()).unwrap();
+    assert!(get("data_copy_ms") > 0.0);
+    assert!(get("fork_join_ms") > 0.0);
+    assert!(get("compute_ms") > 0.0);
+    let sum = get("data_copy_ms") + get("fork_join_ms") + get("compute_ms")
+        + get("host_compute_ms");
+    assert!((sum - get("total_ms")).abs() < 1e-6);
+
+    // host-mode gemm: only host_compute
+    let r = request(
+        &mut stream,
+        &mut reader,
+        r#"{"op": "gemm", "n": 32, "mode": "host_only"}"#,
+    );
+    assert!(r.get("host_compute_ms").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    assert_eq!(r.get("data_copy_ms").and_then(|v| v.as_f64()).unwrap(), 0.0);
+
+    // malformed request: error response, connection stays up
+    let r = request(&mut stream, &mut reader, r#"{"op": "bogus"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    let r = request(&mut stream, &mut reader, "not json at all");
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+
+    // out-of-range n rejected
+    let r = request(&mut stream, &mut reader, r#"{"op": "gemm", "n": 99999}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+
+    // shutdown stops the server thread
+    let _ = request(&mut stream, &mut reader, r#"{"op": "shutdown"}"#);
+    handle.join().unwrap().unwrap();
+}

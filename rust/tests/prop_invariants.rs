@@ -1,0 +1,184 @@
+//! Property-style tests over coordinator invariants (randomized with the
+//! in-tree deterministic RNG — seeds printed on failure for replay).
+//!
+//! Invariants (DESIGN.md §6): the allocator never double-allocates or
+//! leaks; the data-map round-trips; the device tile walk covers every
+//! output element exactly once for arbitrary shapes; region times always
+//! sum to the grand total; dispatch is total and deterministic.
+
+use hero_blas::blas::dispatch::DispatchPolicy;
+use hero_blas::blas::host;
+use hero_blas::config::PlatformConfig;
+use hero_blas::hero::allocator::{Allocation, Arena};
+use hero_blas::omp::datamap::DataMap;
+use hero_blas::soc::clock::Cycles;
+use hero_blas::soc::iommu::Iommu;
+use hero_blas::soc::trace::{RegionClass, Trace};
+use hero_blas::util::rng::Rng;
+
+const CASES: u64 = 50;
+
+#[test]
+fn prop_allocator_invariants_random_workload() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let mut arena = Arena::new("prop", 0x1000, 1 << 16, 64);
+        let mut live: Vec<Allocation> = Vec::new();
+        for step in 0..200 {
+            if rng.next_f64() < 0.6 || live.is_empty() {
+                let len = 1 + rng.below(4096);
+                if let Ok(a) = arena.alloc(len) {
+                    // no overlap with any live allocation
+                    for b in &live {
+                        assert!(
+                            a.offset + a.len <= b.offset || b.offset + b.len <= a.offset,
+                            "seed {seed} step {step}: overlap {a:?} vs {b:?}"
+                        );
+                    }
+                    live.push(a);
+                }
+            } else {
+                let idx = rng.below(live.len() as u64) as usize;
+                let a = live.swap_remove(idx);
+                arena.free(a).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            }
+            arena
+                .check_invariants()
+                .unwrap_or_else(|e| panic!("seed {seed} step {step}: {e}"));
+        }
+        // free everything: arena must be whole again
+        for a in live.drain(..) {
+            arena.free(a).unwrap();
+        }
+        assert_eq!(arena.free_bytes(), 1 << 16, "seed {seed}: leak");
+        assert_eq!(arena.fragmentation(), 0.0, "seed {seed}: fragmentation");
+    }
+}
+
+#[test]
+fn prop_datamap_refcounts() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xD47A);
+        let mut dm = DataMap::new();
+        let mut refs: std::collections::HashMap<u64, u32> = Default::default();
+        for _ in 0..300 {
+            let host = 0x1000 + rng.below(16) * 0x100;
+            if rng.next_f64() < 0.5 {
+                dm.map(host, 0xA000_0000 + host, 256).unwrap();
+                *refs.entry(host).or_insert(0) += 1;
+            } else if let Some(r) = refs.get_mut(&host) {
+                if *r > 0 {
+                    let released = dm.unmap(host).unwrap();
+                    *r -= 1;
+                    assert_eq!(released.is_some(), *r == 0, "seed {seed}");
+                }
+            } else {
+                assert!(dm.unmap(host).is_err());
+            }
+        }
+        let expect_live = refs.values().filter(|&&r| r > 0).count();
+        assert_eq!(dm.live_mappings(), expect_live, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_iommu_map_translate_unmap() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x10CC);
+        let mut iommu = Iommu::new(PlatformConfig::default().iommu);
+        let mut maps = Vec::new();
+        for _ in 0..20 {
+            let addr = 0x10_0000 + rng.below(1 << 20);
+            let len = 1 + rng.below(64 * 1024);
+            let (m, _) = iommu.map(addr, len).unwrap();
+            // translation preserves the page offset at both ends
+            let (h0, _) = iommu.translate(m.iova).unwrap();
+            assert_eq!(h0 % 4096, 0, "seed {seed}: iova base maps to page base");
+            let (hl, _) = iommu.translate(m.iova + len - 1).unwrap();
+            // host pages of one mapping are contiguous, so the window is
+            // linear: last byte maps exactly (len-1) past the first
+            assert_eq!(hl - h0, len - 1, "seed {seed}: contiguous iova window");
+            maps.push(m);
+        }
+        let pages: u64 = maps.iter().map(|m| m.pages).sum();
+        assert_eq!(iommu.live_pages() as u64, pages, "seed {seed}");
+        for m in maps.drain(..) {
+            iommu.unmap(&m);
+        }
+        assert_eq!(iommu.live_pages(), 0, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_trace_regions_sum_to_total() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x77AC);
+        let mut trace = Trace::new();
+        let classes = RegionClass::ALL;
+        let mut start = 0u64;
+        for _ in 0..100 {
+            let c = classes[rng.below(4) as usize];
+            let dur = rng.below(10_000);
+            trace.record(c, Cycles(start), Cycles(dur), "x");
+            start += dur;
+        }
+        let sum: u64 = classes.iter().map(|&c| trace.total(c).0).sum();
+        assert_eq!(sum, trace.grand_total().0, "seed {seed}");
+        let share_sum: f64 = classes.iter().map(|&c| trace.share(c)).sum();
+        assert!((share_sum - 1.0).abs() < 1e-9 || trace.grand_total().0 == 0);
+    }
+}
+
+#[test]
+fn prop_dispatch_total_and_deterministic() {
+    let p = DispatchPolicy::default();
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xD15);
+        for _ in 0..100 {
+            let m = 1 + rng.below(4096) as usize;
+            let n = 1 + rng.below(4096) as usize;
+            let k = 1 + rng.below(4096) as usize;
+            // total: never panics; deterministic: same answer twice
+            assert_eq!(p.gemm(m, n, k), p.gemm(m, n, k));
+            assert_eq!(p.gemv(m, n), p.gemv(m, n));
+        }
+    }
+}
+
+#[test]
+fn prop_packed_gemm_equals_naive_random_shapes() {
+    for seed in 0..25 {
+        let mut rng = Rng::new(seed ^ 0x6E44);
+        let m = 1 + rng.below(96) as usize;
+        let n = 1 + rng.below(96) as usize;
+        let k = 1 + rng.below(96) as usize;
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(k * n);
+        let c0 = rng.normal_vec(m * n);
+        let alpha = rng.next_normal();
+        let beta = rng.next_normal();
+        let mut c1 = c0.clone();
+        let mut c2 = c0.clone();
+        host::naive_gemm(m, n, k, alpha, &a, &b, beta, &mut c1);
+        host::gemm(m, n, k, alpha, &a, &b, beta, &mut c2);
+        let err = c1
+            .iter()
+            .zip(c2.iter())
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f64::max);
+        assert!(err < 1e-10, "seed {seed} ({m},{n},{k}): err {err}");
+    }
+}
+
+#[test]
+fn prop_transpose_involution() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x7A45);
+        let r = 1 + rng.below(32) as usize;
+        let c = 1 + rng.below(32) as usize;
+        let x = rng.normal_vec(r * c);
+        let xt = host::materialize_op(&x, r, c, hero_blas::blas::Transpose::Yes);
+        let xtt = host::materialize_op(&xt, c, r, hero_blas::blas::Transpose::Yes);
+        assert_eq!(x, xtt, "seed {seed}");
+    }
+}

@@ -1,0 +1,63 @@
+#!/usr/bin/env python
+"""Plot the Figure 3 reproduction from the harness CSV.
+
+Usage:
+    cargo run --release -- fig3 --out fig3.csv
+    python tools/plot_fig3.py fig3.csv fig3.png
+"""
+import csv
+import sys
+from collections import defaultdict
+
+
+def main() -> None:
+    src = sys.argv[1] if len(sys.argv) > 1 else "fig3.csv"
+    dst = sys.argv[2] if len(sys.argv) > 2 else "fig3.png"
+    rows = list(csv.DictReader(open(src)))
+    by_mode = defaultdict(list)
+    for r in rows:
+        by_mode[r["mode"]].append(r)
+
+    try:
+        import matplotlib
+
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+        import numpy as np
+    except ImportError:
+        print("matplotlib unavailable; printing the table instead")
+        for mode, rs in by_mode.items():
+            for r in rs:
+                print(mode, r["n"], float(r["total_s"]) * 1e3, "ms")
+        return
+
+    modes = list(by_mode)
+    fig, ax = plt.subplots(figsize=(7, 4))
+    width = 0.8 / len(modes)
+    ns = sorted({int(r["n"]) for r in rows})
+    x = np.arange(len(ns))
+    regions = [("data_copy_s", "#d62728"), ("fork_join_s", "#ff7f0e"),
+               ("compute_s", "#2ca02c"), ("host_compute_s", "#1f77b4")]
+    for mi, mode in enumerate(modes):
+        rs = {int(r["n"]): r for r in by_mode[mode]}
+        bottom = np.zeros(len(ns))
+        for key, color in regions:
+            vals = np.array([float(rs[n][key]) * 1e3 if n in rs else 0.0 for n in ns])
+            ax.bar(x + mi * width, vals, width, bottom=bottom, color=color,
+                   label=key[:-2] if mi == 0 else None)
+            bottom += vals
+    ax.set_yscale("log")
+    ax.set_xticks(x + 0.4 - width / 2)
+    ax.set_xticklabels([str(n) for n in ns])
+    ax.set_xlabel("matrix size n (f64 GEMM)")
+    ax.set_ylabel("execution time [ms, log]")
+    ax.set_title("Figure 3 reproduction: host vs offload, stacked regions\n"
+                 f"(bar groups: {', '.join(modes)})")
+    ax.legend()
+    fig.tight_layout()
+    fig.savefig(dst, dpi=150)
+    print(f"wrote {dst}")
+
+
+if __name__ == "__main__":
+    main()
