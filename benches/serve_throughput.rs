@@ -1,0 +1,146 @@
+//! Bench: serving throughput vs device-pool size and batching.
+//!
+//! Spins the full TCP server up in-process at pool sizes 1/2/4 with
+//! batching off/on and drives it with concurrent clients issuing 64x64
+//! `device_only` GEMM requests (64 is *below* the paper's Figure-3
+//! crossover — exactly where the batcher's fork-join amortization and
+//! the pool's parallelism must earn their keep).  One JSON object per
+//! line, like the fig3 harness reports (ISSUE 1 acceptance: pool 4 +
+//! batching >= 2x the serial seed-style loop).
+//!
+//! ```sh
+//! cargo bench --bench serve_throughput
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{mpsc, Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use hero_blas::config::PlatformConfig;
+
+const N: usize = 64;
+
+struct Point {
+    pool: u32,
+    batching: bool,
+    clients: usize,
+    per_client: usize,
+    wall: Duration,
+    retries: u64,
+}
+
+impl Point {
+    fn rps(&self) -> f64 {
+        (self.clients * self.per_client) as f64 / self.wall.as_secs_f64()
+    }
+
+    fn json(&self, speedup_vs_serial: f64) -> String {
+        format!(
+            "{{\"bench\": \"serve_throughput\", \"n\": {N}, \"pool\": {}, \
+             \"batching\": {}, \"clients\": {}, \"requests\": {}, \
+             \"wall_ms\": {:.1}, \"rps\": {:.1}, \"retries\": {}, \
+             \"speedup_vs_serial\": {:.2}}}",
+            self.pool,
+            self.batching,
+            self.clients,
+            self.clients * self.per_client,
+            self.wall.as_secs_f64() * 1e3,
+            self.rps(),
+            self.retries,
+            speedup_vs_serial,
+        )
+    }
+}
+
+/// Serve with the given scheduler knobs and hammer it with clients.
+fn run_point(pool: u32, batching: bool, clients: usize, per_client: usize) -> Point {
+    let mut cfg = PlatformConfig::default();
+    cfg.sched.pool_clusters = pool;
+    cfg.sched.queue_capacity = 256;
+    cfg.sched.batch_window_ms = if batching { 2 } else { 0 };
+    cfg.sched.batch_max = if batching { 8 } else { 1 };
+
+    let dir = hero_blas::find_artifacts_dir().expect("run `make artifacts` first");
+    let (tx, rx) = mpsc::channel();
+    let server =
+        std::thread::spawn(move || hero_blas::serve::serve(cfg, &dir, 0, Some(tx)));
+    let port = rx.recv_timeout(Duration::from_secs(300)).expect("server ready");
+
+    let barrier = Arc::new(Barrier::new(clients + 1));
+    let workers: Vec<_> = (0..clients)
+        .map(|c| {
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                barrier.wait();
+                let mut retries = 0u64;
+                let mut done = 0usize;
+                while done < per_client {
+                    let seed = (c * per_client + done) as u64;
+                    let line = format!(
+                        "{{\"op\": \"gemm\", \"n\": {N}, \"mode\": \"device_only\", \
+                         \"seed\": {seed}}}\n"
+                    );
+                    stream.write_all(line.as_bytes()).unwrap();
+                    stream.flush().unwrap();
+                    let mut resp = String::new();
+                    reader.read_line(&mut resp).unwrap();
+                    if resp.contains("\"ok\": true") {
+                        done += 1;
+                    } else if resp.contains("retry_after_ms") {
+                        retries += 1;
+                        std::thread::sleep(Duration::from_millis(2));
+                    } else {
+                        panic!("request failed: {resp}");
+                    }
+                }
+                retries
+            })
+        })
+        .collect();
+
+    barrier.wait();
+    let t0 = Instant::now();
+    let retries = workers.into_iter().map(|w| w.join().unwrap()).sum();
+    let wall = t0.elapsed();
+
+    // stop the server
+    let mut stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    stream.write_all(b"{\"op\": \"shutdown\"}\n").unwrap();
+    stream.flush().unwrap();
+    let mut resp = String::new();
+    let _ = reader.read_line(&mut resp);
+    server.join().unwrap().unwrap();
+
+    Point { pool, batching, clients, per_client, wall, retries }
+}
+
+fn main() {
+    println!("== serve throughput: 64x64 device_only GEMM requests/sec ==\n");
+
+    // the serial seed-style loop: one cluster, one client, no batching —
+    // functionally the old single-session accept loop
+    let serial = run_point(1, false, 1, 40);
+    let base = serial.rps();
+    println!("{}", serial.json(1.0));
+
+    for pool in [1u32, 2, 4] {
+        for batching in [false, true] {
+            if pool == 1 && !batching {
+                continue; // already measured as the serial baseline
+            }
+            let p = run_point(pool, batching, 8, 25);
+            println!("{}", p.json(p.rps() / base));
+        }
+    }
+
+    println!(
+        "\npool parallelism scales wall-clock across clusters; batching\n\
+         coalesces queued same-shape requests so the fork-join overhead —\n\
+         dominant below the Figure-3 crossover — is paid once per batch.\n\
+         Acceptance: pool=4 batching=true must show speedup_vs_serial >= 2.0."
+    );
+}

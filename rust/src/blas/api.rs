@@ -30,6 +30,24 @@ pub struct HeroBlas {
     pub policy: DispatchPolicy,
 }
 
+/// A coalesced same-shape GEMM batch in flight on this session's cluster
+/// (see [`HeroBlas::gemm_batch_launch`]).
+pub struct GemmBatchRun<T: Elem> {
+    state: device::GemmBatchState,
+    _elem: std::marker::PhantomData<T>,
+}
+
+impl<T: Elem> GemmBatchRun<T> {
+    /// Number of coalesced requests in the launch.
+    pub fn len(&self) -> usize {
+        self.state.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.state.is_empty()
+    }
+}
+
 impl std::fmt::Debug for HeroBlas {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("HeroBlas")
@@ -83,6 +101,89 @@ impl HeroBlas {
     // ------------------------------------------------------------------
     // Level 3
     // ------------------------------------------------------------------
+
+    /// Launch a coalesced batch of same-shape GEMMs (`C_i = alpha * A_i @
+    /// B_i + beta * C_i`, row-major, no transposes) as one fork-join
+    /// offload — the scheduler's batcher uses this to amortize the
+    /// paper's per-call offload overhead across coalesced requests.
+    ///
+    /// Returns with compute done and the completion word posted in the
+    /// cluster mailbox; poll [`HeroBlas::offload_completion_pending`] and
+    /// then call [`HeroBlas::gemm_batch_finish`].  The dispatch policy is
+    /// NOT consulted — the caller has already decided to offload (pass
+    /// `zero_copy` for the IOMMU path).
+    pub fn gemm_batch_launch<T: Elem>(
+        &mut self,
+        dims: (usize, usize, usize),
+        alpha: T,
+        beta: T,
+        inputs: &[(&[T], &[T], &[T])],
+        zero_copy: bool,
+    ) -> Result<GemmBatchRun<T>> {
+        device::gemm_batch_launch(
+            &mut self.engine, &mut self.registry, dims, alpha, beta, inputs, zero_copy,
+        )
+        .map(|state| GemmBatchRun { state, _elem: std::marker::PhantomData })
+    }
+
+    /// Join a batch launched with [`HeroBlas::gemm_batch_launch`]: copy
+    /// every member's C back into `outs` (launch order) and release the
+    /// device mappings.
+    pub fn gemm_batch_finish<T: Elem>(
+        &mut self,
+        run: GemmBatchRun<T>,
+        outs: &mut [&mut [T]],
+    ) -> Result<()> {
+        device::gemm_batch_finish(&mut self.engine, run.state, outs)
+    }
+
+    /// Is a completion word pending in the cluster mailbox?  Workers poll
+    /// this between a batch launch and its finish.
+    pub fn offload_completion_pending(&self) -> bool {
+        self.engine.device.mailbox.pending_for_host() > 0
+    }
+
+    /// Convenience: run a same-shape GEMM batch end-to-end, dispatching
+    /// through the policy like [`HeroBlas::gemm`] (host target loops over
+    /// the members; device targets coalesce into one launch).
+    pub fn gemm_batch<T: Elem>(
+        &mut self,
+        dims: (usize, usize, usize),
+        alpha: T,
+        beta: T,
+        a_list: &[&[T]],
+        b_list: &[&[T]],
+        outs: &mut [&mut [T]],
+    ) -> Result<()> {
+        let (m, n, k) = dims;
+        if a_list.len() != b_list.len() || a_list.len() != outs.len() {
+            return Err(crate::error::Error::shape("gemm_batch: ragged batch"));
+        }
+        match self.policy.gemm(m, n, k) {
+            ExecTarget::Host => {
+                for ((a, b), c) in a_list.iter().zip(b_list).zip(outs.iter_mut()) {
+                    self.gemm(
+                        Transpose::No, Transpose::No, alpha, a, (m, k), b, (k, n),
+                        beta, c, (m, n),
+                    )?;
+                }
+                Ok(())
+            }
+            target => {
+                let zero_copy = target == ExecTarget::DeviceZeroCopy;
+                let run = {
+                    let inputs: Vec<(&[T], &[T], &[T])> = a_list
+                        .iter()
+                        .zip(b_list)
+                        .zip(outs.iter())
+                        .map(|((a, b), c)| (*a, *b, &**c as &[T]))
+                        .collect();
+                    self.gemm_batch_launch(dims, alpha, beta, &inputs, zero_copy)?
+                };
+                self.gemm_batch_finish(run, outs)
+            }
+        }
+    }
 
     /// xGEMM: `C = alpha * op(A) @ op(B) + beta * C`.
     /// `a`/`b` are stored row-major with the given stored dims.

@@ -150,6 +150,209 @@ fn write_tile<T: Elem>(
     Ok(())
 }
 
+/// GEMM problem geometry shared by the single-call and batched paths:
+/// user dims, padded dims and the manifest tile shape.
+#[derive(Debug, Clone, Copy)]
+struct GemmGeom {
+    m: usize,
+    n: usize,
+    k: usize,
+    mp: usize,
+    np: usize,
+    kp: usize,
+    tm: usize,
+    tn: usize,
+    tk: usize,
+}
+
+impl GemmGeom {
+    /// Resolve the geometry and run the shared preflight checks (tile
+    /// artifact present, one tile set fits the L1 SPM).
+    fn resolve<T: Elem>(
+        engine: &OffloadEngine,
+        registry: &ArtifactRegistry,
+        m: usize,
+        n: usize,
+        k: usize,
+    ) -> Result<GemmGeom> {
+        let man = registry.manifest();
+        let (tm, tn, tk) = (man.tile_m, man.tile_n, man.tile_k);
+        man.entry(&format!("gemm_tile_accum_{}", T::DTYPE))?; // fail fast
+        let tile_set = ((tm * tk + tk * tn + tm * tn) * T::SIZE) as u64;
+        if !engine.platform.cluster.fits_spm(tile_set) {
+            return Err(Error::Offload(format!(
+                "tile set {tile_set} B exceeds L1 SPM ({} B)",
+                engine.platform.cluster.spm_bytes()
+            )));
+        }
+        Ok(GemmGeom {
+            m,
+            n,
+            k,
+            mp: round_up(m, tm),
+            np: round_up(n, tn),
+            kp: round_up(k, tk),
+            tm,
+            tn,
+            tk,
+        })
+    }
+}
+
+/// Compute phase of one GEMM offload: the DMA-scheduled tile walk (or the
+/// one-shot catalog path) over already-staged buffers, with every burst
+/// charged to the Compute region.  Shared by [`gemm`] and the batched
+/// launch — the batch pays this once per member but forks/joins once.
+fn gemm_compute<T: Elem>(
+    engine: &mut OffloadEngine,
+    registry: &mut ArtifactRegistry,
+    staged: &mut Staged,
+    (ai, bi, ci): (usize, usize, usize),
+    g: GemmGeom,
+    alpha: T,
+    beta: T,
+) -> Result<()> {
+    let artifact = format!("gemm_tile_accum_{}", T::DTYPE);
+    let GemmGeom { m, n, k, mp, np, kp, tm, tn, tk } = g;
+    let f32_path = T::F32_PATH;
+    let gm = mp / tm;
+    let gn = np / tn;
+    let gk = kp / tk;
+    let esz = T::SIZE as u64;
+
+    // cost of one (A-panel + B-panel) refill and one FPU burst
+    let dma_ab = {
+        let d = &engine.platform.dma;
+        d.cost_2d(tm as u64, tk as u64 * esz) + d.cost_2d(tk as u64, tn as u64 * esz)
+    };
+    let fpu = engine.platform.cluster.gemm_tile_cycles(tm, tn, tk, f32_path);
+    let dma_c = engine.platform.dma.cost_2d(tm as u64, tn as u64 * esz);
+    // epilogue: alpha*acc + beta*c on the resident tile (2 flops/elem)
+    let epilogue = engine.platform.cluster.stream_cycles(tm * tn, 2.0, f32_path);
+
+    let beta_zero = beta == T::zero();
+    // Output tiles are distributed round-robin across the PMCA's
+    // clusters; with uniform tiles, wall time is the serial per-tile
+    // cost once per batch of `clusters` tiles (DMA contention between
+    // clusters is not modelled — see DESIGN.md §8).
+    let clusters = engine.platform.cfg.cluster.clusters.max(1) as usize;
+
+    // Fast numerics path (§Perf change L3-2): when the exact square
+    // shape is in the artifact catalog, run ONE one-shot PJRT call on
+    // the staged device bytes instead of gm*gn*gk tile calls.  The
+    // timing charges below are identical either way (the tile
+    // composition == one-shot equivalence is pinned by
+    // rust/tests/integration_registry.rs), and data still flows
+    // through the mapped buffers, so dev-DRAM/IOTLB semantics hold.
+    let one_shot = if m == n && n == k {
+        registry
+            .manifest()
+            .find_sized("gemm", T::DTYPE, m)
+            .map(|e| e.name.clone())
+    } else {
+        None
+    };
+    if let Some(name) = &one_shot {
+        let a_in: Vec<T> = read_tile(engine, staged.get(ai), 0, 0, m, k, kp)?;
+        let b_in: Vec<T> = read_tile(engine, staged.get(bi), 0, 0, k, n, np)?;
+        let c_in: Vec<T> = read_tile(engine, staged.get(ci), 0, 0, m, n, np)?;
+        let out = registry.exec(
+            name,
+            &[
+                lit_2d(&a_in, m, k)?,
+                lit_2d(&b_in, k, n)?,
+                lit_2d(&c_in, m, n)?,
+                lit_1d(&[alpha]),
+                lit_1d(&[beta]),
+            ],
+        )?;
+        let out_vec = out.to_vec::<T>()?;
+        engine.metrics.tile_kernel_calls += 1;
+        write_tile(engine, staged.get_mut(ci), &out_vec, 0, 0, m, n, np)?;
+    }
+    for i in 0..gm {
+        for j in 0..gn {
+            let charge_this_tile = (i * gn + j) % clusters == 0;
+            if let Some(_name) = &one_shot {
+                // numerics already produced; charge the same tile-walk
+                // timing the cluster would spend
+                if charge_this_tile {
+                    for kk in 0..gk {
+                        let charge =
+                            if kk == 0 { dma_ab + fpu } else { dma_ab.max(fpu) };
+                        engine.charge_compute(charge, &format!("tile({i},{j},{kk})"));
+                    }
+                    if !beta_zero {
+                        engine.charge_compute(dma_c, "c_in");
+                    }
+                    engine.charge_compute(epilogue + dma_c, "c_out");
+                }
+                continue;
+            }
+            // acc tile resident in SPM across the K walk
+            let mut acc = vec![T::zero(); tm * tn];
+            for kk in 0..gk {
+                let a_tile: Vec<T> =
+                    read_tile(engine, staged.get(ai), i * tm, kk * tk, tm, tk, kp)?;
+                let b_tile: Vec<T> =
+                    read_tile(engine, staged.get(bi), kk * tk, j * tn, tk, tn, np)?;
+                // numerics: the AOT Pallas tile kernel
+                let out = registry.exec(
+                    &artifact,
+                    &[
+                        lit_2d(&acc, tm, tn)?,
+                        lit_2d(&a_tile, tm, tk)?,
+                        lit_2d(&b_tile, tk, tn)?,
+                    ],
+                )?;
+                acc = out.to_vec::<T>()?;
+                engine.metrics.tile_kernel_calls += 1;
+
+                // timing: first refill is exposed, steady state overlaps
+                if charge_this_tile {
+                    let charge = if kk == 0 { dma_ab + fpu } else { dma_ab.max(fpu) };
+                    engine.charge_compute(charge, &format!("tile({i},{j},{kk})"));
+                }
+            }
+            // epilogue: read C tile (if beta != 0), combine, write back
+            let c_tile: Vec<T> = if beta_zero {
+                vec![T::zero(); tm * tn]
+            } else {
+                if charge_this_tile {
+                    engine.charge_compute(dma_c, "c_in");
+                }
+                read_tile(engine, staged.get(ci), i * tm, j * tn, tm, tn, np)?
+            };
+            let mut out_tile = vec![T::zero(); tm * tn];
+            for idx in 0..tm * tn {
+                out_tile[idx] = alpha * acc[idx] + beta * c_tile[idx];
+            }
+            write_tile(engine, staged.get_mut(ci), &out_tile, i * tm, j * tn, tm, tn, np)?;
+            if charge_this_tile {
+                engine.charge_compute(epilogue + dma_c, "c_out");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Stage one padded (A, B, C) operand set; returns the staged indices.
+#[allow(clippy::too_many_arguments)]
+fn stage_gemm_operands(
+    engine: &mut OffloadEngine,
+    staged: &mut Staged,
+    a_bytes: &[u8],
+    b_bytes: &[u8],
+    c_bytes: &[u8],
+    user_bytes: (u64, u64, u64),
+    zero_copy: bool,
+) -> Result<(usize, usize, usize)> {
+    let ai = staged.push(engine.map_to_charged(a_bytes, user_bytes.0, zero_copy, "a")?);
+    let bi = staged.push(engine.map_to_charged(b_bytes, user_bytes.1, zero_copy, "b")?);
+    let ci = staged.push(engine.map_to_charged(c_bytes, user_bytes.2, zero_copy, "c")?);
+    Ok((ai, bi, ci))
+}
+
 /// Heterogeneous GEMM: `C = alpha * A @ B + beta * C` over materialized
 /// op(A) (m x k) and op(B) (k x n), row-major.
 #[allow(clippy::too_many_arguments)]
@@ -166,26 +369,10 @@ pub fn gemm<T: Elem>(
     c: &mut [T],
     zero_copy: bool,
 ) -> Result<()> {
-    let (tm, tn, tk) = {
-        let man = registry.manifest();
-        (man.tile_m, man.tile_n, man.tile_k)
-    };
-    let artifact = format!("gemm_tile_accum_{}", T::DTYPE);
-    registry.manifest().entry(&artifact)?; // fail fast if missing
-
-    // SPM budget check: one resident tile set must fit the cluster SPM.
-    let tile_set = ((tm * tk + tk * tn + tm * tn) * T::SIZE) as u64;
-    if !engine.platform.cluster.fits_spm(tile_set) {
-        return Err(Error::Offload(format!(
-            "tile set {tile_set} B exceeds L1 SPM ({} B)",
-            engine.platform.cluster.spm_bytes()
-        )));
-    }
-
-    let (mp, np, kp) = (round_up(m, tm), round_up(n, tn), round_up(k, tk));
-    let a_pad = pad2(a, m, k, mp, kp);
-    let b_pad = pad2(b, k, n, kp, np);
-    let c_pad = pad2(c, m, n, mp, np);
+    let g = GemmGeom::resolve::<T>(engine, registry, m, n, k)?;
+    let a_pad = pad2(a, m, k, g.mp, g.kp);
+    let b_pad = pad2(b, k, n, g.kp, g.np);
+    let c_pad = pad2(c, m, n, g.mp, g.np);
 
     // ---- fork ----
     engine.blas_entry();
@@ -197,144 +384,33 @@ pub fn gemm<T: Elem>(
 
     let c_out_bytes = with_recovery(engine, |engine, staged| {
         // ---- data copy (charged at the user's byte counts) ----
-        let ai = staged.push(engine.map_to_charged(
-            &a_bytes, (m * k * T::SIZE) as u64, zero_copy, "a")?);
-        let bi = staged.push(engine.map_to_charged(
-            &b_bytes, (k * n * T::SIZE) as u64, zero_copy, "b")?);
-        let ci = staged.push(engine.map_to_charged(
-            &c_bytes, (m * n * T::SIZE) as u64, zero_copy, "c")?);
+        let (ai, bi, ci) = stage_gemm_operands(
+            engine,
+            staged,
+            &a_bytes,
+            &b_bytes,
+            &c_bytes,
+            (
+                (m * k * T::SIZE) as u64,
+                (k * n * T::SIZE) as u64,
+                (m * n * T::SIZE) as u64,
+            ),
+            zero_copy,
+        )?;
 
         // ---- launch ----
         let mut desc = OffloadDescriptor::new(OffloadKind::Gemm, (m, n, k), T::F32_PATH);
-        for (i, len) in [(ai, a_bytes.len()), (bi, b_bytes.len()), (ci, c_bytes.len())] {
+        for i in [ai, bi, ci] {
             desc.push_arg(OffloadArg {
                 device_addr: staged.get(i).device_addr(),
-                len: len as u64,
+                len: staged.get(i).len,
                 via_iommu: zero_copy,
             });
         }
         engine.launch(&desc)?;
 
-        // ---- compute: DMA-scheduled tile walk over `clusters` ----
-        let f32_path = T::F32_PATH;
-        let gm = mp / tm;
-        let gn = np / tn;
-        let gk = kp / tk;
-        let esz = T::SIZE as u64;
-
-        // cost of one (A-panel + B-panel) refill and one FPU burst
-        let dma_ab = {
-            let d = &engine.platform.dma;
-            d.cost_2d(tm as u64, tk as u64 * esz) + d.cost_2d(tk as u64, tn as u64 * esz)
-        };
-        let fpu = engine.platform.cluster.gemm_tile_cycles(tm, tn, tk, f32_path);
-        let dma_c = engine.platform.dma.cost_2d(tm as u64, tn as u64 * esz);
-        // epilogue: alpha*acc + beta*c on the resident tile (2 flops/elem)
-        let epilogue = engine.platform.cluster.stream_cycles(tm * tn, 2.0, f32_path);
-
-        let beta_zero = beta == T::zero();
-        // Output tiles are distributed round-robin across the PMCA's
-        // clusters; with uniform tiles, wall time is the serial per-tile
-        // cost once per batch of `clusters` tiles (DMA contention between
-        // clusters is not modelled — see DESIGN.md §8).
-        let clusters = engine.platform.cfg.cluster.clusters.max(1) as usize;
-
-        // Fast numerics path (§Perf change L3-2): when the exact square
-        // shape is in the artifact catalog, run ONE one-shot PJRT call on
-        // the staged device bytes instead of gm*gn*gk tile calls.  The
-        // timing charges below are identical either way (the tile
-        // composition == one-shot equivalence is pinned by
-        // rust/tests/integration_registry.rs), and data still flows
-        // through the mapped buffers, so dev-DRAM/IOTLB semantics hold.
-        let one_shot = if m == n && n == k {
-            registry
-                .manifest()
-                .find_sized("gemm", T::DTYPE, m)
-                .map(|e| e.name.clone())
-        } else {
-            None
-        };
-        if let Some(name) = &one_shot {
-            let a_in: Vec<T> = read_tile(engine, staged.get(ai), 0, 0, m, k, kp)?;
-            let b_in: Vec<T> = read_tile(engine, staged.get(bi), 0, 0, k, n, np)?;
-            let c_in: Vec<T> = read_tile(engine, staged.get(ci), 0, 0, m, n, np)?;
-            let out = registry.exec(
-                name,
-                &[
-                    lit_2d(&a_in, m, k)?,
-                    lit_2d(&b_in, k, n)?,
-                    lit_2d(&c_in, m, n)?,
-                    lit_1d(&[alpha]),
-                    lit_1d(&[beta]),
-                ],
-            )?;
-            let out_vec = out.to_vec::<T>()?;
-            engine.metrics.tile_kernel_calls += 1;
-            write_tile(engine, staged.get_mut(ci), &out_vec, 0, 0, m, n, np)?;
-        }
-        for i in 0..gm {
-            for j in 0..gn {
-                let charge_this_tile = (i * gn + j) % clusters == 0;
-                if let Some(_name) = &one_shot {
-                    // numerics already produced; charge the same tile-walk
-                    // timing the cluster would spend
-                    if charge_this_tile {
-                        for kk in 0..gk {
-                            let charge =
-                                if kk == 0 { dma_ab + fpu } else { dma_ab.max(fpu) };
-                            engine.charge_compute(charge, &format!("tile({i},{j},{kk})"));
-                        }
-                        if !beta_zero {
-                            engine.charge_compute(dma_c, "c_in");
-                        }
-                        engine.charge_compute(epilogue + dma_c, "c_out");
-                    }
-                    continue;
-                }
-                // acc tile resident in SPM across the K walk
-                let mut acc = vec![T::zero(); tm * tn];
-                for kk in 0..gk {
-                    let a_tile: Vec<T> =
-                        read_tile(engine, staged.get(ai), i * tm, kk * tk, tm, tk, kp)?;
-                    let b_tile: Vec<T> =
-                        read_tile(engine, staged.get(bi), kk * tk, j * tn, tk, tn, np)?;
-                    // numerics: the AOT Pallas tile kernel
-                    let out = registry.exec(
-                        &artifact,
-                        &[
-                            lit_2d(&acc, tm, tn)?,
-                            lit_2d(&a_tile, tm, tk)?,
-                            lit_2d(&b_tile, tk, tn)?,
-                        ],
-                    )?;
-                    acc = out.to_vec::<T>()?;
-                    engine.metrics.tile_kernel_calls += 1;
-
-                    // timing: first refill is exposed, steady state overlaps
-                    if charge_this_tile {
-                        let charge = if kk == 0 { dma_ab + fpu } else { dma_ab.max(fpu) };
-                        engine.charge_compute(charge, &format!("tile({i},{j},{kk})"));
-                    }
-                }
-                // epilogue: read C tile (if beta != 0), combine, write back
-                let c_tile: Vec<T> = if beta_zero {
-                    vec![T::zero(); tm * tn]
-                } else {
-                    if charge_this_tile {
-                        engine.charge_compute(dma_c, "c_in");
-                    }
-                    read_tile(engine, staged.get(ci), i * tm, j * tn, tm, tn, np)?
-                };
-                let mut out_tile = vec![T::zero(); tm * tn];
-                for idx in 0..tm * tn {
-                    out_tile[idx] = alpha * acc[idx] + beta * c_tile[idx];
-                }
-                write_tile(engine, staged.get_mut(ci), &out_tile, i * tm, j * tn, tm, tn, np)?;
-                if charge_this_tile {
-                    engine.charge_compute(epilogue + dma_c, "c_out");
-                }
-            }
-        }
+        // ---- compute ----
+        gemm_compute(engine, registry, staged, (ai, bi, ci), g, alpha, beta)?;
 
         // ---- join + copy back ----
         engine.join()?;
@@ -350,9 +426,227 @@ pub fn gemm<T: Elem>(
     // un-pad into the caller's C
     let c_full = T::bytes_to_vec(&c_out_bytes);
     for r in 0..m {
-        c[r * n..(r + 1) * n].copy_from_slice(&c_full[r * np..r * np + n]);
+        c[r * n..(r + 1) * n].copy_from_slice(&c_full[r * g.np..r * g.np + n]);
     }
     Ok(())
+}
+
+/// One member of an in-flight coalesced GEMM launch.  Owns the padded
+/// byte images so their addresses stay valid (they key the engine's
+/// data-map) until the batch is unmapped at finish time.
+#[derive(Debug)]
+struct BatchMember {
+    /// Never read back — held only so the A/B images outlive the unmap
+    /// (the engine's data-map is keyed by their host addresses).
+    #[allow(dead_code)]
+    a_bytes: Vec<u8>,
+    #[allow(dead_code)]
+    b_bytes: Vec<u8>,
+    c_bytes: Vec<u8>,
+    ai: usize,
+    bi: usize,
+    ci: usize,
+}
+
+/// A coalesced same-shape GEMM launch between its doorbell and its join.
+///
+/// Produced by [`gemm_batch_launch`]; consumed by [`gemm_batch_finish`].
+/// While one of these is live the device is `Running` and the completion
+/// word is already posted in the cluster mailbox — the scheduler's
+/// workers poll the mailbox and then finish.
+#[derive(Debug)]
+pub struct GemmBatchState {
+    staged: Staged,
+    members: Vec<BatchMember>,
+    geom: GemmGeom,
+    elem_size: usize,
+}
+
+impl GemmBatchState {
+    /// Number of coalesced requests in this launch.
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+}
+
+impl std::fmt::Debug for Staged {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Staged").field("bufs", &self.bufs.len()).finish()
+    }
+}
+
+/// Launch a batch of same-shape GEMMs (`C_i = alpha * A_i @ B_i + beta *
+/// C_i`, row-major, op(A) m x k / op(B) k x n) as ONE offload: one
+/// OpenBLAS entry, one target region, one descriptor with `3 * batch`
+/// mapped arguments, one doorbell — the paper's fork/join overhead is
+/// paid once and amortized across the batch, which moves the effective
+/// Figure-3 crossover below the single-call size.
+///
+/// On return the compute is done and the completion word is posted; call
+/// [`gemm_batch_finish`] (after polling the mailbox, if overlapping) to
+/// join, copy results back and release the mappings.  Any error releases
+/// everything staged so far and aborts the launch, exactly like the
+/// single-call path.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_batch_launch<T: Elem>(
+    engine: &mut OffloadEngine,
+    registry: &mut ArtifactRegistry,
+    (m, n, k): (usize, usize, usize),
+    alpha: T,
+    beta: T,
+    inputs: &[(&[T], &[T], &[T])],
+    zero_copy: bool,
+) -> Result<GemmBatchState> {
+    if inputs.is_empty() {
+        return Err(Error::shape("gemm_batch: empty batch"));
+    }
+    for (a, b, c) in inputs {
+        if a.len() != m * k || b.len() != k * n || c.len() != m * n {
+            return Err(Error::shape(format!(
+                "gemm_batch: member operand sizes {}x{}x{} don't match ({m}, {n}, {k})",
+                a.len(),
+                b.len(),
+                c.len()
+            )));
+        }
+    }
+    let g = GemmGeom::resolve::<T>(engine, registry, m, n, k)?;
+
+    // ---- fork (once for the whole batch) ----
+    engine.blas_entry();
+    engine.target_begin(3 * inputs.len());
+
+    let mut staged = Staged::default();
+    let r = (|| -> Result<Vec<BatchMember>> {
+        let user_bytes = (
+            (m * k * T::SIZE) as u64,
+            (k * n * T::SIZE) as u64,
+            (m * n * T::SIZE) as u64,
+        );
+        let mut members = Vec::with_capacity(inputs.len());
+        for (a, b, c) in inputs {
+            let a_bytes = T::slice_to_bytes(&pad2(a, m, k, g.mp, g.kp));
+            let b_bytes = T::slice_to_bytes(&pad2(b, k, n, g.kp, g.np));
+            let c_bytes = T::slice_to_bytes(&pad2(c, m, n, g.mp, g.np));
+            let (ai, bi, ci) = stage_gemm_operands(
+                engine, &mut staged, &a_bytes, &b_bytes, &c_bytes, user_bytes, zero_copy,
+            )?;
+            members.push(BatchMember { a_bytes, b_bytes, c_bytes, ai, bi, ci });
+        }
+
+        // ---- one descriptor, one doorbell for the whole batch ----
+        let mut desc = OffloadDescriptor::new(OffloadKind::Gemm, (m, n, k), T::F32_PATH);
+        for mem in &members {
+            for i in [mem.ai, mem.bi, mem.ci] {
+                desc.push_arg(OffloadArg {
+                    device_addr: staged.get(i).device_addr(),
+                    len: staged.get(i).len,
+                    via_iommu: zero_copy,
+                });
+            }
+        }
+        engine.launch(&desc)?;
+
+        // ---- compute: the cluster walks every member's tiles ----
+        for mem in &members {
+            gemm_compute(
+                engine, registry, &mut staged, (mem.ai, mem.bi, mem.ci), g, alpha, beta,
+            )?;
+        }
+
+        // post the completion word (pollable via the mailbox; the host
+        // join happens in gemm_batch_finish)
+        engine.device_complete()?;
+        Ok(members)
+    })();
+
+    match r {
+        Ok(members) => Ok(GemmBatchState { staged, members, geom: g, elem_size: T::SIZE }),
+        Err(e) => {
+            staged.release_all(engine);
+            engine.abort_offload();
+            engine.target_end();
+            Err(e)
+        }
+    }
+}
+
+/// Join a coalesced launch: drain the completion word, copy every
+/// member's C back (un-padded into `outs`, one slice per member, in
+/// launch order), release all mappings and exit the target region.
+pub fn gemm_batch_finish<T: Elem>(
+    engine: &mut OffloadEngine,
+    mut state: GemmBatchState,
+    outs: &mut [&mut [T]],
+) -> Result<()> {
+    let g = state.geom;
+    let finish = (|| -> Result<()> {
+        if outs.len() != state.members.len() {
+            return Err(Error::shape(format!(
+                "gemm_batch_finish: {} outputs for a batch of {}",
+                outs.len(),
+                state.members.len()
+            )));
+        }
+        if T::SIZE != state.elem_size {
+            return Err(Error::shape("gemm_batch_finish: element type mismatch"));
+        }
+        engine.join_completed()?;
+        for (mem, out) in state.members.iter().zip(outs.iter_mut()) {
+            if out.len() != g.m * g.n {
+                return Err(Error::shape(format!(
+                    "gemm_batch_finish: output len {} != {}x{}",
+                    out.len(),
+                    g.m,
+                    g.n
+                )));
+            }
+            let mut c_out = vec![0u8; mem.c_bytes.len()];
+            engine.map_from_charged(
+                state.staged.get(mem.ci),
+                &mut c_out,
+                (g.m * g.n * T::SIZE) as u64,
+                "c",
+            )?;
+            let c_full = T::bytes_to_vec(&c_out);
+            for r in 0..g.m {
+                out[r * g.n..(r + 1) * g.n]
+                    .copy_from_slice(&c_full[r * g.np..r * g.np + g.n]);
+            }
+        }
+        for mem in &state.members {
+            engine.unmap(state.staged.take(mem.ai), "a")?;
+            engine.unmap(state.staged.take(mem.bi), "b")?;
+            engine.unmap(state.staged.take(mem.ci), "c")?;
+        }
+        engine.target_end();
+        Ok(())
+    })();
+
+    if let Err(e) = finish {
+        state.staged.release_all(engine);
+        engine.abort_offload();
+        engine.target_end();
+        return Err(e);
+    }
+    Ok(())
+}
+
+/// Device-DRAM bytes one staged batch member occupies for an (m, n, k)
+/// GEMM — lets the scheduler cap a batch to what the cluster's DRAM
+/// partition can hold before it commits to a coalesced launch.
+pub fn gemm_staged_bytes<T: Elem>(
+    registry: &ArtifactRegistry,
+    (m, n, k): (usize, usize, usize),
+) -> u64 {
+    let man = registry.manifest();
+    let (tm, tn, tk) = (man.tile_m, man.tile_n, man.tile_k);
+    let (mp, np, kp) = (round_up(m, tm), round_up(n, tn), round_up(k, tk));
+    ((mp * kp + kp * np + mp * np) * T::SIZE) as u64
 }
 
 /// Heterogeneous GEMV: `y = alpha * A @ x + beta * y` over materialized

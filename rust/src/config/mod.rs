@@ -12,6 +12,6 @@ mod workload;
 
 pub use platform::{
     ClockConfig, ClusterConfig, DmaConfig, ForkJoinConfig, HostConfig,
-    IommuConfig, MemoryConfig, PlatformConfig,
+    IommuConfig, MemoryConfig, PlatformConfig, SchedConfig,
 };
 pub use workload::{DispatchMode, SweepConfig, WorkloadConfig};

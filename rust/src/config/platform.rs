@@ -117,6 +117,45 @@ pub struct IommuConfig {
     pub pte_teardown_cycles: u64,
 }
 
+/// Offload-scheduler knobs (the [`crate::sched`] pool/queue/batcher).
+///
+/// These describe the *serving* layer on top of the SoC model: how many
+/// simulated PMCA clusters the device pool boots, how deep the bounded
+/// work queue is before backpressure kicks in, and how aggressively
+/// same-shape requests are coalesced into one fork-join launch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedConfig {
+    /// Simulated PMCA clusters in the device pool.  Each cluster gets its
+    /// own worker thread, mailbox and device-DRAM partition (the 64 MiB
+    /// partition is split evenly, page-aligned).  Note the tradeoff: a
+    /// bigger pool means smaller slices, which lowers the largest GEMM a
+    /// single offload can stage (pool 4 on the default platform caps
+    /// device-path n around ~800 f64; oversized requests fail cleanly
+    /// with an allocator error).
+    pub pool_clusters: u32,
+    /// Bounded work-queue capacity across all priority classes.  Pushes
+    /// beyond it are rejected with a retry-after hint (backpressure).
+    pub queue_capacity: u32,
+    /// How long a worker waits for more same-shape requests to coalesce
+    /// into one launch (0 = only batch what is already queued).
+    pub batch_window_ms: u64,
+    /// Max requests coalesced into one fork-join launch (1 = batching
+    /// off; the launch overhead is then paid per request, as the paper
+    /// measures it).
+    pub batch_max: u32,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            pool_clusters: 4,
+            queue_capacity: 64,
+            batch_window_ms: 2,
+            batch_max: 8,
+        }
+    }
+}
+
 /// Complete platform description.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PlatformConfig {
@@ -129,6 +168,7 @@ pub struct PlatformConfig {
     pub dma: DmaConfig,
     pub forkjoin: ForkJoinConfig,
     pub iommu: IommuConfig,
+    pub sched: SchedConfig,
 }
 
 impl Default for PlatformConfig {
@@ -181,6 +221,7 @@ impl Default for PlatformConfig {
                 iotlb_miss_cycles: 120,
                 pte_teardown_cycles: 427,
             },
+            sched: SchedConfig::default(),
         }
     }
 }
@@ -242,6 +283,27 @@ impl PlatformConfig {
                 iotlb_miss_cycles: d.req_u64("iommu.iotlb_miss_cycles")?,
                 pte_teardown_cycles: d.req_u64("iommu.pte_teardown_cycles")?,
             },
+            // Scheduler knobs are serving policy, not SoC calibration —
+            // unlike the timing constants above they default when absent,
+            // so pre-scheduler platform files keep parsing.
+            sched: {
+                let def = SchedConfig::default();
+                SchedConfig {
+                    pool_clusters: d
+                        .opt_u64("sched.pool_clusters")
+                        .unwrap_or(def.pool_clusters as u64)
+                        as u32,
+                    queue_capacity: d
+                        .opt_u64("sched.queue_capacity")
+                        .unwrap_or(def.queue_capacity as u64)
+                        as u32,
+                    batch_window_ms: d
+                        .opt_u64("sched.batch_window_ms")
+                        .unwrap_or(def.batch_window_ms),
+                    batch_max: d.opt_u64("sched.batch_max").unwrap_or(def.batch_max as u64)
+                        as u32,
+                }
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -264,7 +326,9 @@ impl PlatformConfig {
              per_arg_cycles = {}\ndoorbell_cycles = {}\ndevice_wakeup_cycles = {}\n\
              join_cycles = {}\nexit_cycles = {}\n\n\
              [iommu]\npage_bytes = {}\npte_create_cycles = {}\niotlb_entries = {}\n\
-             iotlb_miss_cycles = {}\npte_teardown_cycles = {}\n",
+             iotlb_miss_cycles = {}\npte_teardown_cycles = {}\n\n\
+             [sched]\npool_clusters = {}\nqueue_capacity = {}\n\
+             batch_window_ms = {}\nbatch_max = {}\n",
             c.name,
             c.clock.freq_hz,
             fmt_f64(c.host.flops_per_cycle),
@@ -297,6 +361,10 @@ impl PlatformConfig {
             c.iommu.iotlb_entries,
             c.iommu.iotlb_miss_cycles,
             c.iommu.pte_teardown_cycles,
+            c.sched.pool_clusters,
+            c.sched.queue_capacity,
+            c.sched.batch_window_ms,
+            c.sched.batch_max,
         )
     }
 
@@ -333,6 +401,18 @@ impl PlatformConfig {
         }
         if self.dma.bytes_per_cycle <= 0.0 {
             return err("dma.bytes_per_cycle must be > 0".into());
+        }
+        if self.sched.pool_clusters == 0 || self.sched.pool_clusters > 64 {
+            return err(format!(
+                "sched.pool_clusters must be in 1..=64, got {}",
+                self.sched.pool_clusters
+            ));
+        }
+        if self.sched.queue_capacity == 0 {
+            return err("sched.queue_capacity must be > 0".into());
+        }
+        if self.sched.batch_max == 0 {
+            return err("sched.batch_max must be > 0 (1 disables batching)".into());
         }
         // Address-map regions must not overlap.
         let m = &self.memory;
@@ -438,6 +518,28 @@ mod tests {
         let text = cfg.to_toml_string();
         let back = PlatformConfig::from_toml_str(&text).unwrap();
         assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn sched_section_defaults_when_absent() {
+        let mut text = PlatformConfig::default().to_toml_string();
+        let at = text.find("[sched]").unwrap();
+        text.truncate(at);
+        let cfg = PlatformConfig::from_toml_str(&text).unwrap();
+        assert_eq!(cfg.sched, SchedConfig::default());
+    }
+
+    #[test]
+    fn rejects_bad_sched() {
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.pool_clusters = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.queue_capacity = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.batch_max = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

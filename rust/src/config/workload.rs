@@ -97,7 +97,7 @@ impl WorkloadConfig {
 
     /// Parse from TOML text; unset fields fall back to the defaults.
     pub fn from_toml_str(text: &str) -> Result<Self> {
-        use crate::util::toml_lite::{TomlDoc, TomlValue};
+        use crate::util::toml_lite::TomlDoc;
         let d = TomlDoc::parse(text)?;
         let mut cfg = WorkloadConfig::default();
         if let Some(op) = d.opt_str("op") {
@@ -109,8 +109,9 @@ impl WorkloadConfig {
         if let Some(seed) = d.opt_u64("seed") {
             cfg.seed = seed;
         }
-        if let Some(TomlValue::Array(sizes)) = d.get("sweep.sizes") {
-            cfg.sweep.sizes = sizes
+        if d.get("sweep.sizes").is_some() {
+            cfg.sweep.sizes = d
+                .req_array("sweep.sizes")?
                 .iter()
                 .map(|v| {
                     v.as_u64().map(|u| u as usize).ok_or_else(|| {
@@ -119,8 +120,9 @@ impl WorkloadConfig {
                 })
                 .collect::<Result<Vec<_>>>()?;
         }
-        if let Some(TomlValue::Array(modes)) = d.get("sweep.modes") {
-            cfg.sweep.modes = modes
+        if d.get("sweep.modes").is_some() {
+            cfg.sweep.modes = d
+                .req_array("sweep.modes")?
                 .iter()
                 .map(|v| {
                     v.as_str()
@@ -186,6 +188,14 @@ mod tests {
         assert!(w.validate().is_err());
         w.sweep.sizes = vec![8192];
         assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn mistyped_sweep_array_is_an_error_not_ignored() {
+        let e = WorkloadConfig::from_toml_str("[sweep]\nsizes = 64")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("sweep.sizes"), "{e}");
     }
 
     #[test]

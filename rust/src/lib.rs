@@ -16,6 +16,10 @@
 //! | ① LibHero / kernel module | [`hero`] |
 //! | platform (CVA6 + Snitch PMCA on VCU128) | [`soc`] |
 //!
+//! Above the paper's stack sits the serving layer: [`sched`] pools N
+//! simulated clusters behind a bounded priority queue with request
+//! batching, and [`serve`] feeds it from concurrent TCP connections.
+//!
 //! Device numerics execute AOT-compiled JAX/Pallas kernels through the
 //! PJRT CPU client ([`runtime`]); device *timing* comes from the
 //! calibrated SoC cost models ([`soc`]). See `DESIGN.md` for the
@@ -31,6 +35,7 @@ pub mod metrics;
 pub mod npy;
 pub mod omp;
 pub mod runtime;
+pub mod sched;
 pub mod serve;
 pub mod soc;
 pub mod util;

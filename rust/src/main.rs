@@ -34,7 +34,8 @@ fn usage() -> String {
        fig3 [--sizes 16,32,64,128,256] [--size N] [--csv]\n\
        project [--size N] [--dtype f32]\n\
        inspect\n\
-       serve [--port 7744]\n"
+       serve [--port 7744] [--pool N] [--queue N] [--batch-window-ms N]\n\
+             [--batch-max N]\n"
         .to_string()
 }
 
@@ -248,7 +249,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .map(|s| s.parse().map_err(|_| Error::Config("--port: not a u16".into())))
         .transpose()?
         .unwrap_or(7744);
-    let cfg = load_platform(args)?;
+    let mut cfg = load_platform(args)?;
+    // scheduler knobs: CLI overrides on top of the platform's [sched]
+    let num = |name: &str| -> Result<Option<u64>> {
+        flag_value(&args.rest, name)
+            .map(|s| {
+                s.parse()
+                    .map_err(|_| Error::Config(format!("{name}: not a number")))
+            })
+            .transpose()
+    };
+    let narrow = |name: &str, v: u64| -> Result<u32> {
+        u32::try_from(v).map_err(|_| Error::Config(format!("{name}: out of range")))
+    };
+    if let Some(v) = num("--pool")? {
+        cfg.sched.pool_clusters = narrow("--pool", v)?;
+    }
+    if let Some(v) = num("--queue")? {
+        cfg.sched.queue_capacity = narrow("--queue", v)?;
+    }
+    if let Some(v) = num("--batch-window-ms")? {
+        cfg.sched.batch_window_ms = v;
+    }
+    if let Some(v) = num("--batch-max")? {
+        cfg.sched.batch_max = narrow("--batch-max", v)?;
+    }
     let dir = artifacts_dir(args)?;
     hero_blas::serve::serve(cfg, &dir, port, None)
 }

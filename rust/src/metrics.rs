@@ -1,7 +1,12 @@
 //! Run-time counters for the coordinator (reported by `hero-blas serve`
 //! and the harness alongside virtual-time results).
+//!
+//! Two families live here: [`Metrics`], the per-engine counters each
+//! offload session accumulates, and [`SchedCounters`], the shared
+//! thread-safe counters of the [`crate::sched`] scheduler (one set per
+//! scheduler, updated by every worker and by the submit path).
 
-
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Aggregate counters across one engine lifetime.
 #[derive(Debug, Default, Clone, Copy)]
@@ -44,6 +49,91 @@ impl Metrics {
     }
 }
 
+/// Thread-safe scheduler counters, shared between the submit path and
+/// every pool worker.  Read with [`SchedCounters::snapshot`].
+#[derive(Debug, Default)]
+pub struct SchedCounters {
+    /// Jobs accepted into the work queue.
+    pub submitted: AtomicU64,
+    /// Jobs rejected at submit time (queue full — backpressure).
+    pub rejected: AtomicU64,
+    /// Jobs that completed and replied successfully.
+    pub completed: AtomicU64,
+    /// Jobs that replied with an error.
+    pub failed: AtomicU64,
+    /// Fork-join launches issued by workers (batched or not).
+    pub batches: AtomicU64,
+    /// Jobs that shared a launch with at least one other job.
+    pub batched_jobs: AtomicU64,
+    /// Deepest queue observed at submit time.
+    pub queue_depth_peak: AtomicU64,
+    /// EWMA of per-job wall service time in microseconds (drives the
+    /// retry-after hint on rejected submits).
+    pub service_us_ewma: AtomicU64,
+}
+
+impl SchedCounters {
+    /// Record the queue depth seen after a successful push.
+    pub fn note_queue_depth(&self, depth: u64) {
+        self.queue_depth_peak.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    /// Fold one per-job service time into the EWMA (alpha = 1/8).
+    pub fn note_service_us(&self, us: u64) {
+        // Racy read-modify-write is fine: this is a smoothed hint, not an
+        // exact accumulator.
+        let old = self.service_us_ewma.load(Ordering::Relaxed);
+        let new = if old == 0 { us } else { (old * 7 + us) / 8 };
+        self.service_us_ewma.store(new, Ordering::Relaxed);
+    }
+
+    /// Consistent-enough point-in-time copy.
+    pub fn snapshot(&self) -> SchedMetrics {
+        let ld = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        SchedMetrics {
+            submitted: ld(&self.submitted),
+            rejected: ld(&self.rejected),
+            completed: ld(&self.completed),
+            failed: ld(&self.failed),
+            batches: ld(&self.batches),
+            batched_jobs: ld(&self.batched_jobs),
+            queue_depth_peak: ld(&self.queue_depth_peak),
+            service_us_ewma: ld(&self.service_us_ewma),
+        }
+    }
+}
+
+/// Plain-value snapshot of [`SchedCounters`].
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SchedMetrics {
+    pub submitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub batches: u64,
+    pub batched_jobs: u64,
+    pub queue_depth_peak: u64,
+    pub service_us_ewma: u64,
+}
+
+impl SchedMetrics {
+    /// Render a compact single-line summary (mirrors [`Metrics::summary`]).
+    pub fn summary(&self) -> String {
+        format!(
+            "submitted={} completed={} rejected={} failed={} batches={} \
+             batched_jobs={} queue_peak={} service_ewma={}us",
+            self.submitted,
+            self.completed,
+            self.rejected,
+            self.failed,
+            self.batches,
+            self.batched_jobs,
+            self.queue_depth_peak,
+            self.service_us_ewma,
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -63,5 +153,31 @@ mod tests {
         let m = Metrics::new();
         assert_eq!(m.offloads, 0);
         assert_eq!(m.pjrt_wall_us, 0);
+    }
+
+    #[test]
+    fn sched_counters_snapshot_and_summary() {
+        let c = SchedCounters::default();
+        c.submitted.fetch_add(5, Ordering::Relaxed);
+        c.completed.fetch_add(4, Ordering::Relaxed);
+        c.rejected.fetch_add(1, Ordering::Relaxed);
+        c.note_queue_depth(3);
+        c.note_queue_depth(2); // peak keeps the max
+        let s = c.snapshot();
+        assert_eq!(s.submitted, 5);
+        assert_eq!(s.queue_depth_peak, 3);
+        assert!(s.summary().contains("rejected=1"));
+    }
+
+    #[test]
+    fn service_ewma_converges() {
+        let c = SchedCounters::default();
+        c.note_service_us(800);
+        assert_eq!(c.snapshot().service_us_ewma, 800);
+        for _ in 0..64 {
+            c.note_service_us(100);
+        }
+        let v = c.snapshot().service_us_ewma;
+        assert!(v >= 100 && v < 200, "ewma drifted to {v}");
     }
 }

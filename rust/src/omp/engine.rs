@@ -140,14 +140,31 @@ impl OffloadEngine {
         Ok(())
     }
 
-    /// Device completion + host-side join.
-    pub fn join(&mut self) -> Result<()> {
+    /// Device-side completion: the cluster posts its status word through
+    /// the mailbox (doorbell back to the host).  After this, the
+    /// completion is observable via the mailbox — the scheduler's workers
+    /// poll it before joining, which is how one host thread overlaps with
+    /// its cluster.
+    pub fn device_complete(&mut self) -> Result<()> {
         let c = self.device.complete()?;
+        self.charge(RegionClass::ForkJoin, c, "complete");
+        Ok(())
+    }
+
+    /// Host-side join of an already-posted completion: drain the mailbox
+    /// word and pay the return path through the kernel module.
+    pub fn join_completed(&mut self) -> Result<()> {
         self.device.wait()?;
         let j = Cycles(self.platform.cfg.forkjoin.join_cycles);
-        self.charge(RegionClass::ForkJoin, c + j, "join");
+        self.charge(RegionClass::ForkJoin, j, "join");
         self.metrics.offloads += 1;
         Ok(())
+    }
+
+    /// Device completion + host-side join (the synchronous path).
+    pub fn join(&mut self) -> Result<()> {
+        self.device_complete()?;
+        self.join_completed()
     }
 
     /// libomptarget + OpenBLAS exit.
@@ -426,6 +443,23 @@ mod tests {
         assert!(fj > 0 && dc > 0 && cp == 1000);
         assert_eq!(e.trace.grand_total().0, fj + dc + cp);
         assert_eq!(e.metrics.offloads, 1);
+    }
+
+    #[test]
+    fn split_join_exposes_completion_word() {
+        let mut e = engine();
+        e.reset_run();
+        let desc = OffloadDescriptor::new(OffloadKind::Gemm, (8, 8, 8), false);
+        e.launch(&desc).unwrap();
+        assert_eq!(e.device.mailbox.pending_for_host(), 0);
+        e.device_complete().unwrap();
+        // the completion word is pollable before the host joins
+        assert_eq!(e.device.mailbox.pending_for_host(), 1);
+        e.join_completed().unwrap();
+        assert_eq!(e.device.mailbox.pending_for_host(), 0);
+        assert_eq!(e.metrics.offloads, 1);
+        // joining again without a launch is an error, not a hang
+        assert!(e.join_completed().is_err());
     }
 
     #[test]

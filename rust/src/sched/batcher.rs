@@ -1,0 +1,178 @@
+//! Request coalescing: same-shape GEMMs share one fork-join launch.
+//!
+//! The paper's Figure 3 shows offload *losing* below the crossover size
+//! because the fixed fork-join cost (~1.2 M host cycles of OpenBLAS +
+//! libomptarget entry, doorbell, wake-up, join and exit) dwarfs the
+//! compute.  Serving traffic is full of small same-shape calls, so the
+//! batcher amortizes that fixed cost: a worker that picks up a GEMM
+//! peels every already-queued request with the same [`BatchKey`] off the
+//! queue — and optionally lingers for `window` so near-simultaneous
+//! requests coalesce too — then the whole set goes down as ONE offload
+//! descriptor (see `blas::device::gemm_batch_launch`).  A batch of B
+//! pays the fork-join once, cutting the per-request overhead by ~B×,
+//! which moves the effective crossover below the single-call size.
+
+use std::time::{Duration, Instant};
+
+use crate::config::DispatchMode;
+
+use super::queue::WorkQueue;
+use super::Job;
+
+/// Coalescing identity: only jobs agreeing on all fields may share a
+/// launch (same shape => same padded buffers and tile walk; same mode =>
+/// same dispatch target).  The seed is deliberately NOT part of the key —
+/// members keep their own operands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchKey {
+    pub op: &'static str,
+    pub n: usize,
+    pub mode: DispatchMode,
+}
+
+/// The coalescing policy (cheap to clone; one per scheduler, shared by
+/// value with every worker).
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    /// How long to linger for more same-key arrivals after the first job
+    /// (0 = grab only what is already queued).
+    pub window: Duration,
+    /// Hard cap on members per launch (1 = batching off).
+    pub max: usize,
+}
+
+impl Batcher {
+    pub fn new(window: Duration, max: usize) -> Batcher {
+        Batcher { window, max: max.max(1) }
+    }
+
+    /// Batching off: every job launches alone (the paper's measured
+    /// per-call configuration).
+    pub fn disabled() -> Batcher {
+        Batcher { window: Duration::ZERO, max: 1 }
+    }
+
+    /// Grow a batch around `first`: peel same-key jobs off the queue up
+    /// to `min(self.max, cap)` members, lingering at most `self.window`.
+    /// `cap` lets the caller bound the batch by device-DRAM capacity.
+    /// Unbatchable jobs (no key) return alone.
+    pub fn collect(&self, queue: &WorkQueue, first: Job, cap: usize) -> Vec<Job> {
+        let mut batch = vec![first];
+        let key = match batch[0].batch_key() {
+            Some(k) => k,
+            None => return batch,
+        };
+        let max = self.max.min(cap.max(1));
+        if max <= 1 {
+            return batch;
+        }
+        let deadline = Instant::now() + self.window;
+        loop {
+            batch.extend(queue.try_pop_matching(&key, max - batch.len()));
+            if batch.len() >= max {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            // Lingering trades a bounded latency bump for a large
+            // fork-join saving; poll briefly rather than parking so a
+            // sub-millisecond window still coalesces bursts.
+            std::thread::sleep((deadline - now).min(Duration::from_micros(200)));
+        }
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{GemmRequest, JobPayload, Priority};
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn gemm_job(id: u64, n: usize) -> Job {
+        let (tx, _rx) = mpsc::channel();
+        Job {
+            id,
+            priority: Priority::Normal,
+            payload: JobPayload::Gemm(GemmRequest {
+                n,
+                mode: DispatchMode::DeviceOnly,
+                seed: id,
+            }),
+            reply: tx,
+            enqueued_at: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn zero_window_grabs_only_whats_queued() {
+        let q = WorkQueue::new(16);
+        for id in 2..=4 {
+            q.push(gemm_job(id, 64)).unwrap();
+        }
+        q.push(gemm_job(5, 128)).unwrap();
+        let b = Batcher::new(Duration::ZERO, 8);
+        let batch = b.collect(&q, gemm_job(1, 64), usize::MAX);
+        let ids: Vec<u64> = batch.iter().map(|j| j.id).collect();
+        assert_eq!(ids, vec![1, 2, 3, 4]);
+        assert_eq!(q.depth(), 1); // the 128 job stays
+    }
+
+    #[test]
+    fn max_and_cap_bound_the_batch() {
+        let q = WorkQueue::new(16);
+        for id in 2..=8 {
+            q.push(gemm_job(id, 64)).unwrap();
+        }
+        let b = Batcher::new(Duration::ZERO, 4);
+        assert_eq!(b.collect(&q, gemm_job(1, 64), usize::MAX).len(), 4);
+        // device-DRAM cap tightens further
+        assert_eq!(b.collect(&q, gemm_job(9, 64), 2).len(), 2);
+        // cap 0 is treated as 1 (the first job always runs)
+        assert_eq!(b.collect(&q, gemm_job(10, 64), 0).len(), 1);
+    }
+
+    #[test]
+    fn disabled_batcher_never_coalesces() {
+        let q = WorkQueue::new(16);
+        q.push(gemm_job(2, 64)).unwrap();
+        let batch = Batcher::disabled().collect(&q, gemm_job(1, 64), usize::MAX);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(q.depth(), 1);
+    }
+
+    #[test]
+    fn window_coalesces_late_arrivals() {
+        let q = std::sync::Arc::new(WorkQueue::new(16));
+        let qc = std::sync::Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            qc.push(gemm_job(2, 64)).unwrap();
+        });
+        let b = Batcher::new(Duration::from_millis(500), 8);
+        let batch = b.collect(&q, gemm_job(1, 64), usize::MAX);
+        h.join().unwrap();
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn fence_runs_alone() {
+        let q = WorkQueue::new(16);
+        q.push(gemm_job(2, 64)).unwrap();
+        let (tx, _rx) = mpsc::channel();
+        let (_ftx, frx) = mpsc::channel();
+        let fence = Job {
+            id: 1,
+            priority: Priority::Normal,
+            payload: JobPayload::Fence(frx),
+            reply: tx,
+            enqueued_at: Instant::now(),
+        };
+        let b = Batcher::new(Duration::from_millis(50), 8);
+        assert_eq!(b.collect(&q, fence, usize::MAX).len(), 1);
+        assert_eq!(q.depth(), 1);
+    }
+}

@@ -1,0 +1,382 @@
+//! Multi-cluster offload scheduler: concurrent serving with batching,
+//! device pooling and backpressure.
+//!
+//! The paper offloads one BLAS call at a time through a synchronous
+//! OpenMP fork-join, and the original `serve` loop mirrored that limit:
+//! one session, one connection at a time.  HERO exposes the accelerator
+//! as *multiple* clusters behind mailboxes, and ESP-style SoCs scale by
+//! treating accelerators as a schedulable pool — this module builds that
+//! layer.  Four pieces, each in its own file:
+//!
+//! | piece | file | role |
+//! |---|---|---|
+//! | device pool | [`pool`] | boots N simulated PMCA clusters, each with its own mailbox and an even, page-aligned slice of the device-DRAM partition |
+//! | work queue | [`queue`] | bounded, three priority classes, rejects with a retry-after hint when full (backpressure) |
+//! | batcher | [`batcher`] | coalesces same-shape GEMM requests into ONE fork-join launch, amortizing the paper's offload overhead below the Figure-3 crossover |
+//! | workers | [`worker`] | one thread per cluster: pull jobs, consult the dispatch policy, launch, poll the cluster mailbox for completion, reply |
+//!
+//! [`Scheduler`] is the facade: `submit` enqueues a job and hands back a
+//! receiver for its result; connection handlers block on the receiver
+//! while the pool completes requests out of band.  Config knobs live in
+//! [`crate::config::SchedConfig`] (`[sched]` in the platform TOML):
+//! `pool_clusters`, `queue_capacity`, `batch_window_ms`, `batch_max`.
+//!
+//! Each worker owns a full vertical slice (engine + artifact registry +
+//! policy) built *on its own thread* — nothing session-internal crosses
+//! threads, only [`Job`]s and their reply channels.
+
+pub mod batcher;
+pub mod pool;
+pub mod queue;
+pub mod worker;
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::config::{DispatchMode, PlatformConfig};
+use crate::error::{Error, Result};
+use crate::metrics::{SchedCounters, SchedMetrics};
+
+pub use batcher::{BatchKey, Batcher};
+pub use pool::{ClusterSpec, DevicePool};
+pub use queue::{PushError, WorkQueue};
+
+/// Priority class of a queued job (three lanes; higher pops first).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Priority {
+    High,
+    Normal,
+    Low,
+}
+
+impl Priority {
+    /// Lane index, highest priority first.
+    pub fn lane(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+}
+
+impl std::str::FromStr for Priority {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "high" => Ok(Priority::High),
+            "normal" => Ok(Priority::Normal),
+            "low" => Ok(Priority::Low),
+            other => Err(Error::Config(format!("unknown priority '{other}'"))),
+        }
+    }
+}
+
+impl std::fmt::Display for Priority {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        })
+    }
+}
+
+/// One GEMM serving request: square n x n operands synthesized from a
+/// deterministic seed (the serving protocol is workload-generating, like
+/// the original serve loop — the checksum makes results verifiable).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GemmRequest {
+    pub n: usize,
+    pub mode: DispatchMode,
+    /// Seed for the synthetic operands; identical (n, seed) requests are
+    /// bit-identical, which is what lets the batcher coalesce safely and
+    /// tests assert checksums.
+    pub seed: u64,
+}
+
+/// What a job asks the pool to do.
+#[derive(Debug)]
+pub enum JobPayload {
+    Gemm(GemmRequest),
+    /// Drain barrier: the worker that pops this parks until the sender
+    /// releases (or drops) the channel.  Used by tests and benches to
+    /// hold a cluster busy deterministically — e.g. to fill the queue
+    /// and observe backpressure without racing the pool.
+    Fence(mpsc::Receiver<()>),
+}
+
+/// A unit of work in the queue.
+#[derive(Debug)]
+pub struct Job {
+    pub id: u64,
+    pub priority: Priority,
+    pub payload: JobPayload,
+    /// Where the worker sends the result; the submitting connection
+    /// blocks on the paired receiver.
+    pub reply: mpsc::Sender<JobResult>,
+    pub enqueued_at: Instant,
+}
+
+impl Job {
+    /// Coalescing key: jobs with equal keys may share one fork-join
+    /// launch.  `None` never batches.
+    pub fn batch_key(&self) -> Option<BatchKey> {
+        match &self.payload {
+            JobPayload::Gemm(r) => Some(BatchKey { op: "gemm", n: r.n, mode: r.mode }),
+            JobPayload::Fence(_) => None,
+        }
+    }
+}
+
+/// Successful completion of one job.
+#[derive(Debug, Clone, Copy)]
+pub struct GemmOutcome {
+    pub n: usize,
+    pub mode: DispatchMode,
+    /// Sum of the result matrix (verifiable against the seed).
+    pub checksum: f64,
+    /// Per-request share of the batch's virtual-time regions, ms.
+    pub data_copy_ms: f64,
+    pub fork_join_ms: f64,
+    pub compute_ms: f64,
+    pub host_compute_ms: f64,
+    pub total_ms: f64,
+    /// Which pool cluster served the request.
+    pub cluster: u32,
+    /// How many requests shared the fork-join launch.
+    pub batch_size: usize,
+    /// Wall-clock the job waited in the queue, ms.
+    pub queue_ms: f64,
+}
+
+/// What comes back on the reply channel.
+pub type JobResult = std::result::Result<GemmOutcome, String>;
+
+/// Why a submit was refused.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SubmitError {
+    /// Queue at capacity — retry after the hinted backoff.
+    Backpressure { depth: usize, retry_after_ms: u64 },
+    /// Scheduler is shutting down; the pool no longer accepts work.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Backpressure { depth, retry_after_ms } => write!(
+                f,
+                "queue full (depth {depth}); retry after {retry_after_ms} ms"
+            ),
+            SubmitError::ShuttingDown => f.write_str("scheduler shutting down"),
+        }
+    }
+}
+
+/// The scheduler facade: device pool + queue + workers, one per serve
+/// process.  Dropping it (or calling [`Scheduler::shutdown`]) closes the
+/// queue, lets workers drain what's left, and joins them.
+pub struct Scheduler {
+    queue: Arc<WorkQueue>,
+    counters: Arc<SchedCounters>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    pool_size: usize,
+    next_id: AtomicU64,
+}
+
+impl std::fmt::Debug for Scheduler {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Scheduler")
+            .field("pool_size", &self.pool_size)
+            .field("queue_depth", &self.queue.depth())
+            .finish()
+    }
+}
+
+impl Scheduler {
+    /// Boot the pool and wait until every worker has built and warmed its
+    /// session (so the first request never pays compile latency).  Any
+    /// worker failing to boot tears the whole scheduler down and returns
+    /// the error.
+    pub fn new(cfg: &PlatformConfig, artifacts: &Path) -> Result<Scheduler> {
+        cfg.validate()?;
+        let sc = &cfg.sched;
+        let pool = DevicePool::partition(cfg, sc.pool_clusters)?;
+        let queue = Arc::new(WorkQueue::new(sc.queue_capacity as usize));
+        let counters = Arc::new(SchedCounters::default());
+        let batcher = Batcher::new(
+            std::time::Duration::from_millis(sc.batch_window_ms),
+            sc.batch_max as usize,
+        );
+
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let mut handles = Vec::new();
+        for spec in pool.into_specs() {
+            handles.push(worker::spawn(
+                spec,
+                artifacts.to_path_buf(),
+                Arc::clone(&queue),
+                Arc::clone(&counters),
+                batcher.clone(),
+                ready_tx.clone(),
+            ));
+        }
+        drop(ready_tx);
+
+        let mut boot_err = None;
+        for _ in 0..handles.len() {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => boot_err = boot_err.or(Some(e)),
+                Err(_) => {
+                    boot_err = boot_err.or(Some(Error::Runtime(
+                        "scheduler worker died during boot".into(),
+                    )))
+                }
+            }
+        }
+        if let Some(e) = boot_err {
+            queue.close();
+            for h in handles {
+                let _ = h.join();
+            }
+            return Err(e);
+        }
+
+        Ok(Scheduler {
+            queue,
+            counters,
+            workers: Mutex::new(handles),
+            pool_size: sc.pool_clusters as usize,
+            next_id: AtomicU64::new(1),
+        })
+    }
+
+    /// Enqueue a job; returns the receiver its result will arrive on, or
+    /// a backpressure rejection when the bounded queue is full.
+    pub fn submit(
+        &self,
+        priority: Priority,
+        payload: JobPayload,
+    ) -> std::result::Result<mpsc::Receiver<JobResult>, SubmitError> {
+        let (tx, rx) = mpsc::channel();
+        let job = Job {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            priority,
+            payload,
+            reply: tx,
+            enqueued_at: Instant::now(),
+        };
+        match self.queue.push(job) {
+            Ok(depth) => {
+                self.counters.submitted.fetch_add(1, Ordering::Relaxed);
+                self.counters.note_queue_depth(depth as u64);
+                Ok(rx)
+            }
+            Err(PushError::Full { depth }) => {
+                self.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::Backpressure {
+                    depth,
+                    retry_after_ms: self.retry_hint(depth),
+                })
+            }
+            Err(PushError::Closed) => Err(SubmitError::ShuttingDown),
+        }
+    }
+
+    /// Backoff hint for a rejected submit: roughly the time the pool
+    /// needs to drain the current backlog, from the smoothed per-job
+    /// service time.  Clamped to [1 ms, 10 s].
+    fn retry_hint(&self, depth: usize) -> u64 {
+        let per_job_us = self.counters.snapshot().service_us_ewma.max(1_000);
+        let us = depth as u64 * per_job_us / self.pool_size.max(1) as u64;
+        (us / 1_000).clamp(1, 10_000)
+    }
+
+    /// Point-in-time scheduler counters.
+    pub fn metrics(&self) -> SchedMetrics {
+        self.counters.snapshot()
+    }
+
+    /// Jobs currently queued (not yet claimed by a worker).
+    pub fn queue_depth(&self) -> usize {
+        self.queue.depth()
+    }
+
+    /// Clusters in the device pool.
+    pub fn pool_size(&self) -> usize {
+        self.pool_size
+    }
+
+    /// Stop accepting work, let workers drain the queue, join them.
+    /// Idempotent; also runs on drop.
+    pub fn shutdown(&self) {
+        self.queue.close();
+        let handles: Vec<_> = self.workers.lock().expect("workers lock").drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::str::FromStr;
+
+    #[test]
+    fn priority_parse_and_lanes() {
+        assert_eq!(Priority::from_str("high").unwrap(), Priority::High);
+        assert_eq!(Priority::from_str("normal").unwrap(), Priority::Normal);
+        assert_eq!(Priority::from_str("low").unwrap(), Priority::Low);
+        assert!(Priority::from_str("urgent").is_err());
+        assert!(Priority::High.lane() < Priority::Normal.lane());
+        assert!(Priority::Normal.lane() < Priority::Low.lane());
+        assert_eq!(Priority::Low.to_string(), "low");
+    }
+
+    #[test]
+    fn gemm_jobs_share_keys_fences_never_batch() {
+        let (tx, _rx) = mpsc::channel();
+        let gemm = |n, seed| Job {
+            id: seed,
+            priority: Priority::Normal,
+            payload: JobPayload::Gemm(GemmRequest {
+                n,
+                mode: DispatchMode::DeviceOnly,
+                seed,
+            }),
+            reply: tx.clone(),
+            enqueued_at: Instant::now(),
+        };
+        assert_eq!(gemm(64, 1).batch_key(), gemm(64, 2).batch_key());
+        assert_ne!(gemm(64, 1).batch_key(), gemm(128, 1).batch_key());
+        let (_ftx, frx) = mpsc::channel();
+        let fence = Job {
+            id: 9,
+            priority: Priority::High,
+            payload: JobPayload::Fence(frx),
+            reply: tx,
+            enqueued_at: Instant::now(),
+        };
+        assert_eq!(fence.batch_key(), None);
+    }
+
+    #[test]
+    fn submit_error_messages() {
+        let e = SubmitError::Backpressure { depth: 7, retry_after_ms: 12 };
+        let s = e.to_string();
+        assert!(s.contains("queue full") && s.contains("12"), "{s}");
+        assert!(SubmitError::ShuttingDown.to_string().contains("shutting down"));
+    }
+}

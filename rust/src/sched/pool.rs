@@ -1,0 +1,136 @@
+//! Device pool: N simulated PMCA clusters from one platform description.
+//!
+//! HERO exposes the accelerator as multiple clusters behind mailboxes;
+//! we model that by stamping out one full SoC slice per pool cluster.
+//! Each cluster spec is the base platform with the device-managed DRAM
+//! partition replaced by an even, page-aligned slice of the original —
+//! so every cluster session builds its own `hero::allocator::Arena`
+//! (disjoint device addresses, physically contiguous within the slice)
+//! and its own `soc::mailbox::Mailbox` (independent doorbells).  The
+//! worker thread that owns a spec boots the session on itself; nothing
+//! device-side is shared between clusters, which is exactly what makes
+//! the pool trivially parallel.
+
+use crate::config::PlatformConfig;
+use crate::error::{Error, Result};
+
+/// Smallest useful DRAM slice: three padded 128x128 f64 operands plus
+/// headroom.  Splitting finer than this would make every offload above
+/// the Figure-3 crossover fail with OOM, so reject it at boot.
+pub const MIN_SLICE_BYTES: u64 = 1 << 20;
+
+/// One bootable cluster: its pool index and its partitioned platform.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub id: u32,
+    pub cfg: PlatformConfig,
+}
+
+/// The partitioned pool (specs only — sessions boot on worker threads).
+#[derive(Debug, Clone)]
+pub struct DevicePool {
+    specs: Vec<ClusterSpec>,
+}
+
+impl DevicePool {
+    /// Split `base`'s device-DRAM partition into `clusters` page-aligned
+    /// slices and derive one per-cluster platform from each.
+    pub fn partition(base: &PlatformConfig, clusters: u32) -> Result<DevicePool> {
+        if clusters == 0 {
+            return Err(Error::Config("device pool needs at least 1 cluster".into()));
+        }
+        let slice = (base.memory.dev_dram_bytes / clusters as u64) & !4095u64;
+        if slice < MIN_SLICE_BYTES {
+            return Err(Error::Config(format!(
+                "pool of {clusters} clusters leaves {slice} B of device DRAM each \
+                 (minimum {MIN_SLICE_BYTES} B) — shrink the pool or grow \
+                 memory.dev_dram_bytes"
+            )));
+        }
+        let mut specs = Vec::with_capacity(clusters as usize);
+        for id in 0..clusters {
+            let mut cfg = base.clone();
+            cfg.name = format!("{}/cluster{id}", base.name);
+            cfg.memory.dev_dram_base = base.memory.dev_dram_base + id as u64 * slice;
+            cfg.memory.dev_dram_bytes = slice;
+            cfg.validate()?;
+            specs.push(ClusterSpec { id, cfg });
+        }
+        Ok(DevicePool { specs })
+    }
+
+    pub fn specs(&self) -> &[ClusterSpec] {
+        &self.specs
+    }
+
+    pub fn into_specs(self) -> Vec<ClusterSpec> {
+        self.specs
+    }
+
+    pub fn size(&self) -> usize {
+        self.specs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hero::device::Device;
+
+    #[test]
+    fn slices_are_disjoint_and_inside_the_original() {
+        let base = PlatformConfig::default();
+        let pool = DevicePool::partition(&base, 4).unwrap();
+        assert_eq!(pool.size(), 4);
+        let orig_end = base.memory.dev_dram_base + base.memory.dev_dram_bytes;
+        let mut prev_end = base.memory.dev_dram_base;
+        for spec in pool.specs() {
+            let m = &spec.cfg.memory;
+            assert!(m.dev_dram_base >= prev_end, "slices overlap");
+            assert_eq!(m.dev_dram_base % 4096, 0);
+            assert!(m.dev_dram_base + m.dev_dram_bytes <= orig_end);
+            prev_end = m.dev_dram_base + m.dev_dram_bytes;
+        }
+        // even split of 64 MiB across 4
+        assert_eq!(pool.specs()[0].cfg.memory.dev_dram_bytes, 16 * 1024 * 1024);
+    }
+
+    #[test]
+    fn single_cluster_pool_is_the_base_partition() {
+        let base = PlatformConfig::default();
+        let pool = DevicePool::partition(&base, 1).unwrap();
+        let m = &pool.specs()[0].cfg.memory;
+        assert_eq!(m.dev_dram_base, base.memory.dev_dram_base);
+        assert_eq!(m.dev_dram_bytes, base.memory.dev_dram_bytes);
+    }
+
+    #[test]
+    fn rejects_zero_and_oversplit() {
+        let base = PlatformConfig::default();
+        assert!(DevicePool::partition(&base, 0).is_err());
+        // 64 MiB / 128 = 512 KiB < MIN_SLICE_BYTES
+        let e = DevicePool::partition(&base, 128).unwrap_err().to_string();
+        assert!(e.contains("device DRAM"), "{e}");
+    }
+
+    #[test]
+    fn booted_clusters_have_independent_mailboxes_and_arenas() {
+        let base = PlatformConfig::default();
+        let pool = DevicePool::partition(&base, 2).unwrap();
+        let mut devs: Vec<Device> =
+            pool.specs().iter().map(|s| Device::new(&s.cfg)).collect();
+
+        // independent DRAM arenas at disjoint device addresses
+        let a0 = devs[0].dram.alloc(4096).unwrap();
+        let a1 = devs[1].dram.alloc(4096).unwrap();
+        assert_ne!(a0.addr, a1.addr);
+        let s0 = &pool.specs()[0].cfg.memory;
+        assert!(a0.addr >= s0.dev_dram_base
+            && a0.addr < s0.dev_dram_base + s0.dev_dram_bytes);
+
+        // independent mailboxes: ringing cluster 0 leaves cluster 1 idle
+        devs[0].mailbox.ring_device(0xBEEF);
+        assert_eq!(devs[0].mailbox.pending_for_device(), 1);
+        assert_eq!(devs[1].mailbox.pending_for_device(), 0);
+    }
+}

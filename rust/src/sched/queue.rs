@@ -1,0 +1,249 @@
+//! Bounded work queue with priority classes and backpressure.
+//!
+//! Three FIFO lanes (high/normal/low) behind one mutex + condvar.  The
+//! bound covers all lanes together: when the queue is full, `push`
+//! rejects immediately — the submit path turns that into the
+//! retry-after JSON line, so overload degrades into fast, explicit
+//! rejections instead of unbounded memory growth and tail latency.
+//!
+//! Workers block on [`WorkQueue::pop_blocking`]; the batcher peels
+//! additional same-key jobs off with [`WorkQueue::try_pop_matching`]
+//! without blocking.  `close` wakes every sleeper and makes the queue
+//! drain-only (pops succeed until empty, pushes fail).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+use super::batcher::BatchKey;
+use super::Job;
+
+/// Why a push was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushError {
+    /// At capacity; `depth` is the current total backlog.
+    Full { depth: usize },
+    /// The queue was closed (scheduler shutting down).
+    Closed,
+}
+
+impl std::fmt::Display for PushError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PushError::Full { depth } => write!(f, "queue full at depth {depth}"),
+            PushError::Closed => f.write_str("queue closed"),
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct Lanes {
+    lanes: [VecDeque<Job>; 3],
+    closed: bool,
+}
+
+impl Lanes {
+    fn depth(&self) -> usize {
+        self.lanes.iter().map(VecDeque::len).sum()
+    }
+}
+
+/// The bounded multi-priority queue.
+#[derive(Debug)]
+pub struct WorkQueue {
+    capacity: usize,
+    inner: Mutex<Lanes>,
+    ready: Condvar,
+}
+
+impl WorkQueue {
+    pub fn new(capacity: usize) -> WorkQueue {
+        assert!(capacity > 0, "queue capacity must be > 0");
+        WorkQueue {
+            capacity,
+            inner: Mutex::new(Lanes::default()),
+            ready: Condvar::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Enqueue into the job's priority lane; returns the new total depth
+    /// or the backpressure rejection.
+    pub fn push(&self, job: Job) -> Result<usize, PushError> {
+        let mut inner = self.inner.lock().expect("queue lock");
+        if inner.closed {
+            return Err(PushError::Closed);
+        }
+        let depth = inner.depth();
+        if depth >= self.capacity {
+            return Err(PushError::Full { depth });
+        }
+        inner.lanes[job.priority.lane()].push_back(job);
+        let depth = inner.depth();
+        drop(inner);
+        self.ready.notify_one();
+        Ok(depth)
+    }
+
+    /// Dequeue the oldest job of the highest non-empty priority lane,
+    /// blocking while the queue is empty.  Returns `None` once the queue
+    /// is closed *and* drained — the worker exit condition.
+    pub fn pop_blocking(&self) -> Option<Job> {
+        let mut inner = self.inner.lock().expect("queue lock");
+        loop {
+            for lane in inner.lanes.iter_mut() {
+                if let Some(job) = lane.pop_front() {
+                    return Some(job);
+                }
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.ready.wait(inner).expect("queue lock");
+        }
+    }
+
+    /// Remove up to `max` queued jobs whose batch key equals `key`,
+    /// scanning lanes in priority order and preserving FIFO order within
+    /// a lane.  Never blocks; used by the batcher to coalesce.
+    pub fn try_pop_matching(&self, key: &BatchKey, max: usize) -> Vec<Job> {
+        let mut out = Vec::new();
+        if max == 0 {
+            return out;
+        }
+        let mut inner = self.inner.lock().expect("queue lock");
+        for lane in inner.lanes.iter_mut() {
+            let mut i = 0;
+            while i < lane.len() && out.len() < max {
+                if lane[i].batch_key().as_ref() == Some(key) {
+                    // O(len) middle removal is fine at serving queue sizes
+                    out.push(lane.remove(i).expect("index checked"));
+                } else {
+                    i += 1;
+                }
+            }
+            if out.len() >= max {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Total jobs queued right now.
+    pub fn depth(&self) -> usize {
+        self.inner.lock().expect("queue lock").depth()
+    }
+
+    /// Stop accepting pushes and wake all sleeping workers.  Queued jobs
+    /// still drain.  Idempotent.
+    pub fn close(&self) {
+        self.inner.lock().expect("queue lock").closed = true;
+        self.ready.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().expect("queue lock").closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DispatchMode;
+    use crate::sched::{GemmRequest, JobPayload, Priority};
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn gemm_job(id: u64, n: usize, priority: Priority) -> Job {
+        let (tx, _rx) = mpsc::channel();
+        // reply receiver intentionally dropped: these tests only exercise
+        // queue mechanics, nobody completes the jobs
+        Job {
+            id,
+            priority,
+            payload: JobPayload::Gemm(GemmRequest {
+                n,
+                mode: DispatchMode::DeviceOnly,
+                seed: id,
+            }),
+            reply: tx,
+            enqueued_at: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn fifo_within_lane_priority_across_lanes() {
+        let q = WorkQueue::new(8);
+        q.push(gemm_job(1, 64, Priority::Low)).unwrap();
+        q.push(gemm_job(2, 64, Priority::Normal)).unwrap();
+        q.push(gemm_job(3, 64, Priority::High)).unwrap();
+        q.push(gemm_job(4, 64, Priority::High)).unwrap();
+        let order: Vec<u64> =
+            (0..4).map(|_| q.pop_blocking().unwrap().id).collect();
+        assert_eq!(order, vec![3, 4, 2, 1]);
+    }
+
+    #[test]
+    fn full_queue_rejects_with_depth() {
+        let q = WorkQueue::new(2);
+        assert_eq!(q.push(gemm_job(1, 64, Priority::Normal)).unwrap(), 1);
+        assert_eq!(q.push(gemm_job(2, 64, Priority::Normal)).unwrap(), 2);
+        match q.push(gemm_job(3, 64, Priority::Normal)) {
+            Err(PushError::Full { depth }) => assert_eq!(depth, 2),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        // draining one slot makes room again
+        q.pop_blocking().unwrap();
+        assert!(q.push(gemm_job(3, 64, Priority::Normal)).is_ok());
+    }
+
+    #[test]
+    fn close_wakes_and_drains() {
+        let q = std::sync::Arc::new(WorkQueue::new(4));
+        q.push(gemm_job(1, 64, Priority::Normal)).unwrap();
+        q.close();
+        assert_eq!(q.push(gemm_job(2, 64, Priority::Normal)), Err(PushError::Closed));
+        // queued job still drains, then the queue reports exhaustion
+        assert!(q.pop_blocking().is_some());
+        assert!(q.pop_blocking().is_none());
+
+        // a parked worker wakes on close instead of hanging
+        let q2 = std::sync::Arc::new(WorkQueue::new(4));
+        let qc = std::sync::Arc::clone(&q2);
+        let h = std::thread::spawn(move || qc.pop_blocking().is_none());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q2.close();
+        assert!(h.join().unwrap());
+    }
+
+    #[test]
+    fn try_pop_matching_peels_same_key_only() {
+        let q = WorkQueue::new(8);
+        q.push(gemm_job(1, 64, Priority::Normal)).unwrap();
+        q.push(gemm_job(2, 128, Priority::Normal)).unwrap();
+        q.push(gemm_job(3, 64, Priority::Normal)).unwrap();
+        q.push(gemm_job(4, 64, Priority::High)).unwrap();
+        let key = gemm_job(0, 64, Priority::Normal).batch_key().unwrap();
+        let got = q.try_pop_matching(&key, 8);
+        // high lane scanned first, then FIFO within normal
+        let ids: Vec<u64> = got.iter().map(|j| j.id).collect();
+        assert_eq!(ids, vec![4, 1, 3]);
+        // the 128 job is untouched
+        assert_eq!(q.depth(), 1);
+        assert_eq!(q.pop_blocking().unwrap().id, 2);
+    }
+
+    #[test]
+    fn try_pop_matching_respects_max() {
+        let q = WorkQueue::new(8);
+        for id in 1..=5 {
+            q.push(gemm_job(id, 64, Priority::Normal)).unwrap();
+        }
+        let key = gemm_job(0, 64, Priority::Normal).batch_key().unwrap();
+        assert_eq!(q.try_pop_matching(&key, 3).len(), 3);
+        assert_eq!(q.depth(), 2);
+        assert!(q.try_pop_matching(&key, 0).is_empty());
+    }
+}

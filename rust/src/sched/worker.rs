@@ -1,0 +1,248 @@
+//! Pool workers: one thread per cluster, each owning a full offload
+//! session.
+//!
+//! A worker boots its `HeroBlas` session *on its own thread* (engine,
+//! PJRT registry and dispatch policy never cross threads), signals
+//! readiness, then loops: pull a job, grow it into a batch (bounded by
+//! the batcher policy AND by what the cluster's DRAM slice can stage),
+//! consult the dispatch policy per job, launch, poll the cluster mailbox
+//! for the completion word, join, and reply to every member.  Requests
+//! complete asynchronously from the submitter's point of view — the
+//! connection handler is parked on the reply channel, not on the
+//! device.
+//!
+//! Failures are contained per batch: the device error path releases the
+//! staged mappings and aborts the launch, every member gets an error
+//! reply, and the worker keeps serving.
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::blas::{DispatchPolicy, ExecTarget, HeroBlas};
+use crate::error::Result;
+use crate::metrics::SchedCounters;
+use crate::soc::trace::RegionClass;
+use crate::util::rng::Rng;
+
+use super::batcher::Batcher;
+use super::pool::ClusterSpec;
+use super::queue::WorkQueue;
+use super::{GemmOutcome, GemmRequest, Job, JobPayload};
+
+/// Spawn one worker thread for `spec`.  It reports session boot success
+/// or failure once through `ready`, then serves until the queue closes.
+pub(crate) fn spawn(
+    spec: ClusterSpec,
+    artifacts: PathBuf,
+    queue: Arc<WorkQueue>,
+    counters: Arc<SchedCounters>,
+    batcher: Batcher,
+    ready: mpsc::Sender<Result<()>>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("sched-worker-{}", spec.id))
+        .spawn(move || run(spec, artifacts, queue, counters, batcher, ready))
+        .expect("spawn scheduler worker")
+}
+
+fn run(
+    spec: ClusterSpec,
+    artifacts: PathBuf,
+    queue: Arc<WorkQueue>,
+    counters: Arc<SchedCounters>,
+    batcher: Batcher,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let mut blas = match boot_session(&spec, &artifacts) {
+        Ok(b) => b,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let _ = ready.send(Ok(()));
+
+    while let Some(job) = queue.pop_blocking() {
+        match job.payload {
+            JobPayload::Fence(ref release) => {
+                // Park until the test/bench releases (or drops) the fence.
+                let _ = release.recv();
+                // counters first: a submitter that observes the reply must
+                // also observe the updated metrics
+                counters.completed.fetch_add(1, Ordering::Relaxed);
+                let _ = job.reply.send(Ok(GemmOutcome::fence_ack(spec.id)));
+            }
+            JobPayload::Gemm(req) => {
+                let cap = batch_cap(&blas, req.n);
+                let batch = batcher.collect(&queue, job, cap);
+                serve_gemm_batch(&mut blas, spec.id, &counters, batch);
+            }
+        }
+    }
+}
+
+fn boot_session(spec: &ClusterSpec, artifacts: &PathBuf) -> Result<HeroBlas> {
+    let mut blas =
+        HeroBlas::new(spec.cfg.clone(), artifacts, DispatchPolicy::default())?;
+    blas.registry.warm_up()?; // no compile latency on the first request
+    Ok(blas)
+}
+
+/// How many batch members this cluster's DRAM slice can stage at once,
+/// with 2x headroom for alignment and the L2 descriptor staging.
+fn batch_cap(blas: &HeroBlas, n: usize) -> usize {
+    let per_member =
+        crate::blas::device::gemm_staged_bytes::<f64>(&blas.registry, (n, n, n)).max(1);
+    ((blas.engine.platform.cfg.memory.dev_dram_bytes / 2) / per_member).max(1) as usize
+}
+
+/// Execute one coalesced batch and reply to every member.
+fn serve_gemm_batch(
+    blas: &mut HeroBlas,
+    cluster: u32,
+    counters: &SchedCounters,
+    batch: Vec<Job>,
+) {
+    let t0 = Instant::now();
+    let b = batch.len();
+    let req = match &batch[0].payload {
+        JobPayload::Gemm(r) => *r,
+        // collect() only coalesces around a gemm job
+        JobPayload::Fence(_) => unreachable!("fence in a gemm batch"),
+    };
+    let queue_ms: Vec<f64> = batch
+        .iter()
+        .map(|j| j.enqueued_at.elapsed().as_secs_f64() * 1e3)
+        .collect();
+
+    blas.policy = DispatchPolicy::with_mode(req.mode);
+    blas.reset_run();
+    let result = execute_batch(blas, &batch);
+
+    match result {
+        Ok(checksums) => {
+            let f = blas.engine.freq_hz();
+            let t = blas.trace();
+            // Uniform shapes => each member gets an even share of the
+            // batch's virtual time; fork/join was paid once for all B.
+            let per = |c: RegionClass| t.total(c).to_ns(f) / 1e6 / b as f64;
+            let total = t.grand_total().to_ns(f) / 1e6 / b as f64;
+            // counters before replies: a submitter that observes its
+            // reply must also observe the updated metrics
+            counters.completed.fetch_add(b as u64, Ordering::Relaxed);
+            counters.batches.fetch_add(1, Ordering::Relaxed);
+            if b > 1 {
+                counters.batched_jobs.fetch_add(b as u64, Ordering::Relaxed);
+            }
+            counters.note_service_us((t0.elapsed().as_micros() as u64 / b as u64).max(1));
+            for ((job, checksum), wait) in batch.iter().zip(&checksums).zip(&queue_ms) {
+                let _ = job.reply.send(Ok(GemmOutcome {
+                    n: req.n,
+                    mode: req.mode,
+                    checksum: *checksum,
+                    data_copy_ms: per(RegionClass::DataCopy),
+                    fork_join_ms: per(RegionClass::ForkJoin),
+                    compute_ms: per(RegionClass::Compute),
+                    host_compute_ms: per(RegionClass::HostCompute),
+                    total_ms: total,
+                    cluster,
+                    batch_size: b,
+                    queue_ms: *wait,
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            counters.failed.fetch_add(b as u64, Ordering::Relaxed);
+            counters.batches.fetch_add(1, Ordering::Relaxed);
+            for job in &batch {
+                let _ = job.reply.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
+/// Synthesize every member's operands from its seed and run the batch on
+/// the policy's target, returning per-member checksums.
+fn execute_batch(blas: &mut HeroBlas, batch: &[Job]) -> Result<Vec<f64>> {
+    let reqs: Vec<GemmRequest> = batch
+        .iter()
+        .map(|j| match &j.payload {
+            JobPayload::Gemm(r) => *r,
+            JobPayload::Fence(_) => unreachable!("fence in a gemm batch"),
+        })
+        .collect();
+    let n = reqs[0].n;
+    let mut data: Vec<(Vec<f64>, Vec<f64>, Vec<f64>)> = reqs
+        .iter()
+        .map(|r| {
+            let mut rng = Rng::new(r.seed);
+            (rng.normal_vec(n * n), rng.normal_vec(n * n), vec![0.0; n * n])
+        })
+        .collect();
+
+    match blas.policy.gemm(n, n, n) {
+        ExecTarget::Host => {
+            for (a, b, c) in data.iter_mut() {
+                blas.gemm(
+                    crate::blas::Transpose::No,
+                    crate::blas::Transpose::No,
+                    1.0,
+                    a,
+                    (n, n),
+                    b,
+                    (n, n),
+                    0.0,
+                    c,
+                    (n, n),
+                )?;
+            }
+        }
+        target => {
+            let zero_copy = target == ExecTarget::DeviceZeroCopy;
+            let run = {
+                let inputs: Vec<(&[f64], &[f64], &[f64])> = data
+                    .iter()
+                    .map(|(a, b, c)| (a.as_slice(), b.as_slice(), c.as_slice()))
+                    .collect();
+                blas.gemm_batch_launch((n, n, n), 1.0, 0.0, &inputs, zero_copy)?
+            };
+            // Completion wait, Hero-runtime style: poll the cluster
+            // mailbox for the status word before joining.  In the
+            // synchronous simulator the word is already posted when
+            // launch returns, so this never spins — it exists to keep
+            // the worker protocol-shaped for a backend where compute
+            // genuinely overlaps the host (the launch/finish split is
+            // what makes that future possible).
+            while !blas.offload_completion_pending() {
+                std::thread::yield_now();
+            }
+            let mut outs: Vec<&mut [f64]> =
+                data.iter_mut().map(|(_, _, c)| c.as_mut_slice()).collect();
+            blas.gemm_batch_finish(run, &mut outs)?;
+        }
+    }
+    Ok(data.iter().map(|(_, _, c)| c.iter().sum()).collect())
+}
+
+impl GemmOutcome {
+    /// Ack for a fence job (no compute, no checksum).
+    pub(crate) fn fence_ack(cluster: u32) -> GemmOutcome {
+        GemmOutcome {
+            n: 0,
+            mode: crate::config::DispatchMode::HostOnly,
+            checksum: 0.0,
+            data_copy_ms: 0.0,
+            fork_join_ms: 0.0,
+            compute_ms: 0.0,
+            host_compute_ms: 0.0,
+            total_ms: 0.0,
+            cluster,
+            batch_size: 1,
+            queue_ms: 0.0,
+        }
+    }
+}

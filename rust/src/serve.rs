@@ -1,30 +1,49 @@
-//! A tiny request loop: the "high-level application" path as a service.
+//! Concurrent request loop: the "high-level application" path as a
+//! service, on top of the [`crate::sched`] multi-cluster scheduler.
 //!
-//! Demonstrates the coordinator role: the rust binary owns a long-lived
-//! [`HeroBlas`] session (PJRT executables stay compiled and warm, the
-//! device stays booted) and serves line-delimited JSON requests over TCP.
-//! Python never appears at request time — the paper's build-time/run-time
+//! The coordinator boots a pool of simulated PMCA clusters (each with a
+//! warm PJRT registry, its own mailbox and DRAM partition) and serves
+//! line-delimited JSON over TCP.  Every connection gets its own handler
+//! thread; requests flow into the bounded work queue and complete
+//! asynchronously on the pool — same-shape GEMMs that meet in the queue
+//! share one fork-join launch (see [`crate::sched::batcher`]).  Python
+//! never appears at request time — the paper's build-time/run-time
 //! split, taken to a serving setting.
 //!
-//! Request  (one line):  {"op": "gemm", "n": 128, "mode": "device_only"}
+//! Request  (one line):  {"op": "gemm", "n": 128, "mode": "device_only",
+//!                        "priority": "high", "seed": 7}
 //! Response (one line):  {"ok": true, "n": 128, "mode": "device_only",
 //!                        "total_ms": ..., "data_copy_ms": ...,
 //!                        "fork_join_ms": ..., "compute_ms": ...,
-//!                        "checksum": ...}
-//! A request {"op": "shutdown"} stops the server (used by tests).
+//!                        "host_compute_ms": ..., "checksum": ...,
+//!                        "cluster": ..., "batch_size": ...,
+//!                        "queue_ms": ...}
+//!
+//! `seed` defaults to a stable function of `n`, so identical requests
+//! return identical checksums.  Malformed or unknown requests always get
+//! an `{"ok": false, "error": ...}` line back and the connection stays
+//! usable.  When the bounded queue is full the response carries a
+//! backpressure hint: {"ok": false, "error": "queue full",
+//! "retry_after_ms": ...}.  `{"op": "metrics"}` reports the scheduler
+//! counters; `{"op": "shutdown"}` stops the server (used by tests).
 
 use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
-use crate::blas::{DispatchPolicy, HeroBlas};
 use crate::config::{DispatchMode, PlatformConfig};
 use crate::error::{Error, Result};
-use crate::npy::NdArray;
-use crate::soc::trace::RegionClass;
+use crate::sched::{GemmOutcome, GemmRequest, JobPayload, Priority, Scheduler, SubmitError};
 use crate::util::json_lite::Json;
-use crate::util::rng::Rng;
+
+/// How often parked connection readers wake to check for shutdown.
+const READ_POLL: Duration = Duration::from_millis(100);
+/// Upper bound on waiting for a job reply (guards against a wedged pool).
+const REPLY_TIMEOUT: Duration = Duration::from_secs(300);
 
 fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
@@ -44,8 +63,64 @@ fn compact(j: &mut Json) -> String {
         .join(" ")
 }
 
+/// Backpressure response: reject-with-retry-after.
+fn backpressure_line(depth: usize, retry_after_ms: u64) -> String {
+    let mut j = obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str("queue full".into())),
+        ("queue_depth", Json::Num(depth as f64)),
+        ("retry_after_ms", Json::Num(retry_after_ms as f64)),
+    ]);
+    compact(&mut j)
+}
+
+fn gemm_response(o: &GemmOutcome) -> String {
+    let mut j = obj(vec![
+        ("ok", Json::Bool(true)),
+        ("n", Json::Num(o.n as f64)),
+        ("mode", Json::Str(o.mode.to_string())),
+        ("data_copy_ms", Json::Num(o.data_copy_ms)),
+        ("fork_join_ms", Json::Num(o.fork_join_ms)),
+        ("compute_ms", Json::Num(o.compute_ms)),
+        ("host_compute_ms", Json::Num(o.host_compute_ms)),
+        ("total_ms", Json::Num(o.total_ms)),
+        ("checksum", Json::Num(o.checksum)),
+        ("cluster", Json::Num(o.cluster as f64)),
+        ("batch_size", Json::Num(o.batch_size as f64)),
+        ("queue_ms", Json::Num(o.queue_ms)),
+    ]);
+    compact(&mut j)
+}
+
+/// Parse a gemm request line into a job payload + priority.
+fn parse_gemm(req: &Json) -> std::result::Result<(GemmRequest, Priority), String> {
+    let n = req.get("n").and_then(|v| v.as_u64()).unwrap_or(128) as usize;
+    if n == 0 || n > 2048 {
+        return Err("n must be in 1..=2048".into());
+    }
+    let mode: DispatchMode = req
+        .get("mode")
+        .and_then(|v| v.as_str())
+        .unwrap_or("auto")
+        .parse()
+        .map_err(|e: Error| e.to_string())?;
+    let priority: Priority = req
+        .get("priority")
+        .and_then(|v| v.as_str())
+        .unwrap_or("normal")
+        .parse()
+        .map_err(|e: Error| e.to_string())?;
+    // Stable default seed: identical requests serve identical workloads
+    // (and batch members stay individually verifiable by checksum).
+    let seed = req
+        .get("seed")
+        .and_then(|v| v.as_u64())
+        .unwrap_or(0xC0FFEE ^ n as u64);
+    Ok((GemmRequest { n, mode, seed }, priority))
+}
+
 /// Handle one request line; returns (response, shutdown?).
-fn handle(blas: &mut HeroBlas, rng: &mut Rng, line: &str) -> (String, bool) {
+fn handle_line(sched: &Scheduler, line: &str) -> (String, bool) {
     let req = match Json::parse(line) {
         Ok(j) => j,
         Err(e) => return (err_line(&format!("bad json: {e}")), false),
@@ -54,73 +129,102 @@ fn handle(blas: &mut HeroBlas, rng: &mut Rng, line: &str) -> (String, bool) {
     match op {
         "shutdown" => (err_line("shutting down"), true),
         "ping" => {
-            let mut j = obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]);
+            let mut j = obj(vec![
+                ("ok", Json::Bool(true)),
+                ("pong", Json::Bool(true)),
+                ("pool", Json::Num(sched.pool_size() as f64)),
+                ("queue_depth", Json::Num(sched.queue_depth() as f64)),
+            ]);
+            (compact(&mut j), false)
+        }
+        "metrics" => {
+            let m = sched.metrics();
+            let mut j = obj(vec![
+                ("ok", Json::Bool(true)),
+                ("submitted", Json::Num(m.submitted as f64)),
+                ("completed", Json::Num(m.completed as f64)),
+                ("rejected", Json::Num(m.rejected as f64)),
+                ("failed", Json::Num(m.failed as f64)),
+                ("batches", Json::Num(m.batches as f64)),
+                ("batched_jobs", Json::Num(m.batched_jobs as f64)),
+                ("queue_depth_peak", Json::Num(m.queue_depth_peak as f64)),
+                ("pool", Json::Num(sched.pool_size() as f64)),
+            ]);
             (compact(&mut j), false)
         }
         "gemm" => {
-            let n = req.get("n").and_then(|v| v.as_u64()).unwrap_or(128) as usize;
-            if n == 0 || n > 2048 {
-                return (err_line("n must be in 1..=2048"), false);
+            let (gemm, priority) = match parse_gemm(&req) {
+                Ok(p) => p,
+                Err(msg) => return (err_line(&msg), false),
+            };
+            match sched.submit(priority, JobPayload::Gemm(gemm)) {
+                Ok(rx) => match rx.recv_timeout(REPLY_TIMEOUT) {
+                    Ok(Ok(outcome)) => (gemm_response(&outcome), false),
+                    Ok(Err(msg)) => (err_line(&msg), false),
+                    Err(_) => (err_line("worker unavailable"), false),
+                },
+                Err(SubmitError::Backpressure { depth, retry_after_ms }) => {
+                    (backpressure_line(depth, retry_after_ms), false)
+                }
+                Err(SubmitError::ShuttingDown) => (err_line("shutting down"), false),
             }
-            let mode: DispatchMode = match req
-                .get("mode")
-                .and_then(|v| v.as_str())
-                .unwrap_or("auto")
-                .parse()
-            {
-                Ok(m) => m,
-                Err(e) => return (err_line(&e.to_string()), false),
-            };
-            blas.policy = DispatchPolicy::with_mode(mode);
-            let a = NdArray::<f64>::randn(rng, &[n, n]);
-            let b = NdArray::<f64>::randn(rng, &[n, n]);
-            blas.reset_run();
-            let c = match a.matmul(&b, blas) {
-                Ok(c) => c,
-                Err(e) => return (err_line(&e.to_string()), false),
-            };
-            let f = blas.engine.freq_hz();
-            let t = &blas.engine.trace;
-            let ms = |c: RegionClass| Json::Num(t.total(c).to_ns(f) / 1e6);
-            let total =
-                Json::Num(t.grand_total().to_ns(f) / 1e6);
-            let checksum: f64 = c.data().iter().sum();
-            let mut j = obj(vec![
-                ("ok", Json::Bool(true)),
-                ("n", Json::Num(n as f64)),
-                ("mode", Json::Str(mode.to_string())),
-                ("data_copy_ms", ms(RegionClass::DataCopy)),
-                ("fork_join_ms", ms(RegionClass::ForkJoin)),
-                ("compute_ms", ms(RegionClass::Compute)),
-                ("host_compute_ms", ms(RegionClass::HostCompute)),
-                ("total_ms", total),
-                ("checksum", Json::Num(checksum)),
-            ]);
-            (compact(&mut j), false)
         }
         other => (err_line(&format!("unknown op '{other}'")), false),
     }
 }
 
-fn serve_conn(blas: &mut HeroBlas, rng: &mut Rng, stream: TcpStream) -> Result<bool> {
+/// One connection: read lines (with a poll timeout so shutdown is
+/// noticed), answer each, never drop the connection on a bad request.
+fn serve_conn(
+    sched: &Scheduler,
+    stream: TcpStream,
+    shutdown: &AtomicBool,
+    port: u16,
+) {
     let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("serve: clone stream for {peer}: {e}");
+            return;
         }
-        let (resp, shutdown) = handle(blas, rng, &line);
-        writer.write_all(resp.as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
-        if shutdown {
-            eprintln!("serve: shutdown requested by {peer}");
-            return Ok(true);
+    };
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        match reader.read_line(&mut line) {
+            Ok(0) => return, // EOF
+            Ok(_) => {
+                let trimmed = line.trim();
+                if !trimmed.is_empty() {
+                    let (resp, shut) = handle_line(sched, trimmed);
+                    if writer
+                        .write_all(resp.as_bytes())
+                        .and_then(|_| writer.write_all(b"\n"))
+                        .and_then(|_| writer.flush())
+                        .is_err()
+                    {
+                        return;
+                    }
+                    if shut {
+                        eprintln!("serve: shutdown requested by {peer}");
+                        shutdown.store(true, Ordering::Release);
+                        // unblock the accept loop so it can observe the flag
+                        let _ = TcpStream::connect(("127.0.0.1", port));
+                        return;
+                    }
+                }
+                line.clear();
+            }
+            // poll timeout: partial input (if any) stays in `line`
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {}
+            Err(_) => return,
         }
     }
-    Ok(false)
 }
 
 /// Run the server until a shutdown request arrives.
@@ -132,30 +236,52 @@ pub fn serve(
     port: u16,
     ready: Option<std::sync::mpsc::Sender<u16>>,
 ) -> Result<()> {
-    let mut blas = HeroBlas::new(cfg, artifacts, DispatchPolicy::default())?;
-    blas.registry.warm_up()?; // no compile latency on first request
-    let mut rng = Rng::new(0xC0FFEE);
+    let sched = Arc::new(Scheduler::new(&cfg, artifacts)?);
 
     let listener = TcpListener::bind(("127.0.0.1", port))
         .map_err(|e| Error::Runtime(format!("bind 127.0.0.1:{port}: {e}")))?;
     let bound = listener.local_addr()?.port();
     eprintln!(
-        "hero-blas serve: listening on 127.0.0.1:{bound} ({} artifacts warm)",
-        blas.registry.resident()
+        "hero-blas serve: listening on 127.0.0.1:{bound} \
+         (pool {} clusters, queue {} deep, batch <= {})",
+        sched.pool_size(),
+        cfg.sched.queue_capacity,
+        cfg.sched.batch_max,
     );
     if let Some(tx) = ready {
         let _ = tx.send(bound);
     }
+
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
     for stream in listener.incoming() {
+        if shutdown.load(Ordering::Acquire) {
+            break;
+        }
         match stream {
             Ok(s) => {
-                if serve_conn(&mut blas, &mut rng, s)? {
-                    return Ok(());
+                let sched = Arc::clone(&sched);
+                let shutdown = Arc::clone(&shutdown);
+                // spawn failure (thread exhaustion under a connect flood)
+                // drops this one connection; the server keeps serving
+                match std::thread::Builder::new()
+                    .name("serve-conn".into())
+                    .spawn(move || serve_conn(&sched, s, &shutdown, bound))
+                {
+                    Ok(h) => conns.push(h),
+                    Err(e) => eprintln!("serve: spawn connection handler: {e}"),
                 }
+                // reap finished handlers so long-lived servers don't
+                // accumulate joinable threads
+                conns.retain(|h| !h.is_finished());
             }
             Err(e) => eprintln!("serve: accept error: {e}"),
         }
     }
+    for h in conns {
+        let _ = h.join();
+    }
+    sched.shutdown();
     Ok(())
 }
 
@@ -176,5 +302,69 @@ mod tests {
         let e = err_line("boom");
         let j = Json::parse(&e).unwrap();
         assert_eq!(j.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn backpressure_line_carries_retry_hint() {
+        let j = Json::parse(&backpressure_line(17, 42)).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(j.get("error").and_then(|v| v.as_str()), Some("queue full"));
+        assert_eq!(j.get("queue_depth").and_then(|v| v.as_u64()), Some(17));
+        assert_eq!(j.get("retry_after_ms").and_then(|v| v.as_u64()), Some(42));
+    }
+
+    #[test]
+    fn parse_gemm_defaults_and_limits() {
+        let req = Json::parse(r#"{"op": "gemm"}"#).unwrap();
+        let (g, p) = parse_gemm(&req).unwrap();
+        assert_eq!(g.n, 128);
+        assert_eq!(g.mode, DispatchMode::Auto);
+        assert_eq!(p, Priority::Normal);
+        // stable default seed: same request, same workload
+        let (g2, _) = parse_gemm(&req).unwrap();
+        assert_eq!(g.seed, g2.seed);
+
+        let req = Json::parse(
+            r#"{"op": "gemm", "n": 64, "mode": "device_only",
+                "priority": "high", "seed": 9}"#,
+        )
+        .unwrap();
+        let (g, p) = parse_gemm(&req).unwrap();
+        assert_eq!((g.n, g.seed), (64, 9));
+        assert_eq!(g.mode, DispatchMode::DeviceOnly);
+        assert_eq!(p, Priority::High);
+
+        let req = Json::parse(r#"{"op": "gemm", "n": 99999}"#).unwrap();
+        assert!(parse_gemm(&req).is_err());
+        let req = Json::parse(r#"{"op": "gemm", "mode": "warp_drive"}"#).unwrap();
+        assert!(parse_gemm(&req).unwrap_err().contains("warp_drive"));
+        let req = Json::parse(r#"{"op": "gemm", "priority": "urgent"}"#).unwrap();
+        assert!(parse_gemm(&req).unwrap_err().contains("urgent"));
+    }
+
+    #[test]
+    fn gemm_response_shape() {
+        let o = GemmOutcome {
+            n: 64,
+            mode: DispatchMode::DeviceOnly,
+            checksum: 1.25,
+            data_copy_ms: 1.0,
+            fork_join_ms: 2.0,
+            compute_ms: 3.0,
+            host_compute_ms: 0.0,
+            total_ms: 6.0,
+            cluster: 2,
+            batch_size: 4,
+            queue_ms: 0.5,
+        };
+        let j = Json::parse(&gemm_response(&o)).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("cluster").and_then(|v| v.as_u64()), Some(2));
+        assert_eq!(j.get("batch_size").and_then(|v| v.as_u64()), Some(4));
+        let sum = ["data_copy_ms", "fork_join_ms", "compute_ms", "host_compute_ms"]
+            .iter()
+            .map(|k| j.get(k).and_then(|v| v.as_f64()).unwrap())
+            .sum::<f64>();
+        assert!((sum - j.get("total_ms").and_then(|v| v.as_f64()).unwrap()).abs() < 1e-9);
     }
 }

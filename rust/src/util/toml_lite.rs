@@ -48,6 +48,13 @@ impl TomlValue {
             _ => None,
         }
     }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Some(a),
+            _ => None,
+        }
+    }
 }
 
 /// A parsed document: dotted-path -> value.
@@ -117,6 +124,15 @@ impl TomlDoc {
         self.get(path)
             .and_then(|v| v.as_str())
             .ok_or_else(|| Error::Config(format!("config: missing/invalid string '{path}'")))
+    }
+
+    /// Required array access with a path-qualified [`Error`] — config
+    /// consumers get a proper error for a missing/mistyped array instead
+    /// of reaching for a panicking match.
+    pub fn req_array(&self, path: &str) -> Result<&[TomlValue]> {
+        self.get(path)
+            .and_then(|v| v.as_array())
+            .ok_or_else(|| Error::Config(format!("config: missing/invalid array '{path}'")))
     }
 
     /// Optional getters (fall back to a default at the call site).
@@ -225,12 +241,20 @@ mod tests {
         assert_eq!(doc.req_f64("host.flops_per_cycle").unwrap(), 0.4);
         assert_eq!(doc.get("host.fast").unwrap().as_bool(), Some(true));
         assert_eq!(doc.req_u64("host.base").unwrap(), 0xA000_0000);
-        let arr = match doc.get("host.sizes").unwrap() {
-            TomlValue::Array(a) => a,
-            _ => panic!(),
-        };
+        let arr = doc.req_array("host.sizes").unwrap();
         assert_eq!(arr.len(), 3);
         assert_eq!(arr[2].as_u64(), Some(64));
+    }
+
+    #[test]
+    fn req_array_errors_name_the_path() {
+        let doc = TomlDoc::parse("[host]\nsizes = [1, 2]\nscalar = 3").unwrap();
+        assert_eq!(doc.req_array("host.sizes").unwrap().len(), 2);
+        // missing and mistyped both come back as config errors, not panics
+        let e = doc.req_array("host.missing").unwrap_err().to_string();
+        assert!(e.contains("host.missing"), "{e}");
+        let e = doc.req_array("host.scalar").unwrap_err().to_string();
+        assert!(e.contains("host.scalar"), "{e}");
     }
 
     #[test]

@@ -26,7 +26,8 @@ fn serve_gemm_requests_end_to_end() {
     let handle = std::thread::spawn(move || {
         hero_blas::serve::serve(PlatformConfig::default(), &dir, 0, Some(tx))
     });
-    let port = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+    // the pool warms one PJRT registry per cluster before listening
+    let port = rx.recv_timeout(std::time::Duration::from_secs(300)).unwrap();
 
     let mut stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
     let mut reader = BufReader::new(stream.try_clone().unwrap());
@@ -49,6 +50,21 @@ fn serve_gemm_requests_end_to_end() {
     let sum = get("data_copy_ms") + get("fork_join_ms") + get("compute_ms")
         + get("host_compute_ms");
     assert!((sum - get("total_ms")).abs() < 1e-6);
+    // scheduler provenance: which cluster served it, how it batched
+    assert!(get("cluster") < 64.0);
+    assert!(get("batch_size") >= 1.0);
+    assert!(get("queue_ms") >= 0.0);
+
+    // identical requests are deterministic (stable default seed)
+    let r2 = request(
+        &mut stream,
+        &mut reader,
+        r#"{"op": "gemm", "n": 64, "mode": "device_only"}"#,
+    );
+    assert_eq!(
+        r.get("checksum").and_then(|v| v.as_f64()).unwrap(),
+        r2.get("checksum").and_then(|v| v.as_f64()).unwrap(),
+    );
 
     // host-mode gemm: only host_compute
     let r = request(
@@ -59,15 +75,46 @@ fn serve_gemm_requests_end_to_end() {
     assert!(r.get("host_compute_ms").and_then(|v| v.as_f64()).unwrap() > 0.0);
     assert_eq!(r.get("data_copy_ms").and_then(|v| v.as_f64()).unwrap(), 0.0);
 
-    // malformed request: error response, connection stays up
+    // unknown op: ok:false with an error naming the op, connection stays up
     let r = request(&mut stream, &mut reader, r#"{"op": "bogus"}"#);
     assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    assert!(
+        r.get("error").and_then(|v| v.as_str()).unwrap().contains("bogus"),
+        "{r:?}"
+    );
+
+    // malformed JSON: explicit error line, not a dropped connection
     let r = request(&mut stream, &mut reader, "not json at all");
     assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    assert!(
+        r.get("error").and_then(|v| v.as_str()).unwrap().contains("bad json"),
+        "{r:?}"
+    );
+    // ...and the same connection keeps serving afterwards
+    let pong = request(&mut stream, &mut reader, r#"{"op": "ping"}"#);
+    assert_eq!(pong.get("ok"), Some(&Json::Bool(true)));
 
-    // out-of-range n rejected
+    // out-of-range n, bad mode, bad priority: all explicit errors
     let r = request(&mut stream, &mut reader, r#"{"op": "gemm", "n": 99999}"#);
     assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    let r = request(
+        &mut stream,
+        &mut reader,
+        r#"{"op": "gemm", "mode": "warp_drive"}"#,
+    );
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    let r = request(
+        &mut stream,
+        &mut reader,
+        r#"{"op": "gemm", "priority": "urgent"}"#,
+    );
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+
+    // scheduler counters over the wire
+    let m = request(&mut stream, &mut reader, r#"{"op": "metrics"}"#);
+    assert_eq!(m.get("ok"), Some(&Json::Bool(true)));
+    assert!(m.get("completed").and_then(|v| v.as_u64()).unwrap() >= 3);
+    assert!(m.get("pool").and_then(|v| v.as_u64()).unwrap() >= 1);
 
     // shutdown stops the server thread
     let _ = request(&mut stream, &mut reader, r#"{"op": "shutdown"}"#);

@@ -1,0 +1,231 @@
+//! Compile-only stand-in for the `xla` crate (xla-rs PJRT bindings).
+//!
+//! The hero-blas stack touches XLA in exactly one module
+//! (`runtime::registry`) plus the literal conversions; this stub mirrors
+//! that API surface so the whole workspace builds and the unit-test
+//! suite runs without the multi-GB xla_extension toolchain:
+//!
+//! - [`Literal`] is **fully functional** (typed host buffers with shape),
+//!   so literal round-trip code and its tests behave like the real thing;
+//! - [`PjRtClient::cpu`] succeeds (sessions construct), but
+//!   `compile`/`execute` return honest `Error`s — device numerics need
+//!   the real backend.
+//!
+//! Swap the `xla` dependency in the workspace `Cargo.toml` to the real
+//! xla-rs to light up PJRT execution; no hero-blas source changes.
+
+use std::fmt;
+
+/// Stub error type (the real crate wraps XLA statuses).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const NO_BACKEND: &str =
+    "xla stub: PJRT execution requires the real xla-rs backend (see rust/vendor/xla-stub)";
+
+/// Element storage for [`Literal`] (the two dtypes hero-blas uses).
+/// Public only because the [`NativeType`] conversion hooks name it.
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Buf {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+}
+
+impl Buf {
+    fn len(&self) -> usize {
+        match self {
+            Buf::F32(v) => v.len(),
+            Buf::F64(v) => v.len(),
+        }
+    }
+}
+
+/// Marker + conversion trait for element types accepted by literals.
+pub trait NativeType: Copy + Default + 'static {
+    #[doc(hidden)]
+    fn wrap(v: Vec<Self>) -> Buf;
+    #[doc(hidden)]
+    fn unwrap(b: &Buf) -> Option<&[Self]>;
+}
+
+/// The real crate distinguishes array elements from native types; for
+/// the stub they coincide.
+pub trait ArrayElement: NativeType {}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> Buf {
+        Buf::F32(v)
+    }
+    fn unwrap(b: &Buf) -> Option<&[Self]> {
+        match b {
+            Buf::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for f64 {
+    fn wrap(v: Vec<Self>) -> Buf {
+        Buf::F64(v)
+    }
+    fn unwrap(b: &Buf) -> Option<&[Self]> {
+        match b {
+            Buf::F64(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl ArrayElement for f32 {}
+impl ArrayElement for f64 {}
+
+/// A typed host tensor (functional, unlike the execution surface).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    buf: Buf,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// 1-D literal from a flat slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], buf: T::wrap(data.to_vec()) }
+    }
+
+    /// Reshape (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let count: i64 = dims.iter().product();
+        if count < 0 || count as usize != self.buf.len() {
+            return Err(Error(format!(
+                "reshape: {:?} has {} elements, literal holds {}",
+                dims,
+                count,
+                self.buf.len()
+            )));
+        }
+        Ok(Literal { buf: self.buf.clone(), dims: dims.to_vec() })
+    }
+
+    /// Flatten back to a typed vec (dtype must match).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.buf)
+            .map(<[T]>::to_vec)
+            .ok_or_else(|| Error("to_vec: literal dtype mismatch".into()))
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Unwrap a 1-tuple result.  Stub executables never produce tuples,
+    /// so this is the identity (kept for API compatibility).
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Ok(self)
+    }
+}
+
+/// Parsed HLO module (the stub just carries the text).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO text file (real parsing happens in the backend).
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("read {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// A computation handle.
+#[derive(Debug, Clone)]
+pub struct XlaComputation(HloModuleProto);
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(proto.clone())
+    }
+}
+
+/// The PJRT CPU client.  Construction succeeds so sessions can build;
+/// compilation is where the stub stops.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error(NO_BACKEND.into()))
+    }
+}
+
+/// A compiled executable (unreachable through the stub client, but the
+/// type must exist for signatures).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error(NO_BACKEND.into()))
+    }
+}
+
+/// A device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error(NO_BACKEND.into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f64() {
+        let data: Vec<f64> = (0..12).map(|i| i as f64).collect();
+        let lit = Literal::vec1(&data).reshape(&[3, 4]).unwrap();
+        assert_eq!(lit.element_count(), 12);
+        assert_eq!(lit.to_vec::<f64>().unwrap(), data);
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        let lit = Literal::vec1(&[1.0f32; 6]);
+        assert!(lit.reshape(&[2, 3]).is_ok());
+        assert!(lit.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn client_boots_but_refuses_to_compile() {
+        let client = PjRtClient::cpu().unwrap();
+        let proto = HloModuleProto { text: String::new() };
+        let comp = XlaComputation::from_proto(&proto);
+        let err = client.compile(&comp).unwrap_err().to_string();
+        assert!(err.contains("xla stub"), "{err}");
+    }
+}
