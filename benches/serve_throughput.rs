@@ -1,15 +1,26 @@
-//! Bench: serving throughput vs device-pool size and batching.
+//! Bench: serving throughput vs device-pool size, batching, operand
+//! cache and staging pipeline.
 //!
-//! Spins the full TCP server up in-process at pool sizes 1/2/4 with
-//! batching off/on and drives it with concurrent clients issuing 64x64
-//! `device_only` GEMM requests (64 is *below* the paper's Figure-3
-//! crossover — exactly where the batcher's fork-join amortization and
-//! the pool's parallelism must earn their keep).  One JSON object per
-//! line, like the fig3 harness reports (ISSUE 1 acceptance: pool 4 +
-//! batching >= 2x the serial seed-style loop).
+//! Spins the full TCP server up in-process and drives it with concurrent
+//! clients issuing 64x64 `device_only` GEMM requests (64 is *below* the
+//! paper's Figure-3 crossover — exactly where the batcher's fork-join
+//! amortization and the pool's parallelism must earn their keep).  Two
+//! sweeps, one JSON object per line:
+//!
+//! 1. pool 1/2/4 x batching off/on over the classic private-operand
+//!    workload (ISSUE 1 acceptance: pool 4 + batching >= 2x the serial
+//!    seed-style loop);
+//! 2. cache off/on x pipeline off/on over the *shared-B reuse* workload
+//!    (every request carries the same `b_seed`, the reused-weight
+//!    serving pattern) — each point also reports the scheduler's
+//!    simulated data-movement counters, so the copy-byte cut and the
+//!    map-in/compute overlap are directly visible in the JSON (ISSUE 2
+//!    acceptance: cache+pipeline cuts host->device bytes >= 2x vs the
+//!    cache-off baseline, with `cache_hits > 0`).
 //!
 //! ```sh
-//! cargo bench --bench serve_throughput
+//! cargo bench --bench serve_throughput            # full sweep
+//! cargo bench --bench serve_throughput -- --quick # CI smoke (small)
 //! ```
 
 use std::io::{BufRead, BufReader, Write};
@@ -18,16 +29,38 @@ use std::sync::{mpsc, Arc, Barrier};
 use std::time::{Duration, Instant};
 
 use hero_blas::config::PlatformConfig;
+use hero_blas::util::json_lite::Json;
 
 const N: usize = 64;
 
-struct Point {
+/// One server configuration under test.
+#[derive(Clone, Copy)]
+struct Knobs {
     pool: u32,
     batching: bool,
+    cache: bool,
+    pipeline: bool,
+    /// All clients share one B matrix (`b_seed`) — the cache hot path.
+    shared_b: bool,
+}
+
+/// Scheduler counters scraped over the wire before shutdown.
+#[derive(Default, Clone, Copy)]
+struct Counters {
+    bytes_to_device: u64,
+    bytes_copy_elided: u64,
+    cache_hits: u64,
+    pipelined_batches: u64,
+    overlap_hidden_us: u64,
+}
+
+struct Point {
+    knobs: Knobs,
     clients: usize,
     per_client: usize,
     wall: Duration,
     retries: u64,
+    counters: Counters,
 }
 
 impl Point {
@@ -36,30 +69,61 @@ impl Point {
     }
 
     fn json(&self, speedup_vs_serial: f64) -> String {
+        let k = &self.knobs;
+        let c = &self.counters;
         format!(
             "{{\"bench\": \"serve_throughput\", \"n\": {N}, \"pool\": {}, \
-             \"batching\": {}, \"clients\": {}, \"requests\": {}, \
+             \"batching\": {}, \"cache\": {}, \"pipeline\": {}, \
+             \"shared_b\": {}, \"clients\": {}, \"requests\": {}, \
              \"wall_ms\": {:.1}, \"rps\": {:.1}, \"retries\": {}, \
-             \"speedup_vs_serial\": {:.2}}}",
-            self.pool,
-            self.batching,
+             \"bytes_to_device\": {}, \"bytes_copy_elided\": {}, \
+             \"cache_hits\": {}, \"pipelined_batches\": {}, \
+             \"overlap_hidden_us\": {}, \"speedup_vs_serial\": {:.2}}}",
+            k.pool,
+            k.batching,
+            k.cache,
+            k.pipeline,
+            k.shared_b,
             self.clients,
             self.clients * self.per_client,
             self.wall.as_secs_f64() * 1e3,
             self.rps(),
             self.retries,
+            c.bytes_to_device,
+            c.bytes_copy_elided,
+            c.cache_hits,
+            c.pipelined_batches,
+            c.overlap_hidden_us,
             speedup_vs_serial,
         )
     }
 }
 
+fn request_line(client: usize, per_client: usize, done: usize, shared_b: bool) -> String {
+    let seed = (client * per_client + done) as u64;
+    if shared_b {
+        format!(
+            "{{\"op\": \"gemm\", \"n\": {N}, \"mode\": \"device_only\", \
+             \"seed\": {seed}, \"b_seed\": 42}}\n"
+        )
+    } else {
+        format!(
+            "{{\"op\": \"gemm\", \"n\": {N}, \"mode\": \"device_only\", \
+             \"seed\": {seed}}}\n"
+        )
+    }
+}
+
 /// Serve with the given scheduler knobs and hammer it with clients.
-fn run_point(pool: u32, batching: bool, clients: usize, per_client: usize) -> Point {
+fn run_point(knobs: Knobs, clients: usize, per_client: usize) -> Point {
     let mut cfg = PlatformConfig::default();
-    cfg.sched.pool_clusters = pool;
+    cfg.sched.pool_clusters = knobs.pool;
     cfg.sched.queue_capacity = 256;
-    cfg.sched.batch_window_ms = if batching { 2 } else { 0 };
-    cfg.sched.batch_max = if batching { 8 } else { 1 };
+    cfg.sched.batch_window_ms = if knobs.batching { 2 } else { 0 };
+    cfg.sched.batch_max = if knobs.batching { 8 } else { 1 };
+    cfg.sched.cache.cache_frac = if knobs.cache { 0.4 } else { 0.0 };
+    cfg.sched.cache.cache_max_entries = 64;
+    cfg.sched.cache.pipeline_depth = if knobs.pipeline { 2 } else { 1 };
 
     let dir = hero_blas::find_artifacts_dir().expect("run `make artifacts` first");
     let (tx, rx) = mpsc::channel();
@@ -78,11 +142,7 @@ fn run_point(pool: u32, batching: bool, clients: usize, per_client: usize) -> Po
                 let mut retries = 0u64;
                 let mut done = 0usize;
                 while done < per_client {
-                    let seed = (c * per_client + done) as u64;
-                    let line = format!(
-                        "{{\"op\": \"gemm\", \"n\": {N}, \"mode\": \"device_only\", \
-                         \"seed\": {seed}}}\n"
-                    );
+                    let line = request_line(c, per_client, done, knobs.shared_b);
                     stream.write_all(line.as_bytes()).unwrap();
                     stream.flush().unwrap();
                     let mut resp = String::new();
@@ -106,34 +166,87 @@ fn run_point(pool: u32, batching: bool, clients: usize, per_client: usize) -> Po
     let retries = workers.into_iter().map(|w| w.join().unwrap()).sum();
     let wall = t0.elapsed();
 
-    // stop the server
+    // scrape the data-movement counters, then stop the server
     let mut stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
     let mut reader = BufReader::new(stream.try_clone().unwrap());
+    stream.write_all(b"{\"op\": \"metrics\"}\n").unwrap();
+    stream.flush().unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let m = Json::parse(resp.trim()).expect("metrics JSON");
+    let get = |k: &str| m.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
+    let counters = Counters {
+        bytes_to_device: get("bytes_to_device"),
+        bytes_copy_elided: get("bytes_copy_elided"),
+        cache_hits: get("cache_hits"),
+        pipelined_batches: get("pipelined_batches"),
+        overlap_hidden_us: get("overlap_hidden_us"),
+    };
     stream.write_all(b"{\"op\": \"shutdown\"}\n").unwrap();
     stream.flush().unwrap();
     let mut resp = String::new();
     let _ = reader.read_line(&mut resp);
     server.join().unwrap().unwrap();
 
-    Point { pool, batching, clients, per_client, wall, retries }
+    Point { knobs, clients, per_client, wall, retries, counters }
 }
 
 fn main() {
-    println!("== serve throughput: 64x64 device_only GEMM requests/sec ==\n");
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (clients, per_client, serial_reqs) =
+        if quick { (4, 6, 12) } else { (8, 25, 40) };
+
+    println!("== serve throughput: {N}x{N} device_only GEMM requests/sec ==\n");
 
     // the serial seed-style loop: one cluster, one client, no batching —
     // functionally the old single-session accept loop
-    let serial = run_point(1, false, 1, 40);
+    let base_knobs = Knobs {
+        pool: 1,
+        batching: false,
+        cache: false,
+        pipeline: false,
+        shared_b: false,
+    };
+    let serial = run_point(base_knobs, 1, serial_reqs);
     let base = serial.rps();
     println!("{}", serial.json(1.0));
 
+    // sweep 1: pool x batching (private operands, as in ISSUE 1)
     for pool in [1u32, 2, 4] {
         for batching in [false, true] {
             if pool == 1 && !batching {
                 continue; // already measured as the serial baseline
             }
-            let p = run_point(pool, batching, 8, 25);
+            let p = run_point(
+                Knobs { pool, batching, ..base_knobs },
+                clients,
+                per_client,
+            );
             println!("{}", p.json(p.rps() / base));
+        }
+    }
+
+    // sweep 2: cache x pipeline on the shared-B reuse workload — the
+    // copy-byte column is the headline (simulated bytes, not wall time)
+    println!();
+    let mut baseline_bytes = 0u64;
+    for (cache, pipeline) in [(false, false), (true, false), (false, true), (true, true)]
+    {
+        let p = run_point(
+            Knobs { pool: 2, batching: true, cache, pipeline, shared_b: true },
+            clients,
+            per_client,
+        );
+        if !cache && !pipeline {
+            baseline_bytes = p.counters.bytes_to_device;
+        }
+        println!("{}", p.json(p.rps() / base));
+        if cache && pipeline && baseline_bytes > 0 {
+            let cut = baseline_bytes as f64 / p.counters.bytes_to_device.max(1) as f64;
+            println!(
+                "{{\"bench\": \"serve_throughput\", \"summary\": \
+                 \"copy_bytes_cut\", \"value\": {cut:.2}}}"
+            );
         }
     }
 
@@ -141,6 +254,11 @@ fn main() {
         "\npool parallelism scales wall-clock across clusters; batching\n\
          coalesces queued same-shape requests so the fork-join overhead —\n\
          dominant below the Figure-3 crossover — is paid once per batch.\n\
-         Acceptance: pool=4 batching=true must show speedup_vs_serial >= 2.0."
+         On the shared-B workload the operand cache turns repeat map-ins\n\
+         into refcount bumps and the pipeline hides the rest of the map-in\n\
+         under the previous batch's compute.\n\
+         Acceptance: pool=4 batching=true must show speedup_vs_serial >= 2.0;\n\
+         cache=true pipeline=true must show cache_hits > 0 and\n\
+         copy_bytes_cut >= 2.0 vs the cache-off point."
     );
 }

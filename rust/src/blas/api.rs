@@ -48,6 +48,27 @@ impl<T: Elem> GemmBatchRun<T> {
     }
 }
 
+/// A coalesced same-shape GEMM batch whose operands are staged (map-in
+/// paid) but not yet executed (see [`HeroBlas::gemm_batch_stage`]) —
+/// the handle the pipelined scheduler holds while the *previous* batch
+/// is still between launch and finish.
+pub struct GemmStagedRun<T: Elem> {
+    state: device::GemmStagedBatch,
+    alpha: T,
+    beta: T,
+}
+
+impl<T: Elem> GemmStagedRun<T> {
+    /// Number of coalesced requests staged.
+    pub fn len(&self) -> usize {
+        self.state.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.state.is_empty()
+    }
+}
+
 impl std::fmt::Debug for HeroBlas {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("HeroBlas")
@@ -135,6 +156,105 @@ impl HeroBlas {
         outs: &mut [&mut [T]],
     ) -> Result<()> {
         device::gemm_batch_finish(&mut self.engine, run.state, outs)
+    }
+
+    /// Stage a coalesced batch without launching it: the map-in
+    /// (data-copy region) is paid now, the doorbell/compute later via
+    /// [`HeroBlas::gemm_batch_execute`].  The pipelined scheduler stages
+    /// batch k+1 here while batch k is between launch and finish, so
+    /// k+1's map-in hides under k's compute window.
+    pub fn gemm_batch_stage<T: Elem>(
+        &mut self,
+        dims: (usize, usize, usize),
+        alpha: T,
+        beta: T,
+        inputs: &[(&[T], &[T], &[T])],
+        zero_copy: bool,
+    ) -> Result<GemmStagedRun<T>> {
+        device::gemm_batch_stage::<T>(
+            &mut self.engine, &mut self.registry, dims, beta == T::zero(), inputs,
+            zero_copy,
+        )
+        .map(|state| GemmStagedRun { state, alpha, beta })
+    }
+
+    /// Execute a staged batch (doorbell + compute); the completion word
+    /// is posted on return — poll [`HeroBlas::offload_completion_pending`]
+    /// and then call [`HeroBlas::gemm_batch_finish`].
+    pub fn gemm_batch_execute<T: Elem>(
+        &mut self,
+        staged: GemmStagedRun<T>,
+    ) -> Result<GemmBatchRun<T>> {
+        device::gemm_batch_execute(
+            &mut self.engine, &mut self.registry, staged.state, staged.alpha,
+            staged.beta,
+        )
+        .map(|state| GemmBatchRun { state, _elem: std::marker::PhantomData })
+    }
+
+    /// Abandon a staged batch (error recovery): release its mappings and
+    /// exit the target region without ever ringing the doorbell.
+    pub fn gemm_batch_abandon<T: Elem>(&mut self, staged: GemmStagedRun<T>) {
+        staged.state.release(&mut self.engine);
+    }
+
+    /// Run a coalesced batch of same-shape GEMVs (`y_i = alpha * A_i @
+    /// x_i + beta * y_i`) as ONE fork-join offload — the level-2
+    /// analogue of [`HeroBlas::gemm_batch_launch`], synchronous.  The
+    /// dispatch policy is NOT consulted; the caller has already decided
+    /// to offload.
+    pub fn gemv_batch_device<T: Elem>(
+        &mut self,
+        dims: (usize, usize),
+        alpha: T,
+        beta: T,
+        inputs: &[(&[T], &[T], &[T])],
+        zero_copy: bool,
+        outs: &mut [&mut [T]],
+    ) -> Result<()> {
+        device::gemv_batch(
+            &mut self.engine, &mut self.registry, dims, alpha, beta, inputs,
+            zero_copy, outs,
+        )
+    }
+
+    /// Convenience: run a same-shape GEMV batch end-to-end, dispatching
+    /// through the policy like [`HeroBlas::gemv`] (host target loops over
+    /// the members; device targets coalesce into one launch).
+    pub fn gemv_batch<T: Elem>(
+        &mut self,
+        dims: (usize, usize),
+        alpha: T,
+        beta: T,
+        a_list: &[&[T]],
+        x_list: &[&[T]],
+        outs: &mut [&mut [T]],
+    ) -> Result<()> {
+        let (m, n) = dims;
+        if a_list.len() != x_list.len() || a_list.len() != outs.len() {
+            return Err(crate::error::Error::shape("gemv_batch: ragged batch"));
+        }
+        match self.policy.gemv(m, n) {
+            ExecTarget::Host => {
+                for ((a, x), y) in a_list.iter().zip(x_list).zip(outs.iter_mut()) {
+                    self.gemv(Transpose::No, alpha, a, (m, n), x, beta, y)?;
+                }
+                Ok(())
+            }
+            target => {
+                let zero_copy = target == ExecTarget::DeviceZeroCopy;
+                // snapshot the incoming y values so `inputs` doesn't
+                // borrow `outs` while the batch writes results into it
+                let y_in: Vec<Vec<T>> = outs.iter().map(|y| y.to_vec()).collect();
+                let inputs: Vec<(&[T], &[T], &[T])> = a_list
+                    .iter()
+                    .zip(x_list)
+                    .zip(y_in.iter())
+                    .map(|((a, x), y)| (*a, *x, y.as_slice()))
+                    .collect();
+                self.gemv_batch_device(dims, alpha, beta, &inputs, zero_copy, outs)
+            }
+        }
     }
 
     /// Is a completion word pending in the cluster mailbox?  Workers poll

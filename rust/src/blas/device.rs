@@ -337,6 +337,14 @@ fn gemm_compute<T: Elem>(
 }
 
 /// Stage one padded (A, B, C) operand set; returns the staged indices.
+///
+/// A and B are read-only operands, so they route through the operand
+/// cache ([`OffloadEngine::map_to_operand`]) — a re-map of identical
+/// bytes (the serving hot path's shared weight matrix) skips the copy.
+/// C is written by the kernel and never cached; when `beta == 0` (its
+/// incoming contents are mathematically irrelevant) and the cache config
+/// enables staging elisions, it is staged `map(alloc:)`-style with no
+/// host copy at all.
 #[allow(clippy::too_many_arguments)]
 fn stage_gemm_operands(
     engine: &mut OffloadEngine,
@@ -346,10 +354,15 @@ fn stage_gemm_operands(
     c_bytes: &[u8],
     user_bytes: (u64, u64, u64),
     zero_copy: bool,
+    beta_zero: bool,
 ) -> Result<(usize, usize, usize)> {
-    let ai = staged.push(engine.map_to_charged(a_bytes, user_bytes.0, zero_copy, "a")?);
-    let bi = staged.push(engine.map_to_charged(b_bytes, user_bytes.1, zero_copy, "b")?);
-    let ci = staged.push(engine.map_to_charged(c_bytes, user_bytes.2, zero_copy, "c")?);
+    let ai = staged.push(engine.map_to_operand(a_bytes, user_bytes.0, zero_copy, "a")?);
+    let bi = staged.push(engine.map_to_operand(b_bytes, user_bytes.1, zero_copy, "b")?);
+    let ci = if beta_zero && !zero_copy && engine.cache_enabled() {
+        staged.push(engine.map_alloc(c_bytes, user_bytes.2, "c")?)
+    } else {
+        staged.push(engine.map_to_charged(c_bytes, user_bytes.2, zero_copy, "c")?)
+    };
     Ok((ai, bi, ci))
 }
 
@@ -396,6 +409,7 @@ pub fn gemm<T: Elem>(
                 (m * n * T::SIZE) as u64,
             ),
             zero_copy,
+            beta == T::zero(),
         )?;
 
         // ---- launch ----
@@ -479,28 +493,54 @@ impl std::fmt::Debug for Staged {
     }
 }
 
-/// Launch a batch of same-shape GEMMs (`C_i = alpha * A_i @ B_i + beta *
-/// C_i`, row-major, op(A) m x k / op(B) k x n) as ONE offload: one
-/// OpenBLAS entry, one target region, one descriptor with `3 * batch`
-/// mapped arguments, one doorbell — the paper's fork/join overhead is
-/// paid once and amortized across the batch, which moves the effective
-/// Figure-3 crossover below the single-call size.
+/// A coalesced same-shape GEMM batch whose operands are staged in device
+/// DRAM but whose doorbell has not rung yet: the map-in (data-copy
+/// region) is paid, the launch + compute are pending.
 ///
-/// On return the compute is done and the completion word is posted; call
-/// [`gemm_batch_finish`] (after polling the mailbox, if overlapping) to
-/// join, copy results back and release the mappings.  Any error releases
-/// everything staged so far and aborts the launch, exactly like the
-/// single-call path.
-#[allow(clippy::too_many_arguments)]
-pub fn gemm_batch_launch<T: Elem>(
+/// Produced by [`gemm_batch_stage`]; consumed by [`gemm_batch_execute`].
+/// This is the seam the scheduler's software pipelining threads through:
+/// a worker stages batch k+1 here while batch k is still between its
+/// launch and its finish, hiding k+1's map-in under k's compute window.
+#[derive(Debug)]
+pub struct GemmStagedBatch {
+    staged: Staged,
+    members: Vec<BatchMember>,
+    geom: GemmGeom,
+    elem_size: usize,
+    zero_copy: bool,
+}
+
+impl GemmStagedBatch {
+    /// Number of coalesced requests staged.
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Error-path teardown for a staged-but-never-executed batch.
+    pub fn release(mut self, engine: &mut OffloadEngine) {
+        self.staged.release_all(engine);
+        engine.target_end();
+    }
+}
+
+/// Stage a batch of same-shape GEMMs (`C_i = alpha * A_i @ B_i + beta *
+/// C_i`, row-major, op(A) m x k / op(B) k x n) for ONE offload: one
+/// OpenBLAS entry, one target region, `3 * batch` mapped arguments.
+/// `beta_zero` must be `beta == 0` — it gates the `map(alloc:)` staging
+/// elision for the outputs.  Any error releases everything staged so far
+/// and exits the target region.
+pub fn gemm_batch_stage<T: Elem>(
     engine: &mut OffloadEngine,
     registry: &mut ArtifactRegistry,
     (m, n, k): (usize, usize, usize),
-    alpha: T,
-    beta: T,
+    beta_zero: bool,
     inputs: &[(&[T], &[T], &[T])],
     zero_copy: bool,
-) -> Result<GemmBatchState> {
+) -> Result<GemmStagedBatch> {
     if inputs.is_empty() {
         return Err(Error::shape("gemm_batch: empty batch"));
     }
@@ -533,46 +573,117 @@ pub fn gemm_batch_launch<T: Elem>(
             let b_bytes = T::slice_to_bytes(&pad2(b, k, n, g.kp, g.np));
             let c_bytes = T::slice_to_bytes(&pad2(c, m, n, g.mp, g.np));
             let (ai, bi, ci) = stage_gemm_operands(
-                engine, &mut staged, &a_bytes, &b_bytes, &c_bytes, user_bytes, zero_copy,
+                engine, &mut staged, &a_bytes, &b_bytes, &c_bytes, user_bytes,
+                zero_copy, beta_zero,
             )?;
             members.push(BatchMember { a_bytes, b_bytes, c_bytes, ai, bi, ci });
         }
+        Ok(members)
+    })();
 
+    match r {
+        Ok(members) => Ok(GemmStagedBatch {
+            staged,
+            members,
+            geom: g,
+            elem_size: T::SIZE,
+            zero_copy,
+        }),
+        Err(e) => {
+            staged.release_all(engine);
+            engine.target_end();
+            Err(e)
+        }
+    }
+}
+
+/// Execute a staged batch: one descriptor, one doorbell, the cluster
+/// walks every member's tiles, and the completion word is posted.
+///
+/// On return the compute is done; call [`gemm_batch_finish`] (after
+/// polling the mailbox, if overlapping) to join, copy results back and
+/// release the mappings.  Any error releases the staged mappings and
+/// aborts the launch, exactly like the single-call path.
+pub fn gemm_batch_execute<T: Elem>(
+    engine: &mut OffloadEngine,
+    registry: &mut ArtifactRegistry,
+    mut batch: GemmStagedBatch,
+    alpha: T,
+    beta: T,
+) -> Result<GemmBatchState> {
+    let g = batch.geom;
+    let r = (|| -> Result<()> {
+        if T::SIZE != batch.elem_size {
+            return Err(Error::shape("gemm_batch_execute: element type mismatch"));
+        }
         // ---- one descriptor, one doorbell for the whole batch ----
-        let mut desc = OffloadDescriptor::new(OffloadKind::Gemm, (m, n, k), T::F32_PATH);
-        for mem in &members {
+        let mut desc =
+            OffloadDescriptor::new(OffloadKind::Gemm, (g.m, g.n, g.k), T::F32_PATH);
+        for mem in &batch.members {
             for i in [mem.ai, mem.bi, mem.ci] {
                 desc.push_arg(OffloadArg {
-                    device_addr: staged.get(i).device_addr(),
-                    len: staged.get(i).len,
-                    via_iommu: zero_copy,
+                    device_addr: batch.staged.get(i).device_addr(),
+                    len: batch.staged.get(i).len,
+                    via_iommu: batch.zero_copy,
                 });
             }
         }
         engine.launch(&desc)?;
 
         // ---- compute: the cluster walks every member's tiles ----
-        for mem in &members {
+        for mem in &batch.members {
             gemm_compute(
-                engine, registry, &mut staged, (mem.ai, mem.bi, mem.ci), g, alpha, beta,
+                engine,
+                registry,
+                &mut batch.staged,
+                (mem.ai, mem.bi, mem.ci),
+                g,
+                alpha,
+                beta,
             )?;
         }
 
         // post the completion word (pollable via the mailbox; the host
         // join happens in gemm_batch_finish)
         engine.device_complete()?;
-        Ok(members)
+        Ok(())
     })();
 
     match r {
-        Ok(members) => Ok(GemmBatchState { staged, members, geom: g, elem_size: T::SIZE }),
+        Ok(()) => Ok(GemmBatchState {
+            staged: batch.staged,
+            members: batch.members,
+            geom: g,
+            elem_size: batch.elem_size,
+        }),
         Err(e) => {
-            staged.release_all(engine);
+            batch.staged.release_all(engine);
             engine.abort_offload();
             engine.target_end();
             Err(e)
         }
     }
+}
+
+/// Launch a batch of same-shape GEMMs as ONE offload: stage + execute in
+/// one call — the paper's fork/join overhead is paid once and amortized
+/// across the batch, which moves the effective Figure-3 crossover below
+/// the single-call size.  See [`gemm_batch_stage`] / [`gemm_batch_execute`]
+/// for the split the pipelined scheduler uses.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_batch_launch<T: Elem>(
+    engine: &mut OffloadEngine,
+    registry: &mut ArtifactRegistry,
+    dims: (usize, usize, usize),
+    alpha: T,
+    beta: T,
+    inputs: &[(&[T], &[T], &[T])],
+    zero_copy: bool,
+) -> Result<GemmBatchState> {
+    let staged = gemm_batch_stage::<T>(
+        engine, registry, dims, beta == T::zero(), inputs, zero_copy,
+    )?;
+    gemm_batch_execute(engine, registry, staged, alpha, beta)
 }
 
 /// Join a coalesced launch: drain the completion word, copy every
@@ -649,6 +760,123 @@ pub fn gemm_staged_bytes<T: Elem>(
     ((mp * kp + kp * np + mp * np) * T::SIZE) as u64
 }
 
+/// GEMV problem geometry shared by the single-call and batched paths.
+#[derive(Debug, Clone, Copy)]
+struct GemvGeom {
+    m: usize,
+    n: usize,
+    mp: usize,
+    np: usize,
+    tm: usize,
+    tn: usize,
+    tk: usize,
+}
+
+impl GemvGeom {
+    fn resolve<T: Elem>(registry: &ArtifactRegistry, m: usize, n: usize)
+                        -> Result<GemvGeom> {
+        let man = registry.manifest();
+        let (tm, tn, tk) = (man.tile_m, man.tile_n, man.tile_k);
+        man.entry(&format!("gemm_tile_accum_{}", T::DTYPE))?; // fail fast
+        Ok(GemvGeom { m, n, mp: round_up(m, tm), np: round_up(n, tk), tm, tn, tk })
+    }
+}
+
+/// Stage one member's (A, x, y) operands; x is laid out as a tile-width
+/// matrix whose first column is x, so the numerics route through the
+/// same Pallas tile kernel the cluster would run.  Returns the padded
+/// byte images (kept alive until unmap) and the staged indices.
+#[allow(clippy::too_many_arguments)]
+fn stage_gemv_operands<T: Elem>(
+    engine: &mut OffloadEngine,
+    staged: &mut Staged,
+    g: GemvGeom,
+    a: &[T],
+    x: &[T],
+    y: &[T],
+    zero_copy: bool,
+    beta_zero: bool,
+) -> Result<(Vec<u8>, Vec<u8>, Vec<u8>, usize, usize, usize)> {
+    let GemvGeom { m, n, mp, np, tn, .. } = g;
+    let a_bytes = T::slice_to_bytes(&pad2(a, m, n, mp, np));
+    let mut xmat = vec![T::zero(); np * tn];
+    for (i, &v) in x.iter().enumerate() {
+        xmat[i * tn] = v;
+    }
+    let x_bytes = T::slice_to_bytes(&xmat);
+    let y_bytes = T::slice_to_bytes(&pad2(y, 1, m, 1, mp));
+
+    // A and x are read-only: cache-eligible (a serving workload reuses
+    // the same weight matrix across requests).  y is written back.
+    let ai = staged.push(engine.map_to_operand(
+        &a_bytes, (m * n * T::SIZE) as u64, zero_copy, "a")?);
+    let xi = staged.push(engine.map_to_operand(
+        &x_bytes, (n * T::SIZE) as u64, zero_copy, "x")?);
+    let yi = if beta_zero && !zero_copy && engine.cache_enabled() {
+        staged.push(engine.map_alloc(&y_bytes, (m * T::SIZE) as u64, "y")?)
+    } else {
+        staged.push(engine.map_to_charged(
+            &y_bytes, (m * T::SIZE) as u64, zero_copy, "y")?)
+    };
+    Ok((a_bytes, x_bytes, y_bytes, ai, xi, yi))
+}
+
+/// Compute phase of one GEMV: stream the A row-panels against the staged
+/// x matrix, fold the epilogue into the staged y.  Shared by [`gemv`]
+/// and [`gemv_batch`] — the batch pays this once per member but
+/// forks/joins once.
+#[allow(clippy::too_many_arguments)]
+fn gemv_compute<T: Elem>(
+    engine: &mut OffloadEngine,
+    registry: &mut ArtifactRegistry,
+    staged: &mut Staged,
+    (ai, xi, yi): (usize, usize, usize),
+    g: GemvGeom,
+    alpha: T,
+    beta: T,
+) -> Result<()> {
+    let artifact = format!("gemm_tile_accum_{}", T::DTYPE);
+    let GemvGeom { mp, np, tm, tn, tk, .. } = g;
+    let esz = T::SIZE as u64;
+    let gm = mp / tm;
+    let gk = np / tk;
+    // level-2 is DMA-bound: stream the A row-panels once
+    let dma_panel = engine.platform.dma.cost_2d(tm as u64, tk as u64 * esz);
+    let fpu = engine.platform.cluster.stream_cycles(tm * tk, 2.0, T::F32_PATH);
+
+    for i in 0..gm {
+        let mut acc = vec![T::zero(); tm * tn];
+        for kk in 0..gk {
+            let a_tile: Vec<T> =
+                read_tile(engine, staged.get(ai), i * tm, kk * tk, tm, tk, np)?;
+            let x_tile: Vec<T> =
+                read_tile(engine, staged.get(xi), kk * tk, 0, tk, tn, tn)?;
+            let out = registry.exec(
+                &artifact,
+                &[
+                    lit_2d(&acc, tm, tn)?,
+                    lit_2d(&a_tile, tm, tk)?,
+                    lit_2d(&x_tile, tk, tn)?,
+                ],
+            )?;
+            acc = out.to_vec::<T>()?;
+            engine.metrics.tile_kernel_calls += 1;
+            engine.charge_compute(dma_panel.max(fpu), &format!("gemv({i},{kk})"));
+        }
+        // y tile: column 0 of acc
+        let y0 = i * tm;
+        let y_old: Vec<T> = T::bytes_to_vec(
+            &engine.read_mapped(staged.get(yi), y0 * T::SIZE, tm * T::SIZE)?,
+        );
+        let y_new: Vec<T> = (0..tm)
+            .map(|r| alpha * acc[r * tn] + beta * y_old[r])
+            .collect();
+        engine.write_mapped(staged.get_mut(yi), y0 * T::SIZE,
+                            &T::slice_to_bytes(&y_new))?;
+    }
+    Ok(())
+}
+
 /// Heterogeneous GEMV: `y = alpha * A @ x + beta * y` over materialized
 /// op(A) (m x n).  The x vector is staged as a tile-width matrix whose
 /// first column is x, so the numerics route through the same Pallas tile
@@ -666,35 +894,15 @@ pub fn gemv<T: Elem>(
     y: &mut [T],
     zero_copy: bool,
 ) -> Result<()> {
-    let (tm, tn, tk) = {
-        let man = registry.manifest();
-        (man.tile_m, man.tile_n, man.tile_k)
-    };
-    let artifact = format!("gemm_tile_accum_{}", T::DTYPE);
-    registry.manifest().entry(&artifact)?;
-
-    let (mp, np) = (round_up(m, tm), round_up(n, tk));
-    let a_pad = pad2(a, m, n, mp, np);
-    // x as (np x tn) matrix, column 0 = x
-    let mut xmat = vec![T::zero(); np * tn];
-    for (i, &v) in x.iter().enumerate() {
-        xmat[i * tn] = v;
-    }
+    let g = GemvGeom::resolve::<T>(registry, m, n)?;
 
     engine.blas_entry();
     engine.target_begin(3);
 
-    let a_bytes = T::slice_to_bytes(&a_pad);
-    let x_bytes = T::slice_to_bytes(&xmat);
-    let y_bytes = T::slice_to_bytes(&pad2(y, 1, m, 1, mp));
-
     let y_out = with_recovery(engine, |engine, staged| {
-        let ai = staged.push(engine.map_to_charged(
-            &a_bytes, (m * n * T::SIZE) as u64, zero_copy, "a")?);
-        let xi = staged.push(engine.map_to_charged(
-            &x_bytes, (n * T::SIZE) as u64, zero_copy, "x")?);
-        let yi = staged.push(engine.map_to_charged(
-            &y_bytes, (m * T::SIZE) as u64, zero_copy, "y")?);
+        let (_a_bytes, _x_bytes, y_bytes, ai, xi, yi) = stage_gemv_operands(
+            engine, staged, g, a, x, y, zero_copy, beta == T::zero(),
+        )?;
 
         let mut desc = OffloadDescriptor::new(OffloadKind::Gemv, (m, n, 0), T::F32_PATH);
         for i in [ai, xi, yi] {
@@ -706,43 +914,7 @@ pub fn gemv<T: Elem>(
         }
         engine.launch(&desc)?;
 
-        let esz = T::SIZE as u64;
-        let gm = mp / tm;
-        let gk = np / tk;
-        // level-2 is DMA-bound: stream the A row-panels once
-        let dma_panel = engine.platform.dma.cost_2d(tm as u64, tk as u64 * esz);
-        let fpu = engine.platform.cluster.stream_cycles(tm * tk, 2.0, T::F32_PATH);
-
-        for i in 0..gm {
-            let mut acc = vec![T::zero(); tm * tn];
-            for kk in 0..gk {
-                let a_tile: Vec<T> =
-                    read_tile(engine, staged.get(ai), i * tm, kk * tk, tm, tk, np)?;
-                let x_tile: Vec<T> =
-                    read_tile(engine, staged.get(xi), kk * tk, 0, tk, tn, tn)?;
-                let out = registry.exec(
-                    &artifact,
-                    &[
-                        lit_2d(&acc, tm, tn)?,
-                        lit_2d(&a_tile, tm, tk)?,
-                        lit_2d(&x_tile, tk, tn)?,
-                    ],
-                )?;
-                acc = out.to_vec::<T>()?;
-                engine.metrics.tile_kernel_calls += 1;
-                engine.charge_compute(dma_panel.max(fpu), &format!("gemv({i},{kk})"));
-            }
-            // y tile: column 0 of acc
-            let y0 = i * tm;
-            let y_old: Vec<T> = T::bytes_to_vec(
-                &engine.read_mapped(staged.get(yi), y0 * T::SIZE, tm * T::SIZE)?,
-            );
-            let y_new: Vec<T> = (0..tm)
-                .map(|r| alpha * acc[r * tn] + beta * y_old[r])
-                .collect();
-            engine.write_mapped(staged.get_mut(yi), y0 * T::SIZE,
-                                &T::slice_to_bytes(&y_new))?;
-        }
+        gemv_compute(engine, registry, staged, (ai, xi, yi), g, alpha, beta)?;
 
         engine.join()?;
         let mut y_out = vec![0u8; y_bytes.len()];
@@ -757,6 +929,109 @@ pub fn gemv<T: Elem>(
     let y_full = T::bytes_to_vec(&y_out);
     y.copy_from_slice(&y_full[..m]);
     Ok(())
+}
+
+/// A coalesced batch of same-shape GEMVs as ONE offload: one OpenBLAS
+/// entry, one target region, one descriptor with `3 * batch` mapped
+/// arguments, one doorbell — the level-2 analogue of
+/// [`gemm_batch_launch`].  `y_i = alpha * A_i @ x_i + beta * y_i` for
+/// every member `(a, x, y)`; results land in `outs` (launch order).
+/// GEMV is far below the Figure-3 crossover at serving sizes, so
+/// amortizing the fork/join across a batch is what makes offloading it
+/// pay at all.  Synchronous: returns with results copied back.
+#[allow(clippy::too_many_arguments)]
+pub fn gemv_batch<T: Elem>(
+    engine: &mut OffloadEngine,
+    registry: &mut ArtifactRegistry,
+    (m, n): (usize, usize),
+    alpha: T,
+    beta: T,
+    inputs: &[(&[T], &[T], &[T])],
+    zero_copy: bool,
+    outs: &mut [&mut [T]],
+) -> Result<()> {
+    if inputs.is_empty() {
+        return Err(Error::shape("gemv_batch: empty batch"));
+    }
+    if outs.len() != inputs.len() {
+        return Err(Error::shape(format!(
+            "gemv_batch: {} outputs for a batch of {}",
+            outs.len(),
+            inputs.len()
+        )));
+    }
+    for (a, x, y) in inputs {
+        if a.len() != m * n || x.len() != n || y.len() != m {
+            return Err(Error::shape(format!(
+                "gemv_batch: member operand sizes {}x{}x{} don't match ({m}, {n})",
+                a.len(),
+                x.len(),
+                y.len()
+            )));
+        }
+    }
+    let g = GemvGeom::resolve::<T>(registry, m, n)?;
+
+    // ---- fork (once for the whole batch) ----
+    engine.blas_entry();
+    engine.target_begin(3 * inputs.len());
+
+    let beta_zero = beta == T::zero();
+    with_recovery(engine, |engine, staged| {
+        // ---- data copy: stage every member ----
+        let mut members = Vec::with_capacity(inputs.len());
+        for (a, x, y) in inputs {
+            members.push(stage_gemv_operands(
+                engine, staged, g, a, x, y, zero_copy, beta_zero,
+            )?);
+        }
+
+        // ---- one descriptor, one doorbell ----
+        let mut desc = OffloadDescriptor::new(OffloadKind::Gemv, (m, n, 0), T::F32_PATH);
+        for (_, _, _, ai, xi, yi) in &members {
+            for i in [*ai, *xi, *yi] {
+                desc.push_arg(OffloadArg {
+                    device_addr: staged.get(i).device_addr(),
+                    len: staged.get(i).len,
+                    via_iommu: zero_copy,
+                });
+            }
+        }
+        engine.launch(&desc)?;
+
+        // ---- compute every member ----
+        for (_, _, _, ai, xi, yi) in &members {
+            gemv_compute(engine, registry, staged, (*ai, *xi, *yi), g, alpha, beta)?;
+        }
+
+        // ---- join + copy back + unmap ----
+        engine.join()?;
+        for ((_, _, y_bytes, ai, xi, yi), out) in members.iter().zip(outs.iter_mut()) {
+            let mut y_out = vec![0u8; y_bytes.len()];
+            engine.map_from_charged(
+                staged.get(*yi), &mut y_out, (m * T::SIZE) as u64, "y",
+            )?;
+            let y_full: Vec<T> = T::bytes_to_vec(&y_out);
+            out.copy_from_slice(&y_full[..m]);
+            engine.unmap(staged.take(*ai), "a")?;
+            engine.unmap(staged.take(*xi), "x")?;
+            engine.unmap(staged.take(*yi), "y")?;
+        }
+        engine.target_end();
+        Ok(())
+    })
+}
+
+/// Device-DRAM bytes one staged batch member occupies for an (m, n)
+/// GEMV — the level-2 analogue of [`gemm_staged_bytes`].
+pub fn gemv_staged_bytes<T: Elem>(
+    registry: &ArtifactRegistry,
+    (m, n): (usize, usize),
+) -> u64 {
+    let man = registry.manifest();
+    let (tm, tn, tk) = (man.tile_m, man.tile_n, man.tile_k);
+    let (mp, np) = (round_up(m, tm), round_up(n, tk));
+    ((mp * np + np * tn + mp) * T::SIZE) as u64
 }
 
 /// Heterogeneous AXPY (f64 only — the artifact catalog carries f64
@@ -857,7 +1132,11 @@ fn level1_chunked(
             // charge the streaming copies of the real bytes
             let xb = f64::slice_to_bytes(&xc);
             let yb = f64::slice_to_bytes(&yc);
-            let xi = staged.push(engine.map_to_charged(&xb, (take * 8) as u64, zero_copy, "x")?);
+            // x is a read-only operand: cache-eligible (repeated level-1
+            // calls over the same vector re-stage nothing).  y is the
+            // op's in-out operand — axpy logically writes it — so it
+            // never routes through the cache, mirroring gemm/gemv C.
+            let xi = staged.push(engine.map_to_operand(&xb, (take * 8) as u64, zero_copy, "x")?);
             let yi = staged.push(engine.map_to_charged(&yb, (take * 8) as u64, zero_copy, "y")?);
 
             let args: Vec<xla::Literal> = if let Some(a) = alpha {

@@ -11,7 +11,7 @@ mod platform;
 mod workload;
 
 pub use platform::{
-    ClockConfig, ClusterConfig, DmaConfig, ForkJoinConfig, HostConfig,
-    IommuConfig, MemoryConfig, PlatformConfig, SchedConfig,
+    CacheConfig, ClockConfig, ClusterConfig, DmaConfig, ForkJoinConfig,
+    HostConfig, IommuConfig, MemoryConfig, PlatformConfig, SchedConfig,
 };
 pub use workload::{DispatchMode, SweepConfig, WorkloadConfig};

@@ -117,6 +117,52 @@ pub struct IommuConfig {
     pub pte_teardown_cycles: u64,
 }
 
+/// Data-movement knobs of the offload staging path (`[sched.cache]`).
+///
+/// Both features attack the same bottleneck — the paper's data-copy
+/// region: the **operand cache** keeps `map(to:)` operands resident in
+/// the cluster's device-DRAM slice so re-staging identical bytes becomes
+/// a refcount bump instead of a copy, and **software pipelining** lets a
+/// worker stage the next batch's map-in while the current batch's
+/// compute is still in flight (double-buffered staging, enabled by the
+/// `gemm_batch` stage/execute/finish split).  Both default OFF so the
+/// plain offload path stays bit-identical to the paper's measured
+/// configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheConfig {
+    /// Fraction of the cluster's device-DRAM slice the operand cache may
+    /// keep resident (0.0 disables the cache AND the `map(alloc:)`
+    /// beta==0 output-staging elision — staging is then bit-identical to
+    /// the uncached path).  Live mappings are never evicted, so a burst
+    /// of pinned operands may transiently exceed the fraction.
+    pub cache_frac: f64,
+    /// Hard cap on resident cache entries (0 also disables the cache).
+    pub cache_max_entries: u32,
+    /// Staging pipeline depth per worker: 1 = fully serial (today's
+    /// behavior); >= 2 overlaps map-in of batch k+1 with compute of
+    /// batch k (the implementation double-buffers, so depths above 2
+    /// behave like 2).
+    pub pipeline_depth: u32,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig { cache_frac: 0.0, cache_max_entries: 32, pipeline_depth: 1 }
+    }
+}
+
+impl CacheConfig {
+    /// Is the operand cache (and the staging elisions it gates) active?
+    pub fn cache_enabled(&self) -> bool {
+        self.cache_frac > 0.0 && self.cache_max_entries > 0
+    }
+
+    /// Is worker software pipelining active?
+    pub fn pipelined(&self) -> bool {
+        self.pipeline_depth >= 2
+    }
+}
+
 /// Offload-scheduler knobs (the [`crate::sched`] pool/queue/batcher).
 ///
 /// These describe the *serving* layer on top of the SoC model: how many
@@ -143,6 +189,8 @@ pub struct SchedConfig {
     /// off; the launch overhead is then paid per request, as the paper
     /// measures it).
     pub batch_max: u32,
+    /// Operand-cache + staging-pipeline knobs (`[sched.cache]`).
+    pub cache: CacheConfig,
 }
 
 impl Default for SchedConfig {
@@ -152,6 +200,7 @@ impl Default for SchedConfig {
             queue_capacity: 64,
             batch_window_ms: 2,
             batch_max: 8,
+            cache: CacheConfig::default(),
         }
     }
 }
@@ -302,6 +351,19 @@ impl PlatformConfig {
                         .unwrap_or(def.batch_window_ms),
                     batch_max: d.opt_u64("sched.batch_max").unwrap_or(def.batch_max as u64)
                         as u32,
+                    cache: CacheConfig {
+                        cache_frac: d
+                            .opt_f64("sched.cache.cache_frac")
+                            .unwrap_or(def.cache.cache_frac),
+                        cache_max_entries: d
+                            .opt_u64("sched.cache.cache_max_entries")
+                            .unwrap_or(def.cache.cache_max_entries as u64)
+                            as u32,
+                        pipeline_depth: d
+                            .opt_u64("sched.cache.pipeline_depth")
+                            .unwrap_or(def.cache.pipeline_depth as u64)
+                            as u32,
+                    },
                 }
             },
         };
@@ -328,7 +390,9 @@ impl PlatformConfig {
              [iommu]\npage_bytes = {}\npte_create_cycles = {}\niotlb_entries = {}\n\
              iotlb_miss_cycles = {}\npte_teardown_cycles = {}\n\n\
              [sched]\npool_clusters = {}\nqueue_capacity = {}\n\
-             batch_window_ms = {}\nbatch_max = {}\n",
+             batch_window_ms = {}\nbatch_max = {}\n\n\
+             [sched.cache]\ncache_frac = {}\ncache_max_entries = {}\n\
+             pipeline_depth = {}\n",
             c.name,
             c.clock.freq_hz,
             fmt_f64(c.host.flops_per_cycle),
@@ -365,6 +429,9 @@ impl PlatformConfig {
             c.sched.queue_capacity,
             c.sched.batch_window_ms,
             c.sched.batch_max,
+            fmt_f64(c.sched.cache.cache_frac),
+            c.sched.cache.cache_max_entries,
+            c.sched.cache.pipeline_depth,
         )
     }
 
@@ -413,6 +480,18 @@ impl PlatformConfig {
         }
         if self.sched.batch_max == 0 {
             return err("sched.batch_max must be > 0 (1 disables batching)".into());
+        }
+        if !(0.0..=0.9).contains(&self.sched.cache.cache_frac) {
+            return err(format!(
+                "sched.cache.cache_frac must be in [0, 0.9], got {}",
+                self.sched.cache.cache_frac
+            ));
+        }
+        if self.sched.cache.pipeline_depth == 0 || self.sched.cache.pipeline_depth > 8 {
+            return err(format!(
+                "sched.cache.pipeline_depth must be in 1..=8, got {}",
+                self.sched.cache.pipeline_depth
+            ));
         }
         // Address-map regions must not overlap.
         let m = &self.memory;
@@ -539,6 +618,39 @@ mod tests {
         assert!(cfg.validate().is_err());
         let mut cfg = PlatformConfig::default();
         cfg.sched.batch_max = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn cache_section_parses_defaults_and_validates() {
+        // absent [sched.cache] => defaults (cache off, pipeline serial)
+        let mut text = PlatformConfig::default().to_toml_string();
+        let at = text.find("[sched.cache]").unwrap();
+        text.truncate(at);
+        let cfg = PlatformConfig::from_toml_str(&text).unwrap();
+        assert_eq!(cfg.sched.cache, CacheConfig::default());
+        assert!(!cfg.sched.cache.cache_enabled());
+        assert!(!cfg.sched.cache.pipelined());
+
+        // explicit values round-trip
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.cache.cache_frac = 0.25;
+        cfg.sched.cache.cache_max_entries = 16;
+        cfg.sched.cache.pipeline_depth = 2;
+        let back = PlatformConfig::from_toml_str(&cfg.to_toml_string()).unwrap();
+        assert_eq!(back.sched.cache, cfg.sched.cache);
+        assert!(back.sched.cache.cache_enabled());
+        assert!(back.sched.cache.pipelined());
+
+        // out-of-range knobs rejected
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.cache.cache_frac = 0.95;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.cache.cache_frac = -0.1;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.cache.pipeline_depth = 0;
         assert!(cfg.validate().is_err());
     }
 

@@ -168,6 +168,20 @@ impl Arena {
         Ok(())
     }
 
+    /// Zero an allocation's backing bytes (`map(alloc:)` staging: the
+    /// device gets a defined-content buffer without a host copy, so the
+    /// engine charges no data-copy time for it).  The arena recycles
+    /// offsets, so stale bytes from a freed neighbour must never leak
+    /// into a fresh output buffer.
+    pub fn write_zeroes(&mut self, a: &Allocation) -> Result<()> {
+        let store = self.backing.as_mut().ok_or_else(|| {
+            Error::Alloc(format!("{}: arena has no backing store", self.name))
+        })?;
+        let s = a.offset as usize;
+        store[s..s + a.len as usize].fill(0);
+        Ok(())
+    }
+
     /// Write bytes at an offset within an allocation.
     pub fn write_at(&mut self, a: &Allocation, offset: usize, data: &[u8]) -> Result<()> {
         if (offset + data.len()) as u64 > a.len {
@@ -337,6 +351,20 @@ mod tests {
         let x = a.alloc(64).unwrap();
         assert!(a.write(&x, &[1, 2]).is_err());
         assert!(a.read(&x, 2).is_err());
+        assert!(a.write_zeroes(&x).is_err());
+    }
+
+    #[test]
+    fn write_zeroes_clears_recycled_bytes() {
+        let mut a = Arena::with_backing("dram", 0xA000_0000, 4096, 64);
+        let x = a.alloc(128).unwrap();
+        a.write(&x, &[0xAB; 128]).unwrap();
+        a.free(x).unwrap();
+        // the recycled offset still holds stale bytes until zeroed
+        let y = a.alloc(128).unwrap();
+        assert_eq!(y.offset, x.offset);
+        a.write_zeroes(&y).unwrap();
+        assert_eq!(a.read(&y, 128).unwrap(), &[0u8; 128][..]);
     }
 
     #[test]

@@ -35,7 +35,8 @@ fn usage() -> String {
        project [--size N] [--dtype f32]\n\
        inspect\n\
        serve [--port 7744] [--pool N] [--queue N] [--batch-window-ms N]\n\
-             [--batch-max N]\n"
+             [--batch-max N] [--cache-frac F] [--cache-max-entries N]\n\
+             [--pipeline-depth N]\n"
         .to_string()
 }
 
@@ -274,6 +275,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(v) = num("--batch-max")? {
         cfg.sched.batch_max = narrow("--batch-max", v)?;
     }
+    // data-movement knobs ([sched.cache]): operand cache + pipelining
+    if let Some(s) = flag_value(&args.rest, "--cache-frac") {
+        cfg.sched.cache.cache_frac = s
+            .parse()
+            .map_err(|_| Error::Config("--cache-frac: not a number".into()))?;
+    }
+    if let Some(v) = num("--cache-max-entries")? {
+        cfg.sched.cache.cache_max_entries = narrow("--cache-max-entries", v)?;
+    }
+    if let Some(v) = num("--pipeline-depth")? {
+        cfg.sched.cache.pipeline_depth = narrow("--pipeline-depth", v)?;
+    }
+    cfg.validate()?;
     let dir = artifacts_dir(args)?;
     hero_blas::serve::serve(cfg, &dir, port, None)
 }

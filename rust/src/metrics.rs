@@ -26,6 +26,16 @@ pub struct Metrics {
     /// Wall-clock microseconds spent inside PJRT execution (host side,
     /// not virtual time — used by the perf pass).
     pub pjrt_wall_us: u64,
+    /// Operand-cache hits: `map(to:)` of bytes already device-resident
+    /// (refcount bump, no copy).
+    pub cache_hits: u64,
+    /// Operand-cache misses on cacheable `map(to:)` operands.
+    pub cache_misses: u64,
+    /// Cache entries evicted (LRU or OOM reclaim; never pinned ones).
+    pub cache_evictions: u64,
+    /// Host->device bytes NOT copied thanks to cache hits and
+    /// `map(alloc:)` output staging (compare with `bytes_to_device`).
+    pub bytes_copy_elided: u64,
 }
 
 impl Metrics {
@@ -37,7 +47,8 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "offloads={} host_calls={} to_dev={}B from_dev={}B \
-             iommu_pages={} tile_calls={} pjrt_wall={}us",
+             iommu_pages={} tile_calls={} pjrt_wall={}us \
+             cache_hits={} cache_misses={} cache_evictions={} elided={}B",
             self.offloads,
             self.host_calls,
             self.bytes_to_device,
@@ -45,6 +56,10 @@ impl Metrics {
             self.iommu_pages_mapped,
             self.tile_kernel_calls,
             self.pjrt_wall_us,
+            self.cache_hits,
+            self.cache_misses,
+            self.cache_evictions,
+            self.bytes_copy_elided,
         )
     }
 }
@@ -70,6 +85,26 @@ pub struct SchedCounters {
     /// EWMA of per-job wall service time in microseconds (drives the
     /// retry-after hint on rejected submits).
     pub service_us_ewma: AtomicU64,
+    /// Jobs skipped at dequeue because the submitter cancelled (its
+    /// serve-layer reply receiver timed out and was dropped).
+    pub cancelled: AtomicU64,
+    /// Batches whose map-in was staged while the previous batch's
+    /// compute was still in flight (software pipelining).
+    pub pipelined_batches: AtomicU64,
+    /// Virtual microseconds of map-in hidden under the previous batch's
+    /// compute window across all workers.
+    pub overlap_hidden_us: AtomicU64,
+    /// Operand-cache hits across all pool workers' engines.
+    pub cache_hits: AtomicU64,
+    /// Operand-cache misses across all pool workers' engines.
+    pub cache_misses: AtomicU64,
+    /// Operand-cache evictions across all pool workers' engines.
+    pub cache_evictions: AtomicU64,
+    /// Host->device bytes actually copied across all workers' engines.
+    pub bytes_to_device: AtomicU64,
+    /// Host->device bytes elided (cache hits + alloc-only output
+    /// staging) across all workers' engines.
+    pub bytes_copy_elided: AtomicU64,
 }
 
 impl SchedCounters {
@@ -99,7 +134,33 @@ impl SchedCounters {
             batched_jobs: ld(&self.batched_jobs),
             queue_depth_peak: ld(&self.queue_depth_peak),
             service_us_ewma: ld(&self.service_us_ewma),
+            cancelled: ld(&self.cancelled),
+            pipelined_batches: ld(&self.pipelined_batches),
+            overlap_hidden_us: ld(&self.overlap_hidden_us),
+            cache_hits: ld(&self.cache_hits),
+            cache_misses: ld(&self.cache_misses),
+            cache_evictions: ld(&self.cache_evictions),
+            bytes_to_device: ld(&self.bytes_to_device),
+            bytes_copy_elided: ld(&self.bytes_copy_elided),
         }
+    }
+
+    /// Fold the per-engine metric growth from one batch into the shared
+    /// counters (workers call this after each batch with the delta
+    /// between two [`Metrics`] snapshots).
+    pub fn absorb_engine_delta(&self, before: &Metrics, after: &Metrics) {
+        let add = |c: &AtomicU64, b: u64, a: u64| {
+            c.fetch_add(a.saturating_sub(b), Ordering::Relaxed);
+        };
+        add(&self.cache_hits, before.cache_hits, after.cache_hits);
+        add(&self.cache_misses, before.cache_misses, after.cache_misses);
+        add(&self.cache_evictions, before.cache_evictions, after.cache_evictions);
+        add(&self.bytes_to_device, before.bytes_to_device, after.bytes_to_device);
+        add(
+            &self.bytes_copy_elided,
+            before.bytes_copy_elided,
+            after.bytes_copy_elided,
+        );
     }
 }
 
@@ -114,22 +175,40 @@ pub struct SchedMetrics {
     pub batched_jobs: u64,
     pub queue_depth_peak: u64,
     pub service_us_ewma: u64,
+    pub cancelled: u64,
+    pub pipelined_batches: u64,
+    pub overlap_hidden_us: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+    pub bytes_to_device: u64,
+    pub bytes_copy_elided: u64,
 }
 
 impl SchedMetrics {
     /// Render a compact single-line summary (mirrors [`Metrics::summary`]).
     pub fn summary(&self) -> String {
         format!(
-            "submitted={} completed={} rejected={} failed={} batches={} \
-             batched_jobs={} queue_peak={} service_ewma={}us",
+            "submitted={} completed={} rejected={} failed={} cancelled={} \
+             batches={} batched_jobs={} pipelined={} overlap={}us \
+             queue_peak={} service_ewma={}us cache_hits={} cache_misses={} \
+             cache_evictions={} to_dev={}B elided={}B",
             self.submitted,
             self.completed,
             self.rejected,
             self.failed,
+            self.cancelled,
             self.batches,
             self.batched_jobs,
+            self.pipelined_batches,
+            self.overlap_hidden_us,
             self.queue_depth_peak,
             self.service_us_ewma,
+            self.cache_hits,
+            self.cache_misses,
+            self.cache_evictions,
+            self.bytes_to_device,
+            self.bytes_copy_elided,
         )
     }
 }
@@ -167,6 +246,27 @@ mod tests {
         assert_eq!(s.submitted, 5);
         assert_eq!(s.queue_depth_peak, 3);
         assert!(s.summary().contains("rejected=1"));
+    }
+
+    #[test]
+    fn absorb_engine_delta_accumulates_growth_only() {
+        let c = SchedCounters::default();
+        let mut before = Metrics::new();
+        before.cache_hits = 2;
+        before.bytes_to_device = 100;
+        let mut after = before;
+        after.cache_hits = 5;
+        after.cache_misses = 1;
+        after.bytes_to_device = 164;
+        after.bytes_copy_elided = 32;
+        c.absorb_engine_delta(&before, &after);
+        c.absorb_engine_delta(&after, &after); // zero delta is a no-op
+        let s = c.snapshot();
+        assert_eq!(s.cache_hits, 3);
+        assert_eq!(s.cache_misses, 1);
+        assert_eq!(s.bytes_to_device, 64);
+        assert_eq!(s.bytes_copy_elided, 32);
+        assert!(s.summary().contains("cache_hits=3"));
     }
 
     #[test]

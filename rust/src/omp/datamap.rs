@@ -71,6 +71,20 @@ impl DataMap {
     pub fn live_mappings(&self) -> usize {
         self.entries.len()
     }
+
+    /// Summed refcounts of live mappings that target a device address.
+    /// The operand cache shares one device buffer across *different* host
+    /// addresses with identical content, so a device buffer may be
+    /// referenced by several table entries at once — eviction safety
+    /// checks (and tests) use this to assert a buffer with any live
+    /// reference is never freed.
+    pub fn device_refs(&self, device_addr: u64) -> u32 {
+        self.entries
+            .values()
+            .filter(|e| e.device_addr == device_addr)
+            .map(|e| e.refcount)
+            .sum()
+    }
 }
 
 #[cfg(test)]
@@ -108,6 +122,20 @@ mod tests {
     fn unmap_unknown_rejected() {
         let mut dm = DataMap::new();
         assert!(dm.unmap(0x42).is_err());
+    }
+
+    #[test]
+    fn device_refs_sum_across_host_addresses() {
+        let mut dm = DataMap::new();
+        // two distinct host buffers share one cached device buffer
+        dm.map(0x1000, 0xA000_0000, 512).unwrap();
+        dm.map(0x2000, 0xA000_0000, 512).unwrap();
+        dm.map(0x1000, 0xA000_0000, 512).unwrap(); // re-reference
+        assert_eq!(dm.device_refs(0xA000_0000), 3);
+        dm.unmap(0x1000).unwrap();
+        dm.unmap(0x1000).unwrap();
+        assert_eq!(dm.device_refs(0xA000_0000), 1);
+        assert_eq!(dm.device_refs(0xB000_0000), 0);
     }
 
     #[test]

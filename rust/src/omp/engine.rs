@@ -9,6 +9,15 @@
 //! model charges for.  Zero-copy mode (paper's future work): `map(to:)`
 //! creates IO-PTEs instead and the device reads host memory through the
 //! IOMMU, paying IOTLB walks during compute.
+//!
+//! Read-only operands may additionally route through the device-resident
+//! operand cache ([`super::opcache`], [`OffloadEngine::map_to_operand`]):
+//! when the `[sched.cache]` config enables it, a `map(to:)` whose exact
+//! bytes are already staged becomes a refcount bump instead of a copy,
+//! and a beta==0 output buffer is staged `map(alloc:)`-style
+//! ([`OffloadEngine::map_alloc`]) without any host copy.  With the cache
+//! disabled (the default) both fall back to the plain paths above,
+//! bit-identically.
 
 use crate::error::{Error, Result};
 use crate::hero::device::Device;
@@ -20,6 +29,7 @@ use crate::soc::trace::{RegionClass, Trace};
 use crate::soc::Platform;
 
 use super::datamap::DataMap;
+use super::opcache::{CacheKey, OperandCache};
 
 /// A host buffer mapped into device space (one `map` clause instance).
 #[derive(Debug)]
@@ -33,11 +43,20 @@ pub struct MappedBuf {
     /// Zero-copy only: the host bytes (device accesses host memory
     /// directly; we keep a snapshot to model that access functionally).
     host_bytes: Option<Vec<u8>>,
+    /// Set when the backing allocation is owned by the operand cache:
+    /// this map holds one pin on the entry, the buffer is read-only to
+    /// the device, and unmap releases the pin instead of freeing.
+    cache_key: Option<CacheKey>,
 }
 
 impl MappedBuf {
     pub fn is_zero_copy(&self) -> bool {
         self.mapping.is_some()
+    }
+
+    /// Is the backing buffer owned by the operand cache (read-only)?
+    pub fn is_cached(&self) -> bool {
+        self.cache_key.is_some()
     }
 
     /// Device-visible address (dev-DRAM or IOVA).
@@ -60,6 +79,9 @@ pub struct OffloadEngine {
     pub iommu: Iommu,
     pub datamap: DataMap,
     pub metrics: Metrics,
+    /// Device-resident operand cache (capacity from `[sched.cache]`;
+    /// disabled — zero capacity — by default).
+    pub opcache: OperandCache,
 }
 
 impl OffloadEngine {
@@ -84,6 +106,16 @@ impl OffloadEngine {
         clock.advance(boot_cost);
         trace.record(RegionClass::ForkJoin, start, boot_cost, "boot");
 
+        let cc = &platform.cfg.sched.cache;
+        let opcache = if cc.cache_enabled() {
+            OperandCache::new(
+                (platform.cfg.memory.dev_dram_bytes as f64 * cc.cache_frac) as u64,
+                cc.cache_max_entries as usize,
+            )
+        } else {
+            OperandCache::disabled()
+        };
+
         Ok(OffloadEngine {
             platform,
             clock,
@@ -92,7 +124,13 @@ impl OffloadEngine {
             iommu,
             datamap: DataMap::new(),
             metrics: Metrics::new(),
+            opcache,
         })
+    }
+
+    /// Is the operand cache (and the staging elisions it gates) active?
+    pub fn cache_enabled(&self) -> bool {
+        self.opcache.enabled()
     }
 
     /// Virtual now.
@@ -212,9 +250,10 @@ impl OffloadEngine {
                 backing: None,
                 mapping: Some(mapping),
                 host_bytes: Some(data.to_vec()),
+                cache_key: None,
             })
         } else {
-            let alloc = self.device.dram.alloc(len)?;
+            let alloc = self.dram_alloc_reclaiming(len)?;
             self.device.dram.write(&alloc, data)?;
             self.datamap.map(host_addr, alloc.addr, len)?;
             let cost = self.platform.host.memcpy_cycles(charged);
@@ -227,8 +266,137 @@ impl OffloadEngine {
                 backing: Some(alloc),
                 mapping: None,
                 host_bytes: None,
+                cache_key: None,
             })
         }
+    }
+
+    /// `map(to:)` of a *read-only operand*, eligible for the operand
+    /// cache: if the exact bytes are already device-resident the map
+    /// degenerates to a refcount bump (one table insert, charged at the
+    /// memcpy setup cost) instead of a copy.  With the cache disabled, or
+    /// in zero-copy mode, this is exactly [`OffloadEngine::map_to_charged`].
+    ///
+    /// The caller must never write through the returned mapping
+    /// ([`OffloadEngine::write_mapped`] enforces it): the backing buffer
+    /// may be shared with other live mappings of the same content.
+    pub fn map_to_operand(&mut self, data: &[u8], charged_bytes: u64,
+                          zero_copy: bool, label: &str) -> Result<MappedBuf> {
+        if zero_copy || !self.opcache.enabled() {
+            return self.map_to_charged(data, charged_bytes, zero_copy, label);
+        }
+        let host_addr = data.as_ptr() as u64;
+        let len = data.len() as u64;
+        if len == 0 {
+            return Err(Error::Offload(format!("map_to({label}): empty buffer")));
+        }
+        let charged = charged_bytes.min(len).max(1);
+        let key = CacheKey::of(data);
+
+        // Verified hit: the resident bytes must equal the incoming ones
+        // (a hash collision degrades to a miss, never to wrong numerics).
+        if let Some(alloc) = self.opcache.peek(&key) {
+            if self.device.dram.read(&alloc, data.len())? == data {
+                self.datamap.map(host_addr, alloc.addr, len)?;
+                self.opcache.pin_hit(&key);
+                let cost = Cycles(self.platform.cfg.host.memcpy_setup_cycles);
+                self.charge(RegionClass::DataCopy, cost,
+                            &format!("cache_hit({label})"));
+                self.metrics.cache_hits += 1;
+                self.metrics.bytes_copy_elided += charged;
+                return Ok(MappedBuf {
+                    host_addr,
+                    len,
+                    backing: Some(alloc),
+                    mapping: None,
+                    host_bytes: None,
+                    cache_key: Some(key),
+                });
+            }
+        }
+
+        // Miss: stage like the plain path, then register the buffer as
+        // resident so the next identical map hits.
+        self.opcache.note_miss();
+        self.metrics.cache_misses += 1;
+        let alloc = self.dram_alloc_reclaiming(len)?;
+        self.device.dram.write(&alloc, data)?;
+        self.datamap.map(host_addr, alloc.addr, len)?;
+        let cost = self.platform.host.memcpy_cycles(charged);
+        self.charge(RegionClass::DataCopy, cost, &format!("copy_to({label})"));
+        self.metrics.bytes_to_device += charged;
+        let outcome = self.opcache.insert(key, alloc);
+        self.free_evicted(outcome.evicted)?;
+        Ok(MappedBuf {
+            host_addr,
+            len,
+            backing: Some(alloc),
+            mapping: None,
+            host_bytes: None,
+            cache_key: outcome.cached.then_some(key),
+        })
+    }
+
+    /// `map(alloc:)` — stage an *output* buffer without copying host
+    /// bytes: the device gets a zero-filled allocation of `data`'s size
+    /// (only the allocation setup is charged).  Correct whenever the
+    /// kernel never reads the buffer's incoming contents (beta == 0
+    /// epilogues).  `charged_bytes` is what the elision saved, counted in
+    /// `bytes_copy_elided`.
+    pub fn map_alloc(&mut self, data: &[u8], charged_bytes: u64, label: &str)
+                     -> Result<MappedBuf> {
+        let host_addr = data.as_ptr() as u64;
+        let len = data.len() as u64;
+        if len == 0 {
+            return Err(Error::Offload(format!("map_alloc({label}): empty buffer")));
+        }
+        let alloc = self.dram_alloc_reclaiming(len)?;
+        self.device.dram.write_zeroes(&alloc)?;
+        self.datamap.map(host_addr, alloc.addr, len)?;
+        let cost = Cycles(self.platform.cfg.host.memcpy_setup_cycles);
+        self.charge(RegionClass::DataCopy, cost, &format!("map_alloc({label})"));
+        self.metrics.bytes_copy_elided += charged_bytes.min(len).max(1);
+        Ok(MappedBuf {
+            host_addr,
+            len,
+            backing: Some(alloc),
+            mapping: None,
+            host_bytes: None,
+            cache_key: None,
+        })
+    }
+
+    /// Allocate device DRAM; on OOM, evict unpinned cache entries (LRU
+    /// first) and retry once, so cache residency never fails a staging
+    /// that would have succeeded without the cache.
+    fn dram_alloc_reclaiming(&mut self, len: u64)
+                             -> Result<crate::hero::allocator::Allocation> {
+        match self.device.dram.alloc(len) {
+            Ok(a) => Ok(a),
+            Err(first) => {
+                let evicted = self.opcache.evict_for(len);
+                if evicted.is_empty() {
+                    return Err(first);
+                }
+                self.free_evicted(evicted)?;
+                self.device.dram.alloc(len)
+            }
+        }
+    }
+
+    /// Return evicted cache allocations to the arena.
+    fn free_evicted(&mut self, evicted: Vec<crate::hero::allocator::Allocation>)
+                    -> Result<()> {
+        for a in evicted {
+            debug_assert_eq!(
+                self.datamap.device_refs(a.addr),
+                0,
+                "evicted a device buffer with live mappings"
+            );
+            self.device.dram.free(a)?;
+            self.metrics.cache_evictions += 1;
+        }
+        Ok(())
     }
 
     /// `map(from:)` — bring results back to the host buffer.
@@ -267,9 +435,18 @@ impl OffloadEngine {
         Ok(())
     }
 
-    /// Release a mapping (device DRAM free or IO-PTE teardown).
+    /// Release a mapping (device DRAM free or IO-PTE teardown).  A
+    /// cache-owned buffer is NOT freed: the map's pin on the cache entry
+    /// is dropped and the bytes stay resident for the next identical
+    /// `map(to:)` (LRU eviction reclaims them later).
     pub fn unmap(&mut self, buf: MappedBuf, label: &str) -> Result<()> {
         let released = self.datamap.unmap(buf.host_addr)?;
+        if let Some(key) = buf.cache_key {
+            // one pin per MappedBuf, regardless of datamap refcounts
+            let evicted = self.opcache.release(&key);
+            self.free_evicted(evicted)?;
+            return Ok(());
+        }
         if released.is_none() {
             return Ok(()); // still referenced elsewhere
         }
@@ -317,6 +494,13 @@ impl OffloadEngine {
                         data: &[u8]) -> Result<()> {
         if (offset + data.len()) as u64 > buf.len {
             return Err(Error::Offload("device write past end of mapping".into()));
+        }
+        if buf.is_cached() {
+            // the backing may be shared with other mappings of the same
+            // content — outputs must never stage through the cache
+            return Err(Error::Offload(
+                "device write to a cache-shared read-only mapping".into(),
+            ));
         }
         if let Some(alloc) = &buf.backing {
             self.device.dram.write_at(alloc, offset, data)?;
@@ -483,5 +667,161 @@ mod tests {
     fn empty_map_rejected() {
         let mut e = engine();
         assert!(e.map_to(&[], false, "x").is_err());
+        assert!(e.map_to_operand(&[], 0, false, "x").is_err());
+        assert!(e.map_alloc(&[], 0, "x").is_err());
+    }
+
+    /// Engine over a small DRAM partition with the operand cache on.
+    fn cached_engine(dev_dram_bytes: u64, frac: f64, max_entries: u32)
+                     -> OffloadEngine {
+        let mut cfg = PlatformConfig::default();
+        cfg.memory.dev_dram_bytes = dev_dram_bytes;
+        cfg.sched.cache.cache_frac = frac;
+        cfg.sched.cache.cache_max_entries = max_entries;
+        let mut e = OffloadEngine::new(Platform::new(cfg)).unwrap();
+        e.reset_run();
+        e
+    }
+
+    #[test]
+    fn operand_cache_hit_is_refcount_bump_not_copy() {
+        let mut e = cached_engine(1 << 20, 0.5, 8);
+        let content: Vec<u8> = (0..4096u32).map(|i| (i % 251) as u8).collect();
+        let other = content.clone(); // identical bytes, different host addr
+
+        let b1 = e.map_to_operand(&content, 4096, false, "b").unwrap();
+        assert!(b1.is_cached());
+        assert_eq!(e.metrics.cache_misses, 1);
+        assert_eq!(e.metrics.bytes_to_device, 4096);
+        let copy_cost = e.trace.total(RegionClass::DataCopy);
+
+        let b2 = e.map_to_operand(&other, 4096, false, "b").unwrap();
+        assert!(b2.is_cached());
+        assert_eq!(b1.device_addr(), b2.device_addr(), "hit reuses the buffer");
+        assert_eq!(e.metrics.cache_hits, 1);
+        assert_eq!(e.metrics.bytes_to_device, 4096, "no second copy");
+        assert_eq!(e.metrics.bytes_copy_elided, 4096);
+        // the hit charged only the table-insert setup cost
+        let hit_cost = e.trace.total(RegionClass::DataCopy).0 - copy_cost.0;
+        assert_eq!(hit_cost, e.platform.cfg.host.memcpy_setup_cycles);
+        // both mappings read the same staged bytes
+        assert_eq!(e.read_mapped(&b2, 100, 16).unwrap(), &content[100..116]);
+
+        // unmap both: entry stays resident, next map still hits
+        e.unmap(b1, "b").unwrap();
+        e.unmap(b2, "b").unwrap();
+        let b3 = e.map_to_operand(&content, 4096, false, "b").unwrap();
+        assert_eq!(e.metrics.cache_hits, 2);
+        e.unmap(b3, "b").unwrap();
+        assert_eq!(e.metrics.cache_evictions, 0);
+    }
+
+    #[test]
+    fn cache_disabled_is_bit_identical_to_plain_map() {
+        // cache_frac = 0 (the default): map_to_operand must behave
+        // exactly like map_to_charged, twice over
+        let mut off = engine();
+        off.reset_run();
+        let data = vec![3u8; 8192];
+        let copy = vec![3u8; 8192];
+        let b1 = off.map_to_operand(&data, 8192, false, "a").unwrap();
+        let b2 = off.map_to_operand(&copy, 8192, false, "a").unwrap();
+        assert!(!b1.is_cached() && !b2.is_cached());
+        assert_ne!(b1.device_addr(), b2.device_addr());
+        assert_eq!(off.metrics.cache_hits, 0);
+        assert_eq!(off.metrics.cache_misses, 0);
+        assert_eq!(off.metrics.bytes_copy_elided, 0);
+        assert_eq!(off.metrics.bytes_to_device, 2 * 8192);
+        assert!(off.opcache.is_empty());
+
+        let mut plain = engine();
+        plain.reset_run();
+        let p1 = plain.map_to_charged(&data, 8192, false, "a").unwrap();
+        let p2 = plain.map_to_charged(&copy, 8192, false, "a").unwrap();
+        assert_eq!(
+            off.trace.total(RegionClass::DataCopy),
+            plain.trace.total(RegionClass::DataCopy),
+            "disabled cache must charge identical copy time"
+        );
+        off.unmap(b1, "a").unwrap();
+        off.unmap(b2, "a").unwrap();
+        plain.unmap(p1, "a").unwrap();
+        plain.unmap(p2, "a").unwrap();
+        assert_eq!(off.device.dram.stats().bytes_in_use, 0);
+    }
+
+    #[test]
+    fn eviction_never_frees_live_mappings() {
+        // capacity: two 64 KiB entries (256 KiB DRAM * 0.5)
+        let mut e = cached_engine(256 << 10, 0.5, 8);
+        let mk = |b: u8| vec![b; 64 << 10];
+        let (da, db, dc) = (mk(1), mk(2), mk(3));
+
+        let a = e.map_to_operand(&da, 1, false, "a").unwrap(); // pinned
+        let b = e.map_to_operand(&db, 1, false, "b").unwrap(); // pinned
+        // third operand overflows the cache budget, but a and b are
+        // pinned by live mappings: nothing may be evicted
+        let c = e.map_to_operand(&dc, 1, false, "c").unwrap();
+        assert_eq!(e.metrics.cache_evictions, 0);
+        assert!(e.datamap.device_refs(a.device_addr()) > 0);
+        assert_eq!(e.read_mapped(&a, 0, 4).unwrap(), &da[..4]);
+
+        // unmap a: it becomes evictable, and trimming back to budget
+        // reclaims exactly the unpinned LRU entry
+        let a_addr = a.device_addr();
+        e.unmap(a, "a").unwrap();
+        assert_eq!(e.metrics.cache_evictions, 1);
+        assert_eq!(e.datamap.device_refs(a_addr), 0);
+        // the still-live mappings are untouched
+        assert_eq!(e.read_mapped(&b, 0, 4).unwrap(), &db[..4]);
+        assert_eq!(e.read_mapped(&c, 0, 4).unwrap(), &dc[..4]);
+        e.unmap(b, "b").unwrap();
+        e.unmap(c, "c").unwrap();
+        e.device.dram.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn oom_reclaims_unpinned_cache_entries() {
+        // 256 KiB DRAM, cache may hold up to 0.9 of it
+        let mut e = cached_engine(256 << 10, 0.9, 8);
+        let big = vec![7u8; 128 << 10];
+        let b = e.map_to_operand(&big, 1, false, "b").unwrap();
+        e.unmap(b, "b").unwrap(); // resident, unpinned (fits 0.9 budget)
+        assert_eq!(e.metrics.cache_evictions, 0);
+
+        // a non-cacheable allocation needing more than the free space
+        // forces the OOM-reclaim path to evict the resident entry
+        let out = vec![0u8; 192 << 10];
+        let buf = e.map_to_charged(&out, 1, false, "c").unwrap();
+        assert_eq!(e.metrics.cache_evictions, 1);
+        e.unmap(buf, "c").unwrap();
+        assert_eq!(e.device.dram.stats().bytes_in_use, 0);
+    }
+
+    #[test]
+    fn map_alloc_stages_zeroed_output_without_copy() {
+        let mut e = cached_engine(1 << 20, 0.5, 8);
+        let host_c = vec![9u8; 4096]; // nonzero host bytes, never copied
+        let mut c = e.map_alloc(&host_c, 4096, "c").unwrap();
+        assert!(!c.is_cached());
+        assert_eq!(e.metrics.bytes_to_device, 0);
+        assert_eq!(e.metrics.bytes_copy_elided, 4096);
+        assert_eq!(e.read_mapped(&c, 0, 16).unwrap(), &[0u8; 16][..]);
+        // outputs stay writable
+        e.write_mapped(&mut c, 0, &[5u8; 8]).unwrap();
+        let mut out = vec![0u8; 4096];
+        e.map_from_charged(&c, &mut out, 4096, "c").unwrap();
+        assert_eq!(&out[..8], &[5u8; 8]);
+        e.unmap(c, "c").unwrap();
+        assert_eq!(e.device.dram.stats().bytes_in_use, 0);
+    }
+
+    #[test]
+    fn write_to_cached_mapping_rejected() {
+        let mut e = cached_engine(1 << 20, 0.5, 8);
+        let data = vec![1u8; 1024];
+        let mut b = e.map_to_operand(&data, 1024, false, "b").unwrap();
+        assert!(e.write_mapped(&mut b, 0, &[2u8; 4]).is_err());
+        e.unmap(b, "b").unwrap();
     }
 }

@@ -7,8 +7,14 @@
 //! region is [`engine::OffloadEngine::map_to`]/[`engine::OffloadEngine::map_from`]
 //! in copy mode, or IO-PTE creation in zero-copy mode.
 
+//! Repeated traffic additionally flows through the device-resident
+//! operand cache ([`opcache`]): a `map(to:)` whose bytes are already
+//! staged becomes a refcount bump instead of a copy.
+
 pub mod datamap;
 pub mod engine;
+pub mod opcache;
 
 pub use datamap::{DataMap, DeviceMapping};
 pub use engine::{MappedBuf, OffloadEngine};
+pub use opcache::{CacheKey, CacheStats, OperandCache};

@@ -1,0 +1,366 @@
+//! Device-resident operand cache: content/shape-keyed LRU over the
+//! device-DRAM arena.
+//!
+//! The paper's Figure-3 crossover is set by offload overhead, and the
+//! dominant per-request cost in the serving stack is data movement:
+//! every GEMM re-stages its operands into the cluster's DRAM slice even
+//! when the identical bytes (a reused weight matrix, the serving hot
+//! path) were copied moments earlier for the previous request.  This
+//! cache keeps `map(to:)` buffers resident after their outermost unmap
+//! so a re-map of identical content becomes a refcount bump instead of a
+//! copy — the HERO lesson that copy-based offload bandwidth, not FLOPs,
+//! is the bottleneck on this class of SoC.
+//!
+//! Keying is by content (64-bit FNV-1a) *and* length; the engine
+//! verifies the resident bytes against the incoming buffer before
+//! declaring a hit, so a hash collision degrades to a miss, never to
+//! wrong numerics.  (The hash stands in for the buffer-identity tracking
+//! a real runtime would do — host-side bookkeeping, so it is not charged
+//! to the virtual clock.)
+//!
+//! Entries referenced by a live [`super::datamap::DataMap`] mapping are
+//! *pinned* (one pin per live `MappedBuf`); eviction — LRU, triggered by
+//! the byte budget (`cache_frac` of the cluster's DRAM slice), the entry
+//! cap, or an allocator OOM — only ever frees unpinned entries, so a
+//! buffer the device may still read is never reclaimed.  The cache owns
+//! no arena: it hands evicted [`Allocation`]s back to the caller, which
+//! frees them against `hero::allocator` (the engine does this and counts
+//! the eviction).
+
+use crate::hero::allocator::Allocation;
+
+/// Content/shape identity of one staged operand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub len: u64,
+    pub hash: u64,
+}
+
+impl CacheKey {
+    /// Key a host buffer by length + FNV-1a content hash.
+    pub fn of(data: &[u8]) -> CacheKey {
+        CacheKey { len: data.len() as u64, hash: fnv1a(data) }
+    }
+}
+
+/// 64-bit FNV-1a — cheap, dependency-free, good enough as a first-level
+/// filter (the engine byte-verifies candidate hits).
+pub fn fnv1a(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// One resident operand.
+#[derive(Debug)]
+struct Entry {
+    key: CacheKey,
+    alloc: Allocation,
+    /// Live `MappedBuf`s referencing this entry (one pin per map).
+    pins: u32,
+    /// Monotone LRU stamp (bumped on every hit / insert).
+    stamp: u64,
+}
+
+/// Point-in-time cache statistics (accumulated since construction).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+}
+
+/// The per-cluster operand cache.
+#[derive(Debug)]
+pub struct OperandCache {
+    entries: Vec<Entry>,
+    /// Byte budget (fraction of the cluster's DRAM slice); 0 disables.
+    capacity_bytes: u64,
+    /// Entry-count budget; 0 disables.
+    max_entries: usize,
+    clock: u64,
+    stats: CacheStats,
+}
+
+impl OperandCache {
+    pub fn new(capacity_bytes: u64, max_entries: usize) -> OperandCache {
+        OperandCache {
+            entries: Vec::new(),
+            capacity_bytes,
+            max_entries,
+            clock: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// A cache that never holds anything (cache_frac = 0).
+    pub fn disabled() -> OperandCache {
+        OperandCache::new(0, 0)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.capacity_bytes > 0 && self.max_entries > 0
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Bytes currently resident (pinned + unpinned).
+    pub fn bytes_resident(&self) -> u64 {
+        self.entries.iter().map(|e| e.alloc.len).sum()
+    }
+
+    /// Candidate lookup WITHOUT pinning or stats: the engine byte-verifies
+    /// the resident allocation against the incoming buffer first.
+    pub fn peek(&self, key: &CacheKey) -> Option<Allocation> {
+        self.entries.iter().find(|e| e.key == *key).map(|e| e.alloc)
+    }
+
+    /// Commit a verified hit: pin the entry and refresh its LRU stamp.
+    pub fn pin_hit(&mut self, key: &CacheKey) {
+        self.clock += 1;
+        let clock = self.clock;
+        if let Some(e) = self.entries.iter_mut().find(|e| e.key == *key) {
+            e.pins += 1;
+            e.stamp = clock;
+            self.stats.hits += 1;
+        }
+    }
+
+    /// Record a miss (the caller stages the bytes itself).
+    pub fn note_miss(&mut self) {
+        self.stats.misses += 1;
+    }
+
+    /// Register a freshly staged allocation as resident, pinned once by
+    /// the `MappedBuf` being created.  Returns allocations evicted to
+    /// respect the byte/entry budgets — the caller must free them against
+    /// the arena.  A duplicate key (two in-flight maps of identical
+    /// content that both missed) leaves the older entry authoritative and
+    /// tells the caller to treat the new allocation as uncached.
+    #[must_use]
+    pub fn insert(&mut self, key: CacheKey, alloc: Allocation) -> InsertOutcome {
+        if !self.enabled() {
+            return InsertOutcome { cached: false, evicted: Vec::new() };
+        }
+        if self.entries.iter().any(|e| e.key == key) {
+            // Older entry wins; the caller keeps its private allocation.
+            return InsertOutcome { cached: false, evicted: Vec::new() };
+        }
+        self.clock += 1;
+        self.entries.push(Entry { key, alloc, pins: 1, stamp: self.clock });
+        self.stats.insertions += 1;
+        InsertOutcome { cached: true, evicted: self.trim() }
+    }
+
+    /// Drop one pin (a cached `MappedBuf` was unmapped).  The entry stays
+    /// resident; returns any allocations evicted while trimming back to
+    /// budget now that the entry may be reclaimable.
+    #[must_use]
+    pub fn release(&mut self, key: &CacheKey) -> Vec<Allocation> {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.key == *key) {
+            debug_assert!(e.pins > 0, "release of unpinned cache entry");
+            e.pins = e.pins.saturating_sub(1);
+        }
+        self.trim()
+    }
+
+    /// Evict unpinned entries (LRU first) until at least `need_bytes` of
+    /// allocation length has been reclaimed or nothing unpinned remains.
+    /// Used on allocator OOM so the cache never turns a workload that fit
+    /// yesterday into one that OOMs today.
+    #[must_use]
+    pub fn evict_for(&mut self, need_bytes: u64) -> Vec<Allocation> {
+        let mut out = Vec::new();
+        let mut freed = 0u64;
+        while freed < need_bytes {
+            match self.evict_lru_unpinned() {
+                Some(a) => {
+                    freed += a.len;
+                    out.push(a);
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Evict LRU unpinned entries until the byte and entry budgets hold.
+    /// Pinned entries never count as evictable, so a burst of live
+    /// mappings may transiently overshoot the budgets.
+    fn trim(&mut self) -> Vec<Allocation> {
+        let mut out = Vec::new();
+        loop {
+            let over_bytes = self.bytes_resident() > self.capacity_bytes;
+            let over_entries = self.entries.len() > self.max_entries;
+            if !over_bytes && !over_entries {
+                break;
+            }
+            match self.evict_lru_unpinned() {
+                Some(a) => out.push(a),
+                None => break, // everything left is pinned
+            }
+        }
+        out
+    }
+
+    fn evict_lru_unpinned(&mut self) -> Option<Allocation> {
+        let idx = self
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.pins == 0)
+            .min_by_key(|(_, e)| e.stamp)
+            .map(|(i, _)| i)?;
+        self.stats.evictions += 1;
+        Some(self.entries.remove(idx).alloc)
+    }
+
+    /// Test/debug invariant: pins non-negative is structural; check no
+    /// duplicate keys and that resident bytes match entry allocations.
+    pub fn check_invariants(&self) -> bool {
+        for (i, a) in self.entries.iter().enumerate() {
+            for b in self.entries.iter().skip(i + 1) {
+                if a.key == b.key {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Pins on a key (0 when absent) — lets tests assert pin accounting.
+    pub fn pins(&self, key: &CacheKey) -> u32 {
+        self.entries.iter().find(|e| e.key == *key).map_or(0, |e| e.pins)
+    }
+}
+
+/// What [`OperandCache::insert`] did with the new allocation.
+#[derive(Debug)]
+pub struct InsertOutcome {
+    /// True: the allocation is now cache-owned (free it only via
+    /// eviction).  False: the caller keeps ownership (free on unmap).
+    pub cached: bool,
+    /// Allocations evicted to make room; the caller frees them.
+    pub evicted: Vec<Allocation>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn alloc(addr: u64, len: u64) -> Allocation {
+        Allocation { offset: addr, len, addr }
+    }
+
+    fn key(b: u8) -> CacheKey {
+        CacheKey::of(&[b; 64])
+    }
+
+    #[test]
+    fn content_keying_distinguishes_bytes_and_lengths() {
+        assert_eq!(CacheKey::of(&[1, 2, 3]), CacheKey::of(&[1, 2, 3]));
+        assert_ne!(CacheKey::of(&[1, 2, 3]), CacheKey::of(&[1, 2, 4]));
+        assert_ne!(CacheKey::of(&[0; 8]), CacheKey::of(&[0; 16]));
+    }
+
+    #[test]
+    fn hit_miss_evict_sequence() {
+        let mut c = OperandCache::new(128, 8); // room for two 64 B entries
+        assert!(c.insert(key(1), alloc(0x100, 64)).cached);
+        assert!(c.insert(key(2), alloc(0x200, 64)).cached);
+        // release both pins: entries stay resident
+        assert!(c.release(&key(1)).is_empty());
+        assert!(c.release(&key(2)).is_empty());
+        assert_eq!(c.len(), 2);
+
+        // re-map of entry 1: verified hit refreshes LRU
+        assert_eq!(c.peek(&key(1)).unwrap().addr, 0x100);
+        c.pin_hit(&key(1));
+        assert!(c.release(&key(1)).is_empty());
+
+        // a third entry overflows the byte budget: LRU (entry 2) goes
+        let out = c.insert(key(3), alloc(0x300, 64));
+        assert!(out.cached);
+        assert_eq!(out.evicted.len(), 1);
+        assert_eq!(out.evicted[0].addr, 0x200);
+        assert_eq!(c.stats().evictions, 1);
+        assert_eq!(c.stats().hits, 1);
+        assert!(c.peek(&key(2)).is_none());
+        assert!(c.peek(&key(1)).is_some(), "recently hit entry survives");
+        assert!(c.check_invariants());
+    }
+
+    #[test]
+    fn pinned_entries_never_evicted() {
+        let mut c = OperandCache::new(64, 1); // budget for one entry
+        assert!(c.insert(key(1), alloc(0x100, 64)).cached); // pinned (live map)
+        // inserting a second entry overflows both budgets, but entry 1 is
+        // pinned and entry 2 is pinned: nothing evictable
+        let out = c.insert(key(2), alloc(0x200, 64));
+        assert!(out.cached);
+        assert!(out.evicted.is_empty(), "pinned entries must not be evicted");
+        assert_eq!(c.len(), 2); // transient overshoot is allowed
+
+        // releasing entry 2 makes it the only evictable one; trim reclaims it
+        let evicted = c.release(&key(2));
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0].addr, 0x200);
+        assert_eq!(c.pins(&key(1)), 1);
+        assert!(c.peek(&key(1)).is_some());
+
+        // OOM-driven eviction also refuses pinned entries
+        assert!(c.evict_for(64).is_empty());
+        let _ = c.release(&key(1));
+        assert_eq!(c.evict_for(64).len(), 1);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn duplicate_insert_keeps_older_entry() {
+        let mut c = OperandCache::new(1024, 8);
+        assert!(c.insert(key(1), alloc(0x100, 64)).cached);
+        let out = c.insert(key(1), alloc(0x900, 64));
+        assert!(!out.cached, "duplicate key: caller keeps its allocation");
+        assert_eq!(c.peek(&key(1)).unwrap().addr, 0x100);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn disabled_cache_caches_nothing() {
+        let mut c = OperandCache::disabled();
+        assert!(!c.enabled());
+        let out = c.insert(key(1), alloc(0x100, 64));
+        assert!(!out.cached && out.evicted.is_empty());
+        assert!(c.peek(&key(1)).is_none());
+        assert_eq!(c.stats().insertions, 0);
+    }
+
+    #[test]
+    fn lru_order_follows_hits() {
+        let mut c = OperandCache::new(192, 8); // three 64 B entries
+        for b in 1..=3u8 {
+            assert!(c.insert(key(b), alloc(0x100 * b as u64, 64)).cached);
+            assert!(c.release(&key(b)).is_empty());
+        }
+        // touch 1 (oldest) so 2 becomes LRU
+        c.pin_hit(&key(1));
+        let _ = c.release(&key(1));
+        let out = c.insert(key(4), alloc(0x400, 64));
+        assert_eq!(out.evicted.len(), 1);
+        assert_eq!(out.evicted[0].addr, 0x200);
+    }
+}

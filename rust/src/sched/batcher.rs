@@ -20,13 +20,14 @@ use super::queue::WorkQueue;
 use super::Job;
 
 /// Coalescing identity: only jobs agreeing on all fields may share a
-/// launch (same shape => same padded buffers and tile walk; same mode =>
-/// same dispatch target).  The seed is deliberately NOT part of the key —
-/// members keep their own operands.
+/// launch (same op + shape => same padded buffers and tile walk; same
+/// mode => same dispatch target).  The seeds are deliberately NOT part
+/// of the key — members keep their own operands.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BatchKey {
     pub op: &'static str,
-    pub n: usize,
+    /// Op shape: GEMM uses (m, n, k); GEMV uses (m, n, 0).
+    pub dims: (usize, usize, usize),
     pub mode: DispatchMode,
 }
 
@@ -101,8 +102,10 @@ mod tests {
                 n,
                 mode: DispatchMode::DeviceOnly,
                 seed: id,
+                b_seed: None,
             }),
             reply: tx,
+            cancel: crate::sched::CancelToken::default(),
             enqueued_at: Instant::now(),
         }
     }
@@ -169,6 +172,7 @@ mod tests {
             priority: Priority::Normal,
             payload: JobPayload::Fence(frx),
             reply: tx,
+            cancel: crate::sched::CancelToken::default(),
             enqueued_at: Instant::now(),
         };
         let b = Batcher::new(Duration::from_millis(50), 8);

@@ -16,10 +16,22 @@
 //! | workers | [`worker`] | one thread per cluster: pull jobs, consult the dispatch policy, launch, poll the cluster mailbox for completion, reply |
 //!
 //! [`Scheduler`] is the facade: `submit` enqueues a job and hands back a
-//! receiver for its result; connection handlers block on the receiver
-//! while the pool completes requests out of band.  Config knobs live in
+//! [`Submission`] (result receiver + cancel token); connection handlers
+//! block on the receiver while the pool completes requests out of band,
+//! and a handler that stops waiting cancels its job so no worker ever
+//! launches it for a dropped receiver.  Config knobs live in
 //! [`crate::config::SchedConfig`] (`[sched]` in the platform TOML):
 //! `pool_clusters`, `queue_capacity`, `batch_window_ms`, `batch_max`.
+//!
+//! Two data-movement optimizations ride the same worker loop, both
+//! configured under `[sched.cache]` and both off by default: each
+//! cluster session carries a device-resident **operand cache**
+//! ([`crate::omp::opcache`]) that turns re-maps of identical bytes into
+//! refcount bumps, and the worker **software-pipelines** coalesced gemm
+//! launches (stage batch k+1's map-in while batch k computes) through
+//! the `gemm_batch` stage/execute/finish split — see [`worker`].
+//! GEMM and GEMV requests both coalesce (same [`BatchKey`] => one
+//! fork-join launch).
 //!
 //! Each worker owns a full vertical slice (engine + artifact registry +
 //! policy) built *on its own thread* — nothing session-internal crosses
@@ -96,17 +108,52 @@ pub struct GemmRequest {
     /// bit-identical, which is what lets the batcher coalesce safely and
     /// tests assert checksums.
     pub seed: u64,
+    /// When set, B is drawn from its own RNG stream (`Rng::new(b_seed)`)
+    /// instead of continuing A's — so requests that share a `b_seed`
+    /// share a bit-identical B matrix, the reused-weight serving pattern
+    /// the device-resident operand cache turns into refcount bumps.
+    /// `None` keeps the original single-stream synthesis.
+    pub b_seed: Option<u64>,
+}
+
+/// One GEMV serving request: an (m x n) matrix and length-n vector
+/// synthesized from a deterministic seed; y starts at zero.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GemvRequest {
+    pub m: usize,
+    pub n: usize,
+    pub mode: DispatchMode,
+    pub seed: u64,
 }
 
 /// What a job asks the pool to do.
 #[derive(Debug)]
 pub enum JobPayload {
     Gemm(GemmRequest),
+    Gemv(GemvRequest),
     /// Drain barrier: the worker that pops this parks until the sender
     /// releases (or drops) the channel.  Used by tests and benches to
     /// hold a cluster busy deterministically — e.g. to fill the queue
     /// and observe backpressure without racing the pool.
     Fence(mpsc::Receiver<()>),
+}
+
+/// Cooperative cancellation handle for a submitted job: the submitter
+/// sets it when it stops waiting (serve-layer reply timeout), and the
+/// worker checks it at dequeue so an orphaned job is skipped instead of
+/// launched for nobody.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<std::sync::atomic::AtomicBool>);
+
+impl CancelToken {
+    /// Mark the job as no longer wanted (idempotent).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
 }
 
 /// A unit of work in the queue.
@@ -118,6 +165,9 @@ pub struct Job {
     /// Where the worker sends the result; the submitting connection
     /// blocks on the paired receiver.
     pub reply: mpsc::Sender<JobResult>,
+    /// Checked by workers at dequeue: a cancelled job is dropped, never
+    /// launched.
+    pub cancel: CancelToken,
     pub enqueued_at: Instant,
 }
 
@@ -126,7 +176,12 @@ impl Job {
     /// launch.  `None` never batches.
     pub fn batch_key(&self) -> Option<BatchKey> {
         match &self.payload {
-            JobPayload::Gemm(r) => Some(BatchKey { op: "gemm", n: r.n, mode: r.mode }),
+            JobPayload::Gemm(r) => {
+                Some(BatchKey { op: "gemm", dims: (r.n, r.n, r.n), mode: r.mode })
+            }
+            JobPayload::Gemv(r) => {
+                Some(BatchKey { op: "gemv", dims: (r.m, r.n, 0), mode: r.mode })
+            }
             JobPayload::Fence(_) => None,
         }
     }
@@ -135,6 +190,10 @@ impl Job {
 /// Successful completion of one job.
 #[derive(Debug, Clone, Copy)]
 pub struct GemmOutcome {
+    /// Which operation ran ("gemm", "gemv" or "fence").
+    pub op: &'static str,
+    /// Result rows (GEMM: n; GEMV: m).
+    pub m: usize,
     pub n: usize,
     pub mode: DispatchMode,
     /// Sum of the result matrix (verifiable against the seed).
@@ -155,6 +214,32 @@ pub struct GemmOutcome {
 
 /// What comes back on the reply channel.
 pub type JobResult = std::result::Result<GemmOutcome, String>;
+
+/// An accepted submit: where the result will arrive, plus the handle to
+/// cancel the job if the submitter stops waiting (a cancelled job is
+/// skipped at dequeue — see [`CancelToken`]).
+#[derive(Debug)]
+pub struct Submission {
+    pub result: mpsc::Receiver<JobResult>,
+    pub cancel: CancelToken,
+}
+
+impl Submission {
+    /// Convenience: wait for the result with a timeout; on timeout the
+    /// job is cancelled so no worker launches it for a dropped receiver.
+    pub fn recv_timeout(
+        &self,
+        timeout: std::time::Duration,
+    ) -> std::result::Result<JobResult, mpsc::RecvTimeoutError> {
+        match self.result.recv_timeout(timeout) {
+            Ok(r) => Ok(r),
+            Err(e) => {
+                self.cancel.cancel();
+                Err(e)
+            }
+        }
+    }
+}
 
 /// Why a submit was refused.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -256,26 +341,29 @@ impl Scheduler {
         })
     }
 
-    /// Enqueue a job; returns the receiver its result will arrive on, or
-    /// a backpressure rejection when the bounded queue is full.
+    /// Enqueue a job; returns a [`Submission`] (result receiver + cancel
+    /// token), or a backpressure rejection when the bounded queue is
+    /// full.
     pub fn submit(
         &self,
         priority: Priority,
         payload: JobPayload,
-    ) -> std::result::Result<mpsc::Receiver<JobResult>, SubmitError> {
+    ) -> std::result::Result<Submission, SubmitError> {
         let (tx, rx) = mpsc::channel();
+        let cancel = CancelToken::default();
         let job = Job {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             priority,
             payload,
             reply: tx,
+            cancel: cancel.clone(),
             enqueued_at: Instant::now(),
         };
         match self.queue.push(job) {
             Ok(depth) => {
                 self.counters.submitted.fetch_add(1, Ordering::Relaxed);
                 self.counters.note_queue_depth(depth as u64);
-                Ok(rx)
+                Ok(Submission { result: rx, cancel })
             }
             Err(PushError::Full { depth }) => {
                 self.counters.rejected.fetch_add(1, Ordering::Relaxed);
@@ -355,8 +443,10 @@ mod tests {
                 n,
                 mode: DispatchMode::DeviceOnly,
                 seed,
+                b_seed: None,
             }),
             reply: tx.clone(),
+            cancel: CancelToken::default(),
             enqueued_at: Instant::now(),
         };
         assert_eq!(gemm(64, 1).batch_key(), gemm(64, 2).batch_key());
@@ -366,10 +456,47 @@ mod tests {
             id: 9,
             priority: Priority::High,
             payload: JobPayload::Fence(frx),
-            reply: tx,
+            reply: tx.clone(),
+            cancel: CancelToken::default(),
             enqueued_at: Instant::now(),
         };
         assert_eq!(fence.batch_key(), None);
+
+        // gemv keys coalesce on (m, n, mode), never with gemm keys
+        let gemv = |m, n, seed| Job {
+            id: seed,
+            priority: Priority::Normal,
+            payload: JobPayload::Gemv(GemvRequest {
+                m,
+                n,
+                mode: DispatchMode::DeviceOnly,
+                seed,
+            }),
+            reply: tx.clone(),
+            cancel: CancelToken::default(),
+            enqueued_at: Instant::now(),
+        };
+        assert_eq!(gemv(64, 32, 1).batch_key(), gemv(64, 32, 2).batch_key());
+        assert_ne!(gemv(64, 32, 1).batch_key(), gemv(32, 64, 1).batch_key());
+        assert_ne!(gemv(64, 64, 1).batch_key(), gemm(64, 1).batch_key());
+        // b_seed is NOT part of the key: shared-B and private-B requests
+        // of the same shape still share a launch
+        let mut with_b = gemm(64, 3);
+        if let JobPayload::Gemm(r) = &mut with_b.payload {
+            r.b_seed = Some(42);
+        }
+        assert_eq!(with_b.batch_key(), gemm(64, 4).batch_key());
+    }
+
+    #[test]
+    fn cancel_token_flags_cooperatively() {
+        let t = CancelToken::default();
+        assert!(!t.is_cancelled());
+        let t2 = t.clone();
+        t2.cancel();
+        assert!(t.is_cancelled(), "clones share the flag");
+        t.cancel(); // idempotent
+        assert!(t.is_cancelled());
     }
 
     #[test]

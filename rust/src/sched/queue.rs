@@ -105,6 +105,21 @@ impl WorkQueue {
         }
     }
 
+    /// Dequeue the oldest job of the highest non-empty priority lane
+    /// WITHOUT blocking; `None` when the queue is momentarily empty (or
+    /// closed and drained).  The pipelined worker uses this while it has
+    /// a batch in flight: an empty queue means "drain the pipeline", not
+    /// "park".
+    pub fn try_pop(&self) -> Option<Job> {
+        let mut inner = self.inner.lock().expect("queue lock");
+        for lane in inner.lanes.iter_mut() {
+            if let Some(job) = lane.pop_front() {
+                return Some(job);
+            }
+        }
+        None
+    }
+
     /// Remove up to `max` queued jobs whose batch key equals `key`,
     /// scanning lanes in priority order and preserving FIFO order within
     /// a lane.  Never blocks; used by the batcher to coalesce.
@@ -167,10 +182,25 @@ mod tests {
                 n,
                 mode: DispatchMode::DeviceOnly,
                 seed: id,
+                b_seed: None,
             }),
             reply: tx,
+            cancel: crate::sched::CancelToken::default(),
             enqueued_at: Instant::now(),
         }
+    }
+
+    #[test]
+    fn try_pop_never_blocks_and_respects_priority() {
+        let q = WorkQueue::new(8);
+        assert!(q.try_pop().is_none(), "empty queue: None, no park");
+        q.push(gemm_job(1, 64, Priority::Low)).unwrap();
+        q.push(gemm_job(2, 64, Priority::High)).unwrap();
+        assert_eq!(q.try_pop().unwrap().id, 2);
+        assert_eq!(q.try_pop().unwrap().id, 1);
+        assert!(q.try_pop().is_none());
+        q.close();
+        assert!(q.try_pop().is_none());
     }
 
     #[test]

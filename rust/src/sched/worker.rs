@@ -5,15 +5,34 @@
 //! PJRT registry and dispatch policy never cross threads), signals
 //! readiness, then loops: pull a job, grow it into a batch (bounded by
 //! the batcher policy AND by what the cluster's DRAM slice can stage),
-//! consult the dispatch policy per job, launch, poll the cluster mailbox
-//! for the completion word, join, and reply to every member.  Requests
-//! complete asynchronously from the submitter's point of view — the
-//! connection handler is parked on the reply channel, not on the
+//! consult the dispatch policy per batch, launch, poll the cluster
+//! mailbox for the completion word, join, and reply to every member.
+//! Requests complete asynchronously from the submitter's point of view —
+//! the connection handler is parked on the reply channel, not on the
 //! device.
+//!
+//! **Cancellation**: a job whose submitter stopped waiting (serve-layer
+//! reply timeout sets its [`CancelToken`]) is skipped at dequeue — never
+//! synthesized, staged or launched for a dropped receiver.
+//!
+//! **Software pipelining** (`[sched.cache] pipeline_depth >= 2`): the
+//! gemm device path is split stage / execute / finish, and the worker
+//! holds one executed-but-unfinished batch in flight.  When the next
+//! batch arrives, its map-in is staged *before* the in-flight batch is
+//! finished — i.e. during the window the in-flight batch's compute
+//! occupies on a real device — so up to `min(map_in(k+1), compute(k))`
+//! virtual cycles of data-copy are hidden.  The hidden share is
+//! subtracted from the reported per-request times and accumulated in the
+//! `overlap_hidden_us` counter; checksums are unaffected (the data path
+//! is identical, only the attribution changes).  The cluster's DRAM
+//! slice must hold two staged batches at once, so the per-batch capacity
+//! cap is divided by the pipeline depth.
 //!
 //! Failures are contained per batch: the device error path releases the
 //! staged mappings and aborts the launch, every member gets an error
-//! reply, and the worker keeps serving.
+//! reply, and the worker keeps serving.  A staging failure while a batch
+//! is in flight first drains the pipeline (freeing its DRAM) and retries
+//! once serially before giving up.
 
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
@@ -21,16 +40,17 @@ use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::blas::{DispatchPolicy, ExecTarget, HeroBlas};
+use crate::blas::{DispatchPolicy, ExecTarget, GemmBatchRun, HeroBlas};
 use crate::error::Result;
-use crate::metrics::SchedCounters;
+use crate::metrics::{Metrics, SchedCounters};
+use crate::soc::clock::Cycles;
 use crate::soc::trace::RegionClass;
 use crate::util::rng::Rng;
 
 use super::batcher::Batcher;
 use super::pool::ClusterSpec;
 use super::queue::WorkQueue;
-use super::{GemmOutcome, GemmRequest, Job, JobPayload};
+use super::{GemmOutcome, GemmRequest, GemvRequest, Job, JobPayload};
 
 /// Spawn one worker thread for `spec`.  It reports session boot success
 /// or failure once through `ready`, then serves until the queue closes.
@@ -46,6 +66,76 @@ pub(crate) fn spawn(
         .name(format!("sched-worker-{}", spec.id))
         .spawn(move || run(spec, artifacts, queue, counters, batcher, ready))
         .expect("spawn scheduler worker")
+}
+
+/// Per-batch virtual-time totals, in cycles (accumulated across the
+/// stage / execute / finish phases from trace-region deltas, so two
+/// interleaved pipeline batches never steal each other's time).
+#[derive(Debug, Default, Clone, Copy)]
+struct BatchAcct {
+    data_copy: u64,
+    fork_join: u64,
+    compute: u64,
+    host_compute: u64,
+    /// Map-in cycles hidden under the previous batch's compute window
+    /// (subtracted from `data_copy` and the total when reporting).
+    hidden: u64,
+}
+
+impl BatchAcct {
+    fn add(&mut self, other: BatchAcct) {
+        self.data_copy += other.data_copy;
+        self.fork_join += other.fork_join;
+        self.compute += other.compute;
+        self.host_compute += other.host_compute;
+    }
+}
+
+/// Trace-region totals at a point in time.
+#[derive(Debug, Clone, Copy)]
+struct RegionSnap {
+    dc: Cycles,
+    fj: Cycles,
+    cp: Cycles,
+    hc: Cycles,
+}
+
+fn snap(blas: &HeroBlas) -> RegionSnap {
+    let t = blas.trace();
+    RegionSnap {
+        dc: t.total(RegionClass::DataCopy),
+        fj: t.total(RegionClass::ForkJoin),
+        cp: t.total(RegionClass::Compute),
+        hc: t.total(RegionClass::HostCompute),
+    }
+}
+
+fn delta(before: RegionSnap, after: RegionSnap) -> BatchAcct {
+    BatchAcct {
+        data_copy: after.dc.saturating_sub(before.dc).0,
+        fork_join: after.fj.saturating_sub(before.fj).0,
+        compute: after.cp.saturating_sub(before.cp).0,
+        host_compute: after.hc.saturating_sub(before.hc).0,
+        hidden: 0,
+    }
+}
+
+/// One coalesced gemm batch between its execute and its finish: the
+/// completion word is posted in the cluster mailbox, results are still
+/// on the device, replies are pending.
+struct Inflight {
+    jobs: Vec<Job>,
+    req: GemmRequest,
+    data: Vec<(Vec<f64>, Vec<f64>, Vec<f64>)>,
+    run: GemmBatchRun<f64>,
+    acct: BatchAcct,
+    queue_ms: Vec<f64>,
+    /// Wall microseconds this batch actively consumed through execute.
+    /// The finish phase adds its own elapsed time — the idle gap while
+    /// the batch sits in flight waiting for the next arrival must NOT
+    /// count, or the service-time EWMA (and with it the retry-after
+    /// backpressure hint) inflates under pipelining.
+    work_us: u64,
 }
 
 fn run(
@@ -65,9 +155,41 @@ fn run(
     };
     let _ = ready.send(Ok(()));
 
-    while let Some(job) = queue.pop_blocking() {
+    // double-buffered staging: depth 2 is what the implementation holds
+    let depth = (spec.cfg.sched.cache.pipeline_depth as usize).clamp(1, 2);
+    let mut inflight: Option<Inflight> = None;
+    let mut metrics_prev = blas.metrics();
+
+    loop {
+        // With a batch in flight never park: an empty queue means "drain
+        // the pipeline now", not "sleep while a client waits".
+        let next = if inflight.is_some() {
+            queue.try_pop()
+        } else {
+            match queue.pop_blocking() {
+                Some(j) => Some(j),
+                None => break, // closed and drained; nothing in flight
+            }
+        };
+        let Some(job) = next else {
+            let infl = inflight.take().expect("try_pop only used with inflight");
+            finish_batch(&mut blas, spec.id, &counters, infl, &mut metrics_prev);
+            continue;
+        };
+
+        // Cancellation at dequeue: the submitter stopped waiting, so the
+        // job is dropped before any synthesis or staging happens.
+        if job.cancel.is_cancelled() {
+            counters.cancelled.fetch_add(1, Ordering::Relaxed);
+            continue;
+        }
+
         match job.payload {
             JobPayload::Fence(ref release) => {
+                // A fence drains the pipeline first: it is a barrier.
+                if let Some(infl) = inflight.take() {
+                    finish_batch(&mut blas, spec.id, &counters, infl, &mut metrics_prev);
+                }
                 // Park until the test/bench releases (or drops) the fence.
                 let _ = release.recv();
                 // counters first: a submitter that observes the reply must
@@ -75,12 +197,41 @@ fn run(
                 counters.completed.fetch_add(1, Ordering::Relaxed);
                 let _ = job.reply.send(Ok(GemmOutcome::fence_ack(spec.id)));
             }
+            JobPayload::Gemv(req) => {
+                // level-2 batches run synchronously (they are small and
+                // DMA-bound; pipelining them is not worth the state)
+                if let Some(infl) = inflight.take() {
+                    finish_batch(&mut blas, spec.id, &counters, infl, &mut metrics_prev);
+                }
+                serve_gemv_batch(
+                    &mut blas, spec.id, &counters, &queue, &batcher, job, req,
+                    &mut metrics_prev,
+                );
+            }
             JobPayload::Gemm(req) => {
-                let cap = batch_cap(&blas, req.n);
-                let batch = batcher.collect(&queue, job, cap);
-                serve_gemm_batch(&mut blas, spec.id, &counters, batch);
+                let cap = (gemm_batch_cap(&blas, req.n) / depth).max(1);
+                let mut batch = batcher.collect(&queue, job, cap);
+                drop_cancelled(&mut batch, &counters);
+                if batch.is_empty() {
+                    continue;
+                }
+                serve_gemm(
+                    &mut blas,
+                    spec.id,
+                    &counters,
+                    batch,
+                    req,
+                    depth,
+                    &mut inflight,
+                    &mut metrics_prev,
+                );
             }
         }
+    }
+
+    // shutdown: drain whatever is still in flight before exiting
+    if let Some(infl) = inflight.take() {
+        finish_batch(&mut blas, spec.id, &counters, infl, &mut metrics_prev);
     }
 }
 
@@ -91,147 +242,420 @@ fn boot_session(spec: &ClusterSpec, artifacts: &PathBuf) -> Result<HeroBlas> {
     Ok(blas)
 }
 
+/// Remove members whose submitter cancelled while they were queued.
+fn drop_cancelled(batch: &mut Vec<Job>, counters: &SchedCounters) {
+    batch.retain(|j| {
+        if j.cancel.is_cancelled() {
+            counters.cancelled.fetch_add(1, Ordering::Relaxed);
+            false
+        } else {
+            true
+        }
+    });
+}
+
 /// How many batch members this cluster's DRAM slice can stage at once,
-/// with 2x headroom for alignment and the L2 descriptor staging.
-fn batch_cap(blas: &HeroBlas, n: usize) -> usize {
+/// with 2x headroom for alignment and the L2 descriptor staging.  The
+/// pipelined worker divides this further by the pipeline depth, since
+/// two batches' operands are resident at once.
+fn gemm_batch_cap(blas: &HeroBlas, n: usize) -> usize {
     let per_member =
         crate::blas::device::gemm_staged_bytes::<f64>(&blas.registry, (n, n, n)).max(1);
     ((blas.engine.platform.cfg.memory.dev_dram_bytes / 2) / per_member).max(1) as usize
 }
 
-/// Execute one coalesced batch and reply to every member.
-fn serve_gemm_batch(
+/// Same bound for a coalesced gemv batch.
+fn gemv_batch_cap(blas: &HeroBlas, m: usize, n: usize) -> usize {
+    let per_member =
+        crate::blas::device::gemv_staged_bytes::<f64>(&blas.registry, (m, n)).max(1);
+    ((blas.engine.platform.cfg.memory.dev_dram_bytes / 2) / per_member).max(1) as usize
+}
+
+/// Synthesize one gemm member's operands from its seeds: A continues the
+/// request RNG stream; B either continues it (classic behavior) or comes
+/// from its own `b_seed` stream, so same-`b_seed` requests share a
+/// bit-identical B — the pattern the operand cache collapses into
+/// refcount bumps.
+fn synth_gemm(req: &GemmRequest, seed: u64, b_seed: Option<u64>)
+              -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let n = req.n;
+    let mut rng = Rng::new(seed);
+    let a = rng.normal_vec(n * n);
+    let b = match b_seed {
+        None => rng.normal_vec(n * n),
+        Some(s) => Rng::new(s).normal_vec(n * n),
+    };
+    (a, b, vec![0.0; n * n])
+}
+
+/// Wall-clock queue wait of every member, ms.
+fn queue_waits(batch: &[Job]) -> Vec<f64> {
+    batch
+        .iter()
+        .map(|j| j.enqueued_at.elapsed().as_secs_f64() * 1e3)
+        .collect()
+}
+
+fn virt_us(blas: &HeroBlas, cycles: u64) -> u64 {
+    (Cycles(cycles).to_ns(blas.engine.freq_hz()) / 1e3) as u64
+}
+
+/// Serve one coalesced gemm batch: host path and un-pipelined device
+/// path complete inline; the pipelined device path leaves the batch in
+/// flight (executed, completion word posted) for the next iteration to
+/// overlap against.
+#[allow(clippy::too_many_arguments)]
+fn serve_gemm(
     blas: &mut HeroBlas,
     cluster: u32,
     counters: &SchedCounters,
     batch: Vec<Job>,
+    req: GemmRequest,
+    depth: usize,
+    inflight: &mut Option<Inflight>,
+    metrics_prev: &mut Metrics,
 ) {
     let t0 = Instant::now();
-    let b = batch.len();
-    let req = match &batch[0].payload {
-        JobPayload::Gemm(r) => *r,
-        // collect() only coalesces around a gemm job
-        JobPayload::Fence(_) => unreachable!("fence in a gemm batch"),
-    };
-    let queue_ms: Vec<f64> = batch
-        .iter()
-        .map(|j| j.enqueued_at.elapsed().as_secs_f64() * 1e3)
-        .collect();
-
+    let n = req.n;
     blas.policy = DispatchPolicy::with_mode(req.mode);
-    blas.reset_run();
-    let result = execute_batch(blas, &batch);
 
-    match result {
-        Ok(checksums) => {
-            let f = blas.engine.freq_hz();
-            let t = blas.trace();
-            // Uniform shapes => each member gets an even share of the
-            // batch's virtual time; fork/join was paid once for all B.
-            let per = |c: RegionClass| t.total(c).to_ns(f) / 1e6 / b as f64;
-            let total = t.grand_total().to_ns(f) / 1e6 / b as f64;
-            // counters before replies: a submitter that observes its
-            // reply must also observe the updated metrics
-            counters.completed.fetch_add(b as u64, Ordering::Relaxed);
-            counters.batches.fetch_add(1, Ordering::Relaxed);
-            if b > 1 {
-                counters.batched_jobs.fetch_add(b as u64, Ordering::Relaxed);
-            }
-            counters.note_service_us((t0.elapsed().as_micros() as u64 / b as u64).max(1));
-            for ((job, checksum), wait) in batch.iter().zip(&checksums).zip(&queue_ms) {
-                let _ = job.reply.send(Ok(GemmOutcome {
-                    n: req.n,
-                    mode: req.mode,
-                    checksum: *checksum,
-                    data_copy_ms: per(RegionClass::DataCopy),
-                    fork_join_ms: per(RegionClass::ForkJoin),
-                    compute_ms: per(RegionClass::Compute),
-                    host_compute_ms: per(RegionClass::HostCompute),
-                    total_ms: total,
-                    cluster,
-                    batch_size: b,
-                    queue_ms: *wait,
-                }));
+    // ---- host path: no staging, no pipeline ----
+    if blas.policy.gemm(n, n, n) == ExecTarget::Host {
+        if let Some(infl) = inflight.take() {
+            finish_batch(blas, cluster, counters, infl, metrics_prev);
+        }
+        serve_gemm_host(blas, cluster, counters, batch, req, t0, metrics_prev);
+        return;
+    }
+    let zero_copy = blas.policy.gemm(n, n, n) == ExecTarget::DeviceZeroCopy;
+
+    // ---- synthesize every member's operands from its seeds ----
+    let data: Vec<(Vec<f64>, Vec<f64>, Vec<f64>)> = batch
+        .iter()
+        .map(|j| match &j.payload {
+            JobPayload::Gemm(r) => synth_gemm(&req, r.seed, r.b_seed),
+            _ => unreachable!("gemm batch contains only gemm jobs"),
+        })
+        .collect();
+    let queue_ms = queue_waits(&batch);
+
+    // ---- stage (map-in): this is the region pipelining hides ----
+    if inflight.is_none() {
+        blas.reset_run(); // bound trace growth between pipeline drains
+    }
+    let inputs: Vec<(&[f64], &[f64], &[f64])> = data
+        .iter()
+        .map(|(a, b, c)| (a.as_slice(), b.as_slice(), c.as_slice()))
+        .collect();
+    let mut before = snap(blas);
+    let mut stage = blas.gemm_batch_stage((n, n, n), 1.0, 0.0, &inputs, zero_copy);
+    if stage.is_err() && inflight.is_some() {
+        // the in-flight batch's operands may be what keeps us from
+        // fitting: drain the pipeline and retry once serially
+        let infl = inflight.take().expect("checked above");
+        finish_batch(blas, cluster, counters, infl, metrics_prev);
+        before = snap(blas); // re-baseline: the failed attempt + drain
+                             // must not bill this batch
+        stage = blas.gemm_batch_stage((n, n, n), 1.0, 0.0, &inputs, zero_copy);
+    }
+    let staged_run = match stage {
+        Ok(s) => s,
+        Err(e) => {
+            reply_error(counters, &batch, &e.to_string());
+            return;
+        }
+    };
+    drop(inputs);
+    let stage_acct = delta(before, snap(blas));
+
+    // ---- overlap credit, then drain the previous batch ----
+    let mut hidden = 0u64;
+    let mut pipelined = false;
+    if let Some(infl) = inflight.take() {
+        hidden = stage_acct.data_copy.min(infl.acct.compute);
+        pipelined = true;
+        finish_batch(blas, cluster, counters, infl, metrics_prev);
+        // the drained batch is fully accounted and this batch's stage
+        // delta is already materialized: safe to bound trace growth now
+        // (everything after re-snapshots from the cleared trace)
+        blas.reset_run();
+    }
+
+    // ---- execute (doorbell + compute; completion word posted) ----
+    let before = snap(blas);
+    let run = match blas.gemm_batch_execute(staged_run) {
+        Ok(r) => r,
+        Err(e) => {
+            // the overlap credit is dropped with the batch: never report
+            // hidden map-in for work that produced no results
+            reply_error(counters, &batch, &e.to_string());
+            return;
+        }
+    };
+    if pipelined {
+        counters.pipelined_batches.fetch_add(1, Ordering::Relaxed);
+        counters
+            .overlap_hidden_us
+            .fetch_add(virt_us(blas, hidden), Ordering::Relaxed);
+    }
+    let mut acct = stage_acct;
+    acct.add(delta(before, snap(blas)));
+    acct.hidden = hidden;
+
+    let infl = Inflight {
+        jobs: batch,
+        req,
+        data,
+        run,
+        acct,
+        queue_ms,
+        work_us: t0.elapsed().as_micros() as u64,
+    };
+    if depth >= 2 {
+        *inflight = Some(infl); // finished when the next job (or none) arrives
+    } else {
+        finish_batch(blas, cluster, counters, infl, metrics_prev);
+    }
+}
+
+/// Error replies for every member of a failed batch, with the failure
+/// counted once per member and the launch attempt counted as a batch.
+fn reply_error(counters: &SchedCounters, batch: &[Job], msg: &str) {
+    counters.failed.fetch_add(batch.len() as u64, Ordering::Relaxed);
+    counters.batches.fetch_add(1, Ordering::Relaxed);
+    for job in batch {
+        let _ = job.reply.send(Err(msg.to_string()));
+    }
+}
+
+/// Host-path gemm batch: one host kernel per member, no offload.
+fn serve_gemm_host(
+    blas: &mut HeroBlas,
+    cluster: u32,
+    counters: &SchedCounters,
+    batch: Vec<Job>,
+    req: GemmRequest,
+    t0: Instant,
+    metrics_prev: &mut Metrics,
+) {
+    let n = req.n;
+    let queue_ms = queue_waits(&batch);
+    blas.reset_run();
+    let before = snap(blas);
+    let mut checksums = Vec::with_capacity(batch.len());
+    for job in &batch {
+        let JobPayload::Gemm(r) = &job.payload else {
+            unreachable!("gemm batch contains only gemm jobs")
+        };
+        let (a, b, mut c) = synth_gemm(&req, r.seed, r.b_seed);
+        let r = blas.gemm(
+            crate::blas::Transpose::No,
+            crate::blas::Transpose::No,
+            1.0,
+            &a,
+            (n, n),
+            &b,
+            (n, n),
+            0.0,
+            &mut c,
+            (n, n),
+        );
+        match r {
+            Ok(()) => checksums.push(c.iter().sum::<f64>()),
+            Err(e) => {
+                reply_error(counters, &batch, &e.to_string());
+                return;
             }
         }
+    }
+    let acct = delta(before, snap(blas));
+    send_outcomes(
+        blas, cluster, counters, &batch, "gemm", (n, n), req.mode, &checksums,
+        acct, &queue_ms, t0.elapsed().as_micros() as u64, metrics_prev,
+    );
+}
+
+/// Finish an executed batch: poll the mailbox completion word (posted at
+/// execute time; the poll keeps the worker protocol-shaped for a backend
+/// where compute genuinely overlaps the host), join, copy every member's
+/// C back, release the mappings, and reply.
+fn finish_batch(
+    blas: &mut HeroBlas,
+    cluster: u32,
+    counters: &SchedCounters,
+    mut infl: Inflight,
+    metrics_prev: &mut Metrics,
+) {
+    while !blas.offload_completion_pending() {
+        std::thread::yield_now();
+    }
+    let t_finish = Instant::now();
+    let before = snap(blas);
+    let finish = {
+        let mut outs: Vec<&mut [f64]> =
+            infl.data.iter_mut().map(|(_, _, c)| c.as_mut_slice()).collect();
+        blas.gemm_batch_finish(infl.run, &mut outs)
+    };
+    let mut acct = infl.acct;
+    acct.add(delta(before, snap(blas)));
+
+    match finish {
+        Ok(()) => {
+            let checksums: Vec<f64> =
+                infl.data.iter().map(|(_, _, c)| c.iter().sum()).collect();
+            let n = infl.req.n;
+            // active wall time only: stage+execute plus this finish —
+            // excluding the in-flight idle gap under pipelining
+            let service_us = infl.work_us + t_finish.elapsed().as_micros() as u64;
+            send_outcomes(
+                blas,
+                cluster,
+                counters,
+                &infl.jobs,
+                "gemm",
+                (n, n),
+                infl.req.mode,
+                &checksums,
+                acct,
+                &infl.queue_ms,
+                service_us,
+                metrics_prev,
+            );
+        }
         Err(e) => {
-            let msg = e.to_string();
-            counters.failed.fetch_add(b as u64, Ordering::Relaxed);
-            counters.batches.fetch_add(1, Ordering::Relaxed);
-            for job in &batch {
-                let _ = job.reply.send(Err(msg.clone()));
-            }
+            reply_error(counters, &infl.jobs, &e.to_string());
         }
     }
 }
 
-/// Synthesize every member's operands from its seed and run the batch on
-/// the policy's target, returning per-member checksums.
-fn execute_batch(blas: &mut HeroBlas, batch: &[Job]) -> Result<Vec<f64>> {
-    let reqs: Vec<GemmRequest> = batch
-        .iter()
-        .map(|j| match &j.payload {
-            JobPayload::Gemm(r) => *r,
-            JobPayload::Fence(_) => unreachable!("fence in a gemm batch"),
-        })
-        .collect();
-    let n = reqs[0].n;
-    let mut data: Vec<(Vec<f64>, Vec<f64>, Vec<f64>)> = reqs
-        .iter()
-        .map(|r| {
-            let mut rng = Rng::new(r.seed);
-            (rng.normal_vec(n * n), rng.normal_vec(n * n), vec![0.0; n * n])
-        })
-        .collect();
+/// Serve one coalesced gemv batch synchronously (host loop or one
+/// fork-join device launch, decided by the dispatch policy).
+#[allow(clippy::too_many_arguments)]
+fn serve_gemv_batch(
+    blas: &mut HeroBlas,
+    cluster: u32,
+    counters: &SchedCounters,
+    queue: &WorkQueue,
+    batcher: &Batcher,
+    first: Job,
+    req: GemvRequest,
+    metrics_prev: &mut Metrics,
+) {
+    let t0 = Instant::now();
+    let (m, n) = (req.m, req.n);
+    let cap = gemv_batch_cap(blas, m, n);
+    let mut batch = batcher.collect(queue, first, cap);
+    drop_cancelled(&mut batch, counters);
+    if batch.is_empty() {
+        return;
+    }
+    let queue_ms = queue_waits(&batch);
 
-    match blas.policy.gemm(n, n, n) {
-        ExecTarget::Host => {
-            for (a, b, c) in data.iter_mut() {
-                blas.gemm(
-                    crate::blas::Transpose::No,
-                    crate::blas::Transpose::No,
-                    1.0,
-                    a,
-                    (n, n),
-                    b,
-                    (n, n),
-                    0.0,
-                    c,
-                    (n, n),
-                )?;
-            }
-        }
-        target => {
-            let zero_copy = target == ExecTarget::DeviceZeroCopy;
-            let run = {
-                let inputs: Vec<(&[f64], &[f64], &[f64])> = data
-                    .iter()
-                    .map(|(a, b, c)| (a.as_slice(), b.as_slice(), c.as_slice()))
-                    .collect();
-                blas.gemm_batch_launch((n, n, n), 1.0, 0.0, &inputs, zero_copy)?
+    // synthesize (A, x) per member; y starts at zero
+    let data: Vec<(Vec<f64>, Vec<f64>)> = batch
+        .iter()
+        .map(|j| {
+            let JobPayload::Gemv(r) = &j.payload else {
+                unreachable!("gemv batch contains only gemv jobs")
             };
-            // Completion wait, Hero-runtime style: poll the cluster
-            // mailbox for the status word before joining.  In the
-            // synchronous simulator the word is already posted when
-            // launch returns, so this never spins — it exists to keep
-            // the worker protocol-shaped for a backend where compute
-            // genuinely overlaps the host (the launch/finish split is
-            // what makes that future possible).
-            while !blas.offload_completion_pending() {
-                std::thread::yield_now();
-            }
-            let mut outs: Vec<&mut [f64]> =
-                data.iter_mut().map(|(_, _, c)| c.as_mut_slice()).collect();
-            blas.gemm_batch_finish(run, &mut outs)?;
+            let mut rng = Rng::new(r.seed);
+            (rng.normal_vec(m * n), rng.normal_vec(n))
+        })
+        .collect();
+    let mut ys: Vec<Vec<f64>> = vec![vec![0.0; m]; batch.len()];
+
+    blas.policy = DispatchPolicy::with_mode(req.mode);
+    blas.reset_run();
+    let before = snap(blas);
+    let result = {
+        let a_refs: Vec<&[f64]> = data.iter().map(|(a, _)| a.as_slice()).collect();
+        let x_refs: Vec<&[f64]> = data.iter().map(|(_, x)| x.as_slice()).collect();
+        let mut outs: Vec<&mut [f64]> =
+            ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+        blas.gemv_batch((m, n), 1.0, 0.0, &a_refs, &x_refs, &mut outs)
+    };
+    let acct = delta(before, snap(blas));
+
+    match result {
+        Ok(()) => {
+            let checksums: Vec<f64> = ys.iter().map(|y| y.iter().sum()).collect();
+            send_outcomes(
+                blas, cluster, counters, &batch, "gemv", (m, n), req.mode,
+                &checksums, acct, &queue_ms, t0.elapsed().as_micros() as u64,
+                metrics_prev,
+            );
+        }
+        Err(e) => {
+            reply_error(counters, &batch, &e.to_string());
         }
     }
-    Ok(data.iter().map(|(_, _, c)| c.iter().sum()).collect())
+}
+
+/// Counters + per-member outcome replies for one completed batch.
+/// Uniform shapes => each member gets an even share of the batch's
+/// virtual time; fork/join (and any pipelining credit) was accounted
+/// once for all B.
+#[allow(clippy::too_many_arguments)]
+fn send_outcomes(
+    blas: &mut HeroBlas,
+    cluster: u32,
+    counters: &SchedCounters,
+    batch: &[Job],
+    op: &'static str,
+    (m, n): (usize, usize),
+    mode: crate::config::DispatchMode,
+    checksums: &[f64],
+    acct: BatchAcct,
+    queue_ms: &[f64],
+    service_us: u64,
+    metrics_prev: &mut Metrics,
+) {
+    let b = batch.len();
+    let f = blas.engine.freq_hz();
+    let ms = |cycles: u64| Cycles(cycles).to_ns(f) / 1e6 / b as f64;
+    let dc = ms(acct.data_copy.saturating_sub(acct.hidden));
+    let fj = ms(acct.fork_join);
+    let cp = ms(acct.compute);
+    let hc = ms(acct.host_compute);
+    let total = dc + fj + cp + hc;
+
+    // counters before replies: a submitter that observes its reply must
+    // also observe the updated metrics
+    counters.completed.fetch_add(b as u64, Ordering::Relaxed);
+    counters.batches.fetch_add(1, Ordering::Relaxed);
+    if b > 1 {
+        counters.batched_jobs.fetch_add(b as u64, Ordering::Relaxed);
+    }
+    counters.note_service_us((service_us / b as u64).max(1));
+    let metrics_now = blas.metrics();
+    counters.absorb_engine_delta(metrics_prev, &metrics_now);
+    *metrics_prev = metrics_now;
+
+    for ((job, checksum), wait) in batch.iter().zip(checksums).zip(queue_ms) {
+        let _ = job.reply.send(Ok(GemmOutcome {
+            op,
+            m,
+            n,
+            mode,
+            checksum: *checksum,
+            data_copy_ms: dc,
+            fork_join_ms: fj,
+            compute_ms: cp,
+            host_compute_ms: hc,
+            total_ms: total,
+            cluster,
+            batch_size: b,
+            queue_ms: *wait,
+        }));
+    }
 }
 
 impl GemmOutcome {
     /// Ack for a fence job (no compute, no checksum).
     pub(crate) fn fence_ack(cluster: u32) -> GemmOutcome {
         GemmOutcome {
+            op: "fence",
+            m: 0,
             n: 0,
             mode: crate::config::DispatchMode::HostOnly,
             checksum: 0.0,

@@ -11,20 +11,28 @@
 //! split, taken to a serving setting.
 //!
 //! Request  (one line):  {"op": "gemm", "n": 128, "mode": "device_only",
-//!                        "priority": "high", "seed": 7}
-//! Response (one line):  {"ok": true, "n": 128, "mode": "device_only",
+//!                        "priority": "high", "seed": 7, "b_seed": 42}
+//!                   or:  {"op": "gemv", "m": 256, "n": 256,
+//!                        "mode": "device_only", "seed": 7}
+//! Response (one line):  {"ok": true, "op": "gemm", "m": 128, "n": 128,
+//!                        "mode": "device_only",
 //!                        "total_ms": ..., "data_copy_ms": ...,
 //!                        "fork_join_ms": ..., "compute_ms": ...,
 //!                        "host_compute_ms": ..., "checksum": ...,
 //!                        "cluster": ..., "batch_size": ...,
 //!                        "queue_ms": ...}
 //!
-//! `seed` defaults to a stable function of `n`, so identical requests
-//! return identical checksums.  Malformed or unknown requests always get
-//! an `{"ok": false, "error": ...}` line back and the connection stays
-//! usable.  When the bounded queue is full the response carries a
-//! backpressure hint: {"ok": false, "error": "queue full",
-//! "retry_after_ms": ...}.  `{"op": "metrics"}` reports the scheduler
+//! `seed` defaults to a stable function of the shape, so identical
+//! requests return identical checksums.  `b_seed` (gemm only, optional)
+//! draws B from its own stream: requests sharing a `b_seed` share a
+//! bit-identical B matrix, which the scheduler's operand cache keeps
+//! device-resident (the reused-weight serving pattern).  Malformed or
+//! unknown requests always get an `{"ok": false, "error": ...}` line
+//! back and the connection stays usable.  When the bounded queue is full
+//! the response carries a backpressure hint: {"ok": false, "error":
+//! "queue full", "retry_after_ms": ...}.  A request whose reply times
+//! out at this layer cancels its job, so the pool never launches work
+//! for a dropped receiver.  `{"op": "metrics"}` reports the scheduler
 //! counters; `{"op": "shutdown"}` stops the server (used by tests).
 
 use std::collections::BTreeMap;
@@ -37,7 +45,10 @@ use std::time::Duration;
 
 use crate::config::{DispatchMode, PlatformConfig};
 use crate::error::{Error, Result};
-use crate::sched::{GemmOutcome, GemmRequest, JobPayload, Priority, Scheduler, SubmitError};
+use crate::sched::{
+    GemmOutcome, GemmRequest, GemvRequest, JobPayload, Priority, Scheduler,
+    SubmitError,
+};
 use crate::util::json_lite::Json;
 
 /// How often parked connection readers wake to check for shutdown.
@@ -77,6 +88,8 @@ fn backpressure_line(depth: usize, retry_after_ms: u64) -> String {
 fn gemm_response(o: &GemmOutcome) -> String {
     let mut j = obj(vec![
         ("ok", Json::Bool(true)),
+        ("op", Json::Str(o.op.into())),
+        ("m", Json::Num(o.m as f64)),
         ("n", Json::Num(o.n as f64)),
         ("mode", Json::Str(o.mode.to_string())),
         ("data_copy_ms", Json::Num(o.data_copy_ms)),
@@ -92,12 +105,9 @@ fn gemm_response(o: &GemmOutcome) -> String {
     compact(&mut j)
 }
 
-/// Parse a gemm request line into a job payload + priority.
-fn parse_gemm(req: &Json) -> std::result::Result<(GemmRequest, Priority), String> {
-    let n = req.get("n").and_then(|v| v.as_u64()).unwrap_or(128) as usize;
-    if n == 0 || n > 2048 {
-        return Err("n must be in 1..=2048".into());
-    }
+/// Shared request fields: dispatch mode + priority.
+fn parse_mode_priority(req: &Json)
+                       -> std::result::Result<(DispatchMode, Priority), String> {
     let mode: DispatchMode = req
         .get("mode")
         .and_then(|v| v.as_str())
@@ -110,13 +120,41 @@ fn parse_gemm(req: &Json) -> std::result::Result<(GemmRequest, Priority), String
         .unwrap_or("normal")
         .parse()
         .map_err(|e: Error| e.to_string())?;
+    Ok((mode, priority))
+}
+
+/// Parse a gemm request line into a job payload + priority.
+fn parse_gemm(req: &Json) -> std::result::Result<(GemmRequest, Priority), String> {
+    let n = req.get("n").and_then(|v| v.as_u64()).unwrap_or(128) as usize;
+    if n == 0 || n > 2048 {
+        return Err("n must be in 1..=2048".into());
+    }
+    let (mode, priority) = parse_mode_priority(req)?;
     // Stable default seed: identical requests serve identical workloads
     // (and batch members stay individually verifiable by checksum).
     let seed = req
         .get("seed")
         .and_then(|v| v.as_u64())
         .unwrap_or(0xC0FFEE ^ n as u64);
-    Ok((GemmRequest { n, mode, seed }, priority))
+    // Optional shared-B stream: requests carrying the same b_seed reuse a
+    // bit-identical B matrix (the operand-cache hot path).
+    let b_seed = req.get("b_seed").and_then(|v| v.as_u64());
+    Ok((GemmRequest { n, mode, seed, b_seed }, priority))
+}
+
+/// Parse a gemv request line into a job payload + priority.
+fn parse_gemv(req: &Json) -> std::result::Result<(GemvRequest, Priority), String> {
+    let m = req.get("m").and_then(|v| v.as_u64()).unwrap_or(128) as usize;
+    let n = req.get("n").and_then(|v| v.as_u64()).unwrap_or(128) as usize;
+    if m == 0 || m > 2048 || n == 0 || n > 2048 {
+        return Err("m and n must be in 1..=2048".into());
+    }
+    let (mode, priority) = parse_mode_priority(req)?;
+    let seed = req
+        .get("seed")
+        .and_then(|v| v.as_u64())
+        .unwrap_or(0xBEEF ^ ((m as u64) << 16) ^ n as u64);
+    Ok((GemvRequest { m, n, mode, seed }, priority))
 }
 
 /// Handle one request line; returns (response, shutdown?).
@@ -145,8 +183,16 @@ fn handle_line(sched: &Scheduler, line: &str) -> (String, bool) {
                 ("completed", Json::Num(m.completed as f64)),
                 ("rejected", Json::Num(m.rejected as f64)),
                 ("failed", Json::Num(m.failed as f64)),
+                ("cancelled", Json::Num(m.cancelled as f64)),
                 ("batches", Json::Num(m.batches as f64)),
                 ("batched_jobs", Json::Num(m.batched_jobs as f64)),
+                ("pipelined_batches", Json::Num(m.pipelined_batches as f64)),
+                ("overlap_hidden_us", Json::Num(m.overlap_hidden_us as f64)),
+                ("cache_hits", Json::Num(m.cache_hits as f64)),
+                ("cache_misses", Json::Num(m.cache_misses as f64)),
+                ("cache_evictions", Json::Num(m.cache_evictions as f64)),
+                ("bytes_to_device", Json::Num(m.bytes_to_device as f64)),
+                ("bytes_copy_elided", Json::Num(m.bytes_copy_elided as f64)),
                 ("queue_depth_peak", Json::Num(m.queue_depth_peak as f64)),
                 ("pool", Json::Num(sched.pool_size() as f64)),
             ]);
@@ -157,19 +203,37 @@ fn handle_line(sched: &Scheduler, line: &str) -> (String, bool) {
                 Ok(p) => p,
                 Err(msg) => return (err_line(&msg), false),
             };
-            match sched.submit(priority, JobPayload::Gemm(gemm)) {
-                Ok(rx) => match rx.recv_timeout(REPLY_TIMEOUT) {
-                    Ok(Ok(outcome)) => (gemm_response(&outcome), false),
-                    Ok(Err(msg)) => (err_line(&msg), false),
-                    Err(_) => (err_line("worker unavailable"), false),
-                },
-                Err(SubmitError::Backpressure { depth, retry_after_ms }) => {
-                    (backpressure_line(depth, retry_after_ms), false)
-                }
-                Err(SubmitError::ShuttingDown) => (err_line("shutting down"), false),
-            }
+            submit_and_wait(sched, priority, JobPayload::Gemm(gemm))
+        }
+        "gemv" => {
+            let (gemv, priority) = match parse_gemv(&req) {
+                Ok(p) => p,
+                Err(msg) => return (err_line(&msg), false),
+            };
+            submit_and_wait(sched, priority, JobPayload::Gemv(gemv))
         }
         other => (err_line(&format!("unknown op '{other}'")), false),
+    }
+}
+
+/// Submit a job and block on its reply.  A timeout cancels the job (via
+/// [`crate::sched::Submission::recv_timeout`]) so a worker never
+/// launches it for this already-gone receiver.
+fn submit_and_wait(
+    sched: &Scheduler,
+    priority: Priority,
+    payload: JobPayload,
+) -> (String, bool) {
+    match sched.submit(priority, payload) {
+        Ok(submission) => match submission.recv_timeout(REPLY_TIMEOUT) {
+            Ok(Ok(outcome)) => (gemm_response(&outcome), false),
+            Ok(Err(msg)) => (err_line(&msg), false),
+            Err(_) => (err_line("worker unavailable"), false),
+        },
+        Err(SubmitError::Backpressure { depth, retry_after_ms }) => {
+            (backpressure_line(depth, retry_after_ms), false)
+        }
+        Err(SubmitError::ShuttingDown) => (err_line("shutting down"), false),
     }
 }
 
@@ -343,8 +407,50 @@ mod tests {
     }
 
     #[test]
+    fn parse_gemm_b_seed_optional() {
+        let req = Json::parse(r#"{"op": "gemm", "n": 64}"#).unwrap();
+        let (g, _) = parse_gemm(&req).unwrap();
+        assert_eq!(g.b_seed, None, "absent b_seed keeps classic synthesis");
+        let req =
+            Json::parse(r#"{"op": "gemm", "n": 64, "seed": 1, "b_seed": 42}"#).unwrap();
+        let (g, _) = parse_gemm(&req).unwrap();
+        assert_eq!(g.b_seed, Some(42));
+        assert_eq!(g.seed, 1);
+    }
+
+    #[test]
+    fn parse_gemv_defaults_and_limits() {
+        let req = Json::parse(r#"{"op": "gemv"}"#).unwrap();
+        let (g, p) = parse_gemv(&req).unwrap();
+        assert_eq!((g.m, g.n), (128, 128));
+        assert_eq!(g.mode, DispatchMode::Auto);
+        assert_eq!(p, Priority::Normal);
+        // stable default seed, shape-dependent
+        let req2 = Json::parse(r#"{"op": "gemv", "m": 256}"#).unwrap();
+        let (g2, _) = parse_gemv(&req2).unwrap();
+        assert_ne!(g.seed, g2.seed);
+
+        let req = Json::parse(
+            r#"{"op": "gemv", "m": 32, "n": 64, "mode": "device_only",
+                "priority": "high", "seed": 9}"#,
+        )
+        .unwrap();
+        let (g, p) = parse_gemv(&req).unwrap();
+        assert_eq!((g.m, g.n, g.seed), (32, 64, 9));
+        assert_eq!(g.mode, DispatchMode::DeviceOnly);
+        assert_eq!(p, Priority::High);
+
+        let req = Json::parse(r#"{"op": "gemv", "m": 99999}"#).unwrap();
+        assert!(parse_gemv(&req).is_err());
+        let req = Json::parse(r#"{"op": "gemv", "n": 0}"#).unwrap();
+        assert!(parse_gemv(&req).is_err());
+    }
+
+    #[test]
     fn gemm_response_shape() {
         let o = GemmOutcome {
+            op: "gemm",
+            m: 64,
             n: 64,
             mode: DispatchMode::DeviceOnly,
             checksum: 1.25,
@@ -359,6 +465,8 @@ mod tests {
         };
         let j = Json::parse(&gemm_response(&o)).unwrap();
         assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("op").and_then(|v| v.as_str()), Some("gemm"));
+        assert_eq!(j.get("m").and_then(|v| v.as_u64()), Some(64));
         assert_eq!(j.get("cluster").and_then(|v| v.as_u64()), Some(2));
         assert_eq!(j.get("batch_size").and_then(|v| v.as_u64()), Some(4));
         let sum = ["data_copy_ms", "fork_join_ms", "compute_ms", "host_compute_ms"]

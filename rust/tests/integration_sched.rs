@@ -130,7 +130,12 @@ fn queue_full_backpressure_returns_retry_error() {
 
     // fill the queue to capacity behind the parked worker
     let gemm = |seed| {
-        JobPayload::Gemm(GemmRequest { n: 32, mode: DispatchMode::DeviceOnly, seed })
+        JobPayload::Gemm(GemmRequest {
+            n: 32,
+            mode: DispatchMode::DeviceOnly,
+            seed,
+            b_seed: None,
+        })
     };
     let r1 = sched.submit(Priority::Normal, gemm(1)).expect("fits");
     let r2 = sched.submit(Priority::Normal, gemm(2)).expect("fits");
@@ -173,7 +178,12 @@ fn batching_coalesces_and_amortizes_fork_join() {
     let solo = sched
         .submit(
             Priority::Normal,
-            JobPayload::Gemm(GemmRequest { n: 64, mode: DispatchMode::DeviceOnly, seed: 7 }),
+            JobPayload::Gemm(GemmRequest {
+                n: 64,
+                mode: DispatchMode::DeviceOnly,
+                seed: 7,
+                b_seed: None,
+            }),
         )
         .unwrap()
         .recv_timeout(Duration::from_secs(300))
@@ -200,6 +210,7 @@ fn batching_coalesces_and_amortizes_fork_join() {
                         n: 64,
                         mode: DispatchMode::DeviceOnly,
                         seed: 100 + i,
+                        b_seed: None,
                     }),
                 )
                 .unwrap()
@@ -226,4 +237,209 @@ fn batching_coalesces_and_amortizes_fork_join() {
     let m = sched.metrics();
     assert_eq!(m.batched_jobs, 4);
     sched.shutdown();
+}
+
+/// A job whose submitter cancelled (serve-layer reply timeout) is
+/// skipped at dequeue: never launched, counted in `cancelled`, and its
+/// reply channel just closes.
+#[test]
+fn cancelled_jobs_are_skipped_at_dequeue() {
+    let sched = Scheduler::new(&cfg(1, 8, 0, 1), &artifacts_dir()).unwrap();
+
+    // park the only worker so the jobs stay queued
+    let (release, fence_rx) = mpsc::channel();
+    let fence_done = sched
+        .submit(Priority::High, JobPayload::Fence(fence_rx))
+        .expect("fence submit");
+    let t0 = Instant::now();
+    while sched.queue_depth() > 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "worker never took the fence");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    let gemm = |seed| {
+        JobPayload::Gemm(GemmRequest {
+            n: 32,
+            mode: DispatchMode::DeviceOnly,
+            seed,
+            b_seed: None,
+        })
+    };
+    let doomed = sched.submit(Priority::Normal, gemm(1)).expect("fits");
+    let alive = sched.submit(Priority::Normal, gemm(2)).expect("fits");
+    doomed.cancel.cancel(); // the submitter gave up while queued
+
+    release.send(()).unwrap();
+    assert!(fence_done.recv_timeout(Duration::from_secs(120)).unwrap().is_ok());
+
+    // the live job completes normally...
+    let out = alive.recv_timeout(Duration::from_secs(300)).unwrap().unwrap();
+    assert_eq!(out.n, 32);
+    // ...the cancelled one was dropped without a result (sender closed)
+    assert!(doomed.result.recv_timeout(Duration::from_secs(120)).is_err());
+    let m = sched.metrics();
+    assert_eq!(m.cancelled, 1);
+    assert_eq!(m.completed, 2); // fence + live gemm, not the cancelled one
+    sched.shutdown();
+}
+
+/// The expected gemv checksum: same synthesis as the worker (A then x
+/// from the request RNG, y = A @ x), plain loops.
+fn expected_gemv_checksum(m: usize, n: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let a = rng.normal_vec(m * n);
+    let x = rng.normal_vec(n);
+    (0..m)
+        .map(|i| (0..n).map(|j| a[i * n + j] * x[j]).sum::<f64>())
+        .sum()
+}
+
+/// Same-shape GEMV requests queued behind a fence coalesce into ONE
+/// fork-join launch (the level-2 batching path), with correct checksums
+/// and amortized fork/join.
+#[test]
+fn gemv_requests_batch_into_one_launch() {
+    use hero_blas::sched::GemvRequest;
+    let sched = Scheduler::new(&cfg(1, 32, 0, 8), &artifacts_dir()).unwrap();
+
+    // solo baseline
+    let solo = sched
+        .submit(
+            Priority::Normal,
+            JobPayload::Gemv(GemvRequest {
+                m: 64,
+                n: 64,
+                mode: DispatchMode::DeviceOnly,
+                seed: 7,
+            }),
+        )
+        .unwrap()
+        .recv_timeout(Duration::from_secs(300))
+        .unwrap()
+        .unwrap();
+    assert_eq!((solo.op, solo.batch_size), ("gemv", 1));
+    assert!(solo.fork_join_ms > 0.0);
+    let tol = 1e-6 * solo.checksum.abs().max(1.0);
+    assert!((solo.checksum - expected_gemv_checksum(64, 64, 7)).abs() < tol);
+
+    // park, queue 4 same-shape gemvs, release
+    let (release, fence_rx) = mpsc::channel();
+    let fence_done =
+        sched.submit(Priority::High, JobPayload::Fence(fence_rx)).unwrap();
+    let t0 = Instant::now();
+    while sched.queue_depth() > 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "worker never took the fence");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let receivers: Vec<_> = (0..4)
+        .map(|i| {
+            sched
+                .submit(
+                    Priority::Normal,
+                    JobPayload::Gemv(GemvRequest {
+                        m: 64,
+                        n: 64,
+                        mode: DispatchMode::DeviceOnly,
+                        seed: 200 + i,
+                    }),
+                )
+                .unwrap()
+        })
+        .collect();
+    release.send(()).unwrap();
+    assert!(fence_done.recv_timeout(Duration::from_secs(120)).unwrap().is_ok());
+
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let out = rx.recv_timeout(Duration::from_secs(300)).unwrap().unwrap();
+        assert_eq!(out.batch_size, 4, "expected all four to share one launch");
+        assert_eq!((out.op, out.m, out.n), ("gemv", 64, 64));
+        assert!(
+            out.fork_join_ms < solo.fork_join_ms * 0.5,
+            "no amortization: batched {} vs solo {}",
+            out.fork_join_ms,
+            solo.fork_join_ms
+        );
+        let expect = expected_gemv_checksum(64, 64, 200 + i as u64);
+        let tol = 1e-6 * expect.abs().max(1.0);
+        assert!((out.checksum - expect).abs() < tol, "member {i} checksum");
+    }
+    sched.shutdown();
+}
+
+/// Tentpole acceptance: on a repeated shared-B workload the operand
+/// cache + software pipeline cut host->device copy bytes by >= 2x and
+/// hide map-in under compute, while every checksum stays identical to
+/// the plain (cache-off, unpiped) scheduler's.
+#[test]
+fn cache_and_pipeline_cut_copies_checksums_identical() {
+    // batch_max 1 (each request launches alone) so consecutive launches
+    // exercise the stage-under-compute pipeline deterministically
+    let mut plain_cfg = cfg(1, 32, 0, 1);
+    plain_cfg.sched.cache.cache_frac = 0.0;
+    plain_cfg.sched.cache.pipeline_depth = 1;
+    let mut fast_cfg = cfg(1, 32, 0, 1);
+    fast_cfg.sched.cache.cache_frac = 0.4;
+    fast_cfg.sched.cache.cache_max_entries = 16;
+    fast_cfg.sched.cache.pipeline_depth = 2;
+
+    let run = |cfg: &hero_blas::config::PlatformConfig| {
+        let sched = Scheduler::new(cfg, &artifacts_dir()).unwrap();
+        // park the worker so all requests are queued back-to-back — the
+        // pipelined worker then always has a next batch to stage early
+        let (release, fence_rx) = mpsc::channel();
+        let fence_done =
+            sched.submit(Priority::High, JobPayload::Fence(fence_rx)).unwrap();
+        let t0 = Instant::now();
+        while sched.queue_depth() > 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "fence not taken");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let receivers: Vec<_> = (0..4)
+            .map(|i| {
+                sched
+                    .submit(
+                        Priority::Normal,
+                        JobPayload::Gemm(GemmRequest {
+                            n: 64,
+                            mode: DispatchMode::DeviceOnly,
+                            seed: 500 + i,
+                            b_seed: Some(42), // the shared weight matrix
+                        }),
+                    )
+                    .unwrap()
+            })
+            .collect();
+        release.send(()).unwrap();
+        assert!(fence_done.recv_timeout(Duration::from_secs(120)).unwrap().is_ok());
+        let checksums: Vec<f64> = receivers
+            .into_iter()
+            .map(|rx| {
+                rx.recv_timeout(Duration::from_secs(300)).unwrap().unwrap().checksum
+            })
+            .collect();
+        let m = sched.metrics();
+        sched.shutdown();
+        (checksums, m)
+    };
+
+    let (plain_sums, plain_m) = run(&plain_cfg);
+    let (fast_sums, fast_m) = run(&fast_cfg);
+
+    // results are bit-identical: the cache shares bytes, never mutates
+    assert_eq!(plain_sums, fast_sums, "cache/pipeline must not change results");
+
+    // the shared B hits the cache and the beta==0 C staging is elided
+    assert!(fast_m.cache_hits > 0, "no cache hits: {}", fast_m.summary());
+    assert_eq!(plain_m.cache_hits, 0);
+    assert!(
+        fast_m.bytes_to_device * 2 <= plain_m.bytes_to_device,
+        "copy bytes not halved: {} vs {}",
+        fast_m.bytes_to_device,
+        plain_m.bytes_to_device
+    );
+
+    // back-to-back launches pipelined, with map-in hidden under compute
+    assert!(fast_m.pipelined_batches > 0, "{}", fast_m.summary());
+    assert!(fast_m.overlap_hidden_us > 0, "{}", fast_m.summary());
+    assert_eq!(plain_m.pipelined_batches, 0);
 }

@@ -110,11 +110,37 @@ fn serve_gemm_requests_end_to_end() {
     );
     assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
 
-    // scheduler counters over the wire
+    // gemv over the wire: same response shape, op/m echoed
+    let r = request(
+        &mut stream,
+        &mut reader,
+        r#"{"op": "gemv", "m": 64, "n": 64, "mode": "device_only"}"#,
+    );
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r:?}");
+    assert_eq!(r.get("op").and_then(|v| v.as_str()), Some("gemv"));
+    assert_eq!(r.get("m").and_then(|v| v.as_u64()), Some(64));
+    assert!(r.get("fork_join_ms").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    // deterministic default seed, like gemm
+    let r2 = request(
+        &mut stream,
+        &mut reader,
+        r#"{"op": "gemv", "m": 64, "n": 64, "mode": "device_only"}"#,
+    );
+    assert_eq!(
+        r.get("checksum").and_then(|v| v.as_f64()).unwrap(),
+        r2.get("checksum").and_then(|v| v.as_f64()).unwrap(),
+    );
+
+    // scheduler counters over the wire (incl. the data-movement family)
     let m = request(&mut stream, &mut reader, r#"{"op": "metrics"}"#);
     assert_eq!(m.get("ok"), Some(&Json::Bool(true)));
     assert!(m.get("completed").and_then(|v| v.as_u64()).unwrap() >= 3);
     assert!(m.get("pool").and_then(|v| v.as_u64()).unwrap() >= 1);
+    for key in ["cancelled", "cache_hits", "bytes_to_device", "pipelined_batches"] {
+        assert!(m.get(key).and_then(|v| v.as_u64()).is_some(), "missing {key}");
+    }
+    // default config: cache off, nothing elided
+    assert_eq!(m.get("cache_hits").and_then(|v| v.as_u64()), Some(0));
 
     // shutdown stops the server thread
     let _ = request(&mut stream, &mut reader, r#"{"op": "shutdown"}"#);
