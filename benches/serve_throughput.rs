@@ -42,6 +42,9 @@ struct Knobs {
     pipeline: bool,
     /// All clients share one B matrix (`b_seed`) — the cache hot path.
     shared_b: bool,
+    /// Placement router: affinity routing + work stealing on/off (off =
+    /// PR 1's round-robin-equivalent any-worker dequeue).
+    placement: bool,
 }
 
 /// Scheduler counters scraped over the wire before shutdown.
@@ -52,6 +55,8 @@ struct Counters {
     cache_hits: u64,
     pipelined_batches: u64,
     overlap_hidden_us: u64,
+    stolen: u64,
+    affine_routed: u64,
 }
 
 struct Point {
@@ -74,16 +79,19 @@ impl Point {
         format!(
             "{{\"bench\": \"serve_throughput\", \"n\": {N}, \"pool\": {}, \
              \"batching\": {}, \"cache\": {}, \"pipeline\": {}, \
-             \"shared_b\": {}, \"clients\": {}, \"requests\": {}, \
+             \"shared_b\": {}, \"placement\": {}, \"clients\": {}, \
+             \"requests\": {}, \
              \"wall_ms\": {:.1}, \"rps\": {:.1}, \"retries\": {}, \
              \"bytes_to_device\": {}, \"bytes_copy_elided\": {}, \
              \"cache_hits\": {}, \"pipelined_batches\": {}, \
-             \"overlap_hidden_us\": {}, \"speedup_vs_serial\": {:.2}}}",
+             \"overlap_hidden_us\": {}, \"stolen\": {}, \
+             \"affine_routed\": {}, \"speedup_vs_serial\": {:.2}}}",
             k.pool,
             k.batching,
             k.cache,
             k.pipeline,
             k.shared_b,
+            k.placement,
             self.clients,
             self.clients * self.per_client,
             self.wall.as_secs_f64() * 1e3,
@@ -94,6 +102,8 @@ impl Point {
             c.cache_hits,
             c.pipelined_batches,
             c.overlap_hidden_us,
+            c.stolen,
+            c.affine_routed,
             speedup_vs_serial,
         )
     }
@@ -124,6 +134,8 @@ fn run_point(knobs: Knobs, clients: usize, per_client: usize) -> Point {
     cfg.sched.cache.cache_frac = if knobs.cache { 0.4 } else { 0.0 };
     cfg.sched.cache.cache_max_entries = 64;
     cfg.sched.cache.pipeline_depth = if knobs.pipeline { 2 } else { 1 };
+    cfg.sched.placement.affinity = knobs.placement;
+    cfg.sched.placement.steal = knobs.placement;
 
     let dir = hero_blas::find_artifacts_dir().expect("run `make artifacts` first");
     let (tx, rx) = mpsc::channel();
@@ -181,6 +193,8 @@ fn run_point(knobs: Knobs, clients: usize, per_client: usize) -> Point {
         cache_hits: get("cache_hits"),
         pipelined_batches: get("pipelined_batches"),
         overlap_hidden_us: get("overlap_hidden_us"),
+        stolen: get("stolen"),
+        affine_routed: get("affine_routed"),
     };
     stream.write_all(b"{\"op\": \"shutdown\"}\n").unwrap();
     stream.flush().unwrap();
@@ -206,6 +220,7 @@ fn main() {
         cache: false,
         pipeline: false,
         shared_b: false,
+        placement: false,
     };
     let serial = run_point(base_knobs, 1, serial_reqs);
     let base = serial.rps();
@@ -233,7 +248,14 @@ fn main() {
     for (cache, pipeline) in [(false, false), (true, false), (false, true), (true, true)]
     {
         let p = run_point(
-            Knobs { pool: 2, batching: true, cache, pipeline, shared_b: true },
+            Knobs {
+                pool: 2,
+                batching: true,
+                cache,
+                pipeline,
+                shared_b: true,
+                placement: false,
+            },
             clients,
             per_client,
         );
@@ -250,15 +272,51 @@ fn main() {
         }
     }
 
+    // sweep 3: placement off/on with the cache on (shared-B workload) —
+    // affinity routes every same-B request at one warm cluster instead
+    // of warming each cluster separately, and stealing keeps the other
+    // clusters busy; the placement-on point should show affine_routed >
+    // 0 and fewer bytes_to_device than placement-off at the same knobs
+    println!();
+    let mut off_bytes = 0u64;
+    for placement in [false, true] {
+        let p = run_point(
+            Knobs {
+                pool: 2,
+                batching: true,
+                cache: true,
+                pipeline: true,
+                shared_b: true,
+                placement,
+            },
+            clients,
+            per_client,
+        );
+        if !placement {
+            off_bytes = p.counters.bytes_to_device;
+        }
+        println!("{}", p.json(p.rps() / base));
+        if placement && off_bytes > 0 {
+            let cut = off_bytes as f64 / p.counters.bytes_to_device.max(1) as f64;
+            println!(
+                "{{\"bench\": \"serve_throughput\", \"summary\": \
+                 \"placement_bytes_cut\", \"value\": {cut:.2}}}"
+            );
+        }
+    }
+
     println!(
         "\npool parallelism scales wall-clock across clusters; batching\n\
          coalesces queued same-shape requests so the fork-join overhead —\n\
          dominant below the Figure-3 crossover — is paid once per batch.\n\
          On the shared-B workload the operand cache turns repeat map-ins\n\
-         into refcount bumps and the pipeline hides the rest of the map-in\n\
-         under the previous batch's compute.\n\
+         into refcount bumps, the pipeline hides the rest of the map-in\n\
+         under the previous batch's compute, and the placement router\n\
+         routes every same-B request at the one warm cluster (stealing\n\
+         keeps the rest of the pool busy).\n\
          Acceptance: pool=4 batching=true must show speedup_vs_serial >= 2.0;\n\
          cache=true pipeline=true must show cache_hits > 0 and\n\
-         copy_bytes_cut >= 2.0 vs the cache-off point."
+         copy_bytes_cut >= 2.0 vs the cache-off point; placement=true must\n\
+         show affine_routed > 0."
     );
 }

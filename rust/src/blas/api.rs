@@ -69,6 +69,42 @@ impl<T: Elem> GemmStagedRun<T> {
     }
 }
 
+/// A coalesced same-shape GEMV batch in flight on this session's
+/// cluster (executed, completion word posted) — see
+/// [`HeroBlas::gemv_batch_execute`].
+pub struct GemvBatchRun<T: Elem> {
+    state: device::GemvBatchState,
+    _elem: std::marker::PhantomData<T>,
+}
+
+impl<T: Elem> GemvBatchRun<T> {
+    pub fn len(&self) -> usize {
+        self.state.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.state.is_empty()
+    }
+}
+
+/// A coalesced same-shape GEMV batch staged but not yet executed — the
+/// level-2 pipelining handle (see [`HeroBlas::gemv_batch_stage`]).
+pub struct GemvStagedRun<T: Elem> {
+    state: device::GemvStagedBatch,
+    alpha: T,
+    beta: T,
+}
+
+impl<T: Elem> GemvStagedRun<T> {
+    pub fn len(&self) -> usize {
+        self.state.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.state.is_empty()
+    }
+}
+
 impl std::fmt::Debug for HeroBlas {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("HeroBlas")
@@ -196,6 +232,140 @@ impl HeroBlas {
     /// exit the target region without ever ringing the doorbell.
     pub fn gemm_batch_abandon<T: Elem>(&mut self, staged: GemmStagedRun<T>) {
         staged.state.release(&mut self.engine);
+    }
+
+    /// Per-member cache identity of a staged batch's B operands — what
+    /// the scheduler tags in the operand cache to keep its affinity
+    /// directory honest about residency.
+    pub fn gemm_staged_b_keys<T: Elem>(
+        &self,
+        staged: &GemmStagedRun<T>,
+    ) -> Vec<Option<crate::omp::CacheKey>> {
+        staged.state.cached_b_keys()
+    }
+
+    /// Stage a coalesced GEMV batch without launching it — the level-2
+    /// analogue of [`HeroBlas::gemm_batch_stage`], giving the pipelined
+    /// scheduler the same stage/execute/finish seam for gemv traffic.
+    pub fn gemv_batch_stage<T: Elem>(
+        &mut self,
+        dims: (usize, usize),
+        alpha: T,
+        beta: T,
+        inputs: &[(&[T], &[T], &[T])],
+        zero_copy: bool,
+    ) -> Result<GemvStagedRun<T>> {
+        device::gemv_batch_stage::<T>(
+            &mut self.engine, &mut self.registry, dims, beta == T::zero(), inputs,
+            zero_copy,
+        )
+        .map(|state| GemvStagedRun { state, alpha, beta })
+    }
+
+    /// Execute a staged GEMV batch (doorbell + compute); the completion
+    /// word is posted on return — poll
+    /// [`HeroBlas::offload_completion_pending`] and then call
+    /// [`HeroBlas::gemv_batch_finish`].
+    pub fn gemv_batch_execute<T: Elem>(
+        &mut self,
+        staged: GemvStagedRun<T>,
+    ) -> Result<GemvBatchRun<T>> {
+        device::gemv_batch_execute(
+            &mut self.engine, &mut self.registry, staged.state, staged.alpha,
+            staged.beta,
+        )
+        .map(|state| GemvBatchRun { state, _elem: std::marker::PhantomData })
+    }
+
+    /// Join an executed GEMV batch: copy every member's y back into
+    /// `outs` (launch order) and release the device mappings.
+    pub fn gemv_batch_finish<T: Elem>(
+        &mut self,
+        run: GemvBatchRun<T>,
+        outs: &mut [&mut [T]],
+    ) -> Result<()> {
+        device::gemv_batch_finish(&mut self.engine, run.state, outs)
+    }
+
+    /// Abandon a staged GEMV batch (error recovery): release its
+    /// mappings and exit the target region without ringing the doorbell.
+    pub fn gemv_batch_abandon<T: Elem>(&mut self, staged: GemvStagedRun<T>) {
+        staged.state.release(&mut self.engine);
+    }
+
+    /// Run a coalesced batch of same-length level-1 calls, dispatching
+    /// through the policy: the host target loops the scalar kernels, the
+    /// device targets coalesce every member into ONE fork-join launch
+    /// (the last device path that used to pay the launch per call).
+    /// `inputs` carries one `(alpha, x, y)` per member; axpy writes the
+    /// updated y into `outs[i]` (length n), dot writes the scalar into
+    /// `outs[i][0]`.
+    pub fn level1_batch(
+        &mut self,
+        kind: OffloadKind,
+        inputs: &[(f64, &[f64], &[f64])],
+        outs: &mut [&mut [f64]],
+    ) -> Result<()> {
+        let is_axpy = match kind {
+            OffloadKind::Axpy => true,
+            OffloadKind::Dot => false,
+            _ => {
+                return Err(crate::error::Error::shape(
+                    "level1_batch: unsupported kind",
+                ))
+            }
+        };
+        if inputs.is_empty() || inputs.len() != outs.len() {
+            return Err(crate::error::Error::shape("level1_batch: ragged batch"));
+        }
+        // Validate member shapes up front so the host and device targets
+        // fail identically (the device path re-checks internally).
+        let n = inputs[0].1.len();
+        for (i, (_, x, y)) in inputs.iter().enumerate() {
+            if x.len() != n || y.len() != n {
+                return Err(crate::error::Error::shape(format!(
+                    "level1_batch: member {i} lengths {}x{} don't match n={n}",
+                    x.len(),
+                    y.len()
+                )));
+            }
+        }
+        let want = if is_axpy { n } else { 1 };
+        for (i, out) in outs.iter().enumerate() {
+            if out.len() != want {
+                return Err(crate::error::Error::shape(format!(
+                    "level1_batch: output {i} len {} != {want}",
+                    out.len()
+                )));
+            }
+        }
+        match self.policy.level1(kind, n) {
+            ExecTarget::Host => {
+                for ((alpha, x, y), out) in inputs.iter().zip(outs.iter_mut()) {
+                    if is_axpy {
+                        out.copy_from_slice(y);
+                        host::axpy(*alpha, x, out);
+                        let cyc =
+                            self.engine.platform.host.level1_cycles(n, 2.0, false);
+                        self.engine.charge_host_compute(cyc, "host_axpy");
+                    } else {
+                        out[0] = host::dot(x, y);
+                        let cyc =
+                            self.engine.platform.host.level1_cycles(n, 2.0, false);
+                        self.engine.charge_host_compute(cyc, "host_dot");
+                    }
+                }
+                Ok(())
+            }
+            target => device::level1_batch(
+                &mut self.engine,
+                &mut self.registry,
+                kind,
+                inputs,
+                target == ExecTarget::DeviceZeroCopy,
+                outs,
+            ),
+        }
     }
 
     /// Run a coalesced batch of same-shape GEMVs (`y_i = alpha * A_i @

@@ -520,6 +520,18 @@ impl GemmStagedBatch {
         self.members.is_empty()
     }
 
+    /// Per-member cache identity of the staged B operand (`None` when
+    /// that member's B is not cache-resident).  The scheduler tags these
+    /// entries in the operand cache and records residency in its
+    /// affinity directory, so later same-B requests route to this
+    /// cluster while the bytes stay warm.
+    pub fn cached_b_keys(&self) -> Vec<Option<crate::omp::CacheKey>> {
+        self.members
+            .iter()
+            .map(|m| self.staged.get(m.bi).cache_key())
+            .collect()
+    }
+
     /// Error-path teardown for a staged-but-never-executed batch.
     pub fn release(mut self, engine: &mut OffloadEngine) {
         self.staged.release_all(engine);
@@ -747,17 +759,29 @@ pub fn gemm_batch_finish<T: Elem>(
     Ok(())
 }
 
+/// Device-DRAM bytes one staged member occupies for an (m, n, k) GEMM
+/// given the manifest tile geometry and element size.  Shared by the
+/// worker's batch cap ([`gemm_staged_bytes`]) and the placement
+/// router's shape estimates, so the routing footprint can never drift
+/// from what staging actually allocates.
+pub fn gemm_staged_bytes_tiled(
+    (tm, tn, tk): (usize, usize, usize),
+    (m, n, k): (usize, usize, usize),
+    elem_size: usize,
+) -> u64 {
+    let (mp, np, kp) = (round_up(m, tm), round_up(n, tn), round_up(k, tk));
+    ((mp * kp + kp * np + mp * np) * elem_size) as u64
+}
+
 /// Device-DRAM bytes one staged batch member occupies for an (m, n, k)
 /// GEMM — lets the scheduler cap a batch to what the cluster's DRAM
 /// partition can hold before it commits to a coalesced launch.
 pub fn gemm_staged_bytes<T: Elem>(
     registry: &ArtifactRegistry,
-    (m, n, k): (usize, usize, usize),
+    dims: (usize, usize, usize),
 ) -> u64 {
     let man = registry.manifest();
-    let (tm, tn, tk) = (man.tile_m, man.tile_n, man.tile_k);
-    let (mp, np, kp) = (round_up(m, tm), round_up(n, tn), round_up(k, tk));
-    ((mp * kp + kp * np + mp * np) * T::SIZE) as u64
+    gemm_staged_bytes_tiled((man.tile_m, man.tile_n, man.tile_k), dims, T::SIZE)
 }
 
 /// GEMV problem geometry shared by the single-call and batched paths.
@@ -931,34 +955,89 @@ pub fn gemv<T: Elem>(
     Ok(())
 }
 
-/// A coalesced batch of same-shape GEMVs as ONE offload: one OpenBLAS
-/// entry, one target region, one descriptor with `3 * batch` mapped
-/// arguments, one doorbell — the level-2 analogue of
-/// [`gemm_batch_launch`].  `y_i = alpha * A_i @ x_i + beta * y_i` for
-/// every member `(a, x, y)`; results land in `outs` (launch order).
-/// GEMV is far below the Figure-3 crossover at serving sizes, so
-/// amortizing the fork/join across a batch is what makes offloading it
-/// pay at all.  Synchronous: returns with results copied back.
-#[allow(clippy::too_many_arguments)]
-pub fn gemv_batch<T: Elem>(
+/// One member of a coalesced GEMV launch.  Owns the padded byte images
+/// (their host addresses key the engine's data-map) until unmap time.
+#[derive(Debug)]
+struct GemvMember {
+    #[allow(dead_code)]
+    a_bytes: Vec<u8>,
+    #[allow(dead_code)]
+    x_bytes: Vec<u8>,
+    y_bytes: Vec<u8>,
+    ai: usize,
+    xi: usize,
+    yi: usize,
+}
+
+/// A coalesced same-shape GEMV batch staged in device DRAM but not yet
+/// launched — the level-2 analogue of [`GemmStagedBatch`], and the seam
+/// the pipelined scheduler threads gemv batches through: a worker
+/// stages batch k+1 here while batch k is still between its launch and
+/// its finish, hiding k+1's map-in under k's compute window.
+///
+/// Produced by [`gemv_batch_stage`]; consumed by [`gemv_batch_execute`].
+#[derive(Debug)]
+pub struct GemvStagedBatch {
+    staged: Staged,
+    members: Vec<GemvMember>,
+    geom: GemvGeom,
+    elem_size: usize,
+    zero_copy: bool,
+}
+
+impl GemvStagedBatch {
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Error-path teardown for a staged-but-never-executed batch.
+    pub fn release(mut self, engine: &mut OffloadEngine) {
+        self.staged.release_all(engine);
+        engine.target_end();
+    }
+}
+
+/// A coalesced GEMV launch between its execute and its finish: the
+/// completion word is posted, results are on the device, replies are
+/// pending.  Produced by [`gemv_batch_execute`]; consumed by
+/// [`gemv_batch_finish`].
+#[derive(Debug)]
+pub struct GemvBatchState {
+    staged: Staged,
+    members: Vec<GemvMember>,
+    geom: GemvGeom,
+    elem_size: usize,
+}
+
+impl GemvBatchState {
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+}
+
+/// Stage a batch of same-shape GEMVs (`y_i = alpha * A_i @ x_i + beta *
+/// y_i`, op(A) m x n) for ONE offload: one OpenBLAS entry, one target
+/// region, `3 * batch` mapped arguments.  `beta_zero` must be
+/// `beta == 0` — it gates the `map(alloc:)` staging elision for y.  Any
+/// error releases everything staged so far and exits the target region.
+pub fn gemv_batch_stage<T: Elem>(
     engine: &mut OffloadEngine,
     registry: &mut ArtifactRegistry,
     (m, n): (usize, usize),
-    alpha: T,
-    beta: T,
+    beta_zero: bool,
     inputs: &[(&[T], &[T], &[T])],
     zero_copy: bool,
-    outs: &mut [&mut [T]],
-) -> Result<()> {
+) -> Result<GemvStagedBatch> {
     if inputs.is_empty() {
         return Err(Error::shape("gemv_batch: empty batch"));
-    }
-    if outs.len() != inputs.len() {
-        return Err(Error::shape(format!(
-            "gemv_batch: {} outputs for a batch of {}",
-            outs.len(),
-            inputs.len()
-        )));
     }
     for (a, x, y) in inputs {
         if a.len() != m * n || x.len() != n || y.len() != m {
@@ -976,62 +1055,201 @@ pub fn gemv_batch<T: Elem>(
     engine.blas_entry();
     engine.target_begin(3 * inputs.len());
 
-    let beta_zero = beta == T::zero();
-    with_recovery(engine, |engine, staged| {
-        // ---- data copy: stage every member ----
+    let mut staged = Staged::default();
+    let r = (|| -> Result<Vec<GemvMember>> {
         let mut members = Vec::with_capacity(inputs.len());
         for (a, x, y) in inputs {
-            members.push(stage_gemv_operands(
-                engine, staged, g, a, x, y, zero_copy, beta_zero,
-            )?);
+            let (a_bytes, x_bytes, y_bytes, ai, xi, yi) = stage_gemv_operands(
+                engine, &mut staged, g, a, x, y, zero_copy, beta_zero,
+            )?;
+            members.push(GemvMember { a_bytes, x_bytes, y_bytes, ai, xi, yi });
         }
+        Ok(members)
+    })();
 
-        // ---- one descriptor, one doorbell ----
-        let mut desc = OffloadDescriptor::new(OffloadKind::Gemv, (m, n, 0), T::F32_PATH);
-        for (_, _, _, ai, xi, yi) in &members {
-            for i in [*ai, *xi, *yi] {
+    match r {
+        Ok(members) => Ok(GemvStagedBatch {
+            staged,
+            members,
+            geom: g,
+            elem_size: T::SIZE,
+            zero_copy,
+        }),
+        Err(e) => {
+            staged.release_all(engine);
+            engine.target_end();
+            Err(e)
+        }
+    }
+}
+
+/// Execute a staged GEMV batch: one descriptor, one doorbell, every
+/// member's row-panel walk, completion word posted.  Poll the mailbox
+/// and call [`gemv_batch_finish`] to join.
+pub fn gemv_batch_execute<T: Elem>(
+    engine: &mut OffloadEngine,
+    registry: &mut ArtifactRegistry,
+    mut batch: GemvStagedBatch,
+    alpha: T,
+    beta: T,
+) -> Result<GemvBatchState> {
+    let g = batch.geom;
+    let r = (|| -> Result<()> {
+        if T::SIZE != batch.elem_size {
+            return Err(Error::shape("gemv_batch_execute: element type mismatch"));
+        }
+        let mut desc =
+            OffloadDescriptor::new(OffloadKind::Gemv, (g.m, g.n, 0), T::F32_PATH);
+        for mem in &batch.members {
+            for i in [mem.ai, mem.xi, mem.yi] {
                 desc.push_arg(OffloadArg {
-                    device_addr: staged.get(i).device_addr(),
-                    len: staged.get(i).len,
-                    via_iommu: zero_copy,
+                    device_addr: batch.staged.get(i).device_addr(),
+                    len: batch.staged.get(i).len,
+                    via_iommu: batch.zero_copy,
                 });
             }
         }
         engine.launch(&desc)?;
 
-        // ---- compute every member ----
-        for (_, _, _, ai, xi, yi) in &members {
-            gemv_compute(engine, registry, staged, (*ai, *xi, *yi), g, alpha, beta)?;
+        for mem in &batch.members {
+            gemv_compute(
+                engine,
+                registry,
+                &mut batch.staged,
+                (mem.ai, mem.xi, mem.yi),
+                g,
+                alpha,
+                beta,
+            )?;
         }
+        engine.device_complete()?;
+        Ok(())
+    })();
 
-        // ---- join + copy back + unmap ----
-        engine.join()?;
-        for ((_, _, y_bytes, ai, xi, yi), out) in members.iter().zip(outs.iter_mut()) {
-            let mut y_out = vec![0u8; y_bytes.len()];
+    match r {
+        Ok(()) => Ok(GemvBatchState {
+            staged: batch.staged,
+            members: batch.members,
+            geom: g,
+            elem_size: batch.elem_size,
+        }),
+        Err(e) => {
+            batch.staged.release_all(engine);
+            engine.abort_offload();
+            engine.target_end();
+            Err(e)
+        }
+    }
+}
+
+/// Join a coalesced GEMV launch: drain the completion word, copy every
+/// member's y back (un-padded, launch order), release all mappings and
+/// exit the target region.
+pub fn gemv_batch_finish<T: Elem>(
+    engine: &mut OffloadEngine,
+    mut state: GemvBatchState,
+    outs: &mut [&mut [T]],
+) -> Result<()> {
+    let g = state.geom;
+    let finish = (|| -> Result<()> {
+        if outs.len() != state.members.len() {
+            return Err(Error::shape(format!(
+                "gemv_batch_finish: {} outputs for a batch of {}",
+                outs.len(),
+                state.members.len()
+            )));
+        }
+        if T::SIZE != state.elem_size {
+            return Err(Error::shape("gemv_batch_finish: element type mismatch"));
+        }
+        engine.join_completed()?;
+        for (mem, out) in state.members.iter().zip(outs.iter_mut()) {
+            if out.len() != g.m {
+                return Err(Error::shape(format!(
+                    "gemv_batch_finish: output len {} != {}",
+                    out.len(),
+                    g.m
+                )));
+            }
+            let mut y_out = vec![0u8; mem.y_bytes.len()];
             engine.map_from_charged(
-                staged.get(*yi), &mut y_out, (m * T::SIZE) as u64, "y",
+                state.staged.get(mem.yi),
+                &mut y_out,
+                (g.m * T::SIZE) as u64,
+                "y",
             )?;
             let y_full: Vec<T> = T::bytes_to_vec(&y_out);
-            out.copy_from_slice(&y_full[..m]);
-            engine.unmap(staged.take(*ai), "a")?;
-            engine.unmap(staged.take(*xi), "x")?;
-            engine.unmap(staged.take(*yi), "y")?;
+            out.copy_from_slice(&y_full[..g.m]);
+        }
+        for mem in &state.members {
+            engine.unmap(state.staged.take(mem.ai), "a")?;
+            engine.unmap(state.staged.take(mem.xi), "x")?;
+            engine.unmap(state.staged.take(mem.yi), "y")?;
         }
         engine.target_end();
         Ok(())
-    })
+    })();
+
+    if let Err(e) = finish {
+        state.staged.release_all(engine);
+        engine.abort_offload();
+        engine.target_end();
+        return Err(e);
+    }
+    Ok(())
+}
+
+/// A coalesced batch of same-shape GEMVs as ONE offload — stage +
+/// execute + finish in one synchronous call (the level-2 analogue of
+/// [`gemm_batch_launch`]).  GEMV is far below the Figure-3 crossover at
+/// serving sizes, so amortizing the fork/join across a batch is what
+/// makes offloading it pay at all; the scheduler uses the split pieces
+/// directly to overlap map-in with the previous batch's compute.
+#[allow(clippy::too_many_arguments)]
+pub fn gemv_batch<T: Elem>(
+    engine: &mut OffloadEngine,
+    registry: &mut ArtifactRegistry,
+    (m, n): (usize, usize),
+    alpha: T,
+    beta: T,
+    inputs: &[(&[T], &[T], &[T])],
+    zero_copy: bool,
+    outs: &mut [&mut [T]],
+) -> Result<()> {
+    if outs.len() != inputs.len() {
+        return Err(Error::shape(format!(
+            "gemv_batch: {} outputs for a batch of {}",
+            outs.len(),
+            inputs.len()
+        )));
+    }
+    let staged = gemv_batch_stage::<T>(
+        engine, registry, (m, n), beta == T::zero(), inputs, zero_copy,
+    )?;
+    let state = gemv_batch_execute(engine, registry, staged, alpha, beta)?;
+    gemv_batch_finish(engine, state, outs)
+}
+
+/// Device-DRAM bytes one staged member occupies for an (m, n) GEMV
+/// given the manifest tile geometry — the level-2 analogue of
+/// [`gemm_staged_bytes_tiled`], shared with the placement router.
+pub fn gemv_staged_bytes_tiled(
+    (tm, tn, tk): (usize, usize, usize),
+    (m, n): (usize, usize),
+    elem_size: usize,
+) -> u64 {
+    let (mp, np) = (round_up(m, tm), round_up(n, tk));
+    ((mp * np + np * tn + mp) * elem_size) as u64
 }
 
 /// Device-DRAM bytes one staged batch member occupies for an (m, n)
 /// GEMV — the level-2 analogue of [`gemm_staged_bytes`].
 pub fn gemv_staged_bytes<T: Elem>(
     registry: &ArtifactRegistry,
-    (m, n): (usize, usize),
+    dims: (usize, usize),
 ) -> u64 {
     let man = registry.manifest();
-    let (tm, tn, tk) = (man.tile_m, man.tile_n, man.tile_k);
-    let (mp, np) = (round_up(m, tm), round_up(n, tk));
-    ((mp * np + np * tn + mp) * T::SIZE) as u64
+    gemv_staged_bytes_tiled((man.tile_m, man.tile_n, man.tile_k), dims, T::SIZE)
 }
 
 /// Heterogeneous AXPY (f64 only — the artifact catalog carries f64
@@ -1044,9 +1262,25 @@ pub fn axpy_f64(
     y: &mut [f64],
     zero_copy: bool,
 ) -> Result<()> {
-    level1_chunked(engine, registry, "axpy", x, Some(alpha), zero_copy, |out, y_chunk| {
-        y_chunk.copy_from_slice(out);
-    }, y)
+    if x.len() != y.len() {
+        return Err(Error::shape(format!(
+            "axpy: length mismatch {} vs {}",
+            x.len(),
+            y.len()
+        )));
+    }
+    // A single-member batch: the chunk walk, staging choices and cost
+    // charges are exactly the batched path's — one code path to
+    // calibrate.  The y snapshot is safe because chunks are disjoint.
+    let y_in = y.to_vec();
+    level1_batch(
+        engine,
+        registry,
+        OffloadKind::Axpy,
+        &[(alpha, x, y_in.as_slice())],
+        zero_copy,
+        &mut [y],
+    )
 }
 
 /// Heterogeneous DOT (f64 only). Returns the scalar.
@@ -1064,35 +1298,80 @@ pub fn dot_f64(
             y.len()
         )));
     }
-    let mut acc = 0.0;
-    let mut yv = y.to_vec();
-    level1_chunked(engine, registry, "dot", x, None, zero_copy, |out, _| {
-        acc += out[0];
-    }, &mut yv)?;
-    Ok(acc)
+    let mut out = [0.0f64];
+    level1_batch(
+        engine,
+        registry,
+        OffloadKind::Dot,
+        &[(0.0, x, y)],
+        zero_copy,
+        &mut [&mut out],
+    )?;
+    Ok(out[0])
 }
 
-/// Shared driver for chunked level-1 offloads: walks x/y in chunks that
-/// match the fixed-size artifacts, padding the tail with zeros.
-#[allow(clippy::too_many_arguments)]
-fn level1_chunked(
+/// A coalesced batch of same-length level-1 calls (axpy or dot) as ONE
+/// offload: one OpenBLAS entry, one target region, one descriptor, one
+/// doorbell — then every member's chunk walk back to back.  Level-1 is
+/// the furthest below the Figure-3 crossover of all device paths (it
+/// was the last one paying the fork/join per call), so the batcher's
+/// amortization matters most here.
+///
+/// `inputs` carries one `(alpha, x, y)` per member (alpha ignored for
+/// dot — members keep their own scale, like gemm members keep their own
+/// operands).  Results land in `outs` (launch order): axpy writes the
+/// updated y (length n), dot writes the scalar into `outs[i][0]`.
+/// Synchronous — level-1 chunks are DMA-bound and not worth pipeline
+/// state.
+pub fn level1_batch(
     engine: &mut OffloadEngine,
     registry: &mut ArtifactRegistry,
-    op: &str,
-    x: &[f64],
-    alpha: Option<f64>, // Some -> axpy, None -> dot
+    kind: OffloadKind,
+    inputs: &[(f64, &[f64], &[f64])],
     zero_copy: bool,
-    mut consume: impl FnMut(&[f64], &mut [f64]),
-    y: &mut [f64],
+    outs: &mut [&mut [f64]],
 ) -> Result<()> {
-    if x.len() != y.len() {
+    let (op, is_axpy) = match kind {
+        OffloadKind::Axpy => ("axpy", true),
+        OffloadKind::Dot => ("dot", false),
+        other => {
+            return Err(Error::shape(format!(
+                "level1_batch: unsupported kind {other:?}"
+            )))
+        }
+    };
+    if inputs.is_empty() {
+        return Err(Error::shape("level1_batch: empty batch"));
+    }
+    if outs.len() != inputs.len() {
         return Err(Error::shape(format!(
-            "{op}: length mismatch {} vs {}",
-            x.len(),
-            y.len()
+            "level1_batch: {} outputs for a batch of {}",
+            outs.len(),
+            inputs.len()
         )));
     }
-    // largest available artifact size for this op
+    let n = inputs[0].1.len();
+    for (i, (_, x, y)) in inputs.iter().enumerate() {
+        if x.len() != n || y.len() != n {
+            return Err(Error::shape(format!(
+                "level1_batch: member {i} lengths {}x{} don't match n={n}",
+                x.len(),
+                y.len()
+            )));
+        }
+    }
+    for (i, out) in outs.iter().enumerate() {
+        let want = if is_axpy { n } else { 1 };
+        if out.len() != want {
+            return Err(Error::shape(format!(
+                "level1_batch: output {i} len {} != {want}",
+                out.len()
+            )));
+        }
+    }
+
+    // largest available artifact size for this op (same chunking as the
+    // single-call path)
     let mut sizes: Vec<usize> = registry
         .manifest()
         .entries
@@ -1104,64 +1383,77 @@ fn level1_chunked(
     let chunk = *sizes
         .last()
         .ok_or_else(|| Error::Runtime(format!("no {op} artifact in manifest")))?;
-    let kind = if alpha.is_some() { OffloadKind::Axpy } else { OffloadKind::Dot };
     let artifact = format!("{op}_f64_n{chunk}");
 
+    // ---- fork (once for the whole batch) ----
     engine.blas_entry();
-    engine.target_begin(if alpha.is_some() { 3 } else { 2 });
+    engine.target_begin((if is_axpy { 3 } else { 2 }) * inputs.len());
 
     let fpu = engine.platform.cluster.stream_cycles(chunk, 2.0, false);
     let dma = engine.platform.dma.cost_2d(1, (chunk * 8) as u64);
 
-    let mut desc = OffloadDescriptor::new(kind, (x.len(), 0, 0), false);
-    desc.push_arg(OffloadArg {
-        device_addr: 0,
-        len: (x.len() * 8) as u64,
-        via_iommu: zero_copy,
-    });
+    // ---- one descriptor, one doorbell ----
+    let mut desc = OffloadDescriptor::new(kind, (n, 0, 0), false);
+    for _ in inputs {
+        desc.push_arg(OffloadArg {
+            device_addr: 0,
+            len: (n * 8) as u64,
+            via_iommu: zero_copy,
+        });
+    }
     engine.launch(&desc)?;
 
-    let res = with_recovery(engine, |engine, staged| {
-        let mut i = 0;
-        while i < x.len() {
-            let take = chunk.min(x.len() - i);
-            let mut xc = x[i..i + take].to_vec();
-            let mut yc = y[i..i + take].to_vec();
-            xc.resize(chunk, 0.0);
-            yc.resize(chunk, 0.0);
-            // charge the streaming copies of the real bytes
-            let xb = f64::slice_to_bytes(&xc);
-            let yb = f64::slice_to_bytes(&yc);
-            // x is a read-only operand: cache-eligible (repeated level-1
-            // calls over the same vector re-stage nothing).  y is the
-            // op's in-out operand — axpy logically writes it — so it
-            // never routes through the cache, mirroring gemm/gemv C.
-            let xi = staged.push(engine.map_to_operand(&xb, (take * 8) as u64, zero_copy, "x")?);
-            let yi = staged.push(engine.map_to_charged(&yb, (take * 8) as u64, zero_copy, "y")?);
+    with_recovery(engine, |engine, staged| {
+        for ((alpha, x, y), out) in inputs.iter().zip(outs.iter_mut()) {
+            let mut acc = 0.0;
+            let mut i = 0;
+            while i < x.len() {
+                let take = chunk.min(x.len() - i);
+                let mut xc = x[i..i + take].to_vec();
+                let mut yc = y[i..i + take].to_vec();
+                xc.resize(chunk, 0.0);
+                yc.resize(chunk, 0.0);
+                let xb = f64::slice_to_bytes(&xc);
+                let yb = f64::slice_to_bytes(&yc);
+                // x is read-only: cache-eligible; y is the in-out operand
+                let xi = staged.push(engine.map_to_operand(
+                    &xb, (take * 8) as u64, zero_copy, "x",
+                )?);
+                let yi = staged.push(engine.map_to_charged(
+                    &yb, (take * 8) as u64, zero_copy, "y",
+                )?);
 
-            let args: Vec<xla::Literal> = if let Some(a) = alpha {
-                vec![lit_1d(&[a]), lit_1d(&xc), lit_1d(&yc)]
-            } else {
-                vec![lit_1d(&xc), lit_1d(&yc)]
-            };
-            let out = registry.exec(&artifact, &args)?;
-            let out_vec = out.to_vec::<f64>()?;
-            engine.metrics.tile_kernel_calls += 1;
-            engine.charge_compute(dma.max(fpu) + dma, &format!("{op}[{i}..{}]", i + take));
+                let args: Vec<xla::Literal> = if is_axpy {
+                    vec![lit_1d(&[*alpha]), lit_1d(&xc), lit_1d(&yc)]
+                } else {
+                    vec![lit_1d(&xc), lit_1d(&yc)]
+                };
+                let res = registry.exec(&artifact, &args)?;
+                let out_vec = res.to_vec::<f64>()?;
+                engine.metrics.tile_kernel_calls += 1;
+                engine.charge_compute(
+                    dma.max(fpu) + dma,
+                    &format!("{op}[{i}..{}]", i + take),
+                );
 
-            consume(
-                &out_vec[..if alpha.is_some() { take } else { 1 }],
-                &mut y[i..i + take],
-            );
+                if is_axpy {
+                    out[i..i + take].copy_from_slice(&out_vec[..take]);
+                } else {
+                    acc += out_vec[0];
+                }
 
-            engine.unmap(staged.take(xi), "x")?;
-            engine.unmap(staged.take(yi), "y")?;
-            i += take;
+                engine.unmap(staged.take(xi), "x")?;
+                engine.unmap(staged.take(yi), "y")?;
+                i += take;
+            }
+            if !is_axpy {
+                out[0] = acc;
+            }
         }
 
         engine.join()?;
         engine.target_end();
         Ok(())
-    });
-    res
+    })
 }
+

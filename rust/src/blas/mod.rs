@@ -16,7 +16,9 @@ pub mod elem;
 pub mod host;
 pub mod types;
 
-pub use api::{GemmBatchRun, GemmStagedRun, HeroBlas};
+pub use api::{
+    GemmBatchRun, GemmStagedRun, GemvBatchRun, GemvStagedRun, HeroBlas,
+};
 pub use dispatch::{DispatchPolicy, ExecTarget};
 pub use elem::Elem;
 pub use types::{Side, Transpose, Uplo};

@@ -12,6 +12,7 @@ mod workload;
 
 pub use platform::{
     CacheConfig, ClockConfig, ClusterConfig, DmaConfig, ForkJoinConfig,
-    HostConfig, IommuConfig, MemoryConfig, PlatformConfig, SchedConfig,
+    HostConfig, IommuConfig, MemoryConfig, PlacementConfig, PlatformConfig,
+    SchedConfig,
 };
 pub use workload::{DispatchMode, SweepConfig, WorkloadConfig};

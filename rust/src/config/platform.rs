@@ -163,6 +163,49 @@ impl CacheConfig {
     }
 }
 
+/// Placement-router knobs (`[sched.placement]`): how jobs are assigned
+/// to pool clusters (see `crate::sched::placement`).
+///
+/// The router replaces the any-worker-takes-any-job dequeue with
+/// locality-aware placement: **affinity** routes requests sharing an
+/// operand (same `b_seed`) to the cluster whose operand cache already
+/// holds it, so a shared weight matrix is staged once per pool instead
+/// of once per cluster; **steal** lets an idle worker take queued work
+/// from the most-loaded peer instead of idling under skew; and
+/// **big_shape_frac** carves one big-shape cluster with a larger
+/// device-DRAM slice out of the pool, restoring the large-GEMM range
+/// that even partitioning caps (and keeping small requests out of its
+/// queue, so they never sit behind a large launch).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlacementConfig {
+    /// Route same-operand requests to the cache-warm cluster (with a
+    /// deterministic hash-home fallback before anything is resident).
+    pub affinity: bool,
+    /// Idle workers steal queued jobs from the most-loaded peer.
+    pub steal: bool,
+    /// Fraction of the device-DRAM partition given to cluster 0 (the
+    /// big-shape lane); the rest splits evenly across the other
+    /// clusters.  0.0 keeps the even split (no big-shape lane).  Only
+    /// meaningful for pools of >= 2 clusters.
+    pub big_shape_frac: f64,
+}
+
+impl Default for PlacementConfig {
+    fn default() -> Self {
+        // Affinity and stealing change only *where* a job runs (numerics
+        // are placement-invariant), so they default on; the heterogeneous
+        // slicing changes per-cluster capacity, so it defaults off.
+        PlacementConfig { affinity: true, steal: true, big_shape_frac: 0.0 }
+    }
+}
+
+impl PlacementConfig {
+    /// Is the heterogeneous big-shape slicing active for this pool size?
+    pub fn big_lane(&self, pool_clusters: u32) -> bool {
+        self.big_shape_frac > 0.0 && pool_clusters >= 2
+    }
+}
+
 /// Offload-scheduler knobs (the [`crate::sched`] pool/queue/batcher).
 ///
 /// These describe the *serving* layer on top of the SoC model: how many
@@ -191,6 +234,8 @@ pub struct SchedConfig {
     pub batch_max: u32,
     /// Operand-cache + staging-pipeline knobs (`[sched.cache]`).
     pub cache: CacheConfig,
+    /// Placement-router knobs (`[sched.placement]`).
+    pub placement: PlacementConfig,
 }
 
 impl Default for SchedConfig {
@@ -201,6 +246,7 @@ impl Default for SchedConfig {
             batch_window_ms: 2,
             batch_max: 8,
             cache: CacheConfig::default(),
+            placement: PlacementConfig::default(),
         }
     }
 }
@@ -364,6 +410,17 @@ impl PlatformConfig {
                             .unwrap_or(def.cache.pipeline_depth as u64)
                             as u32,
                     },
+                    placement: PlacementConfig {
+                        affinity: d
+                            .opt_bool("sched.placement.affinity")
+                            .unwrap_or(def.placement.affinity),
+                        steal: d
+                            .opt_bool("sched.placement.steal")
+                            .unwrap_or(def.placement.steal),
+                        big_shape_frac: d
+                            .opt_f64("sched.placement.big_shape_frac")
+                            .unwrap_or(def.placement.big_shape_frac),
+                    },
                 }
             },
         };
@@ -392,7 +449,9 @@ impl PlatformConfig {
              [sched]\npool_clusters = {}\nqueue_capacity = {}\n\
              batch_window_ms = {}\nbatch_max = {}\n\n\
              [sched.cache]\ncache_frac = {}\ncache_max_entries = {}\n\
-             pipeline_depth = {}\n",
+             pipeline_depth = {}\n\n\
+             [sched.placement]\naffinity = {}\nsteal = {}\n\
+             big_shape_frac = {}\n",
             c.name,
             c.clock.freq_hz,
             fmt_f64(c.host.flops_per_cycle),
@@ -432,6 +491,9 @@ impl PlatformConfig {
             fmt_f64(c.sched.cache.cache_frac),
             c.sched.cache.cache_max_entries,
             c.sched.cache.pipeline_depth,
+            c.sched.placement.affinity,
+            c.sched.placement.steal,
+            fmt_f64(c.sched.placement.big_shape_frac),
         )
     }
 
@@ -491,6 +553,22 @@ impl PlatformConfig {
             return err(format!(
                 "sched.cache.pipeline_depth must be in 1..=8, got {}",
                 self.sched.cache.pipeline_depth
+            ));
+        }
+        if !(0.0..=0.97).contains(&self.sched.placement.big_shape_frac) {
+            return err(format!(
+                "sched.placement.big_shape_frac must be in [0, 0.97], got {}",
+                self.sched.placement.big_shape_frac
+            ));
+        }
+        // One capacity model: request-level pool clusters x intra-offload
+        // compute clusters.  Cap the product so a typo'd pool cannot fan
+        // out into thousands of simulated tiles.
+        if self.sched.pool_clusters as u64 * self.cluster.clusters as u64 > 256 {
+            return err(format!(
+                "sched.pool_clusters ({}) x cluster.clusters ({}) exceeds the \
+                 256-tile capacity model",
+                self.sched.pool_clusters, self.cluster.clusters
             ));
         }
         // Address-map regions must not overlap.
@@ -651,6 +729,41 @@ mod tests {
         assert!(cfg.validate().is_err());
         let mut cfg = PlatformConfig::default();
         cfg.sched.cache.pipeline_depth = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn placement_section_parses_defaults_and_validates() {
+        // absent [sched.placement] => defaults (affinity+steal on, even split)
+        let mut text = PlatformConfig::default().to_toml_string();
+        let at = text.find("[sched.placement]").unwrap();
+        text.truncate(at);
+        let cfg = PlatformConfig::from_toml_str(&text).unwrap();
+        assert_eq!(cfg.sched.placement, PlacementConfig::default());
+        assert!(cfg.sched.placement.affinity && cfg.sched.placement.steal);
+        assert!(!cfg.sched.placement.big_lane(4), "frac 0 keeps the even split");
+
+        // explicit values round-trip
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.placement.affinity = false;
+        cfg.sched.placement.steal = false;
+        cfg.sched.placement.big_shape_frac = 0.5;
+        let back = PlatformConfig::from_toml_str(&cfg.to_toml_string()).unwrap();
+        assert_eq!(back.sched.placement, cfg.sched.placement);
+        assert!(back.sched.placement.big_lane(4));
+        assert!(!back.sched.placement.big_lane(1), "pool of 1 has no big lane");
+
+        // out-of-range knobs rejected
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.placement.big_shape_frac = 0.99;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.placement.big_shape_frac = -0.1;
+        assert!(cfg.validate().is_err());
+        // capacity-model product bound
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.pool_clusters = 64;
+        cfg.cluster.clusters = 8;
         assert!(cfg.validate().is_err());
     }
 

@@ -36,7 +36,8 @@ fn usage() -> String {
        inspect\n\
        serve [--port 7744] [--pool N] [--queue N] [--batch-window-ms N]\n\
              [--batch-max N] [--cache-frac F] [--cache-max-entries N]\n\
-             [--pipeline-depth N]\n"
+             [--pipeline-depth N] [--no-affinity] [--no-steal]\n\
+             [--big-shape-frac F]\n"
         .to_string()
 }
 
@@ -286,6 +287,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if let Some(v) = num("--pipeline-depth")? {
         cfg.sched.cache.pipeline_depth = narrow("--pipeline-depth", v)?;
+    }
+    // placement knobs ([sched.placement]): affinity / stealing / lanes
+    if has_flag(&args.rest, "--no-affinity") {
+        cfg.sched.placement.affinity = false;
+    }
+    if has_flag(&args.rest, "--no-steal") {
+        cfg.sched.placement.steal = false;
+    }
+    if let Some(s) = flag_value(&args.rest, "--big-shape-frac") {
+        cfg.sched.placement.big_shape_frac = s
+            .parse()
+            .map_err(|_| Error::Config("--big-shape-frac: not a number".into()))?;
     }
     cfg.validate()?;
     let dir = artifacts_dir(args)?;

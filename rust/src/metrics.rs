@@ -64,6 +64,43 @@ impl Metrics {
     }
 }
 
+/// Per-cluster scheduler counters: one set per pool cluster, updated by
+/// the cluster's worker and the placement router, reported by the serve
+/// `metrics` op so operators see skew, affinity warmth and steal traffic
+/// per lane instead of pool aggregates only.
+#[derive(Debug, Default)]
+pub struct ClusterCounters {
+    /// Jobs completed on this cluster.
+    pub completed: AtomicU64,
+    /// Fork-join launches this cluster issued.
+    pub batches: AtomicU64,
+    /// Jobs this cluster's worker stole from a peer's run queue.
+    pub stolen: AtomicU64,
+    /// Jobs the placement router routed here by operand affinity.
+    pub affine_routed: AtomicU64,
+    /// Operand-cache hits on this cluster's engine.
+    pub cache_hits: AtomicU64,
+    /// Operand-cache misses on this cluster's engine.
+    pub cache_misses: AtomicU64,
+    /// Host->device bytes this cluster's engine actually copied.
+    pub bytes_to_device: AtomicU64,
+}
+
+/// Plain-value snapshot of one cluster's counters (plus the router's
+/// live run-queue depth, filled in by the scheduler).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ClusterMetrics {
+    pub cluster: u32,
+    pub queue_depth: u64,
+    pub completed: u64,
+    pub batches: u64,
+    pub stolen: u64,
+    pub affine_routed: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub bytes_to_device: u64,
+}
+
 /// Thread-safe scheduler counters, shared between the submit path and
 /// every pool worker.  Read with [`SchedCounters::snapshot`].
 #[derive(Debug, Default)]
@@ -105,9 +142,32 @@ pub struct SchedCounters {
     /// Host->device bytes elided (cache hits + alloc-only output
     /// staging) across all workers' engines.
     pub bytes_copy_elided: AtomicU64,
+    /// Jobs taken from a peer cluster's run queue by an idle worker.
+    pub stolen: AtomicU64,
+    /// Jobs placed by operand affinity (warm cluster or hash-home).
+    pub affine_routed: AtomicU64,
+    /// Jobs routed to the big-shape lane because their staged footprint
+    /// exceeds a small cluster's slice.
+    pub big_shape_routed: AtomicU64,
+    /// One [`ClusterCounters`] per pool cluster (empty under
+    /// `Default` — tests that never ask for per-cluster data).
+    pub per_cluster: Vec<ClusterCounters>,
 }
 
 impl SchedCounters {
+    /// Counters for a pool of `clusters` (per-cluster sets included).
+    pub fn new(clusters: usize) -> SchedCounters {
+        SchedCounters {
+            per_cluster: (0..clusters).map(|_| ClusterCounters::default()).collect(),
+            ..SchedCounters::default()
+        }
+    }
+
+    /// The per-cluster counter set, when the pool size covers `cluster`.
+    pub fn cluster(&self, cluster: u32) -> Option<&ClusterCounters> {
+        self.per_cluster.get(cluster as usize)
+    }
+
     /// Record the queue depth seen after a successful push.
     pub fn note_queue_depth(&self, depth: u64) {
         self.queue_depth_peak.fetch_max(depth, Ordering::Relaxed);
@@ -142,13 +202,33 @@ impl SchedCounters {
             cache_evictions: ld(&self.cache_evictions),
             bytes_to_device: ld(&self.bytes_to_device),
             bytes_copy_elided: ld(&self.bytes_copy_elided),
+            stolen: ld(&self.stolen),
+            affine_routed: ld(&self.affine_routed),
+            big_shape_routed: ld(&self.big_shape_routed),
+            clusters: self
+                .per_cluster
+                .iter()
+                .enumerate()
+                .map(|(i, c)| ClusterMetrics {
+                    cluster: i as u32,
+                    queue_depth: 0, // live depth filled in by the scheduler
+                    completed: ld(&c.completed),
+                    batches: ld(&c.batches),
+                    stolen: ld(&c.stolen),
+                    affine_routed: ld(&c.affine_routed),
+                    cache_hits: ld(&c.cache_hits),
+                    cache_misses: ld(&c.cache_misses),
+                    bytes_to_device: ld(&c.bytes_to_device),
+                })
+                .collect(),
         }
     }
 
     /// Fold the per-engine metric growth from one batch into the shared
-    /// counters (workers call this after each batch with the delta
-    /// between two [`Metrics`] snapshots).
-    pub fn absorb_engine_delta(&self, before: &Metrics, after: &Metrics) {
+    /// counters — aggregate and `cluster`'s own set (workers call this
+    /// after each batch with the delta between two [`Metrics`]
+    /// snapshots).
+    pub fn absorb_engine_delta(&self, cluster: u32, before: &Metrics, after: &Metrics) {
         let add = |c: &AtomicU64, b: u64, a: u64| {
             c.fetch_add(a.saturating_sub(b), Ordering::Relaxed);
         };
@@ -161,11 +241,16 @@ impl SchedCounters {
             before.bytes_copy_elided,
             after.bytes_copy_elided,
         );
+        if let Some(pc) = self.cluster(cluster) {
+            add(&pc.cache_hits, before.cache_hits, after.cache_hits);
+            add(&pc.cache_misses, before.cache_misses, after.cache_misses);
+            add(&pc.bytes_to_device, before.bytes_to_device, after.bytes_to_device);
+        }
     }
 }
 
 /// Plain-value snapshot of [`SchedCounters`].
-#[derive(Debug, Default, Clone, Copy)]
+#[derive(Debug, Default, Clone)]
 pub struct SchedMetrics {
     pub submitted: u64,
     pub rejected: u64,
@@ -183,6 +268,12 @@ pub struct SchedMetrics {
     pub cache_evictions: u64,
     pub bytes_to_device: u64,
     pub bytes_copy_elided: u64,
+    pub stolen: u64,
+    pub affine_routed: u64,
+    pub big_shape_routed: u64,
+    /// Per-cluster breakdown, indexed by cluster id (empty when the
+    /// counters were built with `Default` instead of `new`).
+    pub clusters: Vec<ClusterMetrics>,
 }
 
 impl SchedMetrics {
@@ -192,7 +283,8 @@ impl SchedMetrics {
             "submitted={} completed={} rejected={} failed={} cancelled={} \
              batches={} batched_jobs={} pipelined={} overlap={}us \
              queue_peak={} service_ewma={}us cache_hits={} cache_misses={} \
-             cache_evictions={} to_dev={}B elided={}B",
+             cache_evictions={} to_dev={}B elided={}B stolen={} affine={} \
+             big_shape={}",
             self.submitted,
             self.completed,
             self.rejected,
@@ -209,6 +301,9 @@ impl SchedMetrics {
             self.cache_evictions,
             self.bytes_to_device,
             self.bytes_copy_elided,
+            self.stolen,
+            self.affine_routed,
+            self.big_shape_routed,
         )
     }
 }
@@ -250,7 +345,7 @@ mod tests {
 
     #[test]
     fn absorb_engine_delta_accumulates_growth_only() {
-        let c = SchedCounters::default();
+        let c = SchedCounters::new(2);
         let mut before = Metrics::new();
         before.cache_hits = 2;
         before.bytes_to_device = 100;
@@ -259,14 +354,38 @@ mod tests {
         after.cache_misses = 1;
         after.bytes_to_device = 164;
         after.bytes_copy_elided = 32;
-        c.absorb_engine_delta(&before, &after);
-        c.absorb_engine_delta(&after, &after); // zero delta is a no-op
+        c.absorb_engine_delta(1, &before, &after);
+        c.absorb_engine_delta(1, &after, &after); // zero delta is a no-op
         let s = c.snapshot();
         assert_eq!(s.cache_hits, 3);
         assert_eq!(s.cache_misses, 1);
         assert_eq!(s.bytes_to_device, 64);
         assert_eq!(s.bytes_copy_elided, 32);
         assert!(s.summary().contains("cache_hits=3"));
+        // the delta also lands on the owning cluster's set, and only there
+        assert_eq!(s.clusters.len(), 2);
+        assert_eq!(s.clusters[1].cache_hits, 3);
+        assert_eq!(s.clusters[1].bytes_to_device, 64);
+        assert_eq!(s.clusters[0].cache_hits, 0);
+        // default-built counters (no per-cluster sets) stay safe
+        let d = SchedCounters::default();
+        d.absorb_engine_delta(7, &before, &after);
+        assert!(d.snapshot().clusters.is_empty());
+    }
+
+    #[test]
+    fn per_cluster_counters_snapshot_independently() {
+        let c = SchedCounters::new(3);
+        c.cluster(0).unwrap().completed.fetch_add(2, Ordering::Relaxed);
+        c.cluster(2).unwrap().stolen.fetch_add(1, Ordering::Relaxed);
+        c.cluster(2).unwrap().affine_routed.fetch_add(4, Ordering::Relaxed);
+        assert!(c.cluster(3).is_none(), "out-of-pool cluster id");
+        let s = c.snapshot();
+        assert_eq!(s.clusters[0].completed, 2);
+        assert_eq!(s.clusters[1].completed, 0);
+        assert_eq!(s.clusters[2].stolen, 1);
+        assert_eq!(s.clusters[2].affine_routed, 4);
+        assert_eq!(s.clusters[2].cluster, 2);
     }
 
     #[test]

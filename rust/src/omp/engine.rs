@@ -59,6 +59,12 @@ impl MappedBuf {
         self.cache_key.is_some()
     }
 
+    /// Cache identity of the backing buffer, when cache-owned — lets the
+    /// scheduler tag resident operands for its affinity directory.
+    pub fn cache_key(&self) -> Option<CacheKey> {
+        self.cache_key
+    }
+
     /// Device-visible address (dev-DRAM or IOVA).
     pub fn device_addr(&self) -> u64 {
         match (&self.backing, &self.mapping) {

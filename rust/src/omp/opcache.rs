@@ -63,6 +63,11 @@ struct Entry {
     pins: u32,
     /// Monotone LRU stamp (bumped on every hit / insert).
     stamp: u64,
+    /// Placement tag: the scheduler's affinity directory keys this entry
+    /// by a request-level operand id (see `crate::sched::affinity`), so
+    /// an eviction can be reported back and the cluster drops out of the
+    /// directory's residency set for that operand.
+    tag: Option<u64>,
 }
 
 /// Point-in-time cache statistics (accumulated since construction).
@@ -84,6 +89,9 @@ pub struct OperandCache {
     max_entries: usize,
     clock: u64,
     stats: CacheStats,
+    /// Placement tags of entries evicted since the last drain — the
+    /// residency-change feed for the scheduler's affinity directory.
+    evicted_tags: Vec<u64>,
 }
 
 impl OperandCache {
@@ -94,6 +102,7 @@ impl OperandCache {
             max_entries,
             clock: 0,
             stats: CacheStats::default(),
+            evicted_tags: Vec::new(),
         }
     }
 
@@ -161,9 +170,27 @@ impl OperandCache {
             return InsertOutcome { cached: false, evicted: Vec::new() };
         }
         self.clock += 1;
-        self.entries.push(Entry { key, alloc, pins: 1, stamp: self.clock });
+        self.entries.push(Entry { key, alloc, pins: 1, stamp: self.clock, tag: None });
         self.stats.insertions += 1;
         InsertOutcome { cached: true, evicted: self.trim() }
+    }
+
+    /// Attach a placement tag to a resident entry (no-op when the key is
+    /// absent).  The scheduler's worker tags the entries backing tracked
+    /// operands right after staging; when LRU/OOM eviction later drops a
+    /// tagged entry, the tag lands in the residency-change feed
+    /// ([`OperandCache::take_evicted_tags`]).
+    pub fn set_tag(&mut self, key: &CacheKey, tag: u64) {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.key == *key) {
+            e.tag = Some(tag);
+        }
+    }
+
+    /// Drain the placement tags of entries evicted since the last call —
+    /// the affinity directory clears those (cluster, operand) residency
+    /// bits so routing stops steering requests at a cold cluster.
+    pub fn take_evicted_tags(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.evicted_tags)
     }
 
     /// Drop one pin (a cached `MappedBuf` was unmapped).  The entry stays
@@ -226,7 +253,11 @@ impl OperandCache {
             .min_by_key(|(_, e)| e.stamp)
             .map(|(i, _)| i)?;
         self.stats.evictions += 1;
-        Some(self.entries.remove(idx).alloc)
+        let entry = self.entries.remove(idx);
+        if let Some(tag) = entry.tag {
+            self.evicted_tags.push(tag);
+        }
+        Some(entry.alloc)
     }
 
     /// Test/debug invariant: pins non-negative is structural; check no
@@ -347,6 +378,29 @@ mod tests {
         assert!(!out.cached && out.evicted.is_empty());
         assert!(c.peek(&key(1)).is_none());
         assert_eq!(c.stats().insertions, 0);
+    }
+
+    #[test]
+    fn evicted_tags_feed_residency_changes() {
+        let mut c = OperandCache::new(128, 8); // room for two 64 B entries
+        assert!(c.insert(key(1), alloc(0x100, 64)).cached);
+        c.set_tag(&key(1), 0xAA);
+        c.set_tag(&key(9), 0xFF); // absent key: no-op
+        assert!(c.insert(key(2), alloc(0x200, 64)).cached); // untagged
+        assert!(c.release(&key(1)).is_empty());
+        assert!(c.release(&key(2)).is_empty());
+
+        // third entry evicts LRU (entry 1, tagged): its tag is reported
+        let out = c.insert(key(3), alloc(0x300, 64));
+        assert_eq!(out.evicted.len(), 1);
+        assert_eq!(c.take_evicted_tags(), vec![0xAA]);
+        assert!(c.take_evicted_tags().is_empty(), "drain clears the feed");
+
+        // untagged evictions report nothing
+        let _ = c.release(&key(3));
+        let out = c.insert(key(4), alloc(0x400, 64));
+        assert_eq!(out.evicted.len(), 1); // entry 2 (untagged LRU)
+        assert!(c.take_evicted_tags().is_empty());
     }
 
     #[test]

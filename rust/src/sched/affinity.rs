@@ -1,0 +1,165 @@
+//! Cache-affinity directory: which clusters hold which operands.
+//!
+//! The operand cache (`crate::omp::opcache`) made data movement the
+//! dominant serving cost lever, but it is *per cluster*: with random
+//! placement a pool of K clusters pays K cold copies of a shared weight
+//! matrix before every cache is warm.  The directory closes that gap at
+//! the placement layer — it maps request-level **operand keys** to the
+//! set of clusters whose caches hold the operand, so the router can
+//! steer a request at a warm cluster and the pool stages each shared
+//! operand roughly once.
+//!
+//! Keys are request-level identities (shape + seed of the shared
+//! operand), hashed with the same FNV-1a the operand cache uses for
+//! content keys — cheap to compute at submit time, before any operand
+//! bytes exist.  Residency is maintained by the workers: after staging,
+//! a worker tags the cache entry backing a tracked operand
+//! ([`crate::omp::opcache::OperandCache::set_tag`]) and marks the
+//! (key, cluster) bit here; when the entry is later evicted, the tag
+//! comes back through the eviction feed and the bit clears.  The
+//! directory is therefore a *hint*: a stale resident bit costs one cache
+//! miss on the warm-looking cluster, never wrong numerics.
+//!
+//! Before anything is resident, [`AffinityDirectory::place`] falls back
+//! to a deterministic hash-home (`key % eligible`), so a same-operand
+//! request stream routes to one cluster from the very first request —
+//! the property the placement tests pin.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::omp::opcache::fnv1a;
+
+/// Request-level identity of a shared operand: op tag + shape + seed,
+/// hashed with the operand cache's FNV-1a.  Everything the router needs
+/// to agree with itself across requests, computable without
+/// synthesizing a single operand byte.
+pub fn operand_key(op: &str, n: usize, seed: u64) -> u64 {
+    let mut bytes = Vec::with_capacity(op.len() + 16);
+    bytes.extend_from_slice(op.as_bytes());
+    bytes.extend_from_slice(&(n as u64).to_le_bytes());
+    bytes.extend_from_slice(&seed.to_le_bytes());
+    fnv1a(&bytes)
+}
+
+/// The directory: operand key -> residency bitmask over pool clusters
+/// (the config caps pools at 64, so one u64 mask suffices).
+#[derive(Debug, Default)]
+pub struct AffinityDirectory {
+    resident: Mutex<HashMap<u64, u64>>,
+}
+
+impl AffinityDirectory {
+    pub fn new() -> AffinityDirectory {
+        AffinityDirectory::default()
+    }
+
+    /// Mark `key` resident in `cluster`'s cache (worker, after staging).
+    pub fn note_resident(&self, key: u64, cluster: u32) {
+        let mut map = self.resident.lock().expect("affinity lock");
+        *map.entry(key).or_insert(0) |= 1u64 << (cluster % 64);
+    }
+
+    /// Clear `key`'s residency in `cluster` (worker, after draining the
+    /// cache's eviction feed).  Removes empty entries so the directory
+    /// stays bounded by what is actually resident.
+    pub fn note_evicted(&self, key: u64, cluster: u32) {
+        let mut map = self.resident.lock().expect("affinity lock");
+        if let Some(mask) = map.get_mut(&key) {
+            *mask &= !(1u64 << (cluster % 64));
+            if *mask == 0 {
+                map.remove(&key);
+            }
+        }
+    }
+
+    /// Pick the cluster for `key` among `eligible` (sorted cluster ids):
+    /// the lowest-id cluster with the operand resident, else the
+    /// deterministic hash-home.  Returns `(cluster, warm)`.
+    pub fn place(&self, key: u64, eligible: &[u32]) -> (u32, bool) {
+        debug_assert!(!eligible.is_empty());
+        let mask = *self
+            .resident
+            .lock()
+            .expect("affinity lock")
+            .get(&key)
+            .unwrap_or(&0);
+        for &c in eligible {
+            if mask & (1u64 << (c % 64)) != 0 {
+                return (c, true);
+            }
+        }
+        (eligible[(key % eligible.len() as u64) as usize], false)
+    }
+
+    /// Operands currently tracked as resident somewhere.
+    pub fn len(&self) -> usize {
+        self.resident.lock().expect("affinity lock").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn operand_keys_separate_op_shape_and_seed() {
+        assert_eq!(operand_key("gemm_b", 64, 42), operand_key("gemm_b", 64, 42));
+        assert_ne!(operand_key("gemm_b", 64, 42), operand_key("gemm_b", 64, 43));
+        assert_ne!(operand_key("gemm_b", 64, 42), operand_key("gemm_b", 128, 42));
+        assert_ne!(operand_key("gemm_b", 64, 42), operand_key("gemm_a", 64, 42));
+    }
+
+    #[test]
+    fn cold_placement_is_a_deterministic_home() {
+        let d = AffinityDirectory::new();
+        let eligible = [0u32, 1, 2, 3];
+        let (home, warm) = d.place(operand_key("gemm_b", 64, 42), &eligible);
+        assert!(!warm);
+        // same key, same home — every time
+        for _ in 0..8 {
+            assert_eq!(d.place(operand_key("gemm_b", 64, 42), &eligible).0, home);
+        }
+        // different keys spread across homes (not all on one cluster)
+        let homes: std::collections::HashSet<u32> = (0..32)
+            .map(|s| d.place(operand_key("gemm_b", 64, s), &eligible).0)
+            .collect();
+        assert!(homes.len() > 1, "hash-home degenerated to one cluster");
+    }
+
+    #[test]
+    fn residency_overrides_the_home_until_eviction() {
+        let d = AffinityDirectory::new();
+        let key = operand_key("gemm_b", 64, 42);
+        let eligible = [0u32, 1, 2, 3];
+        let (home, _) = d.place(key, &eligible);
+        // a steal landed the operand on a different cluster's cache
+        let other = eligible.iter().copied().find(|&c| c != home).unwrap();
+        d.note_resident(key, other);
+        assert_eq!(d.place(key, &eligible), (other, true));
+        assert_eq!(d.len(), 1);
+
+        // eviction clears the bit and placement falls back to the home
+        d.note_evicted(key, other);
+        assert_eq!(d.place(key, &eligible), (home, false));
+        assert!(d.is_empty(), "empty masks are pruned");
+        // evicting an unknown key is a no-op
+        d.note_evicted(0xDEAD, 0);
+    }
+
+    #[test]
+    fn eligible_set_filters_residency() {
+        let d = AffinityDirectory::new();
+        let key = operand_key("gemm_b", 256, 7);
+        d.note_resident(key, 0); // resident on the big-shape lane
+        // a small job must not route to an ineligible cluster even if the
+        // operand is resident there
+        let (c, warm) = d.place(key, &[1, 2, 3]);
+        assert!(!warm);
+        assert!(c != 0);
+    }
+}

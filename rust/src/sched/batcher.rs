@@ -31,6 +31,22 @@ pub struct BatchKey {
     pub mode: DispatchMode,
 }
 
+/// Where the batcher peels coalescible jobs from: the plain global
+/// queue (library users, pre-placement tests), or a cluster's view of
+/// the placement router (`crate::sched::placement` — own run queue
+/// after routing everything queued globally, never a peer's).
+pub trait JobSource {
+    /// Remove up to `max` queued jobs whose batch key equals `key`,
+    /// priority order, FIFO within a lane.  Never blocks.
+    fn take_matching(&self, key: &BatchKey, max: usize) -> Vec<Job>;
+}
+
+impl JobSource for WorkQueue {
+    fn take_matching(&self, key: &BatchKey, max: usize) -> Vec<Job> {
+        self.try_pop_matching(key, max)
+    }
+}
+
 /// The coalescing policy (cheap to clone; one per scheduler, shared by
 /// value with every worker).
 #[derive(Debug, Clone)]
@@ -53,11 +69,16 @@ impl Batcher {
         Batcher { window: Duration::ZERO, max: 1 }
     }
 
-    /// Grow a batch around `first`: peel same-key jobs off the queue up
+    /// Grow a batch around `first`: peel same-key jobs off the source up
     /// to `min(self.max, cap)` members, lingering at most `self.window`.
     /// `cap` lets the caller bound the batch by device-DRAM capacity.
     /// Unbatchable jobs (no key) return alone.
-    pub fn collect(&self, queue: &WorkQueue, first: Job, cap: usize) -> Vec<Job> {
+    pub fn collect<S: JobSource + ?Sized>(
+        &self,
+        source: &S,
+        first: Job,
+        cap: usize,
+    ) -> Vec<Job> {
         let mut batch = vec![first];
         let key = match batch[0].batch_key() {
             Some(k) => k,
@@ -69,7 +90,7 @@ impl Batcher {
         }
         let deadline = Instant::now() + self.window;
         loop {
-            batch.extend(queue.try_pop_matching(&key, max - batch.len()));
+            batch.extend(source.take_matching(&key, max - batch.len()));
             if batch.len() >= max {
                 break;
             }

@@ -10,10 +10,11 @@
 //!
 //! | piece | file | role |
 //! |---|---|---|
-//! | device pool | [`pool`] | boots N simulated PMCA clusters, each with its own mailbox and an even, page-aligned slice of the device-DRAM partition |
+//! | device pool | [`pool`] | boots N simulated PMCA clusters, each with its own mailbox and a page-aligned slice of the device-DRAM partition (even, or heterogeneous under the big-shape lane — see [`pool::CapacityModel`]) |
 //! | work queue | [`queue`] | bounded, three priority classes, rejects with a retry-after hint when full (backpressure) |
-//! | batcher | [`batcher`] | coalesces same-shape GEMM requests into ONE fork-join launch, amortizing the paper's offload overhead below the Figure-3 crossover |
-//! | workers | [`worker`] | one thread per cluster: pull jobs, consult the dispatch policy, launch, poll the cluster mailbox for completion, reply |
+//! | placement router | [`placement`] | routes queued jobs into per-cluster run queues by operand affinity ([`affinity`]), shape and round-robin; idle workers steal from the most-loaded peer |
+//! | batcher | [`batcher`] | coalesces same-shape GEMM/GEMV and same-length level-1 requests into ONE fork-join launch, amortizing the paper's offload overhead below the Figure-3 crossover |
+//! | workers | [`worker`] | one thread per cluster: pull jobs from the router, consult the dispatch policy, launch, poll the cluster mailbox for completion, reply |
 //!
 //! [`Scheduler`] is the facade: `submit` enqueues a job and hands back a
 //! [`Submission`] (result receiver + cancel token); connection handlers
@@ -28,16 +29,28 @@
 //! cluster session carries a device-resident **operand cache**
 //! ([`crate::omp::opcache`]) that turns re-maps of identical bytes into
 //! refcount bumps, and the worker **software-pipelines** coalesced gemm
-//! launches (stage batch k+1's map-in while batch k computes) through
-//! the `gemm_batch` stage/execute/finish split — see [`worker`].
-//! GEMM and GEMV requests both coalesce (same [`BatchKey`] => one
-//! fork-join launch).
+//! *and gemv* launches (stage batch k+1's map-in while batch k
+//! computes) through the stage/execute/finish splits — see [`worker`].
+//! GEMM, GEMV and level-1 (axpy/dot) requests all coalesce (same
+//! [`BatchKey`] => one fork-join launch).
+//!
+//! Between the queue and the workers sits the **placement router**
+//! ([`placement`], knobs under `[sched.placement]`): jobs are routed
+//! into per-cluster run queues by operand affinity (same-`b_seed`
+//! requests chase the cache-warm cluster, via the [`affinity`]
+//! directory fed by opcache residency changes), by shape (jobs too big
+//! for a small DRAM slice take the big-shape lane that heterogeneous
+//! slicing carves out — see [`pool::CapacityModel`]), and round-robin
+//! otherwise; idle workers steal from the most-loaded peer.  Placement
+//! changes only *where* a job runs, never its numerics.
 //!
 //! Each worker owns a full vertical slice (engine + artifact registry +
 //! policy) built *on its own thread* — nothing session-internal crosses
 //! threads, only [`Job`]s and their reply channels.
 
+pub mod affinity;
 pub mod batcher;
+pub mod placement;
 pub mod pool;
 pub mod queue;
 pub mod worker;
@@ -52,8 +65,9 @@ use crate::config::{DispatchMode, PlatformConfig};
 use crate::error::{Error, Result};
 use crate::metrics::{SchedCounters, SchedMetrics};
 
-pub use batcher::{BatchKey, Batcher};
-pub use pool::{ClusterSpec, DevicePool};
+pub use batcher::{BatchKey, Batcher, JobSource};
+pub use placement::PlacementRouter;
+pub use pool::{CapacityModel, ClusterSpec, DevicePool};
 pub use queue::{PushError, WorkQueue};
 
 /// Priority class of a queued job (three lanes; higher pops first).
@@ -126,11 +140,43 @@ pub struct GemvRequest {
     pub seed: u64,
 }
 
+/// Which level-1 kernel a [`Level1Request`] runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level1Op {
+    Axpy,
+    Dot,
+}
+
+impl Level1Op {
+    /// Batch-key / serve-protocol name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Level1Op::Axpy => "axpy",
+            Level1Op::Dot => "dot",
+        }
+    }
+}
+
+/// One level-1 serving request over length-n vectors synthesized from a
+/// deterministic seed (x then y drawn from the request stream).
+/// Same-length requests of the same op coalesce into one fork-join
+/// launch — the last device path that used to pay it per call.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Level1Request {
+    pub op: Level1Op,
+    pub n: usize,
+    pub mode: DispatchMode,
+    pub seed: u64,
+    /// axpy scale (ignored by dot).
+    pub alpha: f64,
+}
+
 /// What a job asks the pool to do.
 #[derive(Debug)]
 pub enum JobPayload {
     Gemm(GemmRequest),
     Gemv(GemvRequest),
+    Level1(Level1Request),
     /// Drain barrier: the worker that pops this parks until the sender
     /// releases (or drops) the channel.  Used by tests and benches to
     /// hold a cluster busy deterministically — e.g. to fill the queue
@@ -181,6 +227,12 @@ impl Job {
             }
             JobPayload::Gemv(r) => {
                 Some(BatchKey { op: "gemv", dims: (r.m, r.n, 0), mode: r.mode })
+            }
+            // alpha is deliberately NOT part of the key: the device path
+            // stages alpha per member, exactly like gemm members keep
+            // their own operands
+            JobPayload::Level1(r) => {
+                Some(BatchKey { op: r.op.name(), dims: (r.n, 0, 0), mode: r.mode })
             }
             JobPayload::Fence(_) => None,
         }
@@ -267,6 +319,7 @@ impl std::fmt::Display for SubmitError {
 /// queue, lets workers drain what's left, and joins them.
 pub struct Scheduler {
     queue: Arc<WorkQueue>,
+    router: Arc<PlacementRouter>,
     counters: Arc<SchedCounters>,
     workers: Mutex<Vec<JoinHandle<()>>>,
     pool_size: usize,
@@ -277,7 +330,7 @@ impl std::fmt::Debug for Scheduler {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Scheduler")
             .field("pool_size", &self.pool_size)
-            .field("queue_depth", &self.queue.depth())
+            .field("queue_depth", &self.queue_depth())
             .finish()
     }
 }
@@ -291,8 +344,18 @@ impl Scheduler {
         cfg.validate()?;
         let sc = &cfg.sched;
         let pool = DevicePool::partition(cfg, sc.pool_clusters)?;
+        let capacity = pool.capacity().clone();
+        // The router sizes shapes against the same tile geometry the
+        // staging path pads with — read it once from the manifest.
+        let manifest = crate::runtime::Manifest::load(artifacts)?;
+        let tile = (manifest.tile_m, manifest.tile_n, manifest.tile_k);
         let queue = Arc::new(WorkQueue::new(sc.queue_capacity as usize));
-        let counters = Arc::new(SchedCounters::default());
+        let counters = Arc::new(SchedCounters::new(sc.pool_clusters as usize));
+        let router = Arc::new(PlacementRouter::new(
+            capacity,
+            tile,
+            sc.placement.clone(),
+        ));
         let batcher = Batcher::new(
             std::time::Duration::from_millis(sc.batch_window_ms),
             sc.batch_max as usize,
@@ -305,6 +368,7 @@ impl Scheduler {
                 spec,
                 artifacts.to_path_buf(),
                 Arc::clone(&queue),
+                Arc::clone(&router),
                 Arc::clone(&counters),
                 batcher.clone(),
                 ready_tx.clone(),
@@ -326,6 +390,7 @@ impl Scheduler {
         }
         if let Some(e) = boot_err {
             queue.close();
+            router.close();
             for h in handles {
                 let _ = h.join();
             }
@@ -334,6 +399,7 @@ impl Scheduler {
 
         Ok(Scheduler {
             queue,
+            router,
             counters,
             workers: Mutex::new(handles),
             pool_size: sc.pool_clusters as usize,
@@ -343,12 +409,16 @@ impl Scheduler {
 
     /// Enqueue a job; returns a [`Submission`] (result receiver + cancel
     /// token), or a backpressure rejection when the bounded queue is
-    /// full.
+    /// full.  The bound covers both stages of the ingress — globally
+    /// queued jobs AND jobs already routed into cluster run queues but
+    /// not yet claimed — so routing cannot silently widen the backlog
+    /// the backpressure contract promises to cap.
     pub fn submit(
         &self,
         priority: Priority,
         payload: JobPayload,
     ) -> std::result::Result<Submission, SubmitError> {
+        let routed = self.router.depth();
         let (tx, rx) = mpsc::channel();
         let cancel = CancelToken::default();
         let job = Job {
@@ -359,10 +429,14 @@ impl Scheduler {
             cancel: cancel.clone(),
             enqueued_at: Instant::now(),
         };
-        match self.queue.push(job) {
+        // the routed count rides into the queue's own locked bound, so
+        // concurrent submitters serialize instead of racing a separate
+        // check-then-push past the capacity
+        match self.queue.push_with_reserved(job, routed) {
             Ok(depth) => {
                 self.counters.submitted.fetch_add(1, Ordering::Relaxed);
-                self.counters.note_queue_depth(depth as u64);
+                self.counters.note_queue_depth((depth + routed) as u64);
+                self.router.kick();
                 Ok(Submission { result: rx, cancel })
             }
             Err(PushError::Full { depth }) => {
@@ -380,19 +454,30 @@ impl Scheduler {
     /// needs to drain the current backlog, from the smoothed per-job
     /// service time.  Clamped to [1 ms, 10 s].
     fn retry_hint(&self, depth: usize) -> u64 {
-        let per_job_us = self.counters.snapshot().service_us_ewma.max(1_000);
+        // single atomic load — this runs on the reject path, where a full
+        // counters snapshot (with its per-cluster Vec) is waste
+        let per_job_us =
+            self.counters.service_us_ewma.load(Ordering::Relaxed).max(1_000);
         let us = depth as u64 * per_job_us / self.pool_size.max(1) as u64;
         (us / 1_000).clamp(1, 10_000)
     }
 
-    /// Point-in-time scheduler counters.
+    /// Point-in-time scheduler counters, with each cluster's live
+    /// run-queue depth filled in from the router.
     pub fn metrics(&self) -> SchedMetrics {
-        self.counters.snapshot()
+        let mut m = self.counters.snapshot();
+        for (i, d) in self.router.depths().into_iter().enumerate() {
+            if let Some(cm) = m.clusters.get_mut(i) {
+                cm.queue_depth = d;
+            }
+        }
+        m
     }
 
-    /// Jobs currently queued (not yet claimed by a worker).
+    /// Jobs currently queued (globally or routed into a cluster run
+    /// queue) but not yet claimed by a worker.
     pub fn queue_depth(&self) -> usize {
-        self.queue.depth()
+        self.queue.depth() + self.router.depth()
     }
 
     /// Clusters in the device pool.
@@ -400,10 +485,16 @@ impl Scheduler {
         self.pool_size
     }
 
+    /// The pool's capacity model (slice sizes, big-shape lane, tiles).
+    pub fn capacity(&self) -> &CapacityModel {
+        self.router.capacity()
+    }
+
     /// Stop accepting work, let workers drain the queue, join them.
     /// Idempotent; also runs on drop.
     pub fn shutdown(&self) {
         self.queue.close();
+        self.router.close();
         let handles: Vec<_> = self.workers.lock().expect("workers lock").drain(..).collect();
         for h in handles {
             let _ = h.join();
@@ -486,6 +577,34 @@ mod tests {
             r.b_seed = Some(42);
         }
         assert_eq!(with_b.batch_key(), gemm(64, 4).batch_key());
+
+        // level-1 keys coalesce on (op, n, mode); alpha stays per member
+        let l1 = |op, n, seed, alpha| Job {
+            id: seed,
+            priority: Priority::Normal,
+            payload: JobPayload::Level1(Level1Request {
+                op,
+                n,
+                mode: DispatchMode::DeviceOnly,
+                seed,
+                alpha,
+            }),
+            reply: tx.clone(),
+            cancel: CancelToken::default(),
+            enqueued_at: Instant::now(),
+        };
+        assert_eq!(
+            l1(Level1Op::Axpy, 4096, 1, 1.0).batch_key(),
+            l1(Level1Op::Axpy, 4096, 2, 2.5).batch_key()
+        );
+        assert_ne!(
+            l1(Level1Op::Axpy, 4096, 1, 1.0).batch_key(),
+            l1(Level1Op::Dot, 4096, 1, 1.0).batch_key()
+        );
+        assert_ne!(
+            l1(Level1Op::Dot, 4096, 1, 1.0).batch_key(),
+            l1(Level1Op::Dot, 2048, 1, 1.0).batch_key()
+        );
     }
 
     #[test]

@@ -1,0 +1,707 @@
+//! Locality-aware placement router with per-cluster run queues, work
+//! stealing and a big-shape lane.
+//!
+//! PR 1's pool let *any* worker take *any* job; PR 2's operand cache
+//! then made placement the dominant cost lever — a pool of K clusters
+//! pays K cold copies of a shared operand under random placement, and
+//! even DRAM slicing caps the largest device-stageable GEMM at a
+//! fraction of the unpartitioned range.  The router is the explicit
+//! placement/capacity layer between the bounded ingress queue and the
+//! workers (the HERO/ESP lesson: heterogeneous pools need one):
+//!
+//! * **Per-cluster run queues**: jobs popped from the global
+//!   [`WorkQueue`] are routed into one priority deque per cluster; each
+//!   worker serves its own deque.  The global queue stays the single
+//!   bounded ingress (backpressure accounts queue + deques together).
+//! * **Cache affinity** (`[sched.placement] affinity`): requests
+//!   sharing an operand (same `b_seed`) carry an operand key (same
+//!   FNV-1a as the operand cache, see [`super::affinity`]); the
+//!   directory steers them at the cluster whose cache holds the
+//!   operand, with a deterministic hash-home before anything is
+//!   resident — so a shared weight matrix is staged ~once per pool
+//!   instead of once per cluster.
+//! * **Shape-aware lanes** (`big_shape_frac`): under heterogeneous
+//!   slicing, jobs whose staged footprint exceeds a small cluster's
+//!   slice route to the big-shape lane (cluster 0), and small jobs
+//!   avoid it — no small request ever sits behind a large launch, and
+//!   the pool regains the unpartitioned large-GEMM range on one lane.
+//! * **Work stealing** (`steal`): an idle worker takes queued jobs from
+//!   the most-loaded peer — non-affine jobs first (they lose nothing),
+//!   then affine ones (a steal costs one cache miss, never wrong
+//!   numerics).  Fences are never stolen, and a thief never takes a job
+//!   it cannot stage.
+//!
+//! Routing never changes numerics — only *where* a job runs — which is
+//! what the steal/affinity checksum tests pin.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::config::PlacementConfig;
+use crate::metrics::SchedCounters;
+
+use super::affinity::{operand_key, AffinityDirectory};
+use super::batcher::BatchKey;
+use super::pool::CapacityModel;
+use super::queue::WorkQueue;
+use super::{Job, JobPayload};
+
+/// How long a worker parks between re-polls of the global queue when no
+/// kick arrives (a safety net — `kick` wakes it immediately).
+const PARK: Duration = Duration::from_millis(10);
+
+/// A routed job waiting in a cluster's run queue.
+#[derive(Debug)]
+struct Routed {
+    job: Job,
+    /// Placed by operand affinity (stolen last).
+    affine: bool,
+    /// May another cluster's worker take it?  (Fences: no.)
+    steal_ok: bool,
+    /// Estimated staged footprint, bytes (steal capacity check).
+    est_bytes: u64,
+}
+
+/// Per-cluster run queue: one FIFO per priority class, mirroring the
+/// global queue's lanes so routing never inverts priorities.
+#[derive(Debug, Default)]
+struct ClusterLanes {
+    lanes: [VecDeque<Routed>; 3],
+}
+
+impl ClusterLanes {
+    fn depth(&self) -> usize {
+        self.lanes.iter().map(VecDeque::len).sum()
+    }
+}
+
+#[derive(Debug)]
+struct RouterState {
+    clusters: Vec<ClusterLanes>,
+    /// Workers that have observed the closed+drained state and exited.
+    /// A live worker always drains its own deque before exiting, so
+    /// shutdown adoption only ever takes jobs whose owner is gone.
+    exited: Vec<bool>,
+}
+
+/// The placement router (one per scheduler, shared by every worker and
+/// the submit path).
+#[derive(Debug)]
+pub struct PlacementRouter {
+    knobs: PlacementConfig,
+    capacity: CapacityModel,
+    /// Manifest tile geometry (m, n, k) — pads shape estimates exactly
+    /// like the staging path does.
+    tile: (usize, usize, usize),
+    state: Mutex<RouterState>,
+    arrivals: Condvar,
+    directory: AffinityDirectory,
+    /// Jobs routed into cluster deques and not yet claimed, maintained
+    /// at every push/pop so the submit path's backpressure check reads
+    /// one atomic instead of taking the router lock.
+    routed: AtomicUsize,
+    /// Round-robin cursor for non-affine small jobs.
+    rr: AtomicUsize,
+    /// Separate cursor for fences so capacity tests stay deterministic:
+    /// the first fence always lands on cluster 0.
+    fence_rr: AtomicUsize,
+}
+
+impl PlacementRouter {
+    pub fn new(
+        capacity: CapacityModel,
+        tile: (usize, usize, usize),
+        knobs: PlacementConfig,
+    ) -> PlacementRouter {
+        let clusters = capacity.pool_clusters();
+        PlacementRouter {
+            knobs,
+            capacity,
+            tile,
+            state: Mutex::new(RouterState {
+                clusters: (0..clusters).map(|_| ClusterLanes::default()).collect(),
+                exited: vec![false; clusters],
+            }),
+            arrivals: Condvar::new(),
+            directory: AffinityDirectory::new(),
+            routed: AtomicUsize::new(0),
+            rr: AtomicUsize::new(0),
+            fence_rr: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn affinity_enabled(&self) -> bool {
+        self.knobs.affinity
+    }
+
+    pub fn capacity(&self) -> &CapacityModel {
+        &self.capacity
+    }
+
+    /// Mark an operand resident in a cluster's cache (worker, after
+    /// staging a tracked operand).
+    pub fn note_resident(&self, key: u64, cluster: u32) {
+        self.directory.note_resident(key, cluster);
+    }
+
+    /// Clear an operand's residency (worker, draining the cache's
+    /// eviction feed).
+    pub fn note_evicted(&self, key: u64, cluster: u32) {
+        self.directory.note_evicted(key, cluster);
+    }
+
+    /// Jobs routed into cluster deques but not yet claimed (lock-free;
+    /// the submit path calls this on every request).
+    pub fn depth(&self) -> usize {
+        self.routed.load(Ordering::Relaxed)
+    }
+
+    /// Per-cluster run-queue depths (the serve `metrics` op reports them).
+    pub fn depths(&self) -> Vec<u64> {
+        let st = self.state.lock().expect("router lock");
+        st.clusters.iter().map(|c| c.depth() as u64).collect()
+    }
+
+    /// Wake parked workers (submit calls this after a successful push so
+    /// routing latency is not bounded by the park interval).
+    pub fn kick(&self) {
+        let _guard = self.state.lock().expect("router lock");
+        self.arrivals.notify_all();
+    }
+
+    /// Estimated device-DRAM bytes one job stages, computed with the
+    /// very formulas the staging path allocates by (serving payloads
+    /// are f64); used for lane selection and steal capacity checks.
+    fn est_bytes(&self, payload: &JobPayload) -> u64 {
+        const F64: usize = 8;
+        match payload {
+            JobPayload::Gemm(r) => crate::blas::device::gemm_staged_bytes_tiled(
+                self.tile,
+                (r.n, r.n, r.n),
+                F64,
+            ),
+            JobPayload::Gemv(r) => crate::blas::device::gemv_staged_bytes_tiled(
+                self.tile,
+                (r.m, r.n),
+                F64,
+            ),
+            // level-1 stages one artifact-sized chunk pair at a time and
+            // fences stage nothing — both fit anywhere
+            JobPayload::Level1(_) | JobPayload::Fence(_) => 0,
+        }
+    }
+
+    /// Decide the target cluster for a job.  Order of precedence:
+    /// big-shape lane (capacity is correctness), operand affinity,
+    /// round-robin.  Returns (cluster, routed entry).
+    fn route_to(&self, job: Job, counters: &SchedCounters) -> (usize, Routed) {
+        let est = self.est_bytes(&job.payload);
+        let pool = self.capacity.pool_clusters();
+
+        // fences: dedicated round-robin, never stolen
+        if matches!(job.payload, JobPayload::Fence(_)) {
+            let c = self.fence_rr.fetch_add(1, Ordering::Relaxed) % pool;
+            return (c, Routed { job, affine: false, steal_ok: false, est_bytes: 0 });
+        }
+
+        // big-shape lane: a job that cannot stage on a small slice must
+        // run on the big cluster (and is never stolen off it)
+        if let Some(big) = self.capacity.big {
+            if est > self.capacity.small_slice() {
+                counters.big_shape_routed.fetch_add(1, Ordering::Relaxed);
+                return (
+                    big as usize,
+                    Routed { job, affine: false, steal_ok: false, est_bytes: est },
+                );
+            }
+        }
+
+        // small lanes only from here on (all lanes under the even split)
+        let eligible = self.capacity.small_ids();
+
+        // operand affinity: same-b_seed gemms chase the warm cache
+        if self.knobs.affinity {
+            if let JobPayload::Gemm(r) = &job.payload {
+                if let Some(bs) = r.b_seed {
+                    let key = operand_key("gemm_b", r.n, bs);
+                    let (c, _warm) = self.directory.place(key, &eligible);
+                    counters.affine_routed.fetch_add(1, Ordering::Relaxed);
+                    if let Some(pc) = counters.cluster(c) {
+                        pc.affine_routed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return (
+                        c as usize,
+                        Routed { job, affine: true, steal_ok: true, est_bytes: est },
+                    );
+                }
+            }
+        }
+
+        // everything else: round-robin across the small lanes
+        let i = self.rr.fetch_add(1, Ordering::Relaxed) % eligible.len();
+        (
+            eligible[i] as usize,
+            Routed { job, affine: false, steal_ok: true, est_bytes: est },
+        )
+    }
+
+    /// Pull every globally queued job and route it into cluster deques.
+    /// Returns true if anything moved (peers get a wake-up).
+    fn drain_global(
+        &self,
+        st: &mut RouterState,
+        queue: &WorkQueue,
+        counters: &SchedCounters,
+    ) -> bool {
+        let mut moved = false;
+        while let Some(job) = queue.try_pop() {
+            let lane = job.priority.lane();
+            let (c, routed) = self.route_to(job, counters);
+            st.clusters[c].lanes[lane].push_back(routed);
+            self.routed.fetch_add(1, Ordering::Relaxed);
+            moved = true;
+        }
+        moved
+    }
+
+    /// Pop the oldest highest-priority job of `cluster`'s own deque.
+    fn take_local(&self, st: &mut RouterState, cluster: usize) -> Option<Job> {
+        for lane in st.clusters[cluster].lanes.iter_mut() {
+            if let Some(r) = lane.pop_front() {
+                self.routed.fetch_sub(1, Ordering::Relaxed);
+                return Some(r.job);
+            }
+        }
+        None
+    }
+
+    /// Steal a job for `thief`: victims in most-loaded-first order, and
+    /// within a victim the *youngest lowest-priority* job first (the
+    /// cold end), preferring non-affine jobs over affine ones.  The
+    /// thief never takes fences or jobs it cannot stage.
+    fn steal(
+        &self,
+        st: &mut RouterState,
+        thief: usize,
+        counters: &SchedCounters,
+    ) -> Option<Job> {
+        if !self.knobs.steal {
+            return None;
+        }
+        let cap = self.capacity.slice_bytes[thief];
+        let mut victims: Vec<usize> = (0..st.clusters.len())
+            .filter(|&v| v != thief && st.clusters[v].depth() > 0)
+            .collect();
+        victims.sort_by_key(|&v| std::cmp::Reverse(st.clusters[v].depth()));
+        for pass_affine in [false, true] {
+            for &v in &victims {
+                for lane in st.clusters[v].lanes.iter_mut().rev() {
+                    for i in (0..lane.len()).rev() {
+                        let r = &lane[i];
+                        if r.steal_ok
+                            && r.affine == pass_affine
+                            && r.est_bytes <= cap
+                        {
+                            let r = lane.remove(i).expect("index checked");
+                            self.routed.fetch_sub(1, Ordering::Relaxed);
+                            counters.stolen.fetch_add(1, Ordering::Relaxed);
+                            if let Some(pc) = counters.cluster(thief as u32) {
+                                pc.stolen.fetch_add(1, Ordering::Relaxed);
+                            }
+                            return Some(r.job);
+                        }
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    /// Shutdown adoption: with the ingress closed, take a job stranded
+    /// on a cluster whose worker has already *exited* (a push that
+    /// raced the close can be routed to a deque after its owner saw
+    /// everything empty and left — nobody else would ever reply).
+    /// Clusters with a live worker are never raided: a live worker
+    /// always drains its own deque before exiting, and it is the one
+    /// whose slice is guaranteed to fit its jobs.  Capacity and steal
+    /// flags are waived for orphans — an adopter that cannot stage the
+    /// job fails it with a clean error, which still beats a silent
+    /// drop.
+    fn adopt_orphans(&self, st: &mut RouterState) -> Option<Job> {
+        for c in 0..st.clusters.len() {
+            if !st.exited[c] {
+                continue;
+            }
+            for lane in st.clusters[c].lanes.iter_mut() {
+                if let Some(r) = lane.pop_front() {
+                    self.routed.fetch_sub(1, Ordering::Relaxed);
+                    return Some(r.job);
+                }
+            }
+        }
+        None
+    }
+
+    /// Blocking dequeue for `cluster`'s worker: own deque first, then a
+    /// steal, then park until work arrives.  Returns `None` — and marks
+    /// the worker exited — only when the ingress queue is closed, the
+    /// worker's own deque is empty, and nothing is stealable or
+    /// orphaned; jobs left on other live workers' deques are theirs to
+    /// drain.
+    pub fn next(
+        &self,
+        cluster: usize,
+        queue: &WorkQueue,
+        counters: &SchedCounters,
+    ) -> Option<Job> {
+        let mut st = self.state.lock().expect("router lock");
+        loop {
+            if self.drain_global(&mut st, queue, counters) {
+                self.arrivals.notify_all();
+            }
+            if let Some(job) = self.take_local(&mut st, cluster) {
+                return Some(job);
+            }
+            if let Some(job) = self.steal(&mut st, cluster, counters) {
+                return Some(job);
+            }
+            if queue.is_closed() {
+                // re-drain: a push that raced the close may still sit in
+                // the global queue
+                self.drain_global(&mut st, queue, counters);
+                if let Some(job) = self.take_local(&mut st, cluster) {
+                    return Some(job);
+                }
+                if let Some(job) = self.adopt_orphans(&mut st) {
+                    return Some(job);
+                }
+                st.exited[cluster] = true;
+                return None;
+            }
+            let (guard, _timeout) = self
+                .arrivals
+                .wait_timeout(st, PARK)
+                .expect("router lock");
+            st = guard;
+        }
+    }
+
+    /// Non-blocking dequeue (the pipelined worker polls this while a
+    /// batch is in flight: an empty answer means "drain the pipeline",
+    /// not "park").
+    pub fn try_next(
+        &self,
+        cluster: usize,
+        queue: &WorkQueue,
+        counters: &SchedCounters,
+    ) -> Option<Job> {
+        let mut st = self.state.lock().expect("router lock");
+        if self.drain_global(&mut st, queue, counters) {
+            self.arrivals.notify_all();
+        }
+        if let Some(job) = self.take_local(&mut st, cluster) {
+            return Some(job);
+        }
+        self.steal(&mut st, cluster, counters)
+    }
+
+    /// Remove up to `max` jobs with batch key `key` from `cluster`'s own
+    /// deque (after routing everything queued globally), priority order,
+    /// FIFO within a lane — the batcher's coalescing source.  Jobs
+    /// routed to *other* clusters are never taken: they are placed where
+    /// their operands are warm (or will be).
+    pub fn take_matching(
+        &self,
+        cluster: usize,
+        key: &BatchKey,
+        max: usize,
+        queue: &WorkQueue,
+        counters: &SchedCounters,
+    ) -> Vec<Job> {
+        let mut out = Vec::new();
+        if max == 0 {
+            return out;
+        }
+        let mut st = self.state.lock().expect("router lock");
+        if self.drain_global(&mut st, queue, counters) {
+            self.arrivals.notify_all();
+        }
+        for lane in st.clusters[cluster].lanes.iter_mut() {
+            let mut i = 0;
+            while i < lane.len() && out.len() < max {
+                if lane[i].job.batch_key().as_ref() == Some(key) {
+                    out.push(lane.remove(i).expect("index checked").job);
+                    self.routed.fetch_sub(1, Ordering::Relaxed);
+                } else {
+                    i += 1;
+                }
+            }
+            if out.len() >= max {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Wake every parked worker so shutdown is observed promptly (the
+    /// caller closes the ingress queue first).
+    pub fn close(&self) {
+        let _guard = self.state.lock().expect("router lock");
+        self.arrivals.notify_all();
+    }
+}
+
+/// One cluster's view of the router — the [`super::batcher::JobSource`]
+/// a worker hands its batcher, so coalescing only ever peels jobs
+/// routed to (or stolen by) that cluster.
+pub struct ClusterView<'a> {
+    pub router: &'a PlacementRouter,
+    pub queue: &'a WorkQueue,
+    pub counters: &'a SchedCounters,
+    pub cluster: usize,
+}
+
+impl super::batcher::JobSource for ClusterView<'_> {
+    fn take_matching(&self, key: &BatchKey, max: usize) -> Vec<Job> {
+        self.router
+            .take_matching(self.cluster, key, max, self.queue, self.counters)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DispatchMode, PlatformConfig};
+    use crate::sched::pool::DevicePool;
+    use crate::sched::{CancelToken, GemmRequest, GemvRequest, Priority};
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn router(pool: u32, big_frac: f64, affinity: bool, steal: bool)
+              -> (PlacementRouter, WorkQueue, SchedCounters) {
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.placement.big_shape_frac = big_frac;
+        let capacity = DevicePool::partition(&cfg, pool).unwrap().capacity().clone();
+        let knobs = PlacementConfig { affinity, steal, big_shape_frac: big_frac };
+        (
+            PlacementRouter::new(capacity, (64, 64, 64), knobs),
+            WorkQueue::new(64),
+            SchedCounters::new(pool as usize),
+        )
+    }
+
+    fn gemm_job(id: u64, n: usize, b_seed: Option<u64>) -> Job {
+        let (tx, _rx) = mpsc::channel();
+        Job {
+            id,
+            priority: Priority::Normal,
+            payload: JobPayload::Gemm(GemmRequest {
+                n,
+                mode: DispatchMode::DeviceOnly,
+                seed: id,
+                b_seed,
+            }),
+            reply: tx,
+            cancel: CancelToken::default(),
+            enqueued_at: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn affine_jobs_route_to_one_deterministic_cluster() {
+        let (r, q, c) = router(4, 0.0, true, false);
+        for id in 0..6 {
+            q.push(gemm_job(id, 64, Some(42))).unwrap();
+        }
+        let mut st = r.state.lock().unwrap();
+        r.drain_global(&mut st, &q, &c);
+        let loaded: Vec<usize> = st
+            .clusters
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.depth() > 0)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(loaded.len(), 1, "shared-b jobs must share one run queue");
+        assert_eq!(st.clusters[loaded[0]].depth(), 6);
+        assert_eq!(c.snapshot().affine_routed, 6);
+        drop(st);
+        // residency on another cluster redirects the stream
+        let key = operand_key("gemm_b", 64, 42);
+        let other = (0..4).find(|&i| i != loaded[0] as u32).unwrap();
+        r.note_resident(key, other);
+        q.push(gemm_job(9, 64, Some(42))).unwrap();
+        let mut st = r.state.lock().unwrap();
+        r.drain_global(&mut st, &q, &c);
+        assert_eq!(st.clusters[other as usize].depth(), 1);
+    }
+
+    #[test]
+    fn non_affine_jobs_round_robin_and_big_jobs_take_the_big_lane() {
+        let (r, q, c) = router(4, 0.5, true, true);
+        // small jobs spread over the three small lanes, never cluster 0
+        for id in 0..6 {
+            q.push(gemm_job(id, 64, None)).unwrap();
+        }
+        // n=1024 stages 3*1024^2*8 = 24 MiB > the ~11 MiB small slice
+        q.push(gemm_job(100, 1024, None)).unwrap();
+        let mut st = r.state.lock().unwrap();
+        r.drain_global(&mut st, &q, &c);
+        assert_eq!(st.clusters[0].depth(), 1, "big lane gets only the big job");
+        for small in 1..4 {
+            assert_eq!(st.clusters[small].depth(), 2, "round-robin skew");
+        }
+        assert_eq!(c.snapshot().big_shape_routed, 1);
+    }
+
+    #[test]
+    fn steal_prefers_non_affine_and_respects_capacity() {
+        let (r, q, c) = router(2, 0.0, true, true);
+        // pick a b_seed whose hash-home is cluster 0
+        let bs = (0..64)
+            .find(|&s| operand_key("gemm_b", 64, s) % 2 == 0)
+            .unwrap();
+        q.push(gemm_job(1, 64, Some(bs))).unwrap();
+        q.push(gemm_job(2, 64, Some(bs))).unwrap();
+        let mut st = r.state.lock().unwrap();
+        r.drain_global(&mut st, &q, &c);
+        assert_eq!(st.clusters[0].depth(), 2);
+        // route one non-affine job to cluster 0 as well (rr starts at 0)
+        drop(st);
+        q.push(gemm_job(3, 64, None)).unwrap();
+        let mut st = r.state.lock().unwrap();
+        r.drain_global(&mut st, &q, &c);
+        assert_eq!(st.clusters[0].depth(), 3);
+
+        // thief 1: the non-affine job goes first, then affine ones
+        let j = r.steal(&mut st, 1, &c).unwrap();
+        assert_eq!(j.id, 3, "non-affine steals before affine");
+        let j = r.steal(&mut st, 1, &c).unwrap();
+        assert_eq!(j.id, 2, "affine stolen from the cold (back) end");
+        assert_eq!(c.snapshot().stolen, 2);
+        assert_eq!(c.snapshot().clusters[1].stolen, 2);
+        // steal disabled: nothing moves
+        drop(st);
+        let (r2, q2, c2) = router(2, 0.0, true, false);
+        q2.push(gemm_job(1, 64, Some(bs))).unwrap();
+        let mut st2 = r2.state.lock().unwrap();
+        r2.drain_global(&mut st2, &q2, &c2);
+        assert!(r2.steal(&mut st2, 1, &c2).is_none());
+    }
+
+    #[test]
+    fn big_jobs_are_never_stolen_by_small_clusters() {
+        let (r, q, c) = router(4, 0.5, true, true);
+        q.push(gemm_job(1, 1024, None)).unwrap();
+        let mut st = r.state.lock().unwrap();
+        r.drain_global(&mut st, &q, &c);
+        assert_eq!(st.clusters[0].depth(), 1);
+        for thief in 1..4 {
+            assert!(r.steal(&mut st, thief, &c).is_none());
+        }
+        // the big lane itself may steal small work when idle
+        drop(st);
+        q.push(gemm_job(2, 64, None)).unwrap();
+        let mut st = r.state.lock().unwrap();
+        r.drain_global(&mut st, &q, &c);
+        let j = r.steal(&mut st, 0, &c);
+        assert_eq!(j.unwrap().id, 2);
+    }
+
+    #[test]
+    fn gemv_estimates_route_through_the_big_lane_too() {
+        let (r, q, c) = router(4, 0.5, true, true);
+        let (tx, _rx) = mpsc::channel();
+        let job = Job {
+            id: 1,
+            priority: Priority::Normal,
+            payload: JobPayload::Gemv(GemvRequest {
+                m: 2048,
+                n: 2048,
+                mode: DispatchMode::DeviceOnly,
+                seed: 1,
+            }),
+            reply: tx,
+            cancel: CancelToken::default(),
+            enqueued_at: Instant::now(),
+        };
+        // 2048x2048 f64 A alone is 32 MiB > the small slice
+        q.push(job).unwrap();
+        let mut st = r.state.lock().unwrap();
+        r.drain_global(&mut st, &q, &c);
+        assert_eq!(st.clusters[0].depth(), 1);
+    }
+
+    #[test]
+    fn take_matching_peels_only_the_own_deque() {
+        let (r, q, c) = router(2, 0.0, false, true);
+        // rr: ids 1..4 alternate clusters 0,1,0,1
+        for id in 1..=4 {
+            q.push(gemm_job(id, 64, None)).unwrap();
+        }
+        let key = gemm_job(0, 64, None).batch_key().unwrap();
+        let got = r.take_matching(0, &key, 8, &q, &c);
+        let ids: Vec<u64> = got.iter().map(|j| j.id).collect();
+        assert_eq!(ids, vec![1, 3], "cluster 0's own jobs only");
+        assert_eq!(r.depth(), 2, "cluster 1's jobs stay routed there");
+        assert_eq!(r.depths(), vec![0, 2]);
+    }
+
+    #[test]
+    fn closed_queue_drains_via_owner_or_orphan_adoption() {
+        let bs = (0..64)
+            .find(|&s| operand_key("gemm_b", 64, s) % 2 == 0)
+            .unwrap();
+
+        // the owner is alive: worker 1 exits WITHOUT raiding cluster 0's
+        // deque (steal off), and worker 0 drains its own job
+        let (r, q, c) = router(2, 0.0, true, false);
+        q.push(gemm_job(1, 64, Some(bs))).unwrap();
+        q.close();
+        assert!(r.next(1, &q, &c).is_none());
+        assert_eq!(r.depth(), 1, "live owner's job must not be adopted");
+        let j = r.next(0, &q, &c);
+        assert_eq!(j.unwrap().id, 1);
+        assert!(r.next(0, &q, &c).is_none());
+        assert_eq!(r.depth(), 0);
+
+        // the owner already exited (a push raced the close and was routed
+        // after its exit): any live worker adopts the orphan so its
+        // submitter still gets a reply
+        let (r, q, c) = router(2, 0.0, true, false);
+        q.push(gemm_job(2, 64, Some(bs))).unwrap();
+        q.close();
+        r.state.lock().unwrap().exited[0] = true;
+        let j = r.next(1, &q, &c);
+        assert_eq!(j.unwrap().id, 2, "orphaned job adopted");
+        assert!(r.next(1, &q, &c).is_none());
+        assert_eq!(r.depth(), 0);
+    }
+
+    #[test]
+    fn fences_round_robin_and_are_unstealable() {
+        let (r, q, c) = router(2, 0.0, true, true);
+        let fence = |id| {
+            let (tx, _rx) = mpsc::channel();
+            let (_ftx, frx) = mpsc::channel();
+            Job {
+                id,
+                priority: Priority::High,
+                payload: JobPayload::Fence(frx),
+                reply: tx,
+                cancel: CancelToken::default(),
+                enqueued_at: Instant::now(),
+            }
+        };
+        q.push(fence(1)).unwrap();
+        q.push(fence(2)).unwrap();
+        let mut st = r.state.lock().unwrap();
+        r.drain_global(&mut st, &q, &c);
+        assert_eq!(st.clusters[0].depth(), 1, "first fence lands on cluster 0");
+        assert_eq!(st.clusters[1].depth(), 1);
+        assert!(r.steal(&mut st, 0, &c).is_none(), "fences are pinned");
+        assert!(r.steal(&mut st, 1, &c).is_none());
+    }
+}

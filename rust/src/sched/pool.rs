@@ -3,13 +3,28 @@
 //! HERO exposes the accelerator as multiple clusters behind mailboxes;
 //! we model that by stamping out one full SoC slice per pool cluster.
 //! Each cluster spec is the base platform with the device-managed DRAM
-//! partition replaced by an even, page-aligned slice of the original —
-//! so every cluster session builds its own `hero::allocator::Arena`
-//! (disjoint device addresses, physically contiguous within the slice)
-//! and its own `soc::mailbox::Mailbox` (independent doorbells).  The
-//! worker thread that owns a spec boots the session on itself; nothing
-//! device-side is shared between clusters, which is exactly what makes
-//! the pool trivially parallel.
+//! partition replaced by a page-aligned slice of the original — so every
+//! cluster session builds its own `hero::allocator::Arena` (disjoint
+//! device addresses, physically contiguous within the slice) and its own
+//! `soc::mailbox::Mailbox` (independent doorbells).  The worker thread
+//! that owns a spec boots the session on itself; nothing device-side is
+//! shared between clusters, which is exactly what makes the pool
+//! trivially parallel.
+//!
+//! Slicing is planned by the [`CapacityModel`] — the one place that
+//! knows both capacity dimensions of the platform (request-level
+//! `sched.pool_clusters` x intra-offload `cluster.clusters` compute
+//! tiles) and the byte capacity of every slice.  Two layouts:
+//!
+//! * **even** (`big_shape_frac = 0`, the original behavior): the
+//!   partition splits into equal page-aligned slices.  Simple, but the
+//!   largest device-stageable GEMM shrinks with the pool (pool 4 caps
+//!   device-path n around ~800 f64 on the default 64 MiB partition).
+//! * **big-shape lane** (`big_shape_frac > 0`, pool >= 2): cluster 0
+//!   gets `big_shape_frac` of the partition and the rest splits evenly,
+//!   so one lane regains the unpartitioned large-GEMM range while the
+//!   placement router keeps small requests off it (no head-of-line
+//!   blocking behind a large launch).
 
 use crate::config::PlatformConfig;
 use crate::error::{Error, Result};
@@ -26,37 +41,130 @@ pub struct ClusterSpec {
     pub cfg: PlatformConfig,
 }
 
+/// The pool's unified capacity description: how many request-level
+/// clusters exist, how many intra-offload compute tiles each one drives,
+/// and how many device-DRAM bytes each one can stage.  The placement
+/// router sizes jobs against `slice_bytes`; `hero-blas serve` reports it;
+/// the pool derives the per-cluster platforms from it — one model instead
+/// of `cluster.clusters` and `sched.pool_clusters` read in isolation.
+#[derive(Debug, Clone)]
+pub struct CapacityModel {
+    /// Device-DRAM bytes of every cluster's slice, indexed by cluster id.
+    pub slice_bytes: Vec<u64>,
+    /// The big-shape lane's cluster id (`Some(0)` under heterogeneous
+    /// slicing; `None` for the even split).
+    pub big: Option<u32>,
+    /// Intra-offload compute clusters each pool cluster drives (output
+    /// tiles round-robin across them within one launch).
+    pub tiles_per_cluster: u32,
+}
+
+impl CapacityModel {
+    /// Plan the slice layout for `clusters` pool clusters over `base`'s
+    /// device-DRAM partition, honoring `[sched.placement] big_shape_frac`.
+    pub fn plan(base: &PlatformConfig, clusters: u32) -> Result<CapacityModel> {
+        if clusters == 0 {
+            return Err(Error::Config("device pool needs at least 1 cluster".into()));
+        }
+        let total = base.memory.dev_dram_bytes;
+        let frac = base.sched.placement.big_shape_frac;
+        let (slice_bytes, big) = if base.sched.placement.big_lane(clusters) {
+            let big_bytes = ((total as f64 * frac) as u64) & !4095u64;
+            let small = ((total - big_bytes) / (clusters - 1) as u64) & !4095u64;
+            if small < MIN_SLICE_BYTES {
+                return Err(Error::Config(format!(
+                    "big_shape_frac {frac} leaves {small} B per small cluster \
+                     (minimum {MIN_SLICE_BYTES} B) — lower the fraction or \
+                     shrink the pool"
+                )));
+            }
+            if big_bytes < small {
+                return Err(Error::Config(format!(
+                    "big_shape_frac {frac} makes the big-shape slice ({big_bytes} B) \
+                     smaller than a small slice ({small} B)"
+                )));
+            }
+            let mut v = vec![small; clusters as usize];
+            v[0] = big_bytes;
+            (v, Some(0))
+        } else {
+            let slice = (total / clusters as u64) & !4095u64;
+            if slice < MIN_SLICE_BYTES {
+                return Err(Error::Config(format!(
+                    "pool of {clusters} clusters leaves {slice} B of device DRAM each \
+                     (minimum {MIN_SLICE_BYTES} B) — shrink the pool or grow \
+                     memory.dev_dram_bytes"
+                )));
+            }
+            (vec![slice; clusters as usize], None)
+        };
+        Ok(CapacityModel {
+            slice_bytes,
+            big,
+            tiles_per_cluster: base.cluster.clusters,
+        })
+    }
+
+    pub fn pool_clusters(&self) -> usize {
+        self.slice_bytes.len()
+    }
+
+    /// Total compute tiles across the pool (the product the config
+    /// validation bounds): pool clusters x intra-offload clusters.
+    pub fn total_compute_tiles(&self) -> u64 {
+        self.pool_clusters() as u64 * self.tiles_per_cluster as u64
+    }
+
+    /// Cluster ids of the small lanes: everything except the big-shape
+    /// lane (all clusters under the even split).
+    pub fn small_ids(&self) -> Vec<u32> {
+        (0..self.pool_clusters() as u32)
+            .filter(|c| Some(*c) != self.big)
+            .collect()
+    }
+
+    /// The largest slice any cluster offers (what an oversized request
+    /// needs to fit somewhere in the pool).
+    pub fn max_slice(&self) -> u64 {
+        self.slice_bytes.iter().copied().max().unwrap_or(0)
+    }
+
+    /// The slice of the small lanes (the routing threshold above which a
+    /// job needs the big-shape lane).
+    pub fn small_slice(&self) -> u64 {
+        self.small_ids()
+            .iter()
+            .map(|&c| self.slice_bytes[c as usize])
+            .min()
+            .unwrap_or(0)
+    }
+}
+
 /// The partitioned pool (specs only — sessions boot on worker threads).
 #[derive(Debug, Clone)]
 pub struct DevicePool {
     specs: Vec<ClusterSpec>,
+    capacity: CapacityModel,
 }
 
 impl DevicePool {
     /// Split `base`'s device-DRAM partition into `clusters` page-aligned
-    /// slices and derive one per-cluster platform from each.
+    /// slices (even, or heterogeneous under a big-shape lane) and derive
+    /// one per-cluster platform from each.
     pub fn partition(base: &PlatformConfig, clusters: u32) -> Result<DevicePool> {
-        if clusters == 0 {
-            return Err(Error::Config("device pool needs at least 1 cluster".into()));
-        }
-        let slice = (base.memory.dev_dram_bytes / clusters as u64) & !4095u64;
-        if slice < MIN_SLICE_BYTES {
-            return Err(Error::Config(format!(
-                "pool of {clusters} clusters leaves {slice} B of device DRAM each \
-                 (minimum {MIN_SLICE_BYTES} B) — shrink the pool or grow \
-                 memory.dev_dram_bytes"
-            )));
-        }
+        let capacity = CapacityModel::plan(base, clusters)?;
         let mut specs = Vec::with_capacity(clusters as usize);
-        for id in 0..clusters {
+        let mut next_base = base.memory.dev_dram_base;
+        for (id, &bytes) in capacity.slice_bytes.iter().enumerate() {
             let mut cfg = base.clone();
             cfg.name = format!("{}/cluster{id}", base.name);
-            cfg.memory.dev_dram_base = base.memory.dev_dram_base + id as u64 * slice;
-            cfg.memory.dev_dram_bytes = slice;
+            cfg.memory.dev_dram_base = next_base;
+            cfg.memory.dev_dram_bytes = bytes;
             cfg.validate()?;
-            specs.push(ClusterSpec { id, cfg });
+            specs.push(ClusterSpec { id: id as u32, cfg });
+            next_base += bytes;
         }
-        Ok(DevicePool { specs })
+        Ok(DevicePool { specs, capacity })
     }
 
     pub fn specs(&self) -> &[ClusterSpec] {
@@ -65,6 +173,10 @@ impl DevicePool {
 
     pub fn into_specs(self) -> Vec<ClusterSpec> {
         self.specs
+    }
+
+    pub fn capacity(&self) -> &CapacityModel {
+        &self.capacity
     }
 
     pub fn size(&self) -> usize {
@@ -93,6 +205,8 @@ mod tests {
         }
         // even split of 64 MiB across 4
         assert_eq!(pool.specs()[0].cfg.memory.dev_dram_bytes, 16 * 1024 * 1024);
+        assert_eq!(pool.capacity().big, None);
+        assert_eq!(pool.capacity().small_ids(), vec![0, 1, 2, 3]);
     }
 
     #[test]
@@ -111,6 +225,65 @@ mod tests {
         // 64 MiB / 128 = 512 KiB < MIN_SLICE_BYTES
         let e = DevicePool::partition(&base, 128).unwrap_err().to_string();
         assert!(e.contains("device DRAM"), "{e}");
+    }
+
+    #[test]
+    fn big_shape_lane_gets_the_large_slice() {
+        let mut base = PlatformConfig::default();
+        base.sched.placement.big_shape_frac = 0.95;
+        let pool = DevicePool::partition(&base, 4).unwrap();
+        let cap = pool.capacity();
+        assert_eq!(cap.big, Some(0));
+        assert_eq!(cap.small_ids(), vec![1, 2, 3]);
+        let big = cap.slice_bytes[0];
+        let small = cap.slice_bytes[1];
+        assert!(big > small * 8, "big lane {big} vs small {small}");
+        assert!(small >= MIN_SLICE_BYTES);
+        assert_eq!(cap.max_slice(), big);
+        assert_eq!(cap.small_slice(), small);
+        // slices stay disjoint and page-aligned
+        let mut prev_end = base.memory.dev_dram_base;
+        for spec in pool.specs() {
+            let m = &spec.cfg.memory;
+            assert!(m.dev_dram_base >= prev_end);
+            assert_eq!(m.dev_dram_base % 4096, 0);
+            prev_end = m.dev_dram_base + m.dev_dram_bytes;
+        }
+        assert!(prev_end <= base.memory.dev_dram_base + base.memory.dev_dram_bytes);
+
+        // ISSUE 3 acceptance: the pool-4 big-shape lane must hold a
+        // staged n=1600 f64 GEMM (3 padded operands) that the even split
+        // cannot — the unpartitioned range, regained for one lane.
+        let n1600 = 3 * 1600u64 * 1600 * 8;
+        assert!(big >= n1600, "big lane {big} B cannot stage n=1600 ({n1600} B)");
+        let even = DevicePool::partition(&PlatformConfig::default(), 4).unwrap();
+        assert!(even.capacity().max_slice() < n1600);
+    }
+
+    #[test]
+    fn big_shape_frac_rejected_when_smalls_starve() {
+        let mut base = PlatformConfig::default();
+        base.sched.placement.big_shape_frac = 0.97;
+        // 3% of 64 MiB across 3 small clusters < 1 MiB each
+        let e = DevicePool::partition(&base, 4).unwrap_err().to_string();
+        assert!(e.contains("big_shape_frac"), "{e}");
+        // pool of 1 ignores the fraction entirely (no lane to split off)
+        base.sched.placement.big_shape_frac = 0.5;
+        let pool = DevicePool::partition(&base, 1).unwrap();
+        assert_eq!(pool.capacity().big, None);
+    }
+
+    #[test]
+    fn capacity_model_unifies_pool_and_tiles() {
+        let mut base = PlatformConfig::default();
+        base.cluster.clusters = 2;
+        let pool = DevicePool::partition(&base, 4).unwrap();
+        assert_eq!(pool.capacity().tiles_per_cluster, 2);
+        assert_eq!(pool.capacity().total_compute_tiles(), 8);
+        // every per-cluster platform keeps the intra-offload width
+        for spec in pool.specs() {
+            assert_eq!(spec.cfg.cluster.clusters, 2);
+        }
     }
 
     #[test]

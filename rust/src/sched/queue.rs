@@ -72,13 +72,28 @@ impl WorkQueue {
     /// Enqueue into the job's priority lane; returns the new total depth
     /// or the backpressure rejection.
     pub fn push(&self, job: Job) -> Result<usize, PushError> {
+        self.push_with_reserved(job, 0)
+    }
+
+    /// Enqueue with an external `reserved` count folded into the bound:
+    /// the push is rejected when `depth + reserved >= capacity`.  The
+    /// scheduler passes the placement router's routed-but-unclaimed
+    /// depth here, so the backpressure bound covers both stages of the
+    /// ingress and concurrent submitters serialize on this lock instead
+    /// of racing a check-then-push.  `Full.depth` reports the combined
+    /// backlog.
+    pub fn push_with_reserved(
+        &self,
+        job: Job,
+        reserved: usize,
+    ) -> Result<usize, PushError> {
         let mut inner = self.inner.lock().expect("queue lock");
         if inner.closed {
             return Err(PushError::Closed);
         }
         let depth = inner.depth();
-        if depth >= self.capacity {
-            return Err(PushError::Full { depth });
+        if depth + reserved >= self.capacity {
+            return Err(PushError::Full { depth: depth + reserved });
         }
         inner.lanes[job.priority.lane()].push_back(job);
         let depth = inner.depth();
@@ -227,6 +242,21 @@ mod tests {
         // draining one slot makes room again
         q.pop_blocking().unwrap();
         assert!(q.push(gemm_job(3, 64, Priority::Normal)).is_ok());
+    }
+
+    #[test]
+    fn push_with_reserved_tightens_the_bound() {
+        let q = WorkQueue::new(3);
+        // two externally reserved slots leave room for exactly one push
+        assert_eq!(q.push_with_reserved(gemm_job(1, 64, Priority::Normal), 2).unwrap(), 1);
+        match q.push_with_reserved(gemm_job(2, 64, Priority::Normal), 2) {
+            Err(PushError::Full { depth }) => {
+                assert_eq!(depth, 3, "Full reports the combined backlog")
+            }
+            other => panic!("expected Full, got {other:?}"),
+        }
+        // without the reservation the same push fits
+        assert!(q.push(gemm_job(2, 64, Priority::Normal)).is_ok());
     }
 
     #[test]

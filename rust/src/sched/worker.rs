@@ -1,32 +1,41 @@
 //! Pool workers: one thread per cluster, each owning a full offload
-//! session.
+//! session and serving its own placement-routed run queue.
 //!
 //! A worker boots its `HeroBlas` session *on its own thread* (engine,
 //! PJRT registry and dispatch policy never cross threads), signals
-//! readiness, then loops: pull a job, grow it into a batch (bounded by
-//! the batcher policy AND by what the cluster's DRAM slice can stage),
-//! consult the dispatch policy per batch, launch, poll the cluster
-//! mailbox for the completion word, join, and reply to every member.
-//! Requests complete asynchronously from the submitter's point of view —
-//! the connection handler is parked on the reply channel, not on the
-//! device.
+//! readiness, then loops: ask the placement router for the next job
+//! (own run queue first, then a steal from the most-loaded peer — see
+//! [`super::placement`]), grow it into a batch (bounded by the batcher
+//! policy AND by what the cluster's DRAM slice can stage), consult the
+//! dispatch policy per batch, launch, poll the cluster mailbox for the
+//! completion word, join, and reply to every member.  Requests complete
+//! asynchronously from the submitter's point of view — the connection
+//! handler is parked on the reply channel, not on the device.
 //!
 //! **Cancellation**: a job whose submitter stopped waiting (serve-layer
 //! reply timeout sets its [`CancelToken`]) is skipped at dequeue — never
 //! synthesized, staged or launched for a dropped receiver.
 //!
 //! **Software pipelining** (`[sched.cache] pipeline_depth >= 2`): the
-//! gemm device path is split stage / execute / finish, and the worker
-//! holds one executed-but-unfinished batch in flight.  When the next
-//! batch arrives, its map-in is staged *before* the in-flight batch is
-//! finished — i.e. during the window the in-flight batch's compute
-//! occupies on a real device — so up to `min(map_in(k+1), compute(k))`
-//! virtual cycles of data-copy are hidden.  The hidden share is
-//! subtracted from the reported per-request times and accumulated in the
-//! `overlap_hidden_us` counter; checksums are unaffected (the data path
-//! is identical, only the attribution changes).  The cluster's DRAM
-//! slice must hold two staged batches at once, so the per-batch capacity
-//! cap is divided by the pipeline depth.
+//! gemm *and gemv* device paths are split stage / execute / finish, and
+//! the worker holds one executed-but-unfinished batch in flight.  When
+//! the next batch arrives, its map-in is staged *before* the in-flight
+//! batch is finished — i.e. during the window the in-flight batch's
+//! compute occupies on a real device — so up to
+//! `min(map_in(k+1), compute(k))` virtual cycles of data-copy are
+//! hidden.  The hidden share is subtracted from the reported
+//! per-request times and accumulated in the `overlap_hidden_us`
+//! counter; checksums are unaffected (the data path is identical, only
+//! the attribution changes).  The cluster's DRAM slice must hold two
+//! staged batches at once, so the per-batch capacity cap is divided by
+//! the pipeline depth.  Gemm and gemv batches interleave freely in the
+//! pipeline — the in-flight handle carries its own kind.
+//!
+//! **Affinity bookkeeping**: after staging a gemm batch, the worker
+//! tags the cache entries backing tracked B operands (shared `b_seed`)
+//! and records residency in the router's affinity directory; after
+//! every batch it drains the cache's eviction feed so the directory
+//! never steers requests at a cluster that dropped the bytes.
 //!
 //! Failures are contained per batch: the device error path releases the
 //! staged mappings and aborts the launch, every member gets an error
@@ -40,17 +49,25 @@ use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::blas::{DispatchPolicy, ExecTarget, GemmBatchRun, HeroBlas};
+use crate::blas::{
+    DispatchPolicy, ExecTarget, GemmBatchRun, GemvBatchRun, HeroBlas,
+};
 use crate::error::Result;
+use crate::hero::offload::OffloadKind;
 use crate::metrics::{Metrics, SchedCounters};
 use crate::soc::clock::Cycles;
 use crate::soc::trace::RegionClass;
 use crate::util::rng::Rng;
 
+use super::affinity::operand_key;
 use super::batcher::Batcher;
+use super::placement::{ClusterView, PlacementRouter};
 use super::pool::ClusterSpec;
 use super::queue::WorkQueue;
-use super::{GemmOutcome, GemmRequest, GemvRequest, Job, JobPayload};
+use super::{
+    GemmOutcome, GemmRequest, GemvRequest, Job, JobPayload, Level1Op,
+    Level1Request,
+};
 
 /// Spawn one worker thread for `spec`.  It reports session boot success
 /// or failure once through `ready`, then serves until the queue closes.
@@ -58,13 +75,14 @@ pub(crate) fn spawn(
     spec: ClusterSpec,
     artifacts: PathBuf,
     queue: Arc<WorkQueue>,
+    router: Arc<PlacementRouter>,
     counters: Arc<SchedCounters>,
     batcher: Batcher,
     ready: mpsc::Sender<Result<()>>,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
         .name(format!("sched-worker-{}", spec.id))
-        .spawn(move || run(spec, artifacts, queue, counters, batcher, ready))
+        .spawn(move || run(spec, artifacts, queue, router, counters, batcher, ready))
         .expect("spawn scheduler worker")
 }
 
@@ -120,14 +138,30 @@ fn delta(before: RegionSnap, after: RegionSnap) -> BatchAcct {
     }
 }
 
-/// One coalesced gemm batch between its execute and its finish: the
+/// The executed-but-unfinished payload of a pipelined batch.
+enum InflightRun {
+    Gemm {
+        req: GemmRequest,
+        data: Vec<(Vec<f64>, Vec<f64>, Vec<f64>)>,
+        run: GemmBatchRun<f64>,
+    },
+    // No member (A, x) data here: the device mappings are backed by the
+    // padded byte images owned by the batch state, so the synthesized
+    // operands are dropped as soon as staging returns instead of being
+    // held across the in-flight window.
+    Gemv {
+        req: GemvRequest,
+        ys: Vec<Vec<f64>>,
+        run: GemvBatchRun<f64>,
+    },
+}
+
+/// One coalesced batch between its execute and its finish: the
 /// completion word is posted in the cluster mailbox, results are still
 /// on the device, replies are pending.
 struct Inflight {
     jobs: Vec<Job>,
-    req: GemmRequest,
-    data: Vec<(Vec<f64>, Vec<f64>, Vec<f64>)>,
-    run: GemmBatchRun<f64>,
+    run: InflightRun,
     acct: BatchAcct,
     queue_ms: Vec<f64>,
     /// Wall microseconds this batch actively consumed through execute.
@@ -138,10 +172,12 @@ struct Inflight {
     work_us: u64,
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run(
     spec: ClusterSpec,
     artifacts: PathBuf,
     queue: Arc<WorkQueue>,
+    router: Arc<PlacementRouter>,
     counters: Arc<SchedCounters>,
     batcher: Batcher,
     ready: mpsc::Sender<Result<()>>,
@@ -155,25 +191,26 @@ fn run(
     };
     let _ = ready.send(Ok(()));
 
+    let cid = spec.id as usize;
     // double-buffered staging: depth 2 is what the implementation holds
     let depth = (spec.cfg.sched.cache.pipeline_depth as usize).clamp(1, 2);
     let mut inflight: Option<Inflight> = None;
     let mut metrics_prev = blas.metrics();
 
     loop {
-        // With a batch in flight never park: an empty queue means "drain
-        // the pipeline now", not "sleep while a client waits".
+        // With a batch in flight never park: an empty run queue means
+        // "drain the pipeline now", not "sleep while a client waits".
         let next = if inflight.is_some() {
-            queue.try_pop()
+            router.try_next(cid, &queue, &counters)
         } else {
-            match queue.pop_blocking() {
+            match router.next(cid, &queue, &counters) {
                 Some(j) => Some(j),
                 None => break, // closed and drained; nothing in flight
             }
         };
         let Some(job) = next else {
-            let infl = inflight.take().expect("try_pop only used with inflight");
-            finish_batch(&mut blas, spec.id, &counters, infl, &mut metrics_prev);
+            let infl = inflight.take().expect("try_next only used with inflight");
+            finish_batch(&mut blas, spec.id, &counters, &router, infl, &mut metrics_prev);
             continue;
         };
 
@@ -184,33 +221,72 @@ fn run(
             continue;
         }
 
+        let source = ClusterView {
+            router: &router,
+            queue: &queue,
+            counters: &counters,
+            cluster: cid,
+        };
         match job.payload {
             JobPayload::Fence(ref release) => {
                 // A fence drains the pipeline first: it is a barrier.
                 if let Some(infl) = inflight.take() {
-                    finish_batch(&mut blas, spec.id, &counters, infl, &mut metrics_prev);
+                    finish_batch(
+                        &mut blas, spec.id, &counters, &router, infl,
+                        &mut metrics_prev,
+                    );
                 }
                 // Park until the test/bench releases (or drops) the fence.
                 let _ = release.recv();
                 // counters first: a submitter that observes the reply must
                 // also observe the updated metrics
                 counters.completed.fetch_add(1, Ordering::Relaxed);
+                if let Some(pc) = counters.cluster(spec.id) {
+                    pc.completed.fetch_add(1, Ordering::Relaxed);
+                }
                 let _ = job.reply.send(Ok(GemmOutcome::fence_ack(spec.id)));
             }
             JobPayload::Gemv(req) => {
-                // level-2 batches run synchronously (they are small and
-                // DMA-bound; pipelining them is not worth the state)
-                if let Some(infl) = inflight.take() {
-                    finish_batch(&mut blas, spec.id, &counters, infl, &mut metrics_prev);
+                let cap = (gemv_batch_cap(&blas, req.m, req.n) / depth).max(1);
+                let mut batch = batcher.collect(&source, job, cap);
+                drop_cancelled(&mut batch, &counters);
+                if batch.is_empty() {
+                    continue;
                 }
-                serve_gemv_batch(
-                    &mut blas, spec.id, &counters, &queue, &batcher, job, req,
+                serve_gemv(
+                    &mut blas,
+                    spec.id,
+                    &counters,
+                    &router,
+                    batch,
+                    req,
+                    depth,
+                    &mut inflight,
+                    &mut metrics_prev,
+                );
+            }
+            JobPayload::Level1(req) => {
+                // level-1 chunks are DMA-bound and stage transiently:
+                // run the coalesced batch synchronously
+                if let Some(infl) = inflight.take() {
+                    finish_batch(
+                        &mut blas, spec.id, &counters, &router, infl,
+                        &mut metrics_prev,
+                    );
+                }
+                let mut batch = batcher.collect(&source, job, usize::MAX);
+                drop_cancelled(&mut batch, &counters);
+                if batch.is_empty() {
+                    continue;
+                }
+                serve_level1(
+                    &mut blas, spec.id, &counters, &router, batch, req,
                     &mut metrics_prev,
                 );
             }
             JobPayload::Gemm(req) => {
                 let cap = (gemm_batch_cap(&blas, req.n) / depth).max(1);
-                let mut batch = batcher.collect(&queue, job, cap);
+                let mut batch = batcher.collect(&source, job, cap);
                 drop_cancelled(&mut batch, &counters);
                 if batch.is_empty() {
                     continue;
@@ -219,6 +295,7 @@ fn run(
                     &mut blas,
                     spec.id,
                     &counters,
+                    &router,
                     batch,
                     req,
                     depth,
@@ -231,7 +308,7 @@ fn run(
 
     // shutdown: drain whatever is still in flight before exiting
     if let Some(infl) = inflight.take() {
-        finish_batch(&mut blas, spec.id, &counters, infl, &mut metrics_prev);
+        finish_batch(&mut blas, spec.id, &counters, &router, infl, &mut metrics_prev);
     }
 }
 
@@ -275,7 +352,7 @@ fn gemv_batch_cap(blas: &HeroBlas, m: usize, n: usize) -> usize {
 /// request RNG stream; B either continues it (classic behavior) or comes
 /// from its own `b_seed` stream, so same-`b_seed` requests share a
 /// bit-identical B — the pattern the operand cache collapses into
-/// refcount bumps.
+/// refcount bumps (and the placement router routes to one cluster).
 fn synth_gemm(req: &GemmRequest, seed: u64, b_seed: Option<u64>)
               -> (Vec<f64>, Vec<f64>, Vec<f64>) {
     let n = req.n;
@@ -300,6 +377,14 @@ fn virt_us(blas: &HeroBlas, cycles: u64) -> u64 {
     (Cycles(cycles).to_ns(blas.engine.freq_hz()) / 1e3) as u64
 }
 
+/// Drain the operand cache's eviction feed into the router's affinity
+/// directory (tags of tracked operands that were reclaimed).
+fn sync_directory(blas: &mut HeroBlas, router: &PlacementRouter, cluster: u32) {
+    for tag in blas.engine.opcache.take_evicted_tags() {
+        router.note_evicted(tag, cluster);
+    }
+}
+
 /// Serve one coalesced gemm batch: host path and un-pipelined device
 /// path complete inline; the pipelined device path leaves the batch in
 /// flight (executed, completion word posted) for the next iteration to
@@ -309,6 +394,7 @@ fn serve_gemm(
     blas: &mut HeroBlas,
     cluster: u32,
     counters: &SchedCounters,
+    router: &PlacementRouter,
     batch: Vec<Job>,
     req: GemmRequest,
     depth: usize,
@@ -322,7 +408,7 @@ fn serve_gemm(
     // ---- host path: no staging, no pipeline ----
     if blas.policy.gemm(n, n, n) == ExecTarget::Host {
         if let Some(infl) = inflight.take() {
-            finish_batch(blas, cluster, counters, infl, metrics_prev);
+            finish_batch(blas, cluster, counters, router, infl, metrics_prev);
         }
         serve_gemm_host(blas, cluster, counters, batch, req, t0, metrics_prev);
         return;
@@ -353,7 +439,7 @@ fn serve_gemm(
         // the in-flight batch's operands may be what keeps us from
         // fitting: drain the pipeline and retry once serially
         let infl = inflight.take().expect("checked above");
-        finish_batch(blas, cluster, counters, infl, metrics_prev);
+        finish_batch(blas, cluster, counters, router, infl, metrics_prev);
         before = snap(blas); // re-baseline: the failed attempt + drain
                              // must not bill this batch
         stage = blas.gemm_batch_stage((n, n, n), 1.0, 0.0, &inputs, zero_copy);
@@ -361,12 +447,27 @@ fn serve_gemm(
     let staged_run = match stage {
         Ok(s) => s,
         Err(e) => {
-            reply_error(counters, &batch, &e.to_string());
+            // the failed staging may have OOM-reclaimed tagged entries:
+            // keep the affinity directory honest before bailing
+            sync_directory(blas, router, cluster);
+            reply_error(counters, cluster, &batch, &e.to_string());
             return;
         }
     };
     drop(inputs);
     let stage_acct = delta(before, snap(blas));
+
+    // ---- affinity bookkeeping: tracked B operands now resident here ----
+    if router.affinity_enabled() {
+        let b_keys = blas.gemm_staged_b_keys(&staged_run);
+        for (job, ck) in batch.iter().zip(b_keys) {
+            let JobPayload::Gemm(r) = &job.payload else { continue };
+            let (Some(bs), Some(ck)) = (r.b_seed, ck) else { continue };
+            let key = operand_key("gemm_b", n, bs);
+            blas.engine.opcache.set_tag(&ck, key);
+            router.note_resident(key, cluster);
+        }
+    }
 
     // ---- overlap credit, then drain the previous batch ----
     let mut hidden = 0u64;
@@ -374,7 +475,7 @@ fn serve_gemm(
     if let Some(infl) = inflight.take() {
         hidden = stage_acct.data_copy.min(infl.acct.compute);
         pipelined = true;
-        finish_batch(blas, cluster, counters, infl, metrics_prev);
+        finish_batch(blas, cluster, counters, router, infl, metrics_prev);
         // the drained batch is fully accounted and this batch's stage
         // delta is already materialized: safe to bound trace growth now
         // (everything after re-snapshots from the cleared trace)
@@ -388,7 +489,8 @@ fn serve_gemm(
         Err(e) => {
             // the overlap credit is dropped with the batch: never report
             // hidden map-in for work that produced no results
-            reply_error(counters, &batch, &e.to_string());
+            sync_directory(blas, router, cluster);
+            reply_error(counters, cluster, &batch, &e.to_string());
             return;
         }
     };
@@ -404,9 +506,7 @@ fn serve_gemm(
 
     let infl = Inflight {
         jobs: batch,
-        req,
-        data,
-        run,
+        run: InflightRun::Gemm { req, data, run },
         acct,
         queue_ms,
         work_us: t0.elapsed().as_micros() as u64,
@@ -414,15 +514,134 @@ fn serve_gemm(
     if depth >= 2 {
         *inflight = Some(infl); // finished when the next job (or none) arrives
     } else {
-        finish_batch(blas, cluster, counters, infl, metrics_prev);
+        finish_batch(blas, cluster, counters, router, infl, metrics_prev);
+    }
+}
+
+/// Serve one coalesced gemv batch: the level-2 twin of [`serve_gemm`] —
+/// host path inline, device path staged/executed and (when pipelining
+/// is on) left in flight for the next batch to overlap against.
+#[allow(clippy::too_many_arguments)]
+fn serve_gemv(
+    blas: &mut HeroBlas,
+    cluster: u32,
+    counters: &SchedCounters,
+    router: &PlacementRouter,
+    batch: Vec<Job>,
+    req: GemvRequest,
+    depth: usize,
+    inflight: &mut Option<Inflight>,
+    metrics_prev: &mut Metrics,
+) {
+    let t0 = Instant::now();
+    let (m, n) = (req.m, req.n);
+    blas.policy = DispatchPolicy::with_mode(req.mode);
+
+    // synthesize (A, x) per member; y starts at zero
+    let data: Vec<(Vec<f64>, Vec<f64>)> = batch
+        .iter()
+        .map(|j| {
+            let JobPayload::Gemv(r) = &j.payload else {
+                unreachable!("gemv batch contains only gemv jobs")
+            };
+            let mut rng = Rng::new(r.seed);
+            (rng.normal_vec(m * n), rng.normal_vec(n))
+        })
+        .collect();
+    let queue_ms = queue_waits(&batch);
+
+    // ---- host path: no staging, no pipeline ----
+    if blas.policy.gemv(m, n) == ExecTarget::Host {
+        if let Some(infl) = inflight.take() {
+            finish_batch(blas, cluster, counters, router, infl, metrics_prev);
+        }
+        serve_gemv_host(blas, cluster, counters, batch, req, data, t0, metrics_prev);
+        return;
+    }
+    let zero_copy = blas.policy.gemv(m, n) == ExecTarget::DeviceZeroCopy;
+    let ys: Vec<Vec<f64>> = vec![vec![0.0; m]; batch.len()];
+
+    // ---- stage (map-in) ----
+    if inflight.is_none() {
+        blas.reset_run();
+    }
+    let inputs: Vec<(&[f64], &[f64], &[f64])> = data
+        .iter()
+        .zip(ys.iter())
+        .map(|((a, x), y)| (a.as_slice(), x.as_slice(), y.as_slice()))
+        .collect();
+    let mut before = snap(blas);
+    let mut stage = blas.gemv_batch_stage((m, n), 1.0, 0.0, &inputs, zero_copy);
+    if stage.is_err() && inflight.is_some() {
+        let infl = inflight.take().expect("checked above");
+        finish_batch(blas, cluster, counters, router, infl, metrics_prev);
+        before = snap(blas);
+        stage = blas.gemv_batch_stage((m, n), 1.0, 0.0, &inputs, zero_copy);
+    }
+    let staged_run = match stage {
+        Ok(s) => s,
+        Err(e) => {
+            sync_directory(blas, router, cluster);
+            reply_error(counters, cluster, &batch, &e.to_string());
+            return;
+        }
+    };
+    drop(inputs);
+    drop(data); // staged: the batch state owns the padded copies now
+    let stage_acct = delta(before, snap(blas));
+
+    // ---- overlap credit, then drain the previous batch ----
+    let mut hidden = 0u64;
+    let mut pipelined = false;
+    if let Some(infl) = inflight.take() {
+        hidden = stage_acct.data_copy.min(infl.acct.compute);
+        pipelined = true;
+        finish_batch(blas, cluster, counters, router, infl, metrics_prev);
+        blas.reset_run();
+    }
+
+    // ---- execute ----
+    let before = snap(blas);
+    let run = match blas.gemv_batch_execute(staged_run) {
+        Ok(r) => r,
+        Err(e) => {
+            sync_directory(blas, router, cluster);
+            reply_error(counters, cluster, &batch, &e.to_string());
+            return;
+        }
+    };
+    if pipelined {
+        counters.pipelined_batches.fetch_add(1, Ordering::Relaxed);
+        counters
+            .overlap_hidden_us
+            .fetch_add(virt_us(blas, hidden), Ordering::Relaxed);
+    }
+    let mut acct = stage_acct;
+    acct.add(delta(before, snap(blas)));
+    acct.hidden = hidden;
+
+    let infl = Inflight {
+        jobs: batch,
+        run: InflightRun::Gemv { req, ys, run },
+        acct,
+        queue_ms,
+        work_us: t0.elapsed().as_micros() as u64,
+    };
+    if depth >= 2 {
+        *inflight = Some(infl);
+    } else {
+        finish_batch(blas, cluster, counters, router, infl, metrics_prev);
     }
 }
 
 /// Error replies for every member of a failed batch, with the failure
 /// counted once per member and the launch attempt counted as a batch.
-fn reply_error(counters: &SchedCounters, batch: &[Job], msg: &str) {
+fn reply_error(counters: &SchedCounters, cluster: u32, batch: &[Job], msg: &str) {
     counters.failed.fetch_add(batch.len() as u64, Ordering::Relaxed);
     counters.batches.fetch_add(1, Ordering::Relaxed);
+    if let Some(pc) = counters.cluster(cluster) {
+        pc.batches.fetch_add(1, Ordering::Relaxed);
+    }
     for job in batch {
         let _ = job.reply.send(Err(msg.to_string()));
     }
@@ -463,7 +682,7 @@ fn serve_gemm_host(
         match r {
             Ok(()) => checksums.push(c.iter().sum::<f64>()),
             Err(e) => {
-                reply_error(counters, &batch, &e.to_string());
+                reply_error(counters, cluster, &batch, &e.to_string());
                 return;
             }
         }
@@ -475,15 +694,118 @@ fn serve_gemm_host(
     );
 }
 
+/// Host-path gemv batch: one host kernel per member, no offload.
+#[allow(clippy::too_many_arguments)]
+fn serve_gemv_host(
+    blas: &mut HeroBlas,
+    cluster: u32,
+    counters: &SchedCounters,
+    batch: Vec<Job>,
+    req: GemvRequest,
+    data: Vec<(Vec<f64>, Vec<f64>)>,
+    t0: Instant,
+    metrics_prev: &mut Metrics,
+) {
+    let (m, n) = (req.m, req.n);
+    let queue_ms = queue_waits(&batch);
+    blas.reset_run();
+    let before = snap(blas);
+    let mut checksums = Vec::with_capacity(batch.len());
+    for (a, x) in &data {
+        let mut y = vec![0.0; m];
+        let r = blas.gemv(
+            crate::blas::Transpose::No, 1.0, a, (m, n), x, 0.0, &mut y,
+        );
+        match r {
+            Ok(()) => checksums.push(y.iter().sum::<f64>()),
+            Err(e) => {
+                reply_error(counters, cluster, &batch, &e.to_string());
+                return;
+            }
+        }
+    }
+    let acct = delta(before, snap(blas));
+    send_outcomes(
+        blas, cluster, counters, &batch, "gemv", (m, n), req.mode, &checksums,
+        acct, &queue_ms, t0.elapsed().as_micros() as u64, metrics_prev,
+    );
+}
+
+/// Serve one coalesced level-1 batch (axpy or dot): synthesize each
+/// member's vectors from its seed, dispatch through the policy (host
+/// loop or ONE fork-join device launch for the whole batch), reply with
+/// per-member checksums (axpy: sum of the updated y; dot: the scalar).
+fn serve_level1(
+    blas: &mut HeroBlas,
+    cluster: u32,
+    counters: &SchedCounters,
+    router: &PlacementRouter,
+    batch: Vec<Job>,
+    req: Level1Request,
+    metrics_prev: &mut Metrics,
+) {
+    let t0 = Instant::now();
+    let n = req.n;
+    let queue_ms = queue_waits(&batch);
+    blas.policy = DispatchPolicy::with_mode(req.mode);
+
+    // synthesize (alpha, x, y) per member from its own request
+    let data: Vec<(f64, Vec<f64>, Vec<f64>)> = batch
+        .iter()
+        .map(|j| {
+            let JobPayload::Level1(r) = &j.payload else {
+                unreachable!("level-1 batch contains only level-1 jobs")
+            };
+            let mut rng = Rng::new(r.seed);
+            (r.alpha, rng.normal_vec(n), rng.normal_vec(n))
+        })
+        .collect();
+    let kind = match req.op {
+        Level1Op::Axpy => OffloadKind::Axpy,
+        Level1Op::Dot => OffloadKind::Dot,
+    };
+    let out_len = if kind == OffloadKind::Axpy { n } else { 1 };
+    let mut outs: Vec<Vec<f64>> = vec![vec![0.0; out_len]; batch.len()];
+
+    blas.reset_run();
+    let before = snap(blas);
+    let result = {
+        let inputs: Vec<(f64, &[f64], &[f64])> = data
+            .iter()
+            .map(|(a, x, y)| (*a, x.as_slice(), y.as_slice()))
+            .collect();
+        let mut out_refs: Vec<&mut [f64]> =
+            outs.iter_mut().map(|o| o.as_mut_slice()).collect();
+        blas.level1_batch(kind, &inputs, &mut out_refs)
+    };
+    sync_directory(blas, router, cluster);
+    let acct = delta(before, snap(blas));
+
+    match result {
+        Ok(()) => {
+            let checksums: Vec<f64> = outs.iter().map(|o| o.iter().sum()).collect();
+            send_outcomes(
+                blas, cluster, counters, &batch, req.op.name(), (1, n), req.mode,
+                &checksums, acct, &queue_ms, t0.elapsed().as_micros() as u64,
+                metrics_prev,
+            );
+        }
+        Err(e) => {
+            reply_error(counters, cluster, &batch, &e.to_string());
+        }
+    }
+}
+
 /// Finish an executed batch: poll the mailbox completion word (posted at
 /// execute time; the poll keeps the worker protocol-shaped for a backend
 /// where compute genuinely overlaps the host), join, copy every member's
-/// C back, release the mappings, and reply.
+/// output back, release the mappings, and reply.
 fn finish_batch(
     blas: &mut HeroBlas,
     cluster: u32,
     counters: &SchedCounters,
-    mut infl: Inflight,
+    router: &PlacementRouter,
+    infl: Inflight,
     metrics_prev: &mut Metrics,
 ) {
     while !blas.offload_completion_pending() {
@@ -491,102 +813,55 @@ fn finish_batch(
     }
     let t_finish = Instant::now();
     let before = snap(blas);
-    let finish = {
-        let mut outs: Vec<&mut [f64]> =
-            infl.data.iter_mut().map(|(_, _, c)| c.as_mut_slice()).collect();
-        blas.gemm_batch_finish(infl.run, &mut outs)
+
+    let Inflight { jobs, run, acct: batch_acct, queue_ms, work_us } = infl;
+    let (finish, checksums, op, dims, mode) = match run {
+        InflightRun::Gemm { req, mut data, run } => {
+            let finish = {
+                let mut outs: Vec<&mut [f64]> =
+                    data.iter_mut().map(|(_, _, c)| c.as_mut_slice()).collect();
+                blas.gemm_batch_finish(run, &mut outs)
+            };
+            let checksums: Vec<f64> =
+                data.iter().map(|(_, _, c)| c.iter().sum()).collect();
+            (finish, checksums, "gemm", (req.n, req.n), req.mode)
+        }
+        InflightRun::Gemv { req, mut ys, run } => {
+            let finish = {
+                let mut outs: Vec<&mut [f64]> =
+                    ys.iter_mut().map(|y| y.as_mut_slice()).collect();
+                blas.gemv_batch_finish(run, &mut outs)
+            };
+            let checksums: Vec<f64> = ys.iter().map(|y| y.iter().sum()).collect();
+            (finish, checksums, "gemv", (req.m, req.n), req.mode)
+        }
     };
-    let mut acct = infl.acct;
+    let mut acct = batch_acct;
     acct.add(delta(before, snap(blas)));
+    sync_directory(blas, router, cluster);
 
     match finish {
         Ok(()) => {
-            let checksums: Vec<f64> =
-                infl.data.iter().map(|(_, _, c)| c.iter().sum()).collect();
-            let n = infl.req.n;
             // active wall time only: stage+execute plus this finish —
             // excluding the in-flight idle gap under pipelining
-            let service_us = infl.work_us + t_finish.elapsed().as_micros() as u64;
+            let service_us = work_us + t_finish.elapsed().as_micros() as u64;
             send_outcomes(
                 blas,
                 cluster,
                 counters,
-                &infl.jobs,
-                "gemm",
-                (n, n),
-                infl.req.mode,
+                &jobs,
+                op,
+                dims,
+                mode,
                 &checksums,
                 acct,
-                &infl.queue_ms,
+                &queue_ms,
                 service_us,
                 metrics_prev,
             );
         }
         Err(e) => {
-            reply_error(counters, &infl.jobs, &e.to_string());
-        }
-    }
-}
-
-/// Serve one coalesced gemv batch synchronously (host loop or one
-/// fork-join device launch, decided by the dispatch policy).
-#[allow(clippy::too_many_arguments)]
-fn serve_gemv_batch(
-    blas: &mut HeroBlas,
-    cluster: u32,
-    counters: &SchedCounters,
-    queue: &WorkQueue,
-    batcher: &Batcher,
-    first: Job,
-    req: GemvRequest,
-    metrics_prev: &mut Metrics,
-) {
-    let t0 = Instant::now();
-    let (m, n) = (req.m, req.n);
-    let cap = gemv_batch_cap(blas, m, n);
-    let mut batch = batcher.collect(queue, first, cap);
-    drop_cancelled(&mut batch, counters);
-    if batch.is_empty() {
-        return;
-    }
-    let queue_ms = queue_waits(&batch);
-
-    // synthesize (A, x) per member; y starts at zero
-    let data: Vec<(Vec<f64>, Vec<f64>)> = batch
-        .iter()
-        .map(|j| {
-            let JobPayload::Gemv(r) = &j.payload else {
-                unreachable!("gemv batch contains only gemv jobs")
-            };
-            let mut rng = Rng::new(r.seed);
-            (rng.normal_vec(m * n), rng.normal_vec(n))
-        })
-        .collect();
-    let mut ys: Vec<Vec<f64>> = vec![vec![0.0; m]; batch.len()];
-
-    blas.policy = DispatchPolicy::with_mode(req.mode);
-    blas.reset_run();
-    let before = snap(blas);
-    let result = {
-        let a_refs: Vec<&[f64]> = data.iter().map(|(a, _)| a.as_slice()).collect();
-        let x_refs: Vec<&[f64]> = data.iter().map(|(_, x)| x.as_slice()).collect();
-        let mut outs: Vec<&mut [f64]> =
-            ys.iter_mut().map(|y| y.as_mut_slice()).collect();
-        blas.gemv_batch((m, n), 1.0, 0.0, &a_refs, &x_refs, &mut outs)
-    };
-    let acct = delta(before, snap(blas));
-
-    match result {
-        Ok(()) => {
-            let checksums: Vec<f64> = ys.iter().map(|y| y.iter().sum()).collect();
-            send_outcomes(
-                blas, cluster, counters, &batch, "gemv", (m, n), req.mode,
-                &checksums, acct, &queue_ms, t0.elapsed().as_micros() as u64,
-                metrics_prev,
-            );
-        }
-        Err(e) => {
-            reply_error(counters, &batch, &e.to_string());
+            reply_error(counters, cluster, &jobs, &e.to_string());
         }
     }
 }
@@ -623,12 +898,16 @@ fn send_outcomes(
     // also observe the updated metrics
     counters.completed.fetch_add(b as u64, Ordering::Relaxed);
     counters.batches.fetch_add(1, Ordering::Relaxed);
+    if let Some(pc) = counters.cluster(cluster) {
+        pc.completed.fetch_add(b as u64, Ordering::Relaxed);
+        pc.batches.fetch_add(1, Ordering::Relaxed);
+    }
     if b > 1 {
         counters.batched_jobs.fetch_add(b as u64, Ordering::Relaxed);
     }
     counters.note_service_us((service_us / b as u64).max(1));
     let metrics_now = blas.metrics();
-    counters.absorb_engine_delta(metrics_prev, &metrics_now);
+    counters.absorb_engine_delta(cluster, metrics_prev, &metrics_now);
     *metrics_prev = metrics_now;
 
     for ((job, checksum), wait) in batch.iter().zip(checksums).zip(queue_ms) {

@@ -14,6 +14,9 @@
 //!                        "priority": "high", "seed": 7, "b_seed": 42}
 //!                   or:  {"op": "gemv", "m": 256, "n": 256,
 //!                        "mode": "device_only", "seed": 7}
+//!                   or:  {"op": "axpy", "n": 4096, "alpha": 1.5,
+//!                        "mode": "device_only", "seed": 7}
+//!                   or:  {"op": "dot", "n": 4096, "seed": 7}
 //! Response (one line):  {"ok": true, "op": "gemm", "m": 128, "n": 128,
 //!                        "mode": "device_only",
 //!                        "total_ms": ..., "data_copy_ms": ...,
@@ -33,7 +36,9 @@
 //! "queue full", "retry_after_ms": ...}.  A request whose reply times
 //! out at this layer cancels its job, so the pool never launches work
 //! for a dropped receiver.  `{"op": "metrics"}` reports the scheduler
-//! counters; `{"op": "shutdown"}` stops the server (used by tests).
+//! counters — pool aggregates plus a `clusters` array with each
+//! cluster's run-queue depth, cache hits and stolen / affinity-routed
+//! job counts; `{"op": "shutdown"}` stops the server (used by tests).
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, ErrorKind, Write};
@@ -46,8 +51,8 @@ use std::time::Duration;
 use crate::config::{DispatchMode, PlatformConfig};
 use crate::error::{Error, Result};
 use crate::sched::{
-    GemmOutcome, GemmRequest, GemvRequest, JobPayload, Priority, Scheduler,
-    SubmitError,
+    GemmOutcome, GemmRequest, GemvRequest, JobPayload, Level1Op, Level1Request,
+    Priority, Scheduler, SubmitError,
 };
 use crate::util::json_lite::Json;
 
@@ -142,6 +147,27 @@ fn parse_gemm(req: &Json) -> std::result::Result<(GemmRequest, Priority), String
     Ok((GemmRequest { n, mode, seed, b_seed }, priority))
 }
 
+/// Parse a level-1 request line (axpy or dot) into a payload + priority.
+fn parse_level1(
+    op: Level1Op,
+    req: &Json,
+) -> std::result::Result<(Level1Request, Priority), String> {
+    let n = req.get("n").and_then(|v| v.as_u64()).unwrap_or(4096) as usize;
+    if n == 0 || n > 1 << 20 {
+        return Err("n must be in 1..=1048576".into());
+    }
+    let (mode, priority) = parse_mode_priority(req)?;
+    let seed = req
+        .get("seed")
+        .and_then(|v| v.as_u64())
+        .unwrap_or(0xACE ^ n as u64 ^ ((op as u64) << 32));
+    let alpha = req.get("alpha").and_then(|v| v.as_f64()).unwrap_or(1.0);
+    if !alpha.is_finite() {
+        return Err("alpha must be finite".into());
+    }
+    Ok((Level1Request { op, n, mode, seed, alpha }, priority))
+}
+
 /// Parse a gemv request line into a job payload + priority.
 fn parse_gemv(req: &Json) -> std::result::Result<(GemvRequest, Priority), String> {
     let m = req.get("m").and_then(|v| v.as_u64()).unwrap_or(128) as usize;
@@ -177,6 +203,23 @@ fn handle_line(sched: &Scheduler, line: &str) -> (String, bool) {
         }
         "metrics" => {
             let m = sched.metrics();
+            let clusters: Vec<Json> = m
+                .clusters
+                .iter()
+                .map(|c| {
+                    obj(vec![
+                        ("cluster", Json::Num(c.cluster as f64)),
+                        ("queue_depth", Json::Num(c.queue_depth as f64)),
+                        ("completed", Json::Num(c.completed as f64)),
+                        ("batches", Json::Num(c.batches as f64)),
+                        ("stolen", Json::Num(c.stolen as f64)),
+                        ("affine_routed", Json::Num(c.affine_routed as f64)),
+                        ("cache_hits", Json::Num(c.cache_hits as f64)),
+                        ("cache_misses", Json::Num(c.cache_misses as f64)),
+                        ("bytes_to_device", Json::Num(c.bytes_to_device as f64)),
+                    ])
+                })
+                .collect();
             let mut j = obj(vec![
                 ("ok", Json::Bool(true)),
                 ("submitted", Json::Num(m.submitted as f64)),
@@ -193,8 +236,12 @@ fn handle_line(sched: &Scheduler, line: &str) -> (String, bool) {
                 ("cache_evictions", Json::Num(m.cache_evictions as f64)),
                 ("bytes_to_device", Json::Num(m.bytes_to_device as f64)),
                 ("bytes_copy_elided", Json::Num(m.bytes_copy_elided as f64)),
+                ("stolen", Json::Num(m.stolen as f64)),
+                ("affine_routed", Json::Num(m.affine_routed as f64)),
+                ("big_shape_routed", Json::Num(m.big_shape_routed as f64)),
                 ("queue_depth_peak", Json::Num(m.queue_depth_peak as f64)),
                 ("pool", Json::Num(sched.pool_size() as f64)),
+                ("clusters", Json::Arr(clusters)),
             ]);
             (compact(&mut j), false)
         }
@@ -211,6 +258,14 @@ fn handle_line(sched: &Scheduler, line: &str) -> (String, bool) {
                 Err(msg) => return (err_line(&msg), false),
             };
             submit_and_wait(sched, priority, JobPayload::Gemv(gemv))
+        }
+        "axpy" | "dot" => {
+            let l1op = if op == "axpy" { Level1Op::Axpy } else { Level1Op::Dot };
+            let (l1, priority) = match parse_level1(l1op, &req) {
+                Ok(p) => p,
+                Err(msg) => return (err_line(&msg), false),
+            };
+            submit_and_wait(sched, priority, JobPayload::Level1(l1))
         }
         other => (err_line(&format!("unknown op '{other}'")), false),
     }
@@ -305,12 +360,19 @@ pub fn serve(
     let listener = TcpListener::bind(("127.0.0.1", port))
         .map_err(|e| Error::Runtime(format!("bind 127.0.0.1:{port}: {e}")))?;
     let bound = listener.local_addr()?.port();
+    let cap = sched.capacity();
     eprintln!(
         "hero-blas serve: listening on 127.0.0.1:{bound} \
-         (pool {} clusters, queue {} deep, batch <= {})",
+         (pool {} clusters x {} tiles, queue {} deep, batch <= {}, \
+         big-shape lane: {})",
         sched.pool_size(),
+        cap.tiles_per_cluster,
         cfg.sched.queue_capacity,
         cfg.sched.batch_max,
+        match cap.big {
+            Some(c) => format!("cluster {c} ({} B)", cap.max_slice()),
+            None => "off".into(),
+        },
     );
     if let Some(tx) = ready {
         let _ = tx.send(bound);
@@ -444,6 +506,34 @@ mod tests {
         assert!(parse_gemv(&req).is_err());
         let req = Json::parse(r#"{"op": "gemv", "n": 0}"#).unwrap();
         assert!(parse_gemv(&req).is_err());
+    }
+
+    #[test]
+    fn parse_level1_defaults_and_limits() {
+        let req = Json::parse(r#"{"op": "axpy"}"#).unwrap();
+        let (l1, p) = parse_level1(Level1Op::Axpy, &req).unwrap();
+        assert_eq!((l1.op, l1.n), (Level1Op::Axpy, 4096));
+        assert_eq!(l1.alpha, 1.0);
+        assert_eq!(p, Priority::Normal);
+        // stable default seed, op-dependent so axpy/dot don't collide
+        let (dot, _) = parse_level1(Level1Op::Dot, &req).unwrap();
+        assert_ne!(l1.seed, dot.seed);
+
+        let req = Json::parse(
+            r#"{"op": "axpy", "n": 1024, "alpha": 2.5, "seed": 9,
+                "mode": "device_only", "priority": "high"}"#,
+        )
+        .unwrap();
+        let (l1, p) = parse_level1(Level1Op::Axpy, &req).unwrap();
+        assert_eq!((l1.n, l1.seed), (1024, 9));
+        assert_eq!(l1.alpha, 2.5);
+        assert_eq!(l1.mode, DispatchMode::DeviceOnly);
+        assert_eq!(p, Priority::High);
+
+        let req = Json::parse(r#"{"op": "dot", "n": 0}"#).unwrap();
+        assert!(parse_level1(Level1Op::Dot, &req).is_err());
+        let req = Json::parse(r#"{"op": "dot", "n": 9999999}"#).unwrap();
+        assert!(parse_level1(Level1Op::Dot, &req).is_err());
     }
 
     #[test]

@@ -148,6 +148,10 @@ impl TomlDoc {
         self.get(path).and_then(|v| v.as_str())
     }
 
+    pub fn opt_bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(|v| v.as_bool())
+    }
+
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.values.keys().map(|s| s.as_str())
     }

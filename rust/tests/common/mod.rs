@@ -1,5 +1,9 @@
 //! Shared helpers for integration tests (require `make artifacts`).
 
+// Each integration-test binary compiles this module separately and uses
+// only a subset of the helpers; the unused ones are not dead code.
+#![allow(dead_code)]
+
 use std::path::PathBuf;
 
 use hero_blas::blas::{DispatchPolicy, HeroBlas};

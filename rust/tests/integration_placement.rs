@@ -1,0 +1,511 @@
+//! The placement router end-to-end: affinity routing cuts the shared
+//! operand to ~one cold copy per pool, stealing drains a skewed run
+//! queue with bit-identical checksums, oversized shapes land on the
+//! big-shape lane instead of erroring, level-1 requests coalesce, and
+//! the gemv path pipelines.
+
+mod common;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use common::artifacts_dir;
+use hero_blas::config::{DispatchMode, PlatformConfig};
+use hero_blas::sched::affinity::operand_key;
+use hero_blas::sched::{
+    GemmRequest, GemvRequest, JobPayload, Level1Op, Level1Request, Priority,
+    Scheduler,
+};
+use hero_blas::util::rng::Rng;
+
+fn cfg(pool: u32, batch_max: u32) -> PlatformConfig {
+    let mut cfg = PlatformConfig::default();
+    cfg.sched.pool_clusters = pool;
+    cfg.sched.queue_capacity = 64;
+    cfg.sched.batch_window_ms = 0;
+    cfg.sched.batch_max = batch_max;
+    cfg
+}
+
+fn gemm(n: usize, seed: u64, b_seed: Option<u64>) -> JobPayload {
+    JobPayload::Gemm(GemmRequest {
+        n,
+        mode: DispatchMode::DeviceOnly,
+        seed,
+        b_seed,
+    })
+}
+
+/// Park a worker on a fence and wait until it is claimed.
+fn park(sched: &Scheduler) -> (mpsc::Sender<()>, hero_blas::sched::Submission) {
+    let (release, fence_rx) = mpsc::channel();
+    let fence = sched
+        .submit(Priority::High, JobPayload::Fence(fence_rx))
+        .expect("fence submit");
+    let t0 = Instant::now();
+    while sched.queue_depth() > 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "fence never claimed");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    (release, fence)
+}
+
+/// The checksum a shared-B request (n, seed, b_seed) must produce.
+fn expected_checksum_b(n: usize, seed: u64, b_seed: u64) -> f64 {
+    let a = Rng::new(seed).normal_vec(n * n);
+    let b = Rng::new(b_seed).normal_vec(n * n);
+    let mut sum = 0.0;
+    for i in 0..n {
+        for k in 0..n {
+            let aik = a[i * n + k];
+            for j in 0..n {
+                sum += aik * b[k * n + j];
+            }
+        }
+    }
+    sum
+}
+
+/// ISSUE 3 acceptance: on the shared-B workload with pool 2, affinity
+/// routing stages B once per POOL (one cold miss) where round-robin
+/// placement stages it once per CLUSTER — visible in `bytes_to_device`
+/// and the per-cluster cache-hit counters.
+#[test]
+fn affinity_routing_warms_one_cluster_and_cuts_copies() {
+    let run = |affinity: bool| {
+        let mut c = cfg(2, 1);
+        c.sched.cache.cache_frac = 0.4;
+        c.sched.cache.cache_max_entries = 16;
+        c.sched.placement.affinity = affinity;
+        c.sched.placement.steal = false; // isolate routing from stealing
+        let sched = Scheduler::new(&c, &artifacts_dir()).unwrap();
+        let mut clusters = Vec::new();
+        for i in 0..6u64 {
+            let out = sched
+                .submit(Priority::Normal, gemm(64, 100 + i, Some(42)))
+                .unwrap()
+                .recv_timeout(Duration::from_secs(300))
+                .unwrap()
+                .unwrap();
+            let expect = expected_checksum_b(64, 100 + i, 42);
+            let tol = 1e-6 * expect.abs().max(1.0);
+            assert!((out.checksum - expect).abs() < tol, "req {i} checksum");
+            clusters.push(out.cluster);
+        }
+        let m = sched.metrics();
+        sched.shutdown();
+        (clusters, m)
+    };
+
+    let (rr_clusters, rr) = run(false);
+    let (af_clusters, af) = run(true);
+
+    // affinity: every request on ONE cluster, deterministically
+    assert!(
+        af_clusters.iter().all(|&c| c == af_clusters[0]),
+        "affine stream split across clusters: {af_clusters:?}"
+    );
+    assert_eq!(af.affine_routed, 6);
+    assert_eq!(rr.affine_routed, 0);
+    // round-robin spread the stream (both clusters served something)
+    assert!(rr_clusters.iter().any(|&c| c != rr_clusters[0]), "{rr_clusters:?}");
+
+    // shared B staged once per pool vs once per cluster: one extra hit,
+    // one fewer cold copy
+    assert_eq!(af.cache_hits, 5, "{}", af.summary());
+    assert_eq!(rr.cache_hits, 4, "{}", rr.summary());
+    assert!(
+        af.bytes_to_device < rr.bytes_to_device,
+        "affinity did not cut cold copies: {} vs {}",
+        af.bytes_to_device,
+        rr.bytes_to_device
+    );
+
+    // per-cluster breakdown: the warm cluster owns all hits and batches
+    let warm = af_clusters[0] as usize;
+    assert_eq!(af.clusters[warm].cache_hits, 5);
+    assert_eq!(af.clusters[warm].affine_routed, 6);
+    assert_eq!(af.clusters[1 - warm].completed, 0);
+}
+
+/// ISSUE 3 acceptance: under skew (every job affine to a fenced
+/// cluster) the idle peer steals the backlog — steal counter > 0 and
+/// checksums bit-identical to the placement-off (unstolen) run.
+#[test]
+fn steal_under_skew_matches_unstolen_checksums() {
+    // a b_seed whose hash-home is cluster 0 (where the fence parks)
+    let bs = (0..64)
+        .find(|&s| operand_key("gemm_b", 64, s) % 2 == 0)
+        .expect("some seed homes on cluster 0");
+
+    let run = |steal: bool| {
+        let mut c = cfg(2, 1);
+        c.sched.placement.affinity = true;
+        c.sched.placement.steal = steal;
+        let sched = Scheduler::new(&c, &artifacts_dir()).unwrap();
+        // the first fence routes to cluster 0 deterministically
+        let (release, fence) = park(&sched);
+        let subs: Vec<_> = (0..4u64)
+            .map(|i| {
+                (
+                    300 + i,
+                    sched
+                        .submit(Priority::Normal, gemm(64, 300 + i, Some(bs)))
+                        .unwrap(),
+                )
+            })
+            .collect();
+        let mut results = Vec::new();
+        for (seed, sub) in subs {
+            let out = sub
+                .recv_timeout(Duration::from_secs(300))
+                .unwrap()
+                .unwrap();
+            results.push((seed, out.checksum, out.cluster));
+        }
+        release.send(()).unwrap();
+        assert!(fence.recv_timeout(Duration::from_secs(120)).unwrap().is_ok());
+        let m = sched.metrics();
+        sched.shutdown();
+        (results, m)
+    };
+
+    // steal on: worker 0 is parked, so the jobs can only complete if
+    // worker 1 stole them — no fence release until all replies arrive
+    let (stolen_results, stolen_m) = run(true);
+    for (_, _, cluster) in &stolen_results {
+        assert_eq!(*cluster, 1, "a parked cluster served a job");
+    }
+    assert_eq!(stolen_m.stolen, 4, "{}", stolen_m.summary());
+    assert_eq!(stolen_m.clusters[1].stolen, 4);
+
+    // steal off: the jobs wait for the fenced home cluster
+    let run_off = |_: ()| {
+        let mut c = cfg(2, 1);
+        c.sched.placement.affinity = true;
+        c.sched.placement.steal = false;
+        let sched = Scheduler::new(&c, &artifacts_dir()).unwrap();
+        let (release, fence) = park(&sched);
+        let subs: Vec<_> = (0..4u64)
+            .map(|i| {
+                (
+                    300 + i,
+                    sched
+                        .submit(Priority::Normal, gemm(64, 300 + i, Some(bs)))
+                        .unwrap(),
+                )
+            })
+            .collect();
+        release.send(()).unwrap();
+        assert!(fence.recv_timeout(Duration::from_secs(120)).unwrap().is_ok());
+        let mut results = Vec::new();
+        for (seed, sub) in subs {
+            let out = sub
+                .recv_timeout(Duration::from_secs(300))
+                .unwrap()
+                .unwrap();
+            results.push((seed, out.checksum, out.cluster));
+        }
+        let m = sched.metrics();
+        sched.shutdown();
+        (results, m)
+    };
+    let (home_results, home_m) = run_off(());
+    assert_eq!(home_m.stolen, 0);
+    for (_, _, cluster) in &home_results {
+        assert_eq!(*cluster, 0, "home-cluster run must stay on cluster 0");
+    }
+
+    // bit-identical checksums: stealing changes placement, not numerics
+    for ((s1, c1, _), (s2, c2, _)) in
+        stolen_results.iter().zip(home_results.iter())
+    {
+        assert_eq!(s1, s2);
+        assert_eq!(c1, c2, "seed {s1}: stolen {c1} != unstolen {c2}");
+    }
+}
+
+/// ISSUE 3 acceptance: a GEMM too large for an even pool-4 slice errors
+/// under the even split but stages and completes on the big-shape lane;
+/// small requests keep out of the big lane's queue.
+#[test]
+fn big_shape_lane_serves_oversized_gemm() {
+    // steal off throughout: this test pins lane *segregation* (an idle
+    // big-lane worker legitimately steals small jobs otherwise)
+    // even split: 16 MiB slices cannot stage 3 * 896^2 * 8 B (~19 MB)
+    let mut even = cfg(4, 1);
+    even.sched.placement.steal = false;
+    let sched = Scheduler::new(&even, &artifacts_dir()).unwrap();
+    let err = sched
+        .submit(Priority::Normal, gemm(896, 7, None))
+        .unwrap()
+        .recv_timeout(Duration::from_secs(300))
+        .unwrap();
+    assert!(err.is_err(), "even split should OOM on n=896: {err:?}");
+    sched.shutdown();
+
+    // big-shape lane: cluster 0 holds 95% of the partition
+    let mut c = cfg(4, 1);
+    c.sched.placement.big_shape_frac = 0.95;
+    c.sched.placement.steal = false;
+    let sched = Scheduler::new(&c, &artifacts_dir()).unwrap();
+    let out = sched
+        .submit(Priority::Normal, gemm(896, 7, None))
+        .unwrap()
+        .recv_timeout(Duration::from_secs(300))
+        .unwrap()
+        .expect("big-shape lane must stage n=896");
+    assert_eq!(out.cluster, 0, "oversized job must run on the big lane");
+    assert_eq!(out.n, 896);
+    assert!(out.checksum.is_finite());
+
+    // small jobs avoid the big lane (round-robin over clusters 1..3)
+    for i in 0..3u64 {
+        let out = sched
+            .submit(Priority::Normal, gemm(64, 50 + i, None))
+            .unwrap()
+            .recv_timeout(Duration::from_secs(300))
+            .unwrap()
+            .unwrap();
+        assert_ne!(out.cluster, 0, "small job routed to the big lane");
+    }
+    let m = sched.metrics();
+    assert_eq!(m.big_shape_routed, 1, "{}", m.summary());
+    sched.shutdown();
+}
+
+/// Device-DRAM arithmetic for the headline shape: the pool-4 big-shape
+/// slice stages all three n=1600 f64 operands (the unpartitioned
+/// range), which the even pool-4 split cannot.  Engine-level so the
+/// test stays compute-free.
+#[test]
+fn big_slice_stages_n1600_operands() {
+    use hero_blas::omp::engine::OffloadEngine;
+    use hero_blas::sched::DevicePool;
+    use hero_blas::soc::Platform;
+
+    let mut base = PlatformConfig::default();
+    base.sched.placement.big_shape_frac = 0.95;
+    let pool = DevicePool::partition(&base, 4).unwrap();
+
+    let n = 1600usize;
+    let operand = || vec![1u8; n * n * 8];
+    let (a, b, c) = (operand(), operand(), operand());
+
+    // big lane: all three operands stage
+    let big_cfg = pool.specs()[0].cfg.clone();
+    let mut e = OffloadEngine::new(Platform::new(big_cfg)).unwrap();
+    let ba = e.map_to(&a, false, "a").unwrap();
+    let bb = e.map_to(&b, false, "b").unwrap();
+    let bc = e.map_to(&c, false, "c").unwrap();
+    e.unmap(ba, "a").unwrap();
+    e.unmap(bb, "b").unwrap();
+    e.unmap(bc, "c").unwrap();
+
+    // a small slice (and the old even split) cannot stage even one
+    let small_cfg = pool.specs()[1].cfg.clone();
+    let mut e = OffloadEngine::new(Platform::new(small_cfg)).unwrap();
+    assert!(e.map_to(&a, false, "a").is_err());
+    let even = DevicePool::partition(&PlatformConfig::default(), 4).unwrap();
+    let mut e = OffloadEngine::new(Platform::new(even.specs()[0].cfg.clone())).unwrap();
+    assert!(e.map_to(&a, false, "a").is_err());
+}
+
+/// Same-length level-1 requests coalesce into ONE fork-join launch with
+/// correct per-member results — the last device path that paid the
+/// launch per call.
+#[test]
+fn level1_requests_batch_into_one_launch() {
+    let sched = Scheduler::new(&cfg(1, 8), &artifacts_dir()).unwrap();
+    let axpy = |seed, alpha| {
+        JobPayload::Level1(Level1Request {
+            op: Level1Op::Axpy,
+            n: 4096,
+            mode: DispatchMode::DeviceOnly,
+            seed,
+            alpha,
+        })
+    };
+    let dot = |seed| {
+        JobPayload::Level1(Level1Request {
+            op: Level1Op::Dot,
+            n: 4096,
+            mode: DispatchMode::DeviceOnly,
+            seed,
+            alpha: 1.0,
+        })
+    };
+    let expect_axpy = |seed: u64, alpha: f64| {
+        let mut rng = Rng::new(seed);
+        let x = rng.normal_vec(4096);
+        let y = rng.normal_vec(4096);
+        x.iter().zip(&y).map(|(xi, yi)| alpha * xi + yi).sum::<f64>()
+    };
+    let expect_dot = |seed: u64| {
+        let mut rng = Rng::new(seed);
+        let x = rng.normal_vec(4096);
+        let y = rng.normal_vec(4096);
+        x.iter().zip(&y).map(|(xi, yi)| xi * yi).sum::<f64>()
+    };
+
+    // solo baseline: one un-batched launch
+    let solo = sched
+        .submit(Priority::Normal, axpy(7, 1.5))
+        .unwrap()
+        .recv_timeout(Duration::from_secs(300))
+        .unwrap()
+        .unwrap();
+    assert_eq!((solo.op, solo.batch_size), ("axpy", 1));
+    assert!(solo.fork_join_ms > 0.0);
+    let tol = 1e-6 * solo.checksum.abs().max(1.0);
+    assert!((solo.checksum - expect_axpy(7, 1.5)).abs() < tol);
+
+    // park, queue 4 same-length axpys (distinct alphas), release
+    let (release, fence) = park(&sched);
+    let receivers: Vec<_> = (0..4u64)
+        .map(|i| {
+            (
+                i,
+                sched
+                    .submit(Priority::Normal, axpy(400 + i, 1.0 + i as f64))
+                    .unwrap(),
+            )
+        })
+        .collect();
+    release.send(()).unwrap();
+    assert!(fence.recv_timeout(Duration::from_secs(120)).unwrap().is_ok());
+    for (i, rx) in receivers {
+        let out = rx.recv_timeout(Duration::from_secs(300)).unwrap().unwrap();
+        assert_eq!(out.batch_size, 4, "expected all four to share one launch");
+        assert_eq!(out.op, "axpy");
+        assert!(
+            out.fork_join_ms < solo.fork_join_ms * 0.5,
+            "no amortization: batched {} vs solo {}",
+            out.fork_join_ms,
+            solo.fork_join_ms
+        );
+        let expect = expect_axpy(400 + i, 1.0 + i as f64);
+        let tol = 1e-6 * expect.abs().max(1.0);
+        assert!((out.checksum - expect).abs() < tol, "member {i} checksum");
+    }
+
+    // dot coalesces too, and never with axpy (different op key)
+    let (release, fence) = park(&sched);
+    let receivers: Vec<_> = (0..3u64)
+        .map(|i| (i, sched.submit(Priority::Normal, dot(500 + i)).unwrap()))
+        .collect();
+    release.send(()).unwrap();
+    assert!(fence.recv_timeout(Duration::from_secs(120)).unwrap().is_ok());
+    for (i, rx) in receivers {
+        let out = rx.recv_timeout(Duration::from_secs(300)).unwrap().unwrap();
+        assert_eq!((out.op, out.batch_size), ("dot", 3));
+        let expect = expect_dot(500 + i);
+        let tol = 1e-6 * expect.abs().max(1.0);
+        assert!((out.checksum - expect).abs() < tol, "member {i} checksum");
+    }
+    sched.shutdown();
+}
+
+/// The gemv device path pipelines like gemm: back-to-back gemv batches
+/// overlap map-in with compute, with checksums identical to the
+/// unpipelined scheduler.
+#[test]
+fn gemv_pipeline_overlaps_with_identical_checksums() {
+    let gemv = |seed| {
+        JobPayload::Gemv(GemvRequest {
+            m: 64,
+            n: 64,
+            mode: DispatchMode::DeviceOnly,
+            seed,
+        })
+    };
+    let run = |pipeline: bool| {
+        let mut c = cfg(1, 1);
+        c.sched.cache.cache_frac = if pipeline { 0.4 } else { 0.0 };
+        c.sched.cache.cache_max_entries = 16;
+        c.sched.cache.pipeline_depth = if pipeline { 2 } else { 1 };
+        let sched = Scheduler::new(&c, &artifacts_dir()).unwrap();
+        let (release, fence) = park(&sched);
+        let receivers: Vec<_> = (0..4u64)
+            .map(|i| sched.submit(Priority::Normal, gemv(600 + i)).unwrap())
+            .collect();
+        release.send(()).unwrap();
+        assert!(fence.recv_timeout(Duration::from_secs(120)).unwrap().is_ok());
+        let sums: Vec<f64> = receivers
+            .into_iter()
+            .map(|rx| {
+                let out =
+                    rx.recv_timeout(Duration::from_secs(300)).unwrap().unwrap();
+                assert_eq!(out.op, "gemv");
+                out.checksum
+            })
+            .collect();
+        let m = sched.metrics();
+        sched.shutdown();
+        (sums, m)
+    };
+
+    let (plain_sums, plain_m) = run(false);
+    let (fast_sums, fast_m) = run(true);
+    assert_eq!(plain_sums, fast_sums, "pipelining must not change results");
+    assert!(fast_m.pipelined_batches > 0, "{}", fast_m.summary());
+    assert!(fast_m.overlap_hidden_us > 0, "{}", fast_m.summary());
+    assert_eq!(plain_m.pipelined_batches, 0);
+}
+
+/// The serve `metrics` op reports the per-cluster breakdown (queue
+/// depth, cache hits, stolen / affinity-routed counts) next to the pool
+/// aggregates.
+#[test]
+fn serve_metrics_reports_per_cluster_breakdown() {
+    use hero_blas::util::json_lite::Json;
+
+    let dir = artifacts_dir();
+    let mut c = cfg(2, 8);
+    c.sched.cache.cache_frac = 0.4;
+    let (tx, rx) = mpsc::channel();
+    let server =
+        std::thread::spawn(move || hero_blas::serve::serve(c, &dir, 0, Some(tx)));
+    let port = rx.recv_timeout(Duration::from_secs(300)).unwrap();
+
+    let mut stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut request = |line: &str| -> Json {
+        stream.write_all(line.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        stream.flush().unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        Json::parse(resp.trim()).unwrap()
+    };
+
+    for seed in 0..4 {
+        let r = request(&format!(
+            r#"{{"op": "gemm", "n": 64, "mode": "device_only",
+                "seed": {seed}, "b_seed": 42}}"#
+        ));
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r:?}");
+    }
+    let m = request(r#"{"op": "metrics"}"#);
+    assert_eq!(m.get("ok"), Some(&Json::Bool(true)));
+    let affine = m.get("affine_routed").and_then(|v| v.as_u64()).unwrap();
+    assert!(affine >= 4, "affinity routing not reported: {m:?}");
+    let clusters = m.get("clusters").and_then(|v| v.as_arr()).unwrap();
+    assert_eq!(clusters.len(), 2);
+    let completed_sum: u64 = clusters
+        .iter()
+        .map(|c| c.get("completed").and_then(|v| v.as_u64()).unwrap())
+        .sum();
+    let total = m.get("completed").and_then(|v| v.as_u64()).unwrap();
+    assert_eq!(completed_sum, total);
+    for c in clusters {
+        for key in ["queue_depth", "stolen", "affine_routed", "cache_hits"] {
+            assert!(c.get(key).is_some(), "missing per-cluster field {key}");
+        }
+    }
+
+    let _ = request(r#"{"op": "shutdown"}"#);
+    server.join().unwrap().unwrap();
+}
