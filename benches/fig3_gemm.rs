@@ -58,7 +58,9 @@ fn main() {
             a.matmul(&b, &mut blas).unwrap()
         });
     }
-    blas.policy = DispatchPolicy::with_mode(DispatchMode::HostOnly);
+    // mode only — a wholesale policy replacement would strip the cost
+    // model the ablation's Auto column below must dispatch on
+    blas.policy.mode = DispatchMode::HostOnly;
     for &n in &[64usize, 128, 256] {
         let mut rng = Rng::new(n as u64);
         let a = NdArray::<f64>::randn(&mut rng, &[n, n]);
@@ -84,7 +86,9 @@ fn main() {
         let b = rng.normal_vec(k * n);
         let mut row = format!("{label:<26}");
         for mode in [DispatchMode::HostOnly, DispatchMode::DeviceOnly, DispatchMode::Auto] {
-            blas.policy = DispatchPolicy::with_mode(mode);
+            // mode only: the Auto column must dispatch on the session's
+            // cost model, not the static-threshold fallback
+            blas.policy.mode = mode;
             let mut c = vec![0.0; m * n];
             blas.reset_run();
             blas.gemm(

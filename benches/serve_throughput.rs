@@ -45,6 +45,12 @@ struct Knobs {
     /// Placement router: affinity routing + work stealing on/off (off =
     /// PR 1's round-robin-equivalent any-worker dequeue).
     placement: bool,
+    /// Mixed-size `auto`-mode workload (sizes straddling the Figure-3
+    /// crossover) instead of fixed-size device_only requests — the
+    /// dispatch-model sweep.
+    auto_mixed: bool,
+    /// Online cost-model calibration (`[cost] calibrate`) on/off.
+    calibrate: bool,
 }
 
 /// Scheduler counters scraped over the wire before shutdown.
@@ -57,6 +63,9 @@ struct Counters {
     overlap_hidden_us: u64,
     stolen: u64,
     affine_routed: u64,
+    /// Live calibrated crossover estimates scraped from the metrics op.
+    crossover_gemm_n: u64,
+    crossover_gemm_warm_n: u64,
 }
 
 struct Point {
@@ -79,19 +88,24 @@ impl Point {
         format!(
             "{{\"bench\": \"serve_throughput\", \"n\": {N}, \"pool\": {}, \
              \"batching\": {}, \"cache\": {}, \"pipeline\": {}, \
-             \"shared_b\": {}, \"placement\": {}, \"clients\": {}, \
+             \"shared_b\": {}, \"placement\": {}, \"auto_mixed\": {}, \
+             \"calibrate\": {}, \"clients\": {}, \
              \"requests\": {}, \
              \"wall_ms\": {:.1}, \"rps\": {:.1}, \"retries\": {}, \
              \"bytes_to_device\": {}, \"bytes_copy_elided\": {}, \
              \"cache_hits\": {}, \"pipelined_batches\": {}, \
              \"overlap_hidden_us\": {}, \"stolen\": {}, \
-             \"affine_routed\": {}, \"speedup_vs_serial\": {:.2}}}",
+             \"affine_routed\": {}, \
+             \"crossover_estimate\": {{\"gemm_n\": {}, \"gemm_warm_n\": {}}}, \
+             \"speedup_vs_serial\": {:.2}}}",
             k.pool,
             k.batching,
             k.cache,
             k.pipeline,
             k.shared_b,
             k.placement,
+            k.auto_mixed,
+            k.calibrate,
             self.clients,
             self.clients * self.per_client,
             self.wall.as_secs_f64() * 1e3,
@@ -104,14 +118,27 @@ impl Point {
             c.overlap_hidden_us,
             c.stolen,
             c.affine_routed,
+            c.crossover_gemm_n,
+            c.crossover_gemm_warm_n,
             speedup_vs_serial,
         )
     }
 }
 
-fn request_line(client: usize, per_client: usize, done: usize, shared_b: bool) -> String {
+/// Sizes of the mixed `auto`-mode workload: straddling the Figure-3
+/// crossover, so the dispatch model splits them host/device.
+const MIXED_SIZES: [usize; 4] = [32, 64, 96, 128];
+
+fn request_line(client: usize, per_client: usize, done: usize, knobs: &Knobs) -> String {
     let seed = (client * per_client + done) as u64;
-    if shared_b {
+    if knobs.auto_mixed {
+        let n = MIXED_SIZES[done % MIXED_SIZES.len()];
+        return format!(
+            "{{\"op\": \"gemm\", \"n\": {n}, \"mode\": \"auto\", \
+             \"seed\": {seed}}}\n"
+        );
+    }
+    if knobs.shared_b {
         format!(
             "{{\"op\": \"gemm\", \"n\": {N}, \"mode\": \"device_only\", \
              \"seed\": {seed}, \"b_seed\": 42}}\n"
@@ -136,6 +163,7 @@ fn run_point(knobs: Knobs, clients: usize, per_client: usize) -> Point {
     cfg.sched.cache.pipeline_depth = if knobs.pipeline { 2 } else { 1 };
     cfg.sched.placement.affinity = knobs.placement;
     cfg.sched.placement.steal = knobs.placement;
+    cfg.cost.calibrate = knobs.calibrate;
 
     let dir = hero_blas::find_artifacts_dir().expect("run `make artifacts` first");
     let (tx, rx) = mpsc::channel();
@@ -154,7 +182,7 @@ fn run_point(knobs: Knobs, clients: usize, per_client: usize) -> Point {
                 let mut retries = 0u64;
                 let mut done = 0usize;
                 while done < per_client {
-                    let line = request_line(c, per_client, done, knobs.shared_b);
+                    let line = request_line(c, per_client, done, &knobs);
                     stream.write_all(line.as_bytes()).unwrap();
                     stream.flush().unwrap();
                     let mut resp = String::new();
@@ -187,6 +215,12 @@ fn run_point(knobs: Knobs, clients: usize, per_client: usize) -> Point {
     reader.read_line(&mut resp).unwrap();
     let m = Json::parse(resp.trim()).expect("metrics JSON");
     let get = |k: &str| m.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
+    let xget = |k: &str| {
+        m.get("crossover_estimate")
+            .and_then(|x| x.get(k))
+            .and_then(|v| v.as_u64())
+            .unwrap_or(0)
+    };
     let counters = Counters {
         bytes_to_device: get("bytes_to_device"),
         bytes_copy_elided: get("bytes_copy_elided"),
@@ -195,6 +229,8 @@ fn run_point(knobs: Knobs, clients: usize, per_client: usize) -> Point {
         overlap_hidden_us: get("overlap_hidden_us"),
         stolen: get("stolen"),
         affine_routed: get("affine_routed"),
+        crossover_gemm_n: xget("gemm_n"),
+        crossover_gemm_warm_n: xget("gemm_warm_n"),
     };
     stream.write_all(b"{\"op\": \"shutdown\"}\n").unwrap();
     stream.flush().unwrap();
@@ -221,6 +257,8 @@ fn main() {
         pipeline: false,
         shared_b: false,
         placement: false,
+        auto_mixed: false,
+        calibrate: false,
     };
     let serial = run_point(base_knobs, 1, serial_reqs);
     let base = serial.rps();
@@ -254,7 +292,7 @@ fn main() {
                 cache,
                 pipeline,
                 shared_b: true,
-                placement: false,
+                ..base_knobs
             },
             clients,
             per_client,
@@ -288,6 +326,7 @@ fn main() {
                 pipeline: true,
                 shared_b: true,
                 placement,
+                ..base_knobs
             },
             clients,
             per_client,
@@ -303,6 +342,26 @@ fn main() {
                  \"placement_bytes_cut\", \"value\": {cut:.2}}}"
             );
         }
+    }
+
+    // sweep 4: dispatch-model threshold sweep — a mixed-size auto-mode
+    // workload (sizes straddling the Figure-3 crossover) with the cost
+    // model static vs online-calibrated; every point reports the live
+    // crossover_estimate the serve metrics op exposes
+    println!();
+    for calibrate in [false, true] {
+        let p = run_point(
+            Knobs {
+                pool: 2,
+                batching: true,
+                auto_mixed: true,
+                calibrate,
+                ..base_knobs
+            },
+            clients,
+            per_client,
+        );
+        println!("{}", p.json(p.rps() / base));
     }
 
     println!(

@@ -9,6 +9,7 @@
 use std::path::Path;
 
 use crate::config::{DispatchMode, PlatformConfig};
+use crate::cost::CostModel;
 use crate::error::Result;
 use crate::hero::offload::OffloadKind;
 use crate::metrics::Metrics;
@@ -116,10 +117,18 @@ impl std::fmt::Debug for HeroBlas {
 
 impl HeroBlas {
     /// Build a session from a platform config + artifacts directory.
-    pub fn new(cfg: PlatformConfig, artifacts: &Path, policy: DispatchPolicy) -> Result<Self> {
+    /// Unless the given policy already carries one, a [`CostModel`] is
+    /// attached from the platform description + manifest geometry, so
+    /// `Auto` dispatch is a calibrated cost comparison from the first
+    /// call (the scheduler swaps in its pool-shared instance instead).
+    pub fn new(cfg: PlatformConfig, artifacts: &Path, mut policy: DispatchPolicy) -> Result<Self> {
         cfg.validate()?;
         let engine = OffloadEngine::new(Platform::new(cfg))?;
         let registry = ArtifactRegistry::open(artifacts)?;
+        if policy.model.is_none() {
+            policy.model =
+                Some(CostModel::from_manifest(&engine.platform.cfg, registry.manifest()));
+        }
         Ok(HeroBlas { engine, registry, policy })
     }
 
@@ -242,6 +251,16 @@ impl HeroBlas {
         staged: &GemmStagedRun<T>,
     ) -> Vec<Option<crate::omp::CacheKey>> {
         staged.state.cached_b_keys()
+    }
+
+    /// Directory-driven prefetch: pre-stage a shared n x n GEMM B
+    /// operand into the operand cache outside any batch, so the next
+    /// coalesced launch's `map(to:)` of the same bytes is a hit and the
+    /// miss cost lands outside the batch (the scheduler calls this
+    /// during the batcher's linger window when affinity routed a
+    /// request at a cold home).  Returns the cache key when resident.
+    pub fn prefetch_gemm_b(&mut self, n: usize, b: &[f64]) -> Result<Option<crate::omp::CacheKey>> {
+        device::prefetch_gemm_b(&mut self.engine, &self.registry, n, b)
     }
 
     /// Stage a coalesced GEMV batch without launching it — the level-2

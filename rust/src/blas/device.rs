@@ -15,13 +15,24 @@
 //! 5. join + `map(from:)` C + unmap + exit.
 //!
 //! The tile geometry comes from the artifact manifest, so the Rust DMA
-//! loop and the Pallas BlockSpecs can never drift apart.
+//! loop and the Pallas BlockSpecs can never drift apart.  All per-tile
+//! DMA/FPU cost arithmetic lives in [`crate::cost::tile`] — the same
+//! functions the scheduler's [`crate::cost::CostModel`] sums while
+//! *estimating*, so the charges made here and the estimates dispatch
+//! compares can never drift either.
 //!
 //! **Error recovery**: any failure mid-offload (device-DRAM OOM, IOMMU
 //! fault, artifact error) releases every mapping created so far and
 //! aborts the in-flight launch, leaving the session fully usable — the
 //! integration tests inject OOM to verify this.
 
+use crate::cost::tile::{
+    gemm_tile_costs, gemv_panel_costs, level1_chunk_costs, round_up,
+};
+// Staged-footprint formulas moved to the cost subsystem (the placement
+// router reads them off the CostModel); re-exported here so existing
+// callers keep working.
+pub use crate::cost::tile::{gemm_staged_bytes_tiled, gemv_staged_bytes_tiled};
 use crate::error::{Error, Result};
 use crate::hero::offload::{OffloadArg, OffloadDescriptor, OffloadKind};
 use crate::omp::engine::{MappedBuf, OffloadEngine};
@@ -41,10 +52,6 @@ fn pad2<T: Elem>(x: &[T], rows: usize, cols: usize, rp: usize, cp: usize) -> Vec
         out[r * cp..r * cp + cols].copy_from_slice(&x[r * cols..(r + 1) * cols]);
     }
     out
-}
-
-fn round_up(n: usize, m: usize) -> usize {
-    n.div_ceil(m) * m
 }
 
 /// Mappings created during one offload, so the error path can release
@@ -218,17 +225,17 @@ fn gemm_compute<T: Elem>(
     let gm = mp / tm;
     let gn = np / tn;
     let gk = kp / tk;
-    let esz = T::SIZE as u64;
 
-    // cost of one (A-panel + B-panel) refill and one FPU burst
-    let dma_ab = {
-        let d = &engine.platform.dma;
-        d.cost_2d(tm as u64, tk as u64 * esz) + d.cost_2d(tk as u64, tn as u64 * esz)
-    };
-    let fpu = engine.platform.cluster.gemm_tile_cycles(tm, tn, tk, f32_path);
-    let dma_c = engine.platform.dma.cost_2d(tm as u64, tn as u64 * esz);
-    // epilogue: alpha*acc + beta*c on the resident tile (2 flops/elem)
-    let epilogue = engine.platform.cluster.stream_cycles(tm * tn, 2.0, f32_path);
+    // per-tile costs from the shared kernel (one refill, one burst, one
+    // C transfer, one epilogue) — the same function the CostModel sums
+    let tc = gemm_tile_costs(
+        &engine.platform.dma,
+        &engine.platform.cluster,
+        (tm, tn, tk),
+        T::SIZE,
+        f32_path,
+    );
+    let (dma_ab, fpu, dma_c, epilogue) = (tc.dma_ab, tc.fpu, tc.dma_c, tc.epilogue);
 
     let beta_zero = beta == T::zero();
     // Output tiles are distributed round-robin across the PMCA's
@@ -759,23 +766,11 @@ pub fn gemm_batch_finish<T: Elem>(
     Ok(())
 }
 
-/// Device-DRAM bytes one staged member occupies for an (m, n, k) GEMM
-/// given the manifest tile geometry and element size.  Shared by the
-/// worker's batch cap ([`gemm_staged_bytes`]) and the placement
-/// router's shape estimates, so the routing footprint can never drift
-/// from what staging actually allocates.
-pub fn gemm_staged_bytes_tiled(
-    (tm, tn, tk): (usize, usize, usize),
-    (m, n, k): (usize, usize, usize),
-    elem_size: usize,
-) -> u64 {
-    let (mp, np, kp) = (round_up(m, tm), round_up(n, tn), round_up(k, tk));
-    ((mp * kp + kp * np + mp * np) * elem_size) as u64
-}
-
 /// Device-DRAM bytes one staged batch member occupies for an (m, n, k)
 /// GEMM — lets the scheduler cap a batch to what the cluster's DRAM
-/// partition can hold before it commits to a coalesced launch.
+/// partition can hold before it commits to a coalesced launch.  The
+/// formula itself lives in [`crate::cost::tile`], shared with the
+/// placement router's shape estimates.
 pub fn gemm_staged_bytes<T: Elem>(
     registry: &ArtifactRegistry,
     dims: (usize, usize, usize),
@@ -861,12 +856,17 @@ fn gemv_compute<T: Elem>(
 ) -> Result<()> {
     let artifact = format!("gemm_tile_accum_{}", T::DTYPE);
     let GemvGeom { mp, np, tm, tn, tk, .. } = g;
-    let esz = T::SIZE as u64;
     let gm = mp / tm;
     let gk = np / tk;
-    // level-2 is DMA-bound: stream the A row-panels once
-    let dma_panel = engine.platform.dma.cost_2d(tm as u64, tk as u64 * esz);
-    let fpu = engine.platform.cluster.stream_cycles(tm * tk, 2.0, T::F32_PATH);
+    // level-2 is DMA-bound: stream the A row-panels once (shared kernel)
+    let pc = gemv_panel_costs(
+        &engine.platform.dma,
+        &engine.platform.cluster,
+        (tm, tk),
+        T::SIZE,
+        T::F32_PATH,
+    );
+    let (dma_panel, fpu) = (pc.dma_panel, pc.fpu);
 
     for i in 0..gm {
         let mut acc = vec![T::zero(); tm * tn];
@@ -1230,18 +1230,6 @@ pub fn gemv_batch<T: Elem>(
     gemv_batch_finish(engine, state, outs)
 }
 
-/// Device-DRAM bytes one staged member occupies for an (m, n) GEMV
-/// given the manifest tile geometry — the level-2 analogue of
-/// [`gemm_staged_bytes_tiled`], shared with the placement router.
-pub fn gemv_staged_bytes_tiled(
-    (tm, tn, tk): (usize, usize, usize),
-    (m, n): (usize, usize),
-    elem_size: usize,
-) -> u64 {
-    let (mp, np) = (round_up(m, tm), round_up(n, tk));
-    ((mp * np + np * tn + mp) * elem_size) as u64
-}
-
 /// Device-DRAM bytes one staged batch member occupies for an (m, n)
 /// GEMV — the level-2 analogue of [`gemm_staged_bytes`].
 pub fn gemv_staged_bytes<T: Elem>(
@@ -1250,6 +1238,35 @@ pub fn gemv_staged_bytes<T: Elem>(
 ) -> u64 {
     let man = registry.manifest();
     gemv_staged_bytes_tiled((man.tile_m, man.tile_n, man.tile_k), dims, T::SIZE)
+}
+
+/// Pre-stage a shared GEMM B operand into the operand cache *outside*
+/// any batch (directory-driven prefetch): pad exactly like the staging
+/// path, route through the cache, release the pin — the bytes stay
+/// resident, so the next batch's `map(to:)` of the same B is a hit and
+/// the miss cost lands outside the batch's accounted regions.  Returns
+/// the cache key when the bytes ended up resident (cache off / too big
+/// => `None`).  No target region is entered: this is a host-side copy
+/// into the device partition, not an offload.
+pub fn prefetch_gemm_b<T: Elem>(
+    engine: &mut OffloadEngine,
+    registry: &ArtifactRegistry,
+    n: usize,
+    b: &[T],
+) -> Result<Option<crate::omp::CacheKey>> {
+    if b.len() != n * n {
+        return Err(Error::shape(format!(
+            "prefetch_gemm_b: {} elements for n={n}",
+            b.len()
+        )));
+    }
+    let man = registry.manifest();
+    let (tn, tk) = (man.tile_n, man.tile_k);
+    let b_bytes = T::slice_to_bytes(&pad2(b, n, n, round_up(n, tk), round_up(n, tn)));
+    let buf = engine.map_to_operand(&b_bytes, (n * n * T::SIZE) as u64, false, "b_prefetch")?;
+    let key = buf.cache_key();
+    engine.unmap(buf, "b_prefetch")?;
+    Ok(key)
 }
 
 /// Heterogeneous AXPY (f64 only — the artifact catalog carries f64
@@ -1389,8 +1406,8 @@ pub fn level1_batch(
     engine.blas_entry();
     engine.target_begin((if is_axpy { 3 } else { 2 }) * inputs.len());
 
-    let fpu = engine.platform.cluster.stream_cycles(chunk, 2.0, false);
-    let dma = engine.platform.dma.cost_2d(1, (chunk * 8) as u64);
+    let cc = level1_chunk_costs(&engine.platform.dma, &engine.platform.cluster, chunk);
+    let (dma, fpu) = (cc.dma, cc.fpu);
 
     // ---- one descriptor, one doorbell ----
     let mut desc = OffloadDescriptor::new(kind, (n, 0, 0), false);

@@ -1,11 +1,19 @@
 //! Dispatch: which kernels may offload, and when it pays off.
 //!
 //! Mirrors the paper's build-time split (GEMM compiled for host+device,
-//! `syrk.c` host-only) plus a size threshold for the `Auto` mode — the
-//! paper's Figure 3 shows offload *losing* below the crossover size, so a
-//! production dispatch must pick the host for small problems.
+//! `syrk.c` host-only).  The `Auto` mode decides *when* offload pays:
+//! with a [`CostModel`] attached (every [`super::HeroBlas`] session gets
+//! one), the decision is a calibrated device-vs-host cost comparison —
+//! the paper's Figure-3 crossover derived from the platform description
+//! instead of hard-coded, shape-exact instead of max-dim, and
+//! *cache-aware*: a predicted operand-cache hit (B already resident on
+//! the target cluster, per the scheduler's affinity directory) drops the
+//! map-in cost from the estimate, so warm shared-B streams offload below
+//! the cold crossover.  Without a model (plain policy values, unit
+//! tests) the original static thresholds apply.
 
 use crate::config::DispatchMode;
+use crate::cost::CostModel;
 use crate::hero::offload::OffloadKind;
 
 /// Where one call will execute.
@@ -22,15 +30,23 @@ pub enum ExecTarget {
 #[derive(Debug, Clone)]
 pub struct DispatchPolicy {
     pub mode: DispatchMode,
-    /// `Auto`: offload GEMM when max(m, n, k) >= this.
+    /// `Auto` fallback without a model: offload GEMM when
+    /// max(m, n, k) >= this.
     pub gemm_threshold: usize,
-    /// `Auto`: offload GEMV when m*n >= this (level-2 is memory-bound;
-    /// the copy cost usually dwarfs the win, hence a high default).
+    /// `Auto` fallback without a model: offload GEMV when m*n >= this
+    /// (level-2 is memory-bound; the copy cost usually dwarfs the win,
+    /// hence a high default).
     pub gemv_threshold: usize,
-    /// `Auto`: offload level-1 ops when n >= this.
+    /// `Auto` fallback without a model: offload level-1 ops when
+    /// n >= this.
     pub level1_threshold: usize,
     /// Kernels allowed on the device at all (the paper's Makefile split).
     pub device_kernels: Vec<OffloadKind>,
+    /// The calibrated cost estimator behind `Auto` — when present, the
+    /// three thresholds above are ignored and every decision is a model
+    /// comparison.  [`super::HeroBlas::new`] attaches one; the scheduler
+    /// replaces it with the pool-shared (jointly calibrated) instance.
+    pub model: Option<CostModel>,
 }
 
 impl Default for DispatchPolicy {
@@ -47,6 +63,7 @@ impl Default for DispatchPolicy {
                 OffloadKind::Axpy,
                 OffloadKind::Dot,
             ],
+            model: None,
         }
     }
 }
@@ -69,15 +86,28 @@ impl DispatchPolicy {
         }
     }
 
-    /// Decide for a GEMM of op-shape (m, n, k).
+    /// Decide for a GEMM of op-shape (m, n, k), all operands cold.
     pub fn gemm(&self, m: usize, n: usize, k: usize) -> ExecTarget {
+        self.gemm_warm(m, n, k, false)
+    }
+
+    /// Decide for a GEMM of op-shape (m, n, k).  `warm_b` predicts the B
+    /// operand already device-resident (an operand-cache hit, per the
+    /// scheduler's affinity directory) — warmth can only lower the
+    /// offload estimate, so a warm stream offloads at sizes a cold one
+    /// would keep on the host.
+    pub fn gemm_warm(&self, m: usize, n: usize, k: usize, warm_b: bool) -> ExecTarget {
         if !self.kernel_allowed(OffloadKind::Gemm) {
             return ExecTarget::Host;
         }
         if let Some(t) = self.forced() {
             return t;
         }
-        if m.max(n).max(k) >= self.gemm_threshold {
+        let wins = match &self.model {
+            Some(cm) => cm.device_wins_gemm(m, n, k, warm_b),
+            None => m.max(n).max(k) >= self.gemm_threshold,
+        };
+        if wins {
             ExecTarget::Device
         } else {
             ExecTarget::Host
@@ -92,7 +122,11 @@ impl DispatchPolicy {
         if let Some(t) = self.forced() {
             return t;
         }
-        if m * n >= self.gemv_threshold {
+        let wins = match &self.model {
+            Some(cm) => cm.device_wins_gemv(m, n),
+            None => m * n >= self.gemv_threshold,
+        };
+        if wins {
             ExecTarget::Device
         } else {
             ExecTarget::Host
@@ -107,7 +141,11 @@ impl DispatchPolicy {
         if let Some(t) = self.forced() {
             return t;
         }
-        if n >= self.level1_threshold {
+        let wins = match &self.model {
+            Some(cm) => cm.device_wins_level1(n, kind == OffloadKind::Axpy),
+            None => n >= self.level1_threshold,
+        };
+        if wins {
             ExecTarget::Device
         } else {
             ExecTarget::Host
@@ -118,6 +156,7 @@ impl DispatchPolicy {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::PlatformConfig;
 
     #[test]
     fn auto_uses_threshold() {
@@ -158,5 +197,58 @@ mod tests {
                 }
             }
         }
+    }
+
+    fn model_policy(cache_on: bool) -> DispatchPolicy {
+        let mut cfg = PlatformConfig::default();
+        if cache_on {
+            cfg.sched.cache.cache_frac = 0.4;
+        }
+        DispatchPolicy {
+            model: Some(CostModel::from_platform(&cfg, (64, 64, 64), 4096)),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn model_auto_keeps_the_figure3_band() {
+        let p = model_policy(false);
+        // the model's crossover sits between the paper's measured points
+        assert_eq!(p.gemm(64, 64, 64), ExecTarget::Host);
+        assert_eq!(p.gemm(128, 128, 128), ExecTarget::Device);
+        assert_eq!(p.gemm(16, 16, 16), ExecTarget::Host);
+    }
+
+    #[test]
+    fn model_auto_is_shape_exact_not_max_dim() {
+        // (8, 8, 512): the static threshold offloads on max-dim alone,
+        // but 2*8*8*512 FLOPs cannot amortize the fixed fork-join — the
+        // model keeps it on the host
+        let p = model_policy(false);
+        assert_eq!(p.gemm(8, 8, 512), ExecTarget::Host);
+    }
+
+    #[test]
+    fn model_auto_gemv_and_level1_stay_host_cold() {
+        // copy-mode level-2/level-1 never beat the host cold: the
+        // partition copy alone outweighs the host FLOPs (the old static
+        // thresholds claimed otherwise above 512x512 / 1M)
+        let p = model_policy(false);
+        assert_eq!(p.gemv(512, 512), ExecTarget::Host);
+        assert_eq!(p.gemv(2048, 2048), ExecTarget::Host);
+        assert_eq!(p.level1(OffloadKind::Axpy, 1 << 20), ExecTarget::Host);
+        assert_eq!(p.level1(OffloadKind::Dot, 1 << 20), ExecTarget::Host);
+    }
+
+    #[test]
+    fn warm_b_offloads_below_the_cold_crossover() {
+        let p = model_policy(true);
+        let cm = p.model.as_ref().unwrap();
+        let x = cm.crossovers();
+        let (cold, warm) = (x.gemm_n.unwrap(), x.gemm_warm_n.unwrap());
+        assert!(warm < cold, "warm {warm} vs cold {cold}");
+        // at a size inside the gap, warmth flips the decision
+        assert_eq!(p.gemm_warm(warm, warm, warm, false), ExecTarget::Host);
+        assert_eq!(p.gemm_warm(warm, warm, warm, true), ExecTarget::Device);
     }
 }

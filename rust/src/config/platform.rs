@@ -163,6 +163,36 @@ impl CacheConfig {
     }
 }
 
+/// Cost-model knobs (`[cost]`): the unified offload cost estimator
+/// behind `DispatchPolicy::Auto`, the batcher's linger sizing, the
+/// placement router's footprints and the pipelining overlap credit
+/// (see [`crate::cost`]).
+///
+/// The analytical estimates are a pure function of the timing constants
+/// above; `calibrate` additionally folds *observed* per-op batch
+/// timings back in as EWMA-smoothed multiplicative corrections, clamped
+/// to `[floor, ceiling]`.  Calibration never changes numerics — only
+/// which path `Auto` picks and how long the batcher lingers — and it
+/// defaults OFF so decisions stay a deterministic function of the
+/// platform description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostConfig {
+    /// Fold observed timings back into the estimates (EWMA feedback).
+    pub calibrate: bool,
+    /// EWMA smoothing factor per observation, in (0, 1].
+    pub alpha: f64,
+    /// Lower clamp on every calibration scale (<= 1).
+    pub floor: f64,
+    /// Upper clamp on every calibration scale (>= 1).
+    pub ceiling: f64,
+}
+
+impl Default for CostConfig {
+    fn default() -> Self {
+        CostConfig { calibrate: false, alpha: 0.125, floor: 0.25, ceiling: 4.0 }
+    }
+}
+
 /// Placement-router knobs (`[sched.placement]`): how jobs are assigned
 /// to pool clusters (see `crate::sched::placement`).
 ///
@@ -188,14 +218,27 @@ pub struct PlacementConfig {
     /// clusters.  0.0 keeps the even split (no big-shape lane).  Only
     /// meaningful for pools of >= 2 clusters.
     pub big_shape_frac: f64,
+    /// Steal-fairness load balancing: re-home an operand key in the
+    /// affinity directory when its home cluster's run-queue depth stays
+    /// above the pool mean for this many consecutive (job-moving) drain
+    /// passes, so a sustained affine skew stops queueing behind one
+    /// cluster.  0 disables re-homing (stealing stays purely reactive).
+    pub rebalance_drains: u32,
 }
 
 impl Default for PlacementConfig {
     fn default() -> Self {
         // Affinity and stealing change only *where* a job runs (numerics
         // are placement-invariant), so they default on; the heterogeneous
-        // slicing changes per-cluster capacity, so it defaults off.
-        PlacementConfig { affinity: true, steal: true, big_shape_frac: 0.0 }
+        // slicing changes per-cluster capacity, so it defaults off, and
+        // re-homing changes steady-state placement, so it also defaults
+        // off (turn it on for sustained-skew workloads).
+        PlacementConfig {
+            affinity: true,
+            steal: true,
+            big_shape_frac: 0.0,
+            rebalance_drains: 0,
+        }
     }
 }
 
@@ -264,6 +307,7 @@ pub struct PlatformConfig {
     pub forkjoin: ForkJoinConfig,
     pub iommu: IommuConfig,
     pub sched: SchedConfig,
+    pub cost: CostConfig,
 }
 
 impl Default for PlatformConfig {
@@ -317,6 +361,7 @@ impl Default for PlatformConfig {
                 pte_teardown_cycles: 427,
             },
             sched: SchedConfig::default(),
+            cost: CostConfig::default(),
         }
     }
 }
@@ -420,7 +465,22 @@ impl PlatformConfig {
                         big_shape_frac: d
                             .opt_f64("sched.placement.big_shape_frac")
                             .unwrap_or(def.placement.big_shape_frac),
+                        rebalance_drains: d
+                            .opt_u64("sched.placement.rebalance_drains")
+                            .unwrap_or(def.placement.rebalance_drains as u64)
+                            as u32,
                     },
+                }
+            },
+            // Cost-model knobs are estimation policy, not SoC calibration
+            // — like [sched] they default when absent.
+            cost: {
+                let def = CostConfig::default();
+                CostConfig {
+                    calibrate: d.opt_bool("cost.calibrate").unwrap_or(def.calibrate),
+                    alpha: d.opt_f64("cost.alpha").unwrap_or(def.alpha),
+                    floor: d.opt_f64("cost.floor").unwrap_or(def.floor),
+                    ceiling: d.opt_f64("cost.ceiling").unwrap_or(def.ceiling),
                 }
             },
         };
@@ -451,7 +511,8 @@ impl PlatformConfig {
              [sched.cache]\ncache_frac = {}\ncache_max_entries = {}\n\
              pipeline_depth = {}\n\n\
              [sched.placement]\naffinity = {}\nsteal = {}\n\
-             big_shape_frac = {}\n",
+             big_shape_frac = {}\nrebalance_drains = {}\n\n\
+             [cost]\ncalibrate = {}\nalpha = {}\nfloor = {}\nceiling = {}\n",
             c.name,
             c.clock.freq_hz,
             fmt_f64(c.host.flops_per_cycle),
@@ -494,6 +555,11 @@ impl PlatformConfig {
             c.sched.placement.affinity,
             c.sched.placement.steal,
             fmt_f64(c.sched.placement.big_shape_frac),
+            c.sched.placement.rebalance_drains,
+            c.cost.calibrate,
+            fmt_f64(c.cost.alpha),
+            fmt_f64(c.cost.floor),
+            fmt_f64(c.cost.ceiling),
         )
     }
 
@@ -559,6 +625,24 @@ impl PlatformConfig {
             return err(format!(
                 "sched.placement.big_shape_frac must be in [0, 0.97], got {}",
                 self.sched.placement.big_shape_frac
+            ));
+        }
+        if !(self.cost.alpha > 0.0 && self.cost.alpha <= 1.0) {
+            return err(format!(
+                "cost.alpha must be in (0, 1], got {}",
+                self.cost.alpha
+            ));
+        }
+        if !(self.cost.floor > 0.0 && self.cost.floor <= 1.0) {
+            return err(format!(
+                "cost.floor must be in (0, 1], got {}",
+                self.cost.floor
+            ));
+        }
+        if self.cost.ceiling < 1.0 {
+            return err(format!(
+                "cost.ceiling must be >= 1, got {}",
+                self.cost.ceiling
             ));
         }
         // One capacity model: request-level pool clusters x intra-offload
@@ -764,6 +848,42 @@ mod tests {
         let mut cfg = PlatformConfig::default();
         cfg.sched.pool_clusters = 64;
         cfg.cluster.clusters = 8;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn cost_section_parses_defaults_and_validates() {
+        // absent [cost] => defaults (calibration off)
+        let mut text = PlatformConfig::default().to_toml_string();
+        let at = text.find("[cost]").unwrap();
+        text.truncate(at);
+        let cfg = PlatformConfig::from_toml_str(&text).unwrap();
+        assert_eq!(cfg.cost, CostConfig::default());
+        assert!(!cfg.cost.calibrate);
+
+        // explicit values round-trip
+        let mut cfg = PlatformConfig::default();
+        cfg.cost.calibrate = true;
+        cfg.cost.alpha = 0.25;
+        cfg.cost.floor = 0.5;
+        cfg.cost.ceiling = 2.0;
+        cfg.sched.placement.rebalance_drains = 4;
+        let back = PlatformConfig::from_toml_str(&cfg.to_toml_string()).unwrap();
+        assert_eq!(back.cost, cfg.cost);
+        assert_eq!(back.sched.placement.rebalance_drains, 4);
+
+        // out-of-range knobs rejected
+        let mut cfg = PlatformConfig::default();
+        cfg.cost.alpha = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PlatformConfig::default();
+        cfg.cost.alpha = 1.5;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PlatformConfig::default();
+        cfg.cost.floor = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PlatformConfig::default();
+        cfg.cost.ceiling = 0.5;
         assert!(cfg.validate().is_err());
     }
 

@@ -1,0 +1,171 @@
+//! Online calibration: EWMA-smoothed multiplicative corrections on top
+//! of the analytical estimates.
+//!
+//! The band-matrix BLAS work (Pirova et al.) shows RISC-V BLAS tuning is
+//! shape- and platform-dependent enough that hard-coded constants drift
+//! wrong; rather than re-deriving the analytical model per platform, the
+//! scheduler feeds every *observed* per-batch timing (already flowing
+//! through `Metrics`/the trace deltas) back as an `observed / predicted`
+//! ratio.  One [`Scale`] per (op family x host/device) folds those
+//! ratios into an EWMA, clamped to `[floor, ceiling]` so a single
+//! adversarial or degenerate sample can never swing dispatch decisions
+//! outside a sane band.
+//!
+//! Scales live behind atomics and the whole state is shared via `Arc` —
+//! every pool worker, the placement router and the batcher calibrate
+//! (and read) the same model.  With `[cost] calibrate = false` the
+//! scales stay at exactly 1.0 forever, so estimates are a pure function
+//! of the platform description (the bit-identity configuration).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::config::CostConfig;
+
+use super::CostOp;
+
+/// One multiplicative correction factor, EWMA-smoothed and clamped.
+/// Stored as f64 bits in an atomic; racy read-modify-write is fine — a
+/// lost update skews a smoothed hint, never numerics.
+#[derive(Debug)]
+pub struct Scale(AtomicU64);
+
+impl Scale {
+    fn unit() -> Scale {
+        Scale(AtomicU64::new(1.0f64.to_bits()))
+    }
+
+    /// Current correction factor (1.0 until the first observation).
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    /// Fold one `observed / predicted` ratio in.  Non-finite or
+    /// non-positive ratios are dropped (a degenerate sample must never
+    /// poison the scale); finite ones are clamped before AND after the
+    /// EWMA so adversarial noise is doubly bounded.
+    fn fold(&self, ratio: f64, knobs: &CostConfig) {
+        if !ratio.is_finite() || ratio <= 0.0 {
+            return;
+        }
+        let sample = ratio.clamp(knobs.floor, knobs.ceiling);
+        let old = self.get();
+        let new = (old * (1.0 - knobs.alpha) + sample * knobs.alpha)
+            .clamp(knobs.floor, knobs.ceiling);
+        self.0.store(new.to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// Shared calibration state: one device scale and one host scale per op
+/// family, indexed by [`CostOp`].
+#[derive(Debug)]
+pub struct Calibration {
+    device: [Scale; 3],
+    host: [Scale; 3],
+}
+
+impl Default for Calibration {
+    fn default() -> Self {
+        Calibration::new()
+    }
+}
+
+impl Calibration {
+    pub fn new() -> Calibration {
+        Calibration {
+            device: [Scale::unit(), Scale::unit(), Scale::unit()],
+            host: [Scale::unit(), Scale::unit(), Scale::unit()],
+        }
+    }
+
+    /// Current device-path correction for an op family.
+    pub fn device_scale(&self, op: CostOp) -> f64 {
+        self.device[op.idx()].get()
+    }
+
+    /// Current host-path correction for an op family.
+    pub fn host_scale(&self, op: CostOp) -> f64 {
+        self.host[op.idx()].get()
+    }
+
+    /// Fold one observed device-path batch timing in.
+    pub fn observe_device(
+        &self,
+        op: CostOp,
+        predicted_cycles: f64,
+        observed_cycles: f64,
+        knobs: &CostConfig,
+    ) {
+        if predicted_cycles > 0.0 {
+            self.device[op.idx()].fold(observed_cycles / predicted_cycles, knobs);
+        }
+    }
+
+    /// Fold one observed host-path batch timing in.
+    pub fn observe_host(
+        &self,
+        op: CostOp,
+        predicted_cycles: f64,
+        observed_cycles: f64,
+        knobs: &CostConfig,
+    ) {
+        if predicted_cycles > 0.0 {
+            self.host[op.idx()].fold(observed_cycles / predicted_cycles, knobs);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn knobs() -> CostConfig {
+        CostConfig { calibrate: true, alpha: 0.125, floor: 0.25, ceiling: 4.0 }
+    }
+
+    #[test]
+    fn scales_start_at_unity_and_converge_to_the_observed_ratio() {
+        let c = Calibration::new();
+        let k = knobs();
+        assert_eq!(c.device_scale(CostOp::Gemm), 1.0);
+        // the device consistently runs 2x slower than predicted
+        for _ in 0..128 {
+            c.observe_device(CostOp::Gemm, 1000.0, 2000.0, &k);
+        }
+        let s = c.device_scale(CostOp::Gemm);
+        assert!((s - 2.0).abs() < 0.05, "device scale {s} should approach 2.0");
+        // other families are untouched
+        assert_eq!(c.device_scale(CostOp::Gemv), 1.0);
+        assert_eq!(c.host_scale(CostOp::Gemm), 1.0);
+    }
+
+    #[test]
+    fn clamps_hold_under_adversarial_noise() {
+        let c = Calibration::new();
+        let k = knobs();
+        // absurd ratios are clamped per sample AND on the folded value
+        for _ in 0..256 {
+            c.observe_host(CostOp::Level1, 1.0, 1e12, &k);
+        }
+        assert!(c.host_scale(CostOp::Level1) <= k.ceiling);
+        for _ in 0..256 {
+            c.observe_host(CostOp::Level1, 1e12, 1.0, &k);
+        }
+        assert!(c.host_scale(CostOp::Level1) >= k.floor);
+        // degenerate samples are dropped, not folded
+        let before = c.device_scale(CostOp::Gemv);
+        c.observe_device(CostOp::Gemv, 0.0, 100.0, &k);
+        c.observe_device(CostOp::Gemv, 100.0, f64::NAN, &k);
+        c.observe_device(CostOp::Gemv, 100.0, -5.0, &k);
+        assert_eq!(c.device_scale(CostOp::Gemv), before);
+    }
+
+    #[test]
+    fn single_outlier_moves_the_ewma_only_by_alpha() {
+        let c = Calibration::new();
+        let k = knobs();
+        c.observe_device(CostOp::Gemm, 1000.0, 4000.0, &k); // clamped to 4.0
+        let s = c.device_scale(CostOp::Gemm);
+        // 1.0 * (1 - 0.125) + 4.0 * 0.125 = 1.375
+        assert!((s - 1.375).abs() < 1e-9, "one sample moved scale to {s}");
+    }
+}

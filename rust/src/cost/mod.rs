@@ -1,0 +1,92 @@
+//! Unified offload cost model: one calibrated estimator behind
+//! dispatch, batching, placement, and pipelining.
+//!
+//! The paper's central engineering fact is the Figure-3 crossover — the
+//! fixed fork-join + partition-copy cost makes offload *lose* below a
+//! problem size — and before this module the codebase encoded that fact
+//! five separate times: static thresholds in `blas::dispatch`, three
+//! hand-rolled DMA/FPU cost blocks in `blas::device`, padded-footprint
+//! math in `sched::placement`, linger heuristics in `sched::batcher`,
+//! and the overlap credit in `sched::worker`.  Five copies of one truth
+//! meant five constants to re-tune per platform; HERO's offload-cost
+//! structure (mailbox + DMA + fork-join) is regular enough to capture
+//! analytically *once*, and RISC-V BLAS tuning is platform-dependent
+//! enough that the capture must be corrected online.
+//!
+//! Three layers:
+//!
+//! * [`tile`] — the per-tile DMA/FPU cost kernels and staged-footprint
+//!   formulas, called by `blas::device` while *charging* execution and
+//!   by the model while *estimating* (so they cannot drift);
+//! * [`model`] — [`CostModel`]: per-call device-vs-host estimates that
+//!   mirror the engine's actual charges (fork-join fixed cycles, map-in
+//!   bytes at the copy bandwidth with cache/alloc elisions, the tile
+//!   walk), plus the derived surfaces each consumer needs: dispatch
+//!   decisions (cache-aware via predicted operand residency), live
+//!   crossover estimates, the batcher's linger-amortization curve, the
+//!   router's staged footprints and the pipelining overlap credit;
+//! * [`calibrate`] — EWMA feedback from observed per-op timings (the
+//!   trace deltas already flowing through `Metrics`), clamped so noise
+//!   cannot swing decisions outside a sane band.  `[cost]` in the
+//!   platform TOML holds the knobs; `calibrate = false` (the default)
+//!   pins every scale at 1.0 so estimates — and with them every
+//!   dispatch decision — are a pure function of the platform
+//!   description.
+
+pub mod calibrate;
+pub mod model;
+pub mod tile;
+
+pub use calibrate::Calibration;
+pub use model::{CostModel, Crossovers};
+pub use tile::{
+    gemm_staged_bytes_tiled, gemm_tile_costs, gemv_panel_costs,
+    gemv_staged_bytes_tiled, level1_chunk_costs, round_up, GemmTileCosts,
+    GemvPanelCosts, Level1ChunkCosts,
+};
+
+/// Op families the model estimates; indexes the calibration scales.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CostOp {
+    Gemm,
+    Gemv,
+    Level1,
+}
+
+impl CostOp {
+    /// Scale-array index.
+    pub fn idx(self) -> usize {
+        match self {
+            CostOp::Gemm => 0,
+            CostOp::Gemv => 1,
+            CostOp::Level1 => 2,
+        }
+    }
+
+    /// Family of a batch-key / serve-protocol op name.
+    pub fn from_name(op: &str) -> Option<CostOp> {
+        match op {
+            "gemm" => Some(CostOp::Gemm),
+            "gemv" => Some(CostOp::Gemv),
+            "axpy" | "dot" => Some(CostOp::Level1),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_op_names_and_indices() {
+        assert_eq!(CostOp::from_name("gemm"), Some(CostOp::Gemm));
+        assert_eq!(CostOp::from_name("gemv"), Some(CostOp::Gemv));
+        assert_eq!(CostOp::from_name("axpy"), Some(CostOp::Level1));
+        assert_eq!(CostOp::from_name("dot"), Some(CostOp::Level1));
+        assert_eq!(CostOp::from_name("fence"), None);
+        assert_eq!(CostOp::Gemm.idx(), 0);
+        assert_eq!(CostOp::Gemv.idx(), 1);
+        assert_eq!(CostOp::Level1.idx(), 2);
+    }
+}

@@ -1,0 +1,631 @@
+//! The calibrated offload cost model.
+//!
+//! [`CostModel`] answers ONE question for every consumer — "what does
+//! this call cost on the device path vs the host path?" — by summing
+//! the same per-region charges the offload engine will actually make:
+//!
+//! * **fork-join**: the fixed OpenBLAS + libomptarget entry, descriptor
+//!   marshalling (per mapped argument), doorbell, device wake-up,
+//!   completion doorbell, join and exit — the paper's size-independent
+//!   overhead that makes offload *lose* below the Figure-3 crossover;
+//! * **data copy**: `map(to:)`/`map(from:)` of the user's bytes at the
+//!   host's partition-copy bandwidth, with the operand-cache and
+//!   `map(alloc:)` elisions applied when the config enables them — a
+//!   *predicted cache hit* (operand already device-resident, per the
+//!   affinity directory) drops an operand's map-in to the memcpy setup
+//!   cost, which is what lets warm shared-B streams offload below the
+//!   cold crossover;
+//! * **compute**: the double-buffered tile walk from the shared
+//!   [`super::tile`] kernels — the very functions `blas::device`
+//!   charges during execution, so estimate and execution cannot drift.
+//!
+//! Host cost comes from the same [`Cva6Model`] the host kernels charge.
+//! On top sits the EWMA [`Calibration`] (shared via `Arc` across every
+//! clone, so a whole scheduler pool calibrates one model): observed
+//! batch timings scale the estimates within clamped bounds.  Consumers:
+//! dispatch (`DispatchPolicy::Auto`), the batcher's linger sizing, the
+//! placement router's footprint/lane routing, and the worker's
+//! pipelining overlap credit.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::config::{CostConfig, DispatchMode, ForkJoinConfig, PlatformConfig};
+use crate::runtime::Manifest;
+use crate::soc::{Cva6Model, DmaModel, SnitchCluster};
+
+use super::calibrate::Calibration;
+use super::tile::{
+    self, gemm_staged_bytes_tiled, gemv_staged_bytes_tiled, round_up,
+};
+use super::CostOp;
+
+/// Fallback level-1 chunk length when the manifest carries no level-1
+/// artifacts (estimates still need a chunk size; the device path itself
+/// would fail cleanly before any estimate mattered).
+const DEFAULT_LEVEL1_CHUNK: usize = 4096;
+
+/// Serve-protocol shape bound — the crossover searches scan up to here.
+const MAX_DIM: usize = 2048;
+const MAX_LEVEL1_N: usize = 1 << 20;
+
+/// Live crossover estimates per op: the smallest problem size at which
+/// the (calibrated) model predicts the device path wins.  `None` means
+/// the device never wins inside the serve-protocol shape bounds — true
+/// for cold level-2/level-1 in copy mode, where the partition copy alone
+/// outweighs the host FLOPs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Crossovers {
+    /// Square f64 GEMM, all operands cold.
+    pub gemm_n: Option<usize>,
+    /// Square f64 GEMM with B predicted cache-resident (warm stream).
+    pub gemm_warm_n: Option<usize>,
+    /// Square f64 GEMV (m = n), cold.
+    pub gemv_n: Option<usize>,
+    /// f64 AXPY length, cold.
+    pub level1_n: Option<usize>,
+}
+
+/// The unified, online-calibrated offload cost estimator.  Cheap to
+/// clone; clones share calibration state.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    freq_hz: u64,
+    fj: ForkJoinConfig,
+    host: Cva6Model,
+    cluster: SnitchCluster,
+    dma: DmaModel,
+    /// Manifest tile geometry (pads exactly like the staging path).
+    tile: (usize, usize, usize),
+    /// Largest level-1 artifact length (the device chunk size).
+    level1_chunk: usize,
+    /// Intra-offload compute clusters (output tiles round-robin).
+    intra_clusters: usize,
+    /// Do the operand-cache staging elisions apply (`[sched.cache]`)?
+    cache_enabled: bool,
+    knobs: CostConfig,
+    calib: Arc<Calibration>,
+}
+
+impl CostModel {
+    /// Build from a platform description plus the manifest-derived
+    /// geometry (tile shape, largest level-1 artifact).
+    pub fn from_platform(
+        cfg: &PlatformConfig,
+        tile: (usize, usize, usize),
+        level1_chunk: usize,
+    ) -> CostModel {
+        CostModel {
+            freq_hz: cfg.clock.freq_hz,
+            fj: cfg.forkjoin.clone(),
+            host: Cva6Model::new(cfg.host.clone()),
+            cluster: SnitchCluster::new(cfg.cluster.clone(), cfg.memory.l1_spm_bytes),
+            dma: DmaModel::new(cfg.dma.clone()),
+            tile,
+            level1_chunk: level1_chunk.max(1),
+            intra_clusters: (cfg.cluster.clusters as usize).max(1),
+            cache_enabled: cfg.sched.cache.cache_enabled(),
+            knobs: cfg.cost.clone(),
+            calib: Arc::new(Calibration::new()),
+        }
+    }
+
+    /// Build from a platform description and a loaded manifest.
+    pub fn from_manifest(cfg: &PlatformConfig, man: &Manifest) -> CostModel {
+        let chunk = man
+            .entries
+            .iter()
+            .filter(|e| (e.op == "axpy" || e.op == "dot") && e.dtype == "f64")
+            .filter_map(|e| e.n)
+            .max()
+            .unwrap_or(DEFAULT_LEVEL1_CHUNK);
+        CostModel::from_platform(cfg, (man.tile_m, man.tile_n, man.tile_k), chunk)
+    }
+
+    /// Is online calibration active (`[cost] calibrate`)?
+    pub fn calibrate_enabled(&self) -> bool {
+        self.knobs.calibrate
+    }
+
+    /// The shared calibration state (scales read by tests/reporting).
+    pub fn calibration(&self) -> &Calibration {
+        &self.calib
+    }
+
+    // ------------------------------------------------------------------
+    // Raw (uncalibrated) per-call estimates, in cycles
+    // ------------------------------------------------------------------
+
+    fn memcpy(&self, bytes: u64) -> f64 {
+        self.host.memcpy_cycles(bytes).0 as f64
+    }
+
+    fn memcpy_setup(&self) -> f64 {
+        // the charge of a cache hit / map(alloc:) staging elision
+        self.memcpy(0)
+    }
+
+    /// Fixed fork-join cycles of one launch, excluding the per-argument
+    /// marshalling (which scales with batch members and is therefore not
+    /// amortized by batching).
+    fn forkjoin_shared(&self) -> f64 {
+        (self.fj.openblas_entry_cycles
+            + self.fj.omp_entry_cycles
+            + self.fj.doorbell_cycles      // launch doorbell
+            + self.fj.device_wakeup_cycles
+            + self.fj.doorbell_cycles      // completion doorbell back
+            + self.fj.join_cycles
+            + self.fj.exit_cycles) as f64
+    }
+
+    /// Predicted cycles for one coalesced device GEMM launch of `batch`
+    /// members of op-shape (m, n, k), f64.  `warm_b` predicts the B
+    /// operand cache-resident (map-in drops to the setup cost);
+    /// `beta_zero` applies the `map(alloc:)` output-staging elision when
+    /// the cache config enables it.
+    pub fn offload_gemm_cycles(
+        &self,
+        (m, n, k): (usize, usize, usize),
+        batch: usize,
+        warm_b: bool,
+        beta_zero: bool,
+    ) -> f64 {
+        let batch = batch.max(1);
+        let (tm, tn, tk) = self.tile;
+        let (mp, np, kp) = (round_up(m, tm), round_up(n, tn), round_up(k, tk));
+        let (gm, gn, gk) = (mp / tm, np / tn, kp / tk);
+        let esz = 8u64;
+
+        let fork = self.forkjoin_shared()
+            + (self.fj.per_arg_cycles * 3 * batch as u64) as f64;
+
+        let a_in = self.memcpy((m * k) as u64 * esz);
+        let b_in = if warm_b && self.cache_enabled {
+            self.memcpy_setup()
+        } else {
+            self.memcpy((k * n) as u64 * esz)
+        };
+        let c_in = if beta_zero && self.cache_enabled {
+            self.memcpy_setup()
+        } else {
+            self.memcpy((m * n) as u64 * esz)
+        };
+        let c_out = self.memcpy((m * n) as u64 * esz);
+
+        let t = tile::gemm_tile_costs(&self.dma, &self.cluster, (tm, tn, tk), 8, false);
+        let steady = t.dma_ab.max(t.fpu).0 as f64;
+        let per_walk = (t.dma_ab + t.fpu).0 as f64
+            + (gk.saturating_sub(1)) as f64 * steady
+            + if beta_zero { 0.0 } else { t.dma_c.0 as f64 }
+            + (t.epilogue + t.dma_c).0 as f64;
+        let charged_walks = (gm * gn).div_ceil(self.intra_clusters) as f64;
+
+        fork + batch as f64 * (a_in + b_in + c_in + c_out + charged_walks * per_walk)
+    }
+
+    /// Predicted cycles for the same GEMM batch on the host path.
+    pub fn host_gemm_cycles(&self, (m, n, k): (usize, usize, usize), batch: usize) -> f64 {
+        batch.max(1) as f64 * self.host.gemm_cycles(m, n, k, false).0 as f64
+    }
+
+    /// Predicted cycles for one coalesced device GEMV launch (f64).
+    pub fn offload_gemv_cycles(
+        &self,
+        (m, n): (usize, usize),
+        batch: usize,
+        beta_zero: bool,
+    ) -> f64 {
+        let batch = batch.max(1);
+        let (tm, _tn, tk) = self.tile;
+        let (mp, np) = (round_up(m, tm), round_up(n, tk));
+        let (gm, gk) = (mp / tm, np / tk);
+        let esz = 8u64;
+
+        let fork = self.forkjoin_shared()
+            + (self.fj.per_arg_cycles * 3 * batch as u64) as f64;
+        let a_in = self.memcpy((m * n) as u64 * esz);
+        let x_in = self.memcpy(n as u64 * esz);
+        let y_in = if beta_zero && self.cache_enabled {
+            self.memcpy_setup()
+        } else {
+            self.memcpy(m as u64 * esz)
+        };
+        let y_out = self.memcpy(m as u64 * esz);
+
+        let p = tile::gemv_panel_costs(&self.dma, &self.cluster, (tm, tk), 8, false);
+        let compute = (gm * gk) as f64 * p.dma_panel.max(p.fpu).0 as f64;
+
+        fork + batch as f64 * (a_in + x_in + y_in + y_out + compute)
+    }
+
+    /// Predicted cycles for the same GEMV batch on the host path.
+    pub fn host_gemv_cycles(&self, (m, n): (usize, usize), batch: usize) -> f64 {
+        batch.max(1) as f64 * self.host.gemv_cycles(m, n, false).0 as f64
+    }
+
+    /// Predicted cycles for one coalesced device level-1 launch (axpy or
+    /// dot, length n, f64).
+    pub fn offload_level1_cycles(&self, n: usize, batch: usize, is_axpy: bool) -> f64 {
+        let batch = batch.max(1);
+        let chunk = self.level1_chunk;
+        let nargs = if is_axpy { 3 } else { 2 };
+        let fork = self.forkjoin_shared()
+            + (self.fj.per_arg_cycles * nargs * batch as u64) as f64;
+
+        let c = tile::level1_chunk_costs(&self.dma, &self.cluster, chunk);
+        let per_chunk_compute = (c.dma.max(c.fpu) + c.dma).0 as f64;
+        let mut per_member = 0.0;
+        let mut i = 0;
+        while i < n {
+            let take = chunk.min(n - i);
+            per_member += 2.0 * self.memcpy((take * 8) as u64) + per_chunk_compute;
+            i += take;
+        }
+        fork + batch as f64 * per_member
+    }
+
+    /// Predicted cycles for the same level-1 batch on the host path.
+    pub fn host_level1_cycles(&self, n: usize, batch: usize) -> f64 {
+        batch.max(1) as f64 * self.host.level1_cycles(n, 2.0, false).0 as f64
+    }
+
+    // ------------------------------------------------------------------
+    // Calibrated decisions
+    // ------------------------------------------------------------------
+
+    fn scaled_device(&self, op: CostOp, raw: f64) -> f64 {
+        raw * self.calib.device_scale(op)
+    }
+
+    fn scaled_host(&self, op: CostOp, raw: f64) -> f64 {
+        raw * self.calib.host_scale(op)
+    }
+
+    /// Does the device path win a single f64 GEMM of (m, n, k)?
+    /// `warm_b` predicts B cache-resident on the target cluster (the
+    /// cache-aware dispatch the affinity directory feeds).
+    pub fn device_wins_gemm(&self, m: usize, n: usize, k: usize, warm_b: bool) -> bool {
+        self.scaled_device(
+            CostOp::Gemm,
+            self.offload_gemm_cycles((m, n, k), 1, warm_b, true),
+        ) < self.scaled_host(CostOp::Gemm, self.host_gemm_cycles((m, n, k), 1))
+    }
+
+    /// Does the device path win a single f64 GEMV of (m, n)?
+    pub fn device_wins_gemv(&self, m: usize, n: usize) -> bool {
+        self.scaled_device(CostOp::Gemv, self.offload_gemv_cycles((m, n), 1, true))
+            < self.scaled_host(CostOp::Gemv, self.host_gemv_cycles((m, n), 1))
+    }
+
+    /// Does the device path win a single f64 level-1 call of length n?
+    pub fn device_wins_level1(&self, n: usize, is_axpy: bool) -> bool {
+        self.scaled_device(CostOp::Level1, self.offload_level1_cycles(n, 1, is_axpy))
+            < self.scaled_host(CostOp::Level1, self.host_level1_cycles(n, 1))
+    }
+
+    /// THE mode-to-path mapping, shared by every consumer that must
+    /// agree with dispatch (the batcher's linger gate, the placement
+    /// router's admission/footprints): forced modes answer directly,
+    /// `Auto` is the cold model comparison for the serve-protocol op
+    /// name ("gemm" dims (m, n, k), "gemv" (m, n, _), "axpy"/"dot"
+    /// (n, _, _)).  Assumes the serving default of all kernels being
+    /// device-enabled; the worker's own decision additionally applies
+    /// `DispatchPolicy::device_kernels` and cache warmth — warmth only
+    /// ever moves jobs host->device, so a cold-host answer here is
+    /// conservative, never wrong-side for capacity.
+    pub fn decides_device(
+        &self,
+        op: &str,
+        dims: (usize, usize, usize),
+        mode: DispatchMode,
+    ) -> bool {
+        match mode {
+            DispatchMode::HostOnly => false,
+            DispatchMode::DeviceOnly | DispatchMode::DeviceZeroCopy => true,
+            DispatchMode::Auto => match op {
+                "gemm" => self.device_wins_gemm(dims.0, dims.1, dims.2, false),
+                "gemv" => self.device_wins_gemv(dims.0, dims.1),
+                "axpy" => self.device_wins_level1(dims.0, true),
+                "dot" => self.device_wins_level1(dims.0, false),
+                _ => false,
+            },
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Derived policy surfaces
+    // ------------------------------------------------------------------
+
+    /// Live calibrated crossovers per op (the smallest winning size).
+    pub fn crossovers(&self) -> Crossovers {
+        Crossovers {
+            gemm_n: smallest(MAX_DIM, |n| self.device_wins_gemm(n, n, n, false)),
+            gemm_warm_n: smallest(MAX_DIM, |n| self.device_wins_gemm(n, n, n, true)),
+            gemv_n: smallest(MAX_DIM, |n| self.device_wins_gemv(n, n)),
+            level1_n: smallest(MAX_LEVEL1_N, |n| self.device_wins_level1(n, true)),
+        }
+    }
+
+    /// The batcher's amortization curve: with `batch_len` members
+    /// already collected, the wall time worth waiting for ONE more is
+    /// the marginal per-member fork-join saving `F/b - F/(b+1)` (the
+    /// added member's own time is paid by that member either way).  Once
+    /// this drops below the expected wait for the next arrival, lingering
+    /// costs the queued members more latency than it saves — the batcher
+    /// compares against its remaining window and stops.
+    pub fn linger_allowance(&self, op: CostOp, batch_len: usize) -> Duration {
+        let b = batch_len.max(1) as f64;
+        let f_cycles = self.scaled_device(op, self.forkjoin_shared());
+        let secs = f_cycles / (b * (b + 1.0)) / self.freq_hz as f64;
+        Duration::from_secs_f64(secs)
+    }
+
+    /// Software-pipelining overlap credit: how many of this batch's
+    /// map-in cycles hide under the previous batch's compute window
+    /// (the data path double-buffers, so the hideable share is the
+    /// smaller of the two regions).
+    pub fn overlap_credit(&self, map_in_cycles: u64, prev_compute_cycles: u64) -> u64 {
+        map_in_cycles.min(prev_compute_cycles)
+    }
+
+    /// Staged device-DRAM footprint of an f64 GEMM (what the placement
+    /// router sizes lanes and steals against).
+    pub fn gemm_staged_bytes(&self, dims: (usize, usize, usize)) -> u64 {
+        gemm_staged_bytes_tiled(self.tile, dims, 8)
+    }
+
+    /// Staged device-DRAM footprint of an f64 GEMV.
+    pub fn gemv_staged_bytes(&self, dims: (usize, usize)) -> u64 {
+        gemv_staged_bytes_tiled(self.tile, dims, 8)
+    }
+
+    // ------------------------------------------------------------------
+    // Feedback
+    // ------------------------------------------------------------------
+
+    /// Fold one observed batch timing into the calibration (no-op unless
+    /// `[cost] calibrate` is on).  `op` is the serve-protocol name with
+    /// dims as in [`CostModel::decides_device`]; `observed_cycles` is
+    /// the batch's total virtual time on its path; `warm_b` must be the
+    /// warmth the batch actually staged with (a warm batch compared
+    /// against the cold prediction would read as "device faster than
+    /// predicted" and floor-bias the scale).  Residual bias: in a
+    /// multi-member shared-B batch the first member is cold and the rest
+    /// hit — between the two predictions; the clamps bound it.
+    pub fn observe(
+        &self,
+        op: &str,
+        dims: (usize, usize, usize),
+        batch: usize,
+        observed_cycles: u64,
+        host_path: bool,
+        warm_b: bool,
+    ) {
+        if !self.knobs.calibrate || observed_cycles == 0 {
+            return;
+        }
+        let Some(cop) = CostOp::from_name(op) else {
+            return;
+        };
+        let (device_pred, host_pred) = match op {
+            "gemm" => (
+                self.offload_gemm_cycles((dims.0, dims.1, dims.2), batch, warm_b, true),
+                self.host_gemm_cycles((dims.0, dims.1, dims.2), batch),
+            ),
+            "gemv" => (
+                self.offload_gemv_cycles((dims.0, dims.1), batch, true),
+                self.host_gemv_cycles((dims.0, dims.1), batch),
+            ),
+            // axpy and dot share the Level1 scale but predict with their
+            // own per-arg marshalling counts
+            "axpy" | "dot" => (
+                self.offload_level1_cycles(dims.0, batch, op == "axpy"),
+                self.host_level1_cycles(dims.0, batch),
+            ),
+            _ => return,
+        };
+        if host_path {
+            self.calib
+                .observe_host(cop, host_pred, observed_cycles as f64, &self.knobs);
+        } else {
+            self.calib
+                .observe_device(cop, device_pred, observed_cycles as f64, &self.knobs);
+        }
+    }
+}
+
+/// Smallest `n in 1..=hi` satisfying `p` (binary search; the win
+/// predicate is monotone in problem size because the device advantage
+/// grows with FLOPs while the fork-join stays fixed).
+fn smallest(hi: usize, p: impl Fn(usize) -> bool) -> Option<usize> {
+    if !p(hi) {
+        return None;
+    }
+    let (mut lo, mut hi) = (1usize, hi);
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if p(mid) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    Some(lo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> CostModel {
+        CostModel::from_platform(&PlatformConfig::default(), (64, 64, 64), 4096)
+    }
+
+    fn calibrating_model() -> CostModel {
+        let mut cfg = PlatformConfig::default();
+        cfg.cost.calibrate = true;
+        CostModel::from_platform(&cfg, (64, 64, 64), 4096)
+    }
+
+    #[test]
+    fn gemm_crossover_sits_in_the_figure3_band() {
+        let m = model();
+        let x = m.crossovers();
+        let n = x.gemm_n.expect("gemm must cross over");
+        // the paper's Figure 3: offload loses at 64, wins at 128
+        assert!(n > 64 && n <= 128, "cold gemm crossover n={n}");
+        assert!(!m.device_wins_gemm(64, 64, 64, false));
+        assert!(m.device_wins_gemm(128, 128, 128, false));
+        // tiny problems are dominated by the fixed fork-join
+        assert!(!m.device_wins_gemm(16, 16, 16, false));
+    }
+
+    #[test]
+    fn warm_b_moves_the_crossover_below_cold_when_cache_is_on() {
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.cache.cache_frac = 0.4; // cache on => elisions modelled
+        let m = CostModel::from_platform(&cfg, (64, 64, 64), 4096);
+        let x = m.crossovers();
+        let (cold, warm) = (x.gemm_n.unwrap(), x.gemm_warm_n.unwrap());
+        assert!(
+            warm < cold,
+            "warm crossover {warm} must undercut cold {cold}"
+        );
+        // with the cache off, warmth cannot be exploited: same estimate
+        let off = model();
+        assert_eq!(
+            off.offload_gemm_cycles((128, 128, 128), 1, true, true),
+            off.offload_gemm_cycles((128, 128, 128), 1, false, true),
+        );
+    }
+
+    #[test]
+    fn gemv_and_level1_never_win_cold_in_copy_mode() {
+        // the partition copy of A (27.8 cycles/elem) outweighs the host's
+        // 5 cycles/elem at every size — the old static thresholds
+        // (512x512, 1M) were wrong about this, which is the point of
+        // deriving dispatch from the model
+        let m = model();
+        let x = m.crossovers();
+        assert_eq!(x.gemv_n, None);
+        assert_eq!(x.level1_n, None);
+        assert!(!m.device_wins_gemv(2048, 2048));
+        assert!(!m.device_wins_level1(1 << 20, true));
+    }
+
+    #[test]
+    fn batching_amortizes_the_fixed_cost() {
+        let m = model();
+        let one = m.offload_gemm_cycles((64, 64, 64), 1, false, true);
+        let eight = m.offload_gemm_cycles((64, 64, 64), 8, false, true);
+        // 8 members cost far less than 8 launches
+        assert!(eight < 8.0 * one * 0.7, "batch 8: {eight} vs 8x{one}");
+        // the per-member marginal is below the single-call cost by ~the
+        // shared fork-join
+        let marginal = eight - m.offload_gemm_cycles((64, 64, 64), 7, false, true);
+        assert!(marginal < one - 1_000_000.0);
+    }
+
+    #[test]
+    fn calibration_moves_the_crossover_toward_injected_truth() {
+        let m = calibrating_model();
+        let base = m.crossovers().gemm_n.unwrap();
+
+        // inject a device that is really 3x slower than the analytical
+        // estimate: the crossover must climb toward (and past) the truth
+        for n in [64usize, 96, 128] {
+            let pred = m.offload_gemm_cycles((n, n, n), 1, false, true);
+            for _ in 0..64 {
+                m.observe("gemm", (n, n, n), 1, (pred * 3.0) as u64, false, false);
+            }
+        }
+        let slow = m.crossovers().gemm_n.unwrap();
+        assert!(slow > base, "3x-slow device: crossover {base} -> {slow}");
+
+        // now a device 4x faster than estimated: crossover must drop
+        let m2 = calibrating_model();
+        for n in [64usize, 96, 128] {
+            let pred = m2.offload_gemm_cycles((n, n, n), 1, false, true);
+            for _ in 0..64 {
+                m2.observe("gemm", (n, n, n), 1, (pred * 0.25) as u64, false, false);
+            }
+        }
+        let fast = m2.crossovers().gemm_n.unwrap();
+        assert!(fast < base, "4x-fast device: crossover {base} -> {fast}");
+    }
+
+    #[test]
+    fn decides_device_is_the_shared_mode_mapping() {
+        let m = model();
+        // forced modes answer without consulting the estimates
+        assert!(!m.decides_device("gemm", (4096, 4096, 4096), DispatchMode::HostOnly));
+        assert!(m.decides_device("gemm", (2, 2, 2), DispatchMode::DeviceOnly));
+        assert!(m.decides_device("gemv", (2, 2, 0), DispatchMode::DeviceZeroCopy));
+        // Auto matches the per-op win predicates (incl. the axpy/dot split)
+        assert!(m.decides_device("gemm", (128, 128, 128), DispatchMode::Auto));
+        assert!(!m.decides_device("gemm", (64, 64, 64), DispatchMode::Auto));
+        assert!(!m.decides_device("gemv", (2048, 2048, 0), DispatchMode::Auto));
+        assert!(!m.decides_device("axpy", (1 << 20, 0, 0), DispatchMode::Auto));
+        assert!(!m.decides_device("dot", (1 << 20, 0, 0), DispatchMode::Auto));
+        assert!(!m.decides_device("fence", (0, 0, 0), DispatchMode::Auto));
+        // dot predicts 2 marshalled args per member, axpy 3
+        assert!(
+            m.offload_level1_cycles(4096, 4, false)
+                < m.offload_level1_cycles(4096, 4, true)
+        );
+    }
+
+    #[test]
+    fn observe_is_inert_with_calibration_off() {
+        let m = model(); // default: calibrate = false
+        let before = m.crossovers();
+        for _ in 0..64 {
+            m.observe("gemm", (128, 128, 128), 1, u64::MAX / 2, false, false);
+            m.observe("gemv", (256, 256, 0), 1, 1, true, false);
+        }
+        assert_eq!(m.crossovers(), before);
+        assert_eq!(m.calibration().device_scale(CostOp::Gemm), 1.0);
+    }
+
+    #[test]
+    fn clones_share_calibration() {
+        let a = calibrating_model();
+        let b = a.clone();
+        let pred = a.offload_gemm_cycles((128, 128, 128), 1, false, true);
+        for _ in 0..64 {
+            a.observe("gemm", (128, 128, 128), 1, (pred * 2.0) as u64, false, false);
+        }
+        assert!(
+            (b.calibration().device_scale(CostOp::Gemm) - 2.0).abs() < 0.1,
+            "clone must see the shared scales"
+        );
+    }
+
+    #[test]
+    fn linger_allowance_decays_quadratically() {
+        let m = model();
+        let a1 = m.linger_allowance(CostOp::Gemm, 1);
+        let a2 = m.linger_allowance(CostOp::Gemm, 2);
+        let a4 = m.linger_allowance(CostOp::Gemm, 4);
+        assert!(a1 > a2 && a2 > a4);
+        // F = 1.21M cycles at 50 MHz => F/2 ~ 12 ms for the second member
+        assert!(a1 > Duration::from_millis(5) && a1 < Duration::from_millis(30));
+        // marginal saving at b=4 is F/20 ~ 1.2 ms
+        assert!(a4 < Duration::from_millis(3));
+    }
+
+    #[test]
+    fn staged_footprints_match_the_tile_formulas() {
+        let m = model();
+        assert_eq!(
+            m.gemm_staged_bytes((1600, 1600, 1600)),
+            gemm_staged_bytes_tiled((64, 64, 64), (1600, 1600, 1600), 8)
+        );
+        assert_eq!(
+            m.gemv_staged_bytes((2048, 2048)),
+            gemv_staged_bytes_tiled((64, 64, 64), (2048, 2048), 8)
+        );
+        assert_eq!(m.overlap_credit(100, 60), 60);
+        assert_eq!(m.overlap_credit(40, 60), 40);
+    }
+}

@@ -1,0 +1,188 @@
+//! Per-tile cost kernels and staged-footprint formulas — the ONE copy of
+//! the DMA/FPU arithmetic that `blas::device` charges during execution
+//! and [`super::model::CostModel`] sums during estimation.
+//!
+//! Before this module existed the same expressions lived inline in
+//! `device.rs` three times (gemm, gemv, level-1) and again, re-derived,
+//! in the placement router's footprint math.  Any retune had to touch
+//! every copy; now the execution path and the estimator literally call
+//! the same functions, so they can never drift apart.
+//!
+//! Everything here is a pure function of the SoC models ([`DmaModel`],
+//! [`SnitchCluster`]) and the manifest tile geometry: no state, no
+//! calibration — calibration is layered on top by the model.
+
+use crate::soc::clock::Cycles;
+use crate::soc::{DmaModel, SnitchCluster};
+
+/// Round `n` up to a multiple of `m` (tile padding).
+pub fn round_up(n: usize, m: usize) -> usize {
+    n.div_ceil(m) * m
+}
+
+/// Steady-state costs of one GEMM tile step (see `device::gemm_compute`):
+/// the A+B panel refill, the FPU burst, the C-tile transfer, and the
+/// `alpha*acc + beta*c` epilogue on the resident tile.
+#[derive(Debug, Clone, Copy)]
+pub struct GemmTileCosts {
+    /// One (A-panel + B-panel) DMA refill.
+    pub dma_ab: Cycles,
+    /// One tm x tn x tk FPU burst.
+    pub fpu: Cycles,
+    /// One C-tile DMA transfer (in or out).
+    pub dma_c: Cycles,
+    /// Epilogue: 2 flops/element on the resident tm x tn tile.
+    pub epilogue: Cycles,
+}
+
+/// GEMM tile-step costs for a (tm, tn, tk) tile of `elem_size`-byte
+/// elements.  Double-buffered steady state charges `max(dma_ab, fpu)`
+/// per K step; the first step of a walk is exposed (`dma_ab + fpu`).
+pub fn gemm_tile_costs(
+    dma: &DmaModel,
+    cluster: &SnitchCluster,
+    (tm, tn, tk): (usize, usize, usize),
+    elem_size: usize,
+    f32_path: bool,
+) -> GemmTileCosts {
+    let esz = elem_size as u64;
+    GemmTileCosts {
+        dma_ab: dma.cost_2d(tm as u64, tk as u64 * esz)
+            + dma.cost_2d(tk as u64, tn as u64 * esz),
+        fpu: cluster.gemm_tile_cycles(tm, tn, tk, f32_path),
+        dma_c: dma.cost_2d(tm as u64, tn as u64 * esz),
+        epilogue: cluster.stream_cycles(tm * tn, 2.0, f32_path),
+    }
+}
+
+/// Costs of one GEMV row-panel step (see `device::gemv_compute`):
+/// level-2 is DMA-bound, each panel is streamed once against the staged
+/// x matrix.
+#[derive(Debug, Clone, Copy)]
+pub struct GemvPanelCosts {
+    /// One tm x tk A row-panel DMA refill.
+    pub dma_panel: Cycles,
+    /// The panel's FPU burst (2 flops/element).
+    pub fpu: Cycles,
+}
+
+/// GEMV panel-step costs for a (tm, tk) panel of `elem_size`-byte
+/// elements.  The charge per step is `max(dma_panel, fpu)`.
+pub fn gemv_panel_costs(
+    dma: &DmaModel,
+    cluster: &SnitchCluster,
+    (tm, tk): (usize, usize),
+    elem_size: usize,
+    f32_path: bool,
+) -> GemvPanelCosts {
+    let esz = elem_size as u64;
+    GemvPanelCosts {
+        dma_panel: dma.cost_2d(tm as u64, tk as u64 * esz),
+        fpu: cluster.stream_cycles(tm * tk, 2.0, f32_path),
+    }
+}
+
+/// Costs of one level-1 chunk step (see `device::level1_batch`): a
+/// 1-D DMA burst of the chunk plus its streaming FPU cost (f64 only —
+/// the artifact catalog carries f64 level-1 kernels).
+#[derive(Debug, Clone, Copy)]
+pub struct Level1ChunkCosts {
+    /// One chunk-sized 1-D DMA burst.
+    pub dma: Cycles,
+    /// The chunk's FPU burst (2 flops/element).
+    pub fpu: Cycles,
+}
+
+/// Level-1 chunk-step costs for an artifact-sized `chunk` of f64
+/// elements.  The charge per chunk is `max(dma, fpu) + dma`.
+pub fn level1_chunk_costs(
+    dma: &DmaModel,
+    cluster: &SnitchCluster,
+    chunk: usize,
+) -> Level1ChunkCosts {
+    Level1ChunkCosts {
+        dma: dma.cost_2d(1, (chunk * 8) as u64),
+        fpu: cluster.stream_cycles(chunk, 2.0, false),
+    }
+}
+
+/// Device-DRAM bytes one staged member occupies for an (m, n, k) GEMM
+/// given the manifest tile geometry and element size: three zero-padded
+/// operands.  Shared by the worker's batch cap, the placement router's
+/// shape routing and the model's footprint estimates, so routing can
+/// never drift from what staging actually allocates.
+pub fn gemm_staged_bytes_tiled(
+    (tm, tn, tk): (usize, usize, usize),
+    (m, n, k): (usize, usize, usize),
+    elem_size: usize,
+) -> u64 {
+    let (mp, np, kp) = (round_up(m, tm), round_up(n, tn), round_up(k, tk));
+    ((mp * kp + kp * np + mp * np) * elem_size) as u64
+}
+
+/// Device-DRAM bytes one staged member occupies for an (m, n) GEMV —
+/// the padded A matrix, the tile-width x matrix and the y vector.
+pub fn gemv_staged_bytes_tiled(
+    (tm, tn, tk): (usize, usize, usize),
+    (m, n): (usize, usize),
+    elem_size: usize,
+) -> u64 {
+    let (mp, np) = (round_up(m, tm), round_up(n, tk));
+    ((mp * np + np * tn + mp) * elem_size) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+
+    fn models() -> (DmaModel, SnitchCluster) {
+        let cfg = PlatformConfig::default();
+        (
+            DmaModel::new(cfg.dma.clone()),
+            SnitchCluster::new(cfg.cluster.clone(), cfg.memory.l1_spm_bytes),
+        )
+    }
+
+    #[test]
+    fn gemm_tile_costs_match_the_soc_models() {
+        let (dma, cluster) = models();
+        let t = gemm_tile_costs(&dma, &cluster, (64, 64, 64), 8, false);
+        // one 64x512B panel is 4402 cycles (see soc::dma tests); A+B = 2x
+        assert_eq!(t.dma_ab, Cycles(8804));
+        assert_eq!(t.dma_c, Cycles(4402));
+        assert_eq!(t.fpu, cluster.gemm_tile_cycles(64, 64, 64, false));
+        assert_eq!(t.epilogue, cluster.stream_cycles(64 * 64, 2.0, false));
+    }
+
+    #[test]
+    fn gemv_and_level1_costs_match_the_soc_models() {
+        let (dma, cluster) = models();
+        let g = gemv_panel_costs(&dma, &cluster, (64, 64), 8, false);
+        assert_eq!(g.dma_panel, dma.cost_2d(64, 512));
+        assert_eq!(g.fpu, cluster.stream_cycles(64 * 64, 2.0, false));
+        let l = level1_chunk_costs(&dma, &cluster, 4096);
+        assert_eq!(l.dma, dma.cost_2d(1, 4096 * 8));
+        assert_eq!(l.fpu, cluster.stream_cycles(4096, 2.0, false));
+    }
+
+    #[test]
+    fn staged_bytes_pad_to_the_tile() {
+        let tile = (64, 64, 64);
+        // exact multiples: 3 * n^2 * 8
+        assert_eq!(
+            gemm_staged_bytes_tiled(tile, (128, 128, 128), 8),
+            3 * 128 * 128 * 8
+        );
+        // 65 pads to 128 in every dim
+        assert_eq!(
+            gemm_staged_bytes_tiled(tile, (65, 65, 65), 8),
+            3 * 128 * 128 * 8
+        );
+        // gemv: padded A + x matrix (np x tn) + y (mp)
+        assert_eq!(
+            gemv_staged_bytes_tiled(tile, (128, 128), 8),
+            (128 * 128 + 128 * 64 + 128) * 8
+        );
+    }
+}

@@ -52,6 +52,10 @@ impl Fig3Point {
 #[derive(Debug, Clone)]
 pub struct Fig3Report {
     pub points: Vec<Fig3Point>,
+    /// The cost model's predicted cold f64 GEMM crossover (the size the
+    /// measured curves should cross between — the paper puts it between
+    /// 64 and 128).  `None` when the session carries no model.
+    pub model_crossover_n: Option<usize>,
 }
 
 /// Run one (n, mode) point on an existing session.
@@ -65,7 +69,9 @@ pub fn run_point(blas: &mut HeroBlas, n: usize, mode: DispatchMode,
     let mut c_ref = vec![0.0; n * n];
     crate::blas::host::naive_gemm(n, n, n, 1.0, a.data(), b.data(), 0.0, &mut c_ref);
 
-    blas.policy = DispatchPolicy::with_mode(mode);
+    // mode only — replacing the whole policy would strip the cost model
+    // this report's summary advertises (Auto points must dispatch on it)
+    blas.policy.mode = mode;
     blas.reset_run();
     let c = a.matmul(&b, blas)?;
 
@@ -97,13 +103,18 @@ pub fn run_fig3(
     seed: u64,
 ) -> Result<Fig3Report> {
     let mut blas = HeroBlas::new(cfg, artifacts, DispatchPolicy::default())?;
+    let model_crossover_n = blas
+        .policy
+        .model
+        .as_ref()
+        .and_then(|m| m.crossovers().gemm_n);
     let mut points = Vec::new();
     for &n in sizes {
         for &mode in modes {
             points.push(run_point(&mut blas, n, mode, seed)?);
         }
     }
-    Ok(Fig3Report { points })
+    Ok(Fig3Report { points, model_crossover_n })
 }
 
 impl Fig3Report {
@@ -181,7 +192,7 @@ impl Fig3Report {
 
     /// Summary block comparing to the paper.
     pub fn summary(&self) -> String {
-        match self.headline() {
+        let headline = match self.headline() {
             Some((s, share)) => format!(
                 "headline @ N=128: speedup {} (paper {}), copy share {} (paper {})\n",
                 ratio(s),
@@ -191,6 +202,13 @@ impl Fig3Report {
             ),
             None => "headline @ N=128: not measured (need host_only + device_only at 128)\n"
                 .to_string(),
+        };
+        match self.model_crossover_n {
+            Some(n) => format!(
+                "{headline}cost-model crossover: offload wins from n>={n} \
+                 (paper: between 64 and 128)\n"
+            ),
+            None => headline,
         }
     }
 }

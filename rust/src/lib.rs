@@ -28,6 +28,7 @@
 pub mod blas;
 pub mod cblas;
 pub mod config;
+pub mod cost;
 pub mod error;
 pub mod harness;
 pub mod hero;

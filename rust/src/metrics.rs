@@ -78,6 +78,9 @@ pub struct ClusterCounters {
     pub stolen: AtomicU64,
     /// Jobs the placement router routed here by operand affinity.
     pub affine_routed: AtomicU64,
+    /// Shared operands this cluster's worker pre-staged into its cache
+    /// during the batcher's linger window (directory-driven prefetch).
+    pub prefetched: AtomicU64,
     /// Operand-cache hits on this cluster's engine.
     pub cache_hits: AtomicU64,
     /// Operand-cache misses on this cluster's engine.
@@ -96,6 +99,7 @@ pub struct ClusterMetrics {
     pub batches: u64,
     pub stolen: u64,
     pub affine_routed: u64,
+    pub prefetched: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub bytes_to_device: u64,
@@ -149,6 +153,12 @@ pub struct SchedCounters {
     /// Jobs routed to the big-shape lane because their staged footprint
     /// exceeds a small cluster's slice.
     pub big_shape_routed: AtomicU64,
+    /// Shared operands pre-staged into a cold home's cache during the
+    /// batcher's linger window (directory-driven prefetch).
+    pub prefetched: AtomicU64,
+    /// Affine operand keys re-homed by the steal-fairness load balancer
+    /// (home cluster saturated for `rebalance_drains` drain passes).
+    pub rehomed: AtomicU64,
     /// One [`ClusterCounters`] per pool cluster (empty under
     /// `Default` — tests that never ask for per-cluster data).
     pub per_cluster: Vec<ClusterCounters>,
@@ -205,6 +215,8 @@ impl SchedCounters {
             stolen: ld(&self.stolen),
             affine_routed: ld(&self.affine_routed),
             big_shape_routed: ld(&self.big_shape_routed),
+            prefetched: ld(&self.prefetched),
+            rehomed: ld(&self.rehomed),
             clusters: self
                 .per_cluster
                 .iter()
@@ -216,6 +228,7 @@ impl SchedCounters {
                     batches: ld(&c.batches),
                     stolen: ld(&c.stolen),
                     affine_routed: ld(&c.affine_routed),
+                    prefetched: ld(&c.prefetched),
                     cache_hits: ld(&c.cache_hits),
                     cache_misses: ld(&c.cache_misses),
                     bytes_to_device: ld(&c.bytes_to_device),
@@ -271,6 +284,8 @@ pub struct SchedMetrics {
     pub stolen: u64,
     pub affine_routed: u64,
     pub big_shape_routed: u64,
+    pub prefetched: u64,
+    pub rehomed: u64,
     /// Per-cluster breakdown, indexed by cluster id (empty when the
     /// counters were built with `Default` instead of `new`).
     pub clusters: Vec<ClusterMetrics>,
@@ -284,7 +299,7 @@ impl SchedMetrics {
              batches={} batched_jobs={} pipelined={} overlap={}us \
              queue_peak={} service_ewma={}us cache_hits={} cache_misses={} \
              cache_evictions={} to_dev={}B elided={}B stolen={} affine={} \
-             big_shape={}",
+             big_shape={} prefetched={} rehomed={}",
             self.submitted,
             self.completed,
             self.rejected,
@@ -304,6 +319,8 @@ impl SchedMetrics {
             self.stolen,
             self.affine_routed,
             self.big_shape_routed,
+            self.prefetched,
+            self.rehomed,
         )
     }
 }

@@ -43,10 +43,16 @@ pub fn operand_key(op: &str, n: usize, seed: u64) -> u64 {
 }
 
 /// The directory: operand key -> residency bitmask over pool clusters
-/// (the config caps pools at 64, so one u64 mask suffices).
+/// (the config caps pools at 64, so one u64 mask suffices), plus an
+/// optional per-key **home override** set by the router's steal-fairness
+/// load balancer — when a key's hash-home stays saturated, the router
+/// re-homes the key and later same-key requests follow the override
+/// (warming the new home on their first batch) instead of queueing
+/// behind the hot cluster.
 #[derive(Debug, Default)]
 pub struct AffinityDirectory {
     resident: Mutex<HashMap<u64, u64>>,
+    homes: Mutex<HashMap<u64, u32>>,
 }
 
 impl AffinityDirectory {
@@ -73,9 +79,37 @@ impl AffinityDirectory {
         }
     }
 
+    /// Is `key` tracked as resident in `cluster`'s cache?  (What the
+    /// worker's cache-aware dispatch asks before estimating map-in.)
+    pub fn is_resident(&self, key: u64, cluster: u32) -> bool {
+        self.resident
+            .lock()
+            .expect("affinity lock")
+            .get(&key)
+            .is_some_and(|mask| mask & (1u64 << (cluster % 64)) != 0)
+    }
+
+    /// Hard cap on home overrides: unlike residency bits (pruned on
+    /// eviction), overrides have no natural retirement event, so the map
+    /// is cleared wholesale at this size — overrides are hints; losing
+    /// them reverts keys to their deterministic hash-homes.
+    const MAX_HOMES: usize = 1024;
+
+    /// Re-home `key`: later placements follow `cluster` (when eligible)
+    /// even while the operand is still resident elsewhere — the new home
+    /// warms up on its first batch, the old copy ages out via LRU.
+    pub fn set_home(&self, key: u64, cluster: u32) {
+        let mut homes = self.homes.lock().expect("affinity lock");
+        if homes.len() >= Self::MAX_HOMES {
+            homes.clear();
+        }
+        homes.insert(key, cluster);
+    }
+
     /// Pick the cluster for `key` among `eligible` (sorted cluster ids):
-    /// the lowest-id cluster with the operand resident, else the
-    /// deterministic hash-home.  Returns `(cluster, warm)`.
+    /// the load-balancer's home override first, then the lowest-id
+    /// cluster with the operand resident, else the deterministic
+    /// hash-home.  Returns `(cluster, warm)`.
     pub fn place(&self, key: u64, eligible: &[u32]) -> (u32, bool) {
         debug_assert!(!eligible.is_empty());
         let mask = *self
@@ -84,6 +118,11 @@ impl AffinityDirectory {
             .expect("affinity lock")
             .get(&key)
             .unwrap_or(&0);
+        if let Some(&h) = self.homes.lock().expect("affinity lock").get(&key) {
+            if eligible.contains(&h) {
+                return (h, mask & (1u64 << (h % 64)) != 0);
+            }
+        }
         for &c in eligible {
             if mask & (1u64 << (c % 64)) != 0 {
                 return (c, true);
@@ -149,6 +188,25 @@ mod tests {
         assert!(d.is_empty(), "empty masks are pruned");
         // evicting an unknown key is a no-op
         d.note_evicted(0xDEAD, 0);
+    }
+
+    #[test]
+    fn home_override_beats_residency_and_respects_eligibility() {
+        let d = AffinityDirectory::new();
+        let key = operand_key("gemm_b", 64, 42);
+        let eligible = [0u32, 1, 2, 3];
+        d.note_resident(key, 1);
+        assert!(d.is_resident(key, 1));
+        assert!(!d.is_resident(key, 2));
+        // re-home to 3: placement follows the override cold
+        d.set_home(key, 3);
+        assert_eq!(d.place(key, &eligible), (3, false));
+        // once the new home warms, the placement is warm there
+        d.note_resident(key, 3);
+        assert_eq!(d.place(key, &eligible), (3, true));
+        // an ineligible override is ignored (falls back to residency)
+        d.set_home(key, 0);
+        assert_eq!(d.place(key, &[1, 2, 3]), (1, true));
     }
 
     #[test]

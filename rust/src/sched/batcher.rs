@@ -11,10 +11,21 @@
 //! descriptor (see `blas::device::gemm_batch_launch`).  A batch of B
 //! pays the fork-join once, cutting the per-request overhead by ~B×,
 //! which moves the effective crossover below the single-call size.
+//!
+//! With the scheduler's [`CostModel`] attached, the linger window is
+//! sized from the model's **amortization curve** instead of being a
+//! flat constant: with b members collected, waiting for one more can
+//! save at most the marginal fork-join amortization `F/b - F/(b+1)` —
+//! once the remaining wait exceeds that, lingering costs the queued
+//! members more latency than it can possibly save, so collection stops
+//! early.  Jobs whose dispatch decision is the *host* pay no fork-join
+//! at all, so their batches never linger (they still coalesce whatever
+//! is already queued).
 
 use std::time::{Duration, Instant};
 
 use crate::config::DispatchMode;
+use crate::cost::{CostModel, CostOp};
 
 use super::queue::WorkQueue;
 use super::Job;
@@ -51,26 +62,62 @@ impl JobSource for WorkQueue {
 /// value with every worker).
 #[derive(Debug, Clone)]
 pub struct Batcher {
-    /// How long to linger for more same-key arrivals after the first job
-    /// (0 = grab only what is already queued).
+    /// Hard ceiling on lingering for more same-key arrivals after the
+    /// first job (0 = grab only what is already queued).  With a cost
+    /// model attached the *effective* window is the smaller of this and
+    /// the model's marginal-amortization allowance.
     pub window: Duration,
     /// Hard cap on members per launch (1 = batching off).
     pub max: usize,
+    /// The scheduler's shared cost model: sizes the linger window from
+    /// the fork-join amortization curve.  `None` (library users, unit
+    /// tests) keeps the flat window.
+    model: Option<CostModel>,
 }
 
 impl Batcher {
     pub fn new(window: Duration, max: usize) -> Batcher {
-        Batcher { window, max: max.max(1) }
+        Batcher { window, max: max.max(1), model: None }
+    }
+
+    /// Attach the scheduler's shared cost model (linger sizing).
+    pub fn with_model(mut self, model: CostModel) -> Batcher {
+        self.model = Some(model);
+        self
     }
 
     /// Batching off: every job launches alone (the paper's measured
     /// per-call configuration).
     pub fn disabled() -> Batcher {
-        Batcher { window: Duration::ZERO, max: 1 }
+        Batcher { window: Duration::ZERO, max: 1, model: None }
+    }
+
+    /// Does a launch with this key pay a fork-join that lingering could
+    /// amortize?  The model's shared mode-to-path mapping answers (no
+    /// model: only forced-host says no, the pre-model behavior).
+    fn pays_forkjoin(&self, key: &BatchKey) -> bool {
+        match &self.model {
+            Some(cm) => cm.decides_device(key.op, key.dims, key.mode),
+            None => key.mode != DispatchMode::HostOnly,
+        }
+    }
+
+    /// How much longer it is worth waiting for the NEXT member, given
+    /// `len` members collected: the model's marginal amortization, or
+    /// the full window without a model.
+    fn patience(&self, key: &BatchKey, len: usize) -> Duration {
+        match &self.model {
+            Some(cm) => {
+                let op = CostOp::from_name(key.op).unwrap_or(CostOp::Gemm);
+                cm.linger_allowance(op, len).min(self.window)
+            }
+            None => self.window,
+        }
     }
 
     /// Grow a batch around `first`: peel same-key jobs off the source up
-    /// to `min(self.max, cap)` members, lingering at most `self.window`.
+    /// to `min(self.max, cap)` members, lingering at most `self.window`
+    /// (tightened by the model's amortization curve as the batch grows).
     /// `cap` lets the caller bound the batch by device-DRAM capacity.
     /// Unbatchable jobs (no key) return alone.
     pub fn collect<S: JobSource + ?Sized>(
@@ -78,6 +125,22 @@ impl Batcher {
         source: &S,
         first: Job,
         cap: usize,
+    ) -> Vec<Job> {
+        self.collect_decided(source, first, cap, None)
+    }
+
+    /// [`Batcher::collect`] with the caller's already-made dispatch
+    /// decision: `device_bound = Some(d)` overrides the batcher's own
+    /// (cold) model estimate — the worker's gemm decision is cache-aware
+    /// (warm shared-B streams offload below the cold crossover), and the
+    /// linger decision must agree with the decision that actually
+    /// launches, or warm device batches would never coalesce.
+    pub fn collect_decided<S: JobSource + ?Sized>(
+        &self,
+        source: &S,
+        first: Job,
+        cap: usize,
+        device_bound: Option<bool>,
     ) -> Vec<Job> {
         let mut batch = vec![first];
         let key = match batch[0].batch_key() {
@@ -89,19 +152,32 @@ impl Batcher {
             return batch;
         }
         let deadline = Instant::now() + self.window;
+        // host-path launches pay no fork-join: nothing to amortize, so
+        // take what is queued and never linger
+        let linger = device_bound.unwrap_or_else(|| self.pays_forkjoin(&key));
+        let mut grew_at = Instant::now();
         loop {
-            batch.extend(source.take_matching(&key, max - batch.len()));
-            if batch.len() >= max {
+            let got = source.take_matching(&key, max - batch.len());
+            if !got.is_empty() {
+                grew_at = Instant::now();
+                batch.extend(got);
+            }
+            if batch.len() >= max || !linger {
                 break;
             }
             let now = Instant::now();
-            if now >= deadline {
+            // stop once the marginal fork-join saving of one more member
+            // can no longer repay the wait (expected queue-wait of the
+            // members already collected grows with every tick)
+            let patience_until = grew_at + self.patience(&key, batch.len());
+            let stop_at = deadline.min(patience_until);
+            if now >= stop_at {
                 break;
             }
             // Lingering trades a bounded latency bump for a large
             // fork-join saving; poll briefly rather than parking so a
             // sub-millisecond window still coalesces bursts.
-            std::thread::sleep((deadline - now).min(Duration::from_micros(200)));
+            std::thread::sleep((stop_at - now).min(Duration::from_micros(200)));
         }
         batch
     }
@@ -180,6 +256,59 @@ mod tests {
         let batch = b.collect(&q, gemm_job(1, 64), usize::MAX);
         h.join().unwrap();
         assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn host_decided_batches_never_linger() {
+        use crate::config::PlatformConfig;
+        let model =
+            CostModel::from_platform(&PlatformConfig::default(), (64, 64, 64), 4096);
+        let q = WorkQueue::new(16);
+        // n=16 Auto-mode gemm: the model decides host — no fork-join to
+        // amortize, so collect must return immediately despite the huge
+        // window (a late arrival is NOT waited for)
+        let host_job = |id| {
+            let (tx, _rx) = mpsc::channel();
+            Job {
+                id,
+                priority: Priority::Normal,
+                payload: JobPayload::Gemm(GemmRequest {
+                    n: 16,
+                    mode: DispatchMode::Auto,
+                    seed: id,
+                    b_seed: None,
+                }),
+                reply: tx,
+                cancel: crate::sched::CancelToken::default(),
+                enqueued_at: Instant::now(),
+            }
+        };
+        q.push(host_job(2)).unwrap();
+        let b = Batcher::new(Duration::from_millis(1500), 8).with_model(model);
+        let t0 = Instant::now();
+        let batch = b.collect(&q, host_job(1), usize::MAX);
+        assert_eq!(batch.len(), 2, "already-queued host jobs still coalesce");
+        assert!(
+            t0.elapsed() < Duration::from_millis(500),
+            "host-decided batch lingered {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn amortization_curve_tightens_the_window_as_the_batch_grows() {
+        use crate::config::PlatformConfig;
+        let model =
+            CostModel::from_platform(&PlatformConfig::default(), (64, 64, 64), 4096);
+        // marginal saving at b=1 (~F/2 ~ 12 ms at 50 MHz) exceeds a 2 ms
+        // window: small batches keep the configured window; at b=8 the
+        // marginal (~F/72 ~ 0.3 ms) is below it
+        let b = Batcher::new(Duration::from_millis(2), 16).with_model(model.clone());
+        let key = gemm_job(0, 64).batch_key().unwrap();
+        assert_eq!(b.patience(&key, 1), Duration::from_millis(2));
+        assert!(b.patience(&key, 8) < Duration::from_millis(1));
+        // device-only keys always pay the fork-join
+        assert!(b.pays_forkjoin(&key));
     }
 
     #[test]

@@ -47,6 +47,13 @@
 //! Each worker owns a full vertical slice (engine + artifact registry +
 //! policy) built *on its own thread* — nothing session-internal crosses
 //! threads, only [`Job`]s and their reply channels.
+//!
+//! One [`crate::cost::CostModel`] — built from the platform description
+//! and the manifest geometry, online-calibrated from observed batch
+//! timings when `[cost] calibrate` is on — is shared by every worker's
+//! `Auto` dispatch (cache-aware via the affinity directory), the
+//! router's shape/admission routing, and the batcher's linger sizing;
+//! the serve layer reports its live crossover estimates.
 
 pub mod affinity;
 pub mod batcher;
@@ -62,6 +69,7 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::config::{DispatchMode, PlatformConfig};
+use crate::cost::CostModel;
 use crate::error::{Error, Result};
 use crate::metrics::{SchedCounters, SchedMetrics};
 
@@ -324,6 +332,11 @@ pub struct Scheduler {
     workers: Mutex<Vec<JoinHandle<()>>>,
     pool_size: usize,
     next_id: AtomicU64,
+    /// The pool-shared cost model: one calibration state behind every
+    /// worker's dispatch, the router's shape/admission decisions and the
+    /// batcher's linger sizing.  Kept here so the serve layer can report
+    /// the live calibrated crossovers.
+    cost: CostModel,
 }
 
 impl std::fmt::Debug for Scheduler {
@@ -345,21 +358,24 @@ impl Scheduler {
         let sc = &cfg.sched;
         let pool = DevicePool::partition(cfg, sc.pool_clusters)?;
         let capacity = pool.capacity().clone();
-        // The router sizes shapes against the same tile geometry the
-        // staging path pads with — read it once from the manifest.
+        // ONE cost model for the whole pool: built from the platform
+        // description and the manifest geometry (the same tile shape the
+        // staging path pads with), shared — calibration state included —
+        // by every worker's dispatch, the router and the batcher.
         let manifest = crate::runtime::Manifest::load(artifacts)?;
-        let tile = (manifest.tile_m, manifest.tile_n, manifest.tile_k);
+        let cost = CostModel::from_manifest(cfg, &manifest);
         let queue = Arc::new(WorkQueue::new(sc.queue_capacity as usize));
         let counters = Arc::new(SchedCounters::new(sc.pool_clusters as usize));
         let router = Arc::new(PlacementRouter::new(
             capacity,
-            tile,
+            cost.clone(),
             sc.placement.clone(),
         ));
         let batcher = Batcher::new(
             std::time::Duration::from_millis(sc.batch_window_ms),
             sc.batch_max as usize,
-        );
+        )
+        .with_model(cost.clone());
 
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let mut handles = Vec::new();
@@ -371,6 +387,7 @@ impl Scheduler {
                 Arc::clone(&router),
                 Arc::clone(&counters),
                 batcher.clone(),
+                cost.clone(),
                 ready_tx.clone(),
             ));
         }
@@ -404,6 +421,7 @@ impl Scheduler {
             workers: Mutex::new(handles),
             pool_size: sc.pool_clusters as usize,
             next_id: AtomicU64::new(1),
+            cost,
         })
     }
 
@@ -488,6 +506,12 @@ impl Scheduler {
     /// The pool's capacity model (slice sizes, big-shape lane, tiles).
     pub fn capacity(&self) -> &CapacityModel {
         self.router.capacity()
+    }
+
+    /// The pool-shared offload cost model (live calibrated crossovers —
+    /// the serve banner and `metrics` op report them).
+    pub fn cost_model(&self) -> &CostModel {
+        &self.cost
     }
 
     /// Stop accepting work, let workers drain the queue, join them.

@@ -30,16 +30,32 @@
 //!   then affine ones (a steal costs one cache miss, never wrong
 //!   numerics).  Fences are never stolen, and a thief never takes a job
 //!   it cannot stage.
+//! * **Steal-fairness re-homing** (`rebalance_drains > 0`): stealing is
+//!   reactive (idle workers only), so a *sustained* affine skew still
+//!   queues every same-operand request behind one saturated cluster.
+//!   When a cluster's run-queue depth stays above the pool mean for N
+//!   consecutive job-moving drain passes, the next affine key routed at
+//!   it is re-homed (via the directory's home override) to the
+//!   least-loaded eligible cluster — one extra cold copy, bounded by the
+//!   clamp of N, in exchange for cutting the affine queueing delay.
+//!
+//! Shape estimates and the host/device admission decision come from the
+//! scheduler's shared [`CostModel`]: a job routes to the big-shape lane
+//! only if it will actually *stage* there (forced-device or model-
+//! decided device), so a large Auto-mode GEMV that the dispatch model
+//! sends to the host no longer occupies the big lane, and host-decided
+//! jobs never fail a steal capacity check.
 //!
 //! Routing never changes numerics — only *where* a job runs — which is
 //! what the steal/affinity checksum tests pin.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
 use crate::config::PlacementConfig;
+use crate::cost::CostModel;
 use crate::metrics::SchedCounters;
 
 use super::affinity::{operand_key, AffinityDirectory};
@@ -84,6 +100,12 @@ struct RouterState {
     /// A live worker always drains its own deque before exiting, so
     /// shutdown adoption only ever takes jobs whose owner is gone.
     exited: Vec<bool>,
+    /// Consecutive job-moving drain passes each cluster's depth stayed
+    /// above the pool mean (atomics so the routing path, which holds the
+    /// state only by shared reference, can reset after a re-home).
+    over_streak: Vec<AtomicU32>,
+    /// Total job-moving drain passes (the re-homing cooldown clock).
+    drain_seq: AtomicU64,
 }
 
 /// The placement router (one per scheduler, shared by every worker and
@@ -92,9 +114,10 @@ struct RouterState {
 pub struct PlacementRouter {
     knobs: PlacementConfig,
     capacity: CapacityModel,
-    /// Manifest tile geometry (m, n, k) — pads shape estimates exactly
-    /// like the staging path does.
-    tile: (usize, usize, usize),
+    /// The scheduler's shared cost model: staged-footprint estimates
+    /// (padded exactly like the staging path) and the host/device
+    /// admission decision for Auto-mode jobs.
+    cost: CostModel,
     state: Mutex<RouterState>,
     arrivals: Condvar,
     directory: AffinityDirectory,
@@ -102,6 +125,13 @@ pub struct PlacementRouter {
     /// at every push/pop so the submit path's backpressure check reads
     /// one atomic instead of taking the router lock.
     routed: AtomicUsize,
+    /// Drain-sequence stamp of the last re-home: at most ONE re-home per
+    /// `rebalance_drains` moving drains, pool-wide.  Without this, a
+    /// single dominant hot key would ping-pong between clusters — each
+    /// side saturates in turn — paying a cold operand copy per flip; the
+    /// cooldown bounds the flip rate (and its cold-copy cost) to the
+    /// same N the operator chose for "sustained".
+    last_rehome: AtomicU64,
     /// Round-robin cursor for non-affine small jobs.
     rr: AtomicUsize,
     /// Separate cursor for fences so capacity tests stay deterministic:
@@ -112,21 +142,24 @@ pub struct PlacementRouter {
 impl PlacementRouter {
     pub fn new(
         capacity: CapacityModel,
-        tile: (usize, usize, usize),
+        cost: CostModel,
         knobs: PlacementConfig,
     ) -> PlacementRouter {
         let clusters = capacity.pool_clusters();
         PlacementRouter {
             knobs,
             capacity,
-            tile,
+            cost,
             state: Mutex::new(RouterState {
                 clusters: (0..clusters).map(|_| ClusterLanes::default()).collect(),
                 exited: vec![false; clusters],
+                over_streak: (0..clusters).map(|_| AtomicU32::new(0)).collect(),
+                drain_seq: AtomicU64::new(0),
             }),
             arrivals: Condvar::new(),
             directory: AffinityDirectory::new(),
             routed: AtomicUsize::new(0),
+            last_rehome: AtomicU64::new(0),
             rr: AtomicUsize::new(0),
             fence_rr: AtomicUsize::new(0),
         }
@@ -144,6 +177,13 @@ impl PlacementRouter {
     /// staging a tracked operand).
     pub fn note_resident(&self, key: u64, cluster: u32) {
         self.directory.note_resident(key, cluster);
+    }
+
+    /// Is an operand tracked as resident in a cluster's cache?  The
+    /// worker's cache-aware dispatch asks this before estimating map-in
+    /// cost (and the prefetch path asks it to detect a cold home).
+    pub fn is_resident(&self, key: u64, cluster: u32) -> bool {
+        self.directory.is_resident(key, cluster)
     }
 
     /// Clear an operand's residency (worker, draining the cache's
@@ -171,22 +211,40 @@ impl PlacementRouter {
         self.arrivals.notify_all();
     }
 
-    /// Estimated device-DRAM bytes one job stages, computed with the
-    /// very formulas the staging path allocates by (serving payloads
-    /// are f64); used for lane selection and steal capacity checks.
-    fn est_bytes(&self, payload: &JobPayload) -> u64 {
-        const F64: usize = 8;
+    /// Will this job actually run on a device path?  One shared mapping
+    /// ([`CostModel::decides_device`]) answers for the router and the
+    /// batcher alike — the same calibrated dispatch decision the worker
+    /// will make (cold estimate: warmth only pulls *more* jobs onto the
+    /// device, never off it, so a cold-host job is definitely host).
+    /// This is the serve-side admission fix: a job the dispatch model
+    /// sends to the host must not shape-route as if it staged operands.
+    fn decided_device(&self, payload: &JobPayload) -> bool {
         match payload {
-            JobPayload::Gemm(r) => crate::blas::device::gemm_staged_bytes_tiled(
-                self.tile,
-                (r.n, r.n, r.n),
-                F64,
-            ),
-            JobPayload::Gemv(r) => crate::blas::device::gemv_staged_bytes_tiled(
-                self.tile,
-                (r.m, r.n),
-                F64,
-            ),
+            JobPayload::Gemm(r) => {
+                self.cost.decides_device("gemm", (r.n, r.n, r.n), r.mode)
+            }
+            JobPayload::Gemv(r) => {
+                self.cost.decides_device("gemv", (r.m, r.n, 0), r.mode)
+            }
+            JobPayload::Level1(r) => {
+                self.cost.decides_device(r.op.name(), (r.n, 0, 0), r.mode)
+            }
+            JobPayload::Fence(_) => false,
+        }
+    }
+
+    /// Estimated device-DRAM bytes one job stages, from the shared cost
+    /// model (the very formulas the staging path allocates by; serving
+    /// payloads are f64); used for lane selection and steal capacity
+    /// checks.  Jobs the dispatch decision sends to the host stage
+    /// nothing — they fit anywhere.
+    fn est_bytes(&self, payload: &JobPayload) -> u64 {
+        if !self.decided_device(payload) {
+            return 0;
+        }
+        match payload {
+            JobPayload::Gemm(r) => self.cost.gemm_staged_bytes((r.n, r.n, r.n)),
+            JobPayload::Gemv(r) => self.cost.gemv_staged_bytes((r.m, r.n)),
             // level-1 stages one artifact-sized chunk pair at a time and
             // fences stage nothing — both fit anywhere
             JobPayload::Level1(_) | JobPayload::Fence(_) => 0,
@@ -196,7 +254,7 @@ impl PlacementRouter {
     /// Decide the target cluster for a job.  Order of precedence:
     /// big-shape lane (capacity is correctness), operand affinity,
     /// round-robin.  Returns (cluster, routed entry).
-    fn route_to(&self, job: Job, counters: &SchedCounters) -> (usize, Routed) {
+    fn route_to(&self, st: &RouterState, job: Job, counters: &SchedCounters) -> (usize, Routed) {
         let est = self.est_bytes(&job.payload);
         let pool = self.capacity.pool_clusters();
 
@@ -226,7 +284,33 @@ impl PlacementRouter {
             if let JobPayload::Gemm(r) = &job.payload {
                 if let Some(bs) = r.b_seed {
                     let key = operand_key("gemm_b", r.n, bs);
-                    let (c, _warm) = self.directory.place(key, &eligible);
+                    let (mut c, _warm) = self.directory.place(key, &eligible);
+                    // steal-fairness: a home saturated for N job-moving
+                    // drains hands the key to the least-loaded peer — at
+                    // most one re-home per N drains pool-wide (cooldown),
+                    // so a hot key cannot ping-pong a cold copy per flip
+                    let n_drains = self.knobs.rebalance_drains;
+                    if n_drains > 0
+                        && st.over_streak[c as usize].load(Ordering::Relaxed) >= n_drains
+                        && st.drain_seq.load(Ordering::Relaxed)
+                            >= self.last_rehome.load(Ordering::Relaxed) + n_drains as u64
+                    {
+                        let target = eligible
+                            .iter()
+                            .copied()
+                            .filter(|&e| e != c)
+                            .min_by_key(|&e| st.clusters[e as usize].depth());
+                        if let Some(t) = target {
+                            self.directory.set_home(key, t);
+                            st.over_streak[c as usize].store(0, Ordering::Relaxed);
+                            self.last_rehome.store(
+                                st.drain_seq.load(Ordering::Relaxed),
+                                Ordering::Relaxed,
+                            );
+                            counters.rehomed.fetch_add(1, Ordering::Relaxed);
+                            c = t;
+                        }
+                    }
                     counters.affine_routed.fetch_add(1, Ordering::Relaxed);
                     if let Some(pc) = counters.cluster(c) {
                         pc.affine_routed.fetch_add(1, Ordering::Relaxed);
@@ -258,12 +342,33 @@ impl PlacementRouter {
         let mut moved = false;
         while let Some(job) = queue.try_pop() {
             let lane = job.priority.lane();
-            let (c, routed) = self.route_to(job, counters);
+            let (c, routed) = self.route_to(st, job, counters);
             st.clusters[c].lanes[lane].push_back(routed);
             self.routed.fetch_add(1, Ordering::Relaxed);
             moved = true;
         }
+        if moved && self.knobs.rebalance_drains > 0 {
+            self.update_streaks(st);
+        }
         moved
+    }
+
+    /// One load-balance observation per job-moving drain pass: a cluster
+    /// whose run-queue depth sits meaningfully above the pool mean
+    /// extends its streak; everyone else resets.  The streak threshold
+    /// (`rebalance_drains`) is what "stays above the mean" means.
+    fn update_streaks(&self, st: &RouterState) {
+        st.drain_seq.fetch_add(1, Ordering::Relaxed);
+        let depths: Vec<usize> = st.clusters.iter().map(ClusterLanes::depth).collect();
+        let mean = depths.iter().sum::<usize>() as f64 / depths.len().max(1) as f64;
+        for (c, &d) in depths.iter().enumerate() {
+            // `d >= 2` filters the 1-vs-0 noise of a lightly loaded pool
+            if d >= 2 && d as f64 > mean {
+                st.over_streak[c].fetch_add(1, Ordering::Relaxed);
+            } else {
+                st.over_streak[c].store(0, Ordering::Relaxed);
+            }
+        }
     }
 
     /// Pop the oldest highest-priority job of `cluster`'s own deque.
@@ -479,17 +584,29 @@ mod tests {
     use std::sync::mpsc;
     use std::time::Instant;
 
-    fn router(pool: u32, big_frac: f64, affinity: bool, steal: bool)
-              -> (PlacementRouter, WorkQueue, SchedCounters) {
+    fn router_with(pool: u32, big_frac: f64, affinity: bool, steal: bool,
+                   rebalance: u32)
+                   -> (PlacementRouter, WorkQueue, SchedCounters) {
         let mut cfg = PlatformConfig::default();
         cfg.sched.placement.big_shape_frac = big_frac;
         let capacity = DevicePool::partition(&cfg, pool).unwrap().capacity().clone();
-        let knobs = PlacementConfig { affinity, steal, big_shape_frac: big_frac };
+        let knobs = PlacementConfig {
+            affinity,
+            steal,
+            big_shape_frac: big_frac,
+            rebalance_drains: rebalance,
+        };
+        let cost = CostModel::from_platform(&cfg, (64, 64, 64), 4096);
         (
-            PlacementRouter::new(capacity, (64, 64, 64), knobs),
+            PlacementRouter::new(capacity, cost, knobs),
             WorkQueue::new(64),
             SchedCounters::new(pool as usize),
         )
+    }
+
+    fn router(pool: u32, big_frac: f64, affinity: bool, steal: bool)
+              -> (PlacementRouter, WorkQueue, SchedCounters) {
+        router_with(pool, big_frac, affinity, steal, 0)
     }
 
     fn gemm_job(id: u64, n: usize, b_seed: Option<u64>) -> Job {
@@ -632,6 +749,72 @@ mod tests {
         let mut st = r.state.lock().unwrap();
         r.drain_global(&mut st, &q, &c);
         assert_eq!(st.clusters[0].depth(), 1);
+    }
+
+    #[test]
+    fn host_decided_auto_jobs_never_take_the_big_lane() {
+        // m = n = 2048 Auto-mode GEMV: the dispatch model sends it to the
+        // host (copy-mode level-2 never beats the host cold), so it must
+        // NOT occupy the big-shape lane — that was the serve-side
+        // admission bug: shape routing ignored the dispatch decision
+        let (r, q, c) = router(4, 0.5, true, true);
+        let gemv = |id, mode| {
+            let (tx, _rx) = mpsc::channel();
+            Job {
+                id,
+                priority: Priority::Normal,
+                payload: JobPayload::Gemv(GemvRequest { m: 2048, n: 2048, mode, seed: id }),
+                reply: tx,
+                cancel: CancelToken::default(),
+                enqueued_at: Instant::now(),
+            }
+        };
+        q.push(gemv(1, DispatchMode::Auto)).unwrap();
+        let mut st = r.state.lock().unwrap();
+        r.drain_global(&mut st, &q, &c);
+        assert_eq!(st.clusters[0].depth(), 0, "host-decided job on the big lane");
+        assert_eq!(c.snapshot().big_shape_routed, 0);
+        drop(st);
+        // the same shape forced to the device still takes the big lane
+        q.push(gemv(2, DispatchMode::DeviceOnly)).unwrap();
+        let mut st = r.state.lock().unwrap();
+        r.drain_global(&mut st, &q, &c);
+        assert_eq!(st.clusters[0].depth(), 1);
+        assert_eq!(c.snapshot().big_shape_routed, 1);
+    }
+
+    #[test]
+    fn sustained_skew_rehomes_the_affine_key() {
+        let (r, q, c) = router_with(2, 0.0, true, false, 2);
+        let bs = (0..64)
+            .find(|&s| operand_key("gemm_b", 64, s) % 2 == 0)
+            .unwrap();
+        // two job-moving drains with the home (cluster 0) above the mean
+        // build the streak...
+        q.push(gemm_job(1, 64, Some(bs))).unwrap();
+        q.push(gemm_job(2, 64, Some(bs))).unwrap();
+        let mut st = r.state.lock().unwrap();
+        r.drain_global(&mut st, &q, &c);
+        drop(st);
+        q.push(gemm_job(3, 64, Some(bs))).unwrap();
+        let mut st = r.state.lock().unwrap();
+        r.drain_global(&mut st, &q, &c);
+        assert_eq!(st.clusters[0].depth(), 3);
+        assert_eq!(c.snapshot().rehomed, 0, "streak below N: no re-home yet");
+        drop(st);
+        // ...and the next affine route re-homes the key to the idle peer
+        q.push(gemm_job(4, 64, Some(bs))).unwrap();
+        let mut st = r.state.lock().unwrap();
+        r.drain_global(&mut st, &q, &c);
+        assert_eq!(st.clusters[1].depth(), 1, "re-homed job lands on the peer");
+        assert_eq!(c.snapshot().rehomed, 1);
+        drop(st);
+        // later same-key jobs follow the override, no further re-homes
+        q.push(gemm_job(5, 64, Some(bs))).unwrap();
+        let mut st = r.state.lock().unwrap();
+        r.drain_global(&mut st, &q, &c);
+        assert_eq!(st.clusters[1].depth(), 2);
+        assert_eq!(c.snapshot().rehomed, 1);
     }
 
     #[test]

@@ -52,6 +52,7 @@ use std::time::Instant;
 use crate::blas::{
     DispatchPolicy, ExecTarget, GemmBatchRun, GemvBatchRun, HeroBlas,
 };
+use crate::cost::CostModel;
 use crate::error::Result;
 use crate::hero::offload::OffloadKind;
 use crate::metrics::{Metrics, SchedCounters};
@@ -71,6 +72,9 @@ use super::{
 
 /// Spawn one worker thread for `spec`.  It reports session boot success
 /// or failure once through `ready`, then serves until the queue closes.
+/// `cost` is the pool-shared cost model — the worker's dispatch runs on
+/// it (so every cluster calibrates ONE estimator, not per-session ones).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn spawn(
     spec: ClusterSpec,
     artifacts: PathBuf,
@@ -78,17 +82,21 @@ pub(crate) fn spawn(
     router: Arc<PlacementRouter>,
     counters: Arc<SchedCounters>,
     batcher: Batcher,
+    cost: CostModel,
     ready: mpsc::Sender<Result<()>>,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
         .name(format!("sched-worker-{}", spec.id))
-        .spawn(move || run(spec, artifacts, queue, router, counters, batcher, ready))
+        .spawn(move || {
+            run(spec, artifacts, queue, router, counters, batcher, cost, ready)
+        })
         .expect("spawn scheduler worker")
 }
 
-/// Per-batch virtual-time totals, in cycles (accumulated across the
-/// stage / execute / finish phases from trace-region deltas, so two
-/// interleaved pipeline batches never steal each other's time).
+/// Per-batch accounting (virtual-time totals in cycles, accumulated
+/// across the stage / execute / finish phases from trace-region deltas,
+/// so two interleaved pipeline batches never steal each other's time —
+/// plus the staging conditions the calibration must predict with).
 #[derive(Debug, Default, Clone, Copy)]
 struct BatchAcct {
     data_copy: u64,
@@ -98,6 +106,10 @@ struct BatchAcct {
     /// Map-in cycles hidden under the previous batch's compute window
     /// (subtracted from `data_copy` and the total when reporting).
     hidden: u64,
+    /// Did the batch stage with B cache-warm (resident or prefetched)?
+    /// The calibration feedback predicts with the same warmth, so an
+    /// elided map-in never reads as "device faster than predicted".
+    warm_b: bool,
 }
 
 impl BatchAcct {
@@ -135,6 +147,7 @@ fn delta(before: RegionSnap, after: RegionSnap) -> BatchAcct {
         compute: after.cp.saturating_sub(before.cp).0,
         host_compute: after.hc.saturating_sub(before.hc).0,
         hidden: 0,
+        warm_b: false,
     }
 }
 
@@ -180,6 +193,7 @@ fn run(
     router: Arc<PlacementRouter>,
     counters: Arc<SchedCounters>,
     batcher: Batcher,
+    cost: CostModel,
     ready: mpsc::Sender<Result<()>>,
 ) {
     let mut blas = match boot_session(&spec, &artifacts) {
@@ -189,6 +203,9 @@ fn run(
             return;
         }
     };
+    // swap the session's private model for the pool-shared one: every
+    // worker's Auto dispatch reads (and calibrates) the same estimator
+    blas.policy.model = Some(cost);
     let _ = ready.send(Ok(()));
 
     let cid = spec.id as usize;
@@ -285,8 +302,37 @@ fn run(
                 );
             }
             JobPayload::Gemm(req) => {
+                // Cache-aware dispatch: B predicted resident on THIS
+                // cluster (per the affinity directory) drops the map-in
+                // cost from the model's estimate, so a warm shared-B
+                // stream offloads below the cold crossover.
+                blas.policy.mode = req.mode;
+                let b_key = req
+                    .b_seed
+                    .filter(|_| router.affinity_enabled())
+                    .map(|bs| operand_key("gemm_b", req.n, bs));
+                let mut warm_b = b_key.is_some_and(|k| router.is_resident(k, spec.id));
+                let target = blas.policy.gemm_warm(req.n, req.n, req.n, warm_b);
+                // Directory-driven prefetch: a device-bound shared-B job
+                // at a cold home pre-stages B during the linger window,
+                // so the miss cost lands outside the batch's regions
+                // (copy mode only — zero-copy staging bypasses the cache).
+                // A successful prefetch makes the batch warm.
+                if target == ExecTarget::Device && !warm_b && blas.engine.cache_enabled() {
+                    if let (Some(key), Some(bs)) = (b_key, req.b_seed) {
+                        warm_b =
+                            prefetch_b(&mut blas, &router, &counters, spec.id, req.n, bs, key);
+                    }
+                }
                 let cap = (gemm_batch_cap(&blas, req.n) / depth).max(1);
-                let mut batch = batcher.collect(&source, job, cap);
+                // the linger decision must agree with the (cache-aware)
+                // decision that launches, not a cold re-derivation
+                let mut batch = batcher.collect_decided(
+                    &source,
+                    job,
+                    cap,
+                    Some(target != ExecTarget::Host),
+                );
                 drop_cancelled(&mut batch, &counters);
                 if batch.is_empty() {
                     continue;
@@ -298,6 +344,8 @@ fn run(
                     &router,
                     batch,
                     req,
+                    target,
+                    warm_b,
                     depth,
                     &mut inflight,
                     &mut metrics_prev,
@@ -385,6 +433,49 @@ fn sync_directory(blas: &mut HeroBlas, router: &PlacementRouter, cluster: u32) {
     }
 }
 
+/// Map-in cycles hidden under the previous batch's compute window —
+/// the cost model's overlap accounting (min of the two regions; the
+/// model is the single place that rule lives).
+fn overlap_credit(blas: &HeroBlas, map_in: u64, prev_compute: u64) -> u64 {
+    match &blas.policy.model {
+        Some(cm) => cm.overlap_credit(map_in, prev_compute),
+        None => map_in.min(prev_compute),
+    }
+}
+
+/// Directory-driven prefetch: synthesize the shared B from its seed and
+/// pre-stage it into this cluster's operand cache while the batcher
+/// would otherwise just linger — the batch that follows hits instead of
+/// missing, and the copy cost lands outside the batch's accounted
+/// regions.  Best-effort: an OOM or staging error simply leaves the
+/// batch to pay its own miss.  Returns whether B is now resident (the
+/// batch will stage warm).
+fn prefetch_b(
+    blas: &mut HeroBlas,
+    router: &PlacementRouter,
+    counters: &SchedCounters,
+    cluster: u32,
+    n: usize,
+    b_seed: u64,
+    key: u64,
+) -> bool {
+    let b = Rng::new(b_seed).normal_vec(n * n);
+    let resident = if let Ok(Some(ck)) = blas.prefetch_gemm_b(n, &b) {
+        blas.engine.opcache.set_tag(&ck, key);
+        router.note_resident(key, cluster);
+        counters.prefetched.fetch_add(1, Ordering::Relaxed);
+        if let Some(pc) = counters.cluster(cluster) {
+            pc.prefetched.fetch_add(1, Ordering::Relaxed);
+        }
+        true
+    } else {
+        false
+    };
+    // a failed prefetch may have OOM-reclaimed tagged entries
+    sync_directory(blas, router, cluster);
+    resident
+}
+
 /// Serve one coalesced gemm batch: host path and un-pipelined device
 /// path complete inline; the pipelined device path leaves the batch in
 /// flight (executed, completion word posted) for the next iteration to
@@ -397,23 +488,24 @@ fn serve_gemm(
     router: &PlacementRouter,
     batch: Vec<Job>,
     req: GemmRequest,
+    target: ExecTarget,
+    warm_b: bool,
     depth: usize,
     inflight: &mut Option<Inflight>,
     metrics_prev: &mut Metrics,
 ) {
     let t0 = Instant::now();
     let n = req.n;
-    blas.policy = DispatchPolicy::with_mode(req.mode);
 
     // ---- host path: no staging, no pipeline ----
-    if blas.policy.gemm(n, n, n) == ExecTarget::Host {
+    if target == ExecTarget::Host {
         if let Some(infl) = inflight.take() {
             finish_batch(blas, cluster, counters, router, infl, metrics_prev);
         }
         serve_gemm_host(blas, cluster, counters, batch, req, t0, metrics_prev);
         return;
     }
-    let zero_copy = blas.policy.gemm(n, n, n) == ExecTarget::DeviceZeroCopy;
+    let zero_copy = target == ExecTarget::DeviceZeroCopy;
 
     // ---- synthesize every member's operands from its seeds ----
     let data: Vec<(Vec<f64>, Vec<f64>, Vec<f64>)> = batch
@@ -469,11 +561,11 @@ fn serve_gemm(
         }
     }
 
-    // ---- overlap credit, then drain the previous batch ----
+    // ---- overlap credit (model-accounted), then drain the previous batch ----
     let mut hidden = 0u64;
     let mut pipelined = false;
     if let Some(infl) = inflight.take() {
-        hidden = stage_acct.data_copy.min(infl.acct.compute);
+        hidden = overlap_credit(blas, stage_acct.data_copy, infl.acct.compute);
         pipelined = true;
         finish_batch(blas, cluster, counters, router, infl, metrics_prev);
         // the drained batch is fully accounted and this batch's stage
@@ -503,6 +595,7 @@ fn serve_gemm(
     let mut acct = stage_acct;
     acct.add(delta(before, snap(blas)));
     acct.hidden = hidden;
+    acct.warm_b = warm_b;
 
     let infl = Inflight {
         jobs: batch,
@@ -535,7 +628,7 @@ fn serve_gemv(
 ) {
     let t0 = Instant::now();
     let (m, n) = (req.m, req.n);
-    blas.policy = DispatchPolicy::with_mode(req.mode);
+    blas.policy.mode = req.mode;
 
     // synthesize (A, x) per member; y starts at zero
     let data: Vec<(Vec<f64>, Vec<f64>)> = batch
@@ -590,11 +683,11 @@ fn serve_gemv(
     drop(data); // staged: the batch state owns the padded copies now
     let stage_acct = delta(before, snap(blas));
 
-    // ---- overlap credit, then drain the previous batch ----
+    // ---- overlap credit (model-accounted), then drain the previous batch ----
     let mut hidden = 0u64;
     let mut pipelined = false;
     if let Some(infl) = inflight.take() {
-        hidden = stage_acct.data_copy.min(infl.acct.compute);
+        hidden = overlap_credit(blas, stage_acct.data_copy, infl.acct.compute);
         pipelined = true;
         finish_batch(blas, cluster, counters, router, infl, metrics_prev);
         blas.reset_run();
@@ -747,7 +840,7 @@ fn serve_level1(
     let t0 = Instant::now();
     let n = req.n;
     let queue_ms = queue_waits(&batch);
-    blas.policy = DispatchPolicy::with_mode(req.mode);
+    blas.policy.mode = req.mode;
 
     // synthesize (alpha, x, y) per member from its own request
     let data: Vec<(f64, Vec<f64>, Vec<f64>)> = batch
@@ -909,6 +1002,27 @@ fn send_outcomes(
     let metrics_now = blas.metrics();
     counters.absorb_engine_delta(cluster, metrics_prev, &metrics_now);
     *metrics_prev = metrics_now;
+
+    // ---- calibration feedback: the batch's observed virtual time (the
+    // trace deltas already measured above) folds back into the shared
+    // cost model's EWMA scales, moving the estimated crossovers toward
+    // what this platform actually does ----
+    if let Some(model) = &blas.policy.model {
+        if model.calibrate_enabled() {
+            let dims = match op {
+                "gemm" => (m, n, n),
+                "gemv" => (m, n, 0),
+                _ => (n, 0, 0), // axpy/dot report (m, n) = (1, n)
+            };
+            let device_total = acct.data_copy + acct.fork_join + acct.compute;
+            if device_total > 0 {
+                model.observe(op, dims, b, device_total, false, acct.warm_b);
+            }
+            if acct.host_compute > 0 {
+                model.observe(op, dims, b, acct.host_compute, true, false);
+            }
+        }
+    }
 
     for ((job, checksum), wait) in batch.iter().zip(checksums).zip(queue_ms) {
         let _ = job.reply.send(Ok(GemmOutcome {

@@ -203,6 +203,16 @@ fn handle_line(sched: &Scheduler, line: &str) -> (String, bool) {
         }
         "metrics" => {
             let m = sched.metrics();
+            // live calibrated crossovers (0 = the device never wins
+            // inside the serve-protocol shape bounds on that op)
+            let x = sched.cost_model().crossovers();
+            let xn = |v: Option<usize>| Json::Num(v.unwrap_or(0) as f64);
+            let crossover = obj(vec![
+                ("gemm_n", xn(x.gemm_n)),
+                ("gemm_warm_n", xn(x.gemm_warm_n)),
+                ("gemv_n", xn(x.gemv_n)),
+                ("level1_n", xn(x.level1_n)),
+            ]);
             let clusters: Vec<Json> = m
                 .clusters
                 .iter()
@@ -214,6 +224,7 @@ fn handle_line(sched: &Scheduler, line: &str) -> (String, bool) {
                         ("batches", Json::Num(c.batches as f64)),
                         ("stolen", Json::Num(c.stolen as f64)),
                         ("affine_routed", Json::Num(c.affine_routed as f64)),
+                        ("prefetched", Json::Num(c.prefetched as f64)),
                         ("cache_hits", Json::Num(c.cache_hits as f64)),
                         ("cache_misses", Json::Num(c.cache_misses as f64)),
                         ("bytes_to_device", Json::Num(c.bytes_to_device as f64)),
@@ -239,6 +250,9 @@ fn handle_line(sched: &Scheduler, line: &str) -> (String, bool) {
                 ("stolen", Json::Num(m.stolen as f64)),
                 ("affine_routed", Json::Num(m.affine_routed as f64)),
                 ("big_shape_routed", Json::Num(m.big_shape_routed as f64)),
+                ("prefetched", Json::Num(m.prefetched as f64)),
+                ("rehomed", Json::Num(m.rehomed as f64)),
+                ("crossover_estimate", crossover),
                 ("queue_depth_peak", Json::Num(m.queue_depth_peak as f64)),
                 ("pool", Json::Num(sched.pool_size() as f64)),
                 ("clusters", Json::Arr(clusters)),
@@ -361,6 +375,11 @@ pub fn serve(
         .map_err(|e| Error::Runtime(format!("bind 127.0.0.1:{port}: {e}")))?;
     let bound = listener.local_addr()?.port();
     let cap = sched.capacity();
+    let xing = sched.cost_model().crossovers();
+    let show = |v: Option<usize>| match v {
+        Some(n) => format!("n>={n}"),
+        None => "never".into(),
+    };
     eprintln!(
         "hero-blas serve: listening on 127.0.0.1:{bound} \
          (pool {} clusters x {} tiles, queue {} deep, batch <= {}, \
@@ -373,6 +392,15 @@ pub fn serve(
             Some(c) => format!("cluster {c} ({} B)", cap.max_slice()),
             None => "off".into(),
         },
+    );
+    eprintln!(
+        "hero-blas serve: cost model crossovers — gemm {} (warm-B {}), \
+         gemv {}, level-1 {}; calibration {}",
+        show(xing.gemm_n),
+        show(xing.gemm_warm_n),
+        show(xing.gemv_n),
+        show(xing.level1_n),
+        if cfg.cost.calibrate { "on" } else { "off" },
     );
     if let Some(tx) = ready {
         let _ = tx.send(bound);

@@ -19,7 +19,7 @@ pub struct DmaStats {
 }
 
 /// DMA engine model.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct DmaModel {
     cfg: DmaConfig,
     stats: DmaStats,

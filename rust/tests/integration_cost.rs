@@ -1,0 +1,222 @@
+//! The unified cost model end-to-end: model-driven Auto dispatch on the
+//! serve path, bit-identical checksums with calibration on vs off, and
+//! the steal-fairness re-homing pass under a sustained affine skew.
+
+mod common;
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use common::artifacts_dir;
+use hero_blas::config::{DispatchMode, PlatformConfig};
+use hero_blas::sched::affinity::operand_key;
+use hero_blas::sched::{
+    GemmOutcome, GemmRequest, GemvRequest, JobPayload, Priority, Scheduler,
+};
+use hero_blas::util::rng::Rng;
+
+fn cfg(pool: u32) -> PlatformConfig {
+    let mut cfg = PlatformConfig::default();
+    cfg.sched.pool_clusters = pool;
+    cfg.sched.queue_capacity = 64;
+    cfg.sched.batch_window_ms = 0;
+    cfg.sched.batch_max = 1;
+    cfg
+}
+
+fn gemm_auto(n: usize, seed: u64) -> JobPayload {
+    JobPayload::Gemm(GemmRequest { n, mode: DispatchMode::Auto, seed, b_seed: None })
+}
+
+fn run_one(sched: &Scheduler, payload: JobPayload) -> GemmOutcome {
+    sched
+        .submit(Priority::Normal, payload)
+        .unwrap()
+        .recv_timeout(Duration::from_secs(300))
+        .unwrap()
+        .unwrap()
+}
+
+/// Model-driven Auto dispatch on the serve path: sizes below the
+/// crossover run on the host (no fork-join spent), sizes above offload —
+/// and a huge Auto-mode GEMV runs on the host too (the admission bugfix:
+/// copy-mode level-2 never beats the host cold, so no fork-join is
+/// wasted on it).
+#[test]
+fn auto_serve_requests_dispatch_through_the_model() {
+    let sched = Scheduler::new(&cfg(1), &artifacts_dir()).unwrap();
+
+    let small = run_one(&sched, gemm_auto(16, 7));
+    assert!(small.host_compute_ms > 0.0, "16x16 must stay on host");
+    assert_eq!(small.fork_join_ms, 0.0, "host path spent a fork-join");
+
+    let large = run_one(&sched, gemm_auto(128, 8));
+    assert!(large.data_copy_ms > 0.0, "128x128 must offload");
+    assert!(large.fork_join_ms > 0.0);
+    assert_eq!(large.host_compute_ms, 0.0);
+
+    // Auto-mode GEMV above the OLD static threshold (512*512): the model
+    // keeps it on the host — the copy of A alone costs more than the
+    // host compute — instead of wasting a fork-join + 2 MiB of staging
+    let gemv = run_one(
+        &sched,
+        JobPayload::Gemv(GemvRequest {
+            m: 512,
+            n: 512,
+            mode: DispatchMode::Auto,
+            seed: 9,
+        }),
+    );
+    assert!(gemv.host_compute_ms > 0.0, "auto gemv must stay on host");
+    assert_eq!(gemv.fork_join_ms, 0.0);
+    sched.shutdown();
+}
+
+/// The bit-identity guarantee: `[cost] calibrate` on vs off produces
+/// identical checksums on an identical workload (calibration moves
+/// dispatch decisions and linger windows, never numerics — and on this
+/// single-stream workload the decisions agree too), and Auto-mode
+/// checksums equal the forced-mode checksums of the path the model
+/// picked.
+#[test]
+fn calibrate_toggle_is_checksum_identical() {
+    let run = |calibrate: bool| {
+        let mut c = cfg(2);
+        c.cost.calibrate = calibrate;
+        let sched = Scheduler::new(&c, &artifacts_dir()).unwrap();
+        let mut sums = Vec::new();
+        for seed in 0..4u64 {
+            sums.push(run_one(&sched, gemm_auto(16, 100 + seed)).checksum);
+            sums.push(run_one(&sched, gemm_auto(128, 200 + seed)).checksum);
+        }
+        sched.shutdown();
+        sums
+    };
+    let off = run(false);
+    let on = run(true);
+    assert_eq!(off, on, "calibration toggle changed checksums");
+
+    // dispatch parity with the forced paths: Auto@16 == host_only@16,
+    // Auto@128 == device_only@128, bit for bit
+    let sched = Scheduler::new(&cfg(1), &artifacts_dir()).unwrap();
+    let forced = |n: usize, seed: u64, mode: DispatchMode| {
+        run_one(
+            &sched,
+            JobPayload::Gemm(GemmRequest { n, mode, seed, b_seed: None }),
+        )
+        .checksum
+    };
+    assert_eq!(
+        run_one(&sched, gemm_auto(16, 500)).checksum,
+        forced(16, 500, DispatchMode::HostOnly),
+    );
+    assert_eq!(
+        run_one(&sched, gemm_auto(128, 501)).checksum,
+        forced(128, 501, DispatchMode::DeviceOnly),
+    );
+    sched.shutdown();
+}
+
+/// Steal-fairness satellite: with stealing off and the affine home
+/// parked on a fence, a sustained same-operand stream is stuck behind
+/// the saturated home — unless the re-homing pass moves the key, after
+/// which later requests complete on the idle peer while the home is
+/// still parked (the affine queueing delay drops from "until the fence
+/// releases" to "immediately").
+#[test]
+fn sustained_skew_rehomes_and_cuts_affine_queueing_delay() {
+    // a b_seed whose hash-home is cluster 0 (where the first fence parks)
+    let bs = (0..64)
+        .find(|&s| operand_key("gemm_b", 64, s) % 2 == 0)
+        .expect("some seed homes on cluster 0");
+    let gemm_b = |seed: u64| {
+        JobPayload::Gemm(GemmRequest {
+            n: 64,
+            mode: DispatchMode::DeviceOnly,
+            seed,
+            b_seed: Some(bs),
+        })
+    };
+
+    let run = |rebalance: u32| {
+        let mut c = cfg(2);
+        c.sched.placement.affinity = true;
+        c.sched.placement.steal = false;
+        c.sched.placement.rebalance_drains = rebalance;
+        let sched = Scheduler::new(&c, &artifacts_dir()).unwrap();
+        // park cluster 0's worker (the first fence routes there)
+        let (release, fence) = {
+            let (release, fence_rx) = mpsc::channel();
+            let fence = sched
+                .submit(Priority::High, JobPayload::Fence(fence_rx))
+                .expect("fence submit");
+            let t0 = Instant::now();
+            while sched.queue_depth() > 0 {
+                assert!(t0.elapsed() < Duration::from_secs(10), "fence unclaimed");
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            (release, fence)
+        };
+        // a sustained affine stream at the parked home; spaced submits so
+        // each one is a separate job-moving drain pass for the router
+        let subs: Vec<_> = (0..8u64)
+            .map(|i| {
+                let s = sched.submit(Priority::Normal, gemm_b(700 + i)).unwrap();
+                std::thread::sleep(Duration::from_millis(50));
+                s
+            })
+            .collect();
+        // while the home is STILL parked: does the tail of the stream
+        // complete?  (only possible if its jobs were re-homed)
+        let last = subs.last().unwrap();
+        let served_while_parked = match rebalance {
+            0 => last.result.recv_timeout(Duration::from_millis(500)).is_ok(),
+            _ => last.result.recv_timeout(Duration::from_secs(120)).is_ok(),
+        };
+        release.send(()).unwrap();
+        assert!(fence.recv_timeout(Duration::from_secs(120)).unwrap().is_ok());
+        // every job still completes with the right checksum
+        let a_sum = |seed: u64| {
+            let a = Rng::new(seed).normal_vec(64 * 64);
+            let b = Rng::new(bs).normal_vec(64 * 64);
+            let mut sum = 0.0;
+            for i in 0..64 {
+                for k in 0..64 {
+                    for j in 0..64 {
+                        sum += a[i * 64 + k] * b[k * 64 + j];
+                    }
+                }
+            }
+            sum
+        };
+        for (i, sub) in subs.iter().enumerate() {
+            if i == subs.len() - 1 && served_while_parked {
+                continue; // already drained above
+            }
+            let out = sub
+                .result
+                .recv_timeout(Duration::from_secs(300))
+                .unwrap()
+                .unwrap();
+            let expect = a_sum(700 + i as u64);
+            let tol = 1e-6 * expect.abs().max(1.0);
+            assert!((out.checksum - expect).abs() < tol, "job {i} checksum");
+        }
+        let m = sched.metrics();
+        sched.shutdown();
+        (served_while_parked, m)
+    };
+
+    // rebalance on: the key re-homes to the idle peer and the tail is
+    // served while the home is still parked
+    let (served, m) = run(2);
+    assert!(served, "re-homed jobs did not reach the idle peer");
+    assert!(m.rehomed >= 1, "{}", m.summary());
+    assert!(m.clusters[1].completed >= 1, "{}", m.summary());
+
+    // rebalance off: with stealing off too, nothing serves the stream
+    // until the fence releases — the tail cannot complete while parked
+    let (served_off, m_off) = run(0);
+    assert!(!served_off, "tail completed with rebalancing disabled");
+    assert_eq!(m_off.rehomed, 0);
+}

@@ -112,9 +112,13 @@ fn affinity_routing_warms_one_cluster_and_cuts_copies() {
     // round-robin spread the stream (both clusters served something)
     assert!(rr_clusters.iter().any(|&c| c != rr_clusters[0]), "{rr_clusters:?}");
 
-    // shared B staged once per pool vs once per cluster: one extra hit,
-    // one fewer cold copy
-    assert_eq!(af.cache_hits, 5, "{}", af.summary());
+    // shared B staged once per pool vs once per cluster.  With affinity
+    // the single cold copy happens as a directory-driven PREFETCH (the
+    // worker pre-stages B at its cold home), so every one of the 6
+    // batch map-ins hits; round-robin pays one cold in-batch miss per
+    // cluster and hits the other 4 times.
+    assert_eq!(af.cache_hits, 6, "{}", af.summary());
+    assert_eq!(af.prefetched, 1, "{}", af.summary());
     assert_eq!(rr.cache_hits, 4, "{}", rr.summary());
     assert!(
         af.bytes_to_device < rr.bytes_to_device,
@@ -125,7 +129,8 @@ fn affinity_routing_warms_one_cluster_and_cuts_copies() {
 
     // per-cluster breakdown: the warm cluster owns all hits and batches
     let warm = af_clusters[0] as usize;
-    assert_eq!(af.clusters[warm].cache_hits, 5);
+    assert_eq!(af.clusters[warm].cache_hits, 6);
+    assert_eq!(af.clusters[warm].prefetched, 1);
     assert_eq!(af.clusters[warm].affine_routed, 6);
     assert_eq!(af.clusters[1 - warm].completed, 0);
 }

@@ -136,11 +136,26 @@ fn serve_gemm_requests_end_to_end() {
     assert_eq!(m.get("ok"), Some(&Json::Bool(true)));
     assert!(m.get("completed").and_then(|v| v.as_u64()).unwrap() >= 3);
     assert!(m.get("pool").and_then(|v| v.as_u64()).unwrap() >= 1);
-    for key in ["cancelled", "cache_hits", "bytes_to_device", "pipelined_batches"] {
+    for key in [
+        "cancelled",
+        "cache_hits",
+        "bytes_to_device",
+        "pipelined_batches",
+        "prefetched",
+        "rehomed",
+    ] {
         assert!(m.get(key).and_then(|v| v.as_u64()).is_some(), "missing {key}");
     }
     // default config: cache off, nothing elided
     assert_eq!(m.get("cache_hits").and_then(|v| v.as_u64()), Some(0));
+    // the cost model's live crossover estimates ride along: the cold
+    // gemm crossover sits in the paper's Figure-3 band, and warm-B
+    // undercuts it only when the operand cache is on (off here => equal)
+    let x = m.get("crossover_estimate").expect("missing crossover_estimate");
+    let gemm_n = x.get("gemm_n").and_then(|v| v.as_u64()).unwrap();
+    assert!(gemm_n > 64 && gemm_n <= 128, "gemm crossover {gemm_n}");
+    assert_eq!(x.get("gemv_n").and_then(|v| v.as_u64()), Some(0));
+    assert_eq!(x.get("level1_n").and_then(|v| v.as_u64()), Some(0));
 
     // shutdown stops the server thread
     let _ = request(&mut stream, &mut reader, r#"{"op": "shutdown"}"#);
