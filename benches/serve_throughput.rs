@@ -23,6 +23,7 @@
 //! cargo bench --bench serve_throughput -- --quick # CI smoke (small)
 //! ```
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::{mpsc, Arc, Barrier};
@@ -241,6 +242,101 @@ fn run_point(knobs: Knobs, clients: usize, per_client: usize) -> Point {
     Point { knobs, clients, per_client, wall, retries, counters }
 }
 
+/// The MLP-shaped chain sweep (sweep 5): every request runs the same
+/// 64x[256->128->64] layer stack with shared weights (`b_seeds`) and a
+/// private activation.  `chained = false` issues the links as separate
+/// per-op offloads (the paper's one-call-at-a-time behavior);
+/// `chained = true` runs them as ONE submission with device-resident
+/// intermediates.  Returns the wall time, the scraped data-movement
+/// counters and every request's checksum keyed by seed — the two modes
+/// must agree bit-for-bit.
+fn run_chain_point(
+    chained: bool,
+    clients: usize,
+    per_client: usize,
+) -> (Duration, u64, u64, u64, BTreeMap<u64, String>) {
+    let mut cfg = PlatformConfig::default();
+    cfg.sched.pool_clusters = 2;
+    cfg.sched.queue_capacity = 256;
+    cfg.sched.batch_window_ms = 0;
+    cfg.sched.batch_max = 8;
+    cfg.sched.cache.cache_frac = 0.4;
+    cfg.sched.cache.cache_max_entries = 64;
+
+    let dir = hero_blas::find_artifacts_dir().expect("run `make artifacts` first");
+    let (tx, rx) = mpsc::channel();
+    let server =
+        std::thread::spawn(move || hero_blas::serve::serve(cfg, &dir, 0, Some(tx)));
+    let port = rx.recv_timeout(Duration::from_secs(300)).expect("server ready");
+
+    let barrier = Arc::new(Barrier::new(clients + 1));
+    let workers: Vec<_> = (0..clients)
+        .map(|c| {
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                barrier.wait();
+                let mut sums = BTreeMap::new();
+                let mut done = 0usize;
+                while done < per_client {
+                    let seed = (c * per_client + done) as u64;
+                    let line = format!(
+                        "{{\"op\": \"chain\", \"m\": 64, \"dims\": [256, 128, 64], \
+                         \"mode\": \"device_only\", \"seed\": {seed}, \
+                         \"b_seeds\": [7, 8], \"chained\": {chained}}}\n"
+                    );
+                    stream.write_all(line.as_bytes()).unwrap();
+                    stream.flush().unwrap();
+                    let mut resp = String::new();
+                    reader.read_line(&mut resp).unwrap();
+                    if resp.contains("\"ok\": true") {
+                        let j = Json::parse(resp.trim()).expect("chain response");
+                        // compare the exact textual f64 (bit-identity proxy)
+                        let sum = format!(
+                            "{:?}",
+                            j.get("checksum").and_then(|v| v.as_f64()).unwrap()
+                        );
+                        sums.insert(seed, sum);
+                        done += 1;
+                    } else if resp.contains("retry_after_ms") {
+                        std::thread::sleep(Duration::from_millis(2));
+                    } else {
+                        panic!("chain request failed: {resp}");
+                    }
+                }
+                sums
+            })
+        })
+        .collect();
+
+    barrier.wait();
+    let t0 = Instant::now();
+    let mut sums = BTreeMap::new();
+    for w in workers {
+        sums.extend(w.join().unwrap());
+    }
+    let wall = t0.elapsed();
+
+    let mut stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    stream.write_all(b"{\"op\": \"metrics\"}\n").unwrap();
+    stream.flush().unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let m = Json::parse(resp.trim()).expect("metrics JSON");
+    let get = |k: &str| m.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
+    let (bytes, elided, chains) =
+        (get("bytes_to_device"), get("chain_bytes_elided"), get("chains"));
+    stream.write_all(b"{\"op\": \"shutdown\"}\n").unwrap();
+    stream.flush().unwrap();
+    let mut resp = String::new();
+    let _ = reader.read_line(&mut resp);
+    server.join().unwrap().unwrap();
+
+    (wall, bytes, elided, chains, sums)
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let (clients, per_client, serial_reqs) =
@@ -364,6 +460,49 @@ fn main() {
         println!("{}", p.json(p.rps() / base));
     }
 
+    // sweep 5: chained vs per-op execution of an MLP-shaped dependent
+    // sequence (64x[256->128->64], shared weights, private activations).
+    // The chained points must cut bytes_to_device (intermediates never
+    // round-trip) with checksums bit-identical to per-op execution.
+    println!();
+    let (uw, ub, ue, uc, usums) = run_chain_point(false, clients, per_client);
+    println!(
+        "{{\"bench\": \"serve_throughput\", \"workload\": \"chain_mlp\", \
+         \"chained\": false, \"requests\": {}, \"wall_ms\": {:.1}, \
+         \"bytes_to_device\": {ub}, \"chain_bytes_elided\": {ue}, \
+         \"chains\": {uc}}}",
+        clients * per_client,
+        uw.as_secs_f64() * 1e3,
+    );
+    let (cw, cb, ce, cc, csums) = run_chain_point(true, clients, per_client);
+    println!(
+        "{{\"bench\": \"serve_throughput\", \"workload\": \"chain_mlp\", \
+         \"chained\": true, \"requests\": {}, \"wall_ms\": {:.1}, \
+         \"bytes_to_device\": {cb}, \"chain_bytes_elided\": {ce}, \
+         \"chains\": {cc}}}",
+        clients * per_client,
+        cw.as_secs_f64() * 1e3,
+    );
+    let identical = usums == csums;
+    let bytes_cut = ub as f64 / cb.max(1) as f64;
+    println!(
+        "{{\"bench\": \"serve_throughput\", \"summary\": \"chain_bytes_cut\", \
+         \"value\": {bytes_cut:.2}, \"chain_bytes_elided\": {ce}, \
+         \"checksums_identical\": {identical}}}"
+    );
+    assert!(
+        identical,
+        "chained checksums diverged from per-op execution"
+    );
+    assert!(
+        ce > 0,
+        "chained run elided no intermediate bytes (chain_bytes_elided = 0)"
+    );
+    assert!(
+        cb < ub,
+        "chained bytes_to_device {cb} not below unchained {ub}"
+    );
+
     println!(
         "\npool parallelism scales wall-clock across clusters; batching\n\
          coalesces queued same-shape requests so the fork-join overhead —\n\
@@ -376,6 +515,8 @@ fn main() {
          Acceptance: pool=4 batching=true must show speedup_vs_serial >= 2.0;\n\
          cache=true pipeline=true must show cache_hits > 0 and\n\
          copy_bytes_cut >= 2.0 vs the cache-off point; placement=true must\n\
-         show affine_routed > 0."
+         show affine_routed > 0; the chain_mlp chained=true point must cut\n\
+         bytes_to_device vs chained=false with chain_bytes_elided > 0 and\n\
+         bit-identical checksums."
     );
 }

@@ -70,6 +70,52 @@ impl<T: Elem> GemmStagedRun<T> {
     }
 }
 
+/// A staged-but-not-executed GEMM chain (see [`HeroBlas::chain_stage`])
+/// — the handle the pipelined scheduler holds, exactly like
+/// [`GemmStagedRun`], while the previous batch is still in flight.
+pub struct ChainStagedRun<T: Elem> {
+    state: device::GemmChainStaged,
+    _elem: std::marker::PhantomData<T>,
+}
+
+impl<T: Elem> ChainStagedRun<T> {
+    /// Number of links staged.
+    pub fn len(&self) -> usize {
+        self.state.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.state.is_empty()
+    }
+
+    /// (rows, cols) of the chain's final output.
+    pub fn out_dims(&self) -> (usize, usize) {
+        self.state.out_dims()
+    }
+}
+
+/// An executed GEMM chain between its doorbell and its finish (see
+/// [`HeroBlas::chain_execute`]).
+pub struct ChainRun<T: Elem> {
+    state: device::GemmChainState,
+    _elem: std::marker::PhantomData<T>,
+}
+
+impl<T: Elem> ChainRun<T> {
+    pub fn len(&self) -> usize {
+        self.state.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.state.is_empty()
+    }
+
+    /// (rows, cols) of the chain's final output.
+    pub fn out_dims(&self) -> (usize, usize) {
+        self.state.out_dims()
+    }
+}
+
 /// A coalesced same-shape GEMV batch in flight on this session's
 /// cluster (executed, completion word posted) — see
 /// [`HeroBlas::gemv_batch_execute`].
@@ -261,6 +307,139 @@ impl HeroBlas {
     /// request at a cold home).  Returns the cache key when resident.
     pub fn prefetch_gemm_b(&mut self, n: usize, b: &[f64]) -> Result<Option<crate::omp::CacheKey>> {
         device::prefetch_gemm_b(&mut self.engine, &self.registry, n, b)
+    }
+
+    // ------------------------------------------------------------------
+    // Operation chaining (device-resident intermediates)
+    // ------------------------------------------------------------------
+
+    /// Stage a GEMM chain (`C_i = epilogue_i(C_{i-1} @ B_i)`, alpha = 1,
+    /// beta = 0) as ONE offload whose intermediates never return to the
+    /// host: fork once, map the input activation and every link's
+    /// weights, stage every output `map(alloc:)`-style.  The dispatch
+    /// policy is NOT consulted — the caller has already decided to
+    /// offload (use [`HeroBlas::chain`] for the policy-dispatched
+    /// one-shot).  Chains are copy-mode only: residency is the point.
+    pub fn chain_stage<T: Elem>(
+        &mut self,
+        m: usize,
+        x: &[T],
+        links: &[device::ChainLinkSpec<'_, T>],
+    ) -> Result<ChainStagedRun<T>> {
+        device::gemm_chain_stage(&mut self.engine, &mut self.registry, m, x, links)
+            .map(|state| ChainStagedRun { state, _elem: std::marker::PhantomData })
+    }
+
+    /// Execute a staged chain (doorbell, every link's tile walk with
+    /// device-resident hand-off, completion word posted) — poll
+    /// [`HeroBlas::offload_completion_pending`] and call
+    /// [`HeroBlas::chain_finish`].
+    pub fn chain_execute<T: Elem>(
+        &mut self,
+        staged: ChainStagedRun<T>,
+    ) -> Result<ChainRun<T>> {
+        device::gemm_chain_execute(&mut self.engine, &mut self.registry, staged.state)
+            .map(|state| ChainRun { state, _elem: std::marker::PhantomData })
+    }
+
+    /// Join an executed chain: copy ONLY the final output back into
+    /// `out` (row-major, the chain's [`ChainRun::out_dims`]) and release
+    /// every mapping, intermediates' cache pins included.
+    pub fn chain_finish<T: Elem>(&mut self, run: ChainRun<T>, out: &mut [T]) -> Result<()> {
+        device::gemm_chain_finish(&mut self.engine, run.state, out)
+    }
+
+    /// Abandon a staged chain (cancellation / error recovery): release
+    /// its mappings — operand-cache pins and `map(alloc:)` outputs — and
+    /// exit the target region without ringing the doorbell.  A cancelled
+    /// chain must never strand resident intermediates.
+    pub fn chain_abandon<T: Elem>(&mut self, staged: ChainStagedRun<T>) {
+        staged.state.release(&mut self.engine);
+    }
+
+    /// Per-link cache identity of a staged chain's B operands (affinity
+    /// bookkeeping, like [`HeroBlas::gemm_staged_b_keys`]).
+    pub fn chain_staged_b_keys<T: Elem>(
+        &self,
+        staged: &ChainStagedRun<T>,
+    ) -> Vec<Option<crate::omp::CacheKey>> {
+        staged.state.cached_b_keys()
+    }
+
+    /// Run a GEMM chain end-to-end, dispatching through the policy: the
+    /// device target runs the chained offload (stage/execute/finish)
+    /// with device-resident intermediates; when chaining does not pay,
+    /// each link dispatches individually through [`HeroBlas::gemm`] (so
+    /// a single link above the crossover may still offload on its own)
+    /// with the epilogue applied host-side.  `out` must hold
+    /// `m * n_last` elements.
+    pub fn chain<T: Elem>(
+        &mut self,
+        m: usize,
+        x: &[T],
+        links: &[device::ChainLinkSpec<'_, T>],
+        out: &mut [T],
+    ) -> Result<()> {
+        if links.is_empty() {
+            return Err(crate::error::Error::shape("chain: empty chain"));
+        }
+        let mut dims = Vec::with_capacity(links.len() + 1);
+        dims.push(links[0].dims.0);
+        for l in links {
+            dims.push(l.dims.1);
+        }
+        let n_last = dims[dims.len() - 1];
+        if out.len() != m * n_last {
+            return Err(crate::error::Error::shape(format!(
+                "chain: output len {} != {m}x{n_last}",
+                out.len()
+            )));
+        }
+        match self.policy.chain(m, &dims) {
+            ExecTarget::Host => {
+                let mut h = x.to_vec();
+                let mut cols = dims[0];
+                for l in links {
+                    let (k, n) = l.dims;
+                    if k != cols {
+                        return Err(crate::error::Error::shape(format!(
+                            "chain: link consumes {k} columns, producer yields {cols}"
+                        )));
+                    }
+                    let mut c = vec![T::zero(); m * n];
+                    self.gemm(
+                        Transpose::No, Transpose::No, T::one(), &h, (m, k), l.b,
+                        (k, n), T::zero(), &mut c, (m, n),
+                    )?;
+                    if l.bias.is_some() || l.relu {
+                        host::chain_epilogue(&mut c, n, l.bias, l.relu);
+                        let cyc = self
+                            .engine
+                            .platform
+                            .host
+                            .level1_cycles(m * n, 2.0, T::F32_PATH);
+                        self.engine.charge_host_compute(cyc, "host_chain_epilogue");
+                    }
+                    h = c;
+                    cols = n;
+                }
+                out.copy_from_slice(&h);
+                Ok(())
+            }
+            _ => {
+                // chained residency is a copy-mode technique: forced
+                // zero-copy still runs the copy-mode chain path
+                let staged = self.chain_stage(m, x, links)?;
+                let run = self.chain_execute(staged)?;
+                self.chain_finish(run, out)
+            }
+        }
+    }
+
+    /// Staged device-DRAM footprint of a chain (`dims` = layer widths) —
+    /// what callers bound chain length against a cluster slice with.
+    pub fn chain_staged_bytes<T: Elem>(&self, m: usize, dims: &[usize]) -> u64 {
+        device::chain_staged_bytes::<T>(&self.registry, m, dims)
     }
 
     /// Stage a coalesced GEMV batch without launching it — the level-2

@@ -79,6 +79,13 @@ impl Staged {
         self.bufs[i].take().expect("staged buffer already taken")
     }
 
+    /// Put a buffer back into a taken slot (the chain path takes an
+    /// output, promotes it to a device-resident input, and re-seats it).
+    fn replace(&mut self, i: usize, buf: MappedBuf) {
+        debug_assert!(self.bufs[i].is_none(), "replace into an occupied slot");
+        self.bufs[i] = Some(buf);
+    }
+
     /// Error-path teardown: release whatever is still mapped.
     fn release_all(&mut self, engine: &mut OffloadEngine) {
         for slot in self.bufs.drain(..) {
@@ -777,6 +784,464 @@ pub fn gemm_staged_bytes<T: Elem>(
 ) -> u64 {
     let man = registry.manifest();
     gemm_staged_bytes_tiled((man.tile_m, man.tile_n, man.tile_k), dims, T::SIZE)
+}
+
+/// One link of a GEMM chain: `C_i = epilogue_i(C_{i-1} @ B_i)` with
+/// `alpha = 1, beta = 0` (the additive case is the bias epilogue).  The
+/// previous link's output is the input — it never leaves device DRAM.
+#[derive(Debug, Clone, Copy)]
+pub struct ChainLinkSpec<'a, T: Elem> {
+    /// The link's weight matrix, row-major (k x n).
+    pub b: &'a [T],
+    /// (k, n): op(B) dims; `k` must equal the previous link's `n` (or the
+    /// chain input's column count for the first link).
+    pub dims: (usize, usize),
+    /// Optional per-row bias (length n), added before `relu`.
+    pub bias: Option<&'a [T]>,
+    /// Apply max(x, 0) element-wise after the bias.
+    pub relu: bool,
+}
+
+/// One staged chain link: geometry, staged indices, owned byte images
+/// (their host addresses key the engine's data-map until unmap) and the
+/// epilogue spec.
+#[derive(Debug)]
+struct ChainMember {
+    geom: GemmGeom,
+    bi: usize,
+    ci: usize,
+    #[allow(dead_code)]
+    b_bytes: Vec<u8>,
+    #[allow(dead_code)]
+    c_bytes: Vec<u8>,
+    /// Raw `T` bytes of the bias vector (length n), when present.
+    bias: Option<Vec<u8>>,
+    relu: bool,
+}
+
+/// A staged-but-not-executed GEMM chain: the input activation, every
+/// link's weights and every link's output buffer are resident in the
+/// cluster's device-DRAM slice, the doorbell has not rung.  Produced by
+/// [`gemm_chain_stage`]; consumed by [`gemm_chain_execute`] — the same
+/// stage/execute/finish seam the scheduler's software pipeline threads
+/// gemm and gemv batches through, so chains ride it unchanged.
+#[derive(Debug)]
+pub struct GemmChainStaged {
+    staged: Staged,
+    members: Vec<ChainMember>,
+    m: usize,
+    /// Index of the chain input (link 1's A operand).
+    ai: usize,
+    #[allow(dead_code)]
+    x_bytes: Vec<u8>,
+    elem_size: usize,
+}
+
+impl GemmChainStaged {
+    /// Number of links staged.
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// (rows, cols) of the chain's final output.
+    pub fn out_dims(&self) -> (usize, usize) {
+        let g = self.members.last().expect("staged chain is non-empty").geom;
+        (self.m, g.n)
+    }
+
+    /// Per-link cache identity of the staged B operand (`None` when not
+    /// cache-resident) — what the scheduler tags for its affinity
+    /// directory, exactly like [`GemmStagedBatch::cached_b_keys`].
+    pub fn cached_b_keys(&self) -> Vec<Option<crate::omp::CacheKey>> {
+        self.members
+            .iter()
+            .map(|l| self.staged.get(l.bi).cache_key())
+            .collect()
+    }
+
+    /// Error-path / cancellation teardown for a staged-but-never-executed
+    /// chain: releases every mapping (operand-cache pins included) and
+    /// exits the target region — a cancelled chain must not strand
+    /// resident intermediates or `map(alloc:)` output buffers.
+    pub fn release(mut self, engine: &mut OffloadEngine) {
+        self.staged.release_all(engine);
+        engine.target_end();
+    }
+}
+
+/// An executed chain between its doorbell and its finish: every link's
+/// compute is done, the completion word is posted, the final output is
+/// still on the device.  Produced by [`gemm_chain_execute`]; consumed by
+/// [`gemm_chain_finish`].
+#[derive(Debug)]
+pub struct GemmChainState {
+    staged: Staged,
+    members: Vec<ChainMember>,
+    m: usize,
+    /// The chain input's padded byte image: its host address keys the
+    /// engine's data-map until finish-time unmap, so it must outlive the
+    /// execute->finish window (a freed-and-reused heap address would
+    /// alias the stale mapping and leak the device allocation).
+    #[allow(dead_code)]
+    x_bytes: Vec<u8>,
+    elem_size: usize,
+}
+
+impl GemmChainState {
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// (rows, cols) of the chain's final output.
+    pub fn out_dims(&self) -> (usize, usize) {
+        let g = self.members.last().expect("executed chain is non-empty").geom;
+        (self.m, g.n)
+    }
+}
+
+/// Stage a GEMM chain for ONE offload: fork once, `map(to:)` the input
+/// activation (m x k0) and every link's weights (cache-eligible
+/// read-only operands), and stage every link's output `map(alloc:)`-style
+/// (beta = 0 throughout, so no output ever copies host bytes in).  Any
+/// error releases everything staged so far and exits the target region.
+///
+/// Chain legality: each link's `k` must equal its predecessor's `n`, and
+/// the manifest tile geometry must pad them identically (`tile_n ==
+/// tile_k`) so a link's padded output IS the next link's padded input —
+/// that byte-level identity is what lets the intermediate stay resident
+/// with bit-exact numerics.
+pub fn gemm_chain_stage<T: Elem>(
+    engine: &mut OffloadEngine,
+    registry: &mut ArtifactRegistry,
+    m: usize,
+    x: &[T],
+    links: &[ChainLinkSpec<'_, T>],
+) -> Result<GemmChainStaged> {
+    if links.is_empty() {
+        return Err(Error::shape("gemm_chain: empty chain"));
+    }
+    let k0 = links[0].dims.0;
+    if x.len() != m * k0 {
+        return Err(Error::shape(format!(
+            "gemm_chain: input has {} elements, link 1 wants {m}x{k0}",
+            x.len()
+        )));
+    }
+    let mut prev_n = k0;
+    for (i, l) in links.iter().enumerate() {
+        let (k, n) = l.dims;
+        if k == 0 || n == 0 || l.b.len() != k * n {
+            return Err(Error::shape(format!(
+                "gemm_chain: link {i} weights have {} elements for ({k}, {n})",
+                l.b.len()
+            )));
+        }
+        if k != prev_n {
+            return Err(Error::shape(format!(
+                "gemm_chain: link {i} consumes {k} columns but its producer \
+                 yields {prev_n}"
+            )));
+        }
+        if let Some(bias) = l.bias {
+            if bias.len() != n {
+                return Err(Error::shape(format!(
+                    "gemm_chain: link {i} bias has {} elements for n={n}",
+                    bias.len()
+                )));
+            }
+        }
+        prev_n = n;
+    }
+    let geoms: Vec<GemmGeom> = links
+        .iter()
+        .map(|l| GemmGeom::resolve::<T>(engine, registry, m, l.dims.1, l.dims.0))
+        .collect::<Result<_>>()?;
+    // padded hand-off identity: producer C is (mp x np) with lead np, the
+    // consumer reads A as (mp x kp) with lead kp — they must be the same
+    // grid, which holds iff the tile pads n and k alike
+    for w in geoms.windows(2) {
+        if w[0].np != w[1].kp {
+            return Err(Error::Offload(format!(
+                "gemm_chain: tile geometry pads a {}-wide intermediate to {} \
+                 as an output but {} as an input (tile_n != tile_k) — \
+                 device-resident hand-off would change numerics",
+                w[0].n, w[0].np, w[1].kp
+            )));
+        }
+    }
+
+    // ---- fork (once for the whole chain) ----
+    engine.blas_entry();
+    engine.target_begin(1 + 2 * links.len());
+
+    let mut staged = Staged::default();
+    let r = (|| -> Result<(usize, Vec<u8>, Vec<ChainMember>)> {
+        let g0 = geoms[0];
+        let x_bytes = T::slice_to_bytes(&pad2(x, m, k0, g0.mp, g0.kp));
+        let ai = staged.push(engine.map_to_operand(
+            &x_bytes,
+            (m * k0 * T::SIZE) as u64,
+            false,
+            "x",
+        )?);
+        let mut members = Vec::with_capacity(links.len());
+        for (l, g) in links.iter().zip(geoms.iter()) {
+            let (k, n) = l.dims;
+            let b_bytes = T::slice_to_bytes(&pad2(l.b, k, n, g.kp, g.np));
+            let bi = staged.push(engine.map_to_operand(
+                &b_bytes,
+                (k * n * T::SIZE) as u64,
+                false,
+                "b",
+            )?);
+            // beta = 0 by construction: outputs stage map(alloc:)-style,
+            // zero-filled on the device, no host copy
+            let c_bytes = vec![0u8; g.mp * g.np * T::SIZE];
+            let ci = staged.push(engine.map_alloc(
+                &c_bytes,
+                (m * n * T::SIZE) as u64,
+                "c",
+            )?);
+            members.push(ChainMember {
+                geom: *g,
+                bi,
+                ci,
+                b_bytes,
+                c_bytes,
+                bias: l.bias.map(T::slice_to_bytes),
+                relu: l.relu,
+            });
+        }
+        Ok((ai, x_bytes, members))
+    })();
+
+    match r {
+        Ok((ai, x_bytes, members)) => Ok(GemmChainStaged {
+            staged,
+            members,
+            m,
+            ai,
+            x_bytes,
+            elem_size: T::SIZE,
+        }),
+        Err(e) => {
+            staged.release_all(engine);
+            engine.target_end();
+            Err(e)
+        }
+    }
+}
+
+/// Element-wise chain epilogue on a staged output: add the bias to every
+/// row and/or clamp at zero, touching only the (m, n) user region so the
+/// zero padding — which the next link reads as A padding — stays zero.
+/// Charged like a level-1 chunk pass (stream in, FPU, stream out);
+/// numerics are exact f64/f32 ops, identical to the host path's epilogue.
+fn chain_epilogue<T: Elem>(
+    engine: &mut OffloadEngine,
+    staged: &mut Staged,
+    ci: usize,
+    g: GemmGeom,
+    bias: Option<&[T]>,
+    relu: bool,
+) -> Result<()> {
+    if bias.is_none() && !relu {
+        return Ok(());
+    }
+    let (m, n, np) = (g.m, g.n, g.np);
+    for r in 0..m {
+        let off = r * np * T::SIZE;
+        let mut row: Vec<T> = T::bytes_to_vec(&engine.read_mapped(
+            staged.get(ci),
+            off,
+            n * T::SIZE,
+        )?);
+        if let Some(bias) = bias {
+            for (v, b) in row.iter_mut().zip(bias) {
+                *v = *v + *b;
+            }
+        }
+        if relu {
+            for v in row.iter_mut() {
+                if *v < T::zero() {
+                    *v = T::zero();
+                }
+            }
+        }
+        engine.write_mapped(staged.get_mut(ci), off, &T::slice_to_bytes(&row))?;
+    }
+    let cc = level1_chunk_costs(&engine.platform.dma, &engine.platform.cluster, m * n);
+    engine.charge_compute(cc.dma.max(cc.fpu) + cc.dma, "chain_epilogue");
+    Ok(())
+}
+
+/// Execute a staged chain: one descriptor, one doorbell, then every
+/// link's tile walk back to back — each intermediate output is promoted
+/// to a device-resident input for its consumer
+/// ([`OffloadEngine::promote_output`]), so the only interior data-copy
+/// charges are bookkeeping setups.  The completion word is posted on
+/// return; poll the mailbox and call [`gemm_chain_finish`].
+pub fn gemm_chain_execute<T: Elem>(
+    engine: &mut OffloadEngine,
+    registry: &mut ArtifactRegistry,
+    mut chain: GemmChainStaged,
+) -> Result<GemmChainState> {
+    let r = (|| -> Result<()> {
+        if T::SIZE != chain.elem_size {
+            return Err(Error::shape("gemm_chain_execute: element type mismatch"));
+        }
+        let g0 = chain.members[0].geom;
+        let mut desc = OffloadDescriptor::new(
+            OffloadKind::Chain,
+            (g0.m, g0.n, g0.k),
+            T::F32_PATH,
+        );
+        let mut arg_indices = vec![chain.ai];
+        for mem in &chain.members {
+            arg_indices.push(mem.bi);
+            arg_indices.push(mem.ci);
+        }
+        for i in arg_indices {
+            desc.push_arg(OffloadArg {
+                device_addr: chain.staged.get(i).device_addr(),
+                len: chain.staged.get(i).len,
+                via_iommu: false,
+            });
+        }
+        engine.launch(&desc)?;
+
+        let mut ai = chain.ai;
+        let last = chain.members.len() - 1;
+        let specs: Vec<(GemmGeom, usize, usize, Option<Vec<T>>, bool)> = chain
+            .members
+            .iter()
+            .map(|mem| {
+                (
+                    mem.geom,
+                    mem.bi,
+                    mem.ci,
+                    mem.bias.as_ref().map(|b| T::bytes_to_vec(b)),
+                    mem.relu,
+                )
+            })
+            .collect();
+        for (li, (g, bi, ci, bias, relu)) in specs.into_iter().enumerate() {
+            gemm_compute(
+                engine,
+                registry,
+                &mut chain.staged,
+                (ai, bi, ci),
+                g,
+                T::one(),
+                T::zero(),
+            )?;
+            chain_epilogue::<T>(engine, &mut chain.staged, ci, g, bias.as_deref(), relu)?;
+            if li < last {
+                // the intermediate stays resident: no map(from:), and the
+                // next link's map(to:) of the same bytes is elided
+                let out = chain.staged.take(ci);
+                let user_bytes = (g.m * g.n * T::SIZE) as u64;
+                let kept = engine.promote_output(out, user_bytes, "c")?;
+                chain.staged.replace(ci, kept);
+                engine.note_chain_reuse(user_bytes, "a");
+                ai = ci;
+            }
+        }
+        engine.device_complete()?;
+        Ok(())
+    })();
+
+    match r {
+        Ok(()) => Ok(GemmChainState {
+            staged: chain.staged,
+            members: chain.members,
+            m: chain.m,
+            x_bytes: chain.x_bytes,
+            elem_size: chain.elem_size,
+        }),
+        Err(e) => {
+            chain.staged.release_all(engine);
+            engine.abort_offload();
+            engine.target_end();
+            Err(e)
+        }
+    }
+}
+
+/// Join an executed chain: drain the completion word, copy ONLY the
+/// final link's output back (un-padded into `out`), release every
+/// mapping — cached intermediates drop their pins and stay resident
+/// under normal LRU (or are reclaimed immediately when the cache is
+/// disabled) — and exit the target region.
+pub fn gemm_chain_finish<T: Elem>(
+    engine: &mut OffloadEngine,
+    mut state: GemmChainState,
+    out: &mut [T],
+) -> Result<()> {
+    let finish = (|| -> Result<()> {
+        if T::SIZE != state.elem_size {
+            return Err(Error::shape("gemm_chain_finish: element type mismatch"));
+        }
+        let g = state.members.last().expect("staged chain is non-empty").geom;
+        if out.len() != g.m * g.n {
+            return Err(Error::shape(format!(
+                "gemm_chain_finish: output len {} != {}x{}",
+                out.len(),
+                g.m,
+                g.n
+            )));
+        }
+        engine.join_completed()?;
+        let ci = state.members.last().expect("non-empty").ci;
+        let mut c_out = vec![0u8; g.mp * g.np * T::SIZE];
+        engine.map_from_charged(
+            state.staged.get(ci),
+            &mut c_out,
+            (g.m * g.n * T::SIZE) as u64,
+            "c",
+        )?;
+        let c_full = T::bytes_to_vec(&c_out);
+        for r in 0..g.m {
+            out[r * g.n..(r + 1) * g.n]
+                .copy_from_slice(&c_full[r * g.np..r * g.np + g.n]);
+        }
+        state.staged.release_all(engine);
+        engine.target_end();
+        Ok(())
+    })();
+
+    if let Err(e) = finish {
+        state.staged.release_all(engine);
+        engine.abort_offload();
+        engine.target_end();
+        return Err(e);
+    }
+    Ok(())
+}
+
+/// Device-DRAM bytes a staged chain occupies (input + every link's
+/// weights and output — intermediates never leave, so everything is
+/// resident at once).  `dims` is the layer-width list `[d0, .., dL]`.
+pub fn chain_staged_bytes<T: Elem>(
+    registry: &ArtifactRegistry,
+    m: usize,
+    dims: &[usize],
+) -> u64 {
+    let man = registry.manifest();
+    crate::cost::tile::chain_staged_bytes_tiled(
+        (man.tile_m, man.tile_n, man.tile_k),
+        m,
+        dims,
+        T::SIZE,
+    )
 }
 
 /// GEMV problem geometry shared by the single-call and batched paths.

@@ -114,6 +114,37 @@ impl DispatchPolicy {
         }
     }
 
+    /// Decide for a GEMM *chain* over layer widths `dims = [d0, .., dL]`
+    /// with `m` activation rows.  The chain's elided interior copies make
+    /// the device win for chains whose individual links sit below the
+    /// cold crossover — the model compares ONE chained launch against L
+    /// host GEMMs.  Chained residency is a copy-mode technique, so a
+    /// forced zero-copy mode still takes the copy-mode device path.
+    pub fn chain(&self, m: usize, dims: &[usize]) -> ExecTarget {
+        if !self.kernel_allowed(OffloadKind::Gemm) || dims.len() < 2 {
+            return ExecTarget::Host;
+        }
+        match self.forced() {
+            Some(ExecTarget::Host) => return ExecTarget::Host,
+            Some(_) => return ExecTarget::Device,
+            None => {}
+        }
+        let wins = match &self.model {
+            Some(cm) => cm.device_wins_chain(m, dims),
+            None => {
+                // threshold fallback: offload when any link clears the
+                // static gemm threshold (the model answers this better)
+                dims.iter().copied().chain(std::iter::once(m)).max().unwrap_or(0)
+                    >= self.gemm_threshold
+            }
+        };
+        if wins {
+            ExecTarget::Device
+        } else {
+            ExecTarget::Host
+        }
+    }
+
     /// Decide for a GEMV of op-shape (m, n).
     pub fn gemv(&self, m: usize, n: usize) -> ExecTarget {
         if !self.kernel_allowed(OffloadKind::Gemv) {
@@ -238,6 +269,28 @@ mod tests {
         assert_eq!(p.gemv(2048, 2048), ExecTarget::Host);
         assert_eq!(p.level1(OffloadKind::Axpy, 1 << 20), ExecTarget::Host);
         assert_eq!(p.level1(OffloadKind::Dot, 1 << 20), ExecTarget::Host);
+    }
+
+    #[test]
+    fn chain_dispatch_wins_below_the_per_op_crossover() {
+        let p = model_policy(false);
+        // n=64 links lose individually, but a 3-link chain pays one
+        // fork-join and no interior copies: the chain decision flips
+        assert_eq!(p.gemm(64, 64, 64), ExecTarget::Host);
+        assert_eq!(p.chain(64, &[64, 64]), ExecTarget::Host);
+        assert_eq!(p.chain(64, &[64, 64, 64, 64]), ExecTarget::Device);
+        // forced modes override; zero-copy forcing still runs the
+        // copy-mode chain path
+        let host = DispatchPolicy::with_mode(DispatchMode::HostOnly);
+        assert_eq!(host.chain(64, &[512, 512, 512]), ExecTarget::Host);
+        let zc = DispatchPolicy::with_mode(DispatchMode::DeviceZeroCopy);
+        assert_eq!(zc.chain(16, &[16, 16]), ExecTarget::Device);
+        // degenerate specs stay host
+        assert_eq!(p.chain(64, &[64]), ExecTarget::Host);
+        // gemm disabled for the device => chains can never offload
+        let mut no_gemm = model_policy(false);
+        no_gemm.device_kernels = vec![OffloadKind::Gemv];
+        assert_eq!(no_gemm.chain(64, &[64, 64, 64, 64]), ExecTarget::Host);
     }
 
     #[test]

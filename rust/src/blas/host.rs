@@ -357,6 +357,21 @@ pub fn axpy<T: Elem>(alpha: T, x: &[T], y: &mut [T]) {
     }
 }
 
+/// The chain epilogue on a row-major (m x n) buffer: add the per-column
+/// bias (length n), then clamp at zero.  The SAME element-wise ops, in
+/// the same order, as the device path's `chain_epilogue` — exact f64/f32
+/// arithmetic, so the two paths agree bit-for-bit on the epilogue.
+pub fn chain_epilogue<T: Elem>(c: &mut [T], n: usize, bias: Option<&[T]>, relu: bool) {
+    for (i, v) in c.iter_mut().enumerate() {
+        if let Some(b) = bias {
+            *v = *v + b[i % n];
+        }
+        if relu && *v < T::zero() {
+            *v = T::zero();
+        }
+    }
+}
+
 pub fn scal<T: Elem>(alpha: T, x: &mut [T]) {
     for v in x.iter_mut() {
         *v = *v * alpha;

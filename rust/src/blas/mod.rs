@@ -17,8 +17,10 @@ pub mod host;
 pub mod types;
 
 pub use api::{
-    GemmBatchRun, GemmStagedRun, GemvBatchRun, GemvStagedRun, HeroBlas,
+    ChainRun, ChainStagedRun, GemmBatchRun, GemmStagedRun, GemvBatchRun,
+    GemvStagedRun, HeroBlas,
 };
+pub use device::ChainLinkSpec as ChainLink;
 pub use dispatch::{DispatchPolicy, ExecTarget};
 pub use elem::Elem;
 pub use types::{Side, Transpose, Uplo};

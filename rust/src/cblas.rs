@@ -6,10 +6,19 @@
 //! `numpy` build (or any CBLAS consumer) could `dlopen` the cdylib and
 //! get the simulated heterogeneous stack.
 //!
-//! Scope: the row-major subset NumPy's `dot`/`matmul` actually uses
-//! (dgemm/sgemm, dgemv, daxpy, ddot, dnrm2, dscal, dasum, idamax), with
-//! proper `lda`/`incx` handling.  Sessions are per-thread (`CblasInit`
-//! per thread) because PJRT client handles are not `Send`.
+//! Scope: the subset NumPy's `dot`/`matmul` actually uses (dgemm/sgemm,
+//! dgemv, daxpy, ddot, dnrm2, dscal, dasum, idamax), with proper
+//! `lda`/`incx` handling — including negative increments (walking the
+//! vector backwards from the end, the reference convention for the
+//! two-vector routines; the single-vector routines nrm2/asum/idamax
+//! deliberately apply the same rule instead of netlib's silent
+//! return-0-for-`incx <= 0`) and column-major dgemm/sgemm/dgemv via the
+//! transpose identity (the same bytes read row-major ARE the
+//! transposes, so col-major calls swap operand roles and recurse; no
+//! copy, no silently wrong product).  Unsupported layout/transpose
+//! values produce an explicit error and leave outputs untouched.
+//! Sessions are per-thread (`CblasInit` per thread) because PJRT client
+//! handles are not `Send`.
 
 use std::cell::RefCell;
 use std::ffi::CStr;
@@ -28,11 +37,13 @@ pub const CBLAS_ROW_MAJOR: c_int = 101;
 pub const CBLAS_COL_MAJOR: c_int = 102;
 pub const CBLAS_NO_TRANS: c_int = 111;
 pub const CBLAS_TRANS: c_int = 112;
+/// Conjugate transpose — identical to plain transpose on real data.
+pub const CBLAS_CONJ_TRANS: c_int = 113;
 
 fn trans_of(v: c_int) -> Option<Transpose> {
     match v {
         CBLAS_NO_TRANS => Some(Transpose::No),
-        CBLAS_TRANS => Some(Transpose::Yes),
+        CBLAS_TRANS | CBLAS_CONJ_TRANS => Some(Transpose::Yes),
         _ => None,
     }
 }
@@ -115,18 +126,39 @@ unsafe fn scatter(data: &[f64], ptr: *mut c_double, rows: usize, cols: usize, ld
     }
 }
 
-/// Strided vector gather (CBLAS `incx`).
-unsafe fn gather_vec(ptr: *const c_double, n: usize, inc: isize) -> Vec<f64> {
-    (0..n).map(|i| *ptr.offset(i as isize * inc)).collect()
-}
-
-unsafe fn scatter_vec(data: &[f64], ptr: *mut c_double, inc: isize) {
-    for (i, v) in data.iter().enumerate() {
-        *ptr.offset(i as isize * inc) = *v;
+/// Element offset of logical element `i` in an `n`-element CBLAS strided
+/// vector.  Reference CBLAS defines a negative increment as walking the
+/// vector *backwards from the end*: element i lives at
+/// `(i - (n-1)) * |incx|` relative to the pointer, i.e. the pointer
+/// addresses the LAST logical element and earlier elements sit at higher
+/// addresses.  (The old `i * incx` indexed before the buffer — wrong
+/// values at best, out-of-bounds reads at worst.)
+fn stride_offset(i: usize, n: usize, inc: isize) -> isize {
+    if inc >= 0 {
+        i as isize * inc
+    } else {
+        (i as isize - (n as isize - 1)) * inc
     }
 }
 
-/// cblas_dgemm (row-major only — what NumPy uses).
+/// Strided vector gather (CBLAS `incx`, negative = backwards from the end).
+unsafe fn gather_vec(ptr: *const c_double, n: usize, inc: isize) -> Vec<f64> {
+    (0..n).map(|i| *ptr.offset(stride_offset(i, n, inc))).collect()
+}
+
+unsafe fn scatter_vec(data: &[f64], ptr: *mut c_double, inc: isize) {
+    let n = data.len();
+    for (i, v) in data.iter().enumerate() {
+        *ptr.offset(stride_offset(i, n, inc)) = *v;
+    }
+}
+
+/// cblas_dgemm — row-major natively; column-major via the transpose
+/// identity `C^T = op(B)^T op(A)^T` (the same bytes read as row-major
+/// ARE the transposes, so the col-major call swaps the operand roles and
+/// the output dims and recurses into the row-major path — no copies, no
+/// silently wrong product).  Unsupported layout/transpose values get an
+/// explicit error and leave C untouched.
 ///
 /// # Safety
 /// Pointers must reference matrices of the advertised dimensions/lda.
@@ -148,14 +180,34 @@ pub unsafe extern "C" fn cblas_dgemm(
     c: *mut c_double,
     ldc: c_int,
 ) {
+    if order == CBLAS_COL_MAJOR {
+        // col-major C (m x n, ldc) read row-major is C^T (n x m, ldc):
+        // compute C^T = alpha * op(B)^T @ op(A)^T + beta * C^T by
+        // swapping the operands and flipping the output dims; each
+        // operand keeps its own transpose flag (its row-major view is
+        // already the transpose)
+        return cblas_dgemm(
+            CBLAS_ROW_MAJOR, trans_b, trans_a, n, m, k, alpha, b, ldb, a, lda,
+            beta, c, ldc,
+        );
+    }
     if order != CBLAS_ROW_MAJOR {
-        eprintln!("cblas_dgemm: only row-major supported");
+        eprintln!("cblas_dgemm: unsupported layout {order} (expected 101/102)");
         return;
     }
     let (Some(ta), Some(tb)) = (trans_of(trans_a), trans_of(trans_b)) else {
-        eprintln!("cblas_dgemm: bad transpose flag");
+        eprintln!(
+            "cblas_dgemm: unsupported transpose flags ({trans_a}, {trans_b})"
+        );
         return;
     };
+    if m < 0 || n < 0 || k < 0 {
+        eprintln!("cblas_dgemm: negative dimension");
+        return;
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
     let (m, n, k) = (m as usize, n as usize, k as usize);
     // stored dims of A and B (row-major)
     let a_dims = if ta.is_trans() { (k, m) } else { (m, k) };
@@ -172,7 +224,8 @@ pub unsafe extern "C" fn cblas_dgemm(
     }
 }
 
-/// cblas_sgemm (row-major only).
+/// cblas_sgemm — row-major natively, column-major via the transpose
+/// identity (see [`cblas_dgemm`]).
 ///
 /// # Safety
 /// Pointers must reference matrices of the advertised dimensions/lda.
@@ -194,13 +247,29 @@ pub unsafe extern "C" fn cblas_sgemm(
     c: *mut c_float,
     ldc: c_int,
 ) {
+    if order == CBLAS_COL_MAJOR {
+        return cblas_sgemm(
+            CBLAS_ROW_MAJOR, trans_b, trans_a, n, m, k, alpha, b, ldb, a, lda,
+            beta, c, ldc,
+        );
+    }
     if order != CBLAS_ROW_MAJOR {
-        eprintln!("cblas_sgemm: only row-major supported");
+        eprintln!("cblas_sgemm: unsupported layout {order} (expected 101/102)");
         return;
     }
     let (Some(ta), Some(tb)) = (trans_of(trans_a), trans_of(trans_b)) else {
+        eprintln!(
+            "cblas_sgemm: unsupported transpose flags ({trans_a}, {trans_b})"
+        );
         return;
     };
+    if m < 0 || n < 0 || k < 0 {
+        eprintln!("cblas_sgemm: negative dimension");
+        return;
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
     let (m, n, k) = (m as usize, n as usize, k as usize);
     let a_dims = if ta.is_trans() { (k, m) } else { (m, k) };
     let b_dims = if tb.is_trans() { (n, k) } else { (k, n) };
@@ -246,10 +315,37 @@ pub unsafe extern "C" fn cblas_dgemv(
     y: *mut c_double,
     incy: c_int,
 ) {
+    if order == CBLAS_COL_MAJOR {
+        // the col-major (m x n, lda) matrix read row-major is its
+        // transpose (n x m, lda): flip the transpose flag and swap the
+        // dims — x/y lengths follow the op shape and stay put
+        let flipped = match trans_of(trans) {
+            Some(Transpose::No) => CBLAS_TRANS,
+            Some(Transpose::Yes) => CBLAS_NO_TRANS,
+            None => {
+                eprintln!("cblas_dgemv: unsupported transpose flag {trans}");
+                return;
+            }
+        };
+        return cblas_dgemv(
+            CBLAS_ROW_MAJOR, flipped, n, m, alpha, a, lda, x, incx, beta, y,
+            incy,
+        );
+    }
     if order != CBLAS_ROW_MAJOR {
+        eprintln!("cblas_dgemv: unsupported layout {order} (expected 101/102)");
         return;
     }
-    let Some(t) = trans_of(trans) else { return };
+    let Some(t) = trans_of(trans) else {
+        eprintln!("cblas_dgemv: unsupported transpose flag {trans}");
+        return;
+    };
+    if m <= 0 || n <= 0 {
+        if m < 0 || n < 0 {
+            eprintln!("cblas_dgemv: negative dimension");
+        }
+        return;
+    }
     let (m, n) = (m as usize, n as usize);
     let (xlen, ylen) = if t.is_trans() { (m, n) } else { (n, m) };
     let av = gather(a, m, n, lda as usize);
@@ -273,6 +369,9 @@ pub unsafe extern "C" fn cblas_daxpy(
     y: *mut c_double,
     incy: c_int,
 ) {
+    if n <= 0 {
+        return;
+    }
     let xv = gather_vec(x, n as usize, incx as isize);
     let mut yv = gather_vec(y, n as usize, incy as isize);
     if with_session(|s| s.axpy(alpha, &xv, &mut yv)).is_some() {
@@ -292,6 +391,9 @@ pub unsafe extern "C" fn cblas_ddot(
     y: *const c_double,
     incy: c_int,
 ) -> c_double {
+    if n <= 0 {
+        return 0.0;
+    }
     let xv = gather_vec(x, n as usize, incx as isize);
     let yv = gather_vec(y, n as usize, incy as isize);
     with_session(|s| s.dot(&xv, &yv)).unwrap_or(f64::NAN)
@@ -303,6 +405,9 @@ pub unsafe extern "C" fn cblas_ddot(
 /// `x` must reference an `n`-element strided vector.
 #[no_mangle]
 pub unsafe extern "C" fn cblas_dnrm2(n: c_int, x: *const c_double, incx: c_int) -> c_double {
+    if n <= 0 {
+        return 0.0;
+    }
     let xv = gather_vec(x, n as usize, incx as isize);
     with_session(|s| s.nrm2(&xv)).unwrap_or(f64::NAN)
 }
@@ -313,6 +418,9 @@ pub unsafe extern "C" fn cblas_dnrm2(n: c_int, x: *const c_double, incx: c_int) 
 /// `x` must reference an `n`-element strided vector.
 #[no_mangle]
 pub unsafe extern "C" fn cblas_dasum(n: c_int, x: *const c_double, incx: c_int) -> c_double {
+    if n <= 0 {
+        return 0.0;
+    }
     let xv = gather_vec(x, n as usize, incx as isize);
     with_session(|s| s.asum(&xv)).unwrap_or(f64::NAN)
 }
@@ -323,6 +431,10 @@ pub unsafe extern "C" fn cblas_dasum(n: c_int, x: *const c_double, incx: c_int) 
 /// `x` must reference an `n`-element strided vector.
 #[no_mangle]
 pub unsafe extern "C" fn cblas_dscal(n: c_int, alpha: c_double, x: *mut c_double, incx: c_int) {
+    // reference DSCAL is a no-op for non-positive n or stride
+    if n <= 0 || incx <= 0 {
+        return;
+    }
     let mut xv = gather_vec(x, n as usize, incx as isize);
     if with_session(|s| s.scal(alpha, &mut xv)).is_some() {
         scatter_vec(&xv, x, incx as isize);
@@ -338,6 +450,66 @@ pub unsafe extern "C" fn cblas_idamax(n: c_int, x: *const c_double, incx: c_int)
     if n <= 0 {
         return 0;
     }
+    // Negative incx: the gather walks backwards from the end (the
+    // two-vector routines' convention) and the returned index is in that
+    // traversal order.  Deliberate deviation from netlib, whose
+    // single-vector routines (idamax/nrm2/asum) early-return 0 for
+    // incx <= 0 — discarding the caller's data silently; here a negative
+    // stride means what it means everywhere else in the API.
     let xv = gather_vec(x, n as usize, incx as isize);
     with_session(|s| s.iamax(&xv)).map(|i| i as c_int).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stride_offsets_walk_backwards_for_negative_increments() {
+        // positive strides index forward from the pointer
+        assert_eq!(stride_offset(0, 4, 2), 0);
+        assert_eq!(stride_offset(3, 4, 2), 6);
+        // negative strides: logical element 0 is the FARTHEST stored
+        // element ((n-1)*|inc|), the last logical element sits at the
+        // pointer — reference CBLAS' backwards walk
+        assert_eq!(stride_offset(0, 4, -2), 6);
+        assert_eq!(stride_offset(1, 4, -2), 4);
+        assert_eq!(stride_offset(3, 4, -2), 0);
+        // unit negative stride is a plain reversal
+        assert_eq!(stride_offset(0, 3, -1), 2);
+        assert_eq!(stride_offset(2, 3, -1), 0);
+        // every offset stays inside [0, (n-1)*|inc|]
+        for n in 1..6usize {
+            for inc in [-3isize, -1, 1, 3] {
+                for i in 0..n {
+                    let off = stride_offset(i, n, inc);
+                    assert!(off >= 0, "negative offset reads before the buffer");
+                    assert!(off <= (n as isize - 1) * inc.abs());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip_negative_strides() {
+        let src = [10.0, 11.0, 12.0, 13.0, 14.0, 15.0, 16.0];
+        // n=4, inc=-2: logical order walks 16, 14, 12, 10
+        let got = unsafe { gather_vec(src.as_ptr(), 4, -2) };
+        assert_eq!(got, vec![16.0, 14.0, 12.0, 10.0]);
+        // scatter inverts the gather: same slots, same logical order
+        let mut dst = [0.0f64; 7];
+        unsafe { scatter_vec(&got, dst.as_mut_ptr(), -2) };
+        assert_eq!(dst, [10.0, 0.0, 12.0, 0.0, 14.0, 0.0, 16.0]);
+        // inc=1 stays the identity
+        let got = unsafe { gather_vec(src.as_ptr(), 3, 1) };
+        assert_eq!(got, vec![10.0, 11.0, 12.0]);
+    }
+
+    #[test]
+    fn conj_trans_maps_to_plain_transpose() {
+        assert_eq!(trans_of(CBLAS_NO_TRANS), Some(Transpose::No));
+        assert_eq!(trans_of(CBLAS_TRANS), Some(Transpose::Yes));
+        assert_eq!(trans_of(CBLAS_CONJ_TRANS), Some(Transpose::Yes));
+        assert_eq!(trans_of(999), None);
+    }
 }

@@ -11,8 +11,8 @@ mod platform;
 mod workload;
 
 pub use platform::{
-    CacheConfig, ClockConfig, ClusterConfig, CostConfig, DmaConfig,
-    ForkJoinConfig, HostConfig, IommuConfig, MemoryConfig, PlacementConfig,
-    PlatformConfig, SchedConfig,
+    CacheConfig, ChainConfig, ClockConfig, ClusterConfig, CostConfig,
+    DmaConfig, ForkJoinConfig, HostConfig, IommuConfig, MemoryConfig,
+    PlacementConfig, PlatformConfig, SchedConfig,
 };
 pub use workload::{DispatchMode, SweepConfig, WorkloadConfig};

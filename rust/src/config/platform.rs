@@ -249,6 +249,26 @@ impl PlacementConfig {
     }
 }
 
+/// Operation-chaining knobs (`[sched.chain]`): bounds on the `chain`
+/// serving op, which runs a dependent GEMM sequence as one submission
+/// with device-resident intermediates (see `blas::device::gemm_chain_stage`).
+///
+/// A chain stages its input, every link's weights AND every link's
+/// output at once (intermediates never leave the device), so its
+/// footprint grows with length — `max_links` bounds the spec before the
+/// capacity check against the cluster slice even runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChainConfig {
+    /// Most links one chain request may carry (1..=32).
+    pub max_links: u32,
+}
+
+impl Default for ChainConfig {
+    fn default() -> Self {
+        ChainConfig { max_links: 8 }
+    }
+}
+
 /// Offload-scheduler knobs (the [`crate::sched`] pool/queue/batcher).
 ///
 /// These describe the *serving* layer on top of the SoC model: how many
@@ -279,6 +299,8 @@ pub struct SchedConfig {
     pub cache: CacheConfig,
     /// Placement-router knobs (`[sched.placement]`).
     pub placement: PlacementConfig,
+    /// Operation-chaining bounds (`[sched.chain]`).
+    pub chain: ChainConfig,
 }
 
 impl Default for SchedConfig {
@@ -290,6 +312,7 @@ impl Default for SchedConfig {
             batch_max: 8,
             cache: CacheConfig::default(),
             placement: PlacementConfig::default(),
+            chain: ChainConfig::default(),
         }
     }
 }
@@ -470,6 +493,12 @@ impl PlatformConfig {
                             .unwrap_or(def.placement.rebalance_drains as u64)
                             as u32,
                     },
+                    chain: ChainConfig {
+                        max_links: d
+                            .opt_u64("sched.chain.max_links")
+                            .unwrap_or(def.chain.max_links as u64)
+                            as u32,
+                    },
                 }
             },
             // Cost-model knobs are estimation policy, not SoC calibration
@@ -512,6 +541,7 @@ impl PlatformConfig {
              pipeline_depth = {}\n\n\
              [sched.placement]\naffinity = {}\nsteal = {}\n\
              big_shape_frac = {}\nrebalance_drains = {}\n\n\
+             [sched.chain]\nmax_links = {}\n\n\
              [cost]\ncalibrate = {}\nalpha = {}\nfloor = {}\nceiling = {}\n",
             c.name,
             c.clock.freq_hz,
@@ -556,6 +586,7 @@ impl PlatformConfig {
             c.sched.placement.steal,
             fmt_f64(c.sched.placement.big_shape_frac),
             c.sched.placement.rebalance_drains,
+            c.sched.chain.max_links,
             c.cost.calibrate,
             fmt_f64(c.cost.alpha),
             fmt_f64(c.cost.floor),
@@ -619,6 +650,12 @@ impl PlatformConfig {
             return err(format!(
                 "sched.cache.pipeline_depth must be in 1..=8, got {}",
                 self.sched.cache.pipeline_depth
+            ));
+        }
+        if self.sched.chain.max_links == 0 || self.sched.chain.max_links > 32 {
+            return err(format!(
+                "sched.chain.max_links must be in 1..=32, got {}",
+                self.sched.chain.max_links
             ));
         }
         if !(0.0..=0.97).contains(&self.sched.placement.big_shape_frac) {
@@ -848,6 +885,32 @@ mod tests {
         let mut cfg = PlatformConfig::default();
         cfg.sched.pool_clusters = 64;
         cfg.cluster.clusters = 8;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn chain_section_parses_defaults_and_validates() {
+        // absent [sched.chain] => defaults
+        let mut text = PlatformConfig::default().to_toml_string();
+        let at = text.find("[sched.chain]").unwrap();
+        text.truncate(at);
+        let cfg = PlatformConfig::from_toml_str(&text).unwrap();
+        assert_eq!(cfg.sched.chain, ChainConfig::default());
+        assert_eq!(cfg.sched.chain.max_links, 8);
+
+        // explicit values round-trip
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.chain.max_links = 16;
+        let back = PlatformConfig::from_toml_str(&cfg.to_toml_string()).unwrap();
+        assert_eq!(back.sched.chain.max_links, 16);
+
+        // out-of-range knobs rejected (0 would wedge every chain submit,
+        // >32 would let one request stage an unbounded spec)
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.chain.max_links = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.chain.max_links = 33;
         assert!(cfg.validate().is_err());
     }
 

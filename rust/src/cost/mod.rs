@@ -40,9 +40,9 @@ pub mod tile;
 pub use calibrate::Calibration;
 pub use model::{CostModel, Crossovers};
 pub use tile::{
-    gemm_staged_bytes_tiled, gemm_tile_costs, gemv_panel_costs,
-    gemv_staged_bytes_tiled, level1_chunk_costs, round_up, GemmTileCosts,
-    GemvPanelCosts, Level1ChunkCosts,
+    chain_staged_bytes_tiled, gemm_staged_bytes_tiled, gemm_tile_costs,
+    gemv_panel_costs, gemv_staged_bytes_tiled, level1_chunk_costs, round_up,
+    GemmTileCosts, GemvPanelCosts, Level1ChunkCosts,
 };
 
 /// Op families the model estimates; indexes the calibration scales.

@@ -171,9 +171,6 @@ impl CostModel {
         beta_zero: bool,
     ) -> f64 {
         let batch = batch.max(1);
-        let (tm, tn, tk) = self.tile;
-        let (mp, np, kp) = (round_up(m, tm), round_up(n, tn), round_up(k, tk));
-        let (gm, gn, gk) = (mp / tm, np / tn, kp / tk);
         let esz = 8u64;
 
         let fork = self.forkjoin_shared()
@@ -192,15 +189,98 @@ impl CostModel {
         };
         let c_out = self.memcpy((m * n) as u64 * esz);
 
+        let walk = self.gemm_walk_cycles((m, n, k), beta_zero);
+        fork + batch as f64 * (a_in + b_in + c_in + c_out + walk)
+    }
+
+    /// Compute-region cycles of one device GEMM's tile walk (the
+    /// double-buffered DMA/FPU schedule over the padded grid), excluding
+    /// every map cost — shared between the single-op and chain estimates.
+    fn gemm_walk_cycles(&self, (m, n, k): (usize, usize, usize), beta_zero: bool) -> f64 {
+        let (tm, tn, tk) = self.tile;
+        let (mp, np, kp) = (round_up(m, tm), round_up(n, tn), round_up(k, tk));
+        let (gm, gn, gk) = (mp / tm, np / tn, kp / tk);
         let t = tile::gemm_tile_costs(&self.dma, &self.cluster, (tm, tn, tk), 8, false);
         let steady = t.dma_ab.max(t.fpu).0 as f64;
         let per_walk = (t.dma_ab + t.fpu).0 as f64
             + (gk.saturating_sub(1)) as f64 * steady
             + if beta_zero { 0.0 } else { t.dma_c.0 as f64 }
             + (t.epilogue + t.dma_c).0 as f64;
-        let charged_walks = (gm * gn).div_ceil(self.intra_clusters) as f64;
+        (gm * gn).div_ceil(self.intra_clusters) as f64 * per_walk
+    }
 
-        fork + batch as f64 * (a_in + b_in + c_in + c_out + charged_walks * per_walk)
+    /// Predicted cycles for one device GEMM *chain* launch: `dims` is the
+    /// layer-width list `[d0, .., dL]` (link i multiplies the running
+    /// (m x d_{i-1}) activation by a (d_{i-1} x d_i) weight, beta = 0).
+    /// ONE fork-join covers every link; only the first activation copies
+    /// in and only the last result copies out — each intermediate costs
+    /// two bookkeeping setups (`chain_keep` + `chain_reuse`) instead of a
+    /// map-out + map-in round trip.  This is what makes the device win
+    /// for chains whose individual links sit below the cold crossover.
+    pub fn offload_chain_cycles(&self, m: usize, dims: &[usize]) -> f64 {
+        if dims.len() < 2 {
+            return 0.0;
+        }
+        let links = dims.len() - 1;
+        let esz = 8u64;
+        let mut total = self.forkjoin_shared()
+            + (self.fj.per_arg_cycles * (1 + 2 * links as u64)) as f64;
+        total += self.memcpy((m * dims[0]) as u64 * esz); // first activation in
+        for (i, w) in dims.windows(2).enumerate() {
+            let (k, n) = (w[0], w[1]);
+            total += self.memcpy((k * n) as u64 * esz); // B_i in (cold)
+            total += self.memcpy_setup(); // C_i staged map(alloc:)-style
+            total += self.gemm_walk_cycles((m, n, k), true);
+            if i + 1 < links {
+                // intermediate hand-off: chain_keep + chain_reuse
+                total += 2.0 * self.memcpy_setup();
+            }
+        }
+        total += self.memcpy((m * dims[links]) as u64 * esz); // final C out
+        total
+    }
+
+    /// Predicted cycles for the same chain on the host path (one host
+    /// GEMM per link; the epilogues are negligible and identical on both
+    /// paths).
+    pub fn host_chain_cycles(&self, m: usize, dims: &[usize]) -> f64 {
+        dims.windows(2)
+            .map(|w| self.host.gemm_cycles(m, w[1], w[0], false).0 as f64)
+            .sum()
+    }
+
+    /// Staged device-DRAM footprint of an f64 GEMM chain (everything is
+    /// resident at once — see [`tile::chain_staged_bytes_tiled`]).
+    pub fn chain_staged_bytes(&self, m: usize, dims: &[usize]) -> u64 {
+        tile::chain_staged_bytes_tiled(self.tile, m, dims, 8)
+    }
+
+    /// Does the device path win an f64 GEMM chain?  Calibrated with the
+    /// GEMM scales — a chain is GEMM traffic with its interior copies
+    /// elided.
+    pub fn device_wins_chain(&self, m: usize, dims: &[usize]) -> bool {
+        if dims.len() < 2 {
+            return false;
+        }
+        self.scaled_device(CostOp::Gemm, self.offload_chain_cycles(m, dims))
+            < self.scaled_host(CostOp::Gemm, self.host_chain_cycles(m, dims))
+    }
+
+    /// The chain arm of the shared mode-to-path mapping (see
+    /// [`CostModel::decides_device`]).  Forced device modes answer true —
+    /// chained residency is a copy-mode technique, so a zero-copy forcing
+    /// still runs the copy-mode chain path.
+    pub fn decides_device_chain(
+        &self,
+        m: usize,
+        dims: &[usize],
+        mode: DispatchMode,
+    ) -> bool {
+        match mode {
+            DispatchMode::HostOnly => false,
+            DispatchMode::DeviceOnly | DispatchMode::DeviceZeroCopy => true,
+            DispatchMode::Auto => self.device_wins_chain(m, dims),
+        }
     }
 
     /// Predicted cycles for the same GEMM batch on the host path.
@@ -612,6 +692,47 @@ mod tests {
         assert!(a1 > Duration::from_millis(5) && a1 < Duration::from_millis(30));
         // marginal saving at b=4 is F/20 ~ 1.2 ms
         assert!(a4 < Duration::from_millis(3));
+    }
+
+    #[test]
+    fn chain_elision_moves_links_below_the_crossover_onto_the_device() {
+        let m = model();
+        // each n=64 link alone loses to the host (below the Figure-3
+        // crossover)...
+        assert!(!m.device_wins_gemm(64, 64, 64, false));
+        assert!(!m.device_wins_chain(64, &[64, 64]), "one link = one gemm-ish cost");
+        // ...but a 3-link chain pays ONE fork-join and zero interior
+        // copies, so the device wins where per-op execution never would
+        assert!(m.device_wins_chain(64, &[64, 64, 64, 64]));
+        assert!(m.decides_device_chain(64, &[64, 64, 64, 64], DispatchMode::Auto));
+        assert!(!m.decides_device_chain(64, &[64, 64, 64, 64], DispatchMode::HostOnly));
+        assert!(m.decides_device_chain(64, &[16, 16], DispatchMode::DeviceOnly));
+
+        // the chain estimate undercuts L separate offloads by ~(L-1)
+        // fork-joins plus the interior copies
+        let chain = m.offload_chain_cycles(64, &[64, 64, 64, 64]);
+        let three = 3.0 * m.offload_gemm_cycles((64, 64, 64), 1, false, true);
+        assert!(
+            chain < three - 2.0 * m.forkjoin_shared(),
+            "chain {chain} vs 3 offloads {three}"
+        );
+        // degenerate chains never claim the device
+        assert!(!m.device_wins_chain(64, &[64]));
+        assert_eq!(m.offload_chain_cycles(64, &[64]), 0.0);
+    }
+
+    #[test]
+    fn chain_footprint_matches_the_tile_formula() {
+        let m = model();
+        assert_eq!(
+            m.chain_staged_bytes(128, &[256, 128, 64]),
+            crate::cost::tile::chain_staged_bytes_tiled(
+                (64, 64, 64),
+                128,
+                &[256, 128, 64],
+                8
+            )
+        );
     }
 
     #[test]

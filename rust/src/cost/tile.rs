@@ -120,6 +120,31 @@ pub fn gemm_staged_bytes_tiled(
     ((mp * kp + kp * np + mp * np) * elem_size) as u64
 }
 
+/// Device-DRAM bytes one staged GEMM *chain* occupies: `dims` is the
+/// layer-width list `[d0, d1, .., dL]` (link i multiplies the running
+/// (m x d_{i-1}) activation by a (d_{i-1} x d_i) weight).  Everything is
+/// resident at once — the input activation, every link's weight matrix
+/// and every link's output — because intermediates never return to the
+/// host; the padded-operand formulas are the same ones `blas::device`
+/// stages with.
+pub fn chain_staged_bytes_tiled(
+    (tm, tn, tk): (usize, usize, usize),
+    m: usize,
+    dims: &[usize],
+    elem_size: usize,
+) -> u64 {
+    if dims.len() < 2 {
+        return 0;
+    }
+    let mp = round_up(m, tm);
+    let mut total = (mp * round_up(dims[0], tk) * elem_size) as u64; // input A
+    for w in dims.windows(2) {
+        let (kp, np) = (round_up(w[0], tk), round_up(w[1], tn));
+        total += ((kp * np + mp * np) * elem_size) as u64; // B_i + C_i
+    }
+    total
+}
+
 /// Device-DRAM bytes one staged member occupies for an (m, n) GEMV —
 /// the padded A matrix, the tile-width x matrix and the y vector.
 pub fn gemv_staged_bytes_tiled(
@@ -184,5 +209,24 @@ mod tests {
             gemv_staged_bytes_tiled(tile, (128, 128), 8),
             (128 * 128 + 128 * 64 + 128) * 8
         );
+    }
+
+    #[test]
+    fn chain_staged_bytes_sum_shared_activations_once() {
+        let tile = (64, 64, 64);
+        // one link degenerates to the plain gemm footprint
+        assert_eq!(
+            chain_staged_bytes_tiled(tile, 128, &[128, 128], 8),
+            gemm_staged_bytes_tiled(tile, (128, 128, 128), 8)
+        );
+        // two links: A1 + (B1 + C1) + (B2 + C2); C1 doubles as A2 and is
+        // counted once
+        assert_eq!(
+            chain_staged_bytes_tiled(tile, 64, &[64, 64, 64], 8),
+            ((64 * 64) + 2 * (64 * 64 + 64 * 64)) as u64 * 8
+        );
+        // degenerate specs stage nothing
+        assert_eq!(chain_staged_bytes_tiled(tile, 64, &[64], 8), 0);
+        assert_eq!(chain_staged_bytes_tiled(tile, 64, &[], 8), 0);
     }
 }

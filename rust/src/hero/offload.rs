@@ -15,6 +15,9 @@ pub enum OffloadKind {
     /// Level-1 vector kernels.
     Axpy,
     Dot,
+    /// Dependent GEMM sequence with device-resident intermediates (one
+    /// doorbell runs every link; see `blas::device::gemm_chain_stage`).
+    Chain,
 }
 
 impl OffloadKind {
@@ -24,6 +27,7 @@ impl OffloadKind {
             OffloadKind::Gemv => "__omp_offload_gemv",
             OffloadKind::Axpy => "__omp_offload_axpy",
             OffloadKind::Dot => "__omp_offload_dot",
+            OffloadKind::Chain => "__omp_offload_gemm_chain",
         }
     }
 }
@@ -82,7 +86,13 @@ mod tests {
     #[test]
     fn symbols_distinct() {
         use std::collections::HashSet;
-        let kinds = [OffloadKind::Gemm, OffloadKind::Gemv, OffloadKind::Axpy, OffloadKind::Dot];
+        let kinds = [
+            OffloadKind::Gemm,
+            OffloadKind::Gemv,
+            OffloadKind::Axpy,
+            OffloadKind::Dot,
+            OffloadKind::Chain,
+        ];
         let syms: HashSet<_> = kinds.iter().map(|k| k.device_symbol()).collect();
         assert_eq!(syms.len(), kinds.len());
     }

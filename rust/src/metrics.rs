@@ -36,6 +36,11 @@ pub struct Metrics {
     /// Host->device bytes NOT copied thanks to cache hits and
     /// `map(alloc:)` output staging (compare with `bytes_to_device`).
     pub bytes_copy_elided: u64,
+    /// Intermediate bytes that never crossed the host/device boundary
+    /// because a chained producer's output stayed device-resident for the
+    /// next link: the elided `map(from:)` at promotion plus the elided
+    /// `map(to:)` at consumption (see `OffloadEngine::promote_output`).
+    pub chain_bytes_elided: u64,
 }
 
 impl Metrics {
@@ -48,7 +53,8 @@ impl Metrics {
         format!(
             "offloads={} host_calls={} to_dev={}B from_dev={}B \
              iommu_pages={} tile_calls={} pjrt_wall={}us \
-             cache_hits={} cache_misses={} cache_evictions={} elided={}B",
+             cache_hits={} cache_misses={} cache_evictions={} elided={}B \
+             chain_elided={}B",
             self.offloads,
             self.host_calls,
             self.bytes_to_device,
@@ -60,6 +66,7 @@ impl Metrics {
             self.cache_misses,
             self.cache_evictions,
             self.bytes_copy_elided,
+            self.chain_bytes_elided,
         )
     }
 }
@@ -159,6 +166,12 @@ pub struct SchedCounters {
     /// Affine operand keys re-homed by the steal-fairness load balancer
     /// (home cluster saturated for `rebalance_drains` drain passes).
     pub rehomed: AtomicU64,
+    /// Chain jobs completed (a chain counts once however many links it
+    /// runs; each chain also counts once in `completed`).
+    pub chains: AtomicU64,
+    /// Intermediate bytes elided by chained execution across all workers'
+    /// engines (device-resident hand-off instead of a host round trip).
+    pub chain_bytes_elided: AtomicU64,
     /// One [`ClusterCounters`] per pool cluster (empty under
     /// `Default` — tests that never ask for per-cluster data).
     pub per_cluster: Vec<ClusterCounters>,
@@ -217,6 +230,8 @@ impl SchedCounters {
             big_shape_routed: ld(&self.big_shape_routed),
             prefetched: ld(&self.prefetched),
             rehomed: ld(&self.rehomed),
+            chains: ld(&self.chains),
+            chain_bytes_elided: ld(&self.chain_bytes_elided),
             clusters: self
                 .per_cluster
                 .iter()
@@ -254,6 +269,11 @@ impl SchedCounters {
             before.bytes_copy_elided,
             after.bytes_copy_elided,
         );
+        add(
+            &self.chain_bytes_elided,
+            before.chain_bytes_elided,
+            after.chain_bytes_elided,
+        );
         if let Some(pc) = self.cluster(cluster) {
             add(&pc.cache_hits, before.cache_hits, after.cache_hits);
             add(&pc.cache_misses, before.cache_misses, after.cache_misses);
@@ -286,6 +306,8 @@ pub struct SchedMetrics {
     pub big_shape_routed: u64,
     pub prefetched: u64,
     pub rehomed: u64,
+    pub chains: u64,
+    pub chain_bytes_elided: u64,
     /// Per-cluster breakdown, indexed by cluster id (empty when the
     /// counters were built with `Default` instead of `new`).
     pub clusters: Vec<ClusterMetrics>,
@@ -299,7 +321,7 @@ impl SchedMetrics {
              batches={} batched_jobs={} pipelined={} overlap={}us \
              queue_peak={} service_ewma={}us cache_hits={} cache_misses={} \
              cache_evictions={} to_dev={}B elided={}B stolen={} affine={} \
-             big_shape={} prefetched={} rehomed={}",
+             big_shape={} prefetched={} rehomed={} chains={} chain_elided={}B",
             self.submitted,
             self.completed,
             self.rejected,
@@ -321,6 +343,8 @@ impl SchedMetrics {
             self.big_shape_routed,
             self.prefetched,
             self.rehomed,
+            self.chains,
+            self.chain_bytes_elided,
         )
     }
 }

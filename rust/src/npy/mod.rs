@@ -6,8 +6,15 @@
 //! array code (`a.matmul(&b, &mut session)`) that never mentions the
 //! device, with every linear-algebra call routed through [`crate::blas`]
 //! where the dispatch decides host vs PMCA.
+//!
+//! Operator *sequences* build a lazy [`Expr`]
+//! (`x.lazy().matmul(&w1).add(&b1).relu().matmul(&w2).eval(&mut s)`)
+//! that lowers to ONE chained submission with device-resident
+//! intermediates — the `y = relu(xW1)W2` pattern pays the offload tax
+//! once instead of per op.
 
 pub mod array;
 pub mod ops;
 
 pub use array::NdArray;
+pub use ops::Expr;

@@ -1,7 +1,10 @@
 //! NumPy-operator -> BLAS bindings (NumPy's `dot`/`matmul` going through
-//! its linked CBLAS, exactly the hook the paper exploits).
+//! its linked CBLAS, exactly the hook the paper exploits), plus the lazy
+//! [`Expr`] builder that lowers an operator *sequence* onto the chained
+//! offload path (`blas::device::gemm_chain_stage`) so intermediates stay
+//! device-resident instead of round-tripping through host DRAM per op.
 
-use crate::blas::{Elem, HeroBlas, Transpose};
+use crate::blas::{ChainLink, Elem, HeroBlas, Transpose};
 use crate::error::{Error, Result};
 
 use super::array::NdArray;
@@ -61,6 +64,154 @@ impl<T: Elem> NdArray<T> {
             y.data_mut(),
         )?;
         Ok(y)
+    }
+}
+
+/// One deferred link of a lazy expression: a matmul with an optional
+/// bias-add and ReLU fused onto its output.
+struct ExprLink<'a, T: Elem> {
+    w: &'a NdArray<T>,
+    bias: Option<&'a NdArray<T>>,
+    relu: bool,
+}
+
+/// A lazy operator chain: `x.lazy().matmul(w1).add(b1).relu().matmul(w2)`
+/// builds the expression without computing anything; [`Expr::eval`]
+/// lowers the whole sequence to ONE chained BLAS submission whose
+/// intermediates stay resident in device DRAM (`y = relu(xW1 + b1)W2`
+/// pays the offload tax once, not per op).  Shape errors are detected as
+/// the expression is built but surface at `eval`, like NumPy raising at
+/// the call.
+pub struct Expr<'a, T: Elem> {
+    input: &'a NdArray<T>,
+    links: Vec<ExprLink<'a, T>>,
+    err: Option<Error>,
+    /// Column count of the expression so far (shape tracking).
+    cols: usize,
+}
+
+impl<T: Elem> NdArray<T> {
+    /// Begin a lazy operator chain on a 2-D array (see [`Expr`]).
+    pub fn lazy(&self) -> Expr<'_, T> {
+        let (err, cols) = match self.shape() {
+            [_, c] => (None, *c),
+            s => (
+                Some(Error::shape(format!("lazy: input must be 2-D, got {s:?}"))),
+                0,
+            ),
+        };
+        Expr { input: self, links: Vec::new(), err, cols }
+    }
+}
+
+impl<'a, T: Elem> Expr<'a, T> {
+    fn fail(mut self, e: Error) -> Self {
+        if self.err.is_none() {
+            self.err = Some(e);
+        }
+        self
+    }
+
+    /// Append `@ w` (2-D weights) to the chain.
+    pub fn matmul(mut self, w: &'a NdArray<T>) -> Self {
+        if self.err.is_some() {
+            return self;
+        }
+        let (k, n) = match w.shape() {
+            [k, n] => (*k, *n),
+            s => {
+                return self
+                    .fail(Error::shape(format!("matmul rhs must be 2-D, got {s:?}")))
+            }
+        };
+        if k != self.cols {
+            return self.fail(Error::shape(format!(
+                "matmul: expression yields {} columns, rhs consumes {k}",
+                self.cols
+            )));
+        }
+        self.links.push(ExprLink { w, bias: None, relu: false });
+        self.cols = n;
+        self
+    }
+
+    /// Add a per-row bias (1-D, length = current column count) to the
+    /// last matmul's output.
+    pub fn add(mut self, bias: &'a NdArray<T>) -> Self {
+        if self.err.is_some() {
+            return self;
+        }
+        if bias.shape() != [self.cols] {
+            return self.fail(Error::shape(format!(
+                "add: bias shape {:?} does not match {} columns",
+                bias.shape(),
+                self.cols
+            )));
+        }
+        let ok = self
+            .links
+            .last()
+            .is_some_and(|l| l.bias.is_none() && !l.relu);
+        if !ok {
+            return self.fail(Error::shape(
+                "add: one bias per matmul, attached right after it (before relu)",
+            ));
+        }
+        self.links.last_mut().expect("checked non-empty").bias = Some(bias);
+        self
+    }
+
+    /// Apply max(x, 0) element-wise to the last matmul's output.
+    pub fn relu(mut self) -> Self {
+        if self.err.is_some() {
+            return self;
+        }
+        let ok = self.links.last().is_some_and(|l| !l.relu);
+        if !ok {
+            return self.fail(Error::shape(
+                "relu: activates the latest matmul's output, at most once",
+            ));
+        }
+        self.links.last_mut().expect("checked non-empty").relu = true;
+        self
+    }
+
+    /// Number of deferred links.
+    pub fn len(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.links.is_empty()
+    }
+
+    /// Lower the chain to ONE BLAS submission and run it: the dispatch
+    /// policy decides whether the whole sequence offloads as a chain
+    /// (device-resident intermediates) or runs link by link.
+    pub fn eval(self, blas: &mut HeroBlas) -> Result<NdArray<T>> {
+        if let Some(e) = self.err {
+            return Err(e);
+        }
+        let m = self.input.shape()[0];
+        if self.links.is_empty() {
+            return Ok(self.input.clone());
+        }
+        let links: Vec<ChainLink<'_, T>> = self
+            .links
+            .iter()
+            .map(|l| {
+                let (k, n) = (l.w.shape()[0], l.w.shape()[1]);
+                ChainLink {
+                    b: l.w.data(),
+                    dims: (k, n),
+                    bias: l.bias.map(|b| b.data()),
+                    relu: l.relu,
+                }
+            })
+            .collect();
+        let mut out = NdArray::<T>::zeros(&[m, self.cols]);
+        blas.chain(m, self.input.data(), &links, out.data_mut())?;
+        Ok(out)
     }
 }
 

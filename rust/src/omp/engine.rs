@@ -372,6 +372,60 @@ impl OffloadEngine {
         })
     }
 
+    /// Promote a chained link's *output* into a device-resident input for
+    /// the next link: the buffer never returns to the host — only the
+    /// residency bookkeeping (one table insert, the same cost a cache hit
+    /// charges) is paid, and the elided `map(from:)` bytes are counted in
+    /// `chain_bytes_elided`.  The backing allocation is registered in the
+    /// operand cache as a pinned entry ([`OperandCache::insert_resident`],
+    /// which works regardless of the cache budgets), so from here on the
+    /// buffer is read-only to the device ([`OffloadEngine::write_mapped`]
+    /// rejects it) and its unmap releases the pin instead of freeing —
+    /// with the cache enabled the intermediate stays resident for later
+    /// identical maps, with it disabled the release at chain end reclaims
+    /// it immediately.  Copy-mode only: a zero-copy output lives in host
+    /// memory and has nothing device-resident to keep.
+    pub fn promote_output(&mut self, mut buf: MappedBuf, elided_bytes: u64,
+                          label: &str) -> Result<MappedBuf> {
+        if buf.is_zero_copy() {
+            return Err(Error::Offload(format!(
+                "promote_output({label}): zero-copy buffers cannot stay device-resident"
+            )));
+        }
+        if buf.is_cached() {
+            return Err(Error::Offload(format!(
+                "promote_output({label}): buffer is already cache-shared"
+            )));
+        }
+        let alloc = *buf.backing.as_ref().expect("copy-mode buffer has backing");
+        // Content key of the *device* bytes — host-side bookkeeping (the
+        // buffer-identity tracking a real runtime would do), not charged.
+        let bytes = self.device.dram.read(&alloc, buf.len as usize)?.to_vec();
+        let key = CacheKey::of(&bytes);
+        let cost = Cycles(self.platform.cfg.host.memcpy_setup_cycles);
+        self.charge(RegionClass::DataCopy, cost, &format!("chain_keep({label})"));
+        self.metrics.chain_bytes_elided += elided_bytes.max(1);
+        let outcome = self.opcache.insert_resident(key, alloc);
+        if outcome.cached {
+            buf.cache_key = Some(key);
+        }
+        // a duplicate key keeps the buffer privately owned — the chain
+        // reads it through its staged index either way, so numerics are
+        // unaffected; only the post-chain residency is lost
+        self.free_evicted(outcome.evicted)?;
+        Ok(buf)
+    }
+
+    /// Account a chained link consuming the previous link's resident
+    /// output as its input: the `map(to:)` is elided — only the mapping
+    /// bookkeeping is charged — and the elided bytes are counted in
+    /// `chain_bytes_elided`.
+    pub fn note_chain_reuse(&mut self, elided_bytes: u64, label: &str) {
+        let cost = Cycles(self.platform.cfg.host.memcpy_setup_cycles);
+        self.charge(RegionClass::DataCopy, cost, &format!("chain_reuse({label})"));
+        self.metrics.chain_bytes_elided += elided_bytes.max(1);
+    }
+
     /// Allocate device DRAM; on OOM, evict unpinned cache entries (LRU
     /// first) and retry once, so cache residency never fails a staging
     /// that would have succeeded without the cache.
@@ -820,6 +874,53 @@ mod tests {
         assert_eq!(&out[..8], &[5u8; 8]);
         e.unmap(c, "c").unwrap();
         assert_eq!(e.device.dram.stats().bytes_in_use, 0);
+    }
+
+    #[test]
+    fn promote_output_keeps_bytes_resident_without_copy_back() {
+        let mut e = cached_engine(1 << 20, 0.5, 8);
+        let host_c = vec![0u8; 4096];
+        let mut c = e.map_alloc(&host_c, 4096, "c").unwrap();
+        e.write_mapped(&mut c, 0, &[7u8; 4096]).unwrap();
+        let copies_before = e.metrics.bytes_from_device;
+        let addr = c.device_addr();
+
+        let kept = e.promote_output(c, 4096, "c").unwrap();
+        assert!(kept.is_cached(), "promoted output registers in the cache");
+        assert_eq!(kept.device_addr(), addr, "no data movement");
+        assert_eq!(e.metrics.bytes_from_device, copies_before, "map(from:) elided");
+        assert_eq!(e.metrics.chain_bytes_elided, 4096);
+        assert_eq!(e.opcache.total_pins(), 1);
+        // promoted buffers are inputs now: writes must be rejected
+        let mut kept = kept;
+        assert!(e.write_mapped(&mut kept, 0, &[1u8; 8]).is_err());
+        // the device still reads the produced bytes
+        assert_eq!(e.read_mapped(&kept, 0, 8).unwrap(), &[7u8; 8][..]);
+
+        // chain end: unmap releases the pin; entry stays resident (cache
+        // on) so an identical map(to:) hits without a copy
+        let bytes = e.read_mapped(&kept, 0, 4096).unwrap();
+        e.unmap(kept, "c").unwrap();
+        assert_eq!(e.opcache.total_pins(), 0);
+        let again = e.map_to_operand(&bytes, 4096, false, "c").unwrap();
+        assert_eq!(e.metrics.cache_hits, 1, "resident intermediate is reusable");
+        e.unmap(again, "c").unwrap();
+    }
+
+    #[test]
+    fn promote_output_with_cache_disabled_reclaims_at_release() {
+        let mut e = engine(); // cache_frac = 0
+        e.reset_run();
+        let host_c = vec![0u8; 1024];
+        let c = e.map_to_charged(&host_c, 1024, false, "c").unwrap();
+        let kept = e.promote_output(c, 1024, "c").unwrap();
+        assert!(kept.is_cached(), "resident even with zero budgets");
+        assert_eq!(e.opcache.total_pins(), 1);
+        e.unmap(kept, "c").unwrap();
+        assert_eq!(e.opcache.total_pins(), 0);
+        assert!(e.opcache.is_empty(), "zero-budget cache reclaims at chain end");
+        assert_eq!(e.device.dram.stats().bytes_in_use, 0);
+        assert_eq!(e.metrics.chain_bytes_elided, 1024);
     }
 
     #[test]

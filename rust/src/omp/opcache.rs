@@ -175,6 +175,35 @@ impl OperandCache {
         InsertOutcome { cached: true, evicted: self.trim() }
     }
 
+    /// Register a *chained output* as resident: unlike [`OperandCache::insert`]
+    /// this works even when the cache budgets are zero, because chain
+    /// residency is a correctness-neutral, explicitly short-lived state —
+    /// the entry is born pinned (the producing link's `MappedBuf` holds
+    /// the pin) and the pin is dropped at chain end, at which point a
+    /// disabled/over-budget cache reclaims it on the very next trim.
+    /// With the cache enabled the intermediate simply stays resident
+    /// under normal LRU, so a later identical `map(to:)` can still hit.
+    /// A duplicate key leaves the older entry authoritative (the caller
+    /// keeps private ownership, exactly like `insert`).
+    #[must_use]
+    pub fn insert_resident(&mut self, key: CacheKey, alloc: Allocation) -> InsertOutcome {
+        if self.entries.iter().any(|e| e.key == key) {
+            return InsertOutcome { cached: false, evicted: Vec::new() };
+        }
+        self.clock += 1;
+        self.entries.push(Entry { key, alloc, pins: 1, stamp: self.clock, tag: None });
+        self.stats.insertions += 1;
+        InsertOutcome { cached: true, evicted: self.trim() }
+    }
+
+    /// Live pins across all entries — zero whenever no mapping (staged
+    /// batch, in-flight chain, prefetch) is outstanding.  The scheduler's
+    /// workers assert this between batches so a cancelled or failed chain
+    /// can never strand a pinned (hence unevictable) intermediate.
+    pub fn total_pins(&self) -> u64 {
+        self.entries.iter().map(|e| e.pins as u64).sum()
+    }
+
     /// Attach a placement tag to a resident entry (no-op when the key is
     /// absent).  The scheduler's worker tags the entries backing tracked
     /// operands right after staging; when LRU/OOM eviction later drops a
@@ -401,6 +430,39 @@ mod tests {
         let out = c.insert(key(4), alloc(0x400, 64));
         assert_eq!(out.evicted.len(), 1); // entry 2 (untagged LRU)
         assert!(c.take_evicted_tags().is_empty());
+    }
+
+    #[test]
+    fn insert_resident_works_with_the_cache_disabled() {
+        // chain residency must not depend on the [sched.cache] budgets:
+        // the entry lives (pinned) for the duration of the chain and is
+        // reclaimed on release when the budgets are zero
+        let mut c = OperandCache::disabled();
+        let out = c.insert_resident(key(1), alloc(0x100, 64));
+        assert!(out.cached && out.evicted.is_empty(), "pinned entry survives trim");
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.pins(&key(1)), 1);
+        assert_eq!(c.total_pins(), 1);
+        // chain end: the pin drops and the zero-budget cache reclaims it
+        let evicted = c.release(&key(1));
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0].addr, 0x100);
+        assert!(c.is_empty());
+        assert_eq!(c.total_pins(), 0);
+    }
+
+    #[test]
+    fn insert_resident_stays_resident_when_enabled() {
+        let mut c = OperandCache::new(1024, 8);
+        assert!(c.insert_resident(key(1), alloc(0x100, 64)).cached);
+        assert!(c.release(&key(1)).is_empty(), "within budget: stays resident");
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.total_pins(), 0);
+        // the resident intermediate is now a plain LRU entry: a duplicate
+        // insert keeps the older one authoritative
+        let out = c.insert_resident(key(1), alloc(0x900, 64));
+        assert!(!out.cached);
+        assert_eq!(c.peek(&key(1)).unwrap().addr, 0x100);
     }
 
     #[test]

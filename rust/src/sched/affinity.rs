@@ -42,6 +42,28 @@ pub fn operand_key(op: &str, n: usize, seed: u64) -> u64 {
     fnv1a(&bytes)
 }
 
+/// [`operand_key`] for a rectangular operand (rows x cols).
+pub fn operand_key2(op: &str, rows: usize, cols: usize, seed: u64) -> u64 {
+    let mut bytes = Vec::with_capacity(op.len() + 24);
+    bytes.extend_from_slice(op.as_bytes());
+    bytes.extend_from_slice(&(rows as u64).to_le_bytes());
+    bytes.extend_from_slice(&(cols as u64).to_le_bytes());
+    bytes.extend_from_slice(&seed.to_le_bytes());
+    fnv1a(&bytes)
+}
+
+/// Operand key of a chain link's (k x n) shared weight matrix.  A square
+/// link deliberately collides with the plain gemm key: `Rng::new(seed)`
+/// synthesizes the identical n x n matrix for both request kinds, so a
+/// chain can chase a cache a gemm stream warmed (and vice versa).
+pub fn chain_b_key(k: usize, n: usize, seed: u64) -> u64 {
+    if k == n {
+        operand_key("gemm_b", n, seed)
+    } else {
+        operand_key2("gemm_b", k, n, seed)
+    }
+}
+
 /// The directory: operand key -> residency bitmask over pool clusters
 /// (the config caps pools at 64, so one u64 mask suffices), plus an
 /// optional per-key **home override** set by the router's steal-fairness
@@ -151,6 +173,17 @@ mod tests {
         assert_ne!(operand_key("gemm_b", 64, 42), operand_key("gemm_b", 64, 43));
         assert_ne!(operand_key("gemm_b", 64, 42), operand_key("gemm_b", 128, 42));
         assert_ne!(operand_key("gemm_b", 64, 42), operand_key("gemm_a", 64, 42));
+    }
+
+    #[test]
+    fn chain_keys_share_square_weights_with_gemm_streams() {
+        // a square chain link and a gemm request with the same b_seed
+        // synthesize the identical matrix: one key, one warm cluster
+        assert_eq!(chain_b_key(64, 64, 42), operand_key("gemm_b", 64, 42));
+        // rectangular links get their own keys, shape-separated
+        assert_ne!(chain_b_key(128, 64, 42), chain_b_key(64, 128, 42));
+        assert_ne!(chain_b_key(128, 64, 42), operand_key("gemm_b", 64, 42));
+        assert_eq!(chain_b_key(128, 64, 42), operand_key2("gemm_b", 128, 64, 42));
     }
 
     #[test]

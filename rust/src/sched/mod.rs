@@ -179,12 +179,46 @@ pub struct Level1Request {
     pub alpha: f64,
 }
 
+/// One chained serving request: a dependent GEMM sequence executed as
+/// ONE submission whose intermediates stay resident in the serving
+/// cluster's device-DRAM slice (`y = relu(x W1) W2 ...` without the
+/// per-link offload tax).  `dims = [d0, .., dL]`: link i multiplies the
+/// running (m x d_{i-1}) activation by a (d_{i-1} x d_i) weight, alpha =
+/// 1, beta = 0.  The input activation is drawn from `seed`; link i's
+/// weights come from `b_seeds[i]` when set (the shared-weight serving
+/// pattern — chains sharing a `b_seed` share bit-identical weights and
+/// route to the warm cluster) or continue the request stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChainRequest {
+    pub m: usize,
+    pub dims: Vec<usize>,
+    pub mode: DispatchMode,
+    pub seed: u64,
+    pub b_seeds: Vec<Option<u64>>,
+    /// `false` runs the same links as separate per-op GEMM offloads (the
+    /// paper's one-call-at-a-time behavior) — the regression oracle the
+    /// chained path must match bit-for-bit, and the bench baseline the
+    /// `chain_bytes_elided` cut is measured against.
+    pub chained: bool,
+}
+
+impl ChainRequest {
+    /// Links in the chain (`dims` fenceposts).
+    pub fn links(&self) -> usize {
+        self.dims.len().saturating_sub(1)
+    }
+}
+
 /// What a job asks the pool to do.
 #[derive(Debug)]
 pub enum JobPayload {
     Gemm(GemmRequest),
     Gemv(GemvRequest),
     Level1(Level1Request),
+    /// A dependent multi-op sequence: routed, stolen and executed as ONE
+    /// unit — links never split across clusters, because the whole point
+    /// is that the intermediates stay in one cluster's DRAM slice.
+    Chain(ChainRequest),
     /// Drain barrier: the worker that pops this parks until the sender
     /// releases (or drops) the channel.  Used by tests and benches to
     /// hold a cluster busy deterministically — e.g. to fill the queue
@@ -242,6 +276,9 @@ impl Job {
             JobPayload::Level1(r) => {
                 Some(BatchKey { op: r.op.name(), dims: (r.n, 0, 0), mode: r.mode })
             }
+            // chains are internally sequential and already amortize the
+            // fork-join across their links — they never coalesce
+            JobPayload::Chain(_) => None,
             JobPayload::Fence(_) => None,
         }
     }
@@ -332,6 +369,8 @@ pub struct Scheduler {
     workers: Mutex<Vec<JoinHandle<()>>>,
     pool_size: usize,
     next_id: AtomicU64,
+    /// `[sched.chain] max_links` — chain specs are bounded at submit.
+    chain_max_links: u32,
     /// The pool-shared cost model: one calibration state behind every
     /// worker's dispatch, the router's shape/admission decisions and the
     /// batcher's linger sizing.  Kept here so the serve layer can report
@@ -421,8 +460,43 @@ impl Scheduler {
             workers: Mutex::new(handles),
             pool_size: sc.pool_clusters as usize,
             next_id: AtomicU64::new(1),
+            chain_max_links: sc.chain.max_links,
             cost,
         })
+    }
+
+    /// Reject a chain spec that could never run — too many links for the
+    /// `[sched.chain]` bound, or a staged footprint (input + every link's
+    /// weights + every output, all resident at once) that no cluster
+    /// slice can hold.  A clear error at submit time instead of a job
+    /// that wedges in staging retries.
+    pub fn validate_chain(&self, req: &ChainRequest) -> std::result::Result<(), String> {
+        let links = req.links();
+        if links == 0 {
+            return Err("chain needs at least 2 dims (1 link)".into());
+        }
+        if links as u32 > self.chain_max_links {
+            return Err(format!(
+                "chain has {links} links; [sched.chain] max_links = {}",
+                self.chain_max_links
+            ));
+        }
+        if req.b_seeds.len() != links {
+            return Err(format!(
+                "chain has {links} links but {} b_seeds",
+                req.b_seeds.len()
+            ));
+        }
+        let need = self.cost.chain_staged_bytes(req.m, &req.dims);
+        let cap = self.router.capacity().max_slice();
+        if need > cap {
+            return Err(format!(
+                "chain stages {need} B resident at once but the largest \
+                 cluster slice holds {cap} B — shorten the chain or shrink \
+                 its dims"
+            ));
+        }
+        Ok(())
     }
 
     /// Enqueue a job; returns a [`Submission`] (result receiver + cancel
@@ -476,8 +550,7 @@ impl Scheduler {
         // counters snapshot (with its per-cluster Vec) is waste
         let per_job_us =
             self.counters.service_us_ewma.load(Ordering::Relaxed).max(1_000);
-        let us = depth as u64 * per_job_us / self.pool_size.max(1) as u64;
-        (us / 1_000).clamp(1, 10_000)
+        retry_after_ms(depth, per_job_us, self.pool_size)
     }
 
     /// Point-in-time scheduler counters, with each cluster's live
@@ -530,6 +603,19 @@ impl Drop for Scheduler {
     fn drop(&mut self) {
         self.shutdown();
     }
+}
+
+/// The backpressure hint's arithmetic, saturating end to end: a long
+/// fence park or a huge batch window can push the service-time EWMA into
+/// ranges where `depth * per_job_us` overflows u64 — the hint must clamp
+/// to its 10 s ceiling, never wrap to a tiny (or panicking) value that
+/// turns backpressure into a retry storm.
+pub(crate) fn retry_after_ms(depth: usize, per_job_us: u64, pool: usize) -> u64 {
+    let us = (depth as u64)
+        .saturating_mul(per_job_us)
+        .checked_div(pool.max(1) as u64)
+        .unwrap_or(u64::MAX);
+    (us / 1_000).clamp(1, 10_000)
 }
 
 #[cfg(test)]
@@ -629,6 +715,43 @@ mod tests {
             l1(Level1Op::Dot, 4096, 1, 1.0).batch_key(),
             l1(Level1Op::Dot, 2048, 1, 1.0).batch_key()
         );
+    }
+
+    #[test]
+    fn chain_jobs_never_share_a_launch() {
+        let (tx, _rx) = mpsc::channel();
+        let chain = Job {
+            id: 1,
+            priority: Priority::Normal,
+            payload: JobPayload::Chain(ChainRequest {
+                m: 64,
+                dims: vec![64, 64, 64],
+                mode: DispatchMode::DeviceOnly,
+                seed: 1,
+                b_seeds: vec![None, None],
+                chained: true,
+            }),
+            reply: tx,
+            cancel: CancelToken::default(),
+            enqueued_at: Instant::now(),
+        };
+        assert_eq!(chain.batch_key(), None);
+        if let JobPayload::Chain(r) = &chain.payload {
+            assert_eq!(r.links(), 2);
+        }
+    }
+
+    #[test]
+    fn retry_after_ms_saturates_instead_of_wrapping() {
+        // sane inputs behave like the old arithmetic
+        assert_eq!(retry_after_ms(4, 1_000_000, 2), 2_000);
+        assert_eq!(retry_after_ms(0, 1_000, 4), 1, "floor at 1 ms");
+        // a huge service EWMA (e.g. a 300 s fence park folded in) times a
+        // deep queue must clamp to the ceiling, not wrap
+        assert_eq!(retry_after_ms(usize::MAX, u64::MAX, 1), 10_000);
+        assert_eq!(retry_after_ms(1 << 40, u64::MAX / 2, 4), 10_000);
+        // pool of 0 (defensive) still cannot divide by zero
+        assert_eq!(retry_after_ms(8, 1_000_000, 0), 8_000);
     }
 
     #[test]

@@ -58,7 +58,7 @@ use crate::config::PlacementConfig;
 use crate::cost::CostModel;
 use crate::metrics::SchedCounters;
 
-use super::affinity::{operand_key, AffinityDirectory};
+use super::affinity::{chain_b_key, operand_key, AffinityDirectory};
 use super::batcher::BatchKey;
 use super::pool::CapacityModel;
 use super::queue::WorkQueue;
@@ -229,6 +229,18 @@ impl PlacementRouter {
             JobPayload::Level1(r) => {
                 self.cost.decides_device(r.op.name(), (r.n, 0, 0), r.mode)
             }
+            JobPayload::Chain(r) => {
+                // an unchained chain job runs per-link gemms; treat it as
+                // device-bound if ANY link would stage (its footprint
+                // estimate below is per-link, not whole-chain)
+                if r.chained {
+                    self.cost.decides_device_chain(r.m, &r.dims, r.mode)
+                } else {
+                    r.dims.windows(2).any(|w| {
+                        self.cost.decides_device("gemm", (r.m, w[1], w[0]), r.mode)
+                    })
+                }
+            }
             JobPayload::Fence(_) => false,
         }
     }
@@ -245,9 +257,38 @@ impl PlacementRouter {
         match payload {
             JobPayload::Gemm(r) => self.cost.gemm_staged_bytes((r.n, r.n, r.n)),
             JobPayload::Gemv(r) => self.cost.gemv_staged_bytes((r.m, r.n)),
+            JobPayload::Chain(r) => {
+                if r.chained {
+                    // everything resident at once: the whole-chain footprint
+                    self.cost.chain_staged_bytes(r.m, &r.dims)
+                } else {
+                    // per-link offloads: only one link stages at a time
+                    r.dims
+                        .windows(2)
+                        .map(|w| self.cost.gemm_staged_bytes((r.m, w[1], w[0])))
+                        .max()
+                        .unwrap_or(0)
+                }
+            }
             // level-1 stages one artifact-sized chunk pair at a time and
             // fences stage nothing — both fit anywhere
             JobPayload::Level1(_) | JobPayload::Fence(_) => 0,
+        }
+    }
+
+    /// The operand key a job chases for cache affinity, when it has one:
+    /// gemm jobs follow their shared B, chain jobs follow their FIRST
+    /// shared weight matrix (the whole chain routes as one unit to that
+    /// home — links are never split across clusters).
+    fn affine_key(payload: &JobPayload) -> Option<u64> {
+        match payload {
+            JobPayload::Gemm(r) => r.b_seed.map(|bs| operand_key("gemm_b", r.n, bs)),
+            JobPayload::Chain(r) => r
+                .b_seeds
+                .iter()
+                .zip(r.dims.windows(2))
+                .find_map(|(bs, w)| bs.map(|bs| chain_b_key(w[0], w[1], bs))),
+            _ => None,
         }
     }
 
@@ -279,47 +320,46 @@ impl PlacementRouter {
         // small lanes only from here on (all lanes under the even split)
         let eligible = self.capacity.small_ids();
 
-        // operand affinity: same-b_seed gemms chase the warm cache
+        // operand affinity: same-operand jobs (shared-B gemms, chains
+        // whose first weight matrix is shared) chase the warm cache — a
+        // chain routes as ONE unit to that home, links never split
         if self.knobs.affinity {
-            if let JobPayload::Gemm(r) = &job.payload {
-                if let Some(bs) = r.b_seed {
-                    let key = operand_key("gemm_b", r.n, bs);
-                    let (mut c, _warm) = self.directory.place(key, &eligible);
-                    // steal-fairness: a home saturated for N job-moving
-                    // drains hands the key to the least-loaded peer — at
-                    // most one re-home per N drains pool-wide (cooldown),
-                    // so a hot key cannot ping-pong a cold copy per flip
-                    let n_drains = self.knobs.rebalance_drains;
-                    if n_drains > 0
-                        && st.over_streak[c as usize].load(Ordering::Relaxed) >= n_drains
-                        && st.drain_seq.load(Ordering::Relaxed)
-                            >= self.last_rehome.load(Ordering::Relaxed) + n_drains as u64
-                    {
-                        let target = eligible
-                            .iter()
-                            .copied()
-                            .filter(|&e| e != c)
-                            .min_by_key(|&e| st.clusters[e as usize].depth());
-                        if let Some(t) = target {
-                            self.directory.set_home(key, t);
-                            st.over_streak[c as usize].store(0, Ordering::Relaxed);
-                            self.last_rehome.store(
-                                st.drain_seq.load(Ordering::Relaxed),
-                                Ordering::Relaxed,
-                            );
-                            counters.rehomed.fetch_add(1, Ordering::Relaxed);
-                            c = t;
-                        }
+            if let Some(key) = Self::affine_key(&job.payload) {
+                let (mut c, _warm) = self.directory.place(key, &eligible);
+                // steal-fairness: a home saturated for N job-moving
+                // drains hands the key to the least-loaded peer — at
+                // most one re-home per N drains pool-wide (cooldown),
+                // so a hot key cannot ping-pong a cold copy per flip
+                let n_drains = self.knobs.rebalance_drains;
+                if n_drains > 0
+                    && st.over_streak[c as usize].load(Ordering::Relaxed) >= n_drains
+                    && st.drain_seq.load(Ordering::Relaxed)
+                        >= self.last_rehome.load(Ordering::Relaxed) + n_drains as u64
+                {
+                    let target = eligible
+                        .iter()
+                        .copied()
+                        .filter(|&e| e != c)
+                        .min_by_key(|&e| st.clusters[e as usize].depth());
+                    if let Some(t) = target {
+                        self.directory.set_home(key, t);
+                        st.over_streak[c as usize].store(0, Ordering::Relaxed);
+                        self.last_rehome.store(
+                            st.drain_seq.load(Ordering::Relaxed),
+                            Ordering::Relaxed,
+                        );
+                        counters.rehomed.fetch_add(1, Ordering::Relaxed);
+                        c = t;
                     }
-                    counters.affine_routed.fetch_add(1, Ordering::Relaxed);
-                    if let Some(pc) = counters.cluster(c) {
-                        pc.affine_routed.fetch_add(1, Ordering::Relaxed);
-                    }
-                    return (
-                        c as usize,
-                        Routed { job, affine: true, steal_ok: true, est_bytes: est },
-                    );
                 }
+                counters.affine_routed.fetch_add(1, Ordering::Relaxed);
+                if let Some(pc) = counters.cluster(c) {
+                    pc.affine_routed.fetch_add(1, Ordering::Relaxed);
+                }
+                return (
+                    c as usize,
+                    Routed { job, affine: true, steal_ok: true, est_bytes: est },
+                );
             }
         }
 
@@ -815,6 +855,99 @@ mod tests {
         r.drain_global(&mut st, &q, &c);
         assert_eq!(st.clusters[1].depth(), 2);
         assert_eq!(c.snapshot().rehomed, 1);
+    }
+
+    fn chain_job(
+        id: u64,
+        m: usize,
+        dims: Vec<usize>,
+        b_seeds: Vec<Option<u64>>,
+        chained: bool,
+    ) -> Job {
+        let (tx, _rx) = mpsc::channel();
+        Job {
+            id,
+            priority: Priority::Normal,
+            payload: JobPayload::Chain(crate::sched::ChainRequest {
+                m,
+                dims,
+                mode: DispatchMode::DeviceOnly,
+                seed: id,
+                b_seeds,
+                chained,
+            }),
+            reply: tx,
+            cancel: CancelToken::default(),
+            enqueued_at: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn chains_route_as_one_unit_to_the_shared_weight_home() {
+        let (r, q, c) = router(4, 0.0, true, false);
+        // chains sharing their first (square) weight follow the SAME key
+        // a plain gemm stream with that b_seed uses
+        for id in 0..3 {
+            q.push(chain_job(id, 64, vec![64, 64, 64], vec![Some(42), None], true))
+                .unwrap();
+        }
+        q.push(gemm_job(9, 64, Some(42))).unwrap();
+        let mut st = r.state.lock().unwrap();
+        r.drain_global(&mut st, &q, &c);
+        let loaded: Vec<usize> = st
+            .clusters
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.depth() > 0)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(loaded.len(), 1, "chains + gemms share one warm home");
+        assert_eq!(st.clusters[loaded[0]].depth(), 4);
+        assert_eq!(c.snapshot().affine_routed, 4);
+        // stealing moves a whole chain job or nothing — links never split
+        drop(st);
+        let (r2, q2, c2) = router(2, 0.0, true, true);
+        q2.push(chain_job(1, 64, vec![64, 64, 64], vec![None, None], true))
+            .unwrap();
+        q2.push(chain_job(2, 64, vec![64, 64, 64], vec![None, None], true))
+            .unwrap();
+        let mut st2 = r2.state.lock().unwrap();
+        r2.drain_global(&mut st2, &q2, &c2);
+        let total: usize = st2.clusters.iter().map(|l| l.depth()).sum();
+        assert_eq!(total, 2);
+        if let Some(j) = r2.steal(&mut st2, 0, &c2) {
+            assert!(matches!(j.payload, JobPayload::Chain(_)));
+            let left: usize = st2.clusters.iter().map(|l| l.depth()).sum();
+            assert_eq!(left, 1, "a steal moves exactly one whole chain");
+        }
+    }
+
+    #[test]
+    fn chained_footprint_routes_big_unchained_routes_small() {
+        let (r, q, c) = router(4, 0.5, true, true);
+        // whole-chain residency: A + 2x(B + C) at 640x640 f64 = ~16 MiB,
+        // over the ~10.7 MiB small slice => big lane, pinned there
+        q.push(chain_job(1, 640, vec![640, 640, 640], vec![None, None], true))
+            .unwrap();
+        // the same spec unchained stages one link at a time (~9.8 MiB):
+        // it fits a small slice and must NOT occupy the big lane
+        q.push(chain_job(2, 640, vec![640, 640, 640], vec![None, None], false))
+            .unwrap();
+        let mut st = r.state.lock().unwrap();
+        r.drain_global(&mut st, &q, &c);
+        assert_eq!(st.clusters[0].depth(), 1, "chained spec takes the big lane");
+        assert_eq!(c.snapshot().big_shape_routed, 1);
+        let small_total: usize = (1..4).map(|i| st.clusters[i].depth()).sum();
+        assert_eq!(small_total, 1, "unchained spec stays on the small lanes");
+        // small thieves can never take the resident chain
+        for thief in 1..4 {
+            if let Some(j) = r.steal(&mut st, thief, &c) {
+                assert!(
+                    !matches!(&j.payload, JobPayload::Chain(cr) if cr.chained),
+                    "chained job stolen onto a slice that cannot hold it"
+                );
+            }
+        }
     }
 
     #[test]

@@ -14,7 +14,13 @@
 //!
 //! **Cancellation**: a job whose submitter stopped waiting (serve-layer
 //! reply timeout sets its [`CancelToken`]) is skipped at dequeue — never
-//! synthesized, staged or launched for a dropped receiver.
+//! synthesized, staged or launched for a dropped receiver.  A batch (or
+//! chain) whose every member cancelled *while staging* is abandoned
+//! before its doorbell: the staged mappings — operand-cache pins and
+//! `map(alloc:)` output buffers included — are released, and the worker
+//! asserts at every quiesce point that no cache pin survived
+//! ([`debug_assert_pins_drained`]), so a cancelled chain can never
+//! strand an unevictable resident intermediate.
 //!
 //! **Software pipelining** (`[sched.cache] pipeline_depth >= 2`): the
 //! gemm *and gemv* device paths are split stage / execute / finish, and
@@ -50,7 +56,8 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::blas::{
-    DispatchPolicy, ExecTarget, GemmBatchRun, GemvBatchRun, HeroBlas,
+    ChainLink, ChainRun, DispatchPolicy, ExecTarget, GemmBatchRun,
+    GemvBatchRun, HeroBlas,
 };
 use crate::cost::CostModel;
 use crate::error::Result;
@@ -60,14 +67,14 @@ use crate::soc::clock::Cycles;
 use crate::soc::trace::RegionClass;
 use crate::util::rng::Rng;
 
-use super::affinity::operand_key;
+use super::affinity::{chain_b_key, operand_key};
 use super::batcher::Batcher;
 use super::placement::{ClusterView, PlacementRouter};
 use super::pool::ClusterSpec;
 use super::queue::WorkQueue;
 use super::{
-    GemmOutcome, GemmRequest, GemvRequest, Job, JobPayload, Level1Op,
-    Level1Request,
+    ChainRequest, GemmOutcome, GemmRequest, GemvRequest, Job, JobPayload,
+    Level1Op, Level1Request,
 };
 
 /// Spawn one worker thread for `spec`.  It reports session boot success
@@ -167,6 +174,13 @@ enum InflightRun {
         ys: Vec<Vec<f64>>,
         run: GemvBatchRun<f64>,
     },
+    /// A chained job: every link executed, intermediates resident on the
+    /// cluster, only the final output pending its copy back.
+    Chain {
+        req: ChainRequest,
+        out: Vec<f64>,
+        run: ChainRun<f64>,
+    },
 }
 
 /// One coalesced batch between its execute and its finish: the
@@ -228,6 +242,9 @@ fn run(
         let Some(job) = next else {
             let infl = inflight.take().expect("try_next only used with inflight");
             finish_batch(&mut blas, spec.id, &counters, &router, infl, &mut metrics_prev);
+            // pipeline drained, nothing staged: every operand-cache pin
+            // must be back — a leak here strands unevictable DRAM
+            debug_assert_pins_drained(&blas);
             continue;
         };
 
@@ -301,6 +318,20 @@ fn run(
                     &mut metrics_prev,
                 );
             }
+            JobPayload::Chain(ref req) => {
+                let req = req.clone();
+                serve_chain(
+                    &mut blas,
+                    spec.id,
+                    &counters,
+                    &router,
+                    job,
+                    req,
+                    depth,
+                    &mut inflight,
+                    &mut metrics_prev,
+                );
+            }
             JobPayload::Gemm(req) => {
                 // Cache-aware dispatch: B predicted resident on THIS
                 // cluster (per the affinity directory) drops the map-in
@@ -358,6 +389,20 @@ fn run(
     if let Some(infl) = inflight.take() {
         finish_batch(&mut blas, spec.id, &counters, &router, infl, &mut metrics_prev);
     }
+    debug_assert_pins_drained(&blas);
+}
+
+/// Between batches — nothing staged, nothing in flight — every
+/// operand-cache pin must have been released.  A cancelled or failed
+/// chain that stranded a pinned intermediate would hold device DRAM
+/// forever (pinned entries are never evicted), so the worker asserts the
+/// invariant at its quiesce points.
+fn debug_assert_pins_drained(blas: &HeroBlas) {
+    debug_assert_eq!(
+        blas.engine.opcache.total_pins(),
+        0,
+        "operand-cache pins stranded after the pipeline drained"
+    );
 }
 
 fn boot_session(spec: &ClusterSpec, artifacts: &PathBuf) -> Result<HeroBlas> {
@@ -549,6 +594,19 @@ fn serve_gemm(
     drop(inputs);
     let stage_acct = delta(before, snap(blas));
 
+    // ---- cancel-after-stage: every member's submitter stopped waiting
+    // while the batch staged — release the operand-cache pins and
+    // map(alloc:) outputs instead of launching for dropped receivers ----
+    if batch.iter().all(|j| j.cancel.is_cancelled()) {
+        counters.cancelled.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        blas.gemm_batch_abandon(staged_run);
+        sync_directory(blas, router, cluster);
+        if inflight.is_none() {
+            debug_assert_pins_drained(blas);
+        }
+        return;
+    }
+
     // ---- affinity bookkeeping: tracked B operands now resident here ----
     if router.affinity_enabled() {
         let b_keys = blas.gemm_staged_b_keys(&staged_run);
@@ -683,6 +741,17 @@ fn serve_gemv(
     drop(data); // staged: the batch state owns the padded copies now
     let stage_acct = delta(before, snap(blas));
 
+    // ---- cancel-after-stage (see serve_gemm) ----
+    if batch.iter().all(|j| j.cancel.is_cancelled()) {
+        counters.cancelled.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        blas.gemv_batch_abandon(staged_run);
+        sync_directory(blas, router, cluster);
+        if inflight.is_none() {
+            debug_assert_pins_drained(blas);
+        }
+        return;
+    }
+
     // ---- overlap credit (model-accounted), then drain the previous batch ----
     let mut hidden = 0u64;
     let mut pipelined = false;
@@ -725,6 +794,230 @@ fn serve_gemv(
     } else {
         finish_batch(blas, cluster, counters, router, infl, metrics_prev);
     }
+}
+
+/// Serve one chain job.  The chained device path stages the whole
+/// dependent sequence as ONE submission (fork once, intermediates
+/// device-resident) and rides the software pipeline exactly like a gemm
+/// batch; `chained = false` or a host decision runs the same links as
+/// separate per-op calls through the ordinary dispatch — the oracle the
+/// chained checksums must match bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+fn serve_chain(
+    blas: &mut HeroBlas,
+    cluster: u32,
+    counters: &SchedCounters,
+    router: &PlacementRouter,
+    job: Job,
+    req: ChainRequest,
+    depth: usize,
+    inflight: &mut Option<Inflight>,
+    metrics_prev: &mut Metrics,
+) {
+    let t0 = Instant::now();
+    blas.policy.mode = req.mode;
+    let m = req.m;
+    let dims = req.dims.clone();
+    let links = req.links();
+    if links == 0 || dims.iter().any(|&d| d == 0) {
+        reply_error(counters, cluster, &[job], "chain: empty or zero-width spec");
+        return;
+    }
+    let n_last = dims[links];
+    let batch = vec![job];
+    let queue_ms = queue_waits(&batch);
+
+    // ---- synthesize the activation and every link's weights ----
+    let mut rng = Rng::new(req.seed);
+    let x = rng.normal_vec(m * dims[0]);
+    let weights: Vec<Vec<f64>> = dims
+        .windows(2)
+        .zip(req.b_seeds.iter())
+        .map(|(w, bs)| match bs {
+            Some(bs) => Rng::new(*bs).normal_vec(w[0] * w[1]),
+            None => rng.normal_vec(w[0] * w[1]),
+        })
+        .collect();
+
+    // ---- per-op oracle / host path: no chain staging, no pipeline ----
+    let target = blas.policy.chain(m, &dims);
+    if !req.chained || target == ExecTarget::Host {
+        if let Some(infl) = inflight.take() {
+            finish_batch(blas, cluster, counters, router, infl, metrics_prev);
+        }
+        serve_chain_unchained(
+            blas, cluster, counters, router, batch, &req, x, &weights, t0,
+            metrics_prev,
+        );
+        return;
+    }
+
+    // ---- stage: fork once, input + weights + every output resident ----
+    if inflight.is_none() {
+        blas.reset_run();
+    }
+    let specs: Vec<ChainLink<'_, f64>> = dims
+        .windows(2)
+        .zip(weights.iter())
+        .map(|(w, b)| ChainLink {
+            b: b.as_slice(),
+            dims: (w[0], w[1]),
+            bias: None,
+            relu: false,
+        })
+        .collect();
+    let mut before = snap(blas);
+    let mut stage = blas.chain_stage(m, &x, &specs);
+    if stage.is_err() && inflight.is_some() {
+        // the in-flight batch's operands may be what keeps the chain
+        // from fitting: drain the pipeline and retry once serially
+        let infl = inflight.take().expect("checked above");
+        finish_batch(blas, cluster, counters, router, infl, metrics_prev);
+        before = snap(blas);
+        stage = blas.chain_stage(m, &x, &specs);
+    }
+    let staged_run = match stage {
+        Ok(s) => s,
+        Err(e) => {
+            sync_directory(blas, router, cluster);
+            reply_error(counters, cluster, &batch, &e.to_string());
+            return;
+        }
+    };
+    let stage_acct = delta(before, snap(blas));
+
+    // ---- cancel-after-stage: the submitter stopped waiting while the
+    // chain staged — release the operand-cache pins and map(alloc:)
+    // outputs instead of launching for a dropped receiver ----
+    if batch[0].cancel.is_cancelled() {
+        blas.chain_abandon(staged_run);
+        counters.cancelled.fetch_add(1, Ordering::Relaxed);
+        sync_directory(blas, router, cluster);
+        if inflight.is_none() {
+            debug_assert_pins_drained(blas);
+        }
+        return;
+    }
+
+    // ---- affinity bookkeeping: tracked shared weights resident here ----
+    if router.affinity_enabled() {
+        let b_keys = blas.chain_staged_b_keys(&staged_run);
+        for ((w, bs), ck) in dims.windows(2).zip(req.b_seeds.iter()).zip(b_keys) {
+            let (Some(bs), Some(ck)) = (bs, ck) else { continue };
+            let key = chain_b_key(w[0], w[1], *bs);
+            blas.engine.opcache.set_tag(&ck, key);
+            router.note_resident(key, cluster);
+        }
+    }
+
+    // ---- overlap credit, then drain the previous batch ----
+    let mut hidden = 0u64;
+    let mut pipelined = false;
+    if let Some(infl) = inflight.take() {
+        hidden = overlap_credit(blas, stage_acct.data_copy, infl.acct.compute);
+        pipelined = true;
+        finish_batch(blas, cluster, counters, router, infl, metrics_prev);
+        blas.reset_run();
+    }
+
+    // ---- execute: one doorbell runs every link ----
+    let before = snap(blas);
+    let run = match blas.chain_execute(staged_run) {
+        Ok(r) => r,
+        Err(e) => {
+            sync_directory(blas, router, cluster);
+            reply_error(counters, cluster, &batch, &e.to_string());
+            return;
+        }
+    };
+    if pipelined {
+        counters.pipelined_batches.fetch_add(1, Ordering::Relaxed);
+        counters
+            .overlap_hidden_us
+            .fetch_add(virt_us(blas, hidden), Ordering::Relaxed);
+    }
+    let mut acct = stage_acct;
+    acct.add(delta(before, snap(blas)));
+    acct.hidden = hidden;
+
+    let infl = Inflight {
+        jobs: batch,
+        run: InflightRun::Chain { req, out: vec![0.0; m * n_last], run },
+        acct,
+        queue_ms,
+        work_us: t0.elapsed().as_micros() as u64,
+    };
+    if depth >= 2 {
+        *inflight = Some(infl);
+    } else {
+        finish_batch(blas, cluster, counters, router, infl, metrics_prev);
+    }
+}
+
+/// The per-op chain oracle: run every link as a separate `gemm` through
+/// the ordinary dispatch (each link pays its own fork-join and its
+/// intermediate round-trips through the host) — identical numerics to
+/// the chained path, none of the elision.  Also serves host-decided
+/// chains: below the chain crossover each link simply dispatches itself.
+#[allow(clippy::too_many_arguments)]
+fn serve_chain_unchained(
+    blas: &mut HeroBlas,
+    cluster: u32,
+    counters: &SchedCounters,
+    router: &PlacementRouter,
+    batch: Vec<Job>,
+    req: &ChainRequest,
+    x: Vec<f64>,
+    weights: &[Vec<f64>],
+    t0: Instant,
+    metrics_prev: &mut Metrics,
+) {
+    let m = req.m;
+    let queue_ms = queue_waits(&batch);
+    blas.reset_run();
+    let before = snap(blas);
+    let mut h = x;
+    for (w, b) in req.dims.windows(2).zip(weights) {
+        let (k, n) = (w[0], w[1]);
+        let mut c = vec![0.0; m * n];
+        let r = blas.gemm(
+            crate::blas::Transpose::No,
+            crate::blas::Transpose::No,
+            1.0,
+            &h,
+            (m, k),
+            b,
+            (k, n),
+            0.0,
+            &mut c,
+            (m, n),
+        );
+        match r {
+            Ok(()) => h = c,
+            Err(e) => {
+                sync_directory(blas, router, cluster);
+                reply_error(counters, cluster, &batch, &e.to_string());
+                return;
+            }
+        }
+    }
+    sync_directory(blas, router, cluster);
+    let checksum = h.iter().sum::<f64>();
+    let acct = delta(before, snap(blas));
+    send_outcomes(
+        blas,
+        cluster,
+        counters,
+        &batch,
+        "chain",
+        (m, *req.dims.last().expect("non-empty dims")),
+        req.mode,
+        &[checksum],
+        acct,
+        &queue_ms,
+        t0.elapsed().as_micros() as u64,
+        metrics_prev,
+    );
 }
 
 /// Error replies for every member of a failed batch, with the failure
@@ -928,6 +1221,14 @@ fn finish_batch(
             let checksums: Vec<f64> = ys.iter().map(|y| y.iter().sum()).collect();
             (finish, checksums, "gemv", (req.m, req.n), req.mode)
         }
+        InflightRun::Chain { req, mut out, run } => {
+            // only the final link's output crosses back to the host; the
+            // finish releases every intermediate's residency pin
+            let finish = blas.chain_finish(run, &mut out);
+            let checksum = out.iter().sum::<f64>();
+            let n_last = *req.dims.last().expect("non-empty dims");
+            (finish, vec![checksum], "chain", (req.m, n_last), req.mode)
+        }
     };
     let mut acct = batch_acct;
     acct.add(delta(before, snap(blas)));
@@ -997,6 +1298,9 @@ fn send_outcomes(
     }
     if b > 1 {
         counters.batched_jobs.fetch_add(b as u64, Ordering::Relaxed);
+    }
+    if op == "chain" {
+        counters.chains.fetch_add(b as u64, Ordering::Relaxed);
     }
     counters.note_service_us((service_us / b as u64).max(1));
     let metrics_now = blas.metrics();

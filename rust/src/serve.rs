@@ -17,6 +17,11 @@
 //!                   or:  {"op": "axpy", "n": 4096, "alpha": 1.5,
 //!                        "mode": "device_only", "seed": 7}
 //!                   or:  {"op": "dot", "n": 4096, "seed": 7}
+//!                   or:  {"op": "chain", "m": 64, "dims": [256, 128, 64],
+//!                        "b_seeds": [42, null], "seed": 7,
+//!                        "chained": true}  (a dependent GEMM sequence run
+//!                        as ONE submission with device-resident
+//!                        intermediates; "chained": false = per-op oracle)
 //! Response (one line):  {"ok": true, "op": "gemm", "m": 128, "n": 128,
 //!                        "mode": "device_only",
 //!                        "total_ms": ..., "data_copy_ms": ...,
@@ -51,8 +56,8 @@ use std::time::Duration;
 use crate::config::{DispatchMode, PlatformConfig};
 use crate::error::{Error, Result};
 use crate::sched::{
-    GemmOutcome, GemmRequest, GemvRequest, JobPayload, Level1Op, Level1Request,
-    Priority, Scheduler, SubmitError,
+    ChainRequest, GemmOutcome, GemmRequest, GemvRequest, JobPayload, Level1Op,
+    Level1Request, Priority, Scheduler, SubmitError,
 };
 use crate::util::json_lite::Json;
 
@@ -168,6 +173,70 @@ fn parse_level1(
     Ok((Level1Request { op, n, mode, seed, alpha }, priority))
 }
 
+/// Parse a chain request line: `{"op": "chain", "m": 64, "dims": [256,
+/// 128, 64], "seed": 7, "b_seeds": [42, null], "chained": true}` — a
+/// dependent GEMM sequence executed as ONE submission whose
+/// intermediates stay device-resident (`chained: false` runs the same
+/// links as separate per-op offloads, the regression/bench baseline).
+/// `b_seeds[i]`, when set, draws link i's weights from a shared stream
+/// so chains (and plain gemms) carrying the same seed reuse one
+/// device-resident matrix.
+fn parse_chain(req: &Json) -> std::result::Result<(ChainRequest, Priority), String> {
+    let m = req.get("m").and_then(|v| v.as_u64()).unwrap_or(64) as usize;
+    if m == 0 || m > 2048 {
+        return Err("m must be in 1..=2048".into());
+    }
+    let dims: Vec<usize> = match req.get("dims").and_then(|v| v.as_arr()) {
+        Some(arr) => {
+            let mut out = Vec::with_capacity(arr.len());
+            for v in arr {
+                match v.as_u64() {
+                    Some(d) if (1..=2048).contains(&d) => out.push(d as usize),
+                    _ => return Err("dims entries must be in 1..=2048".into()),
+                }
+            }
+            out
+        }
+        None => return Err("chain needs a dims array".into()),
+    };
+    if dims.len() < 2 {
+        return Err("chain needs at least 2 dims (1 link)".into());
+    }
+    let links = dims.len() - 1;
+    let (mode, priority) = parse_mode_priority(req)?;
+    if mode == DispatchMode::DeviceZeroCopy {
+        return Err(
+            "chain does not support zero_copy (device-resident intermediates \
+             are a copy-mode technique)"
+                .into(),
+        );
+    }
+    let seed = req
+        .get("seed")
+        .and_then(|v| v.as_u64())
+        .unwrap_or(0xC4A1 ^ ((m as u64) << 16) ^ links as u64);
+    let b_seeds = match req.get("b_seeds").and_then(|v| v.as_arr()) {
+        Some(arr) => {
+            if arr.len() != links {
+                return Err(format!(
+                    "b_seeds has {} entries for {links} links",
+                    arr.len()
+                ));
+            }
+            arr.iter().map(|v| v.as_u64()).collect()
+        }
+        None => vec![None; links],
+    };
+    let chained = req
+        .get("chained")
+        .and_then(|v| match v {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        })
+        .unwrap_or(true);
+    Ok((ChainRequest { m, dims, mode, seed, b_seeds, chained }, priority))
+}
+
 /// Parse a gemv request line into a job payload + priority.
 fn parse_gemv(req: &Json) -> std::result::Result<(GemvRequest, Priority), String> {
     let m = req.get("m").and_then(|v| v.as_u64()).unwrap_or(128) as usize;
@@ -252,6 +321,8 @@ fn handle_line(sched: &Scheduler, line: &str) -> (String, bool) {
                 ("big_shape_routed", Json::Num(m.big_shape_routed as f64)),
                 ("prefetched", Json::Num(m.prefetched as f64)),
                 ("rehomed", Json::Num(m.rehomed as f64)),
+                ("chains", Json::Num(m.chains as f64)),
+                ("chain_bytes_elided", Json::Num(m.chain_bytes_elided as f64)),
                 ("crossover_estimate", crossover),
                 ("queue_depth_peak", Json::Num(m.queue_depth_peak as f64)),
                 ("pool", Json::Num(sched.pool_size() as f64)),
@@ -272,6 +343,19 @@ fn handle_line(sched: &Scheduler, line: &str) -> (String, bool) {
                 Err(msg) => return (err_line(&msg), false),
             };
             submit_and_wait(sched, priority, JobPayload::Gemv(gemv))
+        }
+        "chain" => {
+            let (chain, priority) = match parse_chain(&req) {
+                Ok(p) => p,
+                Err(msg) => return (err_line(&msg), false),
+            };
+            // capacity preflight: a chain whose resident footprint no
+            // cluster slice can hold fails HERE with a clear error
+            // instead of wedging in staging retries on a worker
+            if let Err(msg) = sched.validate_chain(&chain) {
+                return (err_line(&msg), false);
+            }
+            submit_and_wait(sched, priority, JobPayload::Chain(chain))
         }
         "axpy" | "dot" => {
             let l1op = if op == "axpy" { Level1Op::Axpy } else { Level1Op::Dot };
@@ -506,6 +590,51 @@ mod tests {
         let (g, _) = parse_gemm(&req).unwrap();
         assert_eq!(g.b_seed, Some(42));
         assert_eq!(g.seed, 1);
+    }
+
+    #[test]
+    fn parse_chain_specs_and_limits() {
+        let req = Json::parse(
+            r#"{"op": "chain", "m": 64, "dims": [256, 128, 64], "seed": 7,
+                "b_seeds": [42, null], "mode": "device_only"}"#,
+        )
+        .unwrap();
+        let (c, p) = parse_chain(&req).unwrap();
+        assert_eq!((c.m, c.seed), (64, 7));
+        assert_eq!(c.dims, vec![256, 128, 64]);
+        assert_eq!(c.b_seeds, vec![Some(42), None]);
+        assert!(c.chained, "chained defaults on");
+        assert_eq!(c.links(), 2);
+        assert_eq!(c.mode, DispatchMode::DeviceOnly);
+        assert_eq!(p, Priority::Normal);
+
+        // the unchained oracle knob
+        let req = Json::parse(
+            r#"{"op": "chain", "dims": [64, 64], "chained": false}"#,
+        )
+        .unwrap();
+        let (c, _) = parse_chain(&req).unwrap();
+        assert!(!c.chained);
+        assert_eq!(c.b_seeds, vec![None], "absent b_seeds default to None");
+        // stable default seed
+        let (c2, _) = parse_chain(&req).unwrap();
+        assert_eq!(c.seed, c2.seed);
+
+        // malformed specs fail with clear errors, not wedged submits
+        let bad = |s: &str| parse_chain(&Json::parse(s).unwrap()).unwrap_err();
+        assert!(bad(r#"{"op": "chain"}"#).contains("dims"));
+        assert!(bad(r#"{"op": "chain", "dims": [64]}"#).contains("at least 2"));
+        assert!(bad(r#"{"op": "chain", "dims": [64, 0]}"#).contains("1..=2048"));
+        assert!(bad(r#"{"op": "chain", "dims": [64, 9999]}"#).contains("1..=2048"));
+        assert!(bad(r#"{"op": "chain", "m": 0, "dims": [64, 64]}"#).contains("m must"));
+        assert!(
+            bad(r#"{"op": "chain", "dims": [64, 64], "b_seeds": [1, 2]}"#)
+                .contains("b_seeds")
+        );
+        assert!(
+            bad(r#"{"op": "chain", "dims": [64, 64], "mode": "zero_copy"}"#)
+                .contains("zero_copy")
+        );
     }
 
     #[test]

@@ -161,6 +161,188 @@ fn sgemm_f32_path() {
     hero_blas_shutdown();
 }
 
+/// Column-major dgemm against the row-major path on the SAME problem —
+/// the swap-operands-and-flip identity must produce the identical
+/// product, including transposes, padded leading dims and beta.  (The
+/// pre-fix shim refused col-major with an eprintln and silently left C
+/// untouched — any consumer computing through it got garbage.)
+#[test]
+fn dgemm_col_major_matches_row_major_oracle() {
+    init_device_mode();
+    let mut rng = Rng::new(11);
+    let (m, n, k) = (33usize, 21, 17);
+
+    for (ta, tb) in [
+        (CBLAS_NO_TRANS, CBLAS_NO_TRANS),
+        (CBLAS_TRANS, CBLAS_NO_TRANS),
+        (CBLAS_NO_TRANS, CBLAS_TRANS),
+        (CBLAS_TRANS, CBLAS_TRANS),
+    ] {
+        // row-major reference on dense row-major operands
+        let a_dims = if ta == CBLAS_TRANS { (k, m) } else { (m, k) };
+        let b_dims = if tb == CBLAS_TRANS { (n, k) } else { (k, n) };
+        let a_rm: Vec<f64> = rng.normal_vec(a_dims.0 * a_dims.1);
+        let b_rm: Vec<f64> = rng.normal_vec(b_dims.0 * b_dims.1);
+        let c0: Vec<f64> = rng.normal_vec(m * n);
+        let mut c_rm = c0.clone();
+        unsafe {
+            cblas_dgemm(
+                CBLAS_ROW_MAJOR, ta, tb, m as c_int, n as c_int, k as c_int,
+                1.5, a_rm.as_ptr(), a_dims.1 as c_int, b_rm.as_ptr(),
+                b_dims.1 as c_int, -0.5, c_rm.as_mut_ptr(), n as c_int,
+            );
+        }
+
+        // the same problem expressed column-major: every operand is the
+        // row-major buffer transposed into col-major storage (same
+        // mathematical matrix), ld = stored rows
+        let to_cm = |x: &[f64], rows: usize, cols: usize| -> Vec<f64> {
+            let mut out = vec![0.0; rows * cols];
+            for r in 0..rows {
+                for c in 0..cols {
+                    out[c * rows + r] = x[r * cols + c];
+                }
+            }
+            out
+        };
+        let a_cm = to_cm(&a_rm, a_dims.0, a_dims.1);
+        let b_cm = to_cm(&b_rm, b_dims.0, b_dims.1);
+        let mut c_cm = to_cm(&c0, m, n);
+        unsafe {
+            cblas_dgemm(
+                CBLAS_COL_MAJOR, ta, tb, m as c_int, n as c_int, k as c_int,
+                1.5, a_cm.as_ptr(), a_dims.0 as c_int, b_cm.as_ptr(),
+                b_dims.0 as c_int, -0.5, c_cm.as_mut_ptr(), m as c_int,
+            );
+        }
+        // compare element-wise across the layouts
+        for i in 0..m {
+            for j in 0..n {
+                let (got, want) = (c_cm[j * m + i], c_rm[i * n + j]);
+                assert!(
+                    (got - want).abs() < 1e-9,
+                    "({ta},{tb}) C({i},{j}): col-major {got} vs row-major {want}"
+                );
+            }
+        }
+    }
+
+    // an unsupported layout value errors out WITHOUT touching C
+    let a = [1.0f64, 2.0, 3.0, 4.0];
+    let mut c = [9.0f64, 9.0, 9.0, 9.0];
+    unsafe {
+        cblas_dgemm(
+            999, CBLAS_NO_TRANS, CBLAS_NO_TRANS, 2, 2, 2, 1.0, a.as_ptr(), 2,
+            a.as_ptr(), 2, 0.0, c.as_mut_ptr(), 2,
+        );
+    }
+    assert_eq!(c, [9.0, 9.0, 9.0, 9.0], "bad layout must leave C untouched");
+    hero_blas_shutdown();
+}
+
+/// Column-major dgemv (both transposes) against a dense reference.
+#[test]
+fn dgemv_col_major_matches_reference() {
+    init_device_mode();
+    let mut rng = Rng::new(12);
+    let (m, n) = (9usize, 13);
+    let a_rm: Vec<f64> = rng.normal_vec(m * n);
+    let a_cm: Vec<f64> = {
+        let mut out = vec![0.0; m * n];
+        for r in 0..m {
+            for c in 0..n {
+                out[c * m + r] = a_rm[r * n + c];
+            }
+        }
+        out
+    };
+    // no-trans: y(m) = A x(n)
+    let x: Vec<f64> = rng.normal_vec(n);
+    let mut y = vec![0.0f64; m];
+    unsafe {
+        cblas_dgemv(
+            CBLAS_COL_MAJOR, CBLAS_NO_TRANS, m as c_int, n as c_int, 1.0,
+            a_cm.as_ptr(), m as c_int, x.as_ptr(), 1, 0.0, y.as_mut_ptr(), 1,
+        );
+    }
+    for i in 0..m {
+        let want: f64 = (0..n).map(|j| a_rm[i * n + j] * x[j]).sum();
+        assert!((y[i] - want).abs() < 1e-9, "col-major gemv row {i}");
+    }
+    // trans: y(n) = A^T x(m)
+    let xt: Vec<f64> = rng.normal_vec(m);
+    let mut yt = vec![0.0f64; n];
+    unsafe {
+        cblas_dgemv(
+            CBLAS_COL_MAJOR, CBLAS_TRANS, m as c_int, n as c_int, 1.0,
+            a_cm.as_ptr(), m as c_int, xt.as_ptr(), 1, 0.0, yt.as_mut_ptr(), 1,
+        );
+    }
+    for j in 0..n {
+        let want: f64 = (0..m).map(|i| a_rm[i * n + j] * xt[i]).sum();
+        assert!((yt[j] - want).abs() < 1e-9, "col-major gemv^T col {j}");
+    }
+    hero_blas_shutdown();
+}
+
+/// Negative increments walk the vector backwards from the end (the
+/// reference CBLAS convention).  The pre-fix gather indexed *before*
+/// the buffer — out-of-bounds reads producing garbage.
+#[test]
+fn level1_negative_strides_match_reference_semantics() {
+    init_device_mode();
+    let n = 6usize;
+    // x stored strided-by-2; logical x with incx = -2 reads it reversed
+    let xbuf: Vec<f64> = (0..2 * n).map(|i| i as f64 + 1.0).collect();
+    let x_rev: Vec<f64> = (0..n).map(|i| xbuf[2 * (n - 1 - i)]).collect();
+    let y0: Vec<f64> = (0..n).map(|i| 0.25 * i as f64).collect();
+
+    // daxpy with incx = -2, incy = 1: y += a * reversed(x)
+    let mut y = y0.clone();
+    unsafe { cblas_daxpy(n as c_int, 2.0, xbuf.as_ptr(), -2, y.as_mut_ptr(), 1) };
+    for i in 0..n {
+        let want = y0[i] + 2.0 * x_rev[i];
+        assert!((y[i] - want).abs() < 1e-12, "daxpy[{i}] = {} want {want}", y[i]);
+    }
+
+    // both increments negative: pairs realign, dot equals the plain dot
+    let d_fwd = unsafe { cblas_ddot(n as c_int, xbuf.as_ptr(), 2, y0.as_ptr(), 1) };
+    let d_rev = unsafe {
+        cblas_ddot(n as c_int, xbuf.as_ptr(), -2, y0.as_ptr(), -1)
+    };
+    assert!((d_fwd - d_rev).abs() < 1e-12, "{d_fwd} vs {d_rev}");
+
+    // mixed signs: y traversed forward pairs with x traversed backward
+    let d_mix = unsafe { cblas_ddot(n as c_int, xbuf.as_ptr(), -2, y0.as_ptr(), 1) };
+    let want: f64 = x_rev.iter().zip(&y0).map(|(a, b)| a * b).sum();
+    assert!((d_mix - want).abs() < 1e-12);
+
+    // norms/sums are traversal-order independent but must not fault
+    let nrm = unsafe { cblas_dnrm2(n as c_int, xbuf.as_ptr(), -2) };
+    let want_nrm = x_rev.iter().map(|v| v * v).sum::<f64>().sqrt();
+    assert!((nrm - want_nrm).abs() < 1e-12);
+    let asum = unsafe { cblas_dasum(n as c_int, xbuf.as_ptr(), -2) };
+    assert!((asum - x_rev.iter().map(|v| v.abs()).sum::<f64>()).abs() < 1e-12);
+
+    // idamax reports the index in backwards-traversal order: the largest
+    // |value| sits at the START of the stored buffer's reversal
+    let z = [1.0f64, -9.0, 3.0, 2.0];
+    let i_fwd = unsafe { cblas_idamax(4, z.as_ptr(), 1) };
+    assert_eq!(i_fwd, 1);
+    let i_rev = unsafe { cblas_idamax(4, z.as_ptr(), -1) };
+    assert_eq!(i_rev, 2, "traversal order [2.0, 3.0, -9.0, 1.0] peaks at 2");
+
+    // n <= 0 is a clean no-op / zero, never a panic
+    unsafe {
+        cblas_daxpy(-3, 1.0, xbuf.as_ptr(), 1, y.as_mut_ptr(), 1);
+        assert_eq!(cblas_ddot(0, xbuf.as_ptr(), 1, y0.as_ptr(), 1), 0.0);
+        assert_eq!(cblas_dnrm2(-1, xbuf.as_ptr(), 1), 0.0);
+        assert_eq!(cblas_dasum(0, xbuf.as_ptr(), 1), 0.0);
+        assert_eq!(cblas_idamax(-2, xbuf.as_ptr(), 1), 0);
+    }
+    hero_blas_shutdown();
+}
+
 #[test]
 fn calls_without_init_fail_soft() {
     hero_blas_shutdown(); // ensure no session on this thread

@@ -1,0 +1,271 @@
+//! Chained multi-op execution end-to-end: device-resident intermediates
+//! must change *data movement*, never numerics.
+//!
+//! Pins the ISSUE-5 acceptance criteria: chained-vs-unchained checksum
+//! identity (bit-for-bit), the `chain_bytes_elided` counter, cancel-
+//! mid-chain pin release, whole-chain placement/steal behavior, and the
+//! clear capacity error for chains no slice can stage.
+
+mod common;
+
+use common::artifacts_dir;
+use hero_blas::blas::{ChainLink, DispatchPolicy, HeroBlas};
+use hero_blas::config::{DispatchMode, PlatformConfig};
+use hero_blas::npy::NdArray;
+use hero_blas::sched::{ChainRequest, JobPayload, Priority, Scheduler};
+use hero_blas::util::rng::Rng;
+
+fn session_with(cfg: PlatformConfig, mode: DispatchMode) -> HeroBlas {
+    HeroBlas::new(cfg, &artifacts_dir(), DispatchPolicy::with_mode(mode))
+        .expect("session construction")
+}
+
+/// Synthesize the MLP-shaped workload: activation from `seed`, weights
+/// from `b_seeds` (own stream) or the continuing request stream —
+/// exactly like the scheduler's worker.
+fn synth(m: usize, dims: &[usize], seed: u64, b_seeds: &[Option<u64>])
+         -> (Vec<f64>, Vec<Vec<f64>>) {
+    let mut rng = Rng::new(seed);
+    let x = rng.normal_vec(m * dims[0]);
+    let weights = dims
+        .windows(2)
+        .zip(b_seeds)
+        .map(|(w, bs)| match bs {
+            Some(bs) => Rng::new(*bs).normal_vec(w[0] * w[1]),
+            None => rng.normal_vec(w[0] * w[1]),
+        })
+        .collect();
+    (x, weights)
+}
+
+#[test]
+fn chained_device_run_is_bit_identical_to_per_op_and_elides_bytes() {
+    let (m, dims) = (64usize, vec![96usize, 64, 96]);
+    let (x, weights) = synth(m, &dims, 7, &[None, None]);
+    let links: Vec<ChainLink<'_, f64>> = dims
+        .windows(2)
+        .zip(weights.iter())
+        .map(|(w, b)| ChainLink { b, dims: (w[0], w[1]), bias: None, relu: false })
+        .collect();
+
+    // unchained oracle: each link its own device offload, intermediates
+    // round-tripping through the host
+    let mut per_op = session_with(PlatformConfig::default(), DispatchMode::DeviceOnly);
+    let mut h = x.clone();
+    for (w, b) in dims.windows(2).zip(&weights) {
+        let (k, n) = (w[0], w[1]);
+        let mut c = vec![0.0; m * n];
+        per_op
+            .gemm(
+                hero_blas::blas::Transpose::No,
+                hero_blas::blas::Transpose::No,
+                1.0,
+                &h,
+                (m, k),
+                b,
+                (k, n),
+                0.0,
+                &mut c,
+                (m, n),
+            )
+            .unwrap();
+        h = c;
+    }
+    let per_op_bytes = per_op.metrics().bytes_to_device;
+
+    // chained run: one submission, intermediates device-resident
+    let mut chained = session_with(PlatformConfig::default(), DispatchMode::DeviceOnly);
+    let mut out = vec![0.0; m * dims[dims.len() - 1]];
+    chained.chain(m, &x, &links, &mut out).unwrap();
+    let cm = chained.metrics();
+
+    assert_eq!(out, h, "chained result must be BIT-identical to per-op");
+    assert!(cm.chain_bytes_elided > 0, "no intermediate bytes elided");
+    // the 64x64 f64 intermediate is elided in both directions
+    assert_eq!(cm.chain_bytes_elided, 2 * (m * 64 * 8) as u64);
+    assert!(
+        cm.bytes_to_device < per_op_bytes,
+        "chained map-in bytes {} not below per-op {}",
+        cm.bytes_to_device,
+        per_op_bytes
+    );
+    assert_eq!(cm.offloads, 1, "a chain is ONE fork-join");
+    // everything released: no pins, no device allocations
+    assert_eq!(chained.engine.opcache.total_pins(), 0);
+    assert_eq!(chained.engine.device.dram.stats().bytes_in_use, 0);
+}
+
+#[test]
+fn chain_epilogues_match_the_host_path() {
+    // relu(x W1 + b1) W2 through the lazy Expr builder, host vs device
+    let mut rng = Rng::new(0xE5);
+    let x = NdArray::<f64>::randn(&mut rng, &[48, 96]);
+    let w1 = NdArray::<f64>::randn(&mut rng, &[96, 64]);
+    let b1 = NdArray::<f64>::randn(&mut rng, &[64]);
+    let w2 = NdArray::<f64>::randn(&mut rng, &[64, 32]);
+
+    let mut host = session_with(PlatformConfig::default(), DispatchMode::HostOnly);
+    let want = x.lazy().matmul(&w1).add(&b1).relu().matmul(&w2).eval(&mut host).unwrap();
+
+    let mut dev = session_with(PlatformConfig::default(), DispatchMode::DeviceOnly);
+    let got = x.lazy().matmul(&w1).add(&b1).relu().matmul(&w2).eval(&mut dev).unwrap();
+
+    assert_eq!(want.shape(), &[48, 32]);
+    assert_eq!(got.shape(), &[48, 32]);
+    let diff = want.max_abs_diff(&got);
+    assert!(diff < 1e-9, "host vs chained-device diverged by {diff}");
+    assert!(dev.metrics().chain_bytes_elided > 0);
+
+    // builder shape errors surface at eval with clear messages
+    let bad = x.lazy().matmul(&w2);
+    assert!(bad.eval(&mut host).is_err(), "mismatched link must fail");
+    let bad = x.lazy().add(&b1);
+    assert!(bad.eval(&mut host).is_err(), "bias before any matmul must fail");
+}
+
+#[test]
+fn cancelled_chain_releases_pins_and_device_memory() {
+    // cache ON so staged weights pin operand-cache entries — the leak
+    // the abandon path must not allow
+    let mut cfg = PlatformConfig::default();
+    cfg.sched.cache.cache_frac = 0.4;
+    cfg.sched.cache.cache_max_entries = 32;
+    let mut blas = session_with(cfg, DispatchMode::DeviceOnly);
+
+    let (m, dims) = (64usize, vec![64usize, 64, 64]);
+    let (x, weights) = synth(m, &dims, 3, &[Some(41), Some(42)]);
+    let links: Vec<ChainLink<'_, f64>> = dims
+        .windows(2)
+        .zip(weights.iter())
+        .map(|(w, b)| ChainLink { b, dims: (w[0], w[1]), bias: None, relu: false })
+        .collect();
+
+    let staged = blas.chain_stage(m, &x, &links).unwrap();
+    assert!(
+        blas.engine.opcache.total_pins() > 0,
+        "staged chain must pin its cached operands"
+    );
+    let in_use = blas.engine.device.dram.stats().bytes_in_use;
+    assert!(in_use > 0, "staged chain must occupy device DRAM");
+
+    // REPLY_TIMEOUT fired: the submitter is gone — abandon must release
+    // every pin and every map(alloc:) output
+    blas.chain_abandon(staged);
+    assert_eq!(blas.engine.opcache.total_pins(), 0, "stranded cache pins");
+    // unpinned cache entries may stay resident (that is the point of the
+    // cache); everything NOT cache-owned must be freed
+    let resident = blas.engine.opcache.bytes_resident();
+    assert_eq!(
+        blas.engine.device.dram.stats().bytes_in_use,
+        resident,
+        "abandoned chain stranded non-cache device allocations"
+    );
+
+    // the session stays fully usable: the same chain runs to completion
+    let mut out = vec![0.0; m * 64];
+    blas.chain(m, &x, &links, &mut out).unwrap();
+    assert_eq!(blas.engine.opcache.total_pins(), 0);
+}
+
+#[test]
+fn scheduler_serves_chains_whole_with_identical_checksums() {
+    // pool of 2 with stealing on: chains route/steal as ONE unit, and
+    // chained vs unchained submissions agree bit-for-bit
+    let mut cfg = PlatformConfig::default();
+    cfg.sched.pool_clusters = 2;
+    cfg.sched.queue_capacity = 32;
+    cfg.sched.batch_window_ms = 0;
+    cfg.sched.cache.cache_frac = 0.4;
+    let sched = Scheduler::new(&cfg, &artifacts_dir()).unwrap();
+
+    let request = |seed: u64, chained: bool| ChainRequest {
+        m: 48,
+        dims: vec![96, 64, 32],
+        mode: DispatchMode::DeviceOnly,
+        seed,
+        b_seeds: vec![Some(7), Some(8)],
+        chained,
+    };
+
+    let mut chained_sums = Vec::new();
+    let mut unchained_sums = Vec::new();
+    for chained in [true, false] {
+        let subs: Vec<_> = (0..6)
+            .map(|s| {
+                sched
+                    .submit(Priority::Normal, JobPayload::Chain(request(s, chained)))
+                    .expect("submit chain")
+            })
+            .collect();
+        for sub in subs {
+            let outcome = sub
+                .result
+                .recv_timeout(std::time::Duration::from_secs(300))
+                .expect("chain reply")
+                .expect("chain outcome");
+            assert_eq!(outcome.op, "chain");
+            assert_eq!((outcome.m, outcome.n), (48, 32));
+            assert!(outcome.cluster < 2, "chain served by one pool cluster");
+            if chained {
+                chained_sums.push(outcome.checksum);
+            } else {
+                unchained_sums.push(outcome.checksum);
+            }
+        }
+    }
+    assert_eq!(
+        chained_sums, unchained_sums,
+        "chained checksums must match per-op execution bit-for-bit"
+    );
+
+    let m = sched.metrics();
+    assert_eq!(m.chains, 12, "every chain submission counted");
+    assert!(m.chain_bytes_elided > 0, "chained runs must elide bytes");
+    assert_eq!(m.failed, 0);
+    sched.shutdown();
+}
+
+#[test]
+fn oversized_chains_fail_fast_with_a_clear_error() {
+    let mut cfg = PlatformConfig::default();
+    cfg.sched.pool_clusters = 4; // small slices: ~16 MiB each
+    cfg.sched.queue_capacity = 8;
+    let sched = Scheduler::new(&cfg, &artifacts_dir()).unwrap();
+
+    // 6 links of 640x640 f64 stage ~26 MiB resident at once — more than
+    // any 16 MiB slice can hold
+    let big = ChainRequest {
+        m: 640,
+        dims: vec![640; 7],
+        mode: DispatchMode::DeviceOnly,
+        seed: 1,
+        b_seeds: vec![None; 6],
+        chained: true,
+    };
+    let err = sched.validate_chain(&big).unwrap_err();
+    assert!(err.contains("slice"), "unhelpful capacity error: {err}");
+
+    // too many links for [sched.chain] max_links
+    let long = ChainRequest {
+        m: 16,
+        dims: vec![16; 10],
+        mode: DispatchMode::DeviceOnly,
+        seed: 1,
+        b_seeds: vec![None; 9],
+        chained: true,
+    };
+    let err = sched.validate_chain(&long).unwrap_err();
+    assert!(err.contains("max_links"), "unhelpful link-bound error: {err}");
+
+    // a fitting chain passes the same gate
+    let ok = ChainRequest {
+        m: 64,
+        dims: vec![64, 64],
+        mode: DispatchMode::DeviceOnly,
+        seed: 1,
+        b_seeds: vec![None],
+        chained: true,
+    };
+    assert!(sched.validate_chain(&ok).is_ok());
+    sched.shutdown();
+}
