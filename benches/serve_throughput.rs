@@ -67,6 +67,18 @@ struct Counters {
     /// Live calibrated crossover estimates scraped from the metrics op.
     crossover_gemm_n: u64,
     crossover_gemm_warm_n: u64,
+    /// End-to-end latency percentiles (all op classes merged) from the
+    /// scheduler's log-scale histograms.
+    p50_us: u64,
+    p99_us: u64,
+    p999_us: u64,
+    /// Aggregate span breakdown (total microseconds per stage).
+    span_queue_us: u64,
+    span_route_us: u64,
+    span_linger_us: u64,
+    span_stage_us: u64,
+    span_execute_us: u64,
+    span_finish_us: u64,
 }
 
 struct Point {
@@ -98,6 +110,10 @@ impl Point {
              \"overlap_hidden_us\": {}, \"stolen\": {}, \
              \"affine_routed\": {}, \
              \"crossover_estimate\": {{\"gemm_n\": {}, \"gemm_warm_n\": {}}}, \
+             \"p50_us\": {}, \"p99_us\": {}, \"p999_us\": {}, \
+             \"spans\": {{\"queue_us\": {}, \"route_us\": {}, \
+             \"linger_us\": {}, \"stage_us\": {}, \"execute_us\": {}, \
+             \"finish_us\": {}}}, \
              \"speedup_vs_serial\": {:.2}}}",
             k.pool,
             k.batching,
@@ -121,6 +137,15 @@ impl Point {
             c.affine_routed,
             c.crossover_gemm_n,
             c.crossover_gemm_warm_n,
+            c.p50_us,
+            c.p99_us,
+            c.p999_us,
+            c.span_queue_us,
+            c.span_route_us,
+            c.span_linger_us,
+            c.span_stage_us,
+            c.span_execute_us,
+            c.span_finish_us,
             speedup_vs_serial,
         )
     }
@@ -222,6 +247,9 @@ fn run_point(knobs: Knobs, clients: usize, per_client: usize) -> Point {
             .and_then(|v| v.as_u64())
             .unwrap_or(0)
     };
+    let sget = |k: &str| {
+        m.get("spans").and_then(|x| x.get(k)).and_then(|v| v.as_u64()).unwrap_or(0)
+    };
     let counters = Counters {
         bytes_to_device: get("bytes_to_device"),
         bytes_copy_elided: get("bytes_copy_elided"),
@@ -232,6 +260,15 @@ fn run_point(knobs: Knobs, clients: usize, per_client: usize) -> Point {
         affine_routed: get("affine_routed"),
         crossover_gemm_n: xget("gemm_n"),
         crossover_gemm_warm_n: xget("gemm_warm_n"),
+        p50_us: get("p50_us"),
+        p99_us: get("p99_us"),
+        p999_us: get("p999_us"),
+        span_queue_us: sget("queue_us"),
+        span_route_us: sget("route_us"),
+        span_linger_us: sget("linger_us"),
+        span_stage_us: sget("stage_us"),
+        span_execute_us: sget("execute_us"),
+        span_finish_us: sget("finish_us"),
     };
     stream.write_all(b"{\"op\": \"shutdown\"}\n").unwrap();
     stream.flush().unwrap();
@@ -337,8 +374,35 @@ fn run_chain_point(
     (wall, bytes, elided, chains, sums)
 }
 
+/// Snapshot sink: every JSON line goes to stdout and (with `--out FILE`)
+/// to a JSONL file `tools/bench_compare` can diff against a committed
+/// baseline such as `BENCH_6.json`.
+struct Snapshot {
+    file: Option<std::fs::File>,
+}
+
+impl Snapshot {
+    fn emit(&mut self, line: String) {
+        println!("{line}");
+        if let Some(f) = &mut self.file {
+            writeln!(f, "{line}").expect("write snapshot line");
+        }
+    }
+}
+
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let mut snap = Snapshot {
+        file: out_path
+            .as_deref()
+            .map(|p| std::fs::File::create(p).expect("create snapshot file")),
+    };
     let (clients, per_client, serial_reqs) =
         if quick { (4, 6, 12) } else { (8, 25, 40) };
 
@@ -358,7 +422,7 @@ fn main() {
     };
     let serial = run_point(base_knobs, 1, serial_reqs);
     let base = serial.rps();
-    println!("{}", serial.json(1.0));
+    snap.emit(serial.json(1.0));
 
     // sweep 1: pool x batching (private operands, as in ISSUE 1)
     for pool in [1u32, 2, 4] {
@@ -371,7 +435,7 @@ fn main() {
                 clients,
                 per_client,
             );
-            println!("{}", p.json(p.rps() / base));
+            snap.emit(p.json(p.rps() / base));
         }
     }
 
@@ -396,13 +460,13 @@ fn main() {
         if !cache && !pipeline {
             baseline_bytes = p.counters.bytes_to_device;
         }
-        println!("{}", p.json(p.rps() / base));
+        snap.emit(p.json(p.rps() / base));
         if cache && pipeline && baseline_bytes > 0 {
             let cut = baseline_bytes as f64 / p.counters.bytes_to_device.max(1) as f64;
-            println!(
+            snap.emit(format!(
                 "{{\"bench\": \"serve_throughput\", \"summary\": \
                  \"copy_bytes_cut\", \"value\": {cut:.2}}}"
-            );
+            ));
         }
     }
 
@@ -430,13 +494,13 @@ fn main() {
         if !placement {
             off_bytes = p.counters.bytes_to_device;
         }
-        println!("{}", p.json(p.rps() / base));
+        snap.emit(p.json(p.rps() / base));
         if placement && off_bytes > 0 {
             let cut = off_bytes as f64 / p.counters.bytes_to_device.max(1) as f64;
-            println!(
+            snap.emit(format!(
                 "{{\"bench\": \"serve_throughput\", \"summary\": \
                  \"placement_bytes_cut\", \"value\": {cut:.2}}}"
-            );
+            ));
         }
     }
 
@@ -457,7 +521,7 @@ fn main() {
             clients,
             per_client,
         );
-        println!("{}", p.json(p.rps() / base));
+        snap.emit(p.json(p.rps() / base));
     }
 
     // sweep 5: chained vs per-op execution of an MLP-shaped dependent
@@ -466,30 +530,30 @@ fn main() {
     // round-trip) with checksums bit-identical to per-op execution.
     println!();
     let (uw, ub, ue, uc, usums) = run_chain_point(false, clients, per_client);
-    println!(
+    snap.emit(format!(
         "{{\"bench\": \"serve_throughput\", \"workload\": \"chain_mlp\", \
          \"chained\": false, \"requests\": {}, \"wall_ms\": {:.1}, \
          \"bytes_to_device\": {ub}, \"chain_bytes_elided\": {ue}, \
          \"chains\": {uc}}}",
         clients * per_client,
         uw.as_secs_f64() * 1e3,
-    );
+    ));
     let (cw, cb, ce, cc, csums) = run_chain_point(true, clients, per_client);
-    println!(
+    snap.emit(format!(
         "{{\"bench\": \"serve_throughput\", \"workload\": \"chain_mlp\", \
          \"chained\": true, \"requests\": {}, \"wall_ms\": {:.1}, \
          \"bytes_to_device\": {cb}, \"chain_bytes_elided\": {ce}, \
          \"chains\": {cc}}}",
         clients * per_client,
         cw.as_secs_f64() * 1e3,
-    );
+    ));
     let identical = usums == csums;
     let bytes_cut = ub as f64 / cb.max(1) as f64;
-    println!(
+    snap.emit(format!(
         "{{\"bench\": \"serve_throughput\", \"summary\": \"chain_bytes_cut\", \
          \"value\": {bytes_cut:.2}, \"chain_bytes_elided\": {ce}, \
          \"checksums_identical\": {identical}}}"
-    );
+    ));
     assert!(
         identical,
         "chained checksums diverged from per-op execution"

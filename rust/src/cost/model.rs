@@ -512,6 +512,35 @@ impl CostModel {
                 .observe_device(cop, device_pred, observed_cycles as f64, &self.knobs);
         }
     }
+
+    /// Chain-launch feedback: the twin of [`CostModel::observe`] for
+    /// chained executions, which have no single `(m, n, k)` and were
+    /// previously dropped by `observe`'s op-name mapping (so chained
+    /// traffic never calibrated anything).  A chain is GEMM traffic with
+    /// its interior copies elided — [`CostModel::device_wins_chain`]
+    /// already compares chain predictions under the *GEMM* scales, so the
+    /// observed timing folds into those same scales and the crossover it
+    /// decides moves with the feedback.
+    pub fn observe_chain(
+        &self,
+        m: usize,
+        dims: &[usize],
+        observed_cycles: u64,
+        host_path: bool,
+    ) {
+        if !self.knobs.calibrate || observed_cycles == 0 || dims.len() < 2 {
+            return;
+        }
+        if host_path {
+            let pred = self.host_chain_cycles(m, dims);
+            self.calib
+                .observe_host(CostOp::Gemm, pred, observed_cycles as f64, &self.knobs);
+        } else {
+            let pred = self.offload_chain_cycles(m, dims);
+            self.calib
+                .observe_device(CostOp::Gemm, pred, observed_cycles as f64, &self.knobs);
+        }
+    }
 }
 
 /// Smallest `n in 1..=hi` satisfying `p` (binary search; the win
@@ -719,6 +748,44 @@ mod tests {
         // degenerate chains never claim the device
         assert!(!m.device_wins_chain(64, &[64]));
         assert_eq!(m.offload_chain_cycles(64, &[64]), 0.0);
+    }
+
+    #[test]
+    fn observe_chain_calibrates_the_gemm_scales() {
+        let m = calibrating_model();
+        let dims = [64usize, 64, 64, 64];
+        assert!(m.device_wins_chain(64, &dims), "precondition: device wins cold");
+        // a device really 3x slower than the chain prediction: the GEMM
+        // device scale climbs and the chain decision flips to host
+        let pred = m.offload_chain_cycles(64, &dims);
+        for _ in 0..64 {
+            m.observe_chain(64, &dims, (pred * 3.0) as u64, false);
+        }
+        assert!(
+            m.calibration().device_scale(CostOp::Gemm) > 2.0,
+            "chain feedback must reach the shared GEMM scale"
+        );
+        assert!(!m.device_wins_chain(64, &dims), "3x-slow device loses the chain");
+
+        // guards: zero observation, degenerate dims, calibration off
+        let frozen = m.calibration().device_scale(CostOp::Gemm);
+        m.observe_chain(64, &dims, 0, false);
+        m.observe_chain(64, &[64], u64::MAX / 2, false);
+        assert_eq!(m.calibration().device_scale(CostOp::Gemm), frozen);
+        let off = model();
+        off.observe_chain(64, &dims, u64::MAX / 2, false);
+        assert_eq!(off.calibration().device_scale(CostOp::Gemm), 1.0);
+
+        // host-path chain feedback lands on the host scale
+        let mh = calibrating_model();
+        let host_pred = mh.host_chain_cycles(64, &dims);
+        for _ in 0..64 {
+            mh.observe_chain(64, &dims, (host_pred * 2.0) as u64, true);
+        }
+        assert!(
+            (mh.calibration().host_scale(CostOp::Gemm) - 2.0).abs() < 0.1,
+            "host-path chain feedback calibrates the host scale"
+        );
     }
 
     #[test]

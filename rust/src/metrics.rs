@@ -71,6 +71,164 @@ impl Metrics {
     }
 }
 
+/// Bucket count of the fixed log-scale latency histograms: power-of-two
+/// microsecond buckets cover [0, 2^30) us (~18 minutes) exactly, with
+/// the last bucket absorbing anything larger.
+pub const HIST_BUCKETS: usize = 32;
+
+/// Fixed-bucket log-scale latency histogram (microseconds).
+///
+/// The hot path is one relaxed `fetch_add` on a preallocated bucket —
+/// no allocation, no lock, no sort.  Bucket `0` holds exactly the value
+/// `0`; bucket `i >= 1` holds `[2^(i-1), 2^i)`; the last bucket is
+/// open-ended.  Quantiles are read from a [`HistogramSnapshot`], which
+/// reports the *upper bound* of the bucket containing the target rank —
+/// a conservative (never under-reporting) estimate with power-of-two
+/// resolution, the standard trade for an allocation-free histogram.
+#[derive(Debug, Default)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram::default()
+    }
+
+    /// The bucket a microsecond value lands in.
+    pub fn bucket_index(us: u64) -> usize {
+        if us == 0 {
+            0
+        } else {
+            (64 - us.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+        }
+    }
+
+    /// Inclusive upper bound of a bucket (`u64::MAX` for the last).
+    pub fn bucket_upper(idx: usize) -> u64 {
+        if idx >= HIST_BUCKETS - 1 {
+            u64::MAX
+        } else {
+            (1u64 << idx) - 1
+        }
+    }
+
+    /// Record one latency sample.  Allocation-free and lock-free.
+    pub fn record(&self, us: u64) {
+        self.buckets[Self::bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Plain-value copy for quantile reads and cross-cluster merges.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut out = HistogramSnapshot::default();
+        for (i, b) in self.buckets.iter().enumerate() {
+            out.buckets[i] = b.load(Ordering::Relaxed);
+        }
+        out
+    }
+}
+
+/// Plain-value copy of a [`LatencyHistogram`].
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub buckets: [u64; HIST_BUCKETS],
+}
+
+impl HistogramSnapshot {
+    /// Total recorded samples.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Fold another snapshot in (e.g. merge per-cluster histograms into
+    /// a pool-wide view).
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += *b;
+        }
+    }
+
+    /// The quantile `q` in [0, 1]: upper bound of the bucket holding the
+    /// rank-`ceil(q * count)` sample (0 for an empty histogram).
+    pub fn quantile(&self, q: f64) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * count as f64).ceil() as u64).clamp(1, count);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= target {
+                return LatencyHistogram::bucket_upper(i);
+            }
+        }
+        LatencyHistogram::bucket_upper(HIST_BUCKETS - 1)
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    pub fn p999(&self) -> u64 {
+        self.quantile(0.999)
+    }
+}
+
+/// Op-class labels of the per-class latency histograms, in index order
+/// (axpy/dot jobs share the `level1` class).
+pub const OP_CLASSES: [&str; 4] = ["gemm", "gemv", "level1", "chain"];
+
+/// Histogram index for a serve op name.
+pub fn op_class_idx(op: &str) -> usize {
+    match op {
+        "gemm" => 0,
+        "gemv" => 1,
+        "chain" => 3,
+        // axpy, dot and anything the level-1 path serves
+        _ => 2,
+    }
+}
+
+/// Percentile summary of one op class (plain values, serializable).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct OpClassLatency {
+    pub count: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub p999_us: u64,
+}
+
+impl OpClassLatency {
+    fn from_hist(h: &HistogramSnapshot) -> OpClassLatency {
+        OpClassLatency {
+            count: h.count(),
+            p50_us: h.p50(),
+            p99_us: h.p99(),
+            p999_us: h.p999(),
+        }
+    }
+}
+
+/// Pool-wide serving-path span totals in microseconds (one bucket per
+/// span stage; see `sched::span`).  `linger_us` is the portion of
+/// `stage_us` spent in the batcher's linger window, reported separately
+/// but not added twice.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SpanTotals {
+    pub queue_us: u64,
+    pub route_us: u64,
+    pub linger_us: u64,
+    pub stage_us: u64,
+    pub execute_us: u64,
+    pub finish_us: u64,
+}
+
 /// Per-cluster scheduler counters: one set per pool cluster, updated by
 /// the cluster's worker and the placement router, reported by the serve
 /// `metrics` op so operators see skew, affinity warmth and steal traffic
@@ -94,6 +252,12 @@ pub struct ClusterCounters {
     pub cache_misses: AtomicU64,
     /// Host->device bytes this cluster's engine actually copied.
     pub bytes_to_device: AtomicU64,
+    /// Jobs claimed by this cluster's worker and not yet replied to
+    /// (live gauge, not a monotone counter — the serve `top` op reads
+    /// it for the dashboard poll loop).
+    pub inflight: AtomicU64,
+    /// End-to-end request latency served by this cluster.
+    pub latency: LatencyHistogram,
 }
 
 /// Plain-value snapshot of one cluster's counters (plus the router's
@@ -110,6 +274,10 @@ pub struct ClusterMetrics {
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub bytes_to_device: u64,
+    pub inflight: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub p999_us: u64,
 }
 
 /// Thread-safe scheduler counters, shared between the submit path and
@@ -172,6 +340,17 @@ pub struct SchedCounters {
     /// Intermediate bytes elided by chained execution across all workers'
     /// engines (device-resident hand-off instead of a host round trip).
     pub chain_bytes_elided: AtomicU64,
+    /// End-to-end latency histograms, one per op class (see
+    /// [`OP_CLASSES`]): gemm / gemv / level1 / chain.
+    pub latency: [LatencyHistogram; 4],
+    /// Pool-wide serving-path span totals (microseconds per stage,
+    /// accumulated per completed request).
+    pub span_queue_us: AtomicU64,
+    pub span_route_us: AtomicU64,
+    pub span_linger_us: AtomicU64,
+    pub span_stage_us: AtomicU64,
+    pub span_execute_us: AtomicU64,
+    pub span_finish_us: AtomicU64,
     /// One [`ClusterCounters`] per pool cluster (empty under
     /// `Default` — tests that never ask for per-cluster data).
     pub per_cluster: Vec<ClusterCounters>,
@@ -205,9 +384,48 @@ impl SchedCounters {
         self.service_us_ewma.store(new, Ordering::Relaxed);
     }
 
+    /// Record one request's end-to-end latency into the op-class
+    /// histogram and the serving cluster's histogram.
+    pub fn note_latency_us(&self, op: &str, cluster: u32, us: u64) {
+        self.latency[op_class_idx(op)].record(us);
+        if let Some(pc) = self.cluster(cluster) {
+            pc.latency.record(us);
+        }
+    }
+
+    /// Accumulate one request's span breakdown into the pool-wide
+    /// per-stage totals (`linger` is the sub-span of `stage` spent in
+    /// the batcher's linger window).
+    pub fn note_span_us(
+        &self,
+        queue: u64,
+        route: u64,
+        linger: u64,
+        stage: u64,
+        execute: u64,
+        finish: u64,
+    ) {
+        self.span_queue_us.fetch_add(queue, Ordering::Relaxed);
+        self.span_route_us.fetch_add(route, Ordering::Relaxed);
+        self.span_linger_us.fetch_add(linger, Ordering::Relaxed);
+        self.span_stage_us.fetch_add(stage, Ordering::Relaxed);
+        self.span_execute_us.fetch_add(execute, Ordering::Relaxed);
+        self.span_finish_us.fetch_add(finish, Ordering::Relaxed);
+    }
+
     /// Consistent-enough point-in-time copy.
     pub fn snapshot(&self) -> SchedMetrics {
         let ld = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        let latency = [
+            self.latency[0].snapshot(),
+            self.latency[1].snapshot(),
+            self.latency[2].snapshot(),
+            self.latency[3].snapshot(),
+        ];
+        let mut overall = HistogramSnapshot::default();
+        for h in &latency {
+            overall.merge(h);
+        }
         SchedMetrics {
             submitted: ld(&self.submitted),
             rejected: ld(&self.rejected),
@@ -232,21 +450,43 @@ impl SchedCounters {
             rehomed: ld(&self.rehomed),
             chains: ld(&self.chains),
             chain_bytes_elided: ld(&self.chain_bytes_elided),
+            latency: [
+                OpClassLatency::from_hist(&latency[0]),
+                OpClassLatency::from_hist(&latency[1]),
+                OpClassLatency::from_hist(&latency[2]),
+                OpClassLatency::from_hist(&latency[3]),
+            ],
+            overall: OpClassLatency::from_hist(&overall),
+            spans: SpanTotals {
+                queue_us: ld(&self.span_queue_us),
+                route_us: ld(&self.span_route_us),
+                linger_us: ld(&self.span_linger_us),
+                stage_us: ld(&self.span_stage_us),
+                execute_us: ld(&self.span_execute_us),
+                finish_us: ld(&self.span_finish_us),
+            },
             clusters: self
                 .per_cluster
                 .iter()
                 .enumerate()
-                .map(|(i, c)| ClusterMetrics {
-                    cluster: i as u32,
-                    queue_depth: 0, // live depth filled in by the scheduler
-                    completed: ld(&c.completed),
-                    batches: ld(&c.batches),
-                    stolen: ld(&c.stolen),
-                    affine_routed: ld(&c.affine_routed),
-                    prefetched: ld(&c.prefetched),
-                    cache_hits: ld(&c.cache_hits),
-                    cache_misses: ld(&c.cache_misses),
-                    bytes_to_device: ld(&c.bytes_to_device),
+                .map(|(i, c)| {
+                    let h = c.latency.snapshot();
+                    ClusterMetrics {
+                        cluster: i as u32,
+                        queue_depth: 0, // live depth filled in by the scheduler
+                        completed: ld(&c.completed),
+                        batches: ld(&c.batches),
+                        stolen: ld(&c.stolen),
+                        affine_routed: ld(&c.affine_routed),
+                        prefetched: ld(&c.prefetched),
+                        cache_hits: ld(&c.cache_hits),
+                        cache_misses: ld(&c.cache_misses),
+                        bytes_to_device: ld(&c.bytes_to_device),
+                        inflight: ld(&c.inflight),
+                        p50_us: h.p50(),
+                        p99_us: h.p99(),
+                        p999_us: h.p999(),
+                    }
                 })
                 .collect(),
         }
@@ -308,6 +548,12 @@ pub struct SchedMetrics {
     pub rehomed: u64,
     pub chains: u64,
     pub chain_bytes_elided: u64,
+    /// Percentile latency per op class, indexed like [`OP_CLASSES`].
+    pub latency: [OpClassLatency; 4],
+    /// Percentiles over every op class merged.
+    pub overall: OpClassLatency,
+    /// Pool-wide serving-path span totals (microseconds per stage).
+    pub spans: SpanTotals,
     /// Per-cluster breakdown, indexed by cluster id (empty when the
     /// counters were built with `Default` instead of `new`).
     pub clusters: Vec<ClusterMetrics>,
@@ -427,6 +673,138 @@ mod tests {
         assert_eq!(s.clusters[2].stolen, 1);
         assert_eq!(s.clusters[2].affine_routed, 4);
         assert_eq!(s.clusters[2].cluster, 2);
+    }
+
+    #[test]
+    fn histogram_bucket_edges() {
+        // 0 is its own bucket; each power of two starts a new bucket
+        assert_eq!(LatencyHistogram::bucket_index(0), 0);
+        assert_eq!(LatencyHistogram::bucket_index(1), 1);
+        assert_eq!(LatencyHistogram::bucket_index(2), 2);
+        assert_eq!(LatencyHistogram::bucket_index(3), 2);
+        assert_eq!(LatencyHistogram::bucket_index(4), 3);
+        assert_eq!(LatencyHistogram::bucket_index((1 << 30) - 1), 30);
+        // everything >= 2^30 lands in the open-ended last bucket
+        assert_eq!(LatencyHistogram::bucket_index(1 << 30), HIST_BUCKETS - 1);
+        assert_eq!(LatencyHistogram::bucket_index(u64::MAX), HIST_BUCKETS - 1);
+        // upper bounds are inclusive and ordered
+        assert_eq!(LatencyHistogram::bucket_upper(0), 0);
+        assert_eq!(LatencyHistogram::bucket_upper(1), 1);
+        assert_eq!(LatencyHistogram::bucket_upper(2), 3);
+        assert_eq!(LatencyHistogram::bucket_upper(HIST_BUCKETS - 1), u64::MAX);
+        for i in 0..HIST_BUCKETS {
+            let upper = LatencyHistogram::bucket_upper(i);
+            assert_eq!(
+                LatencyHistogram::bucket_index(upper),
+                i,
+                "upper bound of bucket {i} must land in bucket {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn histogram_quantiles_match_sorted_oracle() {
+        // quantile(q) must equal the upper bound of the bucket holding
+        // the rank-ceil(q*n) sample of the sorted data — the tightest
+        // guarantee a fixed-bucket histogram can give
+        let data: Vec<u64> = (0..1000u64).map(|i| (i * 37) % 5000).collect();
+        let h = LatencyHistogram::new();
+        for &v in &data {
+            h.record(v);
+        }
+        let mut sorted = data.clone();
+        sorted.sort_unstable();
+        let snap = h.snapshot();
+        assert_eq!(snap.count(), 1000);
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+            let oracle = sorted[rank - 1];
+            let expect =
+                LatencyHistogram::bucket_upper(LatencyHistogram::bucket_index(oracle));
+            assert_eq!(
+                snap.quantile(q),
+                expect,
+                "q={q}: histogram bucket disagrees with sorted oracle {oracle}"
+            );
+            // the histogram answer never under-reports the true quantile
+            assert!(snap.quantile(q) >= oracle);
+        }
+    }
+
+    #[test]
+    fn histogram_empty_and_single_sample() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.snapshot().quantile(0.5), 0);
+        assert_eq!(h.snapshot().count(), 0);
+        h.record(700);
+        let s = h.snapshot();
+        // one sample: every quantile is that sample's bucket upper bound
+        let expect = LatencyHistogram::bucket_upper(LatencyHistogram::bucket_index(700));
+        assert_eq!(s.quantile(0.0), expect);
+        assert_eq!(s.quantile(0.5), expect);
+        assert_eq!(s.quantile(1.0), expect);
+    }
+
+    #[test]
+    fn histogram_merge_across_clusters_matches_single_histogram() {
+        let a = LatencyHistogram::new();
+        let b = LatencyHistogram::new();
+        let all = LatencyHistogram::new();
+        for v in 0..500u64 {
+            let v = v * 13 % 3000;
+            if v % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            all.record(v);
+        }
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        assert_eq!(merged, all.snapshot());
+        assert_eq!(merged.p99(), all.snapshot().p99());
+    }
+
+    #[test]
+    fn latency_lands_on_op_class_and_cluster() {
+        let c = SchedCounters::new(2);
+        c.note_latency_us("gemm", 0, 100);
+        c.note_latency_us("gemm", 0, 200);
+        c.note_latency_us("dot", 1, 50);
+        c.note_latency_us("chain", 9, 400); // out-of-pool cluster: pool hist only
+        let s = c.snapshot();
+        assert_eq!(s.latency[op_class_idx("gemm")].count, 2);
+        assert_eq!(s.latency[op_class_idx("axpy")].count, 1, "dot shares level1");
+        assert_eq!(s.latency[op_class_idx("chain")].count, 1);
+        assert_eq!(s.overall.count, 4);
+        assert!(s.latency[0].p50_us <= s.latency[0].p99_us);
+        assert!(s.latency[0].p99_us <= s.latency[0].p999_us);
+        assert_eq!(s.clusters[0].p99_us, LatencyHistogram::bucket_upper(8)); // 200 -> [128,256)
+        assert_eq!(s.clusters[1].p50_us, LatencyHistogram::bucket_upper(6)); // 50 -> [32,64)
+    }
+
+    #[test]
+    fn span_totals_accumulate() {
+        let c = SchedCounters::default();
+        c.note_span_us(10, 2, 1, 5, 20, 3);
+        c.note_span_us(10, 2, 1, 5, 20, 3);
+        let s = c.snapshot().spans;
+        assert_eq!(s.queue_us, 20);
+        assert_eq!(s.route_us, 4);
+        assert_eq!(s.linger_us, 2);
+        assert_eq!(s.stage_us, 10);
+        assert_eq!(s.execute_us, 40);
+        assert_eq!(s.finish_us, 6);
+    }
+
+    #[test]
+    fn inflight_gauge_rises_and_falls() {
+        let c = SchedCounters::new(1);
+        let pc = c.cluster(0).unwrap();
+        pc.inflight.fetch_add(3, Ordering::Relaxed);
+        assert_eq!(c.snapshot().clusters[0].inflight, 3);
+        pc.inflight.fetch_sub(3, Ordering::Relaxed);
+        assert_eq!(c.snapshot().clusters[0].inflight, 0);
     }
 
     #[test]

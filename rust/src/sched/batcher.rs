@@ -54,7 +54,12 @@ pub trait JobSource {
 
 impl JobSource for WorkQueue {
     fn take_matching(&self, key: &BatchKey, max: usize) -> Vec<Job> {
-        self.try_pop_matching(key, max)
+        let mut jobs = self.try_pop_matching(key, max);
+        for job in &mut jobs {
+            // peeled straight off the global queue into a worker's batch
+            job.spans.mark_claimed();
+        }
+        jobs
     }
 }
 
@@ -204,6 +209,7 @@ mod tests {
             reply: tx,
             cancel: crate::sched::CancelToken::default(),
             enqueued_at: Instant::now(),
+            spans: crate::sched::SpanStamps::default(),
         }
     }
 
@@ -281,6 +287,7 @@ mod tests {
                 reply: tx,
                 cancel: crate::sched::CancelToken::default(),
                 enqueued_at: Instant::now(),
+                spans: crate::sched::SpanStamps::default(),
             }
         };
         q.push(host_job(2)).unwrap();
@@ -324,6 +331,7 @@ mod tests {
             reply: tx,
             cancel: crate::sched::CancelToken::default(),
             enqueued_at: Instant::now(),
+            spans: crate::sched::SpanStamps::default(),
         };
         let b = Batcher::new(Duration::from_millis(50), 8);
         assert_eq!(b.collect(&q, fence, usize::MAX).len(), 1);

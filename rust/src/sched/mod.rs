@@ -60,6 +60,7 @@ pub mod batcher;
 pub mod placement;
 pub mod pool;
 pub mod queue;
+pub mod span;
 pub mod worker;
 
 use std::path::Path;
@@ -77,6 +78,7 @@ pub use batcher::{BatchKey, Batcher, JobSource};
 pub use placement::PlacementRouter;
 pub use pool::{CapacityModel, ClusterSpec, DevicePool};
 pub use queue::{PushError, WorkQueue};
+pub use span::{SpanBreakdown, SpanStamps};
 
 /// Priority class of a queued job (three lanes; higher pops first).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -257,6 +259,10 @@ pub struct Job {
     /// launched.
     pub cancel: CancelToken,
     pub enqueued_at: Instant,
+    /// Serving-path progress stamps (queue->route->claim boundaries),
+    /// filled in by the router and closed into a [`SpanBreakdown`] by
+    /// the worker at reply time.
+    pub spans: SpanStamps,
 }
 
 impl Job {
@@ -307,6 +313,10 @@ pub struct GemmOutcome {
     pub batch_size: usize,
     /// Wall-clock the job waited in the queue, ms.
     pub queue_ms: f64,
+    /// Wall-clock serving-path breakdown (queue/route/stage/execute/
+    /// finish, telescoping to `spans.total_us` exactly — the `trace:
+    /// true` serve contract).
+    pub spans: SpanBreakdown,
 }
 
 /// What comes back on the reply channel.
@@ -520,6 +530,7 @@ impl Scheduler {
             reply: tx,
             cancel: cancel.clone(),
             enqueued_at: Instant::now(),
+            spans: SpanStamps::default(),
         };
         // the routed count rides into the queue's own locked bound, so
         // concurrent submitters serialize instead of racing a separate
@@ -649,6 +660,7 @@ mod tests {
             reply: tx.clone(),
             cancel: CancelToken::default(),
             enqueued_at: Instant::now(),
+            spans: SpanStamps::default(),
         };
         assert_eq!(gemm(64, 1).batch_key(), gemm(64, 2).batch_key());
         assert_ne!(gemm(64, 1).batch_key(), gemm(128, 1).batch_key());
@@ -660,6 +672,7 @@ mod tests {
             reply: tx.clone(),
             cancel: CancelToken::default(),
             enqueued_at: Instant::now(),
+            spans: SpanStamps::default(),
         };
         assert_eq!(fence.batch_key(), None);
 
@@ -676,6 +689,7 @@ mod tests {
             reply: tx.clone(),
             cancel: CancelToken::default(),
             enqueued_at: Instant::now(),
+            spans: SpanStamps::default(),
         };
         assert_eq!(gemv(64, 32, 1).batch_key(), gemv(64, 32, 2).batch_key());
         assert_ne!(gemv(64, 32, 1).batch_key(), gemv(32, 64, 1).batch_key());
@@ -702,6 +716,7 @@ mod tests {
             reply: tx.clone(),
             cancel: CancelToken::default(),
             enqueued_at: Instant::now(),
+            spans: SpanStamps::default(),
         };
         assert_eq!(
             l1(Level1Op::Axpy, 4096, 1, 1.0).batch_key(),
@@ -734,6 +749,7 @@ mod tests {
             reply: tx,
             cancel: CancelToken::default(),
             enqueued_at: Instant::now(),
+            spans: SpanStamps::default(),
         };
         assert_eq!(chain.batch_key(), None);
         if let JobPayload::Chain(r) = &chain.payload {

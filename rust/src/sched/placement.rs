@@ -380,7 +380,9 @@ impl PlacementRouter {
         counters: &SchedCounters,
     ) -> bool {
         let mut moved = false;
-        while let Some(job) = queue.try_pop() {
+        while let Some(mut job) = queue.try_pop() {
+            // queue span ends, route span begins
+            job.spans.mark_routed();
             let lane = job.priority.lane();
             let (c, routed) = self.route_to(st, job, counters);
             st.clusters[c].lanes[lane].push_back(routed);
@@ -414,8 +416,9 @@ impl PlacementRouter {
     /// Pop the oldest highest-priority job of `cluster`'s own deque.
     fn take_local(&self, st: &mut RouterState, cluster: usize) -> Option<Job> {
         for lane in st.clusters[cluster].lanes.iter_mut() {
-            if let Some(r) = lane.pop_front() {
+            if let Some(mut r) = lane.pop_front() {
                 self.routed.fetch_sub(1, Ordering::Relaxed);
+                r.job.spans.mark_claimed();
                 return Some(r.job);
             }
         }
@@ -449,12 +452,13 @@ impl PlacementRouter {
                             && r.affine == pass_affine
                             && r.est_bytes <= cap
                         {
-                            let r = lane.remove(i).expect("index checked");
+                            let mut r = lane.remove(i).expect("index checked");
                             self.routed.fetch_sub(1, Ordering::Relaxed);
                             counters.stolen.fetch_add(1, Ordering::Relaxed);
                             if let Some(pc) = counters.cluster(thief as u32) {
                                 pc.stolen.fetch_add(1, Ordering::Relaxed);
                             }
+                            r.job.spans.mark_claimed();
                             return Some(r.job);
                         }
                     }
@@ -480,8 +484,9 @@ impl PlacementRouter {
                 continue;
             }
             for lane in st.clusters[c].lanes.iter_mut() {
-                if let Some(r) = lane.pop_front() {
+                if let Some(mut r) = lane.pop_front() {
                     self.routed.fetch_sub(1, Ordering::Relaxed);
+                    r.job.spans.mark_claimed();
                     return Some(r.job);
                 }
             }
@@ -577,7 +582,9 @@ impl PlacementRouter {
             let mut i = 0;
             while i < lane.len() && out.len() < max {
                 if lane[i].job.batch_key().as_ref() == Some(key) {
-                    out.push(lane.remove(i).expect("index checked").job);
+                    let mut job = lane.remove(i).expect("index checked").job;
+                    job.spans.mark_claimed();
+                    out.push(job);
                     self.routed.fetch_sub(1, Ordering::Relaxed);
                 } else {
                     i += 1;
@@ -620,7 +627,7 @@ mod tests {
     use super::*;
     use crate::config::{DispatchMode, PlatformConfig};
     use crate::sched::pool::DevicePool;
-    use crate::sched::{CancelToken, GemmRequest, GemvRequest, Priority};
+    use crate::sched::{CancelToken, GemmRequest, GemvRequest, Priority, SpanStamps};
     use std::sync::mpsc;
     use std::time::Instant;
 
@@ -663,6 +670,7 @@ mod tests {
             reply: tx,
             cancel: CancelToken::default(),
             enqueued_at: Instant::now(),
+            spans: SpanStamps::default(),
         }
     }
 
@@ -783,6 +791,7 @@ mod tests {
             reply: tx,
             cancel: CancelToken::default(),
             enqueued_at: Instant::now(),
+            spans: SpanStamps::default(),
         };
         // 2048x2048 f64 A alone is 32 MiB > the small slice
         q.push(job).unwrap();
@@ -807,6 +816,7 @@ mod tests {
                 reply: tx,
                 cancel: CancelToken::default(),
                 enqueued_at: Instant::now(),
+                spans: SpanStamps::default(),
             }
         };
         q.push(gemv(1, DispatchMode::Auto)).unwrap();
@@ -879,6 +889,7 @@ mod tests {
             reply: tx,
             cancel: CancelToken::default(),
             enqueued_at: Instant::now(),
+            spans: SpanStamps::default(),
         }
     }
 
@@ -1009,6 +1020,7 @@ mod tests {
                 reply: tx,
                 cancel: CancelToken::default(),
                 enqueued_at: Instant::now(),
+                spans: SpanStamps::default(),
             }
         };
         q.push(fence(1)).unwrap();

@@ -202,6 +202,7 @@ mod tests {
             reply: tx,
             cancel: crate::sched::CancelToken::default(),
             enqueued_at: Instant::now(),
+            spans: crate::sched::SpanStamps::default(),
         }
     }
 

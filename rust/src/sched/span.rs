@@ -1,0 +1,252 @@
+//! Request-scoped serving-path spans.
+//!
+//! `soc/trace.rs` records the paper's Figure-3 regions (data-copy /
+//! fork-join / compute) *inside* one offload against the virtual clock.
+//! This module generalizes that idea to the whole serving path: every
+//! [`crate::sched::Job`] carries wall-clock [`SpanStamps`] that the
+//! ingress queue, the placement router and the batcher fill in as the
+//! job moves through them, and the worker closes the record with the
+//! batch-level stage/execute/finish marks.  The result is one
+//! [`SpanBreakdown`] per request:
+//!
+//! ```text
+//! queue -> route -> (linger) -> stage -> execute -> finish
+//! ```
+//!
+//! * **queue**   — enqueued in the bounded ingress queue, waiting for the
+//!   router's drain pass to pick it up;
+//! * **route**   — routed onto a cluster's run queue, waiting for a
+//!   worker (local drain, steal or batch peel) to claim it;
+//! * **stage**   — claimed by a worker: batch assembly (the linger
+//!   window, reported separately as `linger_us`) plus operand staging;
+//! * **execute** — the fork-join launch until device completion is
+//!   observed (under software pipelining this window overlaps the next
+//!   batch's stage span — per *request* the spans stay disjoint);
+//! * **finish**  — copy-out, accounting and the reply send.
+//!
+//! Durations are derived from adjacent timestamps, so the five named
+//! stages telescope: `queue + route + stage + execute + finish` equals
+//! the reported `total_us` *exactly* by construction (the `trace: true`
+//! serve contract).
+
+use std::time::{Duration, Instant};
+
+/// Wall-clock progress stamps carried on a [`crate::sched::Job`].
+///
+/// `Default` (both `None`) means "not yet stamped"; the breakdown
+/// computation degrades gracefully by collapsing missing stages to zero
+/// width, so fence acks and synthetic test jobs never panic.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SpanStamps {
+    /// Popped off the ingress queue and routed onto a cluster run queue.
+    pub routed_at: Option<Instant>,
+    /// Claimed by a worker (local drain, steal, orphan adoption or
+    /// batch peel).
+    pub claimed_at: Option<Instant>,
+}
+
+impl SpanStamps {
+    /// Stamp the queue->route boundary (first stamp wins — a job is
+    /// routed once).
+    pub fn mark_routed(&mut self) {
+        if self.routed_at.is_none() {
+            self.routed_at = Some(Instant::now());
+        }
+    }
+
+    /// Stamp the route->worker boundary (first stamp wins).
+    pub fn mark_claimed(&mut self) {
+        if self.claimed_at.is_none() {
+            self.claimed_at = Some(Instant::now());
+        }
+    }
+}
+
+/// Batch-level timestamps the worker records once per fork-join launch;
+/// combined with each member's [`SpanStamps`] they close the per-request
+/// record.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchMarks {
+    /// Batch assembly (linger) done; operand staging begins.
+    pub collected_at: Instant,
+    /// Fork-join launch issued (stage span ends).
+    pub exec_at: Instant,
+    /// Device completion observed (finish span begins).
+    pub done_at: Instant,
+}
+
+impl BatchMarks {
+    /// All three marks at one instant — for synchronous host-path jobs
+    /// whose stage/execute windows are measured separately.
+    pub fn at(t: Instant) -> BatchMarks {
+        BatchMarks { collected_at: t, exec_at: t, done_at: t }
+    }
+}
+
+/// One request's serving-path breakdown, in wall-clock microseconds.
+///
+/// Invariant: `queue_us + route_us + stage_us + execute_us + finish_us
+/// == total_us` (exactly; `total_us` is defined as that sum).
+/// `linger_us` is the leading portion of `stage_us` spent in the
+/// batcher's linger window — informational, never added twice.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpanBreakdown {
+    pub queue_us: u64,
+    pub route_us: u64,
+    pub linger_us: u64,
+    pub stage_us: u64,
+    pub execute_us: u64,
+    pub finish_us: u64,
+    pub total_us: u64,
+}
+
+impl SpanBreakdown {
+    /// Close one member's record: adjacent-timestamp differences, with
+    /// missing stamps collapsed onto the previous boundary so the
+    /// telescoping sum always holds.
+    pub fn compute(
+        enqueued_at: Instant,
+        stamps: SpanStamps,
+        marks: BatchMarks,
+        end: Instant,
+    ) -> SpanBreakdown {
+        let us = |d: Duration| d.as_micros() as u64;
+        let routed = stamps.routed_at.unwrap_or(enqueued_at);
+        let claimed = stamps.claimed_at.unwrap_or(routed);
+        let queue_us = us(routed.saturating_duration_since(enqueued_at));
+        let route_us = us(claimed.saturating_duration_since(routed));
+        let linger_us = us(marks.collected_at.saturating_duration_since(claimed));
+        let stage_us = us(marks.exec_at.saturating_duration_since(claimed));
+        let execute_us = us(marks.done_at.saturating_duration_since(marks.exec_at));
+        let finish_us = us(end.saturating_duration_since(marks.done_at));
+        SpanBreakdown {
+            queue_us,
+            route_us,
+            linger_us,
+            stage_us,
+            execute_us,
+            finish_us,
+            total_us: queue_us + route_us + stage_us + execute_us + finish_us,
+        }
+    }
+
+    /// The five named stages (linger excluded: it is a sub-span of
+    /// stage), in serving-path order with their labels.
+    pub fn stages(&self) -> [(&'static str, u64); 5] {
+        [
+            ("queue_us", self.queue_us),
+            ("route_us", self.route_us),
+            ("stage_us", self.stage_us),
+            ("execute_us", self.execute_us),
+            ("finish_us", self.finish_us),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(base: Instant, ms: u64) -> Instant {
+        base + Duration::from_millis(ms)
+    }
+
+    #[test]
+    fn stages_telescope_to_the_total_exactly() {
+        let base = Instant::now();
+        let stamps = SpanStamps {
+            routed_at: Some(t(base, 2)),
+            claimed_at: Some(t(base, 5)),
+        };
+        let marks = BatchMarks {
+            collected_at: t(base, 6),
+            exec_at: t(base, 9),
+            done_at: t(base, 30),
+        };
+        let s = SpanBreakdown::compute(base, stamps, marks, t(base, 32));
+        assert_eq!(s.queue_us, 2_000);
+        assert_eq!(s.route_us, 3_000);
+        assert_eq!(s.linger_us, 1_000);
+        assert_eq!(s.stage_us, 4_000);
+        assert_eq!(s.execute_us, 21_000);
+        assert_eq!(s.finish_us, 2_000);
+        let sum: u64 = s.stages().iter().map(|(_, us)| *us).sum();
+        assert_eq!(sum, s.total_us, "named stages must sum to the total");
+        assert_eq!(s.total_us, 32_000);
+        assert!(s.linger_us <= s.stage_us, "linger is a sub-span of stage");
+    }
+
+    #[test]
+    fn missing_stamps_collapse_to_zero_width_stages() {
+        let base = Instant::now();
+        let marks = BatchMarks {
+            collected_at: t(base, 1),
+            exec_at: t(base, 2),
+            done_at: t(base, 8),
+        };
+        // never routed/claimed (direct-execution test jobs): queue and
+        // route collapse, stage absorbs the wait, the sum still holds
+        let s = SpanBreakdown::compute(base, SpanStamps::default(), marks, t(base, 9));
+        assert_eq!(s.queue_us, 0);
+        assert_eq!(s.route_us, 0);
+        assert_eq!(s.stage_us, 2_000);
+        assert_eq!(s.execute_us, 6_000);
+        assert_eq!(s.finish_us, 1_000);
+        let sum: u64 = s.stages().iter().map(|(_, us)| *us).sum();
+        assert_eq!(sum, s.total_us);
+    }
+
+    #[test]
+    fn out_of_order_marks_saturate_instead_of_panicking() {
+        let base = Instant::now();
+        // claimed "before" routed (clock skew between stamping sites)
+        let stamps = SpanStamps {
+            routed_at: Some(t(base, 5)),
+            claimed_at: Some(t(base, 3)),
+        };
+        let marks = BatchMarks::at(t(base, 4));
+        let s = SpanBreakdown::compute(base, stamps, marks, t(base, 6));
+        assert_eq!(s.route_us, 0, "negative width saturates to zero");
+        let sum: u64 = s.stages().iter().map(|(_, us)| *us).sum();
+        assert_eq!(sum, s.total_us);
+    }
+
+    #[test]
+    fn pipelined_batches_keep_per_request_spans_disjoint() {
+        // Batch k+1's stage overlaps batch k's execute wall-clock window
+        // (software pipelining).  Per REQUEST the spans stay disjoint:
+        // request B's stage span covers the overlap, its execute span
+        // starts only at its own launch, and both telescoping sums hold.
+        let base = Instant::now();
+        let a = SpanStamps {
+            routed_at: Some(t(base, 1)),
+            claimed_at: Some(t(base, 2)),
+        };
+        let marks_a = BatchMarks {
+            collected_at: t(base, 3),
+            exec_at: t(base, 4),
+            done_at: t(base, 20),
+        };
+        let sa = SpanBreakdown::compute(base, a, marks_a, t(base, 21));
+
+        // B is staged at t=6..12, entirely inside A's execute window
+        let b = SpanStamps {
+            routed_at: Some(t(base, 5)),
+            claimed_at: Some(t(base, 6)),
+        };
+        let marks_b = BatchMarks {
+            collected_at: t(base, 7),
+            exec_at: t(base, 12),
+            done_at: t(base, 28),
+        };
+        let sb = SpanBreakdown::compute(base, b, marks_b, t(base, 29));
+
+        assert_eq!(sa.execute_us, 16_000);
+        assert_eq!(sb.stage_us, 6_000, "B's stage covers the overlapped window");
+        assert_eq!(sb.execute_us, 16_000);
+        for s in [&sa, &sb] {
+            let sum: u64 = s.stages().iter().map(|(_, us)| *us).sum();
+            assert_eq!(sum, s.total_us);
+        }
+    }
+}

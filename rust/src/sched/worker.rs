@@ -72,6 +72,7 @@ use super::batcher::Batcher;
 use super::placement::{ClusterView, PlacementRouter};
 use super::pool::ClusterSpec;
 use super::queue::WorkQueue;
+use super::span::{BatchMarks, SpanBreakdown};
 use super::{
     ChainRequest, GemmOutcome, GemmRequest, GemvRequest, Job, JobPayload,
     Level1Op, Level1Request,
@@ -197,6 +198,11 @@ struct Inflight {
     /// count, or the service-time EWMA (and with it the retry-after
     /// backpressure hint) inflates under pipelining.
     work_us: u64,
+    /// Batch assembly done (stage span's linger boundary).
+    collected_at: Instant,
+    /// Fork-join launch issued (stage span ends, execute begins).  The
+    /// finish phase supplies `done_at` when it observes completion.
+    exec_at: Instant,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -254,6 +260,9 @@ fn run(
             counters.cancelled.fetch_add(1, Ordering::Relaxed);
             continue;
         }
+        // claimed-but-not-replied gauge (the serve `top` op); batch
+        // peels below add their members, every reply path subtracts
+        inflight_add(&counters, spec.id, 1);
 
         let source = ClusterView {
             router: &router,
@@ -278,12 +287,14 @@ fn run(
                 if let Some(pc) = counters.cluster(spec.id) {
                     pc.completed.fetch_add(1, Ordering::Relaxed);
                 }
+                inflight_sub(&counters, spec.id, 1);
                 let _ = job.reply.send(Ok(GemmOutcome::fence_ack(spec.id)));
             }
             JobPayload::Gemv(req) => {
                 let cap = (gemv_batch_cap(&blas, req.m, req.n) / depth).max(1);
                 let mut batch = batcher.collect(&source, job, cap);
-                drop_cancelled(&mut batch, &counters);
+                inflight_add(&counters, spec.id, batch.len() as u64 - 1);
+                drop_cancelled(&mut batch, &counters, spec.id);
                 if batch.is_empty() {
                     continue;
                 }
@@ -309,7 +320,8 @@ fn run(
                     );
                 }
                 let mut batch = batcher.collect(&source, job, usize::MAX);
-                drop_cancelled(&mut batch, &counters);
+                inflight_add(&counters, spec.id, batch.len() as u64 - 1);
+                drop_cancelled(&mut batch, &counters, spec.id);
                 if batch.is_empty() {
                     continue;
                 }
@@ -364,7 +376,8 @@ fn run(
                     cap,
                     Some(target != ExecTarget::Host),
                 );
-                drop_cancelled(&mut batch, &counters);
+                inflight_add(&counters, spec.id, batch.len() as u64 - 1);
+                drop_cancelled(&mut batch, &counters, spec.id);
                 if batch.is_empty() {
                     continue;
                 }
@@ -413,15 +426,41 @@ fn boot_session(spec: &ClusterSpec, artifacts: &PathBuf) -> Result<HeroBlas> {
 }
 
 /// Remove members whose submitter cancelled while they were queued.
-fn drop_cancelled(batch: &mut Vec<Job>, counters: &SchedCounters) {
+fn drop_cancelled(batch: &mut Vec<Job>, counters: &SchedCounters, cluster: u32) {
     batch.retain(|j| {
         if j.cancel.is_cancelled() {
             counters.cancelled.fetch_add(1, Ordering::Relaxed);
+            inflight_sub(counters, cluster, 1);
             false
         } else {
             true
         }
     });
+}
+
+/// Raise the cluster's claimed-but-not-replied gauge by `k`.
+fn inflight_add(counters: &SchedCounters, cluster: u32, k: u64) {
+    if k == 0 {
+        return;
+    }
+    if let Some(pc) = counters.cluster(cluster) {
+        pc.inflight.fetch_add(k, Ordering::Relaxed);
+    }
+}
+
+/// Lower the gauge by `k`, saturating at zero (a stale snapshot must
+/// never wrap the gauge to u64::MAX).
+fn inflight_sub(counters: &SchedCounters, cluster: u32, k: u64) {
+    if k == 0 {
+        return;
+    }
+    if let Some(pc) = counters.cluster(cluster) {
+        let _ = pc.inflight.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |v| Some(v.saturating_sub(k)),
+        );
+    }
 }
 
 /// How many batch members this cluster's DRAM slice can stage at once,
@@ -599,6 +638,7 @@ fn serve_gemm(
     // map(alloc:) outputs instead of launching for dropped receivers ----
     if batch.iter().all(|j| j.cancel.is_cancelled()) {
         counters.cancelled.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        inflight_sub(counters, cluster, batch.len() as u64);
         blas.gemm_batch_abandon(staged_run);
         sync_directory(blas, router, cluster);
         if inflight.is_none() {
@@ -634,6 +674,7 @@ fn serve_gemm(
 
     // ---- execute (doorbell + compute; completion word posted) ----
     let before = snap(blas);
+    let exec_at = Instant::now();
     let run = match blas.gemm_batch_execute(staged_run) {
         Ok(r) => r,
         Err(e) => {
@@ -661,6 +702,8 @@ fn serve_gemm(
         acct,
         queue_ms,
         work_us: t0.elapsed().as_micros() as u64,
+        collected_at: t0,
+        exec_at,
     };
     if depth >= 2 {
         *inflight = Some(infl); // finished when the next job (or none) arrives
@@ -744,6 +787,7 @@ fn serve_gemv(
     // ---- cancel-after-stage (see serve_gemm) ----
     if batch.iter().all(|j| j.cancel.is_cancelled()) {
         counters.cancelled.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        inflight_sub(counters, cluster, batch.len() as u64);
         blas.gemv_batch_abandon(staged_run);
         sync_directory(blas, router, cluster);
         if inflight.is_none() {
@@ -764,6 +808,7 @@ fn serve_gemv(
 
     // ---- execute ----
     let before = snap(blas);
+    let exec_at = Instant::now();
     let run = match blas.gemv_batch_execute(staged_run) {
         Ok(r) => r,
         Err(e) => {
@@ -788,6 +833,8 @@ fn serve_gemv(
         acct,
         queue_ms,
         work_us: t0.elapsed().as_micros() as u64,
+        collected_at: t0,
+        exec_at,
     };
     if depth >= 2 {
         *inflight = Some(infl);
@@ -892,6 +939,7 @@ fn serve_chain(
     if batch[0].cancel.is_cancelled() {
         blas.chain_abandon(staged_run);
         counters.cancelled.fetch_add(1, Ordering::Relaxed);
+        inflight_sub(counters, cluster, 1);
         sync_directory(blas, router, cluster);
         if inflight.is_none() {
             debug_assert_pins_drained(blas);
@@ -922,6 +970,7 @@ fn serve_chain(
 
     // ---- execute: one doorbell runs every link ----
     let before = snap(blas);
+    let exec_at = Instant::now();
     let run = match blas.chain_execute(staged_run) {
         Ok(r) => r,
         Err(e) => {
@@ -946,6 +995,8 @@ fn serve_chain(
         acct,
         queue_ms,
         work_us: t0.elapsed().as_micros() as u64,
+        collected_at: t0,
+        exec_at,
     };
     if depth >= 2 {
         *inflight = Some(infl);
@@ -976,6 +1027,7 @@ fn serve_chain_unchained(
     let queue_ms = queue_waits(&batch);
     blas.reset_run();
     let before = snap(blas);
+    let exec_at = Instant::now();
     let mut h = x;
     for (w, b) in req.dims.windows(2).zip(weights) {
         let (k, n) = (w[0], w[1]);
@@ -1001,6 +1053,7 @@ fn serve_chain_unchained(
             }
         }
     }
+    let done_at = Instant::now();
     sync_directory(blas, router, cluster);
     let checksum = h.iter().sum::<f64>();
     let acct = delta(before, snap(blas));
@@ -1016,6 +1069,8 @@ fn serve_chain_unchained(
         acct,
         &queue_ms,
         t0.elapsed().as_micros() as u64,
+        BatchMarks { collected_at: t0, exec_at, done_at },
+        Some(&req.dims),
         metrics_prev,
     );
 }
@@ -1028,6 +1083,7 @@ fn reply_error(counters: &SchedCounters, cluster: u32, batch: &[Job], msg: &str)
     if let Some(pc) = counters.cluster(cluster) {
         pc.batches.fetch_add(1, Ordering::Relaxed);
     }
+    inflight_sub(counters, cluster, batch.len() as u64);
     for job in batch {
         let _ = job.reply.send(Err(msg.to_string()));
     }
@@ -1047,6 +1103,7 @@ fn serve_gemm_host(
     let queue_ms = queue_waits(&batch);
     blas.reset_run();
     let before = snap(blas);
+    let exec_at = Instant::now();
     let mut checksums = Vec::with_capacity(batch.len());
     for job in &batch {
         let JobPayload::Gemm(r) = &job.payload else {
@@ -1073,10 +1130,12 @@ fn serve_gemm_host(
             }
         }
     }
+    let done_at = Instant::now();
     let acct = delta(before, snap(blas));
     send_outcomes(
         blas, cluster, counters, &batch, "gemm", (n, n), req.mode, &checksums,
-        acct, &queue_ms, t0.elapsed().as_micros() as u64, metrics_prev,
+        acct, &queue_ms, t0.elapsed().as_micros() as u64,
+        BatchMarks { collected_at: t0, exec_at, done_at }, None, metrics_prev,
     );
 }
 
@@ -1096,6 +1155,7 @@ fn serve_gemv_host(
     let queue_ms = queue_waits(&batch);
     blas.reset_run();
     let before = snap(blas);
+    let exec_at = Instant::now();
     let mut checksums = Vec::with_capacity(batch.len());
     for (a, x) in &data {
         let mut y = vec![0.0; m];
@@ -1110,10 +1170,12 @@ fn serve_gemv_host(
             }
         }
     }
+    let done_at = Instant::now();
     let acct = delta(before, snap(blas));
     send_outcomes(
         blas, cluster, counters, &batch, "gemv", (m, n), req.mode, &checksums,
-        acct, &queue_ms, t0.elapsed().as_micros() as u64, metrics_prev,
+        acct, &queue_ms, t0.elapsed().as_micros() as u64,
+        BatchMarks { collected_at: t0, exec_at, done_at }, None, metrics_prev,
     );
 }
 
@@ -1155,6 +1217,7 @@ fn serve_level1(
 
     blas.reset_run();
     let before = snap(blas);
+    let exec_at = Instant::now();
     let result = {
         let inputs: Vec<(f64, &[f64], &[f64])> = data
             .iter()
@@ -1164,6 +1227,7 @@ fn serve_level1(
             outs.iter_mut().map(|o| o.as_mut_slice()).collect();
         blas.level1_batch(kind, &inputs, &mut out_refs)
     };
+    let done_at = Instant::now();
     sync_directory(blas, router, cluster);
     let acct = delta(before, snap(blas));
 
@@ -1173,6 +1237,7 @@ fn serve_level1(
             send_outcomes(
                 blas, cluster, counters, &batch, req.op.name(), (1, n), req.mode,
                 &checksums, acct, &queue_ms, t0.elapsed().as_micros() as u64,
+                BatchMarks { collected_at: t0, exec_at, done_at }, None,
                 metrics_prev,
             );
         }
@@ -1200,8 +1265,17 @@ fn finish_batch(
     let t_finish = Instant::now();
     let before = snap(blas);
 
-    let Inflight { jobs, run, acct: batch_acct, queue_ms, work_us } = infl;
-    let (finish, checksums, op, dims, mode) = match run {
+    let Inflight {
+        jobs,
+        run,
+        acct: batch_acct,
+        queue_ms,
+        work_us,
+        collected_at,
+        exec_at,
+    } = infl;
+    let marks = BatchMarks { collected_at, exec_at, done_at: t_finish };
+    let (finish, checksums, op, dims, mode, chain_dims) = match run {
         InflightRun::Gemm { req, mut data, run } => {
             let finish = {
                 let mut outs: Vec<&mut [f64]> =
@@ -1210,7 +1284,7 @@ fn finish_batch(
             };
             let checksums: Vec<f64> =
                 data.iter().map(|(_, _, c)| c.iter().sum()).collect();
-            (finish, checksums, "gemm", (req.n, req.n), req.mode)
+            (finish, checksums, "gemm", (req.n, req.n), req.mode, None)
         }
         InflightRun::Gemv { req, mut ys, run } => {
             let finish = {
@@ -1219,7 +1293,7 @@ fn finish_batch(
                 blas.gemv_batch_finish(run, &mut outs)
             };
             let checksums: Vec<f64> = ys.iter().map(|y| y.iter().sum()).collect();
-            (finish, checksums, "gemv", (req.m, req.n), req.mode)
+            (finish, checksums, "gemv", (req.m, req.n), req.mode, None)
         }
         InflightRun::Chain { req, mut out, run } => {
             // only the final link's output crosses back to the host; the
@@ -1227,7 +1301,14 @@ fn finish_batch(
             let finish = blas.chain_finish(run, &mut out);
             let checksum = out.iter().sum::<f64>();
             let n_last = *req.dims.last().expect("non-empty dims");
-            (finish, vec![checksum], "chain", (req.m, n_last), req.mode)
+            (
+                finish,
+                vec![checksum],
+                "chain",
+                (req.m, n_last),
+                req.mode,
+                Some(req.dims),
+            )
         }
     };
     let mut acct = batch_acct;
@@ -1251,6 +1332,8 @@ fn finish_batch(
                 acct,
                 &queue_ms,
                 service_us,
+                marks,
+                chain_dims.as_deref(),
                 metrics_prev,
             );
         }
@@ -1277,6 +1360,8 @@ fn send_outcomes(
     acct: BatchAcct,
     queue_ms: &[f64],
     service_us: u64,
+    marks: BatchMarks,
+    chain_dims: Option<&[usize]>,
     metrics_prev: &mut Metrics,
 ) {
     let b = batch.len();
@@ -1313,22 +1398,46 @@ fn send_outcomes(
     // what this platform actually does ----
     if let Some(model) = &blas.policy.model {
         if model.calibrate_enabled() {
-            let dims = match op {
-                "gemm" => (m, n, n),
-                "gemv" => (m, n, 0),
-                _ => (n, 0, 0), // axpy/dot report (m, n) = (1, n)
-            };
             let device_total = acct.data_copy + acct.fork_join + acct.compute;
-            if device_total > 0 {
-                model.observe(op, dims, b, device_total, false, acct.warm_b);
-            }
-            if acct.host_compute > 0 {
-                model.observe(op, dims, b, acct.host_compute, true, false);
+            if let Some(cdims) = chain_dims {
+                // chained launches have no single (m, n, k): fold the
+                // observed virtual time back through the chain-cycle
+                // predictors instead of silently skipping feedback
+                if device_total > 0 {
+                    model.observe_chain(m, cdims, device_total, false);
+                }
+                if acct.host_compute > 0 {
+                    model.observe_chain(m, cdims, acct.host_compute, true);
+                }
+            } else {
+                let dims = match op {
+                    "gemm" => (m, n, n),
+                    "gemv" => (m, n, 0),
+                    _ => (n, 0, 0), // axpy/dot report (m, n) = (1, n)
+                };
+                if device_total > 0 {
+                    model.observe(op, dims, b, device_total, false, acct.warm_b);
+                }
+                if acct.host_compute > 0 {
+                    model.observe(op, dims, b, acct.host_compute, true, false);
+                }
             }
         }
     }
 
+    inflight_sub(counters, cluster, b as u64);
+    let end = Instant::now();
     for ((job, checksum), wait) in batch.iter().zip(checksums).zip(queue_ms) {
+        let spans = SpanBreakdown::compute(job.enqueued_at, job.spans, marks, end);
+        counters.note_latency_us(op, cluster, spans.total_us);
+        counters.note_span_us(
+            spans.queue_us,
+            spans.route_us,
+            spans.linger_us,
+            spans.stage_us,
+            spans.execute_us,
+            spans.finish_us,
+        );
         let _ = job.reply.send(Ok(GemmOutcome {
             op,
             m,
@@ -1343,6 +1452,7 @@ fn send_outcomes(
             cluster,
             batch_size: b,
             queue_ms: *wait,
+            spans,
         }));
     }
 }
@@ -1364,6 +1474,7 @@ impl GemmOutcome {
             cluster,
             batch_size: 1,
             queue_ms: 0.0,
+            spans: SpanBreakdown::default(),
         }
     }
 }

@@ -41,20 +41,32 @@
 //! "queue full", "retry_after_ms": ...}.  A request whose reply times
 //! out at this layer cancels its job, so the pool never launches work
 //! for a dropped receiver.  `{"op": "metrics"}` reports the scheduler
-//! counters — pool aggregates plus a `clusters` array with each
-//! cluster's run-queue depth, cache hits and stolen / affinity-routed
-//! job counts; `{"op": "shutdown"}` stops the server (used by tests).
+//! counters — pool aggregates plus per-op-class p50/p99/p999 latency
+//! percentiles, an aggregate serving-path `spans` breakdown, and a
+//! `clusters` array with each cluster's run-queue depth, cache hits and
+//! stolen / affinity-routed job counts; `{"op": "top"}` emits a compact
+//! live view (per-cluster depth / hits / steals / inflight);
+//! `{"op": "shutdown"}` stops the server (used by tests).
+//!
+//! Two cross-cutting request fields: `"req_id"` (string or number) is
+//! echoed verbatim on every reply frame — success, error and
+//! backpressure alike — so a client multiplexing requests can correlate
+//! them (absent, the server assigns `"srv-<seq>"`); `"trace": true` on
+//! any compute op adds the request's span breakdown (`queue -> route ->
+//! stage -> execute -> finish`, wall-clock microseconds) to its reply,
+//! whose named stages sum exactly to the reported `latency_us`.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 use crate::config::{DispatchMode, PlatformConfig};
 use crate::error::{Error, Result};
+use crate::metrics::OP_CLASSES;
 use crate::sched::{
     ChainRequest, GemmOutcome, GemmRequest, GemvRequest, JobPayload, Level1Op,
     Level1Request, Priority, Scheduler, SubmitError,
@@ -95,8 +107,8 @@ fn backpressure_line(depth: usize, retry_after_ms: u64) -> String {
     compact(&mut j)
 }
 
-fn gemm_response(o: &GemmOutcome) -> String {
-    let mut j = obj(vec![
+fn gemm_response(o: &GemmOutcome, trace: bool) -> String {
+    let mut pairs = vec![
         ("ok", Json::Bool(true)),
         ("op", Json::Str(o.op.into())),
         ("m", Json::Num(o.m as f64)),
@@ -111,8 +123,38 @@ fn gemm_response(o: &GemmOutcome) -> String {
         ("cluster", Json::Num(o.cluster as f64)),
         ("batch_size", Json::Num(o.batch_size as f64)),
         ("queue_ms", Json::Num(o.queue_ms)),
-    ]);
+    ];
+    if trace {
+        let s = &o.spans;
+        // contract: the five named stages sum exactly to latency_us
+        pairs.push(("latency_us", Json::Num(s.total_us as f64)));
+        pairs.push((
+            "spans",
+            obj(vec![
+                ("queue_us", Json::Num(s.queue_us as f64)),
+                ("route_us", Json::Num(s.route_us as f64)),
+                ("linger_us", Json::Num(s.linger_us as f64)),
+                ("stage_us", Json::Num(s.stage_us as f64)),
+                ("execute_us", Json::Num(s.execute_us as f64)),
+                ("finish_us", Json::Num(s.finish_us as f64)),
+                ("total_us", Json::Num(s.total_us as f64)),
+            ]),
+        ));
+    }
+    let mut j = obj(pairs);
     compact(&mut j)
+}
+
+/// Echo the request's correlation token onto a reply frame (every frame
+/// is a JSON object; non-object lines pass through untouched).
+fn with_req_id(resp: String, rid: &Json) -> String {
+    match Json::parse(&resp) {
+        Ok(Json::Obj(mut map)) => {
+            map.insert("req_id".into(), rid.clone());
+            compact(&mut Json::Obj(map))
+        }
+        _ => resp,
+    }
 }
 
 /// Shared request fields: dispatch mode + priority.
@@ -252,13 +294,29 @@ fn parse_gemv(req: &Json) -> std::result::Result<(GemvRequest, Priority), String
     Ok((GemvRequest { m, n, mode, seed }, priority))
 }
 
-/// Handle one request line; returns (response, shutdown?).
+/// Handle one request line; returns (response, shutdown?).  Every reply
+/// frame — success, error and backpressure alike — carries a `req_id`:
+/// the request's own token echoed back (string or number), or a
+/// server-assigned `srv-<seq>` when absent or the line failed to parse.
 fn handle_line(sched: &Scheduler, line: &str) -> (String, bool) {
-    let req = match Json::parse(line) {
-        Ok(j) => j,
-        Err(e) => return (err_line(&format!("bad json: {e}")), false),
+    static REQ_SEQ: AtomicU64 = AtomicU64::new(1);
+    let parsed = Json::parse(line);
+    let rid = match parsed.as_ref().ok().and_then(|r| r.get("req_id")) {
+        Some(v) if matches!(v, Json::Str(_) | Json::Num(_)) => v.clone(),
+        _ => Json::Str(format!("srv-{}", REQ_SEQ.fetch_add(1, Ordering::Relaxed))),
     };
+    let (resp, shut) = match parsed {
+        Ok(req) => dispatch_op(sched, &req),
+        Err(e) => (err_line(&format!("bad json: {e}")), false),
+    };
+    (with_req_id(resp, &rid), shut)
+}
+
+/// Route one parsed request to its op handler.
+fn dispatch_op(sched: &Scheduler, req: &Json) -> (String, bool) {
     let op = req.get("op").and_then(|o| o.as_str()).unwrap_or("");
+    // opt-in per-request span breakdown on the reply
+    let trace = matches!(req.get("trace"), Some(Json::Bool(true)));
     match op {
         "shutdown" => (err_line("shutting down"), true),
         "ping" => {
@@ -289,6 +347,7 @@ fn handle_line(sched: &Scheduler, line: &str) -> (String, bool) {
                     obj(vec![
                         ("cluster", Json::Num(c.cluster as f64)),
                         ("queue_depth", Json::Num(c.queue_depth as f64)),
+                        ("inflight", Json::Num(c.inflight as f64)),
                         ("completed", Json::Num(c.completed as f64)),
                         ("batches", Json::Num(c.batches as f64)),
                         ("stolen", Json::Num(c.stolen as f64)),
@@ -297,9 +356,37 @@ fn handle_line(sched: &Scheduler, line: &str) -> (String, bool) {
                         ("cache_hits", Json::Num(c.cache_hits as f64)),
                         ("cache_misses", Json::Num(c.cache_misses as f64)),
                         ("bytes_to_device", Json::Num(c.bytes_to_device as f64)),
+                        ("p50_us", Json::Num(c.p50_us as f64)),
+                        ("p99_us", Json::Num(c.p99_us as f64)),
+                        ("p999_us", Json::Num(c.p999_us as f64)),
                     ])
                 })
                 .collect();
+            // per-op-class latency percentiles (log-bucket histograms:
+            // each quantile reports its bucket's upper bound)
+            let lat = |l: &crate::metrics::OpClassLatency| {
+                obj(vec![
+                    ("count", Json::Num(l.count as f64)),
+                    ("p50_us", Json::Num(l.p50_us as f64)),
+                    ("p99_us", Json::Num(l.p99_us as f64)),
+                    ("p999_us", Json::Num(l.p999_us as f64)),
+                ])
+            };
+            let latency = obj(
+                OP_CLASSES
+                    .iter()
+                    .zip(m.latency.iter())
+                    .map(|(name, l)| (*name, lat(l)))
+                    .collect(),
+            );
+            let spans = obj(vec![
+                ("queue_us", Json::Num(m.spans.queue_us as f64)),
+                ("route_us", Json::Num(m.spans.route_us as f64)),
+                ("linger_us", Json::Num(m.spans.linger_us as f64)),
+                ("stage_us", Json::Num(m.spans.stage_us as f64)),
+                ("execute_us", Json::Num(m.spans.execute_us as f64)),
+                ("finish_us", Json::Num(m.spans.finish_us as f64)),
+            ]);
             let mut j = obj(vec![
                 ("ok", Json::Bool(true)),
                 ("submitted", Json::Num(m.submitted as f64)),
@@ -324,28 +411,60 @@ fn handle_line(sched: &Scheduler, line: &str) -> (String, bool) {
                 ("chains", Json::Num(m.chains as f64)),
                 ("chain_bytes_elided", Json::Num(m.chain_bytes_elided as f64)),
                 ("crossover_estimate", crossover),
+                ("latency", latency),
+                ("p50_us", Json::Num(m.overall.p50_us as f64)),
+                ("p99_us", Json::Num(m.overall.p99_us as f64)),
+                ("p999_us", Json::Num(m.overall.p999_us as f64)),
+                ("spans", spans),
                 ("queue_depth_peak", Json::Num(m.queue_depth_peak as f64)),
                 ("pool", Json::Num(sched.pool_size() as f64)),
                 ("clusters", Json::Arr(clusters)),
             ]);
             (compact(&mut j), false)
         }
+        "top" => {
+            // compact live view: what each cluster is doing right now
+            let m = sched.metrics();
+            let clusters: Vec<Json> = m
+                .clusters
+                .iter()
+                .map(|c| {
+                    obj(vec![
+                        ("cluster", Json::Num(c.cluster as f64)),
+                        ("queue_depth", Json::Num(c.queue_depth as f64)),
+                        ("inflight", Json::Num(c.inflight as f64)),
+                        ("completed", Json::Num(c.completed as f64)),
+                        ("cache_hits", Json::Num(c.cache_hits as f64)),
+                        ("stolen", Json::Num(c.stolen as f64)),
+                        ("p99_us", Json::Num(c.p99_us as f64)),
+                    ])
+                })
+                .collect();
+            let mut j = obj(vec![
+                ("ok", Json::Bool(true)),
+                ("op", Json::Str("top".into())),
+                ("queue_depth", Json::Num(sched.queue_depth() as f64)),
+                ("completed", Json::Num(m.completed as f64)),
+                ("clusters", Json::Arr(clusters)),
+            ]);
+            (compact(&mut j), false)
+        }
         "gemm" => {
-            let (gemm, priority) = match parse_gemm(&req) {
+            let (gemm, priority) = match parse_gemm(req) {
                 Ok(p) => p,
                 Err(msg) => return (err_line(&msg), false),
             };
-            submit_and_wait(sched, priority, JobPayload::Gemm(gemm))
+            submit_and_wait(sched, priority, JobPayload::Gemm(gemm), trace)
         }
         "gemv" => {
-            let (gemv, priority) = match parse_gemv(&req) {
+            let (gemv, priority) = match parse_gemv(req) {
                 Ok(p) => p,
                 Err(msg) => return (err_line(&msg), false),
             };
-            submit_and_wait(sched, priority, JobPayload::Gemv(gemv))
+            submit_and_wait(sched, priority, JobPayload::Gemv(gemv), trace)
         }
         "chain" => {
-            let (chain, priority) = match parse_chain(&req) {
+            let (chain, priority) = match parse_chain(req) {
                 Ok(p) => p,
                 Err(msg) => return (err_line(&msg), false),
             };
@@ -355,15 +474,15 @@ fn handle_line(sched: &Scheduler, line: &str) -> (String, bool) {
             if let Err(msg) = sched.validate_chain(&chain) {
                 return (err_line(&msg), false);
             }
-            submit_and_wait(sched, priority, JobPayload::Chain(chain))
+            submit_and_wait(sched, priority, JobPayload::Chain(chain), trace)
         }
         "axpy" | "dot" => {
             let l1op = if op == "axpy" { Level1Op::Axpy } else { Level1Op::Dot };
-            let (l1, priority) = match parse_level1(l1op, &req) {
+            let (l1, priority) = match parse_level1(l1op, req) {
                 Ok(p) => p,
                 Err(msg) => return (err_line(&msg), false),
             };
-            submit_and_wait(sched, priority, JobPayload::Level1(l1))
+            submit_and_wait(sched, priority, JobPayload::Level1(l1), trace)
         }
         other => (err_line(&format!("unknown op '{other}'")), false),
     }
@@ -376,10 +495,11 @@ fn submit_and_wait(
     sched: &Scheduler,
     priority: Priority,
     payload: JobPayload,
+    trace: bool,
 ) -> (String, bool) {
     match sched.submit(priority, payload) {
         Ok(submission) => match submission.recv_timeout(REPLY_TIMEOUT) {
-            Ok(Ok(outcome)) => (gemm_response(&outcome), false),
+            Ok(Ok(outcome)) => (gemm_response(&outcome, trace), false),
             Ok(Err(msg)) => (err_line(&msg), false),
             Err(_) => (err_line("worker unavailable"), false),
         },
@@ -693,9 +813,8 @@ mod tests {
         assert!(parse_level1(Level1Op::Dot, &req).is_err());
     }
 
-    #[test]
-    fn gemm_response_shape() {
-        let o = GemmOutcome {
+    fn outcome() -> GemmOutcome {
+        GemmOutcome {
             op: "gemm",
             m: 64,
             n: 64,
@@ -709,8 +828,21 @@ mod tests {
             cluster: 2,
             batch_size: 4,
             queue_ms: 0.5,
-        };
-        let j = Json::parse(&gemm_response(&o)).unwrap();
+            spans: crate::sched::SpanBreakdown {
+                queue_us: 100,
+                route_us: 20,
+                linger_us: 5,
+                stage_us: 30,
+                execute_us: 800,
+                finish_us: 50,
+                total_us: 1000,
+            },
+        }
+    }
+
+    #[test]
+    fn gemm_response_shape() {
+        let j = Json::parse(&gemm_response(&outcome(), false)).unwrap();
         assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
         assert_eq!(j.get("op").and_then(|v| v.as_str()), Some("gemm"));
         assert_eq!(j.get("m").and_then(|v| v.as_u64()), Some(64));
@@ -721,5 +853,43 @@ mod tests {
             .map(|k| j.get(k).and_then(|v| v.as_f64()).unwrap())
             .sum::<f64>();
         assert!((sum - j.get("total_ms").and_then(|v| v.as_f64()).unwrap()).abs() < 1e-9);
+        // spans are opt-in: absent without trace
+        assert_eq!(j.get("spans"), None);
+        assert_eq!(j.get("latency_us"), None);
+    }
+
+    #[test]
+    fn traced_response_stages_sum_to_latency() {
+        let j = Json::parse(&gemm_response(&outcome(), true)).unwrap();
+        let latency = j.get("latency_us").and_then(|v| v.as_u64()).unwrap();
+        let spans = j.get("spans").expect("trace: true adds a spans object");
+        // the five NAMED stages (linger is a sub-span of stage) sum
+        // exactly to the reported latency — the trace contract
+        let sum: u64 = ["queue_us", "route_us", "stage_us", "execute_us", "finish_us"]
+            .iter()
+            .map(|k| spans.get(k).and_then(|v| v.as_u64()).unwrap())
+            .sum();
+        assert_eq!(sum, latency);
+        assert_eq!(latency, 1000);
+        assert_eq!(spans.get("linger_us").and_then(|v| v.as_u64()), Some(5));
+        assert_eq!(spans.get("total_us").and_then(|v| v.as_u64()), Some(1000));
+    }
+
+    #[test]
+    fn req_id_echoes_onto_every_frame_shape() {
+        // client token (string) echoed verbatim on success-shaped frames
+        let r = with_req_id(gemm_response(&outcome(), false), &Json::Str("abc-7".into()));
+        let j = Json::parse(&r).unwrap();
+        assert_eq!(j.get("req_id").and_then(|v| v.as_str()), Some("abc-7"));
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        // numeric tokens round-trip too, on error and backpressure frames
+        let r = with_req_id(err_line("boom"), &Json::Num(42.0));
+        let j = Json::parse(&r).unwrap();
+        assert_eq!(j.get("req_id").and_then(|v| v.as_u64()), Some(42));
+        assert_eq!(j.get("error").and_then(|v| v.as_str()), Some("boom"));
+        let r = with_req_id(backpressure_line(3, 10), &Json::Num(9.0));
+        let j = Json::parse(&r).unwrap();
+        assert_eq!(j.get("req_id").and_then(|v| v.as_u64()), Some(9));
+        assert_eq!(j.get("error").and_then(|v| v.as_str()), Some("queue full"));
     }
 }

@@ -131,6 +131,40 @@ fn serve_gemm_requests_end_to_end() {
         r2.get("checksum").and_then(|v| v.as_f64()).unwrap(),
     );
 
+    // trace: true returns the span breakdown; the five named stages sum
+    // exactly to the reported end-to-end latency
+    let r = request(
+        &mut stream,
+        &mut reader,
+        r#"{"op": "gemm", "n": 64, "mode": "device_only", "trace": true, "req_id": "t-1"}"#,
+    );
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r:?}");
+    assert_eq!(r.get("req_id").and_then(|v| v.as_str()), Some("t-1"));
+    let latency = r.get("latency_us").and_then(|v| v.as_u64()).unwrap();
+    let spans = r.get("spans").expect("trace: true adds spans");
+    let stage_sum: u64 = ["queue_us", "route_us", "stage_us", "execute_us", "finish_us"]
+        .iter()
+        .map(|k| spans.get(k).and_then(|v| v.as_u64()).unwrap())
+        .sum();
+    assert_eq!(stage_sum, latency, "{spans:?}");
+    assert!(spans.get("linger_us").and_then(|v| v.as_u64()).is_some());
+
+    // req_id correlation: echoed on success (numbers too), on errors,
+    // and server-assigned when the client sends none
+    let r = request(&mut stream, &mut reader, r#"{"op": "ping", "req_id": 7}"#);
+    assert_eq!(r.get("req_id").and_then(|v| v.as_u64()), Some(7));
+    assert_eq!(r.get("spans"), None);
+    let r = request(&mut stream, &mut reader, r#"{"op": "ping"}"#);
+    let rid = r.get("req_id").and_then(|v| v.as_str()).unwrap();
+    assert!(rid.starts_with("srv-"), "{rid}");
+    let r = request(
+        &mut stream,
+        &mut reader,
+        r#"{"op": "bogus", "req_id": "e-9"}"#,
+    );
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(r.get("req_id").and_then(|v| v.as_str()), Some("e-9"));
+
     // scheduler counters over the wire (incl. the data-movement family)
     let m = request(&mut stream, &mut reader, r#"{"op": "metrics"}"#);
     assert_eq!(m.get("ok"), Some(&Json::Bool(true)));
@@ -156,6 +190,37 @@ fn serve_gemm_requests_end_to_end() {
     assert!(gemm_n > 64 && gemm_n <= 128, "gemm crossover {gemm_n}");
     assert_eq!(x.get("gemv_n").and_then(|v| v.as_u64()), Some(0));
     assert_eq!(x.get("level1_n").and_then(|v| v.as_u64()), Some(0));
+    // latency percentiles: overall plus the per-op-class breakdown
+    for key in ["p50_us", "p99_us", "p999_us"] {
+        assert!(m.get(key).and_then(|v| v.as_u64()).unwrap() > 0, "missing {key}");
+    }
+    let lat = m.get("latency").expect("missing latency");
+    for class in ["gemm", "gemv", "level1", "chain"] {
+        let l = lat.get(class).unwrap_or_else(|| panic!("missing class {class}"));
+        assert!(l.get("p99_us").and_then(|v| v.as_u64()).is_some());
+    }
+    let g = lat.get("gemm").unwrap();
+    assert!(g.get("count").and_then(|v| v.as_u64()).unwrap() >= 3);
+    assert!(g.get("p99_us").and_then(|v| v.as_u64()).unwrap() > 0);
+    // aggregate span breakdown: execute time must have accumulated
+    let s = m.get("spans").expect("missing spans");
+    assert!(s.get("execute_us").and_then(|v| v.as_u64()).unwrap() > 0);
+
+    // the live per-cluster view
+    let t = request(&mut stream, &mut reader, r#"{"op": "top"}"#);
+    assert_eq!(t.get("ok"), Some(&Json::Bool(true)), "{t:?}");
+    let clusters = match t.get("clusters") {
+        Some(Json::Arr(a)) => a,
+        other => panic!("missing clusters array: {other:?}"),
+    };
+    assert!(!clusters.is_empty());
+    for c in clusters {
+        for key in ["cluster", "queue_depth", "inflight", "cache_hits", "stolen", "p99_us"] {
+            assert!(c.get(key).and_then(|v| v.as_u64()).is_some(), "missing {key}");
+        }
+        // everything has been replied to: the inflight gauge is drained
+        assert_eq!(c.get("inflight").and_then(|v| v.as_u64()), Some(0));
+    }
 
     // shutdown stops the server thread
     let _ = request(&mut stream, &mut reader, r#"{"op": "shutdown"}"#);

@@ -1,0 +1,326 @@
+//! Perf-trajectory gate: diff two `serve_throughput` snapshots.
+//!
+//! ```sh
+//! cargo run --release --bin bench_compare -- BENCH_6.json bench_new.json
+//! ```
+//!
+//! Both inputs are JSONL snapshots as written by the bench's `--out FILE`
+//! flag (one JSON object per line; prose lines and `summary` lines are
+//! ignored).  Points are matched across the two files by their knob
+//! signature (pool/batching/cache/... plus client count), a per-sweep
+//! delta table is printed, and the exit status is the gate:
+//!
+//! * `0`  — no matched point regressed beyond tolerance
+//! * `1`  — at least one regression: throughput dropped more than 10 %
+//!   or p99 latency grew more than 15 % vs the baseline
+//! * `2`  — usage / parse error
+//!
+//! Points present in only one snapshot are reported but never fail the
+//! gate (sweeps gain knobs across PRs); wall-clock noise on shared CI
+//! runners is what the wide tolerances are for.
+
+use std::process::ExitCode;
+
+use hero_blas::util::json_lite::Json;
+
+/// Throughput may drop at most this fraction vs the baseline.
+const RPS_TOLERANCE: f64 = 0.10;
+/// p99 latency may grow at most this fraction vs the baseline.
+const P99_TOLERANCE: f64 = 0.15;
+
+/// One comparable bench point: a knob signature plus the two gated
+/// measurements (chain-workload points carry no p99).
+#[derive(Debug, Clone, PartialEq)]
+struct PointRec {
+    sig: String,
+    rps: f64,
+    p99_us: Option<f64>,
+}
+
+/// The knobs that identify a sweep point across snapshots.
+const SIG_KEYS: [&str; 9] = [
+    "pool",
+    "batching",
+    "cache",
+    "pipeline",
+    "shared_b",
+    "placement",
+    "auto_mixed",
+    "calibrate",
+    "clients",
+];
+
+fn sig_value(v: &Json) -> Option<String> {
+    match v {
+        Json::Bool(b) => Some(b.to_string()),
+        Json::Num(n) => Some(format!("{n}")),
+        _ => None,
+    }
+}
+
+/// Extract a comparable point from one snapshot line, or `None` for
+/// lines the gate ignores (prose, summaries, malformed JSON).
+fn point(line: &str) -> Option<PointRec> {
+    let j = Json::parse(line.trim()).ok()?;
+    j.get("bench")?;
+    if j.get("summary").is_some() {
+        return None;
+    }
+    if let Some(w) = j.get("workload").and_then(|v| v.as_str()) {
+        // chain sweep: no rps field; derive throughput from the wall
+        let chained = matches!(j.get("chained"), Some(Json::Bool(true)));
+        let requests = j.get("requests").and_then(|v| v.as_f64())?;
+        let wall_ms = j.get("wall_ms").and_then(|v| v.as_f64())?;
+        if wall_ms <= 0.0 {
+            return None;
+        }
+        return Some(PointRec {
+            sig: format!("{w} chained={chained}"),
+            rps: requests * 1e3 / wall_ms,
+            p99_us: None,
+        });
+    }
+    let rps = j.get("rps").and_then(|v| v.as_f64())?;
+    let mut sig = String::new();
+    for k in SIG_KEYS {
+        let v = sig_value(j.get(k)?)?;
+        if !sig.is_empty() {
+            sig.push(' ');
+        }
+        sig.push_str(&format!("{k}={v}"));
+    }
+    Some(PointRec { sig, rps, p99_us: j.get("p99_us").and_then(|v| v.as_f64()) })
+}
+
+fn parse_snapshot(text: &str) -> Vec<PointRec> {
+    text.lines().filter_map(point).collect()
+}
+
+/// One row of the delta table.
+#[derive(Debug, Clone)]
+struct Delta {
+    sig: String,
+    rps_old: f64,
+    rps_new: f64,
+    p99_old: Option<f64>,
+    p99_new: Option<f64>,
+    regressed: bool,
+    reason: &'static str,
+}
+
+fn pct(old: f64, new: f64) -> f64 {
+    if old <= 0.0 {
+        0.0
+    } else {
+        (new - old) / old * 100.0
+    }
+}
+
+/// Match points by signature and apply the gate thresholds.
+fn compare(old: &[PointRec], new: &[PointRec]) -> Vec<Delta> {
+    let mut rows = Vec::new();
+    for o in old {
+        let Some(n) = new.iter().find(|n| n.sig == o.sig) else {
+            continue;
+        };
+        let rps_bad = n.rps < o.rps * (1.0 - RPS_TOLERANCE);
+        let p99_bad = match (o.p99_us, n.p99_us) {
+            (Some(op), Some(np)) if op > 0.0 => np > op * (1.0 + P99_TOLERANCE),
+            _ => false,
+        };
+        let reason = match (rps_bad, p99_bad) {
+            (true, true) => "rps+p99 regression",
+            (true, false) => "rps regression",
+            (false, true) => "p99 regression",
+            (false, false) => "ok",
+        };
+        rows.push(Delta {
+            sig: o.sig.clone(),
+            rps_old: o.rps,
+            rps_new: n.rps,
+            p99_old: o.p99_us,
+            p99_new: n.p99_us,
+            regressed: rps_bad || p99_bad,
+            reason,
+        });
+    }
+    rows
+}
+
+fn fmt_p99(v: Option<f64>) -> String {
+    match v {
+        Some(p) => format!("{p:.0}"),
+        None => "-".into(),
+    }
+}
+
+fn print_table(rows: &[Delta], old_n: usize, new_n: usize) {
+    println!(
+        "{:<90} {:>9} {:>9} {:>7}  {:>8} {:>8} {:>7}  {}",
+        "point",
+        "rps_old",
+        "rps_new",
+        "drps%",
+        "p99_old",
+        "p99_new",
+        "dp99%",
+        "status"
+    );
+    for r in rows {
+        let dp99 = match (r.p99_old, r.p99_new) {
+            (Some(o), Some(n)) if o > 0.0 => format!("{:+.1}", pct(o, n)),
+            _ => "-".into(),
+        };
+        println!(
+            "{:<90} {:>9.1} {:>9.1} {:>+7.1}  {:>8} {:>8} {:>7}  {}",
+            r.sig,
+            r.rps_old,
+            r.rps_new,
+            pct(r.rps_old, r.rps_new),
+            fmt_p99(r.p99_old),
+            fmt_p99(r.p99_new),
+            dp99,
+            r.reason,
+        );
+    }
+    let matched = rows.len();
+    let regressed = rows.iter().filter(|r| r.regressed).count();
+    println!(
+        "\nmatched {matched} points (baseline {old_n}, new {new_n}); \
+         {regressed} regression(s); gate: rps -{:.0}% / p99 +{:.0}%",
+        RPS_TOLERANCE * 100.0,
+        P99_TOLERANCE * 100.0
+    );
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().collect();
+    if args.len() != 3 {
+        eprintln!("usage: bench_compare <baseline.jsonl> <new.jsonl>");
+        return ExitCode::from(2);
+    }
+    let read = |p: &str| match std::fs::read_to_string(p) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("bench_compare: cannot read {p}: {e}");
+            None
+        }
+    };
+    let (Some(old_text), Some(new_text)) = (read(&args[1]), read(&args[2])) else {
+        return ExitCode::from(2);
+    };
+    let old = parse_snapshot(&old_text);
+    let new = parse_snapshot(&new_text);
+    if old.is_empty() {
+        eprintln!("bench_compare: no bench points in baseline {}", args[1]);
+        return ExitCode::from(2);
+    }
+    let rows = compare(&old, &new);
+    print_table(&rows, old.len(), new.len());
+    if rows.iter().any(|r| r.regressed) {
+        ExitCode::from(1)
+    } else {
+        ExitCode::SUCCESS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BASE: &str = r#"
+== serve throughput: prose header, ignored ==
+{"bench": "serve_throughput", "n": 64, "pool": 1, "batching": false, "cache": false, "pipeline": false, "shared_b": false, "placement": false, "auto_mixed": false, "calibrate": false, "clients": 1, "requests": 12, "wall_ms": 30.0, "rps": 400.0, "p50_us": 512, "p99_us": 2048, "p999_us": 4096, "speedup_vs_serial": 1.00}
+{"bench": "serve_throughput", "n": 64, "pool": 4, "batching": true, "cache": false, "pipeline": false, "shared_b": false, "placement": false, "auto_mixed": false, "calibrate": false, "clients": 4, "requests": 24, "wall_ms": 20.0, "rps": 1200.0, "p50_us": 256, "p99_us": 1024, "p999_us": 2048, "speedup_vs_serial": 3.00}
+{"bench": "serve_throughput", "summary": "copy_bytes_cut", "value": 3.10}
+{"bench": "serve_throughput", "workload": "chain_mlp", "chained": true, "requests": 24, "wall_ms": 12.0, "bytes_to_device": 100, "chain_bytes_elided": 50, "chains": 24}
+"#;
+
+    fn degrade(rps_factor: f64, p99_factor: f64) -> String {
+        let mut out = String::new();
+        for p in parse_snapshot(BASE) {
+            // re-render a minimal comparable line from the parsed point
+            if p.sig.starts_with("chain_mlp") {
+                let wall = 24.0 * 1e3 / (p.rps * rps_factor);
+                out.push_str(&format!(
+                    "{{\"bench\": \"b\", \"workload\": \"chain_mlp\", \
+                     \"chained\": {}, \"requests\": 24, \"wall_ms\": {wall}}}\n",
+                    p.sig.contains("chained=true"),
+                ));
+            } else {
+                let kv = p
+                    .sig
+                    .split(' ')
+                    .map(|s| {
+                        let (k, v) = s.split_once('=').unwrap();
+                        format!("\"{k}\": {v}")
+                    })
+                    .collect::<Vec<_>>()
+                    .join(", ");
+                out.push_str(&format!(
+                    "{{\"bench\": \"b\", {kv}, \"rps\": {}, \"p99_us\": {}}}\n",
+                    p.rps * rps_factor,
+                    p.p99_us.unwrap() * p99_factor,
+                ));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn parses_points_and_skips_prose_and_summaries() {
+        let pts = parse_snapshot(BASE);
+        assert_eq!(pts.len(), 3);
+        assert!(pts[0].sig.contains("pool=1"));
+        assert!(pts[0].sig.contains("clients=1"));
+        assert_eq!(pts[0].p99_us, Some(2048.0));
+        assert_eq!(pts[2].sig, "chain_mlp chained=true");
+        assert!((pts[2].rps - 2000.0).abs() < 1e-9);
+        assert_eq!(pts[2].p99_us, None);
+    }
+
+    #[test]
+    fn self_compare_has_no_regressions() {
+        let pts = parse_snapshot(BASE);
+        let rows = compare(&pts, &pts);
+        assert_eq!(rows.len(), 3);
+        assert!(rows.iter().all(|r| !r.regressed));
+    }
+
+    #[test]
+    fn small_drift_within_tolerance_passes() {
+        let old = parse_snapshot(BASE);
+        let new = parse_snapshot(&degrade(0.95, 1.10));
+        let rows = compare(&old, &new);
+        assert_eq!(rows.len(), 3);
+        assert!(rows.iter().all(|r| !r.regressed));
+    }
+
+    #[test]
+    fn throughput_regression_trips_the_gate() {
+        let old = parse_snapshot(BASE);
+        let new = parse_snapshot(&degrade(0.80, 1.0));
+        let rows = compare(&old, &new);
+        assert!(rows.iter().all(|r| r.regressed));
+        assert!(rows.iter().any(|r| r.reason == "rps regression"));
+    }
+
+    #[test]
+    fn p99_regression_trips_the_gate() {
+        let old = parse_snapshot(BASE);
+        let new = parse_snapshot(&degrade(1.0, 1.30));
+        let rows = compare(&old, &new);
+        let bad: Vec<_> = rows.iter().filter(|r| r.regressed).collect();
+        // both percentile-carrying points regress; the chain point has no p99
+        assert_eq!(bad.len(), 2);
+        assert!(bad.iter().all(|r| r.reason == "p99 regression"));
+    }
+
+    #[test]
+    fn unmatched_points_are_skipped_not_failed() {
+        let old = parse_snapshot(BASE);
+        let rows = compare(&old, &old[..1].to_vec());
+        assert_eq!(rows.len(), 1);
+        assert!(!rows[0].regressed);
+    }
+}
