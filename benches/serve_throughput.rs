@@ -374,6 +374,106 @@ fn run_chain_point(
     (wall, bytes, elided, chains, sums)
 }
 
+/// The fault-matrix point (sweep 6): same shared-B GEMM workload, but
+/// with `[sched.fault]` ON and cluster 0 failing half its launches at
+/// the staging seam.  Every request must still complete `ok: true`
+/// (retried onto cluster 1, or host-fallback `degraded: true`); the
+/// point reports the recovery counters.  Emitted as a `summary` line so
+/// `tools/bench_compare` keeps gating the fault-FREE sweeps only —
+/// recovery wall time is not a perf trajectory.
+fn run_fault_point(clients: usize, per_client: usize) -> (Duration, u64, String) {
+    let mut cfg = PlatformConfig::default();
+    cfg.sched.pool_clusters = 2;
+    cfg.sched.queue_capacity = 256;
+    cfg.sched.batch_window_ms = 0;
+    cfg.sched.batch_max = 8;
+    cfg.sched.cache.cache_frac = 0.4;
+    cfg.sched.cache.cache_max_entries = 64;
+    cfg.sched.fault.enabled = true;
+    cfg.sched.fault.seed = 1;
+    cfg.sched.fault.staging_rate = 0.5;
+    cfg.sched.fault.target_cluster = 0;
+    cfg.sched.fault.backoff_base_ms = 1;
+    cfg.sched.fault.quarantine_threshold = 3;
+    cfg.sched.fault.probe_interval = 16;
+
+    let dir = hero_blas::find_artifacts_dir().expect("run `make artifacts` first");
+    let (tx, rx) = mpsc::channel();
+    let server =
+        std::thread::spawn(move || hero_blas::serve::serve(cfg, &dir, 0, Some(tx)));
+    let port = rx.recv_timeout(Duration::from_secs(300)).expect("server ready");
+
+    let barrier = Arc::new(Barrier::new(clients + 1));
+    let workers: Vec<_> = (0..clients)
+        .map(|c| {
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                barrier.wait();
+                let mut degraded = 0u64;
+                let mut done = 0usize;
+                while done < per_client {
+                    let seed = (c * per_client + done) as u64;
+                    let line = format!(
+                        "{{\"op\": \"gemm\", \"n\": {N}, \"mode\": \"device_only\", \
+                         \"seed\": {seed}, \"b_seed\": 42}}\n"
+                    );
+                    stream.write_all(line.as_bytes()).unwrap();
+                    stream.flush().unwrap();
+                    let mut resp = String::new();
+                    reader.read_line(&mut resp).unwrap();
+                    if resp.contains("\"ok\": true") {
+                        if resp.contains("\"degraded\": true") {
+                            degraded += 1;
+                        }
+                        done += 1;
+                    } else if resp.contains("retry_after_ms") {
+                        std::thread::sleep(Duration::from_millis(2));
+                    } else {
+                        panic!("fault-matrix request failed: {resp}");
+                    }
+                }
+                degraded
+            })
+        })
+        .collect();
+
+    barrier.wait();
+    let t0 = Instant::now();
+    let degraded: u64 = workers.into_iter().map(|w| w.join().unwrap()).sum();
+    let wall = t0.elapsed();
+
+    let mut stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    stream.write_all(b"{\"op\": \"metrics\"}\n").unwrap();
+    stream.flush().unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let m = Json::parse(resp.trim()).expect("metrics JSON");
+    let get = |k: &str| m.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
+    let counters = format!(
+        "\"faults_injected\": {}, \"retries\": {}, \"quarantined\": {}, \
+         \"host_fallbacks\": {}, \"cache_invalidated_bytes\": {}, \
+         \"pin_leaks\": {}, \"failed\": {}, \"degraded_replies\": {degraded}",
+        get("faults_injected"),
+        get("retries"),
+        get("quarantined"),
+        get("host_fallbacks"),
+        get("cache_invalidated_bytes"),
+        get("pin_leaks"),
+        get("failed"),
+    );
+    let faults = get("faults_injected");
+    stream.write_all(b"{\"op\": \"shutdown\"}\n").unwrap();
+    stream.flush().unwrap();
+    let mut resp = String::new();
+    let _ = reader.read_line(&mut resp);
+    server.join().unwrap().unwrap();
+
+    (wall, faults, counters)
+}
+
 /// Snapshot sink: every JSON line goes to stdout and (with `--out FILE`)
 /// to a JSONL file `tools/bench_compare` can diff against a committed
 /// baseline such as `BENCH_6.json`.
@@ -567,6 +667,23 @@ fn main() {
         "chained bytes_to_device {cb} not below unchained {ub}"
     );
 
+    // sweep 6: the fault matrix — cluster 0 failing half its launches.
+    // Every request must still complete; the summary line carries the
+    // recovery counters (and, being a summary, is NOT gated by
+    // bench_compare: fault-injected wall time is not a perf trajectory).
+    println!();
+    let (fw, faults, fault_counters) = run_fault_point(clients, per_client);
+    snap.emit(format!(
+        "{{\"bench\": \"serve_throughput\", \"summary\": \"fault_matrix\", \
+         \"requests\": {}, \"wall_ms\": {:.1}, {fault_counters}}}",
+        clients * per_client,
+        fw.as_secs_f64() * 1e3,
+    ));
+    assert!(
+        faults >= 1,
+        "fault matrix injected no faults (cluster 0 at staging_rate 0.5)"
+    );
+
     println!(
         "\npool parallelism scales wall-clock across clusters; batching\n\
          coalesces queued same-shape requests so the fork-join overhead —\n\
@@ -581,6 +698,8 @@ fn main() {
          copy_bytes_cut >= 2.0 vs the cache-off point; placement=true must\n\
          show affine_routed > 0; the chain_mlp chained=true point must cut\n\
          bytes_to_device vs chained=false with chain_bytes_elided > 0 and\n\
-         bit-identical checksums."
+         bit-identical checksums; the fault_matrix point must complete\n\
+         every request (retry or host fallback) with faults_injected > 0\n\
+         and failed = 0."
     );
 }

@@ -12,7 +12,7 @@ mod workload;
 
 pub use platform::{
     CacheConfig, ChainConfig, ClockConfig, ClusterConfig, CostConfig,
-    DmaConfig, ForkJoinConfig, HostConfig, IommuConfig, MemoryConfig,
-    PlacementConfig, PlatformConfig, SchedConfig,
+    DmaConfig, FaultConfig, ForkJoinConfig, HostConfig, IommuConfig,
+    MemoryConfig, PlacementConfig, PlatformConfig, SchedConfig, ServeConfig,
 };
 pub use workload::{DispatchMode, SweepConfig, WorkloadConfig};

@@ -269,6 +269,76 @@ impl Default for ChainConfig {
     }
 }
 
+/// Fault-injection and recovery knobs (`[sched.fault]`).
+///
+/// Default OFF: with the section absent (or `enabled = false`) no
+/// fault ever fires, no deadline is armed, and the scheduler path is
+/// bit-identical to a build without the subsystem.  When enabled, a
+/// seeded [`crate::sched::fault::FaultPlan`] deterministically injects
+/// failures at three seams of the staged device paths (staging/DMA
+/// error, mailbox timeout, compute poison); the recovery machinery
+/// (retry on a different cluster, quarantine, host fallback) is always
+/// compiled in and is what these knobs tune.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Master switch for injection AND the deadline detector.
+    pub enabled: bool,
+    /// Seed of the deterministic fault schedule.
+    pub seed: u64,
+    /// Per-launch probability of a staging/DMA fault, in [0, 1].
+    pub staging_rate: f64,
+    /// Per-launch probability of a mailbox hang (deadline trip), in [0, 1].
+    pub mailbox_rate: f64,
+    /// Per-launch probability of poisoned results, in [0, 1].
+    pub poison_rate: f64,
+    /// Restrict injection to one cluster id; -1 targets all clusters.
+    pub target_cluster: i64,
+    /// Batch deadline = this factor x the cost model's predicted cycles
+    /// (>= 1; detection only — the simulated device still completes).
+    pub deadline_factor: f64,
+    /// Device attempts per job before the host fallback (>= 1).
+    pub max_attempts: u32,
+    /// Base of the bounded exponential retry backoff, milliseconds.
+    pub backoff_base_ms: u64,
+    /// Faults before a cluster is quarantined (>= 1).
+    pub quarantine_threshold: u32,
+    /// Router drain passes before a quarantined cluster is probed for
+    /// re-admission (>= 1).
+    pub probe_interval: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            enabled: false,
+            seed: 1,
+            staging_rate: 0.0,
+            mailbox_rate: 0.0,
+            poison_rate: 0.0,
+            target_cluster: -1,
+            deadline_factor: 4.0,
+            max_attempts: 3,
+            backoff_base_ms: 1,
+            quarantine_threshold: 3,
+            probe_interval: 16,
+        }
+    }
+}
+
+/// Serve-layer knobs (`[serve]`): the TCP line-protocol front end.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// How long a connection handler waits on the reply channel before
+    /// cancelling the job and answering with a retry hint (ms).
+    pub reply_timeout_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { reply_timeout_ms: 300_000 }
+    }
+}
+
 /// Offload-scheduler knobs (the [`crate::sched`] pool/queue/batcher).
 ///
 /// These describe the *serving* layer on top of the SoC model: how many
@@ -301,6 +371,8 @@ pub struct SchedConfig {
     pub placement: PlacementConfig,
     /// Operation-chaining bounds (`[sched.chain]`).
     pub chain: ChainConfig,
+    /// Fault-injection and recovery knobs (`[sched.fault]`).
+    pub fault: FaultConfig,
 }
 
 impl Default for SchedConfig {
@@ -313,6 +385,7 @@ impl Default for SchedConfig {
             cache: CacheConfig::default(),
             placement: PlacementConfig::default(),
             chain: ChainConfig::default(),
+            fault: FaultConfig::default(),
         }
     }
 }
@@ -331,6 +404,7 @@ pub struct PlatformConfig {
     pub iommu: IommuConfig,
     pub sched: SchedConfig,
     pub cost: CostConfig,
+    pub serve: ServeConfig,
 }
 
 impl Default for PlatformConfig {
@@ -385,6 +459,7 @@ impl Default for PlatformConfig {
             },
             sched: SchedConfig::default(),
             cost: CostConfig::default(),
+            serve: ServeConfig::default(),
         }
     }
 }
@@ -499,6 +574,41 @@ impl PlatformConfig {
                             .unwrap_or(def.chain.max_links as u64)
                             as u32,
                     },
+                    fault: FaultConfig {
+                        enabled: d
+                            .opt_bool("sched.fault.enabled")
+                            .unwrap_or(def.fault.enabled),
+                        seed: d.opt_u64("sched.fault.seed").unwrap_or(def.fault.seed),
+                        staging_rate: d
+                            .opt_f64("sched.fault.staging_rate")
+                            .unwrap_or(def.fault.staging_rate),
+                        mailbox_rate: d
+                            .opt_f64("sched.fault.mailbox_rate")
+                            .unwrap_or(def.fault.mailbox_rate),
+                        poison_rate: d
+                            .opt_f64("sched.fault.poison_rate")
+                            .unwrap_or(def.fault.poison_rate),
+                        target_cluster: d
+                            .opt_i64("sched.fault.target_cluster")
+                            .unwrap_or(def.fault.target_cluster),
+                        deadline_factor: d
+                            .opt_f64("sched.fault.deadline_factor")
+                            .unwrap_or(def.fault.deadline_factor),
+                        max_attempts: d
+                            .opt_u64("sched.fault.max_attempts")
+                            .unwrap_or(def.fault.max_attempts as u64)
+                            as u32,
+                        backoff_base_ms: d
+                            .opt_u64("sched.fault.backoff_base_ms")
+                            .unwrap_or(def.fault.backoff_base_ms),
+                        quarantine_threshold: d
+                            .opt_u64("sched.fault.quarantine_threshold")
+                            .unwrap_or(def.fault.quarantine_threshold as u64)
+                            as u32,
+                        probe_interval: d
+                            .opt_u64("sched.fault.probe_interval")
+                            .unwrap_or(def.fault.probe_interval),
+                    },
                 }
             },
             // Cost-model knobs are estimation policy, not SoC calibration
@@ -510,6 +620,15 @@ impl PlatformConfig {
                     alpha: d.opt_f64("cost.alpha").unwrap_or(def.alpha),
                     floor: d.opt_f64("cost.floor").unwrap_or(def.floor),
                     ceiling: d.opt_f64("cost.ceiling").unwrap_or(def.ceiling),
+                }
+            },
+            // Serve-layer knobs are front-end policy; they default too.
+            serve: {
+                let def = ServeConfig::default();
+                ServeConfig {
+                    reply_timeout_ms: d
+                        .opt_u64("serve.reply_timeout_ms")
+                        .unwrap_or(def.reply_timeout_ms),
                 }
             },
         };
@@ -542,7 +661,12 @@ impl PlatformConfig {
              [sched.placement]\naffinity = {}\nsteal = {}\n\
              big_shape_frac = {}\nrebalance_drains = {}\n\n\
              [sched.chain]\nmax_links = {}\n\n\
-             [cost]\ncalibrate = {}\nalpha = {}\nfloor = {}\nceiling = {}\n",
+             [sched.fault]\nenabled = {}\nseed = {}\nstaging_rate = {}\n\
+             mailbox_rate = {}\npoison_rate = {}\ntarget_cluster = {}\n\
+             deadline_factor = {}\nmax_attempts = {}\nbackoff_base_ms = {}\n\
+             quarantine_threshold = {}\nprobe_interval = {}\n\n\
+             [cost]\ncalibrate = {}\nalpha = {}\nfloor = {}\nceiling = {}\n\n\
+             [serve]\nreply_timeout_ms = {}\n",
             c.name,
             c.clock.freq_hz,
             fmt_f64(c.host.flops_per_cycle),
@@ -587,10 +711,22 @@ impl PlatformConfig {
             fmt_f64(c.sched.placement.big_shape_frac),
             c.sched.placement.rebalance_drains,
             c.sched.chain.max_links,
+            c.sched.fault.enabled,
+            c.sched.fault.seed,
+            fmt_f64(c.sched.fault.staging_rate),
+            fmt_f64(c.sched.fault.mailbox_rate),
+            fmt_f64(c.sched.fault.poison_rate),
+            c.sched.fault.target_cluster,
+            fmt_f64(c.sched.fault.deadline_factor),
+            c.sched.fault.max_attempts,
+            c.sched.fault.backoff_base_ms,
+            c.sched.fault.quarantine_threshold,
+            c.sched.fault.probe_interval,
             c.cost.calibrate,
             fmt_f64(c.cost.alpha),
             fmt_f64(c.cost.floor),
             fmt_f64(c.cost.ceiling),
+            c.serve.reply_timeout_ms,
         )
     }
 
@@ -663,6 +799,46 @@ impl PlatformConfig {
                 "sched.placement.big_shape_frac must be in [0, 0.97], got {}",
                 self.sched.placement.big_shape_frac
             ));
+        }
+        let f = &self.sched.fault;
+        for (name, rate) in [
+            ("staging_rate", f.staging_rate),
+            ("mailbox_rate", f.mailbox_rate),
+            ("poison_rate", f.poison_rate),
+        ] {
+            if !(0.0..=1.0).contains(&rate) {
+                return err(format!(
+                    "sched.fault.{name} must be in [0, 1], got {rate}"
+                ));
+            }
+        }
+        if f.target_cluster < -1 || f.target_cluster >= 64 {
+            return err(format!(
+                "sched.fault.target_cluster must be -1 (all) or a cluster id \
+                 in 0..64, got {}",
+                f.target_cluster
+            ));
+        }
+        if f.deadline_factor < 1.0 {
+            return err(format!(
+                "sched.fault.deadline_factor must be >= 1, got {}",
+                f.deadline_factor
+            ));
+        }
+        if f.max_attempts == 0 || f.max_attempts > 8 {
+            return err(format!(
+                "sched.fault.max_attempts must be in 1..=8, got {}",
+                f.max_attempts
+            ));
+        }
+        if f.quarantine_threshold == 0 {
+            return err("sched.fault.quarantine_threshold must be > 0".into());
+        }
+        if f.probe_interval == 0 {
+            return err("sched.fault.probe_interval must be > 0".into());
+        }
+        if self.serve.reply_timeout_ms == 0 {
+            return err("serve.reply_timeout_ms must be > 0".into());
         }
         if !(self.cost.alpha > 0.0 && self.cost.alpha <= 1.0) {
             return err(format!(
@@ -911,6 +1087,81 @@ mod tests {
         assert!(cfg.validate().is_err());
         let mut cfg = PlatformConfig::default();
         cfg.sched.chain.max_links = 33;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn fault_section_parses_defaults_and_validates() {
+        // absent [sched.fault] => defaults (injection off)
+        let mut text = PlatformConfig::default().to_toml_string();
+        let at = text.find("[sched.fault]").unwrap();
+        text.truncate(at);
+        let cfg = PlatformConfig::from_toml_str(&text).unwrap();
+        assert_eq!(cfg.sched.fault, FaultConfig::default());
+        assert!(!cfg.sched.fault.enabled);
+
+        // explicit values round-trip (including a negative target)
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.fault.enabled = true;
+        cfg.sched.fault.seed = 7;
+        cfg.sched.fault.staging_rate = 0.25;
+        cfg.sched.fault.mailbox_rate = 0.1;
+        cfg.sched.fault.poison_rate = 1.0;
+        cfg.sched.fault.target_cluster = 2;
+        cfg.sched.fault.deadline_factor = 8.0;
+        cfg.sched.fault.max_attempts = 5;
+        cfg.sched.fault.backoff_base_ms = 2;
+        cfg.sched.fault.quarantine_threshold = 1;
+        cfg.sched.fault.probe_interval = 4;
+        let back = PlatformConfig::from_toml_str(&cfg.to_toml_string()).unwrap();
+        assert_eq!(back.sched.fault, cfg.sched.fault);
+        cfg.sched.fault.target_cluster = -1;
+        let back = PlatformConfig::from_toml_str(&cfg.to_toml_string()).unwrap();
+        assert_eq!(back.sched.fault.target_cluster, -1);
+
+        // out-of-range knobs rejected
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.fault.staging_rate = 1.5;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.fault.poison_rate = -0.1;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.fault.target_cluster = -2;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.fault.deadline_factor = 0.5;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.fault.max_attempts = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.fault.quarantine_threshold = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.fault.probe_interval = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn serve_section_parses_defaults_and_validates() {
+        // absent [serve] => default reply timeout
+        let mut text = PlatformConfig::default().to_toml_string();
+        let at = text.find("[serve]").unwrap();
+        text.truncate(at);
+        let cfg = PlatformConfig::from_toml_str(&text).unwrap();
+        assert_eq!(cfg.serve, ServeConfig::default());
+        assert_eq!(cfg.serve.reply_timeout_ms, 300_000);
+
+        // explicit value round-trips
+        let mut cfg = PlatformConfig::default();
+        cfg.serve.reply_timeout_ms = 1_500;
+        let back = PlatformConfig::from_toml_str(&cfg.to_toml_string()).unwrap();
+        assert_eq!(back.serve.reply_timeout_ms, 1_500);
+
+        // zero rejected (a zero timeout cancels every request instantly)
+        let mut cfg = PlatformConfig::default();
+        cfg.serve.reply_timeout_ms = 0;
         assert!(cfg.validate().is_err());
     }
 

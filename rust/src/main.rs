@@ -37,7 +37,7 @@ fn usage() -> String {
        serve [--port 7744] [--pool N] [--queue N] [--batch-window-ms N]\n\
              [--batch-max N] [--cache-frac F] [--cache-max-entries N]\n\
              [--pipeline-depth N] [--no-affinity] [--no-steal]\n\
-             [--big-shape-frac F]\n"
+             [--big-shape-frac F] [--reply-timeout-ms N]\n"
         .to_string()
 }
 
@@ -299,6 +299,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.sched.placement.big_shape_frac = s
             .parse()
             .map_err(|_| Error::Config("--big-shape-frac: not a number".into()))?;
+    }
+    // serving-layer knob ([serve]): reply-channel wait before cancelling
+    if let Some(v) = num("--reply-timeout-ms")? {
+        cfg.serve.reply_timeout_ms = v;
     }
     cfg.validate()?;
     let dir = artifacts_dir(args)?;

@@ -224,6 +224,10 @@ pub struct SpanTotals {
     pub queue_us: u64,
     pub route_us: u64,
     pub linger_us: u64,
+    /// Wall time failed device attempts consumed before their jobs'
+    /// final (replied) attempt — a sub-span like `linger_us`, outside
+    /// the five-stage telescoping sum.
+    pub retry_us: u64,
     pub stage_us: u64,
     pub execute_us: u64,
     pub finish_us: u64,
@@ -343,11 +347,30 @@ pub struct SchedCounters {
     /// End-to-end latency histograms, one per op class (see
     /// [`OP_CLASSES`]): gemm / gemv / level1 / chain.
     pub latency: [LatencyHistogram; 4],
+    /// Injected faults fired by the seeded fault plan (one per faulted
+    /// batch launch, whatever the seam).
+    pub faults_injected: AtomicU64,
+    /// Jobs resubmitted to a different cluster after a fault.
+    pub retries: AtomicU64,
+    /// Clusters that crossed the fault threshold and entered quarantine
+    /// (counts quarantine *events*, so a probe/re-fault cycle counts
+    /// each re-entry).
+    pub quarantined: AtomicU64,
+    /// Jobs that exhausted device attempts (or eligible clusters) and
+    /// completed on the host BLAS path with `degraded: true`.
+    pub host_fallbacks: AtomicU64,
+    /// Operand-cache bytes released when a faulted cluster's resident
+    /// entries were invalidated.
+    pub cache_invalidated_bytes: AtomicU64,
+    /// Operand-cache pins found stranded at a worker quiesce point (the
+    /// release-mode form of the pins-drained invariant; must stay 0).
+    pub pin_leaks: AtomicU64,
     /// Pool-wide serving-path span totals (microseconds per stage,
     /// accumulated per completed request).
     pub span_queue_us: AtomicU64,
     pub span_route_us: AtomicU64,
     pub span_linger_us: AtomicU64,
+    pub span_retry_us: AtomicU64,
     pub span_stage_us: AtomicU64,
     pub span_execute_us: AtomicU64,
     pub span_finish_us: AtomicU64,
@@ -413,6 +436,13 @@ impl SchedCounters {
         self.span_finish_us.fetch_add(finish, Ordering::Relaxed);
     }
 
+    /// Accumulate one recovered request's retry sub-span (wall time its
+    /// failed device attempts consumed; outside the telescoping sum,
+    /// like `linger`).
+    pub fn note_retry_us(&self, us: u64) {
+        self.span_retry_us.fetch_add(us, Ordering::Relaxed);
+    }
+
     /// Consistent-enough point-in-time copy.
     pub fn snapshot(&self) -> SchedMetrics {
         let ld = |a: &AtomicU64| a.load(Ordering::Relaxed);
@@ -450,6 +480,12 @@ impl SchedCounters {
             rehomed: ld(&self.rehomed),
             chains: ld(&self.chains),
             chain_bytes_elided: ld(&self.chain_bytes_elided),
+            faults_injected: ld(&self.faults_injected),
+            retries: ld(&self.retries),
+            quarantined: ld(&self.quarantined),
+            host_fallbacks: ld(&self.host_fallbacks),
+            cache_invalidated_bytes: ld(&self.cache_invalidated_bytes),
+            pin_leaks: ld(&self.pin_leaks),
             latency: [
                 OpClassLatency::from_hist(&latency[0]),
                 OpClassLatency::from_hist(&latency[1]),
@@ -461,6 +497,7 @@ impl SchedCounters {
                 queue_us: ld(&self.span_queue_us),
                 route_us: ld(&self.span_route_us),
                 linger_us: ld(&self.span_linger_us),
+                retry_us: ld(&self.span_retry_us),
                 stage_us: ld(&self.span_stage_us),
                 execute_us: ld(&self.span_execute_us),
                 finish_us: ld(&self.span_finish_us),
@@ -548,6 +585,12 @@ pub struct SchedMetrics {
     pub rehomed: u64,
     pub chains: u64,
     pub chain_bytes_elided: u64,
+    pub faults_injected: u64,
+    pub retries: u64,
+    pub quarantined: u64,
+    pub host_fallbacks: u64,
+    pub cache_invalidated_bytes: u64,
+    pub pin_leaks: u64,
     /// Percentile latency per op class, indexed like [`OP_CLASSES`].
     pub latency: [OpClassLatency; 4],
     /// Percentiles over every op class merged.
@@ -567,7 +610,9 @@ impl SchedMetrics {
              batches={} batched_jobs={} pipelined={} overlap={}us \
              queue_peak={} service_ewma={}us cache_hits={} cache_misses={} \
              cache_evictions={} to_dev={}B elided={}B stolen={} affine={} \
-             big_shape={} prefetched={} rehomed={} chains={} chain_elided={}B",
+             big_shape={} prefetched={} rehomed={} chains={} chain_elided={}B \
+             faults={} retries={} quarantined={} host_fallbacks={} \
+             cache_invalidated={}B pin_leaks={}",
             self.submitted,
             self.completed,
             self.rejected,
@@ -591,6 +636,12 @@ impl SchedMetrics {
             self.rehomed,
             self.chains,
             self.chain_bytes_elided,
+            self.faults_injected,
+            self.retries,
+            self.quarantined,
+            self.host_fallbacks,
+            self.cache_invalidated_bytes,
+            self.pin_leaks,
         )
     }
 }

@@ -444,6 +444,18 @@ impl OffloadEngine {
         }
     }
 
+    /// Fault recovery: drop every unpinned operand-cache entry and return
+    /// the freed allocations to the arena.  Returns the bytes reclaimed
+    /// (the `cache_invalidated_bytes` counter feed).  Host-side
+    /// bookkeeping — nothing is charged to the virtual clock; the real
+    /// cost the fault path pays is re-staging everything on retry.
+    pub fn invalidate_cache(&mut self) -> Result<u64> {
+        let evicted = self.opcache.invalidate_all();
+        let bytes: u64 = evicted.iter().map(|a| a.len).sum();
+        self.free_evicted(evicted)?;
+        Ok(bytes)
+    }
+
     /// Return evicted cache allocations to the arena.
     fn free_evicted(&mut self, evicted: Vec<crate::hero::allocator::Allocation>)
                     -> Result<()> {
@@ -921,6 +933,27 @@ mod tests {
         assert!(e.opcache.is_empty(), "zero-budget cache reclaims at chain end");
         assert_eq!(e.device.dram.stats().bytes_in_use, 0);
         assert_eq!(e.metrics.chain_bytes_elided, 1024);
+    }
+
+    #[test]
+    fn invalidate_cache_reclaims_resident_bytes() {
+        let mut e = cached_engine(1 << 20, 0.5, 8);
+        let data = vec![1u8; 4096];
+        let b = e.map_to_operand(&data, 4096, false, "b").unwrap();
+        e.unmap(b, "b").unwrap(); // resident, unpinned
+        assert!(!e.opcache.is_empty());
+        let bytes = e.invalidate_cache().unwrap();
+        assert_eq!(bytes, 4096);
+        assert!(e.opcache.is_empty());
+        assert_eq!(e.device.dram.stats().bytes_in_use, 0);
+        assert_eq!(e.metrics.cache_evictions, 1);
+        // idempotent on an empty cache
+        assert_eq!(e.invalidate_cache().unwrap(), 0);
+        // the next identical map is a miss and re-stages from host bytes
+        let b = e.map_to_operand(&data, 4096, false, "b").unwrap();
+        assert_eq!(e.metrics.cache_hits, 0);
+        assert_eq!(e.metrics.cache_misses, 2);
+        e.unmap(b, "b").unwrap();
     }
 
     #[test]

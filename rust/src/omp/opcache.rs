@@ -254,6 +254,24 @@ impl OperandCache {
         out
     }
 
+    /// Evict *every* unpinned entry — fault recovery: after a cluster
+    /// faults mid-batch its resident operands are treated as suspect and
+    /// dropped wholesale, so a retry elsewhere (or a later probe batch
+    /// here) re-stages from host bytes instead of trusting device DRAM.
+    /// Tagged entries land in the eviction feed as usual so the affinity
+    /// directory stops advertising this cluster as warm.  Pinned entries
+    /// survive (a live mapping may still reference them) — the worker
+    /// abandons the staged batch *before* invalidating, so at the call
+    /// site nothing is pinned.
+    #[must_use]
+    pub fn invalidate_all(&mut self) -> Vec<Allocation> {
+        let mut out = Vec::new();
+        while let Some(a) = self.evict_lru_unpinned() {
+            out.push(a);
+        }
+        out
+    }
+
     /// Evict LRU unpinned entries until the byte and entry budgets hold.
     /// Pinned entries never count as evictable, so a burst of live
     /// mappings may transiently overshoot the budgets.
@@ -463,6 +481,27 @@ mod tests {
         let out = c.insert_resident(key(1), alloc(0x900, 64));
         assert!(!out.cached);
         assert_eq!(c.peek(&key(1)).unwrap().addr, 0x100);
+    }
+
+    #[test]
+    fn invalidate_all_drops_unpinned_and_reports_tags() {
+        let mut c = OperandCache::new(1024, 8);
+        assert!(c.insert(key(1), alloc(0x100, 64)).cached);
+        c.set_tag(&key(1), 0xAA);
+        assert!(c.insert(key(2), alloc(0x200, 64)).cached);
+        assert!(c.release(&key(2)).is_empty());
+        // key 1 still pinned (a live mapping): it must survive
+        let evicted = c.invalidate_all();
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0].addr, 0x200);
+        assert!(c.peek(&key(1)).is_some());
+        // after the pin drops, invalidation reclaims it and its tag feeds
+        // the residency-change drain
+        assert!(c.release(&key(1)).is_empty());
+        let evicted = c.invalidate_all();
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(c.take_evicted_tags(), vec![0xAA]);
+        assert!(c.is_empty());
     }
 
     #[test]

@@ -153,6 +153,23 @@ impl AffinityDirectory {
         (eligible[(key % eligible.len() as u64) as usize], false)
     }
 
+    /// Drop every trace of `cluster` — fault recovery.  Residency bits
+    /// for the cluster clear (empty masks pruned, like eviction) and home
+    /// overrides pointing at it are forgotten, so same-key requests fall
+    /// back to their deterministic hash-home among the still-healthy
+    /// clusters instead of steering at a quarantined one.
+    pub fn invalidate_cluster(&self, cluster: u32) {
+        let bit = 1u64 << (cluster % 64);
+        let mut map = self.resident.lock().expect("affinity lock");
+        map.retain(|_, mask| {
+            *mask &= !bit;
+            *mask != 0
+        });
+        drop(map);
+        let mut homes = self.homes.lock().expect("affinity lock");
+        homes.retain(|_, h| *h != cluster);
+    }
+
     /// Operands currently tracked as resident somewhere.
     pub fn len(&self) -> usize {
         self.resident.lock().expect("affinity lock").len()
@@ -240,6 +257,27 @@ mod tests {
         // an ineligible override is ignored (falls back to residency)
         d.set_home(key, 0);
         assert_eq!(d.place(key, &[1, 2, 3]), (1, true));
+    }
+
+    #[test]
+    fn invalidate_cluster_clears_residency_and_homes() {
+        let d = AffinityDirectory::new();
+        let k1 = operand_key("gemm_b", 64, 1);
+        let k2 = operand_key("gemm_b", 64, 2);
+        d.note_resident(k1, 1);
+        d.note_resident(k2, 1);
+        d.note_resident(k2, 2);
+        d.set_home(k1, 1);
+        d.invalidate_cluster(1);
+        assert!(!d.is_resident(k1, 1));
+        assert!(!d.is_resident(k2, 1));
+        assert!(d.is_resident(k2, 2), "other clusters keep their bits");
+        assert_eq!(d.len(), 1, "emptied masks are pruned");
+        // the home override at the failed cluster is gone: k1 falls back
+        // to its deterministic hash-home among the eligible set
+        let (c, warm) = d.place(k1, &[0, 1, 2, 3]);
+        assert!(!warm);
+        let _ = c;
     }
 
     #[test]

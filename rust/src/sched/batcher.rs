@@ -210,6 +210,7 @@ mod tests {
             cancel: crate::sched::CancelToken::default(),
             enqueued_at: Instant::now(),
             spans: crate::sched::SpanStamps::default(),
+            fault: crate::sched::FaultState::default(),
         }
     }
 
@@ -288,6 +289,7 @@ mod tests {
                 cancel: crate::sched::CancelToken::default(),
                 enqueued_at: Instant::now(),
                 spans: crate::sched::SpanStamps::default(),
+                fault: crate::sched::FaultState::default(),
             }
         };
         q.push(host_job(2)).unwrap();
@@ -332,6 +334,7 @@ mod tests {
             cancel: crate::sched::CancelToken::default(),
             enqueued_at: Instant::now(),
             spans: crate::sched::SpanStamps::default(),
+            fault: crate::sched::FaultState::default(),
         };
         let b = Batcher::new(Duration::from_millis(50), 8);
         assert_eq!(b.collect(&q, fence, usize::MAX).len(), 1);

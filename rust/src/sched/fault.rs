@@ -1,0 +1,285 @@
+//! Deterministic fault injection for the scheduler pool.
+//!
+//! The paper's platform is an FPGA-emulated heterogeneous SoC where
+//! offloads can genuinely stall or fail — mailboxes hang, DMA faults,
+//! clusters wedge — but the simulated device always completes.  This
+//! module injects those failure modes *deterministically* so the
+//! recovery machinery (retry with placement exclusion, quarantine,
+//! host fallback) is reproducible under test: every decision is a pure
+//! hash of `(seed, cluster, launch-seq, seam)` compared against the
+//! configured per-seam rate, so the same config produces the same fault
+//! schedule on every run, independent of thread interleaving.
+//!
+//! Three seams mirror the real failure modes:
+//!
+//! - **staging / DMA** ([`FaultPlan::staging_fault`]): the map-in
+//!   faults.  The worker abandons the staged batch exactly like
+//!   cancel-after-stage (pins and `map(alloc:)` outputs released).
+//! - **mailbox timeout** ([`FaultPlan::mailbox_timeout`]): the cluster
+//!   stops posting its completion word.  The worker's deadline
+//!   (`deadline_factor` x the cost model's predicted cycles) trips.
+//! - **compute poison** ([`FaultPlan::compute_poison`]): the batch
+//!   completes but its results are marked bad and discarded.
+//!
+//! Injection is scoped to the *staged* device paths (gemm / gemv /
+//! chain) — the seams where a real PMCA offload holds device state that
+//! recovery must release.  Synchronous level-1 launches are not
+//! injected.
+//!
+//! Every job carries a [`FaultState`]: how many device attempts have
+//! faulted, which clusters faulted it (a placement exclusion bitmask),
+//! and the wall time those failed attempts consumed (surfaced as the
+//! span `retry_us` sub-stage, like `linger_us` not part of the
+//! telescoping five-stage sum).
+
+use crate::config::FaultConfig;
+
+/// Per-job recovery state, threaded through requeues.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultState {
+    /// Device attempts that ended in a fault (0 on the happy path).
+    pub attempts: u32,
+    /// Bitmask of cluster ids that faulted this job — the placement
+    /// router never routes a retry back at a cluster that failed it.
+    pub excluded: u64,
+    /// Wall microseconds consumed by failed attempts and backoff; the
+    /// reply's span breakdown reports it as the `retry` sub-stage.
+    pub retry_us: u64,
+}
+
+impl FaultState {
+    /// Record a fault on `cluster`, excluding it from future placement.
+    pub fn note(&mut self, cluster: u32, lost_us: u64) {
+        self.attempts += 1;
+        self.excluded |= 1u64 << (cluster as u64 & 63);
+        self.retry_us += lost_us;
+    }
+}
+
+/// Which seam a fault fired at (or the detector that caught it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Map-in returned a fault while staging.
+    StagingDma,
+    /// The cluster never posted its completion word; the worker's
+    /// deadline tripped.
+    MailboxTimeout,
+    /// The batch completed with its fault flag set; results discarded.
+    ComputePoison,
+    /// No injection: the real deadline detector fired.
+    Deadline,
+}
+
+impl FaultKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            FaultKind::StagingDma => "staging-dma",
+            FaultKind::MailboxTimeout => "mailbox-timeout",
+            FaultKind::ComputePoison => "compute-poison",
+            FaultKind::Deadline => "deadline",
+        }
+    }
+}
+
+/// The seeded fault schedule shared by every worker.
+///
+/// Cheap to clone (a copy of the config); decisions are pure functions
+/// so clones agree exactly.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    cfg: FaultConfig,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_mix(mut h: u64, word: u64) -> u64 {
+    for b in word.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+impl FaultPlan {
+    pub fn new(cfg: FaultConfig) -> FaultPlan {
+        FaultPlan { cfg }
+    }
+
+    /// A disabled plan: never injects, knobs at their defaults.
+    pub fn disabled() -> FaultPlan {
+        FaultPlan::new(FaultConfig::default())
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    pub fn max_attempts(&self) -> u32 {
+        self.cfg.max_attempts.max(1)
+    }
+
+    pub fn backoff_ms(&self, attempts: u32) -> u64 {
+        // bounded exponential: base << (attempts - 1), capped at 1 s
+        let shift = attempts.saturating_sub(1).min(10);
+        (self.cfg.backoff_base_ms << shift).min(1_000)
+    }
+
+    pub fn deadline_factor(&self) -> f64 {
+        self.cfg.deadline_factor.max(1.0)
+    }
+
+    /// Does the plan target `cluster`?  `target_cluster < 0` means all.
+    fn targets(&self, cluster: u32) -> bool {
+        self.cfg.target_cluster < 0 || self.cfg.target_cluster == cluster as i64
+    }
+
+    /// Deterministic uniform draw in [0, 1) for one (cluster, seq, seam)
+    /// triple under this plan's seed.
+    fn roll(&self, cluster: u32, seq: u64, seam: u64) -> f64 {
+        let mut h = fnv_mix(FNV_OFFSET, self.cfg.seed);
+        h = fnv_mix(h, cluster as u64);
+        h = fnv_mix(h, seq);
+        h = fnv_mix(h, seam);
+        // top 53 bits -> [0, 1)
+        (h >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    fn fires(&self, rate: f64, cluster: u32, seq: u64, seam: u64) -> bool {
+        self.cfg.enabled
+            && rate > 0.0
+            && self.targets(cluster)
+            && self.roll(cluster, seq, seam) < rate
+    }
+
+    /// Should launch `seq` on `cluster` fault while staging (DMA error)?
+    pub fn staging_fault(&self, cluster: u32, seq: u64) -> bool {
+        self.fires(self.cfg.staging_rate, cluster, seq, 1)
+    }
+
+    /// Should launch `seq` on `cluster` hang its completion word?
+    pub fn mailbox_timeout(&self, cluster: u32, seq: u64) -> bool {
+        self.fires(self.cfg.mailbox_rate, cluster, seq, 2)
+    }
+
+    /// Should launch `seq` on `cluster` complete poisoned?
+    pub fn compute_poison(&self, cluster: u32, seq: u64) -> bool {
+        self.fires(self.cfg.poison_rate, cluster, seq, 3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(enabled: bool) -> FaultConfig {
+        FaultConfig {
+            enabled,
+            seed: 42,
+            staging_rate: 0.5,
+            mailbox_rate: 0.5,
+            poison_rate: 0.5,
+            target_cluster: -1,
+            deadline_factor: 4.0,
+            max_attempts: 3,
+            backoff_base_ms: 1,
+            quarantine_threshold: 3,
+            probe_interval: 16,
+        }
+    }
+
+    #[test]
+    fn disabled_plan_never_fires() {
+        let p = FaultPlan::new(FaultConfig {
+            staging_rate: 1.0,
+            mailbox_rate: 1.0,
+            poison_rate: 1.0,
+            ..FaultConfig::default()
+        });
+        assert!(!p.enabled());
+        for seq in 0..64 {
+            assert!(!p.staging_fault(0, seq));
+            assert!(!p.mailbox_timeout(0, seq));
+            assert!(!p.compute_poison(0, seq));
+        }
+    }
+
+    #[test]
+    fn rate_one_always_fires_rate_zero_never() {
+        let mut c = cfg(true);
+        c.staging_rate = 1.0;
+        c.mailbox_rate = 0.0;
+        let p = FaultPlan::new(c);
+        for seq in 0..64 {
+            assert!(p.staging_fault(1, seq));
+            assert!(!p.mailbox_timeout(1, seq));
+        }
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_seed_sensitive() {
+        let p1 = FaultPlan::new(cfg(true));
+        let p2 = FaultPlan::new(cfg(true));
+        let draws1: Vec<bool> =
+            (0..256).map(|s| p1.staging_fault(0, s)).collect();
+        let draws2: Vec<bool> =
+            (0..256).map(|s| p2.staging_fault(0, s)).collect();
+        assert_eq!(draws1, draws2, "same seed => same schedule");
+
+        let mut other = cfg(true);
+        other.seed = 43;
+        let p3 = FaultPlan::new(other);
+        let draws3: Vec<bool> =
+            (0..256).map(|s| p3.staging_fault(0, s)).collect();
+        assert_ne!(draws1, draws3, "different seed => different schedule");
+
+        // roughly the configured rate (0.5 +- a loose band over 256)
+        let hits = draws1.iter().filter(|&&b| b).count();
+        assert!((64..=192).contains(&hits), "rate ~0.5, got {hits}/256");
+    }
+
+    #[test]
+    fn target_cluster_scopes_injection() {
+        let mut c = cfg(true);
+        c.staging_rate = 1.0;
+        c.target_cluster = 2;
+        let p = FaultPlan::new(c);
+        assert!(p.staging_fault(2, 0));
+        assert!(!p.staging_fault(0, 0));
+        assert!(!p.staging_fault(1, 7));
+    }
+
+    #[test]
+    fn seams_draw_independently() {
+        let mut c = cfg(true);
+        c.staging_rate = 0.5;
+        c.mailbox_rate = 0.5;
+        let p = FaultPlan::new(c);
+        let differs = (0..256)
+            .any(|s| p.staging_fault(0, s) != p.mailbox_timeout(0, s));
+        assert!(differs, "seams must not alias the same draw");
+    }
+
+    #[test]
+    fn fault_state_notes_exclusion_and_attempts() {
+        let mut fs = FaultState::default();
+        fs.note(2, 150);
+        fs.note(0, 50);
+        assert_eq!(fs.attempts, 2);
+        assert_eq!(fs.excluded, (1 << 2) | 1);
+        assert_eq!(fs.retry_us, 200);
+    }
+
+    #[test]
+    fn backoff_is_bounded_exponential() {
+        let p = FaultPlan::new(cfg(true));
+        assert_eq!(p.backoff_ms(1), 1);
+        assert_eq!(p.backoff_ms(2), 2);
+        assert_eq!(p.backoff_ms(3), 4);
+        assert!(p.backoff_ms(40) <= 1_000, "cap survives huge attempt counts");
+    }
+}

@@ -57,6 +57,7 @@
 
 pub mod affinity;
 pub mod batcher;
+pub mod fault;
 pub mod placement;
 pub mod pool;
 pub mod queue;
@@ -75,6 +76,7 @@ use crate::error::{Error, Result};
 use crate::metrics::{SchedCounters, SchedMetrics};
 
 pub use batcher::{BatchKey, Batcher, JobSource};
+pub use fault::{FaultKind, FaultPlan, FaultState};
 pub use placement::PlacementRouter;
 pub use pool::{CapacityModel, ClusterSpec, DevicePool};
 pub use queue::{PushError, WorkQueue};
@@ -263,6 +265,11 @@ pub struct Job {
     /// filled in by the router and closed into a [`SpanBreakdown`] by
     /// the worker at reply time.
     pub spans: SpanStamps,
+    /// Fault-recovery state: how many device attempts already failed,
+    /// which clusters failed them (the placement exclusion list), and
+    /// the wall time those attempts burned (reported as the `retry`
+    /// sub-span).  Default = a fresh, never-failed job.
+    pub fault: FaultState,
 }
 
 impl Job {
@@ -317,6 +324,13 @@ pub struct GemmOutcome {
     /// finish, telescoping to `spans.total_us` exactly — the `trace:
     /// true` serve contract).
     pub spans: SpanBreakdown,
+    /// True when the pool gave up on the device (attempts exhausted or
+    /// no healthy cluster left) and the reply was computed on the host
+    /// BLAS path — checksum-identical by construction.
+    pub degraded: bool,
+    /// Device attempts that *failed* before this reply (0 on the clean
+    /// path; the serve layer echoes it with `degraded`).
+    pub attempts: u32,
 }
 
 /// What comes back on the reply channel.
@@ -415,11 +429,15 @@ impl Scheduler {
         let cost = CostModel::from_manifest(cfg, &manifest);
         let queue = Arc::new(WorkQueue::new(sc.queue_capacity as usize));
         let counters = Arc::new(SchedCounters::new(sc.pool_clusters as usize));
-        let router = Arc::new(PlacementRouter::new(
+        let router = Arc::new(PlacementRouter::with_fault(
             capacity,
             cost.clone(),
             sc.placement.clone(),
+            sc.fault.clone(),
         ));
+        // deterministic fault plan ([sched.fault]; inert by default) —
+        // each worker draws injection decisions from it per launch
+        let fault_plan = FaultPlan::new(sc.fault.clone());
         let batcher = Batcher::new(
             std::time::Duration::from_millis(sc.batch_window_ms),
             sc.batch_max as usize,
@@ -437,6 +455,7 @@ impl Scheduler {
                 Arc::clone(&counters),
                 batcher.clone(),
                 cost.clone(),
+                fault_plan.clone(),
                 ready_tx.clone(),
             ));
         }
@@ -531,6 +550,7 @@ impl Scheduler {
             cancel: cancel.clone(),
             enqueued_at: Instant::now(),
             spans: SpanStamps::default(),
+            fault: FaultState::default(),
         };
         // the routed count rides into the queue's own locked bound, so
         // concurrent submitters serialize instead of racing a separate
@@ -562,6 +582,19 @@ impl Scheduler {
         let per_job_us =
             self.counters.service_us_ewma.load(Ordering::Relaxed).max(1_000);
         retry_after_ms(depth, per_job_us, self.pool_size)
+    }
+
+    /// The backpressure-style backoff hint for the *current* backlog —
+    /// the serve layer echoes it on reply timeouts so clients back off
+    /// exactly as they do on queue-full rejections.
+    pub fn current_retry_hint_ms(&self) -> u64 {
+        self.retry_hint(self.queue_depth())
+    }
+
+    /// Is a pool cluster currently quarantined?  (The serve `metrics`
+    /// op and the fault tests read this.)
+    pub fn is_quarantined(&self, cluster: u32) -> bool {
+        self.router.is_quarantined(cluster)
     }
 
     /// Point-in-time scheduler counters, with each cluster's live
@@ -661,6 +694,7 @@ mod tests {
             cancel: CancelToken::default(),
             enqueued_at: Instant::now(),
             spans: SpanStamps::default(),
+            fault: FaultState::default(),
         };
         assert_eq!(gemm(64, 1).batch_key(), gemm(64, 2).batch_key());
         assert_ne!(gemm(64, 1).batch_key(), gemm(128, 1).batch_key());
@@ -673,6 +707,7 @@ mod tests {
             cancel: CancelToken::default(),
             enqueued_at: Instant::now(),
             spans: SpanStamps::default(),
+            fault: FaultState::default(),
         };
         assert_eq!(fence.batch_key(), None);
 
@@ -690,6 +725,7 @@ mod tests {
             cancel: CancelToken::default(),
             enqueued_at: Instant::now(),
             spans: SpanStamps::default(),
+            fault: FaultState::default(),
         };
         assert_eq!(gemv(64, 32, 1).batch_key(), gemv(64, 32, 2).batch_key());
         assert_ne!(gemv(64, 32, 1).batch_key(), gemv(32, 64, 1).batch_key());
@@ -717,6 +753,7 @@ mod tests {
             cancel: CancelToken::default(),
             enqueued_at: Instant::now(),
             spans: SpanStamps::default(),
+            fault: FaultState::default(),
         };
         assert_eq!(
             l1(Level1Op::Axpy, 4096, 1, 1.0).batch_key(),
@@ -750,6 +787,7 @@ mod tests {
             cancel: CancelToken::default(),
             enqueued_at: Instant::now(),
             spans: SpanStamps::default(),
+            fault: FaultState::default(),
         };
         assert_eq!(chain.batch_key(), None);
         if let JobPayload::Chain(r) = &chain.payload {

@@ -54,7 +54,7 @@ use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
-use crate::config::PlacementConfig;
+use crate::config::{FaultConfig, PlacementConfig};
 use crate::cost::CostModel;
 use crate::metrics::SchedCounters;
 
@@ -106,6 +106,18 @@ struct RouterState {
     over_streak: Vec<AtomicU32>,
     /// Total job-moving drain passes (the re-homing cooldown clock).
     drain_seq: AtomicU64,
+    /// Faults each cluster has taken since its last re-admission — at
+    /// `quarantine_threshold` the cluster is quarantined.
+    fault_counts: Vec<u32>,
+    /// Quarantined clusters: routing skips them, their workers stop
+    /// stealing, and (their DRAM slices dropping out of the eligible
+    /// set) the capacity admission no longer counts their slices.
+    quarantined: Vec<bool>,
+    /// Probe-clock stamp when each cluster entered quarantine.
+    quarantined_at: Vec<u64>,
+    /// Job-moving drain passes — the quarantine probe clock (distinct
+    /// from `drain_seq`, which only ticks when re-homing is enabled).
+    probe_seq: u64,
 }
 
 /// The placement router (one per scheduler, shared by every worker and
@@ -113,6 +125,9 @@ struct RouterState {
 #[derive(Debug)]
 pub struct PlacementRouter {
     knobs: PlacementConfig,
+    /// Quarantine knobs (`[sched.fault]`); defaults are inert until a
+    /// worker actually reports a fault.
+    fault: FaultConfig,
     capacity: CapacityModel,
     /// The scheduler's shared cost model: staged-footprint estimates
     /// (padded exactly like the staging path) and the host/device
@@ -145,9 +160,22 @@ impl PlacementRouter {
         cost: CostModel,
         knobs: PlacementConfig,
     ) -> PlacementRouter {
+        PlacementRouter::with_fault(capacity, cost, knobs, FaultConfig::default())
+    }
+
+    /// Router with explicit `[sched.fault]` quarantine knobs (the
+    /// scheduler wires these; [`PlacementRouter::new`] uses the inert
+    /// defaults).
+    pub fn with_fault(
+        capacity: CapacityModel,
+        cost: CostModel,
+        knobs: PlacementConfig,
+        fault: FaultConfig,
+    ) -> PlacementRouter {
         let clusters = capacity.pool_clusters();
         PlacementRouter {
             knobs,
+            fault,
             capacity,
             cost,
             state: Mutex::new(RouterState {
@@ -155,6 +183,10 @@ impl PlacementRouter {
                 exited: vec![false; clusters],
                 over_streak: (0..clusters).map(|_| AtomicU32::new(0)).collect(),
                 drain_seq: AtomicU64::new(0),
+                fault_counts: vec![0; clusters],
+                quarantined: vec![false; clusters],
+                quarantined_at: vec![0; clusters],
+                probe_seq: 0,
             }),
             arrivals: Condvar::new(),
             directory: AffinityDirectory::new(),
@@ -190,6 +222,66 @@ impl PlacementRouter {
     /// eviction feed).
     pub fn note_evicted(&self, key: u64, cluster: u32) {
         self.directory.note_evicted(key, cluster);
+    }
+
+    /// A worker reports a batch fault on `cluster`.  Returns true when
+    /// this report pushes the cluster over `quarantine_threshold` into
+    /// quarantine (the caller counts the transition, not every report).
+    pub fn note_fault(&self, cluster: u32) -> bool {
+        let mut st = self.state.lock().expect("router lock");
+        let c = cluster as usize;
+        if c >= st.fault_counts.len() || st.quarantined[c] {
+            return false;
+        }
+        st.fault_counts[c] += 1;
+        if st.fault_counts[c] >= self.fault.quarantine_threshold.max(1) {
+            st.quarantined[c] = true;
+            st.quarantined_at[c] = st.probe_seq;
+            return true;
+        }
+        false
+    }
+
+    /// Is `cluster` currently quarantined?  (Tests and the serve
+    /// `metrics` op ask.)
+    pub fn is_quarantined(&self, cluster: u32) -> bool {
+        let st = self.state.lock().expect("router lock");
+        st.quarantined.get(cluster as usize).copied().unwrap_or(false)
+    }
+
+    /// Is there any cluster a retry could still land on — neither
+    /// quarantined nor on the job's exclusion list?  When this says no,
+    /// the worker skips the requeue and goes straight to host fallback.
+    pub fn retry_targets_exist(&self, excluded: u64) -> bool {
+        let st = self.state.lock().expect("router lock");
+        (0..st.quarantined.len()).any(|c| {
+            !st.quarantined[c] && excluded & (1u64 << (c as u32 % 64)) == 0
+        })
+    }
+
+    /// Fault recovery: drop every affinity trace of `cluster` (residency
+    /// bits and home overrides) so routing stops treating its — just
+    /// invalidated — cache as warm.
+    pub fn invalidate_cluster(&self, cluster: u32) {
+        self.directory.invalidate_cluster(cluster);
+    }
+
+    /// Re-admit quarantined clusters whose probe interval has drained
+    /// past: the cluster rejoins the eligible set with its fault count
+    /// one below the threshold, so its first routed job is the probe —
+    /// one more fault re-quarantines it immediately, a success stream
+    /// keeps it admitted (counts reset only through re-admission).
+    fn probe_quarantined(&self, st: &mut RouterState) {
+        for c in 0..st.quarantined.len() {
+            if st.quarantined[c]
+                && st.probe_seq.saturating_sub(st.quarantined_at[c])
+                    >= self.fault.probe_interval.max(1)
+            {
+                st.quarantined[c] = false;
+                st.fault_counts[c] =
+                    self.fault.quarantine_threshold.max(1) - 1;
+            }
+        }
     }
 
     /// Jobs routed into cluster deques but not yet claimed (lock-free;
@@ -317,8 +409,27 @@ impl PlacementRouter {
             }
         }
 
-        // small lanes only from here on (all lanes under the even split)
-        let eligible = self.capacity.small_ids();
+        // small lanes only from here on (all lanes under the even split).
+        // Fault recovery filters the set: quarantined clusters and the
+        // job's own exclusion list (clusters that already failed it)
+        // drop out — which also removes their DRAM slices from what the
+        // pool admits.  An emptied set falls back to the unfiltered
+        // lanes: the job will fault again and exhaust its attempts into
+        // the host-fallback path, the designed degradation.  (Fences and
+        // the big lane are exempt above: fences are ordering tokens and
+        // an over-slice job has no other lane that can stage it.)
+        let all = self.capacity.small_ids();
+        let mut eligible: Vec<u32> = all
+            .iter()
+            .copied()
+            .filter(|&c| {
+                !st.quarantined[c as usize]
+                    && job.fault.excluded & (1u64 << (c % 64)) == 0
+            })
+            .collect();
+        if eligible.is_empty() {
+            eligible = all;
+        }
 
         // operand affinity: same-operand jobs (shared-B gemms, chains
         // whose first weight matrix is shared) chase the warm cache — a
@@ -389,8 +500,13 @@ impl PlacementRouter {
             self.routed.fetch_add(1, Ordering::Relaxed);
             moved = true;
         }
-        if moved && self.knobs.rebalance_drains > 0 {
-            self.update_streaks(st);
+        if moved {
+            // quarantine probe clock: one tick per job-moving drain
+            st.probe_seq += 1;
+            self.probe_quarantined(st);
+            if self.knobs.rebalance_drains > 0 {
+                self.update_streaks(st);
+            }
         }
         moved
     }
@@ -438,6 +554,12 @@ impl PlacementRouter {
         if !self.knobs.steal {
             return None;
         }
+        // a quarantined thief takes nothing: stealing onto a faulting
+        // cluster would hand it fresh victims (raiding its deque from
+        // healthy thieves stays allowed — that moves work *away*)
+        if st.quarantined[thief] {
+            return None;
+        }
         let cap = self.capacity.slice_bytes[thief];
         let mut victims: Vec<usize> = (0..st.clusters.len())
             .filter(|&v| v != thief && st.clusters[v].depth() > 0)
@@ -451,6 +573,9 @@ impl PlacementRouter {
                         if r.steal_ok
                             && r.affine == pass_affine
                             && r.est_bytes <= cap
+                            && r.job.fault.excluded
+                                & (1u64 << (thief as u32 % 64))
+                                == 0
                         {
                             let mut r = lane.remove(i).expect("index checked");
                             self.routed.fetch_sub(1, Ordering::Relaxed);
@@ -627,7 +752,9 @@ mod tests {
     use super::*;
     use crate::config::{DispatchMode, PlatformConfig};
     use crate::sched::pool::DevicePool;
-    use crate::sched::{CancelToken, GemmRequest, GemvRequest, Priority, SpanStamps};
+    use crate::sched::{
+        CancelToken, FaultState, GemmRequest, GemvRequest, Priority, SpanStamps,
+    };
     use std::sync::mpsc;
     use std::time::Instant;
 
@@ -671,6 +798,7 @@ mod tests {
             cancel: CancelToken::default(),
             enqueued_at: Instant::now(),
             spans: SpanStamps::default(),
+            fault: FaultState::default(),
         }
     }
 
@@ -792,6 +920,7 @@ mod tests {
             cancel: CancelToken::default(),
             enqueued_at: Instant::now(),
             spans: SpanStamps::default(),
+            fault: FaultState::default(),
         };
         // 2048x2048 f64 A alone is 32 MiB > the small slice
         q.push(job).unwrap();
@@ -817,6 +946,7 @@ mod tests {
                 cancel: CancelToken::default(),
                 enqueued_at: Instant::now(),
                 spans: SpanStamps::default(),
+                fault: FaultState::default(),
             }
         };
         q.push(gemv(1, DispatchMode::Auto)).unwrap();
@@ -890,6 +1020,7 @@ mod tests {
             cancel: CancelToken::default(),
             enqueued_at: Instant::now(),
             spans: SpanStamps::default(),
+            fault: FaultState::default(),
         }
     }
 
@@ -1007,6 +1138,107 @@ mod tests {
         assert_eq!(r.depth(), 0);
     }
 
+    fn router_fault(pool: u32, threshold: u32, probe: u64)
+                    -> (PlacementRouter, WorkQueue, SchedCounters) {
+        let cfg = PlatformConfig::default();
+        let capacity = DevicePool::partition(&cfg, pool).unwrap().capacity().clone();
+        let knobs = PlacementConfig {
+            affinity: true,
+            steal: true,
+            big_shape_frac: 0.0,
+            rebalance_drains: 0,
+        };
+        let fault = FaultConfig {
+            quarantine_threshold: threshold,
+            probe_interval: probe,
+            ..FaultConfig::default()
+        };
+        let cost = CostModel::from_platform(&cfg, (64, 64, 64), 4096);
+        (
+            PlacementRouter::with_fault(capacity, cost, knobs, fault),
+            WorkQueue::new(64),
+            SchedCounters::new(pool as usize),
+        )
+    }
+
+    #[test]
+    fn quarantine_stops_routing_and_stealing_until_probe() {
+        let (r, q, c) = router_fault(2, 2, 2);
+        assert!(!r.note_fault(0), "below threshold: no quarantine yet");
+        assert!(r.note_fault(0), "threshold reached: newly quarantined");
+        assert!(!r.note_fault(0), "already quarantined: not a transition");
+        assert!(r.is_quarantined(0));
+        assert!(r.retry_targets_exist(0));
+        assert!(
+            !r.retry_targets_exist(1 << 1),
+            "the only healthy cluster is on the exclusion list"
+        );
+
+        // routing skips the quarantined cluster entirely
+        for id in 0..4 {
+            q.push(gemm_job(id, 64, None)).unwrap();
+        }
+        let mut st = r.state.lock().unwrap();
+        r.drain_global(&mut st, &q, &c);
+        assert_eq!(st.clusters[0].depth(), 0, "no routes at a quarantined cluster");
+        assert_eq!(st.clusters[1].depth(), 4);
+        // ...and its worker must not steal fresh victims
+        assert!(r.steal(&mut st, 0, &c).is_none());
+        drop(st);
+
+        // after probe_interval job-moving drains the cluster is
+        // re-admitted one fault below the threshold
+        q.push(gemm_job(9, 64, None)).unwrap();
+        let mut st = r.state.lock().unwrap();
+        r.drain_global(&mut st, &q, &c);
+        drop(st);
+        assert!(!r.is_quarantined(0), "probe interval drained: re-admitted");
+        q.push(gemm_job(10, 64, None)).unwrap();
+        q.push(gemm_job(11, 64, None)).unwrap();
+        let mut st = r.state.lock().unwrap();
+        r.drain_global(&mut st, &q, &c);
+        assert!(st.clusters[0].depth() > 0, "re-admitted cluster takes work");
+        drop(st);
+        // the probe failing once re-quarantines immediately
+        assert!(r.note_fault(0));
+        assert!(r.is_quarantined(0));
+    }
+
+    #[test]
+    fn excluded_clusters_are_skipped_for_retries() {
+        let (r, q, c) = router_fault(2, 3, 4);
+        // a retried job that already failed on its affine home routes to
+        // the other cluster even while the operand looks resident there
+        let bs = (0..64)
+            .find(|&s| operand_key("gemm_b", 64, s) % 2 == 0)
+            .unwrap();
+        r.note_resident(operand_key("gemm_b", 64, bs), 0);
+        let mut job = gemm_job(1, 64, Some(bs));
+        job.fault.note(0, 500);
+        assert_eq!(job.fault.attempts, 1);
+        q.push(job).unwrap();
+        let mut st = r.state.lock().unwrap();
+        r.drain_global(&mut st, &q, &c);
+        assert_eq!(st.clusters[0].depth(), 0, "failed cluster is excluded");
+        assert_eq!(st.clusters[1].depth(), 1);
+        // the excluded cluster cannot steal the job back either
+        assert!(
+            r.steal(&mut st, 0, &c).is_none(),
+            "thief is on the job's exclusion list"
+        );
+        drop(st);
+        // a job excluded EVERYWHERE falls back to unfiltered routing (it
+        // will exhaust its attempts into host fallback, but it routes)
+        let mut job = gemm_job(2, 64, None);
+        job.fault.note(0, 1);
+        job.fault.note(1, 1);
+        q.push(job).unwrap();
+        let mut st = r.state.lock().unwrap();
+        r.drain_global(&mut st, &q, &c);
+        let total: usize = st.clusters.iter().map(|l| l.depth()).sum();
+        assert_eq!(total, 2, "fully excluded job still routes somewhere");
+    }
+
     #[test]
     fn fences_round_robin_and_are_unstealable() {
         let (r, q, c) = router(2, 0.0, true, true);
@@ -1021,6 +1253,7 @@ mod tests {
                 cancel: CancelToken::default(),
                 enqueued_at: Instant::now(),
                 spans: SpanStamps::default(),
+                fault: FaultState::default(),
             }
         };
         q.push(fence(1)).unwrap();

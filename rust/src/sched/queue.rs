@@ -203,6 +203,7 @@ mod tests {
             cancel: crate::sched::CancelToken::default(),
             enqueued_at: Instant::now(),
             spans: crate::sched::SpanStamps::default(),
+            fault: crate::sched::FaultState::default(),
         }
     }
 

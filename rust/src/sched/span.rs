@@ -89,11 +89,16 @@ impl BatchMarks {
 /// == total_us` (exactly; `total_us` is defined as that sum).
 /// `linger_us` is the leading portion of `stage_us` spent in the
 /// batcher's linger window — informational, never added twice.
+/// `retry_us` is likewise outside the telescoping sum: it is the wall
+/// time earlier *failed* device attempts consumed before this job was
+/// requeued (fault recovery) — the five stages describe only the
+/// attempt that replied.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct SpanBreakdown {
     pub queue_us: u64,
     pub route_us: u64,
     pub linger_us: u64,
+    pub retry_us: u64,
     pub stage_us: u64,
     pub execute_us: u64,
     pub finish_us: u64,
@@ -123,6 +128,7 @@ impl SpanBreakdown {
             queue_us,
             route_us,
             linger_us,
+            retry_us: 0, // the worker fills this from the job's FaultState
             stage_us,
             execute_us,
             finish_us,
@@ -174,6 +180,7 @@ mod tests {
         assert_eq!(sum, s.total_us, "named stages must sum to the total");
         assert_eq!(s.total_us, 32_000);
         assert!(s.linger_us <= s.stage_us, "linger is a sub-span of stage");
+        assert_eq!(s.retry_us, 0, "retry is outside the telescoping sum");
     }
 
     #[test]

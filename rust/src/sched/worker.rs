@@ -48,12 +48,28 @@
 //! reply, and the worker keeps serving.  A staging failure while a batch
 //! is in flight first drains the pipeline (freeing its DRAM) and retries
 //! once serially before giving up.
+//!
+//! **Fault tolerance** (`[sched.fault]`, see [`super::fault`]): with a
+//! fault plan enabled the worker injects deterministic failures at three
+//! seams — staging/DMA, mailbox timeout, compute poison — and runs every
+//! launched batch under a deadline derived from the cost model's
+//! predicted cycles (`deadline_factor` x the estimate).  A faulted batch
+//! is abandoned exactly like cancel-after-stage (pins and `map(alloc:)`
+//! outputs released), the cluster's operand cache and affinity-directory
+//! entries are invalidated, and the fault is reported to the router's
+//! quarantine accounting.  Each member is then resubmitted with bounded
+//! exponential backoff and a placement exclusion bit for the failed
+//! cluster — or, when its attempts are exhausted or no healthy cluster
+//! remains, served inline by the host BLAS path, checksum-identical by
+//! construction, with `degraded: true` and its attempt count in the
+//! reply.  With the plan disabled (the default) none of this arms and
+//! the serve path is byte-for-byte the pre-fault behavior.
 
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::blas::{
     ChainLink, ChainRun, DispatchPolicy, ExecTarget, GemmBatchRun,
@@ -74,8 +90,8 @@ use super::pool::ClusterSpec;
 use super::queue::WorkQueue;
 use super::span::{BatchMarks, SpanBreakdown};
 use super::{
-    ChainRequest, GemmOutcome, GemmRequest, GemvRequest, Job, JobPayload,
-    Level1Op, Level1Request,
+    ChainRequest, FaultKind, FaultPlan, GemmOutcome, GemmRequest,
+    GemvRequest, Job, JobPayload, Level1Op, Level1Request, SpanStamps,
 };
 
 /// Spawn one worker thread for `spec`.  It reports session boot success
@@ -91,12 +107,16 @@ pub(crate) fn spawn(
     counters: Arc<SchedCounters>,
     batcher: Batcher,
     cost: CostModel,
+    fault: FaultPlan,
     ready: mpsc::Sender<Result<()>>,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
         .name(format!("sched-worker-{}", spec.id))
         .spawn(move || {
-            run(spec, artifacts, queue, router, counters, batcher, cost, ready)
+            run(
+                spec, artifacts, queue, router, counters, batcher, cost,
+                fault, ready,
+            )
         })
         .expect("spawn scheduler worker")
 }
@@ -203,6 +223,15 @@ struct Inflight {
     /// Fork-join launch issued (stage span ends, execute begins).  The
     /// finish phase supplies `done_at` when it observes completion.
     exec_at: Instant,
+    /// Injected fault decided at execute time (mailbox timeout / compute
+    /// poison): the finish phase discards the results and routes the
+    /// batch into recovery instead of replying.
+    fault: Option<FaultKind>,
+    /// Completion deadline (`deadline_factor` x the cost model's
+    /// predicted cycles, in virtual time).  Armed only when the fault
+    /// plan is enabled; an expiry while the completion word is pending
+    /// marks the batch [`FaultKind::Deadline`].
+    deadline: Option<Instant>,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -214,6 +243,7 @@ fn run(
     counters: Arc<SchedCounters>,
     batcher: Batcher,
     cost: CostModel,
+    fault: FaultPlan,
     ready: mpsc::Sender<Result<()>>,
 ) {
     let mut blas = match boot_session(&spec, &artifacts) {
@@ -233,6 +263,9 @@ fn run(
     let depth = (spec.cfg.sched.cache.pipeline_depth as usize).clamp(1, 2);
     let mut inflight: Option<Inflight> = None;
     let mut metrics_prev = blas.metrics();
+    // per-worker launch attempt counter: the fault plan's deterministic
+    // schedule is keyed on (cluster, launch-seq, seam)
+    let mut launch_seq: u64 = 0;
 
     loop {
         // With a batch in flight never park: an empty run queue means
@@ -247,10 +280,13 @@ fn run(
         };
         let Some(job) = next else {
             let infl = inflight.take().expect("try_next only used with inflight");
-            finish_batch(&mut blas, spec.id, &counters, &router, infl, &mut metrics_prev);
+            finish_batch(
+                &mut blas, spec.id, &counters, &router, &fault, &queue, infl,
+                &mut metrics_prev,
+            );
             // pipeline drained, nothing staged: every operand-cache pin
             // must be back — a leak here strands unevictable DRAM
-            debug_assert_pins_drained(&blas);
+            check_pins_drained(&blas, &counters);
             continue;
         };
 
@@ -275,8 +311,8 @@ fn run(
                 // A fence drains the pipeline first: it is a barrier.
                 if let Some(infl) = inflight.take() {
                     finish_batch(
-                        &mut blas, spec.id, &counters, &router, infl,
-                        &mut metrics_prev,
+                        &mut blas, spec.id, &counters, &router, &fault,
+                        &queue, infl, &mut metrics_prev,
                     );
                 }
                 // Park until the test/bench releases (or drops) the fence.
@@ -303,6 +339,9 @@ fn run(
                     spec.id,
                     &counters,
                     &router,
+                    &fault,
+                    &queue,
+                    &mut launch_seq,
                     batch,
                     req,
                     depth,
@@ -315,8 +354,8 @@ fn run(
                 // run the coalesced batch synchronously
                 if let Some(infl) = inflight.take() {
                     finish_batch(
-                        &mut blas, spec.id, &counters, &router, infl,
-                        &mut metrics_prev,
+                        &mut blas, spec.id, &counters, &router, &fault,
+                        &queue, infl, &mut metrics_prev,
                     );
                 }
                 let mut batch = batcher.collect(&source, job, usize::MAX);
@@ -337,6 +376,9 @@ fn run(
                     spec.id,
                     &counters,
                     &router,
+                    &fault,
+                    &queue,
+                    &mut launch_seq,
                     job,
                     req,
                     depth,
@@ -386,6 +428,9 @@ fn run(
                     spec.id,
                     &counters,
                     &router,
+                    &fault,
+                    &queue,
+                    &mut launch_seq,
                     batch,
                     req,
                     target,
@@ -400,22 +445,31 @@ fn run(
 
     // shutdown: drain whatever is still in flight before exiting
     if let Some(infl) = inflight.take() {
-        finish_batch(&mut blas, spec.id, &counters, &router, infl, &mut metrics_prev);
+        finish_batch(
+            &mut blas, spec.id, &counters, &router, &fault, &queue, infl,
+            &mut metrics_prev,
+        );
     }
-    debug_assert_pins_drained(&blas);
+    check_pins_drained(&blas, &counters);
 }
 
 /// Between batches — nothing staged, nothing in flight — every
 /// operand-cache pin must have been released.  A cancelled or failed
 /// chain that stranded a pinned intermediate would hold device DRAM
-/// forever (pinned entries are never evicted), so the worker asserts the
-/// invariant at its quiesce points.
-fn debug_assert_pins_drained(blas: &HeroBlas) {
-    debug_assert_eq!(
-        blas.engine.opcache.total_pins(),
-        0,
-        "operand-cache pins stranded after the pipeline drained"
-    );
+/// forever (pinned entries are never evicted).  Debug builds still
+/// panic; release builds count the leak into the `pin_leaks` counter
+/// (surfaced through serve `metrics`) instead of silently compiling the
+/// check out — a production leak shows up on the dashboard, not as an
+/// unexplainable capacity loss.
+fn check_pins_drained(blas: &HeroBlas, counters: &SchedCounters) {
+    let pins = blas.engine.opcache.total_pins();
+    if pins != 0 {
+        counters.pin_leaks.fetch_add(1, Ordering::Relaxed);
+        debug_assert_eq!(
+            pins, 0,
+            "operand-cache pins stranded after the pipeline drained"
+        );
+    }
 }
 
 fn boot_session(spec: &ClusterSpec, artifacts: &PathBuf) -> Result<HeroBlas> {
@@ -527,6 +581,51 @@ fn overlap_credit(blas: &HeroBlas, map_in: u64, prev_compute: u64) -> u64 {
     }
 }
 
+/// Execute-time injection: decide whether this launch hangs its mailbox
+/// completion word or completes poisoned (independent draws; mailbox
+/// wins when both fire).  Counted the moment it is decided — the finish
+/// phase acts on it when the batch drains.
+fn launch_fault(
+    plan: &FaultPlan,
+    counters: &SchedCounters,
+    cluster: u32,
+    seq: u64,
+) -> Option<FaultKind> {
+    let kind = if plan.mailbox_timeout(cluster, seq) {
+        Some(FaultKind::MailboxTimeout)
+    } else if plan.compute_poison(cluster, seq) {
+        Some(FaultKind::ComputePoison)
+    } else {
+        None
+    };
+    if kind.is_some() {
+        counters.faults_injected.fetch_add(1, Ordering::Relaxed);
+    }
+    kind
+}
+
+/// Completion deadline for a launched batch: `deadline_factor` x the
+/// cost model's predicted cycles, converted to virtual-time
+/// microseconds (floored so a tiny estimate never arms a zero-length
+/// deadline).  Armed only while the fault plan is enabled — with the
+/// `[sched.fault]` section absent the finish poll is byte-for-byte the
+/// pre-fault behavior.
+fn completion_deadline(
+    blas: &HeroBlas,
+    plan: &FaultPlan,
+    exec_at: Instant,
+    predict: impl FnOnce(&CostModel) -> f64,
+) -> Option<Instant> {
+    if !plan.enabled() {
+        return None;
+    }
+    blas.policy.model.as_ref().map(|cm| {
+        let cycles = (predict(cm) * plan.deadline_factor()) as u64;
+        let us = virt_us(blas, cycles).max(50);
+        exec_at + Duration::from_micros(us)
+    })
+}
+
 /// Directory-driven prefetch: synthesize the shared B from its seed and
 /// pre-stage it into this cluster's operand cache while the batcher
 /// would otherwise just linger — the batch that follows hits instead of
@@ -570,6 +669,9 @@ fn serve_gemm(
     cluster: u32,
     counters: &SchedCounters,
     router: &PlacementRouter,
+    plan: &FaultPlan,
+    queue: &WorkQueue,
+    launch_seq: &mut u64,
     batch: Vec<Job>,
     req: GemmRequest,
     target: ExecTarget,
@@ -584,12 +686,18 @@ fn serve_gemm(
     // ---- host path: no staging, no pipeline ----
     if target == ExecTarget::Host {
         if let Some(infl) = inflight.take() {
-            finish_batch(blas, cluster, counters, router, infl, metrics_prev);
+            finish_batch(
+                blas, cluster, counters, router, plan, queue, infl,
+                metrics_prev,
+            );
         }
         serve_gemm_host(blas, cluster, counters, batch, req, t0, metrics_prev);
         return;
     }
     let zero_copy = target == ExecTarget::DeviceZeroCopy;
+    // one fault-schedule draw per staged launch attempt
+    let seq = *launch_seq;
+    *launch_seq += 1;
 
     // ---- synthesize every member's operands from its seeds ----
     let data: Vec<(Vec<f64>, Vec<f64>, Vec<f64>)> = batch
@@ -615,7 +723,9 @@ fn serve_gemm(
         // the in-flight batch's operands may be what keeps us from
         // fitting: drain the pipeline and retry once serially
         let infl = inflight.take().expect("checked above");
-        finish_batch(blas, cluster, counters, router, infl, metrics_prev);
+        finish_batch(
+            blas, cluster, counters, router, plan, queue, infl, metrics_prev,
+        );
         before = snap(blas); // re-baseline: the failed attempt + drain
                              // must not bill this batch
         stage = blas.gemm_batch_stage((n, n, n), 1.0, 0.0, &inputs, zero_copy);
@@ -642,8 +752,29 @@ fn serve_gemm(
         blas.gemm_batch_abandon(staged_run);
         sync_directory(blas, router, cluster);
         if inflight.is_none() {
-            debug_assert_pins_drained(blas);
+            check_pins_drained(blas, counters);
         }
+        return;
+    }
+
+    // ---- injected staging/DMA fault: abandon exactly like the cancel
+    // path above (pins and map(alloc:) outputs released), drain the
+    // pipeline to a quiesce point, then recover every member ----
+    if plan.staging_fault(cluster, seq) {
+        counters.faults_injected.fetch_add(1, Ordering::Relaxed);
+        blas.gemm_batch_abandon(staged_run);
+        sync_directory(blas, router, cluster);
+        if let Some(infl) = inflight.take() {
+            finish_batch(
+                blas, cluster, counters, router, plan, queue, infl,
+                metrics_prev,
+            );
+        }
+        handle_fault(
+            blas, cluster, counters, router, plan, queue, batch,
+            FaultKind::StagingDma, metrics_prev,
+        );
+        check_pins_drained(blas, counters);
         return;
     }
 
@@ -665,7 +796,9 @@ fn serve_gemm(
     if let Some(infl) = inflight.take() {
         hidden = overlap_credit(blas, stage_acct.data_copy, infl.acct.compute);
         pipelined = true;
-        finish_batch(blas, cluster, counters, router, infl, metrics_prev);
+        finish_batch(
+            blas, cluster, counters, router, plan, queue, infl, metrics_prev,
+        );
         // the drained batch is fully accounted and this batch's stage
         // delta is already materialized: safe to bound trace growth now
         // (everything after re-snapshots from the cleared trace)
@@ -696,6 +829,12 @@ fn serve_gemm(
     acct.hidden = hidden;
     acct.warm_b = warm_b;
 
+    // ---- fault plan: execute-time seams + the completion deadline ----
+    let fault = launch_fault(plan, counters, cluster, seq);
+    let deadline = completion_deadline(blas, plan, exec_at, |cm| {
+        cm.offload_gemm_cycles((n, n, n), batch.len(), warm_b, true)
+    });
+
     let infl = Inflight {
         jobs: batch,
         run: InflightRun::Gemm { req, data, run },
@@ -704,11 +843,15 @@ fn serve_gemm(
         work_us: t0.elapsed().as_micros() as u64,
         collected_at: t0,
         exec_at,
+        fault,
+        deadline,
     };
     if depth >= 2 {
         *inflight = Some(infl); // finished when the next job (or none) arrives
     } else {
-        finish_batch(blas, cluster, counters, router, infl, metrics_prev);
+        finish_batch(
+            blas, cluster, counters, router, plan, queue, infl, metrics_prev,
+        );
     }
 }
 
@@ -721,6 +864,9 @@ fn serve_gemv(
     cluster: u32,
     counters: &SchedCounters,
     router: &PlacementRouter,
+    plan: &FaultPlan,
+    queue: &WorkQueue,
+    launch_seq: &mut u64,
     batch: Vec<Job>,
     req: GemvRequest,
     depth: usize,
@@ -747,13 +893,19 @@ fn serve_gemv(
     // ---- host path: no staging, no pipeline ----
     if blas.policy.gemv(m, n) == ExecTarget::Host {
         if let Some(infl) = inflight.take() {
-            finish_batch(blas, cluster, counters, router, infl, metrics_prev);
+            finish_batch(
+                blas, cluster, counters, router, plan, queue, infl,
+                metrics_prev,
+            );
         }
         serve_gemv_host(blas, cluster, counters, batch, req, data, t0, metrics_prev);
         return;
     }
     let zero_copy = blas.policy.gemv(m, n) == ExecTarget::DeviceZeroCopy;
     let ys: Vec<Vec<f64>> = vec![vec![0.0; m]; batch.len()];
+    // one fault-schedule draw per staged launch attempt
+    let seq = *launch_seq;
+    *launch_seq += 1;
 
     // ---- stage (map-in) ----
     if inflight.is_none() {
@@ -768,7 +920,9 @@ fn serve_gemv(
     let mut stage = blas.gemv_batch_stage((m, n), 1.0, 0.0, &inputs, zero_copy);
     if stage.is_err() && inflight.is_some() {
         let infl = inflight.take().expect("checked above");
-        finish_batch(blas, cluster, counters, router, infl, metrics_prev);
+        finish_batch(
+            blas, cluster, counters, router, plan, queue, infl, metrics_prev,
+        );
         before = snap(blas);
         stage = blas.gemv_batch_stage((m, n), 1.0, 0.0, &inputs, zero_copy);
     }
@@ -791,8 +945,27 @@ fn serve_gemv(
         blas.gemv_batch_abandon(staged_run);
         sync_directory(blas, router, cluster);
         if inflight.is_none() {
-            debug_assert_pins_drained(blas);
+            check_pins_drained(blas, counters);
         }
+        return;
+    }
+
+    // ---- injected staging/DMA fault (see serve_gemm) ----
+    if plan.staging_fault(cluster, seq) {
+        counters.faults_injected.fetch_add(1, Ordering::Relaxed);
+        blas.gemv_batch_abandon(staged_run);
+        sync_directory(blas, router, cluster);
+        if let Some(infl) = inflight.take() {
+            finish_batch(
+                blas, cluster, counters, router, plan, queue, infl,
+                metrics_prev,
+            );
+        }
+        handle_fault(
+            blas, cluster, counters, router, plan, queue, batch,
+            FaultKind::StagingDma, metrics_prev,
+        );
+        check_pins_drained(blas, counters);
         return;
     }
 
@@ -802,7 +975,9 @@ fn serve_gemv(
     if let Some(infl) = inflight.take() {
         hidden = overlap_credit(blas, stage_acct.data_copy, infl.acct.compute);
         pipelined = true;
-        finish_batch(blas, cluster, counters, router, infl, metrics_prev);
+        finish_batch(
+            blas, cluster, counters, router, plan, queue, infl, metrics_prev,
+        );
         blas.reset_run();
     }
 
@@ -827,6 +1002,12 @@ fn serve_gemv(
     acct.add(delta(before, snap(blas)));
     acct.hidden = hidden;
 
+    // ---- fault plan: execute-time seams + the completion deadline ----
+    let fault = launch_fault(plan, counters, cluster, seq);
+    let deadline = completion_deadline(blas, plan, exec_at, |cm| {
+        cm.offload_gemv_cycles((m, n), ys.len(), true)
+    });
+
     let infl = Inflight {
         jobs: batch,
         run: InflightRun::Gemv { req, ys, run },
@@ -835,11 +1016,15 @@ fn serve_gemv(
         work_us: t0.elapsed().as_micros() as u64,
         collected_at: t0,
         exec_at,
+        fault,
+        deadline,
     };
     if depth >= 2 {
         *inflight = Some(infl);
     } else {
-        finish_batch(blas, cluster, counters, router, infl, metrics_prev);
+        finish_batch(
+            blas, cluster, counters, router, plan, queue, infl, metrics_prev,
+        );
     }
 }
 
@@ -855,6 +1040,9 @@ fn serve_chain(
     cluster: u32,
     counters: &SchedCounters,
     router: &PlacementRouter,
+    plan: &FaultPlan,
+    queue: &WorkQueue,
+    launch_seq: &mut u64,
     job: Job,
     req: ChainRequest,
     depth: usize,
@@ -890,7 +1078,10 @@ fn serve_chain(
     let target = blas.policy.chain(m, &dims);
     if !req.chained || target == ExecTarget::Host {
         if let Some(infl) = inflight.take() {
-            finish_batch(blas, cluster, counters, router, infl, metrics_prev);
+            finish_batch(
+                blas, cluster, counters, router, plan, queue, infl,
+                metrics_prev,
+            );
         }
         serve_chain_unchained(
             blas, cluster, counters, router, batch, &req, x, &weights, t0,
@@ -898,6 +1089,9 @@ fn serve_chain(
         );
         return;
     }
+    // one fault-schedule draw per staged launch attempt
+    let seq = *launch_seq;
+    *launch_seq += 1;
 
     // ---- stage: fork once, input + weights + every output resident ----
     if inflight.is_none() {
@@ -919,7 +1113,9 @@ fn serve_chain(
         // the in-flight batch's operands may be what keeps the chain
         // from fitting: drain the pipeline and retry once serially
         let infl = inflight.take().expect("checked above");
-        finish_batch(blas, cluster, counters, router, infl, metrics_prev);
+        finish_batch(
+            blas, cluster, counters, router, plan, queue, infl, metrics_prev,
+        );
         before = snap(blas);
         stage = blas.chain_stage(m, &x, &specs);
     }
@@ -942,8 +1138,27 @@ fn serve_chain(
         inflight_sub(counters, cluster, 1);
         sync_directory(blas, router, cluster);
         if inflight.is_none() {
-            debug_assert_pins_drained(blas);
+            check_pins_drained(blas, counters);
         }
+        return;
+    }
+
+    // ---- injected staging/DMA fault (see serve_gemm) ----
+    if plan.staging_fault(cluster, seq) {
+        counters.faults_injected.fetch_add(1, Ordering::Relaxed);
+        blas.chain_abandon(staged_run);
+        sync_directory(blas, router, cluster);
+        if let Some(infl) = inflight.take() {
+            finish_batch(
+                blas, cluster, counters, router, plan, queue, infl,
+                metrics_prev,
+            );
+        }
+        handle_fault(
+            blas, cluster, counters, router, plan, queue, batch,
+            FaultKind::StagingDma, metrics_prev,
+        );
+        check_pins_drained(blas, counters);
         return;
     }
 
@@ -964,7 +1179,9 @@ fn serve_chain(
     if let Some(infl) = inflight.take() {
         hidden = overlap_credit(blas, stage_acct.data_copy, infl.acct.compute);
         pipelined = true;
-        finish_batch(blas, cluster, counters, router, infl, metrics_prev);
+        finish_batch(
+            blas, cluster, counters, router, plan, queue, infl, metrics_prev,
+        );
         blas.reset_run();
     }
 
@@ -989,6 +1206,12 @@ fn serve_chain(
     acct.add(delta(before, snap(blas)));
     acct.hidden = hidden;
 
+    // ---- fault plan: execute-time seams + the completion deadline ----
+    let fault = launch_fault(plan, counters, cluster, seq);
+    let deadline = completion_deadline(blas, plan, exec_at, |cm| {
+        cm.offload_chain_cycles(m, &dims)
+    });
+
     let infl = Inflight {
         jobs: batch,
         run: InflightRun::Chain { req, out: vec![0.0; m * n_last], run },
@@ -997,11 +1220,15 @@ fn serve_chain(
         work_us: t0.elapsed().as_micros() as u64,
         collected_at: t0,
         exec_at,
+        fault,
+        deadline,
     };
     if depth >= 2 {
         *inflight = Some(infl);
     } else {
-        finish_batch(blas, cluster, counters, router, infl, metrics_prev);
+        finish_batch(
+            blas, cluster, counters, router, plan, queue, infl, metrics_prev,
+        );
     }
 }
 
@@ -1251,15 +1478,36 @@ fn serve_level1(
 /// execute time; the poll keeps the worker protocol-shaped for a backend
 /// where compute genuinely overlaps the host), join, copy every member's
 /// output back, release the mappings, and reply.
+///
+/// Fault handling: the poll runs under the batch's deadline — an expiry
+/// while the word is pending marks the batch [`FaultKind::Deadline`]
+/// (the worker keeps waiting: the simulated device always completes, and
+/// the cleanup below must release its mappings).  A batch marked faulted
+/// — injected at execute time or caught here — still runs its finish so
+/// every mapping and pin is released, then discards the results and
+/// routes every member into [`handle_fault`] instead of replying.
+#[allow(clippy::too_many_arguments)]
 fn finish_batch(
     blas: &mut HeroBlas,
     cluster: u32,
     counters: &SchedCounters,
     router: &PlacementRouter,
+    plan: &FaultPlan,
+    queue: &WorkQueue,
     infl: Inflight,
     metrics_prev: &mut Metrics,
 ) {
+    let mut fault = infl.fault;
     while !blas.offload_completion_pending() {
+        if fault.is_none() {
+            if let Some(dl) = infl.deadline {
+                if Instant::now() >= dl {
+                    // a real (non-injected) detector trip: not counted
+                    // under faults_injected
+                    fault = Some(FaultKind::Deadline);
+                }
+            }
+        }
         std::thread::yield_now();
     }
     let t_finish = Instant::now();
@@ -1273,6 +1521,8 @@ fn finish_batch(
         work_us,
         collected_at,
         exec_at,
+        fault: _,
+        deadline: _,
     } = infl;
     let marks = BatchMarks { collected_at, exec_at, done_at: t_finish };
     let (finish, checksums, op, dims, mode, chain_dims) = match run {
@@ -1315,6 +1565,17 @@ fn finish_batch(
     acct.add(delta(before, snap(blas)));
     sync_directory(blas, router, cluster);
 
+    // ---- faulted batch: mappings are released (the finish above ran
+    // either way), results untrusted — discard and recover ----
+    if let Some(kind) = fault {
+        let _ = (finish, checksums, op, dims, mode, chain_dims);
+        handle_fault(
+            blas, cluster, counters, router, plan, queue, jobs, kind,
+            metrics_prev,
+        );
+        return;
+    }
+
     match finish {
         Ok(()) => {
             // active wall time only: stage+execute plus this finish —
@@ -1341,6 +1602,255 @@ fn finish_batch(
             reply_error(counters, cluster, &jobs, &e.to_string());
         }
     }
+}
+
+/// Recover a faulted batch: invalidate everything the failed cluster
+/// held (operand cache, affinity residency, home overrides), report the
+/// fault to the router's quarantine accounting, then resubmit every
+/// member with bounded exponential backoff and a placement exclusion
+/// bit for this cluster — or, when a member's attempts are exhausted,
+/// no healthy target remains, or the queue closed, serve it inline on
+/// the host BLAS path with `degraded: true` in the reply.
+#[allow(clippy::too_many_arguments)]
+fn handle_fault(
+    blas: &mut HeroBlas,
+    cluster: u32,
+    counters: &SchedCounters,
+    router: &PlacementRouter,
+    plan: &FaultPlan,
+    queue: &WorkQueue,
+    jobs: Vec<Job>,
+    kind: FaultKind,
+    metrics_prev: &mut Metrics,
+) {
+    // the failed cluster's cached operands are suspect: drop every
+    // unpinned entry, reclaim the DRAM, and clear the directory's view
+    // so no later request steers at stale residency
+    let bytes = blas.engine.invalidate_cache().unwrap_or(0);
+    counters
+        .cache_invalidated_bytes
+        .fetch_add(bytes, Ordering::Relaxed);
+    sync_directory(blas, router, cluster);
+    router.invalidate_cluster(cluster);
+    if router.note_fault(cluster) {
+        counters.quarantined.fetch_add(1, Ordering::Relaxed);
+    }
+    // the invalidation moved engine gauges (evictions, bytes in use):
+    // absorb the delta so per-cluster metrics stay honest
+    let metrics_now = blas.metrics();
+    counters.absorb_engine_delta(cluster, metrics_prev, &metrics_now);
+    *metrics_prev = metrics_now;
+
+    let mut backed_off = false;
+    for mut job in jobs {
+        if job.cancel.is_cancelled() {
+            counters.cancelled.fetch_add(1, Ordering::Relaxed);
+            inflight_sub(counters, cluster, 1);
+            continue;
+        }
+        job.fault
+            .note(cluster, job.enqueued_at.elapsed().as_micros() as u64);
+        let retry = job.fault.attempts < plan.max_attempts()
+            && router.retry_targets_exist(job.fault.excluded)
+            && !queue.is_closed();
+        if !retry {
+            host_fallback(blas, cluster, counters, router, kind, job, metrics_prev);
+            continue;
+        }
+        if !backed_off {
+            // one bounded-exponential pause per faulted batch, not per
+            // member — the members shared the failed launch
+            std::thread::sleep(Duration::from_millis(
+                plan.backoff_ms(job.fault.attempts),
+            ));
+            backed_off = true;
+        }
+        inflight_sub(counters, cluster, 1);
+        // the retry attempt re-measures its own queue/route spans; the
+        // wall time the failed attempt consumed is already banked in
+        // `job.fault.retry_us`
+        job.spans = SpanStamps::default();
+        job.enqueued_at = Instant::now();
+        match queue.push(job) {
+            Ok(_) => {
+                counters.retries.fetch_add(1, Ordering::Relaxed);
+                router.kick();
+            }
+            Err(_) => {
+                // push consumes the job: its reply sender drops and the
+                // submitter observes a failed request.  Only a queue
+                // that filled or closed between the check and here.
+                counters.failed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// `(op, (m, n), mode, checksum)` of one host-fallback execution.
+type HostRun = std::result::Result<
+    (&'static str, (usize, usize), crate::config::DispatchMode, f64),
+    String,
+>;
+
+/// Last-resort recovery: run the job's op inline on the host BLAS path —
+/// checksum-identical to the device path by construction — and reply
+/// with `degraded: true` plus the faulted attempt count.  The dispatch
+/// mode is forced to HostOnly for the duration so the fallback itself
+/// can never launch on (and fault with) the device.
+fn host_fallback(
+    blas: &mut HeroBlas,
+    cluster: u32,
+    counters: &SchedCounters,
+    router: &PlacementRouter,
+    kind: FaultKind,
+    job: Job,
+    metrics_prev: &mut Metrics,
+) {
+    let t0 = Instant::now();
+    let queue_wait_ms = job.enqueued_at.elapsed().as_secs_f64() * 1e3;
+    let saved_mode = blas.policy.mode;
+    blas.policy.mode = crate::config::DispatchMode::HostOnly;
+    blas.reset_run();
+    let before = snap(blas);
+    let exec_at = Instant::now();
+    let ran: HostRun = match &job.payload {
+        JobPayload::Gemm(r) => {
+            let n = r.n;
+            let (a, b, mut c) = synth_gemm(r, r.seed, r.b_seed);
+            blas.gemm(
+                crate::blas::Transpose::No,
+                crate::blas::Transpose::No,
+                1.0,
+                &a,
+                (n, n),
+                &b,
+                (n, n),
+                0.0,
+                &mut c,
+                (n, n),
+            )
+            .map(|_| ("gemm", (n, n), r.mode, c.iter().sum::<f64>()))
+            .map_err(|e| e.to_string())
+        }
+        JobPayload::Gemv(r) => {
+            let (m, n) = (r.m, r.n);
+            let mut rng = Rng::new(r.seed);
+            let a = rng.normal_vec(m * n);
+            let x = rng.normal_vec(n);
+            let mut y = vec![0.0; m];
+            blas.gemv(crate::blas::Transpose::No, 1.0, &a, (m, n), &x, 0.0, &mut y)
+                .map(|_| ("gemv", (m, n), r.mode, y.iter().sum::<f64>()))
+                .map_err(|e| e.to_string())
+        }
+        JobPayload::Chain(r) => host_chain(blas, r),
+        // level-1 and fence jobs are never injected or deadlined
+        _ => Err(format!(
+            "fault recovery ({}): payload has no host fallback",
+            kind.label()
+        )),
+    };
+    blas.policy.mode = saved_mode;
+    let acct = delta(before, snap(blas));
+    sync_directory(blas, router, cluster);
+
+    let (op, (m, n), mode, checksum) = match ran {
+        Ok(v) => v,
+        Err(e) => {
+            reply_error(counters, cluster, std::slice::from_ref(&job), &e);
+            return;
+        }
+    };
+    let done_at = Instant::now();
+
+    // counters before the reply, like every other completion path
+    counters.host_fallbacks.fetch_add(1, Ordering::Relaxed);
+    counters.completed.fetch_add(1, Ordering::Relaxed);
+    counters.batches.fetch_add(1, Ordering::Relaxed);
+    if let Some(pc) = counters.cluster(cluster) {
+        pc.completed.fetch_add(1, Ordering::Relaxed);
+        pc.batches.fetch_add(1, Ordering::Relaxed);
+    }
+    counters.note_service_us((t0.elapsed().as_micros() as u64).max(1));
+    let metrics_now = blas.metrics();
+    counters.absorb_engine_delta(cluster, metrics_prev, &metrics_now);
+    *metrics_prev = metrics_now;
+    inflight_sub(counters, cluster, 1);
+
+    let f = blas.engine.freq_hz();
+    let ms = |cycles: u64| Cycles(cycles).to_ns(f) / 1e6;
+    let marks = BatchMarks { collected_at: t0, exec_at, done_at };
+    let mut spans =
+        SpanBreakdown::compute(job.enqueued_at, job.spans, marks, done_at);
+    spans.retry_us = job.fault.retry_us;
+    counters.note_latency_us(op, cluster, spans.total_us);
+    counters.note_span_us(
+        spans.queue_us,
+        spans.route_us,
+        spans.linger_us,
+        spans.stage_us,
+        spans.execute_us,
+        spans.finish_us,
+    );
+    if spans.retry_us > 0 {
+        counters.note_retry_us(spans.retry_us);
+    }
+    let _ = job.reply.send(Ok(GemmOutcome {
+        op,
+        m,
+        n,
+        mode,
+        checksum,
+        data_copy_ms: ms(acct.data_copy),
+        fork_join_ms: ms(acct.fork_join),
+        compute_ms: ms(acct.compute),
+        host_compute_ms: ms(acct.host_compute),
+        total_ms: ms(
+            acct.data_copy + acct.fork_join + acct.compute + acct.host_compute,
+        ),
+        cluster,
+        batch_size: 1,
+        queue_ms: queue_wait_ms,
+        spans,
+        degraded: true,
+        attempts: job.fault.attempts,
+    }));
+}
+
+/// Host-path chain for fault recovery: the same per-link loop as the
+/// per-op oracle, with the same RNG call order as [`serve_chain`]'s
+/// synthesis — the checksum matches the chained device path
+/// bit-for-bit.
+fn host_chain(blas: &mut HeroBlas, req: &ChainRequest) -> HostRun {
+    let m = req.m;
+    if req.links() == 0 || req.dims.iter().any(|&d| d == 0) {
+        return Err("chain: empty or zero-width spec".to_string());
+    }
+    let mut rng = Rng::new(req.seed);
+    let mut h = rng.normal_vec(m * req.dims[0]);
+    for (w, bs) in req.dims.windows(2).zip(req.b_seeds.iter()) {
+        let (k, n) = (w[0], w[1]);
+        let b = match bs {
+            Some(s) => Rng::new(*s).normal_vec(k * n),
+            None => rng.normal_vec(k * n),
+        };
+        let mut c = vec![0.0; m * n];
+        blas.gemm(
+            crate::blas::Transpose::No,
+            crate::blas::Transpose::No,
+            1.0,
+            &h,
+            (m, k),
+            &b,
+            (k, n),
+            0.0,
+            &mut c,
+            (m, n),
+        )
+        .map_err(|e| e.to_string())?;
+        h = c;
+    }
+    let n_last = *req.dims.last().expect("non-empty dims");
+    Ok(("chain", (m, n_last), req.mode, h.iter().sum::<f64>()))
 }
 
 /// Counters + per-member outcome replies for one completed batch.
@@ -1428,7 +1938,11 @@ fn send_outcomes(
     inflight_sub(counters, cluster, b as u64);
     let end = Instant::now();
     for ((job, checksum), wait) in batch.iter().zip(checksums).zip(queue_ms) {
-        let spans = SpanBreakdown::compute(job.enqueued_at, job.spans, marks, end);
+        let mut spans =
+            SpanBreakdown::compute(job.enqueued_at, job.spans, marks, end);
+        // wall time lost to faulted attempts rides alongside the
+        // telescoping stages, like the linger sub-span
+        spans.retry_us = job.fault.retry_us;
         counters.note_latency_us(op, cluster, spans.total_us);
         counters.note_span_us(
             spans.queue_us,
@@ -1438,6 +1952,9 @@ fn send_outcomes(
             spans.execute_us,
             spans.finish_us,
         );
+        if spans.retry_us > 0 {
+            counters.note_retry_us(spans.retry_us);
+        }
         let _ = job.reply.send(Ok(GemmOutcome {
             op,
             m,
@@ -1453,6 +1970,8 @@ fn send_outcomes(
             batch_size: b,
             queue_ms: *wait,
             spans,
+            degraded: false,
+            attempts: job.fault.attempts,
         }));
     }
 }
@@ -1475,6 +1994,8 @@ impl GemmOutcome {
             batch_size: 1,
             queue_ms: 0.0,
             spans: SpanBreakdown::default(),
+            degraded: false,
+            attempts: 0,
         }
     }
 }

@@ -39,8 +39,13 @@
 //! back and the connection stays usable.  When the bounded queue is full
 //! the response carries a backpressure hint: {"ok": false, "error":
 //! "queue full", "retry_after_ms": ...}.  A request whose reply times
-//! out at this layer cancels its job, so the pool never launches work
-//! for a dropped receiver.  `{"op": "metrics"}` reports the scheduler
+//! out at this layer (`[serve] reply_timeout_ms`, or `--reply-timeout-ms`)
+//! cancels its job — so the pool never launches work for a dropped
+//! receiver — and its error reply carries the same `retry_after_ms`
+//! hint.  Replies served through fault recovery additionally carry
+//! `"attempts"` (failed device attempts) and `"degraded": true` when
+//! the pool fell back to the host BLAS path (checksum-identical by
+//! construction).  `{"op": "metrics"}` reports the scheduler
 //! counters — pool aggregates plus per-op-class p50/p99/p999 latency
 //! percentiles, an aggregate serving-path `spans` breakdown, and a
 //! `clusters` array with each cluster's run-queue depth, cache hits and
@@ -57,7 +62,7 @@
 //! whose named stages sum exactly to the reported `latency_us`.
 
 use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -75,8 +80,19 @@ use crate::util::json_lite::Json;
 
 /// How often parked connection readers wake to check for shutdown.
 const READ_POLL: Duration = Duration::from_millis(100);
-/// Upper bound on waiting for a job reply (guards against a wedged pool).
-const REPLY_TIMEOUT: Duration = Duration::from_secs(300);
+/// Hard bound on one request line, bytes.  A client that streams an
+/// unbounded line (malicious or buggy) gets an `ok: false` reply and the
+/// rest of the line discarded — the connection stays usable and the
+/// server never buffers more than this per reader.
+const MAX_LINE_BYTES: usize = 64 * 1024;
+
+/// Server-assigned request correlation token (`srv-<seq>`), used when a
+/// line carries no `req_id` — or could not be parsed at all.
+static REQ_SEQ: AtomicU64 = AtomicU64::new(1);
+
+fn srv_rid() -> Json {
+    Json::Str(format!("srv-{}", REQ_SEQ.fetch_add(1, Ordering::Relaxed)))
+}
 
 fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
@@ -124,22 +140,31 @@ fn gemm_response(o: &GemmOutcome, trace: bool) -> String {
         ("batch_size", Json::Num(o.batch_size as f64)),
         ("queue_ms", Json::Num(o.queue_ms)),
     ];
+    // fault recovery is opt-in on the wire: a clean reply (no faulted
+    // attempts) is byte-for-byte the pre-fault response shape
+    if o.degraded || o.attempts > 0 {
+        pairs.push(("degraded", Json::Bool(o.degraded)));
+        pairs.push(("attempts", Json::Num(o.attempts as f64)));
+    }
     if trace {
         let s = &o.spans;
         // contract: the five named stages sum exactly to latency_us
         pairs.push(("latency_us", Json::Num(s.total_us as f64)));
-        pairs.push((
-            "spans",
-            obj(vec![
-                ("queue_us", Json::Num(s.queue_us as f64)),
-                ("route_us", Json::Num(s.route_us as f64)),
-                ("linger_us", Json::Num(s.linger_us as f64)),
-                ("stage_us", Json::Num(s.stage_us as f64)),
-                ("execute_us", Json::Num(s.execute_us as f64)),
-                ("finish_us", Json::Num(s.finish_us as f64)),
-                ("total_us", Json::Num(s.total_us as f64)),
-            ]),
-        ));
+        let mut span_pairs = vec![
+            ("queue_us", Json::Num(s.queue_us as f64)),
+            ("route_us", Json::Num(s.route_us as f64)),
+            ("linger_us", Json::Num(s.linger_us as f64)),
+            ("stage_us", Json::Num(s.stage_us as f64)),
+            ("execute_us", Json::Num(s.execute_us as f64)),
+            ("finish_us", Json::Num(s.finish_us as f64)),
+            ("total_us", Json::Num(s.total_us as f64)),
+        ];
+        // like linger: a sub-span outside the telescoping sum, emitted
+        // only when a faulted attempt actually consumed wall time
+        if s.retry_us > 0 {
+            span_pairs.push(("retry_us", Json::Num(s.retry_us as f64)));
+        }
+        pairs.push(("spans", obj(span_pairs)));
     }
     let mut j = obj(pairs);
     compact(&mut j)
@@ -298,22 +323,29 @@ fn parse_gemv(req: &Json) -> std::result::Result<(GemvRequest, Priority), String
 /// frame — success, error and backpressure alike — carries a `req_id`:
 /// the request's own token echoed back (string or number), or a
 /// server-assigned `srv-<seq>` when absent or the line failed to parse.
-fn handle_line(sched: &Scheduler, line: &str) -> (String, bool) {
-    static REQ_SEQ: AtomicU64 = AtomicU64::new(1);
+fn handle_line(
+    sched: &Scheduler,
+    line: &str,
+    reply_timeout: Duration,
+) -> (String, bool) {
     let parsed = Json::parse(line);
     let rid = match parsed.as_ref().ok().and_then(|r| r.get("req_id")) {
         Some(v) if matches!(v, Json::Str(_) | Json::Num(_)) => v.clone(),
-        _ => Json::Str(format!("srv-{}", REQ_SEQ.fetch_add(1, Ordering::Relaxed))),
+        _ => srv_rid(),
     };
     let (resp, shut) = match parsed {
-        Ok(req) => dispatch_op(sched, &req),
+        Ok(req) => dispatch_op(sched, &req, reply_timeout),
         Err(e) => (err_line(&format!("bad json: {e}")), false),
     };
     (with_req_id(resp, &rid), shut)
 }
 
 /// Route one parsed request to its op handler.
-fn dispatch_op(sched: &Scheduler, req: &Json) -> (String, bool) {
+fn dispatch_op(
+    sched: &Scheduler,
+    req: &Json,
+    reply_timeout: Duration,
+) -> (String, bool) {
     let op = req.get("op").and_then(|o| o.as_str()).unwrap_or("");
     // opt-in per-request span breakdown on the reply
     let trace = matches!(req.get("trace"), Some(Json::Bool(true)));
@@ -359,6 +391,7 @@ fn dispatch_op(sched: &Scheduler, req: &Json) -> (String, bool) {
                         ("p50_us", Json::Num(c.p50_us as f64)),
                         ("p99_us", Json::Num(c.p99_us as f64)),
                         ("p999_us", Json::Num(c.p999_us as f64)),
+                        ("quarantined", Json::Bool(sched.is_quarantined(c.cluster))),
                     ])
                 })
                 .collect();
@@ -386,6 +419,7 @@ fn dispatch_op(sched: &Scheduler, req: &Json) -> (String, bool) {
                 ("stage_us", Json::Num(m.spans.stage_us as f64)),
                 ("execute_us", Json::Num(m.spans.execute_us as f64)),
                 ("finish_us", Json::Num(m.spans.finish_us as f64)),
+                ("retry_us", Json::Num(m.spans.retry_us as f64)),
             ]);
             let mut j = obj(vec![
                 ("ok", Json::Bool(true)),
@@ -410,6 +444,12 @@ fn dispatch_op(sched: &Scheduler, req: &Json) -> (String, bool) {
                 ("rehomed", Json::Num(m.rehomed as f64)),
                 ("chains", Json::Num(m.chains as f64)),
                 ("chain_bytes_elided", Json::Num(m.chain_bytes_elided as f64)),
+                ("faults_injected", Json::Num(m.faults_injected as f64)),
+                ("retries", Json::Num(m.retries as f64)),
+                ("quarantined", Json::Num(m.quarantined as f64)),
+                ("host_fallbacks", Json::Num(m.host_fallbacks as f64)),
+                ("cache_invalidated_bytes", Json::Num(m.cache_invalidated_bytes as f64)),
+                ("pin_leaks", Json::Num(m.pin_leaks as f64)),
                 ("crossover_estimate", crossover),
                 ("latency", latency),
                 ("p50_us", Json::Num(m.overall.p50_us as f64)),
@@ -437,6 +477,7 @@ fn dispatch_op(sched: &Scheduler, req: &Json) -> (String, bool) {
                         ("cache_hits", Json::Num(c.cache_hits as f64)),
                         ("stolen", Json::Num(c.stolen as f64)),
                         ("p99_us", Json::Num(c.p99_us as f64)),
+                        ("quarantined", Json::Bool(sched.is_quarantined(c.cluster))),
                     ])
                 })
                 .collect();
@@ -454,14 +495,14 @@ fn dispatch_op(sched: &Scheduler, req: &Json) -> (String, bool) {
                 Ok(p) => p,
                 Err(msg) => return (err_line(&msg), false),
             };
-            submit_and_wait(sched, priority, JobPayload::Gemm(gemm), trace)
+            submit_and_wait(sched, priority, JobPayload::Gemm(gemm), trace, reply_timeout)
         }
         "gemv" => {
             let (gemv, priority) = match parse_gemv(req) {
                 Ok(p) => p,
                 Err(msg) => return (err_line(&msg), false),
             };
-            submit_and_wait(sched, priority, JobPayload::Gemv(gemv), trace)
+            submit_and_wait(sched, priority, JobPayload::Gemv(gemv), trace, reply_timeout)
         }
         "chain" => {
             let (chain, priority) = match parse_chain(req) {
@@ -474,7 +515,7 @@ fn dispatch_op(sched: &Scheduler, req: &Json) -> (String, bool) {
             if let Err(msg) = sched.validate_chain(&chain) {
                 return (err_line(&msg), false);
             }
-            submit_and_wait(sched, priority, JobPayload::Chain(chain), trace)
+            submit_and_wait(sched, priority, JobPayload::Chain(chain), trace, reply_timeout)
         }
         "axpy" | "dot" => {
             let l1op = if op == "axpy" { Level1Op::Axpy } else { Level1Op::Dot };
@@ -482,7 +523,7 @@ fn dispatch_op(sched: &Scheduler, req: &Json) -> (String, bool) {
                 Ok(p) => p,
                 Err(msg) => return (err_line(&msg), false),
             };
-            submit_and_wait(sched, priority, JobPayload::Level1(l1), trace)
+            submit_and_wait(sched, priority, JobPayload::Level1(l1), trace, reply_timeout)
         }
         other => (err_line(&format!("unknown op '{other}'")), false),
     }
@@ -490,18 +531,31 @@ fn dispatch_op(sched: &Scheduler, req: &Json) -> (String, bool) {
 
 /// Submit a job and block on its reply.  A timeout cancels the job (via
 /// [`crate::sched::Submission::recv_timeout`]) so a worker never
-/// launches it for this already-gone receiver.
+/// launches it for this already-gone receiver.  The timed-out reply
+/// carries the same `retry_after_ms` hint as a backpressure rejection —
+/// from the client's side both mean "the pool is saturated, come back".
 fn submit_and_wait(
     sched: &Scheduler,
     priority: Priority,
     payload: JobPayload,
     trace: bool,
+    reply_timeout: Duration,
 ) -> (String, bool) {
     match sched.submit(priority, payload) {
-        Ok(submission) => match submission.recv_timeout(REPLY_TIMEOUT) {
+        Ok(submission) => match submission.recv_timeout(reply_timeout) {
             Ok(Ok(outcome)) => (gemm_response(&outcome, trace), false),
             Ok(Err(msg)) => (err_line(&msg), false),
-            Err(_) => (err_line("worker unavailable"), false),
+            Err(_) => {
+                let mut j = obj(vec![
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::Str("worker unavailable".into())),
+                    (
+                        "retry_after_ms",
+                        Json::Num(sched.current_retry_hint_ms() as f64),
+                    ),
+                ]);
+                (compact(&mut j), false)
+            }
         },
         Err(SubmitError::Backpressure { depth, retry_after_ms }) => {
             (backpressure_line(depth, retry_after_ms), false)
@@ -510,13 +564,27 @@ fn submit_and_wait(
     }
 }
 
+/// Write one reply line; false when the peer is gone.
+fn write_line(writer: &mut TcpStream, resp: &str) -> bool {
+    writer
+        .write_all(resp.as_bytes())
+        .and_then(|_| writer.write_all(b"\n"))
+        .and_then(|_| writer.flush())
+        .is_ok()
+}
+
 /// One connection: read lines (with a poll timeout so shutdown is
 /// noticed), answer each, never drop the connection on a bad request.
+/// Lines are read bytewise under a hard [`MAX_LINE_BYTES`] bound: an
+/// oversized line is answered with `ok: false` and discarded to its
+/// newline, a non-UTF-8 line likewise — the connection stays usable
+/// either way, and the server never buffers more than the bound.
 fn serve_conn(
     sched: &Scheduler,
     stream: TcpStream,
     shutdown: &AtomicBool,
     port: u16,
+    reply_timeout: Duration,
 ) {
     let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
     let _ = stream.set_read_timeout(Some(READ_POLL));
@@ -528,23 +596,68 @@ fn serve_conn(
         }
     };
     let mut reader = BufReader::new(stream);
-    let mut line = String::new();
+    let mut buf: Vec<u8> = Vec::new();
+    // true while skipping the tail of a line that blew the bound
+    let mut discarding = false;
     loop {
         if shutdown.load(Ordering::Acquire) {
             return;
         }
-        match reader.read_line(&mut line) {
-            Ok(0) => return, // EOF
+        // Read at most one byte past the bound per attempt: crossing it
+        // proves the line is oversized without buffering the rest.
+        let room = if discarding {
+            MAX_LINE_BYTES + 1
+        } else {
+            (MAX_LINE_BYTES + 1).saturating_sub(buf.len())
+        };
+        match (&mut reader).take(room as u64).read_until(b'\n', &mut buf) {
+            Ok(0) => return, // EOF (a partial line is dropped, as before)
             Ok(_) => {
-                let trimmed = line.trim();
-                if !trimmed.is_empty() {
-                    let (resp, shut) = handle_line(sched, trimmed);
-                    if writer
-                        .write_all(resp.as_bytes())
-                        .and_then(|_| writer.write_all(b"\n"))
-                        .and_then(|_| writer.flush())
-                        .is_err()
-                    {
+                let complete = buf.last() == Some(&b'\n');
+                if complete {
+                    buf.pop();
+                    if buf.last() == Some(&b'\r') {
+                        buf.pop();
+                    }
+                }
+                if discarding {
+                    if complete {
+                        // tail of the oversized line finally drained
+                        discarding = false;
+                        let resp = with_req_id(err_line("line too long"), &srv_rid());
+                        if !write_line(&mut writer, &resp) {
+                            return;
+                        }
+                    }
+                    buf.clear();
+                    continue;
+                }
+                if !complete {
+                    if buf.len() > MAX_LINE_BYTES {
+                        // bound crossed mid-line: reply once the newline
+                        // arrives, discard everything until then
+                        discarding = true;
+                        buf.clear();
+                    }
+                    // else: partial line, keep accumulating
+                    continue;
+                }
+                let resp_shut = match std::str::from_utf8(&buf) {
+                    Ok(line) => {
+                        let trimmed = line.trim();
+                        if trimmed.is_empty() {
+                            None
+                        } else {
+                            Some(handle_line(sched, trimmed, reply_timeout))
+                        }
+                    }
+                    Err(_) => Some((
+                        with_req_id(err_line("invalid utf-8"), &srv_rid()),
+                        false,
+                    )),
+                };
+                if let Some((resp, shut)) = resp_shut {
+                    if !write_line(&mut writer, &resp) {
                         return;
                     }
                     if shut {
@@ -555,9 +668,9 @@ fn serve_conn(
                         return;
                     }
                 }
-                line.clear();
+                buf.clear();
             }
-            // poll timeout: partial input (if any) stays in `line`
+            // poll timeout: partial input (if any) stays in `buf`
             Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {}
             Err(_) => return,
         }
@@ -574,6 +687,8 @@ pub fn serve(
     ready: Option<std::sync::mpsc::Sender<u16>>,
 ) -> Result<()> {
     let sched = Arc::new(Scheduler::new(&cfg, artifacts)?);
+    // floor of 1ms: a zero would turn every reply into an instant cancel
+    let reply_timeout = Duration::from_millis(cfg.serve.reply_timeout_ms.max(1));
 
     let listener = TcpListener::bind(("127.0.0.1", port))
         .map_err(|e| Error::Runtime(format!("bind 127.0.0.1:{port}: {e}")))?;
@@ -606,6 +721,21 @@ pub fn serve(
         show(xing.level1_n),
         if cfg.cost.calibrate { "on" } else { "off" },
     );
+    if cfg.sched.fault.enabled {
+        let f = &cfg.sched.fault;
+        eprintln!(
+            "hero-blas serve: fault injection ON — seed {}, rates \
+             staging {} / mailbox {} / poison {}, target cluster {}, \
+             max {} attempts, quarantine after {}",
+            f.seed,
+            f.staging_rate,
+            f.mailbox_rate,
+            f.poison_rate,
+            if f.target_cluster < 0 { "any".to_string() } else { f.target_cluster.to_string() },
+            f.max_attempts,
+            f.quarantine_threshold,
+        );
+    }
     if let Some(tx) = ready {
         let _ = tx.send(bound);
     }
@@ -624,7 +754,7 @@ pub fn serve(
                 // drops this one connection; the server keeps serving
                 match std::thread::Builder::new()
                     .name("serve-conn".into())
-                    .spawn(move || serve_conn(&sched, s, &shutdown, bound))
+                    .spawn(move || serve_conn(&sched, s, &shutdown, bound, reply_timeout))
                 {
                     Ok(h) => conns.push(h),
                     Err(e) => eprintln!("serve: spawn connection handler: {e}"),
@@ -832,11 +962,14 @@ mod tests {
                 queue_us: 100,
                 route_us: 20,
                 linger_us: 5,
+                retry_us: 0,
                 stage_us: 30,
                 execute_us: 800,
                 finish_us: 50,
                 total_us: 1000,
             },
+            degraded: false,
+            attempts: 0,
         }
     }
 
@@ -873,6 +1006,50 @@ mod tests {
         assert_eq!(latency, 1000);
         assert_eq!(spans.get("linger_us").and_then(|v| v.as_u64()), Some(5));
         assert_eq!(spans.get("total_us").and_then(|v| v.as_u64()), Some(1000));
+    }
+
+    #[test]
+    fn degraded_response_carries_attempts() {
+        // clean outcome: the fault-recovery keys are absent entirely, so
+        // a fault-free deployment's replies are byte-identical to before
+        let j = Json::parse(&gemm_response(&outcome(), false)).unwrap();
+        assert_eq!(j.get("degraded"), None);
+        assert_eq!(j.get("attempts"), None);
+
+        // a host-fallback reply reports both
+        let mut o = outcome();
+        o.degraded = true;
+        o.attempts = 2;
+        let j = Json::parse(&gemm_response(&o, false)).unwrap();
+        assert_eq!(j.get("degraded"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("attempts").and_then(|v| v.as_u64()), Some(2));
+
+        // a retried-but-recovered reply (not degraded) still shows the
+        // failed attempts
+        let mut o = outcome();
+        o.attempts = 1;
+        let j = Json::parse(&gemm_response(&o, false)).unwrap();
+        assert_eq!(j.get("degraded"), Some(&Json::Bool(false)));
+        assert_eq!(j.get("attempts").and_then(|v| v.as_u64()), Some(1));
+    }
+
+    #[test]
+    fn traced_retry_span_is_opt_in() {
+        // zero retry wall: no retry_us key, trace output unchanged
+        let j = Json::parse(&gemm_response(&outcome(), true)).unwrap();
+        assert_eq!(j.get("spans").unwrap().get("retry_us"), None);
+
+        let mut o = outcome();
+        o.spans.retry_us = 123;
+        let j = Json::parse(&gemm_response(&o, true)).unwrap();
+        let spans = j.get("spans").unwrap();
+        assert_eq!(spans.get("retry_us").and_then(|v| v.as_u64()), Some(123));
+        // retry stays OUTSIDE the telescoping sum
+        let sum: u64 = ["queue_us", "route_us", "stage_us", "execute_us", "finish_us"]
+            .iter()
+            .map(|k| spans.get(k).and_then(|v| v.as_u64()).unwrap())
+            .sum();
+        assert_eq!(sum, j.get("latency_us").and_then(|v| v.as_u64()).unwrap());
     }
 
     #[test]

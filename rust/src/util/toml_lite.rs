@@ -27,6 +27,13 @@ impl TomlValue {
         }
     }
 
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             TomlValue::Float(f) => Some(*f),
@@ -142,6 +149,10 @@ impl TomlDoc {
 
     pub fn opt_u64(&self, path: &str) -> Option<u64> {
         self.get(path).and_then(|v| v.as_u64())
+    }
+
+    pub fn opt_i64(&self, path: &str) -> Option<i64> {
+        self.get(path).and_then(|v| v.as_i64())
     }
 
     pub fn opt_str(&self, path: &str) -> Option<&str> {
