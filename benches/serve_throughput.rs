@@ -52,6 +52,9 @@ struct Knobs {
     auto_mixed: bool,
     /// Online cost-model calibration (`[cost] calibrate`) on/off.
     calibrate: bool,
+    /// Flight-recorder rings (`[sched.trace] enabled`) on/off — the
+    /// tracing-overhead sweep toggles this to price the recorder.
+    tracing: bool,
 }
 
 /// Scheduler counters scraped over the wire before shutdown.
@@ -102,7 +105,7 @@ impl Point {
             "{{\"bench\": \"serve_throughput\", \"n\": {N}, \"pool\": {}, \
              \"batching\": {}, \"cache\": {}, \"pipeline\": {}, \
              \"shared_b\": {}, \"placement\": {}, \"auto_mixed\": {}, \
-             \"calibrate\": {}, \"clients\": {}, \
+             \"calibrate\": {}, \"tracing\": {}, \"clients\": {}, \
              \"requests\": {}, \
              \"wall_ms\": {:.1}, \"rps\": {:.1}, \"retries\": {}, \
              \"bytes_to_device\": {}, \"bytes_copy_elided\": {}, \
@@ -123,6 +126,7 @@ impl Point {
             k.placement,
             k.auto_mixed,
             k.calibrate,
+            k.tracing,
             self.clients,
             self.clients * self.per_client,
             self.wall.as_secs_f64() * 1e3,
@@ -190,6 +194,7 @@ fn run_point(knobs: Knobs, clients: usize, per_client: usize) -> Point {
     cfg.sched.placement.affinity = knobs.placement;
     cfg.sched.placement.steal = knobs.placement;
     cfg.cost.calibrate = knobs.calibrate;
+    cfg.sched.trace.enabled = knobs.tracing;
 
     let dir = hero_blas::find_artifacts_dir().expect("run `make artifacts` first");
     let (tx, rx) = mpsc::channel();
@@ -519,6 +524,7 @@ fn main() {
         placement: false,
         auto_mixed: false,
         calibrate: false,
+        tracing: true, // the recorder's default-ON posture
     };
     let serial = run_point(base_knobs, 1, serial_reqs);
     let base = serial.rps();
@@ -667,7 +673,40 @@ fn main() {
         "chained bytes_to_device {cb} not below unchained {ub}"
     );
 
-    // sweep 6: the fault matrix — cluster 0 failing half its launches.
+    // sweep 6: flight-recorder overhead — the pool x batch point with
+    // the trace rings OFF vs ON.  The recorder is lock-free and
+    // fixed-capacity; it must cost < 5% rps on the hot path.
+    println!();
+    let mut rps_off = 0.0;
+    for tracing in [false, true] {
+        let p = run_point(
+            Knobs { pool: 2, batching: true, tracing, ..base_knobs },
+            clients,
+            per_client,
+        );
+        snap.emit(p.json(p.rps() / base));
+        if !tracing {
+            rps_off = p.rps();
+        } else {
+            let overhead_pct = (rps_off - p.rps()) / rps_off * 100.0;
+            snap.emit(format!(
+                "{{\"bench\": \"serve_throughput\", \"summary\": \
+                 \"tracing_overhead\", \"rps_off\": {rps_off:.1}, \
+                 \"rps_on\": {:.1}, \"overhead_pct\": {overhead_pct:.2}}}",
+                p.rps(),
+            ));
+            // quick mode's request counts are too small for a stable
+            // percentage; the full run enforces the budget
+            if !quick {
+                assert!(
+                    overhead_pct < 5.0,
+                    "flight recorder costs {overhead_pct:.2}% rps (budget 5%)"
+                );
+            }
+        }
+    }
+
+    // sweep 7: the fault matrix — cluster 0 failing half its launches.
     // Every request must still complete; the summary line carries the
     // recovery counters (and, being a summary, is NOT gated by
     // bench_compare: fault-injected wall time is not a perf trajectory).

@@ -14,5 +14,6 @@ pub use platform::{
     CacheConfig, ChainConfig, ClockConfig, ClusterConfig, CostConfig,
     DmaConfig, FaultConfig, ForkJoinConfig, HostConfig, IommuConfig,
     MemoryConfig, PlacementConfig, PlatformConfig, SchedConfig, ServeConfig,
+    TraceConfig,
 };
 pub use workload::{DispatchMode, SweepConfig, WorkloadConfig};

@@ -325,6 +325,35 @@ impl Default for FaultConfig {
     }
 }
 
+/// Flight-recorder knobs (`[sched.trace]`).
+///
+/// Default ON: the recorder is designed to be always-on (bounded
+/// memory, lock-free writers, <5% throughput cost — the bench's
+/// tracing-overhead sweep pins this), so a p999 spike or a quarantine
+/// cascade can always be reconstructed after the fact with the serve
+/// `trace_dump` op.  `enabled = false` drops every record call at one
+/// branch for bit-identical-overhead runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceConfig {
+    /// Master switch for event recording.
+    pub enabled: bool,
+    /// Events retained per ring (one ring per cluster plus the global
+    /// ingress track); the oldest events are overwritten when full.
+    pub ring_capacity: u64,
+    /// Frame interval of the serve `watch` streaming op, milliseconds.
+    pub watch_interval_ms: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            enabled: true,
+            ring_capacity: 4096,
+            watch_interval_ms: 500,
+        }
+    }
+}
+
 /// Serve-layer knobs (`[serve]`): the TCP line-protocol front end.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeConfig {
@@ -373,6 +402,8 @@ pub struct SchedConfig {
     pub chain: ChainConfig,
     /// Fault-injection and recovery knobs (`[sched.fault]`).
     pub fault: FaultConfig,
+    /// Flight-recorder knobs (`[sched.trace]`).
+    pub trace: TraceConfig,
 }
 
 impl Default for SchedConfig {
@@ -386,6 +417,7 @@ impl Default for SchedConfig {
             placement: PlacementConfig::default(),
             chain: ChainConfig::default(),
             fault: FaultConfig::default(),
+            trace: TraceConfig::default(),
         }
     }
 }
@@ -609,6 +641,17 @@ impl PlatformConfig {
                             .opt_u64("sched.fault.probe_interval")
                             .unwrap_or(def.fault.probe_interval),
                     },
+                    trace: TraceConfig {
+                        enabled: d
+                            .opt_bool("sched.trace.enabled")
+                            .unwrap_or(def.trace.enabled),
+                        ring_capacity: d
+                            .opt_u64("sched.trace.ring_capacity")
+                            .unwrap_or(def.trace.ring_capacity),
+                        watch_interval_ms: d
+                            .opt_u64("sched.trace.watch_interval_ms")
+                            .unwrap_or(def.trace.watch_interval_ms),
+                    },
                 }
             },
             // Cost-model knobs are estimation policy, not SoC calibration
@@ -665,6 +708,8 @@ impl PlatformConfig {
              mailbox_rate = {}\npoison_rate = {}\ntarget_cluster = {}\n\
              deadline_factor = {}\nmax_attempts = {}\nbackoff_base_ms = {}\n\
              quarantine_threshold = {}\nprobe_interval = {}\n\n\
+             [sched.trace]\nenabled = {}\nring_capacity = {}\n\
+             watch_interval_ms = {}\n\n\
              [cost]\ncalibrate = {}\nalpha = {}\nfloor = {}\nceiling = {}\n\n\
              [serve]\nreply_timeout_ms = {}\n",
             c.name,
@@ -722,6 +767,9 @@ impl PlatformConfig {
             c.sched.fault.backoff_base_ms,
             c.sched.fault.quarantine_threshold,
             c.sched.fault.probe_interval,
+            c.sched.trace.enabled,
+            c.sched.trace.ring_capacity,
+            c.sched.trace.watch_interval_ms,
             c.cost.calibrate,
             fmt_f64(c.cost.alpha),
             fmt_f64(c.cost.floor),
@@ -836,6 +884,20 @@ impl PlatformConfig {
         }
         if f.probe_interval == 0 {
             return err("sched.fault.probe_interval must be > 0".into());
+        }
+        let t = &self.sched.trace;
+        if !(64..=1_048_576).contains(&t.ring_capacity) {
+            return err(format!(
+                "sched.trace.ring_capacity must be in 64..=1048576 (one ring \
+                 per cluster plus the global track), got {}",
+                t.ring_capacity
+            ));
+        }
+        if t.watch_interval_ms == 0 || t.watch_interval_ms > 60_000 {
+            return err(format!(
+                "sched.trace.watch_interval_ms must be in 1..=60000, got {}",
+                t.watch_interval_ms
+            ));
         }
         if self.serve.reply_timeout_ms == 0 {
             return err("serve.reply_timeout_ms must be > 0".into());
@@ -1140,6 +1202,39 @@ mod tests {
         assert!(cfg.validate().is_err());
         let mut cfg = PlatformConfig::default();
         cfg.sched.fault.probe_interval = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn trace_section_parses_defaults_and_validates() {
+        // absent [sched.trace] => defaults (recorder ON)
+        let mut text = PlatformConfig::default().to_toml_string();
+        let at = text.find("[sched.trace]").unwrap();
+        text.truncate(at);
+        let cfg = PlatformConfig::from_toml_str(&text).unwrap();
+        assert_eq!(cfg.sched.trace, TraceConfig::default());
+        assert!(cfg.sched.trace.enabled, "the flight recorder defaults ON");
+
+        // explicit values round-trip
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.trace.enabled = false;
+        cfg.sched.trace.ring_capacity = 128;
+        cfg.sched.trace.watch_interval_ms = 50;
+        let back = PlatformConfig::from_toml_str(&cfg.to_toml_string()).unwrap();
+        assert_eq!(back.sched.trace, cfg.sched.trace);
+
+        // out-of-range knobs rejected
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.trace.ring_capacity = 16;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.trace.ring_capacity = 2_000_000;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.trace.watch_interval_ms = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.trace.watch_interval_ms = 120_000;
         assert!(cfg.validate().is_err());
     }
 

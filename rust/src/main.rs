@@ -37,7 +37,8 @@ fn usage() -> String {
        serve [--port 7744] [--pool N] [--queue N] [--batch-window-ms N]\n\
              [--batch-max N] [--cache-frac F] [--cache-max-entries N]\n\
              [--pipeline-depth N] [--no-affinity] [--no-steal]\n\
-             [--big-shape-frac F] [--reply-timeout-ms N]\n"
+             [--big-shape-frac F] [--reply-timeout-ms N]\n\
+             [--no-trace] [--trace-ring N] [--watch-interval-ms N]\n"
         .to_string()
 }
 
@@ -299,6 +300,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.sched.placement.big_shape_frac = s
             .parse()
             .map_err(|_| Error::Config("--big-shape-frac: not a number".into()))?;
+    }
+    // flight-recorder knobs ([sched.trace]): ring size + watch cadence
+    if has_flag(&args.rest, "--no-trace") {
+        cfg.sched.trace.enabled = false;
+    }
+    if let Some(v) = num("--trace-ring")? {
+        cfg.sched.trace.ring_capacity = v;
+    }
+    if let Some(v) = num("--watch-interval-ms")? {
+        cfg.sched.trace.watch_interval_ms = v;
     }
     // serving-layer knob ([serve]): reply-channel wait before cancelling
     if let Some(v) = num("--reply-timeout-ms")? {

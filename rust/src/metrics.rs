@@ -88,6 +88,9 @@ pub const HIST_BUCKETS: usize = 32;
 #[derive(Debug, Default)]
 pub struct LatencyHistogram {
     buckets: [AtomicU64; HIST_BUCKETS],
+    /// Exact sum of every recorded value — the Prometheus `_sum` series
+    /// (quantiles stay bucket-resolution; the sum is lossless).
+    sum_us: AtomicU64,
 }
 
 impl LatencyHistogram {
@@ -116,6 +119,7 @@ impl LatencyHistogram {
     /// Record one latency sample.  Allocation-free and lock-free.
     pub fn record(&self, us: u64) {
         self.buckets[Self::bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
     }
 
     /// Plain-value copy for quantile reads and cross-cluster merges.
@@ -124,6 +128,7 @@ impl LatencyHistogram {
         for (i, b) in self.buckets.iter().enumerate() {
             out.buckets[i] = b.load(Ordering::Relaxed);
         }
+        out.sum = self.sum_us.load(Ordering::Relaxed);
         out
     }
 }
@@ -132,6 +137,9 @@ impl LatencyHistogram {
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct HistogramSnapshot {
     pub buckets: [u64; HIST_BUCKETS],
+    /// Exact sum of the recorded values (`_sum` in the Prometheus
+    /// exposition; merges add it losslessly).
+    pub sum: u64,
 }
 
 impl HistogramSnapshot {
@@ -146,6 +154,7 @@ impl HistogramSnapshot {
         for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
             *a += *b;
         }
+        self.sum += other.sum;
     }
 
     /// The quantile `q` in [0, 1]: upper bound of the bucket holding the
@@ -260,6 +269,9 @@ pub struct ClusterCounters {
     /// (live gauge, not a monotone counter — the serve `top` op reads
     /// it for the dashboard poll loop).
     pub inflight: AtomicU64,
+    /// Pin-drain check failures on this cluster (stranded operand-cache
+    /// pins caught after the pipeline quiesced).
+    pub pin_leaks: AtomicU64,
     /// End-to-end request latency served by this cluster.
     pub latency: LatencyHistogram,
 }
@@ -279,9 +291,13 @@ pub struct ClusterMetrics {
     pub cache_misses: u64,
     pub bytes_to_device: u64,
     pub inflight: u64,
+    pub pin_leaks: u64,
     pub p50_us: u64,
     pub p99_us: u64,
     pub p999_us: u64,
+    /// Raw latency histogram for this cluster — the source of the
+    /// Prometheus `hero_cluster_latency_us` series.
+    pub latency_hist: HistogramSnapshot,
 }
 
 /// Thread-safe scheduler counters, shared between the submit path and
@@ -493,6 +509,7 @@ impl SchedCounters {
                 OpClassLatency::from_hist(&latency[3]),
             ],
             overall: OpClassLatency::from_hist(&overall),
+            latency_hist: latency,
             spans: SpanTotals {
                 queue_us: ld(&self.span_queue_us),
                 route_us: ld(&self.span_route_us),
@@ -520,9 +537,11 @@ impl SchedCounters {
                         cache_misses: ld(&c.cache_misses),
                         bytes_to_device: ld(&c.bytes_to_device),
                         inflight: ld(&c.inflight),
+                        pin_leaks: ld(&c.pin_leaks),
                         p50_us: h.p50(),
                         p99_us: h.p99(),
                         p999_us: h.p999(),
+                        latency_hist: h,
                     }
                 })
                 .collect(),
@@ -595,6 +614,10 @@ pub struct SchedMetrics {
     pub latency: [OpClassLatency; 4],
     /// Percentiles over every op class merged.
     pub overall: OpClassLatency,
+    /// Raw per-op-class histogram snapshots (bucket counts plus exact
+    /// sums), indexed like [`OP_CLASSES`] — what the Prometheus
+    /// exposition renders as cumulative `_bucket`/`_sum`/`_count`.
+    pub latency_hist: [HistogramSnapshot; 4],
     /// Pool-wide serving-path span totals (microseconds per stage).
     pub spans: SpanTotals,
     /// Per-cluster breakdown, indexed by cluster id (empty when the
@@ -644,6 +667,159 @@ impl SchedMetrics {
             self.pin_leaks,
         )
     }
+}
+
+/// One `# HELP`/`# TYPE` header plus a single unlabelled sample line.
+fn prom_scalar(out: &mut String, name: &str, kind: &str, help: &str, v: u64) {
+    use std::fmt::Write;
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+/// Cumulative `_bucket{{le=...}}` series plus `_sum`/`_count` for one
+/// histogram under an optional extra label set (e.g. `op="gemm"`).
+fn prom_hist(out: &mut String, name: &str, labels: &str, h: &HistogramSnapshot) {
+    use std::fmt::Write;
+    let mut cum = 0u64;
+    for (i, b) in h.buckets.iter().enumerate() {
+        cum += *b;
+        let le = if i == HIST_BUCKETS - 1 {
+            "+Inf".to_string()
+        } else {
+            LatencyHistogram::bucket_upper(i).to_string()
+        };
+        if labels.is_empty() {
+            let _ = writeln!(out, "{name}_bucket{{le=\"{le}\"}} {cum}");
+        } else {
+            let _ = writeln!(out, "{name}_bucket{{{labels},le=\"{le}\"}} {cum}");
+        }
+    }
+    if labels.is_empty() {
+        let _ = writeln!(out, "{name}_sum {}", h.sum);
+        let _ = writeln!(out, "{name}_count {cum}");
+    } else {
+        let _ = writeln!(out, "{name}_sum{{{labels}}} {}", h.sum);
+        let _ = writeln!(out, "{name}_count{{{labels}}} {cum}");
+    }
+}
+
+/// Render a [`SchedMetrics`] snapshot in the Prometheus text exposition
+/// format (0.0.4): every pool counter and gauge, the span-stage totals,
+/// per-cluster series labelled `{cluster="N"}`, and the end-to-end
+/// latency histograms as cumulative `_bucket`/`_sum`/`_count` series
+/// whose `le` edges are the log2 bucket upper bounds.  This is the body
+/// of the serve layer's `metrics_prom` op.
+pub fn prometheus_text(m: &SchedMetrics) -> String {
+    use std::fmt::Write;
+    let mut out = String::with_capacity(16 * 1024);
+
+    let counters: [(&str, &str, u64); 27] = [
+        ("hero_jobs_submitted_total", "Jobs accepted into the work queue.", m.submitted),
+        ("hero_jobs_rejected_total", "Jobs rejected at submit (backpressure).", m.rejected),
+        ("hero_jobs_completed_total", "Jobs completed and replied successfully.", m.completed),
+        ("hero_jobs_failed_total", "Jobs that replied with an error.", m.failed),
+        ("hero_jobs_cancelled_total", "Jobs skipped at dequeue after client cancel.", m.cancelled),
+        ("hero_batches_total", "Fork-join launches issued by workers.", m.batches),
+        ("hero_batched_jobs_total", "Jobs that shared a launch with another job.", m.batched_jobs),
+        ("hero_pipelined_batches_total", "Batches staged under the previous compute.", m.pipelined_batches),
+        ("hero_overlap_hidden_us_total", "Staging microseconds hidden by pipelining.", m.overlap_hidden_us),
+        ("hero_cache_hits_total", "Operand-cache hits.", m.cache_hits),
+        ("hero_cache_misses_total", "Operand-cache misses.", m.cache_misses),
+        ("hero_cache_evictions_total", "Operand-cache evictions.", m.cache_evictions),
+        ("hero_bytes_to_device_total", "Host-to-device bytes actually copied.", m.bytes_to_device),
+        ("hero_bytes_copy_elided_total", "Host-to-device bytes elided by the cache.", m.bytes_copy_elided),
+        ("hero_jobs_stolen_total", "Jobs taken from another cluster's queue.", m.stolen),
+        ("hero_affine_routed_total", "Jobs routed to their operand-affine cluster.", m.affine_routed),
+        ("hero_big_shape_routed_total", "Jobs routed by the big-shape policy.", m.big_shape_routed),
+        ("hero_prefetched_total", "Shared operands prefetched ahead of claim.", m.prefetched),
+        ("hero_rehomed_total", "Jobs re-homed off a quarantined cluster.", m.rehomed),
+        ("hero_chains_total", "Chained multi-op requests executed.", m.chains),
+        ("hero_chain_bytes_elided_total", "Intermediate bytes kept device-resident.", m.chain_bytes_elided),
+        ("hero_faults_injected_total", "Device faults injected by the fault plan.", m.faults_injected),
+        ("hero_retries_total", "Faulted jobs requeued for another attempt.", m.retries),
+        ("hero_quarantined_total", "Cluster quarantine transitions.", m.quarantined),
+        ("hero_host_fallbacks_total", "Jobs degraded to the host BLAS path.", m.host_fallbacks),
+        ("hero_cache_invalidated_bytes_total", "Cache bytes dropped on fault invalidation.", m.cache_invalidated_bytes),
+        ("hero_pin_leaks_total", "Operand pins released by the leak sweeper.", m.pin_leaks),
+    ];
+    for (name, help, v) in counters {
+        prom_scalar(&mut out, name, "counter", help, v);
+    }
+    prom_scalar(
+        &mut out,
+        "hero_queue_depth_peak",
+        "gauge",
+        "Deepest work queue observed at submit time.",
+        m.queue_depth_peak,
+    );
+    prom_scalar(
+        &mut out,
+        "hero_service_us_ewma",
+        "gauge",
+        "EWMA of per-job wall service time (microseconds).",
+        m.service_us_ewma,
+    );
+
+    let spans: [(&str, u64); 7] = [
+        ("queue", m.spans.queue_us),
+        ("route", m.spans.route_us),
+        ("linger", m.spans.linger_us),
+        ("retry", m.spans.retry_us),
+        ("stage", m.spans.stage_us),
+        ("execute", m.spans.execute_us),
+        ("finish", m.spans.finish_us),
+    ];
+    let _ = writeln!(out, "# HELP hero_span_us_total Serving-path microseconds per span stage.");
+    let _ = writeln!(out, "# TYPE hero_span_us_total counter");
+    for (stage, v) in spans {
+        let _ = writeln!(out, "hero_span_us_total{{stage=\"{stage}\"}} {v}");
+    }
+
+    // Per-cluster families: one HELP/TYPE header, one labelled line per
+    // cluster.
+    let per_cluster: [(&str, &str, &str, fn(&ClusterMetrics) -> u64); 11] = [
+        ("hero_cluster_completed_total", "counter", "Jobs completed per cluster.", |c| c.completed),
+        ("hero_cluster_batches_total", "counter", "Launches issued per cluster.", |c| c.batches),
+        ("hero_cluster_stolen_total", "counter", "Jobs stolen per cluster.", |c| c.stolen),
+        ("hero_cluster_affine_routed_total", "counter", "Affine-routed jobs per cluster.", |c| c.affine_routed),
+        ("hero_cluster_prefetched_total", "counter", "Prefetches per cluster.", |c| c.prefetched),
+        ("hero_cluster_cache_hits_total", "counter", "Operand-cache hits per cluster.", |c| c.cache_hits),
+        ("hero_cluster_cache_misses_total", "counter", "Operand-cache misses per cluster.", |c| c.cache_misses),
+        ("hero_cluster_bytes_to_device_total", "counter", "Bytes copied to device per cluster.", |c| c.bytes_to_device),
+        ("hero_cluster_pin_leaks_total", "counter", "Stranded-pin sweeps per cluster.", |c| c.pin_leaks),
+        ("hero_cluster_inflight", "gauge", "Claimed-but-unreplied jobs per cluster.", |c| c.inflight),
+        ("hero_cluster_queue_depth", "gauge", "Live run-queue depth per cluster.", |c| c.queue_depth),
+    ];
+    for (name, kind, help, get) in per_cluster {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} {kind}");
+        for c in &m.clusters {
+            let _ = writeln!(out, "{name}{{cluster=\"{}\"}} {}", c.cluster, get(c));
+        }
+    }
+
+    let _ = writeln!(
+        out,
+        "# HELP hero_request_latency_us End-to-end request latency per op class."
+    );
+    let _ = writeln!(out, "# TYPE hero_request_latency_us histogram");
+    for (i, h) in m.latency_hist.iter().enumerate() {
+        let labels = format!("op=\"{}\"", OP_CLASSES[i]);
+        prom_hist(&mut out, "hero_request_latency_us", &labels, h);
+    }
+
+    let _ = writeln!(
+        out,
+        "# HELP hero_cluster_latency_us End-to-end request latency per serving cluster."
+    );
+    let _ = writeln!(out, "# TYPE hero_cluster_latency_us histogram");
+    for c in &m.clusters {
+        let labels = format!("cluster=\"{}\"", c.cluster);
+        prom_hist(&mut out, "hero_cluster_latency_us", &labels, &c.latency_hist);
+    }
+
+    out
 }
 
 #[cfg(test)]
@@ -868,5 +1044,97 @@ mod tests {
         }
         let v = c.snapshot().service_us_ewma;
         assert!(v >= 100 && v < 200, "ewma drifted to {v}");
+    }
+
+    #[test]
+    fn merged_quantiles_match_sorted_oracle_over_the_union() {
+        // Merging per-cluster snapshots must answer quantiles exactly
+        // as one histogram over the union of samples would: the
+        // bucket-wise sum is lossless, so the only rounding is the
+        // shared bucket-upper resolution — never an edge bias
+        // introduced by the merge itself.
+        let per_cluster: Vec<LatencyHistogram> =
+            (0..3).map(|_| LatencyHistogram::default()).collect();
+        let mut union: Vec<u64> = Vec::new();
+        for i in 0..900u64 {
+            let v = (i * 7919) % 100_000; // crosses many bucket edges
+            per_cluster[(i % 3) as usize].record(v);
+            union.push(v);
+        }
+        // exact powers of two sit on bucket edges — the spot where an
+        // off-by-one in the upper-bound interpolation would show up
+        for v in [1u64, 2, 4, 1024, 65_536] {
+            per_cluster[0].record(v);
+            union.push(v);
+        }
+
+        let mut merged = per_cluster[0].snapshot();
+        for h in &per_cluster[1..] {
+            merged.merge(&h.snapshot());
+        }
+        union.sort_unstable();
+        assert_eq!(merged.count(), union.len() as u64);
+        assert_eq!(merged.sum, union.iter().sum::<u64>());
+
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            let rank = ((q * union.len() as f64).ceil() as usize)
+                .clamp(1, union.len());
+            let oracle = union[rank - 1];
+            let expect = LatencyHistogram::bucket_upper(
+                LatencyHistogram::bucket_index(oracle),
+            );
+            let got = merged.quantile(q);
+            assert_eq!(got, expect, "q={q}: merged={got} oracle bucket={expect}");
+            assert!(got >= oracle, "q={q}: {got} under-reports oracle {oracle}");
+        }
+    }
+
+    #[test]
+    fn prometheus_text_renders_counters_and_histograms() {
+        let c = SchedCounters::new(2);
+        c.submitted.fetch_add(7, Ordering::Relaxed);
+        c.completed.fetch_add(6, Ordering::Relaxed);
+        c.note_latency_us("gemm", 0, 100);
+        c.note_latency_us("gemm", 0, 3_000);
+        c.note_latency_us("dot", 1, 50);
+        c.cluster(1).unwrap().inflight.fetch_add(2, Ordering::Relaxed);
+        let text = prometheus_text(&c.snapshot());
+
+        assert!(text.contains("# TYPE hero_jobs_submitted_total counter"));
+        assert!(text.contains("hero_jobs_submitted_total 7"));
+        assert!(text.contains("hero_cluster_inflight{cluster=\"1\"} 2"));
+        assert!(text.contains("hero_span_us_total{stage=\"execute\"} 0"));
+
+        // histogram series: terminal +Inf bucket equals _count, _sum is
+        // the exact sample sum
+        assert!(text.contains("hero_request_latency_us_bucket{op=\"gemm\",le=\"+Inf\"} 2"));
+        assert!(text.contains("hero_request_latency_us_sum{op=\"gemm\"} 3100"));
+        assert!(text.contains("hero_request_latency_us_count{op=\"gemm\"} 2"));
+        assert!(text.contains("hero_cluster_latency_us_count{cluster=\"1\"} 1"));
+
+        // buckets are cumulative (monotone non-decreasing)
+        let mut prev = 0u64;
+        let mut seen = 0usize;
+        for line in text
+            .lines()
+            .filter(|l| l.starts_with("hero_request_latency_us_bucket{op=\"gemm\""))
+        {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "cumulative counts regressed: {line}");
+            prev = v;
+            seen += 1;
+        }
+        assert_eq!(seen, HIST_BUCKETS);
+        assert_eq!(prev, 2);
+
+        // exposition hygiene: no empty lines, every line is a comment
+        // or `name[{labels}] value`
+        for line in text.lines() {
+            assert!(!line.trim().is_empty());
+            assert!(
+                line.starts_with('#') || line.split(' ').count() == 2,
+                "malformed line: {line}"
+            );
+        }
     }
 }

@@ -17,4 +17,4 @@ pub mod opcache;
 
 pub use datamap::{DataMap, DeviceMapping};
 pub use engine::{MappedBuf, OffloadEngine};
-pub use opcache::{CacheKey, CacheStats, OperandCache};
+pub use opcache::{CacheEvent, CacheKey, CacheStats, OperandCache};

@@ -79,6 +79,31 @@ pub struct CacheStats {
     pub evictions: u64,
 }
 
+/// One observable cache transition, delivered synchronously to the
+/// installed event hook.  The cache layer stays ignorant of who is
+/// listening — the scheduler's worker installs a hook that forwards
+/// these into the pool's flight recorder with its own cluster id, so
+/// the `omp` layer never grows a dependency on `sched`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheEvent {
+    /// A verified, pinned hit (`bytes` = resident allocation length).
+    Hit { bytes: u64 },
+    /// A lookup that will stage from host bytes.
+    Miss,
+    /// An unpinned entry reclaimed by LRU/OOM/invalidate.
+    Evict { bytes: u64 },
+}
+
+/// Boxed observer with a hand-written `Debug` so the cache keeps its
+/// derived `Debug` (closures have none).
+struct EventHook(Box<dyn Fn(CacheEvent) + Send + Sync>);
+
+impl std::fmt::Debug for EventHook {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("EventHook(..)")
+    }
+}
+
 /// The per-cluster operand cache.
 #[derive(Debug)]
 pub struct OperandCache {
@@ -92,6 +117,8 @@ pub struct OperandCache {
     /// Placement tags of entries evicted since the last drain — the
     /// residency-change feed for the scheduler's affinity directory.
     evicted_tags: Vec<u64>,
+    /// Optional transition observer (the flight-recorder bridge).
+    hook: Option<EventHook>,
 }
 
 impl OperandCache {
@@ -103,6 +130,24 @@ impl OperandCache {
             clock: 0,
             stats: CacheStats::default(),
             evicted_tags: Vec::new(),
+            hook: None,
+        }
+    }
+
+    /// Install the transition observer (replaces any previous one).
+    /// Events fire synchronously from the mutating call, so the hook
+    /// must be cheap and reentrancy-free — the flight recorder's
+    /// lock-free append qualifies.
+    pub fn set_event_hook(
+        &mut self,
+        hook: impl Fn(CacheEvent) + Send + Sync + 'static,
+    ) {
+        self.hook = Some(EventHook(Box::new(hook)));
+    }
+
+    fn emit(&self, ev: CacheEvent) {
+        if let Some(h) = &self.hook {
+            (h.0)(ev);
         }
     }
 
@@ -142,16 +187,22 @@ impl OperandCache {
     pub fn pin_hit(&mut self, key: &CacheKey) {
         self.clock += 1;
         let clock = self.clock;
+        let mut hit_bytes = None;
         if let Some(e) = self.entries.iter_mut().find(|e| e.key == *key) {
             e.pins += 1;
             e.stamp = clock;
             self.stats.hits += 1;
+            hit_bytes = Some(e.alloc.len);
+        }
+        if let Some(bytes) = hit_bytes {
+            self.emit(CacheEvent::Hit { bytes });
         }
     }
 
     /// Record a miss (the caller stages the bytes itself).
     pub fn note_miss(&mut self) {
         self.stats.misses += 1;
+        self.emit(CacheEvent::Miss);
     }
 
     /// Register a freshly staged allocation as resident, pinned once by
@@ -304,6 +355,7 @@ impl OperandCache {
         if let Some(tag) = entry.tag {
             self.evicted_tags.push(tag);
         }
+        self.emit(CacheEvent::Evict { bytes: entry.alloc.len });
         Some(entry.alloc)
     }
 
@@ -502,6 +554,36 @@ mod tests {
         assert_eq!(evicted.len(), 1);
         assert_eq!(c.take_evicted_tags(), vec![0xAA]);
         assert!(c.is_empty());
+    }
+
+    #[test]
+    fn event_hook_observes_hits_misses_and_evictions() {
+        use std::sync::{Arc, Mutex};
+        let seen: Arc<Mutex<Vec<CacheEvent>>> = Arc::default();
+        let mut c = OperandCache::new(128, 8);
+        let sink = Arc::clone(&seen);
+        c.set_event_hook(move |ev| sink.lock().unwrap().push(ev));
+
+        c.note_miss();
+        assert!(c.insert(key(1), alloc(0x100, 64)).cached);
+        assert!(c.release(&key(1)).is_empty());
+        c.pin_hit(&key(1));
+        c.pin_hit(&key(9)); // absent: no event
+        assert!(c.release(&key(1)).is_empty());
+        assert!(c.insert(key(2), alloc(0x200, 64)).cached);
+        // third entry overflows the byte budget: LRU eviction fires
+        let out = c.insert(key(3), alloc(0x300, 64));
+        assert_eq!(out.evicted.len(), 1);
+
+        let got = seen.lock().unwrap().clone();
+        assert_eq!(
+            got,
+            vec![
+                CacheEvent::Miss,
+                CacheEvent::Hit { bytes: 64 },
+                CacheEvent::Evict { bytes: 64 },
+            ]
+        );
     }
 
     #[test]

@@ -79,6 +79,19 @@ impl FaultKind {
             FaultKind::Deadline => "deadline",
         }
     }
+
+    /// Stable numeric code for the flight recorder's compact event
+    /// payload (`b` of a `fault-injected` instant).  Zero is reserved
+    /// for "no fault" so a trace consumer can treat the payload as
+    /// optional.
+    pub fn trace_code(self) -> u64 {
+        match self {
+            FaultKind::StagingDma => 1,
+            FaultKind::MailboxTimeout => 2,
+            FaultKind::ComputePoison => 3,
+            FaultKind::Deadline => 4,
+        }
+    }
 }
 
 /// The seeded fault schedule shared by every worker.

@@ -62,6 +62,7 @@ pub mod placement;
 pub mod pool;
 pub mod queue;
 pub mod span;
+pub mod trace;
 pub mod worker;
 
 use std::path::Path;
@@ -81,6 +82,7 @@ pub use placement::PlacementRouter;
 pub use pool::{CapacityModel, ClusterSpec, DevicePool};
 pub use queue::{PushError, WorkQueue};
 pub use span::{SpanBreakdown, SpanStamps};
+pub use trace::{chrome_trace_json, EventKind, TraceEvent, TraceRecorder};
 
 /// Priority class of a queued job (three lanes; higher pops first).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -400,6 +402,9 @@ pub struct Scheduler {
     /// batcher's linger sizing.  Kept here so the serve layer can report
     /// the live calibrated crossovers.
     cost: CostModel,
+    /// The pool-shared flight recorder (`[sched.trace]`): every layer
+    /// records into it, the serve `trace_dump` op reads it out.
+    trace: Arc<TraceRecorder>,
 }
 
 impl std::fmt::Debug for Scheduler {
@@ -427,14 +432,24 @@ impl Scheduler {
         // by every worker's dispatch, the router and the batcher.
         let manifest = crate::runtime::Manifest::load(artifacts)?;
         let cost = CostModel::from_manifest(cfg, &manifest);
-        let queue = Arc::new(WorkQueue::new(sc.queue_capacity as usize));
+        // the flight recorder spans every layer below: the queue stamps
+        // enqueues, the router stamps placement decisions, the workers
+        // stamp batch stages / faults / per-request spans
+        let trace = TraceRecorder::new(&sc.trace, sc.pool_clusters);
+        let queue = Arc::new(
+            WorkQueue::new(sc.queue_capacity as usize)
+                .with_trace(Arc::clone(&trace)),
+        );
         let counters = Arc::new(SchedCounters::new(sc.pool_clusters as usize));
-        let router = Arc::new(PlacementRouter::with_fault(
-            capacity,
-            cost.clone(),
-            sc.placement.clone(),
-            sc.fault.clone(),
-        ));
+        let router = Arc::new(
+            PlacementRouter::with_fault(
+                capacity,
+                cost.clone(),
+                sc.placement.clone(),
+                sc.fault.clone(),
+            )
+            .with_trace(Arc::clone(&trace)),
+        );
         // deterministic fault plan ([sched.fault]; inert by default) —
         // each worker draws injection decisions from it per launch
         let fault_plan = FaultPlan::new(sc.fault.clone());
@@ -456,6 +471,7 @@ impl Scheduler {
                 batcher.clone(),
                 cost.clone(),
                 fault_plan.clone(),
+                Arc::clone(&trace),
                 ready_tx.clone(),
             ));
         }
@@ -491,6 +507,7 @@ impl Scheduler {
             next_id: AtomicU64::new(1),
             chain_max_links: sc.chain.max_links,
             cost,
+            trace,
         })
     }
 
@@ -629,6 +646,19 @@ impl Scheduler {
     /// the serve banner and `metrics` op report them).
     pub fn cost_model(&self) -> &CostModel {
         &self.cost
+    }
+
+    /// The pool-shared flight recorder (the serve `trace_dump` op and
+    /// the tests read it; everything below the facade writes it).
+    pub fn trace(&self) -> &Arc<TraceRecorder> {
+        &self.trace
+    }
+
+    /// Every counter and histogram in Prometheus text exposition format
+    /// (the serve `metrics_prom` op) — ready for fleet-level
+    /// scrape-and-merge.
+    pub fn prometheus_text(&self) -> String {
+        crate::metrics::prometheus_text(&self.metrics())
     }
 
     /// Stop accepting work, let workers drain the queue, join them.

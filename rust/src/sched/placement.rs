@@ -51,7 +51,7 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::config::{FaultConfig, PlacementConfig};
@@ -62,6 +62,7 @@ use super::affinity::{chain_b_key, operand_key, AffinityDirectory};
 use super::batcher::BatchKey;
 use super::pool::CapacityModel;
 use super::queue::WorkQueue;
+use super::trace::{EventKind, TraceRecorder};
 use super::{Job, JobPayload};
 
 /// How long a worker parks between re-polls of the global queue when no
@@ -152,6 +153,9 @@ pub struct PlacementRouter {
     /// Separate cursor for fences so capacity tests stay deterministic:
     /// the first fence always lands on cluster 0.
     fence_rr: AtomicUsize,
+    /// Flight recorder for placement events (routed / claimed / stolen /
+    /// re-home / quarantine / probe).  `None` in bare unit-test routers.
+    trace: Option<Arc<TraceRecorder>>,
 }
 
 impl PlacementRouter {
@@ -194,6 +198,20 @@ impl PlacementRouter {
             last_rehome: AtomicU64::new(0),
             rr: AtomicUsize::new(0),
             fence_rr: AtomicUsize::new(0),
+            trace: None,
+        }
+    }
+
+    /// Attach the pool's flight recorder (builder-style, at boot).
+    pub fn with_trace(mut self, trace: Arc<TraceRecorder>) -> PlacementRouter {
+        self.trace = Some(trace);
+        self
+    }
+
+    /// Record one placement event when the recorder is attached.
+    fn trace_evt(&self, cluster: u32, kind: EventKind, a: u64, b: u64) {
+        if let Some(t) = &self.trace {
+            t.instant(cluster, kind, a, b);
         }
     }
 
@@ -237,6 +255,7 @@ impl PlacementRouter {
         if st.fault_counts[c] >= self.fault.quarantine_threshold.max(1) {
             st.quarantined[c] = true;
             st.quarantined_at[c] = st.probe_seq;
+            self.trace_evt(cluster, EventKind::Quarantine, st.fault_counts[c] as u64, 0);
             return true;
         }
         false
@@ -280,6 +299,7 @@ impl PlacementRouter {
                 st.quarantined[c] = false;
                 st.fault_counts[c] =
                     self.fault.quarantine_threshold.max(1) - 1;
+                self.trace_evt(c as u32, EventKind::Probe, 1, 0);
             }
         }
     }
@@ -460,6 +480,7 @@ impl PlacementRouter {
                             Ordering::Relaxed,
                         );
                         counters.rehomed.fetch_add(1, Ordering::Relaxed);
+                        self.trace_evt(t, EventKind::Rehome, key, c as u64);
                         c = t;
                     }
                 }
@@ -495,7 +516,9 @@ impl PlacementRouter {
             // queue span ends, route span begins
             job.spans.mark_routed();
             let lane = job.priority.lane();
+            let id = job.id;
             let (c, routed) = self.route_to(st, job, counters);
+            self.trace_evt(c as u32, EventKind::JobRouted, id, 0);
             st.clusters[c].lanes[lane].push_back(routed);
             self.routed.fetch_add(1, Ordering::Relaxed);
             moved = true;
@@ -535,6 +558,7 @@ impl PlacementRouter {
             if let Some(mut r) = lane.pop_front() {
                 self.routed.fetch_sub(1, Ordering::Relaxed);
                 r.job.spans.mark_claimed();
+                self.trace_evt(cluster as u32, EventKind::JobClaimed, r.job.id, 0);
                 return Some(r.job);
             }
         }
@@ -584,6 +608,12 @@ impl PlacementRouter {
                                 pc.stolen.fetch_add(1, Ordering::Relaxed);
                             }
                             r.job.spans.mark_claimed();
+                            self.trace_evt(
+                                thief as u32,
+                                EventKind::JobStolen,
+                                r.job.id,
+                                v as u64,
+                            );
                             return Some(r.job);
                         }
                     }
@@ -709,6 +739,7 @@ impl PlacementRouter {
                 if lane[i].job.batch_key().as_ref() == Some(key) {
                     let mut job = lane.remove(i).expect("index checked").job;
                     job.spans.mark_claimed();
+                    self.trace_evt(cluster as u32, EventKind::JobClaimed, job.id, 0);
                     out.push(job);
                     self.routed.fetch_sub(1, Ordering::Relaxed);
                 } else {

@@ -12,9 +12,10 @@
 //! drain-only (pops succeed until empty, pushes fail).
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use super::batcher::BatchKey;
+use super::trace::{EventKind, TraceRecorder, GLOBAL_TRACK};
 use super::Job;
 
 /// Why a push was refused.
@@ -53,6 +54,9 @@ pub struct WorkQueue {
     capacity: usize,
     inner: Mutex<Lanes>,
     ready: Condvar,
+    /// Flight recorder for enqueue events (global track — a queued job
+    /// has no cluster yet).  `None` in bare unit-test queues.
+    trace: Option<Arc<TraceRecorder>>,
 }
 
 impl WorkQueue {
@@ -62,7 +66,14 @@ impl WorkQueue {
             capacity,
             inner: Mutex::new(Lanes::default()),
             ready: Condvar::new(),
+            trace: None,
         }
+    }
+
+    /// Attach the pool's flight recorder (builder-style, at boot).
+    pub fn with_trace(mut self, trace: Arc<TraceRecorder>) -> WorkQueue {
+        self.trace = Some(trace);
+        self
     }
 
     pub fn capacity(&self) -> usize {
@@ -87,6 +98,7 @@ impl WorkQueue {
         job: Job,
         reserved: usize,
     ) -> Result<usize, PushError> {
+        let job_id = job.id;
         let mut inner = self.inner.lock().expect("queue lock");
         if inner.closed {
             return Err(PushError::Closed);
@@ -98,6 +110,9 @@ impl WorkQueue {
         inner.lanes[job.priority.lane()].push_back(job);
         let depth = inner.depth();
         drop(inner);
+        if let Some(t) = &self.trace {
+            t.instant(GLOBAL_TRACK, EventKind::JobEnqueued, job_id, depth as u64);
+        }
         self.ready.notify_one();
         Ok(depth)
     }

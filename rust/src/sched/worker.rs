@@ -79,6 +79,7 @@ use crate::cost::CostModel;
 use crate::error::Result;
 use crate::hero::offload::OffloadKind;
 use crate::metrics::{Metrics, SchedCounters};
+use crate::omp::opcache::CacheEvent;
 use crate::soc::clock::Cycles;
 use crate::soc::trace::RegionClass;
 use crate::util::rng::Rng;
@@ -89,6 +90,7 @@ use super::placement::{ClusterView, PlacementRouter};
 use super::pool::ClusterSpec;
 use super::queue::WorkQueue;
 use super::span::{BatchMarks, SpanBreakdown};
+use super::trace::{EventKind, TraceRecorder};
 use super::{
     ChainRequest, FaultKind, FaultPlan, GemmOutcome, GemmRequest,
     GemvRequest, Job, JobPayload, Level1Op, Level1Request, SpanStamps,
@@ -108,6 +110,7 @@ pub(crate) fn spawn(
     batcher: Batcher,
     cost: CostModel,
     fault: FaultPlan,
+    trace: Arc<TraceRecorder>,
     ready: mpsc::Sender<Result<()>>,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
@@ -115,7 +118,7 @@ pub(crate) fn spawn(
         .spawn(move || {
             run(
                 spec, artifacts, queue, router, counters, batcher, cost,
-                fault, ready,
+                fault, trace, ready,
             )
         })
         .expect("spawn scheduler worker")
@@ -244,6 +247,7 @@ fn run(
     batcher: Batcher,
     cost: CostModel,
     fault: FaultPlan,
+    trace: Arc<TraceRecorder>,
     ready: mpsc::Sender<Result<()>>,
 ) {
     let mut blas = match boot_session(&spec, &artifacts) {
@@ -256,6 +260,22 @@ fn run(
     // swap the session's private model for the pool-shared one: every
     // worker's Auto dispatch reads (and calibrates) the same estimator
     blas.policy.model = Some(cost);
+    // bridge the operand cache's transitions into the flight recorder —
+    // the hook carries its own recorder handle and cluster id, so the
+    // omp layer never learns about the scheduler
+    {
+        let t = Arc::clone(&trace);
+        let cl = spec.id;
+        blas.engine.opcache.set_event_hook(move |ev| match ev {
+            CacheEvent::Hit { bytes } => {
+                t.instant(cl, EventKind::CacheHit, bytes, 0)
+            }
+            CacheEvent::Miss => t.instant(cl, EventKind::CacheMiss, 0, 0),
+            CacheEvent::Evict { bytes } => {
+                t.instant(cl, EventKind::CacheEvict, bytes, 0)
+            }
+        });
+    }
     let _ = ready.send(Ok(()));
 
     let cid = spec.id as usize;
@@ -281,12 +301,12 @@ fn run(
         let Some(job) = next else {
             let infl = inflight.take().expect("try_next only used with inflight");
             finish_batch(
-                &mut blas, spec.id, &counters, &router, &fault, &queue, infl,
-                &mut metrics_prev,
+                &mut blas, spec.id, &counters, &router, &fault, &queue,
+                &trace, infl, &mut metrics_prev,
             );
             // pipeline drained, nothing staged: every operand-cache pin
             // must be back — a leak here strands unevictable DRAM
-            check_pins_drained(&blas, &counters);
+            check_pins_drained(&blas, &counters, spec.id);
             continue;
         };
 
@@ -312,7 +332,7 @@ fn run(
                 if let Some(infl) = inflight.take() {
                     finish_batch(
                         &mut blas, spec.id, &counters, &router, &fault,
-                        &queue, infl, &mut metrics_prev,
+                        &queue, &trace, infl, &mut metrics_prev,
                     );
                 }
                 // Park until the test/bench releases (or drops) the fence.
@@ -341,6 +361,7 @@ fn run(
                     &router,
                     &fault,
                     &queue,
+                    &trace,
                     &mut launch_seq,
                     batch,
                     req,
@@ -355,7 +376,7 @@ fn run(
                 if let Some(infl) = inflight.take() {
                     finish_batch(
                         &mut blas, spec.id, &counters, &router, &fault,
-                        &queue, infl, &mut metrics_prev,
+                        &queue, &trace, infl, &mut metrics_prev,
                     );
                 }
                 let mut batch = batcher.collect(&source, job, usize::MAX);
@@ -365,8 +386,8 @@ fn run(
                     continue;
                 }
                 serve_level1(
-                    &mut blas, spec.id, &counters, &router, batch, req,
-                    &mut metrics_prev,
+                    &mut blas, spec.id, &counters, &router, &trace, batch,
+                    req, &mut metrics_prev,
                 );
             }
             JobPayload::Chain(ref req) => {
@@ -378,6 +399,7 @@ fn run(
                     &router,
                     &fault,
                     &queue,
+                    &trace,
                     &mut launch_seq,
                     job,
                     req,
@@ -405,8 +427,10 @@ fn run(
                 // A successful prefetch makes the batch warm.
                 if target == ExecTarget::Device && !warm_b && blas.engine.cache_enabled() {
                     if let (Some(key), Some(bs)) = (b_key, req.b_seed) {
-                        warm_b =
-                            prefetch_b(&mut blas, &router, &counters, spec.id, req.n, bs, key);
+                        warm_b = prefetch_b(
+                            &mut blas, &router, &counters, &trace, spec.id,
+                            req.n, bs, key,
+                        );
                     }
                 }
                 let cap = (gemm_batch_cap(&blas, req.n) / depth).max(1);
@@ -430,6 +454,7 @@ fn run(
                     &router,
                     &fault,
                     &queue,
+                    &trace,
                     &mut launch_seq,
                     batch,
                     req,
@@ -446,11 +471,11 @@ fn run(
     // shutdown: drain whatever is still in flight before exiting
     if let Some(infl) = inflight.take() {
         finish_batch(
-            &mut blas, spec.id, &counters, &router, &fault, &queue, infl,
-            &mut metrics_prev,
+            &mut blas, spec.id, &counters, &router, &fault, &queue, &trace,
+            infl, &mut metrics_prev,
         );
     }
-    check_pins_drained(&blas, &counters);
+    check_pins_drained(&blas, &counters, spec.id);
 }
 
 /// Between batches — nothing staged, nothing in flight — every
@@ -461,10 +486,13 @@ fn run(
 /// (surfaced through serve `metrics`) instead of silently compiling the
 /// check out — a production leak shows up on the dashboard, not as an
 /// unexplainable capacity loss.
-fn check_pins_drained(blas: &HeroBlas, counters: &SchedCounters) {
+fn check_pins_drained(blas: &HeroBlas, counters: &SchedCounters, cluster: u32) {
     let pins = blas.engine.opcache.total_pins();
     if pins != 0 {
         counters.pin_leaks.fetch_add(1, Ordering::Relaxed);
+        if let Some(pc) = counters.cluster(cluster) {
+            pc.pin_leaks.fetch_add(1, Ordering::Relaxed);
+        }
         debug_assert_eq!(
             pins, 0,
             "operand-cache pins stranded after the pipeline drained"
@@ -633,10 +661,12 @@ fn completion_deadline(
 /// regions.  Best-effort: an OOM or staging error simply leaves the
 /// batch to pay its own miss.  Returns whether B is now resident (the
 /// batch will stage warm).
+#[allow(clippy::too_many_arguments)]
 fn prefetch_b(
     blas: &mut HeroBlas,
     router: &PlacementRouter,
     counters: &SchedCounters,
+    trace: &TraceRecorder,
     cluster: u32,
     n: usize,
     b_seed: u64,
@@ -650,6 +680,7 @@ fn prefetch_b(
         if let Some(pc) = counters.cluster(cluster) {
             pc.prefetched.fetch_add(1, Ordering::Relaxed);
         }
+        trace.instant(cluster, EventKind::Prefetch, key, (n * n) as u64);
         true
     } else {
         false
@@ -671,6 +702,7 @@ fn serve_gemm(
     router: &PlacementRouter,
     plan: &FaultPlan,
     queue: &WorkQueue,
+    trace: &TraceRecorder,
     launch_seq: &mut u64,
     batch: Vec<Job>,
     req: GemmRequest,
@@ -687,11 +719,13 @@ fn serve_gemm(
     if target == ExecTarget::Host {
         if let Some(infl) = inflight.take() {
             finish_batch(
-                blas, cluster, counters, router, plan, queue, infl,
+                blas, cluster, counters, router, plan, queue, trace, infl,
                 metrics_prev,
             );
         }
-        serve_gemm_host(blas, cluster, counters, batch, req, t0, metrics_prev);
+        serve_gemm_host(
+            blas, cluster, counters, trace, batch, req, t0, metrics_prev,
+        );
         return;
     }
     let zero_copy = target == ExecTarget::DeviceZeroCopy;
@@ -724,7 +758,8 @@ fn serve_gemm(
         // fitting: drain the pipeline and retry once serially
         let infl = inflight.take().expect("checked above");
         finish_batch(
-            blas, cluster, counters, router, plan, queue, infl, metrics_prev,
+            blas, cluster, counters, router, plan, queue, trace, infl,
+            metrics_prev,
         );
         before = snap(blas); // re-baseline: the failed attempt + drain
                              // must not bill this batch
@@ -752,7 +787,7 @@ fn serve_gemm(
         blas.gemm_batch_abandon(staged_run);
         sync_directory(blas, router, cluster);
         if inflight.is_none() {
-            check_pins_drained(blas, counters);
+            check_pins_drained(blas, counters, cluster);
         }
         return;
     }
@@ -766,15 +801,15 @@ fn serve_gemm(
         sync_directory(blas, router, cluster);
         if let Some(infl) = inflight.take() {
             finish_batch(
-                blas, cluster, counters, router, plan, queue, infl,
+                blas, cluster, counters, router, plan, queue, trace, infl,
                 metrics_prev,
             );
         }
         handle_fault(
-            blas, cluster, counters, router, plan, queue, batch,
+            blas, cluster, counters, router, plan, queue, trace, batch,
             FaultKind::StagingDma, metrics_prev,
         );
-        check_pins_drained(blas, counters);
+        check_pins_drained(blas, counters, cluster);
         return;
     }
 
@@ -797,7 +832,8 @@ fn serve_gemm(
         hidden = overlap_credit(blas, stage_acct.data_copy, infl.acct.compute);
         pipelined = true;
         finish_batch(
-            blas, cluster, counters, router, plan, queue, infl, metrics_prev,
+            blas, cluster, counters, router, plan, queue, trace, infl,
+            metrics_prev,
         );
         // the drained batch is fully accounted and this batch's stage
         // delta is already materialized: safe to bound trace growth now
@@ -850,7 +886,8 @@ fn serve_gemm(
         *inflight = Some(infl); // finished when the next job (or none) arrives
     } else {
         finish_batch(
-            blas, cluster, counters, router, plan, queue, infl, metrics_prev,
+            blas, cluster, counters, router, plan, queue, trace, infl,
+            metrics_prev,
         );
     }
 }
@@ -866,6 +903,7 @@ fn serve_gemv(
     router: &PlacementRouter,
     plan: &FaultPlan,
     queue: &WorkQueue,
+    trace: &TraceRecorder,
     launch_seq: &mut u64,
     batch: Vec<Job>,
     req: GemvRequest,
@@ -894,11 +932,13 @@ fn serve_gemv(
     if blas.policy.gemv(m, n) == ExecTarget::Host {
         if let Some(infl) = inflight.take() {
             finish_batch(
-                blas, cluster, counters, router, plan, queue, infl,
+                blas, cluster, counters, router, plan, queue, trace, infl,
                 metrics_prev,
             );
         }
-        serve_gemv_host(blas, cluster, counters, batch, req, data, t0, metrics_prev);
+        serve_gemv_host(
+            blas, cluster, counters, trace, batch, req, data, t0, metrics_prev,
+        );
         return;
     }
     let zero_copy = blas.policy.gemv(m, n) == ExecTarget::DeviceZeroCopy;
@@ -921,7 +961,8 @@ fn serve_gemv(
     if stage.is_err() && inflight.is_some() {
         let infl = inflight.take().expect("checked above");
         finish_batch(
-            blas, cluster, counters, router, plan, queue, infl, metrics_prev,
+            blas, cluster, counters, router, plan, queue, trace, infl,
+            metrics_prev,
         );
         before = snap(blas);
         stage = blas.gemv_batch_stage((m, n), 1.0, 0.0, &inputs, zero_copy);
@@ -945,7 +986,7 @@ fn serve_gemv(
         blas.gemv_batch_abandon(staged_run);
         sync_directory(blas, router, cluster);
         if inflight.is_none() {
-            check_pins_drained(blas, counters);
+            check_pins_drained(blas, counters, cluster);
         }
         return;
     }
@@ -957,15 +998,15 @@ fn serve_gemv(
         sync_directory(blas, router, cluster);
         if let Some(infl) = inflight.take() {
             finish_batch(
-                blas, cluster, counters, router, plan, queue, infl,
+                blas, cluster, counters, router, plan, queue, trace, infl,
                 metrics_prev,
             );
         }
         handle_fault(
-            blas, cluster, counters, router, plan, queue, batch,
+            blas, cluster, counters, router, plan, queue, trace, batch,
             FaultKind::StagingDma, metrics_prev,
         );
-        check_pins_drained(blas, counters);
+        check_pins_drained(blas, counters, cluster);
         return;
     }
 
@@ -976,7 +1017,8 @@ fn serve_gemv(
         hidden = overlap_credit(blas, stage_acct.data_copy, infl.acct.compute);
         pipelined = true;
         finish_batch(
-            blas, cluster, counters, router, plan, queue, infl, metrics_prev,
+            blas, cluster, counters, router, plan, queue, trace, infl,
+            metrics_prev,
         );
         blas.reset_run();
     }
@@ -1023,7 +1065,8 @@ fn serve_gemv(
         *inflight = Some(infl);
     } else {
         finish_batch(
-            blas, cluster, counters, router, plan, queue, infl, metrics_prev,
+            blas, cluster, counters, router, plan, queue, trace, infl,
+            metrics_prev,
         );
     }
 }
@@ -1042,6 +1085,7 @@ fn serve_chain(
     router: &PlacementRouter,
     plan: &FaultPlan,
     queue: &WorkQueue,
+    trace: &TraceRecorder,
     launch_seq: &mut u64,
     job: Job,
     req: ChainRequest,
@@ -1079,13 +1123,13 @@ fn serve_chain(
     if !req.chained || target == ExecTarget::Host {
         if let Some(infl) = inflight.take() {
             finish_batch(
-                blas, cluster, counters, router, plan, queue, infl,
+                blas, cluster, counters, router, plan, queue, trace, infl,
                 metrics_prev,
             );
         }
         serve_chain_unchained(
-            blas, cluster, counters, router, batch, &req, x, &weights, t0,
-            metrics_prev,
+            blas, cluster, counters, router, trace, batch, &req, x, &weights,
+            t0, metrics_prev,
         );
         return;
     }
@@ -1114,7 +1158,8 @@ fn serve_chain(
         // from fitting: drain the pipeline and retry once serially
         let infl = inflight.take().expect("checked above");
         finish_batch(
-            blas, cluster, counters, router, plan, queue, infl, metrics_prev,
+            blas, cluster, counters, router, plan, queue, trace, infl,
+            metrics_prev,
         );
         before = snap(blas);
         stage = blas.chain_stage(m, &x, &specs);
@@ -1138,7 +1183,7 @@ fn serve_chain(
         inflight_sub(counters, cluster, 1);
         sync_directory(blas, router, cluster);
         if inflight.is_none() {
-            check_pins_drained(blas, counters);
+            check_pins_drained(blas, counters, cluster);
         }
         return;
     }
@@ -1150,15 +1195,15 @@ fn serve_chain(
         sync_directory(blas, router, cluster);
         if let Some(infl) = inflight.take() {
             finish_batch(
-                blas, cluster, counters, router, plan, queue, infl,
+                blas, cluster, counters, router, plan, queue, trace, infl,
                 metrics_prev,
             );
         }
         handle_fault(
-            blas, cluster, counters, router, plan, queue, batch,
+            blas, cluster, counters, router, plan, queue, trace, batch,
             FaultKind::StagingDma, metrics_prev,
         );
-        check_pins_drained(blas, counters);
+        check_pins_drained(blas, counters, cluster);
         return;
     }
 
@@ -1180,7 +1225,8 @@ fn serve_chain(
         hidden = overlap_credit(blas, stage_acct.data_copy, infl.acct.compute);
         pipelined = true;
         finish_batch(
-            blas, cluster, counters, router, plan, queue, infl, metrics_prev,
+            blas, cluster, counters, router, plan, queue, trace, infl,
+            metrics_prev,
         );
         blas.reset_run();
     }
@@ -1196,6 +1242,11 @@ fn serve_chain(
             return;
         }
     };
+    // one link-boundary marker per dependent gemm in the fused launch
+    // (a = link index, b = the link's output width)
+    for (i, w) in dims.windows(2).enumerate() {
+        trace.instant(cluster, EventKind::ChainLink, i as u64, w[1] as u64);
+    }
     if pipelined {
         counters.pipelined_batches.fetch_add(1, Ordering::Relaxed);
         counters
@@ -1227,7 +1278,8 @@ fn serve_chain(
         *inflight = Some(infl);
     } else {
         finish_batch(
-            blas, cluster, counters, router, plan, queue, infl, metrics_prev,
+            blas, cluster, counters, router, plan, queue, trace, infl,
+            metrics_prev,
         );
     }
 }
@@ -1243,6 +1295,7 @@ fn serve_chain_unchained(
     cluster: u32,
     counters: &SchedCounters,
     router: &PlacementRouter,
+    trace: &TraceRecorder,
     batch: Vec<Job>,
     req: &ChainRequest,
     x: Vec<f64>,
@@ -1256,7 +1309,7 @@ fn serve_chain_unchained(
     let before = snap(blas);
     let exec_at = Instant::now();
     let mut h = x;
-    for (w, b) in req.dims.windows(2).zip(weights) {
+    for (i, (w, b)) in req.dims.windows(2).zip(weights).enumerate() {
         let (k, n) = (w[0], w[1]);
         let mut c = vec![0.0; m * n];
         let r = blas.gemm(
@@ -1272,7 +1325,10 @@ fn serve_chain_unchained(
             (m, n),
         );
         match r {
-            Ok(()) => h = c,
+            Ok(()) => {
+                trace.instant(cluster, EventKind::ChainLink, i as u64, n as u64);
+                h = c
+            }
             Err(e) => {
                 sync_directory(blas, router, cluster);
                 reply_error(counters, cluster, &batch, &e.to_string());
@@ -1288,6 +1344,7 @@ fn serve_chain_unchained(
         blas,
         cluster,
         counters,
+        trace,
         &batch,
         "chain",
         (m, *req.dims.last().expect("non-empty dims")),
@@ -1317,10 +1374,12 @@ fn reply_error(counters: &SchedCounters, cluster: u32, batch: &[Job], msg: &str)
 }
 
 /// Host-path gemm batch: one host kernel per member, no offload.
+#[allow(clippy::too_many_arguments)]
 fn serve_gemm_host(
     blas: &mut HeroBlas,
     cluster: u32,
     counters: &SchedCounters,
+    trace: &TraceRecorder,
     batch: Vec<Job>,
     req: GemmRequest,
     t0: Instant,
@@ -1360,8 +1419,8 @@ fn serve_gemm_host(
     let done_at = Instant::now();
     let acct = delta(before, snap(blas));
     send_outcomes(
-        blas, cluster, counters, &batch, "gemm", (n, n), req.mode, &checksums,
-        acct, &queue_ms, t0.elapsed().as_micros() as u64,
+        blas, cluster, counters, trace, &batch, "gemm", (n, n), req.mode,
+        &checksums, acct, &queue_ms, t0.elapsed().as_micros() as u64,
         BatchMarks { collected_at: t0, exec_at, done_at }, None, metrics_prev,
     );
 }
@@ -1372,6 +1431,7 @@ fn serve_gemv_host(
     blas: &mut HeroBlas,
     cluster: u32,
     counters: &SchedCounters,
+    trace: &TraceRecorder,
     batch: Vec<Job>,
     req: GemvRequest,
     data: Vec<(Vec<f64>, Vec<f64>)>,
@@ -1400,8 +1460,8 @@ fn serve_gemv_host(
     let done_at = Instant::now();
     let acct = delta(before, snap(blas));
     send_outcomes(
-        blas, cluster, counters, &batch, "gemv", (m, n), req.mode, &checksums,
-        acct, &queue_ms, t0.elapsed().as_micros() as u64,
+        blas, cluster, counters, trace, &batch, "gemv", (m, n), req.mode,
+        &checksums, acct, &queue_ms, t0.elapsed().as_micros() as u64,
         BatchMarks { collected_at: t0, exec_at, done_at }, None, metrics_prev,
     );
 }
@@ -1410,11 +1470,13 @@ fn serve_gemv_host(
 /// member's vectors from its seed, dispatch through the policy (host
 /// loop or ONE fork-join device launch for the whole batch), reply with
 /// per-member checksums (axpy: sum of the updated y; dot: the scalar).
+#[allow(clippy::too_many_arguments)]
 fn serve_level1(
     blas: &mut HeroBlas,
     cluster: u32,
     counters: &SchedCounters,
     router: &PlacementRouter,
+    trace: &TraceRecorder,
     batch: Vec<Job>,
     req: Level1Request,
     metrics_prev: &mut Metrics,
@@ -1462,8 +1524,9 @@ fn serve_level1(
         Ok(()) => {
             let checksums: Vec<f64> = outs.iter().map(|o| o.iter().sum()).collect();
             send_outcomes(
-                blas, cluster, counters, &batch, req.op.name(), (1, n), req.mode,
-                &checksums, acct, &queue_ms, t0.elapsed().as_micros() as u64,
+                blas, cluster, counters, trace, &batch, req.op.name(), (1, n),
+                req.mode, &checksums, acct, &queue_ms,
+                t0.elapsed().as_micros() as u64,
                 BatchMarks { collected_at: t0, exec_at, done_at }, None,
                 metrics_prev,
             );
@@ -1494,6 +1557,7 @@ fn finish_batch(
     router: &PlacementRouter,
     plan: &FaultPlan,
     queue: &WorkQueue,
+    trace: &TraceRecorder,
     infl: Inflight,
     metrics_prev: &mut Metrics,
 ) {
@@ -1570,7 +1634,7 @@ fn finish_batch(
     if let Some(kind) = fault {
         let _ = (finish, checksums, op, dims, mode, chain_dims);
         handle_fault(
-            blas, cluster, counters, router, plan, queue, jobs, kind,
+            blas, cluster, counters, router, plan, queue, trace, jobs, kind,
             metrics_prev,
         );
         return;
@@ -1585,6 +1649,7 @@ fn finish_batch(
                 blas,
                 cluster,
                 counters,
+                trace,
                 &jobs,
                 op,
                 dims,
@@ -1619,10 +1684,18 @@ fn handle_fault(
     router: &PlacementRouter,
     plan: &FaultPlan,
     queue: &WorkQueue,
+    trace: &TraceRecorder,
     jobs: Vec<Job>,
     kind: FaultKind,
     metrics_prev: &mut Metrics,
 ) {
+    // one fault event per faulted batch, whatever the seam or detector
+    trace.instant(
+        cluster,
+        EventKind::FaultInjected,
+        jobs.len() as u64,
+        kind.trace_code(),
+    );
     // the failed cluster's cached operands are suspect: drop every
     // unpinned entry, reclaim the DRAM, and clear the directory's view
     // so no later request steers at stale residency
@@ -1630,6 +1703,7 @@ fn handle_fault(
     counters
         .cache_invalidated_bytes
         .fetch_add(bytes, Ordering::Relaxed);
+    trace.instant(cluster, EventKind::CacheInvalidate, bytes, 0);
     sync_directory(blas, router, cluster);
     router.invalidate_cluster(cluster);
     if router.note_fault(cluster) {
@@ -1654,7 +1728,10 @@ fn handle_fault(
             && router.retry_targets_exist(job.fault.excluded)
             && !queue.is_closed();
         if !retry {
-            host_fallback(blas, cluster, counters, router, kind, job, metrics_prev);
+            host_fallback(
+                blas, cluster, counters, router, trace, kind, job,
+                metrics_prev,
+            );
             continue;
         }
         if !backed_off {
@@ -1671,9 +1748,11 @@ fn handle_fault(
         // `job.fault.retry_us`
         job.spans = SpanStamps::default();
         job.enqueued_at = Instant::now();
+        let (jid, attempts) = (job.id, job.fault.attempts as u64);
         match queue.push(job) {
             Ok(_) => {
                 counters.retries.fetch_add(1, Ordering::Relaxed);
+                trace.instant(cluster, EventKind::FaultRetry, jid, attempts);
                 router.kick();
             }
             Err(_) => {
@@ -1697,11 +1776,13 @@ type HostRun = std::result::Result<
 /// with `degraded: true` plus the faulted attempt count.  The dispatch
 /// mode is forced to HostOnly for the duration so the fallback itself
 /// can never launch on (and fault with) the device.
+#[allow(clippy::too_many_arguments)]
 fn host_fallback(
     blas: &mut HeroBlas,
     cluster: u32,
     counters: &SchedCounters,
     router: &PlacementRouter,
+    trace: &TraceRecorder,
     kind: FaultKind,
     job: Job,
     metrics_prev: &mut Metrics,
@@ -1782,6 +1863,8 @@ fn host_fallback(
     let mut spans =
         SpanBreakdown::compute(job.enqueued_at, job.spans, marks, done_at);
     spans.retry_us = job.fault.retry_us;
+    trace.instant(cluster, EventKind::HostFallback, job.id, kind.trace_code());
+    record_job_spans(trace, cluster, &job, &spans, marks);
     counters.note_latency_us(op, cluster, spans.total_us);
     counters.note_span_us(
         spans.queue_us,
@@ -1853,6 +1936,37 @@ fn host_chain(blas: &mut HeroBlas, req: &ChainRequest) -> HostRun {
     Ok(("chain", (m, n_last), req.mode, h.iter().sum::<f64>()))
 }
 
+/// Wall microseconds between two span-clock stamps (0 when reversed).
+fn dur_us(from: Instant, to: Instant) -> u64 {
+    to.saturating_duration_since(from).as_micros() as u64
+}
+
+/// Retrospective flight-recorder spans for one completed job: the five
+/// telescoping `SpanBreakdown` stages, stored from the SAME instants
+/// and durations the breakdown reports, so a `trace_dump` reconciles
+/// exactly with the reply's `spans` object.
+fn record_job_spans(
+    trace: &TraceRecorder,
+    cluster: u32,
+    job: &Job,
+    spans: &SpanBreakdown,
+    marks: BatchMarks,
+) {
+    let routed_at = job.spans.routed_at.unwrap_or(job.enqueued_at);
+    let claimed_at = job.spans.claimed_at.unwrap_or(routed_at);
+    trace.span(
+        cluster, EventKind::SpanQueue, job.enqueued_at, spans.queue_us, job.id,
+    );
+    trace.span(cluster, EventKind::SpanRoute, routed_at, spans.route_us, job.id);
+    trace.span(cluster, EventKind::SpanStage, claimed_at, spans.stage_us, job.id);
+    trace.span(
+        cluster, EventKind::SpanExecute, marks.exec_at, spans.execute_us, job.id,
+    );
+    trace.span(
+        cluster, EventKind::SpanFinish, marks.done_at, spans.finish_us, job.id,
+    );
+}
+
 /// Counters + per-member outcome replies for one completed batch.
 /// Uniform shapes => each member gets an even share of the batch's
 /// virtual time; fork/join (and any pipelining credit) was accounted
@@ -1862,6 +1976,7 @@ fn send_outcomes(
     blas: &mut HeroBlas,
     cluster: u32,
     counters: &SchedCounters,
+    trace: &TraceRecorder,
     batch: &[Job],
     op: &'static str,
     (m, n): (usize, usize),
@@ -1937,12 +2052,40 @@ fn send_outcomes(
 
     inflight_sub(counters, cluster, b as u64);
     let end = Instant::now();
+    // batch-phase windows for the flight recorder: collected instant,
+    // then the staged (collect -> exec) and executed (exec -> done)
+    // duration events, then the finished marker
+    trace.span(
+        cluster, EventKind::BatchCollected, marks.collected_at, 0, b as u64,
+    );
+    trace.span(
+        cluster,
+        EventKind::BatchStaged,
+        marks.collected_at,
+        dur_us(marks.collected_at, marks.exec_at),
+        b as u64,
+    );
+    trace.span(
+        cluster,
+        EventKind::BatchExecuted,
+        marks.exec_at,
+        dur_us(marks.exec_at, marks.done_at),
+        b as u64,
+    );
+    trace.span(
+        cluster,
+        EventKind::BatchFinished,
+        marks.done_at,
+        dur_us(marks.done_at, end),
+        b as u64,
+    );
     for ((job, checksum), wait) in batch.iter().zip(checksums).zip(queue_ms) {
         let mut spans =
             SpanBreakdown::compute(job.enqueued_at, job.spans, marks, end);
         // wall time lost to faulted attempts rides alongside the
         // telescoping stages, like the linger sub-span
         spans.retry_us = job.fault.retry_us;
+        record_job_spans(trace, cluster, job, &spans, marks);
         counters.note_latency_us(op, cluster, spans.total_us);
         counters.note_span_us(
             spans.queue_us,

@@ -50,7 +50,14 @@
 //! percentiles, an aggregate serving-path `spans` breakdown, and a
 //! `clusters` array with each cluster's run-queue depth, cache hits and
 //! stolen / affinity-routed job counts; `{"op": "top"}` emits a compact
-//! live view (per-cluster depth / hits / steals / inflight);
+//! live view (per-cluster depth / hits / steals / inflight / pin leaks);
+//! `{"op": "trace_dump"}` exports the flight recorder's ring buffers as
+//! Chrome trace-event JSON (open the reply in Perfetto); `{"op":
+//! "metrics_prom"}` renders every counter and latency histogram in the
+//! Prometheus text exposition format (as an escaped `body` string);
+//! `{"op": "watch"}` turns the connection into a stream of `top` frames
+//! every `[sched.trace] watch_interval_ms` (or the request's own
+//! `interval_ms`) until the client disconnects;
 //! `{"op": "shutdown"}` stops the server (used by tests).
 //!
 //! Two cross-cutting request fields: `"req_id"` (string or number) is
@@ -462,34 +469,45 @@ fn dispatch_op(
             ]);
             (compact(&mut j), false)
         }
-        "top" => {
-            // compact live view: what each cluster is doing right now
-            let m = sched.metrics();
-            let clusters: Vec<Json> = m
-                .clusters
-                .iter()
-                .map(|c| {
-                    obj(vec![
-                        ("cluster", Json::Num(c.cluster as f64)),
-                        ("queue_depth", Json::Num(c.queue_depth as f64)),
-                        ("inflight", Json::Num(c.inflight as f64)),
-                        ("completed", Json::Num(c.completed as f64)),
-                        ("cache_hits", Json::Num(c.cache_hits as f64)),
-                        ("stolen", Json::Num(c.stolen as f64)),
-                        ("p99_us", Json::Num(c.p99_us as f64)),
-                        ("quarantined", Json::Bool(sched.is_quarantined(c.cluster))),
-                    ])
-                })
-                .collect();
+        "top" => (top_line(sched), false),
+        "trace_dump" => {
+            // the flight recorder's Chrome trace-event export; the whole
+            // reply IS the trace file (plus ok/enabled/req_id), so a
+            // client can pipe it straight into Perfetto
+            match Json::parse(&sched.trace().chrome_json()) {
+                Ok(Json::Obj(mut map)) => {
+                    map.insert("ok".into(), Json::Bool(true));
+                    map.insert(
+                        "enabled".into(),
+                        Json::Bool(sched.trace().enabled()),
+                    );
+                    map.insert(
+                        "recorded".into(),
+                        Json::Num(sched.trace().recorded() as f64),
+                    );
+                    (compact(&mut Json::Obj(map)), false)
+                }
+                _ => (err_line("trace export failed"), false),
+            }
+        }
+        "metrics_prom" => {
+            // Prometheus text exposition, shipped as an escaped string
+            // body so the reply stays one JSON line (and carries req_id
+            // like every other frame); clients unescape and scrape
             let mut j = obj(vec![
                 ("ok", Json::Bool(true)),
-                ("op", Json::Str("top".into())),
-                ("queue_depth", Json::Num(sched.queue_depth() as f64)),
-                ("completed", Json::Num(m.completed as f64)),
-                ("clusters", Json::Arr(clusters)),
+                ("op", Json::Str("metrics_prom".into())),
+                (
+                    "content_type",
+                    Json::Str("text/plain; version=0.0.4".into()),
+                ),
+                ("body", Json::Str(sched.prometheus_text())),
             ]);
             (compact(&mut j), false)
         }
+        // `watch` never reaches here: serve_conn intercepts it before
+        // dispatch because streaming needs the connection's writer
+        "watch" => (err_line("watch requires a streaming connection"), false),
         "gemm" => {
             let (gemm, priority) = match parse_gemm(req) {
                 Ok(p) => p,
@@ -526,6 +544,91 @@ fn dispatch_op(
             submit_and_wait(sched, priority, JobPayload::Level1(l1), trace, reply_timeout)
         }
         other => (err_line(&format!("unknown op '{other}'")), false),
+    }
+}
+
+/// The `top` frame: a compact live view of what each cluster is doing
+/// right now.  Shared by the one-shot `top` op and the `watch` stream.
+fn top_line(sched: &Scheduler) -> String {
+    let m = sched.metrics();
+    let clusters: Vec<Json> = m
+        .clusters
+        .iter()
+        .map(|c| {
+            obj(vec![
+                ("cluster", Json::Num(c.cluster as f64)),
+                ("queue_depth", Json::Num(c.queue_depth as f64)),
+                ("inflight", Json::Num(c.inflight as f64)),
+                ("completed", Json::Num(c.completed as f64)),
+                ("cache_hits", Json::Num(c.cache_hits as f64)),
+                ("stolen", Json::Num(c.stolen as f64)),
+                ("pin_leaks", Json::Num(c.pin_leaks as f64)),
+                ("p99_us", Json::Num(c.p99_us as f64)),
+                ("quarantined", Json::Bool(sched.is_quarantined(c.cluster))),
+            ])
+        })
+        .collect();
+    let mut j = obj(vec![
+        ("ok", Json::Bool(true)),
+        ("op", Json::Str("top".into())),
+        ("queue_depth", Json::Num(sched.queue_depth() as f64)),
+        ("completed", Json::Num(m.completed as f64)),
+        ("pin_leaks", Json::Num(m.pin_leaks as f64)),
+        ("clusters", Json::Arr(clusters)),
+    ]);
+    compact(&mut j)
+}
+
+/// Recognize a `watch` request line: returns its correlation token and
+/// frame interval (the request's `interval_ms` clamped to 1..=60000, or
+/// the configured default) when `op` is `"watch"`.
+fn watch_request(line: &str, default_interval: Duration) -> Option<(Json, Duration)> {
+    let req = Json::parse(line).ok()?;
+    if req.get("op").and_then(|o| o.as_str()) != Some("watch") {
+        return None;
+    }
+    let rid = match req.get("req_id") {
+        Some(v) if matches!(v, Json::Str(_) | Json::Num(_)) => v.clone(),
+        _ => srv_rid(),
+    };
+    let interval = req
+        .get("interval_ms")
+        .and_then(|v| v.as_u64())
+        .map(|ms| Duration::from_millis(ms.clamp(1, 60_000)))
+        .unwrap_or(default_interval);
+    Some((rid, interval))
+}
+
+/// Stream the `top` view as newline-delimited JSON frames until the
+/// client disconnects (write failure) or the server shuts down.  Every
+/// frame echoes the watch request's `req_id` so a client multiplexing a
+/// watch with other traffic on separate connections can correlate them.
+fn run_watch(
+    sched: &Scheduler,
+    writer: &mut TcpStream,
+    rid: &Json,
+    interval: Duration,
+    shutdown: &AtomicBool,
+) {
+    loop {
+        if shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        let frame = with_req_id(top_line(sched), rid);
+        if !write_line(writer, &frame) {
+            return; // peer gone
+        }
+        // sleep in READ_POLL steps so shutdown is noticed promptly even
+        // under a long frame interval
+        let mut slept = Duration::ZERO;
+        while slept < interval {
+            if shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            let step = READ_POLL.min(interval - slept);
+            std::thread::sleep(step);
+            slept += step;
+        }
     }
 }
 
@@ -585,6 +688,7 @@ fn serve_conn(
     shutdown: &AtomicBool,
     port: u16,
     reply_timeout: Duration,
+    watch_interval: Duration,
 ) {
     let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
     let _ = stream.set_read_timeout(Some(READ_POLL));
@@ -647,6 +751,13 @@ fn serve_conn(
                         let trimmed = line.trim();
                         if trimmed.is_empty() {
                             None
+                        } else if let Some((rid, interval)) =
+                            watch_request(trimmed, watch_interval)
+                        {
+                            // streaming op: takes over this connection's
+                            // writer until disconnect or shutdown
+                            run_watch(sched, &mut writer, &rid, interval, shutdown);
+                            return;
                         } else {
                             Some(handle_line(sched, trimmed, reply_timeout))
                         }
@@ -689,6 +800,8 @@ pub fn serve(
     let sched = Arc::new(Scheduler::new(&cfg, artifacts)?);
     // floor of 1ms: a zero would turn every reply into an instant cancel
     let reply_timeout = Duration::from_millis(cfg.serve.reply_timeout_ms.max(1));
+    let watch_interval =
+        Duration::from_millis(cfg.sched.trace.watch_interval_ms.max(1));
 
     let listener = TcpListener::bind(("127.0.0.1", port))
         .map_err(|e| Error::Runtime(format!("bind 127.0.0.1:{port}: {e}")))?;
@@ -736,6 +849,13 @@ pub fn serve(
             f.quarantine_threshold,
         );
     }
+    if cfg.sched.trace.enabled {
+        eprintln!(
+            "hero-blas serve: flight recorder ON — {} events/cluster ring, \
+             watch frames every {} ms (trace_dump / metrics_prom / watch)",
+            cfg.sched.trace.ring_capacity, cfg.sched.trace.watch_interval_ms,
+        );
+    }
     if let Some(tx) = ready {
         let _ = tx.send(bound);
     }
@@ -754,7 +874,12 @@ pub fn serve(
                 // drops this one connection; the server keeps serving
                 match std::thread::Builder::new()
                     .name("serve-conn".into())
-                    .spawn(move || serve_conn(&sched, s, &shutdown, bound, reply_timeout))
+                    .spawn(move || {
+                        serve_conn(
+                            &sched, s, &shutdown, bound, reply_timeout,
+                            watch_interval,
+                        )
+                    })
                 {
                     Ok(h) => conns.push(h),
                     Err(e) => eprintln!("serve: spawn connection handler: {e}"),
@@ -1050,6 +1175,53 @@ mod tests {
             .map(|k| spans.get(k).and_then(|v| v.as_u64()).unwrap())
             .sum();
         assert_eq!(sum, j.get("latency_us").and_then(|v| v.as_u64()).unwrap());
+    }
+
+    #[test]
+    fn watch_request_parses_token_and_interval() {
+        let dflt = Duration::from_millis(500);
+        // not a watch: other ops and garbage pass through to dispatch
+        assert!(watch_request(r#"{"op": "top"}"#, dflt).is_none());
+        assert!(watch_request("not json", dflt).is_none());
+
+        // bare watch: server-assigned token, configured interval
+        let (rid, iv) = watch_request(r#"{"op": "watch"}"#, dflt).unwrap();
+        assert!(matches!(rid, Json::Str(s) if s.starts_with("srv-")));
+        assert_eq!(iv, dflt);
+
+        // client token + interval override, clamped to 1..=60000 ms
+        let (rid, iv) = watch_request(
+            r#"{"op": "watch", "req_id": "w1", "interval_ms": 25}"#,
+            dflt,
+        )
+        .unwrap();
+        assert_eq!(rid, Json::Str("w1".into()));
+        assert_eq!(iv, Duration::from_millis(25));
+        let (_, iv) = watch_request(
+            r#"{"op": "watch", "interval_ms": 9999999}"#,
+            dflt,
+        )
+        .unwrap();
+        assert_eq!(iv, Duration::from_millis(60_000));
+        let (_, iv) =
+            watch_request(r#"{"op": "watch", "interval_ms": 0}"#, dflt).unwrap();
+        assert_eq!(iv, Duration::from_millis(1));
+    }
+
+    #[test]
+    fn prom_body_survives_json_line_roundtrip() {
+        // the metrics_prom reply ships multi-line Prometheus text as an
+        // escaped JSON string: it must stay one line on the wire and
+        // round-trip exactly
+        let body = "# HELP x y\n# TYPE x counter\nx 1\n";
+        let mut j = obj(vec![
+            ("ok", Json::Bool(true)),
+            ("body", Json::Str(body.into())),
+        ]);
+        let line = compact(&mut j);
+        assert!(!line.contains('\n'));
+        let back = Json::parse(&line).unwrap();
+        assert_eq!(back.get("body").and_then(|v| v.as_str()), Some(body));
     }
 
     #[test]

@@ -233,6 +233,53 @@ fn quarantined_cluster_stops_receiving_routes() {
     sched.shutdown();
 }
 
+/// A retried-then-degraded request still carries a coherent span
+/// record: the five telescoping stages sum exactly to the reported
+/// total latency, the wall time burnt by the failed device attempts
+/// rides alongside as `retry_us` (outside the telescoping sum), and
+/// once every reply is out the inflight gauges are drained.
+#[test]
+fn fault_path_spans_reconcile_and_inflight_drains() {
+    let mut cfg = base_cfg();
+    cfg.sched.pool_clusters = 1;
+    cfg.sched.fault = FaultConfig {
+        enabled: true,
+        seed: 13,
+        staging_rate: 1.0,
+        mailbox_rate: 0.0,
+        poison_rate: 0.0,
+        target_cluster: -1,
+        deadline_factor: 4.0,
+        max_attempts: 2, // at least one failed attempt, then host fallback
+        backoff_base_ms: 1,
+        quarantine_threshold: 100,
+        probe_interval: 16,
+    };
+    let sched = Scheduler::new(&cfg, &artifacts_dir()).unwrap();
+    let outcomes = run_workload(&sched, workload());
+    for o in &outcomes {
+        assert!(o.degraded, "every device attempt faulted: must degrade");
+        assert!(o.attempts >= 1);
+        assert!(
+            o.spans.retry_us > 0,
+            "failed device attempts must surface as retry_us"
+        );
+        let stage_sum: u64 = o.spans.stages().iter().map(|(_, us)| *us).sum();
+        assert_eq!(
+            stage_sum, o.spans.total_us,
+            "the five stages must telescope to the total on the fault path"
+        );
+    }
+    let m = sched.metrics();
+    assert_eq!(m.host_fallbacks, outcomes.len() as u64);
+    assert!(m.retries >= outcomes.len() as u64);
+    for c in &m.clusters {
+        assert_eq!(c.inflight, 0, "inflight gauge must drain after fallback");
+    }
+    assert_eq!(m.pin_leaks, 0);
+    sched.shutdown();
+}
+
 /// Recovery invalidates the failed cluster's resident operand-cache
 /// entries: a warm B staged before the fault is evicted, and the counter
 /// reports the released bytes.

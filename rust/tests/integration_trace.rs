@@ -1,0 +1,245 @@
+//! The flight recorder end-to-end: drive a live server, then check that
+//! `trace_dump` events reconcile exactly with the traced request's
+//! `SpanBreakdown`, that `metrics_prom` renders a scrapeable exposition,
+//! and that `watch` streams `top` frames until the client disconnects.
+//!
+//! Pins the ISSUE-8 acceptance criterion: every stage boundary of a
+//! traced request appears as an event pair in the dump, and the
+//! durations agree with the reply's `spans` object within clock
+//! precision (the offsets are floor-rounded independently, so adjacent
+//! boundaries may disagree by a microsecond or two — never more).
+
+mod common;
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use common::artifacts_dir;
+use hero_blas::config::PlatformConfig;
+use hero_blas::util::json_lite::Json;
+
+/// The five telescoping stages, in serving-path order, by the bare
+/// names `EventKind::label` renders (the reply suffixes `_us`).
+const STAGES: [&str; 5] = ["queue", "route", "stage", "execute", "finish"];
+
+/// Boundary tolerance in microseconds: each event offset and duration
+/// is floor-rounded from the same `Instant` pair independently, so two
+/// adjacent stage boundaries can disagree by at most 2 us.
+const CLOCK_SLOP_US: u64 = 2;
+
+fn request(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str) -> Json {
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    stream.flush().unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    Json::parse(resp.trim()).unwrap_or_else(|e| panic!("bad response '{resp}': {e}"))
+}
+
+/// One decoded `ph: "X"` span event from the dump.
+#[derive(Debug, Clone)]
+struct SpanEvt {
+    name: String,
+    ts: u64,
+    dur: u64,
+}
+
+#[test]
+fn trace_dump_reconciles_with_span_breakdown() {
+    let dir = artifacts_dir();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        hero_blas::serve::serve(PlatformConfig::default(), &dir, 0, Some(tx))
+    });
+    let port = rx.recv_timeout(std::time::Duration::from_secs(300)).unwrap();
+
+    let mut stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    // one traced device-path gemm: the reply carries the SpanBreakdown
+    // the dump must reconcile with
+    let r = request(
+        &mut stream,
+        &mut reader,
+        r#"{"op": "gemm", "n": 96, "mode": "device_only", "trace": true, "req_id": "tr-1"}"#,
+    );
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r:?}");
+    let cluster = r.get("cluster").and_then(|v| v.as_u64()).unwrap();
+    let spans = r.get("spans").expect("trace: true adds spans");
+    let want: Vec<u64> = STAGES
+        .iter()
+        .map(|s| {
+            spans
+                .get(&format!("{s}_us"))
+                .and_then(|v| v.as_u64())
+                .unwrap_or_else(|| panic!("missing {s}_us in {spans:?}"))
+        })
+        .collect();
+    let latency = r.get("latency_us").and_then(|v| v.as_u64()).unwrap();
+    assert_eq!(want.iter().sum::<u64>(), latency, "stages telescope to latency");
+
+    // the dump: Chrome trace JSON with ok / enabled / recorded and the
+    // request's correlation id merged in
+    let dump = request(
+        &mut stream,
+        &mut reader,
+        r#"{"op": "trace_dump", "req_id": "td-1"}"#,
+    );
+    assert_eq!(dump.get("ok"), Some(&Json::Bool(true)), "{dump:?}");
+    assert_eq!(dump.get("req_id").and_then(|v| v.as_str()), Some("td-1"));
+    assert_eq!(dump.get("enabled"), Some(&Json::Bool(true)));
+    assert!(dump.get("recorded").and_then(|v| v.as_u64()).unwrap() >= 5);
+    assert_eq!(dump.get("displayTimeUnit").and_then(|v| v.as_str()), Some("ms"));
+    let events = dump
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .expect("traceEvents array");
+    assert!(!events.is_empty());
+
+    // group the stage-named duration events on the serving cluster's
+    // track by job id (args.a); exactly one group must carry this
+    // request's five stage durations verbatim
+    let tid = cluster + 1;
+    let mut by_job: HashMap<u64, Vec<SpanEvt>> = HashMap::new();
+    for e in events {
+        let name = e.get("name").and_then(|v| v.as_str()).unwrap().to_string();
+        if e.get("ph").and_then(|v| v.as_str()) != Some("X")
+            || e.get("tid").and_then(|v| v.as_u64()) != Some(tid)
+            || !STAGES.contains(&name.as_str())
+        {
+            continue;
+        }
+        by_job
+            .entry(e.get("args").and_then(|a| a.get("a")).and_then(|v| v.as_u64()).unwrap())
+            .or_default()
+            .push(SpanEvt {
+                name,
+                ts: e.get("ts").and_then(|v| v.as_u64()).unwrap(),
+                dur: e.get("dur").and_then(|v| v.as_u64()).unwrap(),
+            });
+    }
+    let matches: Vec<(&u64, &Vec<SpanEvt>)> = by_job
+        .iter()
+        .filter(|(_, evts)| {
+            STAGES.iter().zip(&want).all(|(s, w)| {
+                evts.iter().any(|e| e.name == *s && e.dur == *w)
+            })
+        })
+        .collect();
+    assert_eq!(
+        matches.len(),
+        1,
+        "exactly one dumped job must carry the reply's stage durations \
+         {want:?}; groups: {by_job:?}"
+    );
+    let (&job_id, evts) = matches[0];
+
+    // every stage boundary appears as an event pair: stage k's end
+    // (ts + dur) is stage k+1's start, within clock precision
+    let ordered: Vec<&SpanEvt> = STAGES
+        .iter()
+        .map(|s| evts.iter().find(|e| e.name == *s).unwrap())
+        .collect();
+    for w in ordered.windows(2) {
+        let end = w[0].ts + w[0].dur;
+        let start = w[1].ts;
+        assert!(
+            end.abs_diff(start) <= CLOCK_SLOP_US,
+            "{} ends at {end} but {} starts at {start}",
+            w[0].name,
+            w[1].name
+        );
+    }
+
+    // the same job's life-cycle instants are on the record too: ingress
+    // on the global track (tid 0), with instants typed ph "i"
+    let enqueued = events.iter().any(|e| {
+        e.get("name").and_then(|v| v.as_str()) == Some("job-enqueued")
+            && e.get("ph").and_then(|v| v.as_str()) == Some("i")
+            && e.get("tid").and_then(|v| v.as_u64()) == Some(0)
+            && e.get("args").and_then(|a| a.get("a")).and_then(|v| v.as_u64())
+                == Some(job_id)
+    });
+    assert!(enqueued, "job {job_id} has no job-enqueued ingress instant");
+
+    // prometheus exposition over the wire: correlation id, content
+    // type, and the counter + histogram families with sane values
+    let prom = request(
+        &mut stream,
+        &mut reader,
+        r#"{"op": "metrics_prom", "req_id": "mp-1"}"#,
+    );
+    assert_eq!(prom.get("ok"), Some(&Json::Bool(true)), "{prom:?}");
+    assert_eq!(prom.get("req_id").and_then(|v| v.as_str()), Some("mp-1"));
+    assert_eq!(
+        prom.get("content_type").and_then(|v| v.as_str()),
+        Some("text/plain; version=0.0.4")
+    );
+    let body = prom.get("body").and_then(|v| v.as_str()).unwrap();
+    for needle in [
+        "# TYPE hero_jobs_submitted_total counter",
+        "# TYPE hero_request_latency_us histogram",
+        "hero_request_latency_us_bucket{op=\"gemm\",le=\"+Inf\"} ",
+        "hero_request_latency_us_count{op=\"gemm\"} ",
+        "hero_cluster_latency_us_count{cluster=\"0\"} ",
+        "hero_span_us_total{stage=\"execute\"} ",
+        "hero_pin_leaks_total 0",
+    ] {
+        assert!(body.contains(needle), "missing '{needle}' in exposition");
+    }
+    // exposition hygiene: every line is a comment or `name value`
+    for line in body.lines() {
+        assert!(
+            line.starts_with('#') || line.split(' ').count() == 2,
+            "malformed exposition line: '{line}'"
+        );
+    }
+
+    // the top rows now surface pin_leaks alongside quarantined
+    let t = request(&mut stream, &mut reader, r#"{"op": "top"}"#);
+    assert_eq!(t.get("ok"), Some(&Json::Bool(true)), "{t:?}");
+    assert_eq!(t.get("pin_leaks").and_then(|v| v.as_u64()), Some(0));
+    let clusters = t.get("clusters").and_then(|v| v.as_arr()).unwrap();
+    for c in clusters {
+        assert_eq!(c.get("pin_leaks").and_then(|v| v.as_u64()), Some(0));
+        assert_eq!(c.get("quarantined"), Some(&Json::Bool(false)));
+    }
+
+    // watch: a second connection streams top frames every interval
+    // until the client hangs up — the server must survive the hangup
+    let mut wstream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    let mut wreader = BufReader::new(wstream.try_clone().unwrap());
+    wstream
+        .write_all(b"{\"op\": \"watch\", \"req_id\": \"w-1\", \"interval_ms\": 10}\n")
+        .unwrap();
+    wstream.flush().unwrap();
+    for _ in 0..3 {
+        let mut frame = String::new();
+        wreader.read_line(&mut frame).unwrap();
+        let f = Json::parse(frame.trim())
+            .unwrap_or_else(|e| panic!("bad watch frame '{frame}': {e}"));
+        assert_eq!(f.get("ok"), Some(&Json::Bool(true)), "{f:?}");
+        assert_eq!(f.get("req_id").and_then(|v| v.as_str()), Some("w-1"));
+        let rows = f.get("clusters").and_then(|v| v.as_arr()).unwrap();
+        assert!(!rows.is_empty());
+        for row in rows {
+            for key in ["cluster", "queue_depth", "inflight", "pin_leaks"] {
+                assert!(row.get(key).and_then(|v| v.as_u64()).is_some(), "missing {key}");
+            }
+            assert!(
+                matches!(row.get("quarantined"), Some(Json::Bool(_))),
+                "missing quarantined"
+            );
+        }
+    }
+    drop(wreader);
+    drop(wstream);
+
+    // the original connection still serves after the watcher hung up
+    let pong = request(&mut stream, &mut reader, r#"{"op": "ping"}"#);
+    assert_eq!(pong.get("ok"), Some(&Json::Bool(true)));
+
+    let _ = request(&mut stream, &mut reader, r#"{"op": "shutdown"}"#);
+    handle.join().unwrap().unwrap();
+}

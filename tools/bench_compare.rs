@@ -1,7 +1,7 @@
 //! Perf-trajectory gate: diff two `serve_throughput` snapshots.
 //!
 //! ```sh
-//! cargo run --release --bin bench_compare -- BENCH_6.json bench_new.json
+//! cargo run --release --bin bench_compare -- BENCH_8.json bench_new.json
 //! ```
 //!
 //! Both inputs are JSONL snapshots as written by the bench's `--out FILE`
@@ -38,7 +38,7 @@ struct PointRec {
 }
 
 /// The knobs that identify a sweep point across snapshots.
-const SIG_KEYS: [&str; 9] = [
+const SIG_KEYS: [&str; 10] = [
     "pool",
     "batching",
     "cache",
@@ -47,6 +47,7 @@ const SIG_KEYS: [&str; 9] = [
     "placement",
     "auto_mixed",
     "calibrate",
+    "tracing",
     "clients",
 ];
 
@@ -230,8 +231,8 @@ mod tests {
 
     const BASE: &str = r#"
 == serve throughput: prose header, ignored ==
-{"bench": "serve_throughput", "n": 64, "pool": 1, "batching": false, "cache": false, "pipeline": false, "shared_b": false, "placement": false, "auto_mixed": false, "calibrate": false, "clients": 1, "requests": 12, "wall_ms": 30.0, "rps": 400.0, "p50_us": 512, "p99_us": 2048, "p999_us": 4096, "speedup_vs_serial": 1.00}
-{"bench": "serve_throughput", "n": 64, "pool": 4, "batching": true, "cache": false, "pipeline": false, "shared_b": false, "placement": false, "auto_mixed": false, "calibrate": false, "clients": 4, "requests": 24, "wall_ms": 20.0, "rps": 1200.0, "p50_us": 256, "p99_us": 1024, "p999_us": 2048, "speedup_vs_serial": 3.00}
+{"bench": "serve_throughput", "n": 64, "pool": 1, "batching": false, "cache": false, "pipeline": false, "shared_b": false, "placement": false, "auto_mixed": false, "calibrate": false, "tracing": true, "clients": 1, "requests": 12, "wall_ms": 30.0, "rps": 400.0, "p50_us": 512, "p99_us": 2048, "p999_us": 4096, "speedup_vs_serial": 1.00}
+{"bench": "serve_throughput", "n": 64, "pool": 4, "batching": true, "cache": false, "pipeline": false, "shared_b": false, "placement": false, "auto_mixed": false, "calibrate": false, "tracing": true, "clients": 4, "requests": 24, "wall_ms": 20.0, "rps": 1200.0, "p50_us": 256, "p99_us": 1024, "p999_us": 2048, "speedup_vs_serial": 3.00}
 {"bench": "serve_throughput", "summary": "copy_bytes_cut", "value": 3.10}
 {"bench": "serve_throughput", "workload": "chain_mlp", "chained": true, "requests": 24, "wall_ms": 12.0, "bytes_to_device": 100, "chain_bytes_elided": 50, "chains": 24}
 "#;

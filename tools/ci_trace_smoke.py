@@ -1,0 +1,69 @@
+#!/usr/bin/env python3
+"""CI smoke client for the flight recorder's serve ops.
+
+Connects to a running hero-blas server, drives a few GEMM requests, then
+validates that:
+
+* ``trace_dump`` returns well-formed Chrome trace JSON with at least one
+  duration (``ph: "X"``) event;
+* ``metrics_prom`` returns a Prometheus text-exposition body with the
+  pool counters and latency histogram series;
+* both replies echo the request's ``req_id``.
+
+The captured trace is written to ``trace_dump.json`` (the workflow
+re-validates it with ``python3 -m json.tool``) and the server is shut
+down on the way out.
+"""
+
+import json
+import socket
+import sys
+import time
+
+
+def main() -> int:
+    port = int(sys.argv[1]) if len(sys.argv) > 1 else 7899
+    sock = None
+    for _ in range(240):
+        try:
+            sock = socket.create_connection(("127.0.0.1", port), timeout=5)
+            break
+        except OSError:
+            time.sleep(0.5)
+    if sock is None:
+        print("serve never came up", file=sys.stderr)
+        return 1
+    f = sock.makefile("rw", encoding="utf-8", newline="\n")
+
+    def rpc(req):
+        f.write(json.dumps(req) + "\n")
+        f.flush()
+        return json.loads(f.readline())
+
+    for seed in range(4):
+        r = rpc({"op": "gemm", "n": 64, "mode": "device_only", "seed": seed})
+        assert r.get("ok") is True, r
+
+    dump = rpc({"op": "trace_dump", "req_id": "ci-trace"})
+    assert dump.get("ok") is True, dump
+    assert dump.get("req_id") == "ci-trace", dump
+    events = dump.get("traceEvents")
+    assert isinstance(events, list) and events, "flight recorder captured no events"
+    phases = {e.get("ph") for e in events}
+    assert "X" in phases, f"no duration events in {sorted(phases)}"
+    with open("trace_dump.json", "w", encoding="utf-8") as out:
+        json.dump(dump, out)
+
+    prom = rpc({"op": "metrics_prom", "req_id": "ci-prom"})
+    assert prom.get("ok") is True and prom.get("req_id") == "ci-prom", prom
+    body = prom.get("body", "")
+    assert "hero_jobs_submitted_total" in body, body[:200]
+    assert "hero_request_latency_us_bucket" in body, body[:200]
+
+    rpc({"op": "shutdown"})
+    print(f"trace smoke ok: {len(events)} events, prom body {len(body)} bytes")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
