@@ -55,6 +55,10 @@ struct Knobs {
     /// Flight-recorder rings (`[sched.trace] enabled`) on/off — the
     /// tracing-overhead sweep toggles this to price the recorder.
     tracing: bool,
+    /// Shape-specialized kernel registry (`[kernel] enabled`) on/off —
+    /// the kernel-specialization sweep toggles this to compare the
+    /// generic interpreted walk against promoted fast-path plans.
+    kernel: bool,
 }
 
 /// Scheduler counters scraped over the wire before shutdown.
@@ -82,6 +86,13 @@ struct Counters {
     span_stage_us: u64,
     span_execute_us: u64,
     span_finish_us: u64,
+    /// Kernel-registry counters: plans compiled, fast-path walks, and
+    /// generic-walk fallbacks taken while the registry was enabled.
+    kernel_specialized: u64,
+    kernel_hits: u64,
+    kernel_fallbacks: u64,
+    /// Specialized-walk gemm crossover estimate (dual line to gemm_n).
+    crossover_gemm_spec_n: u64,
 }
 
 struct Point {
@@ -105,14 +116,16 @@ impl Point {
             "{{\"bench\": \"serve_throughput\", \"n\": {N}, \"pool\": {}, \
              \"batching\": {}, \"cache\": {}, \"pipeline\": {}, \
              \"shared_b\": {}, \"placement\": {}, \"auto_mixed\": {}, \
-             \"calibrate\": {}, \"tracing\": {}, \"clients\": {}, \
-             \"requests\": {}, \
+             \"calibrate\": {}, \"tracing\": {}, \"kernel\": {}, \
+             \"clients\": {}, \"requests\": {}, \
              \"wall_ms\": {:.1}, \"rps\": {:.1}, \"retries\": {}, \
              \"bytes_to_device\": {}, \"bytes_copy_elided\": {}, \
              \"cache_hits\": {}, \"pipelined_batches\": {}, \
              \"overlap_hidden_us\": {}, \"stolen\": {}, \
-             \"affine_routed\": {}, \
-             \"crossover_estimate\": {{\"gemm_n\": {}, \"gemm_warm_n\": {}}}, \
+             \"affine_routed\": {}, \"kernel_specialized\": {}, \
+             \"kernel_hits\": {}, \"kernel_fallbacks\": {}, \
+             \"crossover_estimate\": {{\"gemm_n\": {}, \"gemm_warm_n\": {}, \
+             \"gemm_spec_n\": {}}}, \
              \"p50_us\": {}, \"p99_us\": {}, \"p999_us\": {}, \
              \"spans\": {{\"queue_us\": {}, \"route_us\": {}, \
              \"linger_us\": {}, \"stage_us\": {}, \"execute_us\": {}, \
@@ -127,6 +140,7 @@ impl Point {
             k.auto_mixed,
             k.calibrate,
             k.tracing,
+            k.kernel,
             self.clients,
             self.clients * self.per_client,
             self.wall.as_secs_f64() * 1e3,
@@ -139,8 +153,12 @@ impl Point {
             c.overlap_hidden_us,
             c.stolen,
             c.affine_routed,
+            c.kernel_specialized,
+            c.kernel_hits,
+            c.kernel_fallbacks,
             c.crossover_gemm_n,
             c.crossover_gemm_warm_n,
+            c.crossover_gemm_spec_n,
             c.p50_us,
             c.p99_us,
             c.p999_us,
@@ -195,6 +213,10 @@ fn run_point(knobs: Knobs, clients: usize, per_client: usize) -> Point {
     cfg.sched.placement.steal = knobs.placement;
     cfg.cost.calibrate = knobs.calibrate;
     cfg.sched.trace.enabled = knobs.tracing;
+    cfg.kernel.enabled = knobs.kernel;
+    // low enough that the bench's per-shape launch counts cross it and
+    // promotion fires mid-run (the default is sized for long services)
+    cfg.kernel.promote_after = 4;
 
     let dir = hero_blas::find_artifacts_dir().expect("run `make artifacts` first");
     let (tx, rx) = mpsc::channel();
@@ -274,6 +296,10 @@ fn run_point(knobs: Knobs, clients: usize, per_client: usize) -> Point {
         span_stage_us: sget("stage_us"),
         span_execute_us: sget("execute_us"),
         span_finish_us: sget("finish_us"),
+        kernel_specialized: get("kernel_specialized"),
+        kernel_hits: get("kernel_hits"),
+        kernel_fallbacks: get("kernel_fallbacks"),
+        crossover_gemm_spec_n: xget("gemm_spec_n"),
     };
     stream.write_all(b"{\"op\": \"shutdown\"}\n").unwrap();
     stream.flush().unwrap();
@@ -525,6 +551,7 @@ fn main() {
         auto_mixed: false,
         calibrate: false,
         tracing: true, // the recorder's default-ON posture
+        kernel: true,  // the registry's default-ON posture
     };
     let serial = run_point(base_knobs, 1, serial_reqs);
     let base = serial.rps();
@@ -706,7 +733,64 @@ fn main() {
         }
     }
 
-    // sweep 7: the fault matrix — cluster 0 failing half its launches.
+    // sweep 7: kernel specialization — the same fixed-shape device_only
+    // workload with the shape-specialized registry OFF vs ON.  With the
+    // registry on, the hot (gemm, f64, 64-pad) key crosses promote_after
+    // early and the rest of the run takes the compiled fast-path walk
+    // (bit-identical numerics, leaner virtual-time charge schedule) —
+    // the ON point must show kernel_specialized > 0 and kernel_hits > 0
+    // and must not lose throughput to the registry's bookkeeping.
+    println!();
+    let mut rps_generic = 0.0;
+    for kernel in [false, true] {
+        let p = run_point(
+            Knobs { pool: 2, batching: true, kernel, ..base_knobs },
+            clients,
+            per_client,
+        );
+        snap.emit(p.json(p.rps() / base));
+        if !kernel {
+            rps_generic = p.rps();
+            assert_eq!(
+                p.counters.kernel_hits, 0,
+                "registry OFF must record no fast-path hits"
+            );
+        } else {
+            snap.emit(format!(
+                "{{\"bench\": \"serve_throughput\", \"summary\": \
+                 \"kernel_specialization\", \"rps_generic\": {rps_generic:.1}, \
+                 \"rps_specialized\": {:.1}, \"kernel_specialized\": {}, \
+                 \"kernel_hits\": {}, \"kernel_fallbacks\": {}, \
+                 \"gemm_spec_n\": {}}}",
+                p.rps(),
+                p.counters.kernel_specialized,
+                p.counters.kernel_hits,
+                p.counters.kernel_fallbacks,
+                p.counters.crossover_gemm_spec_n,
+            ));
+            assert!(
+                p.counters.kernel_specialized > 0,
+                "registry ON promoted no kernels (promote_after 4)"
+            );
+            assert!(
+                p.counters.kernel_hits > 0,
+                "registry ON served no fast-path walks"
+            );
+            // the walks are bit-identical and the registry adds one
+            // bounded map lookup per stage, so throughput must hold;
+            // quick mode's request counts are too small for a stable
+            // wall-clock ratio, so only the full run gates on it
+            if !quick {
+                assert!(
+                    p.rps() >= rps_generic * 0.9,
+                    "specialized rps {:.1} fell >10% below generic {rps_generic:.1}",
+                    p.rps(),
+                );
+            }
+        }
+    }
+
+    // sweep 8: the fault matrix — cluster 0 failing half its launches.
     // Every request must still complete; the summary line carries the
     // recovery counters (and, being a summary, is NOT gated by
     // bench_compare: fault-injected wall time is not a perf trajectory).
@@ -737,7 +821,9 @@ fn main() {
          copy_bytes_cut >= 2.0 vs the cache-off point; placement=true must\n\
          show affine_routed > 0; the chain_mlp chained=true point must cut\n\
          bytes_to_device vs chained=false with chain_bytes_elided > 0 and\n\
-         bit-identical checksums; the fault_matrix point must complete\n\
+         bit-identical checksums; the kernel=true point must show\n\
+         kernel_specialized > 0 and kernel_hits > 0 without losing rps to\n\
+         the registry's bookkeeping; the fault_matrix point must complete\n\
          every request (retry or host fallback) with faults_injected > 0\n\
          and failed = 0."
     );

@@ -2,6 +2,7 @@
 
 import json
 import os
+import re
 import subprocess
 import sys
 
@@ -59,6 +60,25 @@ def test_tile_accum_artifact_numerics():
     b = jnp.full((TILE_K, TILE_N), 2.0, jnp.float64)
     (out,) = jax.jit(fn)(c, a, b)
     np.testing.assert_allclose(out, 1.0 + TILE_K * 1.0, rtol=1e-12)
+
+
+def _rust_const_sizes(source: str, name: str) -> tuple:
+    """Parse `pub const NAME: [usize; N] = [a, b, ...];` out of Rust source."""
+    m = re.search(
+        rf"pub const {name}: \[usize; \d+\] = \[([0-9, ]+)\];", source)
+    assert m, f"{name} not found in kernel/mod.rs"
+    return tuple(int(s) for s in m.group(1).split(","))
+
+
+def test_prewarm_tables_match_rust_constants():
+    """The kernel registry prewarms exactly the AOT size tables: the Rust
+    PREWARM_* constants must stay in lockstep with the catalog defaults,
+    or `[kernel] prewarm` would specialize shapes no artifact serves."""
+    repo = os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))
+    src = open(os.path.join(repo, "rust", "src", "kernel", "mod.rs")).read()
+    assert _rust_const_sizes(src, "PREWARM_GEMM_SIZES") == aot.DEFAULT_GEMM_SIZES
+    assert _rust_const_sizes(src, "PREWARM_GEMV_SIZES") == aot.DEFAULT_GEMV_SIZES
 
 
 @pytest.mark.slow

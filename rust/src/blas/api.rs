@@ -233,7 +233,8 @@ impl HeroBlas {
         zero_copy: bool,
     ) -> Result<GemmBatchRun<T>> {
         device::gemm_batch_launch(
-            &mut self.engine, &mut self.registry, dims, alpha, beta, inputs, zero_copy,
+            &mut self.engine, &mut self.registry, dims, alpha, beta, inputs,
+            zero_copy, self.policy.kernel.as_deref(),
         )
         .map(|state| GemmBatchRun { state, _elem: std::marker::PhantomData })
     }
@@ -278,7 +279,7 @@ impl HeroBlas {
     ) -> Result<GemmBatchRun<T>> {
         device::gemm_batch_execute(
             &mut self.engine, &mut self.registry, staged.state, staged.alpha,
-            staged.beta,
+            staged.beta, self.policy.kernel.as_deref(),
         )
         .map(|state| GemmBatchRun { state, _elem: std::marker::PhantomData })
     }
@@ -338,8 +339,11 @@ impl HeroBlas {
         &mut self,
         staged: ChainStagedRun<T>,
     ) -> Result<ChainRun<T>> {
-        device::gemm_chain_execute(&mut self.engine, &mut self.registry, staged.state)
-            .map(|state| ChainRun { state, _elem: std::marker::PhantomData })
+        device::gemm_chain_execute(
+            &mut self.engine, &mut self.registry, staged.state,
+            self.policy.kernel.as_deref(),
+        )
+        .map(|state| ChainRun { state, _elem: std::marker::PhantomData })
     }
 
     /// Join an executed chain: copy ONLY the final output back into
@@ -470,7 +474,7 @@ impl HeroBlas {
     ) -> Result<GemvBatchRun<T>> {
         device::gemv_batch_execute(
             &mut self.engine, &mut self.registry, staged.state, staged.alpha,
-            staged.beta,
+            staged.beta, self.policy.kernel.as_deref(),
         )
         .map(|state| GemvBatchRun { state, _elem: std::marker::PhantomData })
     }
@@ -562,6 +566,7 @@ impl HeroBlas {
                 inputs,
                 target == ExecTarget::DeviceZeroCopy,
                 outs,
+                self.policy.kernel.as_deref(),
             ),
         }
     }
@@ -582,7 +587,7 @@ impl HeroBlas {
     ) -> Result<()> {
         device::gemv_batch(
             &mut self.engine, &mut self.registry, dims, alpha, beta, inputs,
-            zero_copy, outs,
+            zero_copy, outs, self.policy.kernel.as_deref(),
         )
     }
 
@@ -701,11 +706,11 @@ impl HeroBlas {
             }
             ExecTarget::Device => device::gemm(
                 &mut self.engine, &mut self.registry, m, n, k, alpha, &a_op,
-                &b_op, beta, c, false,
+                &b_op, beta, c, false, self.policy.kernel.as_deref(),
             ),
             ExecTarget::DeviceZeroCopy => device::gemm(
                 &mut self.engine, &mut self.registry, m, n, k, alpha, &a_op,
-                &b_op, beta, c, true,
+                &b_op, beta, c, true, self.policy.kernel.as_deref(),
             ),
         }
     }
@@ -832,11 +837,11 @@ impl HeroBlas {
             }
             ExecTarget::Device => device::gemv(
                 &mut self.engine, &mut self.registry, m, n, alpha, &a_op, x,
-                beta, y, false,
+                beta, y, false, self.policy.kernel.as_deref(),
             ),
             ExecTarget::DeviceZeroCopy => device::gemv(
                 &mut self.engine, &mut self.registry, m, n, alpha, &a_op, x,
-                beta, y, true,
+                beta, y, true, self.policy.kernel.as_deref(),
             ),
         }
     }
@@ -879,12 +884,14 @@ impl HeroBlas {
                 self.engine.charge_host_compute(cyc, "host_axpy");
                 Ok(())
             }
-            ExecTarget::Device => {
-                device::axpy_f64(&mut self.engine, &mut self.registry, alpha, x, y, false)
-            }
-            ExecTarget::DeviceZeroCopy => {
-                device::axpy_f64(&mut self.engine, &mut self.registry, alpha, x, y, true)
-            }
+            ExecTarget::Device => device::axpy_f64(
+                &mut self.engine, &mut self.registry, alpha, x, y, false,
+                self.policy.kernel.as_deref(),
+            ),
+            ExecTarget::DeviceZeroCopy => device::axpy_f64(
+                &mut self.engine, &mut self.registry, alpha, x, y, true,
+                self.policy.kernel.as_deref(),
+            ),
         }
     }
 
@@ -900,12 +907,14 @@ impl HeroBlas {
                 self.engine.charge_host_compute(cyc, "host_dot");
                 Ok(r)
             }
-            ExecTarget::Device => {
-                device::dot_f64(&mut self.engine, &mut self.registry, x, y, false)
-            }
-            ExecTarget::DeviceZeroCopy => {
-                device::dot_f64(&mut self.engine, &mut self.registry, x, y, true)
-            }
+            ExecTarget::Device => device::dot_f64(
+                &mut self.engine, &mut self.registry, x, y, false,
+                self.policy.kernel.as_deref(),
+            ),
+            ExecTarget::DeviceZeroCopy => device::dot_f64(
+                &mut self.engine, &mut self.registry, x, y, true,
+                self.policy.kernel.as_deref(),
+            ),
         }
     }
 

@@ -35,9 +35,13 @@ use crate::cost::tile::{
 pub use crate::cost::tile::{gemm_staged_bytes_tiled, gemv_staged_bytes_tiled};
 use crate::error::{Error, Result};
 use crate::hero::offload::{OffloadArg, OffloadDescriptor, OffloadKind};
+use crate::kernel::{kernel_key, Epilogue, KernelOp, KernelPlan, KernelRegistry};
 use crate::omp::engine::{MappedBuf, OffloadEngine};
 use crate::runtime::literal::{lit_1d, lit_2d};
 use crate::runtime::ArtifactRegistry;
+use crate::soc::clock::Cycles;
+
+use std::sync::Arc;
 
 use super::elem::Elem;
 
@@ -213,10 +217,58 @@ impl GemmGeom {
     }
 }
 
+/// Stage-time kernel-registry consultation for one walk: if the key's
+/// launch count crossed `[kernel] promote_after`, compile its plan from
+/// the very same SoC models and resolved geometry the generic walk
+/// reads, insert it, then try to acquire the fast path (pinning the
+/// entry for the duration of the walk — pair with `release`).  `None`
+/// means the generic interpreted walk runs: always correct, and counted
+/// as a fallback so the serve counters show both paths.
+fn acquire_plan(
+    engine: &OffloadEngine,
+    kreg: Option<&KernelRegistry>,
+    op: KernelOp,
+    dtype: &str,
+    tile: (usize, usize, usize),
+    padded: (usize, usize, usize),
+    epi: Epilogue,
+) -> Option<Arc<KernelPlan>> {
+    let reg = kreg?;
+    if !reg.enabled() {
+        return None;
+    }
+    let key = kernel_key(op, dtype, tile, padded, epi);
+    if reg.wants_specialize(key) {
+        let plan = KernelPlan::specialize(
+            &engine.platform.dma,
+            &engine.platform.cluster,
+            op,
+            dtype,
+            tile,
+            padded,
+            epi,
+        );
+        reg.insert(plan);
+    }
+    let plan = reg.acquire(key);
+    if plan.is_none() {
+        reg.note_fallback();
+    }
+    plan
+}
+
 /// Compute phase of one GEMM offload: the DMA-scheduled tile walk (or the
 /// one-shot catalog path) over already-staged buffers, with every burst
 /// charged to the Compute region.  Shared by [`gemm`] and the batched
 /// launch — the batch pays this once per member but forks/joins once.
+///
+/// When the kernel registry holds a specialized plan for this walk's
+/// key, the *charge schedule* comes from the plan (leaner FPU bursts,
+/// epilogue fused into the C pass) while the kernel executions stay
+/// byte-for-byte those of the generic walk — bit-identical numerics by
+/// construction.  Returns whether the specialized schedule ran (the
+/// chain path uses this to skip its separately-charged epilogue pass).
+#[allow(clippy::too_many_arguments)]
 fn gemm_compute<T: Elem>(
     engine: &mut OffloadEngine,
     registry: &mut ArtifactRegistry,
@@ -225,13 +277,10 @@ fn gemm_compute<T: Elem>(
     g: GemmGeom,
     alpha: T,
     beta: T,
-) -> Result<()> {
-    let artifact = format!("gemm_tile_accum_{}", T::DTYPE);
-    let GemmGeom { m, n, k, mp, np, kp, tm, tn, tk } = g;
-    let f32_path = T::F32_PATH;
-    let gm = mp / tm;
-    let gn = np / tn;
-    let gk = kp / tk;
+    kreg: Option<&KernelRegistry>,
+    epi: Epilogue,
+) -> Result<bool> {
+    let GemmGeom { mp, np, kp, tm, tn, tk, .. } = g;
 
     // per-tile costs from the shared kernel (one refill, one burst, one
     // C transfer, one epilogue) — the same function the CostModel sums
@@ -240,9 +289,64 @@ fn gemm_compute<T: Elem>(
         &engine.platform.cluster,
         (tm, tn, tk),
         T::SIZE,
-        f32_path,
+        T::F32_PATH,
     );
     let (dma_ab, fpu, dma_c, epilogue) = (tc.dma_ab, tc.fpu, tc.dma_c, tc.epilogue);
+
+    // Specialized fast path: same executions, leaner charge schedule.
+    let plan = acquire_plan(
+        engine,
+        kreg,
+        KernelOp::Gemm,
+        T::DTYPE,
+        (tm, tn, tk),
+        (mp, np, kp),
+        epi,
+    );
+    let (first_charge, steady_charge, c_in_charge, c_out_charge) = match &plan {
+        Some(p) => (p.first_step, p.steady_step, p.c_in, p.c_pass),
+        None => (dma_ab + fpu, dma_ab.max(fpu), dma_c, epilogue + dma_c),
+    };
+
+    let r = gemm_walk::<T>(
+        engine,
+        registry,
+        staged,
+        (ai, bi, ci),
+        g,
+        alpha,
+        beta,
+        (first_charge, steady_charge, c_in_charge, c_out_charge),
+    );
+    // the pin lasts exactly as long as the in-flight walk, error or not
+    if let (Some(reg), Some(p)) = (kreg, &plan) {
+        reg.release(p.key);
+    }
+    r?;
+    Ok(plan.is_some())
+}
+
+/// The tile walk of [`gemm_compute`]: identical kernel executions under
+/// either charge schedule — the `charges` tuple (first k-step, steady
+/// k-step, C map-in, C write-back pass) is the only thing a specialized
+/// plan changes.
+#[allow(clippy::too_many_arguments)]
+fn gemm_walk<T: Elem>(
+    engine: &mut OffloadEngine,
+    registry: &mut ArtifactRegistry,
+    staged: &mut Staged,
+    (ai, bi, ci): (usize, usize, usize),
+    g: GemmGeom,
+    alpha: T,
+    beta: T,
+    charges: (Cycles, Cycles, Cycles, Cycles),
+) -> Result<()> {
+    let artifact = format!("gemm_tile_accum_{}", T::DTYPE);
+    let GemmGeom { m, n, k, np, kp, tm, tn, tk, .. } = g;
+    let gm = g.mp / tm;
+    let gn = np / tn;
+    let gk = kp / tk;
+    let (first_charge, steady_charge, c_in_charge, c_out_charge) = charges;
 
     let beta_zero = beta == T::zero();
     // Output tiles are distributed round-robin across the PMCA's
@@ -293,13 +397,13 @@ fn gemm_compute<T: Elem>(
                 if charge_this_tile {
                     for kk in 0..gk {
                         let charge =
-                            if kk == 0 { dma_ab + fpu } else { dma_ab.max(fpu) };
+                            if kk == 0 { first_charge } else { steady_charge };
                         engine.charge_compute(charge, &format!("tile({i},{j},{kk})"));
                     }
                     if !beta_zero {
-                        engine.charge_compute(dma_c, "c_in");
+                        engine.charge_compute(c_in_charge, "c_in");
                     }
-                    engine.charge_compute(epilogue + dma_c, "c_out");
+                    engine.charge_compute(c_out_charge, "c_out");
                 }
                 continue;
             }
@@ -324,7 +428,7 @@ fn gemm_compute<T: Elem>(
 
                 // timing: first refill is exposed, steady state overlaps
                 if charge_this_tile {
-                    let charge = if kk == 0 { dma_ab + fpu } else { dma_ab.max(fpu) };
+                    let charge = if kk == 0 { first_charge } else { steady_charge };
                     engine.charge_compute(charge, &format!("tile({i},{j},{kk})"));
                 }
             }
@@ -333,7 +437,7 @@ fn gemm_compute<T: Elem>(
                 vec![T::zero(); tm * tn]
             } else {
                 if charge_this_tile {
-                    engine.charge_compute(dma_c, "c_in");
+                    engine.charge_compute(c_in_charge, "c_in");
                 }
                 read_tile(engine, staged.get(ci), i * tm, j * tn, tm, tn, np)?
             };
@@ -343,7 +447,7 @@ fn gemm_compute<T: Elem>(
             }
             write_tile(engine, staged.get_mut(ci), &out_tile, i * tm, j * tn, tm, tn, np)?;
             if charge_this_tile {
-                engine.charge_compute(epilogue + dma_c, "c_out");
+                engine.charge_compute(c_out_charge, "c_out");
             }
         }
     }
@@ -395,6 +499,7 @@ pub fn gemm<T: Elem>(
     beta: T,
     c: &mut [T],
     zero_copy: bool,
+    kreg: Option<&KernelRegistry>,
 ) -> Result<()> {
     let g = GemmGeom::resolve::<T>(engine, registry, m, n, k)?;
     let a_pad = pad2(a, m, k, g.mp, g.kp);
@@ -438,7 +543,10 @@ pub fn gemm<T: Elem>(
         engine.launch(&desc)?;
 
         // ---- compute ----
-        gemm_compute(engine, registry, staged, (ai, bi, ci), g, alpha, beta)?;
+        gemm_compute(
+            engine, registry, staged, (ai, bi, ci), g, alpha, beta, kreg,
+            Epilogue::None,
+        )?;
 
         // ---- join + copy back ----
         engine.join()?;
@@ -636,6 +744,7 @@ pub fn gemm_batch_execute<T: Elem>(
     mut batch: GemmStagedBatch,
     alpha: T,
     beta: T,
+    kreg: Option<&KernelRegistry>,
 ) -> Result<GemmBatchState> {
     let g = batch.geom;
     let r = (|| -> Result<()> {
@@ -666,6 +775,8 @@ pub fn gemm_batch_execute<T: Elem>(
                 g,
                 alpha,
                 beta,
+                kreg,
+                Epilogue::None,
             )?;
         }
 
@@ -705,11 +816,12 @@ pub fn gemm_batch_launch<T: Elem>(
     beta: T,
     inputs: &[(&[T], &[T], &[T])],
     zero_copy: bool,
+    kreg: Option<&KernelRegistry>,
 ) -> Result<GemmBatchState> {
     let staged = gemm_batch_stage::<T>(
         engine, registry, dims, beta == T::zero(), inputs, zero_copy,
     )?;
-    gemm_batch_execute(engine, registry, staged, alpha, beta)
+    gemm_batch_execute(engine, registry, staged, alpha, beta, kreg)
 }
 
 /// Join a coalesced launch: drain the completion word, copy every
@@ -1045,6 +1157,10 @@ pub fn gemm_chain_stage<T: Elem>(
 /// zero padding — which the next link reads as A padding — stays zero.
 /// Charged like a level-1 chunk pass (stream in, FPU, stream out);
 /// numerics are exact f64/f32 ops, identical to the host path's epilogue.
+///
+/// `charged = false` is the specialized-walk case: the link's plan fused
+/// this pass into its C write-back charge, so the numerics still run
+/// here but the separate stream pass is not charged again.
 fn chain_epilogue<T: Elem>(
     engine: &mut OffloadEngine,
     staged: &mut Staged,
@@ -1052,6 +1168,7 @@ fn chain_epilogue<T: Elem>(
     g: GemmGeom,
     bias: Option<&[T]>,
     relu: bool,
+    charged: bool,
 ) -> Result<()> {
     if bias.is_none() && !relu {
         return Ok(());
@@ -1078,8 +1195,11 @@ fn chain_epilogue<T: Elem>(
         }
         engine.write_mapped(staged.get_mut(ci), off, &T::slice_to_bytes(&row))?;
     }
-    let cc = level1_chunk_costs(&engine.platform.dma, &engine.platform.cluster, m * n);
-    engine.charge_compute(cc.dma.max(cc.fpu) + cc.dma, "chain_epilogue");
+    if charged {
+        let cc =
+            level1_chunk_costs(&engine.platform.dma, &engine.platform.cluster, m * n);
+        engine.charge_compute(cc.dma.max(cc.fpu) + cc.dma, "chain_epilogue");
+    }
     Ok(())
 }
 
@@ -1093,6 +1213,7 @@ pub fn gemm_chain_execute<T: Elem>(
     engine: &mut OffloadEngine,
     registry: &mut ArtifactRegistry,
     mut chain: GemmChainStaged,
+    kreg: Option<&KernelRegistry>,
 ) -> Result<GemmChainState> {
     let r = (|| -> Result<()> {
         if T::SIZE != chain.elem_size {
@@ -1134,7 +1255,10 @@ pub fn gemm_chain_execute<T: Elem>(
             })
             .collect();
         for (li, (g, bi, ci, bias, relu)) in specs.into_iter().enumerate() {
-            gemm_compute(
+            // the link's epilogue is part of its kernel key: a promoted
+            // plan fuses the bias/ReLU pass into the C write-back charge
+            let epi = Epilogue::of(bias.is_some(), relu);
+            let specialized = gemm_compute(
                 engine,
                 registry,
                 &mut chain.staged,
@@ -1142,8 +1266,18 @@ pub fn gemm_chain_execute<T: Elem>(
                 g,
                 T::one(),
                 T::zero(),
+                kreg,
+                epi,
             )?;
-            chain_epilogue::<T>(engine, &mut chain.staged, ci, g, bias.as_deref(), relu)?;
+            chain_epilogue::<T>(
+                engine,
+                &mut chain.staged,
+                ci,
+                g,
+                bias.as_deref(),
+                relu,
+                !specialized,
+            )?;
             if li < last {
                 // the intermediate stays resident: no map(from:), and the
                 // next link's map(to:) of the same bytes is elided
@@ -1318,11 +1452,9 @@ fn gemv_compute<T: Elem>(
     g: GemvGeom,
     alpha: T,
     beta: T,
+    kreg: Option<&KernelRegistry>,
 ) -> Result<()> {
-    let artifact = format!("gemm_tile_accum_{}", T::DTYPE);
     let GemvGeom { mp, np, tm, tn, tk, .. } = g;
-    let gm = mp / tm;
-    let gk = np / tk;
     // level-2 is DMA-bound: stream the A row-panels once (shared kernel)
     let pc = gemv_panel_costs(
         &engine.platform.dma,
@@ -1331,7 +1463,44 @@ fn gemv_compute<T: Elem>(
         T::SIZE,
         T::F32_PATH,
     );
-    let (dma_panel, fpu) = (pc.dma_panel, pc.fpu);
+    // Specialized fast path: same executions, leaner panel step.
+    let plan = acquire_plan(
+        engine,
+        kreg,
+        KernelOp::Gemv,
+        T::DTYPE,
+        (tm, tn, tk),
+        (mp, np, 0),
+        Epilogue::None,
+    );
+    let step = match &plan {
+        Some(p) => p.steady_step,
+        None => pc.dma_panel.max(pc.fpu),
+    };
+    let r = gemv_walk::<T>(engine, registry, staged, (ai, xi, yi), g, alpha, beta, step);
+    if let (Some(reg), Some(p)) = (kreg, &plan) {
+        reg.release(p.key);
+    }
+    r
+}
+
+/// The panel walk of [`gemv_compute`]: identical kernel executions under
+/// either per-panel charge.
+#[allow(clippy::too_many_arguments)]
+fn gemv_walk<T: Elem>(
+    engine: &mut OffloadEngine,
+    registry: &mut ArtifactRegistry,
+    staged: &mut Staged,
+    (ai, xi, yi): (usize, usize, usize),
+    g: GemvGeom,
+    alpha: T,
+    beta: T,
+    step: Cycles,
+) -> Result<()> {
+    let artifact = format!("gemm_tile_accum_{}", T::DTYPE);
+    let GemvGeom { mp, np, tm, tn, tk, .. } = g;
+    let gm = mp / tm;
+    let gk = np / tk;
 
     for i in 0..gm {
         let mut acc = vec![T::zero(); tm * tn];
@@ -1350,7 +1519,7 @@ fn gemv_compute<T: Elem>(
             )?;
             acc = out.to_vec::<T>()?;
             engine.metrics.tile_kernel_calls += 1;
-            engine.charge_compute(dma_panel.max(fpu), &format!("gemv({i},{kk})"));
+            engine.charge_compute(step, &format!("gemv({i},{kk})"));
         }
         // y tile: column 0 of acc
         let y0 = i * tm;
@@ -1382,6 +1551,7 @@ pub fn gemv<T: Elem>(
     beta: T,
     y: &mut [T],
     zero_copy: bool,
+    kreg: Option<&KernelRegistry>,
 ) -> Result<()> {
     let g = GemvGeom::resolve::<T>(registry, m, n)?;
 
@@ -1403,7 +1573,7 @@ pub fn gemv<T: Elem>(
         }
         engine.launch(&desc)?;
 
-        gemv_compute(engine, registry, staged, (ai, xi, yi), g, alpha, beta)?;
+        gemv_compute(engine, registry, staged, (ai, xi, yi), g, alpha, beta, kreg)?;
 
         engine.join()?;
         let mut y_out = vec![0u8; y_bytes.len()];
@@ -1557,6 +1727,7 @@ pub fn gemv_batch_execute<T: Elem>(
     mut batch: GemvStagedBatch,
     alpha: T,
     beta: T,
+    kreg: Option<&KernelRegistry>,
 ) -> Result<GemvBatchState> {
     let g = batch.geom;
     let r = (|| -> Result<()> {
@@ -1585,6 +1756,7 @@ pub fn gemv_batch_execute<T: Elem>(
                 g,
                 alpha,
                 beta,
+                kreg,
             )?;
         }
         engine.device_complete()?;
@@ -1680,6 +1852,7 @@ pub fn gemv_batch<T: Elem>(
     inputs: &[(&[T], &[T], &[T])],
     zero_copy: bool,
     outs: &mut [&mut [T]],
+    kreg: Option<&KernelRegistry>,
 ) -> Result<()> {
     if outs.len() != inputs.len() {
         return Err(Error::shape(format!(
@@ -1691,7 +1864,7 @@ pub fn gemv_batch<T: Elem>(
     let staged = gemv_batch_stage::<T>(
         engine, registry, (m, n), beta == T::zero(), inputs, zero_copy,
     )?;
-    let state = gemv_batch_execute(engine, registry, staged, alpha, beta)?;
+    let state = gemv_batch_execute(engine, registry, staged, alpha, beta, kreg)?;
     gemv_batch_finish(engine, state, outs)
 }
 
@@ -1743,6 +1916,7 @@ pub fn axpy_f64(
     x: &[f64],
     y: &mut [f64],
     zero_copy: bool,
+    kreg: Option<&KernelRegistry>,
 ) -> Result<()> {
     if x.len() != y.len() {
         return Err(Error::shape(format!(
@@ -1762,6 +1936,7 @@ pub fn axpy_f64(
         &[(alpha, x, y_in.as_slice())],
         zero_copy,
         &mut [y],
+        kreg,
     )
 }
 
@@ -1772,6 +1947,7 @@ pub fn dot_f64(
     x: &[f64],
     y: &[f64],
     zero_copy: bool,
+    kreg: Option<&KernelRegistry>,
 ) -> Result<f64> {
     if x.len() != y.len() {
         return Err(Error::shape(format!(
@@ -1788,6 +1964,7 @@ pub fn dot_f64(
         &[(0.0, x, y)],
         zero_copy,
         &mut [&mut out],
+        kreg,
     )?;
     Ok(out[0])
 }
@@ -1812,6 +1989,7 @@ pub fn level1_batch(
     inputs: &[(f64, &[f64], &[f64])],
     zero_copy: bool,
     outs: &mut [&mut [f64]],
+    kreg: Option<&KernelRegistry>,
 ) -> Result<()> {
     let (op, is_axpy) = match kind {
         OffloadKind::Axpy => ("axpy", true),
@@ -1872,7 +2050,6 @@ pub fn level1_batch(
     engine.target_begin((if is_axpy { 3 } else { 2 }) * inputs.len());
 
     let cc = level1_chunk_costs(&engine.platform.dma, &engine.platform.cluster, chunk);
-    let (dma, fpu) = (cc.dma, cc.fpu);
 
     // ---- one descriptor, one doorbell ----
     let mut desc = OffloadDescriptor::new(kind, (n, 0, 0), false);
@@ -1885,7 +2062,22 @@ pub fn level1_batch(
     }
     engine.launch(&desc)?;
 
-    with_recovery(engine, |engine, staged| {
+    // Specialized fast path: one key covers the whole same-length batch.
+    let plan = acquire_plan(
+        engine,
+        kreg,
+        if is_axpy { KernelOp::Axpy } else { KernelOp::Dot },
+        "f64",
+        (chunk, 0, 0),
+        (round_up(n, chunk), 0, 0),
+        Epilogue::None,
+    );
+    let step = match &plan {
+        Some(p) => p.steady_step,
+        None => cc.dma.max(cc.fpu) + cc.dma,
+    };
+
+    let r = with_recovery(engine, |engine, staged| {
         for ((alpha, x, y), out) in inputs.iter().zip(outs.iter_mut()) {
             let mut acc = 0.0;
             let mut i = 0;
@@ -1913,10 +2105,7 @@ pub fn level1_batch(
                 let res = registry.exec(&artifact, &args)?;
                 let out_vec = res.to_vec::<f64>()?;
                 engine.metrics.tile_kernel_calls += 1;
-                engine.charge_compute(
-                    dma.max(fpu) + dma,
-                    &format!("{op}[{i}..{}]", i + take),
-                );
+                engine.charge_compute(step, &format!("{op}[{i}..{}]", i + take));
 
                 if is_axpy {
                     out[i..i + take].copy_from_slice(&out_vec[..take]);
@@ -1936,6 +2125,10 @@ pub fn level1_batch(
         engine.join()?;
         engine.target_end();
         Ok(())
-    })
+    });
+    if let (Some(reg), Some(p)) = (kreg, &plan) {
+        reg.release(p.key);
+    }
+    r
 }
 

@@ -12,9 +12,12 @@
 //! the cold crossover.  Without a model (plain policy values, unit
 //! tests) the original static thresholds apply.
 
+use std::sync::Arc;
+
 use crate::config::DispatchMode;
 use crate::cost::CostModel;
 use crate::hero::offload::OffloadKind;
+use crate::kernel::{Epilogue, KernelRegistry};
 
 /// Where one call will execute.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -47,6 +50,12 @@ pub struct DispatchPolicy {
     /// comparison.  [`super::HeroBlas::new`] attaches one; the scheduler
     /// replaces it with the pool-shared (jointly calibrated) instance.
     pub model: Option<CostModel>,
+    /// The shape-specialized kernel registry (pool-shared, attached by
+    /// the scheduler).  When a promoted plan covers a shape's key, the
+    /// `Auto` comparison uses the specialized-walk estimate — hot shapes
+    /// offload below the generic crossover.  Dispatch-only: the
+    /// specialized walk is bit-identical to the generic one.
+    pub kernel: Option<Arc<KernelRegistry>>,
 }
 
 impl Default for DispatchPolicy {
@@ -64,6 +73,7 @@ impl Default for DispatchPolicy {
                 OffloadKind::Dot,
             ],
             model: None,
+            kernel: None,
         }
     }
 }
@@ -75,6 +85,16 @@ impl DispatchPolicy {
 
     fn kernel_allowed(&self, kind: OffloadKind) -> bool {
         self.device_kernels.contains(&kind)
+    }
+
+    /// Key of a resident specialized plan covering this serve-shape, if
+    /// any.  Serve traffic is f64 and single calls carry no epilogue;
+    /// this is a dispatch estimate, not numerics, so those defaults are
+    /// the right (conservative) probe.
+    fn spec_key(&self, op: &str, dims: (usize, usize, usize)) -> Option<u64> {
+        let reg = self.kernel.as_deref()?;
+        let key = reg.key_for(op, "f64", dims, Epilogue::None)?;
+        reg.has_plan(key).then_some(key)
     }
 
     fn forced(&self) -> Option<ExecTarget> {
@@ -104,7 +124,10 @@ impl DispatchPolicy {
             return t;
         }
         let wins = match &self.model {
-            Some(cm) => cm.device_wins_gemm(m, n, k, warm_b),
+            Some(cm) => match self.spec_key("gemm", (m, n, k)) {
+                Some(key) => cm.device_wins_gemm_spec(m, n, k, warm_b, Some(key)),
+                None => cm.device_wins_gemm(m, n, k, warm_b),
+            },
             None => m.max(n).max(k) >= self.gemm_threshold,
         };
         if wins {
@@ -154,7 +177,10 @@ impl DispatchPolicy {
             return t;
         }
         let wins = match &self.model {
-            Some(cm) => cm.device_wins_gemv(m, n),
+            Some(cm) => match self.spec_key("gemv", (m, n, 0)) {
+                Some(key) => cm.device_wins_gemv_spec(m, n, Some(key)),
+                None => cm.device_wins_gemv(m, n),
+            },
             None => m * n >= self.gemv_threshold,
         };
         if wins {
@@ -172,8 +198,15 @@ impl DispatchPolicy {
         if let Some(t) = self.forced() {
             return t;
         }
+        let is_axpy = kind == OffloadKind::Axpy;
         let wins = match &self.model {
-            Some(cm) => cm.device_wins_level1(n, kind == OffloadKind::Axpy),
+            Some(cm) => {
+                let op = if is_axpy { "axpy" } else { "dot" };
+                match self.spec_key(op, (n, 0, 0)) {
+                    Some(key) => cm.device_wins_level1_spec(n, is_axpy, Some(key)),
+                    None => cm.device_wins_level1(n, is_axpy),
+                }
+            }
             None => n >= self.level1_threshold,
         };
         if wins {
@@ -291,6 +324,47 @@ mod tests {
         let mut no_gemm = model_policy(false);
         no_gemm.device_kernels = vec![OffloadKind::Gemv];
         assert_eq!(no_gemm.chain(64, &[64, 64, 64, 64]), ExecTarget::Host);
+    }
+
+    #[test]
+    fn resident_plan_offloads_below_the_generic_crossover() {
+        use crate::config::KernelConfig;
+        use crate::kernel::{KernelOp, KernelPlan, KernelRegistry};
+        use crate::soc::{DmaModel, SnitchCluster};
+
+        let mut p = model_policy(false);
+        let x = p.model.as_ref().unwrap().crossovers();
+        let (spec, generic) = (x.gemm_spec_n.unwrap(), x.gemm_n.unwrap());
+        assert!(
+            spec < generic,
+            "fused epilogue + FPU gain must buy a gap: spec {spec} vs {generic}"
+        );
+        // inside the gap, the generic comparison keeps the shape on host
+        assert_eq!(p.gemm(spec, spec, spec), ExecTarget::Host);
+
+        // promote the shape: a resident plan switches Auto to the
+        // specialized estimate and the same call now offloads
+        let cfg = PlatformConfig::default();
+        let reg = KernelRegistry::new(
+            &KernelConfig { promote_after: 1, ..KernelConfig::default() },
+            (64, 64, 64),
+            4096,
+        );
+        let dma = DmaModel::new(cfg.dma.clone());
+        let cluster =
+            SnitchCluster::new(cfg.cluster.clone(), cfg.memory.l1_spm_bytes);
+        let r = |v: usize| v.div_ceil(64) * 64;
+        reg.insert(KernelPlan::specialize(
+            &dma,
+            &cluster,
+            KernelOp::Gemm,
+            "f64",
+            (64, 64, 64),
+            (r(spec), r(spec), r(spec)),
+            Epilogue::None,
+        ));
+        p.kernel = Some(Arc::new(reg));
+        assert_eq!(p.gemm(spec, spec, spec), ExecTarget::Device);
     }
 
     #[test]

@@ -13,7 +13,7 @@ mod workload;
 pub use platform::{
     CacheConfig, ChainConfig, ClockConfig, ClusterConfig, CostConfig,
     DmaConfig, FaultConfig, ForkJoinConfig, HostConfig, IommuConfig,
-    MemoryConfig, PlacementConfig, PlatformConfig, SchedConfig, ServeConfig,
-    TraceConfig,
+    KernelConfig, MemoryConfig, PlacementConfig, PlatformConfig, SchedConfig,
+    ServeConfig, TraceConfig,
 };
 pub use workload::{DispatchMode, SweepConfig, WorkloadConfig};

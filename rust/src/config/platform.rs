@@ -354,6 +354,42 @@ impl Default for TraceConfig {
     }
 }
 
+/// Shape-specialized kernel-registry knobs (`[kernel]`): the content-
+/// keyed cache of specialized compute walks behind `blas::device` (see
+/// [`crate::kernel`]).
+///
+/// Specialization never changes numerics — a specialized walk issues the
+/// exact same device executions in the same order and differs only in
+/// its charge schedule — so the registry defaults ON.  `promote_after`
+/// keeps the first launches of every shape on the generic walk (both
+/// paths stay exercised); `max_entries` bounds resident plans with
+/// pinned-aware LRU eviction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelConfig {
+    /// Master switch: false keeps every launch on the generic walk.
+    pub enabled: bool,
+    /// Launches of one (op, dtype, shape, epilogue) key before its
+    /// specialized plan is compiled and promoted (1..=65536).
+    pub promote_after: u32,
+    /// Most specialized plans resident at once (1..=4096); beyond this
+    /// the least-recently-hit unpinned plan is evicted.
+    pub max_entries: u32,
+    /// Compile plans for the AOT export size tables at pool boot, so
+    /// the first request at a catalog shape already hits the fast path.
+    pub prewarm: bool,
+}
+
+impl Default for KernelConfig {
+    fn default() -> Self {
+        KernelConfig {
+            enabled: true,
+            promote_after: 32,
+            max_entries: 64,
+            prewarm: false,
+        }
+    }
+}
+
 /// Serve-layer knobs (`[serve]`): the TCP line-protocol front end.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeConfig {
@@ -436,6 +472,7 @@ pub struct PlatformConfig {
     pub iommu: IommuConfig,
     pub sched: SchedConfig,
     pub cost: CostConfig,
+    pub kernel: KernelConfig,
     pub serve: ServeConfig,
 }
 
@@ -491,6 +528,7 @@ impl Default for PlatformConfig {
             },
             sched: SchedConfig::default(),
             cost: CostConfig::default(),
+            kernel: KernelConfig::default(),
             serve: ServeConfig::default(),
         }
     }
@@ -665,6 +703,24 @@ impl PlatformConfig {
                     ceiling: d.opt_f64("cost.ceiling").unwrap_or(def.ceiling),
                 }
             },
+            // Kernel-registry knobs are dispatch policy (specialization
+            // never changes numerics) — like [sched] they default when
+            // absent.
+            kernel: {
+                let def = KernelConfig::default();
+                KernelConfig {
+                    enabled: d.opt_bool("kernel.enabled").unwrap_or(def.enabled),
+                    promote_after: d
+                        .opt_u64("kernel.promote_after")
+                        .unwrap_or(def.promote_after as u64)
+                        as u32,
+                    max_entries: d
+                        .opt_u64("kernel.max_entries")
+                        .unwrap_or(def.max_entries as u64)
+                        as u32,
+                    prewarm: d.opt_bool("kernel.prewarm").unwrap_or(def.prewarm),
+                }
+            },
             // Serve-layer knobs are front-end policy; they default too.
             serve: {
                 let def = ServeConfig::default();
@@ -711,6 +767,8 @@ impl PlatformConfig {
              [sched.trace]\nenabled = {}\nring_capacity = {}\n\
              watch_interval_ms = {}\n\n\
              [cost]\ncalibrate = {}\nalpha = {}\nfloor = {}\nceiling = {}\n\n\
+             [kernel]\nenabled = {}\npromote_after = {}\nmax_entries = {}\n\
+             prewarm = {}\n\n\
              [serve]\nreply_timeout_ms = {}\n",
             c.name,
             c.clock.freq_hz,
@@ -774,6 +832,10 @@ impl PlatformConfig {
             fmt_f64(c.cost.alpha),
             fmt_f64(c.cost.floor),
             fmt_f64(c.cost.ceiling),
+            c.kernel.enabled,
+            c.kernel.promote_after,
+            c.kernel.max_entries,
+            c.kernel.prewarm,
             c.serve.reply_timeout_ms,
         )
     }
@@ -918,6 +980,18 @@ impl PlatformConfig {
             return err(format!(
                 "cost.ceiling must be >= 1, got {}",
                 self.cost.ceiling
+            ));
+        }
+        if self.kernel.promote_after == 0 || self.kernel.promote_after > 65_536 {
+            return err(format!(
+                "kernel.promote_after must be in 1..=65536, got {}",
+                self.kernel.promote_after
+            ));
+        }
+        if self.kernel.max_entries == 0 || self.kernel.max_entries > 4_096 {
+            return err(format!(
+                "kernel.max_entries must be in 1..=4096, got {}",
+                self.kernel.max_entries
             ));
         }
         // One capacity model: request-level pool clusters x intra-offload
@@ -1293,6 +1367,42 @@ mod tests {
         assert!(cfg.validate().is_err());
         let mut cfg = PlatformConfig::default();
         cfg.cost.ceiling = 0.5;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn kernel_section_parses_defaults_and_validates() {
+        // absent [kernel] => defaults (registry ON, prewarm off)
+        let mut text = PlatformConfig::default().to_toml_string();
+        let at = text.find("[kernel]").unwrap();
+        text.truncate(at);
+        let cfg = PlatformConfig::from_toml_str(&text).unwrap();
+        assert_eq!(cfg.kernel, KernelConfig::default());
+        assert!(cfg.kernel.enabled, "specialization defaults ON");
+        assert!(!cfg.kernel.prewarm);
+
+        // explicit values round-trip
+        let mut cfg = PlatformConfig::default();
+        cfg.kernel.enabled = false;
+        cfg.kernel.promote_after = 4;
+        cfg.kernel.max_entries = 8;
+        cfg.kernel.prewarm = true;
+        let back = PlatformConfig::from_toml_str(&cfg.to_toml_string()).unwrap();
+        assert_eq!(back.kernel, cfg.kernel);
+
+        // out-of-range knobs rejected (promote_after 0 would promote a
+        // never-launched key, max_entries 0 would wedge every insert)
+        let mut cfg = PlatformConfig::default();
+        cfg.kernel.promote_after = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PlatformConfig::default();
+        cfg.kernel.promote_after = 100_000;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PlatformConfig::default();
+        cfg.kernel.max_entries = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PlatformConfig::default();
+        cfg.kernel.max_entries = 5_000;
         assert!(cfg.validate().is_err());
     }
 

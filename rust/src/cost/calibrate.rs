@@ -17,11 +17,18 @@
 //! scales stay at exactly 1.0 forever, so estimates are a pure function
 //! of the platform description (the bit-identity configuration).
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use crate::config::CostConfig;
 
 use super::CostOp;
+
+/// Bound on tracked per-kernel scales — a shape-diverse stream churns
+/// registry keys, and the calibration map must not outgrow the registry
+/// it corrects (coldest entries are simply forgotten back to 1.0).
+const MAX_KERNEL_SCALES: usize = 512;
 
 /// One multiplicative correction factor, EWMA-smoothed and clamped.
 /// Stored as f64 bits in an atomic; racy read-modify-write is fine — a
@@ -61,6 +68,11 @@ impl Scale {
 pub struct Calibration {
     device: [Scale; 3],
     host: [Scale; 3],
+    /// Per-kernel device scales, keyed by the kernel registry's content
+    /// key: a specialized walk's observed/predicted ratio folds into
+    /// its *own* EWMA, so the model learns each compiled kernel's real
+    /// FPU rate instead of smearing one correction across every shape.
+    kernel: Mutex<HashMap<u64, Scale>>,
 }
 
 impl Default for Calibration {
@@ -74,6 +86,7 @@ impl Calibration {
         Calibration {
             device: [Scale::unit(), Scale::unit(), Scale::unit()],
             host: [Scale::unit(), Scale::unit(), Scale::unit()],
+            kernel: Mutex::new(HashMap::new()),
         }
     }
 
@@ -111,6 +124,46 @@ impl Calibration {
         if predicted_cycles > 0.0 {
             self.host[op.idx()].fold(observed_cycles / predicted_cycles, knobs);
         }
+    }
+
+    /// Current correction for one specialized kernel (1.0 until its
+    /// first observation or after a coldest-entry drop).
+    pub fn kernel_scale(&self, key: u64) -> f64 {
+        self.kernel
+            .lock()
+            .unwrap()
+            .get(&key)
+            .map(|s| s.get())
+            .unwrap_or(1.0)
+    }
+
+    /// Tracked per-kernel scales right now.
+    pub fn kernel_scales_len(&self) -> usize {
+        self.kernel.lock().unwrap().len()
+    }
+
+    /// Fold one observed specialized-walk timing into the kernel's own
+    /// scale.  The map is bounded: at capacity an arbitrary existing
+    /// entry makes room (forgetting a scale only resets it to 1.0).
+    pub fn observe_kernel(
+        &self,
+        key: u64,
+        predicted_cycles: f64,
+        observed_cycles: f64,
+        knobs: &CostConfig,
+    ) {
+        if predicted_cycles <= 0.0 {
+            return;
+        }
+        let mut g = self.kernel.lock().unwrap();
+        if g.len() >= MAX_KERNEL_SCALES && !g.contains_key(&key) {
+            if let Some(drop) = g.keys().next().copied() {
+                g.remove(&drop);
+            }
+        }
+        g.entry(key)
+            .or_insert_with(Scale::unit)
+            .fold(observed_cycles / predicted_cycles, knobs);
     }
 }
 
@@ -167,5 +220,26 @@ mod tests {
         let s = c.device_scale(CostOp::Gemm);
         // 1.0 * (1 - 0.125) + 4.0 * 0.125 = 1.375
         assert!((s - 1.375).abs() < 1e-9, "one sample moved scale to {s}");
+    }
+
+    #[test]
+    fn kernel_scales_are_per_key_and_bounded() {
+        let c = Calibration::new();
+        let k = knobs();
+        assert_eq!(c.kernel_scale(7), 1.0);
+        // key 7 runs 2x slower than predicted; key 9 is untouched
+        for _ in 0..128 {
+            c.observe_kernel(7, 1000.0, 2000.0, &k);
+        }
+        assert!((c.kernel_scale(7) - 2.0).abs() < 0.05);
+        assert_eq!(c.kernel_scale(9), 1.0);
+        // degenerate predictions are dropped
+        c.observe_kernel(9, 0.0, 100.0, &k);
+        assert_eq!(c.kernel_scale(9), 1.0);
+        // the map is bounded against key churn
+        for key in 0..2 * MAX_KERNEL_SCALES as u64 {
+            c.observe_kernel(key, 1000.0, 1500.0, &k);
+        }
+        assert!(c.kernel_scales_len() <= MAX_KERNEL_SCALES);
     }
 }

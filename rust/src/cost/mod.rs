@@ -42,7 +42,9 @@ pub use model::{CostModel, Crossovers};
 pub use tile::{
     chain_staged_bytes_tiled, gemm_staged_bytes_tiled, gemm_tile_costs,
     gemv_panel_costs, gemv_staged_bytes_tiled, level1_chunk_costs, round_up,
-    GemmTileCosts, GemvPanelCosts, Level1ChunkCosts,
+    specialized_gemm_tile_costs, specialized_gemv_panel_costs,
+    specialized_level1_chunk_costs, GemmTileCosts, GemvPanelCosts,
+    Level1ChunkCosts, SpecializedGemmTileCosts, SPECIALIZED_FPU_GAIN,
 };
 
 /// Op families the model estimates; indexes the calibration scales.

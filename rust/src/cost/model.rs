@@ -64,6 +64,13 @@ pub struct Crossovers {
     pub gemv_n: Option<usize>,
     /// f64 AXPY length, cold.
     pub level1_n: Option<usize>,
+    /// Square f64 GEMM through a registry-specialized walk, cold
+    /// operands — the dual crossover line next to `gemm_n`.
+    pub gemm_spec_n: Option<usize>,
+    /// Square f64 GEMV through a specialized walk, cold.
+    pub gemv_spec_n: Option<usize>,
+    /// f64 AXPY length through a specialized walk, cold.
+    pub level1_spec_n: Option<usize>,
 }
 
 /// The unified, online-calibrated offload cost estimator.  Cheap to
@@ -170,6 +177,30 @@ impl CostModel {
         warm_b: bool,
         beta_zero: bool,
     ) -> f64 {
+        self.offload_gemm_cycles_walk((m, n, k), batch, warm_b, beta_zero, false)
+    }
+
+    /// Specialized-walk twin of [`CostModel::offload_gemm_cycles`]: the
+    /// same fork-join and map traffic (the bytes moved are identical by
+    /// construction) over the registry's fast-path tile schedule.
+    pub fn offload_gemm_cycles_spec(
+        &self,
+        dims: (usize, usize, usize),
+        batch: usize,
+        warm_b: bool,
+        beta_zero: bool,
+    ) -> f64 {
+        self.offload_gemm_cycles_walk(dims, batch, warm_b, beta_zero, true)
+    }
+
+    fn offload_gemm_cycles_walk(
+        &self,
+        (m, n, k): (usize, usize, usize),
+        batch: usize,
+        warm_b: bool,
+        beta_zero: bool,
+        spec: bool,
+    ) -> f64 {
         let batch = batch.max(1);
         let esz = 8u64;
 
@@ -189,7 +220,11 @@ impl CostModel {
         };
         let c_out = self.memcpy((m * n) as u64 * esz);
 
-        let walk = self.gemm_walk_cycles((m, n, k), beta_zero);
+        let walk = if spec {
+            self.gemm_walk_cycles_spec((m, n, k), beta_zero)
+        } else {
+            self.gemm_walk_cycles((m, n, k), beta_zero)
+        };
         fork + batch as f64 * (a_in + b_in + c_in + c_out + walk)
     }
 
@@ -206,6 +241,34 @@ impl CostModel {
             + (gk.saturating_sub(1)) as f64 * steady
             + if beta_zero { 0.0 } else { t.dma_c.0 as f64 }
             + (t.epilogue + t.dma_c).0 as f64;
+        (gm * gn).div_ceil(self.intra_clusters) as f64 * per_walk
+    }
+
+    /// The specialized-walk cycle formula: the per-step charges a
+    /// registry plan bakes (leaner unrolled FPU burst, epilogue fused
+    /// into the C write-back pass) summed over the same padded grid.
+    /// Mirrors `KernelPlan::specialize` exactly — both read the shared
+    /// [`tile::specialized_gemm_tile_costs`].
+    fn gemm_walk_cycles_spec(
+        &self,
+        (m, n, k): (usize, usize, usize),
+        beta_zero: bool,
+    ) -> f64 {
+        let (tm, tn, tk) = self.tile;
+        let (mp, np, kp) = (round_up(m, tm), round_up(n, tn), round_up(k, tk));
+        let (gm, gn, gk) = (mp / tm, np / tn, kp / tk);
+        let s = tile::specialized_gemm_tile_costs(
+            &self.dma,
+            &self.cluster,
+            (tm, tn, tk),
+            8,
+            false,
+        );
+        let steady = s.dma_ab.max(s.fpu).0 as f64;
+        let per_walk = (s.dma_ab + s.fpu).0 as f64
+            + (gk.saturating_sub(1)) as f64 * steady
+            + if beta_zero { 0.0 } else { s.dma_c.0 as f64 }
+            + s.c_pass.0 as f64;
         (gm * gn).div_ceil(self.intra_clusters) as f64 * per_walk
     }
 
@@ -295,6 +358,26 @@ impl CostModel {
         batch: usize,
         beta_zero: bool,
     ) -> f64 {
+        self.offload_gemv_cycles_walk((m, n), batch, beta_zero, false)
+    }
+
+    /// Specialized-walk twin of [`CostModel::offload_gemv_cycles`].
+    pub fn offload_gemv_cycles_spec(
+        &self,
+        dims: (usize, usize),
+        batch: usize,
+        beta_zero: bool,
+    ) -> f64 {
+        self.offload_gemv_cycles_walk(dims, batch, beta_zero, true)
+    }
+
+    fn offload_gemv_cycles_walk(
+        &self,
+        (m, n): (usize, usize),
+        batch: usize,
+        beta_zero: bool,
+        spec: bool,
+    ) -> f64 {
         let batch = batch.max(1);
         let (tm, _tn, tk) = self.tile;
         let (mp, np) = (round_up(m, tm), round_up(n, tk));
@@ -312,7 +395,11 @@ impl CostModel {
         };
         let y_out = self.memcpy(m as u64 * esz);
 
-        let p = tile::gemv_panel_costs(&self.dma, &self.cluster, (tm, tk), 8, false);
+        let p = if spec {
+            tile::specialized_gemv_panel_costs(&self.dma, &self.cluster, (tm, tk), 8, false)
+        } else {
+            tile::gemv_panel_costs(&self.dma, &self.cluster, (tm, tk), 8, false)
+        };
         let compute = (gm * gk) as f64 * p.dma_panel.max(p.fpu).0 as f64;
 
         fork + batch as f64 * (a_in + x_in + y_in + y_out + compute)
@@ -326,13 +413,37 @@ impl CostModel {
     /// Predicted cycles for one coalesced device level-1 launch (axpy or
     /// dot, length n, f64).
     pub fn offload_level1_cycles(&self, n: usize, batch: usize, is_axpy: bool) -> f64 {
+        self.offload_level1_cycles_walk(n, batch, is_axpy, false)
+    }
+
+    /// Specialized-walk twin of [`CostModel::offload_level1_cycles`].
+    pub fn offload_level1_cycles_spec(
+        &self,
+        n: usize,
+        batch: usize,
+        is_axpy: bool,
+    ) -> f64 {
+        self.offload_level1_cycles_walk(n, batch, is_axpy, true)
+    }
+
+    fn offload_level1_cycles_walk(
+        &self,
+        n: usize,
+        batch: usize,
+        is_axpy: bool,
+        spec: bool,
+    ) -> f64 {
         let batch = batch.max(1);
         let chunk = self.level1_chunk;
         let nargs = if is_axpy { 3 } else { 2 };
         let fork = self.forkjoin_shared()
             + (self.fj.per_arg_cycles * nargs * batch as u64) as f64;
 
-        let c = tile::level1_chunk_costs(&self.dma, &self.cluster, chunk);
+        let c = if spec {
+            tile::specialized_level1_chunk_costs(&self.dma, &self.cluster, chunk)
+        } else {
+            tile::level1_chunk_costs(&self.dma, &self.cluster, chunk)
+        };
         let per_chunk_compute = (c.dma.max(c.fpu) + c.dma).0 as f64;
         let mut per_member = 0.0;
         let mut i = 0;
@@ -383,6 +494,51 @@ impl CostModel {
             < self.scaled_host(CostOp::Level1, self.host_level1_cycles(n, 1))
     }
 
+    /// The per-kernel correction for a specialized estimate: when the
+    /// registry key is known its own EWMA scale applies (learned FPU
+    /// rate of that compiled kernel), otherwise the estimate stands
+    /// unscaled.
+    fn kernel_scaled(&self, key: Option<u64>, raw: f64) -> f64 {
+        raw * key.map(|k| self.calib.kernel_scale(k)).unwrap_or(1.0)
+    }
+
+    /// Does the device path win a single f64 GEMM through a
+    /// registry-specialized walk?  `key` (when known) applies that
+    /// kernel's learned scale — the specialized analogue of the
+    /// family-level calibration.
+    pub fn device_wins_gemm_spec(
+        &self,
+        m: usize,
+        n: usize,
+        k: usize,
+        warm_b: bool,
+        key: Option<u64>,
+    ) -> bool {
+        self.kernel_scaled(
+            key,
+            self.offload_gemm_cycles_spec((m, n, k), 1, warm_b, true),
+        ) < self.scaled_host(CostOp::Gemm, self.host_gemm_cycles((m, n, k), 1))
+    }
+
+    /// Does the device path win a single f64 GEMV through a
+    /// specialized walk?
+    pub fn device_wins_gemv_spec(&self, m: usize, n: usize, key: Option<u64>) -> bool {
+        self.kernel_scaled(key, self.offload_gemv_cycles_spec((m, n), 1, true))
+            < self.scaled_host(CostOp::Gemv, self.host_gemv_cycles((m, n), 1))
+    }
+
+    /// Does the device path win a single f64 level-1 call through a
+    /// specialized walk?
+    pub fn device_wins_level1_spec(
+        &self,
+        n: usize,
+        is_axpy: bool,
+        key: Option<u64>,
+    ) -> bool {
+        self.kernel_scaled(key, self.offload_level1_cycles_spec(n, 1, is_axpy))
+            < self.scaled_host(CostOp::Level1, self.host_level1_cycles(n, 1))
+    }
+
     /// THE mode-to-path mapping, shared by every consumer that must
     /// agree with dispatch (the batcher's linger gate, the placement
     /// router's admission/footprints): forced modes answer directly,
@@ -416,13 +572,21 @@ impl CostModel {
     // Derived policy surfaces
     // ------------------------------------------------------------------
 
-    /// Live calibrated crossovers per op (the smallest winning size).
+    /// Live calibrated crossovers per op (the smallest winning size),
+    /// the specialized crossover reported next to the generic one.
     pub fn crossovers(&self) -> Crossovers {
         Crossovers {
             gemm_n: smallest(MAX_DIM, |n| self.device_wins_gemm(n, n, n, false)),
             gemm_warm_n: smallest(MAX_DIM, |n| self.device_wins_gemm(n, n, n, true)),
             gemv_n: smallest(MAX_DIM, |n| self.device_wins_gemv(n, n)),
             level1_n: smallest(MAX_LEVEL1_N, |n| self.device_wins_level1(n, true)),
+            gemm_spec_n: smallest(MAX_DIM, |n| {
+                self.device_wins_gemm_spec(n, n, n, false, None)
+            }),
+            gemv_spec_n: smallest(MAX_DIM, |n| self.device_wins_gemv_spec(n, n, None)),
+            level1_spec_n: smallest(MAX_LEVEL1_N, |n| {
+                self.device_wins_level1_spec(n, true, None)
+            }),
         }
     }
 
@@ -540,6 +704,36 @@ impl CostModel {
             self.calib
                 .observe_device(CostOp::Gemm, pred, observed_cycles as f64, &self.knobs);
         }
+    }
+
+    /// Specialized-launch feedback: fold one observed fast-path batch
+    /// timing into that kernel's own EWMA scale (the per-kernel FPU
+    /// rate).  Dims follow the [`CostModel::observe`] convention; the
+    /// prediction is the specialized estimate, so the ratio measures
+    /// how the *compiled* walk really runs, not the family average.
+    pub fn observe_kernel(
+        &self,
+        key: u64,
+        op: &str,
+        dims: (usize, usize, usize),
+        batch: usize,
+        observed_cycles: u64,
+    ) {
+        if !self.knobs.calibrate || observed_cycles == 0 {
+            return;
+        }
+        let pred = match op {
+            "gemm" => {
+                self.offload_gemm_cycles_spec((dims.0, dims.1, dims.2), batch, false, true)
+            }
+            "gemv" => self.offload_gemv_cycles_spec((dims.0, dims.1), batch, true),
+            "axpy" | "dot" => {
+                self.offload_level1_cycles_spec(dims.0, batch, op == "axpy")
+            }
+            _ => return,
+        };
+        self.calib
+            .observe_kernel(key, pred, observed_cycles as f64, &self.knobs);
     }
 }
 
@@ -661,6 +855,65 @@ mod tests {
         }
         let fast = m2.crossovers().gemm_n.unwrap();
         assert!(fast < base, "4x-fast device: crossover {base} -> {fast}");
+    }
+
+    #[test]
+    fn specialized_walk_undercuts_generic_and_moves_the_crossover_down() {
+        let m = model();
+        // same fork-join + map traffic, leaner walk: strictly cheaper
+        for n in [64usize, 128, 256] {
+            assert!(
+                m.offload_gemm_cycles_spec((n, n, n), 1, false, true)
+                    < m.offload_gemm_cycles((n, n, n), 1, false, true),
+                "spec gemm estimate must undercut generic at n={n}"
+            );
+        }
+        // level-2/level-1 steps are DMA-bound: a leaner burst can only
+        // help when the FPU was the binding side, so never regress
+        assert!(
+            m.offload_gemv_cycles_spec((256, 256), 1, true)
+                <= m.offload_gemv_cycles((256, 256), 1, true)
+        );
+        assert!(
+            m.offload_level1_cycles_spec(1 << 16, 1, true)
+                <= m.offload_level1_cycles(1 << 16, 1, true)
+        );
+        // the dual crossover lines: specialized at or below generic,
+        // exactly like the cache-aware warm path sits below cold
+        let x = m.crossovers();
+        let (cold, spec) = (x.gemm_n.unwrap(), x.gemm_spec_n.unwrap());
+        assert!(spec <= cold, "spec crossover {spec} must not exceed cold {cold}");
+        // gemv/level-1 stay copy-bound: specializing the burst cannot
+        // rescue them in copy mode
+        assert_eq!(x.gemv_spec_n, None);
+        assert_eq!(x.level1_spec_n, None);
+    }
+
+    #[test]
+    fn per_kernel_feedback_flips_only_that_kernels_decision() {
+        let m = calibrating_model();
+        let key = 0xfeed;
+        // at the smallest winning size the margin is minimal, so a
+        // kernel observed 4x slower than its estimate must flip there
+        let n = m.crossovers().gemm_spec_n.expect("spec gemm crosses over");
+        assert!(m.device_wins_gemm_spec(n, n, n, false, Some(key)));
+        let pred = m.offload_gemm_cycles_spec((n, n, n), 1, false, true);
+        for _ in 0..64 {
+            m.observe_kernel(key, "gemm", (n, n, n), 1, (pred * 4.0) as u64);
+        }
+        assert!(!m.device_wins_gemm_spec(n, n, n, false, Some(key)));
+        // ...while other kernels and the family scales are untouched
+        assert!(m.device_wins_gemm_spec(n, n, n, false, Some(0xbeef)));
+        assert!(m.device_wins_gemm_spec(n, n, n, false, None));
+        assert_eq!(m.calibration().device_scale(CostOp::Gemm), 1.0);
+
+        // inert with calibration off or degenerate observations
+        let off = model();
+        off.observe_kernel(key, "gemm", (128, 128, 128), 1, u64::MAX / 2);
+        assert_eq!(off.calibration().kernel_scale(key), 1.0);
+        m.observe_kernel(0x77, "fence", (128, 128, 128), 1, 1000);
+        m.observe_kernel(0x77, "gemm", (128, 128, 128), 1, 0);
+        assert_eq!(m.calibration().kernel_scale(0x77), 1.0);
     }
 
     #[test]

@@ -106,6 +106,81 @@ pub fn level1_chunk_costs(
     }
 }
 
+/// Fraction of the generic tile walk's FPU burst a specialized walk
+/// recovers: unrolled tile loops with baked strides and padded dims
+/// drop the per-tile bounds checks, address arithmetic and epilogue
+/// dispatch the interpreted walk re-derives every step, lifting the
+/// cluster's sustained efficiency on the burst.  Applied uniformly to
+/// every specialized op family; the per-kernel calibration scales
+/// correct the residual per shape.
+pub const SPECIALIZED_FPU_GAIN: f64 = 0.15;
+
+fn specialize_fpu(fpu: Cycles) -> Cycles {
+    Cycles::from_f64(fpu.0 as f64 * (1.0 - SPECIALIZED_FPU_GAIN))
+}
+
+/// Steady-state costs of one **specialized** GEMM tile step (see the
+/// fast-path walk in `device::gemm_compute`): same DMA traffic as the
+/// generic walk — the bytes moved are identical by construction — but a
+/// leaner FPU burst and the epilogue fused into the C write-back pass
+/// instead of a separate stream pass.
+#[derive(Debug, Clone, Copy)]
+pub struct SpecializedGemmTileCosts {
+    /// One (A-panel + B-panel) DMA refill (unchanged: same bytes).
+    pub dma_ab: Cycles,
+    /// One unrolled tm x tn x tk FPU burst.
+    pub fpu: Cycles,
+    /// One C-tile DMA transfer (in or out; unchanged).
+    pub dma_c: Cycles,
+    /// The fused C pass: epilogue streaming overlapped with the C-tile
+    /// write-back DMA (`max` instead of the generic `epilogue + dma_c`).
+    pub c_pass: Cycles,
+}
+
+/// Specialized GEMM tile-step costs — the fast-path twin of
+/// [`gemm_tile_costs`], charged by registry-hit walks and summed by the
+/// cost model's specialized estimates.
+pub fn specialized_gemm_tile_costs(
+    dma: &DmaModel,
+    cluster: &SnitchCluster,
+    tile: (usize, usize, usize),
+    elem_size: usize,
+    f32_path: bool,
+) -> SpecializedGemmTileCosts {
+    let g = gemm_tile_costs(dma, cluster, tile, elem_size, f32_path);
+    SpecializedGemmTileCosts {
+        dma_ab: g.dma_ab,
+        fpu: specialize_fpu(g.fpu),
+        dma_c: g.dma_c,
+        c_pass: g.epilogue.max(g.dma_c),
+    }
+}
+
+/// Specialized GEMV panel-step costs — the fast-path twin of
+/// [`gemv_panel_costs`] (level-2 stays DMA-bound; only the FPU burst
+/// leans out).
+pub fn specialized_gemv_panel_costs(
+    dma: &DmaModel,
+    cluster: &SnitchCluster,
+    panel: (usize, usize),
+    elem_size: usize,
+    f32_path: bool,
+) -> GemvPanelCosts {
+    let g = gemv_panel_costs(dma, cluster, panel, elem_size, f32_path);
+    GemvPanelCosts { dma_panel: g.dma_panel, fpu: specialize_fpu(g.fpu) }
+}
+
+/// Specialized level-1 chunk-step costs — the fast-path twin of
+/// [`level1_chunk_costs`].
+pub fn specialized_level1_chunk_costs(
+    dma: &DmaModel,
+    cluster: &SnitchCluster,
+    chunk: usize,
+) -> Level1ChunkCosts {
+    let g = level1_chunk_costs(dma, cluster, chunk);
+    Level1ChunkCosts { dma: g.dma, fpu: specialize_fpu(g.fpu) }
+}
+
 /// Device-DRAM bytes one staged member occupies for an (m, n, k) GEMM
 /// given the manifest tile geometry and element size: three zero-padded
 /// operands.  Shared by the worker's batch cap, the placement router's
@@ -189,6 +264,35 @@ mod tests {
         let l = level1_chunk_costs(&dma, &cluster, 4096);
         assert_eq!(l.dma, dma.cost_2d(1, 4096 * 8));
         assert_eq!(l.fpu, cluster.stream_cycles(4096, 2.0, false));
+    }
+
+    #[test]
+    fn specialized_costs_undercut_generic_without_touching_dma() {
+        let (dma, cluster) = models();
+        let g = gemm_tile_costs(&dma, &cluster, (64, 64, 64), 8, false);
+        let s = specialized_gemm_tile_costs(&dma, &cluster, (64, 64, 64), 8, false);
+        // the bytes moved are identical: DMA charges must not change
+        assert_eq!(s.dma_ab, g.dma_ab);
+        assert_eq!(s.dma_c, g.dma_c);
+        // the unrolled burst is leaner and the epilogue fuses into the
+        // C pass instead of serializing after it
+        assert!(s.fpu < g.fpu);
+        assert_eq!(
+            s.fpu,
+            Cycles::from_f64(g.fpu.0 as f64 * (1.0 - SPECIALIZED_FPU_GAIN))
+        );
+        assert_eq!(s.c_pass, g.epilogue.max(g.dma_c));
+        assert!(s.c_pass < g.epilogue + g.dma_c);
+
+        let gv = gemv_panel_costs(&dma, &cluster, (64, 64), 8, false);
+        let sv = specialized_gemv_panel_costs(&dma, &cluster, (64, 64), 8, false);
+        assert_eq!(sv.dma_panel, gv.dma_panel);
+        assert!(sv.fpu < gv.fpu);
+
+        let gl = level1_chunk_costs(&dma, &cluster, 4096);
+        let sl = specialized_level1_chunk_costs(&dma, &cluster, 4096);
+        assert_eq!(sl.dma, gl.dma);
+        assert!(sl.fpu < gl.fpu);
     }
 
     #[test]

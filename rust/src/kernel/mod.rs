@@ -1,0 +1,48 @@
+//! Shape-specialized kernel registry: compile hot (op, dtype,
+//! tile-shape) keys into fused fast-path walks.
+//!
+//! Every device launch interprets the generic tile walk against the
+//! manifest — per-tile bounds checks, stride arithmetic and epilogue
+//! dispatch are re-derived even for the handful of shapes that dominate
+//! real serving traffic (the `aot.py` size tables are the x-axis of the
+//! paper's Figure 3).  This module closes ROADMAP item 3: a
+//! content-keyed cache — FNV-1a over (op, dtype, tile shape, padded
+//! problem dims, epilogue), keyed like the operand cache — of
+//! **specialized compute walks**: unrolled tile loops, baked strides and
+//! padded dims, and fused bias/ReLU epilogues, generated at runtime from
+//! the same manifest geometry the generic walk reads.
+//!
+//! Three pieces:
+//!
+//! * [`plan`] — the specializer: [`KernelPlan`] bakes one key's loop
+//!   schedule and per-step cycle charges from the shared
+//!   [`crate::cost::tile`] specialized-walk formulas, so the execution
+//!   charges and the cost model's estimates can never drift;
+//! * [`registry`] — [`KernelRegistry`]: the promotion policy (the
+//!   scheduler's per-key launch counts cross `[kernel] promote_after`
+//!   and the next stage specializes the key), the bounded LRU over
+//!   resident plans (`max_entries`, pinned in-flight entries are never
+//!   evicted), and the counters/events the serve ops surface;
+//! * the walks themselves live in `blas::device`, which consults the
+//!   registry at stage time for single gemms, batches and chains alike —
+//!   a specialized walk issues the *exact same* kernel executions in the
+//!   same order on the same padded data, so it is bit-identical to the
+//!   generic interpreted walk by construction (checksum-pinned in
+//!   `rust/tests/integration_kernel.rs`); only the virtual-time charges
+//!   differ.
+
+pub mod plan;
+pub mod registry;
+
+pub use plan::{kernel_key, Epilogue, KernelOp, KernelPlan};
+pub use registry::{KernelEvent, KernelRegistry, KernelStats};
+
+/// GEMM edge lengths specialized at pool boot when `[kernel] prewarm`
+/// is on.  MUST match `DEFAULT_GEMM_SIZES` in `python/compile/aot.py`
+/// (pinned by `python/tests/test_aot.py`).
+pub const PREWARM_GEMM_SIZES: [usize; 5] = [16, 32, 64, 128, 256];
+
+/// GEMV sizes specialized at pool boot.  MUST match
+/// `DEFAULT_GEMV_SIZES` in `python/compile/aot.py` (pinned by
+/// `python/tests/test_aot.py`).
+pub const PREWARM_GEMV_SIZES: [usize; 2] = [128, 256];

@@ -1,0 +1,322 @@
+//! The specializer: bake one hot key's walk into a [`KernelPlan`].
+//!
+//! A plan is the "compiled" form of one (op, dtype, tile shape, padded
+//! problem dims, epilogue) key: the grid a walk will cover and the
+//! per-step virtual-time charges of the specialized schedule — unrolled
+//! tile loops (the per-tile interpreter overhead folds out of the FPU
+//! burst, see [`tile::SPECIALIZED_FPU_GAIN`]) and the epilogue fused
+//! into the C write-back pass instead of a separate stream pass.  The
+//! charges come from the shared [`crate::cost::tile`] specialized-walk
+//! formulas — the same functions [`crate::cost::CostModel`] sums when
+//! estimating, so execution and estimation cannot drift.
+//!
+//! Plans carry **no numerics**: `blas::device` drives the identical
+//! kernel executions either way and consults the plan only for the
+//! charge schedule, which is what makes the fast path bit-identical to
+//! the generic interpreted walk by construction.
+
+use crate::cost::tile::{
+    self, specialized_gemm_tile_costs, specialized_gemv_panel_costs,
+    specialized_level1_chunk_costs,
+};
+use crate::omp::opcache::fnv1a;
+use crate::soc::clock::Cycles;
+use crate::soc::{DmaModel, SnitchCluster};
+
+/// Op families the registry specializes (serve-protocol names).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelOp {
+    Gemm,
+    Gemv,
+    Axpy,
+    Dot,
+}
+
+impl KernelOp {
+    /// Key-encoding tag.
+    pub fn tag(self) -> u8 {
+        match self {
+            KernelOp::Gemm => 0,
+            KernelOp::Gemv => 1,
+            KernelOp::Axpy => 2,
+            KernelOp::Dot => 3,
+        }
+    }
+
+    /// Serve-protocol op name.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelOp::Gemm => "gemm",
+            KernelOp::Gemv => "gemv",
+            KernelOp::Axpy => "axpy",
+            KernelOp::Dot => "dot",
+        }
+    }
+
+    /// Family of a serve-protocol op name.
+    pub fn from_name(op: &str) -> Option<KernelOp> {
+        match op {
+            "gemm" => Some(KernelOp::Gemm),
+            "gemv" => Some(KernelOp::Gemv),
+            "axpy" => Some(KernelOp::Axpy),
+            "dot" => Some(KernelOp::Dot),
+            _ => None,
+        }
+    }
+}
+
+/// Fused epilogue variant baked into a specialized walk — the chain
+/// epilogues that already exist in `blas::device::chain_epilogue`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Epilogue {
+    None,
+    Bias,
+    Relu,
+    BiasRelu,
+}
+
+impl Epilogue {
+    /// Variant for a chain link's (bias?, relu?) pair.
+    pub fn of(bias: bool, relu: bool) -> Epilogue {
+        match (bias, relu) {
+            (false, false) => Epilogue::None,
+            (true, false) => Epilogue::Bias,
+            (false, true) => Epilogue::Relu,
+            (true, true) => Epilogue::BiasRelu,
+        }
+    }
+
+    /// Key-encoding tag.
+    pub fn tag(self) -> u8 {
+        match self {
+            Epilogue::None => 0,
+            Epilogue::Bias => 1,
+            Epilogue::Relu => 2,
+            Epilogue::BiasRelu => 3,
+        }
+    }
+
+    /// Does the walk carry a fused element-wise pass?
+    pub fn is_fused(self) -> bool {
+        self != Epilogue::None
+    }
+}
+
+/// Content key of one specializable walk: 64-bit FNV-1a over the
+/// (op, dtype, tile shape, padded problem dims, epilogue) tuple —
+/// the same hash the operand cache keys staged bytes with.
+pub fn kernel_key(
+    op: KernelOp,
+    dtype: &str,
+    tile: (usize, usize, usize),
+    padded: (usize, usize, usize),
+    epi: Epilogue,
+) -> u64 {
+    let mut buf = Vec::with_capacity(64);
+    buf.push(op.tag());
+    buf.extend_from_slice(dtype.as_bytes());
+    for d in [tile.0, tile.1, tile.2, padded.0, padded.1, padded.2] {
+        buf.extend_from_slice(&(d as u64).to_le_bytes());
+    }
+    buf.push(epi.tag());
+    fnv1a(&buf)
+}
+
+/// One specialized compute walk: the baked loop schedule and per-step
+/// charges for a single hot key.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelPlan {
+    pub key: u64,
+    pub op: KernelOp,
+    pub dtype: String,
+    /// Manifest tile geometry the walk was specialized against (the
+    /// level-1 chunk length rides in `.0` for axpy/dot).
+    pub tile: (usize, usize, usize),
+    /// Padded problem dims (baked — a plan serves exactly one shape).
+    pub padded: (usize, usize, usize),
+    /// Tile/panel/chunk grid the walk covers.
+    pub grid: (usize, usize, usize),
+    pub epilogue: Epilogue,
+    /// Exposed first step of a walk (DMA refill + FPU serialized).
+    pub first_step: Cycles,
+    /// Steady double-buffered step (max of refill and burst).
+    pub steady_step: Cycles,
+    /// C-tile map-in charge when beta != 0 (gemm only).
+    pub c_in: Cycles,
+    /// Fused epilogue + C write-back pass (gemm only; gemv/level-1
+    /// outputs ride the panel/chunk step, exactly like the generic
+    /// walk).
+    pub c_pass: Cycles,
+}
+
+impl KernelPlan {
+    /// Specialize one key from the same SoC models and manifest
+    /// geometry the generic walk reads.  `tile` is the manifest tile
+    /// shape (for level-1: `(chunk, 0, 0)`); `padded` the tile-padded
+    /// problem dims (gemm `(mp, np, kp)`, gemv `(mp, np, 0)`, level-1
+    /// `(chunk-padded n, 0, 0)`).
+    pub fn specialize(
+        dma: &DmaModel,
+        cluster: &SnitchCluster,
+        op: KernelOp,
+        dtype: &str,
+        tile: (usize, usize, usize),
+        padded: (usize, usize, usize),
+        epi: Epilogue,
+    ) -> KernelPlan {
+        let key = kernel_key(op, dtype, tile, padded, epi);
+        let f32_path = dtype == "f32";
+        let esz = if f32_path { 4 } else { 8 };
+        let (first_step, steady_step, c_in, c_pass, grid) = match op {
+            KernelOp::Gemm => {
+                let s = specialized_gemm_tile_costs(dma, cluster, tile, esz, f32_path);
+                // a fused bias/ReLU pass rides the same C write-back
+                // streaming window the alpha/beta epilogue does: no
+                // extra charge, the pass is bounded by max(stream, DMA)
+                (
+                    s.dma_ab + s.fpu,
+                    s.dma_ab.max(s.fpu),
+                    s.dma_c,
+                    s.c_pass,
+                    (padded.0 / tile.0, padded.1 / tile.1, padded.2 / tile.2),
+                )
+            }
+            KernelOp::Gemv => {
+                let p = specialized_gemv_panel_costs(
+                    dma,
+                    cluster,
+                    (tile.0, tile.2),
+                    esz,
+                    f32_path,
+                );
+                let step = p.dma_panel.max(p.fpu);
+                (
+                    step,
+                    step,
+                    Cycles::ZERO,
+                    Cycles::ZERO,
+                    (padded.0 / tile.0, padded.1 / tile.2, 0),
+                )
+            }
+            KernelOp::Axpy | KernelOp::Dot => {
+                let c = specialized_level1_chunk_costs(dma, cluster, tile.0);
+                let step = c.dma.max(c.fpu) + c.dma;
+                (
+                    step,
+                    step,
+                    Cycles::ZERO,
+                    Cycles::ZERO,
+                    (padded.0.div_ceil(tile.0.max(1)), 0, 0),
+                )
+            }
+        };
+        KernelPlan {
+            key,
+            op,
+            dtype: dtype.to_string(),
+            tile,
+            padded,
+            grid,
+            epilogue: epi,
+            first_step,
+            steady_step,
+            c_in,
+            c_pass,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+    use crate::cost::tile::gemm_tile_costs;
+
+    fn models() -> (DmaModel, SnitchCluster) {
+        let cfg = PlatformConfig::default();
+        (
+            DmaModel::new(cfg.dma.clone()),
+            SnitchCluster::new(cfg.cluster.clone(), cfg.memory.l1_spm_bytes),
+        )
+    }
+
+    #[test]
+    fn keys_separate_every_tuple_component() {
+        let tile = (64, 64, 64);
+        let base = kernel_key(KernelOp::Gemm, "f64", tile, (128, 128, 128), Epilogue::None);
+        assert_eq!(
+            base,
+            kernel_key(KernelOp::Gemm, "f64", tile, (128, 128, 128), Epilogue::None)
+        );
+        for other in [
+            kernel_key(KernelOp::Gemv, "f64", tile, (128, 128, 128), Epilogue::None),
+            kernel_key(KernelOp::Gemm, "f32", tile, (128, 128, 128), Epilogue::None),
+            kernel_key(KernelOp::Gemm, "f64", (32, 32, 32), (128, 128, 128), Epilogue::None),
+            kernel_key(KernelOp::Gemm, "f64", tile, (128, 128, 192), Epilogue::None),
+            kernel_key(KernelOp::Gemm, "f64", tile, (128, 128, 128), Epilogue::BiasRelu),
+        ] {
+            assert_ne!(base, other);
+        }
+    }
+
+    #[test]
+    fn epilogue_variants_cover_the_flag_pairs() {
+        assert_eq!(Epilogue::of(false, false), Epilogue::None);
+        assert_eq!(Epilogue::of(true, false), Epilogue::Bias);
+        assert_eq!(Epilogue::of(false, true), Epilogue::Relu);
+        assert_eq!(Epilogue::of(true, true), Epilogue::BiasRelu);
+        assert!(!Epilogue::None.is_fused());
+        assert!(Epilogue::BiasRelu.is_fused());
+        assert_eq!(KernelOp::from_name("gemm"), Some(KernelOp::Gemm));
+        assert_eq!(KernelOp::from_name("fence"), None);
+        assert_eq!(KernelOp::Dot.name(), "dot");
+    }
+
+    #[test]
+    fn specialized_gemm_plan_undercuts_the_generic_charges() {
+        let (dma, cluster) = models();
+        let tile = (64, 64, 64);
+        let p = KernelPlan::specialize(
+            &dma,
+            &cluster,
+            KernelOp::Gemm,
+            "f64",
+            tile,
+            (128, 128, 192),
+            Epilogue::None,
+        );
+        assert_eq!(p.grid, (2, 2, 3));
+        let g = gemm_tile_costs(&dma, &cluster, tile, 8, false);
+        assert!(p.first_step < g.dma_ab + g.fpu);
+        assert!(p.steady_step <= g.dma_ab.max(g.fpu));
+        assert!(p.c_pass < g.epilogue + g.dma_c, "epilogue must fuse into the C pass");
+        assert_eq!(p.c_in, g.dma_c);
+    }
+
+    #[test]
+    fn gemv_and_level1_plans_shape_their_grids() {
+        let (dma, cluster) = models();
+        let v = KernelPlan::specialize(
+            &dma,
+            &cluster,
+            KernelOp::Gemv,
+            "f64",
+            (64, 64, 64),
+            (256, 128, 0),
+            Epilogue::None,
+        );
+        assert_eq!(v.grid, (4, 2, 0));
+        assert_eq!(v.c_pass, Cycles::ZERO);
+        let l = KernelPlan::specialize(
+            &dma,
+            &cluster,
+            KernelOp::Axpy,
+            "f64",
+            (4096, 0, 0),
+            (12288, 0, 0),
+            Epilogue::None,
+        );
+        assert_eq!(l.grid, (3, 0, 0));
+        assert_eq!(l.first_step, l.steady_step);
+    }
+}

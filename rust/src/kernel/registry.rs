@@ -1,0 +1,535 @@
+//! The registry: promotion policy + bounded LRU over specialized plans.
+//!
+//! Launch counts arrive from the scheduler's per-key outcome stream
+//! ([`KernelRegistry::note_launch`]); once a key crosses
+//! `[kernel] promote_after`, the next stage that sees it
+//! ([`KernelRegistry::wants_specialize`]) builds its plan from the
+//! resolved geometry and inserts it.  Resident plans are LRU-bounded by
+//! `[kernel] max_entries` so a shape-diverse adversarial stream cannot
+//! grow the registry without bound; entries pinned by an in-flight walk
+//! are never evicted (the opcache pin/stamp idiom).  The launch-count
+//! map is bounded too — coldest-count eviction at a small multiple of
+//! `max_entries`.
+//!
+//! Counter totals ride atomics (scraped by the serve `metrics`/`top`
+//! ops and the Prometheus exposition); individual transitions fire the
+//! installed event hook, which the scheduler bridges into the flight
+//! recorder so promotions and fast-path hits show up in `trace_dump`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::KernelConfig;
+use crate::cost::tile::round_up;
+use crate::soc::{DmaModel, SnitchCluster};
+
+use super::plan::{kernel_key, Epilogue, KernelOp, KernelPlan};
+use super::{PREWARM_GEMM_SIZES, PREWARM_GEMV_SIZES};
+
+/// Point-in-time registry statistics (accumulated since construction).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct KernelStats {
+    /// Plans compiled (promotions + prewarms).
+    pub specialized: u64,
+    /// Launches that took a specialized fast-path walk.
+    pub hits: u64,
+    /// Launches that ran the generic interpreted walk with the
+    /// registry enabled.
+    pub fallbacks: u64,
+    /// Plans reclaimed by the LRU bound.
+    pub evictions: u64,
+    /// Resident plans right now.
+    pub entries: usize,
+    /// Keys with tracked launch counts right now.
+    pub tracked_keys: usize,
+}
+
+/// One observable registry transition, delivered synchronously to the
+/// installed hook (the flight-recorder bridge — same shape as the
+/// operand cache's `CacheEvent`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelEvent {
+    /// A key crossed `promote_after` and its plan entered the registry.
+    Promote { key: u64, launches: u32 },
+    /// A launch took the specialized fast path.
+    Hit { key: u64 },
+}
+
+/// Boxed observer with a hand-written `Debug` so the registry keeps its
+/// derived `Debug` (closures have none).
+struct EventHook(Box<dyn Fn(KernelEvent) + Send + Sync>);
+
+impl std::fmt::Debug for EventHook {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("EventHook(..)")
+    }
+}
+
+/// One resident specialized plan.
+#[derive(Debug)]
+struct Entry {
+    plan: Arc<KernelPlan>,
+    /// In-flight walks currently executing against this plan (one pin
+    /// per acquire); pinned entries are never evicted.
+    pins: u32,
+    /// Monotone LRU stamp (bumped on every acquire / insert).
+    stamp: u64,
+    hits: u64,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    entries: HashMap<u64, Entry>,
+    /// Per-key launch counts (the promotion feed).
+    launches: HashMap<u64, u32>,
+    clock: u64,
+    hook: Option<EventHook>,
+}
+
+/// The shape-specialized kernel registry.  Shared across the whole pool
+/// via `Arc` — like the cost model's calibration, one registry learns
+/// the hot keys of all workers.
+#[derive(Debug)]
+pub struct KernelRegistry {
+    enabled: bool,
+    promote_after: u32,
+    max_entries: usize,
+    /// Manifest tile geometry (pads exactly like the staging path).
+    tile: (usize, usize, usize),
+    /// Largest level-1 artifact length (the device chunk size).
+    level1_chunk: usize,
+    inner: Mutex<Inner>,
+    specialized: AtomicU64,
+    hits: AtomicU64,
+    fallbacks: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl KernelRegistry {
+    /// Build from the `[kernel]` config plus the manifest-derived
+    /// geometry (tile shape, largest level-1 artifact).
+    pub fn new(
+        cfg: &KernelConfig,
+        tile: (usize, usize, usize),
+        level1_chunk: usize,
+    ) -> KernelRegistry {
+        KernelRegistry {
+            enabled: cfg.enabled,
+            promote_after: cfg.promote_after,
+            max_entries: cfg.max_entries as usize,
+            tile,
+            level1_chunk: level1_chunk.max(1),
+            inner: Mutex::new(Inner::default()),
+            specialized: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            fallbacks: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn promote_after(&self) -> u32 {
+        self.promote_after
+    }
+
+    /// Install the transition observer (replaces any previous one).
+    /// Events fire synchronously from the mutating call, so the hook
+    /// must be cheap and reentrancy-free — the flight recorder's
+    /// lock-free append qualifies.
+    pub fn set_event_hook(
+        &self,
+        hook: impl Fn(KernelEvent) + Send + Sync + 'static,
+    ) {
+        self.inner.lock().unwrap().hook = Some(EventHook(Box::new(hook)));
+    }
+
+    /// The key a serve-protocol (op, dtype, dims, epilogue) tuple
+    /// specializes under — pads with the same manifest tile geometry
+    /// the staging path uses, so the scheduler's launch-count feed and
+    /// the device's stage-time lookup agree byte for byte.  Dims follow
+    /// the serve convention: gemm `(m, n, k)`, gemv `(m, n, _)`,
+    /// axpy/dot `(n, _, _)`.
+    pub fn key_for(
+        &self,
+        op: &str,
+        dtype: &str,
+        dims: (usize, usize, usize),
+        epi: Epilogue,
+    ) -> Option<u64> {
+        let kop = KernelOp::from_name(op)?;
+        let (tm, tn, tk) = self.tile;
+        let (tile, padded) = match kop {
+            KernelOp::Gemm => (
+                self.tile,
+                (round_up(dims.0, tm), round_up(dims.1, tn), round_up(dims.2, tk)),
+            ),
+            KernelOp::Gemv => {
+                (self.tile, (round_up(dims.0, tm), round_up(dims.1, tk), 0))
+            }
+            KernelOp::Axpy | KernelOp::Dot => (
+                (self.level1_chunk, 0, 0),
+                (round_up(dims.0, self.level1_chunk), 0, 0),
+            ),
+        };
+        Some(kernel_key(kop, dtype, tile, padded, epi))
+    }
+
+    /// Launch-count feed (the worker's outcome stream): bump the key's
+    /// count.  The map is bounded — at capacity the coldest tracked key
+    /// makes room — so untracked shape churn cannot grow it.
+    pub fn note_launch(&self, key: u64) {
+        if !self.enabled {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        let cap = self.max_entries.saturating_mul(8).max(64);
+        if g.launches.len() >= cap && !g.launches.contains_key(&key) {
+            if let Some(cold) =
+                g.launches.iter().min_by_key(|(_, &c)| c).map(|(&k, _)| k)
+            {
+                g.launches.remove(&cold);
+            }
+        }
+        let c = g.launches.entry(key).or_insert(0);
+        *c = c.saturating_add(1);
+    }
+
+    /// Has this key crossed the promotion threshold without a resident
+    /// plan?  The stage that sees `true` builds the plan from its
+    /// resolved geometry and [`KernelRegistry::insert`]s it.
+    pub fn wants_specialize(&self, key: u64) -> bool {
+        if !self.enabled {
+            return false;
+        }
+        let g = self.inner.lock().unwrap();
+        !g.entries.contains_key(&key)
+            && g.launches.get(&key).copied().unwrap_or(0) >= self.promote_after
+    }
+
+    /// Is a specialized plan resident (no pin, no counter)?  The
+    /// dispatch policy asks this to pick the specialized crossover.
+    pub fn has_plan(&self, key: u64) -> bool {
+        self.enabled && self.inner.lock().unwrap().entries.contains_key(&key)
+    }
+
+    /// Fast-path lookup at walk time: pins the entry for the duration
+    /// of the in-flight walk (pair with [`KernelRegistry::release`]),
+    /// bumps the LRU stamp and counts a hit.
+    pub fn acquire(&self, key: u64) -> Option<Arc<KernelPlan>> {
+        if !self.enabled {
+            return None;
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let stamp = g.clock;
+        let plan = {
+            let e = g.entries.get_mut(&key)?;
+            e.pins += 1;
+            e.stamp = stamp;
+            e.hits += 1;
+            e.plan.clone()
+        };
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        if let Some(h) = &g.hook {
+            (h.0)(KernelEvent::Hit { key });
+        }
+        Some(plan)
+    }
+
+    /// Drop one in-flight pin.
+    pub fn release(&self, key: u64) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(e) = g.entries.get_mut(&key) {
+            e.pins = e.pins.saturating_sub(1);
+        }
+    }
+
+    /// Count a generic-walk launch taken while the registry is enabled
+    /// (no resident plan for the key — the always-correct fallback).
+    pub fn note_fallback(&self) {
+        if self.enabled {
+            self.fallbacks.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Insert a freshly specialized plan (promotion or prewarm).
+    /// LRU-evicts an unpinned entry when full; refuses — `false`, the
+    /// caller stays on the generic walk — when every resident entry is
+    /// pinned by an in-flight walk.
+    pub fn insert(&self, plan: KernelPlan) -> bool {
+        if !self.enabled {
+            return false;
+        }
+        let mut g = self.inner.lock().unwrap();
+        if g.entries.contains_key(&plan.key) {
+            return true; // racing promotion of the same key
+        }
+        while g.entries.len() >= self.max_entries {
+            let victim = g
+                .entries
+                .iter()
+                .filter(|(_, e)| e.pins == 0)
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(&k, _)| k);
+            match victim {
+                Some(k) => {
+                    g.entries.remove(&k);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                None => return false,
+            }
+        }
+        g.clock += 1;
+        let stamp = g.clock;
+        let key = plan.key;
+        let launches = g.launches.get(&key).copied().unwrap_or(0);
+        g.entries.insert(
+            key,
+            Entry { plan: Arc::new(plan), pins: 0, stamp, hits: 0 },
+        );
+        self.specialized.fetch_add(1, Ordering::Relaxed);
+        if let Some(h) = &g.hook {
+            (h.0)(KernelEvent::Promote { key, launches });
+        }
+        true
+    }
+
+    /// Explicit eviction; refused (`false`) while the entry is pinned
+    /// by an in-flight walk.
+    pub fn evict(&self, key: u64) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        match g.entries.get(&key) {
+            Some(e) if e.pins == 0 => {
+                g.entries.remove(&key);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Point-in-time statistics.
+    pub fn stats(&self) -> KernelStats {
+        let g = self.inner.lock().unwrap();
+        KernelStats {
+            specialized: self.specialized.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            fallbacks: self.fallbacks.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: g.entries.len(),
+            tracked_keys: g.launches.len(),
+        }
+    }
+
+    /// Hottest tracked keys by launch count:
+    /// `(key, launches, specialized?)`, hottest first — the per-key
+    /// view the serve `top` op prints.
+    pub fn top_keys(&self, n: usize) -> Vec<(u64, u32, bool)> {
+        let g = self.inner.lock().unwrap();
+        let mut v: Vec<(u64, u32, bool)> = g
+            .launches
+            .iter()
+            .map(|(&k, &c)| (k, c, g.entries.contains_key(&k)))
+            .collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v.truncate(n);
+        v
+    }
+
+    /// Pre-specialize the `aot.py` size tables (`[kernel] prewarm`):
+    /// every (op, dtype, size) in [`PREWARM_GEMM_SIZES`] /
+    /// [`PREWARM_GEMV_SIZES`] gets a plan at pool boot, so the paper's
+    /// Figure-3 shapes take the fast path from the first launch.
+    /// Returns the number of plans inserted.
+    pub fn prewarm(&self, dma: &DmaModel, cluster: &SnitchCluster) -> usize {
+        if !self.enabled {
+            return 0;
+        }
+        let (tm, tn, tk) = self.tile;
+        let mut inserted = 0;
+        for dtype in ["f32", "f64"] {
+            for &n in &PREWARM_GEMM_SIZES {
+                let padded = (round_up(n, tm), round_up(n, tn), round_up(n, tk));
+                let plan = KernelPlan::specialize(
+                    dma,
+                    cluster,
+                    KernelOp::Gemm,
+                    dtype,
+                    self.tile,
+                    padded,
+                    Epilogue::None,
+                );
+                if self.insert(plan) {
+                    inserted += 1;
+                }
+            }
+            for &n in &PREWARM_GEMV_SIZES {
+                let padded = (round_up(n, tm), round_up(n, tk), 0);
+                let plan = KernelPlan::specialize(
+                    dma,
+                    cluster,
+                    KernelOp::Gemv,
+                    dtype,
+                    self.tile,
+                    padded,
+                    Epilogue::None,
+                );
+                if self.insert(plan) {
+                    inserted += 1;
+                }
+            }
+        }
+        inserted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+
+    fn cfg(promote_after: u32, max_entries: u32) -> KernelConfig {
+        KernelConfig { enabled: true, promote_after, max_entries, prewarm: false }
+    }
+
+    fn registry(promote_after: u32, max_entries: u32) -> KernelRegistry {
+        KernelRegistry::new(&cfg(promote_after, max_entries), (64, 64, 64), 4096)
+    }
+
+    fn plan_for(reg: &KernelRegistry, n: usize) -> KernelPlan {
+        let pc = PlatformConfig::default();
+        let dma = DmaModel::new(pc.dma.clone());
+        let cluster = SnitchCluster::new(pc.cluster.clone(), pc.memory.l1_spm_bytes);
+        KernelPlan::specialize(
+            &dma,
+            &cluster,
+            KernelOp::Gemm,
+            "f64",
+            (64, 64, 64),
+            (round_up(n, 64), round_up(n, 64), round_up(n, 64)),
+            Epilogue::None,
+        )
+    }
+
+    #[test]
+    fn promotion_under_the_threshold_never_fires() {
+        let reg = registry(4, 8);
+        let key = reg.key_for("gemm", "f64", (128, 128, 128), Epilogue::None).unwrap();
+        for _ in 0..3 {
+            reg.note_launch(key);
+            assert!(!reg.wants_specialize(key), "under threshold");
+        }
+        reg.note_launch(key);
+        assert!(reg.wants_specialize(key), "threshold crossed");
+        assert!(reg.insert(plan_for(&reg, 128)));
+        assert!(!reg.wants_specialize(key), "already resident");
+        assert!(reg.has_plan(key));
+    }
+
+    #[test]
+    fn eviction_of_a_pinned_in_flight_kernel_is_refused() {
+        let reg = registry(1, 8);
+        let plan = plan_for(&reg, 128);
+        let key = plan.key;
+        assert!(reg.insert(plan));
+        let held = reg.acquire(key).expect("resident plan");
+        assert_eq!(held.padded, (128, 128, 128));
+        assert!(!reg.evict(key), "pinned entry must not evict");
+        reg.release(key);
+        assert!(reg.evict(key), "unpinned entry evicts");
+        assert!(!reg.has_plan(key));
+        assert_eq!(reg.stats().evictions, 1);
+    }
+
+    #[test]
+    fn lru_bounds_resident_plans_and_insert_refuses_when_all_pinned() {
+        let reg = registry(1, 2);
+        let (p1, p2, p3) = (plan_for(&reg, 64), plan_for(&reg, 128), plan_for(&reg, 256));
+        let (k1, k2) = (p1.key, p2.key);
+        assert!(reg.insert(p1));
+        assert!(reg.insert(p2));
+        // touch k2 so k1 is the LRU victim
+        reg.acquire(k2).unwrap();
+        reg.release(k2);
+        assert!(reg.insert(p3));
+        assert_eq!(reg.stats().entries, 2);
+        assert!(!reg.has_plan(k1), "LRU victim was the stale key");
+        assert!(reg.has_plan(k2));
+        // with every resident entry pinned, insertion is refused
+        reg.acquire(k2).unwrap();
+        let p3b = plan_for(&reg, 256);
+        reg.acquire(p3b.key).unwrap();
+        assert!(!reg.insert(plan_for(&reg, 64)), "all pinned: refuse");
+    }
+
+    #[test]
+    fn launch_count_map_is_bounded_against_shape_churn() {
+        let reg = registry(2, 4); // cap = max(4*8, 64) = 64
+        for n in 0..1000usize {
+            let key = reg
+                .key_for("gemm", "f64", (64 * (n + 1), 64, 64), Epilogue::None)
+                .unwrap();
+            reg.note_launch(key);
+        }
+        assert!(reg.stats().tracked_keys <= 64, "launch map must stay bounded");
+    }
+
+    #[test]
+    fn disabled_registry_is_inert() {
+        let mut c = cfg(1, 8);
+        c.enabled = false;
+        let reg = KernelRegistry::new(&c, (64, 64, 64), 4096);
+        let key = reg.key_for("gemm", "f64", (128, 128, 128), Epilogue::None).unwrap();
+        reg.note_launch(key);
+        assert!(!reg.wants_specialize(key));
+        assert!(!reg.insert(plan_for(&reg, 128)));
+        assert!(reg.acquire(key).is_none());
+        reg.note_fallback();
+        let s = reg.stats();
+        assert_eq!((s.specialized, s.hits, s.fallbacks, s.tracked_keys), (0, 0, 0, 0));
+    }
+
+    #[test]
+    fn prewarm_specializes_the_aot_size_tables() {
+        let reg = registry(1, 64);
+        let pc = PlatformConfig::default();
+        let dma = DmaModel::new(pc.dma.clone());
+        let cluster = SnitchCluster::new(pc.cluster.clone(), pc.memory.l1_spm_bytes);
+        let want = 2 * (PREWARM_GEMM_SIZES.len() + PREWARM_GEMV_SIZES.len());
+        assert_eq!(reg.prewarm(&dma, &cluster), want);
+        assert_eq!(reg.stats().entries, want);
+        // the prewarmed gemm keys answer stage-time lookups
+        let key = reg.key_for("gemm", "f64", (128, 128, 128), Epilogue::None).unwrap();
+        assert!(reg.has_plan(key));
+        let key32 = reg.key_for("gemv", "f32", (256, 256, 0), Epilogue::None).unwrap();
+        assert!(reg.has_plan(key32));
+    }
+
+    #[test]
+    fn top_keys_rank_by_launch_count_and_hits_fire_events() {
+        let reg = registry(2, 8);
+        let hot = reg.key_for("gemm", "f64", (128, 128, 128), Epilogue::None).unwrap();
+        let cold = reg.key_for("gemv", "f64", (128, 128, 0), Epilogue::None).unwrap();
+        let events = Arc::new(Mutex::new(Vec::new()));
+        let sink = events.clone();
+        reg.set_event_hook(move |ev| sink.lock().unwrap().push(ev));
+        for _ in 0..3 {
+            reg.note_launch(hot);
+        }
+        reg.note_launch(cold);
+        let top = reg.top_keys(8);
+        assert_eq!(top[0], (hot, 3, false));
+        assert_eq!(top[1], (cold, 1, false));
+        assert!(reg.insert(plan_for(&reg, 128)));
+        reg.acquire(hot).unwrap();
+        reg.release(hot);
+        let evs = events.lock().unwrap();
+        assert_eq!(evs[0], KernelEvent::Promote { key: hot, launches: 3 });
+        assert_eq!(evs[1], KernelEvent::Hit { key: hot });
+        assert_eq!(reg.top_keys(8)[0], (hot, 3, true));
+    }
+}

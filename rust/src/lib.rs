@@ -32,6 +32,7 @@ pub mod cost;
 pub mod error;
 pub mod harness;
 pub mod hero;
+pub mod kernel;
 pub mod metrics;
 pub mod npy;
 pub mod omp;

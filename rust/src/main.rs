@@ -38,7 +38,9 @@ fn usage() -> String {
              [--batch-max N] [--cache-frac F] [--cache-max-entries N]\n\
              [--pipeline-depth N] [--no-affinity] [--no-steal]\n\
              [--big-shape-frac F] [--reply-timeout-ms N]\n\
-             [--no-trace] [--trace-ring N] [--watch-interval-ms N]\n"
+             [--no-trace] [--trace-ring N] [--watch-interval-ms N]\n\
+             [--no-kernel] [--kernel-promote-after N]\n\
+             [--kernel-max-entries N] [--kernel-prewarm]\n"
         .to_string()
 }
 
@@ -314,6 +316,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // serving-layer knob ([serve]): reply-channel wait before cancelling
     if let Some(v) = num("--reply-timeout-ms")? {
         cfg.serve.reply_timeout_ms = v;
+    }
+    // kernel-registry knobs ([kernel]): shape-specialized fast paths
+    if has_flag(&args.rest, "--no-kernel") {
+        cfg.kernel.enabled = false;
+    }
+    if let Some(v) = num("--kernel-promote-after")? {
+        cfg.kernel.promote_after = narrow("--kernel-promote-after", v)?;
+    }
+    if let Some(v) = num("--kernel-max-entries")? {
+        cfg.kernel.max_entries = narrow("--kernel-max-entries", v)?;
+    }
+    if has_flag(&args.rest, "--kernel-prewarm") {
+        cfg.kernel.prewarm = true;
     }
     cfg.validate()?;
     let dir = artifacts_dir(args)?;

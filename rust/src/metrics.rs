@@ -502,6 +502,13 @@ impl SchedCounters {
             host_fallbacks: ld(&self.host_fallbacks),
             cache_invalidated_bytes: ld(&self.cache_invalidated_bytes),
             pin_leaks: ld(&self.pin_leaks),
+            // the kernel registry keeps its own counters; the scheduler
+            // overlays them on this snapshot (see `Scheduler::metrics`)
+            kernel_specialized: 0,
+            kernel_hits: 0,
+            kernel_fallbacks: 0,
+            kernel_evictions: 0,
+            kernel_entries: 0,
             latency: [
                 OpClassLatency::from_hist(&latency[0]),
                 OpClassLatency::from_hist(&latency[1]),
@@ -610,6 +617,18 @@ pub struct SchedMetrics {
     pub host_fallbacks: u64,
     pub cache_invalidated_bytes: u64,
     pub pin_leaks: u64,
+    /// Specialized kernel plans compiled (promotions + prewarm inserts)
+    /// across the pool-shared kernel registry.
+    pub kernel_specialized: u64,
+    /// Device walks that took a specialized fast-path plan.
+    pub kernel_hits: u64,
+    /// Device walks that ran the generic interpreted walk while the
+    /// registry was enabled (no resident plan for their key).
+    pub kernel_fallbacks: u64,
+    /// Specialized plans LRU-evicted or explicitly dropped.
+    pub kernel_evictions: u64,
+    /// Specialized plans currently resident (gauge).
+    pub kernel_entries: u64,
     /// Percentile latency per op class, indexed like [`OP_CLASSES`].
     pub latency: [OpClassLatency; 4],
     /// Percentiles over every op class merged.
@@ -635,7 +654,8 @@ impl SchedMetrics {
              cache_evictions={} to_dev={}B elided={}B stolen={} affine={} \
              big_shape={} prefetched={} rehomed={} chains={} chain_elided={}B \
              faults={} retries={} quarantined={} host_fallbacks={} \
-             cache_invalidated={}B pin_leaks={}",
+             cache_invalidated={}B pin_leaks={} kernel_specialized={} \
+             kernel_hits={} kernel_fallbacks={}",
             self.submitted,
             self.completed,
             self.rejected,
@@ -665,6 +685,9 @@ impl SchedMetrics {
             self.host_fallbacks,
             self.cache_invalidated_bytes,
             self.pin_leaks,
+            self.kernel_specialized,
+            self.kernel_hits,
+            self.kernel_fallbacks,
         )
     }
 }
@@ -714,7 +737,7 @@ pub fn prometheus_text(m: &SchedMetrics) -> String {
     use std::fmt::Write;
     let mut out = String::with_capacity(16 * 1024);
 
-    let counters: [(&str, &str, u64); 27] = [
+    let counters: [(&str, &str, u64); 31] = [
         ("hero_jobs_submitted_total", "Jobs accepted into the work queue.", m.submitted),
         ("hero_jobs_rejected_total", "Jobs rejected at submit (backpressure).", m.rejected),
         ("hero_jobs_completed_total", "Jobs completed and replied successfully.", m.completed),
@@ -742,6 +765,10 @@ pub fn prometheus_text(m: &SchedMetrics) -> String {
         ("hero_host_fallbacks_total", "Jobs degraded to the host BLAS path.", m.host_fallbacks),
         ("hero_cache_invalidated_bytes_total", "Cache bytes dropped on fault invalidation.", m.cache_invalidated_bytes),
         ("hero_pin_leaks_total", "Operand pins released by the leak sweeper.", m.pin_leaks),
+        ("hero_kernel_specialized_total", "Specialized kernel plans compiled.", m.kernel_specialized),
+        ("hero_kernel_hits_total", "Walks served by a specialized fast-path plan.", m.kernel_hits),
+        ("hero_kernel_fallbacks_total", "Walks on the generic path with the registry on.", m.kernel_fallbacks),
+        ("hero_kernel_evictions_total", "Specialized plans evicted from the registry.", m.kernel_evictions),
     ];
     for (name, help, v) in counters {
         prom_scalar(&mut out, name, "counter", help, v);
@@ -759,6 +786,13 @@ pub fn prometheus_text(m: &SchedMetrics) -> String {
         "gauge",
         "EWMA of per-job wall service time (microseconds).",
         m.service_us_ewma,
+    );
+    prom_scalar(
+        &mut out,
+        "hero_kernel_entries",
+        "gauge",
+        "Specialized kernel plans currently resident.",
+        m.kernel_entries,
     );
 
     let spans: [(&str, u64); 7] = [
@@ -1104,6 +1138,9 @@ mod tests {
         assert!(text.contains("hero_jobs_submitted_total 7"));
         assert!(text.contains("hero_cluster_inflight{cluster=\"1\"} 2"));
         assert!(text.contains("hero_span_us_total{stage=\"execute\"} 0"));
+        assert!(text.contains("# TYPE hero_kernel_hits_total counter"));
+        assert!(text.contains("hero_kernel_hits_total 0"));
+        assert!(text.contains("# TYPE hero_kernel_entries gauge"));
 
         // histogram series: terminal +Inf bucket equals _count, _sum is
         // the exact sample sum

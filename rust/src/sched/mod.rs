@@ -74,6 +74,7 @@ use std::time::Instant;
 use crate::config::{DispatchMode, PlatformConfig};
 use crate::cost::CostModel;
 use crate::error::{Error, Result};
+use crate::kernel::{KernelEvent, KernelRegistry};
 use crate::metrics::{SchedCounters, SchedMetrics};
 
 pub use batcher::{BatchKey, Batcher, JobSource};
@@ -405,6 +406,10 @@ pub struct Scheduler {
     /// The pool-shared flight recorder (`[sched.trace]`): every layer
     /// records into it, the serve `trace_dump` op reads it out.
     trace: Arc<TraceRecorder>,
+    /// The pool-shared kernel registry (`[kernel]`): workers feed per-key
+    /// launch counts in, every worker's device staging path consults it,
+    /// the serve `metrics`/`top` ops report it.
+    kernel: Arc<KernelRegistry>,
 }
 
 impl std::fmt::Debug for Scheduler {
@@ -436,6 +441,38 @@ impl Scheduler {
         // enqueues, the router stamps placement decisions, the workers
         // stamp batch stages / faults / per-request spans
         let trace = TraceRecorder::new(&sc.trace, sc.pool_clusters);
+        // ONE kernel registry for the whole pool, keyed on the same
+        // manifest tile geometry the staging path pads with (and the
+        // same level-1 chunk derivation as CostModel::from_manifest).
+        // Its promote/hit transitions land on the recorder's global
+        // track so trace_dump shows specialization next to the jobs
+        // that earned it.
+        let level1_chunk = manifest
+            .entries
+            .iter()
+            .filter(|e| (e.op == "axpy" || e.op == "dot") && e.dtype == "f64")
+            .filter_map(|e| e.n)
+            .max()
+            .unwrap_or(4096);
+        let kernel = Arc::new(KernelRegistry::new(
+            &cfg.kernel,
+            (manifest.tile_m, manifest.tile_n, manifest.tile_k),
+            level1_chunk,
+        ));
+        {
+            let tr = Arc::clone(&trace);
+            kernel.set_event_hook(move |e| match e {
+                KernelEvent::Promote { key, launches } => tr.instant(
+                    trace::GLOBAL_TRACK,
+                    EventKind::KernelPromote,
+                    key,
+                    launches as u64,
+                ),
+                KernelEvent::Hit { key } => {
+                    tr.instant(trace::GLOBAL_TRACK, EventKind::KernelHit, key, 0)
+                }
+            });
+        }
         let queue = Arc::new(
             WorkQueue::new(sc.queue_capacity as usize)
                 .with_trace(Arc::clone(&trace)),
@@ -472,6 +509,7 @@ impl Scheduler {
                 cost.clone(),
                 fault_plan.clone(),
                 Arc::clone(&trace),
+                Arc::clone(&kernel),
                 ready_tx.clone(),
             ));
         }
@@ -508,6 +546,7 @@ impl Scheduler {
             chain_max_links: sc.chain.max_links,
             cost,
             trace,
+            kernel,
         })
     }
 
@@ -623,6 +662,15 @@ impl Scheduler {
                 cm.queue_depth = d;
             }
         }
+        // the kernel registry keeps its own counters — overlay them so
+        // every consumer (serve metrics, Prometheus, summary) sees one
+        // coherent snapshot
+        let ks = self.kernel.stats();
+        m.kernel_specialized = ks.specialized;
+        m.kernel_hits = ks.hits;
+        m.kernel_fallbacks = ks.fallbacks;
+        m.kernel_evictions = ks.evictions;
+        m.kernel_entries = ks.entries as u64;
         m
     }
 
@@ -652,6 +700,12 @@ impl Scheduler {
     /// the tests read it; everything below the facade writes it).
     pub fn trace(&self) -> &Arc<TraceRecorder> {
         &self.trace
+    }
+
+    /// The pool-shared shape-specialized kernel registry (the serve
+    /// `metrics` and `top` ops report its counters and hot keys).
+    pub fn kernel_registry(&self) -> &Arc<KernelRegistry> {
+        &self.kernel
     }
 
     /// Every counter and histogram in Prometheus text exposition format

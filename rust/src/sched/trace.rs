@@ -95,6 +95,12 @@ pub enum EventKind {
     SpanStage = 23,
     SpanExecute = 24,
     SpanFinish = 25,
+    /// A hot (op, dtype, tile-shape) key crossed `[kernel]
+    /// promote_after` and its specialized plan entered the registry
+    /// (`a` = kernel key, `b` = launch count at promotion).
+    KernelPromote = 26,
+    /// A launch took a specialized fast-path walk (`a` = kernel key).
+    KernelHit = 27,
 }
 
 impl EventKind {
@@ -126,6 +132,8 @@ impl EventKind {
             23 => SpanStage,
             24 => SpanExecute,
             25 => SpanFinish,
+            26 => KernelPromote,
+            27 => KernelHit,
             _ => return None,
         })
     }
@@ -160,6 +168,8 @@ impl EventKind {
             SpanStage => "stage",
             SpanExecute => "execute",
             SpanFinish => "finish",
+            KernelPromote => "kernel-promote",
+            KernelHit => "kernel-hit",
         }
     }
 

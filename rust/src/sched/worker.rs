@@ -78,6 +78,7 @@ use crate::blas::{
 use crate::cost::CostModel;
 use crate::error::Result;
 use crate::hero::offload::OffloadKind;
+use crate::kernel::{Epilogue, KernelRegistry};
 use crate::metrics::{Metrics, SchedCounters};
 use crate::omp::opcache::CacheEvent;
 use crate::soc::clock::Cycles;
@@ -111,6 +112,7 @@ pub(crate) fn spawn(
     cost: CostModel,
     fault: FaultPlan,
     trace: Arc<TraceRecorder>,
+    kernel: Arc<KernelRegistry>,
     ready: mpsc::Sender<Result<()>>,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
@@ -118,7 +120,7 @@ pub(crate) fn spawn(
         .spawn(move || {
             run(
                 spec, artifacts, queue, router, counters, batcher, cost,
-                fault, trace, ready,
+                fault, trace, kernel, ready,
             )
         })
         .expect("spawn scheduler worker")
@@ -248,6 +250,7 @@ fn run(
     cost: CostModel,
     fault: FaultPlan,
     trace: Arc<TraceRecorder>,
+    kernel: Arc<KernelRegistry>,
     ready: mpsc::Sender<Result<()>>,
 ) {
     let mut blas = match boot_session(&spec, &artifacts) {
@@ -260,6 +263,18 @@ fn run(
     // swap the session's private model for the pool-shared one: every
     // worker's Auto dispatch reads (and calibrates) the same estimator
     blas.policy.model = Some(cost);
+    // attach the pool-shared kernel registry: device staging consults it
+    // for promoted fast-path plans, serve paths feed launch counts in
+    if kernel.enabled() && spec.cfg.kernel.prewarm && spec.id == 0 {
+        // one worker prewarms for the whole pool — the registry is
+        // shared and the AOT size tables are cluster-independent
+        // (each insert fires the Promote hook into the flight recorder)
+        let _ = kernel.prewarm(
+            &blas.engine.platform.dma,
+            &blas.engine.platform.cluster,
+        );
+    }
+    blas.policy.kernel = Some(Arc::clone(&kernel));
     // bridge the operand cache's transitions into the flight recorder —
     // the hook carries its own recorder handle and cluster id, so the
     // omp layer never learns about the scheduler
@@ -2042,9 +2057,59 @@ fn send_outcomes(
                 };
                 if device_total > 0 {
                     model.observe(op, dims, b, device_total, false, acct.warm_b);
+                    // a resident plan means the device walk took the
+                    // specialized charge schedule — fold the observed
+                    // timing into that kernel's own EWMA scale too, so
+                    // the model learns per-kernel FPU rates
+                    if let Some(reg) = &blas.policy.kernel {
+                        if let Some(key) =
+                            reg.key_for(op, "f64", dims, Epilogue::None)
+                        {
+                            if reg.has_plan(key) {
+                                model
+                                    .observe_kernel(key, op, dims, b, device_total);
+                            }
+                        }
+                    }
                 }
                 if acct.host_compute > 0 {
                     model.observe(op, dims, b, acct.host_compute, true, false);
+                }
+            }
+        }
+    }
+
+    // ---- kernel-registry launch feed: every completed member bumps
+    // its (op, dtype, tile-shape) key — after `[kernel] promote_after`
+    // of these, the next device staging compiles the specialized walk.
+    // Host-served launches count too: a hot shape below the generic
+    // crossover still earns its plan, and the dispatch policy's
+    // specialized estimate can then move it onto the device. ----
+    if let Some(reg) = &blas.policy.kernel {
+        if reg.enabled() {
+            let keys: Vec<u64> = match chain_dims {
+                // chain links stage as plain gemms (m, w[0]) x
+                // (w[0], w[1]) with no per-link epilogue
+                Some(cdims) => cdims
+                    .windows(2)
+                    .filter_map(|w| {
+                        reg.key_for("gemm", "f64", (m, w[1], w[0]), Epilogue::None)
+                    })
+                    .collect(),
+                None => {
+                    let dims = match op {
+                        "gemm" => (m, n, n),
+                        "gemv" => (m, n, 0),
+                        _ => (n, 0, 0), // axpy/dot report (m, n) = (1, n)
+                    };
+                    reg.key_for(op, "f64", dims, Epilogue::None)
+                        .into_iter()
+                        .collect()
+                }
+            };
+            for key in keys {
+                for _ in 0..b {
+                    reg.note_launch(key);
                 }
             }
         }

@@ -378,6 +378,12 @@ fn dispatch_op(
                 ("gemm_warm_n", xn(x.gemm_warm_n)),
                 ("gemv_n", xn(x.gemv_n)),
                 ("level1_n", xn(x.level1_n)),
+                // dual crossover lines: the same ops through a
+                // registry-specialized walk (promoted hot shapes
+                // offload at or below the generic flip point)
+                ("gemm_spec_n", xn(x.gemm_spec_n)),
+                ("gemv_spec_n", xn(x.gemv_spec_n)),
+                ("level1_spec_n", xn(x.level1_spec_n)),
             ]);
             let clusters: Vec<Json> = m
                 .clusters
@@ -457,6 +463,11 @@ fn dispatch_op(
                 ("host_fallbacks", Json::Num(m.host_fallbacks as f64)),
                 ("cache_invalidated_bytes", Json::Num(m.cache_invalidated_bytes as f64)),
                 ("pin_leaks", Json::Num(m.pin_leaks as f64)),
+                ("kernel_specialized", Json::Num(m.kernel_specialized as f64)),
+                ("kernel_hits", Json::Num(m.kernel_hits as f64)),
+                ("kernel_fallbacks", Json::Num(m.kernel_fallbacks as f64)),
+                ("kernel_evictions", Json::Num(m.kernel_evictions as f64)),
+                ("kernel_entries", Json::Num(m.kernel_entries as f64)),
                 ("crossover_estimate", crossover),
                 ("latency", latency),
                 ("p50_us", Json::Num(m.overall.p50_us as f64)),
@@ -568,12 +579,29 @@ fn top_line(sched: &Scheduler) -> String {
             ])
         })
         .collect();
+    // hottest kernel keys by launch count — the per-key view of the
+    // registry's promotion feed (`specialized` marks a resident plan)
+    let kernels: Vec<Json> = sched
+        .kernel_registry()
+        .top_keys(8)
+        .into_iter()
+        .map(|(key, launches, specialized)| {
+            obj(vec![
+                ("key", Json::Str(format!("{key:016x}"))),
+                ("launches", Json::Num(launches as f64)),
+                ("specialized", Json::Bool(specialized)),
+            ])
+        })
+        .collect();
     let mut j = obj(vec![
         ("ok", Json::Bool(true)),
         ("op", Json::Str("top".into())),
         ("queue_depth", Json::Num(sched.queue_depth() as f64)),
         ("completed", Json::Num(m.completed as f64)),
         ("pin_leaks", Json::Num(m.pin_leaks as f64)),
+        ("kernel_hits", Json::Num(m.kernel_hits as f64)),
+        ("kernel_entries", Json::Num(m.kernel_entries as f64)),
+        ("kernels", Json::Arr(kernels)),
         ("clusters", Json::Arr(clusters)),
     ]);
     compact(&mut j)
@@ -834,6 +862,19 @@ pub fn serve(
         show(xing.level1_n),
         if cfg.cost.calibrate { "on" } else { "off" },
     );
+    if cfg.kernel.enabled {
+        eprintln!(
+            "hero-blas serve: kernel registry ON — promote after {}, \
+             {} entries max, prewarm {}; specialized crossovers — \
+             gemm {}, gemv {}, level-1 {}",
+            cfg.kernel.promote_after,
+            cfg.kernel.max_entries,
+            if cfg.kernel.prewarm { "on" } else { "off" },
+            show(xing.gemm_spec_n),
+            show(xing.gemv_spec_n),
+            show(xing.level1_spec_n),
+        );
+    }
     if cfg.sched.fault.enabled {
         let f = &cfg.sched.fault;
         eprintln!(

@@ -1,0 +1,239 @@
+//! Bit-identity of specialized fast-path walks vs the generic walk.
+//!
+//! A promoted kernel plan changes ONLY the charge schedule (virtual
+//! time): the specialized walk issues the exact same PJRT executions as
+//! the generic interpreted walk, so its outputs must be bit-identical —
+//! every comparison here is `assert_eq!`, not an epsilon band.
+
+mod common;
+
+use std::sync::Arc;
+
+use common::session;
+use hero_blas::blas::{ChainLink, HeroBlas, Transpose};
+use hero_blas::config::{DispatchMode, KernelConfig};
+use hero_blas::kernel::{Epilogue, KernelRegistry};
+use hero_blas::util::rng::Rng;
+
+/// Attach a fresh registry to a session, keyed with the same manifest
+/// tile geometry and level-1 chunk the device staging path resolves —
+/// the scheduler does exactly this at pool boot (`sched::Scheduler`).
+fn attach_registry(blas: &mut HeroBlas, promote_after: u32) -> Arc<KernelRegistry> {
+    let man = blas.registry.manifest();
+    let tile = (man.tile_m, man.tile_n, man.tile_k);
+    let level1_chunk = man
+        .entries
+        .iter()
+        .filter(|e| (e.op == "axpy" || e.op == "dot") && e.dtype == "f64")
+        .filter_map(|e| e.n)
+        .max()
+        .unwrap_or(4096);
+    let reg = Arc::new(KernelRegistry::new(
+        &KernelConfig { promote_after, ..KernelConfig::default() },
+        tile,
+        level1_chunk,
+    ));
+    blas.policy.kernel = Some(Arc::clone(&reg));
+    reg
+}
+
+/// Feed the launch counter past the promotion threshold so the next
+/// device staging of this (op, dtype, dims, epilogue) compiles and runs
+/// the specialized walk (in production the scheduler's outcome stream
+/// is the only feed).
+fn promote(reg: &KernelRegistry, op: &str, dtype: &str, dims: (usize, usize, usize), epi: Epilogue) {
+    let key = reg.key_for(op, dtype, dims, epi).expect("specializable op");
+    for _ in 0..reg.promote_after() {
+        reg.note_launch(key);
+    }
+}
+
+// Edge shapes deliberately off the tile grid (tile is 64^3 by default):
+// sub-tile, exact-tile, ragged-both-ways, and a padded tall-skinny.
+const GEMM_SHAPES: [(usize, usize, usize); 4] =
+    [(5, 9, 7), (64, 64, 64), (70, 130, 50), (1, 65, 128)];
+
+#[test]
+fn specialized_gemm_bit_identical_f64() {
+    let mut generic = session(DispatchMode::DeviceOnly);
+    let mut spec = session(DispatchMode::DeviceOnly);
+    let reg = attach_registry(&mut spec, 1);
+    let mut rng = Rng::new(31);
+    for &(m, n, k) in &GEMM_SHAPES {
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(k * n);
+        let c0 = rng.normal_vec(m * n);
+        promote(&reg, "gemm", "f64", (m, n, k), Epilogue::None);
+        let mut c_spec = c0.clone();
+        spec.gemm(
+            Transpose::No, Transpose::No, 1.5, &a, (m, k), &b, (k, n), -0.5,
+            &mut c_spec, (m, n),
+        )
+        .unwrap();
+        let mut c_gen = c0.clone();
+        generic
+            .gemm(
+                Transpose::No, Transpose::No, 1.5, &a, (m, k), &b, (k, n),
+                -0.5, &mut c_gen, (m, n),
+            )
+            .unwrap();
+        assert_eq!(c_spec, c_gen, "gemm f64 ({m},{n},{k}) must be bit-identical");
+    }
+    let s = reg.stats();
+    assert_eq!(s.specialized as usize, GEMM_SHAPES.len(), "one plan per shape");
+    assert!(s.hits >= GEMM_SHAPES.len() as u64, "every walk must hit its plan");
+    assert_eq!(s.fallbacks, 0, "promoted shapes must not fall back");
+}
+
+#[test]
+fn specialized_gemm_bit_identical_f32() {
+    let mut generic = session(DispatchMode::DeviceOnly);
+    let mut spec = session(DispatchMode::DeviceOnly);
+    let reg = attach_registry(&mut spec, 1);
+    let mut rng = Rng::new(32);
+    for &(m, n, k) in &GEMM_SHAPES {
+        let a: Vec<f32> = rng.normal_vec(m * k).iter().map(|&v| v as f32).collect();
+        let b: Vec<f32> = rng.normal_vec(k * n).iter().map(|&v| v as f32).collect();
+        let c0: Vec<f32> = rng.normal_vec(m * n).iter().map(|&v| v as f32).collect();
+        promote(&reg, "gemm", "f32", (m, n, k), Epilogue::None);
+        let mut c_spec = c0.clone();
+        spec.gemm(
+            Transpose::No, Transpose::No, 1.0f32, &a, (m, k), &b, (k, n),
+            0.0f32, &mut c_spec, (m, n),
+        )
+        .unwrap();
+        let mut c_gen = c0.clone();
+        generic
+            .gemm(
+                Transpose::No, Transpose::No, 1.0f32, &a, (m, k), &b, (k, n),
+                0.0f32, &mut c_gen, (m, n),
+            )
+            .unwrap();
+        assert_eq!(c_spec, c_gen, "gemm f32 ({m},{n},{k}) must be bit-identical");
+    }
+    assert!(reg.stats().hits > 0);
+}
+
+#[test]
+fn specialized_gemv_bit_identical_f64() {
+    let mut generic = session(DispatchMode::DeviceOnly);
+    let mut spec = session(DispatchMode::DeviceOnly);
+    let reg = attach_registry(&mut spec, 1);
+    let mut rng = Rng::new(33);
+    for &(m, n) in &[(5usize, 9usize), (64, 64), (70, 130), (128, 128)] {
+        let a = rng.normal_vec(m * n);
+        let x = rng.normal_vec(n);
+        let y0 = rng.normal_vec(m);
+        promote(&reg, "gemv", "f64", (m, n, 0), Epilogue::None);
+        let mut y_spec = y0.clone();
+        spec.gemv(Transpose::No, 2.0, &a, (m, n), &x, -0.25, &mut y_spec)
+            .unwrap();
+        let mut y_gen = y0.clone();
+        generic
+            .gemv(Transpose::No, 2.0, &a, (m, n), &x, -0.25, &mut y_gen)
+            .unwrap();
+        assert_eq!(y_spec, y_gen, "gemv f64 ({m},{n}) must be bit-identical");
+    }
+    let s = reg.stats();
+    assert!(s.specialized >= 4 && s.hits >= 4);
+    assert_eq!(s.fallbacks, 0);
+}
+
+#[test]
+fn specialized_level1_bit_identical() {
+    let mut generic = session(DispatchMode::DeviceOnly);
+    let mut spec = session(DispatchMode::DeviceOnly);
+    let reg = attach_registry(&mut spec, 1);
+    let mut rng = Rng::new(34);
+    // 5000 is not a multiple of the 4096 artifact chunk: the chunked +
+    // tail-padded walk must key and run identically under a plan.
+    for &n in &[100usize, 4096, 5000] {
+        let x = rng.normal_vec(n);
+        let y0 = rng.normal_vec(n);
+        promote(&reg, "axpy", "f64", (n, 0, 0), Epilogue::None);
+        let mut y_spec = y0.clone();
+        spec.axpy(1.5, &x, &mut y_spec).unwrap();
+        let mut y_gen = y0.clone();
+        generic.axpy(1.5, &x, &mut y_gen).unwrap();
+        assert_eq!(y_spec, y_gen, "axpy n={n} must be bit-identical");
+
+        promote(&reg, "dot", "f64", (n, 0, 0), Epilogue::None);
+        let d_spec = spec.dot(&x, &y_gen).unwrap();
+        let d_gen = generic.dot(&x, &y_gen).unwrap();
+        assert_eq!(d_spec, d_gen, "dot n={n} must be bit-identical");
+    }
+    let s = reg.stats();
+    assert!(s.specialized >= 6, "axpy + dot plans per size: {}", s.specialized);
+    assert!(s.hits >= 6);
+    assert_eq!(s.fallbacks, 0);
+}
+
+#[test]
+fn specialized_chain_epilogues_bit_identical() {
+    // Epilogues enter a walk's key only through chain links: cover bias,
+    // ReLU, and bias+ReLU fused plans against the generic chain.
+    let m = 30;
+    let widths = [50usize, 40, 30, 20];
+    let mut rng = Rng::new(35);
+    let x = rng.normal_vec(m * widths[0]);
+    let b1 = rng.normal_vec(widths[0] * widths[1]);
+    let b2 = rng.normal_vec(widths[1] * widths[2]);
+    let b3 = rng.normal_vec(widths[2] * widths[3]);
+    let bias1 = rng.normal_vec(widths[1]);
+    let bias2 = rng.normal_vec(widths[2]);
+    let links = [
+        ChainLink { b: &b1, dims: (widths[0], widths[1]), bias: Some(&bias1), relu: true },
+        ChainLink { b: &b2, dims: (widths[1], widths[2]), bias: Some(&bias2), relu: false },
+        ChainLink { b: &b3, dims: (widths[2], widths[3]), bias: None, relu: true },
+    ];
+
+    let mut spec = session(DispatchMode::DeviceOnly);
+    let reg = attach_registry(&mut spec, 1);
+    promote(&reg, "gemm", "f64", (m, widths[1], widths[0]), Epilogue::BiasRelu);
+    promote(&reg, "gemm", "f64", (m, widths[2], widths[1]), Epilogue::Bias);
+    promote(&reg, "gemm", "f64", (m, widths[3], widths[2]), Epilogue::Relu);
+    let mut out_spec = vec![0.0; m * widths[3]];
+    spec.chain(m, &x, &links, &mut out_spec).unwrap();
+
+    let mut generic = session(DispatchMode::DeviceOnly);
+    let mut out_gen = vec![0.0; m * widths[3]];
+    generic.chain(m, &x, &links, &mut out_gen).unwrap();
+
+    assert_eq!(out_spec, out_gen, "fused-epilogue chain must be bit-identical");
+    let s = reg.stats();
+    assert_eq!(s.specialized, 3, "one fused plan per epilogue variant");
+    assert!(s.hits >= 3);
+    assert_eq!(s.fallbacks, 0);
+}
+
+#[test]
+fn unpromoted_shapes_run_the_generic_fallback() {
+    // With the registry attached but no launch feed, every walk stays on
+    // the always-correct generic path — counted as fallbacks, numerics
+    // identical to a registry-less session.
+    let mut generic = session(DispatchMode::DeviceOnly);
+    let mut spec = session(DispatchMode::DeviceOnly);
+    let reg = attach_registry(&mut spec, 50);
+    let mut rng = Rng::new(36);
+    let (m, n, k) = (70, 130, 50);
+    let a = rng.normal_vec(m * k);
+    let b = rng.normal_vec(k * n);
+    let mut c_spec = vec![0.0; m * n];
+    spec.gemm(
+        Transpose::No, Transpose::No, 1.0, &a, (m, k), &b, (k, n), 0.0,
+        &mut c_spec, (m, n),
+    )
+    .unwrap();
+    let mut c_gen = vec![0.0; m * n];
+    generic
+        .gemm(
+            Transpose::No, Transpose::No, 1.0, &a, (m, k), &b, (k, n), 0.0,
+            &mut c_gen, (m, n),
+        )
+        .unwrap();
+    assert_eq!(c_spec, c_gen);
+    let s = reg.stats();
+    assert_eq!(s.specialized, 0, "no feed, no promotion");
+    assert_eq!(s.hits, 0);
+    assert!(s.fallbacks > 0, "the generic walk must be counted");
+}

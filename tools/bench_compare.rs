@@ -38,7 +38,7 @@ struct PointRec {
 }
 
 /// The knobs that identify a sweep point across snapshots.
-const SIG_KEYS: [&str; 10] = [
+const SIG_KEYS: [&str; 11] = [
     "pool",
     "batching",
     "cache",
@@ -48,6 +48,7 @@ const SIG_KEYS: [&str; 10] = [
     "auto_mixed",
     "calibrate",
     "tracing",
+    "kernel",
     "clients",
 ];
 
@@ -84,7 +85,14 @@ fn point(line: &str) -> Option<PointRec> {
     let rps = j.get("rps").and_then(|v| v.as_f64())?;
     let mut sig = String::new();
     for k in SIG_KEYS {
-        let v = sig_value(j.get(k)?)?;
+        let v = match j.get(k) {
+            Some(v) => sig_value(v)?,
+            // the kernel knob postdates older baselines: a snapshot
+            // written before the registry existed still matches the
+            // registry's default-ON points
+            None if k == "kernel" => "true".to_string(),
+            None => return None,
+        };
         if !sig.is_empty() {
             sig.push(' ');
         }
@@ -278,6 +286,22 @@ mod tests {
         assert_eq!(pts[2].sig, "chain_mlp chained=true");
         assert!((pts[2].rps - 2000.0).abs() < 1e-9);
         assert_eq!(pts[2].p99_us, None);
+    }
+
+    #[test]
+    fn missing_kernel_knob_defaults_to_true() {
+        // pre-registry baselines carry no "kernel" field; they must
+        // keep matching snapshots written with the default-ON registry
+        let pts = parse_snapshot(BASE);
+        assert!(pts[0].sig.contains("kernel=true"));
+        let with_knob = BASE.replace("\"tracing\": true", "\"tracing\": true, \"kernel\": true");
+        let new = parse_snapshot(&with_knob);
+        let rows = compare(&pts, &new);
+        assert_eq!(rows.len(), 3);
+        assert!(rows.iter().all(|r| !r.regressed));
+        // an explicit OFF point is a different signature: never matched
+        let off = BASE.replace("\"tracing\": true", "\"tracing\": true, \"kernel\": false");
+        assert!(compare(&pts, &parse_snapshot(&off)).len() == 1, "chain point only");
     }
 
     #[test]
