@@ -59,6 +59,10 @@ struct Knobs {
     /// the kernel-specialization sweep toggles this to compare the
     /// generic interpreted walk against promoted fast-path plans.
     kernel: bool,
+    /// Issue every request as a fan-out `dag` graph (one trunk, two
+    /// heads, shared weights) instead of a plain GEMM — the DAG-executor
+    /// serving sweep.
+    dag: bool,
 }
 
 /// Scheduler counters scraped over the wire before shutdown.
@@ -93,6 +97,12 @@ struct Counters {
     kernel_fallbacks: u64,
     /// Specialized-walk gemm crossover estimate (dual line to gemm_n).
     crossover_gemm_spec_n: u64,
+    /// DAG-executor counters: graphs served, nodes executed, interior
+    /// edge bytes that never returned to host, cross-request splices.
+    dags: u64,
+    dag_nodes: u64,
+    dag_bytes_elided: u64,
+    dag_fused_requests: u64,
 }
 
 struct Point {
@@ -117,13 +127,15 @@ impl Point {
              \"batching\": {}, \"cache\": {}, \"pipeline\": {}, \
              \"shared_b\": {}, \"placement\": {}, \"auto_mixed\": {}, \
              \"calibrate\": {}, \"tracing\": {}, \"kernel\": {}, \
-             \"clients\": {}, \"requests\": {}, \
+             \"dag\": {}, \"clients\": {}, \"requests\": {}, \
              \"wall_ms\": {:.1}, \"rps\": {:.1}, \"retries\": {}, \
              \"bytes_to_device\": {}, \"bytes_copy_elided\": {}, \
              \"cache_hits\": {}, \"pipelined_batches\": {}, \
              \"overlap_hidden_us\": {}, \"stolen\": {}, \
              \"affine_routed\": {}, \"kernel_specialized\": {}, \
              \"kernel_hits\": {}, \"kernel_fallbacks\": {}, \
+             \"dags\": {}, \"dag_nodes\": {}, \"dag_bytes_elided\": {}, \
+             \"dag_fused_requests\": {}, \
              \"crossover_estimate\": {{\"gemm_n\": {}, \"gemm_warm_n\": {}, \
              \"gemm_spec_n\": {}}}, \
              \"p50_us\": {}, \"p99_us\": {}, \"p999_us\": {}, \
@@ -141,6 +153,7 @@ impl Point {
             k.calibrate,
             k.tracing,
             k.kernel,
+            k.dag,
             self.clients,
             self.clients * self.per_client,
             self.wall.as_secs_f64() * 1e3,
@@ -156,6 +169,10 @@ impl Point {
             c.kernel_specialized,
             c.kernel_hits,
             c.kernel_fallbacks,
+            c.dags,
+            c.dag_nodes,
+            c.dag_bytes_elided,
+            c.dag_fused_requests,
             c.crossover_gemm_n,
             c.crossover_gemm_warm_n,
             c.crossover_gemm_spec_n,
@@ -179,6 +196,18 @@ const MIXED_SIZES: [usize; 4] = [32, 64, 96, 128];
 
 fn request_line(client: usize, per_client: usize, done: usize, knobs: &Knobs) -> String {
     let seed = (client * per_client + done) as u64;
+    if knobs.dag {
+        // fan-out graph: one 256->128 trunk feeding two 128->64 heads,
+        // all weights shared across clients — the trunk is staged once
+        // and its output pinned for both consumers
+        return format!(
+            "{{\"op\": \"dag\", \"m\": {N}, \"d0\": 256, \"nodes\": [\
+             {{\"op\": \"gemm\", \"n\": 128, \"b_seed\": 7}}, \
+             {{\"op\": \"gemm\", \"n\": 64, \"src\": 0, \"b_seed\": 8}}, \
+             {{\"op\": \"gemm\", \"n\": 64, \"src\": 0, \"b_seed\": 9}}], \
+             \"mode\": \"device_only\", \"seed\": {seed}}}\n"
+        );
+    }
     if knobs.auto_mixed {
         let n = MIXED_SIZES[done % MIXED_SIZES.len()];
         return format!(
@@ -300,6 +329,10 @@ fn run_point(knobs: Knobs, clients: usize, per_client: usize) -> Point {
         kernel_hits: get("kernel_hits"),
         kernel_fallbacks: get("kernel_fallbacks"),
         crossover_gemm_spec_n: xget("gemm_spec_n"),
+        dags: get("dags"),
+        dag_nodes: get("dag_nodes"),
+        dag_bytes_elided: get("dag_bytes_elided"),
+        dag_fused_requests: get("dag_fused_requests"),
     };
     stream.write_all(b"{\"op\": \"shutdown\"}\n").unwrap();
     stream.flush().unwrap();
@@ -403,6 +436,114 @@ fn run_chain_point(
     server.join().unwrap().unwrap();
 
     (wall, bytes, elided, chains, sums)
+}
+
+/// The DAG-vs-chain point (sweep 9): the same 64x[256->128->64] MLP
+/// stack as sweep 5, issued either as the classic `chain` op
+/// (`as_dag = false`) or as the equivalent linear two-node `dag` graph
+/// (`as_dag = true`).  A linear single-consumer DAG lowers to the
+/// chain's exact charge sequence, so the two modes must agree
+/// bit-for-bit and the dag points must elide the same interior bytes.
+/// Returns the wall time, bytes_to_device, the mode's elision counter
+/// (`chain_bytes_elided` / `dag_bytes_elided`), the graph count
+/// (`chains` / `dags`) and every request's checksum keyed by seed.
+fn run_dag_point(
+    as_dag: bool,
+    clients: usize,
+    per_client: usize,
+) -> (Duration, u64, u64, u64, BTreeMap<u64, String>) {
+    let mut cfg = PlatformConfig::default();
+    cfg.sched.pool_clusters = 2;
+    cfg.sched.queue_capacity = 256;
+    cfg.sched.batch_window_ms = 0;
+    cfg.sched.batch_max = 8;
+    cfg.sched.cache.cache_frac = 0.4;
+    cfg.sched.cache.cache_max_entries = 64;
+
+    let dir = hero_blas::find_artifacts_dir().expect("run `make artifacts` first");
+    let (tx, rx) = mpsc::channel();
+    let server =
+        std::thread::spawn(move || hero_blas::serve::serve(cfg, &dir, 0, Some(tx)));
+    let port = rx.recv_timeout(Duration::from_secs(300)).expect("server ready");
+
+    let barrier = Arc::new(Barrier::new(clients + 1));
+    let workers: Vec<_> = (0..clients)
+        .map(|c| {
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                barrier.wait();
+                let mut sums = BTreeMap::new();
+                let mut done = 0usize;
+                while done < per_client {
+                    let seed = (c * per_client + done) as u64;
+                    let line = if as_dag {
+                        format!(
+                            "{{\"op\": \"dag\", \"m\": 64, \"d0\": 256, \"nodes\": [\
+                             {{\"op\": \"gemm\", \"n\": 128, \"b_seed\": 7}}, \
+                             {{\"op\": \"gemm\", \"n\": 64, \"src\": 0, \"b_seed\": 8}}], \
+                             \"mode\": \"device_only\", \"seed\": {seed}}}\n"
+                        )
+                    } else {
+                        format!(
+                            "{{\"op\": \"chain\", \"m\": 64, \"dims\": [256, 128, 64], \
+                             \"mode\": \"device_only\", \"seed\": {seed}, \
+                             \"b_seeds\": [7, 8], \"chained\": true}}\n"
+                        )
+                    };
+                    stream.write_all(line.as_bytes()).unwrap();
+                    stream.flush().unwrap();
+                    let mut resp = String::new();
+                    reader.read_line(&mut resp).unwrap();
+                    if resp.contains("\"ok\": true") {
+                        let j = Json::parse(resp.trim()).expect("dag response");
+                        // compare the exact textual f64 (bit-identity proxy)
+                        let sum = format!(
+                            "{:?}",
+                            j.get("checksum").and_then(|v| v.as_f64()).unwrap()
+                        );
+                        sums.insert(seed, sum);
+                        done += 1;
+                    } else if resp.contains("retry_after_ms") {
+                        std::thread::sleep(Duration::from_millis(2));
+                    } else {
+                        panic!("dag request failed: {resp}");
+                    }
+                }
+                sums
+            })
+        })
+        .collect();
+
+    barrier.wait();
+    let t0 = Instant::now();
+    let mut sums = BTreeMap::new();
+    for w in workers {
+        sums.extend(w.join().unwrap());
+    }
+    let wall = t0.elapsed();
+
+    let mut stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    stream.write_all(b"{\"op\": \"metrics\"}\n").unwrap();
+    stream.flush().unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let m = Json::parse(resp.trim()).expect("metrics JSON");
+    let get = |k: &str| m.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
+    let (bytes, elided, graphs) = if as_dag {
+        (get("bytes_to_device"), get("dag_bytes_elided"), get("dags"))
+    } else {
+        (get("bytes_to_device"), get("chain_bytes_elided"), get("chains"))
+    };
+    stream.write_all(b"{\"op\": \"shutdown\"}\n").unwrap();
+    stream.flush().unwrap();
+    let mut resp = String::new();
+    let _ = reader.read_line(&mut resp);
+    server.join().unwrap().unwrap();
+
+    (wall, bytes, elided, graphs, sums)
 }
 
 /// The fault-matrix point (sweep 6): same shared-B GEMM workload, but
@@ -552,6 +693,7 @@ fn main() {
         calibrate: false,
         tracing: true, // the recorder's default-ON posture
         kernel: true,  // the registry's default-ON posture
+        dag: false,
     };
     let serial = run_point(base_knobs, 1, serial_reqs);
     let base = serial.rps();
@@ -807,6 +949,69 @@ fn main() {
         "fault matrix injected no faults (cluster 0 at staging_rate 0.5)"
     );
 
+    // sweep 9: dag vs chain — the sweep-5 MLP stack issued as the
+    // classic `chain` op vs the equivalent linear `dag` graph.  A
+    // linear single-consumer DAG lowers to the chain's exact charge
+    // sequence, so checksums must be bit-identical and the dag points
+    // must elide interior bytes just like the chain does.
+    println!();
+    let (qw, qb, qe, qg, qsums) = run_dag_point(false, clients, per_client);
+    snap.emit(format!(
+        "{{\"bench\": \"serve_throughput\", \"workload\": \"dag_mlp\", \
+         \"dag\": false, \"requests\": {}, \"wall_ms\": {:.1}, \
+         \"bytes_to_device\": {qb}, \"bytes_elided\": {qe}, \
+         \"graphs\": {qg}}}",
+        clients * per_client,
+        qw.as_secs_f64() * 1e3,
+    ));
+    let (gw, gb, ge, gg, gsums) = run_dag_point(true, clients, per_client);
+    snap.emit(format!(
+        "{{\"bench\": \"serve_throughput\", \"workload\": \"dag_mlp\", \
+         \"dag\": true, \"requests\": {}, \"wall_ms\": {:.1}, \
+         \"bytes_to_device\": {gb}, \"bytes_elided\": {ge}, \
+         \"graphs\": {gg}}}",
+        clients * per_client,
+        gw.as_secs_f64() * 1e3,
+    ));
+    let dag_identical = qsums == gsums;
+    snap.emit(format!(
+        "{{\"bench\": \"serve_throughput\", \"summary\": \"dag_vs_chain\", \
+         \"checksums_identical\": {dag_identical}, \
+         \"dag_bytes_elided\": {ge}, \"dags\": {gg}}}"
+    ));
+    assert!(
+        dag_identical,
+        "linear dag checksums diverged from the equivalent chain"
+    );
+    assert!(
+        ge > 0,
+        "dag run elided no interior bytes (dag_bytes_elided = 0)"
+    );
+    assert_eq!(
+        gg as usize,
+        clients * per_client,
+        "every request should have run as one dag"
+    );
+
+    // the fan-out serving point: every request a 3-node trunk+2-head
+    // graph with shared weights, through the full router (the `dag`
+    // knob point in the perf trajectory)
+    let p = run_point(
+        Knobs { pool: 2, cache: true, placement: true, dag: true, ..base_knobs },
+        clients,
+        per_client,
+    );
+    snap.emit(p.json(p.rps() / base));
+    assert_eq!(
+        p.counters.dags as usize,
+        clients * per_client,
+        "fan-out point: every request should have run as one dag"
+    );
+    assert!(
+        p.counters.dag_bytes_elided > 0,
+        "fan-out point elided no interior bytes"
+    );
+
     println!(
         "\npool parallelism scales wall-clock across clusters; batching\n\
          coalesces queued same-shape requests so the fork-join overhead —\n\
@@ -825,6 +1030,9 @@ fn main() {
          kernel_specialized > 0 and kernel_hits > 0 without losing rps to\n\
          the registry's bookkeeping; the fault_matrix point must complete\n\
          every request (retry or host fallback) with faults_injected > 0\n\
-         and failed = 0."
+         and failed = 0; the dag_mlp dag=true point must match the chain\n\
+         run bit-for-bit with dag_bytes_elided > 0, and the fan-out dag\n\
+         point must stage each shared trunk once (dags = requests,\n\
+         dag_bytes_elided > 0)."
     );
 }

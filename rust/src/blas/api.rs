@@ -10,6 +10,7 @@ use std::path::Path;
 
 use crate::config::{DispatchMode, PlatformConfig};
 use crate::cost::CostModel;
+use crate::dag::{DagOp, DagShape};
 use crate::error::Result;
 use crate::hero::offload::OffloadKind;
 use crate::metrics::Metrics;
@@ -113,6 +114,63 @@ impl<T: Elem> ChainRun<T> {
     /// (rows, cols) of the chain's final output.
     pub fn out_dims(&self) -> (usize, usize) {
         self.state.out_dims()
+    }
+}
+
+/// A staged-but-not-executed DAG (see [`HeroBlas::dag_stage`]) — the
+/// graph-shaped analogue of [`ChainStagedRun`], riding the same
+/// pipelining seam.
+pub struct DagStagedRun<T: Elem> {
+    state: device::DagStaged,
+    _elem: std::marker::PhantomData<T>,
+}
+
+impl<T: Elem> DagStagedRun<T> {
+    /// Number of nodes staged.
+    pub fn len(&self) -> usize {
+        self.state.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.state.is_empty()
+    }
+
+    /// The shape this staging lowered.
+    pub fn shape(&self) -> &DagShape {
+        self.state.shape()
+    }
+}
+
+/// An executed DAG between its doorbell and its finish (see
+/// [`HeroBlas::dag_execute`]).
+pub struct DagRun<T: Elem> {
+    state: device::DagState,
+    _elem: std::marker::PhantomData<T>,
+}
+
+impl<T: Elem> DagRun<T> {
+    pub fn len(&self) -> usize {
+        self.state.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.state.is_empty()
+    }
+
+    /// The shape this execution lowered.
+    pub fn shape(&self) -> &DagShape {
+        self.state.shape()
+    }
+
+    /// Observed Compute-region cycles per node, in index order — what
+    /// the scheduler feeds the calibrator for per-link attribution.
+    pub fn node_cycles(&self) -> &[u64] {
+        self.state.node_cycles()
+    }
+
+    /// (rows, cols) of every sink output, in sink index order.
+    pub fn sink_dims(&self) -> Vec<(usize, usize)> {
+        self.state.sink_dims()
     }
 }
 
@@ -444,6 +502,248 @@ impl HeroBlas {
     /// what callers bound chain length against a cluster slice with.
     pub fn chain_staged_bytes<T: Elem>(&self, m: usize, dims: &[usize]) -> u64 {
         device::chain_staged_bytes::<T>(&self.registry, m, dims)
+    }
+
+    // ------------------------------------------------------------------
+    // DAG executor (fan-out/fan-in over device-resident intermediates)
+    // ------------------------------------------------------------------
+
+    /// Stage a DAG as ONE offload whose interior edges never return to
+    /// the host: fork once, map the external input and every matmul
+    /// node's weights, stage every output `map(alloc:)`-style.  The
+    /// dispatch policy is NOT consulted — the caller has already decided
+    /// to offload (use [`HeroBlas::dag`] for the policy-dispatched
+    /// one-shot).  DAGs are copy-mode only, like chains: residency is
+    /// the point.
+    pub fn dag_stage<T: Elem>(
+        &mut self,
+        shape: &DagShape,
+        x: &[T],
+        nodes: &[device::DagNodeSpec<'_, T>],
+    ) -> Result<DagStagedRun<T>> {
+        device::dag_stage(&mut self.engine, &mut self.registry, shape, x, nodes)
+            .map(|state| DagStagedRun { state, _elem: std::marker::PhantomData })
+    }
+
+    /// Execute a staged DAG (doorbell, every node's walk in topological
+    /// order with promote-once/reuse-per-edge hand-off, completion word
+    /// posted) — poll [`HeroBlas::offload_completion_pending`] and call
+    /// [`HeroBlas::dag_finish`].
+    pub fn dag_execute<T: Elem>(
+        &mut self,
+        staged: DagStagedRun<T>,
+    ) -> Result<DagRun<T>> {
+        device::dag_execute(
+            &mut self.engine, &mut self.registry, staged.state,
+            self.policy.kernel.as_deref(),
+        )
+        .map(|state| DagRun { state, _elem: std::marker::PhantomData })
+    }
+
+    /// Join an executed DAG: copy every sink output back into `outs`
+    /// (sink index order, sizes per [`DagRun::sink_dims`]) and release
+    /// every mapping.  `publish = true` additionally registers the last
+    /// sink's padded output in the operand cache (unpinned) so a fused
+    /// follow-up request's `map(to:)` of the same activation is a
+    /// verified hit.
+    pub fn dag_finish<T: Elem>(
+        &mut self,
+        run: DagRun<T>,
+        outs: &mut [&mut [T]],
+        publish: bool,
+    ) -> Result<()> {
+        device::dag_finish(&mut self.engine, run.state, outs, publish)
+    }
+
+    /// Abandon a staged DAG (cancellation / error recovery): release its
+    /// mappings — operand-cache pins and `map(alloc:)` outputs — and
+    /// exit the target region without ringing the doorbell.  A cancelled
+    /// DAG must never strand resident intermediates.
+    pub fn dag_abandon<T: Elem>(&mut self, staged: DagStagedRun<T>) {
+        staged.state.release(&mut self.engine);
+    }
+
+    /// Per-node cache identity of a staged DAG's weight operands (`None`
+    /// for fan-in nodes) — affinity bookkeeping, like
+    /// [`HeroBlas::chain_staged_b_keys`].
+    pub fn dag_staged_b_keys<T: Elem>(
+        &self,
+        staged: &DagStagedRun<T>,
+    ) -> Vec<Option<crate::omp::CacheKey>> {
+        staged.state.cached_b_keys()
+    }
+
+    /// Staged device-DRAM footprint of a DAG — the live resident
+    /// high-water mark the placement router admits big-lane jobs by.
+    pub fn dag_staged_bytes<T: Elem>(&self, shape: &DagShape) -> u64 {
+        device::dag_staged_bytes::<T>(&self.registry, shape)
+    }
+
+    /// Run a DAG end-to-end, dispatching through the policy: the device
+    /// target runs the graph-shaped offload (stage/execute/finish) with
+    /// device-resident interior edges; when the graph does not pay, each
+    /// node dispatches individually — gemm/gemv through their own policy
+    /// gates (so a single large node may still offload on its own),
+    /// fan-in ops host-side — in the same topological order, which is
+    /// the per-op oracle the integration tests compare against.  `outs`
+    /// gets one slice per sink, sink index order.
+    pub fn dag<T: Elem>(
+        &mut self,
+        shape: &DagShape,
+        x: &[T],
+        nodes: &[device::DagNodeSpec<'_, T>],
+        outs: &mut [&mut [T]],
+    ) -> Result<()> {
+        shape
+            .validate(u32::MAX, u32::MAX, u32::MAX)
+            .map_err(|e| crate::error::Error::shape(format!("dag: {e}")))?;
+        if nodes.len() != shape.nodes.len() {
+            return Err(crate::error::Error::shape(format!(
+                "dag: {} node specs for {} shape nodes",
+                nodes.len(),
+                shape.nodes.len()
+            )));
+        }
+        if x.len() != shape.m * shape.d0 {
+            return Err(crate::error::Error::shape(format!(
+                "dag: input has {} elements, the shape wants {}x{}",
+                x.len(),
+                shape.m,
+                shape.d0
+            )));
+        }
+        let widths = shape.widths();
+        for (i, (node, spec)) in shape.nodes.iter().zip(nodes).enumerate() {
+            let op = node.op;
+            if op.is_matmul() {
+                let b = spec.b.ok_or_else(|| {
+                    crate::error::Error::shape(format!(
+                        "dag: node {i} ({op}) is missing its weight operand"
+                    ))
+                })?;
+                if b.len() != shape.in_width(i) * widths[i] {
+                    return Err(crate::error::Error::shape(format!(
+                        "dag: node {i} ({op}) weights have {} elements for \
+                         ({}, {})",
+                        b.len(),
+                        shape.in_width(i),
+                        widths[i]
+                    )));
+                }
+            } else if spec.b.is_some() {
+                return Err(crate::error::Error::shape(format!(
+                    "dag: node {i} ({op}) does not take a weight operand"
+                )));
+            }
+            if node.bias != spec.bias.is_some() {
+                return Err(crate::error::Error::shape(format!(
+                    "dag: node {i} ({op}) bias operand does not match its \
+                     shape's bias flag"
+                )));
+            }
+            if let Some(bias) = spec.bias {
+                if bias.len() != widths[i] {
+                    return Err(crate::error::Error::shape(format!(
+                        "dag: node {i} ({op}) bias has {} elements for n={}",
+                        bias.len(),
+                        widths[i]
+                    )));
+                }
+            }
+        }
+        let sinks = shape.sinks();
+        if outs.len() != sinks.len() {
+            return Err(crate::error::Error::shape(format!(
+                "dag: {} outputs for a dag with {} sinks",
+                outs.len(),
+                sinks.len()
+            )));
+        }
+        for (&s, out) in sinks.iter().zip(outs.iter()) {
+            let (r, c) = shape.out_dims(s);
+            if out.len() != r * c {
+                return Err(crate::error::Error::shape(format!(
+                    "dag: sink {s} output len {} != {r}x{c}",
+                    out.len()
+                )));
+            }
+        }
+        match self.policy.dag(shape) {
+            ExecTarget::Host => {
+                let m = shape.m;
+                let mut produced: Vec<Vec<T>> = Vec::with_capacity(shape.nodes.len());
+                for (i, (node, spec)) in shape.nodes.iter().zip(nodes).enumerate() {
+                    let k = shape.in_width(i);
+                    let a: Vec<T> = match node.src {
+                        Some(j) => produced[j].clone(),
+                        None => x.to_vec(),
+                    };
+                    let out_v = match node.op {
+                        DagOp::Gemm | DagOp::Gemv => {
+                            let n = widths[i];
+                            let b = spec.b.expect("validated: matmul has weights");
+                            let mut c = vec![T::zero(); m * n];
+                            if node.op == DagOp::Gemv {
+                                self.gemv(
+                                    Transpose::No, T::one(), &a, (m, k), b,
+                                    T::zero(), &mut c,
+                                )?;
+                            } else {
+                                self.gemm(
+                                    Transpose::No, Transpose::No, T::one(), &a,
+                                    (m, k), b, (k, n), T::zero(), &mut c, (m, n),
+                                )?;
+                            }
+                            if spec.bias.is_some() || node.relu {
+                                host::chain_epilogue(&mut c, n, spec.bias, node.relu);
+                                let cyc = self
+                                    .engine
+                                    .platform
+                                    .host
+                                    .level1_cycles(m * n, 2.0, T::F32_PATH);
+                                self.engine
+                                    .charge_host_compute(cyc, "host_dag_epilogue");
+                            }
+                            c
+                        }
+                        DagOp::Axpy | DagOp::Dot => {
+                            let b: Vec<T> = match node.src2 {
+                                Some(j) => produced[j].clone(),
+                                None => x.to_vec(),
+                            };
+                            let cyc = self
+                                .engine
+                                .platform
+                                .host
+                                .level1_cycles(m * k, 2.0, T::F32_PATH);
+                            if node.op == DagOp::Axpy {
+                                self.engine.charge_host_compute(cyc, "host_dag_axpy");
+                                a.iter().zip(b.iter()).map(|(p, q)| *p + *q).collect()
+                            } else {
+                                self.engine.charge_host_compute(cyc, "host_dag_dot");
+                                let mut acc = T::zero();
+                                for (p, q) in a.iter().zip(b.iter()) {
+                                    acc = acc + (*p) * (*q);
+                                }
+                                vec![acc]
+                            }
+                        }
+                    };
+                    produced.push(out_v);
+                }
+                for (&s, out) in sinks.iter().zip(outs.iter_mut()) {
+                    out.copy_from_slice(&produced[s]);
+                }
+                Ok(())
+            }
+            _ => {
+                // graph residency is a copy-mode technique: forced
+                // zero-copy still runs the copy-mode DAG path
+                let staged = self.dag_stage(shape, x, nodes)?;
+                let run = self.dag_execute(staged)?;
+                self.dag_finish(run, outs, false)
+            }
+        }
     }
 
     /// Stage a coalesced GEMV batch without launching it — the level-2

@@ -29,6 +29,8 @@
 use crate::cost::tile::{
     gemm_tile_costs, gemv_panel_costs, level1_chunk_costs, round_up,
 };
+use crate::dag::{DagOp, DagShape};
+use crate::soc::trace::RegionClass;
 // Staged-footprint formulas moved to the cost subsystem (the placement
 // router reads them off the CostModel); re-exported here so existing
 // callers keep working.
@@ -2130,5 +2132,657 @@ pub fn level1_batch(
         reg.release(p.key);
     }
     r
+}
+
+// ---------------------------------------------------------------------------
+// DAG executor: the chain's stage/execute/finish seam generalized to a
+// typed dataflow graph ([`crate::dag::DagShape`]) with fan-out (one
+// promoted output, several consumers) and fan-in (axpy/dot over two
+// inputs).  A linear gemm-only DAG lowers to the *identical* charge
+// sequence as [`gemm_chain_stage`]/[`gemm_chain_execute`]/
+// [`gemm_chain_finish`] by construction: same staging calls, same
+// descriptor, same walk, same promote/reuse bookkeeping — only the
+// charge labels differ ("dag_keep"/"dag_reuse" vs "chain_keep"/
+// "chain_reuse"), so region totals and numerics are bit-identical.
+// ---------------------------------------------------------------------------
+
+/// Per-node operands for one staged DAG, aligned index-for-index with
+/// the shape's node list (the shape carries the op/edges/epilogue
+/// *structure*; this carries the *data*).
+#[derive(Debug, Clone, Copy)]
+pub struct DagNodeSpec<'a, T: Elem> {
+    /// Weight operand for matmul nodes: gemm wants (k x n) row-major,
+    /// gemv wants length k.  Must be `None` for axpy/dot.
+    pub b: Option<&'a [T]>,
+    /// Per-row bias (length = the node's output width); present iff the
+    /// shape's node declares `bias`.
+    pub bias: Option<&'a [T]>,
+}
+
+/// One staged DAG node: uniform gemm geometry (gemv is the gemm walk
+/// with n = 1; axpy/dot get an (m x w) / (1 x 1) output grid), staged
+/// indices and the owned byte images whose host addresses key the
+/// engine's data-map until unmap.
+#[derive(Debug)]
+struct DagMember {
+    geom: GemmGeom,
+    op: DagOp,
+    src: Option<usize>,
+    src2: Option<usize>,
+    /// Staged weight index (matmul nodes only).
+    bi: Option<usize>,
+    ci: usize,
+    #[allow(dead_code)]
+    b_bytes: Option<Vec<u8>>,
+    #[allow(dead_code)]
+    c_bytes: Vec<u8>,
+    /// Raw `T` bytes of the bias vector, when present.
+    bias: Option<Vec<u8>>,
+    relu: bool,
+}
+
+/// A staged-but-not-executed DAG: the external input, every matmul
+/// node's weights and every node's output buffer are resident in the
+/// cluster's device-DRAM slice, the doorbell has not rung.  Produced by
+/// [`dag_stage`]; consumed by [`dag_execute`] — the same seam the
+/// scheduler's software pipeline threads batches and chains through.
+#[derive(Debug)]
+pub struct DagStaged {
+    staged: Staged,
+    members: Vec<DagMember>,
+    shape: DagShape,
+    /// Index of the staged external input x.
+    ai: usize,
+    /// Padded row length of the staged x, in elements.
+    x_lead: usize,
+    #[allow(dead_code)]
+    x_bytes: Vec<u8>,
+    elem_size: usize,
+}
+
+impl DagStaged {
+    /// Number of nodes staged.
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// The shape this staging lowered.
+    pub fn shape(&self) -> &DagShape {
+        &self.shape
+    }
+
+    /// Per-node cache identity of the staged weight operand (`None` for
+    /// fan-in nodes and non-resident weights) — what the scheduler tags
+    /// for its affinity directory, like [`GemmChainStaged::cached_b_keys`].
+    pub fn cached_b_keys(&self) -> Vec<Option<crate::omp::CacheKey>> {
+        self.members
+            .iter()
+            .map(|mem| mem.bi.and_then(|bi| self.staged.get(bi).cache_key()))
+            .collect()
+    }
+
+    /// Error-path / cancellation teardown for a staged-but-never-executed
+    /// DAG: releases every mapping (operand-cache pins included) and
+    /// exits the target region — a cancelled DAG must not strand resident
+    /// intermediates or `map(alloc:)` output buffers.
+    pub fn release(mut self, engine: &mut OffloadEngine) {
+        self.staged.release_all(engine);
+        engine.target_end();
+    }
+}
+
+/// An executed DAG between its doorbell and its finish: every node's
+/// compute is done, the completion word is posted, the sink outputs are
+/// still on the device.  Produced by [`dag_execute`]; consumed by
+/// [`dag_finish`].
+#[derive(Debug)]
+pub struct DagState {
+    staged: Staged,
+    members: Vec<DagMember>,
+    shape: DagShape,
+    /// Observed Compute-region cycles per node, in index order — the
+    /// per-link attribution the calibrator folds into per-op scales.
+    node_cycles: Vec<u64>,
+    #[allow(dead_code)]
+    x_bytes: Vec<u8>,
+    elem_size: usize,
+}
+
+impl DagState {
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// The shape this execution lowered.
+    pub fn shape(&self) -> &DagShape {
+        &self.shape
+    }
+
+    /// Observed Compute-region cycles per node, in index order.
+    pub fn node_cycles(&self) -> &[u64] {
+        &self.node_cycles
+    }
+
+    /// (rows, cols) of every sink output, in sink index order — the
+    /// sizes [`dag_finish`] expects its `outs` slices to have.
+    pub fn sink_dims(&self) -> Vec<(usize, usize)> {
+        self.shape
+            .sinks()
+            .into_iter()
+            .map(|s| {
+                let g = self.members[s].geom;
+                (g.m, g.n)
+            })
+            .collect()
+    }
+}
+
+/// Resolve every node's uniform gemm geometry: gemm is (m, n, k), gemv
+/// is the gemm walk with n = 1, axpy gets an (m x w) output grid and
+/// dot a (1 x 1) scalar cell.
+fn dag_geoms<T: Elem>(
+    engine: &OffloadEngine,
+    registry: &ArtifactRegistry,
+    shape: &DagShape,
+) -> Result<Vec<GemmGeom>> {
+    let widths = shape.widths();
+    shape
+        .nodes
+        .iter()
+        .enumerate()
+        .map(|(i, node)| {
+            let k = shape.in_width(i);
+            match node.op {
+                DagOp::Gemm => GemmGeom::resolve::<T>(engine, registry, shape.m, node.n, k),
+                DagOp::Gemv => GemmGeom::resolve::<T>(engine, registry, shape.m, 1, k),
+                DagOp::Axpy => {
+                    GemmGeom::resolve::<T>(engine, registry, shape.m, widths[i], widths[i])
+                }
+                DagOp::Dot => GemmGeom::resolve::<T>(engine, registry, 1, 1, k),
+            }
+        })
+        .collect()
+}
+
+/// Stage a DAG for ONE offload: fork once, `map(to:)` the external input
+/// (m x d0) and every matmul node's weights (cache-eligible read-only
+/// operands), and stage every node's output `map(alloc:)`-style (beta =
+/// 0 throughout).  Any error releases everything staged so far and exits
+/// the target region.
+///
+/// Hand-off legality: an edge into a matmul consumer requires the
+/// producer's padded output to BE the consumer's padded input
+/// (`producer.np == consumer.kp`, i.e. `tile_n == tile_k`), exactly like
+/// the chain.  Fan-in (axpy/dot) consumers read rows through the
+/// producer's own lead, so they carry no such constraint.
+pub fn dag_stage<T: Elem>(
+    engine: &mut OffloadEngine,
+    registry: &mut ArtifactRegistry,
+    shape: &DagShape,
+    x: &[T],
+    nodes: &[DagNodeSpec<'_, T>],
+) -> Result<DagStaged> {
+    // structural legality (acyclicity, fan-in widths, dot sinks) without
+    // imposing the scheduler's [sched.dag] bounds — those are the
+    // submission layer's to enforce
+    shape
+        .validate(u32::MAX, u32::MAX, u32::MAX)
+        .map_err(|e| Error::shape(format!("dag: {e}")))?;
+    if nodes.len() != shape.nodes.len() {
+        return Err(Error::shape(format!(
+            "dag: {} node specs for {} shape nodes",
+            nodes.len(),
+            shape.nodes.len()
+        )));
+    }
+    if x.len() != shape.m * shape.d0 {
+        return Err(Error::shape(format!(
+            "dag: input has {} elements, the shape wants {}x{}",
+            x.len(),
+            shape.m,
+            shape.d0
+        )));
+    }
+    let widths = shape.widths();
+    for (i, (ns, spec)) in shape.nodes.iter().zip(nodes).enumerate() {
+        let op = ns.op;
+        let k = shape.in_width(i);
+        if op.is_matmul() {
+            let n = widths[i];
+            let b = spec.b.ok_or_else(|| {
+                Error::shape(format!("dag: node {i} ({op}) is missing its weight operand"))
+            })?;
+            if b.len() != k * n {
+                return Err(Error::shape(format!(
+                    "dag: node {i} ({op}) weights have {} elements for ({k}, {n})",
+                    b.len()
+                )));
+            }
+        } else if spec.b.is_some() {
+            return Err(Error::shape(format!(
+                "dag: node {i} ({op}) does not take a weight operand"
+            )));
+        }
+        match (ns.bias, spec.bias) {
+            (true, Some(bias)) => {
+                if bias.len() != widths[i] {
+                    return Err(Error::shape(format!(
+                        "dag: node {i} ({op}) bias has {} elements for n={}",
+                        bias.len(),
+                        widths[i]
+                    )));
+                }
+            }
+            (true, None) => {
+                return Err(Error::shape(format!(
+                    "dag: node {i} ({op}) declares a bias but none was provided"
+                )))
+            }
+            (false, Some(_)) => {
+                return Err(Error::shape(format!(
+                    "dag: node {i} ({op}) got a bias but its shape declares none"
+                )))
+            }
+            (false, None) => {}
+        }
+    }
+    let geoms = dag_geoms::<T>(engine, registry, shape)?;
+    // padded hand-off identity, matmul consumers only (see doc above)
+    for (i, node) in shape.nodes.iter().enumerate() {
+        if !node.op.is_matmul() {
+            continue;
+        }
+        if let Some(s) = node.src {
+            if geoms[s].np != geoms[i].kp {
+                return Err(Error::Offload(format!(
+                    "dag: node {i} ({}) reads node {s}'s {}-wide output padded \
+                     to {} as an output but {} as an input (tile_n != tile_k) \
+                     — device-resident hand-off would change numerics",
+                    node.op, geoms[s].n, geoms[s].np, geoms[i].kp
+                )));
+            }
+        }
+    }
+
+    // ---- fork (once for the whole DAG) ----
+    engine.blas_entry();
+    engine.target_begin(shape.marshalled_args());
+
+    let man = registry.manifest();
+    let (tm, tk) = (man.tile_m, man.tile_k);
+    let mut staged = Staged::default();
+    let r = (|| -> Result<(usize, usize, Vec<u8>, Vec<DagMember>)> {
+        let mp = round_up(shape.m, tm);
+        let x_lead = round_up(shape.d0, tk);
+        let x_bytes = T::slice_to_bytes(&pad2(x, shape.m, shape.d0, mp, x_lead));
+        let ai = staged.push(engine.map_to_operand(
+            &x_bytes,
+            (shape.m * shape.d0 * T::SIZE) as u64,
+            false,
+            "x",
+        )?);
+        let mut members = Vec::with_capacity(shape.nodes.len());
+        for ((node, spec), g) in shape.nodes.iter().zip(nodes).zip(geoms.iter()) {
+            let (bi, b_bytes) = match spec.b {
+                Some(b) => {
+                    let b_bytes = T::slice_to_bytes(&pad2(b, g.k, g.n, g.kp, g.np));
+                    let bi = staged.push(engine.map_to_operand(
+                        &b_bytes,
+                        (g.k * g.n * T::SIZE) as u64,
+                        false,
+                        "b",
+                    )?);
+                    (Some(bi), Some(b_bytes))
+                }
+                None => (None, None),
+            };
+            // beta = 0 by construction: outputs stage map(alloc:)-style,
+            // zero-filled on the device, no host copy
+            let c_bytes = vec![0u8; g.mp * g.np * T::SIZE];
+            let ci = staged.push(engine.map_alloc(
+                &c_bytes,
+                (g.m * g.n * T::SIZE) as u64,
+                "c",
+            )?);
+            members.push(DagMember {
+                geom: *g,
+                op: node.op,
+                src: node.src,
+                src2: node.src2,
+                bi,
+                ci,
+                b_bytes,
+                c_bytes,
+                bias: spec.bias.map(T::slice_to_bytes),
+                relu: node.relu,
+            });
+        }
+        Ok((ai, x_lead, x_bytes, members))
+    })();
+
+    match r {
+        Ok((ai, x_lead, x_bytes, members)) => Ok(DagStaged {
+            staged,
+            members,
+            shape: shape.clone(),
+            ai,
+            x_lead,
+            x_bytes,
+            elem_size: T::SIZE,
+        }),
+        Err(e) => {
+            staged.release_all(engine);
+            engine.target_end();
+            Err(e)
+        }
+    }
+}
+
+/// Element-wise fan-in compute on staged activations: axpy streams both
+/// (rows x w) inputs through their own leads and writes the sum into the
+/// node's output grid; dot reduces Σ a·b into the scalar cell at offset
+/// 0.  Charged like a level-1 chunk pass (stream in, FPU, stream out);
+/// numerics are exact f64/f32 host-identical ops, like [`chain_epilogue`].
+#[allow(clippy::too_many_arguments)]
+fn dag_fanin<T: Elem>(
+    engine: &mut OffloadEngine,
+    staged: &mut Staged,
+    op: DagOp,
+    rows: usize,
+    w: usize,
+    (i1, lead1): (usize, usize),
+    (i2, lead2): (usize, usize),
+    ci: usize,
+    out_lead: usize,
+) -> Result<()> {
+    let mut acc = T::zero();
+    for r in 0..rows {
+        let a: Vec<T> = T::bytes_to_vec(&engine.read_mapped(
+            staged.get(i1),
+            r * lead1 * T::SIZE,
+            w * T::SIZE,
+        )?);
+        let b: Vec<T> = T::bytes_to_vec(&engine.read_mapped(
+            staged.get(i2),
+            r * lead2 * T::SIZE,
+            w * T::SIZE,
+        )?);
+        match op {
+            DagOp::Axpy => {
+                let row: Vec<T> =
+                    a.iter().zip(b.iter()).map(|(x, y)| *x + *y).collect();
+                engine.write_mapped(
+                    staged.get_mut(ci),
+                    r * out_lead * T::SIZE,
+                    &T::slice_to_bytes(&row),
+                )?;
+            }
+            DagOp::Dot => {
+                for (x, y) in a.iter().zip(b.iter()) {
+                    acc = acc + (*x) * (*y);
+                }
+            }
+            _ => unreachable!("dag_fanin lowers fan-in nodes only"),
+        }
+    }
+    if op == DagOp::Dot {
+        engine.write_mapped(staged.get_mut(ci), 0, &T::slice_to_bytes(&[acc]))?;
+    }
+    let cc = level1_chunk_costs(&engine.platform.dma, &engine.platform.cluster, rows * w);
+    let label = if op == DagOp::Dot { "dag_dot" } else { "dag_axpy" };
+    engine.charge_compute(cc.dma.max(cc.fpu) + cc.dma, label);
+    Ok(())
+}
+
+/// Execute a staged DAG: one descriptor, one doorbell, then every node's
+/// compute in topological (index) order.  A node output with consumers
+/// is promoted to device-resident ONCE ([`OffloadEngine::promote_output_dag`]);
+/// every consuming edge books its elided re-stage
+/// ([`OffloadEngine::note_dag_reuse`]) — so a fan-out trunk with two
+/// consumers elides three transfers (the skipped `map(from:)` plus both
+/// skipped `map(to:)`s).  The completion word is posted on return; poll
+/// the mailbox and call [`dag_finish`].
+pub fn dag_execute<T: Elem>(
+    engine: &mut OffloadEngine,
+    registry: &mut ArtifactRegistry,
+    mut dag: DagStaged,
+    kreg: Option<&KernelRegistry>,
+) -> Result<DagState> {
+    let r = (|| -> Result<Vec<u64>> {
+        if T::SIZE != dag.elem_size {
+            return Err(Error::shape("dag_execute: element type mismatch"));
+        }
+        let g0 = dag.members[0].geom;
+        let mut desc = OffloadDescriptor::new(
+            OffloadKind::Chain,
+            (g0.m, g0.n, g0.k),
+            T::F32_PATH,
+        );
+        let mut arg_indices = vec![dag.ai];
+        for mem in &dag.members {
+            if let Some(bi) = mem.bi {
+                arg_indices.push(bi);
+            }
+            arg_indices.push(mem.ci);
+        }
+        for i in arg_indices {
+            desc.push_arg(OffloadArg {
+                device_addr: dag.staged.get(i).device_addr(),
+                len: dag.staged.get(i).len,
+                via_iommu: false,
+            });
+        }
+        engine.launch(&desc)?;
+
+        let consumers = dag.shape.consumer_counts();
+        let rows = dag.shape.m;
+        let (x_buf, x_lead, d0) = (dag.ai, dag.x_lead, dag.shape.d0);
+        // (buffer index, padded lead, user rows, user cols) per node output
+        let node_out: Vec<(usize, usize, usize, usize)> = dag
+            .members
+            .iter()
+            .map(|mem| (mem.ci, mem.geom.np, mem.geom.m, mem.geom.n))
+            .collect();
+        let input_of = |s: Option<usize>| -> (usize, usize, usize) {
+            match s {
+                Some(j) => (node_out[j].0, node_out[j].1, node_out[j].3),
+                None => (x_buf, x_lead, d0),
+            }
+        };
+        let specs: Vec<(GemmGeom, DagOp, Option<usize>, Option<usize>, Option<usize>, usize, Option<Vec<T>>, bool)> =
+            dag.members
+                .iter()
+                .map(|mem| {
+                    (
+                        mem.geom,
+                        mem.op,
+                        mem.src,
+                        mem.src2,
+                        mem.bi,
+                        mem.ci,
+                        mem.bias.as_ref().map(|b| T::bytes_to_vec(b)),
+                        mem.relu,
+                    )
+                })
+                .collect();
+        let mut node_cycles = Vec::with_capacity(specs.len());
+        for (i, (g, op, src, src2, bi, ci, bias, relu)) in specs.into_iter().enumerate() {
+            // book each consuming edge's elided re-stage of a promoted
+            // interior output (the external x carries no such credit)
+            for s in [src, src2].into_iter().flatten() {
+                let (_, _, pm, pn) = node_out[s];
+                engine.note_dag_reuse((pm * pn * T::SIZE) as u64, "a");
+            }
+            let before = engine.trace.total(RegionClass::Compute).0;
+            match op {
+                DagOp::Gemm | DagOp::Gemv => {
+                    let (a_buf, _, _) = input_of(src);
+                    let bi = bi.expect("matmul node staged a weight");
+                    // the node's epilogue is part of its kernel key: a
+                    // promoted plan fuses bias/ReLU into the C write-back
+                    let epi = Epilogue::of(bias.is_some(), relu);
+                    let specialized = gemm_compute(
+                        engine,
+                        registry,
+                        &mut dag.staged,
+                        (a_buf, bi, ci),
+                        g,
+                        T::one(),
+                        T::zero(),
+                        kreg,
+                        epi,
+                    )?;
+                    chain_epilogue::<T>(
+                        engine,
+                        &mut dag.staged,
+                        ci,
+                        g,
+                        bias.as_deref(),
+                        relu,
+                        !specialized,
+                    )?;
+                }
+                DagOp::Axpy | DagOp::Dot => {
+                    let (i1, lead1, w) = input_of(src);
+                    let (i2, lead2, _) = input_of(src2);
+                    dag_fanin::<T>(
+                        engine,
+                        &mut dag.staged,
+                        op,
+                        rows,
+                        w,
+                        (i1, lead1),
+                        (i2, lead2),
+                        ci,
+                        g.np,
+                    )?;
+                }
+            }
+            let after = engine.trace.total(RegionClass::Compute).0;
+            node_cycles.push(after.saturating_sub(before));
+            if consumers[i] > 0 {
+                // the output stays resident: no map(from:), and every
+                // consumer's map(to:) of the same bytes is elided
+                let out = dag.staged.take(ci);
+                let user_bytes = (g.m * g.n * T::SIZE) as u64;
+                let kept = engine.promote_output_dag(out, user_bytes, "c")?;
+                dag.staged.replace(ci, kept);
+            }
+        }
+        engine.device_complete()?;
+        Ok(node_cycles)
+    })();
+
+    match r {
+        Ok(node_cycles) => Ok(DagState {
+            staged: dag.staged,
+            members: dag.members,
+            shape: dag.shape,
+            node_cycles,
+            x_bytes: dag.x_bytes,
+            elem_size: dag.elem_size,
+        }),
+        Err(e) => {
+            dag.staged.release_all(engine);
+            engine.abort_offload();
+            engine.target_end();
+            Err(e)
+        }
+    }
+}
+
+/// Join an executed DAG: drain the completion word, copy every SINK
+/// output back (un-padded into `outs`, sink index order), release every
+/// mapping — promoted intermediates drop their pins and stay resident
+/// under normal LRU — and exit the target region.
+///
+/// `publish = true` additionally registers the LAST sink's padded output
+/// in the operand cache before release ([`OffloadEngine::publish_output`]):
+/// the bytes stay resident (unpinned) so a cross-request fused consumer's
+/// `map(to:)` of the same activation is a verified hit.  No elision is
+/// counted at publish time — the fused consumer's hit books it.
+pub fn dag_finish<T: Elem>(
+    engine: &mut OffloadEngine,
+    mut state: DagState,
+    outs: &mut [&mut [T]],
+    publish: bool,
+) -> Result<()> {
+    let finish = (|| -> Result<()> {
+        if T::SIZE != state.elem_size {
+            return Err(Error::shape("dag_finish: element type mismatch"));
+        }
+        let sinks = state.shape.sinks();
+        if outs.len() != sinks.len() {
+            return Err(Error::shape(format!(
+                "dag_finish: {} outputs for a dag with {} sinks",
+                outs.len(),
+                sinks.len()
+            )));
+        }
+        engine.join_completed()?;
+        for (&s, out) in sinks.iter().zip(outs.iter_mut()) {
+            let g = state.members[s].geom;
+            if out.len() != g.m * g.n {
+                return Err(Error::shape(format!(
+                    "dag_finish: sink {s} output len {} != {}x{}",
+                    out.len(),
+                    g.m,
+                    g.n
+                )));
+            }
+            let ci = state.members[s].ci;
+            let mut c_out = vec![0u8; g.mp * g.np * T::SIZE];
+            engine.map_from_charged(
+                state.staged.get(ci),
+                &mut c_out,
+                (g.m * g.n * T::SIZE) as u64,
+                "c",
+            )?;
+            let c_full = T::bytes_to_vec(&c_out);
+            for r in 0..g.m {
+                out[r * g.n..(r + 1) * g.n]
+                    .copy_from_slice(&c_full[r * g.np..r * g.np + g.n]);
+            }
+        }
+        if publish {
+            let s = *sinks.last().expect("validated dag has a sink");
+            let ci = state.members[s].ci;
+            let buf = state.staged.take(ci);
+            let kept = engine.publish_output(buf, "c")?;
+            state.staged.replace(ci, kept);
+        }
+        state.staged.release_all(engine);
+        engine.target_end();
+        Ok(())
+    })();
+
+    if let Err(e) = finish {
+        state.staged.release_all(engine);
+        engine.abort_offload();
+        engine.target_end();
+        return Err(e);
+    }
+    Ok(())
+}
+
+/// Device-DRAM bytes a staged DAG occupies (input + every matmul node's
+/// weights + every node's output — everything is resident at once, the
+/// DAG's live-footprint high-water mark).  The formula lives in
+/// [`crate::cost::tile`], shared with the placement router's estimates.
+pub fn dag_staged_bytes<T: Elem>(registry: &ArtifactRegistry, shape: &DagShape) -> u64 {
+    let man = registry.manifest();
+    crate::cost::tile::dag_staged_bytes_tiled(
+        (man.tile_m, man.tile_n, man.tile_k),
+        shape,
+        T::SIZE,
+    )
 }
 

@@ -16,6 +16,7 @@ use std::sync::Arc;
 
 use crate::config::DispatchMode;
 use crate::cost::CostModel;
+use crate::dag::DagShape;
 use crate::hero::offload::OffloadKind;
 use crate::kernel::{Epilogue, KernelRegistry};
 
@@ -158,6 +159,42 @@ impl DispatchPolicy {
                 // threshold fallback: offload when any link clears the
                 // static gemm threshold (the model answers this better)
                 dims.iter().copied().chain(std::iter::once(m)).max().unwrap_or(0)
+                    >= self.gemm_threshold
+            }
+        };
+        if wins {
+            ExecTarget::Device
+        } else {
+            ExecTarget::Host
+        }
+    }
+
+    /// Decide for a DAG request: ONE graph-shaped launch (interior edges
+    /// device-resident) against every node dispatched individually on
+    /// the host.  Like [`DispatchPolicy::chain`], residency is a
+    /// copy-mode technique — a forced zero-copy mode still takes the
+    /// copy-mode device path.  A linear gemm-only DAG decides exactly
+    /// like the equivalent chain.
+    pub fn dag(&self, shape: &DagShape) -> ExecTarget {
+        if !self.kernel_allowed(OffloadKind::Gemm) || shape.nodes.is_empty() {
+            return ExecTarget::Host;
+        }
+        match self.forced() {
+            Some(ExecTarget::Host) => return ExecTarget::Host,
+            Some(_) => return ExecTarget::Device,
+            None => {}
+        }
+        let wins = match &self.model {
+            Some(cm) => cm.device_wins_dag(shape),
+            None => {
+                // threshold fallback, like the chain's: offload when any
+                // node dimension clears the static gemm threshold
+                shape
+                    .widths()
+                    .into_iter()
+                    .chain([shape.m, shape.d0])
+                    .max()
+                    .unwrap_or(0)
                     >= self.gemm_threshold
             }
         };
@@ -324,6 +361,38 @@ mod tests {
         let mut no_gemm = model_policy(false);
         no_gemm.device_kernels = vec![OffloadKind::Gemv];
         assert_eq!(no_gemm.chain(64, &[64, 64, 64, 64]), ExecTarget::Host);
+    }
+
+    #[test]
+    fn linear_dag_dispatch_matches_the_chain_decision() {
+        use crate::dag::linear_gemm_shape;
+        let p = model_policy(false);
+        for dims in [&[64usize, 64][..], &[64, 64, 64, 64], &[512, 512, 512]] {
+            let shape = linear_gemm_shape(64, dims);
+            assert_eq!(
+                p.dag(&shape),
+                p.chain(64, dims),
+                "linear dag vs chain for dims {dims:?}"
+            );
+        }
+        // forced modes override just like the chain's
+        let host = DispatchPolicy::with_mode(DispatchMode::HostOnly);
+        assert_eq!(
+            host.dag(&linear_gemm_shape(64, &[512, 512, 512])),
+            ExecTarget::Host
+        );
+        let zc = DispatchPolicy::with_mode(DispatchMode::DeviceZeroCopy);
+        assert_eq!(
+            zc.dag(&linear_gemm_shape(16, &[16, 16])),
+            ExecTarget::Device
+        );
+        // gemm disabled for the device => dags can never offload
+        let mut no_gemm = model_policy(false);
+        no_gemm.device_kernels = vec![OffloadKind::Gemv];
+        assert_eq!(
+            no_gemm.dag(&linear_gemm_shape(64, &[64, 64, 64, 64])),
+            ExecTarget::Host
+        );
     }
 
     #[test]

@@ -17,10 +17,11 @@ pub mod host;
 pub mod types;
 
 pub use api::{
-    ChainRun, ChainStagedRun, GemmBatchRun, GemmStagedRun, GemvBatchRun,
-    GemvStagedRun, HeroBlas,
+    ChainRun, ChainStagedRun, DagRun, DagStagedRun, GemmBatchRun,
+    GemmStagedRun, GemvBatchRun, GemvStagedRun, HeroBlas,
 };
 pub use device::ChainLinkSpec as ChainLink;
+pub use device::DagNodeSpec as DagNode;
 pub use dispatch::{DispatchPolicy, ExecTarget};
 pub use elem::Elem;
 pub use types::{Side, Transpose, Uplo};

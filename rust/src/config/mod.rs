@@ -12,7 +12,7 @@ mod workload;
 
 pub use platform::{
     CacheConfig, ChainConfig, ClockConfig, ClusterConfig, CostConfig,
-    DmaConfig, FaultConfig, ForkJoinConfig, HostConfig, IommuConfig,
+    DagConfig, DmaConfig, FaultConfig, ForkJoinConfig, HostConfig, IommuConfig,
     KernelConfig, MemoryConfig, PlacementConfig, PlatformConfig, SchedConfig,
     ServeConfig, TraceConfig,
 };

@@ -269,6 +269,43 @@ impl Default for ChainConfig {
     }
 }
 
+/// DAG-executor knobs (`[sched.dag]`): bounds on the `dag` serving op,
+/// which runs a typed dataflow graph (gemm/gemv/axpy/dot nodes with
+/// fan-out and fan-in) as one submission with device-resident edges
+/// (see `blas::device::dag_stage`).
+///
+/// Like a chain, a DAG stages its input, every matmul node's weights
+/// AND every node's output at once, so `max_nodes` bounds the spec
+/// before the capacity check against the cluster slice runs;
+/// `max_width`/`max_depth` bound the graph's shape so validation errors
+/// can name the exact node and level that blew the budget.
+/// `fuse_window_ms` bounds cross-request fusion: a completed DAG that
+/// declared a `publish_key` keeps its output resident that long, and a
+/// request arriving within the window whose `input_key` matches splices
+/// onto the resident buffer instead of a host round-trip (0 disables).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DagConfig {
+    /// Most nodes one dag request may carry (1..=64).
+    pub max_nodes: u32,
+    /// Most nodes at any one depth level (fan-out bound, 1..=16).
+    pub max_width: u32,
+    /// Longest dependency path through the graph (1..=32).
+    pub max_depth: u32,
+    /// Cross-request fusion window, milliseconds (<= 10000; 0 disables).
+    pub fuse_window_ms: u64,
+}
+
+impl Default for DagConfig {
+    fn default() -> Self {
+        DagConfig {
+            max_nodes: 16,
+            max_width: 4,
+            max_depth: 8,
+            fuse_window_ms: 50,
+        }
+    }
+}
+
 /// Fault-injection and recovery knobs (`[sched.fault]`).
 ///
 /// Default OFF: with the section absent (or `enabled = false`) no
@@ -436,6 +473,8 @@ pub struct SchedConfig {
     pub placement: PlacementConfig,
     /// Operation-chaining bounds (`[sched.chain]`).
     pub chain: ChainConfig,
+    /// DAG-executor bounds (`[sched.dag]`).
+    pub dag: DagConfig,
     /// Fault-injection and recovery knobs (`[sched.fault]`).
     pub fault: FaultConfig,
     /// Flight-recorder knobs (`[sched.trace]`).
@@ -452,6 +491,7 @@ impl Default for SchedConfig {
             cache: CacheConfig::default(),
             placement: PlacementConfig::default(),
             chain: ChainConfig::default(),
+            dag: DagConfig::default(),
             fault: FaultConfig::default(),
             trace: TraceConfig::default(),
         }
@@ -644,6 +684,23 @@ impl PlatformConfig {
                             .unwrap_or(def.chain.max_links as u64)
                             as u32,
                     },
+                    dag: DagConfig {
+                        max_nodes: d
+                            .opt_u64("sched.dag.max_nodes")
+                            .unwrap_or(def.dag.max_nodes as u64)
+                            as u32,
+                        max_width: d
+                            .opt_u64("sched.dag.max_width")
+                            .unwrap_or(def.dag.max_width as u64)
+                            as u32,
+                        max_depth: d
+                            .opt_u64("sched.dag.max_depth")
+                            .unwrap_or(def.dag.max_depth as u64)
+                            as u32,
+                        fuse_window_ms: d
+                            .opt_u64("sched.dag.fuse_window_ms")
+                            .unwrap_or(def.dag.fuse_window_ms),
+                    },
                     fault: FaultConfig {
                         enabled: d
                             .opt_bool("sched.fault.enabled")
@@ -760,6 +817,8 @@ impl PlatformConfig {
              [sched.placement]\naffinity = {}\nsteal = {}\n\
              big_shape_frac = {}\nrebalance_drains = {}\n\n\
              [sched.chain]\nmax_links = {}\n\n\
+             [sched.dag]\nmax_nodes = {}\nmax_width = {}\nmax_depth = {}\n\
+             fuse_window_ms = {}\n\n\
              [sched.fault]\nenabled = {}\nseed = {}\nstaging_rate = {}\n\
              mailbox_rate = {}\npoison_rate = {}\ntarget_cluster = {}\n\
              deadline_factor = {}\nmax_attempts = {}\nbackoff_base_ms = {}\n\
@@ -814,6 +873,10 @@ impl PlatformConfig {
             fmt_f64(c.sched.placement.big_shape_frac),
             c.sched.placement.rebalance_drains,
             c.sched.chain.max_links,
+            c.sched.dag.max_nodes,
+            c.sched.dag.max_width,
+            c.sched.dag.max_depth,
+            c.sched.dag.fuse_window_ms,
             c.sched.fault.enabled,
             c.sched.fault.seed,
             fmt_f64(c.sched.fault.staging_rate),
@@ -902,6 +965,32 @@ impl PlatformConfig {
             return err(format!(
                 "sched.chain.max_links must be in 1..=32, got {}",
                 self.sched.chain.max_links
+            ));
+        }
+        let dg = &self.sched.dag;
+        if dg.max_nodes == 0 || dg.max_nodes > 64 {
+            return err(format!(
+                "sched.dag.max_nodes must be in 1..=64, got {}",
+                dg.max_nodes
+            ));
+        }
+        if dg.max_width == 0 || dg.max_width > 16 {
+            return err(format!(
+                "sched.dag.max_width must be in 1..=16, got {}",
+                dg.max_width
+            ));
+        }
+        if dg.max_depth == 0 || dg.max_depth > 32 {
+            return err(format!(
+                "sched.dag.max_depth must be in 1..=32, got {}",
+                dg.max_depth
+            ));
+        }
+        if dg.fuse_window_ms > 10_000 {
+            return err(format!(
+                "sched.dag.fuse_window_ms must be <= 10000 (0 disables \
+                 fusion), got {}",
+                dg.fuse_window_ms
             ));
         }
         if !(0.0..=0.97).contains(&self.sched.placement.big_shape_frac) {
@@ -1224,6 +1313,44 @@ mod tests {
         let mut cfg = PlatformConfig::default();
         cfg.sched.chain.max_links = 33;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn dag_section_parses_defaults_and_validates() {
+        // absent [sched.dag] => defaults
+        let mut text = PlatformConfig::default().to_toml_string();
+        let at = text.find("[sched.dag]").unwrap();
+        text.truncate(at);
+        let cfg = PlatformConfig::from_toml_str(&text).unwrap();
+        assert_eq!(cfg.sched.dag, DagConfig::default());
+        assert_eq!(cfg.sched.dag.max_nodes, 16);
+        assert_eq!(cfg.sched.dag.max_width, 4);
+        assert_eq!(cfg.sched.dag.max_depth, 8);
+        assert_eq!(cfg.sched.dag.fuse_window_ms, 50);
+
+        // explicit values round-trip (fuse_window_ms = 0 disables fusion)
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.dag.max_nodes = 32;
+        cfg.sched.dag.max_width = 8;
+        cfg.sched.dag.max_depth = 16;
+        cfg.sched.dag.fuse_window_ms = 0;
+        let back = PlatformConfig::from_toml_str(&cfg.to_toml_string()).unwrap();
+        assert_eq!(back.sched.dag, cfg.sched.dag);
+
+        // out-of-range knobs rejected
+        for mutate in [
+            (|c: &mut PlatformConfig| c.sched.dag.max_nodes = 0) as fn(&mut _),
+            |c| c.sched.dag.max_nodes = 65,
+            |c| c.sched.dag.max_width = 0,
+            |c| c.sched.dag.max_width = 17,
+            |c| c.sched.dag.max_depth = 0,
+            |c| c.sched.dag.max_depth = 33,
+            |c| c.sched.dag.fuse_window_ms = 10_001,
+        ] {
+            let mut cfg = PlatformConfig::default();
+            mutate(&mut cfg);
+            assert!(cfg.validate().is_err());
+        }
     }
 
     #[test]

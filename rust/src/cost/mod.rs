@@ -40,7 +40,8 @@ pub mod tile;
 pub use calibrate::Calibration;
 pub use model::{CostModel, Crossovers};
 pub use tile::{
-    chain_staged_bytes_tiled, gemm_staged_bytes_tiled, gemm_tile_costs,
+    chain_staged_bytes_tiled, dag_staged_bytes_tiled, gemm_staged_bytes_tiled,
+    gemm_tile_costs,
     gemv_panel_costs, gemv_staged_bytes_tiled, level1_chunk_costs, round_up,
     specialized_gemm_tile_costs, specialized_gemv_panel_costs,
     specialized_level1_chunk_costs, GemmTileCosts, GemvPanelCosts,

@@ -31,6 +31,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::config::{CostConfig, DispatchMode, ForkJoinConfig, PlatformConfig};
+use crate::dag::{DagOp, DagShape};
 use crate::runtime::Manifest;
 use crate::soc::{Cva6Model, DmaModel, SnitchCluster};
 
@@ -343,6 +344,186 @@ impl CostModel {
             DispatchMode::HostOnly => false,
             DispatchMode::DeviceOnly | DispatchMode::DeviceZeroCopy => true,
             DispatchMode::Auto => self.device_wins_chain(m, dims),
+        }
+    }
+
+    /// One streamed level-1-style pass over `n` elements (the fan-in and
+    /// epilogue charge shape: stream in, FPU, stream out) — the exact
+    /// formula `blas::device` charges for `dag_axpy`/`dag_dot` and the
+    /// unfused `chain_epilogue`.
+    fn level1_pass_cycles(&self, n: usize) -> f64 {
+        let c = tile::level1_chunk_costs(&self.dma, &self.cluster, n);
+        (c.dma.max(c.fpu) + c.dma).0 as f64
+    }
+
+    /// Compute cycles of node `i`'s walk alone (no epilogue): the tile
+    /// walk for matmul nodes, the streamed fan-in pass for axpy/dot.
+    fn dag_node_compute_cycles(&self, shape: &DagShape, i: usize) -> f64 {
+        let node = &shape.nodes[i];
+        let k = shape.in_width(i);
+        match node.op {
+            DagOp::Gemm => self.gemm_walk_cycles((shape.m, node.n, k), true),
+            DagOp::Gemv => self.gemm_walk_cycles((shape.m, 1, k), true),
+            DagOp::Axpy | DagOp::Dot => self.level1_pass_cycles(shape.m * k),
+        }
+    }
+
+    /// Predicted compute-region cycles of DAG node `i`: the walk plus the
+    /// epilogue pass when the node declares one — the same charges the
+    /// executor makes between its per-node trace snapshots, so an
+    /// observed per-node delta divides by this prediction cleanly (see
+    /// [`CostModel::observe_dag_nodes`]).
+    pub fn dag_node_walk_cycles(&self, shape: &DagShape, i: usize) -> f64 {
+        let node = &shape.nodes[i];
+        let mut cycles = self.dag_node_compute_cycles(shape, i);
+        if node.bias || node.relu {
+            cycles += self.level1_pass_cycles(shape.m * shape.widths()[i]);
+        }
+        cycles
+    }
+
+    /// Predicted cycles for one device *DAG* launch: ONE fork-join covers
+    /// every node; the external activation copies in once, only sink
+    /// outputs copy out, and every interior edge costs one `dag_keep`
+    /// plus one `dag_reuse` setup per consumer instead of a map-out +
+    /// map-in round trip.  For a linear gemm-only DAG this is — charge
+    /// for charge — [`CostModel::offload_chain_cycles`].
+    pub fn offload_dag_cycles(&self, shape: &DagShape) -> f64 {
+        if shape.nodes.is_empty() {
+            return 0.0;
+        }
+        let esz = 8u64;
+        let widths = shape.widths();
+        let consumers = shape.consumer_counts();
+        let mut total = self.forkjoin_shared()
+            + (self.fj.per_arg_cycles * shape.marshalled_args() as u64) as f64;
+        total += self.memcpy((shape.m * shape.d0) as u64 * esz); // x in
+        for (i, node) in shape.nodes.iter().enumerate() {
+            if node.op.is_matmul() {
+                let k = shape.in_width(i);
+                total += self.memcpy((k * widths[i]) as u64 * esz); // B_i in (cold)
+            }
+            total += self.memcpy_setup(); // C_i staged map(alloc:)-style
+            total += self.dag_node_compute_cycles(shape, i);
+            if consumers[i] > 0 {
+                // resident hand-off: dag_keep once + dag_reuse per consumer
+                total += (1 + consumers[i]) as f64 * self.memcpy_setup();
+            }
+        }
+        for s in shape.sinks() {
+            let (om, on) = shape.out_dims(s);
+            total += self.memcpy((om * on) as u64 * esz); // sink C out
+        }
+        total
+    }
+
+    /// Predicted cycles for the same DAG on the host path (one host call
+    /// per node; the epilogues are negligible and identical on both
+    /// paths, as for chains).
+    pub fn host_dag_cycles(&self, shape: &DagShape) -> f64 {
+        (0..shape.nodes.len())
+            .map(|i| self.host_dag_node_cycles(shape, i))
+            .sum()
+    }
+
+    fn host_dag_node_cycles(&self, shape: &DagShape, i: usize) -> f64 {
+        let node = &shape.nodes[i];
+        let k = shape.in_width(i);
+        match node.op {
+            DagOp::Gemm => self.host.gemm_cycles(shape.m, node.n, k, false).0 as f64,
+            DagOp::Gemv => self.host.gemv_cycles(shape.m, k, false).0 as f64,
+            DagOp::Axpy | DagOp::Dot => {
+                self.host.level1_cycles(shape.m * k, 2.0, false).0 as f64
+            }
+        }
+    }
+
+    /// Staged device-DRAM footprint of an f64 DAG (everything resident at
+    /// once — see [`tile::dag_staged_bytes_tiled`]).
+    pub fn dag_staged_bytes(&self, shape: &DagShape) -> u64 {
+        tile::dag_staged_bytes_tiled(self.tile, shape, 8)
+    }
+
+    /// Does the device path win an f64 DAG?  Each node's walk is scaled
+    /// by its own op family's calibration; the shared charges (fork-join,
+    /// maps, hand-off setups) ride under the GEMM scales, since matmul
+    /// trunks dominate every DAG worth offloading.  For an all-gemm
+    /// linear DAG the comparison reduces exactly to
+    /// [`CostModel::device_wins_chain`]'s.
+    pub fn device_wins_dag(&self, shape: &DagShape) -> bool {
+        if shape.nodes.is_empty() {
+            return false;
+        }
+        let mut shared = self.offload_dag_cycles(shape);
+        let mut device = 0.0;
+        let mut host = 0.0;
+        for (i, node) in shape.nodes.iter().enumerate() {
+            let fam = dag_family(node.op);
+            let walk = self.dag_node_compute_cycles(shape, i);
+            shared -= walk;
+            device += self.scaled_device(fam, walk);
+            host += self.scaled_host(fam, self.host_dag_node_cycles(shape, i));
+        }
+        device += self.scaled_device(CostOp::Gemm, shared);
+        device < host
+    }
+
+    /// The DAG arm of the shared mode-to-path mapping (see
+    /// [`CostModel::decides_device`]).  Graph residency is a copy-mode
+    /// technique, so a zero-copy forcing still runs the copy-mode path.
+    pub fn decides_device_dag(&self, shape: &DagShape, mode: DispatchMode) -> bool {
+        match mode {
+            DispatchMode::HostOnly => false,
+            DispatchMode::DeviceOnly | DispatchMode::DeviceZeroCopy => true,
+            DispatchMode::Auto => self.device_wins_dag(shape),
+        }
+    }
+
+    /// Per-node DAG feedback — the per-link attribution that whole-launch
+    /// [`CostModel::observe_chain`] skips.  `node_cycles` are the
+    /// executor's per-node compute-region trace deltas; each divides by
+    /// its own node's predicted walk and folds into that node's op-family
+    /// device scale, so a mixed DAG calibrates gemm, gemv and level-1
+    /// independently from ONE launch.
+    pub fn observe_dag_nodes(&self, shape: &DagShape, node_cycles: &[u64]) {
+        if !self.knobs.calibrate || node_cycles.len() != shape.nodes.len() {
+            return;
+        }
+        for (i, (node, &observed)) in
+            shape.nodes.iter().zip(node_cycles).enumerate()
+        {
+            if observed == 0 {
+                continue;
+            }
+            self.calib.observe_device(
+                dag_family(node.op),
+                self.dag_node_walk_cycles(shape, i),
+                observed as f64,
+                &self.knobs,
+            );
+        }
+    }
+
+    /// Host-path DAG feedback: the whole-launch timing apportioned by
+    /// each present family's predicted share (the host path has no
+    /// per-node trace seam).
+    pub fn observe_dag_host(&self, shape: &DagShape, observed_cycles: u64) {
+        if !self.knobs.calibrate || observed_cycles == 0 || shape.nodes.is_empty() {
+            return;
+        }
+        let total = self.host_dag_cycles(shape);
+        if total <= 0.0 {
+            return;
+        }
+        let ratio = observed_cycles as f64 / total;
+        let mut seen = [false; 3];
+        for node in &shape.nodes {
+            let fam = dag_family(node.op);
+            if !seen[fam.idx()] {
+                seen[fam.idx()] = true;
+                // fold observed/predicted once per family present
+                self.calib.observe_host(fam, 1.0, ratio, &self.knobs);
+            }
         }
     }
 
@@ -737,6 +918,15 @@ impl CostModel {
     }
 }
 
+/// The calibration family a DAG node's timings fold into.
+fn dag_family(op: DagOp) -> CostOp {
+    match op {
+        DagOp::Gemm => CostOp::Gemm,
+        DagOp::Gemv => CostOp::Gemv,
+        DagOp::Axpy | DagOp::Dot => CostOp::Level1,
+    }
+}
+
 /// Smallest `n in 1..=hi` satisfying `p` (binary search; the win
 /// predicate is monotone in problem size because the device advantage
 /// grows with FLOPs while the fork-join stays fixed).
@@ -1038,6 +1228,168 @@ mod tests {
         assert!(
             (mh.calibration().host_scale(CostOp::Gemm) - 2.0).abs() < 0.1,
             "host-path chain feedback calibrates the host scale"
+        );
+    }
+
+    #[test]
+    fn linear_dag_estimates_are_the_chain_estimates() {
+        use crate::dag::linear_gemm_shape;
+        let m = model();
+        for dims in [&[64usize, 64][..], &[64, 64, 64, 64], &[512, 128, 64]] {
+            let shape = linear_gemm_shape(64, dims);
+            // charge for charge: a linear gemm dag IS the chain
+            assert_eq!(
+                m.offload_dag_cycles(&shape),
+                m.offload_chain_cycles(64, dims),
+                "device estimate for dims {dims:?}"
+            );
+            assert_eq!(
+                m.host_dag_cycles(&shape),
+                m.host_chain_cycles(64, dims),
+                "host estimate for dims {dims:?}"
+            );
+            assert_eq!(
+                m.device_wins_dag(&shape),
+                m.device_wins_chain(64, dims),
+                "decision for dims {dims:?}"
+            );
+        }
+        // mode mapping mirrors the chain's
+        let shape = linear_gemm_shape(64, &[64, 64, 64, 64]);
+        assert!(m.decides_device_dag(&shape, DispatchMode::Auto));
+        assert!(!m.decides_device_dag(&shape, DispatchMode::HostOnly));
+        assert!(m.decides_device_dag(
+            &linear_gemm_shape(16, &[16, 16]),
+            DispatchMode::DeviceOnly
+        ));
+        // degenerate
+        assert!(!m.device_wins_dag(&DagShape { m: 8, d0: 8, nodes: vec![] }));
+        assert_eq!(
+            m.offload_dag_cycles(&DagShape { m: 8, d0: 8, nodes: vec![] }),
+            0.0
+        );
+    }
+
+    #[test]
+    fn fanout_dag_undercuts_two_separate_chain_launches() {
+        use crate::dag::DagNodeShape;
+        let m = model();
+        // a two-head MLP: shared 64->256 trunk feeding two 256->64 heads
+        let two_head = DagShape {
+            m: 64,
+            d0: 64,
+            nodes: vec![
+                DagNodeShape {
+                    op: DagOp::Gemm,
+                    src: None,
+                    src2: None,
+                    n: 256,
+                    bias: false,
+                    relu: false,
+                },
+                DagNodeShape {
+                    op: DagOp::Gemm,
+                    src: Some(0),
+                    src2: None,
+                    n: 64,
+                    bias: false,
+                    relu: false,
+                },
+                DagNodeShape {
+                    op: DagOp::Gemm,
+                    src: Some(0),
+                    src2: None,
+                    n: 64,
+                    bias: false,
+                    relu: false,
+                },
+            ],
+        };
+        // against two chained submissions the dag stages the trunk once
+        // and pays one fork-join instead of two
+        let dag = m.offload_dag_cycles(&two_head);
+        let chains = 2.0 * m.offload_chain_cycles(64, &[64, 256, 64]);
+        assert!(
+            dag < chains - m.forkjoin_shared(),
+            "dag {dag} vs two chains {chains}"
+        );
+    }
+
+    #[test]
+    fn per_node_attribution_calibrates_each_family_independently() {
+        use crate::dag::DagNodeShape;
+        let m = calibrating_model();
+        // a mixed dag: two gemm heads off x, an axpy fan-in, a gemv sink
+        let node = |op, src, src2, n| DagNodeShape {
+            op,
+            src,
+            src2,
+            n,
+            bias: false,
+            relu: false,
+        };
+        let shape = DagShape {
+            m: 64,
+            d0: 64,
+            nodes: vec![
+                node(DagOp::Gemm, None, None, 64),
+                node(DagOp::Gemm, None, None, 64),
+                node(DagOp::Axpy, Some(0), Some(1), 0),
+                node(DagOp::Gemv, Some(2), None, 0),
+            ],
+        };
+        // the device really runs gemm walks 3x, gemv 2x, level-1 1.5x
+        // slower than predicted: ONE launch's per-node deltas calibrate
+        // all three families, each to its own truth
+        let factor = |op: DagOp| match op {
+            DagOp::Gemm => 3.0,
+            DagOp::Gemv => 2.0,
+            DagOp::Axpy | DagOp::Dot => 1.5,
+        };
+        let cycles: Vec<u64> = (0..shape.nodes.len())
+            .map(|i| {
+                (m.dag_node_walk_cycles(&shape, i) * factor(shape.nodes[i].op))
+                    as u64
+            })
+            .collect();
+        for _ in 0..64 {
+            m.observe_dag_nodes(&shape, &cycles);
+        }
+        let c = m.calibration();
+        assert!((c.device_scale(CostOp::Gemm) - 3.0).abs() < 0.15);
+        assert!((c.device_scale(CostOp::Gemv) - 2.0).abs() < 0.15);
+        assert!((c.device_scale(CostOp::Level1) - 1.5).abs() < 0.15);
+        // host scales are untouched by device-path attribution
+        assert_eq!(c.host_scale(CostOp::Gemm), 1.0);
+
+        // guards: a length mismatch or calibration off stays inert
+        let frozen = c.device_scale(CostOp::Gemm);
+        m.observe_dag_nodes(&shape, &cycles[..2]);
+        assert_eq!(m.calibration().device_scale(CostOp::Gemm), frozen);
+        let off = model();
+        off.observe_dag_nodes(&shape, &cycles);
+        assert_eq!(off.calibration().device_scale(CostOp::Gemm), 1.0);
+
+        // host-path whole-launch feedback reaches every family present
+        let mh = calibrating_model();
+        let pred = mh.host_dag_cycles(&shape);
+        for _ in 0..64 {
+            mh.observe_dag_host(&shape, (pred * 2.0) as u64);
+        }
+        for fam in [CostOp::Gemm, CostOp::Gemv, CostOp::Level1] {
+            let s = mh.calibration().host_scale(fam);
+            assert!((s - 2.0).abs() < 0.1, "host {fam:?} scale {s}");
+        }
+    }
+
+    #[test]
+    fn dag_footprint_matches_the_tile_formula() {
+        use crate::dag::linear_gemm_shape;
+        let m = model();
+        let shape = linear_gemm_shape(128, &[256, 128, 64]);
+        assert_eq!(
+            m.dag_staged_bytes(&shape),
+            crate::cost::tile::dag_staged_bytes_tiled((64, 64, 64), &shape, 8)
         );
     }
 

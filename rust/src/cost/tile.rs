@@ -220,6 +220,39 @@ pub fn chain_staged_bytes_tiled(
     total
 }
 
+/// Device-DRAM bytes one staged DAG occupies: the external input, every
+/// matmul node's weight operand and every node's output, all resident
+/// at once because interior edges never return to the host.  A linear
+/// gemm DAG sums to exactly [`chain_staged_bytes_tiled`] — the executor
+/// stages the identical buffers for it by construction.
+pub fn dag_staged_bytes_tiled(
+    (tm, tn, tk): (usize, usize, usize),
+    shape: &crate::dag::DagShape,
+    elem_size: usize,
+) -> u64 {
+    use crate::dag::DagOp;
+    let mp = round_up(shape.m, tm);
+    let widths = shape.widths();
+    let mut total = (mp * round_up(shape.d0, tk) * elem_size) as u64; // input x
+    for (i, node) in shape.nodes.iter().enumerate() {
+        let k = shape.in_width(i);
+        total += match node.op {
+            // weight B_i (kp x np) + output C_i (mp x np)
+            DagOp::Gemm => {
+                let (kp, np) = (round_up(k, tk), round_up(widths[i], tn));
+                ((kp * np + mp * np) * elem_size) as u64
+            }
+            // b column padded to one tile column + output (mp x tn)
+            DagOp::Gemv => ((round_up(k, tk) * tn + mp * tn) * elem_size) as u64,
+            // fan-in over resident buffers: only the output is new
+            DagOp::Axpy => (mp * round_up(widths[i], tn) * elem_size) as u64,
+            // scalar sink, held in one padded tile
+            DagOp::Dot => (tm * tn * elem_size) as u64,
+        };
+    }
+    total
+}
+
 /// Device-DRAM bytes one staged member occupies for an (m, n) GEMV —
 /// the padded A matrix, the tile-width x matrix and the y vector.
 pub fn gemv_staged_bytes_tiled(
@@ -332,5 +365,56 @@ mod tests {
         // degenerate specs stage nothing
         assert_eq!(chain_staged_bytes_tiled(tile, 64, &[64], 8), 0);
         assert_eq!(chain_staged_bytes_tiled(tile, 64, &[], 8), 0);
+    }
+
+    #[test]
+    fn dag_staged_bytes_match_the_chain_for_linear_specs() {
+        use crate::dag::{linear_gemm_shape, DagNodeShape, DagOp, DagShape};
+        let tile = (64, 64, 64);
+        // a linear gemm DAG stages exactly what the chain stages
+        for dims in [vec![64, 64, 64], vec![128, 96, 32], vec![65, 65]] {
+            let s = linear_gemm_shape(70, &dims);
+            assert_eq!(
+                dag_staged_bytes_tiled(tile, &s, 8),
+                chain_staged_bytes_tiled(tile, 70, &dims, 8)
+            );
+        }
+        // fan-out shares the trunk: two heads off one trunk stage the
+        // trunk's output once — x + (B0+C0) + 2x(B+C heads)
+        let s = DagShape {
+            m: 64,
+            d0: 64,
+            nodes: vec![
+                DagNodeShape {
+                    op: DagOp::Gemm,
+                    src: None,
+                    src2: None,
+                    n: 64,
+                    bias: false,
+                    relu: false,
+                },
+                DagNodeShape {
+                    op: DagOp::Gemm,
+                    src: Some(0),
+                    src2: None,
+                    n: 64,
+                    bias: false,
+                    relu: false,
+                },
+                DagNodeShape {
+                    op: DagOp::Gemv,
+                    src: Some(0),
+                    src2: None,
+                    n: 0,
+                    bias: false,
+                    relu: false,
+                },
+            ],
+        };
+        let x = 64 * 64 * 8u64;
+        assert_eq!(
+            dag_staged_bytes_tiled(tile, &s, 8),
+            x + 2 * x + 2 * x + (64 * 64 + 64 * 64) * 8
+        );
     }
 }

@@ -1,0 +1,513 @@
+//! Typed dataflow-graph IR for the serving DAG executor.
+//!
+//! [`DagShape`] is the shape-level description of one request: nodes are
+//! gemm / gemv / axpy / dot ops with optional bias/ReLU epilogues, edges
+//! are resident-buffer dependencies.  Node specs are **topologically
+//! ordered by construction** — a node may only consume outputs of nodes
+//! with a *smaller* index (or the external input `x`), so acyclicity is
+//! structural: a backward or self edge is rejected as a cycle, never
+//! walked.  Fan-out is a node output with several consumers (the
+//! executor promotes it once and pins it until the last consumer ran);
+//! fan-in is an axpy/dot node over two inputs.
+//!
+//! This module sits below both `blas` (lowering) and `cost`
+//! (estimation) so the one IR is shared by validation, dispatch,
+//! placement footprints and the device executor — it depends on
+//! nothing else in the crate.
+
+use std::fmt;
+
+/// Node op kinds the executor lowers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DagOp {
+    /// (m x k) @ (k x n) matmul; the only op carrying an output width.
+    Gemm,
+    /// (m x k) @ (k x 1): lowered through the gemm walk with n = 1.
+    Gemv,
+    /// Element-wise fan-in add of two same-width activations.
+    Axpy,
+    /// Fan-in reduction Σ a·b to one scalar; must be a sink.
+    Dot,
+}
+
+impl DagOp {
+    /// Serve-protocol name.
+    pub fn name(self) -> &'static str {
+        match self {
+            DagOp::Gemm => "gemm",
+            DagOp::Gemv => "gemv",
+            DagOp::Axpy => "axpy",
+            DagOp::Dot => "dot",
+        }
+    }
+
+    /// Parse a serve-protocol name.
+    pub fn from_name(s: &str) -> Option<DagOp> {
+        match s {
+            "gemm" => Some(DagOp::Gemm),
+            "gemv" => Some(DagOp::Gemv),
+            "axpy" => Some(DagOp::Axpy),
+            "dot" => Some(DagOp::Dot),
+            _ => None,
+        }
+    }
+
+    /// Does this op stage a weight operand and run the gemm tile walk?
+    pub fn is_matmul(self) -> bool {
+        matches!(self, DagOp::Gemm | DagOp::Gemv)
+    }
+}
+
+impl fmt::Display for DagOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One node of a [`DagShape`].  `src`/`src2` are producer node indices;
+/// `None` consumes the DAG's external input `x` (m x d0).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DagNodeShape {
+    pub op: DagOp,
+    /// First input: a smaller node index, or `None` for the external x.
+    pub src: Option<usize>,
+    /// Second input (axpy/dot only).
+    pub src2: Option<usize>,
+    /// Output width for gemm (ignored for gemv/axpy/dot).
+    pub n: usize,
+    /// Add a per-row bias before `relu` (gemm/gemv only).
+    pub bias: bool,
+    /// Clamp at zero after the bias (gemm/gemv only).
+    pub relu: bool,
+}
+
+/// The shape of one DAG request: an (m x d0) external input and a
+/// topologically-ordered node list.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DagShape {
+    pub m: usize,
+    pub d0: usize,
+    pub nodes: Vec<DagNodeShape>,
+}
+
+impl DagShape {
+    /// Output width of every node, in index order.  Robust against
+    /// not-yet-validated specs: a non-forward edge falls back to `d0`
+    /// (validation rejects it before anything consumes the number).
+    pub fn widths(&self) -> Vec<usize> {
+        let mut w = Vec::with_capacity(self.nodes.len());
+        for (i, node) in self.nodes.iter().enumerate() {
+            let input = |s: Option<usize>| -> usize {
+                match s {
+                    Some(j) if j < i => w[j],
+                    _ => self.d0,
+                }
+            };
+            w.push(match node.op {
+                DagOp::Gemm => node.n,
+                DagOp::Gemv | DagOp::Dot => 1,
+                DagOp::Axpy => input(node.src),
+            });
+        }
+        w
+    }
+
+    /// Width of node `i`'s first input (the activation a matmul walks).
+    pub fn in_width(&self, i: usize) -> usize {
+        let w = self.widths();
+        match self.nodes[i].src {
+            Some(j) if j < i => w[j],
+            _ => self.d0,
+        }
+    }
+
+    /// (rows, cols) of node `i`'s user-visible output.
+    pub fn out_dims(&self, i: usize) -> (usize, usize) {
+        match self.nodes[i].op {
+            DagOp::Dot => (1, 1),
+            _ => (self.m, self.widths()[i]),
+        }
+    }
+
+    /// How many nodes consume each node's output (edges from `src` and
+    /// `src2`; the external input is not counted).
+    pub fn consumer_counts(&self) -> Vec<u32> {
+        let mut counts = vec![0u32; self.nodes.len()];
+        for (i, node) in self.nodes.iter().enumerate() {
+            for s in [node.src, node.src2].into_iter().flatten() {
+                if s < i {
+                    counts[s] += 1;
+                }
+            }
+        }
+        counts
+    }
+
+    /// Nodes with no consumers, in index order — the DAG's outputs.
+    pub fn sinks(&self) -> Vec<usize> {
+        self.consumer_counts()
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c == 0)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Per-node depth (longest path from the external input, in nodes).
+    pub fn depths(&self) -> Vec<u32> {
+        let mut d = Vec::with_capacity(self.nodes.len());
+        for (i, node) in self.nodes.iter().enumerate() {
+            let of = |s: Option<usize>| -> u32 {
+                match s {
+                    Some(j) if j < i => d[j],
+                    _ => 0,
+                }
+            };
+            d.push(1 + of(node.src).max(of(node.src2)));
+        }
+        d
+    }
+
+    /// Longest path length in nodes.
+    pub fn depth(&self) -> u32 {
+        self.depths().into_iter().max().unwrap_or(0)
+    }
+
+    /// Is this a linear, gemm-only, single-consumer pipeline — i.e.
+    /// exactly what `gemm_chain` expresses?  Such DAGs lower to the
+    /// identical charge sequence as the chain path by construction.
+    pub fn is_linear_gemm(&self) -> bool {
+        !self.nodes.is_empty()
+            && self.nodes.iter().enumerate().all(|(i, n)| {
+                n.op == DagOp::Gemm
+                    && n.src2.is_none()
+                    && n.src == if i == 0 { None } else { Some(i - 1) }
+            })
+    }
+
+    /// The equivalent chain layer-width list `[d0, n1, .., nL]` when
+    /// this DAG is a linear gemm pipeline.
+    pub fn chain_dims(&self) -> Option<Vec<usize>> {
+        if !self.is_linear_gemm() {
+            return None;
+        }
+        let mut dims = vec![self.d0];
+        dims.extend(self.nodes.iter().map(|n| n.n));
+        Some(dims)
+    }
+
+    /// Marshalled offload arguments: x plus 2 per matmul node (B + C)
+    /// and 1 per axpy/dot node (C only).
+    pub fn marshalled_args(&self) -> usize {
+        1 + self
+            .nodes
+            .iter()
+            .map(|n| if n.op.is_matmul() { 2 } else { 1 })
+            .sum::<usize>()
+    }
+
+    /// Shape validation under the `[sched.dag]` bounds.  Every rejection
+    /// names the offending node id, its op and the violated bound —
+    /// unlike `validate_chain`'s anonymous errors.
+    pub fn validate(
+        &self,
+        max_nodes: u32,
+        max_width: u32,
+        max_depth: u32,
+    ) -> Result<(), String> {
+        if self.nodes.is_empty() {
+            return Err("dag has no nodes (need at least 1)".into());
+        }
+        if self.nodes.len() as u32 > max_nodes {
+            return Err(format!(
+                "dag has {} nodes; [sched.dag] max_nodes = {max_nodes}",
+                self.nodes.len()
+            ));
+        }
+        if self.m == 0 || self.d0 == 0 {
+            return Err(format!(
+                "dag input is {}x{}; m and d0 must be nonzero",
+                self.m, self.d0
+            ));
+        }
+        for (i, node) in self.nodes.iter().enumerate() {
+            let op = node.op;
+            for s in [node.src, node.src2].into_iter().flatten() {
+                if s >= i {
+                    return Err(format!(
+                        "node {i} ({op}): edge from node {s} is not a forward \
+                         edge — specs are topologically ordered, so this is a \
+                         cycle"
+                    ));
+                }
+                if self.nodes[s].op == DagOp::Dot {
+                    return Err(format!(
+                        "node {i} ({op}): consumes node {s} (dot), but dot \
+                         yields a scalar and must be a sink"
+                    ));
+                }
+            }
+            match op {
+                DagOp::Gemm => {
+                    if node.n == 0 {
+                        return Err(format!(
+                            "node {i} (gemm): output width must be nonzero"
+                        ));
+                    }
+                    if node.src2.is_some() {
+                        return Err(format!(
+                            "node {i} (gemm): src2 applies to fan-in \
+                             (axpy/dot) nodes only"
+                        ));
+                    }
+                }
+                DagOp::Gemv => {
+                    if node.src2.is_some() {
+                        return Err(format!(
+                            "node {i} (gemv): src2 applies to fan-in \
+                             (axpy/dot) nodes only"
+                        ));
+                    }
+                }
+                DagOp::Axpy | DagOp::Dot => {
+                    if node.bias || node.relu {
+                        return Err(format!(
+                            "node {i} ({op}): bias/relu epilogues are \
+                             gemm/gemv-only"
+                        ));
+                    }
+                    let w = self.widths();
+                    let of = |s: Option<usize>| match s {
+                        Some(j) => w[j],
+                        None => self.d0,
+                    };
+                    let (a, b) = (of(node.src), of(node.src2));
+                    if a != b {
+                        return Err(format!(
+                            "node {i} ({op}): fan-in inputs are {a} and {b} \
+                             wide — they must match"
+                        ));
+                    }
+                }
+            }
+        }
+        let depths = self.depths();
+        let mut per_level = std::collections::HashMap::new();
+        for (i, &d) in depths.iter().enumerate() {
+            let op = self.nodes[i].op;
+            if d > max_depth {
+                return Err(format!(
+                    "node {i} ({op}): dag depth {d} exceeds [sched.dag] \
+                     max_depth = {max_depth}"
+                ));
+            }
+            let c = per_level.entry(d).or_insert(0u32);
+            *c += 1;
+            if *c > max_width {
+                return Err(format!(
+                    "node {i} ({op}): {c} nodes at depth {d} exceeds \
+                     [sched.dag] max_width = {max_width}"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A linear gemm chain `[d0, n1, .., nL]` as a [`DagShape`] — the
+/// promotion direction ROADMAP item 2 calls for, used by tests and the
+/// chain-compatibility paths.
+pub fn linear_gemm_shape(m: usize, dims: &[usize]) -> DagShape {
+    let nodes = dims
+        .windows(2)
+        .enumerate()
+        .map(|(i, w)| DagNodeShape {
+            op: DagOp::Gemm,
+            src: if i == 0 { None } else { Some(i - 1) },
+            src2: None,
+            n: w[1],
+            bias: false,
+            relu: false,
+        })
+        .collect();
+    DagShape { m, d0: dims.first().copied().unwrap_or(0), nodes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gemm(src: Option<usize>, n: usize) -> DagNodeShape {
+        DagNodeShape { op: DagOp::Gemm, src, src2: None, n, bias: false, relu: false }
+    }
+
+    fn two_head() -> DagShape {
+        // x -> trunk gemm -> {head a, head b} -> axpy fan-in
+        DagShape {
+            m: 8,
+            d0: 16,
+            nodes: vec![
+                gemm(None, 32),
+                gemm(Some(0), 8),
+                gemm(Some(0), 8),
+                DagNodeShape {
+                    op: DagOp::Axpy,
+                    src: Some(1),
+                    src2: Some(2),
+                    n: 0,
+                    bias: false,
+                    relu: false,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn widths_sinks_and_depths_follow_the_edges() {
+        let s = two_head();
+        assert_eq!(s.widths(), vec![32, 8, 8, 8]);
+        assert_eq!(s.in_width(0), 16);
+        assert_eq!(s.in_width(1), 32);
+        assert_eq!(s.consumer_counts(), vec![2, 1, 1, 0]);
+        assert_eq!(s.sinks(), vec![3]);
+        assert_eq!(s.depths(), vec![1, 2, 2, 3]);
+        assert_eq!(s.depth(), 3);
+        assert_eq!(s.out_dims(3), (8, 8));
+        assert_eq!(s.marshalled_args(), 1 + 2 * 3 + 1);
+        assert!(s.validate(16, 4, 8).is_ok());
+        assert!(!s.is_linear_gemm());
+        assert_eq!(s.chain_dims(), None);
+    }
+
+    #[test]
+    fn linear_gemm_round_trips_to_chain_dims() {
+        let s = linear_gemm_shape(64, &[64, 32, 16]);
+        assert!(s.is_linear_gemm());
+        assert_eq!(s.chain_dims(), Some(vec![64, 32, 16]));
+        assert_eq!(s.sinks(), vec![1]);
+        assert_eq!(s.depth(), 2);
+        assert!(s.validate(16, 4, 8).is_ok());
+    }
+
+    #[test]
+    fn rejections_name_the_node_op_and_bound() {
+        let bad = |s: &DagShape, needle: &str| {
+            let e = s.validate(4, 2, 3).unwrap_err();
+            assert!(e.contains(needle), "{e:?} should contain {needle:?}");
+        };
+        // empty
+        let s = DagShape { m: 8, d0: 8, nodes: vec![] };
+        bad(&s, "no nodes");
+        // too many nodes
+        let s = DagShape {
+            m: 8,
+            d0: 8,
+            nodes: (0..5)
+                .map(|i| gemm(if i == 0 { None } else { Some(i - 1) }, 8))
+                .collect(),
+        };
+        bad(&s, "[sched.dag] max_nodes = 4");
+        // zero input dims
+        let s = DagShape { m: 0, d0: 8, nodes: vec![gemm(None, 8)] };
+        bad(&s, "must be nonzero");
+        // backward edge = cycle, named with node id and op
+        let s = DagShape { m: 8, d0: 8, nodes: vec![gemm(Some(0), 8)] };
+        bad(&s, "node 0 (gemm)");
+        bad(&s, "cycle");
+        let s = DagShape {
+            m: 8,
+            d0: 8,
+            nodes: vec![gemm(None, 8), gemm(Some(1), 8)],
+        };
+        bad(&s, "node 1 (gemm)");
+        // zero-width gemm
+        let s = DagShape { m: 8, d0: 8, nodes: vec![gemm(None, 0)] };
+        bad(&s, "node 0 (gemm): output width");
+        // src2 on a matmul node
+        let mut n = gemm(None, 8);
+        n.src2 = Some(0);
+        let s = DagShape { m: 8, d0: 8, nodes: vec![gemm(None, 8), n] };
+        bad(&s, "node 1 (gemm): src2");
+        // epilogue on a fan-in node
+        let s = DagShape {
+            m: 8,
+            d0: 8,
+            nodes: vec![DagNodeShape {
+                op: DagOp::Axpy,
+                src: None,
+                src2: None,
+                n: 0,
+                bias: false,
+                relu: true,
+            }],
+        };
+        bad(&s, "node 0 (axpy): bias/relu");
+        // fan-in width mismatch
+        let s = DagShape {
+            m: 8,
+            d0: 8,
+            nodes: vec![
+                gemm(None, 16),
+                DagNodeShape {
+                    op: DagOp::Axpy,
+                    src: Some(0),
+                    src2: None,
+                    n: 0,
+                    bias: false,
+                    relu: false,
+                },
+            ],
+        };
+        bad(&s, "node 1 (axpy): fan-in inputs are 16 and 8");
+        // consuming a dot
+        let s = DagShape {
+            m: 8,
+            d0: 8,
+            nodes: vec![
+                DagNodeShape {
+                    op: DagOp::Dot,
+                    src: None,
+                    src2: None,
+                    n: 0,
+                    bias: false,
+                    relu: false,
+                },
+                DagNodeShape {
+                    op: DagOp::Axpy,
+                    src: Some(0),
+                    src2: Some(0),
+                    n: 0,
+                    bias: false,
+                    relu: false,
+                },
+            ],
+        };
+        bad(&s, "node 1 (axpy): consumes node 0 (dot)");
+        // depth bound (max_depth = 3)
+        let s = linear_gemm_shape(8, &[8, 8, 8, 8, 8]);
+        bad(&s, "node 3 (gemm): dag depth 4 exceeds [sched.dag] max_depth = 3");
+        // width bound (max_width = 2): three heads off one trunk
+        let s = DagShape {
+            m: 8,
+            d0: 8,
+            nodes: vec![
+                gemm(None, 8),
+                gemm(Some(0), 8),
+                gemm(Some(0), 8),
+                gemm(Some(0), 8),
+            ],
+        };
+        bad(&s, "node 3 (gemm): 3 nodes at depth 2 exceeds [sched.dag] max_width = 2");
+    }
+
+    #[test]
+    fn op_names_round_trip() {
+        for op in [DagOp::Gemm, DagOp::Gemv, DagOp::Axpy, DagOp::Dot] {
+            assert_eq!(DagOp::from_name(op.name()), Some(op));
+        }
+        assert_eq!(DagOp::from_name("fence"), None);
+        assert!(DagOp::Gemm.is_matmul() && DagOp::Gemv.is_matmul());
+        assert!(!DagOp::Axpy.is_matmul() && !DagOp::Dot.is_matmul());
+        assert_eq!(format!("{}", DagOp::Gemv), "gemv");
+    }
+}

@@ -29,6 +29,7 @@ pub mod blas;
 pub mod cblas;
 pub mod config;
 pub mod cost;
+pub mod dag;
 pub mod error;
 pub mod harness;
 pub mod hero;

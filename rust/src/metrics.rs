@@ -41,6 +41,10 @@ pub struct Metrics {
     /// next link: the elided `map(from:)` at promotion plus the elided
     /// `map(to:)` at consumption (see `OffloadEngine::promote_output`).
     pub chain_bytes_elided: u64,
+    /// Interior-edge bytes elided by DAG execution: a promoted node
+    /// output consumed in place by every fan-out consumer instead of a
+    /// host round trip per edge (see `OffloadEngine::promote_output_dag`).
+    pub dag_bytes_elided: u64,
 }
 
 impl Metrics {
@@ -54,7 +58,7 @@ impl Metrics {
             "offloads={} host_calls={} to_dev={}B from_dev={}B \
              iommu_pages={} tile_calls={} pjrt_wall={}us \
              cache_hits={} cache_misses={} cache_evictions={} elided={}B \
-             chain_elided={}B",
+             chain_elided={}B dag_elided={}B",
             self.offloads,
             self.host_calls,
             self.bytes_to_device,
@@ -67,6 +71,7 @@ impl Metrics {
             self.cache_evictions,
             self.bytes_copy_elided,
             self.chain_bytes_elided,
+            self.dag_bytes_elided,
         )
     }
 }
@@ -190,7 +195,8 @@ impl HistogramSnapshot {
 }
 
 /// Op-class labels of the per-class latency histograms, in index order
-/// (axpy/dot jobs share the `level1` class).
+/// (axpy/dot jobs share the `level1` class; dag jobs share the
+/// multi-op `chain` class).
 pub const OP_CLASSES: [&str; 4] = ["gemm", "gemv", "level1", "chain"];
 
 /// Histogram index for a serve op name.
@@ -198,7 +204,7 @@ pub fn op_class_idx(op: &str) -> usize {
     match op {
         "gemm" => 0,
         "gemv" => 1,
-        "chain" => 3,
+        "chain" | "dag" => 3,
         // axpy, dot and anything the level-1 path serves
         _ => 2,
     }
@@ -360,6 +366,17 @@ pub struct SchedCounters {
     /// Intermediate bytes elided by chained execution across all workers'
     /// engines (device-resident hand-off instead of a host round trip).
     pub chain_bytes_elided: AtomicU64,
+    /// DAG jobs completed (a DAG counts once however many nodes it
+    /// runs; each DAG also counts once in `completed`).
+    pub dags: AtomicU64,
+    /// Nodes executed across all completed DAG jobs.
+    pub dag_nodes: AtomicU64,
+    /// Interior-edge bytes elided by DAG execution across all workers'
+    /// engines (promoted fan-out outputs consumed in place).
+    pub dag_bytes_elided: AtomicU64,
+    /// Requests spliced onto a just-published DAG output still resident
+    /// within the `[sched.dag]` fuse window (cross-request fusion).
+    pub dag_fused_requests: AtomicU64,
     /// End-to-end latency histograms, one per op class (see
     /// [`OP_CLASSES`]): gemm / gemv / level1 / chain.
     pub latency: [LatencyHistogram; 4],
@@ -496,6 +513,10 @@ impl SchedCounters {
             rehomed: ld(&self.rehomed),
             chains: ld(&self.chains),
             chain_bytes_elided: ld(&self.chain_bytes_elided),
+            dags: ld(&self.dags),
+            dag_nodes: ld(&self.dag_nodes),
+            dag_bytes_elided: ld(&self.dag_bytes_elided),
+            dag_fused_requests: ld(&self.dag_fused_requests),
             faults_injected: ld(&self.faults_injected),
             retries: ld(&self.retries),
             quarantined: ld(&self.quarantined),
@@ -577,6 +598,11 @@ impl SchedCounters {
             before.chain_bytes_elided,
             after.chain_bytes_elided,
         );
+        add(
+            &self.dag_bytes_elided,
+            before.dag_bytes_elided,
+            after.dag_bytes_elided,
+        );
         if let Some(pc) = self.cluster(cluster) {
             add(&pc.cache_hits, before.cache_hits, after.cache_hits);
             add(&pc.cache_misses, before.cache_misses, after.cache_misses);
@@ -611,6 +637,10 @@ pub struct SchedMetrics {
     pub rehomed: u64,
     pub chains: u64,
     pub chain_bytes_elided: u64,
+    pub dags: u64,
+    pub dag_nodes: u64,
+    pub dag_bytes_elided: u64,
+    pub dag_fused_requests: u64,
     pub faults_injected: u64,
     pub retries: u64,
     pub quarantined: u64,
@@ -653,6 +683,7 @@ impl SchedMetrics {
              queue_peak={} service_ewma={}us cache_hits={} cache_misses={} \
              cache_evictions={} to_dev={}B elided={}B stolen={} affine={} \
              big_shape={} prefetched={} rehomed={} chains={} chain_elided={}B \
+             dags={} dag_nodes={} dag_elided={}B dag_fused={} \
              faults={} retries={} quarantined={} host_fallbacks={} \
              cache_invalidated={}B pin_leaks={} kernel_specialized={} \
              kernel_hits={} kernel_fallbacks={}",
@@ -679,6 +710,10 @@ impl SchedMetrics {
             self.rehomed,
             self.chains,
             self.chain_bytes_elided,
+            self.dags,
+            self.dag_nodes,
+            self.dag_bytes_elided,
+            self.dag_fused_requests,
             self.faults_injected,
             self.retries,
             self.quarantined,
@@ -737,7 +772,7 @@ pub fn prometheus_text(m: &SchedMetrics) -> String {
     use std::fmt::Write;
     let mut out = String::with_capacity(16 * 1024);
 
-    let counters: [(&str, &str, u64); 31] = [
+    let counters: [(&str, &str, u64); 35] = [
         ("hero_jobs_submitted_total", "Jobs accepted into the work queue.", m.submitted),
         ("hero_jobs_rejected_total", "Jobs rejected at submit (backpressure).", m.rejected),
         ("hero_jobs_completed_total", "Jobs completed and replied successfully.", m.completed),
@@ -759,6 +794,10 @@ pub fn prometheus_text(m: &SchedMetrics) -> String {
         ("hero_rehomed_total", "Jobs re-homed off a quarantined cluster.", m.rehomed),
         ("hero_chains_total", "Chained multi-op requests executed.", m.chains),
         ("hero_chain_bytes_elided_total", "Intermediate bytes kept device-resident.", m.chain_bytes_elided),
+        ("hero_dags_total", "DAG multi-op requests executed.", m.dags),
+        ("hero_dag_nodes_total", "Nodes executed across completed DAGs.", m.dag_nodes),
+        ("hero_dag_bytes_elided_total", "Interior-edge bytes kept device-resident.", m.dag_bytes_elided),
+        ("hero_dag_fused_requests_total", "Requests fused onto a resident DAG output.", m.dag_fused_requests),
         ("hero_faults_injected_total", "Device faults injected by the fault plan.", m.faults_injected),
         ("hero_retries_total", "Faulted jobs requeued for another attempt.", m.retries),
         ("hero_quarantined_total", "Cluster quarantine transitions.", m.quarantined),
@@ -902,9 +941,11 @@ mod tests {
         after.cache_misses = 1;
         after.bytes_to_device = 164;
         after.bytes_copy_elided = 32;
+        after.dag_bytes_elided = 48;
         c.absorb_engine_delta(1, &before, &after);
         c.absorb_engine_delta(1, &after, &after); // zero delta is a no-op
         let s = c.snapshot();
+        assert_eq!(s.dag_bytes_elided, 48);
         assert_eq!(s.cache_hits, 3);
         assert_eq!(s.cache_misses, 1);
         assert_eq!(s.bytes_to_device, 64);
@@ -1033,11 +1074,13 @@ mod tests {
         c.note_latency_us("gemm", 0, 200);
         c.note_latency_us("dot", 1, 50);
         c.note_latency_us("chain", 9, 400); // out-of-pool cluster: pool hist only
+        c.note_latency_us("dag", 9, 300); // dag shares the multi-op chain class
         let s = c.snapshot();
         assert_eq!(s.latency[op_class_idx("gemm")].count, 2);
         assert_eq!(s.latency[op_class_idx("axpy")].count, 1, "dot shares level1");
-        assert_eq!(s.latency[op_class_idx("chain")].count, 1);
-        assert_eq!(s.overall.count, 4);
+        assert_eq!(s.latency[op_class_idx("chain")].count, 2);
+        assert_eq!(op_class_idx("dag"), op_class_idx("chain"));
+        assert_eq!(s.overall.count, 5);
         assert!(s.latency[0].p50_us <= s.latency[0].p99_us);
         assert!(s.latency[0].p99_us <= s.latency[0].p999_us);
         assert_eq!(s.clusters[0].p99_us, LatencyHistogram::bucket_upper(8)); // 200 -> [128,256)
@@ -1141,6 +1184,10 @@ mod tests {
         assert!(text.contains("# TYPE hero_kernel_hits_total counter"));
         assert!(text.contains("hero_kernel_hits_total 0"));
         assert!(text.contains("# TYPE hero_kernel_entries gauge"));
+        assert!(text.contains("# TYPE hero_dags_total counter"));
+        assert!(text.contains("hero_dag_nodes_total 0"));
+        assert!(text.contains("hero_dag_bytes_elided_total 0"));
+        assert!(text.contains("hero_dag_fused_requests_total 0"));
 
         // histogram series: terminal +Inf bucket equals _count, _sum is
         // the exact sample sum

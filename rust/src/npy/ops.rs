@@ -4,7 +4,8 @@
 //! offload path (`blas::device::gemm_chain_stage`) so intermediates stay
 //! device-resident instead of round-tripping through host DRAM per op.
 
-use crate::blas::{ChainLink, Elem, HeroBlas, Transpose};
+use crate::blas::{ChainLink, DagNode, Elem, HeroBlas, Transpose};
+use crate::dag::{DagNodeShape, DagOp, DagShape};
 use crate::error::{Error, Result};
 
 use super::array::NdArray;
@@ -67,24 +68,56 @@ impl<T: Elem> NdArray<T> {
     }
 }
 
-/// One deferred link of a lazy expression: a matmul with an optional
-/// bias-add and ReLU fused onto its output.
-struct ExprLink<'a, T: Elem> {
-    w: &'a NdArray<T>,
+/// One deferred node of a lazy expression: a matmul (with optional
+/// fused bias/ReLU epilogues) or an element-wise fan-in add of two
+/// earlier nodes.
+#[derive(Clone, Copy)]
+struct ExprNode<'a, T: Elem> {
+    /// `Some` = matmul against these weights; `None` = fan-in add.
+    w: Option<&'a NdArray<T>>,
     bias: Option<&'a NdArray<T>>,
     relu: bool,
+    /// First input: an earlier node, or `None` for the external input.
+    src: Option<usize>,
+    /// Second input (fan-in nodes only).
+    src2: Option<usize>,
+    /// Output column count.
+    cols: usize,
 }
 
-/// A lazy operator chain: `x.lazy().matmul(w1).add(b1).relu().matmul(w2)`
+/// Structural identity: same operands (by reference), same wiring.
+/// Used to recognize the shared trunk when two branches merge.
+fn same_node<T: Elem>(a: &ExprNode<'_, T>, b: &ExprNode<'_, T>) -> bool {
+    let ptr_eq = |x: Option<&NdArray<T>>, y: Option<&NdArray<T>>| match (x, y) {
+        (None, None) => true,
+        (Some(x), Some(y)) => std::ptr::eq(x, y),
+        _ => false,
+    };
+    ptr_eq(a.w, b.w)
+        && ptr_eq(a.bias, b.bias)
+        && a.relu == b.relu
+        && a.src == b.src
+        && a.src2 == b.src2
+        && a.cols == b.cols
+}
+
+/// A lazy operator graph: `x.lazy().matmul(w1).add(b1).relu().matmul(w2)`
 /// builds the expression without computing anything; [`Expr::eval`]
 /// lowers the whole sequence to ONE chained BLAS submission whose
 /// intermediates stay resident in device DRAM (`y = relu(xW1 + b1)W2`
-/// pays the offload tax once, not per op).  Shape errors are detected as
-/// the expression is built but surface at `eval`, like NumPy raising at
-/// the call.
+/// pays the offload tax once, not per op).  [`Expr::branch`] forks the
+/// expression into two suffixes sharing everything built so far, and
+/// [`Expr::fanin`] joins two branches with an element-wise add — a
+/// fan-out/fan-in graph that lowers to ONE dag submission whose shared
+/// trunk is computed exactly once (`y = relu(xW0)W1 + relu(xW0)W2`
+/// stages the trunk once, not per branch).  Shape errors are detected
+/// as the expression is built but surface at `eval`, like NumPy raising
+/// at the call.
 pub struct Expr<'a, T: Elem> {
     input: &'a NdArray<T>,
-    links: Vec<ExprLink<'a, T>>,
+    nodes: Vec<ExprNode<'a, T>>,
+    /// The expression's current tip (`None` = the bare input).
+    head: Option<usize>,
     err: Option<Error>,
     /// Column count of the expression so far (shape tracking).
     cols: usize,
@@ -100,7 +133,7 @@ impl<T: Elem> NdArray<T> {
                 0,
             ),
         };
-        Expr { input: self, links: Vec::new(), err, cols }
+        Expr { input: self, nodes: Vec::new(), head: None, err, cols }
     }
 }
 
@@ -112,7 +145,7 @@ impl<'a, T: Elem> Expr<'a, T> {
         self
     }
 
-    /// Append `@ w` (2-D weights) to the chain.
+    /// Append `@ w` (2-D weights) to this branch of the expression.
     pub fn matmul(mut self, w: &'a NdArray<T>) -> Self {
         if self.err.is_some() {
             return self;
@@ -130,7 +163,15 @@ impl<'a, T: Elem> Expr<'a, T> {
                 self.cols
             )));
         }
-        self.links.push(ExprLink { w, bias: None, relu: false });
+        self.nodes.push(ExprNode {
+            w: Some(w),
+            bias: None,
+            relu: false,
+            src: self.head,
+            src2: None,
+            cols: n,
+        });
+        self.head = Some(self.nodes.len() - 1);
         self.cols = n;
         self
     }
@@ -149,15 +190,16 @@ impl<'a, T: Elem> Expr<'a, T> {
             )));
         }
         let ok = self
-            .links
-            .last()
-            .is_some_and(|l| l.bias.is_none() && !l.relu);
+            .head
+            .map(|h| self.nodes[h])
+            .is_some_and(|l| l.w.is_some() && l.bias.is_none() && !l.relu);
         if !ok {
             return self.fail(Error::shape(
                 "add: one bias per matmul, attached right after it (before relu)",
             ));
         }
-        self.links.last_mut().expect("checked non-empty").bias = Some(bias);
+        let h = self.head.expect("checked non-empty");
+        self.nodes[h].bias = Some(bias);
         self
     }
 
@@ -166,51 +208,190 @@ impl<'a, T: Elem> Expr<'a, T> {
         if self.err.is_some() {
             return self;
         }
-        let ok = self.links.last().is_some_and(|l| !l.relu);
+        let ok = self
+            .head
+            .map(|h| self.nodes[h])
+            .is_some_and(|l| l.w.is_some() && !l.relu);
         if !ok {
             return self.fail(Error::shape(
                 "relu: activates the latest matmul's output, at most once",
             ));
         }
-        self.links.last_mut().expect("checked non-empty").relu = true;
+        let h = self.head.expect("checked non-empty");
+        self.nodes[h].relu = true;
         self
     }
 
-    /// Number of deferred links.
+    /// Fork the expression into two branches that share everything
+    /// built so far.  The shared trunk is computed ONCE on the device
+    /// — its output is promoted and pinned until both branches have
+    /// consumed it — when the branches are later joined by [`fanin`]
+    /// and evaluated.
+    ///
+    /// [`fanin`]: Expr::fanin
+    pub fn branch(self) -> (Self, Self) {
+        // Error is not Clone, but every builder error here is a shape
+        // error — duplicate it through its message so BOTH branches
+        // surface the failure at eval, whichever one is used.
+        let err = self.err.as_ref().map(|e| Error::shape(e.to_string()));
+        let twin = Expr {
+            input: self.input,
+            nodes: self.nodes.clone(),
+            head: self.head,
+            err,
+            cols: self.cols,
+        };
+        (twin, self)
+    }
+
+    /// Join two branches with an element-wise add (fan-in).  Both must
+    /// fork off the same lazy input — normally one [`branch`] call —
+    /// and yield the same column count.
+    ///
+    /// [`branch`]: Expr::branch
+    pub fn fanin(mut self, other: Self) -> Self {
+        if self.err.is_some() {
+            return self;
+        }
+        if let Some(e) = other.err {
+            return self.fail(e);
+        }
+        if !std::ptr::eq(self.input, other.input) {
+            return self
+                .fail(Error::shape("fanin: branches must share one lazy input"));
+        }
+        if self.cols != other.cols {
+            return self.fail(Error::shape(format!(
+                "fanin: branches yield {} and {} columns",
+                self.cols, other.cols
+            )));
+        }
+        // Merge the graphs: the common prefix (the shared trunk —
+        // identical by construction after branch()) is kept once;
+        // other's tail is appended with its node indices remapped.
+        let common = self
+            .nodes
+            .iter()
+            .zip(other.nodes.iter())
+            .take_while(|(a, b)| same_node(a, b))
+            .count();
+        let base = self.nodes.len();
+        let remap =
+            |s: Option<usize>| s.map(|j| if j < common { j } else { j - common + base });
+        for node in &other.nodes[common..] {
+            let mut node = *node;
+            node.src = remap(node.src);
+            node.src2 = remap(node.src2);
+            self.nodes.push(node);
+        }
+        let src2 = remap(other.head);
+        let cols = self.cols;
+        self.nodes.push(ExprNode {
+            w: None,
+            bias: None,
+            relu: false,
+            src: self.head,
+            src2,
+            cols,
+        });
+        self.head = Some(self.nodes.len() - 1);
+        self
+    }
+
+    /// Number of deferred nodes.
     pub fn len(&self) -> usize {
-        self.links.len()
+        self.nodes.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.links.is_empty()
+        self.nodes.is_empty()
     }
 
-    /// Lower the chain to ONE BLAS submission and run it: the dispatch
-    /// policy decides whether the whole sequence offloads as a chain
-    /// (device-resident intermediates) or runs link by link.
+    /// Lower the expression to ONE BLAS submission and run it.  A
+    /// linear expression (no branch/fanin) takes the classic chained
+    /// lowering, identical to before; a graph lowers through the dag
+    /// executor, whose fan-out trunk is staged and computed exactly
+    /// once.  Either way the dispatch policy decides whether the whole
+    /// thing offloads (device-resident intermediates) or runs on host.
     pub fn eval(self, blas: &mut HeroBlas) -> Result<NdArray<T>> {
         if let Some(e) = self.err {
             return Err(e);
         }
         let m = self.input.shape()[0];
-        if self.links.is_empty() {
+        if self.nodes.is_empty() {
             return Ok(self.input.clone());
         }
-        let links: Vec<ChainLink<'_, T>> = self
-            .links
-            .iter()
-            .map(|l| {
-                let (k, n) = (l.w.shape()[0], l.w.shape()[1]);
-                ChainLink {
-                    b: l.w.data(),
-                    dims: (k, n),
-                    bias: l.bias.map(|b| b.data()),
+        let linear = self.head == Some(self.nodes.len() - 1)
+            && self.nodes.iter().enumerate().all(|(i, l)| {
+                l.w.is_some()
+                    && l.src2.is_none()
+                    && l.src == if i == 0 { None } else { Some(i - 1) }
+            });
+        if linear {
+            let links: Vec<ChainLink<'_, T>> = self
+                .nodes
+                .iter()
+                .map(|l| {
+                    let w = l.w.expect("linear nodes are matmuls");
+                    ChainLink {
+                        b: w.data(),
+                        dims: (w.shape()[0], w.shape()[1]),
+                        bias: l.bias.map(|b| b.data()),
+                        relu: l.relu,
+                    }
+                })
+                .collect();
+            let mut out = NdArray::<T>::zeros(&[m, self.cols]);
+            blas.chain(m, self.input.data(), &links, out.data_mut())?;
+            return Ok(out);
+        }
+        let shape = DagShape {
+            m,
+            d0: self.input.shape()[1],
+            nodes: self
+                .nodes
+                .iter()
+                .map(|l| DagNodeShape {
+                    op: if l.w.is_some() { DagOp::Gemm } else { DagOp::Axpy },
+                    src: l.src,
+                    src2: l.src2,
+                    n: if l.w.is_some() { l.cols } else { 0 },
+                    bias: l.bias.is_some(),
                     relu: l.relu,
-                }
+                })
+                .collect(),
+        };
+        let specs: Vec<DagNode<'_, T>> = self
+            .nodes
+            .iter()
+            .map(|l| DagNode {
+                b: l.w.map(|w| w.data()),
+                bias: l.bias.map(|b| b.data()),
             })
             .collect();
+        // by construction every non-head node has a consumer, so the
+        // head is a sink; tolerate extra sinks by evaluating them all
+        // and returning the head's buffer
+        let sinks = shape.sinks();
+        let head = self.head.expect("non-empty expression has a head");
+        let mut bufs: Vec<Vec<T>> = sinks
+            .iter()
+            .map(|&s| {
+                let (r, c) = shape.out_dims(s);
+                vec![T::zero(); r * c]
+            })
+            .collect();
+        {
+            let mut refs: Vec<&mut [T]> =
+                bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+            blas.dag(&shape, self.input.data(), &specs, &mut refs)?;
+        }
+        let pos = sinks
+            .iter()
+            .position(|&s| s == head)
+            .ok_or_else(|| Error::shape("fanin: expression head must be a sink"))?;
         let mut out = NdArray::<T>::zeros(&[m, self.cols]);
-        blas.chain(m, self.input.data(), &links, out.data_mut())?;
+        out.data_mut().copy_from_slice(&bufs[pos]);
         Ok(out)
     }
 }
@@ -241,3 +422,81 @@ impl NdArray<f64> {
 
 // Integration tests that exercise these against real artifacts live in
 // rust/tests/ (they need `make artifacts`).
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arr(shape: &[usize]) -> NdArray<f64> {
+        NdArray::<f64>::zeros(shape)
+    }
+
+    #[test]
+    fn branch_fanin_shares_the_trunk_once() {
+        let x = arr(&[4, 8]);
+        let w0 = arr(&[8, 16]);
+        let w1 = arr(&[16, 32]);
+        let w2 = arr(&[16, 32]);
+        let (a, b) = x.lazy().matmul(&w0).relu().branch();
+        let e = a.matmul(&w1).fanin(b.matmul(&w2));
+        // trunk node + 2 branch matmuls + 1 fan-in add — NOT 2 trunks
+        assert_eq!(e.len(), 4);
+        assert!(e.err.is_none());
+        assert_eq!(e.cols, 32);
+        // the fan-in head consumes both branch heads; both branches
+        // consume the one shared trunk node (fan-out)
+        assert_eq!(e.nodes[1].src, Some(0));
+        assert_eq!(e.nodes[2].src, Some(0));
+        assert_eq!((e.nodes[3].src, e.nodes[3].src2), (Some(1), Some(2)));
+        assert!(e.nodes[3].w.is_none(), "fan-in is an add, not a matmul");
+    }
+
+    #[test]
+    fn fanin_on_bare_branches_consumes_the_input_twice() {
+        let x = arr(&[4, 8]);
+        let w1 = arr(&[8, 8]);
+        let w2 = arr(&[8, 8]);
+        let (a, b) = x.lazy().branch();
+        let e = a.matmul(&w1).fanin(b.matmul(&w2));
+        assert_eq!(e.len(), 3);
+        assert_eq!(e.nodes[0].src, None, "branch off the external input");
+        assert_eq!(e.nodes[1].src, None);
+        assert_eq!((e.nodes[2].src, e.nodes[2].src2), (Some(0), Some(1)));
+    }
+
+    #[test]
+    fn fanin_rejects_mismatched_branches() {
+        let x = arr(&[4, 8]);
+        let y = arr(&[4, 8]);
+        let w1 = arr(&[8, 16]);
+        let w2 = arr(&[8, 32]);
+        // different column counts
+        let (a, b) = x.lazy().branch();
+        let e = a.matmul(&w1).fanin(b.matmul(&w2));
+        assert!(e.err.as_ref().is_some_and(|m| m.to_string().contains("columns")));
+        // different lazy inputs
+        let e = x.lazy().matmul(&w1).fanin(y.lazy().matmul(&w1));
+        assert!(e.err.as_ref().is_some_and(|m| m.to_string().contains("share")));
+    }
+
+    #[test]
+    fn branch_duplicates_a_pending_error_to_both_sides() {
+        let x = arr(&[4, 8]);
+        let bad = arr(&[3, 16]); // 8 != 3: shape error recorded
+        let (a, b) = x.lazy().matmul(&bad).branch();
+        assert!(a.err.is_some(), "twin branch carries the error");
+        assert!(b.err.is_some(), "original branch carries the error");
+    }
+
+    #[test]
+    fn linear_expressions_stay_linear() {
+        let x = arr(&[4, 8]);
+        let w0 = arr(&[8, 16]);
+        let w1 = arr(&[16, 4]);
+        let e = x.lazy().matmul(&w0).relu().matmul(&w1);
+        assert_eq!(e.len(), 2);
+        assert_eq!(e.nodes[0].src, None);
+        assert_eq!(e.nodes[1].src, Some(0));
+        assert!(e.nodes.iter().all(|n| n.src2.is_none()));
+    }
+}

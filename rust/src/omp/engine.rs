@@ -385,16 +385,51 @@ impl OffloadEngine {
     /// identical maps, with it disabled the release at chain end reclaims
     /// it immediately.  Copy-mode only: a zero-copy output lives in host
     /// memory and has nothing device-resident to keep.
-    pub fn promote_output(&mut self, mut buf: MappedBuf, elided_bytes: u64,
+    pub fn promote_output(&mut self, buf: MappedBuf, elided_bytes: u64,
                           label: &str) -> Result<MappedBuf> {
+        let charge_label = format!("chain_keep({label})");
+        let buf = self.promote_to_resident(buf, &charge_label)?;
+        self.metrics.chain_bytes_elided += elided_bytes.max(1);
+        Ok(buf)
+    }
+
+    /// [`OffloadEngine::promote_output`] for a DAG node output with
+    /// consumers: identical mechanics and charge, but the elided
+    /// `map(from:)` is counted in `dag_bytes_elided` — a fan-out output
+    /// is promoted exactly once however many nodes consume it.
+    pub fn promote_output_dag(&mut self, buf: MappedBuf, elided_bytes: u64,
+                              label: &str) -> Result<MappedBuf> {
+        let charge_label = format!("dag_keep({label})");
+        let buf = self.promote_to_resident(buf, &charge_label)?;
+        self.metrics.dag_bytes_elided += elided_bytes.max(1);
+        Ok(buf)
+    }
+
+    /// Publish a finished DAG sink for cross-request fusion: same
+    /// residency mechanics as a promotion, but nothing was elided *this*
+    /// request — the output still copies back to the host — so no
+    /// elision counter moves.  A fused follow-up request's `map(to:)` of
+    /// the identical bytes then verifies against this entry and becomes
+    /// a refcount bump (`cache_hits`/`bytes_copy_elided` count it there).
+    pub fn publish_output(&mut self, buf: MappedBuf, label: &str)
+                          -> Result<MappedBuf> {
+        let charge_label = format!("dag_publish({label})");
+        self.promote_to_resident(buf, &charge_label)
+    }
+
+    /// Shared promotion core: register a copy-mode output buffer as a
+    /// pinned operand-cache entry without any data movement, charging
+    /// one table insert (the same cost a cache hit charges).
+    fn promote_to_resident(&mut self, mut buf: MappedBuf, charge_label: &str)
+                           -> Result<MappedBuf> {
         if buf.is_zero_copy() {
             return Err(Error::Offload(format!(
-                "promote_output({label}): zero-copy buffers cannot stay device-resident"
+                "{charge_label}: zero-copy buffers cannot stay device-resident"
             )));
         }
         if buf.is_cached() {
             return Err(Error::Offload(format!(
-                "promote_output({label}): buffer is already cache-shared"
+                "{charge_label}: buffer is already cache-shared"
             )));
         }
         let alloc = *buf.backing.as_ref().expect("copy-mode buffer has backing");
@@ -403,8 +438,7 @@ impl OffloadEngine {
         let bytes = self.device.dram.read(&alloc, buf.len as usize)?.to_vec();
         let key = CacheKey::of(&bytes);
         let cost = Cycles(self.platform.cfg.host.memcpy_setup_cycles);
-        self.charge(RegionClass::DataCopy, cost, &format!("chain_keep({label})"));
-        self.metrics.chain_bytes_elided += elided_bytes.max(1);
+        self.charge(RegionClass::DataCopy, cost, charge_label);
         let outcome = self.opcache.insert_resident(key, alloc);
         if outcome.cached {
             buf.cache_key = Some(key);
@@ -424,6 +458,16 @@ impl OffloadEngine {
         let cost = Cycles(self.platform.cfg.host.memcpy_setup_cycles);
         self.charge(RegionClass::DataCopy, cost, &format!("chain_reuse({label})"));
         self.metrics.chain_bytes_elided += elided_bytes.max(1);
+    }
+
+    /// Account a DAG node consuming a promoted producer output in place:
+    /// one `map(to:)` elided per interior edge, counted in
+    /// `dag_bytes_elided` (charged once per consumer, so a two-way
+    /// fan-out books the promotion plus two reuses).
+    pub fn note_dag_reuse(&mut self, elided_bytes: u64, label: &str) {
+        let cost = Cycles(self.platform.cfg.host.memcpy_setup_cycles);
+        self.charge(RegionClass::DataCopy, cost, &format!("dag_reuse({label})"));
+        self.metrics.dag_bytes_elided += elided_bytes.max(1);
     }
 
     /// Allocate device DRAM; on OOM, evict unpinned cache entries (LRU
@@ -933,6 +977,38 @@ mod tests {
         assert!(e.opcache.is_empty(), "zero-budget cache reclaims at chain end");
         assert_eq!(e.device.dram.stats().bytes_in_use, 0);
         assert_eq!(e.metrics.chain_bytes_elided, 1024);
+    }
+
+    #[test]
+    fn dag_promotion_counts_its_own_elisions_and_publish_counts_none() {
+        let mut e = cached_engine(1 << 20, 0.5, 8);
+        let host_c = vec![0u8; 4096];
+        let mut c = e.map_alloc(&host_c, 4096, "c").unwrap();
+        e.write_mapped(&mut c, 0, &[7u8; 4096]).unwrap();
+        let kept = e.promote_output_dag(c, 4096, "c").unwrap();
+        assert!(kept.is_cached());
+        assert_eq!(e.metrics.dag_bytes_elided, 4096);
+        assert_eq!(e.metrics.chain_bytes_elided, 0, "counters stay separate");
+        // one reuse per consumer, same counter
+        e.note_dag_reuse(4096, "a");
+        e.note_dag_reuse(4096, "a");
+        assert_eq!(e.metrics.dag_bytes_elided, 3 * 4096);
+        e.unmap(kept, "c").unwrap();
+        assert_eq!(e.opcache.total_pins(), 0);
+
+        // publish: same residency, no elision counters — the fused
+        // consumer's verified cache hit books the elision instead
+        let mut d = e.map_alloc(&host_c, 4096, "d").unwrap();
+        e.write_mapped(&mut d, 0, &[9u8; 4096]).unwrap();
+        let produced = e.read_mapped(&d, 0, 4096).unwrap();
+        let pub_buf = e.publish_output(d, "d").unwrap();
+        assert!(pub_buf.is_cached());
+        assert_eq!(e.metrics.dag_bytes_elided, 3 * 4096, "publish elides nothing");
+        e.unmap(pub_buf, "d").unwrap(); // pin released, bytes stay resident
+        let hits_before = e.metrics.cache_hits;
+        let again = e.map_to_operand(&produced, 4096, false, "x").unwrap();
+        assert_eq!(e.metrics.cache_hits, hits_before + 1, "fusion hit");
+        e.unmap(again, "x").unwrap();
     }
 
     #[test]

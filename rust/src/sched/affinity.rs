@@ -64,6 +64,17 @@ pub fn chain_b_key(k: usize, n: usize, seed: u64) -> u64 {
     }
 }
 
+/// Rendezvous key for a DAG's published (still-pinned) output.  The
+/// publishing worker marks it resident when the DAG finishes; the router
+/// maps a fusing request's `input_key` through the same function, so the
+/// request lands on the cluster holding the intermediate — without either
+/// side knowing the output's dims.  Deliberately distinct from every
+/// operand-content key: a published intermediate is identified by the
+/// request-chosen key alone, not by shape + seed.
+pub fn dag_fuse_key(key: u64) -> u64 {
+    operand_key("dag_pub", 0, key)
+}
+
 /// The directory: operand key -> residency bitmask over pool clusters
 /// (the config caps pools at 64, so one u64 mask suffices), plus an
 /// optional per-key **home override** set by the router's steal-fairness
@@ -201,6 +212,15 @@ mod tests {
         assert_ne!(chain_b_key(128, 64, 42), chain_b_key(64, 128, 42));
         assert_ne!(chain_b_key(128, 64, 42), operand_key("gemm_b", 64, 42));
         assert_eq!(chain_b_key(128, 64, 42), operand_key2("gemm_b", 128, 64, 42));
+    }
+
+    #[test]
+    fn dag_fuse_keys_are_their_own_namespace() {
+        assert_eq!(dag_fuse_key(7), dag_fuse_key(7));
+        assert_ne!(dag_fuse_key(7), dag_fuse_key(8));
+        // never collides with a weight-operand key for the same number
+        assert_ne!(dag_fuse_key(42), operand_key("gemm_b", 64, 42));
+        assert_ne!(dag_fuse_key(42), chain_b_key(64, 64, 42));
     }
 
     #[test]

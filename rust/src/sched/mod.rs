@@ -71,8 +71,9 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::config::{DispatchMode, PlatformConfig};
+use crate::config::{DagConfig, DispatchMode, PlatformConfig};
 use crate::cost::CostModel;
+use crate::dag::DagShape;
 use crate::error::{Error, Result};
 use crate::kernel::{KernelEvent, KernelRegistry};
 use crate::metrics::{SchedCounters, SchedMetrics};
@@ -216,6 +217,34 @@ impl ChainRequest {
     }
 }
 
+/// One DAG serving request: a typed dataflow graph of gemm/gemv/axpy/dot
+/// nodes executed as ONE submission — fan-out pins a shared trunk output
+/// until every consumer has read it, fan-in merges two resident branches
+/// without either returning to host.  The external input activation is
+/// drawn from `seed`; matmul node i's weights come from `b_seeds[i]`
+/// when set (shared-weight requests route to the warm cluster) or
+/// continue the request stream.
+///
+/// `publish_key` leaves the (last) sink output pinned in the serving
+/// cluster's operand cache after the reply, tagged under the key, for
+/// `[sched.dag] fuse_window_ms`; a follow-up request naming that key as
+/// `input_key` splices onto the resident bytes instead of re-staging its
+/// input — the cross-request fusion the `dag_fused_requests` counter
+/// measures.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DagRequest {
+    pub shape: DagShape,
+    pub mode: DispatchMode,
+    pub seed: u64,
+    /// One entry per node; `None` (and every fan-in node) continues the
+    /// request stream.
+    pub b_seeds: Vec<Option<u64>>,
+    /// Pin the sink output under this key for the fuse window.
+    pub publish_key: Option<u64>,
+    /// Splice this request's input from a just-published sink output.
+    pub input_key: Option<u64>,
+}
+
 /// What a job asks the pool to do.
 #[derive(Debug)]
 pub enum JobPayload {
@@ -226,6 +255,10 @@ pub enum JobPayload {
     /// unit — links never split across clusters, because the whole point
     /// is that the intermediates stay in one cluster's DRAM slice.
     Chain(ChainRequest),
+    /// A dataflow graph: same one-unit rule as chains, for the same
+    /// reason — the fan-out trunk and both fan-in branches live in one
+    /// cluster's DRAM slice.
+    Dag(DagRequest),
     /// Drain barrier: the worker that pops this parks until the sender
     /// releases (or drops) the channel.  Used by tests and benches to
     /// hold a cluster busy deterministically — e.g. to fill the queue
@@ -292,9 +325,10 @@ impl Job {
             JobPayload::Level1(r) => {
                 Some(BatchKey { op: r.op.name(), dims: (r.n, 0, 0), mode: r.mode })
             }
-            // chains are internally sequential and already amortize the
-            // fork-join across their links — they never coalesce
+            // chains and dags are internally sequential and already
+            // amortize the fork-join across their nodes — never coalesce
             JobPayload::Chain(_) => None,
+            JobPayload::Dag(_) => None,
             JobPayload::Fence(_) => None,
         }
     }
@@ -398,6 +432,9 @@ pub struct Scheduler {
     next_id: AtomicU64,
     /// `[sched.chain] max_links` — chain specs are bounded at submit.
     chain_max_links: u32,
+    /// `[sched.dag]` bounds and fuse window — dag specs are validated at
+    /// submit.
+    dag_cfg: DagConfig,
     /// The pool-shared cost model: one calibration state behind every
     /// worker's dispatch, the router's shape/admission decisions and the
     /// batcher's linger sizing.  Kept here so the serve layer can report
@@ -544,6 +581,7 @@ impl Scheduler {
             pool_size: sc.pool_clusters as usize,
             next_id: AtomicU64::new(1),
             chain_max_links: sc.chain.max_links,
+            dag_cfg: sc.dag.clone(),
             cost,
             trace,
             kernel,
@@ -578,6 +616,44 @@ impl Scheduler {
             return Err(format!(
                 "chain stages {need} B resident at once but the largest \
                  cluster slice holds {cap} B — shorten the chain or shrink \
+                 its dims"
+            ));
+        }
+        Ok(())
+    }
+
+    /// Reject a DAG spec that could never run.  Structural checks
+    /// (acyclicity, the `[sched.dag]` node/width/depth bounds) come from
+    /// [`DagShape::validate`], whose errors name the offending node id,
+    /// op and violated bound; on top sit the per-request checks — seed
+    /// list arity, the staged-footprint capacity bound (everything in a
+    /// DAG is resident at once), and the fuse window being open at all
+    /// when the request asks to splice.
+    pub fn validate_dag(&self, req: &DagRequest) -> std::result::Result<(), String> {
+        let d = &self.dag_cfg;
+        req.shape.validate(d.max_nodes, d.max_width, d.max_depth)?;
+        if req.b_seeds.len() != req.shape.nodes.len() {
+            return Err(format!(
+                "dag has {} nodes but {} b_seeds",
+                req.shape.nodes.len(),
+                req.b_seeds.len()
+            ));
+        }
+        if (req.input_key.is_some() || req.publish_key.is_some())
+            && d.fuse_window_ms == 0
+        {
+            return Err(
+                "dag names a publish/input key but [sched.dag] \
+                 fuse_window_ms = 0 (fusion disabled)"
+                    .into(),
+            );
+        }
+        let need = self.cost.dag_staged_bytes(&req.shape);
+        let cap = self.router.capacity().max_slice();
+        if need > cap {
+            return Err(format!(
+                "dag stages {need} B resident at once but the largest \
+                 cluster slice holds {cap} B — split the dag or shrink \
                  its dims"
             ));
         }
@@ -877,6 +953,30 @@ mod tests {
         if let JobPayload::Chain(r) = &chain.payload {
             assert_eq!(r.links(), 2);
         }
+    }
+
+    #[test]
+    fn dag_jobs_never_share_a_launch() {
+        let (tx, _rx) = mpsc::channel();
+        let shape = crate::dag::linear_gemm_shape(64, &[64, 64, 64]);
+        let dag = Job {
+            id: 1,
+            priority: Priority::Normal,
+            payload: JobPayload::Dag(DagRequest {
+                shape,
+                mode: DispatchMode::DeviceOnly,
+                seed: 1,
+                b_seeds: vec![None, None],
+                publish_key: None,
+                input_key: None,
+            }),
+            reply: tx,
+            cancel: CancelToken::default(),
+            enqueued_at: Instant::now(),
+            spans: SpanStamps::default(),
+            fault: FaultState::default(),
+        };
+        assert_eq!(dag.batch_key(), None);
     }
 
     #[test]

@@ -58,7 +58,7 @@ use crate::config::{FaultConfig, PlacementConfig};
 use crate::cost::CostModel;
 use crate::metrics::SchedCounters;
 
-use super::affinity::{chain_b_key, operand_key, AffinityDirectory};
+use super::affinity::{chain_b_key, dag_fuse_key, operand_key, AffinityDirectory};
 use super::batcher::BatchKey;
 use super::pool::CapacityModel;
 use super::queue::WorkQueue;
@@ -353,6 +353,7 @@ impl PlacementRouter {
                     })
                 }
             }
+            JobPayload::Dag(r) => self.cost.decides_device_dag(&r.shape, r.mode),
             JobPayload::Fence(_) => false,
         }
     }
@@ -382,6 +383,9 @@ impl PlacementRouter {
                         .unwrap_or(0)
                 }
             }
+            // like a chained chain, a dag holds everything resident at
+            // once: the whole-graph footprint (trunk + every branch)
+            JobPayload::Dag(r) => self.cost.dag_staged_bytes(&r.shape),
             // level-1 stages one artifact-sized chunk pair at a time and
             // fences stage nothing — both fit anywhere
             JobPayload::Level1(_) | JobPayload::Fence(_) => 0,
@@ -400,6 +404,28 @@ impl PlacementRouter {
                 .iter()
                 .zip(r.dims.windows(2))
                 .find_map(|(bs, w)| bs.map(|bs| chain_b_key(w[0], w[1], bs))),
+            // a fusing dag MUST land where its producer pinned the bytes
+            // (the worker noted that key resident at publish time);
+            // otherwise affinity follows the heaviest shared weight —
+            // the operand whose re-stage would cost the most
+            JobPayload::Dag(r) => {
+                r.input_key.map(dag_fuse_key).or_else(|| {
+                    let widths = r.shape.widths();
+                    r.shape
+                        .nodes
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, n)| n.op.is_matmul())
+                        .filter_map(|(i, _)| {
+                            r.b_seeds.get(i).copied().flatten().map(|bs| {
+                                let k = r.shape.in_width(i);
+                                (k * widths[i], chain_b_key(k, widths[i], bs))
+                            })
+                        })
+                        .max_by_key(|&(weight, _)| weight)
+                        .map(|(_, key)| key)
+                })
+            }
             _ => None,
         }
     }
@@ -1093,6 +1119,95 @@ mod tests {
             let left: usize = st2.clusters.iter().map(|l| l.depth()).sum();
             assert_eq!(left, 1, "a steal moves exactly one whole chain");
         }
+    }
+
+    fn dag_job(
+        id: u64,
+        shape: crate::dag::DagShape,
+        b_seeds: Vec<Option<u64>>,
+        input_key: Option<u64>,
+    ) -> Job {
+        let (tx, _rx) = mpsc::channel();
+        Job {
+            id,
+            priority: Priority::Normal,
+            payload: JobPayload::Dag(crate::sched::DagRequest {
+                shape,
+                mode: DispatchMode::DeviceOnly,
+                seed: id,
+                b_seeds,
+                publish_key: None,
+                input_key,
+            }),
+            reply: tx,
+            cancel: CancelToken::default(),
+            enqueued_at: Instant::now(),
+            spans: SpanStamps::default(),
+            fault: FaultState::default(),
+        }
+    }
+
+    #[test]
+    fn dags_follow_their_heaviest_weight_unless_fusing() {
+        use crate::dag::linear_gemm_shape;
+        let (r, q, c) = router(4, 0.0, true, false);
+        // a dag whose heaviest shared weight (64x256, seed 42) matches a
+        // chain's first link routes to the SAME warm home as that chain
+        q.push(dag_job(
+            1,
+            linear_gemm_shape(64, &[64, 256, 8]),
+            vec![Some(42), None],
+            None,
+        ))
+        .unwrap();
+        q.push(chain_job(2, 64, vec![64, 256, 8], vec![Some(42), None], true))
+            .unwrap();
+        let mut st = r.state.lock().unwrap();
+        r.drain_global(&mut st, &q, &c);
+        let loaded: Vec<usize> = st
+            .clusters
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.depth() > 0)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(loaded.len(), 1, "dag + chain share one warm home");
+        assert_eq!(st.clusters[loaded[0]].depth(), 2);
+        drop(st);
+
+        // when both nodes carry seeds, the heavier weight wins: residency
+        // of the 64x256 trunk redirects the dag; the light 256x8 tail's
+        // residency elsewhere is ignored
+        let heavy = chain_b_key(64, 256, 5);
+        let light = chain_b_key(256, 8, 6);
+        let (r2, q2, c2) = router(4, 0.0, true, false);
+        r2.note_resident(light, 1);
+        r2.note_resident(heavy, 2);
+        q2.push(dag_job(
+            3,
+            linear_gemm_shape(64, &[64, 256, 8]),
+            vec![Some(5), Some(6)],
+            None,
+        ))
+        .unwrap();
+        let mut st2 = r2.state.lock().unwrap();
+        r2.drain_global(&mut st2, &q2, &c2);
+        assert_eq!(st2.clusters[2].depth(), 1, "heaviest weight picks the home");
+        drop(st2);
+
+        // a fusing dag overrides everything: it must land where its
+        // producer pinned the published output (noted at publish time)
+        r2.note_resident(dag_fuse_key(7), 3);
+        q2.push(dag_job(
+            4,
+            linear_gemm_shape(64, &[64, 256, 8]),
+            vec![Some(5), Some(6)],
+            Some(7),
+        ))
+        .unwrap();
+        let mut st2 = r2.state.lock().unwrap();
+        r2.drain_global(&mut st2, &q2, &c2);
+        assert_eq!(st2.clusters[3].depth(), 1, "input_key beats weight affinity");
     }
 
     #[test]

@@ -101,6 +101,10 @@ pub enum EventKind {
     KernelPromote = 26,
     /// A launch took a specialized fast-path walk (`a` = kernel key).
     KernelHit = 27,
+    /// An incoming DAG spliced onto a just-completed DAG's still-pinned
+    /// output instead of re-staging it (`a` = fuse key, `b` = elided
+    /// input bytes).
+    DagFuse = 28,
 }
 
 impl EventKind {
@@ -134,6 +138,7 @@ impl EventKind {
             25 => SpanFinish,
             26 => KernelPromote,
             27 => KernelHit,
+            28 => DagFuse,
             _ => return None,
         })
     }
@@ -170,6 +175,7 @@ impl EventKind {
             SpanFinish => "finish",
             KernelPromote => "kernel-promote",
             KernelHit => "kernel-hit",
+            DagFuse => "dag-fuse",
         }
     }
 

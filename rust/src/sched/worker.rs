@@ -72,10 +72,11 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::blas::{
-    ChainLink, ChainRun, DispatchPolicy, ExecTarget, GemmBatchRun,
-    GemvBatchRun, HeroBlas,
+    ChainLink, ChainRun, DagNode, DagRun, DispatchPolicy, ExecTarget,
+    GemmBatchRun, GemvBatchRun, HeroBlas,
 };
 use crate::cost::CostModel;
+use crate::dag::{DagOp, DagShape};
 use crate::error::Result;
 use crate::hero::offload::OffloadKind;
 use crate::kernel::{Epilogue, KernelRegistry};
@@ -85,7 +86,7 @@ use crate::soc::clock::Cycles;
 use crate::soc::trace::RegionClass;
 use crate::util::rng::Rng;
 
-use super::affinity::{chain_b_key, operand_key};
+use super::affinity::{chain_b_key, dag_fuse_key, operand_key};
 use super::batcher::Batcher;
 use super::placement::{ClusterView, PlacementRouter};
 use super::pool::ClusterSpec;
@@ -93,8 +94,9 @@ use super::queue::WorkQueue;
 use super::span::{BatchMarks, SpanBreakdown};
 use super::trace::{EventKind, TraceRecorder};
 use super::{
-    ChainRequest, FaultKind, FaultPlan, GemmOutcome, GemmRequest,
-    GemvRequest, Job, JobPayload, Level1Op, Level1Request, SpanStamps,
+    ChainRequest, DagRequest, FaultKind, FaultPlan, GemmOutcome,
+    GemmRequest, GemvRequest, Job, JobPayload, Level1Op, Level1Request,
+    SpanStamps,
 };
 
 /// Spawn one worker thread for `spec`.  It reports session boot success
@@ -184,6 +186,26 @@ fn delta(before: RegionSnap, after: RegionSnap) -> BatchAcct {
     }
 }
 
+/// A published DAG output held for cross-request fusion: the producer's
+/// last-sink result, keyed by the request-chosen `publish_key`, alive
+/// until `[sched.dag] fuse_window_ms` elapses or a consumer splices it.
+/// One slot per worker — each publish overwrites the previous one, the
+/// pattern a pipelined producer/consumer stream actually produces.
+struct FuseSlot {
+    key: u64,
+    rows: usize,
+    width: usize,
+    data: Vec<f64>,
+    expires_at: Instant,
+}
+
+/// Per-worker cross-request fusion state: the single published-output
+/// slot plus the configured window that bounds its lifetime.
+struct FuseState {
+    slot: Option<FuseSlot>,
+    window_ms: u64,
+}
+
 /// The executed-but-unfinished payload of a pipelined batch.
 enum InflightRun {
     Gemm {
@@ -206,6 +228,15 @@ enum InflightRun {
         req: ChainRequest,
         out: Vec<f64>,
         run: ChainRun<f64>,
+    },
+    /// A DAG job: every node executed in topological order, interior
+    /// edges resident on the cluster, only the sink outputs pending
+    /// their copy back (and possibly a publish for cross-request
+    /// fusion).
+    Dag {
+        req: DagRequest,
+        outs: Vec<Vec<f64>>,
+        run: DagRun<f64>,
     },
 }
 
@@ -297,6 +328,11 @@ fn run(
     // double-buffered staging: depth 2 is what the implementation holds
     let depth = (spec.cfg.sched.cache.pipeline_depth as usize).clamp(1, 2);
     let mut inflight: Option<Inflight> = None;
+    // cross-request fusion: the last published DAG output on this worker
+    let mut fuse = FuseState {
+        slot: None,
+        window_ms: spec.cfg.sched.dag.fuse_window_ms,
+    };
     let mut metrics_prev = blas.metrics();
     // per-worker launch attempt counter: the fault plan's deterministic
     // schedule is keyed on (cluster, launch-seq, seam)
@@ -317,7 +353,7 @@ fn run(
             let infl = inflight.take().expect("try_next only used with inflight");
             finish_batch(
                 &mut blas, spec.id, &counters, &router, &fault, &queue,
-                &trace, infl, &mut metrics_prev,
+                &trace, infl, &mut fuse, &mut metrics_prev,
             );
             // pipeline drained, nothing staged: every operand-cache pin
             // must be back — a leak here strands unevictable DRAM
@@ -347,7 +383,7 @@ fn run(
                 if let Some(infl) = inflight.take() {
                     finish_batch(
                         &mut blas, spec.id, &counters, &router, &fault,
-                        &queue, &trace, infl, &mut metrics_prev,
+                        &queue, &trace, infl, &mut fuse, &mut metrics_prev,
                     );
                 }
                 // Park until the test/bench releases (or drops) the fence.
@@ -381,6 +417,7 @@ fn run(
                     batch,
                     req,
                     depth,
+                    &mut fuse,
                     &mut inflight,
                     &mut metrics_prev,
                 );
@@ -391,7 +428,7 @@ fn run(
                 if let Some(infl) = inflight.take() {
                     finish_batch(
                         &mut blas, spec.id, &counters, &router, &fault,
-                        &queue, &trace, infl, &mut metrics_prev,
+                        &queue, &trace, infl, &mut fuse, &mut metrics_prev,
                     );
                 }
                 let mut batch = batcher.collect(&source, job, usize::MAX);
@@ -419,6 +456,26 @@ fn run(
                     job,
                     req,
                     depth,
+                    &mut fuse,
+                    &mut inflight,
+                    &mut metrics_prev,
+                );
+            }
+            JobPayload::Dag(ref req) => {
+                let req = req.clone();
+                serve_dag(
+                    &mut blas,
+                    spec.id,
+                    &counters,
+                    &router,
+                    &fault,
+                    &queue,
+                    &trace,
+                    &mut launch_seq,
+                    job,
+                    req,
+                    depth,
+                    &mut fuse,
                     &mut inflight,
                     &mut metrics_prev,
                 );
@@ -476,6 +533,7 @@ fn run(
                     target,
                     warm_b,
                     depth,
+                    &mut fuse,
                     &mut inflight,
                     &mut metrics_prev,
                 );
@@ -487,7 +545,7 @@ fn run(
     if let Some(infl) = inflight.take() {
         finish_batch(
             &mut blas, spec.id, &counters, &router, &fault, &queue, &trace,
-            infl, &mut metrics_prev,
+            infl, &mut fuse, &mut metrics_prev,
         );
     }
     check_pins_drained(&blas, &counters, spec.id);
@@ -724,6 +782,7 @@ fn serve_gemm(
     target: ExecTarget,
     warm_b: bool,
     depth: usize,
+    fuse: &mut FuseState,
     inflight: &mut Option<Inflight>,
     metrics_prev: &mut Metrics,
 ) {
@@ -735,7 +794,7 @@ fn serve_gemm(
         if let Some(infl) = inflight.take() {
             finish_batch(
                 blas, cluster, counters, router, plan, queue, trace, infl,
-                metrics_prev,
+                fuse, metrics_prev,
             );
         }
         serve_gemm_host(
@@ -774,7 +833,7 @@ fn serve_gemm(
         let infl = inflight.take().expect("checked above");
         finish_batch(
             blas, cluster, counters, router, plan, queue, trace, infl,
-            metrics_prev,
+            fuse, metrics_prev,
         );
         before = snap(blas); // re-baseline: the failed attempt + drain
                              // must not bill this batch
@@ -817,7 +876,7 @@ fn serve_gemm(
         if let Some(infl) = inflight.take() {
             finish_batch(
                 blas, cluster, counters, router, plan, queue, trace, infl,
-                metrics_prev,
+                fuse, metrics_prev,
             );
         }
         handle_fault(
@@ -848,7 +907,7 @@ fn serve_gemm(
         pipelined = true;
         finish_batch(
             blas, cluster, counters, router, plan, queue, trace, infl,
-            metrics_prev,
+            fuse, metrics_prev,
         );
         // the drained batch is fully accounted and this batch's stage
         // delta is already materialized: safe to bound trace growth now
@@ -902,7 +961,7 @@ fn serve_gemm(
     } else {
         finish_batch(
             blas, cluster, counters, router, plan, queue, trace, infl,
-            metrics_prev,
+            fuse, metrics_prev,
         );
     }
 }
@@ -923,6 +982,7 @@ fn serve_gemv(
     batch: Vec<Job>,
     req: GemvRequest,
     depth: usize,
+    fuse: &mut FuseState,
     inflight: &mut Option<Inflight>,
     metrics_prev: &mut Metrics,
 ) {
@@ -948,7 +1008,7 @@ fn serve_gemv(
         if let Some(infl) = inflight.take() {
             finish_batch(
                 blas, cluster, counters, router, plan, queue, trace, infl,
-                metrics_prev,
+                fuse, metrics_prev,
             );
         }
         serve_gemv_host(
@@ -977,7 +1037,7 @@ fn serve_gemv(
         let infl = inflight.take().expect("checked above");
         finish_batch(
             blas, cluster, counters, router, plan, queue, trace, infl,
-            metrics_prev,
+            fuse, metrics_prev,
         );
         before = snap(blas);
         stage = blas.gemv_batch_stage((m, n), 1.0, 0.0, &inputs, zero_copy);
@@ -1014,7 +1074,7 @@ fn serve_gemv(
         if let Some(infl) = inflight.take() {
             finish_batch(
                 blas, cluster, counters, router, plan, queue, trace, infl,
-                metrics_prev,
+                fuse, metrics_prev,
             );
         }
         handle_fault(
@@ -1033,7 +1093,7 @@ fn serve_gemv(
         pipelined = true;
         finish_batch(
             blas, cluster, counters, router, plan, queue, trace, infl,
-            metrics_prev,
+            fuse, metrics_prev,
         );
         blas.reset_run();
     }
@@ -1081,7 +1141,7 @@ fn serve_gemv(
     } else {
         finish_batch(
             blas, cluster, counters, router, plan, queue, trace, infl,
-            metrics_prev,
+            fuse, metrics_prev,
         );
     }
 }
@@ -1105,6 +1165,7 @@ fn serve_chain(
     job: Job,
     req: ChainRequest,
     depth: usize,
+    fuse: &mut FuseState,
     inflight: &mut Option<Inflight>,
     metrics_prev: &mut Metrics,
 ) {
@@ -1139,7 +1200,7 @@ fn serve_chain(
         if let Some(infl) = inflight.take() {
             finish_batch(
                 blas, cluster, counters, router, plan, queue, trace, infl,
-                metrics_prev,
+                fuse, metrics_prev,
             );
         }
         serve_chain_unchained(
@@ -1174,7 +1235,7 @@ fn serve_chain(
         let infl = inflight.take().expect("checked above");
         finish_batch(
             blas, cluster, counters, router, plan, queue, trace, infl,
-            metrics_prev,
+            fuse, metrics_prev,
         );
         before = snap(blas);
         stage = blas.chain_stage(m, &x, &specs);
@@ -1211,7 +1272,7 @@ fn serve_chain(
         if let Some(infl) = inflight.take() {
             finish_batch(
                 blas, cluster, counters, router, plan, queue, trace, infl,
-                metrics_prev,
+                fuse, metrics_prev,
             );
         }
         handle_fault(
@@ -1241,7 +1302,7 @@ fn serve_chain(
         pipelined = true;
         finish_batch(
             blas, cluster, counters, router, plan, queue, trace, infl,
-            metrics_prev,
+            fuse, metrics_prev,
         );
         blas.reset_run();
     }
@@ -1294,7 +1355,7 @@ fn serve_chain(
     } else {
         finish_batch(
             blas, cluster, counters, router, plan, queue, trace, infl,
-            metrics_prev,
+            fuse, metrics_prev,
         );
     }
 }
@@ -1370,8 +1431,370 @@ fn serve_chain_unchained(
         t0.elapsed().as_micros() as u64,
         BatchMarks { collected_at: t0, exec_at, done_at },
         Some(&req.dims),
+        None,
         metrics_prev,
     );
+}
+
+/// Synthesize a DAG request's per-node weights and biases from its
+/// seeds, in the fixed stream order every path must reproduce (device,
+/// host oracle and fault fallback): per node in index order, weight
+/// first (its own `b_seed` stream, or the continuing request stream),
+/// then bias.  Non-matmul (fan-in) nodes draw nothing.
+fn synth_dag_operands(
+    shape: &DagShape,
+    b_seeds: &[Option<u64>],
+    rng: &mut Rng,
+) -> (Vec<Option<Vec<f64>>>, Vec<Option<Vec<f64>>>) {
+    let widths = shape.widths();
+    let mut weights = Vec::with_capacity(shape.nodes.len());
+    let mut biases = Vec::with_capacity(shape.nodes.len());
+    for (i, node) in shape.nodes.iter().enumerate() {
+        weights.push(node.op.is_matmul().then(|| {
+            let len = shape.in_width(i) * widths[i];
+            match b_seeds.get(i).copied().flatten() {
+                Some(bs) => Rng::new(bs).normal_vec(len),
+                None => rng.normal_vec(len),
+            }
+        }));
+        biases.push(node.bias.then(|| rng.normal_vec(widths[i])));
+    }
+    (weights, biases)
+}
+
+/// Serve one DAG job.  The device path stages the whole graph as ONE
+/// submission (fork once, interior edges device-resident, a fan-out
+/// trunk staged exactly once) and rides the software pipeline exactly
+/// like a chain; a host decision runs the same nodes through the per-op
+/// host walk — the oracle the staged checksums must match bit-for-bit.
+/// A request carrying `input_key` splices onto the previous DAG's
+/// still-published output instead of synthesizing its input
+/// (cross-request fusion); one carrying `publish_key` leaves its final
+/// sink behind for the next request's splice.
+#[allow(clippy::too_many_arguments)]
+fn serve_dag(
+    blas: &mut HeroBlas,
+    cluster: u32,
+    counters: &SchedCounters,
+    router: &PlacementRouter,
+    plan: &FaultPlan,
+    queue: &WorkQueue,
+    trace: &TraceRecorder,
+    launch_seq: &mut u64,
+    job: Job,
+    req: DagRequest,
+    depth: usize,
+    fuse: &mut FuseState,
+    inflight: &mut Option<Inflight>,
+    metrics_prev: &mut Metrics,
+) {
+    let t0 = Instant::now();
+    blas.policy.mode = req.mode;
+    let shape = req.shape.clone();
+    let m = shape.m;
+    if shape.nodes.is_empty() || m == 0 || shape.d0 == 0 {
+        reply_error(counters, cluster, &[job], "dag: empty or zero-dim spec");
+        return;
+    }
+    let widths = shape.widths();
+    let batch = vec![job];
+    let queue_ms = queue_waits(&batch);
+
+    // ---- cross-request fusion: resolve the producer's published output
+    // BEFORE any synthesis — the input either splices or the request
+    // fails fast (re-synthesizing from the seed would silently change
+    // the numerics the submitter asked for) ----
+    let fused_x = match req.input_key {
+        None => None,
+        Some(key) => {
+            let now = Instant::now();
+            if fuse.slot.as_ref().is_some_and(|s| now >= s.expires_at) {
+                let stale = fuse.slot.take().expect("checked above");
+                router.note_evicted(dag_fuse_key(stale.key), cluster);
+            }
+            let hit = fuse.slot.as_ref().is_some_and(|s| {
+                s.key == key && s.rows == m && s.width == shape.d0
+            });
+            if !hit {
+                reply_error(
+                    counters,
+                    cluster,
+                    &batch,
+                    &format!(
+                        "dag: input_key {key} has no resident producer \
+                         output on this worker (fuse window expired or \
+                         never published)"
+                    ),
+                );
+                return;
+            }
+            let slot = fuse.slot.take().expect("checked above");
+            // consumed: the directory must stop steering at it
+            router.note_evicted(dag_fuse_key(slot.key), cluster);
+            counters.dag_fused_requests.fetch_add(1, Ordering::Relaxed);
+            trace.instant(
+                cluster,
+                EventKind::DagFuse,
+                dag_fuse_key(key),
+                (m * shape.d0 * 8) as u64,
+            );
+            Some(slot.data)
+        }
+    };
+
+    // ---- synthesize the input and every node's operands ----
+    let mut rng = Rng::new(req.seed);
+    let x = match fused_x {
+        Some(d) => d,
+        // a fused request never draws its input; its weights still
+        // continue from the stream's start, so the same spec computes
+        // the same function whichever way the input arrived
+        None => rng.normal_vec(m * shape.d0),
+    };
+    let (weights, biases) = synth_dag_operands(&shape, &req.b_seeds, &mut rng);
+    let specs: Vec<DagNode<'_, f64>> = weights
+        .iter()
+        .zip(biases.iter())
+        .map(|(w, b)| DagNode { b: w.as_deref(), bias: b.as_deref() })
+        .collect();
+
+    // ---- host / per-op oracle path: no graph staging, no pipeline ----
+    if blas.policy.dag(&shape) == ExecTarget::Host {
+        if let Some(infl) = inflight.take() {
+            finish_batch(
+                blas, cluster, counters, router, plan, queue, trace, infl,
+                fuse, metrics_prev,
+            );
+        }
+        serve_dag_host(
+            blas, cluster, counters, router, trace, batch, &req, &shape, x,
+            &specs, t0, metrics_prev,
+        );
+        return;
+    }
+    // one fault-schedule draw per staged launch attempt
+    let seq = *launch_seq;
+    *launch_seq += 1;
+
+    // ---- stage: fork once, input + weights + every node output
+    // resident (a fan-out trunk's buffer staged exactly once) ----
+    if inflight.is_none() {
+        blas.reset_run();
+    }
+    let mut before = snap(blas);
+    let mut stage = blas.dag_stage(&shape, &x, &specs);
+    if stage.is_err() && inflight.is_some() {
+        // the in-flight batch's operands may be what keeps the graph
+        // from fitting: drain the pipeline and retry once serially
+        let infl = inflight.take().expect("checked above");
+        finish_batch(
+            blas, cluster, counters, router, plan, queue, trace, infl,
+            fuse, metrics_prev,
+        );
+        before = snap(blas);
+        stage = blas.dag_stage(&shape, &x, &specs);
+    }
+    let staged_run = match stage {
+        Ok(s) => s,
+        Err(e) => {
+            sync_directory(blas, router, cluster);
+            reply_error(counters, cluster, &batch, &e.to_string());
+            return;
+        }
+    };
+    let stage_acct = delta(before, snap(blas));
+
+    // ---- cancel-after-stage: release the pins (the fan-out trunk's
+    // multi-consumer pin included) instead of launching for a dropped
+    // receiver ----
+    if batch[0].cancel.is_cancelled() {
+        blas.dag_abandon(staged_run);
+        counters.cancelled.fetch_add(1, Ordering::Relaxed);
+        inflight_sub(counters, cluster, 1);
+        sync_directory(blas, router, cluster);
+        if inflight.is_none() {
+            check_pins_drained(blas, counters, cluster);
+        }
+        return;
+    }
+
+    // ---- injected staging/DMA fault (see serve_gemm) ----
+    if plan.staging_fault(cluster, seq) {
+        counters.faults_injected.fetch_add(1, Ordering::Relaxed);
+        blas.dag_abandon(staged_run);
+        sync_directory(blas, router, cluster);
+        if let Some(infl) = inflight.take() {
+            finish_batch(
+                blas, cluster, counters, router, plan, queue, trace, infl,
+                fuse, metrics_prev,
+            );
+        }
+        handle_fault(
+            blas, cluster, counters, router, plan, queue, trace, batch,
+            FaultKind::StagingDma, metrics_prev,
+        );
+        check_pins_drained(blas, counters, cluster);
+        return;
+    }
+
+    // ---- affinity bookkeeping: tracked shared weights resident here
+    // (same keyspace as chain links, so a DAG's weight warms a chain's
+    // placement and vice versa) ----
+    if router.affinity_enabled() {
+        let b_keys = blas.dag_staged_b_keys(&staged_run);
+        for (i, ck) in b_keys.into_iter().enumerate() {
+            let (Some(bs), Some(ck)) =
+                (req.b_seeds.get(i).copied().flatten(), ck)
+            else {
+                continue;
+            };
+            let key = chain_b_key(shape.in_width(i), widths[i], bs);
+            blas.engine.opcache.set_tag(&ck, key);
+            router.note_resident(key, cluster);
+        }
+    }
+
+    // ---- overlap credit, then drain the previous batch ----
+    let mut hidden = 0u64;
+    let mut pipelined = false;
+    if let Some(infl) = inflight.take() {
+        hidden = overlap_credit(blas, stage_acct.data_copy, infl.acct.compute);
+        pipelined = true;
+        finish_batch(
+            blas, cluster, counters, router, plan, queue, trace, infl,
+            fuse, metrics_prev,
+        );
+        blas.reset_run();
+    }
+
+    // ---- execute: one doorbell runs every node in topological order ----
+    let before = snap(blas);
+    let exec_at = Instant::now();
+    let run = match blas.dag_execute(staged_run) {
+        Ok(r) => r,
+        Err(e) => {
+            sync_directory(blas, router, cluster);
+            reply_error(counters, cluster, &batch, &e.to_string());
+            return;
+        }
+    };
+    if pipelined {
+        counters.pipelined_batches.fetch_add(1, Ordering::Relaxed);
+        counters
+            .overlap_hidden_us
+            .fetch_add(virt_us(blas, hidden), Ordering::Relaxed);
+    }
+    let mut acct = stage_acct;
+    acct.add(delta(before, snap(blas)));
+    acct.hidden = hidden;
+
+    // ---- fault plan: execute-time seams + the completion deadline ----
+    let fault = launch_fault(plan, counters, cluster, seq);
+    let deadline = completion_deadline(blas, plan, exec_at, |cm| {
+        cm.offload_dag_cycles(&shape)
+    });
+
+    let outs: Vec<Vec<f64>> = shape
+        .sinks()
+        .iter()
+        .map(|&s| {
+            let (r, c) = shape.out_dims(s);
+            vec![0.0; r * c]
+        })
+        .collect();
+    let infl = Inflight {
+        jobs: batch,
+        run: InflightRun::Dag { req, outs, run },
+        acct,
+        queue_ms,
+        work_us: t0.elapsed().as_micros() as u64,
+        collected_at: t0,
+        exec_at,
+        fault,
+        deadline,
+    };
+    if depth >= 2 {
+        *inflight = Some(infl);
+    } else {
+        finish_batch(
+            blas, cluster, counters, router, plan, queue, trace, infl,
+            fuse, metrics_prev,
+        );
+    }
+}
+
+/// The per-node DAG host oracle: run every node through the host walk —
+/// identical numerics to the staged device path, none of the residency.
+/// `blas.dag` is pinned to its host arm for the duration so a
+/// concurrent calibration update can never flip the already-made
+/// decision mid-request.
+#[allow(clippy::too_many_arguments)]
+fn serve_dag_host(
+    blas: &mut HeroBlas,
+    cluster: u32,
+    counters: &SchedCounters,
+    router: &PlacementRouter,
+    trace: &TraceRecorder,
+    batch: Vec<Job>,
+    req: &DagRequest,
+    shape: &DagShape,
+    x: Vec<f64>,
+    specs: &[DagNode<'_, f64>],
+    t0: Instant,
+    metrics_prev: &mut Metrics,
+) {
+    let queue_ms = queue_waits(&batch);
+    blas.reset_run();
+    let before = snap(blas);
+    let exec_at = Instant::now();
+    let sinks = shape.sinks();
+    let mut outs: Vec<Vec<f64>> = sinks
+        .iter()
+        .map(|&s| {
+            let (r, c) = shape.out_dims(s);
+            vec![0.0; r * c]
+        })
+        .collect();
+    let saved_mode = blas.policy.mode;
+    blas.policy.mode = crate::config::DispatchMode::HostOnly;
+    let result = {
+        let mut refs: Vec<&mut [f64]> =
+            outs.iter_mut().map(|o| o.as_mut_slice()).collect();
+        blas.dag(shape, &x, specs, &mut refs)
+    };
+    blas.policy.mode = saved_mode;
+    let done_at = Instant::now();
+    sync_directory(blas, router, cluster);
+    match result {
+        Ok(()) => {
+            let checksum: f64 =
+                outs.iter().map(|o| o.iter().sum::<f64>()).sum();
+            let acct = delta(before, snap(blas));
+            let (rm, rn) =
+                shape.out_dims(*sinks.last().expect("non-empty dag"));
+            send_outcomes(
+                blas,
+                cluster,
+                counters,
+                trace,
+                &batch,
+                "dag",
+                (rm, rn),
+                req.mode,
+                &[checksum],
+                acct,
+                &queue_ms,
+                t0.elapsed().as_micros() as u64,
+                BatchMarks { collected_at: t0, exec_at, done_at },
+                None,
+                Some((shape, &[][..])),
+                metrics_prev,
+            );
+        }
+        Err(e) => {
+            reply_error(counters, cluster, &batch, &e.to_string());
+        }
+    }
 }
 
 /// Error replies for every member of a failed batch, with the failure
@@ -1436,7 +1859,8 @@ fn serve_gemm_host(
     send_outcomes(
         blas, cluster, counters, trace, &batch, "gemm", (n, n), req.mode,
         &checksums, acct, &queue_ms, t0.elapsed().as_micros() as u64,
-        BatchMarks { collected_at: t0, exec_at, done_at }, None, metrics_prev,
+        BatchMarks { collected_at: t0, exec_at, done_at }, None, None,
+        metrics_prev,
     );
 }
 
@@ -1477,7 +1901,8 @@ fn serve_gemv_host(
     send_outcomes(
         blas, cluster, counters, trace, &batch, "gemv", (m, n), req.mode,
         &checksums, acct, &queue_ms, t0.elapsed().as_micros() as u64,
-        BatchMarks { collected_at: t0, exec_at, done_at }, None, metrics_prev,
+        BatchMarks { collected_at: t0, exec_at, done_at }, None, None,
+        metrics_prev,
     );
 }
 
@@ -1542,7 +1967,7 @@ fn serve_level1(
                 blas, cluster, counters, trace, &batch, req.op.name(), (1, n),
                 req.mode, &checksums, acct, &queue_ms,
                 t0.elapsed().as_micros() as u64,
-                BatchMarks { collected_at: t0, exec_at, done_at }, None,
+                BatchMarks { collected_at: t0, exec_at, done_at }, None, None,
                 metrics_prev,
             );
         }
@@ -1574,6 +1999,7 @@ fn finish_batch(
     queue: &WorkQueue,
     trace: &TraceRecorder,
     infl: Inflight,
+    fuse: &mut FuseState,
     metrics_prev: &mut Metrics,
 ) {
     let mut fault = infl.fault;
@@ -1604,7 +2030,7 @@ fn finish_batch(
         deadline: _,
     } = infl;
     let marks = BatchMarks { collected_at, exec_at, done_at: t_finish };
-    let (finish, checksums, op, dims, mode, chain_dims) = match run {
+    let (finish, checksums, op, dims, mode, chain_dims, dag_info) = match run {
         InflightRun::Gemm { req, mut data, run } => {
             let finish = {
                 let mut outs: Vec<&mut [f64]> =
@@ -1613,7 +2039,7 @@ fn finish_batch(
             };
             let checksums: Vec<f64> =
                 data.iter().map(|(_, _, c)| c.iter().sum()).collect();
-            (finish, checksums, "gemm", (req.n, req.n), req.mode, None)
+            (finish, checksums, "gemm", (req.n, req.n), req.mode, None, None)
         }
         InflightRun::Gemv { req, mut ys, run } => {
             let finish = {
@@ -1622,7 +2048,7 @@ fn finish_batch(
                 blas.gemv_batch_finish(run, &mut outs)
             };
             let checksums: Vec<f64> = ys.iter().map(|y| y.iter().sum()).collect();
-            (finish, checksums, "gemv", (req.m, req.n), req.mode, None)
+            (finish, checksums, "gemv", (req.m, req.n), req.mode, None, None)
         }
         InflightRun::Chain { req, mut out, run } => {
             // only the final link's output crosses back to the host; the
@@ -1637,6 +2063,48 @@ fn finish_batch(
                 (req.m, n_last),
                 req.mode,
                 Some(req.dims),
+                None,
+            )
+        }
+        InflightRun::Dag { req, mut outs, run } => {
+            // only the sink outputs cross back to the host; the finish
+            // releases every interior edge's residency pin.  A faulted
+            // DAG never publishes — its results are untrusted.
+            let shape = req.shape.clone();
+            let node_cycles = run.node_cycles().to_vec();
+            let publish = req.publish_key.is_some() && fault.is_none();
+            let finish = {
+                let mut refs: Vec<&mut [f64]> =
+                    outs.iter_mut().map(|o| o.as_mut_slice()).collect();
+                blas.dag_finish(run, &mut refs, publish)
+            };
+            if finish.is_ok() && publish {
+                let key = req.publish_key.expect("publish implies a key");
+                let s = *shape.sinks().last().expect("non-empty dag");
+                let (rows, width) = shape.out_dims(s);
+                fuse.slot = Some(FuseSlot {
+                    key,
+                    rows,
+                    width,
+                    data: outs.last().cloned().unwrap_or_default(),
+                    expires_at: t_finish
+                        + Duration::from_millis(fuse.window_ms.max(1)),
+                });
+                // rendezvous: route the consumer that names this key here
+                router.note_resident(dag_fuse_key(key), cluster);
+            }
+            let checksum: f64 =
+                outs.iter().map(|o| o.iter().sum::<f64>()).sum();
+            let s = *shape.sinks().last().expect("non-empty dag");
+            let (rm, rn) = shape.out_dims(s);
+            (
+                finish,
+                vec![checksum],
+                "dag",
+                (rm, rn),
+                req.mode,
+                None,
+                Some((shape, node_cycles)),
             )
         }
     };
@@ -1647,7 +2115,7 @@ fn finish_batch(
     // ---- faulted batch: mappings are released (the finish above ran
     // either way), results untrusted — discard and recover ----
     if let Some(kind) = fault {
-        let _ = (finish, checksums, op, dims, mode, chain_dims);
+        let _ = (finish, checksums, op, dims, mode, chain_dims, dag_info);
         handle_fault(
             blas, cluster, counters, router, plan, queue, trace, jobs, kind,
             metrics_prev,
@@ -1675,6 +2143,7 @@ fn finish_batch(
                 service_us,
                 marks,
                 chain_dims.as_deref(),
+                dag_info.as_ref().map(|(s, nc)| (s, nc.as_slice())),
                 metrics_prev,
             );
         }
@@ -1839,6 +2308,7 @@ fn host_fallback(
                 .map_err(|e| e.to_string())
         }
         JobPayload::Chain(r) => host_chain(blas, r),
+        JobPayload::Dag(r) => host_dag(blas, r),
         // level-1 and fence jobs are never injected or deadlined
         _ => Err(format!(
             "fault recovery ({}): payload has no host fallback",
@@ -1951,6 +2421,51 @@ fn host_chain(blas: &mut HeroBlas, req: &ChainRequest) -> HostRun {
     Ok(("chain", (m, n_last), req.mode, h.iter().sum::<f64>()))
 }
 
+/// Host-path DAG for fault recovery: the same host walk as the per-node
+/// oracle, with the same RNG call order as [`serve_dag`]'s synthesis —
+/// the checksum matches the staged device path bit-for-bit.  A fused
+/// request cannot be recovered this way: its input was the producer's
+/// resident output, which died with the faulted cluster.
+fn host_dag(blas: &mut HeroBlas, req: &DagRequest) -> HostRun {
+    let shape = &req.shape;
+    let m = shape.m;
+    if shape.nodes.is_empty() || m == 0 || shape.d0 == 0 {
+        return Err("dag: empty or zero-dim spec".to_string());
+    }
+    if req.input_key.is_some() {
+        return Err(
+            "dag: fused request has no host fallback (the producer's \
+             resident output was lost with the faulted cluster)"
+                .to_string(),
+        );
+    }
+    let mut rng = Rng::new(req.seed);
+    let x = rng.normal_vec(m * shape.d0);
+    let (weights, biases) = synth_dag_operands(shape, &req.b_seeds, &mut rng);
+    let specs: Vec<DagNode<'_, f64>> = weights
+        .iter()
+        .zip(biases.iter())
+        .map(|(w, b)| DagNode { b: w.as_deref(), bias: b.as_deref() })
+        .collect();
+    let sinks = shape.sinks();
+    let mut outs: Vec<Vec<f64>> = sinks
+        .iter()
+        .map(|&s| {
+            let (r, c) = shape.out_dims(s);
+            vec![0.0; r * c]
+        })
+        .collect();
+    {
+        let mut refs: Vec<&mut [f64]> =
+            outs.iter_mut().map(|o| o.as_mut_slice()).collect();
+        blas.dag(shape, &x, &specs, &mut refs)
+            .map_err(|e| e.to_string())?;
+    }
+    let (rm, rn) = shape.out_dims(*sinks.last().expect("non-empty dag"));
+    let checksum: f64 = outs.iter().map(|o| o.iter().sum::<f64>()).sum();
+    Ok(("dag", (rm, rn), req.mode, checksum))
+}
+
 /// Wall microseconds between two span-clock stamps (0 when reversed).
 fn dur_us(from: Instant, to: Instant) -> u64 {
     to.saturating_duration_since(from).as_micros() as u64
@@ -2002,6 +2517,7 @@ fn send_outcomes(
     service_us: u64,
     marks: BatchMarks,
     chain_dims: Option<&[usize]>,
+    dag: Option<(&DagShape, &[u64])>,
     metrics_prev: &mut Metrics,
 ) {
     let b = batch.len();
@@ -2027,6 +2543,12 @@ fn send_outcomes(
     if op == "chain" {
         counters.chains.fetch_add(b as u64, Ordering::Relaxed);
     }
+    if let Some((shape, _)) = dag {
+        counters.dags.fetch_add(b as u64, Ordering::Relaxed);
+        counters
+            .dag_nodes
+            .fetch_add(shape.nodes.len() as u64, Ordering::Relaxed);
+    }
     counters.note_service_us((service_us / b as u64).max(1));
     let metrics_now = blas.metrics();
     counters.absorb_engine_delta(cluster, metrics_prev, &metrics_now);
@@ -2039,7 +2561,18 @@ fn send_outcomes(
     if let Some(model) = &blas.policy.model {
         if model.calibrate_enabled() {
             let device_total = acct.data_copy + acct.fork_join + acct.compute;
-            if let Some(cdims) = chain_dims {
+            if let Some((shape, node_cycles)) = dag {
+                // per-link attribution: the executor measured each
+                // node's own compute window, so the feedback lands on
+                // the per-op family that actually ran it instead of
+                // being smeared over the whole launch
+                if device_total > 0 {
+                    model.observe_dag_nodes(shape, node_cycles);
+                }
+                if acct.host_compute > 0 {
+                    model.observe_dag_host(shape, acct.host_compute);
+                }
+            } else if let Some(cdims) = chain_dims {
                 // chained launches have no single (m, n, k): fold the
                 // observed virtual time back through the chain-cycle
                 // predictors instead of silently skipping feedback
@@ -2087,24 +2620,57 @@ fn send_outcomes(
     // specialized estimate can then move it onto the device. ----
     if let Some(reg) = &blas.policy.kernel {
         if reg.enabled() {
-            let keys: Vec<u64> = match chain_dims {
-                // chain links stage as plain gemms (m, w[0]) x
-                // (w[0], w[1]) with no per-link epilogue
-                Some(cdims) => cdims
-                    .windows(2)
-                    .filter_map(|w| {
-                        reg.key_for("gemm", "f64", (m, w[1], w[0]), Epilogue::None)
+            let keys: Vec<u64> = if let Some((shape, _)) = dag {
+                // DAG matmul nodes stage with their own epilogues, so
+                // they earn (and later take) epilogue-fused plans
+                let widths = shape.widths();
+                shape
+                    .nodes
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, nd)| {
+                        if !nd.op.is_matmul() {
+                            return None;
+                        }
+                        let k = shape.in_width(i);
+                        let (kop, dims) = if nd.op == DagOp::Gemv {
+                            ("gemv", (shape.m, k, 0))
+                        } else {
+                            ("gemm", (shape.m, widths[i], k))
+                        };
+                        reg.key_for(
+                            kop,
+                            "f64",
+                            dims,
+                            Epilogue::of(nd.bias, nd.relu),
+                        )
                     })
-                    .collect(),
-                None => {
-                    let dims = match op {
-                        "gemm" => (m, n, n),
-                        "gemv" => (m, n, 0),
-                        _ => (n, 0, 0), // axpy/dot report (m, n) = (1, n)
-                    };
-                    reg.key_for(op, "f64", dims, Epilogue::None)
-                        .into_iter()
-                        .collect()
+                    .collect()
+            } else {
+                match chain_dims {
+                    // chain links stage as plain gemms (m, w[0]) x
+                    // (w[0], w[1]) with no per-link epilogue
+                    Some(cdims) => cdims
+                        .windows(2)
+                        .filter_map(|w| {
+                            reg.key_for(
+                                "gemm",
+                                "f64",
+                                (m, w[1], w[0]),
+                                Epilogue::None,
+                            )
+                        })
+                        .collect(),
+                    None => {
+                        let dims = match op {
+                            "gemm" => (m, n, n),
+                            "gemv" => (m, n, 0),
+                            _ => (n, 0, 0), // axpy/dot report (m, n) = (1, n)
+                        };
+                        reg.key_for(op, "f64", dims, Epilogue::None)
+                            .into_iter()
+                            .collect()
+                    }
                 }
             };
             for key in keys {

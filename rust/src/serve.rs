@@ -22,6 +22,18 @@
 //!                        "chained": true}  (a dependent GEMM sequence run
 //!                        as ONE submission with device-resident
 //!                        intermediates; "chained": false = per-op oracle)
+//!                   or:  {"op": "dag", "m": 64, "d0": 256, "nodes":
+//!                        [{"op": "gemm", "n": 128, "bias": true,
+//!                          "relu": true, "b_seed": 42},
+//!                         {"op": "gemm", "n": 128, "src": 0},
+//!                         {"op": "axpy", "src": 0, "src2": 1}],
+//!                        "seed": 7}  (a dataflow graph run as ONE
+//!                        submission: fan-out trunks promoted once,
+//!                        fan-in over resident branches; an absent
+//!                        "src" consumes the external input x.
+//!                        "publish_key" pins the sink output for the
+//!                        fuse window; a follow-up naming it as
+//!                        "input_key" splices onto the resident bytes)
 //! Response (one line):  {"ok": true, "op": "gemm", "m": 128, "n": 128,
 //!                        "mode": "device_only",
 //!                        "total_ms": ..., "data_copy_ms": ...,
@@ -77,11 +89,12 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::config::{DispatchMode, PlatformConfig};
+use crate::dag::{DagNodeShape, DagOp, DagShape};
 use crate::error::{Error, Result};
 use crate::metrics::OP_CLASSES;
 use crate::sched::{
-    ChainRequest, GemmOutcome, GemmRequest, GemvRequest, JobPayload, Level1Op,
-    Level1Request, Priority, Scheduler, SubmitError,
+    ChainRequest, DagRequest, GemmOutcome, GemmRequest, GemvRequest, JobPayload,
+    Level1Op, Level1Request, Priority, Scheduler, SubmitError,
 };
 use crate::util::json_lite::Json;
 
@@ -311,6 +324,75 @@ fn parse_chain(req: &Json) -> std::result::Result<(ChainRequest, Priority), Stri
     Ok((ChainRequest { m, dims, mode, seed, b_seeds, chained }, priority))
 }
 
+/// Parse a dag request line: `{"op": "dag", "m": 64, "d0": 256,
+/// "nodes": [{"op": "gemm", "n": 128, "b_seed": 42, "bias": true,
+/// "relu": true}, {"op": "gemm", "n": 128, "src": 0}, {"op": "axpy",
+/// "src": 0, "src2": 1}], "seed": 7}` — a dataflow graph executed as
+/// ONE submission.  Node order IS topological order: `src`/`src2` name
+/// earlier node indices (absent = the external input x, m x d0).
+/// `b_seed` on a gemm/gemv node draws that node's weights from its own
+/// stream (the shared-weight affinity key); `bias`/`relu` fuse the
+/// usual epilogues.  `publish_key`/`input_key` opt into cross-request
+/// fusion through the worker's resident sink output.
+fn parse_dag(req: &Json) -> std::result::Result<(DagRequest, Priority), String> {
+    let m = req.get("m").and_then(|v| v.as_u64()).unwrap_or(64) as usize;
+    if m == 0 || m > 2048 {
+        return Err("m must be in 1..=2048".into());
+    }
+    let d0 = req.get("d0").and_then(|v| v.as_u64()).unwrap_or(64) as usize;
+    if d0 == 0 || d0 > 2048 {
+        return Err("d0 must be in 1..=2048".into());
+    }
+    let arr = match req.get("nodes").and_then(|v| v.as_arr()) {
+        Some(arr) if !arr.is_empty() => arr,
+        Some(_) => return Err("dag needs at least 1 node".into()),
+        None => return Err("dag needs a nodes array".into()),
+    };
+    let mut nodes = Vec::with_capacity(arr.len());
+    let mut b_seeds = Vec::with_capacity(arr.len());
+    for (i, nj) in arr.iter().enumerate() {
+        let op_name = nj
+            .get("op")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("node {i}: missing op"))?;
+        let op = DagOp::from_name(op_name)
+            .ok_or_else(|| format!("node {i}: unknown op '{op_name}'"))?;
+        // only gemm carries an output width; the rest derive theirs
+        let n = match op {
+            DagOp::Gemm => match nj.get("n").and_then(|v| v.as_u64()) {
+                Some(n) if (1..=2048).contains(&n) => n as usize,
+                _ => return Err(format!("node {i}: gemm needs n in 1..=2048")),
+            },
+            _ => 0,
+        };
+        let src = nj.get("src").and_then(|v| v.as_u64()).map(|s| s as usize);
+        let src2 = nj.get("src2").and_then(|v| v.as_u64()).map(|s| s as usize);
+        let bias = matches!(nj.get("bias"), Some(Json::Bool(true)));
+        let relu = matches!(nj.get("relu"), Some(Json::Bool(true)));
+        b_seeds.push(nj.get("b_seed").and_then(|v| v.as_u64()));
+        nodes.push(DagNodeShape { op, src, src2, n, bias, relu });
+    }
+    let (mode, priority) = parse_mode_priority(req)?;
+    if mode == DispatchMode::DeviceZeroCopy {
+        return Err(
+            "dag does not support zero_copy (device-resident intermediates \
+             are a copy-mode technique)"
+                .into(),
+        );
+    }
+    let seed = req
+        .get("seed")
+        .and_then(|v| v.as_u64())
+        .unwrap_or(0xDA6 ^ ((m as u64) << 16) ^ nodes.len() as u64);
+    let publish_key = req.get("publish_key").and_then(|v| v.as_u64());
+    let input_key = req.get("input_key").and_then(|v| v.as_u64());
+    let shape = DagShape { m, d0, nodes };
+    Ok((
+        DagRequest { shape, mode, seed, b_seeds, publish_key, input_key },
+        priority,
+    ))
+}
+
 /// Parse a gemv request line into a job payload + priority.
 fn parse_gemv(req: &Json) -> std::result::Result<(GemvRequest, Priority), String> {
     let m = req.get("m").and_then(|v| v.as_u64()).unwrap_or(128) as usize;
@@ -457,6 +539,10 @@ fn dispatch_op(
                 ("rehomed", Json::Num(m.rehomed as f64)),
                 ("chains", Json::Num(m.chains as f64)),
                 ("chain_bytes_elided", Json::Num(m.chain_bytes_elided as f64)),
+                ("dags", Json::Num(m.dags as f64)),
+                ("dag_nodes", Json::Num(m.dag_nodes as f64)),
+                ("dag_bytes_elided", Json::Num(m.dag_bytes_elided as f64)),
+                ("dag_fused_requests", Json::Num(m.dag_fused_requests as f64)),
                 ("faults_injected", Json::Num(m.faults_injected as f64)),
                 ("retries", Json::Num(m.retries as f64)),
                 ("quarantined", Json::Num(m.quarantined as f64)),
@@ -546,6 +632,19 @@ fn dispatch_op(
             }
             submit_and_wait(sched, priority, JobPayload::Chain(chain), trace, reply_timeout)
         }
+        "dag" => {
+            let (dag, priority) = match parse_dag(req) {
+                Ok(p) => p,
+                Err(msg) => return (err_line(&msg), false),
+            };
+            // same preflight as chains, plus graph structure: a cyclic,
+            // over-wide, over-deep or over-capacity DAG fails HERE with
+            // the offending node named, not in staging on a worker
+            if let Err(msg) = sched.validate_dag(&dag) {
+                return (err_line(&msg), false);
+            }
+            submit_and_wait(sched, priority, JobPayload::Dag(dag), trace, reply_timeout)
+        }
         "axpy" | "dot" => {
             let l1op = if op == "axpy" { Level1Op::Axpy } else { Level1Op::Dot };
             let (l1, priority) = match parse_level1(l1op, req) {
@@ -599,6 +698,7 @@ fn top_line(sched: &Scheduler) -> String {
         ("queue_depth", Json::Num(sched.queue_depth() as f64)),
         ("completed", Json::Num(m.completed as f64)),
         ("pin_leaks", Json::Num(m.pin_leaks as f64)),
+        ("dag_fused_requests", Json::Num(m.dag_fused_requests as f64)),
         ("kernel_hits", Json::Num(m.kernel_hits as f64)),
         ("kernel_entries", Json::Num(m.kernel_entries as f64)),
         ("kernels", Json::Arr(kernels)),
@@ -1049,6 +1149,68 @@ mod tests {
         );
         assert!(
             bad(r#"{"op": "chain", "dims": [64, 64], "mode": "zero_copy"}"#)
+                .contains("zero_copy")
+        );
+    }
+
+    #[test]
+    fn parse_dag_specs_and_limits() {
+        let req = Json::parse(
+            r#"{"op": "dag", "m": 64, "d0": 256, "seed": 7,
+                "mode": "device_only", "publish_key": 99,
+                "nodes": [
+                  {"op": "gemm", "n": 128, "b_seed": 42, "bias": true,
+                   "relu": true},
+                  {"op": "gemm", "n": 128, "src": 0},
+                  {"op": "axpy", "src": 0, "src2": 1}
+                ]}"#,
+        )
+        .unwrap();
+        let (d, p) = parse_dag(&req).unwrap();
+        assert_eq!((d.shape.m, d.shape.d0, d.seed), (64, 256, 7));
+        assert_eq!(d.shape.nodes.len(), 3);
+        assert_eq!(d.shape.nodes[0].op, DagOp::Gemm);
+        assert_eq!(d.shape.nodes[0].n, 128);
+        assert!(d.shape.nodes[0].bias && d.shape.nodes[0].relu);
+        assert_eq!(d.shape.nodes[0].src, None, "absent src = external x");
+        assert_eq!(d.shape.nodes[1].src, Some(0));
+        assert_eq!(d.shape.nodes[2].op, DagOp::Axpy);
+        assert_eq!((d.shape.nodes[2].src, d.shape.nodes[2].src2), (Some(0), Some(1)));
+        assert_eq!(d.b_seeds, vec![Some(42), None, None]);
+        assert_eq!(d.publish_key, Some(99));
+        assert_eq!(d.input_key, None);
+        assert_eq!(d.mode, DispatchMode::DeviceOnly);
+        assert_eq!(p, Priority::Normal);
+
+        // stable default seed: same request, same workload
+        let req = Json::parse(
+            r#"{"op": "dag", "nodes": [{"op": "gemv"}]}"#,
+        )
+        .unwrap();
+        let (d, _) = parse_dag(&req).unwrap();
+        let (d2, _) = parse_dag(&req).unwrap();
+        assert_eq!(d.seed, d2.seed);
+        assert_eq!((d.shape.m, d.shape.d0), (64, 64), "m and d0 default to 64");
+        assert_eq!(d.shape.nodes[0].n, 0, "non-gemm nodes carry no width");
+
+        // malformed specs fail with the node named, not wedged submits
+        let bad = |s: &str| parse_dag(&Json::parse(s).unwrap()).unwrap_err();
+        assert!(bad(r#"{"op": "dag"}"#).contains("nodes"));
+        assert!(bad(r#"{"op": "dag", "nodes": []}"#).contains("at least 1"));
+        assert!(bad(r#"{"op": "dag", "m": 0, "nodes": [{"op": "gemv"}]}"#)
+            .contains("m must"));
+        assert!(bad(r#"{"op": "dag", "d0": 9999, "nodes": [{"op": "gemv"}]}"#)
+            .contains("d0 must"));
+        assert!(bad(r#"{"op": "dag", "nodes": [{"n": 64}]}"#)
+            .contains("node 0: missing op"));
+        assert!(bad(r#"{"op": "dag", "nodes": [{"op": "conv"}]}"#)
+            .contains("node 0: unknown op 'conv'"));
+        assert!(bad(r#"{"op": "dag", "nodes": [{"op": "gemm"}]}"#)
+            .contains("node 0: gemm needs n"));
+        assert!(bad(r#"{"op": "dag", "nodes": [{"op": "gemm", "n": 9999}]}"#)
+            .contains("1..=2048"));
+        assert!(
+            bad(r#"{"op": "dag", "nodes": [{"op": "gemv"}], "mode": "zero_copy"}"#)
                 .contains("zero_copy")
         );
     }

@@ -1,0 +1,466 @@
+//! DAG executor end-to-end: fan-out/fan-in graphs must change *data
+//! movement*, never numerics.
+//!
+//! Pins the ISSUE-10 acceptance criteria: a linear DAG is bit-identical
+//! to the equivalent chain WITH an identical charge sequence, a fan-out
+//! trunk is staged exactly once and matches the per-op oracle
+//! bit-for-bit, cancel-mid-DAG releases every pin, a fused
+//! cross-request splice reproduces the combined graph's checksum, and
+//! malformed/oversized graphs fail fast at validation with the
+//! offending node named.
+
+mod common;
+
+use std::time::Duration;
+
+use common::artifacts_dir;
+use hero_blas::blas::{ChainLink, DagNode, DispatchPolicy, HeroBlas};
+use hero_blas::config::{DispatchMode, PlatformConfig};
+use hero_blas::dag::{linear_gemm_shape, DagNodeShape, DagOp, DagShape};
+use hero_blas::sched::{
+    ChainRequest, DagRequest, JobPayload, Priority, Scheduler,
+};
+use hero_blas::util::rng::Rng;
+
+fn session_with(cfg: PlatformConfig, mode: DispatchMode) -> HeroBlas {
+    HeroBlas::new(cfg, &artifacts_dir(), DispatchPolicy::with_mode(mode))
+        .expect("session construction")
+}
+
+fn gemm(src: Option<usize>, n: usize) -> DagNodeShape {
+    DagNodeShape { op: DagOp::Gemm, src, src2: None, n, bias: false, relu: false }
+}
+
+fn run(sched: &Scheduler, payload: JobPayload) -> hero_blas::sched::GemmOutcome {
+    sched
+        .submit(Priority::Normal, payload)
+        .expect("submit")
+        .result
+        .recv_timeout(Duration::from_secs(300))
+        .expect("reply")
+        .expect("outcome")
+}
+
+#[test]
+fn linear_dag_matches_chain_bit_for_bit_with_identical_charges() {
+    // fresh scheduler per submission: the operand cache is
+    // content-addressed, so running both on one pool would hand the
+    // second run warm weights and skew its charge sequence
+    let cfg = || {
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.pool_clusters = 1;
+        cfg.sched.batch_window_ms = 0;
+        cfg
+    };
+    let chain_sched = Scheduler::new(&cfg(), &artifacts_dir()).unwrap();
+    let dag_sched = Scheduler::new(&cfg(), &artifacts_dir()).unwrap();
+
+    let chain = ChainRequest {
+        m: 48,
+        dims: vec![96, 64, 32],
+        mode: DispatchMode::DeviceOnly,
+        seed: 11,
+        b_seeds: vec![Some(7), Some(8)],
+        chained: true,
+    };
+    let dag = DagRequest {
+        shape: linear_gemm_shape(48, &[96, 64, 32]),
+        mode: DispatchMode::DeviceOnly,
+        seed: 11,
+        b_seeds: vec![Some(7), Some(8)],
+        publish_key: None,
+        input_key: None,
+    };
+
+    let c = run(&chain_sched, JobPayload::Chain(chain));
+    let d = run(&dag_sched, JobPayload::Dag(dag));
+    assert_eq!(c.op, "chain");
+    assert_eq!(d.op, "dag");
+    assert_eq!((c.m, c.n), (d.m, d.n));
+    assert_eq!(
+        c.checksum, d.checksum,
+        "linear dag must be BIT-identical to the equivalent chain"
+    );
+    // the lowering contract: a linear single-consumer DAG produces the
+    // SAME virtual-time charge sequence as the chain path
+    assert_eq!(c.data_copy_ms, d.data_copy_ms, "data-copy charges diverged");
+    assert_eq!(c.fork_join_ms, d.fork_join_ms, "fork-join charges diverged");
+    assert_eq!(c.compute_ms, d.compute_ms, "compute charges diverged");
+    assert_eq!(c.host_compute_ms, d.host_compute_ms);
+
+    let m = dag_sched.metrics();
+    assert_eq!(m.dags, 1, "one dag submission counted");
+    assert_eq!(m.dag_nodes, 2, "both nodes counted");
+    assert!(m.dag_bytes_elided > 0, "interior edge must elide bytes");
+    assert_eq!(m.pin_leaks, 0);
+    chain_sched.shutdown();
+    dag_sched.shutdown();
+}
+
+#[test]
+fn fan_out_trunk_stages_once_and_matches_per_op_oracle() {
+    let (m, d0, h, n) = (32usize, 48usize, 40usize, 24usize);
+    let mut rng = Rng::new(0xF0);
+    let x = rng.normal_vec(m * d0);
+    let w0 = rng.normal_vec(d0 * h);
+    let b0 = rng.normal_vec(h);
+    let w1 = rng.normal_vec(h * n);
+    let w2 = rng.normal_vec(h * n);
+
+    // per-op oracle: the trunk computed ONCE (bias+relu epilogues),
+    // then each head as its own offload from the host copy
+    let mut per_op = session_with(PlatformConfig::default(), DispatchMode::DeviceOnly);
+    let mut trunk = vec![0.0; m * h];
+    per_op
+        .chain(
+            m,
+            &x,
+            &[ChainLink { b: &w0, dims: (d0, h), bias: Some(&b0), relu: true }],
+            &mut trunk,
+        )
+        .unwrap();
+    let head = |blas: &mut HeroBlas, w: &[f64]| {
+        let mut c = vec![0.0; m * n];
+        blas.gemm(
+            hero_blas::blas::Transpose::No,
+            hero_blas::blas::Transpose::No,
+            1.0,
+            &trunk,
+            (m, h),
+            w,
+            (h, n),
+            0.0,
+            &mut c,
+            (m, n),
+        )
+        .unwrap();
+        c
+    };
+    let want1 = head(&mut per_op, &w1);
+    let want2 = head(&mut per_op, &w2);
+
+    // the same graph as ONE dag submission: both heads are sinks, so
+    // the trunk has two consumers and is promoted exactly once
+    let shape = DagShape {
+        m,
+        d0,
+        nodes: vec![
+            DagNodeShape {
+                op: DagOp::Gemm,
+                src: None,
+                src2: None,
+                n: h,
+                bias: true,
+                relu: true,
+            },
+            gemm(Some(0), n),
+            gemm(Some(0), n),
+        ],
+    };
+    let specs = vec![
+        DagNode { b: Some(&w0), bias: Some(&b0) },
+        DagNode { b: Some(&w1), bias: None },
+        DagNode { b: Some(&w2), bias: None },
+    ];
+    let mut dev = session_with(PlatformConfig::default(), DispatchMode::DeviceOnly);
+    let (mut out1, mut out2) = (vec![0.0; m * n], vec![0.0; m * n]);
+    {
+        let mut refs: Vec<&mut [f64]> = vec![&mut out1, &mut out2];
+        dev.dag(&shape, &x, &specs, &mut refs).unwrap();
+    }
+    let dm = dev.metrics();
+
+    assert_eq!(out1, want1, "fan-out head 1 must match the per-op oracle");
+    assert_eq!(out2, want2, "fan-out head 2 must match the per-op oracle");
+    assert_eq!(dm.offloads, 1, "a dag is ONE fork-join");
+    // trunk promoted once (the skipped map-from) + two consuming edges
+    // (both skipped map-tos): exactly three trunk transfers elided
+    assert_eq!(dm.dag_bytes_elided, 3 * (m * h * 8) as u64);
+    assert_eq!(dev.engine.opcache.total_pins(), 0);
+    assert_eq!(dev.engine.device.dram.stats().bytes_in_use, 0);
+}
+
+#[test]
+fn fan_in_diamond_matches_the_host_path_bit_for_bit() {
+    let (m, d0, h, n) = (24usize, 32usize, 28usize, 16usize);
+    let mut rng = Rng::new(0xD1);
+    let x = rng.normal_vec(m * d0);
+    let w0 = rng.normal_vec(d0 * h);
+    let w1 = rng.normal_vec(h * n);
+    let w2 = rng.normal_vec(h * n);
+
+    // diamond: one trunk, two branch heads, one axpy fan-in sink
+    let shape = DagShape {
+        m,
+        d0,
+        nodes: vec![
+            gemm(None, h),
+            gemm(Some(0), n),
+            gemm(Some(0), n),
+            DagNodeShape {
+                op: DagOp::Axpy,
+                src: Some(1),
+                src2: Some(2),
+                n: 0,
+                bias: false,
+                relu: false,
+            },
+        ],
+    };
+    let specs = vec![
+        DagNode { b: Some(&w0), bias: None },
+        DagNode { b: Some(&w1), bias: None },
+        DagNode { b: Some(&w2), bias: None },
+        DagNode { b: None, bias: None },
+    ];
+
+    let mut host = session_with(PlatformConfig::default(), DispatchMode::HostOnly);
+    let mut want = vec![0.0; m * n];
+    {
+        let mut refs: Vec<&mut [f64]> = vec![&mut want];
+        host.dag(&shape, &x, &specs, &mut refs).unwrap();
+    }
+    let mut dev = session_with(PlatformConfig::default(), DispatchMode::DeviceOnly);
+    let mut got = vec![0.0; m * n];
+    {
+        let mut refs: Vec<&mut [f64]> = vec![&mut got];
+        dev.dag(&shape, &x, &specs, &mut refs).unwrap();
+    }
+    assert_eq!(got, want, "device diamond must match the host path exactly");
+    assert!(dev.metrics().dag_bytes_elided > 0);
+    assert_eq!(dev.engine.opcache.total_pins(), 0);
+}
+
+#[test]
+fn cancelled_dag_releases_pins_and_device_memory() {
+    // cache ON so staged weights pin operand-cache entries — the leak
+    // the abandon path must not allow
+    let mut cfg = PlatformConfig::default();
+    cfg.sched.cache.cache_frac = 0.4;
+    cfg.sched.cache.cache_max_entries = 32;
+    let mut blas = session_with(cfg, DispatchMode::DeviceOnly);
+
+    let (m, d0, h, n) = (32usize, 48usize, 40usize, 24usize);
+    let mut rng = Rng::new(0xCA);
+    let x = rng.normal_vec(m * d0);
+    let w0 = rng.normal_vec(d0 * h);
+    let w1 = rng.normal_vec(h * n);
+    let w2 = rng.normal_vec(h * n);
+    let shape = DagShape {
+        m,
+        d0,
+        nodes: vec![gemm(None, h), gemm(Some(0), n), gemm(Some(0), n)],
+    };
+    let specs = vec![
+        DagNode { b: Some(&w0), bias: None },
+        DagNode { b: Some(&w1), bias: None },
+        DagNode { b: Some(&w2), bias: None },
+    ];
+
+    let staged = blas.dag_stage(&shape, &x, &specs).unwrap();
+    assert!(
+        blas.engine.opcache.total_pins() > 0,
+        "staged dag must pin its cached operands"
+    );
+    assert!(blas.engine.device.dram.stats().bytes_in_use > 0);
+
+    // REPLY_TIMEOUT fired mid-DAG: abandon must release every pin and
+    // every map(alloc:) output
+    blas.dag_abandon(staged);
+    assert_eq!(blas.engine.opcache.total_pins(), 0, "stranded cache pins");
+    let resident = blas.engine.opcache.bytes_resident();
+    assert_eq!(
+        blas.engine.device.dram.stats().bytes_in_use,
+        resident,
+        "abandoned dag stranded non-cache device allocations"
+    );
+
+    // the session stays fully usable: the same dag runs to completion
+    let (mut o1, mut o2) = (vec![0.0; m * n], vec![0.0; m * n]);
+    {
+        let mut refs: Vec<&mut [f64]> = vec![&mut o1, &mut o2];
+        blas.dag(&shape, &x, &specs, &mut refs).unwrap();
+    }
+    assert_eq!(blas.engine.opcache.total_pins(), 0);
+}
+
+#[test]
+fn cancel_mid_dag_leaks_no_pins_through_the_scheduler() {
+    let mut cfg = PlatformConfig::default();
+    cfg.sched.pool_clusters = 1;
+    cfg.sched.batch_window_ms = 0;
+    cfg.sched.cache.cache_frac = 0.4;
+    let sched = Scheduler::new(&cfg, &artifacts_dir()).unwrap();
+
+    let dag = |seed: u64| DagRequest {
+        shape: DagShape {
+            m: 48,
+            d0: 64,
+            nodes: vec![gemm(None, 64), gemm(Some(0), 32), gemm(Some(0), 32)],
+        },
+        mode: DispatchMode::DeviceOnly,
+        seed,
+        b_seeds: vec![Some(1), Some(2), Some(3)],
+        publish_key: None,
+        input_key: None,
+    };
+    // cancel a burst immediately after submit: whichever seam each job
+    // reaches (dequeue, post-stage), no pin may leak
+    for s in 0..4 {
+        let sub = sched
+            .submit(Priority::Normal, JobPayload::Dag(dag(s)))
+            .expect("submit");
+        sub.cancel.cancel();
+    }
+    // a follow-up served to completion proves the worker drained past
+    // the cancelled jobs with a clean cache
+    let o = run(&sched, JobPayload::Dag(dag(99)));
+    assert_eq!(o.op, "dag");
+    let m = sched.metrics();
+    assert_eq!(m.pin_leaks, 0, "cancel-mid-dag leaked operand pins");
+    assert_eq!(m.failed, 0);
+    sched.shutdown();
+}
+
+#[test]
+fn fused_cross_request_matches_the_combined_dag() {
+    let cfg = || {
+        let mut cfg = PlatformConfig::default();
+        cfg.sched.pool_clusters = 1;
+        cfg.sched.batch_window_ms = 0;
+        cfg.sched.dag.fuse_window_ms = 10_000;
+        cfg
+    };
+    let (m, d0, n1, n2) = (32usize, 64usize, 48usize, 24usize);
+
+    // the combined oracle on its own pool: both layers in one graph
+    let oracle_sched = Scheduler::new(&cfg(), &artifacts_dir()).unwrap();
+    let combined = DagRequest {
+        shape: DagShape { m, d0, nodes: vec![gemm(None, n1), gemm(Some(0), n2)] },
+        mode: DispatchMode::DeviceOnly,
+        seed: 5,
+        b_seeds: vec![Some(41), Some(42)],
+        publish_key: None,
+        input_key: None,
+    };
+    let want = run(&oracle_sched, JobPayload::Dag(combined));
+    oracle_sched.shutdown();
+
+    // request A publishes its sink; request B splices onto it.  B's own
+    // seed draws nothing (its input IS A's resident output) and its
+    // weights come from the same b_seed stream as the oracle's layer 2.
+    let sched = Scheduler::new(&cfg(), &artifacts_dir()).unwrap();
+    let a = DagRequest {
+        shape: DagShape { m, d0, nodes: vec![gemm(None, n1)] },
+        mode: DispatchMode::DeviceOnly,
+        seed: 5,
+        b_seeds: vec![Some(41)],
+        publish_key: Some(0xFEED),
+        input_key: None,
+    };
+    let b = DagRequest {
+        shape: DagShape { m, d0: n1, nodes: vec![gemm(None, n2)] },
+        mode: DispatchMode::DeviceOnly,
+        seed: 999,
+        b_seeds: vec![Some(42)],
+        publish_key: None,
+        input_key: Some(0xFEED),
+    };
+    let oa = run(&sched, JobPayload::Dag(a));
+    assert_eq!(oa.op, "dag");
+    let ob = run(&sched, JobPayload::Dag(b));
+    assert_eq!((ob.m, ob.n), (want.m, want.n));
+    assert_eq!(
+        ob.checksum, want.checksum,
+        "fused splice must reproduce the combined graph's checksum"
+    );
+    let ms = sched.metrics();
+    assert_eq!(ms.dag_fused_requests, 1, "exactly one request fused");
+    assert_eq!(ms.pin_leaks, 0);
+    sched.shutdown();
+}
+
+#[test]
+fn invalid_dags_fail_fast_with_the_node_named() {
+    let mut cfg = PlatformConfig::default();
+    cfg.sched.pool_clusters = 4; // small slices: ~16 MiB each
+    cfg.sched.queue_capacity = 8;
+    cfg.sched.dag.fuse_window_ms = 0; // fusion disabled
+    let sched = Scheduler::new(&cfg, &artifacts_dir()).unwrap();
+
+    let req = |shape: DagShape| {
+        let n = shape.nodes.len();
+        DagRequest {
+            shape,
+            mode: DispatchMode::DeviceOnly,
+            seed: 1,
+            b_seeds: vec![None; n],
+            publish_key: None,
+            input_key: None,
+        }
+    };
+
+    // too many nodes for [sched.dag] max_nodes
+    let long = linear_gemm_shape(16, &vec![16usize; 18]);
+    let err = sched.validate_dag(&req(long)).unwrap_err();
+    assert!(err.contains("max_nodes"), "unhelpful node-bound error: {err}");
+
+    // a backward edge is a cycle, named by node
+    let cyclic = DagShape {
+        m: 16,
+        d0: 16,
+        nodes: vec![DagNodeShape {
+            op: DagOp::Gemm,
+            src: Some(0),
+            src2: None,
+            n: 16,
+            bias: false,
+            relu: false,
+        }],
+    };
+    let err = sched.validate_dag(&req(cyclic)).unwrap_err();
+    assert!(err.contains("node 0"), "cycle error must name the node: {err}");
+    assert!(err.contains("cycle"), "unhelpful cycle error: {err}");
+
+    // fan-in width mismatch, named by node
+    let lopsided = DagShape {
+        m: 16,
+        d0: 16,
+        nodes: vec![
+            gemm(None, 16),
+            gemm(None, 8),
+            DagNodeShape {
+                op: DagOp::Axpy,
+                src: Some(0),
+                src2: Some(1),
+                n: 0,
+                bias: false,
+                relu: false,
+            },
+        ],
+    };
+    let err = sched.validate_dag(&req(lopsided)).unwrap_err();
+    assert!(err.contains("node 2"), "fan-in error must name the node: {err}");
+
+    // a footprint no cluster slice can stage
+    let big = linear_gemm_shape(640, &vec![640usize; 7]);
+    let err = sched.validate_dag(&req(big)).unwrap_err();
+    assert!(err.contains("slice"), "unhelpful capacity error: {err}");
+
+    // b_seeds arity
+    let mut wrong = req(linear_gemm_shape(16, &[16, 16]));
+    wrong.b_seeds = vec![None, None];
+    let err = sched.validate_dag(&wrong).unwrap_err();
+    assert!(err.contains("b_seeds"), "unhelpful arity error: {err}");
+
+    // fusion keys while the window is disabled
+    let mut fused = req(linear_gemm_shape(16, &[16, 16]));
+    fused.publish_key = Some(7);
+    let err = sched.validate_dag(&fused).unwrap_err();
+    assert!(err.contains("fuse_window_ms"), "unhelpful window error: {err}");
+
+    // a well-formed dag passes the same gate
+    let ok = req(linear_gemm_shape(64, &[64, 64]));
+    assert!(sched.validate_dag(&ok).is_ok());
+    sched.shutdown();
+}

@@ -38,7 +38,7 @@ struct PointRec {
 }
 
 /// The knobs that identify a sweep point across snapshots.
-const SIG_KEYS: [&str; 11] = [
+const SIG_KEYS: [&str; 12] = [
     "pool",
     "batching",
     "cache",
@@ -49,6 +49,7 @@ const SIG_KEYS: [&str; 11] = [
     "calibrate",
     "tracing",
     "kernel",
+    "dag",
     "clients",
 ];
 
@@ -69,15 +70,16 @@ fn point(line: &str) -> Option<PointRec> {
         return None;
     }
     if let Some(w) = j.get("workload").and_then(|v| v.as_str()) {
-        // chain sweep: no rps field; derive throughput from the wall
+        // chain/dag sweeps: no rps field; derive throughput from the wall
         let chained = matches!(j.get("chained"), Some(Json::Bool(true)));
+        let dag = matches!(j.get("dag"), Some(Json::Bool(true)));
         let requests = j.get("requests").and_then(|v| v.as_f64())?;
         let wall_ms = j.get("wall_ms").and_then(|v| v.as_f64())?;
         if wall_ms <= 0.0 {
             return None;
         }
         return Some(PointRec {
-            sig: format!("{w} chained={chained}"),
+            sig: format!("{w} chained={chained} dag={dag}"),
             rps: requests * 1e3 / wall_ms,
             p99_us: None,
         });
@@ -87,10 +89,11 @@ fn point(line: &str) -> Option<PointRec> {
     for k in SIG_KEYS {
         let v = match j.get(k) {
             Some(v) => sig_value(v)?,
-            // the kernel knob postdates older baselines: a snapshot
-            // written before the registry existed still matches the
-            // registry's default-ON points
+            // the kernel and dag knobs postdate older baselines: a
+            // snapshot written before they existed still matches the
+            // registry's default-ON / DAG-off points
             None if k == "kernel" => "true".to_string(),
+            None if k == "dag" => "false".to_string(),
             None => return None,
         };
         if !sig.is_empty() {
@@ -283,7 +286,7 @@ mod tests {
         assert!(pts[0].sig.contains("pool=1"));
         assert!(pts[0].sig.contains("clients=1"));
         assert_eq!(pts[0].p99_us, Some(2048.0));
-        assert_eq!(pts[2].sig, "chain_mlp chained=true");
+        assert_eq!(pts[2].sig, "chain_mlp chained=true dag=false");
         assert!((pts[2].rps - 2000.0).abs() < 1e-9);
         assert_eq!(pts[2].p99_us, None);
     }
@@ -302,6 +305,22 @@ mod tests {
         // an explicit OFF point is a different signature: never matched
         let off = BASE.replace("\"tracing\": true", "\"tracing\": true, \"kernel\": false");
         assert!(compare(&pts, &parse_snapshot(&off)).len() == 1, "chain point only");
+    }
+
+    #[test]
+    fn missing_dag_knob_defaults_to_false() {
+        // pre-DAG baselines carry no "dag" field; they must keep
+        // matching snapshots written with the DAG-off default points
+        let pts = parse_snapshot(BASE);
+        assert!(pts[0].sig.contains("dag=false"));
+        let with_knob = BASE.replace("\"tracing\": true", "\"tracing\": true, \"dag\": false");
+        let new = parse_snapshot(&with_knob);
+        let rows = compare(&pts, &new);
+        assert_eq!(rows.len(), 3);
+        assert!(rows.iter().all(|r| !r.regressed));
+        // an explicit DAG-workload point is a different signature
+        let on = BASE.replace("\"tracing\": true", "\"tracing\": true, \"dag\": true");
+        assert!(compare(&pts, &parse_snapshot(&on)).len() == 1, "chain point only");
     }
 
     #[test]
